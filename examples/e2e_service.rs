@@ -1,0 +1,191 @@
+//! End-to-end system validation (the mandated driver): bring up the full
+//! coordinator stack — dynamic batcher, worker pool, LSH index, and the
+//! AOT-compiled PJRT hash pipeline when `artifacts/` is present — serve a
+//! mixed insert/query workload, and report throughput, latency
+//! percentiles, and recall against the exact baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_service
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use funclsh::config::ServiceConfig;
+use funclsh::coordinator::{Coordinator, CpuHashPath, FoldedHashPath, HashPath, Op, Response};
+use funclsh::embedding::{l2_dist, Embedder, Interval, MonteCarloEmbedder};
+use funclsh::functions::{Distribution1D, Function1D};
+use funclsh::hashing::PStableHashBank;
+use funclsh::runtime::pjrt_path::PjrtHashPath;
+use funclsh::search::{recall_at_k, BruteForceKnn, Hit};
+use funclsh::util::rng::{Rng64, Xoshiro256pp};
+use funclsh::wasserstein::QUANTILE_CLIP;
+use funclsh::workload::gmm_corpus;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let n_corpus: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+    let n_queries = 200;
+    let k = 10;
+
+    let cfg = ServiceConfig {
+        dim: 64,
+        k: 4,
+        l: 8,
+        workers: 4,
+        max_batch: 128,
+        max_wait_us: 200,
+        probe_depth: 1,
+        ..Default::default()
+    };
+
+    // Shared embedding + bank (the service's identity).
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let omega = Interval::new(QUANTILE_CLIP, 1.0 - QUANTILE_CLIP);
+    let emb = MonteCarloEmbedder::new(omega, cfg.dim, 2.0, &mut rng);
+    let points = emb.sample_points().to_vec();
+    let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+    let proj_rows: Vec<&[f64]> = (0..cfg.total_hashes())
+        .map(|j| bank.projection_row(j))
+        .collect();
+    let folded = FoldedHashPath::new(Box::new(emb.clone()), &proj_rows, bank.offsets(), bank.r());
+
+    // PJRT when artifacts exist, CPU otherwise — identical signatures.
+    let artifacts = Path::new("artifacts");
+    let path: Arc<dyn HashPath> = if artifacts.join("manifest.json").exists() {
+        match PjrtHashPath::from_folded(artifacts, "mc_l2_hash", folded) {
+            Ok(p) => {
+                println!("hash path: PJRT (AOT pipeline, batch {})", p.batch_size());
+                Arc::new(p)
+            }
+            Err(e) => {
+                println!("hash path: CPU (PJRT load failed: {e})");
+                Arc::new(CpuHashPath::new(Box::new(emb.clone()), Box::new(bank.clone())))
+            }
+        }
+    } else {
+        println!("hash path: CPU (run `make artifacts` for the PJRT pipeline)");
+        Arc::new(FoldedHashPath::new(
+            Box::new(emb.clone()),
+            &proj_rows,
+            bank.offsets(),
+            bank.r(),
+        ))
+    };
+
+    let svc = Coordinator::start(&cfg, path);
+
+    // ------------- phase 1: bulk insert of the GMM corpus ----------------
+    println!("\nphase 1: inserting {n_corpus} GMM quantile functions…");
+    let corpus = gmm_corpus(n_corpus, &mut rng);
+    let sample_rows: Vec<Vec<f32>> = corpus
+        .iter()
+        .map(|d| {
+            points
+                .iter()
+                .map(|&u| d.quantile(u) as f32)
+                .collect()
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for (i, samples) in sample_rows.iter().enumerate() {
+        pending.push(
+            svc.submit_async(Op::Insert {
+                id: i as u64,
+                samples: samples.clone(),
+            })
+            .expect("service up"),
+        );
+    }
+    let mut errors = 0;
+    for rx in pending {
+        if !matches!(rx.recv().unwrap(), Response::Inserted { .. }) {
+            errors += 1;
+        }
+    }
+    let insert_time = t0.elapsed();
+    println!(
+        "  {} inserts in {:?} ({:.0} insert/s), {errors} errors",
+        n_corpus,
+        insert_time,
+        n_corpus as f64 / insert_time.as_secs_f64()
+    );
+
+    // ------------- phase 2: queries with recall accounting ---------------
+    println!("\nphase 2: {n_queries} k-NN queries (k = {k})…");
+    // exact ground truth uses the same embedding
+    let vecs: Vec<Vec<f64>> = sample_rows
+        .iter()
+        .map(|row| {
+            let row64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
+            emb.embed_samples(&row64)
+        })
+        .collect();
+    let ids: Vec<u64> = (0..n_corpus as u64).collect();
+
+    let mut recall_acc = 0.0;
+    let t0 = Instant::now();
+    let mut query_rows = Vec::new();
+    for _ in 0..n_queries {
+        let q = funclsh::workload::random_gmm(1 + rng.uniform_usize(4), &mut rng);
+        let row: Vec<f32> = points.iter().map(|&u| q.quantile(u) as f32).collect();
+        query_rows.push(row);
+    }
+    for row in &query_rows {
+        let resp = svc.submit(Op::Query {
+            samples: row.clone(),
+            k,
+        });
+        let hits: Vec<Hit> = match resp {
+            Response::Hits(h) => h,
+            other => panic!("unexpected {other:?}"),
+        };
+        let row64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
+        let qv = emb.embed_samples(&row64);
+        let (exact, _) =
+            BruteForceKnn::new(&ids, |id| l2_dist(&qv, &vecs[id as usize])).query(k);
+        recall_acc += recall_at_k(&exact, &hits, k);
+    }
+    let query_time = t0.elapsed();
+    println!(
+        "  {n_queries} queries in {:?} ({:.0} query/s), recall@{k} = {:.3}",
+        query_time,
+        n_queries as f64 / query_time.as_secs_f64(),
+        recall_acc / n_queries as f64
+    );
+
+    // ------------- phase 3: hash-only throughput (hot path) --------------
+    println!("\nphase 3: hash-only throughput…");
+    let t0 = Instant::now();
+    let n_hash = 5_000.min(n_corpus);
+    let mut pending = Vec::new();
+    for row in sample_rows.iter().take(n_hash) {
+        pending.push(
+            svc.submit_async(Op::Hash {
+                samples: row.clone(),
+            })
+            .unwrap(),
+        );
+    }
+    for rx in pending {
+        let _ = rx.recv().unwrap();
+    }
+    let hash_time = t0.elapsed();
+    println!(
+        "  {n_hash} hashes in {:?} ({:.0} hash/s)",
+        hash_time,
+        n_hash as f64 / hash_time.as_secs_f64()
+    );
+
+    let m = svc.metrics();
+    println!("\nservice metrics: {}", m.to_json());
+    let f = funclsh::functions::Sine::paper(0.0);
+    let _ = f.eval(0.5); // keep Function1D import exercised
+    svc.shutdown();
+    println!("done.");
+}

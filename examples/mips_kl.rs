@@ -1,0 +1,92 @@
+//! The paper's §5 extension: maximum inner product search (ALSH) over
+//! function embeddings, and KL-divergence search via the MIPS reduction
+//!
+//! `D_KL(p‖q) ∝ 1 − ⟨p, log q⟩ / ⟨p, log p⟩` (fixed query density `p`),
+//!
+//! so "which corpus density is closest to `p` in KL?" becomes a MIPS over
+//! embedded log-densities.
+//!
+//! ```bash
+//! cargo run --release --example mips_kl
+//! ```
+
+use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use funclsh::functions::{Distribution1D, GaussianDist};
+use funclsh::hashing::alsh::SignAlsh;
+use funclsh::util::rng::{Rng64, Xoshiro256pp};
+
+fn main() {
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let n = 64;
+    let omega = Interval::new(-4.0, 4.0);
+    let emb = MonteCarloEmbedder::new(omega, n, 2.0, &mut rng);
+
+    // Corpus: Gaussian densities with varying (μ, σ).
+    let corpus: Vec<GaussianDist> = (0..400)
+        .map(|_| GaussianDist::new(rng.uniform_in(-2.0, 2.0), rng.uniform_in(0.3, 1.5)))
+        .collect();
+
+    // Embed log-densities (the MIPS "data" side).
+    let log_vecs: Vec<Vec<f64>> = corpus
+        .iter()
+        .map(|g| {
+            let log_pdf = |x: f64| g.pdf(x).max(1e-300).ln();
+            emb.embed_fn(&log_pdf)
+        })
+        .collect();
+    let max_norm = log_vecs
+        .iter()
+        .map(|v| v.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .fold(0.0f64, f64::max);
+
+    let alsh = SignAlsh::new(n, 2048, max_norm, &mut rng);
+    let hashed: Vec<Vec<i32>> = log_vecs.iter().map(|v| alsh.hash_data(v)).collect();
+
+    // Query density p: the MIPS "query" side embeds p itself.
+    let p = GaussianDist::new(0.4, 0.8);
+    let p_vec = emb.embed_fn(&|x: f64| p.pdf(x));
+    let hq = alsh.hash_query(&p_vec);
+
+    // True KL (closed form for Gaussians):
+    // KL(N0‖N1) = ln(σ1/σ0) + (σ0² + (μ0−μ1)²)/(2σ1²) − ½
+    let kl = |q: &GaussianDist| {
+        (q.sigma / p.sigma).ln() + (p.sigma * p.sigma + (p.mu - q.mu).powi(2)) / (2.0 * q.sigma * q.sigma)
+            - 0.5
+    };
+
+    // Rank by hash collision (descending) and compare against true KL rank.
+    let coll: Vec<f64> = hashed
+        .iter()
+        .map(|h| hq.iter().zip(h).filter(|(a, b)| a == b).count() as f64 / hq.len() as f64)
+        .collect();
+    let mut by_coll: Vec<usize> = (0..corpus.len()).collect();
+    by_coll.sort_by(|&i, &j| coll[j].partial_cmp(&coll[i]).unwrap());
+    let mut by_kl: Vec<usize> = (0..corpus.len()).collect();
+    by_kl.sort_by(|&i, &j| kl(&corpus[i]).partial_cmp(&kl(&corpus[j])).unwrap());
+
+    println!("query density: N({:.2}, {:.2}²)\n", p.mu, p.sigma);
+    println!("top-5 by hash collisions (MIPS) — with true KL:");
+    for &i in by_coll.iter().take(5) {
+        println!(
+            "  N({:>5.2}, {:.2}²)  collisions {:.3}  KL {:.4}",
+            corpus[i].mu,
+            corpus[i].sigma,
+            coll[i],
+            kl(&corpus[i])
+        );
+    }
+    println!("\ntop-5 by true KL:");
+    for &i in by_kl.iter().take(5) {
+        println!(
+            "  N({:>5.2}, {:.2}²)  collisions {:.3}  KL {:.4}",
+            corpus[i].mu,
+            corpus[i].sigma,
+            coll[i],
+            kl(&corpus[i])
+        );
+    }
+    // overlap of the two top-20 sets
+    let set: std::collections::HashSet<_> = by_kl.iter().take(20).collect();
+    let hits = by_coll.iter().take(20).filter(|i| set.contains(i)).count();
+    println!("\ntop-20 overlap (MIPS vs true KL): {hits}/20");
+}

@@ -1,0 +1,71 @@
+//! Quickstart: hash two functions on their L² distance and cosine
+//! similarity with both of the paper's embeddings, and compare observed
+//! collision rates with the theoretical curves (Eqs. 7–8).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use funclsh::prelude::*;
+
+fn main() {
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let omega = Interval::unit();
+
+    // Two random sine waves, exactly the paper's Figure 1–2 workload.
+    let f = Sine::paper(0.3);
+    let g = Sine::paper(1.8);
+
+    // Ground truth similarities via quadrature.
+    let dist = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+    let cos = cosine_similarity_l2(&f, &g, 0.0, 1.0);
+    println!("true ‖f−g‖_L² = {dist:.4},  cossim(f,g) = {cos:.4}\n");
+
+    for (name, emb) in [
+        (
+            "monte-carlo ",
+            Box::new(MonteCarloEmbedder::new(omega, 64, 2.0, &mut rng)) as Box<dyn Embedder>,
+        ),
+        (
+            "chebyshev   ",
+            Box::new(ChebyshevEmbedder::new(omega, 64)) as Box<dyn Embedder>,
+        ),
+    ] {
+        let tf = emb.embed_fn(&f);
+        let tg = emb.embed_fn(&g);
+
+        // --- L²-distance hash (Datar et al. 2004), r = 1, 1024 functions
+        let bank = PStableHashBank::new(64, 1024, 2.0, 1.0, &mut rng);
+        let hf = bank.hash(&tf);
+        let hg = bank.hash(&tg);
+        let observed =
+            hf.iter().zip(&hg).filter(|(a, b)| a == b).count() as f64 / hf.len() as f64;
+        let theory = pstable_collision_probability(dist, 1.0, 2.0);
+        println!("[{name}] L²-hash   collision: observed {observed:.3}  theory {theory:.3}");
+
+        // --- SimHash (Charikar 2002)
+        let sim = SimHashBank::new(64, 1024, &mut rng);
+        let sf = sim.hash(&tf);
+        let sg = sim.hash(&tg);
+        let observed =
+            sf.iter().zip(&sg).filter(|(a, b)| a == b).count() as f64 / sf.len() as f64;
+        let theory = simhash_collision_probability(cos);
+        println!("[{name}] SimHash   collision: observed {observed:.3}  theory {theory:.3}");
+    }
+
+    // --- Wasserstein: hash two Gaussians through their quantile functions
+    let a = GaussianDist::new(-0.2, 0.6);
+    let b = GaussianDist::new(0.5, 0.9);
+    let w2 = gaussian_w2(&a, &b);
+    let clipped = Interval::new(1e-3, 1.0 - 1e-3);
+    let emb = MonteCarloEmbedder::new(clipped, 64, 2.0, &mut rng);
+    let bank = PStableHashBank::new(64, 1024, 2.0, 1.0, &mut rng);
+    use funclsh::functions::Distribution1D;
+    let ha = bank.hash(&emb.embed_fn(&a.quantile_fn()));
+    let hb = bank.hash(&emb.embed_fn(&b.quantile_fn()));
+    let observed = ha.iter().zip(&hb).filter(|(x, y)| x == y).count() as f64 / ha.len() as f64;
+    println!(
+        "\nW² hash: true W² = {w2:.4}; collision observed {observed:.3} theory {:.3}",
+        pstable_collision_probability(w2, 1.0, 2.0)
+    );
+}

@@ -1,0 +1,81 @@
+"""AOT lowering: jax pipelines -> HLO text artifacts + manifest.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the
+results and Python never appears on the request path again.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big constants as ``{...}``, which the downstream text parser
+    silently turns into zeros — the baked DCT matrix of the fused
+    Chebyshev pipeline would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_pipeline(entry: dict) -> str:
+    """Lower one registry entry to HLO text."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in entry["in_shapes"]]
+    lowered = jax.jit(entry["fn"]).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--dim", type=int, default=64)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"pipelines": []}
+    for entry in model.pipelines(batch=args.batch, n=args.dim):
+        text = lower_pipeline(entry)
+        fname = f"{entry['name']}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["pipelines"].append({
+            "name": entry["name"],
+            "file": fname,
+            "batch": entry["batch"],
+            "dim": entry["dim"],
+            "k": entry["k"],
+            "inputs": entry["inputs"],
+        })
+        print(f"lowered {entry['name']:<18} -> {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['pipelines'])} pipelines)")
+
+
+if __name__ == "__main__":
+    main()

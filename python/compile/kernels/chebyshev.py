@@ -1,0 +1,85 @@
+"""L1 Pallas kernels: Chebyshev (orthonormal-basis) embedding.
+
+Two kernels:
+
+* :func:`cheb_embed` — the standalone weighted DCT-II: ``(x * w) @ C``.
+* :func:`cheb_hash` — the **fused** embed->project->floor pipeline. This
+  is the paper's §3.1 hot path as one kernel: the ``[TILE_B, N]``
+  coefficient block stays in VMEM between the two MXU matmuls instead of
+  round-tripping through HBM. On TPU the VMEM budget per tile is
+  ``TILE_B*N + N*N + N*K + TILE_B*K`` f32 words ≈ 128·64+64·64+64·K+128·K
+  ≈ (12.3K + 192·K) * 4 B — comfortably under the ~16 MiB VMEM for any
+  K ≤ 1024 (see DESIGN.md §Perf for the roofline arithmetic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+
+
+def _embed_kernel(x_ref, w_ref, c_ref, o_ref):
+    """One tile of the weighted DCT: ``o = (x * w) @ C``."""
+    xw = x_ref[...] * w_ref[...][None, :]
+    o_ref[...] = jnp.dot(xw, c_ref[...], preferred_element_type=jnp.float32)
+
+
+def _cheb_hash_kernel(x_ref, w_ref, c_ref, p_ref, b_ref, o_ref):
+    """Fused tile: ``o = floor(((x*w) @ C) @ P + b)``; coeffs stay in VMEM."""
+    xw = x_ref[...] * w_ref[...][None, :]
+    coeff = jnp.dot(xw, c_ref[...], preferred_element_type=jnp.float32)
+    acc = jnp.dot(coeff, p_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.floor(acc + b_ref[...][None, :]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def cheb_embed(x: jnp.ndarray, w: jnp.ndarray, c: jnp.ndarray,
+               *, tile_b: int = TILE_B) -> jnp.ndarray:
+    """Batched Chebyshev embedding ``[B, N] -> [B, N]`` via Pallas."""
+    b, n = x.shape
+    tb = min(tile_b, b)
+    if b % tb != 0:
+        raise ValueError(f"batch {b} not divisible by tile {tb}")
+    return pl.pallas_call(
+        _embed_kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, w, c)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def cheb_hash(x: jnp.ndarray, w: jnp.ndarray, c: jnp.ndarray,
+              proj: jnp.ndarray, offsets: jnp.ndarray,
+              *, tile_b: int = TILE_B) -> jnp.ndarray:
+    """Fused Chebyshev-embed + p-stable hash ``[B, N] -> [B, K]`` (int32)."""
+    b, n = x.shape
+    k = proj.shape[1]
+    tb = min(tile_b, b)
+    if b % tb != 0:
+        raise ValueError(f"batch {b} not divisible by tile {tb}")
+    return pl.pallas_call(
+        _cheb_hash_kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
+        interpret=True,
+    )(x, w, c, proj, offsets)

@@ -1,0 +1,133 @@
+"""L1 Pallas kernels: the hash projection hot spot.
+
+The request-path compute of the whole system is a batched
+``floor(x @ M + b)`` (p-stable) or ``sign(x @ M)`` (SimHash). On TPU this
+is a single MXU pass per batch tile; the kernels below express the
+HBM->VMEM schedule with BlockSpecs:
+
+* the batch is tiled in blocks of ``TILE_B`` rows (grid dimension 0);
+* the projection matrix ``M [N, K]`` and offsets ``b [K]`` are small
+  (64*K*4 bytes) and pinned in VMEM for every tile (index map returns the
+  same block for all grid steps, so Mosaic keeps them resident);
+* the ``[TILE_B, K]`` accumulator never leaves VMEM before the floor/sign
+  epilogue, so the only HBM traffic is the input tile and the int32 output
+  tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernels lower to plain HLO — bit-identical math,
+same schedule semantics (see DESIGN.md §Hardware-Adaptation for the
+real-TPU analysis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: matches the MXU/VPU sublane structure (multiples of 8; 128
+# aligns with the 128x128 MXU for bf16/f32 mixed workloads).
+TILE_B = 128
+
+
+def _pstable_kernel(x_ref, p_ref, b_ref, o_ref):
+    """One batch tile: ``o = floor(x @ p + b)`` (int32)."""
+    acc = jnp.dot(x_ref[...], p_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.floor(acc + b_ref[...][None, :]).astype(jnp.int32)
+
+
+def _simhash_kernel(x_ref, p_ref, o_ref):
+    """One batch tile: ``o = (x @ p >= 0)`` (int32 0/1)."""
+    acc = jnp.dot(x_ref[...], p_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (acc >= 0.0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def pstable_hash(x: jnp.ndarray, proj: jnp.ndarray, offsets: jnp.ndarray,
+                 *, tile_b: int = TILE_B) -> jnp.ndarray:
+    """Batched p-stable hash via the Pallas kernel.
+
+    ``x``: ``[B, N]`` f32 (``B`` divisible by ``tile_b`` or smaller than it),
+    ``proj``: ``[N, K]`` f32 (embedding scale and ``1/r`` pre-folded),
+    ``offsets``: ``[K]`` f32. Returns ``[B, K]`` int32 bucket ids.
+    """
+    b, n = x.shape
+    k = proj.shape[1]
+    tb = min(tile_b, b)
+    if b % tb != 0:
+        raise ValueError(f"batch {b} not divisible by tile {tb}")
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _pstable_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),   # resident in VMEM
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
+        interpret=True,
+    )(x, proj, offsets)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def simhash(x: jnp.ndarray, proj: jnp.ndarray, *, tile_b: int = TILE_B) -> jnp.ndarray:
+    """Batched SimHash via the Pallas kernel. Returns ``[B, K]`` int32 bits."""
+    b, n = x.shape
+    k = proj.shape[1]
+    tb = min(tile_b, b)
+    if b % tb != 0:
+        raise ValueError(f"batch {b} not divisible by tile {tb}")
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _simhash_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
+        interpret=True,
+    )(x, proj)
+
+
+def _pstable_kernel_bf16(x_ref, p_ref, b_ref, o_ref):
+    """bf16-input tile: inputs arrive bf16 (halved HBM traffic, MXU-native
+    on TPU), accumulation and the floor epilogue stay f32."""
+    acc = jnp.dot(x_ref[...], p_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.floor(acc + b_ref[...][None, :]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def pstable_hash_bf16(x: jnp.ndarray, proj: jnp.ndarray, offsets: jnp.ndarray,
+                      *, tile_b: int = TILE_B) -> jnp.ndarray:
+    """p-stable hash with bf16 inputs / f32 accumulation.
+
+    The TPU-realistic dtype mix: on the MXU a bf16 x bf16 -> f32 matmul
+    runs at full systolic rate and halves VMEM+HBM footprint of the
+    operands; bucket ids can differ from the f32 kernel by at most +-1 at
+    bucket boundaries (|rounding| ~ 2^-8 relative).
+    """
+    b, n = x.shape
+    k = proj.shape[1]
+    tb = min(tile_b, b)
+    if b % tb != 0:
+        raise ValueError(f"batch {b} not divisible by tile {tb}")
+    xb = x.astype(jnp.bfloat16)
+    pb = proj.astype(jnp.bfloat16)
+    return pl.pallas_call(
+        _pstable_kernel_bf16,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
+        interpret=True,
+    )(xb, pb, offsets)

@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here; pytest asserts
+`assert_allclose(kernel(...), ref(...))` (exact for the integer hash
+outputs). The Rust side re-implements the same math in f64 — the
+three-layer contract is: ref.py == pallas kernel == rust FoldedHashPath.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def dct2_matrix(n: int) -> np.ndarray:
+    """The DCT-II synthesis matrix ``C[k, j] = cos(pi j (k+1/2) / n)``.
+
+    ``samples @ C`` computes an (unscaled) DCT-II along the last axis,
+    matching rust's ``chebyshev::dct2_naive``.
+    """
+    k = np.arange(n)[:, None] + 0.5
+    j = np.arange(n)[None, :]
+    return np.cos(np.pi * j * k / n)
+
+
+def cheb_embed_matrix(n: int, volume: float = 1.0) -> tuple[np.ndarray, np.ndarray]:
+    """Weights and scaled DCT matrix of the L2-isometric Chebyshev embedding.
+
+    Returns ``(w, C)`` such that ``T(f) = (w * samples) @ C`` reproduces
+    rust's ``ChebyshevEmbedder::embed_samples``:
+
+    * ``w_k = sqrt(V sin(theta_k) / 2)``, ``theta_k = pi (k+1/2)/n``
+    * ``C[k, j] = s_j cos(pi j (k+1/2)/n)`` with ``s_0 = sqrt(pi)/n``,
+      ``s_j = sqrt(2 pi)/n`` for ``j >= 1``.
+    """
+    theta = np.pi * (np.arange(n) + 0.5) / n
+    w = np.sqrt(volume * np.sin(theta) / 2.0)
+    scale = np.full(n, np.sqrt(2.0 * np.pi) / n)
+    scale[0] = np.sqrt(np.pi) / n
+    c = dct2_matrix(n) * scale[None, :]
+    return w, c
+
+
+def pstable_hash_ref(x: jnp.ndarray, proj: jnp.ndarray, offsets: jnp.ndarray) -> jnp.ndarray:
+    """Reference p-stable hash: ``floor(x @ proj + offsets)`` as int32.
+
+    ``x`` is ``[B, N]``; ``proj`` is ``[N, K]`` with the embedding scale and
+    ``1/r`` already folded in; ``offsets`` is ``[K]`` in bucket units.
+    """
+    return jnp.floor(x @ proj + offsets[None, :]).astype(jnp.int32)
+
+
+def simhash_ref(x: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:
+    """Reference SimHash: ``1`` where ``x @ proj >= 0`` else ``0`` (int32)."""
+    return (x @ proj >= 0.0).astype(jnp.int32)
+
+
+def cheb_hash_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    c: jnp.ndarray,
+    proj: jnp.ndarray,
+    offsets: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference fused Chebyshev-embed + p-stable hash."""
+    coeff = (x * w[None, :]) @ c
+    return jnp.floor(coeff @ proj + offsets[None, :]).astype(jnp.int32)

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: p-stable hashing with a 2-D (batch x K) grid.
+
+For figure-scale banks (K = 1024 hash functions) the projection matrix no
+longer fits comfortably next to large batch tiles, so we tile *both*
+dimensions: grid step (i, j) loads batch tile i and projection column
+block j. On TPU this keeps the VMEM working set at
+``TILE_B*N + N*TILE_K + TILE_B*TILE_K`` floats regardless of K, and each
+(i, j) step is one MXU pass — the canonical output-stationary schedule.
+
+The offsets add + floor epilogue runs inside the same kernel, so the f32
+accumulator tile never round-trips to HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+TILE_K = 128
+
+
+def _wide_kernel(x_ref, p_ref, b_ref, o_ref):
+    """Grid step (i, j): ``o[i, j] = floor(x[i] @ p[:, j] + b[j])``."""
+    acc = jnp.dot(x_ref[...], p_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.floor(acc + b_ref[...][None, :]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "tile_k"))
+def wide_pstable_hash(x: jnp.ndarray, proj: jnp.ndarray, offsets: jnp.ndarray,
+                      *, tile_b: int = TILE_B, tile_k: int = TILE_K) -> jnp.ndarray:
+    """Batched p-stable hash with K-tiling: ``[B,N] x [N,K] -> [B,K]`` i32.
+
+    ``B`` must divide by ``tile_b`` (or be smaller) and ``K`` by ``tile_k``
+    (or be smaller) — the AOT shapes are padded to multiples by the caller.
+    """
+    b, n = x.shape
+    k = proj.shape[1]
+    tb = min(tile_b, b)
+    tk = min(tile_k, k)
+    if b % tb != 0:
+        raise ValueError(f"batch {b} not divisible by tile {tb}")
+    if k % tk != 0:
+        raise ValueError(f"K {k} not divisible by tile {tk}")
+    grid = (b // tb, k // tk)
+    return pl.pallas_call(
+        _wide_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, tk), lambda i, j: (0, j)),
+            pl.BlockSpec((tk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tb, tk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
+        interpret=True,
+    )(x, proj, offsets)

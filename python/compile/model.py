@@ -1,0 +1,139 @@
+"""L2: the JAX pipelines lowered to AOT artifacts.
+
+Each pipeline is the full request-path compute for one (embedding x hash)
+configuration, written as a jax function that calls the L1 Pallas kernels.
+`aot.py` lowers every entry of PIPELINES once; the Rust runtime executes
+the resulting HLO with its own projection matrices as inputs.
+
+Conventions shared with the Rust side (rust/src/coordinator/hashpath.rs):
+
+* `proj` has the embedding scale and `1/r` folded in (the generic
+  `mc_l2_hash` artifact therefore serves *any* linear embedding — Rust
+  folds Chebyshev/MC/QMC into `proj` before upload);
+* `offsets` are in bucket units (`b ~ U[0,1)`);
+* output is `[B, K]` int32 bucket ids / sign bits.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import chebyshev as cheb_kernels
+from .kernels import hash_proj
+from .kernels import ref
+from .kernels import wide_hash
+
+
+def mc_l2_hash(samples: jnp.ndarray, proj: jnp.ndarray, offsets: jnp.ndarray):
+    """Generic folded-projection p-stable hash (MC/QMC/any linear embed)."""
+    return (hash_proj.pstable_hash(samples, proj, offsets),)
+
+
+def mc_l2_hash_wide(samples: jnp.ndarray, proj: jnp.ndarray, offsets: jnp.ndarray):
+    """K-tiled variant for figure-scale banks (K >= 128): the 2-D-grid
+    Pallas kernel keeps the VMEM working set constant in K."""
+    return (wide_hash.wide_pstable_hash(samples, proj, offsets),)
+
+
+def mc_l2_hash_jnp(samples: jnp.ndarray, proj: jnp.ndarray, offsets: jnp.ndarray):
+    """Plain-XLA variant (no Pallas): the §Perf ablation quantifying the
+    interpret-mode grid-loop overhead on CPU-PJRT. On a real TPU the
+    Pallas artifact is the tuned one; on this CPU testbed XLA's own fusion
+    of the un-looped graph is faster, so the runtime can select it."""
+    return (ref.pstable_hash_ref(samples, proj, offsets),)
+
+
+def simhash(samples: jnp.ndarray, proj: jnp.ndarray):
+    """SimHash sign bits over a folded projection."""
+    return (hash_proj.simhash(samples, proj),)
+
+
+def make_cheb_l2_hash(n: int, volume: float = 1.0):
+    """Fused Chebyshev-embed + hash with the DCT matrix baked as constants.
+
+    Returns a function `(samples[B,N], proj[N,K], offsets[K]) -> i32[B,K]`
+    where `proj` here maps *coefficients* to buckets (i.e. the raw bank
+    projection / r, NOT folded with the embedding — the embedding is the
+    baked DCT).
+    """
+    w_np, c_np = ref.cheb_embed_matrix(n, volume)
+    w = jnp.asarray(w_np, dtype=jnp.float32)
+    c = jnp.asarray(c_np, dtype=jnp.float32)
+
+    def cheb_l2_hash(samples: jnp.ndarray, proj: jnp.ndarray, offsets: jnp.ndarray):
+        return (cheb_kernels.cheb_hash(samples, w, c, proj, offsets),)
+
+    return cheb_l2_hash
+
+
+def make_cheb_embed(n: int, volume: float = 1.0):
+    """Standalone Chebyshev embedding pipeline `[B,N] -> [B,N]` f32."""
+    w_np, c_np = ref.cheb_embed_matrix(n, volume)
+    w = jnp.asarray(w_np, dtype=jnp.float32)
+    c = jnp.asarray(c_np, dtype=jnp.float32)
+
+    def cheb_embed(samples: jnp.ndarray):
+        return (cheb_kernels.cheb_embed(samples, w, c),)
+
+    return cheb_embed
+
+
+def reference_outputs(batch: int, n: int, k: int, seed: int = 0):
+    """Deterministic (inputs, expected outputs) for cross-language tests.
+
+    The Rust integration tests regenerate the same inputs (documented
+    layout, splitmix-free plain numpy RNG) and compare against the PJRT
+    execution of the artifacts.
+    """
+    rng = np.random.RandomState(seed)
+    samples = rng.uniform(-1.0, 1.0, size=(batch, n)).astype(np.float32)
+    proj = rng.normal(size=(n, k)).astype(np.float32)
+    offsets = rng.uniform(0.0, 1.0, size=(k,)).astype(np.float32)
+    expected = np.asarray(ref.pstable_hash_ref(samples, proj, offsets))
+    return samples, proj, offsets, expected
+
+
+# (name, builder, input-spec) registry consumed by aot.py.
+# Shapes: B=128 (batch tile), N=64 (the paper's embedding dim).
+def pipelines(batch: int = 128, n: int = 64, ks: tuple[int, ...] = (32, 1024)):
+    """The full artifact registry: one entry per lowered HLO file."""
+    entries = []
+    for k in ks:
+        entries.append({
+            "name": f"mc_l2_hash_k{k}" if k != 32 else "mc_l2_hash",
+            # K-tiled kernel once the bank outgrows a single column block
+            "fn": mc_l2_hash_wide if k >= 128 else mc_l2_hash,
+            "batch": batch, "dim": n, "k": k,
+            "inputs": ["samples", "proj", "offsets"],
+            "in_shapes": [(batch, n), (n, k), (k,)],
+        })
+        entries.append({
+            "name": f"cheb_l2_hash_k{k}" if k != 32 else "cheb_l2_hash",
+            "fn": make_cheb_l2_hash(n),
+            "batch": batch, "dim": n, "k": k,
+            "inputs": ["samples", "proj", "offsets"],
+            "in_shapes": [(batch, n), (n, k), (k,)],
+        })
+    entries.append({
+        "name": "mc_l2_hash_jnp",
+        "fn": mc_l2_hash_jnp,
+        "batch": batch, "dim": n, "k": 32,
+        "inputs": ["samples", "proj", "offsets"],
+        "in_shapes": [(batch, n), (n, 32), (32,)],
+    })
+    entries.append({
+        "name": "simhash",
+        "fn": simhash,
+        "batch": batch, "dim": n, "k": 32,
+        "inputs": ["samples", "proj"],
+        "in_shapes": [(batch, n), (n, 32)],
+    })
+    entries.append({
+        "name": "cheb_embed",
+        "fn": make_cheb_embed(n),
+        "batch": batch, "dim": n, "k": n,
+        "inputs": ["samples"],
+        "in_shapes": [(batch, n)],
+    })
+    return entries

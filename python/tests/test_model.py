@@ -1,0 +1,92 @@
+"""L2 correctness: pipeline functions vs numpy references, AOT lowering
+round-trips, and the cross-language reference vectors."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_mc_pipeline_matches_ref():
+    samples, proj, offsets, expected = model.reference_outputs(128, 64, 32, seed=1)
+    (got,) = model.mc_l2_hash(
+        jnp.asarray(samples), jnp.asarray(proj), jnp.asarray(offsets)
+    )
+    np.testing.assert_array_equal(np.asarray(got), expected)
+
+
+def test_cheb_pipeline_matches_ref():
+    rng = np.random.RandomState(2)
+    n, k = 64, 32
+    samples = rng.uniform(-1, 1, size=(128, n)).astype(np.float32)
+    proj = rng.normal(size=(n, k)).astype(np.float32)
+    offsets = rng.uniform(size=(k,)).astype(np.float32)
+    fn = model.make_cheb_l2_hash(n)
+    (got,) = fn(jnp.asarray(samples), jnp.asarray(proj), jnp.asarray(offsets))
+    w_np, c_np = ref.cheb_embed_matrix(n)
+    want = ref.cheb_hash_ref(
+        jnp.asarray(samples),
+        jnp.asarray(w_np, dtype=jnp.float32),
+        jnp.asarray(c_np, dtype=jnp.float32),
+        jnp.asarray(proj),
+        jnp.asarray(offsets),
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_simhash_pipeline_bits():
+    rng = np.random.RandomState(3)
+    samples = rng.uniform(-1, 1, size=(128, 64)).astype(np.float32)
+    proj = rng.normal(size=(64, 32)).astype(np.float32)
+    (got,) = model.simhash(jnp.asarray(samples), jnp.asarray(proj))
+    got = np.asarray(got)
+    assert set(np.unique(got)).issubset({0, 1})
+    want = np.asarray(ref.simhash_ref(jnp.asarray(samples), jnp.asarray(proj)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pipeline_registry_shapes():
+    entries = model.pipelines(batch=128, n=64)
+    names = [e["name"] for e in entries]
+    assert "mc_l2_hash" in names
+    assert "cheb_l2_hash" in names
+    assert "simhash" in names
+    for e in entries:
+        assert e["in_shapes"][0] == (128, 64)
+        assert len(e["inputs"]) == len(e["in_shapes"])
+
+
+def test_lowering_produces_hlo_text():
+    entry = next(e for e in model.pipelines() if e["name"] == "mc_l2_hash")
+    text = aot.lower_pipeline(entry)
+    assert "ENTRY" in text
+    assert "f32[128,64]" in text
+    assert "s32[128,32]" in text  # int32 output
+
+
+def test_aot_main_writes_artifacts(monkeypatch):
+    with tempfile.TemporaryDirectory() as d:
+        monkeypatch.setattr(
+            "sys.argv", ["aot", "--out", d, "--batch", "8", "--dim", "8"]
+        )
+        aot.main()
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert len(manifest["pipelines"]) >= 3
+        for p in manifest["pipelines"]:
+            path = os.path.join(d, p["file"])
+            assert os.path.exists(path), p
+            with open(path) as f:
+                assert "ENTRY" in f.read()
+
+
+def test_reference_outputs_deterministic():
+    a = model.reference_outputs(8, 8, 4, seed=7)
+    b = model.reference_outputs(8, 8, 4, seed=7)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)

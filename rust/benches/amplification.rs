@@ -1,0 +1,101 @@
+//! Bench: AND/OR amplification ablation + the auto-tuner — measures the
+//! empirical amplified S-curve against `1 − (1 − p₁^k)^L` and times the
+//! tuning search (DESIGN.md E-series ablations over index shape).
+
+use funclsh::bench::Bench;
+use funclsh::hashing::{CrossPolytopeBank, HashBank, PStableHashBank, SimHashBank};
+use funclsh::lsh::{tune, IndexConfig, LshIndex, TuningGoal};
+use funclsh::util::rng::{Rng64, Xoshiro256pp};
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bench::new();
+    println!("== amplification S-curves (empirical vs 1-(1-p^k)^L) ==");
+
+    let mut rng = Xoshiro256pp::seed_from_u64(21);
+    let dim = 16;
+    for (k, l) in [(2usize, 4usize), (4, 8), (6, 8)] {
+        let cfg = IndexConfig::new(k, l);
+        let trials = 400;
+        for &c in &[0.25, 0.5, 1.0, 2.0] {
+            let mut hits = 0;
+            // fresh banks per trial batch to average over hash draws
+            let bank = PStableHashBank::new(dim, cfg.total_hashes() * trials, 2.0, 1.0, &mut rng);
+            let x = vec![0.0; dim];
+            let mut y = vec![0.0; dim];
+            y[0] = c;
+            let hx = bank.hash(&x);
+            let hy = bank.hash(&y);
+            for t in 0..trials {
+                let base = t * cfg.total_hashes();
+                let collided = (0..l).any(|table| {
+                    (0..k).all(|j| {
+                        let idx = base + table * k + j;
+                        hx[idx] == hy[idx]
+                    })
+                });
+                if collided {
+                    hits += 1;
+                }
+            }
+            let emp = hits as f64 / trials as f64;
+            let p1 = funclsh::theory::pstable_collision_probability(c, 1.0, 2.0);
+            let pred = cfg.amplified_probability(p1);
+            println!(
+                "   k={k} L={l} c={c:<4}: empirical {emp:.3}  predicted {pred:.3}  (Δ {:+.3})",
+                emp - pred
+            );
+        }
+    }
+
+    println!("\n== hash family cost at K=256, dim=64 ==");
+    let dim = 64;
+    let v: Vec<f64> = (0..dim).map(|i| (i as f64 * 0.31).sin()).collect();
+    let ps = PStableHashBank::new(dim, 256, 2.0, 1.0, &mut rng);
+    let sh = SimHashBank::new(dim, 256, &mut rng);
+    let cp = CrossPolytopeBank::new(dim, 256, &mut rng);
+    b.throughput_case("family/pstable-256", 256.0, || {
+        black_box(ps.hash(black_box(&v)));
+    });
+    b.throughput_case("family/simhash-256", 256.0, || {
+        black_box(sh.hash(black_box(&v)));
+    });
+    b.throughput_case("family/crosspolytope-256", 256.0, || {
+        black_box(cp.hash(black_box(&v)));
+    });
+
+    // tuner latency
+    let goal = TuningGoal {
+        c_near: 0.1,
+        c_far: 1.0,
+        recall_target: 0.95,
+        candidate_budget: 0.05,
+        p: 2.0,
+    };
+    b.case("tuning/search-16x64", || {
+        black_box(tune(black_box(&goal), 16, 64));
+    });
+    if let Some(t) = tune(&goal, 16, 64) {
+        println!(
+            "\n   tuner picks k={} L={} r={:.3} (recall {:.3}, candidates {:.4})",
+            t.config.k, t.config.l, t.r, t.recall_at_near, t.candidates_at_far
+        );
+    }
+
+    // index probe cost vs bucket load
+    let cfg = IndexConfig::new(4, 8);
+    let bank = PStableHashBank::new(dim, cfg.total_hashes(), 2.0, 1.0, &mut rng);
+    let mut index = LshIndex::new(cfg);
+    for id in 0..10_000u64 {
+        let x: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        index.insert(id, &bank.hash(&x));
+    }
+    let sig = bank.hash(&v);
+    b.case("index/query-10k", || {
+        black_box(index.query(black_box(&sig)));
+    });
+    b.case("index/multiprobe1-10k", || {
+        black_box(index.query_multiprobe(black_box(&sig), 1));
+    });
+    println!("\n{}", b.to_csv());
+}

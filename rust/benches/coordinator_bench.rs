@@ -1,0 +1,102 @@
+//! Bench: the L3 coordinator — bounded-queue throughput, dynamic-batcher
+//! occupancy, and full-service insert/query rates under concurrent load.
+
+use funclsh::bench::Bench;
+use funclsh::config::ServiceConfig;
+use funclsh::coordinator::{BoundedQueue, Coordinator, CpuHashPath, Op, Response};
+use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use funclsh::hashing::PStableHashBank;
+use funclsh::util::rng::Xoshiro256pp;
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let mut b = Bench::new();
+    println!("== L3 coordinator ==");
+
+    // queue micro: push+pop roundtrip
+    let q: BoundedQueue<u64> = BoundedQueue::new(1024);
+    b.throughput_case("queue/push-pop", 1.0, || {
+        q.push(black_box(1)).unwrap();
+        black_box(q.pop_batch(1, Duration::from_micros(1)));
+    });
+    // batch drain of 64
+    b.throughput_case("queue/drain-64", 64.0, || {
+        for i in 0..64 {
+            q.push(i).unwrap();
+        }
+        black_box(q.pop_batch(64, Duration::from_micros(1)));
+    });
+
+    // full service: concurrent inserts then queries
+    let fast = std::env::var("FUNCLSH_BENCH_FAST").as_deref() == Ok("1");
+    let n_ops = if fast { 2_000 } else { 20_000 };
+    for workers in [1usize, 2, 4] {
+        let cfg = ServiceConfig {
+            dim: 64,
+            k: 4,
+            l: 8,
+            workers,
+            max_batch: 128,
+            max_wait_us: 200,
+            queue_depth: 2048,
+            ..Default::default()
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+        let points = emb.sample_points().to_vec();
+        let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+        let path = Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank)));
+        let svc = Arc::new(Coordinator::start(&cfg, path));
+
+        // Pipelined clients (submit_async + windowed acks) measure service
+        // capacity; fully synchronous clients only measure round-trip
+        // latency × client count.
+        let clients = 4;
+        let per = n_ops / clients;
+        let window = 256;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..clients as u64 {
+            let svc = svc.clone();
+            let points = points.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut inflight = std::collections::VecDeque::new();
+                for i in 0..per as u64 {
+                    let id = c * per as u64 + i;
+                    let samples: Vec<f32> = points
+                        .iter()
+                        .map(|&x| ((x * 7.3 + id as f64 * 0.01).sin()) as f32)
+                        .collect();
+                    inflight.push_back(svc.submit_async(Op::Insert { id, samples }).unwrap());
+                    if inflight.len() >= window {
+                        match inflight.pop_front().unwrap().recv().unwrap() {
+                            Response::Inserted { .. } => {}
+                            other => panic!("{other:?}"),
+                        }
+                    }
+                }
+                for rx in inflight {
+                    match rx.recv().unwrap() {
+                        Response::Inserted { .. } => {}
+                        other => panic!("{other:?}"),
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let el = t0.elapsed();
+        let m = svc.metrics();
+        println!(
+            "   service/insert workers={workers}: {:.0} op/s (mean batch fill {:.1}, p99 {:.2} ms)",
+            n_ops as f64 / el.as_secs_f64(),
+            m.mean_batch_fill,
+            m.latency_p99_s * 1e3
+        );
+        Arc::try_unwrap(svc).ok().unwrap().shutdown();
+    }
+    println!("\n{}", b.to_csv());
+}

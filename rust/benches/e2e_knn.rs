@@ -1,0 +1,67 @@
+//! Bench: end-to-end k-NN (experiment E6) — LSH-accelerated search vs
+//! brute force over GMM corpora of increasing size, with the multi-probe
+//! ablation. This is the speedup/recall trade-off the paper's LSH
+//! machinery exists to deliver.
+
+use funclsh::bench::Bench;
+use funclsh::embedding::{l2_dist, Embedder, Interval, MonteCarloEmbedder};
+use funclsh::experiments::extensions::knn_experiment;
+use funclsh::functions::Distribution1D;
+use funclsh::hashing::{HashBank, PStableHashBank};
+use funclsh::lsh::{IndexConfig, LshIndex};
+use funclsh::search::{BruteForceKnn, LshKnn};
+use funclsh::util::rng::Xoshiro256pp;
+use funclsh::wasserstein::QUANTILE_CLIP;
+use funclsh::workload::gmm_corpus;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bench::new();
+    println!("== E6: end-to-end k-NN recall vs speedup ==");
+
+    let fast = std::env::var("FUNCLSH_BENCH_FAST").as_deref() == Ok("1");
+    let sizes: &[usize] = if fast { &[1000] } else { &[1000, 5000, 10_000] };
+    for &corpus in sizes {
+        for depth in [0usize, 1, 2] {
+            let r = knn_experiment(corpus, 30, 10, depth, 99);
+            println!(
+                "   corpus={:<6} probes={} recall@10={:.3} evals/query={:<7.1} speedup={:.1}x",
+                r.corpus, r.probe_depth, r.recall, r.mean_evals, r.speedup
+            );
+        }
+    }
+
+    // query-latency microbench at 10k
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let n = if fast { 1000 } else { 10_000 };
+    let omega = Interval::new(QUANTILE_CLIP, 1.0 - QUANTILE_CLIP);
+    let emb = MonteCarloEmbedder::new(omega, 64, 2.0, &mut rng);
+    let cfg = IndexConfig::new(6, 8);
+    let bank = PStableHashBank::new(64, cfg.total_hashes(), 2.0, 0.5, &mut rng);
+    let corpus = gmm_corpus(n, &mut rng);
+    let vecs: Vec<Vec<f64>> = corpus
+        .iter()
+        .map(|d| emb.embed_fn(&d.quantile_fn()))
+        .collect();
+    let mut index = LshIndex::new(cfg);
+    for (i, v) in vecs.iter().enumerate() {
+        index.insert(i as u64, &bank.hash(v));
+    }
+    let ids: Vec<u64> = (0..n as u64).collect();
+    let q = &vecs[17];
+    let sig = bank.hash(q);
+
+    b.case(&format!("e2e/brute-force-{n}"), || {
+        black_box(BruteForceKnn::new(&ids, |id| l2_dist(q, &vecs[id as usize])).query(10));
+    });
+    let engine = LshKnn::new(&index).with_probe_depth(1);
+    b.case(&format!("e2e/lsh-query-{n}"), || {
+        black_box(engine.query(black_box(&sig), 10, |id| l2_dist(q, &vecs[id as usize])));
+    });
+    b.throughput_case("e2e/index-insert", 1.0, || {
+        let mut idx = black_box(LshIndex::new(cfg));
+        idx.insert(0, &sig);
+        black_box(idx);
+    });
+    println!("\n{}", b.to_csv());
+}

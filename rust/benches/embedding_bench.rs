@@ -1,0 +1,79 @@
+//! Bench: embedding throughput across every `T : L² → ℝ^N` implementation
+//! (the §3 transforms), plus the sliced-Wasserstein and density-estimator
+//! substrates. Complements `hash_throughput` (which covers embed+hash
+//! fused paths).
+
+use funclsh::bench::Bench;
+use funclsh::embedding::{
+    ChebyshevEmbedder, Embedder, FourierEmbedder, Interval, LegendreEmbedder,
+    MonteCarloEmbedder, QmcEmbedder, QmcSequence,
+};
+use funclsh::functions::{Distribution1D, Kde, Sine};
+use funclsh::util::rng::{Rng64, Xoshiro256pp};
+use funclsh::wasserstein::{sliced_wasserstein, DirectionBank};
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bench::new();
+    println!("== embedding throughput (N = 64 unless noted) ==");
+
+    let mut rng = Xoshiro256pp::seed_from_u64(31);
+    let omega = Interval::unit();
+    let f = Sine::paper(0.7);
+    let samples64: Vec<f64> = (0..64).map(|i| ((i as f64) * 0.31).sin()).collect();
+
+    let mc = MonteCarloEmbedder::new(omega, 64, 2.0, &mut rng);
+    let qmc = QmcEmbedder::new(omega, 64, 2.0, QmcSequence::Sobol);
+    let cheb = ChebyshevEmbedder::new(omega, 64);
+    let leg = LegendreEmbedder::new(omega, 64);
+    let fou = FourierEmbedder::new(omega, 65);
+
+    b.throughput_case("embed/mc-64", 64.0, || {
+        black_box(mc.embed_samples(black_box(&samples64)));
+    });
+    b.throughput_case("embed/qmc-64", 64.0, || {
+        black_box(qmc.embed_samples(black_box(&samples64)));
+    });
+    b.throughput_case("embed/cheb-64 (FFT dct)", 64.0, || {
+        black_box(cheb.embed_samples(black_box(&samples64)));
+    });
+    b.throughput_case("embed/legendre-64 (matmul)", 64.0, || {
+        black_box(leg.embed_samples(black_box(&samples64)));
+    });
+    let samples65: Vec<f64> = (0..65).map(|i| ((i as f64) * 0.31).sin()).collect();
+    b.throughput_case("embed/fourier-65 (direct)", 65.0, || {
+        black_box(fou.embed_samples(black_box(&samples65)));
+    });
+    // end-to-end: sample a function then embed
+    b.case("embed/cheb-64 incl. sampling", || {
+        black_box(cheb.embed_fn(black_box(&f)));
+    });
+
+    println!("\n== substrates ==");
+    // sliced wasserstein: 2 clouds of 256 2-D points, 32 directions
+    let cloud = |seed: u64| -> Vec<Vec<f64>> {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        (0..256).map(|_| vec![r.normal(), r.normal()]).collect()
+    };
+    let xs = cloud(1);
+    let ys = cloud(2);
+    let bank = DirectionBank::new(2, 32, &mut rng);
+    b.case("sliced-w2/256pts-32dirs", || {
+        black_box(sliced_wasserstein(
+            black_box(&xs),
+            black_box(&ys),
+            2.0,
+            &bank,
+        ));
+    });
+    // KDE quantile (the hashable object for sample-based corpora)
+    let data: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+    let kde = Kde::silverman(data);
+    b.case("kde/quantile-eval", || {
+        black_box(kde.quantile(black_box(0.3)));
+    });
+    b.case("kde/pdf-eval-1000pts", || {
+        black_box(kde.pdf(black_box(0.3)));
+    });
+    println!("\n{}", b.to_csv());
+}

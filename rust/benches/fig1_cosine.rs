@@ -1,0 +1,65 @@
+//! Bench: regenerate **Figure 1** (SimHash collision rate vs cosine
+//! similarity, both embeddings) and time its components — embedding
+//! throughput and SimHash throughput at the paper's parameters
+//! (N = 64, 1024 hash functions).
+
+use funclsh::bench::Bench;
+use funclsh::embedding::{ChebyshevEmbedder, Embedder, Interval, MonteCarloEmbedder};
+use funclsh::experiments::{fig1_cosine, FigureParams, Method};
+use funclsh::functions::Sine;
+use funclsh::hashing::{HashBank, SimHashBank};
+use funclsh::util::rng::Xoshiro256pp;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bench::new();
+    println!("== figure 1: SimHash over cosine similarity ==");
+
+    let params = FigureParams {
+        pairs: 64,
+        hashes: 1024,
+        ..Default::default()
+    };
+    for method in [Method::FunctionApproximation, Method::MonteCarlo] {
+        let series = fig1_cosine(method, params);
+        println!(
+            "   [{}] rmse={:.4} maxdev={:.4} pearson={:.4}",
+            method.label(),
+            series.rmse(),
+            series.max_dev(),
+            series.pearson()
+        );
+        b.throughput_case(
+            &format!("fig1/regenerate/{}", method.label()),
+            params.pairs as f64,
+            || {
+                black_box(fig1_cosine(
+                    method,
+                    FigureParams {
+                        pairs: 8,
+                        hashes: 256,
+                        ..params
+                    },
+                ));
+            },
+        );
+    }
+
+    // component microbenches
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let mc = MonteCarloEmbedder::new(Interval::unit(), 64, 2.0, &mut rng);
+    let cheb = ChebyshevEmbedder::new(Interval::unit(), 64);
+    let f = Sine::paper(0.7);
+    b.case("fig1/embed/mc-64", || {
+        black_box(mc.embed_fn(black_box(&f)));
+    });
+    b.case("fig1/embed/cheb-64", || {
+        black_box(cheb.embed_fn(black_box(&f)));
+    });
+    let bank = SimHashBank::new(64, 1024, &mut rng);
+    let v = mc.embed_fn(&f);
+    b.throughput_case("fig1/simhash-1024", 1024.0, || {
+        black_box(bank.hash(black_box(&v)));
+    });
+    println!("\n{}", b.to_csv());
+}

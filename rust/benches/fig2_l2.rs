@@ -1,0 +1,64 @@
+//! Bench: regenerate **Figure 2** (2-stable L²-distance hash collision
+//! rate vs ‖f−g‖_{L²}, both embeddings, r = 1) and time the p-stable hash
+//! bank against the theoretical-curve evaluation.
+
+use funclsh::bench::Bench;
+use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use funclsh::experiments::{fig2_l2, FigureParams, Method};
+use funclsh::functions::Sine;
+use funclsh::hashing::{HashBank, LazyL2Hash, PStableHashBank};
+use funclsh::theory::gaussian_collision_probability;
+use funclsh::util::rng::Xoshiro256pp;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bench::new();
+    println!("== figure 2: p-stable hash over L² distance ==");
+
+    let params = FigureParams {
+        pairs: 64,
+        hashes: 1024,
+        ..Default::default()
+    };
+    for method in [Method::FunctionApproximation, Method::MonteCarlo] {
+        let series = fig2_l2(method, params);
+        println!(
+            "   [{}] rmse={:.4} maxdev={:.4} pearson={:.4}",
+            method.label(),
+            series.rmse(),
+            series.max_dev(),
+            series.pearson()
+        );
+        b.throughput_case(
+            &format!("fig2/regenerate/{}", method.label()),
+            params.pairs as f64,
+            || {
+                black_box(fig2_l2(
+                    method,
+                    FigureParams {
+                        pairs: 8,
+                        hashes: 256,
+                        ..params
+                    },
+                ));
+            },
+        );
+    }
+
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), 64, 2.0, &mut rng);
+    let v = emb.embed_fn(&Sine::paper(0.4));
+    let bank = PStableHashBank::new(64, 1024, 2.0, 1.0, &mut rng);
+    b.throughput_case("fig2/pstable-1024", 1024.0, || {
+        black_box(bank.hash(black_box(&v)));
+    });
+    // Algorithm 1's lazy variant (stateless counter-based coefficients)
+    let lazy = LazyL2Hash::new(9, 1024, 1.0);
+    b.throughput_case("fig2/lazy-pstable-1024", 1024.0, || {
+        black_box(lazy.hash(black_box(&v)));
+    });
+    b.case("fig2/theory-curve", || {
+        black_box(gaussian_collision_probability(black_box(0.7), 1.0));
+    });
+    println!("\n{}", b.to_csv());
+}

@@ -1,0 +1,88 @@
+//! Bench: regenerate **Figure 3** (W²-distance hash over Gaussian pairs
+//! via inverse CDFs) and time the Wasserstein machinery — the quantile
+//! closed form (Eq. 3) vs the empirical estimator vs the exact discrete
+//! LP (Eq. 2), quantifying §2.2's "computing W^p is expensive" claim that
+//! motivates LSH in the first place.
+
+use funclsh::bench::Bench;
+use funclsh::experiments::{fig3_wasserstein, FigureParams, Method};
+use funclsh::functions::{Distribution1D, GaussianDist};
+use funclsh::util::rng::{Rng64, Xoshiro256pp};
+use funclsh::wasserstein::{
+    discrete::discrete_wasserstein_1d, gaussian_w2, wasserstein_1d_quantile,
+    wasserstein_empirical, QUANTILE_CLIP,
+};
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bench::new();
+    println!("== figure 3: hashing 2-Wasserstein distance ==");
+
+    let params = FigureParams {
+        pairs: 64,
+        hashes: 1024,
+        ..Default::default()
+    };
+    for method in [Method::FunctionApproximation, Method::MonteCarlo] {
+        let series = fig3_wasserstein(method, params);
+        println!(
+            "   [{}] rmse={:.4} maxdev={:.4} pearson={:.4}",
+            method.label(),
+            series.rmse(),
+            series.max_dev(),
+            series.pearson()
+        );
+        b.throughput_case(
+            &format!("fig3/regenerate/{}", method.label()),
+            params.pairs as f64,
+            || {
+                black_box(fig3_wasserstein(
+                    method,
+                    FigureParams {
+                        pairs: 8,
+                        hashes: 256,
+                        ..params
+                    },
+                ));
+            },
+        );
+    }
+
+    // --- the cost ladder of exact W² computation ---
+    let a = GaussianDist::new(-0.3, 0.7);
+    let c = GaussianDist::new(0.6, 1.1);
+    b.case("fig3/w2/closed-form", || {
+        black_box(gaussian_w2(black_box(&a), black_box(&c)));
+    });
+    b.case("fig3/w2/quantile-quadrature", || {
+        black_box(wasserstein_1d_quantile(
+            black_box(&a),
+            black_box(&c),
+            2.0,
+            QUANTILE_CLIP,
+        ));
+    });
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let xs: Vec<f64> = (0..1000)
+        .map(|_| a.quantile(rng.uniform().clamp(1e-12, 1.0 - 1e-12)))
+        .collect();
+    let ys: Vec<f64> = (0..1000)
+        .map(|_| c.quantile(rng.uniform().clamp(1e-12, 1.0 - 1e-12)))
+        .collect();
+    b.case("fig3/w2/empirical-1000-samples", || {
+        black_box(wasserstein_empirical(black_box(&xs), black_box(&ys), 2.0));
+    });
+    let xs64: Vec<f64> = xs.iter().take(64).copied().collect();
+    let ys64: Vec<f64> = ys.iter().take(64).copied().collect();
+    let mass = vec![1.0 / 64.0; 64];
+    b.case("fig3/w2/discrete-lp-64x64", || {
+        black_box(discrete_wasserstein_1d(
+            black_box(&xs64),
+            &mass,
+            black_box(&ys64),
+            &mass,
+            2.0,
+        ));
+    });
+    println!("\n{}", b.to_csv());
+}

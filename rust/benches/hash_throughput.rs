@@ -1,0 +1,114 @@
+//! Bench: the request-path hot spot — `samples → signature` throughput
+//! across backends (reference CPU, folded CPU, PJRT/XLA pipeline) and
+//! batch sizes, plus the DCT fast-path ablation. This is the §Perf
+//! workhorse: EXPERIMENTS.md §Perf records its numbers before/after each
+//! optimization.
+
+use funclsh::bench::Bench;
+use funclsh::chebyshev::{dct2_naive, fft::dct2_fft};
+use funclsh::coordinator::{CpuHashPath, FoldedHashPath, HashPath};
+use funclsh::embedding::{ChebyshevEmbedder, Interval, MonteCarloEmbedder};
+use funclsh::hashing::PStableHashBank;
+use funclsh::runtime::pjrt_path::PjrtHashPath;
+use funclsh::util::rng::{Rng64, Xoshiro256pp};
+use std::hint::black_box;
+use std::path::Path;
+
+fn random_rows(n: usize, count: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..count)
+        .map(|_| (0..n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect())
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    println!("== hot path: samples → signature throughput (N=64, K=32) ==");
+
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    let n = 64;
+    let k = 32;
+    let emb = MonteCarloEmbedder::new(Interval::unit(), n, 2.0, &mut rng);
+    let cheb = ChebyshevEmbedder::new(Interval::unit(), n);
+    let bank = PStableHashBank::new(n, k, 2.0, 1.0, &mut rng);
+    let proj_rows: Vec<&[f64]> = (0..k).map(|j| bank.projection_row(j)).collect();
+
+    let reference = CpuHashPath::new(Box::new(emb.clone()), Box::new(bank.clone()));
+    let folded = FoldedHashPath::new(Box::new(emb.clone()), &proj_rows, bank.offsets(), bank.r());
+    let cheb_ref = CpuHashPath::new(Box::new(cheb.clone()), Box::new(bank.clone()));
+    let cheb_folded =
+        FoldedHashPath::new(Box::new(cheb.clone()), &proj_rows, bank.offsets(), bank.r());
+
+    for &batch in &[1usize, 16, 128, 512] {
+        let rows = random_rows(n, batch, batch as u64);
+        b.throughput_case(&format!("hash/cpu-reference/b{batch}"), batch as f64, || {
+            black_box(reference.hash_rows(black_box(&rows)).unwrap());
+        });
+        b.throughput_case(&format!("hash/cpu-folded/b{batch}"), batch as f64, || {
+            black_box(folded.hash_rows(black_box(&rows)).unwrap());
+        });
+    }
+    // chebyshev embedding ablation: embed-then-hash vs folded matmul
+    let rows = random_rows(n, 128, 7);
+    b.throughput_case("hash/cheb-reference/b128", 128.0, || {
+        black_box(cheb_ref.hash_rows(black_box(&rows)).unwrap());
+    });
+    b.throughput_case("hash/cheb-folded/b128", 128.0, || {
+        black_box(cheb_folded.hash_rows(black_box(&rows)).unwrap());
+    });
+
+    // PJRT pipeline (when artifacts are present)
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let pjrt = PjrtHashPath::from_folded(
+            artifacts,
+            "mc_l2_hash",
+            FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r()),
+        )
+        .expect("artifacts present but pipeline failed to load");
+        for &batch in &[128usize, 512] {
+            let rows = random_rows(n, batch, 100 + batch as u64);
+            b.throughput_case(&format!("hash/pjrt/b{batch}"), batch as f64, || {
+                black_box(pjrt.hash_rows(black_box(&rows)).unwrap());
+            });
+        }
+        // §Perf ablation: the same math lowered WITHOUT pallas (plain XLA
+        // graph) — isolates the interpret-mode grid-loop overhead.
+        if let Ok(jnp) = PjrtHashPath::from_folded(
+            artifacts,
+            "mc_l2_hash_jnp",
+            FoldedHashPath::new(
+                Box::new(MonteCarloEmbedder::new(
+                    Interval::unit(),
+                    n,
+                    2.0,
+                    &mut Xoshiro256pp::seed_from_u64(11),
+                )),
+                &proj_rows,
+                bank.offsets(),
+                bank.r(),
+            ),
+        ) {
+            for &batch in &[128usize, 512] {
+                let rows = random_rows(n, batch, 100 + batch as u64);
+                b.throughput_case(&format!("hash/pjrt-jnp/b{batch}"), batch as f64, || {
+                    black_box(jnp.hash_rows(black_box(&rows)).unwrap());
+                });
+            }
+        }
+    } else {
+        println!("   (artifacts missing — skipping PJRT cases; run `make artifacts`)");
+    }
+
+    // DCT ablation: O(N²) naive vs O(N log N) FFT-based
+    for &size in &[64usize, 256, 1024] {
+        let x: Vec<f64> = (0..size).map(|i| (i as f64 * 0.17).sin()).collect();
+        b.case(&format!("dct/naive-{size}"), || {
+            black_box(dct2_naive(black_box(&x)));
+        });
+        b.case(&format!("dct/fft-{size}"), || {
+            black_box(dct2_fft(black_box(&x)));
+        });
+    }
+    println!("\n{}", b.to_csv());
+}

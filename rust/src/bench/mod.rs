@@ -1,0 +1,239 @@
+//! A small criterion-style benchmark harness (the criterion crate is not
+//! in the offline vendor set).
+//!
+//! Provides warmup, timed iterations, and robust summary statistics
+//! (mean / p50 / p99 / min), plus throughput reporting and CSV/JSON emit.
+//! All `cargo bench` targets in `rust/benches/` are built on this.
+
+use crate::util::stats::quantile_sorted;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// case name
+    pub name: String,
+    /// number of timed iterations
+    pub iters: u64,
+    /// mean time per iteration
+    pub mean: Duration,
+    /// median time per iteration
+    pub p50: Duration,
+    /// 99th-percentile time per iteration
+    pub p99: Duration,
+    /// fastest iteration
+    pub min: Duration,
+    /// optional items-per-iteration for throughput reporting
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Items per second (if `items_per_iter` was set).
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|items| items / self.mean.as_secs_f64())
+    }
+
+    /// One human-readable summary line.
+    pub fn line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>10.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>10.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {t:>10.2} item/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} mean {:>12?}  p50 {:>12?}  p99 {:>12?}  min {:>12?}{}",
+            self.name, self.mean, self.p50, self.p99, self.min, tp
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// warmup duration before timing
+    pub warmup: Duration,
+    /// target measurement duration
+    pub measure: Duration,
+    /// hard cap on timed iterations
+    pub max_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+/// A benchmark suite: runs cases, collects results, prints a report.
+pub struct Bench {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    /// Suite with default config (honours `FUNCLSH_BENCH_FAST=1` for CI:
+    /// 50 ms warmup / 200 ms measure).
+    pub fn new() -> Self {
+        let mut config = BenchConfig::default();
+        if std::env::var("FUNCLSH_BENCH_FAST").as_deref() == Ok("1") {
+            config.warmup = Duration::from_millis(50);
+            config.measure = Duration::from_millis(200);
+        }
+        Self {
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Suite with explicit config.
+    pub fn with_config(config: BenchConfig) -> Self {
+        Self {
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run a case; `f` is one iteration. Use `std::hint::black_box` inside
+    /// `f` on inputs/outputs to defeat the optimizer.
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.case_with_items(name, None, &mut f)
+    }
+
+    /// Run a throughput case: `items` is the number of logical items each
+    /// iteration processes (e.g. batch size).
+    pub fn throughput_case<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: F,
+    ) -> &BenchResult {
+        self.case_with_items(name, Some(items), &mut f)
+    }
+
+    fn case_with_items(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // warmup
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.config.warmup {
+            f();
+            warm_iters += 1;
+        }
+        // choose a per-sample batch so each sample is ≥ ~20µs, keeping
+        // timer overhead below 1%.
+        let est = self.config.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let batch = ((20e-6 / est.max(1e-12)).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let mut total_iters = 0u64;
+        let measure_start = Instant::now();
+        while measure_start.elapsed() < self.config.measure && total_iters < self.config.max_iters
+        {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let el = t.elapsed().as_secs_f64() / batch as f64;
+            samples.push(el);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean: Duration::from_secs_f64(mean),
+            p50: Duration::from_secs_f64(quantile_sorted(&samples, 0.5)),
+            p99: Duration::from_secs_f64(quantile_sorted(&samples, 0.99)),
+            min: Duration::from_secs_f64(samples[0]),
+            items_per_iter: items,
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render results as CSV (`name,iters,mean_ns,p50_ns,p99_ns,min_ns,throughput`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("name,iters,mean_ns,p50_ns,p99_ns,min_ns,items_per_sec\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                r.name,
+                r.iters,
+                r.mean.as_nanos(),
+                r.p50.as_nanos(),
+                r.p99.as_nanos(),
+                r.min.as_nanos(),
+                r.throughput().map(|t| format!("{t:.1}")).unwrap_or_default()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_config() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            max_iters: 100_000,
+        }
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::with_config(fast_config());
+        let mut acc = 0u64;
+        let r = b.case("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(17));
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.p50 && r.p50 <= r.p99);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bench::with_config(fast_config());
+        let r = b.throughput_case("batch", 128.0, || {
+            std::hint::black_box((0..64).sum::<u64>());
+        });
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let mut b = Bench::with_config(fast_config());
+        b.case("a", || {
+            std::hint::black_box(1 + 1);
+        });
+        let csv = b.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("name,"));
+    }
+}

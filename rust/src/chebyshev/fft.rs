@@ -1,0 +1,166 @@
+//! Radix-2 FFT and the FFT-based DCT-II.
+//!
+//! The DCT-II uses Makhoul's (1980) even-odd reordering: an `N`-point
+//! DCT-II becomes one `N`-point complex FFT plus a twiddle, `O(N log N)`
+//! versus the naive `O(N²)`. Correctness is pinned to [`super::dct2_naive`]
+//! in tests.
+
+use std::f64::consts::PI;
+
+/// Complex number as a bare pair (re, im) — no external deps.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cpx {
+    /// real part
+    pub re: f64,
+    /// imaginary part
+    pub im: f64,
+}
+
+impl Cpx {
+    /// `re + i·im`
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    /// `e^{iθ}`
+    pub fn cis(theta: f64) -> Self {
+        Self::new(theta.cos(), theta.sin())
+    }
+
+    /// complex multiplication
+    pub fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    /// complex addition
+    pub fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+
+    /// complex subtraction
+    pub fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+/// In-place iterative radix-2 Cooley–Tukey FFT (decimation in time).
+/// `data.len()` must be a power of two. Forward transform uses the
+/// `e^{-2πi k n / N}` convention.
+pub fn fft_in_place(data: &mut [Cpx]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // butterflies
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * PI / len as f64;
+        let wlen = Cpx::cis(ang);
+        for start in (0..n).step_by(len) {
+            let mut w = Cpx::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[start + k];
+                let v = data[start + k + len / 2].mul(w);
+                data[start + k] = u.add(v);
+                data[start + k + len / 2] = u.sub(v);
+                w = w.mul(wlen);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// DCT-II via a single complex FFT (Makhoul 1980):
+/// `y_j = Σ_k x_k cos(π j (k + ½) / N)`, same convention as
+/// [`super::dct2_naive`]. `x.len()` must be a power of two.
+pub fn dct2_fft(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    // Even-odd reordering: v = [x0, x2, ..., x_{N-2}, x_{N-1}, ..., x3, x1]
+    let mut v = vec![Cpx::default(); n];
+    for i in 0..n / 2 {
+        v[i] = Cpx::new(x[2 * i], 0.0);
+        v[n - 1 - i] = Cpx::new(x[2 * i + 1], 0.0);
+    }
+    fft_in_place(&mut v);
+    // y_j = Re( e^{-iπj/(2N)} V_j )
+    (0..n)
+        .map(|j| {
+            let tw = Cpx::cis(-PI * j as f64 / (2.0 * n as f64));
+            tw.mul(v[j]).re
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut d = vec![Cpx::default(); 8];
+        d[0] = Cpx::new(1.0, 0.0);
+        fft_in_place(&mut d);
+        for c in d {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_of_constant_is_impulse() {
+        let mut d = vec![Cpx::new(1.0, 0.0); 8];
+        fft_in_place(&mut d);
+        assert!((d[0].re - 8.0).abs() < 1e-12);
+        for c in &d[1..] {
+            assert!(c.re.abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_matches_dft_random() {
+        let n = 16;
+        let xs: Vec<Cpx> = (0..n)
+            .map(|i| Cpx::new(((i * 7 + 3) % 5) as f64, ((i * 11) % 3) as f64))
+            .collect();
+        // naive DFT
+        let mut want = vec![Cpx::default(); n];
+        for (k, w) in want.iter_mut().enumerate() {
+            for (j, &x) in xs.iter().enumerate() {
+                let tw = Cpx::cis(-2.0 * PI * (k * j) as f64 / n as f64);
+                *w = w.add(x.mul(tw));
+            }
+        }
+        let mut got = xs;
+        fft_in_place(&mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.re - w.re).abs() < 1e-10 && (g.im - w.im).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let n = 64;
+        let xs: Vec<Cpx> = (0..n)
+            .map(|i| Cpx::new((i as f64 * 0.37).sin(), 0.0))
+            .collect();
+        let time_energy: f64 = xs.iter().map(|c| c.re * c.re + c.im * c.im).sum();
+        let mut fs = xs;
+        fft_in_place(&mut fs);
+        let freq_energy: f64 =
+            fs.iter().map(|c| c.re * c.re + c.im * c.im).sum::<f64>() / n as f64;
+        assert!((time_energy - freq_energy).abs() < 1e-9);
+    }
+}

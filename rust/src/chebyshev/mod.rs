@@ -1,0 +1,302 @@
+//! Chebyshev approximation machinery — the orthonormal-basis half (§3.1) of
+//! the paper.
+//!
+//! A function `f` on `[a, b]` is interpolated at the `N` Chebyshev points of
+//! the first kind; its Chebyshev coefficients are extracted with a DCT-II
+//! (either the `O(N²)` direct transform or the `O(N log N)` FFT-based one),
+//! evaluated with Clenshaw's recurrence, and truncated adaptively with the
+//! chebfun-style plateau heuristic (Trefethen 2012; Driscoll et al. 2014) —
+//! the "choosing `N_f`" heuristics the paper points to.
+//!
+//! The embedding of `L²([a,b])` (Lebesgue) into `ℓ²_N` built on top of this
+//! lives in [`crate::embedding::ChebyshevEmbedder`].
+
+pub mod fft;
+
+use crate::functions::Function1D;
+use std::f64::consts::PI;
+
+/// The `n` Chebyshev points of the first kind on `[-1, 1]`:
+/// `x_k = cos(π (k + ½) / n)`, `k = 0..n` (descending in `x`).
+pub fn chebyshev_nodes(n: usize) -> Vec<f64> {
+    assert!(n > 0);
+    (0..n)
+        .map(|k| (PI * (k as f64 + 0.5) / n as f64).cos())
+        .collect()
+}
+
+/// Chebyshev points of the first kind mapped to `[a, b]`.
+pub fn chebyshev_nodes_on(n: usize, a: f64, b: f64) -> Vec<f64> {
+    chebyshev_nodes(n)
+        .into_iter()
+        .map(|x| 0.5 * (a + b) + 0.5 * (b - a) * x)
+        .collect()
+}
+
+/// Direct `O(N²)` DCT-II: `y_j = Σ_k x_k cos(π j (k + ½) / N)`.
+///
+/// This is the reference implementation; [`fft::dct2_fft`] is the fast
+/// path (they are tested against each other).
+pub fn dct2_naive(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut y = vec![0.0; n];
+    for (j, yj) in y.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for (k, &xk) in x.iter().enumerate() {
+            acc += xk * (PI * j as f64 * (k as f64 + 0.5) / n as f64).cos();
+        }
+        *yj = acc;
+    }
+    y
+}
+
+/// DCT-II dispatching to the FFT path for power-of-two sizes and the naive
+/// path otherwise.
+pub fn dct2(x: &[f64]) -> Vec<f64> {
+    if x.len().is_power_of_two() && x.len() >= 8 {
+        fft::dct2_fft(x)
+    } else {
+        dct2_naive(x)
+    }
+}
+
+/// Chebyshev coefficients of the degree-`n-1` interpolant of `f` through
+/// the first-kind points: `c_j` such that `f(x) ≈ Σ c_j T_j(x)`.
+///
+/// `c_j = (2/N) Σ_k f(x_k) cos(π j (k+½)/N)`, with `c_0` halved.
+pub fn chebyshev_coefficients(samples: &[f64]) -> Vec<f64> {
+    let n = samples.len();
+    let mut c = dct2(samples);
+    let scale = 2.0 / n as f64;
+    for cj in c.iter_mut() {
+        *cj *= scale;
+    }
+    c[0] *= 0.5;
+    c
+}
+
+/// A truncated Chebyshev series on `[a, b]`: `f(x) ≈ Σ_j c_j T_j(t(x))`
+/// where `t` maps `[a,b]` to `[-1,1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChebyshevSeries {
+    /// Chebyshev coefficients `c_0 .. c_{m-1}`
+    pub coeffs: Vec<f64>,
+    /// left endpoint of the domain
+    pub a: f64,
+    /// right endpoint of the domain
+    pub b: f64,
+}
+
+impl ChebyshevSeries {
+    /// Interpolate `f` at `n` first-kind Chebyshev points on `[a, b]`.
+    pub fn fit(f: &dyn Function1D, n: usize, a: f64, b: f64) -> Self {
+        assert!(a < b);
+        let xs = chebyshev_nodes_on(n, a, b);
+        let samples: Vec<f64> = xs.iter().map(|&x| f.eval(x)).collect();
+        Self {
+            coeffs: chebyshev_coefficients(&samples),
+            a,
+            b,
+        }
+    }
+
+    /// Chebfun-style adaptive fit: double `n` starting from `n0` until the
+    /// trailing coefficients plateau below `tol` relative to the largest
+    /// coefficient, then truncate at the plateau. Returns the truncated
+    /// series (the paper's "choose a good `N_f`" step, §3.1 note (i)).
+    pub fn fit_adaptive(f: &dyn Function1D, a: f64, b: f64, tol: f64, max_n: usize) -> Self {
+        let mut n = 16;
+        loop {
+            let s = Self::fit(f, n, a, b);
+            if let Some(cut) = s.plateau_cutoff(tol) {
+                return Self {
+                    coeffs: s.coeffs[..cut].to_vec(),
+                    a,
+                    b,
+                };
+            }
+            if n >= max_n {
+                return s;
+            }
+            n *= 2;
+        }
+    }
+
+    /// Index after which the coefficient envelope stays below
+    /// `tol * max|c|`; `None` if the tail never resolves (under-resolved).
+    fn plateau_cutoff(&self, tol: f64) -> Option<usize> {
+        let cmax = self
+            .coeffs
+            .iter()
+            .fold(0.0f64, |m, c| m.max(c.abs()));
+        if cmax == 0.0 {
+            return Some(1);
+        }
+        let thresh = tol * cmax;
+        // Envelope: running max from the tail.
+        let n = self.coeffs.len();
+        let mut env = vec![0.0; n];
+        let mut run = 0.0f64;
+        for i in (0..n).rev() {
+            run = run.max(self.coeffs[i].abs());
+            env[i] = run;
+        }
+        // Require the last eighth of the envelope to sit below threshold so
+        // a single small coefficient doesn't fake convergence.
+        let tail_start = n - (n / 8).max(1);
+        if env[tail_start] > thresh {
+            return None;
+        }
+        // Truncate at the first index where the envelope drops below.
+        let cut = env.iter().position(|&e| e <= thresh).unwrap_or(n);
+        Some(cut.max(1))
+    }
+
+    /// Degree + 1 (number of retained coefficients) — the paper's `N_f`.
+    pub fn len(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// Whether the series has no coefficients.
+    pub fn is_empty(&self) -> bool {
+        self.coeffs.is_empty()
+    }
+
+    /// Evaluate via Clenshaw's recurrence — `O(m)` per point, numerically
+    /// stable.
+    pub fn eval(&self, x: f64) -> f64 {
+        let t = (2.0 * x - (self.a + self.b)) / (self.b - self.a);
+        let mut b1 = 0.0;
+        let mut b2 = 0.0;
+        for &c in self.coeffs.iter().skip(1).rev() {
+            let b0 = 2.0 * t * b1 - b2 + c;
+            b2 = b1;
+            b1 = b0;
+        }
+        self.coeffs.first().copied().unwrap_or(0.0) + t * b1 - b2
+    }
+
+    /// `‖f̂‖²` under the *Chebyshev* inner product implied by discrete
+    /// orthogonality: `c₀² + ½ Σ_{j≥1} c_j²` (times π; unnormalized).
+    /// Used by the "estimate `‖ε_f‖` when `‖f‖` is known" heuristic.
+    pub fn weighted_norm_sq(&self) -> f64 {
+        let mut s = 0.0;
+        for (j, &c) in self.coeffs.iter().enumerate() {
+            s += if j == 0 { c * c } else { 0.5 * c * c };
+        }
+        s
+    }
+}
+
+impl Function1D for ChebyshevSeries {
+    fn eval(&self, x: f64) -> f64 {
+        ChebyshevSeries::eval(self, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::Sine;
+
+    #[test]
+    fn nodes_are_cosines_descending() {
+        let xs = chebyshev_nodes(4);
+        assert_eq!(xs.len(), 4);
+        assert!(xs.windows(2).all(|w| w[0] > w[1]));
+        assert!((xs[0] - (PI / 8.0).cos()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn nodes_map_to_interval() {
+        let xs = chebyshev_nodes_on(16, 2.0, 5.0);
+        assert!(xs.iter().all(|&x| (2.0..=5.0).contains(&x)));
+    }
+
+    #[test]
+    fn dct_naive_vs_fft() {
+        for &n in &[8usize, 16, 64, 128] {
+            let x: Vec<f64> = (0..n).map(|i| ((i * 37 % 11) as f64) - 5.0).collect();
+            let a = dct2_naive(&x);
+            let b = fft::dct2_fft(&x);
+            for (ai, bi) in a.iter().zip(&b) {
+                assert!((ai - bi).abs() < 1e-9, "n={n}: {ai} vs {bi}");
+            }
+        }
+    }
+
+    #[test]
+    fn coefficients_of_pure_chebyshev_polynomials() {
+        // f = T_3 on [-1,1] must give c_3 = 1 and everything else ~0.
+        let t3 = |x: f64| 4.0 * x.powi(3) - 3.0 * x;
+        let xs = chebyshev_nodes(16);
+        let samples: Vec<f64> = xs.iter().map(|&x| t3(x)).collect();
+        let c = chebyshev_coefficients(&samples);
+        for (j, cj) in c.iter().enumerate() {
+            let want = if j == 3 { 1.0 } else { 0.0 };
+            assert!((cj - want).abs() < 1e-12, "c[{j}] = {cj}");
+        }
+    }
+
+    #[test]
+    fn interpolant_matches_smooth_function() {
+        let f = Sine::paper(0.7);
+        let s = ChebyshevSeries::fit(&f, 32, 0.0, 1.0);
+        for i in 0..100 {
+            let x = i as f64 / 99.0;
+            assert!(
+                (s.eval(x) - f.eval(x)).abs() < 1e-12,
+                "x = {x}: {} vs {}",
+                s.eval(x),
+                f.eval(x)
+            );
+        }
+    }
+
+    #[test]
+    fn interpolant_on_shifted_domain() {
+        let f = |x: f64| (x * x + 1.0).ln();
+        let s = ChebyshevSeries::fit(&f, 48, 2.0, 6.0);
+        for i in 0..50 {
+            let x = 2.0 + 4.0 * i as f64 / 49.0;
+            assert!((s.eval(x) - f(x)).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn adaptive_fit_truncates_smooth_functions() {
+        let f = Sine::paper(0.0);
+        let s = ChebyshevSeries::fit_adaptive(&f, 0.0, 1.0, 1e-13, 512);
+        // sin(2πx) needs ~20 coefficients at machine precision
+        assert!(s.len() <= 40, "kept {} coefficients", s.len());
+        for i in 0..50 {
+            let x = i as f64 / 49.0;
+            assert!((s.eval(x) - f.eval(x)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn adaptive_fit_grows_for_oscillatory_functions() {
+        let hard = |x: f64| (40.0 * PI * x).sin();
+        let easy = |x: f64| x;
+        let sh = ChebyshevSeries::fit_adaptive(&hard, 0.0, 1.0, 1e-10, 1024);
+        let se = ChebyshevSeries::fit_adaptive(&easy, 0.0, 1.0, 1e-10, 1024);
+        assert!(sh.len() > 4 * se.len());
+    }
+
+    #[test]
+    fn clenshaw_handles_degenerate_series() {
+        let s = ChebyshevSeries {
+            coeffs: vec![2.5],
+            a: -1.0,
+            b: 1.0,
+        };
+        assert_eq!(s.eval(0.3), 2.5);
+        let e = ChebyshevSeries {
+            coeffs: vec![],
+            a: -1.0,
+            b: 1.0,
+        };
+        assert_eq!(e.eval(0.3), 0.0);
+    }
+}

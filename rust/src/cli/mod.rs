@@ -1,0 +1,116 @@
+//! A small argument parser (the offline vendor set has no clap):
+//! positional arguments, `--flag value`, `--flag=value`, and boolean
+//! `--switch` forms.
+
+use std::collections::{HashMap, HashSet};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// positional arguments in order
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options
+    options: HashMap<String, String>,
+    /// bare `--switch` flags
+    switches: HashSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding the binary name).
+    ///
+    /// A `--key` followed by a token that does not start with `--` is an
+    /// option; a `--key` followed by another `--…` (or nothing) is a
+    /// boolean switch. `--key=value` always binds.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let tokens: Vec<String> = args.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.options
+                        .insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.insert(stripped.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Option parsed as `T`, or `default`.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Boolean switch.
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.contains(key)
+    }
+
+    /// First positional argument (the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("experiment fig1 --pairs 128 --method=mc --fast");
+        assert_eq!(a.subcommand(), Some("experiment"));
+        assert_eq!(a.positional, vec!["experiment", "fig1"]);
+        assert_eq!(a.get("pairs"), Some("128"));
+        assert_eq!(a.get("method"), Some("mc"));
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+    }
+
+    #[test]
+    fn parsed_with_default() {
+        let a = parse("--n 32");
+        assert_eq!(a.get_parsed("n", 7usize), 32);
+        assert_eq!(a.get_parsed("m", 7usize), 7);
+        assert_eq!(a.get_parsed::<f64>("r", 1.5), 1.5);
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("--verbose --out file.csv");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("out"), Some("file.csv"));
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse("");
+        assert_eq!(a.subcommand(), None);
+    }
+}

@@ -1,0 +1,525 @@
+//! Service configuration: a TOML-subset parser (offline build — no
+//! external crates) plus the typed configuration consumed by the
+//! coordinator, runtime, and CLI.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with strings,
+//! integers, floats, booleans, and homogeneous arrays; `#` comments.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset document: `section -> key -> raw value`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Toml {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+/// A scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// string
+    Str(String),
+    /// integer
+    Int(i64),
+    /// float
+    Float(f64),
+    /// boolean
+    Bool(bool),
+    /// homogeneous array
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    fn parse(raw: &str, line: usize) -> Result<Self, ConfigError> {
+        let raw = raw.trim();
+        if raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2 {
+            return Ok(TomlValue::Str(raw[1..raw.len() - 1].to_string()));
+        }
+        if raw == "true" {
+            return Ok(TomlValue::Bool(true));
+        }
+        if raw == "false" {
+            return Ok(TomlValue::Bool(false));
+        }
+        if raw.starts_with('[') && raw.ends_with(']') {
+            let inner = &raw[1..raw.len() - 1];
+            let mut items = Vec::new();
+            for part in split_top_level(inner) {
+                let part = part.trim();
+                if !part.is_empty() {
+                    items.push(TomlValue::parse(part, line)?);
+                }
+            }
+            return Ok(TomlValue::Array(items));
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+        Err(ConfigError::at(line, format!("cannot parse value `{raw}`")))
+    }
+
+    /// Value as f64 (ints widen).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Value as usize.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    /// Value as str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Value as bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Split on commas not inside quotes or nested brackets.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Configuration error with the offending line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError {
+    /// 1-based line (0 = not line-specific)
+    pub line: usize,
+    /// description
+    pub msg: String,
+}
+
+impl ConfigError {
+    fn at(line: usize, msg: String) -> Self {
+        Self { line, msg }
+    }
+
+    /// Non-positional error.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self {
+            line: 0,
+            msg: msg.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line > 0 {
+            write!(f, "config error (line {}): {}", self.line, self.msg)
+        } else {
+            write!(f, "config error: {}", self.msg)
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Toml {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        for (i, raw_line) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = strip_comment(raw_line).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ConfigError::at(line_no, "unterminated section".into()));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| ConfigError::at(line_no, "expected `key = value`".into()))?;
+            let key = line[..eq].trim().to_string();
+            let value = TomlValue::parse(&line[eq + 1..], line_no)?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Which embedding the service uses on its hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EmbeddingKind {
+    /// Monte Carlo (i.i.d. uniform sample points)
+    MonteCarlo,
+    /// quasi-Monte Carlo (Sobol points)
+    Qmc,
+    /// Chebyshev / orthonormal basis
+    Chebyshev,
+}
+
+/// Which hash family the service uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HashKind {
+    /// p-stable L^p distance hash
+    PStable,
+    /// SimHash (cosine similarity)
+    SimHash,
+}
+
+/// Full service configuration with defaults mirroring the paper's
+/// experimental setup (Ω = \[0,1\], N = 64, r = 1, 1024 hash functions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceConfig {
+    /// master RNG seed
+    pub seed: u64,
+    /// domain left endpoint
+    pub domain_a: f64,
+    /// domain right endpoint
+    pub domain_b: f64,
+    /// embedding dimension N
+    pub dim: usize,
+    /// embedding method
+    pub embedding: EmbeddingKind,
+    /// L^p exponent
+    pub p: f64,
+    /// hash family
+    pub hash: HashKind,
+    /// bucket width r
+    pub r: f64,
+    /// hashes per table (AND)
+    pub k: usize,
+    /// number of tables (OR)
+    pub l: usize,
+    /// multiprobe depth at query time
+    pub probe_depth: usize,
+    /// number of index shards (id-partitioned)
+    pub shards: usize,
+    /// dynamic batcher: max batch size
+    pub max_batch: usize,
+    /// dynamic batcher: max wait before flushing a partial batch
+    pub max_wait_us: u64,
+    /// worker threads executing batches
+    pub workers: usize,
+    /// bounded request queue length (backpressure)
+    pub queue_depth: usize,
+    /// directory holding AOT artifacts
+    pub artifacts_dir: String,
+    /// use the PJRT pipeline when artifacts are present
+    pub use_pjrt: bool,
+    /// which AOT pipeline the service executes (e.g. `mc_l2_hash`,
+    /// `mc_l2_hash_jnp`)
+    pub pipeline: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x5EED,
+            domain_a: 0.0,
+            domain_b: 1.0,
+            dim: 64,
+            embedding: EmbeddingKind::MonteCarlo,
+            p: 2.0,
+            hash: HashKind::PStable,
+            r: 1.0,
+            k: 2,
+            l: 16,
+            probe_depth: 1,
+            shards: 4,
+            max_batch: 128,
+            max_wait_us: 200,
+            workers: 2,
+            queue_depth: 1024,
+            artifacts_dir: "artifacts".to_string(),
+            use_pjrt: true,
+            pipeline: "mc_l2_hash".to_string(),
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Load from a TOML-subset file content, overlaying defaults.
+    pub fn from_toml(text: &str) -> Result<Self, ConfigError> {
+        let doc = Toml::parse(text)?;
+        let mut cfg = ServiceConfig::default();
+        let get_f64 = |s: &str, k: &str| doc.get(s, k).and_then(TomlValue::as_f64);
+        let get_usize = |s: &str, k: &str| doc.get(s, k).and_then(TomlValue::as_usize);
+
+        if let Some(v) = get_usize("service", "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = get_f64("domain", "a") {
+            cfg.domain_a = v;
+        }
+        if let Some(v) = get_f64("domain", "b") {
+            cfg.domain_b = v;
+        }
+        if let Some(v) = get_usize("embedding", "dim") {
+            cfg.dim = v;
+        }
+        if let Some(v) = get_f64("embedding", "p") {
+            cfg.p = v;
+        }
+        if let Some(v) = doc.get("embedding", "method").and_then(TomlValue::as_str) {
+            cfg.embedding = match v {
+                "monte_carlo" | "mc" => EmbeddingKind::MonteCarlo,
+                "qmc" | "sobol" => EmbeddingKind::Qmc,
+                "chebyshev" | "cheb" => EmbeddingKind::Chebyshev,
+                other => {
+                    return Err(ConfigError::msg(format!(
+                        "unknown embedding method `{other}`"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = doc.get("hash", "family").and_then(TomlValue::as_str) {
+            cfg.hash = match v {
+                "pstable" | "l2" => HashKind::PStable,
+                "simhash" | "cosine" => HashKind::SimHash,
+                other => {
+                    return Err(ConfigError::msg(format!("unknown hash family `{other}`")))
+                }
+            };
+        }
+        if let Some(v) = get_f64("hash", "r") {
+            cfg.r = v;
+        }
+        if let Some(v) = get_usize("index", "k") {
+            cfg.k = v;
+        }
+        if let Some(v) = get_usize("index", "l") {
+            cfg.l = v;
+        }
+        if let Some(v) = get_usize("index", "probe_depth") {
+            cfg.probe_depth = v;
+        }
+        if let Some(v) = get_usize("index", "shards") {
+            cfg.shards = v;
+        }
+        if let Some(v) = get_usize("batcher", "max_batch") {
+            cfg.max_batch = v;
+        }
+        if let Some(v) = get_usize("batcher", "max_wait_us") {
+            cfg.max_wait_us = v as u64;
+        }
+        if let Some(v) = get_usize("batcher", "queue_depth") {
+            cfg.queue_depth = v;
+        }
+        if let Some(v) = get_usize("service", "workers") {
+            cfg.workers = v;
+        }
+        if let Some(v) = doc.get("runtime", "artifacts_dir").and_then(TomlValue::as_str) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get("runtime", "use_pjrt").and_then(TomlValue::as_bool) {
+            cfg.use_pjrt = v;
+        }
+        if let Some(v) = doc.get("runtime", "pipeline").and_then(TomlValue::as_str) {
+            cfg.pipeline = v.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Check invariants.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.domain_a >= self.domain_b {
+            return Err(ConfigError::msg("domain must satisfy a < b"));
+        }
+        if self.dim == 0 || self.k == 0 || self.l == 0 {
+            return Err(ConfigError::msg("dim, k, l must be positive"));
+        }
+        if !(0.0..=2.0).contains(&self.p) || self.p == 0.0 {
+            return Err(ConfigError::msg("p must be in (0, 2]"));
+        }
+        if self.r <= 0.0 {
+            return Err(ConfigError::msg("r must be positive"));
+        }
+        if self.max_batch == 0 || self.workers == 0 || self.queue_depth == 0 {
+            return Err(ConfigError::msg(
+                "max_batch, workers, queue_depth must be positive",
+            ));
+        }
+        if self.shards == 0 {
+            return Err(ConfigError::msg("shards must be positive"));
+        }
+        Ok(())
+    }
+
+    /// Total hash functions the index needs (`k·l`).
+    pub fn total_hashes(&self) -> usize {
+        self.k * self.l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# demo config
+[service]
+seed = 42
+workers = 4
+
+[domain]
+a = 0.0
+b = 2.0   # inline comment
+
+[embedding]
+method = "chebyshev"
+dim = 128
+p = 2.0
+
+[hash]
+family = "pstable"
+r = 0.5
+
+[index]
+k = 3
+l = 8
+probe_depth = 2
+
+[batcher]
+max_batch = 256
+max_wait_us = 100
+queue_depth = 512
+
+[runtime]
+artifacts_dir = "artifacts"
+use_pjrt = false
+"#;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = ServiceConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.domain_b, 2.0);
+        assert_eq!(cfg.embedding, EmbeddingKind::Chebyshev);
+        assert_eq!(cfg.dim, 128);
+        assert_eq!(cfg.r, 0.5);
+        assert_eq!(cfg.k, 3);
+        assert_eq!(cfg.l, 8);
+        assert_eq!(cfg.total_hashes(), 24);
+        assert_eq!(cfg.max_batch, 256);
+        assert!(!cfg.use_pjrt);
+    }
+
+    #[test]
+    fn defaults_are_paper_parameters() {
+        let cfg = ServiceConfig::default();
+        assert_eq!(cfg.dim, 64);
+        assert_eq!(cfg.r, 1.0);
+        assert_eq!(cfg.domain_a, 0.0);
+        assert_eq!(cfg.domain_b, 1.0);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_config_gives_defaults() {
+        let cfg = ServiceConfig::from_toml("").unwrap();
+        assert_eq!(cfg, ServiceConfig::default());
+    }
+
+    #[test]
+    fn invalid_domain_rejected() {
+        let bad = "[domain]\na = 2.0\nb = 1.0\n";
+        assert!(ServiceConfig::from_toml(bad).is_err());
+    }
+
+    #[test]
+    fn unknown_method_rejected() {
+        let bad = "[embedding]\nmethod = \"fourier\"\n";
+        assert!(ServiceConfig::from_toml(bad).is_err());
+    }
+
+    #[test]
+    fn toml_arrays_and_types() {
+        let doc = Toml::parse("[x]\nv = [1, 2, 3]\ns = \"hi\"\nb = true\nf = 1.5\n").unwrap();
+        match doc.get("x", "v").unwrap() {
+            TomlValue::Array(a) => assert_eq!(a.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(doc.get("x", "s").unwrap().as_str(), Some("hi"));
+        assert_eq!(doc.get("x", "b").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("x", "f").unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn comments_inside_strings_preserved() {
+        let doc = Toml::parse("[x]\ns = \"a # not comment\"\n").unwrap();
+        assert_eq!(doc.get("x", "s").unwrap().as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn parse_errors_carry_line() {
+        let e = Toml::parse("[x]\nkey value\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+}

@@ -1,0 +1,254 @@
+//! The dynamic batcher: a bounded MPMC queue with batch-draining pops.
+//!
+//! *Admission* blocks when the queue is full — that is the service's
+//! backpressure mechanism (clients slow down instead of the coordinator
+//! OOMing). *Draining* returns up to `max_batch` items, waiting at most
+//! `max_wait` after the first item arrives so a trickle of requests still
+//! gets timely service while bursts fill whole batches (the classic
+//! size-or-deadline policy of serving systems).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Bounded blocking MPMC queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Why a `push` failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// the queue was closed
+    Closed,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue admitting at most `cap` items.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Current queue length.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking push; waits while full (backpressure). Fails only if the
+    /// queue has been closed.
+    pub fn push(&self, item: T) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed);
+            }
+            if g.items.len() < self.cap {
+                g.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking push; returns the item back if the queue is full.
+    pub fn try_push(&self, item: T) -> Result<(), (Option<T>, PushError)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((Some(item), PushError::Closed));
+        }
+        if g.items.len() < self.cap {
+            g.items.push_back(item);
+            self.not_empty.notify_one();
+            Ok(())
+        } else {
+            drop(g);
+            Err((Some(item), PushError::Closed)) // full is reported as err; item returned
+        }
+    }
+
+    /// Drain up to `max_batch` items. Blocks until at least one item is
+    /// available (or the queue is closed and empty → returns `None`);
+    /// after the first item, waits up to `max_wait` for the batch to fill.
+    pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
+        assert!(max_batch > 0);
+        let mut g = self.inner.lock().unwrap();
+        // phase 1: wait for the first item
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+        // phase 2: wait (bounded) for the batch to fill
+        let deadline = Instant::now() + max_wait;
+        while g.items.len() < max_batch && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ng, timeout) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = ng;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = g.items.len().min(max_batch);
+        let batch: Vec<T> = g.items.drain(..take).collect();
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Close the queue: pending items remain poppable, new pushes fail,
+    /// and blocked poppers wake up.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Whether the queue has been closed.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_within_batch() {
+        let q = BoundedQueue::new(16);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        let batch = q.pop_batch(10, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn batch_caps_at_max() {
+        let q = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        let b1 = q.pop_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b1.len(), 4);
+        let b2 = q.pop_batch(100, Duration::from_millis(1)).unwrap();
+        assert_eq!(b2.len(), 6);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let q = Arc::new(BoundedQueue::new(16));
+        q.push(1).unwrap();
+        let t = Instant::now();
+        let batch = q.pop_batch(64, Duration::from_millis(30)).unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn push_blocks_until_capacity_frees() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            // this blocks until the main thread pops
+            q2.push(3).unwrap();
+            3
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 2, "pusher must be blocked");
+        let b = q.pop_batch(1, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![1]);
+        assert_eq!(h.join().unwrap(), 3);
+    }
+
+    #[test]
+    fn close_wakes_poppers_and_rejects_pushers() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop_batch(8, Duration::from_secs(10)));
+        thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+        assert_eq!(q.push(1), Err(PushError::Closed));
+    }
+
+    #[test]
+    fn drains_remaining_after_close() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        let batch = q.pop_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch, vec![7]);
+        assert_eq!(q.pop_batch(8, Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn concurrent_producers_no_loss_no_dup() {
+        let q = Arc::new(BoundedQueue::new(64));
+        let producers = 8;
+        let per = 500;
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = q.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    q.push(p * per + i).unwrap();
+                }
+            }));
+        }
+        let q2 = q.clone();
+        let consumer = thread::spawn(move || {
+            let mut seen = Vec::new();
+            while seen.len() < producers * per {
+                if let Some(batch) = q2.pop_batch(32, Duration::from_millis(5)) {
+                    seen.extend(batch);
+                }
+            }
+            seen
+        });
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        let want: Vec<usize> = (0..producers * per).collect();
+        assert_eq!(seen, want);
+    }
+}

@@ -1,0 +1,225 @@
+//! Service metrics: lock-light counters plus latency/batch-occupancy
+//! distributions, snapshot-able for the stats endpoint and the benches.
+
+use crate::util::stats::{quantile_sorted, Welford};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Maximum samples kept in each reservoir (uniform random replacement).
+const RESERVOIR: usize = 4096;
+
+/// Shared service metrics. Counter updates are atomic; distribution
+/// updates take a short mutex (off the per-request fast path: recorded
+/// once per batch).
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    requests: AtomicU64,
+    inserts: AtomicU64,
+    queries: AtomicU64,
+    hashes: AtomicU64,
+    removes: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    dist: Mutex<Dists>,
+}
+
+#[derive(Debug, Default)]
+struct Dists {
+    latency: Welford,
+    latency_samples: Vec<f64>,
+    batch_fill: Welford,
+    seen: u64,
+}
+
+impl ServiceMetrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count one admitted request by kind.
+    pub fn record_request(&self, kind: RequestKind) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        match kind {
+            RequestKind::Insert => &self.inserts,
+            RequestKind::Query => &self.queries,
+            RequestKind::Hash => &self.hashes,
+            RequestKind::Remove => &self.removes,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one failed request.
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a completed batch: its size and per-request latencies.
+    pub fn record_batch(&self, batch_size: usize, latencies: &[Duration]) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let mut d = self.dist.lock().unwrap();
+        d.batch_fill.push(batch_size as f64);
+        for l in latencies {
+            let secs = l.as_secs_f64();
+            d.latency.push(secs);
+            d.seen += 1;
+            if d.latency_samples.len() < RESERVOIR {
+                d.latency_samples.push(secs);
+            } else {
+                // Vitter's algorithm R
+                let j = (splitmix(d.seen) % d.seen) as usize;
+                if j < RESERVOIR {
+                    d.latency_samples[j] = secs;
+                }
+            }
+        }
+    }
+
+    /// Point-in-time snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let d = self.dist.lock().unwrap();
+        let mut sorted = d.latency_samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| {
+            if sorted.is_empty() {
+                0.0
+            } else {
+                quantile_sorted(&sorted, p)
+            }
+        };
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            hashes: self.hashes.load(Ordering::Relaxed),
+            removes: self.removes.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            latency_mean_s: d.latency.mean(),
+            latency_p50_s: q(0.5),
+            latency_p99_s: q(0.99),
+            mean_batch_fill: d.batch_fill.mean(),
+        }
+    }
+}
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Which kind of request is being counted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    /// index insertion
+    Insert,
+    /// k-NN query
+    Query,
+    /// hash-only request
+    Hash,
+    /// entry removal
+    Remove,
+}
+
+/// A point-in-time copy of all metrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    /// total admitted requests
+    pub requests: u64,
+    /// inserts
+    pub inserts: u64,
+    /// queries
+    pub queries: u64,
+    /// hash-only requests
+    pub hashes: u64,
+    /// removals
+    pub removes: u64,
+    /// failed requests
+    pub errors: u64,
+    /// executed batches
+    pub batches: u64,
+    /// mean request latency (seconds)
+    pub latency_mean_s: f64,
+    /// median request latency (seconds)
+    pub latency_p50_s: f64,
+    /// 99th-percentile request latency (seconds)
+    pub latency_p99_s: f64,
+    /// mean batch occupancy
+    pub mean_batch_fill: f64,
+}
+
+impl MetricsSnapshot {
+    /// Render as a JSON object.
+    pub fn to_json(&self) -> String {
+        crate::json::object(vec![
+            ("requests", (self.requests as usize).into()),
+            ("inserts", (self.inserts as usize).into()),
+            ("queries", (self.queries as usize).into()),
+            ("hashes", (self.hashes as usize).into()),
+            ("removes", (self.removes as usize).into()),
+            ("errors", (self.errors as usize).into()),
+            ("batches", (self.batches as usize).into()),
+            ("latency_mean_s", self.latency_mean_s.into()),
+            ("latency_p50_s", self.latency_p50_s.into()),
+            ("latency_p99_s", self.latency_p99_s.into()),
+            ("mean_batch_fill", self.mean_batch_fill.into()),
+        ])
+        .to_json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = ServiceMetrics::new();
+        m.record_request(RequestKind::Insert);
+        m.record_request(RequestKind::Query);
+        m.record_request(RequestKind::Query);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.inserts, 1);
+        assert_eq!(s.queries, 2);
+        assert_eq!(s.errors, 1);
+    }
+
+    #[test]
+    fn batch_distributions() {
+        let m = ServiceMetrics::new();
+        m.record_batch(4, &[Duration::from_millis(1); 4]);
+        m.record_batch(8, &[Duration::from_millis(3); 8]);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_fill - 6.0).abs() < 1e-12);
+        assert!(s.latency_mean_s > 0.0);
+        assert!(s.latency_p50_s > 0.0);
+        assert!(s.latency_p99_s >= s.latency_p50_s);
+    }
+
+    #[test]
+    fn snapshot_serializes() {
+        let m = ServiceMetrics::new();
+        m.record_batch(1, &[Duration::from_micros(100)]);
+        let j = m.snapshot().to_json();
+        let v = crate::json::parse(&j).unwrap();
+        assert_eq!(v.get("batches").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let m = ServiceMetrics::new();
+        let lat = vec![Duration::from_nanos(10); 1000];
+        for _ in 0..10 {
+            m.record_batch(1000, &lat);
+        }
+        let d = m.dist.lock().unwrap();
+        assert!(d.latency_samples.len() <= RESERVOIR);
+        assert_eq!(d.latency.count(), 10_000);
+    }
+}

@@ -1,0 +1,28 @@
+//! The L3 coordinator: a function-similarity-search service.
+//!
+//! Requests carry *sampled function data* (`f(x_1..x_N)` at the service's
+//! published sample points). The coordinator:
+//!
+//! 1. admits them through a bounded queue (backpressure),
+//! 2. groups them in a [`batcher::BoundedQueue`]-fed dynamic batcher
+//!    (size- and deadline-triggered),
+//! 3. pushes whole batches through the hash path — either the AOT-compiled
+//!    PJRT pipeline (`runtime::pjrt_path::PjrtHashPath`) or the pure-Rust fallback
+//!    ([`hashpath::CpuHashPath`]), bit-identical by construction,
+//! 4. applies the results to the sharded LSH index / answers k-NN queries
+//!    with exact re-ranking,
+//! 5. records service metrics (throughput, latency percentiles, batch
+//!    occupancy).
+//!
+//! Python never runs here; the binary is self-contained once
+//! `make artifacts` has produced the HLO files.
+
+pub mod batcher;
+pub mod hashpath;
+pub mod metrics;
+pub mod service;
+
+pub use batcher::BoundedQueue;
+pub use hashpath::{fold_projection, CpuHashPath, FoldedHashPath, HashPath};
+pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use service::{Coordinator, Op, Response};

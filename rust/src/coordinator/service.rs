@@ -1,0 +1,550 @@
+//! The coordinator service: request types, worker pool, and the shared
+//! index/corpus state.
+//!
+//! Dataflow per worker iteration:
+//!
+//! ```text
+//! queue.pop_batch(max_batch, max_wait)            (dynamic batching)
+//!   └─ hash_path.hash_rows(all sample rows)       (one batched matmul /
+//!   └─ per op:                                     PJRT execution)
+//!        Hash   → reply signature
+//!        Insert → index.insert + store embedding
+//!        Query  → index probe → exact re-rank on stored embeddings
+//! ```
+
+use super::batcher::BoundedQueue;
+use super::hashpath::HashPath;
+use super::metrics::{MetricsSnapshot, RequestKind, ServiceMetrics};
+use crate::config::ServiceConfig;
+use crate::embedding::l2_dist;
+use crate::lsh::{IndexConfig, ShardedIndex};
+use crate::search::Hit;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A service operation.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// compute and return the signature of a sample row
+    Hash {
+        /// samples at the service's published points
+        samples: Vec<f32>,
+    },
+    /// insert an entry into the index
+    Insert {
+        /// entry id (caller-assigned, must be unique)
+        id: u64,
+        /// samples at the service's published points
+        samples: Vec<f32>,
+    },
+    /// k-NN query with exact re-ranking
+    Query {
+        /// samples at the service's published points
+        samples: Vec<f32>,
+        /// neighbours requested
+        k: usize,
+    },
+    /// remove a previously inserted entry
+    Remove {
+        /// entry id to remove
+        id: u64,
+    },
+}
+
+/// A service response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// signature of a `Hash` op
+    Signature(Vec<i32>),
+    /// ack of an `Insert`
+    Inserted {
+        /// id that was inserted
+        id: u64,
+    },
+    /// results of a `Query`
+    Hits(Vec<Hit>),
+    /// ack of a `Remove`
+    Removed {
+        /// id that was removed
+        id: u64,
+    },
+    /// failure
+    Error(String),
+}
+
+struct Request {
+    op: Op,
+    enqueued: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+/// A stored corpus entry: the re-rank embedding and the insertion-time
+/// signature (needed to delete from the LSH buckets).
+struct Entry {
+    emb: Vec<f64>,
+    sig: Vec<i32>,
+}
+
+/// Shared mutable state: the sharded LSH index and the entry store used
+/// for exact re-ranking and removal.
+struct State {
+    index: ShardedIndex,
+    store: RwLock<HashMap<u64, Entry>>,
+}
+
+/// The running coordinator: owns the queue, worker threads, and state.
+pub struct Coordinator {
+    queue: Arc<BoundedQueue<Request>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<ServiceMetrics>,
+    state: Arc<State>,
+    probe_depth: usize,
+}
+
+impl Coordinator {
+    /// Start the service with `config` over the given hash path.
+    pub fn start(config: &ServiceConfig, hash_path: Arc<dyn HashPath>) -> Self {
+        let queue = Arc::new(BoundedQueue::new(config.queue_depth));
+        let metrics = Arc::new(ServiceMetrics::new());
+        let state = Arc::new(State {
+            index: ShardedIndex::new(
+                IndexConfig::new(config.k, config.l),
+                config.shards.max(1),
+            ),
+            store: RwLock::new(HashMap::new()),
+        });
+        assert_eq!(
+            hash_path.signature_len(),
+            config.total_hashes(),
+            "hash path must produce k*l hashes"
+        );
+        let mut workers = Vec::new();
+        for _ in 0..config.workers {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let state = state.clone();
+            let hash_path = hash_path.clone();
+            let max_batch = config.max_batch;
+            let max_wait = Duration::from_micros(config.max_wait_us);
+            let probe_depth = config.probe_depth;
+            workers.push(std::thread::spawn(move || {
+                worker_loop(
+                    queue, metrics, state, hash_path, max_batch, max_wait, probe_depth,
+                );
+            }));
+        }
+        Self {
+            queue,
+            workers,
+            metrics,
+            state,
+            probe_depth: config.probe_depth,
+        }
+    }
+
+    /// Submit an operation and block for the response.
+    pub fn submit(&self, op: Op) -> Response {
+        match self.submit_async(op) {
+            Ok(rx) => rx
+                .recv()
+                .unwrap_or_else(|_| Response::Error("worker dropped request".into())),
+            Err(e) => Response::Error(e),
+        }
+    }
+
+    /// Submit without blocking for completion; the receiver yields the
+    /// response when a worker finishes the batch containing this op.
+    pub fn submit_async(&self, op: Op) -> Result<mpsc::Receiver<Response>, String> {
+        let kind = match &op {
+            Op::Hash { .. } => RequestKind::Hash,
+            Op::Insert { .. } => RequestKind::Insert,
+            Op::Query { .. } => RequestKind::Query,
+            Op::Remove { .. } => RequestKind::Remove,
+        };
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            op,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        self.queue
+            .push(req)
+            .map_err(|_| "service shutting down".to_string())?;
+        self.metrics.record_request(kind);
+        Ok(rx)
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Number of indexed entries.
+    pub fn indexed(&self) -> usize {
+        self.state.index.len()
+    }
+
+    /// Snapshot the LSH index to a writer (format `FLSH1`). The embedded
+    /// vector store is not included — callers that need exact re-ranking
+    /// after a restore re-submit `Insert`s or keep raw data elsewhere.
+    pub fn save_index(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
+        self.state.index.save(w)
+    }
+
+    /// Multi-probe depth used for queries.
+    pub fn probe_depth(&self) -> usize {
+        self.probe_depth
+    }
+
+    /// Drain and stop: close the queue, join all workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    queue: Arc<BoundedQueue<Request>>,
+    metrics: Arc<ServiceMetrics>,
+    state: Arc<State>,
+    hash_path: Arc<dyn HashPath>,
+    max_batch: usize,
+    max_wait: Duration,
+    probe_depth: usize,
+) {
+    while let Some(batch) = queue.pop_batch(max_batch, max_wait) {
+        let batch_size = batch.len();
+        // 1. one batched hash over every row that carries samples
+        // (Remove ops have no samples — they look the signature up in the
+        // store instead).
+        let rows: Vec<Vec<f32>> = batch
+            .iter()
+            .filter_map(|r| match &r.op {
+                Op::Hash { samples } | Op::Insert { samples, .. } | Op::Query { samples, .. } => {
+                    Some(samples.clone())
+                }
+                Op::Remove { .. } => None,
+            })
+            .collect();
+        let hashed = match hash_path.hash_rows(&rows) {
+            Ok(s) => s,
+            Err(e) => {
+                for req in batch {
+                    metrics.record_error();
+                    let _ = req.reply.send(Response::Error(format!("hash path: {e}")));
+                }
+                continue;
+            }
+        };
+        // re-expand to one (optional) signature per op
+        let mut hashed_iter = hashed.into_iter();
+        let signatures: Vec<Option<Vec<i32>>> = batch
+            .iter()
+            .map(|r| match &r.op {
+                Op::Remove { .. } => None,
+                _ => hashed_iter.next(),
+            })
+            .collect();
+        // 2. embed the rows that need re-rank vectors (inserts/queries)
+        let embeddings: Vec<Option<Vec<f64>>> = batch
+            .iter()
+            .map(|r| match &r.op {
+                Op::Hash { .. } | Op::Remove { .. } => None,
+                Op::Insert { samples, .. } | Op::Query { samples, .. } => {
+                    Some(hash_path.embed_row(samples))
+                }
+            })
+            .collect();
+        // 3. apply all inserts under ONE store write lock (per-batch, not
+        // per-op — §Perf). `accepted[i]` records whether op i's insert won
+        // (duplicates — pre-existing or within-batch — are rejected here).
+        let mut accepted = vec![true; batch.len()];
+        {
+            let mut store = state.store.write().unwrap();
+            for (slot, ((req, emb), sig)) in batch
+                .iter()
+                .zip(&embeddings)
+                .zip(&signatures)
+                .enumerate()
+            {
+                if let Op::Insert { id, .. } = &req.op {
+                    if store.contains_key(id) {
+                        accepted[slot] = false;
+                    } else if let (Some(e), Some(sg)) = (emb, sig) {
+                        store.insert(
+                            *id,
+                            Entry {
+                                emb: e.clone(),
+                                sig: sg.clone(),
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        // 4. finish each op and reply
+        let mut latencies = Vec::with_capacity(batch_size);
+        for (slot, ((req, sig), emb)) in batch
+            .into_iter()
+            .zip(signatures)
+            .zip(embeddings)
+            .enumerate()
+        {
+            let resp = if accepted[slot] {
+                apply_op(&state, &req.op, sig.unwrap_or_default(), emb, probe_depth)
+            } else {
+                metrics.record_error();
+                match &req.op {
+                    Op::Insert { id, .. } => Response::Error(format!("duplicate id {id}")),
+                    _ => unreachable!("only inserts can be rejected"),
+                }
+            };
+            latencies.push(req.enqueued.elapsed());
+            let _ = req.reply.send(resp);
+        }
+        metrics.record_batch(batch_size, &latencies);
+    }
+}
+
+fn apply_op(
+    state: &State,
+    op: &Op,
+    signature: Vec<i32>,
+    embedding: Option<Vec<f64>>,
+    probe_depth: usize,
+) -> Response {
+    match op {
+        Op::Hash { .. } => Response::Signature(signature),
+        Op::Insert { id, .. } => {
+            // the embedding was already stored (and dedup-checked) under
+            // the batch lock in the worker loop
+            state.index.insert(*id, &signature);
+            Response::Inserted { id: *id }
+        }
+        Op::Remove { id } => {
+            // look up (and drop) the stored entry; its signature tells the
+            // index which buckets to clean
+            let entry = state.store.write().unwrap().remove(id);
+            match entry {
+                Some(e) => {
+                    state.index.remove(*id, &e.sig);
+                    Response::Removed { id: *id }
+                }
+                None => Response::Error(format!("unknown id {id}")),
+            }
+        }
+        Op::Query { samples: _, k } => {
+            let emb = embedding.expect("query embeds");
+            let candidates = if probe_depth == 0 {
+                state.index.query(&signature)
+            } else {
+                state.index.query_multiprobe(&signature, probe_depth)
+            };
+            let store = state.store.read().unwrap();
+            let mut hits: Vec<Hit> = candidates
+                .into_iter()
+                .filter_map(|id| {
+                    store.get(&id).map(|v| Hit {
+                        id,
+                        distance: l2_dist(&emb, &v.emb),
+                    })
+                })
+                .collect();
+            hits.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+            hits.truncate(*k);
+            Response::Hits(hits)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::hashpath::CpuHashPath;
+    use crate::embedding::{Embedder, Interval, MonteCarloEmbedder};
+    use crate::functions::{Function1D, Sine};
+    use crate::hashing::PStableHashBank;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn test_service(workers: usize) -> (Coordinator, Vec<f64>) {
+        let mut cfg = ServiceConfig {
+            workers,
+            k: 2,
+            l: 8,
+            dim: 32,
+            max_batch: 16,
+            max_wait_us: 100,
+            ..Default::default()
+        };
+        cfg.probe_depth = 1;
+        let mut rng = Xoshiro256pp::seed_from_u64(81);
+        let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+        let points = emb.sample_points().to_vec();
+        let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+        let path = Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank)));
+        (Coordinator::start(&cfg, path), points)
+    }
+
+    fn sample_sine(phase: f64, points: &[f64]) -> Vec<f32> {
+        let f = Sine::paper(phase);
+        points.iter().map(|&x| f.eval(x) as f32).collect()
+    }
+
+    #[test]
+    fn hash_insert_query_roundtrip() {
+        let (svc, points) = test_service(2);
+        // insert a corpus of sines
+        for i in 0..200u64 {
+            let phase = 2.0 * std::f64::consts::PI * (i as f64 / 200.0);
+            let r = svc.submit(Op::Insert {
+                id: i,
+                samples: sample_sine(phase, &points),
+            });
+            assert_eq!(r, Response::Inserted { id: i });
+        }
+        assert_eq!(svc.indexed(), 200);
+
+        // hash is deterministic
+        let s = sample_sine(1.0, &points);
+        let h1 = svc.submit(Op::Hash { samples: s.clone() });
+        let h2 = svc.submit(Op::Hash { samples: s.clone() });
+        assert_eq!(h1, h2);
+
+        // query near phase 0.5*2π/200*37 → nearest ids cluster around 37
+        let q_phase = 2.0 * std::f64::consts::PI * (37.0 / 200.0);
+        let resp = svc.submit(Op::Query {
+            samples: sample_sine(q_phase, &points),
+            k: 5,
+        });
+        match resp {
+            Response::Hits(hits) => {
+                assert!(!hits.is_empty());
+                // top hit should be id 37 (exact phase match)
+                assert_eq!(hits[0].id, 37, "hits: {hits:?}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let m = svc.metrics();
+        assert!(m.requests >= 202);
+        assert_eq!(m.errors, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn remove_makes_entry_unfindable_and_reinsertable() {
+        let (svc, points) = test_service(2);
+        for i in 0..50u64 {
+            let phase = 2.0 * std::f64::consts::PI * (i as f64 / 50.0);
+            svc.submit(Op::Insert {
+                id: i,
+                samples: sample_sine(phase, &points),
+            });
+        }
+        assert_eq!(svc.indexed(), 50);
+        // remove id 7 and verify it never comes back from queries
+        assert_eq!(svc.submit(Op::Remove { id: 7 }), Response::Removed { id: 7 });
+        assert_eq!(svc.indexed(), 49);
+        let q_phase = 2.0 * std::f64::consts::PI * (7.0 / 50.0);
+        match svc.submit(Op::Query {
+            samples: sample_sine(q_phase, &points),
+            k: 50,
+        }) {
+            Response::Hits(hits) => {
+                assert!(hits.iter().all(|h| h.id != 7), "{hits:?}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // double remove errors
+        match svc.submit(Op::Remove { id: 7 }) {
+            Response::Error(e) => assert!(e.contains("unknown")),
+            other => panic!("unexpected {other:?}"),
+        }
+        // id becomes reusable
+        assert_eq!(
+            svc.submit(Op::Insert {
+                id: 7,
+                samples: sample_sine(q_phase, &points)
+            }),
+            Response::Inserted { id: 7 }
+        );
+        assert_eq!(svc.indexed(), 50);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn duplicate_insert_rejected() {
+        let (svc, points) = test_service(1);
+        let s = sample_sine(0.3, &points);
+        assert_eq!(
+            svc.submit(Op::Insert {
+                id: 7,
+                samples: s.clone()
+            }),
+            Response::Inserted { id: 7 }
+        );
+        match svc.submit(Op::Insert { id: 7, samples: s }) {
+            Response::Error(e) => assert!(e.contains("duplicate")),
+            other => panic!("unexpected {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (svc, points) = test_service(4);
+        let svc = Arc::new(svc);
+        let points = Arc::new(points);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let svc = svc.clone();
+            let points = points.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    let id = t * 1000 + i;
+                    let phase = (id as f64) * 0.01;
+                    let r = svc.submit(Op::Insert {
+                        id,
+                        samples: sample_sine(phase, &points),
+                    });
+                    assert_eq!(r, Response::Inserted { id });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(svc.indexed(), 200);
+        let m = svc.metrics();
+        assert_eq!(m.inserts, 200);
+        assert!(m.batches > 0);
+        Arc::try_unwrap(svc).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn query_on_empty_index_returns_no_hits() {
+        let (svc, points) = test_service(1);
+        match svc.submit(Op::Query {
+            samples: sample_sine(0.1, &points),
+            k: 3,
+        }) {
+            Response::Hits(h) => assert!(h.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let (svc, points) = test_service(1);
+        let queue = svc.queue.clone();
+        svc.shutdown();
+        assert!(queue.is_closed());
+        let _ = points;
+    }
+}

@@ -1,0 +1,272 @@
+//! Additional orthonormal bases for the §3.1 embedding — the paper's
+//! method is stated for *any* orthonormal basis of `L²_μ(Ω)`; these two
+//! exercise that generality and fix the Chebyshev variant's weak spots:
+//!
+//! * [`LegendreEmbedder`] — normalized Legendre polynomials
+//!   `ê_j = √((2j+1)/V) P_j(t)`, orthonormal w.r.t. **Lebesgue** measure
+//!   directly, so the embedding is exactly isometric (no √sin weighting)
+//!   and spectrally accurate for smooth `f`. Coefficients are computed
+//!   with Gauss–Legendre quadrature, which is exact for the polynomial
+//!   integrands involved.
+//! * [`FourierEmbedder`] — the real trigonometric basis
+//!   `{1/√V, √(2/V) cos(2πjt/V), √(2/V) sin(2πjt/V)}`, the natural choice
+//!   for periodic workloads (the paper's own sine experiments!), computed
+//!   by direct projection at equispaced points (a real DFT).
+
+use super::{Embedder, Interval};
+use crate::quadrature::gauss_legendre;
+use std::f64::consts::PI;
+
+/// §3.1 embedding in the normalized Legendre basis.
+#[derive(Debug, Clone)]
+pub struct LegendreEmbedder {
+    omega: Interval,
+    /// Gauss–Legendre nodes mapped to `omega` (the sample points)
+    points: Vec<f64>,
+    /// projection matrix `P[m][j] = w_m ê_j(x_m)` (row-major `[n][n]`),
+    /// so `T(f)_j = Σ_m P[m][j] f(x_m)`
+    proj: Vec<f64>,
+    n: usize,
+}
+
+impl LegendreEmbedder {
+    /// An `n`-coefficient Legendre embedding of `L²(omega)` using an
+    /// `n`-point Gauss–Legendre rule (exact for the degree ≤ 2n−1
+    /// integrands `P_j · P_j`).
+    pub fn new(omega: Interval, n: usize) -> Self {
+        assert!(n > 0);
+        let (nodes, weights) = gauss_legendre(n);
+        let v = omega.volume();
+        let mid = 0.5 * (omega.a + omega.b);
+        let half = 0.5 * v;
+        let points: Vec<f64> = nodes.iter().map(|&t| mid + half * t).collect();
+        // Legendre values P_j(t_m) by the three-term recurrence.
+        let mut proj = vec![0.0; n * n];
+        for (m, &t) in nodes.iter().enumerate() {
+            let mut p0 = 1.0; // P_0
+            let mut p1 = t; // P_1
+            for j in 0..n {
+                let pj = if j == 0 {
+                    1.0
+                } else if j == 1 {
+                    t
+                } else {
+                    let p2 = ((2 * j - 1) as f64 * t * p1 - (j - 1) as f64 * p0) / j as f64;
+                    p0 = p1;
+                    p1 = p2;
+                    p2
+                };
+                // ê_j(x) = √((2j+1)/V) P_j(t(x)); quadrature weight on
+                // [a,b] is w_m · V/2.
+                let norm = ((2 * j + 1) as f64 / v).sqrt();
+                proj[m * n + j] = weights[m] * half * norm * pj;
+            }
+        }
+        Self {
+            omega,
+            points,
+            proj,
+            n,
+        }
+    }
+
+    /// The domain being embedded.
+    pub fn omega(&self) -> Interval {
+        self.omega
+    }
+}
+
+impl Embedder for LegendreEmbedder {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn p(&self) -> f64 {
+        2.0
+    }
+
+    fn sample_points(&self) -> &[f64] {
+        &self.points
+    }
+
+    fn embed_samples(&self, samples: &[f64]) -> Vec<f64> {
+        assert_eq!(samples.len(), self.n);
+        let mut out = vec![0.0; self.n];
+        for (m, &s) in samples.iter().enumerate() {
+            let row = &self.proj[m * self.n..(m + 1) * self.n];
+            for (o, &p) in out.iter_mut().zip(row) {
+                *o += p * s;
+            }
+        }
+        out
+    }
+}
+
+/// §3.1 embedding in the real Fourier basis (periodic `L²(omega)`).
+///
+/// Output layout: `[a_0, a_1, b_1, a_2, b_2, …]` (cosine/sine pairs),
+/// total dimension `n` (must be odd so pairs complete: `n = 2m + 1`).
+#[derive(Debug, Clone)]
+pub struct FourierEmbedder {
+    omega: Interval,
+    points: Vec<f64>,
+    n: usize,
+}
+
+impl FourierEmbedder {
+    /// An `n`-coefficient Fourier embedding (`n` odd), sampling at `n`
+    /// equispaced points (midpoint grid), for which the discrete
+    /// projection is exactly the trapezoid/DFT rule.
+    pub fn new(omega: Interval, n: usize) -> Self {
+        assert!(n > 0 && n % 2 == 1, "fourier dim must be odd (1 + 2m)");
+        let v = omega.volume();
+        let points = (0..n)
+            .map(|k| omega.a + v * (k as f64 + 0.5) / n as f64)
+            .collect();
+        Self { omega, points, n }
+    }
+
+    /// The domain being embedded.
+    pub fn omega(&self) -> Interval {
+        self.omega
+    }
+}
+
+impl Embedder for FourierEmbedder {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn p(&self) -> f64 {
+        2.0
+    }
+
+    fn sample_points(&self) -> &[f64] {
+        &self.points
+    }
+
+    fn embed_samples(&self, samples: &[f64]) -> Vec<f64> {
+        assert_eq!(samples.len(), self.n);
+        let n = self.n;
+        let v = self.omega.volume();
+        let m = (n - 1) / 2;
+        // midpoint quadrature: ∫ f e dx ≈ (V/n) Σ f(x_k) e(x_k)
+        let h = v / n as f64;
+        let mut out = Vec::with_capacity(n);
+        // a_0
+        let a0: f64 = samples.iter().sum::<f64>() * h / v.sqrt();
+        out.push(a0);
+        for j in 1..=m {
+            let mut aj = 0.0;
+            let mut bj = 0.0;
+            for (k, &s) in samples.iter().enumerate() {
+                let t = 2.0 * PI * j as f64 * (k as f64 + 0.5) / n as f64;
+                aj += s * t.cos();
+                bj += s * t.sin();
+            }
+            let norm = (2.0 / v).sqrt() * h;
+            out.push(aj * norm);
+            out.push(bj * norm);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::l2_dist;
+    use crate::functions::{Function1D, Sine};
+    use crate::quadrature::{inner_product_l2, lp_distance};
+
+    fn embed(e: &dyn Embedder, f: &dyn Function1D) -> Vec<f64> {
+        e.embed_fn(f)
+    }
+
+    #[test]
+    fn legendre_is_exact_isometry_for_polynomials() {
+        // f, g polynomials of degree < n: distances must be exact to
+        // machine precision (quadrature exactness).
+        let f = crate::functions::Polynomial::new(vec![1.0, -2.0, 0.5, 3.0]);
+        let g = crate::functions::Polynomial::new(vec![0.0, 1.0, 1.0]);
+        let emb = LegendreEmbedder::new(Interval::new(-1.0, 2.0), 16);
+        let d = l2_dist(&embed(&emb, &f), &embed(&emb, &g));
+        let truth = lp_distance(&f, &g, -1.0, 2.0, 2.0);
+        assert!((d - truth).abs() < 1e-12, "{d} vs {truth}");
+    }
+
+    #[test]
+    fn legendre_spectral_accuracy_on_smooth_functions() {
+        let f = Sine::paper(0.3);
+        let g = Sine::paper(1.7);
+        let truth = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+        let emb = LegendreEmbedder::new(Interval::unit(), 32);
+        let d = l2_dist(&embed(&emb, &f), &embed(&emb, &g));
+        assert!((d - truth).abs() < 1e-10, "{d} vs {truth}");
+    }
+
+    #[test]
+    fn legendre_beats_chebyshev_weighting_at_same_n() {
+        let f = Sine::paper(0.3);
+        let g = Sine::paper(1.7);
+        let truth = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+        let leg = LegendreEmbedder::new(Interval::unit(), 32);
+        let cheb = super::super::ChebyshevEmbedder::new(Interval::unit(), 32);
+        let e_leg = (l2_dist(&embed(&leg, &f), &embed(&leg, &g)) - truth).abs();
+        let e_cheb = (l2_dist(&embed(&cheb, &f), &embed(&cheb, &g)) - truth).abs();
+        assert!(e_leg < e_cheb, "legendre {e_leg} vs chebyshev {e_cheb}");
+    }
+
+    #[test]
+    fn legendre_inner_products() {
+        let f = Sine::paper(0.2);
+        let g = Sine::paper(2.5);
+        let emb = LegendreEmbedder::new(Interval::unit(), 32);
+        let tf = embed(&emb, &f);
+        let tg = embed(&emb, &g);
+        let ip: f64 = tf.iter().zip(&tg).map(|(a, b)| a * b).sum();
+        let truth = inner_product_l2(&f, &g, 0.0, 1.0);
+        assert!((ip - truth).abs() < 1e-10, "{ip} vs {truth}");
+    }
+
+    #[test]
+    fn fourier_exact_for_periodic_workload() {
+        // the paper's own workload is 1-periodic on [0,1]: the Fourier
+        // embedding captures sin(2πx + δ) with 3 coefficients.
+        let f = Sine::paper(0.9);
+        let g = Sine::paper(2.2);
+        let truth = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+        let emb = FourierEmbedder::new(Interval::unit(), 9);
+        let d = l2_dist(&embed(&emb, &f), &embed(&emb, &g));
+        assert!((d - truth).abs() < 1e-10, "{d} vs {truth}");
+    }
+
+    #[test]
+    fn fourier_norm_of_constant() {
+        let one = |_x: f64| 1.0;
+        let emb = FourierEmbedder::new(Interval::new(0.0, 4.0), 17);
+        let t = emb.embed_fn(&one);
+        let norm: f64 = t.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((norm - 2.0).abs() < 1e-12, "‖1‖ on [0,4] is 2, got {norm}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn fourier_requires_odd_dim() {
+        let _ = FourierEmbedder::new(Interval::unit(), 8);
+    }
+
+    #[test]
+    fn all_bases_linear() {
+        let emb = LegendreEmbedder::new(Interval::unit(), 12);
+        let x: Vec<f64> = (0..12).map(|i| (i as f64).sin()).collect();
+        let y: Vec<f64> = (0..12).map(|i| (i as f64 * 0.3).cos()).collect();
+        let combo: Vec<f64> = x.iter().zip(&y).map(|(a, b)| 2.0 * a - b).collect();
+        let t = emb.embed_samples(&combo);
+        let tx = emb.embed_samples(&x);
+        let ty = emb.embed_samples(&y);
+        for i in 0..12 {
+            assert!((t[i] - (2.0 * tx[i] - ty[i])).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,441 @@
+//! Embeddings `T : L^p_μ(Ω) → ℓ^p_N` — the heart of the paper (§3).
+//!
+//! Both methods approximately preserve `‖f − g‖_{L^p_μ}` (and, for `p = 2`,
+//! `⟨f, g⟩`), so any LSH family on `ℝ^N` applied to `T(f)` becomes an LSH
+//! family on the function space:
+//!
+//! * [`MonteCarloEmbedder`] (§3.2) — sample `f` at `N` i.i.d. points of `Ω`
+//!   drawn from `μ/V` and scale by `(V/N)^{1/p}`; error `O(N^{-1/2})`.
+//! * [`QmcEmbedder`] (§3.2) — same, but the points come from a
+//!   low-discrepancy (Sobol/Halton) sequence; error `O(N^{-1} log N)` in 1-D.
+//! * [`ChebyshevEmbedder`] (§3.1) — coefficients in an orthonormal basis of
+//!   `L²([a,b])`. We use the cosine-transformed Chebyshev system: under
+//!   `x = a + (b-a)(1 - cos θ)/2` the weighted samples
+//!   `h(θ) = f(x(θ)) · √((b-a) sin θ / 2)` live in `L²([0, π])`, where
+//!   `{1/√π, √(2/π) cos jθ}` is orthonormal — this is exactly the paper's
+//!   "Chebyshev basis made a basis for `L²([a,b])` with a change of
+//!   variables". Coefficients are a scaled DCT-II of the weighted samples,
+//!   computed in `O(N log N)`.
+
+pub mod bases;
+pub mod multidim;
+
+pub use bases::{FourierEmbedder, LegendreEmbedder};
+pub use multidim::{Function2D, MonteCarloEmbedder2D, Rectangle};
+
+use crate::chebyshev::dct2;
+use crate::functions::Function1D;
+use crate::sequences::{Halton, Sobol};
+use crate::util::rng::Rng64;
+use std::f64::consts::PI;
+
+/// A closed interval `[a, b]` — the domain `Ω` of all 1-D experiments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interval {
+    /// left endpoint
+    pub a: f64,
+    /// right endpoint
+    pub b: f64,
+}
+
+impl Interval {
+    /// `[a, b]`, requiring `a < b`.
+    pub fn new(a: f64, b: f64) -> Self {
+        assert!(a < b, "interval must be nondegenerate");
+        Self { a, b }
+    }
+
+    /// The unit interval `[0, 1]` used throughout the paper's experiments.
+    pub fn unit() -> Self {
+        Self::new(0.0, 1.0)
+    }
+
+    /// Volume `V = ∫_Ω dμ` under Lebesgue measure.
+    pub fn volume(&self) -> f64 {
+        self.b - self.a
+    }
+}
+
+/// An embedding of a function space into `ℝ^N`.
+///
+/// Implementations also expose their *sample points*: the coordinator
+/// publishes these so clients can ship raw sample vectors `f(x_1..x_N)`
+/// instead of function objects, and [`Embedder::embed_samples`] finishes
+/// the job (this is the request-path split: sampling happens client-side,
+/// the linear transform happens in the AOT pipeline or here).
+pub trait Embedder: Send + Sync {
+    /// Output dimension `N`.
+    fn dim(&self) -> usize;
+
+    /// The exponent `p` of the `L^p` space being embedded.
+    fn p(&self) -> f64;
+
+    /// The points at which input functions must be sampled.
+    fn sample_points(&self) -> &[f64];
+
+    /// Embed a vector of raw samples `f(x_i)` (in `sample_points` order).
+    fn embed_samples(&self, samples: &[f64]) -> Vec<f64>;
+
+    /// Embed a function by sampling it, then calling
+    /// [`Embedder::embed_samples`].
+    fn embed_fn(&self, f: &dyn Function1D) -> Vec<f64> {
+        let samples: Vec<f64> = self
+            .sample_points()
+            .iter()
+            .map(|&x| f.eval(x))
+            .collect();
+        self.embed_samples(&samples)
+    }
+}
+
+/// §3.2 with i.i.d. sampling: `T(f) = (V/N)^{1/p} (f(x_1), …, f(x_N))`,
+/// `x_i ~ μ/V` (uniform on the interval for Lebesgue `μ`).
+#[derive(Debug, Clone)]
+pub struct MonteCarloEmbedder {
+    points: Vec<f64>,
+    scale: f64,
+    p: f64,
+}
+
+impl MonteCarloEmbedder {
+    /// Draw `n` i.i.d. uniform sample points on `omega`.
+    pub fn new(omega: Interval, n: usize, p: f64, rng: &mut dyn Rng64) -> Self {
+        assert!(n > 0 && p > 0.0);
+        let points = (0..n).map(|_| rng.uniform_in(omega.a, omega.b)).collect();
+        Self::from_points(points, omega.volume(), p)
+    }
+
+    /// Build from externally chosen points (e.g. shared across a cluster so
+    /// every node embeds identically). `volume` is `V = ∫_Ω dμ`.
+    pub fn from_points(points: Vec<f64>, volume: f64, p: f64) -> Self {
+        assert!(!points.is_empty());
+        let n = points.len();
+        let scale = (volume / n as f64).powf(1.0 / p);
+        Self { points, scale, p }
+    }
+
+    /// The `(V/N)^{1/p}` prefactor.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+}
+
+impl Embedder for MonteCarloEmbedder {
+    fn dim(&self) -> usize {
+        self.points.len()
+    }
+
+    fn p(&self) -> f64 {
+        self.p
+    }
+
+    fn sample_points(&self) -> &[f64] {
+        &self.points
+    }
+
+    fn embed_samples(&self, samples: &[f64]) -> Vec<f64> {
+        assert_eq!(samples.len(), self.points.len());
+        samples.iter().map(|&s| s * self.scale).collect()
+    }
+}
+
+/// The low-discrepancy sequence behind a [`QmcEmbedder`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QmcSequence {
+    /// Sobol' sequence (Joe–Kuo direction numbers).
+    Sobol,
+    /// Halton sequence (base 2 in one dimension).
+    Halton,
+}
+
+/// §3.2 with quasi-Monte Carlo sampling: identical transform to
+/// [`MonteCarloEmbedder`] but the points form a low-discrepancy sequence,
+/// improving the embedding error to `O(N^{-1} log N)` in one dimension.
+#[derive(Debug, Clone)]
+pub struct QmcEmbedder {
+    inner: MonteCarloEmbedder,
+    sequence: QmcSequence,
+}
+
+impl QmcEmbedder {
+    /// `n` points of the chosen sequence mapped onto `omega`.
+    pub fn new(omega: Interval, n: usize, p: f64, sequence: QmcSequence) -> Self {
+        let unit: Vec<f64> = match sequence {
+            QmcSequence::Sobol => Sobol::new(1).take_1d(n),
+            QmcSequence::Halton => {
+                let mut h = Halton::new(1);
+                (0..n).map(|_| h.next_point()[0]).collect()
+            }
+        };
+        let points = unit
+            .into_iter()
+            .map(|u| omega.a + omega.volume() * u)
+            .collect();
+        Self {
+            inner: MonteCarloEmbedder::from_points(points, omega.volume(), p),
+            sequence,
+        }
+    }
+
+    /// Which sequence generated the sample points.
+    pub fn sequence(&self) -> QmcSequence {
+        self.sequence
+    }
+}
+
+impl Embedder for QmcEmbedder {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn p(&self) -> f64 {
+        self.inner.p()
+    }
+
+    fn sample_points(&self) -> &[f64] {
+        self.inner.sample_points()
+    }
+
+    fn embed_samples(&self, samples: &[f64]) -> Vec<f64> {
+        self.inner.embed_samples(samples)
+    }
+}
+
+/// §3.1: orthonormal-basis embedding of `L²([a, b])` (Lebesgue) via the
+/// cosine-transformed Chebyshev system.
+///
+/// `T(f)_j = ⟨e_j, h⟩_{L²([0,π])}` approximated by the midpoint rule at
+/// `θ_k = π(k+½)/N`, which is a scaled DCT-II of the weighted samples
+/// `h_k = f(x(θ_k)) √((b-a) sin θ_k / 2)`:
+///
+/// * `T(f)_0 = (√π / N) Σ_k h_k`
+/// * `T(f)_j = (√(2π) / N) Σ_k h_k cos(π j (k+½)/N)`, `j ≥ 1`.
+///
+/// As `N → ∞`, `‖T(f) − T(g)‖_{ℓ²} → ‖f − g‖_{L²([a,b])}` and inner
+/// products converge likewise (Hilbert-space isometry, truncated).
+#[derive(Debug, Clone)]
+pub struct ChebyshevEmbedder {
+    omega: Interval,
+    /// x(θ_k) — where the input function is sampled
+    points: Vec<f64>,
+    /// √((b-a) sin θ_k / 2) — the change-of-variables weight
+    weights: Vec<f64>,
+}
+
+impl ChebyshevEmbedder {
+    /// An `n`-coefficient embedding of `L²(omega)`.
+    pub fn new(omega: Interval, n: usize) -> Self {
+        assert!(n > 0);
+        let mut points = Vec::with_capacity(n);
+        let mut weights = Vec::with_capacity(n);
+        let v = omega.volume();
+        for k in 0..n {
+            let theta = PI * (k as f64 + 0.5) / n as f64;
+            points.push(omega.a + v * (1.0 - theta.cos()) / 2.0);
+            weights.push((v * theta.sin() / 2.0).sqrt());
+        }
+        Self {
+            omega,
+            points,
+            weights,
+        }
+    }
+
+    /// The domain being embedded.
+    pub fn omega(&self) -> Interval {
+        self.omega
+    }
+
+    /// The DCT weights (exposed for the AOT pipeline, which folds them into
+    /// the kernel's input scaling).
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+impl Embedder for ChebyshevEmbedder {
+    fn dim(&self) -> usize {
+        self.points.len()
+    }
+
+    fn p(&self) -> f64 {
+        2.0
+    }
+
+    fn sample_points(&self) -> &[f64] {
+        &self.points
+    }
+
+    fn embed_samples(&self, samples: &[f64]) -> Vec<f64> {
+        let n = samples.len();
+        assert_eq!(n, self.points.len());
+        let weighted: Vec<f64> = samples
+            .iter()
+            .zip(&self.weights)
+            .map(|(&s, &w)| s * w)
+            .collect();
+        let d = dct2(&weighted);
+        let s0 = PI.sqrt() / n as f64;
+        let sj = (2.0 * PI).sqrt() / n as f64;
+        d.into_iter()
+            .enumerate()
+            .map(|(j, dj)| if j == 0 { s0 * dj } else { sj * dj })
+            .collect()
+    }
+}
+
+/// ℓ² distance between two embedded vectors — convenience used everywhere
+/// in experiments.
+pub fn l2_dist(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// ℓ^p distance between two embedded vectors.
+pub fn lp_dist(x: &[f64], y: &[f64], p: f64) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| (a - b).abs().powf(p))
+        .sum::<f64>()
+        .powf(1.0 / p)
+}
+
+/// Cosine similarity between two embedded vectors.
+pub fn cosine_sim(x: &[f64], y: &[f64]) -> f64 {
+    let ip: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+    let nx: f64 = x.iter().map(|a| a * a).sum::<f64>().sqrt();
+    let ny: f64 = y.iter().map(|a| a * a).sum::<f64>().sqrt();
+    (ip / (nx * ny)).clamp(-1.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::Sine;
+    use crate::quadrature::{cosine_similarity_l2, inner_product_l2, lp_distance};
+    use crate::util::rng::Xoshiro256pp;
+
+    fn sine_pair() -> (Sine, Sine) {
+        (Sine::paper(0.4), Sine::paper(2.1))
+    }
+
+    #[test]
+    fn mc_embedding_preserves_l2_distance() {
+        let (f, g) = sine_pair();
+        let truth = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        // Average over several point sets: MC is unbiased in the squared
+        // distance, so the mean over seeds should land near the truth.
+        let mut acc = 0.0;
+        let reps = 32;
+        for _ in 0..reps {
+            let emb = MonteCarloEmbedder::new(Interval::unit(), 256, 2.0, &mut rng);
+            acc += l2_dist(&emb.embed_fn(&f), &emb.embed_fn(&g));
+        }
+        let mean = acc / reps as f64;
+        assert!(
+            (mean - truth).abs() < 0.02 * truth.max(0.1),
+            "{mean} vs {truth}"
+        );
+    }
+
+    #[test]
+    fn qmc_embedding_tighter_than_mc() {
+        let (f, g) = sine_pair();
+        let truth = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+        let emb = QmcEmbedder::new(Interval::unit(), 256, 2.0, QmcSequence::Sobol);
+        let d = l2_dist(&emb.embed_fn(&f), &emb.embed_fn(&g));
+        assert!((d - truth).abs() < 5e-3 * truth.max(0.1), "{d} vs {truth}");
+    }
+
+    #[test]
+    fn halton_variant_works() {
+        let (f, g) = sine_pair();
+        let truth = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+        let emb = QmcEmbedder::new(Interval::unit(), 512, 2.0, QmcSequence::Halton);
+        let d = l2_dist(&emb.embed_fn(&f), &emb.embed_fn(&g));
+        assert!((d - truth).abs() < 5e-3 * truth.max(0.1));
+    }
+
+    #[test]
+    fn chebyshev_embedding_preserves_l2_distance() {
+        let (f, g) = sine_pair();
+        let truth = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+        let emb = ChebyshevEmbedder::new(Interval::unit(), 64);
+        let d = l2_dist(&emb.embed_fn(&f), &emb.embed_fn(&g));
+        // endpoint √sin weight limits convergence to ~N^{-3/2}
+        assert!((d - truth).abs() < 5e-3, "{d} vs {truth}");
+    }
+
+    #[test]
+    fn chebyshev_embedding_preserves_inner_product() {
+        let (f, g) = sine_pair();
+        let truth = inner_product_l2(&f, &g, 0.0, 1.0);
+        let emb = ChebyshevEmbedder::new(Interval::unit(), 64);
+        let tf = emb.embed_fn(&f);
+        let tg = emb.embed_fn(&g);
+        let ip: f64 = tf.iter().zip(&tg).map(|(a, b)| a * b).sum();
+        assert!((ip - truth).abs() < 5e-3, "{ip} vs {truth}");
+    }
+
+    #[test]
+    fn chebyshev_embedding_preserves_cosine_similarity() {
+        let (f, g) = sine_pair();
+        let truth = cosine_similarity_l2(&f, &g, 0.0, 1.0);
+        let emb = ChebyshevEmbedder::new(Interval::unit(), 64);
+        let got = cosine_sim(&emb.embed_fn(&f), &emb.embed_fn(&g));
+        assert!((got - truth).abs() < 1e-2, "{got} vs {truth}");
+    }
+
+    #[test]
+    fn chebyshev_error_decreases_with_n() {
+        let (f, g) = sine_pair();
+        let truth = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+        let errs: Vec<f64> = [16usize, 64, 256]
+            .iter()
+            .map(|&n| {
+                let emb = ChebyshevEmbedder::new(Interval::unit(), n);
+                (l2_dist(&emb.embed_fn(&f), &emb.embed_fn(&g)) - truth).abs()
+            })
+            .collect();
+        assert!(errs[2] < errs[0], "errors {errs:?}");
+    }
+
+    #[test]
+    fn nonunit_domain_volume_scaling() {
+        // f = 1, g = 0 on [0, 4]: ‖f−g‖_{L²} = 2.
+        let f = |_x: f64| 1.0;
+        let g = |_x: f64| 0.0;
+        let omega = Interval::new(0.0, 4.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let mc = MonteCarloEmbedder::new(omega, 128, 2.0, &mut rng);
+        let d = l2_dist(&mc.embed_fn(&f), &mc.embed_fn(&g));
+        assert!((d - 2.0).abs() < 1e-12, "{d}");
+        let ch = ChebyshevEmbedder::new(omega, 64);
+        let dc = l2_dist(&ch.embed_fn(&f), &ch.embed_fn(&g));
+        assert!((dc - 2.0).abs() < 5e-3, "{dc}");
+    }
+
+    #[test]
+    fn l1_embedding_scaling() {
+        // p = 1: ‖f−g‖_{L¹[0,1]} of |sin| pair via MC matches quadrature.
+        let (f, g) = sine_pair();
+        let truth = lp_distance(&f, &g, 0.0, 1.0, 1.0);
+        let emb = QmcEmbedder::new(Interval::unit(), 512, 1.0, QmcSequence::Sobol);
+        let d = lp_dist(&emb.embed_fn(&f), &emb.embed_fn(&g), 1.0);
+        assert!((d - truth).abs() < 0.01, "{d} vs {truth}");
+    }
+
+    #[test]
+    fn embed_samples_matches_embed_fn() {
+        let (f, _) = sine_pair();
+        let emb = ChebyshevEmbedder::new(Interval::unit(), 32);
+        let samples: Vec<f64> = emb.sample_points().iter().map(|&x| f.eval(x)).collect();
+        assert_eq!(emb.embed_samples(&samples), emb.embed_fn(&f));
+    }
+}

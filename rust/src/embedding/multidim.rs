@@ -1,0 +1,215 @@
+//! Multi-dimensional domains: the paper's §3.2 is stated for `Ω ⊆ ℝⁿ`
+//! (and, in the conclusion, arbitrary finite-volume measure spaces); the
+//! Monte Carlo embedding carries over verbatim. This module provides the
+//! 2-D instantiation — enough to demonstrate the `(log N)^d / N` QMC rate
+//! degradation the paper cites from Lemieux (2009) (experiment E11).
+
+use crate::sequences::{Halton, Sobol};
+use crate::util::rng::Rng64;
+
+/// A real function on a subset of `ℝ²`.
+pub trait Function2D: Send + Sync {
+    /// Evaluate at `(x, y)`.
+    fn eval2(&self, x: f64, y: f64) -> f64;
+}
+
+impl<F: Fn(f64, f64) -> f64 + Send + Sync> Function2D for F {
+    fn eval2(&self, x: f64, y: f64) -> f64 {
+        self(x, y)
+    }
+}
+
+/// An axis-aligned rectangle `[a₁,b₁] × [a₂,b₂]` — the 2-D domain `Ω`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rectangle {
+    /// x-range start
+    pub a1: f64,
+    /// x-range end
+    pub b1: f64,
+    /// y-range start
+    pub a2: f64,
+    /// y-range end
+    pub b2: f64,
+}
+
+impl Rectangle {
+    /// A rectangle; both ranges must be nondegenerate.
+    pub fn new(a1: f64, b1: f64, a2: f64, b2: f64) -> Self {
+        assert!(a1 < b1 && a2 < b2);
+        Self { a1, b1, a2, b2 }
+    }
+
+    /// The unit square `[0,1]²`.
+    pub fn unit() -> Self {
+        Self::new(0.0, 1.0, 0.0, 1.0)
+    }
+
+    /// Volume (area) of the rectangle.
+    pub fn volume(&self) -> f64 {
+        (self.b1 - self.a1) * (self.b2 - self.a2)
+    }
+}
+
+/// Which point set drives the 2-D embedding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampling2D {
+    /// i.i.d. uniform (plain Monte Carlo, `O(N^{-1/2})`)
+    Iid,
+    /// 2-D Sobol (`O(N^{-1} (log N)²)`)
+    Sobol,
+    /// 2-D Halton
+    Halton,
+}
+
+/// §3.2 over `Ω ⊆ ℝ²`: `T(f) = (V/N)^{1/p} (f(z_1), …, f(z_N))`.
+#[derive(Debug, Clone)]
+pub struct MonteCarloEmbedder2D {
+    points: Vec<(f64, f64)>,
+    scale: f64,
+    p: f64,
+}
+
+impl MonteCarloEmbedder2D {
+    /// Build with `n` sample points from the chosen scheme.
+    pub fn new(
+        omega: Rectangle,
+        n: usize,
+        p: f64,
+        sampling: Sampling2D,
+        rng: &mut dyn Rng64,
+    ) -> Self {
+        assert!(n > 0 && p > 0.0);
+        let unit: Vec<(f64, f64)> = match sampling {
+            Sampling2D::Iid => (0..n).map(|_| (rng.uniform(), rng.uniform())).collect(),
+            Sampling2D::Sobol => {
+                let mut s = Sobol::new(2);
+                s.take_points(n).into_iter().map(|p| (p[0], p[1])).collect()
+            }
+            Sampling2D::Halton => {
+                let mut h = Halton::new(2);
+                h.take_points(n).into_iter().map(|p| (p[0], p[1])).collect()
+            }
+        };
+        let points = unit
+            .into_iter()
+            .map(|(u, v)| {
+                (
+                    omega.a1 + (omega.b1 - omega.a1) * u,
+                    omega.a2 + (omega.b2 - omega.a2) * v,
+                )
+            })
+            .collect();
+        let scale = (omega.volume() / n as f64).powf(1.0 / p);
+        Self { points, scale, p }
+    }
+
+    /// Embedding dimension `N`.
+    pub fn dim(&self) -> usize {
+        self.points.len()
+    }
+
+    /// The `L^p` exponent.
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    /// The 2-D sample points.
+    pub fn sample_points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    /// Embed a function by sampling it at the point set.
+    pub fn embed_fn(&self, f: &dyn Function2D) -> Vec<f64> {
+        self.points
+            .iter()
+            .map(|&(x, y)| f.eval2(x, y) * self.scale)
+            .collect()
+    }
+
+    /// Embed raw sample values (in `sample_points` order).
+    pub fn embed_samples(&self, samples: &[f64]) -> Vec<f64> {
+        assert_eq!(samples.len(), self.points.len());
+        samples.iter().map(|&s| s * self.scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::l2_dist;
+    use crate::util::rng::Xoshiro256pp;
+    use std::f64::consts::PI;
+
+    /// ‖f − g‖_{L²([0,1]²)} for f = sin(2π(x+y)+δ₁), g with δ₂ —
+    /// closed form √(1 − cos Δδ) (same algebra as the 1-D case).
+    fn truth(d1: f64, d2: f64) -> f64 {
+        (1.0 - (d1 - d2 as f64).cos()).max(0.0).sqrt()
+    }
+
+    fn wave(delta: f64) -> impl Fn(f64, f64) -> f64 {
+        move |x: f64, y: f64| (2.0 * PI * (x + y) + delta).sin()
+    }
+
+    #[test]
+    fn iid_2d_preserves_distance_on_average() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let f = wave(0.4);
+        let g = wave(1.9);
+        let want = truth(0.4, 1.9);
+        let mut acc = 0.0;
+        let reps = 32;
+        for _ in 0..reps {
+            let emb =
+                MonteCarloEmbedder2D::new(Rectangle::unit(), 256, 2.0, Sampling2D::Iid, &mut rng);
+            acc += l2_dist(&emb.embed_fn(&f), &emb.embed_fn(&g));
+        }
+        let mean = acc / reps as f64;
+        assert!((mean - want).abs() < 0.03, "{mean} vs {want}");
+    }
+
+    #[test]
+    fn sobol_2d_much_tighter_than_iid() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let f = wave(0.4);
+        let g = wave(1.9);
+        let want = truth(0.4, 1.9);
+        let emb_q =
+            MonteCarloEmbedder2D::new(Rectangle::unit(), 1024, 2.0, Sampling2D::Sobol, &mut rng);
+        let err_q = (l2_dist(&emb_q.embed_fn(&f), &emb_q.embed_fn(&g)) - want).abs();
+        let emb_m =
+            MonteCarloEmbedder2D::new(Rectangle::unit(), 1024, 2.0, Sampling2D::Iid, &mut rng);
+        let err_m = (l2_dist(&emb_m.embed_fn(&f), &emb_m.embed_fn(&g)) - want).abs();
+        assert!(err_q < err_m, "sobol {err_q} vs iid {err_m}");
+        assert!(err_q < 5e-3, "sobol error {err_q}");
+    }
+
+    #[test]
+    fn volume_scaling_2d() {
+        // constant 1 on a 2x3 rectangle: ‖1‖ = √6
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let emb = MonteCarloEmbedder2D::new(
+            Rectangle::new(0.0, 2.0, 0.0, 3.0),
+            128,
+            2.0,
+            Sampling2D::Halton,
+            &mut rng,
+        );
+        let t = emb.embed_fn(&|_x: f64, _y: f64| 1.0);
+        let norm: f64 = t.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!((norm - 6.0f64.sqrt()).abs() < 1e-12, "{norm}");
+    }
+
+    #[test]
+    fn embed_samples_matches_embed_fn_2d() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let emb =
+            MonteCarloEmbedder2D::new(Rectangle::unit(), 64, 1.0, Sampling2D::Sobol, &mut rng);
+        let f = wave(0.1);
+        let samples: Vec<f64> = emb
+            .sample_points()
+            .iter()
+            .map(|&(x, y)| f(x, y))
+            .collect();
+        assert_eq!(emb.embed_samples(&samples), emb.embed_fn(&f));
+    }
+}

@@ -1,0 +1,485 @@
+//! Extension experiments E4–E9 (DESIGN.md §3): Theorem 1 bound tightness,
+//! MC-vs-QMC convergence, end-to-end k-NN recall/speedup, the W¹ hash with
+//! its LP and Indyk–Thaper baselines, ALSH/MIPS, and adaptive-N_f ablation.
+
+use crate::chebyshev::ChebyshevSeries;
+use crate::embedding::{l2_dist, Embedder, Interval, MonteCarloEmbedder, QmcEmbedder, QmcSequence};
+use crate::functions::{Distribution1D, Sine};
+use crate::hashing::alsh::SignAlsh;
+use crate::hashing::{HashBank, LazyL2Hash, PStableHashBank};
+use crate::lsh::{IndexConfig, LshIndex};
+use crate::quadrature::lp_distance;
+use crate::search::{recall_at_k, BruteForceKnn, LshKnn};
+use crate::theory::{
+    cauchy_collision_probability, pstable_collision_probability, theorem1_bounds,
+};
+use crate::util::rng::{Rng64, Xoshiro256pp};
+use crate::wasserstein::indyk_thaper::{l1_distance, GridEmbedding};
+use crate::wasserstein::{discrete::discrete_wasserstein_1d, wasserstein_empirical, QUANTILE_CLIP};
+use crate::workload::{gaussian_pair, gmm_corpus, sine_pair};
+use crate::experiments::collision_rate;
+
+// ---------------------------------------------------------------------
+// E4: Theorem 1 bound tightness
+// ---------------------------------------------------------------------
+
+/// One row of the Theorem 1 experiment: a truncation level and the
+/// resulting embedding error / collision probabilities.
+#[derive(Debug, Clone, Copy)]
+pub struct Thm1Row {
+    /// number of retained basis coefficients `N_f`
+    pub n_f: usize,
+    /// the embedding error bound ε = ‖ε_f‖ + ‖ε_g‖
+    pub eps: f64,
+    /// observed collision frequency at this truncation
+    pub observed: f64,
+    /// ideal collision probability P (ε = 0)
+    pub p_ideal: f64,
+    /// Theorem 1 lower bound
+    pub lower: f64,
+    /// Theorem 1 upper bound
+    pub upper: f64,
+}
+
+/// E4: truncate the Chebyshev coefficient embedding of a fixed sine pair
+/// at increasing `N_f` and verify the observed collision probability sits
+/// inside the Theorem 1 band (which tightens as ε → 0).
+pub fn thm1_bounds_experiment(hashes: usize, seed: u64) -> Vec<Thm1Row> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let f = Sine::paper(0.7);
+    let g = Sine::paper(2.9);
+    let r = 1.0;
+    // full-resolution embedding = ground truth coefficients
+    let full = 256usize;
+    let emb = crate::embedding::ChebyshevEmbedder::new(Interval::unit(), full);
+    let tf = emb.embed_fn(&f);
+    let tg = emb.embed_fn(&g);
+    let c_true = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+    let norm_sq = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>();
+    let nf2 = norm_sq(&tf);
+    let ng2 = norm_sq(&tg);
+    let bank = LazyL2Hash::new(rng.next_u64(), hashes, r);
+
+    let mut rows = Vec::new();
+    for &n_f in &[4usize, 8, 12, 16, 24, 32, 64] {
+        let tfk = &tf[..n_f];
+        let tgk = &tg[..n_f];
+        // ‖ε_f‖² = ‖f‖² − ‖f̂‖² (the computable-error identity of §3.1)
+        let ef = (nf2 - norm_sq(tfk)).max(0.0).sqrt();
+        let eg = (ng2 - norm_sq(tgk)).max(0.0).sqrt();
+        let eps = ef + eg;
+        let observed = collision_rate(&bank.hash(tfk), &bank.hash(tgk));
+        let (lower, upper) = theorem1_bounds(c_true, r, 2.0, eps);
+        rows.push(Thm1Row {
+            n_f,
+            eps,
+            observed,
+            p_ideal: pstable_collision_probability(c_true, r, 2.0),
+            lower,
+            upper,
+        });
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------
+// E5: MC vs QMC convergence
+// ---------------------------------------------------------------------
+
+/// One row of the convergence sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvergenceRow {
+    /// embedding dimension N
+    pub n: usize,
+    /// mean |‖T(f)−T(g)‖ − ‖f−g‖| for i.i.d. Monte Carlo
+    pub mc_err: f64,
+    /// same for Sobol QMC
+    pub qmc_err: f64,
+    /// same for Halton QMC
+    pub halton_err: f64,
+}
+
+/// E5: embedding error as a function of N — MC should decay ~N^{-1/2},
+/// QMC ~N^{-1} (§3.2 error analysis).
+pub fn qmc_convergence(pairs: usize, seed: u64) -> Vec<ConvergenceRow> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let omega = Interval::unit();
+    let mut rows = Vec::new();
+    for &n in &[16usize, 32, 64, 128, 256, 512] {
+        let mut mc_err = 0.0;
+        let mut qmc_err = 0.0;
+        let mut halton_err = 0.0;
+        for _ in 0..pairs {
+            let (f, g) = sine_pair(&mut rng);
+            let truth = (1.0 - (f.phase - g.phase).cos()).max(0.0).sqrt();
+            let mc = MonteCarloEmbedder::new(omega, n, 2.0, &mut rng);
+            mc_err += (l2_dist(&mc.embed_fn(&f), &mc.embed_fn(&g)) - truth).abs();
+            let qe = QmcEmbedder::new(omega, n, 2.0, QmcSequence::Sobol);
+            qmc_err += (l2_dist(&qe.embed_fn(&f), &qe.embed_fn(&g)) - truth).abs();
+            let he = QmcEmbedder::new(omega, n, 2.0, QmcSequence::Halton);
+            halton_err += (l2_dist(&he.embed_fn(&f), &he.embed_fn(&g)) - truth).abs();
+        }
+        rows.push(ConvergenceRow {
+            n,
+            mc_err: mc_err / pairs as f64,
+            qmc_err: qmc_err / pairs as f64,
+            halton_err: halton_err / pairs as f64,
+        });
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------
+// E6: end-to-end k-NN recall vs speedup
+// ---------------------------------------------------------------------
+
+/// Result of the end-to-end k-NN experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct KnnResult {
+    /// corpus size
+    pub corpus: usize,
+    /// multi-probe depth used
+    pub probe_depth: usize,
+    /// mean recall@k against exact search
+    pub recall: f64,
+    /// mean exact-distance evaluations per LSH query
+    pub mean_evals: f64,
+    /// corpus size / mean_evals — the work reduction factor
+    pub speedup: f64,
+}
+
+/// E6: index a corpus of GMM quantile functions (W²-style embedding),
+/// query held-out distributions, and measure recall@k and the reduction
+/// in exact distance evaluations vs brute force.
+pub fn knn_experiment(
+    corpus_size: usize,
+    queries: usize,
+    k: usize,
+    probe_depth: usize,
+    seed: u64,
+) -> KnnResult {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let omega = Interval::new(QUANTILE_CLIP, 1.0 - QUANTILE_CLIP);
+    let dim = 64;
+    let emb = MonteCarloEmbedder::new(omega, dim, 2.0, &mut rng);
+    // k=6/l=8 with a narrow bucket keeps the amplified S-curve steep
+    // enough that far GMMs (W² ~ 1) rarely become candidates while near
+    // ones almost always do (tuned in examples/wasserstein_knn.rs:
+    // recall ≈ 0.96 at ~17x pruning on 5k corpora).
+    let cfg = IndexConfig::new(6, 8);
+    let bank = PStableHashBank::new(dim, cfg.total_hashes(), 2.0, 0.5, &mut rng);
+
+    let corpus = gmm_corpus(corpus_size, &mut rng);
+    let vecs: Vec<Vec<f64>> = corpus
+        .iter()
+        .map(|d| {
+            let q = d.quantile_fn();
+            emb.embed_fn(&q)
+        })
+        .collect();
+    let mut index = LshIndex::new(cfg);
+    for (i, v) in vecs.iter().enumerate() {
+        index.insert(i as u64, &bank.hash(v));
+    }
+
+    let ids: Vec<u64> = (0..corpus_size as u64).collect();
+    let mut recall_acc = 0.0;
+    let mut evals_acc = 0.0;
+    for _ in 0..queries {
+        let qd = crate::workload::random_gmm(1 + rng.uniform_usize(4), &mut rng);
+        let qv = emb.embed_fn(&qd.quantile_fn());
+        let (exact, _) =
+            BruteForceKnn::new(&ids, |id| l2_dist(&qv, &vecs[id as usize])).query(k);
+        let engine = LshKnn::new(&index).with_probe_depth(probe_depth);
+        let (approx, stats) =
+            engine.query(&bank.hash(&qv), k, |id| l2_dist(&qv, &vecs[id as usize]));
+        recall_acc += recall_at_k(&exact, &approx, k);
+        evals_acc += stats.distance_evals as f64;
+    }
+    let mean_evals = evals_acc / queries as f64;
+    KnnResult {
+        corpus: corpus_size,
+        probe_depth,
+        recall: recall_acc / queries as f64,
+        mean_evals,
+        speedup: corpus_size as f64 / mean_evals.max(1.0),
+    }
+}
+
+// ---------------------------------------------------------------------
+// E7: W¹ via the Cauchy (1-stable) hash + baselines
+// ---------------------------------------------------------------------
+
+/// Result rows for the W¹ experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct W1Row {
+    /// true W¹ distance (quantile quadrature)
+    pub w1: f64,
+    /// observed collision rate of the 1-stable hash on embedded quantiles
+    pub observed: f64,
+    /// theoretical Cauchy collision probability at `w1`
+    pub theoretical: f64,
+    /// discrete LP estimate of W¹ from 64-point discretizations
+    pub w1_lp: f64,
+    /// Indyk–Thaper ℓ¹ surrogate distance
+    pub w1_it: f64,
+}
+
+/// E7: hash `W¹` through Eq. 3 with the p = 1 (Cauchy) hash; cross-check
+/// the true distance against the discrete LP (Eq. 2) and the
+/// Indyk–Thaper grid embedding on the same data.
+pub fn w1_experiment(pairs: usize, hashes: usize, seed: u64) -> Vec<W1Row> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let omega = Interval::new(QUANTILE_CLIP, 1.0 - QUANTILE_CLIP);
+    let dim = 64;
+    let r = 4.0;
+    let emb = MonteCarloEmbedder::new(omega, dim, 1.0, &mut rng);
+    let bank = PStableHashBank::new(dim, hashes, 1.0, r, &mut rng);
+    let grid = GridEmbedding::new(8);
+
+    let mut rows = Vec::with_capacity(pairs);
+    for _ in 0..pairs {
+        let (a, b) = gaussian_pair(&mut rng);
+        // ground truth: W¹ = ∫ |F⁻¹ − G⁻¹| via sorted-sample formula on a
+        // dense common grid (exact for these step approximations)
+        let grid_u: Vec<f64> = (0..2048)
+            .map(|i| QUANTILE_CLIP + (1.0 - 2.0 * QUANTILE_CLIP) * (i as f64 + 0.5) / 2048.0)
+            .collect();
+        let xa: Vec<f64> = grid_u.iter().map(|&u| a.quantile(u)).collect();
+        let xb: Vec<f64> = grid_u.iter().map(|&u| b.quantile(u)).collect();
+        let w1 = wasserstein_empirical(&xa, &xb, 1.0);
+
+        let qa = a.quantile_fn();
+        let qb = b.quantile_fn();
+        let ta = emb.embed_fn(&qa);
+        let tb = emb.embed_fn(&qb);
+        let observed = collision_rate(&bank.hash(&ta), &bank.hash(&tb));
+
+        // discrete LP on 64-point sample discretizations
+        let pts: Vec<f64> = (0..64)
+            .map(|i| QUANTILE_CLIP + (1.0 - 2.0 * QUANTILE_CLIP) * (i as f64 + 0.5) / 64.0)
+            .collect();
+        let da: Vec<f64> = pts.iter().map(|&u| a.quantile(u)).collect();
+        let db: Vec<f64> = pts.iter().map(|&u| b.quantile(u)).collect();
+        let mass = vec![1.0 / 64.0; 64];
+        let w1_lp = discrete_wasserstein_1d(&da, &mass, &db, &mass, 1.0);
+
+        // Indyk–Thaper surrogate on positions rescaled to [0,1)
+        let rescale = |x: f64| ((x + 4.0) / 8.0).clamp(0.0, 1.0 - 1e-9);
+        let pa: Vec<f64> = da.iter().map(|&x| rescale(x)).collect();
+        let pb: Vec<f64> = db.iter().map(|&x| rescale(x)).collect();
+        let w1_it = l1_distance(&grid.embed(&pa, &mass), &grid.embed(&pb, &mass)) * 8.0;
+
+        rows.push(W1Row {
+            w1,
+            observed,
+            theoretical: cauchy_collision_probability(w1, r),
+            w1_lp,
+            w1_it,
+        });
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------
+// E8: ALSH / MIPS
+// ---------------------------------------------------------------------
+
+/// Result of the MIPS retrieval experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct MipsResult {
+    /// corpus size
+    pub corpus: usize,
+    /// recall@1 of the true max-inner-product item via hashed buckets
+    pub recall_at_1: f64,
+    /// mean rank of the true best item in the hash-collision ordering
+    pub mean_rank: f64,
+}
+
+/// E8: Sign-ALSH over a random vector corpus; for each query, rank corpus
+/// items by hash-collision count and check where the true
+/// max-inner-product item lands.
+pub fn mips_experiment(corpus_size: usize, queries: usize, hashes: usize, seed: u64) -> MipsResult {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let dim = 16;
+    // random corpus with varied norms (norm matters for MIPS)
+    let corpus: Vec<Vec<f64>> = (0..corpus_size)
+        .map(|_| {
+            let scale = rng.uniform_in(0.2, 2.0);
+            (0..dim).map(|_| scale * rng.normal()).collect()
+        })
+        .collect();
+    let max_norm = corpus
+        .iter()
+        .map(|v| v.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .fold(0.0f64, f64::max);
+    let alsh = SignAlsh::new(dim, hashes, max_norm, &mut rng);
+    let hashed: Vec<Vec<i32>> = corpus.iter().map(|v| alsh.hash_data(v)).collect();
+
+    let mut hits = 0usize;
+    let mut rank_acc = 0.0;
+    for _ in 0..queries {
+        let q: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let hq = alsh.hash_query(&q);
+        // true best by inner product
+        let best = (0..corpus_size)
+            .max_by(|&i, &j| {
+                let ip = |v: &Vec<f64>| v.iter().zip(&q).map(|(a, b)| a * b).sum::<f64>();
+                ip(&corpus[i]).partial_cmp(&ip(&corpus[j])).unwrap()
+            })
+            .unwrap();
+        // rank corpus by collision count (descending)
+        let mut order: Vec<usize> = (0..corpus_size).collect();
+        let coll: Vec<f64> = hashed.iter().map(|h| collision_rate(&hq, h)).collect();
+        order.sort_by(|&i, &j| coll[j].partial_cmp(&coll[i]).unwrap());
+        let rank = order.iter().position(|&i| i == best).unwrap();
+        if rank == 0 {
+            hits += 1;
+        }
+        rank_acc += rank as f64;
+    }
+    MipsResult {
+        corpus: corpus_size,
+        recall_at_1: hits as f64 / queries as f64,
+        mean_rank: rank_acc / queries as f64,
+    }
+}
+
+// ---------------------------------------------------------------------
+// E9: adaptive N_f ablation
+// ---------------------------------------------------------------------
+
+/// Result of the adaptive-degree ablation.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveRow {
+    /// oscillation parameter of the workload (higher = harder function)
+    pub omega_scale: f64,
+    /// mean adaptive N_f chosen by the chebfun heuristic
+    pub mean_nf: f64,
+    /// collision-probability RMSE with adaptive truncation (lazy hash)
+    pub rmse_adaptive: f64,
+    /// collision-probability RMSE with fixed N_f = 64
+    pub rmse_fixed: f64,
+}
+
+/// E9: compare the paper's fixed `N_f = 64` against the chebfun-style
+/// adaptive choice on workloads of increasing frequency. Uses the lazy
+/// Algorithm 1 hash, which accepts variable-length coefficient vectors.
+pub fn adaptive_nf_experiment(pairs: usize, hashes: usize, seed: u64) -> Vec<AdaptiveRow> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let r = 1.0;
+    let bank = LazyL2Hash::new(rng.next_u64(), hashes, r);
+    let full_emb = crate::embedding::ChebyshevEmbedder::new(Interval::unit(), 256);
+    let mut rows = Vec::new();
+    for &scale in &[1.0f64, 2.0, 4.0] {
+        let mut nf_acc = 0.0;
+        let mut obs_a = Vec::new();
+        let mut obs_f = Vec::new();
+        let mut theo = Vec::new();
+        for _ in 0..pairs {
+            let d1 = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+            let d2 = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+            let f = Sine::new(1.0, scale * 2.0 * std::f64::consts::PI, d1);
+            let g = Sine::new(1.0, scale * 2.0 * std::f64::consts::PI, d2);
+            let c = (1.0 - (d1 - d2).cos()).max(0.0).sqrt();
+
+            // adaptive N_f from the coefficient plateau of a chebfun fit
+            let fit = ChebyshevSeries::fit_adaptive(&f, 0.0, 1.0, 1e-10, 256);
+            let n_f = fit.len().clamp(4, 256);
+            nf_acc += n_f as f64;
+
+            let tf = full_emb.embed_fn(&f);
+            let tg = full_emb.embed_fn(&g);
+            obs_a.push(collision_rate(&bank.hash(&tf[..n_f]), &bank.hash(&tg[..n_f])));
+            obs_f.push(collision_rate(&bank.hash(&tf[..64]), &bank.hash(&tg[..64])));
+            theo.push(pstable_collision_probability(c, r, 2.0));
+        }
+        rows.push(AdaptiveRow {
+            omega_scale: scale,
+            mean_nf: nf_acc / pairs as f64,
+            rmse_adaptive: crate::util::stats::rmse(&obs_a, &theo),
+            rmse_fixed: crate::util::stats::rmse(&obs_f, &theo),
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thm1_band_contains_observation_and_tightens() {
+        let rows = thm1_bounds_experiment(2048, 11);
+        assert_eq!(rows.len(), 7);
+        // bands must be nested/tightening as N_f grows
+        assert!(rows.last().unwrap().upper - rows.last().unwrap().lower
+            < rows[0].upper - rows[0].lower);
+        // At high N_f the coefficient tail of the √sin-weighted embedding
+        // decays algebraically (~ N_f^{-3/2}), so eps is small but not
+        // machine-zero; the observation must sit inside the (slightly
+        // slackened for sampling noise) band.
+        let last = rows.last().unwrap();
+        assert!(last.eps < 0.2, "eps {}", last.eps);
+        assert!(
+            last.observed >= last.lower - 0.05 && last.observed <= last.upper + 0.05,
+            "{last:?}"
+        );
+    }
+
+    #[test]
+    fn qmc_beats_mc_at_large_n() {
+        let rows = qmc_convergence(12, 13);
+        let last = rows.last().unwrap();
+        assert!(
+            last.qmc_err < last.mc_err,
+            "qmc {} vs mc {}",
+            last.qmc_err,
+            last.mc_err
+        );
+        // MC error should shrink with N overall
+        assert!(rows.last().unwrap().mc_err < rows[0].mc_err * 1.5);
+    }
+
+    #[test]
+    fn knn_has_useful_recall_and_speedup() {
+        let res = knn_experiment(500, 20, 10, 1, 17);
+        assert!(res.recall > 0.45, "recall {}", res.recall);
+        assert!(res.speedup > 1.5, "speedup {}", res.speedup);
+    }
+
+    #[test]
+    fn w1_rows_consistent() {
+        let rows = w1_experiment(12, 512, 19);
+        for row in &rows {
+            // LP on 64-pt discretization ≈ dense ground truth
+            assert!(
+                (row.w1_lp - row.w1).abs() < 0.15 * row.w1.max(0.05),
+                "{row:?}"
+            );
+            // observed collision rate ≈ Cauchy theory
+            assert!((row.observed - row.theoretical).abs() < 0.12, "{row:?}");
+            // IT surrogate correlates (within its log-factor guarantee)
+            assert!(row.w1_it > 0.0);
+        }
+    }
+
+    #[test]
+    fn mips_finds_best_items() {
+        let res = mips_experiment(100, 20, 1024, 23);
+        // the true best item should rank far above median on average
+        assert!(res.mean_rank < 25.0, "mean rank {}", res.mean_rank);
+        assert!(res.recall_at_1 > 0.2, "recall@1 {}", res.recall_at_1);
+    }
+
+    #[test]
+    fn adaptive_nf_grows_with_frequency() {
+        let rows = adaptive_nf_experiment(10, 256, 29);
+        assert!(rows[2].mean_nf > rows[0].mean_nf);
+        // both truncations should track theory reasonably
+        for r in &rows {
+            assert!(r.rmse_adaptive < 0.12, "{r:?}");
+            assert!(r.rmse_fixed < 0.12, "{r:?}");
+        }
+    }
+}

@@ -1,0 +1,351 @@
+//! Experiment harnesses reproducing every figure of the paper's §4, plus
+//! the extension experiments listed in DESIGN.md (E4–E9).
+//!
+//! Each harness is a pure function from parameters to result rows so the
+//! CLI (`funclsh experiment …`), the benches, and the integration tests
+//! all share one implementation. Results include the theoretical curve,
+//! the observed collision frequency, and agreement metrics (RMSE, max
+//! deviation, Pearson r) that EXPERIMENTS.md records.
+
+pub mod bases_experiments;
+pub mod extensions;
+
+use crate::embedding::{
+    cosine_sim, l2_dist, ChebyshevEmbedder, Embedder, Interval, MonteCarloEmbedder, QmcEmbedder,
+    QmcSequence,
+};
+use crate::functions::Distribution1D;
+use crate::hashing::{HashBank, PStableHashBank, SimHashBank};
+use crate::theory::{
+    gaussian_collision_probability, simhash_collision_probability,
+};
+use crate::util::rng::{Rng64, Xoshiro256pp};
+use crate::util::stats::{max_abs_dev, pearson, rmse};
+use crate::wasserstein::{gaussian_w2, QUANTILE_CLIP};
+use crate::workload::{gaussian_pair, sine_pair};
+
+/// Which embedding a figure run used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// §3.1 function approximation (Chebyshev)
+    FunctionApproximation,
+    /// §3.2 Monte Carlo
+    MonteCarlo,
+    /// §3.2 quasi-Monte Carlo (Sobol) — extension
+    QuasiMonteCarlo,
+}
+
+impl Method {
+    /// Short label used in CSV output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::FunctionApproximation => "cheb",
+            Method::MonteCarlo => "mc",
+            Method::QuasiMonteCarlo => "qmc",
+        }
+    }
+
+    /// Build the embedder for this method on `omega` with dimension `n`.
+    pub fn embedder(
+        &self,
+        omega: Interval,
+        n: usize,
+        p: f64,
+        rng: &mut dyn Rng64,
+    ) -> Box<dyn Embedder> {
+        match self {
+            Method::FunctionApproximation => Box::new(ChebyshevEmbedder::new(omega, n)),
+            Method::MonteCarlo => Box::new(MonteCarloEmbedder::new(omega, n, p, rng)),
+            Method::QuasiMonteCarlo => {
+                Box::new(QmcEmbedder::new(omega, n, p, QmcSequence::Sobol))
+            }
+        }
+    }
+}
+
+/// One scatter point of a collision-rate figure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollisionPoint {
+    /// x-axis: the true similarity/distance between the pair
+    pub similarity: f64,
+    /// observed collision frequency across the hash bank
+    pub observed: f64,
+    /// theoretical collision probability at `similarity`
+    pub theoretical: f64,
+}
+
+/// A complete figure run: points for one method plus agreement stats.
+#[derive(Debug, Clone)]
+pub struct FigureSeries {
+    /// which embedding generated the series
+    pub method: Method,
+    /// scatter points (one per sampled pair)
+    pub points: Vec<CollisionPoint>,
+}
+
+impl FigureSeries {
+    /// RMSE between observed and theoretical collision rates.
+    pub fn rmse(&self) -> f64 {
+        let (o, t): (Vec<f64>, Vec<f64>) = self
+            .points
+            .iter()
+            .map(|p| (p.observed, p.theoretical))
+            .unzip();
+        rmse(&o, &t)
+    }
+
+    /// Maximum absolute deviation.
+    pub fn max_dev(&self) -> f64 {
+        let (o, t): (Vec<f64>, Vec<f64>) = self
+            .points
+            .iter()
+            .map(|p| (p.observed, p.theoretical))
+            .unzip();
+        max_abs_dev(&o, &t)
+    }
+
+    /// Pearson correlation between observed and theoretical.
+    pub fn pearson(&self) -> f64 {
+        let (o, t): (Vec<f64>, Vec<f64>) = self
+            .points
+            .iter()
+            .map(|p| (p.observed, p.theoretical))
+            .unzip();
+        pearson(&o, &t)
+    }
+
+    /// CSV rows (`method,similarity,observed,theoretical`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6}\n",
+                self.method.label(),
+                p.similarity,
+                p.observed,
+                p.theoretical
+            ));
+        }
+        out
+    }
+}
+
+/// Parameters shared by the figure experiments, defaulting to the paper's
+/// setup: Ω = \[0,1\], N = 64, 1024 hash functions, r = 1.
+#[derive(Debug, Clone, Copy)]
+pub struct FigureParams {
+    /// number of random pairs (scatter points)
+    pub pairs: usize,
+    /// hash functions per bank (collision-rate resolution)
+    pub hashes: usize,
+    /// embedding dimension N
+    pub dim: usize,
+    /// bucket width r (L² hash experiments)
+    pub r: f64,
+    /// RNG seed
+    pub seed: u64,
+}
+
+impl Default for FigureParams {
+    fn default() -> Self {
+        Self {
+            pairs: 256,
+            hashes: 1024,
+            dim: 64,
+            r: 1.0,
+            seed: 2020,
+        }
+    }
+}
+
+/// **Figure 1**: SimHash collision rate vs cosine similarity over random
+/// sine pairs `sin(2πx + δ)`, for the given embedding method.
+///
+/// Ground truth: `cossim(f, g) = cos(δ₁ − δ₂)` on `[0, 1]` (closed form);
+/// theory: Eq. 7.
+pub fn fig1_cosine(method: Method, params: FigureParams) -> FigureSeries {
+    let mut rng = Xoshiro256pp::seed_from_u64(params.seed);
+    let omega = Interval::unit();
+    let emb = method.embedder(omega, params.dim, 2.0, &mut rng);
+    let bank = SimHashBank::new(params.dim, params.hashes, &mut rng);
+    let mut points = Vec::with_capacity(params.pairs);
+    for _ in 0..params.pairs {
+        let (f, g) = sine_pair(&mut rng);
+        let true_sim = (f.phase - g.phase).cos();
+        let tf = emb.embed_fn(&f);
+        let tg = emb.embed_fn(&g);
+        let observed = collision_rate(&bank.hash(&tf), &bank.hash(&tg));
+        points.push(CollisionPoint {
+            similarity: true_sim,
+            observed,
+            theoretical: simhash_collision_probability(true_sim),
+        });
+    }
+    FigureSeries { method, points }
+}
+
+/// **Figure 2**: 2-stable L²-distance hash collision rate vs
+/// `‖f − g‖_{L²}` over random sine pairs.
+///
+/// Ground truth: `‖f − g‖² = 1 − cos(δ₁ − δ₂)` on `[0,1]`; theory: Eq. 8.
+pub fn fig2_l2(method: Method, params: FigureParams) -> FigureSeries {
+    let mut rng = Xoshiro256pp::seed_from_u64(params.seed.wrapping_add(1));
+    let omega = Interval::unit();
+    let emb = method.embedder(omega, params.dim, 2.0, &mut rng);
+    let bank = PStableHashBank::new(params.dim, params.hashes, 2.0, params.r, &mut rng);
+    let mut points = Vec::with_capacity(params.pairs);
+    for _ in 0..params.pairs {
+        let (f, g) = sine_pair(&mut rng);
+        let c = (1.0 - (f.phase - g.phase).cos()).max(0.0).sqrt();
+        let tf = emb.embed_fn(&f);
+        let tg = emb.embed_fn(&g);
+        let observed = collision_rate(&bank.hash(&tf), &bank.hash(&tg));
+        points.push(CollisionPoint {
+            similarity: c,
+            observed,
+            theoretical: gaussian_collision_probability(c, params.r),
+        });
+    }
+    FigureSeries { method, points }
+}
+
+/// **Figure 3**: 2-stable hash collision rate vs `W²(m₁, m₂)` over random
+/// Gaussian pairs, hashing the inverse CDFs on `[10⁻³, 1 − 10⁻³]` per the
+/// paper's footnote 1.
+///
+/// Ground truth: Olkin–Pukelsheim closed form; theory: Eq. 8.
+pub fn fig3_wasserstein(method: Method, params: FigureParams) -> FigureSeries {
+    let mut rng = Xoshiro256pp::seed_from_u64(params.seed.wrapping_add(2));
+    // the clipped domain of the quantile functions
+    let omega = Interval::new(QUANTILE_CLIP, 1.0 - QUANTILE_CLIP);
+    let emb = method.embedder(omega, params.dim, 2.0, &mut rng);
+    let bank = PStableHashBank::new(params.dim, params.hashes, 2.0, params.r, &mut rng);
+    let mut points = Vec::with_capacity(params.pairs);
+    for _ in 0..params.pairs {
+        let (a, b) = gaussian_pair(&mut rng);
+        let w2 = gaussian_w2(&a, &b);
+        let qa = a.quantile_fn();
+        let qb = b.quantile_fn();
+        let ta = emb.embed_fn(&qa);
+        let tb = emb.embed_fn(&qb);
+        let observed = collision_rate(&bank.hash(&ta), &bank.hash(&tb));
+        points.push(CollisionPoint {
+            similarity: w2,
+            observed,
+            theoretical: gaussian_collision_probability(w2, params.r),
+        });
+    }
+    FigureSeries { method, points }
+}
+
+/// Fraction of positions where two signatures agree.
+pub fn collision_rate(a: &[i32], b: &[i32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
+}
+
+/// Measure the embedding quality the experiments implicitly rely on:
+/// mean |‖T(f)−T(g)‖ − ‖f−g‖| over sine pairs (diagnostic for DESIGN §3).
+pub fn embedding_distance_error(method: Method, dim: usize, pairs: usize, seed: u64) -> f64 {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let emb = method.embedder(Interval::unit(), dim, 2.0, &mut rng);
+    let mut acc = 0.0;
+    for _ in 0..pairs {
+        let (f, g) = sine_pair(&mut rng);
+        let truth = (1.0 - (f.phase - g.phase).cos()).max(0.0).sqrt();
+        let d = l2_dist(&emb.embed_fn(&f), &emb.embed_fn(&g));
+        acc += (d - truth).abs();
+    }
+    acc / pairs as f64
+}
+
+/// Same for cosine similarity (diagnostic for Figure 1).
+pub fn embedding_cosine_error(method: Method, dim: usize, pairs: usize, seed: u64) -> f64 {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let emb = method.embedder(Interval::unit(), dim, 2.0, &mut rng);
+    let mut acc = 0.0;
+    for _ in 0..pairs {
+        let (f, g) = sine_pair(&mut rng);
+        let truth = (f.phase - g.phase).cos();
+        let s = cosine_sim(&emb.embed_fn(&f), &emb.embed_fn(&g));
+        acc += (s - truth).abs();
+    }
+    acc / pairs as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> FigureParams {
+        FigureParams {
+            pairs: 48,
+            hashes: 512,
+            dim: 64,
+            r: 1.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn fig1_tracks_theory_both_methods() {
+        for method in [Method::FunctionApproximation, Method::MonteCarlo] {
+            let s = fig1_cosine(method, small());
+            assert_eq!(s.points.len(), 48);
+            // The paper's claim: observed tracks theoretical closely.
+            assert!(
+                s.rmse() < 0.06,
+                "{:?} rmse {} too high",
+                method,
+                s.rmse()
+            );
+            assert!(s.pearson() > 0.97, "{:?} r = {}", method, s.pearson());
+        }
+    }
+
+    #[test]
+    fn fig2_tracks_theory_both_methods() {
+        for method in [Method::FunctionApproximation, Method::MonteCarlo] {
+            let s = fig2_l2(method, small());
+            assert!(s.rmse() < 0.06, "{:?} rmse {}", method, s.rmse());
+            assert!(s.pearson() > 0.97, "{:?} r {}", method, s.pearson());
+        }
+    }
+
+    #[test]
+    fn fig3_tracks_theory_both_methods() {
+        for method in [Method::FunctionApproximation, Method::MonteCarlo] {
+            let s = fig3_wasserstein(method, small());
+            assert!(s.rmse() < 0.07, "{:?} rmse {}", method, s.rmse());
+            assert!(s.pearson() > 0.95, "{:?} r {}", method, s.pearson());
+        }
+    }
+
+    #[test]
+    fn qmc_method_also_valid() {
+        let s = fig2_l2(Method::QuasiMonteCarlo, small());
+        assert!(s.rmse() < 0.06, "rmse {}", s.rmse());
+    }
+
+    #[test]
+    fn csv_output_shape() {
+        let s = fig1_cosine(Method::MonteCarlo, FigureParams {
+            pairs: 4,
+            hashes: 64,
+            ..small()
+        });
+        let csv = s.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("mc,"));
+    }
+
+    #[test]
+    fn embedding_error_diagnostics_small() {
+        let e_cheb = embedding_distance_error(Method::FunctionApproximation, 64, 32, 3);
+        let e_mc = embedding_distance_error(Method::MonteCarlo, 64, 32, 3);
+        assert!(e_cheb < 0.01, "cheb {e_cheb}");
+        assert!(e_mc < 0.15, "mc {e_mc}");
+        let c = embedding_cosine_error(Method::FunctionApproximation, 64, 32, 3);
+        assert!(c < 0.02, "{c}");
+    }
+}

@@ -1,0 +1,246 @@
+//! Analytic function families and combinators.
+
+use super::Function1D;
+
+/// `f(x) = a · sin(ω x + δ)` — the workload of the paper's Figures 1–2
+/// (`a = 1`, `ω = 2π`, `δ ~ Uniform[0, 2π]`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sine {
+    /// amplitude `a`
+    pub amplitude: f64,
+    /// angular frequency `ω`
+    pub omega: f64,
+    /// phase `δ`
+    pub phase: f64,
+}
+
+impl Sine {
+    /// `a · sin(ω x + δ)`.
+    pub fn new(amplitude: f64, omega: f64, phase: f64) -> Self {
+        Self {
+            amplitude,
+            omega,
+            phase,
+        }
+    }
+
+    /// The unit sine of the paper's experiments: `sin(2πx + δ)`.
+    pub fn paper(phase: f64) -> Self {
+        Self::new(1.0, 2.0 * std::f64::consts::PI, phase)
+    }
+}
+
+impl Function1D for Sine {
+    fn eval(&self, x: f64) -> f64 {
+        self.amplitude * (self.omega * x + self.phase).sin()
+    }
+}
+
+/// Dense polynomial `c₀ + c₁x + … + c_d x^d`, evaluated by Horner's rule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Polynomial {
+    /// coefficients, low degree first
+    pub coeffs: Vec<f64>,
+}
+
+impl Polynomial {
+    /// From coefficients, low degree first.
+    pub fn new(coeffs: Vec<f64>) -> Self {
+        assert!(!coeffs.is_empty());
+        Self { coeffs }
+    }
+
+    /// Degree of the polynomial.
+    pub fn degree(&self) -> usize {
+        self.coeffs.len() - 1
+    }
+}
+
+impl Function1D for Polynomial {
+    fn eval(&self, x: f64) -> f64 {
+        let mut acc = 0.0;
+        for &c in self.coeffs.iter().rev() {
+            acc = acc * x + c;
+        }
+        acc
+    }
+}
+
+/// Continuous piecewise-linear function through `(x_i, y_i)` knots,
+/// constant-extrapolated outside the knot range. Knots must be strictly
+/// increasing in `x`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Piecewise {
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+}
+
+impl Piecewise {
+    /// Build from knots; panics if `xs` is not strictly increasing or the
+    /// lengths differ.
+    pub fn new(xs: Vec<f64>, ys: Vec<f64>) -> Self {
+        assert_eq!(xs.len(), ys.len());
+        assert!(xs.len() >= 2);
+        assert!(
+            xs.windows(2).all(|w| w[0] < w[1]),
+            "knots must be strictly increasing"
+        );
+        Self { xs, ys }
+    }
+
+    /// Number of knots.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// True if there are no knots (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+impl Function1D for Piecewise {
+    fn eval(&self, x: f64) -> f64 {
+        if x <= self.xs[0] {
+            return self.ys[0];
+        }
+        if x >= *self.xs.last().unwrap() {
+            return *self.ys.last().unwrap();
+        }
+        // binary search for the bracketing interval
+        let i = match self
+            .xs
+            .binary_search_by(|v| v.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => return self.ys[i],
+            Err(i) => i,
+        };
+        let (x0, x1) = (self.xs[i - 1], self.xs[i]);
+        let (y0, y1) = (self.ys[i - 1], self.ys[i]);
+        y0 + (y1 - y0) * (x - x0) / (x1 - x0)
+    }
+}
+
+/// Wrap an arbitrary closure as a named function object (useful when a
+/// `Box<dyn Function1D>` is needed but the closure's type is anonymous).
+pub struct Closure {
+    f: Box<dyn Fn(f64) -> f64 + Send + Sync>,
+}
+
+impl Closure {
+    /// Wrap a closure.
+    pub fn new(f: impl Fn(f64) -> f64 + Send + Sync + 'static) -> Self {
+        Self { f: Box::new(f) }
+    }
+}
+
+impl Function1D for Closure {
+    fn eval(&self, x: f64) -> f64 {
+        (self.f)(x)
+    }
+}
+
+/// `c · f(x)`.
+pub struct Scaled<F> {
+    /// inner function
+    pub inner: F,
+    /// scalar multiplier
+    pub scale: f64,
+}
+
+impl<F: Function1D> Function1D for Scaled<F> {
+    fn eval(&self, x: f64) -> f64 {
+        self.scale * self.inner.eval(x)
+    }
+}
+
+/// `f(x - delta)`.
+pub struct Shifted<F> {
+    /// inner function
+    pub inner: F,
+    /// horizontal shift
+    pub delta: f64,
+}
+
+impl<F: Function1D> Function1D for Shifted<F> {
+    fn eval(&self, x: f64) -> f64 {
+        self.inner.eval(x - self.delta)
+    }
+}
+
+/// `f(x) + g(x)`.
+pub struct Sum<F, G> {
+    /// left operand
+    pub f: F,
+    /// right operand
+    pub g: G,
+}
+
+impl<F: Function1D, G: Function1D> Function1D for Sum<F, G> {
+    fn eval(&self, x: f64) -> f64 {
+        self.f.eval(x) + self.g.eval(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sine_eval() {
+        let s = Sine::paper(0.0);
+        assert!(s.eval(0.0).abs() < 1e-15);
+        assert!((s.eval(0.25) - 1.0).abs() < 1e-12);
+        let t = Sine::new(2.0, 1.0, std::f64::consts::FRAC_PI_2);
+        assert!((t.eval(0.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn polynomial_horner() {
+        // 1 + 2x + 3x^2 at x = 2 -> 17
+        let p = Polynomial::new(vec![1.0, 2.0, 3.0]);
+        assert_eq!(p.eval(2.0), 17.0);
+        assert_eq!(p.degree(), 2);
+    }
+
+    #[test]
+    fn piecewise_interpolation_and_extrapolation() {
+        let pw = Piecewise::new(vec![0.0, 1.0, 2.0], vec![0.0, 10.0, 0.0]);
+        assert_eq!(pw.eval(0.5), 5.0);
+        assert_eq!(pw.eval(1.5), 5.0);
+        assert_eq!(pw.eval(1.0), 10.0); // exact knot
+        assert_eq!(pw.eval(-3.0), 0.0); // left extrapolation
+        assert_eq!(pw.eval(9.0), 0.0); // right extrapolation
+    }
+
+    #[test]
+    #[should_panic]
+    fn piecewise_rejects_unsorted() {
+        let _ = Piecewise::new(vec![0.0, 2.0, 1.0], vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn combinators_compose() {
+        let f = Scaled {
+            inner: Sine::paper(0.0),
+            scale: 3.0,
+        };
+        assert!((f.eval(0.25) - 3.0).abs() < 1e-12);
+        let g = Sum {
+            f: Polynomial::new(vec![1.0]),
+            g: Polynomial::new(vec![0.0, 1.0]),
+        };
+        assert_eq!(g.eval(4.0), 5.0);
+        let h = Shifted {
+            inner: Polynomial::new(vec![0.0, 1.0]),
+            delta: 1.0,
+        };
+        assert_eq!(h.eval(3.0), 2.0);
+    }
+
+    #[test]
+    fn closure_boxing() {
+        let c = Closure::new(|x| x.exp());
+        assert!((c.eval(1.0) - std::f64::consts::E).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,289 @@
+//! Density estimators: histogram and Gaussian KDE. They upgrade a raw
+//! sample set ([`super::Sampled`] has no density) into a full
+//! [`Distribution1D`] with a pdf — needed by the KL-divergence-as-MIPS
+//! pipeline (paper §5), which embeds densities and log-densities.
+
+use super::{Distribution1D, Sampled};
+
+/// A histogram density on `[lo, hi]` with equal-width bins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    /// normalized bin densities (integrate to 1)
+    density: Vec<f64>,
+    /// cumulative mass at each bin's right edge
+    cum: Vec<f64>,
+}
+
+impl Histogram {
+    /// Build from samples with `bins` equal-width bins spanning
+    /// `[lo, hi]`; out-of-range samples clamp to the edge bins.
+    pub fn fit(samples: &[f64], lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(!samples.is_empty() && bins >= 1 && lo < hi);
+        let width = (hi - lo) / bins as f64;
+        let mut counts = vec![0usize; bins];
+        for &x in samples {
+            let b = (((x - lo) / width) as isize).clamp(0, bins as isize - 1) as usize;
+            counts[b] += 1;
+        }
+        let total = samples.len() as f64;
+        let density: Vec<f64> = counts
+            .iter()
+            .map(|&c| c as f64 / (total * width))
+            .collect();
+        let mut cum = Vec::with_capacity(bins);
+        let mut acc = 0.0;
+        for &d in &density {
+            acc += d * width;
+            cum.push(acc);
+        }
+        Self {
+            lo,
+            hi,
+            density,
+            cum,
+        }
+    }
+
+    /// Number of bins.
+    pub fn bins(&self) -> usize {
+        self.density.len()
+    }
+
+    fn width(&self) -> f64 {
+        (self.hi - self.lo) / self.density.len() as f64
+    }
+}
+
+impl Distribution1D for Histogram {
+    fn pdf(&self, x: f64) -> f64 {
+        if x < self.lo || x >= self.hi {
+            return 0.0;
+        }
+        let b = ((x - self.lo) / self.width()) as usize;
+        self.density[b.min(self.density.len() - 1)]
+    }
+
+    fn cdf(&self, x: f64) -> f64 {
+        if x <= self.lo {
+            return 0.0;
+        }
+        if x >= self.hi {
+            return 1.0;
+        }
+        let w = self.width();
+        let b = ((x - self.lo) / w) as usize;
+        let b = b.min(self.density.len() - 1);
+        let left_mass = if b == 0 { 0.0 } else { self.cum[b - 1] };
+        left_mass + self.density[b] * (x - (self.lo + b as f64 * w))
+    }
+
+    fn quantile(&self, u: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&u));
+        if u == 0.0 {
+            return self.lo;
+        }
+        if u >= 1.0 {
+            return self.hi;
+        }
+        let b = self.cum.partition_point(|&c| c < u);
+        let b = b.min(self.density.len() - 1);
+        let left_mass = if b == 0 { 0.0 } else { self.cum[b - 1] };
+        let w = self.width();
+        let left = self.lo + b as f64 * w;
+        if self.density[b] <= 0.0 {
+            return left;
+        }
+        left + (u - left_mass) / self.density[b]
+    }
+}
+
+/// Gaussian kernel density estimate over raw samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kde {
+    samples: Sampled,
+    bandwidth: f64,
+}
+
+impl Kde {
+    /// KDE with explicit bandwidth `h > 0`.
+    pub fn new(samples: Vec<f64>, bandwidth: f64) -> Self {
+        assert!(bandwidth > 0.0);
+        Self {
+            samples: Sampled::from_samples(samples),
+            bandwidth,
+        }
+    }
+
+    /// KDE with Silverman's rule-of-thumb bandwidth
+    /// `h = 0.9 min(σ̂, IQR/1.34) n^{-1/5}`.
+    pub fn silverman(samples: Vec<f64>) -> Self {
+        let n = samples.len() as f64;
+        let mean: f64 = samples.iter().sum::<f64>() / n;
+        let sd = (samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n).sqrt();
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let iqr = crate::util::stats::quantile_sorted(&sorted, 0.75)
+            - crate::util::stats::quantile_sorted(&sorted, 0.25);
+        let scale = sd.min(iqr / 1.34).max(1e-12);
+        let h = 0.9 * scale * n.powf(-0.2);
+        Self::new(samples, h.max(1e-9))
+    }
+
+    /// The bandwidth in use.
+    pub fn bandwidth(&self) -> f64 {
+        self.bandwidth
+    }
+}
+
+impl Distribution1D for Kde {
+    fn pdf(&self, x: f64) -> f64 {
+        let h = self.bandwidth;
+        let n = self.samples.len() as f64;
+        self.samples
+            .samples()
+            .iter()
+            .map(|&s| crate::util::special::normal_pdf((x - s) / h))
+            .sum::<f64>()
+            / (n * h)
+    }
+
+    fn cdf(&self, x: f64) -> f64 {
+        let h = self.bandwidth;
+        let n = self.samples.len() as f64;
+        self.samples
+            .samples()
+            .iter()
+            .map(|&s| crate::util::special::normal_cdf((x - s) / h))
+            .sum::<f64>()
+            / n
+    }
+
+    fn quantile(&self, u: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&u));
+        if u == 0.0 {
+            return f64::NEG_INFINITY;
+        }
+        if u == 1.0 {
+            return f64::INFINITY;
+        }
+        // bracket from the sample range ± 6h, then bisect+Newton
+        let s = self.samples.samples();
+        let mut lo = s[0] - 6.0 * self.bandwidth;
+        let mut hi = s[s.len() - 1] + 6.0 * self.bandwidth;
+        let mut x = 0.5 * (lo + hi);
+        for _ in 0..200 {
+            let f = self.cdf(x) - u;
+            if f.abs() < 1e-13 {
+                break;
+            }
+            if f > 0.0 {
+                hi = x;
+            } else {
+                lo = x;
+            }
+            let d = self.pdf(x);
+            let newton = if d > 1e-300 { x - f / d } else { f64::NAN };
+            x = if newton.is_finite() && newton > lo && newton < hi {
+                newton
+            } else {
+                0.5 * (lo + hi)
+            };
+            if hi - lo < 1e-13 * (1.0 + x.abs()) {
+                break;
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::GaussianDist;
+    use crate::util::rng::{Rng64, Xoshiro256pp};
+
+    fn normal_samples(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn histogram_density_integrates_to_one() {
+        let s = normal_samples(10_000, 1);
+        let h = Histogram::fit(&s, -5.0, 5.0, 50);
+        let w = 10.0 / 50.0;
+        let total: f64 = (0..50).map(|b| h.pdf(-5.0 + (b as f64 + 0.5) * w) * w).sum();
+        assert!((total - 1.0).abs() < 1e-12, "{total}");
+    }
+
+    #[test]
+    fn histogram_cdf_quantile_inverse() {
+        let s = normal_samples(5_000, 2);
+        let h = Histogram::fit(&s, -4.0, 4.0, 64);
+        for &u in &[0.1, 0.25, 0.5, 0.9] {
+            let x = h.quantile(u);
+            assert!((h.cdf(x) - u).abs() < 1e-9, "u = {u}");
+        }
+        assert_eq!(h.cdf(-10.0), 0.0);
+        assert_eq!(h.cdf(10.0), 1.0);
+    }
+
+    #[test]
+    fn histogram_approximates_normal_pdf() {
+        let s = normal_samples(50_000, 3);
+        let h = Histogram::fit(&s, -4.0, 4.0, 40);
+        let g = GaussianDist::new(0.0, 1.0);
+        // piecewise-constant bias is O(w·|φ'|) ≈ 0.05 at w = 0.2
+        for &x in &[-1.0, 0.0, 0.5, 1.5] {
+            assert!(
+                (h.pdf(x) - g.pdf(x)).abs() < 0.06,
+                "x = {x}: {} vs {}",
+                h.pdf(x),
+                g.pdf(x)
+            );
+        }
+    }
+
+    #[test]
+    fn kde_approximates_normal() {
+        let s = normal_samples(5_000, 4);
+        let k = Kde::silverman(s);
+        let g = GaussianDist::new(0.0, 1.0);
+        for &x in &[-1.5, 0.0, 1.0] {
+            assert!(
+                (k.pdf(x) - g.pdf(x)).abs() < 0.03,
+                "x = {x}: {} vs {}",
+                k.pdf(x),
+                g.pdf(x)
+            );
+        }
+        // CDF matches too
+        assert!((k.cdf(0.0) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn kde_quantile_roundtrip() {
+        let s = normal_samples(2_000, 5);
+        let k = Kde::silverman(s);
+        for &u in &[0.05, 0.3, 0.5, 0.8, 0.95] {
+            let x = k.quantile(u);
+            assert!((k.cdf(x) - u).abs() < 1e-9, "u = {u}");
+        }
+    }
+
+    #[test]
+    fn kde_quantile_fn_is_hashable() {
+        // End-to-end: KDE quantile function through the W² pipeline.
+        use crate::embedding::{Embedder, Interval, MonteCarloEmbedder};
+        let s = normal_samples(2_000, 6);
+        let k = Kde::silverman(s);
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let omega = Interval::new(1e-3, 1.0 - 1e-3);
+        let emb = MonteCarloEmbedder::new(omega, 32, 2.0, &mut rng);
+        let t = emb.embed_fn(&k.quantile_fn());
+        assert_eq!(t.len(), 32);
+        assert!(t.iter().all(|x| x.is_finite()));
+    }
+}

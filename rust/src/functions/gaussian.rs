@@ -1,0 +1,221 @@
+//! Gaussian distributions and mixtures — the workload of the paper's
+//! Figure 3 (2-Wasserstein over pairs of 1-D normals) and the end-to-end
+//! k-NN corpus (GMM quantiles).
+
+use super::{Distribution1D, Function1D};
+use crate::util::special::{normal_cdf, normal_pdf, normal_quantile};
+
+/// A 1-D Gaussian `N(μ, σ²)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GaussianDist {
+    /// mean μ
+    pub mu: f64,
+    /// standard deviation σ (> 0)
+    pub sigma: f64,
+}
+
+impl GaussianDist {
+    /// `N(mu, sigma²)`; `sigma` must be positive.
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma > 0.0, "sigma must be positive");
+        Self { mu, sigma }
+    }
+}
+
+impl Distribution1D for GaussianDist {
+    fn pdf(&self, x: f64) -> f64 {
+        normal_pdf((x - self.mu) / self.sigma) / self.sigma
+    }
+
+    fn cdf(&self, x: f64) -> f64 {
+        normal_cdf((x - self.mu) / self.sigma)
+    }
+
+    fn quantile(&self, u: f64) -> f64 {
+        self.mu + self.sigma * normal_quantile(u)
+    }
+}
+
+/// The quantile function of a Gaussian as a plain [`Function1D`]
+/// (owned variant, convenient for boxed corpora).
+#[derive(Debug, Clone, Copy)]
+pub struct GaussianQuantile(pub GaussianDist);
+
+impl Function1D for GaussianQuantile {
+    fn eval(&self, x: f64) -> f64 {
+        self.0.quantile(x)
+    }
+}
+
+/// A finite mixture of Gaussians `Σ w_k N(μ_k, σ_k²)` with `Σ w_k = 1`.
+///
+/// The quantile function has no closed form; we invert the CDF with a
+/// bracketed bisection/Newton hybrid, which is robust for any mixture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaussianMixture {
+    comps: Vec<GaussianDist>,
+    weights: Vec<f64>,
+}
+
+impl GaussianMixture {
+    /// Build a mixture; weights are normalized to sum to 1.
+    pub fn new(comps: Vec<GaussianDist>, mut weights: Vec<f64>) -> Self {
+        assert_eq!(comps.len(), weights.len());
+        assert!(!comps.is_empty());
+        assert!(weights.iter().all(|&w| w >= 0.0));
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0);
+        for w in weights.iter_mut() {
+            *w /= total;
+        }
+        Self { comps, weights }
+    }
+
+    /// Number of components.
+    pub fn num_components(&self) -> usize {
+        self.comps.len()
+    }
+
+    /// Mixture mean.
+    pub fn mean(&self) -> f64 {
+        self.comps
+            .iter()
+            .zip(&self.weights)
+            .map(|(c, w)| w * c.mu)
+            .sum()
+    }
+}
+
+impl Distribution1D for GaussianMixture {
+    fn pdf(&self, x: f64) -> f64 {
+        self.comps
+            .iter()
+            .zip(&self.weights)
+            .map(|(c, w)| w * c.pdf(x))
+            .sum()
+    }
+
+    fn cdf(&self, x: f64) -> f64 {
+        self.comps
+            .iter()
+            .zip(&self.weights)
+            .map(|(c, w)| w * c.cdf(x))
+            .sum()
+    }
+
+    fn quantile(&self, u: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&u));
+        if u == 0.0 {
+            return f64::NEG_INFINITY;
+        }
+        if u == 1.0 {
+            return f64::INFINITY;
+        }
+        // Initial bracket: the extreme component quantiles bound the
+        // mixture quantile.
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for c in &self.comps {
+            lo = lo.min(c.quantile(u));
+            hi = hi.max(c.quantile(u));
+        }
+        if lo == hi {
+            return lo;
+        }
+        // Newton with bisection fallback.
+        let mut x = 0.5 * (lo + hi);
+        for _ in 0..100 {
+            let fx = self.cdf(x) - u;
+            if fx.abs() < 1e-14 {
+                return x;
+            }
+            if fx > 0.0 {
+                hi = x;
+            } else {
+                lo = x;
+            }
+            let dfx = self.pdf(x);
+            let newton = if dfx > 1e-300 { x - fx / dfx } else { f64::NAN };
+            x = if newton.is_finite() && newton > lo && newton < hi {
+                newton
+            } else {
+                0.5 * (lo + hi)
+            };
+            if hi - lo < 1e-14 * (1.0 + x.abs()) {
+                break;
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_pdf_cdf_quantile_consistency() {
+        let g = GaussianDist::new(1.5, 2.0);
+        assert!((g.cdf(1.5) - 0.5).abs() < 1e-14);
+        assert!((g.quantile(0.5) - 1.5).abs() < 1e-12);
+        // quantile(cdf(x)) == x
+        for &x in &[-3.0, -1.0, 0.0, 2.0, 5.0] {
+            assert!((g.quantile(g.cdf(x)) - x).abs() < 1e-9, "x = {x}");
+        }
+        // pdf integrates cdf: finite-difference check
+        let h = 1e-6;
+        let x = 0.7;
+        let fd = (g.cdf(x + h) - g.cdf(x - h)) / (2.0 * h);
+        assert!((fd - g.pdf(x)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn mixture_single_component_reduces_to_gaussian() {
+        let g = GaussianDist::new(-0.5, 0.7);
+        let m = GaussianMixture::new(vec![g], vec![1.0]);
+        for &u in &[0.01, 0.3, 0.5, 0.9, 0.999] {
+            assert!(
+                (m.quantile(u) - g.quantile(u)).abs() < 1e-9,
+                "u = {u}"
+            );
+        }
+    }
+
+    #[test]
+    fn mixture_quantile_inverts_cdf() {
+        let m = GaussianMixture::new(
+            vec![GaussianDist::new(-2.0, 0.5), GaussianDist::new(3.0, 1.0)],
+            vec![0.3, 0.7],
+        );
+        for &u in &[0.001, 0.1, 0.29, 0.31, 0.5, 0.8, 0.99] {
+            let x = m.quantile(u);
+            assert!((m.cdf(x) - u).abs() < 1e-9, "u = {u}, x = {x}");
+        }
+    }
+
+    #[test]
+    fn mixture_weight_normalization() {
+        let m = GaussianMixture::new(
+            vec![GaussianDist::new(0.0, 1.0), GaussianDist::new(1.0, 1.0)],
+            vec![2.0, 2.0],
+        );
+        assert!((m.mean() - 0.5).abs() < 1e-12);
+        assert!((m.cdf(f64::INFINITY) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixture_bimodal_pdf_shape() {
+        let m = GaussianMixture::new(
+            vec![GaussianDist::new(-3.0, 0.5), GaussianDist::new(3.0, 0.5)],
+            vec![0.5, 0.5],
+        );
+        assert!(m.pdf(-3.0) > m.pdf(0.0));
+        assert!(m.pdf(3.0) > m.pdf(0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn gaussian_rejects_nonpositive_sigma() {
+        let _ = GaussianDist::new(0.0, 0.0);
+    }
+}

@@ -1,0 +1,100 @@
+//! A small "function DSL": the objects that live in `L^p_μ(Ω)` and get
+//! embedded and hashed.
+//!
+//! Everything implements [`Function1D`] — a real function on an interval
+//! that can be evaluated pointwise. That is the *only* capability the
+//! paper's two embedding methods need:
+//!
+//! * the Monte Carlo embedding (§3.2) samples `f` at `N` points;
+//! * the Chebyshev embedding (§3.1) samples `f` at `N` Chebyshev nodes and
+//!   applies a DCT.
+//!
+//! Provided families:
+//! * [`Sine`] — the paper's Figure 1–2 workload `sin(2πx + δ)`.
+//! * [`Polynomial`], [`Piecewise`], [`Sampled`] — generic test corpora.
+//! * [`GaussianDist`] / [`GaussianMixture`] — distributions with pdf / cdf /
+//!   quantile function for the Wasserstein experiments (Figure 3).
+//! * combinators (scale / shift / sum / pointwise closure).
+
+pub mod analytic;
+pub mod density;
+pub mod gaussian;
+pub mod sampled;
+pub mod spline;
+
+pub use analytic::{Closure, Piecewise, Polynomial, Scaled, Shifted, Sine, Sum};
+pub use gaussian::{GaussianDist, GaussianMixture};
+pub use density::{Histogram, Kde};
+pub use sampled::Sampled;
+pub use spline::CubicSpline;
+
+/// A real-valued function of one real variable, evaluable pointwise.
+///
+/// Object-safe: corpora are stored as `Vec<Box<dyn Function1D>>` in the
+/// coordinator and the search engines.
+pub trait Function1D: Send + Sync {
+    /// Evaluate the function at `x`.
+    fn eval(&self, x: f64) -> f64;
+
+    /// Evaluate at many points (overridable for batched representations).
+    fn eval_many(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.eval(x)).collect()
+    }
+}
+
+impl<F: Fn(f64) -> f64 + Send + Sync> Function1D for F {
+    fn eval(&self, x: f64) -> f64 {
+        self(x)
+    }
+}
+
+/// A probability distribution on ℝ exposing the three views the paper's
+/// Wasserstein pipeline needs: density, CDF, and quantile function
+/// (inverse CDF — the object actually hashed via Eq. 3).
+pub trait Distribution1D: Send + Sync {
+    /// Probability density `f(x)`.
+    fn pdf(&self, x: f64) -> f64;
+    /// Cumulative distribution `F(x)`.
+    fn cdf(&self, x: f64) -> f64;
+    /// Quantile function `F⁻¹(u)`, `u ∈ (0, 1)`.
+    fn quantile(&self, u: f64) -> f64;
+
+    /// The quantile function as a hashable [`Function1D`] on `(0,1)`.
+    fn quantile_fn(&self) -> QuantileFn<'_, Self>
+    where
+        Self: Sized,
+    {
+        QuantileFn { dist: self }
+    }
+}
+
+/// Adapter exposing a distribution's quantile function `F⁻¹` as a
+/// [`Function1D`] on `(0, 1)` — what Remark 1 of the paper hashes.
+pub struct QuantileFn<'a, D: Distribution1D> {
+    dist: &'a D,
+}
+
+impl<D: Distribution1D> Function1D for QuantileFn<'_, D> {
+    fn eval(&self, x: f64) -> f64 {
+        self.dist.quantile(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closures_are_functions() {
+        let f = |x: f64| x * x;
+        assert_eq!(f.eval(3.0), 9.0);
+        assert_eq!(f.eval_many(&[1.0, 2.0]), vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn quantile_fn_adapter() {
+        let g = GaussianDist::new(0.0, 1.0);
+        let q = g.quantile_fn();
+        assert!(q.eval(0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,154 @@
+//! Empirical (sample-based) functions and distributions.
+//!
+//! The paper (§2.2) stresses that in practice one often has only *samples*
+//! of the random variables `X_f`, `X_g`, not closed forms — and that the
+//! natural estimator models `F⁻¹` as a step function. [`Sampled`] is that
+//! object: an empirical quantile function built from raw samples, directly
+//! hashable by either embedding.
+
+use super::{Distribution1D, Function1D};
+
+/// An empirical distribution built from raw samples of a random variable.
+///
+/// * `cdf` is the right-continuous ECDF;
+/// * `quantile` is the left-continuous generalized inverse (type-1), with
+///   an optional linearly-interpolated variant used by the embeddings to
+///   reduce step-function artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sampled {
+    sorted: Vec<f64>,
+    interpolate: bool,
+}
+
+impl Sampled {
+    /// Build from samples (need not be sorted). Non-finite samples are
+    /// rejected.
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        assert!(samples.iter().all(|x| x.is_finite()));
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self {
+            sorted: samples,
+            interpolate: true,
+        }
+    }
+
+    /// Use the pure step-function quantile (no interpolation) — the
+    /// estimator the paper calls "model F⁻¹ and G⁻¹ as step functions".
+    pub fn step(mut self) -> Self {
+        self.interpolate = false;
+        self
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Whether the sample set is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// The sorted samples.
+    pub fn samples(&self) -> &[f64] {
+        &self.sorted
+    }
+}
+
+impl Distribution1D for Sampled {
+    fn pdf(&self, _x: f64) -> f64 {
+        // The ECDF has no density; return 0. (Histogram/KDE estimators can
+        // wrap `Sampled` if a density is required.)
+        0.0
+    }
+
+    fn cdf(&self, x: f64) -> f64 {
+        // count of samples <= x, via partition point
+        let k = self.sorted.partition_point(|&s| s <= x);
+        k as f64 / self.sorted.len() as f64
+    }
+
+    fn quantile(&self, u: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&u));
+        let n = self.sorted.len();
+        if !self.interpolate {
+            // type-1: inf { x : F(x) >= u }
+            if u == 0.0 {
+                return self.sorted[0];
+            }
+            let k = (u * n as f64).ceil() as usize;
+            return self.sorted[k.clamp(1, n) - 1];
+        }
+        // type-7 linear interpolation (numpy default)
+        if n == 1 {
+            return self.sorted[0];
+        }
+        let pos = u * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+    }
+}
+
+impl Function1D for Sampled {
+    /// A `Sampled` used directly as a function is its quantile function —
+    /// the object Eq. 3 hashes.
+    fn eval(&self, x: f64) -> f64 {
+        self.quantile(x.clamp(0.0, 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng64, Xoshiro256pp};
+    use crate::util::special::normal_quantile;
+
+    #[test]
+    fn ecdf_counts() {
+        let s = Sampled::from_samples(vec![3.0, 1.0, 2.0, 2.0]);
+        assert_eq!(s.cdf(0.5), 0.0);
+        assert_eq!(s.cdf(1.0), 0.25);
+        assert_eq!(s.cdf(2.0), 0.75);
+        assert_eq!(s.cdf(10.0), 1.0);
+    }
+
+    #[test]
+    fn step_quantile_matches_order_statistics() {
+        let s = Sampled::from_samples(vec![10.0, 20.0, 30.0, 40.0]).step();
+        assert_eq!(s.quantile(0.0), 10.0);
+        assert_eq!(s.quantile(0.25), 10.0);
+        assert_eq!(s.quantile(0.26), 20.0);
+        assert_eq!(s.quantile(1.0), 40.0);
+    }
+
+    #[test]
+    fn interpolated_quantile_midpoint() {
+        let s = Sampled::from_samples(vec![0.0, 1.0]);
+        assert!((s.quantile(0.5) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn quantile_converges_to_true_quantile() {
+        // Sample a standard normal; the empirical quantile at u = 0.3 must
+        // approach Phi^{-1}(0.3).
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let samples: Vec<f64> = (0..50_000).map(|_| rng.normal()).collect();
+        let s = Sampled::from_samples(samples);
+        let want = normal_quantile(0.3);
+        assert!(
+            (s.quantile(0.3) - want).abs() < 0.03,
+            "{} vs {want}",
+            s.quantile(0.3)
+        );
+    }
+
+    #[test]
+    fn eval_clamps_domain() {
+        let s = Sampled::from_samples(vec![5.0, 6.0]);
+        assert_eq!(s.eval(-1.0), 5.0);
+        assert_eq!(s.eval(2.0), 6.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Natural cubic spline interpolation — a smooth empirical-function
+//! representation (one step up from [`super::Piecewise`]): clients that
+//! only have samples of `f` can wrap them in a spline before embedding,
+//! which restores the fast coefficient decay the §3.1 basis methods want.
+
+use super::Function1D;
+
+/// A natural cubic spline through `(x_i, y_i)` knots (second derivative
+/// zero at both ends), constant-extrapolated outside the knot range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CubicSpline {
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+    /// second derivatives at the knots (the classic `m` vector)
+    m: Vec<f64>,
+}
+
+impl CubicSpline {
+    /// Fit a natural cubic spline; `xs` must be strictly increasing and
+    /// have at least 2 points.
+    pub fn fit(xs: Vec<f64>, ys: Vec<f64>) -> Self {
+        assert_eq!(xs.len(), ys.len());
+        let n = xs.len();
+        assert!(n >= 2);
+        assert!(xs.windows(2).all(|w| w[0] < w[1]), "knots must increase");
+        // Solve the tridiagonal system for second derivatives (Thomas
+        // algorithm); natural boundary: m_0 = m_{n-1} = 0.
+        let mut m = vec![0.0; n];
+        if n > 2 {
+            let mut a = vec![0.0; n]; // sub-diagonal
+            let mut b = vec![0.0; n]; // diagonal
+            let mut c = vec![0.0; n]; // super-diagonal
+            let mut d = vec![0.0; n]; // rhs
+            for i in 1..n - 1 {
+                let h0 = xs[i] - xs[i - 1];
+                let h1 = xs[i + 1] - xs[i];
+                a[i] = h0;
+                b[i] = 2.0 * (h0 + h1);
+                c[i] = h1;
+                d[i] = 6.0 * ((ys[i + 1] - ys[i]) / h1 - (ys[i] - ys[i - 1]) / h0);
+            }
+            // forward sweep on interior rows 1..n-1
+            for i in 2..n - 1 {
+                let w = a[i] / b[i - 1];
+                b[i] -= w * c[i - 1];
+                d[i] -= w * d[i - 1];
+            }
+            // back substitution
+            m[n - 2] = d[n - 2] / b[n - 2];
+            for i in (1..n - 2).rev() {
+                m[i] = (d[i] - c[i] * m[i + 1]) / b[i];
+            }
+        }
+        Self { xs, ys, m }
+    }
+
+    /// Number of knots.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Whether the spline has no knots (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+impl Function1D for CubicSpline {
+    fn eval(&self, x: f64) -> f64 {
+        let n = self.xs.len();
+        if x <= self.xs[0] {
+            return self.ys[0];
+        }
+        if x >= self.xs[n - 1] {
+            return self.ys[n - 1];
+        }
+        let i = match self
+            .xs
+            .binary_search_by(|v| v.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => return self.ys[i],
+            Err(i) => i, // xs[i-1] < x < xs[i]
+        };
+        let h = self.xs[i] - self.xs[i - 1];
+        let t0 = self.xs[i] - x;
+        let t1 = x - self.xs[i - 1];
+        (self.m[i - 1] * t0 * t0 * t0 + self.m[i] * t1 * t1 * t1) / (6.0 * h)
+            + (self.ys[i - 1] / h - self.m[i - 1] * h / 6.0) * t0
+            + (self.ys[i] / h - self.m[i] * h / 6.0) * t1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn interpolates_knots_exactly() {
+        let xs = vec![0.0, 1.0, 2.5, 4.0];
+        let ys = vec![1.0, -1.0, 0.5, 2.0];
+        let s = CubicSpline::fit(xs.clone(), ys.clone());
+        for (x, y) in xs.iter().zip(&ys) {
+            assert!((s.eval(*x) - y).abs() < 1e-12, "knot {x}");
+        }
+    }
+
+    #[test]
+    fn linear_data_gives_linear_spline() {
+        let xs: Vec<f64> = (0..6).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 1.0).collect();
+        let s = CubicSpline::fit(xs, ys);
+        for i in 0..50 {
+            let x = 5.0 * i as f64 / 49.0;
+            assert!((s.eval(x) - (3.0 * x + 1.0)).abs() < 1e-10, "x = {x}");
+        }
+    }
+
+    #[test]
+    fn approximates_smooth_functions() {
+        // 20 knots of sin(2πx): spline error O(h⁴) ≈ 4e-3
+        let n = 20;
+        let xs: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (2.0 * PI * x).sin()).collect();
+        let s = CubicSpline::fit(xs, ys);
+        let mut max_err = 0.0f64;
+        for i in 0..200 {
+            let x = i as f64 / 199.0;
+            max_err = max_err.max((s.eval(x) - (2.0 * PI * x).sin()).abs());
+        }
+        assert!(max_err < 5e-3, "max err {max_err}");
+    }
+
+    #[test]
+    fn two_point_spline_is_linear() {
+        let s = CubicSpline::fit(vec![0.0, 2.0], vec![1.0, 5.0]);
+        assert!((s.eval(1.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_extrapolation() {
+        let s = CubicSpline::fit(vec![0.0, 1.0, 2.0], vec![1.0, 4.0, 9.0]);
+        assert_eq!(s.eval(-5.0), 1.0);
+        assert_eq!(s.eval(99.0), 9.0);
+    }
+
+    #[test]
+    fn spline_embeds_like_the_function_it_interpolates() {
+        // Embedding the spline of sampled sin data ≈ embedding the sine:
+        // the client-side "samples -> spline -> embed" path is sound.
+        use crate::embedding::{l2_dist, ChebyshevEmbedder, Embedder, Interval};
+        use crate::functions::Sine;
+        let f = Sine::paper(0.8);
+        let n = 40;
+        let xs: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| {
+            use crate::functions::Function1D;
+            f.eval(x)
+        }).collect();
+        let s = CubicSpline::fit(xs, ys);
+        let emb = ChebyshevEmbedder::new(Interval::unit(), 64);
+        let d = l2_dist(&emb.embed_fn(&f), &emb.embed_fn(&s));
+        assert!(d < 5e-3, "embedding distance {d}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Asymmetric LSH for Maximum Inner Product Search (MIPS) — the extension
+//! the paper's conclusion singles out (Shrivastava & Li 2014; 2015), plus
+//! the KL-divergence-as-MIPS reduction sketched there.
+//!
+//! MIPS is not directly LSH-able (inner product violates the triangle-ish
+//! requirements), but becomes so after *asymmetric* preprocessing:
+//!
+//! * **L2-ALSH** (2014): scale data to norm ≤ U < 1, append the norm powers
+//!   `‖x‖², ‖x‖⁴, …, ‖x‖^{2^m}` to data points and constants ½ to queries;
+//!   then argmax⟨q,x⟩ = argmin‖Q(q) − P(x)‖₂ up to vanishing error, so the
+//!   2-stable hash applies.
+//! * **Sign-ALSH** (2015, improved): same idea with SimHash on
+//!   `P(x) = [x; ½ − ‖x‖²; …]`, `Q(q) = [q; ½; …]`.
+
+use super::{HashBank, PStableHashBank, SimHashBank};
+use crate::util::rng::Rng64;
+
+/// The asymmetric transform pair of L2-ALSH (Shrivastava & Li 2014).
+#[derive(Debug, Clone)]
+pub struct L2Alsh {
+    /// number of norm-augmentation terms `m`
+    pub m: usize,
+    /// scaling bound `U < 1`
+    pub u: f64,
+    /// max data norm observed at build time (data are scaled by `u / max`)
+    scale: f64,
+    bank: PStableHashBank,
+    dim: usize,
+}
+
+impl L2Alsh {
+    /// Build an L2-ALSH over data dimension `dim` with `k` hashes.
+    ///
+    /// `max_norm` is the largest ‖x‖₂ in the dataset (used to scale all
+    /// data into the U-ball). Standard parameters `m = 3`, `u = 0.83`,
+    /// `r = 2.5` follow the paper's recommendation.
+    pub fn new(dim: usize, k: usize, max_norm: f64, rng: &mut dyn Rng64) -> Self {
+        let m = 3;
+        let u = 0.83;
+        assert!(max_norm > 0.0);
+        let bank = PStableHashBank::new(dim + m, k, 2.0, 2.5, rng);
+        Self {
+            m,
+            u,
+            scale: u / max_norm,
+            bank,
+            dim,
+        }
+    }
+
+    /// Preprocess a *data* point: `P(x) = [Sx; ‖Sx‖²; …; ‖Sx‖^{2^m}]`.
+    pub fn preprocess_data(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.dim);
+        let mut out: Vec<f64> = x.iter().map(|v| v * self.scale).collect();
+        let mut norm_sq: f64 = out.iter().map(|v| v * v).sum();
+        for _ in 0..self.m {
+            out.push(norm_sq);
+            norm_sq = norm_sq * norm_sq;
+        }
+        out
+    }
+
+    /// Preprocess a *query* point: `Q(q) = [q/‖q‖; ½; …; ½]`.
+    pub fn preprocess_query(&self, q: &[f64]) -> Vec<f64> {
+        assert_eq!(q.len(), self.dim);
+        let norm: f64 = q.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let inv = if norm > 0.0 { 1.0 / norm } else { 0.0 };
+        let mut out: Vec<f64> = q.iter().map(|v| v * inv).collect();
+        out.extend(std::iter::repeat_n(0.5, self.m));
+        out
+    }
+
+    /// Hash a preprocessed vector.
+    pub fn hash(&self, augmented: &[f64]) -> Vec<i32> {
+        self.bank.hash(augmented)
+    }
+
+    /// Convenience: hash a raw data point.
+    pub fn hash_data(&self, x: &[f64]) -> Vec<i32> {
+        self.hash(&self.preprocess_data(x))
+    }
+
+    /// Convenience: hash a raw query point.
+    pub fn hash_query(&self, q: &[f64]) -> Vec<i32> {
+        self.hash(&self.preprocess_query(q))
+    }
+}
+
+/// Sign-ALSH (Shrivastava & Li 2015): the improved MIPS hash using SimHash
+/// over `P(x) = [Sx; ½ − ‖Sx‖²; …]`, `Q(q) = [q̂; 0; …]`.
+#[derive(Debug, Clone)]
+pub struct SignAlsh {
+    /// number of augmentation terms `m`
+    pub m: usize,
+    /// scaling bound `U`
+    pub u: f64,
+    scale: f64,
+    bank: SimHashBank,
+    dim: usize,
+}
+
+impl SignAlsh {
+    /// Build a Sign-ALSH over data dimension `dim` with `k` sign hashes.
+    /// Recommended parameters `m = 2`, `U = 0.75` (2015 paper).
+    pub fn new(dim: usize, k: usize, max_norm: f64, rng: &mut dyn Rng64) -> Self {
+        let m = 2;
+        let u = 0.75;
+        assert!(max_norm > 0.0);
+        let bank = SimHashBank::new(dim + m, k, rng);
+        Self {
+            m,
+            u,
+            scale: u / max_norm,
+            bank,
+            dim,
+        }
+    }
+
+    /// `P(x) = [Sx; ½ − ‖Sx‖²; ½ − ‖Sx‖⁴; …]`.
+    pub fn preprocess_data(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.dim);
+        let mut out: Vec<f64> = x.iter().map(|v| v * self.scale).collect();
+        let mut norm_sq: f64 = out.iter().map(|v| v * v).sum();
+        for _ in 0..self.m {
+            out.push(0.5 - norm_sq);
+            norm_sq = norm_sq * norm_sq;
+        }
+        out
+    }
+
+    /// `Q(q) = [q̂; 0; …; 0]`.
+    pub fn preprocess_query(&self, q: &[f64]) -> Vec<f64> {
+        assert_eq!(q.len(), self.dim);
+        let norm: f64 = q.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let inv = if norm > 0.0 { 1.0 / norm } else { 0.0 };
+        let mut out: Vec<f64> = q.iter().map(|v| v * inv).collect();
+        out.extend(std::iter::repeat_n(0.0, self.m));
+        out
+    }
+
+    /// Hash a raw data point.
+    pub fn hash_data(&self, x: &[f64]) -> Vec<i32> {
+        self.bank.hash(&self.preprocess_data(x))
+    }
+
+    /// Hash a raw query point.
+    pub fn hash_query(&self, q: &[f64]) -> Vec<i32> {
+        self.bank.hash(&self.preprocess_query(q))
+    }
+}
+
+/// The KL-divergence → MIPS reduction from the paper's conclusion:
+///
+/// `D_KL(p ‖ q) ∝ 1 − ⟨p, log q⟩ / ⟨p, log p⟩` for fixed `p`, so finding
+/// the `q` minimizing KL divergence from a query `p` is a maximum inner
+/// product search between the embedded density `p` and embedded
+/// log-densities `log q`. Given vectors of density samples on a shared
+/// grid, this helper produces the MIPS pair.
+pub fn kl_as_mips(p_samples: &[f64], log_q_samples: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(p_samples.len(), log_q_samples.len());
+    (p_samples.to_vec(), log_q_samples.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Empirical collision rate between a query and a data point.
+    fn collision_rate(hq: &[i32], hd: &[i32]) -> f64 {
+        hq.iter().zip(hd).filter(|(a, b)| a == b).count() as f64 / hq.len() as f64
+    }
+
+    #[test]
+    fn l2_alsh_prefers_larger_inner_product() {
+        // Data points with equal direction but different norms: the one
+        // with the larger inner product with q must collide more often.
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let dim = 8;
+        let alsh = L2Alsh::new(dim, 20_000, 2.0, &mut rng);
+        let q: Vec<f64> = (0..dim).map(|i| if i == 0 { 1.0 } else { 0.0 }).collect();
+        let big: Vec<f64> = (0..dim).map(|i| if i == 0 { 2.0 } else { 0.0 }).collect();
+        let small: Vec<f64> = (0..dim).map(|i| if i == 0 { 0.4 } else { 0.0 }).collect();
+        let hq = alsh.hash_query(&q);
+        let r_big = collision_rate(&hq, &alsh.hash_data(&big));
+        let r_small = collision_rate(&hq, &alsh.hash_data(&small));
+        assert!(
+            r_big > r_small + 0.02,
+            "big ip rate {r_big} vs small ip rate {r_small}"
+        );
+    }
+
+    #[test]
+    fn sign_alsh_prefers_larger_inner_product() {
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let dim = 8;
+        let alsh = SignAlsh::new(dim, 20_000, 2.0, &mut rng);
+        let q: Vec<f64> = (0..dim).map(|i| if i == 0 { 1.0 } else { 0.0 }).collect();
+        let big: Vec<f64> = (0..dim).map(|i| if i == 0 { 2.0 } else { 0.0 }).collect();
+        let neg: Vec<f64> = (0..dim).map(|i| if i == 0 { -2.0 } else { 0.0 }).collect();
+        let hq = alsh.hash_query(&q);
+        let r_big = collision_rate(&hq, &alsh.hash_data(&big));
+        let r_neg = collision_rate(&hq, &alsh.hash_data(&neg));
+        assert!(r_big > r_neg + 0.2, "aligned {r_big} vs opposed {r_neg}");
+    }
+
+    #[test]
+    fn preprocess_shapes() {
+        let mut rng = Xoshiro256pp::seed_from_u64(25);
+        let alsh = L2Alsh::new(4, 8, 1.0, &mut rng);
+        assert_eq!(alsh.preprocess_data(&[1.0, 0.0, 0.0, 0.0]).len(), 7);
+        assert_eq!(alsh.preprocess_query(&[1.0, 0.0, 0.0, 0.0]).len(), 7);
+        let s = SignAlsh::new(4, 8, 1.0, &mut rng);
+        assert_eq!(s.preprocess_data(&[1.0, 0.0, 0.0, 0.0]).len(), 6);
+    }
+
+    #[test]
+    fn data_scaled_into_u_ball() {
+        let mut rng = Xoshiro256pp::seed_from_u64(27);
+        let alsh = L2Alsh::new(2, 4, 10.0, &mut rng);
+        let p = alsh.preprocess_data(&[10.0, 0.0]);
+        let norm_sq: f64 = p[..2].iter().map(|v| v * v).sum();
+        assert!((norm_sq.sqrt() - 0.83).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_mips_pair_shapes() {
+        let (a, b) = kl_as_mips(&[0.1, 0.9], &[-2.3, -0.1]);
+        assert_eq!(a.len(), b.len());
+    }
+}

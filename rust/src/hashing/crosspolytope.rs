@@ -1,0 +1,238 @@
+//! Cross-polytope LSH (Andoni, Indyk, Laarhoven, Razenshteyn, Schmidt —
+//! NeurIPS 2015): the asymptotically optimal angular-distance hash, a
+//! drop-in upgrade over SimHash for the paper's cosine-similarity
+//! pipeline (each hash yields one of `2N` buckets instead of 2, so far
+//! fewer hashes are needed per table).
+//!
+//! `h(x) = argmax_i |(Rx)_i|` with the sign of that coordinate, where `R`
+//! is a pseudo-random rotation implemented as three rounds of
+//! `H · D_r` (fast Hadamard transform × random ±1 diagonal) — `O(N log N)`
+//! per hash instead of the `O(N²)` dense rotation.
+
+use crate::util::rng::Rng64;
+
+/// One cross-polytope hash: a keyed pseudo-rotation + argmax bucket.
+#[derive(Debug, Clone)]
+pub struct CrossPolytopeHash {
+    /// three ±1 diagonals (one per HD round)
+    diagonals: [Vec<f64>; 3],
+    /// padded (power-of-two) dimension
+    dim_padded: usize,
+    /// input dimension
+    dim: usize,
+}
+
+impl CrossPolytopeHash {
+    /// A hash over input dimension `dim` (internally padded to the next
+    /// power of two for the Hadamard transform).
+    pub fn new(dim: usize, rng: &mut dyn Rng64) -> Self {
+        assert!(dim > 0);
+        let dim_padded = dim.next_power_of_two();
+        let make_diag = |rng: &mut dyn Rng64| -> Vec<f64> {
+            (0..dim_padded)
+                .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+                .collect()
+        };
+        let diagonals = [make_diag(rng), make_diag(rng), make_diag(rng)];
+        Self {
+            diagonals,
+            dim_padded,
+            dim,
+        }
+    }
+
+    /// Apply the pseudo-rotation `H D₃ H D₂ H D₁` to `x` into `buf`
+    /// (zero-padded). Buffer is caller-provided so banks can hash without
+    /// per-call allocation (measured neutral at dim 64 — the FWHT
+    /// butterflies dominate — but it keeps the hot loop allocation-free
+    /// for larger dims; see EXPERIMENTS.md §Perf).
+    fn rotate_into(&self, x: &[f64], buf: &mut Vec<f64>) {
+        buf.clear();
+        buf.resize(self.dim_padded, 0.0);
+        buf[..x.len()].copy_from_slice(x);
+        for d in &self.diagonals {
+            for (vi, di) in buf.iter_mut().zip(d) {
+                *vi *= di;
+            }
+            fwht(buf);
+        }
+    }
+
+    /// Bucket id in `0..2·dim_padded`: `2i` for the max coordinate `i`
+    /// when positive, `2i + 1` when negative.
+    pub fn hash_one(&self, x: &[f64]) -> i32 {
+        let mut buf = Vec::new();
+        self.hash_one_with(x, &mut buf)
+    }
+
+    /// Allocation-free variant of [`CrossPolytopeHash::hash_one`].
+    pub fn hash_one_with(&self, x: &[f64], buf: &mut Vec<f64>) -> i32 {
+        assert_eq!(x.len(), self.dim);
+        self.rotate_into(x, buf);
+        let v: &[f64] = buf;
+        let mut best = 0usize;
+        let mut best_abs = f64::NEG_INFINITY;
+        for (i, &vi) in v.iter().enumerate() {
+            if vi.abs() > best_abs {
+                best_abs = vi.abs();
+                best = i;
+            }
+        }
+        (2 * best) as i32 + if v[best] < 0.0 { 1 } else { 0 }
+    }
+}
+
+/// In-place fast Walsh–Hadamard transform, normalized by `1/√n` so the
+/// rotation is an isometry. `v.len()` must be a power of two.
+pub fn fwht(v: &mut [f64]) {
+    let n = v.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        for start in (0..n).step_by(h * 2) {
+            for i in start..start + h {
+                let (a, b) = (v[i], v[i + h]);
+                v[i] = a + b;
+                v[i + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f64).sqrt();
+    for vi in v.iter_mut() {
+        *vi *= scale;
+    }
+}
+
+/// A bank of independent cross-polytope hashes, matching the
+/// [`super::HashBank`] interface.
+#[derive(Debug, Clone)]
+pub struct CrossPolytopeBank {
+    hashes: Vec<CrossPolytopeHash>,
+    dim: usize,
+}
+
+impl CrossPolytopeBank {
+    /// A bank of `k` independent hashes over dimension `dim`.
+    pub fn new(dim: usize, k: usize, rng: &mut dyn Rng64) -> Self {
+        let hashes = (0..k).map(|_| CrossPolytopeHash::new(dim, rng)).collect();
+        Self { hashes, dim }
+    }
+}
+
+impl super::HashBank for CrossPolytopeBank {
+    fn num_hashes(&self) -> usize {
+        self.hashes.len()
+    }
+
+    fn input_dim(&self) -> Option<usize> {
+        Some(self.dim)
+    }
+
+    fn hash(&self, v: &[f64]) -> Vec<i32> {
+        let mut buf = Vec::new();
+        self.hashes
+            .iter()
+            .map(|h| h.hash_one_with(v, &mut buf))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::HashBank;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn fwht_is_isometry() {
+        let mut v = vec![1.0, -2.0, 3.0, 0.5, 0.0, 1.5, -1.0, 2.0];
+        let before: f64 = v.iter().map(|x| x * x).sum();
+        fwht(&mut v);
+        let after: f64 = v.iter().map(|x| x * x).sum();
+        assert!((before - after).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fwht_matches_hadamard_matrix_2x2() {
+        let mut v = vec![3.0, 1.0];
+        fwht(&mut v);
+        let s = 1.0 / 2.0f64.sqrt();
+        assert!((v[0] - 4.0 * s).abs() < 1e-12);
+        assert!((v[1] - 2.0 * s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_invariance_and_determinism() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let h = CrossPolytopeHash::new(10, &mut rng);
+        let x: Vec<f64> = (0..10).map(|i| (i as f64).sin()).collect();
+        assert_eq!(h.hash_one(&x), h.hash_one(&x));
+        let scaled: Vec<f64> = x.iter().map(|v| v * 7.0).collect();
+        assert_eq!(h.hash_one(&x), h.hash_one(&scaled));
+    }
+
+    #[test]
+    fn antipodal_points_never_collide() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let bank = CrossPolytopeBank::new(8, 64, &mut rng);
+        let x: Vec<f64> = (0..8).map(|i| (i as f64 * 0.7).cos()).collect();
+        let neg: Vec<f64> = x.iter().map(|v| -v).collect();
+        let hx = bank.hash(&x);
+        let hn = bank.hash(&neg);
+        // -x flips the argmax sign bit: zero collisions
+        assert!(hx.iter().zip(&hn).all(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn collision_rate_monotone_in_angle() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let dim = 16;
+        let bank = CrossPolytopeBank::new(dim, 4000, &mut rng);
+        let x: Vec<f64> = (0..dim).map(|i| if i == 0 { 1.0 } else { 0.0 }).collect();
+        let rate = |cos_theta: f64| {
+            let sin = (1.0 - cos_theta * cos_theta).sqrt();
+            let mut y = vec![0.0; dim];
+            y[0] = cos_theta;
+            y[1] = sin;
+            let hx = bank.hash(&x);
+            let hy = bank.hash(&y);
+            hx.iter().zip(&hy).filter(|(a, b)| a == b).count() as f64 / hx.len() as f64
+        };
+        let r_close = rate(0.95);
+        let r_mid = rate(0.6);
+        let r_far = rate(0.0);
+        assert!(
+            r_close > r_mid && r_mid > r_far,
+            "{r_close} > {r_mid} > {r_far} violated"
+        );
+    }
+
+    #[test]
+    fn more_selective_than_simhash_at_same_k() {
+        // At 90° (cossim 0) SimHash collides half the time; cross-polytope
+        // collides far less (1/(2N)-ish) — the selectivity win.
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let dim = 16;
+        let bank = CrossPolytopeBank::new(dim, 4000, &mut rng);
+        let x: Vec<f64> = (0..dim).map(|i| if i == 0 { 1.0 } else { 0.0 }).collect();
+        let mut y = vec![0.0; dim];
+        y[1] = 1.0;
+        let hx = bank.hash(&x);
+        let hy = bank.hash(&y);
+        let rate =
+            hx.iter().zip(&hy).filter(|(a, b)| a == b).count() as f64 / hx.len() as f64;
+        assert!(rate < 0.15, "orthogonal collision rate {rate} (simhash would be 0.5)");
+    }
+
+    #[test]
+    fn bucket_ids_in_range() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let dim = 10; // pads to 16
+        let bank = CrossPolytopeBank::new(dim, 100, &mut rng);
+        let x: Vec<f64> = (0..dim).map(|i| (i as f64 * 1.3).sin()).collect();
+        for b in bank.hash(&x) {
+            assert!((0..32).contains(&b), "bucket {b}");
+        }
+    }
+}

@@ -1,0 +1,442 @@
+//! LSH families on `ℝ^N` — the hash functions the embeddings feed.
+//!
+//! * [`PStableHashBank`] — the `ℓ^p`-distance hash of Datar et al. (2004)
+//!   for any `p ∈ (0, 2]`: `h(x) = ⌊(α·x)/r + b⌋` with `α` i.i.d. p-stable.
+//! * [`SimHashBank`] — Charikar's (2002) sign-random-projection hash for
+//!   cosine similarity.
+//! * [`LazyL2Hash`] — Algorithm 1 of the paper: the 2-stable hash with a
+//!   *virtually infinite* coefficient vector. Coefficients `α_i` are drawn
+//!   from a keyed counter-based stream, so inputs of any dimension `N_f`
+//!   hash consistently without storing or bounding `α` (the paper's lazy
+//!   extension), and coefficient `i` is identical no matter which input
+//!   lengths were seen before.
+//! * [`alsh`] — the asymmetric LSH constructions for maximum inner product
+//!   search (Shrivastava & Li 2014, 2015) the paper's conclusion points to,
+//!   plus the KL-divergence-as-MIPS reduction.
+
+pub mod alsh;
+pub mod crosspolytope;
+
+pub use crosspolytope::{CrossPolytopeBank, CrossPolytopeHash};
+
+use crate::util::rng::{Rng64, SplitMix64};
+
+/// A bank of `K` hash functions mapping `ℝ^N → ℤ^K`.
+///
+/// Banks are the unit the LSH index consumes: `K = k·L` hashes are split
+/// into `L` tables of `k` concatenated hashes each.
+pub trait HashBank: Send + Sync {
+    /// Number of hash functions in the bank.
+    fn num_hashes(&self) -> usize;
+
+    /// Input dimensionality (`None` if the bank accepts any length, like
+    /// [`LazyL2Hash`]).
+    fn input_dim(&self) -> Option<usize>;
+
+    /// Hash a vector with every function in the bank.
+    fn hash(&self, v: &[f64]) -> Vec<i32>;
+}
+
+/// A single vector hash function `ℝ^N → ℤ`.
+pub trait VectorHash: Send + Sync {
+    /// Hash one vector.
+    fn hash_one(&self, v: &[f64]) -> i32;
+}
+
+/// The p-stable `ℓ^p`-distance hash bank (Datar et al. 2004):
+/// `h_j(x) = ⌊(α_j · x) / r + b_j⌋`, `α_j` i.i.d. p-stable,
+/// `b_j ~ U[0, 1)`.
+///
+/// Collision probability decreases monotonically in `‖x − y‖_p`; see
+/// [`crate::theory::pstable_collision_probability`].
+#[derive(Debug, Clone)]
+pub struct PStableHashBank {
+    /// projection matrix, row-major `[K][N]`
+    proj: Vec<f64>,
+    /// offsets `b_j ∈ [0, 1)` (pre-scaled convention: the hash computes
+    /// `⌊ proj·x / r + b ⌋` with `b` in *bucket* units)
+    offsets: Vec<f64>,
+    dim: usize,
+    k: usize,
+    r: f64,
+    p: f64,
+}
+
+impl PStableHashBank {
+    /// A bank of `k` hashes over dimension `dim` with bucket width `r` and
+    /// stability index `p` (2 = Gaussian/L², 1 = Cauchy/L¹).
+    pub fn new(dim: usize, k: usize, p: f64, r: f64, rng: &mut dyn Rng64) -> Self {
+        assert!(dim > 0 && k > 0 && r > 0.0);
+        assert!(p > 0.0 && p <= 2.0);
+        let mut proj = Vec::with_capacity(k * dim);
+        for _ in 0..k * dim {
+            proj.push(rng.stable(p));
+        }
+        let offsets = (0..k).map(|_| rng.uniform()).collect();
+        Self {
+            proj,
+            offsets,
+            dim,
+            k,
+            r,
+            p,
+        }
+    }
+
+    /// Bucket width `r`.
+    pub fn r(&self) -> f64 {
+        self.r
+    }
+
+    /// Stability index `p`.
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    /// The projection row of hash `j` (for AOT export: the L2 pipeline
+    /// bakes this matrix into the HLO-executed computation).
+    pub fn projection_row(&self, j: usize) -> &[f64] {
+        &self.proj[j * self.dim..(j + 1) * self.dim]
+    }
+
+    /// The offsets `b_j` (bucket units).
+    pub fn offsets(&self) -> &[f64] {
+        &self.offsets
+    }
+}
+
+impl HashBank for PStableHashBank {
+    fn num_hashes(&self) -> usize {
+        self.k
+    }
+
+    fn input_dim(&self) -> Option<usize> {
+        Some(self.dim)
+    }
+
+    fn hash(&self, v: &[f64]) -> Vec<i32> {
+        assert_eq!(v.len(), self.dim, "input dimension mismatch");
+        let mut out = Vec::with_capacity(self.k);
+        for j in 0..self.k {
+            let row = &self.proj[j * self.dim..(j + 1) * self.dim];
+            let dot: f64 = row.iter().zip(v).map(|(a, x)| a * x).sum();
+            out.push((dot / self.r + self.offsets[j]).floor() as i32);
+        }
+        out
+    }
+}
+
+/// SimHash (Charikar 2002): `h_j(x) = sign(α_j · x)` with Gaussian `α_j`.
+/// Collision probability `1 − θ(x, y)/π` where `θ` is the angle between
+/// the vectors (Eq. 7 of the paper).
+#[derive(Debug, Clone)]
+pub struct SimHashBank {
+    proj: Vec<f64>,
+    dim: usize,
+    k: usize,
+}
+
+impl SimHashBank {
+    /// A bank of `k` sign hashes over dimension `dim`.
+    pub fn new(dim: usize, k: usize, rng: &mut dyn Rng64) -> Self {
+        assert!(dim > 0 && k > 0);
+        let proj = (0..k * dim).map(|_| rng.normal()).collect();
+        Self { proj, dim, k }
+    }
+
+    /// Pack the sign bits into `u64` words (bit `j % 64` of word `j / 64`),
+    /// for Hamming-style storage.
+    pub fn hash_packed(&self, v: &[f64]) -> Vec<u64> {
+        let bits = self.hash(v);
+        let mut words = vec![0u64; self.k.div_ceil(64)];
+        for (j, &b) in bits.iter().enumerate() {
+            if b == 1 {
+                words[j / 64] |= 1 << (j % 64);
+            }
+        }
+        words
+    }
+}
+
+impl HashBank for SimHashBank {
+    fn num_hashes(&self) -> usize {
+        self.k
+    }
+
+    fn input_dim(&self) -> Option<usize> {
+        Some(self.dim)
+    }
+
+    fn hash(&self, v: &[f64]) -> Vec<i32> {
+        assert_eq!(v.len(), self.dim, "input dimension mismatch");
+        let mut out = Vec::with_capacity(self.k);
+        for j in 0..self.k {
+            let row = &self.proj[j * self.dim..(j + 1) * self.dim];
+            let dot: f64 = row.iter().zip(v).map(|(a, x)| a * x).sum();
+            out.push(if dot >= 0.0 { 1 } else { 0 });
+        }
+        out
+    }
+}
+
+/// Algorithm 1 of the paper: the 2-stable hash over coefficient vectors of
+/// *unbounded, input-dependent* length `N_f`.
+///
+/// Instead of materializing `α ∈ ℝ^∞`, coefficient `α_i` of hash `j` is
+/// `Φ⁻¹`-free Gaussian generated from a counter-based keyed stream
+/// (SplitMix64 keyed by `(seed, j, i)` + polar transform on two lazily
+/// drawn uniforms). This realizes the paper's "append new randomly
+/// generated coefficients to α when we encounter a new largest value of
+/// N_f" — with the stronger property that no mutable state is needed at
+/// all, so concurrent hashers on different shards agree bit-for-bit.
+#[derive(Debug)]
+pub struct LazyL2Hash {
+    seed: u64,
+    k: usize,
+    r: f64,
+    offsets: Vec<f64>,
+    /// memoized coefficient prefixes, `cache[j][i] == alpha(j, i)`.
+    ///
+    /// The cache is *pure memoization* of the counter-based stream — the
+    /// hash output is identical with or without it — but it removes the
+    /// ln/cos/sqrt per coefficient from the hot path (measured ~29×,
+    /// EXPERIMENTS.md §Perf). RwLock: concurrent hashers share warm rows.
+    cache: std::sync::RwLock<Vec<Vec<f64>>>,
+}
+
+impl Clone for LazyL2Hash {
+    fn clone(&self) -> Self {
+        Self {
+            seed: self.seed,
+            k: self.k,
+            r: self.r,
+            offsets: self.offsets.clone(),
+            cache: std::sync::RwLock::new(self.cache.read().unwrap().clone()),
+        }
+    }
+}
+
+impl LazyL2Hash {
+    /// A bank of `k` lazy 2-stable hashes with bucket width `r`.
+    pub fn new(seed: u64, k: usize, r: f64) -> Self {
+        assert!(k > 0 && r > 0.0);
+        let mut sm = SplitMix64::new(seed ^ 0xB0FF5EED);
+        let offsets = (0..k).map(|_| sm.uniform()).collect();
+        Self {
+            seed,
+            k,
+            r,
+            offsets,
+            cache: std::sync::RwLock::new(vec![Vec::new(); k]),
+        }
+    }
+
+    /// Ensure the cached coefficient prefix of every hash covers `len`
+    /// entries ("append new randomly generated coefficients to α when we
+    /// encounter a new largest value of N_f" — Algorithm 1, memoized).
+    fn ensure_cached(&self, len: usize) {
+        {
+            let cache = self.cache.read().unwrap();
+            if cache.iter().all(|row| row.len() >= len) {
+                return;
+            }
+        }
+        let mut cache = self.cache.write().unwrap();
+        for (j, row) in cache.iter_mut().enumerate() {
+            while row.len() < len {
+                row.push(self.alpha(j, row.len()));
+            }
+        }
+    }
+
+    /// The `i`-th Gaussian coefficient of hash function `j` — pure function
+    /// of `(seed, j, i)`.
+    pub fn alpha(&self, j: usize, i: usize) -> f64 {
+        // Derive two independent uniforms from the counter stream and apply
+        // Box–Muller (always taking the cosine branch).
+        let key = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((j as u64) << 32 | i as u64);
+        let u1 = (SplitMix64::nth(key, 1) >> 11) as f64 / 9007199254740992.0;
+        let u2 = (SplitMix64::nth(key, 2) >> 11) as f64 / 9007199254740992.0;
+        let u1 = u1.max(1e-300); // avoid ln(0)
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Bucket width `r`.
+    pub fn r(&self) -> f64 {
+        self.r
+    }
+}
+
+impl HashBank for LazyL2Hash {
+    fn num_hashes(&self) -> usize {
+        self.k
+    }
+
+    fn input_dim(&self) -> Option<usize> {
+        None // any length: that is the point
+    }
+
+    fn hash(&self, v: &[f64]) -> Vec<i32> {
+        self.ensure_cached(v.len());
+        let cache = self.cache.read().unwrap();
+        let mut out = Vec::with_capacity(self.k);
+        for j in 0..self.k {
+            let dot: f64 = v.iter().zip(&cache[j]).map(|(&x, &a)| a * x).sum();
+            out.push((dot / self.r + self.offsets[j]).floor() as i32);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::theory::{pstable_collision_probability, simhash_collision_probability};
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn pstable_translation_moves_buckets() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let bank = PStableHashBank::new(4, 16, 2.0, 1.0, &mut rng);
+        let x = [0.1, 0.2, 0.3, 0.4];
+        let h1 = bank.hash(&x);
+        let h2 = bank.hash(&x); // determinism
+        assert_eq!(h1, h2);
+        let far = [10.1, -10.2, 10.3, -10.4];
+        assert_ne!(bank.hash(&far), h1);
+    }
+
+    #[test]
+    fn pstable_collision_rate_matches_theory_l2() {
+        // Empirical collision fraction across a large bank must track the
+        // closed-form probability for p = 2.
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let dim = 16;
+        let k = 20_000;
+        let r = 1.0;
+        let bank = PStableHashBank::new(dim, k, 2.0, r, &mut rng);
+        for &c in &[0.25, 0.5, 1.0, 2.0] {
+            let x = vec![0.0; dim];
+            let mut y = vec![0.0; dim];
+            y[0] = c; // ‖x − y‖₂ = c
+            let hx = bank.hash(&x);
+            let hy = bank.hash(&y);
+            let obs = hx
+                .iter()
+                .zip(&hy)
+                .filter(|(a, b)| a == b)
+                .count() as f64
+                / k as f64;
+            let want = pstable_collision_probability(c, r, 2.0);
+            assert!(
+                (obs - want).abs() < 0.015,
+                "c = {c}: observed {obs}, theory {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn pstable_collision_rate_matches_theory_l1() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let dim = 8;
+        let k = 20_000;
+        let r = 2.0;
+        let bank = PStableHashBank::new(dim, k, 1.0, r, &mut rng);
+        let x = vec![0.0; dim];
+        let mut y = vec![0.0; dim];
+        y[0] = 1.0; // ‖x − y‖₁ = 1
+        let obs = bank
+            .hash(&x)
+            .iter()
+            .zip(&bank.hash(&y))
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / k as f64;
+        let want = pstable_collision_probability(1.0, r, 1.0);
+        assert!((obs - want).abs() < 0.015, "observed {obs}, theory {want}");
+    }
+
+    #[test]
+    fn simhash_collision_rate_matches_theory() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let dim = 8;
+        let k = 20_000;
+        let bank = SimHashBank::new(dim, k, &mut rng);
+        // vectors at a known angle: cos θ = 0.6
+        let x = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let y = [0.6, 0.8, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let obs = bank
+            .hash(&x)
+            .iter()
+            .zip(&bank.hash(&y))
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / k as f64;
+        let want = simhash_collision_probability(0.6);
+        assert!((obs - want).abs() < 0.01, "observed {obs}, theory {want}");
+    }
+
+    #[test]
+    fn simhash_packed_agrees_with_bits() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let bank = SimHashBank::new(4, 100, &mut rng);
+        let v = [0.3, -0.7, 0.2, 0.9];
+        let bits = bank.hash(&v);
+        let packed = bank.hash_packed(&v);
+        for (j, &b) in bits.iter().enumerate() {
+            let bit = (packed[j / 64] >> (j % 64)) & 1;
+            assert_eq!(bit as i32, b);
+        }
+    }
+
+    #[test]
+    fn lazy_hash_prefix_consistency() {
+        // Hashing a zero-padded vector must equal hashing the short vector:
+        // the sparsity observation of Remark 2.
+        let h = LazyL2Hash::new(42, 8, 1.0);
+        let short = [0.5, -0.25, 0.125];
+        let mut padded = short.to_vec();
+        padded.extend_from_slice(&[0.0; 10]);
+        assert_eq!(h.hash(&short), h.hash(&padded));
+    }
+
+    #[test]
+    fn lazy_hash_alpha_is_gaussian() {
+        let h = LazyL2Hash::new(7, 1, 1.0);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|i| h.alpha(0, i)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn lazy_hash_matches_theory() {
+        // The lazy bank is a valid 2-stable LSH: collision rates follow Eq. 8.
+        let k = 20_000;
+        let h = LazyL2Hash::new(11, k, 1.0);
+        let x = [0.0, 0.0, 0.0, 0.0];
+        let y = [0.5, 0.0, 0.0, 0.0];
+        let obs = h
+            .hash(&x)
+            .iter()
+            .zip(&h.hash(&y))
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / k as f64;
+        let want = pstable_collision_probability(0.5, 1.0, 2.0);
+        assert!((obs - want).abs() < 0.015, "observed {obs}, theory {want}");
+    }
+
+    #[test]
+    fn lazy_hash_different_seeds_differ() {
+        let a = LazyL2Hash::new(1, 4, 1.0);
+        let b = LazyL2Hash::new(2, 4, 1.0);
+        let v = [1.0, 2.0, 3.0];
+        assert_ne!(a.hash(&v), b.hash(&v));
+    }
+}

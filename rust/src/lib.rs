@@ -1,0 +1,92 @@
+//! # funclsh — locality-sensitive hashing in function spaces
+//!
+//! A production-grade reproduction of *"Locality-sensitive hashing in
+//! function spaces"* (Shand & Becker, 2020) as a three-layer Rust + JAX +
+//! Pallas system.
+//!
+//! The paper extends LSH families on `ℝ^N` to `L^p_μ(Ω)` function spaces via
+//! two embeddings:
+//!
+//! 1. **Orthonormal-basis approximation** (§3.1, `p = 2`): truncate the
+//!    coefficient sequence of `f` in an orthonormal basis (we use Chebyshev
+//!    polynomials, extracted with a DCT) to obtain `T(f) ∈ ℓ²_N`.
+//! 2. **(Quasi-)Monte Carlo sampling** (§3.2, any `p > 0`): sample `f` at `N`
+//!    points of `Ω` and scale by `(V/N)^{1/p}` to obtain `T(f) ∈ ℓ^p_N`.
+//!
+//! Any LSH family on `ℝ^N` (the p-stable hash of Datar et al., SimHash of
+//! Charikar, ALSH of Shrivastava–Li) is then applied to `T(f)`. The headline
+//! application is hashing the 1-D `p`-Wasserstein distance through the
+//! quantile-function identity `W^p(f,g) = ‖F⁻¹ − G⁻¹‖_{L^p}` (Eq. 3).
+//!
+//! ## Layering
+//!
+//! * **L1 (Pallas, build time)** — `python/compile/kernels/`: batched DCT and
+//!   fused embed→project→floor hash kernels.
+//! * **L2 (JAX, build time)** — `python/compile/model.py`: the embed+hash
+//!   pipelines, lowered once to HLO text by `python/compile/aot.py`.
+//! * **L3 (Rust, request path)** — this crate: the [`coordinator`] serving
+//!   stack (router, dynamic batcher, LSH index shards), the [`runtime`] PJRT
+//!   executor that runs the AOT artifacts, and a complete pure-Rust
+//!   implementation of every algorithm for ground truth, baselines, and a
+//!   fallback compute path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use funclsh::prelude::*;
+//!
+//! // Two functions on Ω = [0,1].
+//! let f = Sine::new(1.0, 2.0 * std::f64::consts::PI, 0.3);
+//! let g = Sine::new(1.0, 2.0 * std::f64::consts::PI, 1.1);
+//!
+//! // Monte Carlo embedding of L²([0,1]) into ℝ⁶⁴, then a bank of
+//! // 2-stable (Gaussian) L²-distance hashes with r = 1.
+//! let mut rng = Xoshiro256pp::seed_from_u64(7);
+//! let emb = MonteCarloEmbedder::new(Interval::new(0.0, 1.0), 64, 2.0, &mut rng);
+//! let bank = PStableHashBank::new(64, 1024, 2.0, 1.0, &mut rng);
+//!
+//! let hf = bank.hash(&emb.embed_fn(&f));
+//! let hg = bank.hash(&emb.embed_fn(&g));
+//! let collisions = hf.iter().zip(&hg).filter(|(a, b)| a == b).count();
+//! println!("observed collision rate: {}", collisions as f64 / 1024.0);
+//! ```
+
+pub mod bench;
+pub mod chebyshev;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod embedding;
+pub mod experiments;
+pub mod functions;
+pub mod hashing;
+pub mod json;
+pub mod lsh;
+pub mod quadrature;
+pub mod runtime;
+pub mod search;
+pub mod sequences;
+pub mod theory;
+pub mod util;
+pub mod wasserstein;
+pub mod workload;
+
+/// Commonly used types, re-exported for ergonomic downstream use.
+pub mod prelude {
+    pub use crate::chebyshev::{chebyshev_nodes, ChebyshevSeries};
+    pub use crate::embedding::{
+        ChebyshevEmbedder, Embedder, Interval, MonteCarloEmbedder, QmcEmbedder,
+    };
+    pub use crate::functions::{
+        Function1D, GaussianDist, GaussianMixture, Piecewise, Polynomial, Sampled, Sine,
+    };
+    pub use crate::hashing::{HashBank, LazyL2Hash, PStableHashBank, SimHashBank, VectorHash};
+    pub use crate::lsh::{IndexConfig, LshIndex};
+    pub use crate::quadrature::{cosine_similarity_l2, inner_product_l2, lp_distance};
+    pub use crate::search::{BruteForceKnn, LshKnn};
+    pub use crate::theory::{
+        pstable_collision_probability, simhash_collision_probability, theorem1_bounds,
+    };
+    pub use crate::util::rng::{Rng64, SplitMix64, Xoshiro256pp};
+    pub use crate::wasserstein::{gaussian_w2, wasserstein_1d_quantile, wasserstein_empirical};
+}

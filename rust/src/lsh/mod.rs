@@ -1,0 +1,371 @@
+//! Multi-table LSH index with AND/OR amplification and multi-probe
+//! querying — the data structure that turns a hash family into a
+//! similarity-search accelerator (paper §2.1).
+//!
+//! * **AND** amplification: each table keys on `k` concatenated hashes, so
+//!   a table collision requires all `k` to agree (drives false positives
+//!   down).
+//! * **OR** amplification: `L` independent tables; a candidate collides if
+//!   it collides in *any* table (drives false negatives down).
+//! * **Multi-probe** (Lv et al. 2007): additionally probe buckets whose
+//!   keys differ from the query's in a few coordinates (`±1` perturbations
+//!   for the p-stable hash), trading probes for tables.
+
+pub mod shard;
+pub mod tuning;
+
+pub use shard::ShardedIndex;
+pub use tuning::{estimate_distances, tune, Tuning, TuningGoal};
+
+use std::collections::HashMap;
+
+/// Index shape parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexConfig {
+    /// hashes concatenated per table (AND amplification)
+    pub k: usize,
+    /// number of tables (OR amplification)
+    pub l: usize,
+}
+
+impl IndexConfig {
+    /// `k` hashes per table, `l` tables.
+    pub fn new(k: usize, l: usize) -> Self {
+        assert!(k >= 1 && l >= 1);
+        Self { k, l }
+    }
+
+    /// Total hash functions required from the bank: `k · l`.
+    pub fn total_hashes(&self) -> usize {
+        self.k * self.l
+    }
+
+    /// Theoretical collision probability of the full index given the
+    /// single-hash collision probability `p1`:
+    /// `1 − (1 − p1^k)^L` (the classic S-curve).
+    pub fn amplified_probability(&self, p1: f64) -> f64 {
+        1.0 - (1.0 - p1.powi(self.k as i32)).powi(self.l as i32)
+    }
+}
+
+/// A bucket key: the `k` concatenated hash values for one table.
+type Key = Box<[i32]>;
+
+/// Multi-table LSH index mapping hash signatures to entry ids.
+///
+/// The index is *hash-agnostic*: it consumes pre-computed signatures of
+/// length `k·l` (produced by any [`crate::hashing::HashBank`], by the
+/// PJRT pipeline, or by a remote client), so the coordinator can shard it
+/// freely.
+#[derive(Debug, Clone)]
+pub struct LshIndex {
+    config: IndexConfig,
+    tables: Vec<HashMap<Key, Vec<u64>>>,
+    len: usize,
+}
+
+impl LshIndex {
+    /// Empty index with the given shape.
+    pub fn new(config: IndexConfig) -> Self {
+        Self {
+            config,
+            tables: (0..config.l).map(|_| HashMap::new()).collect(),
+            len: 0,
+        }
+    }
+
+    /// Index shape.
+    pub fn config(&self) -> IndexConfig {
+        self.config
+    }
+
+    /// Number of inserted entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no entries have been inserted.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Split a full signature (`k·l` values) into per-table keys.
+    fn keys<'s>(&self, signature: &'s [i32]) -> impl Iterator<Item = &'s [i32]> + 's {
+        let k = self.config.k;
+        assert_eq!(
+            signature.len(),
+            self.config.total_hashes(),
+            "signature length must be k*l"
+        );
+        signature.chunks_exact(k)
+    }
+
+    /// Insert an entry id under its signature.
+    pub fn insert(&mut self, id: u64, signature: &[i32]) {
+        let keys: Vec<&[i32]> = self.keys(signature).collect();
+        for (table, key) in self.tables.iter_mut().zip(keys) {
+            table.entry(key.into()).or_default().push(id);
+        }
+        self.len += 1;
+    }
+
+    /// Remove an entry by id and its insertion-time signature. Returns
+    /// `true` if the id was present in at least one bucket. (The caller
+    /// must supply the same signature used at insert — the coordinator
+    /// stores it alongside the entry.)
+    pub fn remove(&mut self, id: u64, signature: &[i32]) -> bool {
+        let keys: Vec<&[i32]> = self.keys(signature).collect();
+        let mut found = false;
+        for (table, key) in self.tables.iter_mut().zip(keys) {
+            if let Some(ids) = table.get_mut(key) {
+                let before = ids.len();
+                ids.retain(|&x| x != id);
+                if ids.len() != before {
+                    found = true;
+                }
+                if ids.is_empty() {
+                    table.remove(key);
+                }
+            }
+        }
+        if found {
+            self.len = self.len.saturating_sub(1);
+        }
+        found
+    }
+
+    /// Collect candidate ids colliding with `signature` in any table
+    /// (deduplicated, unordered).
+    pub fn query(&self, signature: &[i32]) -> Vec<u64> {
+        let mut seen = std::collections::HashSet::new();
+        let keys: Vec<&[i32]> = self.keys(signature).collect();
+        for (table, key) in self.tables.iter().zip(keys) {
+            if let Some(ids) = table.get(key) {
+                seen.extend(ids.iter().copied());
+            }
+        }
+        seen.into_iter().collect()
+    }
+
+    /// Multi-probe query: additionally probe buckets reachable by
+    /// perturbing up to `depth` coordinates of each table key by ±1
+    /// (suitable for the p-stable hash, whose adjacent buckets hold the
+    /// next-nearest points). `depth = 0` reduces to [`LshIndex::query`].
+    ///
+    /// Probe count per table is `Σ_{d≤depth} C(k, d)·2^d`; keep `depth`
+    /// small (1–2) as Lv et al. recommend.
+    pub fn query_multiprobe(&self, signature: &[i32], depth: usize) -> Vec<u64> {
+        let mut seen = std::collections::HashSet::new();
+        let keys: Vec<&[i32]> = self.keys(signature).collect();
+        for (table, key) in self.tables.iter().zip(keys) {
+            for probe in perturbations(key, depth) {
+                if let Some(ids) = table.get(probe.as_slice()) {
+                    seen.extend(ids.iter().copied());
+                }
+            }
+        }
+        seen.into_iter().collect()
+    }
+
+    /// Iterate over the raw tables (used by the snapshot format in
+    /// [`shard`]).
+    pub(crate) fn tables(&self) -> impl Iterator<Item = &HashMap<Key, Vec<u64>>> {
+        self.tables.iter()
+    }
+
+    /// Restore one bucket verbatim (snapshot deserialization only —
+    /// bypasses the per-insert length accounting).
+    pub(crate) fn restore_bucket(&mut self, table: usize, key: Key, ids: Vec<u64>) {
+        self.tables[table].insert(key, ids);
+    }
+
+    /// Set the entry count (snapshot deserialization only).
+    pub(crate) fn set_len(&mut self, len: usize) {
+        self.len = len;
+    }
+
+    /// Histogram of bucket sizes across tables — used by the stats
+    /// endpoint and load-balance diagnostics.
+    pub fn bucket_stats(&self) -> BucketStats {
+        let mut buckets = 0usize;
+        let mut max = 0usize;
+        let mut total = 0usize;
+        for t in &self.tables {
+            buckets += t.len();
+            for v in t.values() {
+                max = max.max(v.len());
+                total += v.len();
+            }
+        }
+        BucketStats {
+            tables: self.tables.len(),
+            buckets,
+            max_bucket: max,
+            mean_bucket: if buckets == 0 {
+                0.0
+            } else {
+                total as f64 / buckets as f64
+            },
+        }
+    }
+}
+
+/// Summary statistics of the bucket distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BucketStats {
+    /// number of tables
+    pub tables: usize,
+    /// total non-empty buckets across tables
+    pub buckets: usize,
+    /// largest bucket size
+    pub max_bucket: usize,
+    /// mean bucket size
+    pub mean_bucket: f64,
+}
+
+/// All keys reachable from `key` by perturbing at most `depth` coordinates
+/// by ±1, the exact key first.
+fn perturbations(key: &[i32], depth: usize) -> Vec<Vec<i32>> {
+    let mut out = vec![key.to_vec()];
+    if depth == 0 {
+        return out;
+    }
+    // breadth-first by number of perturbed coordinates
+    let mut frontier: Vec<(Vec<i32>, usize)> = vec![(key.to_vec(), 0)];
+    for d in 1..=depth.min(key.len()) {
+        let mut next = Vec::new();
+        for (base, start) in &frontier {
+            for i in *start..key.len() {
+                for delta in [-1i32, 1] {
+                    let mut probe = base.clone();
+                    probe[i] = probe[i].wrapping_add(delta);
+                    out.push(probe.clone());
+                    next.push((probe, i + 1));
+                }
+            }
+        }
+        frontier = next;
+        let _ = d;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn amplified_probability_s_curve() {
+        let cfg = IndexConfig::new(4, 8);
+        assert_eq!(cfg.total_hashes(), 32);
+        let hi = cfg.amplified_probability(0.9);
+        let lo = cfg.amplified_probability(0.2);
+        assert!(hi > 0.99, "{hi}");
+        assert!(lo < 0.02, "{lo}");
+        // boundaries
+        assert_eq!(cfg.amplified_probability(1.0), 1.0);
+        assert_eq!(cfg.amplified_probability(0.0), 0.0);
+    }
+
+    #[test]
+    fn insert_and_exact_query() {
+        let mut idx = LshIndex::new(IndexConfig::new(2, 3));
+        let sig_a = [1, 2, 3, 4, 5, 6];
+        let sig_b = [9, 9, 9, 9, 9, 9];
+        idx.insert(1, &sig_a);
+        idx.insert(2, &sig_b);
+        assert_eq!(idx.len(), 2);
+        let got = idx.query(&sig_a);
+        assert_eq!(got, vec![1]);
+    }
+
+    #[test]
+    fn partial_table_collision_suffices() {
+        // signatures agree only in table 2 → still a candidate (OR).
+        let mut idx = LshIndex::new(IndexConfig::new(2, 2));
+        idx.insert(7, &[1, 1, 5, 5]);
+        let got = idx.query(&[0, 0, 5, 5]);
+        assert_eq!(got, vec![7]);
+    }
+
+    #[test]
+    fn and_within_table_required() {
+        // first table key differs in one of two coordinates → no collision.
+        let mut idx = LshIndex::new(IndexConfig::new(2, 1));
+        idx.insert(7, &[1, 1]);
+        assert!(idx.query(&[1, 2]).is_empty());
+    }
+
+    #[test]
+    fn remove_deletes_and_reports() {
+        let mut idx = LshIndex::new(IndexConfig::new(2, 2));
+        idx.insert(1, &[1, 2, 3, 4]);
+        idx.insert(2, &[1, 2, 9, 9]);
+        assert!(idx.remove(1, &[1, 2, 3, 4]));
+        assert_eq!(idx.len(), 1);
+        assert!(idx.query(&[1, 2, 3, 4]).contains(&2)); // shares table-0 bucket
+        assert!(!idx.query(&[1, 2, 3, 4]).contains(&1));
+        // removing again (or with a wrong signature) reports absence
+        assert!(!idx.remove(1, &[1, 2, 3, 4]));
+        assert!(!idx.remove(2, &[0, 0, 0, 0]));
+        assert_eq!(idx.len(), 1);
+    }
+
+    #[test]
+    fn multiprobe_reaches_adjacent_buckets() {
+        let mut idx = LshIndex::new(IndexConfig::new(2, 1));
+        idx.insert(7, &[5, 5]);
+        assert!(idx.query(&[5, 6]).is_empty());
+        let probed = idx.query_multiprobe(&[5, 6], 1);
+        assert_eq!(probed, vec![7]);
+    }
+
+    #[test]
+    fn multiprobe_depth2() {
+        let mut idx = LshIndex::new(IndexConfig::new(2, 1));
+        idx.insert(7, &[5, 5]);
+        // two coordinates off by one each → needs depth 2
+        assert!(idx.query_multiprobe(&[6, 6], 1).is_empty());
+        assert_eq!(idx.query_multiprobe(&[6, 6], 2), vec![7]);
+    }
+
+    #[test]
+    fn duplicate_ids_deduplicated_across_tables() {
+        let mut idx = LshIndex::new(IndexConfig::new(1, 4));
+        idx.insert(3, &[1, 2, 3, 4]);
+        let got = idx.query(&[1, 2, 3, 4]);
+        assert_eq!(got, vec![3], "must dedup across tables");
+    }
+
+    #[test]
+    fn bucket_stats_reflect_contents() {
+        let mut idx = LshIndex::new(IndexConfig::new(1, 2));
+        idx.insert(1, &[0, 0]);
+        idx.insert(2, &[0, 1]);
+        let s = idx.bucket_stats();
+        assert_eq!(s.tables, 2);
+        assert_eq!(s.max_bucket, 2); // table 0 bucket [0] holds both
+        assert_eq!(s.buckets, 3);
+    }
+
+    #[test]
+    fn perturbation_count() {
+        // k = 3, depth 1: 1 + 3*2 = 7 probes
+        let probes = perturbations(&[0, 0, 0], 1);
+        assert_eq!(probes.len(), 7);
+        // depth 2 adds C(3,2)*4 = 12 → but our BFS enumerates ordered
+        // combinations without replacement: 1 + 6 + 12 = 19
+        let probes2 = perturbations(&[0, 0, 0], 2);
+        assert_eq!(probes2.len(), 19);
+        // all unique
+        let set: std::collections::HashSet<_> = probes2.iter().collect();
+        assert_eq!(set.len(), probes2.len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_signature_length_panics() {
+        let mut idx = LshIndex::new(IndexConfig::new(2, 2));
+        idx.insert(1, &[1, 2, 3]);
+    }
+}

@@ -1,0 +1,292 @@
+//! Sharded LSH index with snapshot/restore — the scale-out layer of the
+//! coordinator (vLLM-router-style: entries are partitioned by id across
+//! shards, queries fan out and merge).
+//!
+//! Also home of the index persistence format (`FLSH1`): a little-endian
+//! binary dump of every shard's tables, so a service restart does not
+//! have to re-embed and re-hash the corpus.
+
+use super::{IndexConfig, LshIndex};
+use std::io::{self, Read, Write};
+use std::sync::RwLock;
+
+/// Magic bytes of the snapshot format.
+const MAGIC: &[u8; 5] = b"FLSH1";
+
+/// An id-partitioned collection of [`LshIndex`] shards.
+///
+/// Sharding rule: `shard = id % num_shards` — inserts touch one shard's
+/// write lock only, so concurrent inserts to different shards never
+/// contend; queries take all read locks (shared, cheap).
+pub struct ShardedIndex {
+    shards: Vec<RwLock<LshIndex>>,
+    config: IndexConfig,
+}
+
+impl ShardedIndex {
+    /// An empty index with `num_shards` shards of the given shape.
+    pub fn new(config: IndexConfig, num_shards: usize) -> Self {
+        assert!(num_shards >= 1);
+        Self {
+            shards: (0..num_shards)
+                .map(|_| RwLock::new(LshIndex::new(config)))
+                .collect(),
+            config,
+        }
+    }
+
+    /// Index shape.
+    pub fn config(&self) -> IndexConfig {
+        self.config
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total entries across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// Whether the index holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert an entry (locks only its home shard).
+    pub fn insert(&self, id: u64, signature: &[i32]) {
+        let shard = (id % self.shards.len() as u64) as usize;
+        self.shards[shard].write().unwrap().insert(id, signature);
+    }
+
+    /// Remove an entry from its home shard. Returns `true` if present.
+    pub fn remove(&self, id: u64, signature: &[i32]) -> bool {
+        let shard = (id % self.shards.len() as u64) as usize;
+        self.shards[shard].write().unwrap().remove(id, signature)
+    }
+
+    /// Query all shards and merge candidates (deduplicated by
+    /// construction: ids live in exactly one shard).
+    pub fn query(&self, signature: &[i32]) -> Vec<u64> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.read().unwrap().query(signature));
+        }
+        out
+    }
+
+    /// Multi-probe query across all shards.
+    pub fn query_multiprobe(&self, signature: &[i32], depth: usize) -> Vec<u64> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.read().unwrap().query_multiprobe(signature, depth));
+        }
+        out
+    }
+
+    /// Serialize every shard to `w` (format `FLSH1`).
+    pub fn save(&self, w: &mut dyn Write) -> io::Result<()> {
+        w.write_all(MAGIC)?;
+        write_u64(w, self.shards.len() as u64)?;
+        write_u64(w, self.config.k as u64)?;
+        write_u64(w, self.config.l as u64)?;
+        for s in &self.shards {
+            s.read().unwrap().write_to(w)?;
+        }
+        Ok(())
+    }
+
+    /// Restore from a snapshot produced by [`ShardedIndex::save`].
+    pub fn load(r: &mut dyn Read) -> io::Result<Self> {
+        let mut magic = [0u8; 5];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+        }
+        let num_shards = read_u64(r)? as usize;
+        let k = read_u64(r)? as usize;
+        let l = read_u64(r)? as usize;
+        if num_shards == 0 || k == 0 || l == 0 || num_shards > 1 << 20 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad header"));
+        }
+        let config = IndexConfig::new(k, l);
+        let mut shards = Vec::with_capacity(num_shards);
+        for _ in 0..num_shards {
+            shards.push(RwLock::new(LshIndex::read_from(r, config)?));
+        }
+        Ok(Self { shards, config })
+    }
+}
+
+impl LshIndex {
+    /// Serialize this index's tables (used by the snapshot format).
+    pub fn write_to(&self, w: &mut dyn Write) -> io::Result<()> {
+        write_u64(w, self.len() as u64)?;
+        for table in self.tables() {
+            write_u64(w, table.len() as u64)?;
+            for (key, ids) in table {
+                for v in key.iter() {
+                    write_i32(w, *v)?;
+                }
+                write_u64(w, ids.len() as u64)?;
+                for id in ids {
+                    write_u64(w, *id)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Deserialize an index with the given shape (inverse of
+    /// [`LshIndex::write_to`]).
+    pub fn read_from(r: &mut dyn Read, config: IndexConfig) -> io::Result<Self> {
+        let len = read_u64(r)? as usize;
+        let mut index = LshIndex::new(config);
+        for t in 0..config.l {
+            let buckets = read_u64(r)? as usize;
+            for _ in 0..buckets {
+                let mut key = vec![0i32; config.k];
+                for v in key.iter_mut() {
+                    *v = read_i32(r)?;
+                }
+                let count = read_u64(r)? as usize;
+                if count > 1 << 40 {
+                    return Err(io::Error::new(io::ErrorKind::InvalidData, "bad count"));
+                }
+                let mut ids = Vec::with_capacity(count);
+                for _ in 0..count {
+                    ids.push(read_u64(r)?);
+                }
+                index.restore_bucket(t, key.into_boxed_slice(), ids);
+            }
+        }
+        index.set_len(len);
+        Ok(index)
+    }
+}
+
+fn write_u64(w: &mut dyn Write, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn write_i32(w: &mut dyn Write, v: i32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_u64(r: &mut dyn Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_i32(r: &mut dyn Read) -> io::Result<i32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(i32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng64, Xoshiro256pp};
+
+    fn random_signature(rng: &mut dyn Rng64, len: usize) -> Vec<i32> {
+        (0..len).map(|_| rng.uniform_usize(7) as i32 - 3).collect()
+    }
+
+    #[test]
+    fn sharded_insert_query() {
+        let idx = ShardedIndex::new(IndexConfig::new(2, 3), 4);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut sigs = Vec::new();
+        for id in 0..100u64 {
+            let s = random_signature(&mut rng, 6);
+            idx.insert(id, &s);
+            sigs.push(s);
+        }
+        assert_eq!(idx.len(), 100);
+        for (id, s) in sigs.iter().enumerate() {
+            assert!(idx.query(s).contains(&(id as u64)));
+        }
+    }
+
+    #[test]
+    fn sharded_matches_unsharded() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let cfg = IndexConfig::new(2, 4);
+        let sharded = ShardedIndex::new(cfg, 3);
+        let mut flat = LshIndex::new(cfg);
+        let mut sigs = Vec::new();
+        for id in 0..200u64 {
+            let s = random_signature(&mut rng, cfg.total_hashes());
+            sharded.insert(id, &s);
+            flat.insert(id, &s);
+            sigs.push(s);
+        }
+        for s in sigs.iter().take(50) {
+            let mut a = sharded.query(s);
+            let mut b = flat.query(s);
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+            let mut ap = sharded.query_multiprobe(s, 1);
+            let mut bp = flat.query_multiprobe(s, 1);
+            ap.sort_unstable();
+            bp.sort_unstable();
+            assert_eq!(ap, bp);
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let idx = ShardedIndex::new(IndexConfig::new(3, 2), 2);
+        let mut sigs = Vec::new();
+        for id in 0..50u64 {
+            let s = random_signature(&mut rng, 6);
+            idx.insert(id, &s);
+            sigs.push(s);
+        }
+        let mut buf = Vec::new();
+        idx.save(&mut buf).unwrap();
+        let restored = ShardedIndex::load(&mut buf.as_slice()).unwrap();
+        assert_eq!(restored.len(), 50);
+        assert_eq!(restored.num_shards(), 2);
+        assert_eq!(restored.config(), IndexConfig::new(3, 2));
+        for (id, s) in sigs.iter().enumerate() {
+            let mut a = idx.query(s);
+            let mut b = restored.query(s);
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "id {id}");
+        }
+    }
+
+    #[test]
+    fn snapshot_rejects_garbage() {
+        assert!(ShardedIndex::load(&mut &b"NOTFL"[..]).is_err());
+        assert!(ShardedIndex::load(&mut &b"FLSH1"[..]).is_err()); // truncated
+    }
+
+    #[test]
+    fn concurrent_shard_inserts() {
+        use std::sync::Arc;
+        let idx = Arc::new(ShardedIndex::new(IndexConfig::new(1, 2), 8));
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let idx = idx.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u64 {
+                    let id = t * 100 + i;
+                    idx.insert(id, &[(id % 5) as i32, (id % 3) as i32]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(idx.len(), 800);
+    }
+}

@@ -1,0 +1,257 @@
+//! LSH parameter auto-tuning: choose `(k, L, r)` from workload statistics
+//! and a recall target — the knob-turning every production deployment of
+//! the paper's machinery needs (E2LSH-style, driven by the amplified
+//! S-curve `1 − (1 − p₁(c)^k)^L`).
+//!
+//! Inputs: the "near" distance `c_near` (typical nearest-neighbour
+//! distance, e.g. the p10 of sampled NN distances), the "far" distance
+//! `c_far` (typical random-pair distance, e.g. the median), a recall
+//! target at `c_near`, and a probe budget (expected fraction of the
+//! corpus allowed as candidates at `c_far`).
+
+use super::IndexConfig;
+use crate::theory::pstable_collision_probability;
+
+/// A tuning recommendation with its predicted operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tuning {
+    /// recommended index shape
+    pub config: IndexConfig,
+    /// recommended bucket width
+    pub r: f64,
+    /// predicted collision probability at `c_near` (recall proxy)
+    pub recall_at_near: f64,
+    /// predicted collision probability at `c_far` (candidate-fraction proxy)
+    pub candidates_at_far: f64,
+}
+
+/// Tuning constraints.
+#[derive(Debug, Clone, Copy)]
+pub struct TuningGoal {
+    /// typical near-neighbour distance
+    pub c_near: f64,
+    /// typical random-pair distance (must exceed `c_near`)
+    pub c_far: f64,
+    /// required amplified collision probability at `c_near` (e.g. 0.95)
+    pub recall_target: f64,
+    /// allowed amplified collision probability at `c_far` (e.g. 0.05)
+    pub candidate_budget: f64,
+    /// stability index `p` of the hash family
+    pub p: f64,
+}
+
+/// Search over `(k, L, r)` for the cheapest configuration meeting the
+/// goal. Cost model: `L` tables dominate memory and probe time, so we
+/// minimize `L`, then `k` (hash evaluations), scanning a geometric grid
+/// of bucket widths. Returns `None` when no configuration within the
+/// bounds satisfies the goal (e.g. `c_near ≈ c_far`).
+pub fn tune(goal: &TuningGoal, max_k: usize, max_l: usize) -> Option<Tuning> {
+    assert!(goal.c_near > 0.0 && goal.c_far > goal.c_near);
+    assert!((0.0..1.0).contains(&goal.candidate_budget));
+    assert!((0.0..1.0).contains(&goal.recall_target));
+    let mut best: Option<Tuning> = None;
+    // r grid: bucket widths between c_near/4 and 4·c_far
+    for ri in 0..=24 {
+        let r = goal.c_near / 4.0 * (16.0 * goal.c_far / goal.c_near).powf(ri as f64 / 24.0);
+        let p_near = pstable_collision_probability(goal.c_near, r, goal.p);
+        let p_far = pstable_collision_probability(goal.c_far, r, goal.p);
+        if p_near <= p_far + 1e-9 {
+            continue;
+        }
+        for k in 1..=max_k {
+            // smallest L achieving the recall target for this (k, r)
+            let pk = p_near.powi(k as i32);
+            if pk <= 0.0 {
+                break;
+            }
+            let l_needed = ((1.0 - goal.recall_target).ln() / (1.0 - pk).max(1e-300).ln()).ceil();
+            if !l_needed.is_finite() || l_needed < 1.0 || l_needed > max_l as f64 {
+                continue;
+            }
+            let l = l_needed as usize;
+            let cfg = IndexConfig::new(k, l);
+            let far = cfg.amplified_probability(p_far);
+            if far > goal.candidate_budget {
+                continue;
+            }
+            let cand = Tuning {
+                config: cfg,
+                r,
+                recall_at_near: cfg.amplified_probability(p_near),
+                candidates_at_far: far,
+            };
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    (cand.config.l, cand.config.k, ordered(cand.candidates_at_far))
+                        < (b.config.l, b.config.k, ordered(b.candidates_at_far))
+                }
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+    }
+    best
+}
+
+/// Estimate `(c_near, c_far)` from a sample of embedded vectors: the mean
+/// nearest-neighbour distance and the median pairwise distance.
+pub fn estimate_distances(vecs: &[Vec<f64>]) -> (f64, f64) {
+    assert!(vecs.len() >= 3);
+    let d = |a: &[f64], b: &[f64]| -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let n = vecs.len().min(200); // cap the O(n²) scan
+    let mut nn_acc = 0.0;
+    let mut all = Vec::new();
+    for i in 0..n {
+        let mut best = f64::INFINITY;
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let dist = d(&vecs[i], &vecs[j]);
+            best = best.min(dist);
+            if i < j {
+                all.push(dist);
+            }
+        }
+        nn_acc += best;
+    }
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (nn_acc / n as f64, all[all.len() / 2])
+}
+
+fn ordered(x: f64) -> u64 {
+    x.to_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn goal() -> TuningGoal {
+        TuningGoal {
+            c_near: 0.1,
+            c_far: 1.0,
+            recall_target: 0.95,
+            candidate_budget: 0.05,
+            p: 2.0,
+        }
+    }
+
+    #[test]
+    fn tune_meets_goal() {
+        let t = tune(&goal(), 16, 64).expect("feasible goal");
+        assert!(t.recall_at_near >= 0.95, "{t:?}");
+        assert!(t.candidates_at_far <= 0.05, "{t:?}");
+        assert!(t.config.k >= 1 && t.config.l >= 1);
+    }
+
+    #[test]
+    fn tighter_budget_needs_more_k() {
+        let loose = tune(&goal(), 16, 64).unwrap();
+        let tight = tune(
+            &TuningGoal {
+                candidate_budget: 0.001,
+                ..goal()
+            },
+            16,
+            64,
+        )
+        .unwrap();
+        assert!(
+            tight.config.k >= loose.config.k,
+            "tight {tight:?} vs loose {loose:?}"
+        );
+        assert!(tight.candidates_at_far <= 0.001);
+    }
+
+    #[test]
+    fn infeasible_when_distances_equal() {
+        let t = tune(
+            &TuningGoal {
+                c_near: 0.99,
+                c_far: 1.0,
+                recall_target: 0.999,
+                candidate_budget: 0.0001,
+                p: 2.0,
+            },
+            4,
+            8,
+        );
+        assert!(t.is_none());
+    }
+
+    #[test]
+    fn works_for_p1_cauchy() {
+        let t = tune(
+            &TuningGoal {
+                p: 1.0,
+                ..goal()
+            },
+            16,
+            64,
+        )
+        .expect("feasible for p=1");
+        assert!(t.recall_at_near >= 0.95);
+    }
+
+    #[test]
+    fn estimate_distances_sane() {
+        // three clusters of near-identical vectors
+        let mut vecs = Vec::new();
+        for c in 0..3 {
+            for i in 0..5 {
+                vecs.push(vec![c as f64 * 10.0 + i as f64 * 0.01, 0.0]);
+            }
+        }
+        let (near, far) = estimate_distances(&vecs);
+        assert!(near < 0.1, "near {near}");
+        assert!(far > 5.0, "far {far}");
+    }
+
+    #[test]
+    fn tuned_index_delivers_empirically() {
+        // end-to-end: tune on synthetic distances, then measure observed
+        // amplified collision rates with a real bank.
+        use crate::hashing::{HashBank, PStableHashBank};
+        use crate::lsh::LshIndex;
+        use crate::util::rng::{Rng64, Xoshiro256pp};
+        let t = tune(&goal(), 16, 64).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let dim = 16;
+        let bank = PStableHashBank::new(dim, t.config.total_hashes(), 2.0, t.r, &mut rng);
+        let mut index = LshIndex::new(t.config);
+        let base: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        index.insert(0, &bank.hash(&base));
+        // near point at distance 0.1
+        let mut hits_near = 0;
+        let mut hits_far = 0;
+        let trials = 200;
+        for _ in 0..trials {
+            let mut dir: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let norm: f64 = dir.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for d in dir.iter_mut() {
+                *d /= norm;
+            }
+            let near: Vec<f64> = base.iter().zip(&dir).map(|(b, d)| b + 0.1 * d).collect();
+            let far: Vec<f64> = base.iter().zip(&dir).map(|(b, d)| b + 1.0 * d).collect();
+            if !index.query(&bank.hash(&near)).is_empty() {
+                hits_near += 1;
+            }
+            if !index.query(&bank.hash(&far)).is_empty() {
+                hits_far += 1;
+            }
+        }
+        let recall = hits_near as f64 / trials as f64;
+        let far_rate = hits_far as f64 / trials as f64;
+        assert!(recall > 0.88, "empirical recall {recall} (predicted {})", t.recall_at_near);
+        assert!(far_rate < 0.15, "far rate {far_rate} (predicted {})", t.candidates_at_far);
+    }
+}

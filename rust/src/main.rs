@@ -1,0 +1,523 @@
+//! `funclsh` — the leader binary: serve the function-similarity service,
+//! run the paper's experiments, or poke at the runtime.
+//!
+//! ```text
+//! funclsh serve       [--config svc.toml] [--trace-ops N]
+//! funclsh experiment  <fig1|fig2|fig3|thm1|qmc|knn|w1|mips|adaptive|all>
+//!                     [--pairs N] [--hashes N] [--dim N] [--seed S]
+//!                     [--out results/]
+//! funclsh hash        --phase X [--config svc.toml]
+//! funclsh selftest    [--artifacts DIR]
+//! funclsh info
+//! ```
+
+use funclsh::cli::Args;
+use funclsh::config::ServiceConfig;
+use funclsh::experiments::{self, extensions, FigureParams, Method};
+use std::io::Write as _;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand() {
+        Some("serve") => cmd_serve(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("hash") => cmd_hash(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("selftest") => cmd_selftest(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: funclsh <serve|experiment|hash|selftest|info> [options]\n\
+                 see `funclsh experiment all --out results/` for the paper reproduction"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(args: &Args) -> ServiceConfig {
+    match args.get("config") {
+        Some(path) => match std::fs::read_to_string(path) {
+            Ok(text) => match ServiceConfig::from_toml(&text) {
+                Ok(cfg) => cfg,
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            },
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => ServiceConfig::default(),
+    }
+}
+
+/// Build the service hash path from config: PJRT pipeline when artifacts
+/// are present and enabled, pure-Rust folded path otherwise.
+fn build_service(
+    cfg: &ServiceConfig,
+) -> (
+    std::sync::Arc<dyn funclsh::coordinator::HashPath>,
+    Vec<f64>,
+) {
+    use funclsh::config::HashKind;
+    use funclsh::coordinator::{CpuHashPath, FoldedHashPath};
+    use funclsh::embedding::{
+        ChebyshevEmbedder, Embedder, Interval, MonteCarloEmbedder, QmcEmbedder, QmcSequence,
+    };
+    use funclsh::hashing::{PStableHashBank, SimHashBank};
+    use funclsh::prelude::Xoshiro256pp;
+
+    let omega = Interval::new(cfg.domain_a, cfg.domain_b);
+    // builder so the fallback path can get an identical second copy
+    let make_embedder = |seed: u64| -> Box<dyn Embedder> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        match cfg.embedding {
+            funclsh::config::EmbeddingKind::MonteCarlo => {
+                Box::new(MonteCarloEmbedder::new(omega, cfg.dim, cfg.p, &mut rng))
+            }
+            funclsh::config::EmbeddingKind::Qmc => {
+                Box::new(QmcEmbedder::new(omega, cfg.dim, cfg.p, QmcSequence::Sobol))
+            }
+            funclsh::config::EmbeddingKind::Chebyshev => {
+                Box::new(ChebyshevEmbedder::new(omega, cfg.dim))
+            }
+        }
+    };
+    let embedder = make_embedder(cfg.seed);
+    let points = embedder.sample_points().to_vec();
+    let mut bank_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xBA_u64);
+
+    // SimHash family: sign-based (no floor), served by the CPU path (the
+    // simhash AOT artifact exists but the service's folded-projection
+    // plumbing is floor-based; cosine services run CPU-side).
+    if cfg.hash == HashKind::SimHash {
+        eprintln!("hash path: pure-rust (simhash)");
+        let bank = SimHashBank::new(cfg.dim, cfg.total_hashes(), &mut bank_rng);
+        return (
+            std::sync::Arc::new(CpuHashPath::new(embedder, Box::new(bank))),
+            points,
+        );
+    }
+
+    let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), cfg.p, cfg.r, &mut bank_rng);
+    let proj_rows: Vec<&[f64]> = (0..cfg.total_hashes())
+        .map(|j| bank.projection_row(j))
+        .collect();
+    let folded = FoldedHashPath::new(embedder, &proj_rows, bank.offsets(), bank.r());
+
+    let path: std::sync::Arc<dyn funclsh::coordinator::HashPath> = if cfg.use_pjrt
+        && Path::new(&cfg.artifacts_dir).join("manifest.json").exists()
+    {
+        match funclsh::runtime::pjrt_path::PjrtHashPath::from_folded(
+            Path::new(&cfg.artifacts_dir),
+            &cfg.pipeline,
+            folded,
+        ) {
+            Ok(p) => {
+                eprintln!(
+                    "hash path: PJRT pipeline `{}` ({})",
+                    cfg.pipeline, cfg.artifacts_dir
+                );
+                std::sync::Arc::new(p)
+            }
+            Err(e) => {
+                eprintln!("PJRT unavailable ({e}); falling back to CPU path");
+                let folded2 = FoldedHashPath::new(
+                    make_embedder(cfg.seed),
+                    &proj_rows,
+                    bank.offsets(),
+                    bank.r(),
+                );
+                std::sync::Arc::new(folded2)
+            }
+        }
+    } else {
+        eprintln!("hash path: pure-rust (folded)");
+        std::sync::Arc::new(folded)
+    };
+    (path, points)
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use funclsh::coordinator::{Coordinator, Op, Response};
+    use funclsh::workload::{sine_trace, TraceOp};
+    use funclsh::prelude::Xoshiro256pp;
+
+    let cfg = load_config(args);
+    let (path, points) = build_service(&cfg);
+    let svc = Coordinator::start(&cfg, path);
+    eprintln!(
+        "funclsh service up: dim={} k={} l={} workers={} (probe depth {})",
+        cfg.dim, cfg.k, cfg.l, cfg.workers, cfg.probe_depth
+    );
+
+    // Demo/driver mode: run a synthetic trace through the service, then
+    // print metrics. (A network front-end would replace this loop; the
+    // coordinator API is transport-agnostic.)
+    let n_ops = args.get_parsed("trace-ops", 2000usize);
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xCAFE);
+    let trace = sine_trace(n_ops, &points, 0.7, &mut rng);
+    let t0 = std::time::Instant::now();
+    let mut errors = 0;
+    for op in trace {
+        let resp = match op {
+            TraceOp::Insert { id, samples } => svc.submit(Op::Insert {
+                id,
+                samples: samples.iter().map(|&x| x as f32).collect(),
+            }),
+            TraceOp::Query { samples, k } => svc.submit(Op::Query {
+                samples: samples.iter().map(|&x| x as f32).collect(),
+                k,
+            }),
+        };
+        if matches!(resp, Response::Error(_)) {
+            errors += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let m = svc.metrics();
+    println!(
+        "trace done: {n_ops} ops in {elapsed:?} ({:.0} op/s), {} indexed, {errors} errors",
+        n_ops as f64 / elapsed.as_secs_f64(),
+        svc.indexed()
+    );
+    println!("{}", m.to_json());
+    if let Some(path) = args.get("snapshot") {
+        match std::fs::File::create(path) {
+            Ok(mut f) => match svc.save_index(&mut f) {
+                Ok(()) => eprintln!("index snapshot written to {path}"),
+                Err(e) => eprintln!("snapshot failed: {e}"),
+            },
+            Err(e) => eprintln!("cannot create {path}: {e}"),
+        }
+    }
+    svc.shutdown();
+    0
+}
+
+fn cmd_hash(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let (path, points) = build_service(&cfg);
+    let phase = args.get_parsed("phase", 0.0f64);
+    let f = funclsh::functions::Sine::paper(phase);
+    use funclsh::functions::Function1D;
+    let samples: Vec<f32> = points.iter().map(|&x| f.eval(x) as f32).collect();
+    match path.hash_rows(&[samples]) {
+        Ok(sigs) => {
+            println!("{:?}", sigs[0]);
+            0
+        }
+        Err(e) => {
+            eprintln!("hash failed: {e}");
+            1
+        }
+    }
+}
+
+/// `funclsh tune`: recommend (k, L, r) for a target workload.
+///
+/// Either pass `--near`/`--far` distances directly, or let the tool
+/// estimate them from a synthetic GMM corpus embedded with the configured
+/// embedding (`--estimate N`).
+fn cmd_tune(args: &Args) -> i32 {
+    use funclsh::lsh::{estimate_distances, tune, TuningGoal};
+    let cfg = load_config(args);
+    let (c_near, c_far) = if let Some(n) = args.get("estimate") {
+        let n: usize = n.parse().unwrap_or(200);
+        use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
+        use funclsh::functions::Distribution1D;
+        use funclsh::prelude::Xoshiro256pp;
+        use funclsh::wasserstein::QUANTILE_CLIP;
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+        let omega = Interval::new(QUANTILE_CLIP, 1.0 - QUANTILE_CLIP);
+        let emb = MonteCarloEmbedder::new(omega, cfg.dim, cfg.p, &mut rng);
+        let corpus = funclsh::workload::gmm_corpus(n, &mut rng);
+        let vecs: Vec<Vec<f64>> = corpus
+            .iter()
+            .map(|d| emb.embed_fn(&d.quantile_fn()))
+            .collect();
+        let est = estimate_distances(&vecs);
+        eprintln!("estimated from {n} GMMs: c_near={:.4} c_far={:.4}", est.0, est.1);
+        est
+    } else {
+        (
+            args.get_parsed("near", 0.1f64),
+            args.get_parsed("far", 1.0f64),
+        )
+    };
+    let goal = TuningGoal {
+        c_near,
+        c_far,
+        recall_target: args.get_parsed("recall", 0.95f64),
+        candidate_budget: args.get_parsed("budget", 0.05f64),
+        p: cfg.p,
+    };
+    match tune(&goal, args.get_parsed("max-k", 16usize), args.get_parsed("max-l", 64usize)) {
+        Some(t) => {
+            println!(
+                "recommended: k={} l={} r={:.4}  (predicted recall {:.3}, far-candidate rate {:.4})",
+                t.config.k, t.config.l, t.r, t.recall_at_near, t.candidates_at_far
+            );
+            println!(
+                "config snippet:\n[index]\nk = {}\nl = {}\n[hash]\nr = {:.4}",
+                t.config.k, t.config.l, t.r
+            );
+            0
+        }
+        None => {
+            eprintln!(
+                "no feasible (k, L, r) within bounds for near={c_near} far={c_far}; \
+                 relax --recall/--budget or raise --max-k/--max-l"
+            );
+            1
+        }
+    }
+}
+
+fn cmd_selftest(args: &Args) -> i32 {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    match funclsh::runtime::Engine::load(Path::new(dir)) {
+        Ok(engine) => {
+            println!(
+                "PJRT ok: platform={}, pipelines={:?}",
+                engine.platform(),
+                engine.pipeline_names()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("selftest failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("funclsh {} — LSH in function spaces", env!("CARGO_PKG_VERSION"));
+    println!("paper: Shand & Becker, 'Locality-sensitive hashing in function spaces' (2020)");
+    println!("layers: L1 pallas kernels + L2 jax pipelines (build time) + L3 rust coordinator");
+    0
+}
+
+fn write_results(out_dir: &str, name: &str, content: &str) {
+    let dir = Path::new(out_dir);
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("cannot create {out_dir}: {e}");
+        return;
+    }
+    let path = dir.join(name);
+    match std::fs::File::create(&path) {
+        Ok(mut f) => {
+            let _ = f.write_all(content.as_bytes());
+            eprintln!("wrote {}", path.display());
+        }
+        Err(e) => eprintln!("cannot write {}: {e}", path.display()),
+    }
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let out = args.get("out").unwrap_or("results");
+    let params = FigureParams {
+        pairs: args.get_parsed("pairs", 256usize),
+        hashes: args.get_parsed("hashes", 1024usize),
+        dim: args.get_parsed("dim", 64usize),
+        r: args.get_parsed("r", 1.0f64),
+        seed: args.get_parsed("seed", 2020u64),
+    };
+    let run_fig = |name: &str,
+                   f: &dyn Fn(Method, FigureParams) -> experiments::FigureSeries| {
+        let mut csv = String::from("method,similarity,observed,theoretical\n");
+        for m in [Method::FunctionApproximation, Method::MonteCarlo] {
+            let s = f(m, params);
+            println!(
+                "{name} [{}]: rmse={:.4} maxdev={:.4} pearson={:.4} ({} pairs x {} hashes)",
+                m.label(),
+                s.rmse(),
+                s.max_dev(),
+                s.pearson(),
+                params.pairs,
+                params.hashes
+            );
+            csv.push_str(&s.to_csv());
+        }
+        write_results(out, &format!("{name}.csv"), &csv);
+    };
+
+    match which {
+        "fig1" => run_fig("fig1_cosine", &experiments::fig1_cosine),
+        "fig2" => run_fig("fig2_l2", &experiments::fig2_l2),
+        "fig3" => run_fig("fig3_wasserstein", &experiments::fig3_wasserstein),
+        "thm1" => {
+            let rows = extensions::thm1_bounds_experiment(params.hashes, params.seed);
+            let mut csv = String::from("n_f,eps,observed,p_ideal,lower,upper\n");
+            println!("thm1: N_f  eps      observed  P_ideal  [lower, upper]");
+            for r in &rows {
+                println!(
+                    "      {:<4} {:.5}  {:.4}    {:.4}   [{:.4}, {:.4}]",
+                    r.n_f, r.eps, r.observed, r.p_ideal, r.lower, r.upper
+                );
+                csv.push_str(&format!(
+                    "{},{},{},{},{},{}\n",
+                    r.n_f, r.eps, r.observed, r.p_ideal, r.lower, r.upper
+                ));
+            }
+            write_results(out, "thm1.csv", &csv);
+        }
+        "qmc" => {
+            let rows = extensions::qmc_convergence(params.pairs.min(64), params.seed);
+            let mut csv = String::from("n,mc_err,qmc_err,halton_err\n");
+            println!("qmc: N    mc_err    sobol_err  halton_err");
+            for r in &rows {
+                println!(
+                    "     {:<5} {:.5}   {:.5}    {:.5}",
+                    r.n, r.mc_err, r.qmc_err, r.halton_err
+                );
+                csv.push_str(&format!(
+                    "{},{},{},{}\n",
+                    r.n, r.mc_err, r.qmc_err, r.halton_err
+                ));
+            }
+            write_results(out, "qmc.csv", &csv);
+        }
+        "knn" => {
+            let corpus = args.get_parsed("corpus", 10_000usize);
+            let queries = args.get_parsed("queries", 100usize);
+            let mut csv = String::from("corpus,probe_depth,recall,mean_evals,speedup\n");
+            for depth in [0usize, 1, 2] {
+                let r = extensions::knn_experiment(corpus, queries, 10, depth, params.seed);
+                println!(
+                    "knn: corpus={} probes={} recall@10={:.3} evals/query={:.1} speedup={:.1}x",
+                    r.corpus, r.probe_depth, r.recall, r.mean_evals, r.speedup
+                );
+                csv.push_str(&format!(
+                    "{},{},{},{},{}\n",
+                    r.corpus, r.probe_depth, r.recall, r.mean_evals, r.speedup
+                ));
+            }
+            write_results(out, "knn.csv", &csv);
+        }
+        "w1" => {
+            let rows = extensions::w1_experiment(params.pairs.min(64), params.hashes, params.seed);
+            let mut csv = String::from("w1,observed,theoretical,w1_lp,w1_it\n");
+            for r in &rows {
+                csv.push_str(&format!(
+                    "{},{},{},{},{}\n",
+                    r.w1, r.observed, r.theoretical, r.w1_lp, r.w1_it
+                ));
+            }
+            let (o, t): (Vec<f64>, Vec<f64>) =
+                rows.iter().map(|r| (r.observed, r.theoretical)).unzip();
+            println!(
+                "w1: {} pairs, collision rmse={:.4}; LP cross-check mean |Δ|={:.4}",
+                rows.len(),
+                funclsh::util::stats::rmse(&o, &t),
+                rows.iter().map(|r| (r.w1_lp - r.w1).abs()).sum::<f64>() / rows.len() as f64
+            );
+            write_results(out, "w1.csv", &csv);
+        }
+        "mips" => {
+            let r = extensions::mips_experiment(
+                args.get_parsed("corpus", 200usize),
+                args.get_parsed("queries", 50usize),
+                params.hashes,
+                params.seed,
+            );
+            println!(
+                "mips: corpus={} recall@1={:.3} mean_rank={:.1}",
+                r.corpus, r.recall_at_1, r.mean_rank
+            );
+            write_results(
+                out,
+                "mips.csv",
+                &format!(
+                    "corpus,recall_at_1,mean_rank\n{},{},{}\n",
+                    r.corpus, r.recall_at_1, r.mean_rank
+                ),
+            );
+        }
+        "adaptive" => {
+            let rows =
+                extensions::adaptive_nf_experiment(params.pairs.min(64), params.hashes, params.seed);
+            let mut csv = String::from("omega_scale,mean_nf,rmse_adaptive,rmse_fixed\n");
+            for r in &rows {
+                println!(
+                    "adaptive: ω×{} mean N_f={:.1} rmse adaptive={:.4} fixed64={:.4}",
+                    r.omega_scale, r.mean_nf, r.rmse_adaptive, r.rmse_fixed
+                );
+                csv.push_str(&format!(
+                    "{},{},{},{}\n",
+                    r.omega_scale, r.mean_nf, r.rmse_adaptive, r.rmse_fixed
+                ));
+            }
+            write_results(out, "adaptive.csv", &csv);
+        }
+        "bases" => {
+            let rows = funclsh::experiments::bases_experiments::basis_comparison(
+                params.pairs.min(64),
+                params.hashes,
+                params.seed,
+            );
+            let mut csv = String::from("basis,embed_err,collision_rmse\n");
+            for r in &rows {
+                println!(
+                    "bases: {:<10} embed_err={:.6} collision_rmse={:.4}",
+                    r.basis, r.embed_err, r.collision_rmse
+                );
+                csv.push_str(&format!("{},{},{}\n", r.basis, r.embed_err, r.collision_rmse));
+            }
+            write_results(out, "bases.csv", &csv);
+        }
+        "dim2" => {
+            let rows = funclsh::experiments::bases_experiments::dim2_convergence(
+                params.pairs.min(16),
+                params.seed,
+            );
+            let mut csv = String::from("n,mc_err,sobol_err,halton_err\n");
+            println!("dim2: N     mc_err    sobol_err  halton_err");
+            for r in &rows {
+                println!(
+                    "      {:<5} {:.5}   {:.5}    {:.5}",
+                    r.n, r.mc_err, r.sobol_err, r.halton_err
+                );
+                csv.push_str(&format!(
+                    "{},{},{},{}\n",
+                    r.n, r.mc_err, r.sobol_err, r.halton_err
+                ));
+            }
+            write_results(out, "dim2.csv", &csv);
+        }
+        "all" => {
+            for sub in [
+                "fig1", "fig2", "fig3", "thm1", "qmc", "knn", "w1", "mips", "adaptive",
+                "bases", "dim2",
+            ] {
+                let mut forwarded: Vec<String> =
+                    vec!["experiment".to_string(), sub.to_string()];
+                for (k, v) in [
+                    ("pairs", params.pairs.to_string()),
+                    ("hashes", params.hashes.to_string()),
+                    ("seed", params.seed.to_string()),
+                    ("out", out.to_string()),
+                ] {
+                    forwarded.push(format!("--{k}"));
+                    forwarded.push(v);
+                }
+                let code = cmd_experiment(&Args::parse(forwarded));
+                if code != 0 {
+                    return code;
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown experiment `{other}`");
+            return 2;
+        }
+    }
+    0
+}

@@ -1,0 +1,276 @@
+//! Numerical quadrature and exact (to quadrature precision) functional
+//! similarities.
+//!
+//! These are the *ground truth* engines: every experiment compares the
+//! hashed/embedded similarity against values computed here. Provided rules:
+//!
+//! * [`gauss_legendre`] — Golub–Welsch-free Newton iteration on Legendre
+//!   polynomials; spectrally accurate for smooth integrands.
+//! * [`clenshaw_curtis`] — nested Chebyshev-node rule (useful when samples
+//!   at Chebyshev points are already available).
+//! * [`adaptive_simpson`] — robust fallback for kinky integrands (e.g. the
+//!   clipped inverse CDFs of the paper's footnote 1).
+//!
+//! On top of the rules: `L^p` distances, `L²` inner products and cosine
+//! similarity on any [`Function1D`].
+
+use crate::functions::Function1D;
+use std::f64::consts::PI;
+
+/// Nodes and weights of the `n`-point Gauss–Legendre rule on `[-1, 1]`.
+///
+/// Roots of `P_n` by Newton's method from the Tricomi initial guess;
+/// weights `w_i = 2 / ((1 - x_i²) P'_n(x_i)²)`. Accurate to ~1e-15 for
+/// `n ≤ 10⁴`.
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n > 0);
+    let mut xs = vec![0.0; n];
+    let mut ws = vec![0.0; n];
+    let m = n.div_ceil(2);
+    for i in 0..m {
+        // initial guess (Tricomi)
+        let mut x = (PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        let mut dp = 0.0;
+        for _ in 0..100 {
+            // evaluate P_n and P'_n via the three-term recurrence
+            let mut p0 = 1.0;
+            let mut p1 = x;
+            for k in 2..=n {
+                let p2 = ((2 * k - 1) as f64 * x * p1 - (k - 1) as f64 * p0) / k as f64;
+                p0 = p1;
+                p1 = p2;
+            }
+            // P'_n(x) = n (x P_n - P_{n-1}) / (x² - 1)
+            dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+            let dx = p1 / dp;
+            x -= dx;
+            if dx.abs() < 1e-16 {
+                break;
+            }
+        }
+        xs[i] = -x;
+        xs[n - 1 - i] = x;
+        let w = 2.0 / ((1.0 - x * x) * dp * dp);
+        ws[i] = w;
+        ws[n - 1 - i] = w;
+    }
+    if n % 2 == 1 {
+        // middle node is exactly 0 for odd n
+        xs[n / 2] = 0.0;
+    }
+    (xs, ws)
+}
+
+/// Integrate `f` over `[a, b]` with `n`-point Gauss–Legendre.
+pub fn integrate_gl(f: &dyn Function1D, a: f64, b: f64, n: usize) -> f64 {
+    let (xs, ws) = gauss_legendre(n);
+    let c = 0.5 * (b - a);
+    let mid = 0.5 * (a + b);
+    xs.iter()
+        .zip(&ws)
+        .map(|(&x, &w)| w * f.eval(mid + c * x))
+        .sum::<f64>()
+        * c
+}
+
+/// Clenshaw–Curtis nodes/weights on `[-1, 1]` (practical points
+/// `x_k = cos(kπ/n)`, `k = 0..=n`). Exact for polynomials of degree ≤ n.
+pub fn clenshaw_curtis(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 2 && n % 2 == 0, "use an even number of intervals");
+    let xs: Vec<f64> = (0..=n).map(|k| (PI * k as f64 / n as f64).cos()).collect();
+    let mut ws = vec![0.0; n + 1];
+    for (k, wk) in ws.iter_mut().enumerate() {
+        let theta = PI * k as f64 / n as f64;
+        let mut s = 0.0;
+        for j in 1..=n / 2 {
+            let b = if j == n / 2 { 1.0 } else { 2.0 };
+            s += b * (2.0 * j as f64 * theta).cos() / (4.0 * j as f64 * j as f64 - 1.0);
+        }
+        let c = if k == 0 || k == n { 1.0 } else { 2.0 };
+        *wk = c / n as f64 * (1.0 - s);
+    }
+    (xs, ws)
+}
+
+/// Integrate `f` over `[a, b]` with the `n`-interval Clenshaw–Curtis rule.
+pub fn integrate_cc(f: &dyn Function1D, a: f64, b: f64, n: usize) -> f64 {
+    let (xs, ws) = clenshaw_curtis(n);
+    let c = 0.5 * (b - a);
+    let mid = 0.5 * (a + b);
+    xs.iter()
+        .zip(&ws)
+        .map(|(&x, &w)| w * f.eval(mid + c * x))
+        .sum::<f64>()
+        * c
+}
+
+/// Adaptive Simpson quadrature to absolute tolerance `tol`.
+pub fn adaptive_simpson(f: &dyn Function1D, a: f64, b: f64, tol: f64) -> f64 {
+    fn simpson(fa: f64, fm: f64, fb: f64, a: f64, b: f64) -> f64 {
+        (b - a) / 6.0 * (fa + 4.0 * fm + fb)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn rec(
+        f: &dyn Function1D,
+        a: f64,
+        b: f64,
+        fa: f64,
+        fm: f64,
+        fb: f64,
+        whole: f64,
+        tol: f64,
+        depth: u32,
+    ) -> f64 {
+        let m = 0.5 * (a + b);
+        let lm = 0.5 * (a + m);
+        let rm = 0.5 * (m + b);
+        let flm = f.eval(lm);
+        let frm = f.eval(rm);
+        let left = simpson(fa, flm, fm, a, m);
+        let right = simpson(fm, frm, fb, m, b);
+        let delta = left + right - whole;
+        if depth == 0 || delta.abs() <= 15.0 * tol {
+            left + right + delta / 15.0
+        } else {
+            rec(f, a, m, fa, flm, fm, left, tol / 2.0, depth - 1)
+                + rec(f, m, b, fm, frm, fb, right, tol / 2.0, depth - 1)
+        }
+    }
+    let m = 0.5 * (a + b);
+    let fa = f.eval(a);
+    let fm = f.eval(m);
+    let fb = f.eval(b);
+    let whole = simpson(fa, fm, fb, a, b);
+    rec(f, a, b, fa, fm, fb, whole, tol, 50)
+}
+
+/// Default node count for the similarity helpers below — enough for
+/// machine precision on the smooth workloads of the paper's experiments.
+const DEFAULT_GL_NODES: usize = 256;
+
+/// `‖f − g‖_{L^p([a,b])}` by Gauss–Legendre quadrature (Lebesgue measure).
+pub fn lp_distance(f: &dyn Function1D, g: &dyn Function1D, a: f64, b: f64, p: f64) -> f64 {
+    assert!(p > 0.0);
+    let diff = move |x: f64| (f.eval(x) - g.eval(x)).abs().powf(p);
+    integrate_gl(&diff, a, b, DEFAULT_GL_NODES).max(0.0).powf(1.0 / p)
+}
+
+/// `⟨f, g⟩_{L²([a,b])}` by Gauss–Legendre quadrature.
+pub fn inner_product_l2(f: &dyn Function1D, g: &dyn Function1D, a: f64, b: f64) -> f64 {
+    let prod = move |x: f64| f.eval(x) * g.eval(x);
+    integrate_gl(&prod, a, b, DEFAULT_GL_NODES)
+}
+
+/// `‖f‖_{L²([a,b])}`.
+pub fn norm_l2(f: &dyn Function1D, a: f64, b: f64) -> f64 {
+    inner_product_l2(f, f, a, b).max(0.0).sqrt()
+}
+
+/// Cosine similarity `⟨f,g⟩ / (‖f‖·‖g‖)` in `L²([a,b])`.
+pub fn cosine_similarity_l2(f: &dyn Function1D, g: &dyn Function1D, a: f64, b: f64) -> f64 {
+    let ip = inner_product_l2(f, g, a, b);
+    let nf = norm_l2(f, a, b);
+    let ng = norm_l2(g, a, b);
+    (ip / (nf * ng)).clamp(-1.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::Sine;
+
+    #[test]
+    fn gl_nodes_symmetric_weights_sum_to_two() {
+        for &n in &[1usize, 2, 5, 16, 64] {
+            let (xs, ws) = gauss_legendre(n);
+            assert!((ws.iter().sum::<f64>() - 2.0).abs() < 1e-13, "n = {n}");
+            for i in 0..n {
+                assert!((xs[i] + xs[n - 1 - i]).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn gl_5_known_nodes() {
+        // 5-point GL: largest node = sqrt(5 + 2 sqrt(10/7)) / 3
+        let (xs, _) = gauss_legendre(5);
+        let want = (5.0 + 2.0 * (10.0f64 / 7.0).sqrt()).sqrt() / 3.0;
+        assert!((xs[4] - want).abs() < 1e-14, "{} vs {want}", xs[4]);
+        assert!(xs[2].abs() < 1e-15);
+    }
+
+    #[test]
+    fn gl_exact_for_polynomials() {
+        // n-point GL is exact for degree 2n-1
+        let f = |x: f64| 5.0 * x.powi(7) - 2.0 * x.powi(4) + x;
+        // ∫_{-1}^{1} = -4/5 (only even powers survive)
+        let got = integrate_gl(&f, -1.0, 1.0, 4);
+        assert!((got + 0.8).abs() < 1e-13, "{got}");
+    }
+
+    #[test]
+    fn gl_smooth_integrand() {
+        let f = |x: f64| x.exp();
+        let got = integrate_gl(&f, 0.0, 1.0, 20);
+        assert!((got - (std::f64::consts::E - 1.0)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn cc_weights_sum_to_two_and_integrate() {
+        let (_, ws) = clenshaw_curtis(16);
+        assert!((ws.iter().sum::<f64>() - 2.0).abs() < 1e-12);
+        let f = |x: f64| (3.0 * x).cos();
+        let want = 2.0 * (3.0f64).sin() / 3.0;
+        let got = integrate_cc(&f, -1.0, 1.0, 32);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn adaptive_simpson_kinky_integrand() {
+        let f = |x: f64| x.abs().sqrt();
+        // ∫_{-1}^{1} sqrt|x| dx = 4/3
+        let got = adaptive_simpson(&f, -1.0, 1.0, 1e-10);
+        assert!((got - 4.0 / 3.0).abs() < 1e-8, "{got}");
+    }
+
+    #[test]
+    fn l2_distance_of_shifted_sines_closed_form() {
+        // ‖sin(2πx+δ1) − sin(2πx+δ2)‖²_{L²[0,1]} = 1 − cos(δ1−δ2)
+        let d1 = 0.4;
+        let d2 = 1.9;
+        let f = Sine::paper(d1);
+        let g = Sine::paper(d2);
+        let want = (1.0 - (d1 - d2 as f64).cos()).sqrt();
+        let got = lp_distance(&f, &g, 0.0, 1.0, 2.0);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn cosine_similarity_of_sines_closed_form() {
+        // cossim(sin(2πx+δ1), sin(2πx+δ2)) = cos(δ1 − δ2) on [0,1]
+        let d1 = 0.3;
+        let d2 = 2.0;
+        let f = Sine::paper(d1);
+        let g = Sine::paper(d2);
+        let got = cosine_similarity_l2(&f, &g, 0.0, 1.0);
+        assert!((got - (d1 - d2 as f64).cos()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l1_distance() {
+        // ‖x − 0‖_{L¹[0,1]} = 1/2
+        let f = |x: f64| x;
+        let g = |_x: f64| 0.0;
+        let got = lp_distance(&f, &g, 0.0, 1.0, 1.0);
+        assert!((got - 0.5).abs() < 1e-10);
+    }
+
+    #[test]
+    fn fractional_p_distance() {
+        // p = 0.5 quasi-norm of f(x) = 1: (∫ 1 dx)^2 = 1
+        let f = |_x: f64| 1.0;
+        let g = |_x: f64| 0.0;
+        let got = lp_distance(&f, &g, 0.0, 1.0, 0.5);
+        assert!((got - 1.0).abs() < 1e-10);
+    }
+}

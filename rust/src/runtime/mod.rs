@@ -1,0 +1,338 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Python runs **once** at build time (`make artifacts`); this module is
+//! the only thing touching the compiled pipelines afterwards:
+//!
+//! ```text
+//! artifacts/manifest.json          → [`Manifest`]
+//! artifacts/<pipeline>.hlo.txt     → HloModuleProto::from_text_file
+//!                                  → XlaComputation → client.compile
+//!                                  → [`Pipeline::execute`]
+//! ```
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod pjrt_path;
+
+use crate::json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Static description of one compiled pipeline, read from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSpec {
+    /// pipeline name (e.g. `mc_l2_hash`)
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir
+    pub file: String,
+    /// fixed batch size `B` the pipeline was lowered with
+    pub batch: usize,
+    /// embedding dimension `N`
+    pub dim: usize,
+    /// number of hash functions `K`
+    pub k: usize,
+    /// names of the runtime inputs, in call order
+    pub inputs: Vec<String>,
+}
+
+/// The artifact manifest (`artifacts/manifest.json`).
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// pipelines by name
+    pub pipelines: Vec<PipelineSpec>,
+}
+
+impl Manifest {
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arr = v
+            .get("pipelines")
+            .and_then(|p| p.as_array())
+            .ok_or_else(|| anyhow!("manifest: missing `pipelines` array"))?;
+        let mut pipelines = Vec::new();
+        for p in arr {
+            let field = |k: &str| {
+                p.get(k)
+                    .ok_or_else(|| anyhow!("manifest pipeline: missing `{k}`"))
+            };
+            pipelines.push(PipelineSpec {
+                name: field("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("`name` must be a string"))?
+                    .to_string(),
+                file: field("file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("`file` must be a string"))?
+                    .to_string(),
+                batch: field("batch")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("`batch` must be an integer"))?,
+                dim: field("dim")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("`dim` must be an integer"))?,
+                k: field("k")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("`k` must be an integer"))?,
+                inputs: field("inputs")?
+                    .as_array()
+                    .ok_or_else(|| anyhow!("`inputs` must be an array"))?
+                    .iter()
+                    .map(|s| s.as_str().unwrap_or_default().to_string())
+                    .collect(),
+            });
+        }
+        Ok(Self { pipelines })
+    }
+
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Find a pipeline spec by name.
+    pub fn find(&self, name: &str) -> Option<&PipelineSpec> {
+        self.pipelines.iter().find(|p| p.name == name)
+    }
+}
+
+/// A compiled, executable pipeline.
+pub struct Pipeline {
+    /// the static spec from the manifest
+    pub spec: PipelineSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Pipeline {
+    /// Execute with raw literals (advanced use; most callers want
+    /// [`Pipeline::hash_batch`]).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("pjrt execute: {e}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("pjrt readback: {e}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))
+    }
+
+    /// Run the embed→hash pipeline on a full batch of `B` sample rows.
+    ///
+    /// `samples` is row-major `[B][N]` f32; `proj` is `[N][K]` (already
+    /// folded with embedding scale and `1/r`); `offsets` is `[K]`.
+    /// Returns row-major `[B][K]` i32 signatures.
+    pub fn hash_batch(
+        &self,
+        samples: &[f32],
+        proj: &xla::Literal,
+        offsets: &xla::Literal,
+    ) -> Result<Vec<i32>> {
+        let b = self.spec.batch;
+        let n = self.spec.dim;
+        if samples.len() != b * n {
+            bail!(
+                "batch shape mismatch: got {} values, expected {}x{}",
+                samples.len(),
+                b,
+                n
+            );
+        }
+        let x = xla::Literal::vec1(samples)
+            .reshape(&[b as i64, n as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))?;
+        // manifest input order: samples, proj, offsets
+        let out = self.execute(&[x, clone_literal(proj)?, clone_literal(offsets)?])?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+}
+
+/// The xla crate's `Literal` has no public `Clone`; reshape to the same
+/// dims as a cheap copy.
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape().map_err(|e| anyhow!("literal shape: {e}"))?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    l.reshape(&dims).map_err(|e| anyhow!("clone: {e}"))
+}
+
+/// The PJRT engine: one CPU client + every compiled pipeline.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pipelines: HashMap<String, Pipeline>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and compile every pipeline in the
+    /// manifest found at `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let mut engine = Self {
+            client,
+            pipelines: HashMap::new(),
+            dir: dir.to_path_buf(),
+        };
+        for spec in manifest.pipelines {
+            engine.compile_pipeline(spec)?;
+        }
+        Ok(engine)
+    }
+
+    /// Create an engine with no pipelines (they can be added later) —
+    /// used by tests that compile ad-hoc HLO.
+    pub fn empty() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            pipelines: HashMap::new(),
+            dir: PathBuf::new(),
+        })
+    }
+
+    /// An engine rooted at `dir` with no pipelines compiled yet; use
+    /// [`Engine::compile_pipeline`] to add the ones you need.
+    pub fn with_dir(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            pipelines: HashMap::new(),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Compile and register one pipeline (HLO file resolved against the
+    /// engine's artifacts dir).
+    pub fn compile_pipeline(&mut self, spec: PipelineSpec) -> Result<()> {
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("loading HLO {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+        self.pipelines
+            .insert(spec.name.clone(), Pipeline { spec, exe });
+        Ok(())
+    }
+
+    /// Look up a compiled pipeline.
+    pub fn pipeline(&self, name: &str) -> Option<&Pipeline> {
+        self.pipelines.get(name)
+    }
+
+    /// Names of all registered pipelines.
+    pub fn pipeline_names(&self) -> Vec<&str> {
+        self.pipelines.keys().map(String::as_str).collect()
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// A batched executor around one pipeline: accepts any number of sample
+/// rows, pads to the pipeline's fixed batch `B`, executes, and unpads —
+/// the adapter between the dynamic batcher and the static-shape artifact.
+pub struct BatchedExecutor<'e> {
+    pipeline: &'e Pipeline,
+    proj: xla::Literal,
+    offsets: xla::Literal,
+}
+
+impl<'e> BatchedExecutor<'e> {
+    /// Bind a pipeline to a *folded* projection matrix (`[N][K]`, embedding
+    /// scale and `1/r` already multiplied in) and offsets (`[K]`).
+    pub fn new(pipeline: &'e Pipeline, proj_rm: &[f32], offsets: &[f32]) -> Result<Self> {
+        let n = pipeline.spec.dim;
+        let k = pipeline.spec.k;
+        if proj_rm.len() != n * k {
+            bail!("projection must be {n}x{k}");
+        }
+        if offsets.len() != k {
+            bail!("offsets must have length {k}");
+        }
+        let proj = xla::Literal::vec1(proj_rm)
+            .reshape(&[n as i64, k as i64])
+            .map_err(|e| anyhow!("proj reshape: {e}"))?;
+        let offsets = xla::Literal::vec1(offsets);
+        Ok(Self {
+            pipeline,
+            proj,
+            offsets,
+        })
+    }
+
+    /// The underlying pipeline spec.
+    pub fn spec(&self) -> &PipelineSpec {
+        &self.pipeline.spec
+    }
+
+    /// Hash an arbitrary number of rows (each of length `N`), padding the
+    /// final partial batch with zeros. Returns one signature (length `K`)
+    /// per input row.
+    pub fn hash_rows(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<i32>>> {
+        let b = self.pipeline.spec.batch;
+        let n = self.pipeline.spec.dim;
+        let k = self.pipeline.spec.k;
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(b) {
+            let mut flat = vec![0f32; b * n];
+            for (i, row) in chunk.iter().enumerate() {
+                if row.len() != n {
+                    bail!("row {} has length {}, expected {n}", i, row.len());
+                }
+                flat[i * n..(i + 1) * n].copy_from_slice(row);
+            }
+            let hashes = self.pipeline.hash_batch(&flat, &self.proj, &self.offsets)?;
+            for i in 0..chunk.len() {
+                out.push(hashes[i * k..(i + 1) * k].to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE_MANIFEST: &str = r#"{
+      "pipelines": [
+        {"name": "mc_l2_hash", "file": "mc_l2_hash.hlo.txt",
+         "batch": 128, "dim": 64, "k": 32,
+         "inputs": ["samples", "proj", "offsets"]}
+      ]
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(SAMPLE_MANIFEST).unwrap();
+        assert_eq!(m.pipelines.len(), 1);
+        let p = m.find("mc_l2_hash").unwrap();
+        assert_eq!(p.batch, 128);
+        assert_eq!(p.dim, 64);
+        assert_eq!(p.k, 32);
+        assert_eq!(p.inputs, vec!["samples", "proj", "offsets"]);
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"pipelines": [{"name": "x"}]}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

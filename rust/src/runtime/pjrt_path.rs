@@ -1,0 +1,130 @@
+//! [`PjrtHashPath`] — the production hash path: the coordinator's batched
+//! `samples → signature` transform executed by the AOT-compiled XLA
+//! pipeline instead of the pure-Rust fold.
+//!
+//! Semantics are identical to [`FoldedHashPath`] by construction: both
+//! consume the *same* folded matrix/offsets; the PJRT path just runs the
+//! matmul+floor on the XLA:CPU executable lowered from the Pallas kernel.
+//! (Integration tests assert signature agreement between the two paths.)
+
+use super::{Engine, Manifest};
+use crate::coordinator::hashpath::{FoldedHashPath, HashPath};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Engine + bound literals, guarded for shared use.
+///
+/// SAFETY: the xla crate's handles are raw pointers without `Send`/`Sync`
+/// markers, but the PJRT CPU client is thread-safe for compilation and
+/// execution (it is exactly what the multi-threaded C API serves). We
+/// still serialize all access through a `Mutex`, so the unsafe markers
+/// only assert that *moving* the handles across threads is sound — no
+/// concurrent aliasing ever happens.
+struct Guarded {
+    engine: Engine,
+    pipeline: String,
+    proj: xla::Literal,
+    offsets: xla::Literal,
+}
+
+unsafe impl Send for Guarded {}
+
+/// PJRT-backed implementation of [`HashPath`].
+pub struct PjrtHashPath {
+    inner: Mutex<Guarded>,
+    /// kept for `embed_row` (re-ranking) and as the fallback reference
+    folded: FoldedHashPath,
+    batch: usize,
+    dim: usize,
+    k: usize,
+}
+
+impl PjrtHashPath {
+    /// Load the artifacts at `dir`, compile pipeline `name`, and bind the
+    /// folded matrix/offsets from `folded` (so both backends compute the
+    /// same function).
+    pub fn from_folded(dir: &Path, name: &str, folded: FoldedHashPath) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let spec = manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("pipeline `{name}` not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            spec.dim == folded.dim(),
+            "artifact dim {} != service dim {}",
+            spec.dim,
+            folded.dim()
+        );
+        anyhow::ensure!(
+            spec.k == folded.signature_len(),
+            "artifact k {} != service k*l {}",
+            spec.k,
+            folded.signature_len()
+        );
+        // only compile the one pipeline the service uses
+        let mut engine = Engine::with_dir(dir)?;
+        engine.compile_pipeline(spec.clone())?;
+        let n = spec.dim;
+        let k = spec.k;
+        let proj = xla::Literal::vec1(&folded.matrix_f32())
+            .reshape(&[n as i64, k as i64])
+            .map_err(|e| anyhow!("proj literal: {e}"))?;
+        let offsets = xla::Literal::vec1(&folded.offsets_f32());
+        Ok(Self {
+            inner: Mutex::new(Guarded {
+                engine,
+                pipeline: name.to_string(),
+                proj,
+                offsets,
+            }),
+            batch: spec.batch,
+            dim: n,
+            k,
+            folded,
+        })
+    }
+
+    /// The fixed batch size of the compiled pipeline.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+impl HashPath for PjrtHashPath {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn signature_len(&self) -> usize {
+        self.k
+    }
+
+    fn hash_rows(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<i32>>> {
+        let g = self.inner.lock().unwrap();
+        let pipeline = g
+            .engine
+            .pipeline(&g.pipeline)
+            .ok_or_else(|| anyhow!("pipeline vanished"))?;
+        let b = self.batch;
+        let n = self.dim;
+        let k = self.k;
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(b) {
+            let mut flat = vec![0f32; b * n];
+            for (i, row) in chunk.iter().enumerate() {
+                anyhow::ensure!(row.len() == n, "row length {} != {n}", row.len());
+                flat[i * n..(i + 1) * n].copy_from_slice(row);
+            }
+            let hashes = pipeline.hash_batch(&flat, &g.proj, &g.offsets)?;
+            for i in 0..chunk.len() {
+                out.push(hashes[i * k..(i + 1) * k].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    fn embed_row(&self, row: &[f32]) -> Vec<f64> {
+        self.folded.embed_row(row)
+    }
+}

@@ -1,0 +1,165 @@
+//! One-call construction of a *tuned* LSH search engine: estimate the
+//! workload's distance scales from the corpus, pick `(k, L, r)` with
+//! [`crate::lsh::tuning`], build the bank and index, and return a ready
+//! query engine — the "it just works" entry point a downstream user
+//! reaches for first.
+
+use crate::hashing::{HashBank, PStableHashBank};
+use crate::lsh::{estimate_distances, tune, IndexConfig, LshIndex, Tuning, TuningGoal};
+use crate::search::{Hit, QueryStats};
+use crate::util::rng::Rng64;
+
+/// A self-tuned LSH k-NN engine over a vector corpus.
+pub struct TunedIndex {
+    index: LshIndex,
+    bank: PStableHashBank,
+    vecs: Vec<Vec<f64>>,
+    /// the tuning that was selected
+    pub tuning: Tuning,
+    /// multiprobe depth applied at query time
+    pub probe_depth: usize,
+}
+
+/// Options for [`TunedIndex::build`].
+#[derive(Debug, Clone, Copy)]
+pub struct TunedOptions {
+    /// required recall proxy at the near distance (default 0.95)
+    pub recall_target: f64,
+    /// allowed candidate fraction at the far distance (default 0.05)
+    pub candidate_budget: f64,
+    /// multiprobe depth at query time (default 1)
+    pub probe_depth: usize,
+}
+
+impl Default for TunedOptions {
+    fn default() -> Self {
+        Self {
+            recall_target: 0.95,
+            candidate_budget: 0.05,
+            probe_depth: 1,
+        }
+    }
+}
+
+impl TunedIndex {
+    /// Estimate distances from `vecs`, tune, and index everything.
+    /// Returns `None` when no feasible tuning exists (degenerate corpus).
+    pub fn build(vecs: Vec<Vec<f64>>, opts: TunedOptions, rng: &mut dyn Rng64) -> Option<Self> {
+        assert!(vecs.len() >= 3, "need at least 3 vectors to estimate scales");
+        let dim = vecs[0].len();
+        assert!(vecs.iter().all(|v| v.len() == dim));
+        let (c_near, c_far) = estimate_distances(&vecs);
+        if !(c_far > c_near && c_near.is_finite() && c_near > 0.0) {
+            return None;
+        }
+        let goal = TuningGoal {
+            c_near,
+            c_far,
+            recall_target: opts.recall_target,
+            candidate_budget: opts.candidate_budget,
+            p: 2.0,
+        };
+        let tuning = tune(&goal, 16, 64)?;
+        let cfg: IndexConfig = tuning.config;
+        let bank = PStableHashBank::new(dim, cfg.total_hashes(), 2.0, tuning.r, rng);
+        let mut index = LshIndex::new(cfg);
+        for (i, v) in vecs.iter().enumerate() {
+            index.insert(i as u64, &bank.hash(v));
+        }
+        Some(Self {
+            index,
+            bank,
+            vecs,
+            tuning,
+            probe_depth: opts.probe_depth,
+        })
+    }
+
+    /// Number of indexed vectors.
+    pub fn len(&self) -> usize {
+        self.vecs.len()
+    }
+
+    /// Whether the corpus is empty (never: `build` requires ≥ 3).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// k-NN query with exact ℓ² re-ranking.
+    pub fn query(&self, q: &[f64], k: usize) -> (Vec<Hit>, QueryStats) {
+        let sig = self.bank.hash(q);
+        let candidates = if self.probe_depth == 0 {
+            self.index.query(&sig)
+        } else {
+            self.index.query_multiprobe(&sig, self.probe_depth)
+        };
+        let stats = QueryStats {
+            distance_evals: candidates.len(),
+            candidates: candidates.len(),
+        };
+        let mut hits: Vec<Hit> = candidates
+            .into_iter()
+            .map(|id| Hit {
+                id,
+                distance: crate::embedding::l2_dist(q, &self.vecs[id as usize]),
+            })
+            .collect();
+        hits.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+        hits.truncate(k);
+        (hits, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{Embedder, Interval, MonteCarloEmbedder};
+    use crate::functions::Distribution1D;
+    use crate::search::{recall_at_k, BruteForceKnn};
+    use crate::util::rng::Xoshiro256pp;
+    use crate::wasserstein::QUANTILE_CLIP;
+    use crate::workload::gmm_corpus;
+
+    #[test]
+    fn tuned_index_end_to_end() {
+        let mut rng = Xoshiro256pp::seed_from_u64(61);
+        let omega = Interval::new(QUANTILE_CLIP, 1.0 - QUANTILE_CLIP);
+        let emb = MonteCarloEmbedder::new(omega, 64, 2.0, &mut rng);
+        let corpus = gmm_corpus(800, &mut rng);
+        let vecs: Vec<Vec<f64>> = corpus
+            .iter()
+            .map(|d| emb.embed_fn(&d.quantile_fn()))
+            .collect();
+        let engine = TunedIndex::build(vecs.clone(), TunedOptions::default(), &mut rng)
+            .expect("feasible");
+        assert_eq!(engine.len(), 800);
+        eprintln!("tuning: {:?}", engine.tuning);
+
+        // recall/pruning over a handful of held-in queries
+        let ids: Vec<u64> = (0..800u64).collect();
+        let mut recall_acc = 0.0;
+        let mut evals = 0usize;
+        let queries = 20;
+        for qi in 0..queries {
+            let q = &vecs[qi * 37 % 800];
+            let (exact, _) =
+                BruteForceKnn::new(&ids, |id| crate::embedding::l2_dist(q, &vecs[id as usize]))
+                    .query(10);
+            let (approx, stats) = engine.query(q, 10);
+            recall_acc += recall_at_k(&exact, &approx, 10);
+            evals += stats.distance_evals;
+        }
+        let recall = recall_acc / queries as f64;
+        let mean_evals = evals as f64 / queries as f64;
+        assert!(recall > 0.8, "recall {recall}");
+        assert!(mean_evals < 500.0, "evals {mean_evals}");
+    }
+
+    #[test]
+    fn degenerate_corpus_returns_none() {
+        let mut rng = Xoshiro256pp::seed_from_u64(63);
+        // identical vectors: c_near == 0, no feasible tuning
+        let vecs = vec![vec![1.0, 2.0]; 10];
+        assert!(TunedIndex::build(vecs, TunedOptions::default(), &mut rng).is_none());
+    }
+}

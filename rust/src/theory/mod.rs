@@ -1,0 +1,264 @@
+//! Theoretical collision probabilities and the paper's Theorem 1 bounds.
+//!
+//! These curves are what every figure plots the observed rates against:
+//!
+//! * Eq. 7 — SimHash: `P = 1 − arccos(cossim)/π`.
+//! * Eq. 8 — p-stable hash: `P = ∫₀^{r/c} f_p(s)(1 − cs/r) ds` with `f_p`
+//!   the pdf of the absolute value of a standard p-stable variate. Closed
+//!   forms for `p = 1, 2`; numeric evaluation (Nolan-style integral for the
+//!   stable pdf + Gauss–Legendre) for general `p ∈ (0, 2)`.
+//! * Theorem 1 — the upper/lower collision-probability bands under an
+//!   embedding error `‖ε‖ ≤ ε`.
+
+use crate::quadrature::gauss_legendre;
+use crate::util::special::{normal_cdf, normal_pdf};
+use std::f64::consts::PI;
+
+/// Eq. 7: SimHash collision probability at cosine similarity `s ∈ [-1, 1]`.
+pub fn simhash_collision_probability(s: f64) -> f64 {
+    let s = s.clamp(-1.0, 1.0);
+    1.0 - s.acos() / PI
+}
+
+/// Eq. 8 specialized to `p = 2` (Gaussian): closed form from Datar et al.:
+/// `P(c) = 2Φ(r/c) − 1 − 2/(√(2π) (r/c)) (1 − e^{−r²/(2c²)})`.
+pub fn gaussian_collision_probability(c: f64, r: f64) -> f64 {
+    assert!(r > 0.0);
+    if c <= 0.0 {
+        return 1.0;
+    }
+    let s = r / c;
+    2.0 * normal_cdf(s) - 1.0 - 2.0 / ((2.0 * PI).sqrt() * s) * (1.0 - (-s * s / 2.0).exp())
+}
+
+/// Eq. 8 specialized to `p = 1` (Cauchy):
+/// `P(c) = (2/π) arctan(r/c) − 1/(π (r/c)) ln(1 + (r/c)²)`.
+pub fn cauchy_collision_probability(c: f64, r: f64) -> f64 {
+    assert!(r > 0.0);
+    if c <= 0.0 {
+        return 1.0;
+    }
+    let s = r / c;
+    2.0 / PI * s.atan() - (1.0 + s * s).ln() / (PI * s)
+}
+
+/// pdf of a standard symmetric `p`-stable variate, by numerical inversion
+/// of the characteristic function: `f(x) = (1/π) ∫₀^∞ e^{−t^p} cos(xt) dt`.
+///
+/// Adequate for the moderate `x` needed by collision-probability integrals
+/// (the oscillatory tail is handled by splitting at the cosine zeros).
+pub fn stable_pdf(x: f64, p: f64) -> f64 {
+    assert!(p > 0.0 && p <= 2.0);
+    if (p - 2.0).abs() < 1e-12 {
+        // Convention note: we follow Datar et al., whose 2-stable hash
+        // draws α ~ N(0,1) — so the "standard" 2-stable density here is
+        // φ(x), not the e^{-t²} characteristic-function normalization
+        // (which would be N(0,2)). The sampler in util::rng matches.
+        return normal_pdf(x);
+    }
+    if (p - 1.0).abs() < 1e-12 {
+        return 1.0 / (PI * (1.0 + x * x));
+    }
+    let x = x.abs();
+    // Integrate e^{-t^p} cos(xt) over [0, T] with panels no wider than the
+    // cosine half-period (and no wider than 1 so the e^{-t^p} decay near
+    // t = 0 is always resolved).
+    let (nodes, weights) = gauss_legendre(32);
+    let mut total = 0.0;
+    let panel_width = if x > 1e-9 { (PI / x).min(1.0) } else { 1.0 };
+    let mut a = 0.0;
+    for _ in 0..2000 {
+        let b = a + panel_width;
+        let mid = 0.5 * (a + b);
+        let half = 0.5 * (b - a);
+        let mut panel = 0.0;
+        for (t, w) in nodes.iter().zip(&weights) {
+            let u = mid + half * t;
+            panel += w * (-(u.powf(p))).exp() * (x * u).cos();
+        }
+        panel *= half;
+        total += panel;
+        a = b;
+        // stop once the envelope e^{-a^p} is negligible
+        if (-(a.powf(p))).exp() < 1e-16 {
+            break;
+        }
+    }
+    (total / PI).max(0.0)
+}
+
+/// Eq. 8 for general `p`: `P(c) = ∫₀^{r/c} f_p(s) (1 − cs/r) ds` where
+/// `f_p(s) = 2 · stable_pdf(s, p)` is the density of `|X|`.
+pub fn pstable_collision_probability(c: f64, r: f64, p: f64) -> f64 {
+    assert!(r > 0.0);
+    if c <= 0.0 {
+        return 1.0;
+    }
+    if (p - 2.0).abs() < 1e-12 {
+        return gaussian_collision_probability(c, r);
+    }
+    if (p - 1.0).abs() < 1e-12 {
+        return cauchy_collision_probability(c, r);
+    }
+    let s_max = r / c;
+    let (nodes, weights) = gauss_legendre(64);
+    let mid = 0.5 * s_max;
+    let half = 0.5 * s_max;
+    let mut acc = 0.0;
+    for (t, w) in nodes.iter().zip(&weights) {
+        let s = mid + half * t;
+        acc += w * 2.0 * stable_pdf(s, p) * (1.0 - c * s / r);
+    }
+    (acc * half).clamp(0.0, 1.0)
+}
+
+/// `‖f_p‖_∞` — the sup of the density of `|X|` for a standard p-stable `X`
+/// (attained at 0 for the symmetric densities used here).
+pub fn stable_abs_pdf_sup(p: f64) -> f64 {
+    2.0 * stable_pdf(0.0, p)
+}
+
+/// Theorem 1: bounds on the collision probability of the *embedded* hash
+/// when the embedding carries absolute error `ε` (i.e. `‖ε_f‖ + ‖ε_g‖ ≤ ε`)
+/// at true distance `c`, bucket width `r`, stability index `p`.
+///
+/// Returns `(lower, upper)`:
+/// * upper = `P + min(ε/(c−ε), ε r ‖f_p‖_∞ / (2(c−ε)²))` (for `ε < c`)
+/// * lower = `P − min(2ε/(c+ε), ε r ‖f_p‖_∞ / (2(c+ε)²))`
+pub fn theorem1_bounds(c: f64, r: f64, p: f64, eps: f64) -> (f64, f64) {
+    assert!(c > 0.0 && eps >= 0.0);
+    let pr = pstable_collision_probability(c, r, p);
+    let sup = stable_abs_pdf_sup(p);
+    let upper = if eps < c {
+        let t1 = eps / (c - eps);
+        let t2 = eps * r * sup / (2.0 * (c - eps) * (c - eps));
+        (pr + t1.min(t2)).min(1.0)
+    } else {
+        1.0
+    };
+    let t1 = 2.0 * eps / (c + eps);
+    let t2 = eps * r * sup / (2.0 * (c + eps) * (c + eps));
+    let lower = (pr - t1.min(t2)).max(0.0);
+    (lower, upper)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quadrature::integrate_gl;
+
+    #[test]
+    fn simhash_extremes() {
+        assert!((simhash_collision_probability(1.0) - 1.0).abs() < 1e-12);
+        assert!((simhash_collision_probability(-1.0)).abs() < 1e-12);
+        assert!((simhash_collision_probability(0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_closed_form_matches_integral() {
+        // Direct quadrature of Eq. 8 vs the closed form.
+        for &(c, r) in &[(0.5, 1.0), (1.0, 1.0), (2.0, 1.0), (1.0, 4.0)] {
+            let integral = {
+                let f = move |t: f64| {
+                    2.0 / (c * (2.0 * PI).sqrt())
+                        * (-(t * t) / (2.0 * c * c)).exp()
+                        * (1.0 - t / r)
+                };
+                integrate_gl(&f, 0.0, r, 128)
+            };
+            let closed = gaussian_collision_probability(c, r);
+            assert!(
+                (integral - closed).abs() < 1e-10,
+                "c={c} r={r}: {integral} vs {closed}"
+            );
+        }
+    }
+
+    #[test]
+    fn cauchy_closed_form_matches_integral() {
+        for &(c, r) in &[(0.5, 1.0), (1.0, 2.0), (3.0, 1.0)] {
+            let integral = {
+                let f = move |t: f64| {
+                    (2.0 / (PI * c)) / (1.0 + (t / c) * (t / c)) * (1.0 - t / r)
+                };
+                integrate_gl(&f, 0.0, r, 256)
+            };
+            let closed = cauchy_collision_probability(c, r);
+            assert!(
+                (integral - closed).abs() < 1e-9,
+                "c={c} r={r}: {integral} vs {closed}"
+            );
+        }
+    }
+
+    #[test]
+    fn stable_pdf_special_cases() {
+        // p = 1 must be Cauchy, p = 2 must be N(0, 1) (Datar convention).
+        assert!((stable_pdf(0.0, 1.0) - 1.0 / PI).abs() < 1e-12);
+        assert!((stable_pdf(1.0, 1.0) - 1.0 / (2.0 * PI)).abs() < 1e-12);
+        assert!((stable_pdf(1.0, 2.0) - normal_pdf(1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stable_pdf_generic_integrates_to_one() {
+        // ∫ f_{1.5} = 1 (symmetric: 2 ∫₀^∞). The heavy x^{-2.5} tail past
+        // the truncation at 40 carries ~1.6e-3 of mass.
+        let p = 1.5;
+        let f = move |x: f64| stable_pdf(x, p);
+        let total = 2.0 * integrate_gl(&f, 0.0, 40.0, 400);
+        assert!((total - 1.0).abs() < 4e-3, "total {total}");
+    }
+
+    #[test]
+    fn generic_p_matches_closed_forms_at_1_and_2() {
+        // The numeric path (forced via p ± tiny offsets) agrees with the
+        // closed forms.
+        for &c in &[0.5, 1.0, 2.0] {
+            let num = pstable_collision_probability(c, 1.0, 1.0 + 1e-9);
+            let closed = cauchy_collision_probability(c, 1.0);
+            assert!((num - closed).abs() < 1e-3, "c={c}: {num} vs {closed}");
+        }
+    }
+
+    #[test]
+    fn collision_probability_monotone_in_c() {
+        for &p in &[0.5, 1.0, 1.5, 2.0] {
+            let mut prev = 1.0;
+            for i in 1..20 {
+                let c = 0.2 * i as f64;
+                let pr = pstable_collision_probability(c, 1.0, p);
+                assert!(pr <= prev + 1e-9, "p={p} c={c}: {pr} > {prev}");
+                assert!((0.0..=1.0).contains(&pr));
+                prev = pr;
+            }
+        }
+    }
+
+    #[test]
+    fn sup_values() {
+        // ‖f_2‖_∞ = 2 φ(0) = √(2/π); ‖f_1‖_∞ = 2/π.
+        assert!((stable_abs_pdf_sup(2.0) - (2.0 / PI).sqrt()).abs() < 1e-12);
+        assert!((stable_abs_pdf_sup(1.0) - 2.0 / PI).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theorem1_bands_bracket_p_and_tighten() {
+        let (c, r, p) = (1.0, 1.0, 2.0);
+        let pr = pstable_collision_probability(c, r, p);
+        let (lo1, hi1) = theorem1_bounds(c, r, p, 0.2);
+        let (lo2, hi2) = theorem1_bounds(c, r, p, 0.02);
+        assert!(lo1 <= pr && pr <= hi1);
+        assert!(lo2 <= pr && pr <= hi2);
+        assert!(hi2 - lo2 < hi1 - lo1, "bands must tighten as ε → 0");
+        // ε = 0 collapses the band
+        let (lo0, hi0) = theorem1_bounds(c, r, p, 0.0);
+        assert!((lo0 - pr).abs() < 1e-12 && (hi0 - pr).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theorem1_degenerate_eps_ge_c() {
+        let (lo, hi) = theorem1_bounds(0.5, 1.0, 2.0, 0.6);
+        assert_eq!(hi, 1.0);
+        assert!(lo >= 0.0);
+    }
+}

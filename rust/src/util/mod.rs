@@ -1,0 +1,14 @@
+//! Low-level numeric substrates: pseudo-random number generation, stable
+//! distributions, and special functions.
+//!
+//! Everything here is implemented from scratch (the build environment is
+//! fully offline); algorithms follow standard published references cited on
+//! each item.
+
+pub mod proptest;
+pub mod rng;
+pub mod special;
+pub mod stats;
+
+pub use rng::{Rng64, SplitMix64, Xoshiro256pp};
+pub use special::{erf, erfc, normal_cdf, normal_pdf, normal_quantile};

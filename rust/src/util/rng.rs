@@ -1,0 +1,366 @@
+//! Pseudo-random number generation.
+//!
+//! * [`SplitMix64`] — Steele, Lea & Flood (2014). Used for seeding and for
+//!   cheap stateless streams (the lazy coefficient extension of Algorithm 1
+//!   keys a SplitMix64 stream per hash function so coefficient `i` is
+//!   reproducible without storing the prefix).
+//! * [`Xoshiro256pp`] — Blackman & Vigna (2019), `xoshiro256++`. The default
+//!   generator everywhere else.
+//!
+//! On top of raw bits we provide the samplers the paper needs:
+//! uniforms, Gaussians (for the 2-stable hash and SimHash), Cauchy (1-stable,
+//! for the `W¹`/earth-mover hash), and general `p`-stable variates via the
+//! Chambers–Mallows–Stuck transform (for any `p ∈ (0, 2]`).
+
+/// A 64-bit pseudo-random generator.
+///
+/// The trait is object-safe so hash banks can hold `Box<dyn Rng64>` when the
+/// generator is chosen at run time from config.
+pub trait Rng64 {
+    /// Next raw 64 random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    fn uniform(&mut self) -> f64 {
+        // Take the top 53 bits -> [0, 2^53), scale by 2^-53.
+        ((self.next_u64() >> 11) as f64) * (1.0 / 9007199254740992.0)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's multiply-shift rejection.
+    fn uniform_usize(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= lo.wrapping_neg() % n {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via the Marsaglia polar method.
+    ///
+    /// Polar (not Box–Muller) avoids trig calls; we deliberately *discard*
+    /// the second variate to keep the trait stateless — hash-bank
+    /// construction is not on the request path, so the 2x cost is irrelevant
+    /// and reproducibility across call sites is simpler.
+    fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Standard Cauchy variate (1-stable), via tan of a uniform angle.
+    fn cauchy(&mut self) -> f64 {
+        // Avoid the exact endpoints where tan blows up to ±inf.
+        loop {
+            let u = self.uniform();
+            if u > 0.0 && u < 1.0 {
+                return (std::f64::consts::PI * (u - 0.5)).tan();
+            }
+        }
+    }
+
+    /// Symmetric `alpha`-stable variate (`0 < alpha <= 2`), standard scale,
+    /// via the Chambers–Mallows–Stuck (1976) transform.
+    ///
+    /// `alpha = 2` reduces to `N(0, 2)`; we rescale so that `alpha = 2`
+    /// yields a *standard* normal, matching the convention of Datar et al.
+    /// (2004) where the 2-stable hash draws `α_i ~ N(0,1)`. `alpha = 1`
+    /// is standard Cauchy.
+    fn stable(&mut self, alpha: f64) -> f64 {
+        assert!(alpha > 0.0 && alpha <= 2.0, "stability index out of range");
+        if (alpha - 2.0).abs() < 1e-12 {
+            return self.normal();
+        }
+        if (alpha - 1.0).abs() < 1e-12 {
+            return self.cauchy();
+        }
+        // CMS for symmetric stable (beta = 0):
+        //   X = sin(alpha * U) / cos(U)^{1/alpha}
+        //       * ( cos(U - alpha*U) / W )^{(1-alpha)/alpha}
+        // with U ~ Uniform(-pi/2, pi/2), W ~ Exp(1).
+        let u = std::f64::consts::FRAC_PI_2 * (2.0 * self.uniform() - 1.0);
+        let w = loop {
+            let e = -self.uniform().ln();
+            if e.is_finite() && e > 0.0 {
+                break e;
+            }
+        };
+        let num = (alpha * u).sin();
+        let den = u.cos().powf(1.0 / alpha);
+        let tail = ((u - alpha * u).cos() / w).powf((1.0 - alpha) / alpha);
+        num / den * tail
+    }
+
+    /// Fill `buf` with i.i.d. standard normals.
+    fn fill_normal(&mut self, buf: &mut [f64]) {
+        for x in buf.iter_mut() {
+            *x = self.normal();
+        }
+    }
+
+    /// Fisher–Yates shuffle. (`Self: Sized` keeps the trait dyn-safe.)
+    fn shuffle<T>(&mut self, xs: &mut [T])
+    where
+        Self: Sized,
+    {
+        for i in (1..xs.len()).rev() {
+            let j = self.uniform_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// SplitMix64 — a tiny, high-quality 64-bit generator. Passes BigCrush when
+/// used as designed; primarily used here for seeding and keyed streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// The `i`-th output of the stream seeded by `seed`, without mutation.
+    /// Used for lazy/virtual infinite coefficient vectors (Algorithm 1).
+    pub fn nth(seed: u64, i: u64) -> u64 {
+        let mut s = Self::new(seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15)));
+        s.next_u64()
+    }
+}
+
+impl Rng64 for SplitMix64 {
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ 1.0 (Blackman & Vigna, 2019). The workhorse generator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed the full 256-bit state from a 64-bit seed through SplitMix64,
+    /// as recommended by the authors.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for si in s.iter_mut() {
+            *si = sm.next_u64();
+        }
+        // All-zero state is invalid (fixed point); SplitMix64 cannot emit
+        // four zeros in a row for any seed, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Self { s }
+    }
+
+    /// Jump ahead 2^128 steps: used to carve independent substreams for
+    /// worker threads from a single master seed.
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180ec6d33cfd0aba,
+            0xd5a61266f0c9392c,
+            0xa9582618e03fc9aa,
+            0x39abdc4529b1661c,
+        ];
+        let mut s = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j & (1u64 << b)) != 0 {
+                    for (acc, cur) in s.iter_mut().zip(self.s.iter()) {
+                        *acc ^= cur;
+                    }
+                }
+                self.next_u64();
+            }
+        }
+        self.s = s;
+    }
+
+    /// A fresh generator 2^128 steps ahead; advances `self` past the jump.
+    pub fn split(&mut self) -> Self {
+        let child = *self;
+        self.jump();
+        child
+    }
+}
+
+impl Rng64 for Xoshiro256pp {
+    fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference sequence for seed 1234567 from the public-domain
+        // splitmix64.c by Sebastiano Vigna.
+        let mut g = SplitMix64::new(1234567);
+        let got: Vec<u64> = (0..3).map(|_| g.next_u64()).collect();
+        assert_eq!(got[0], 6457827717110365317);
+        assert_eq!(got[1], 3203168211198807973);
+        assert_eq!(got[2], 9817491932198370423);
+    }
+
+    #[test]
+    fn xoshiro_nonzero_and_distinct() {
+        let mut g = Xoshiro256pp::seed_from_u64(42);
+        let a = g.next_u64();
+        let b = g.next_u64();
+        assert_ne!(a, b);
+        assert_ne!(a, 0);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut g = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let u = g.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut g = Xoshiro256pp::seed_from_u64(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| g.uniform()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 3e-3, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 3e-3, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Xoshiro256pp::seed_from_u64(13);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn cauchy_median_and_quartiles() {
+        // The Cauchy has no moments; check median ~ 0 and quartiles ~ ±1.
+        let mut g = Xoshiro256pp::seed_from_u64(17);
+        let n = 100_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| g.cauchy()).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[n / 2];
+        let q1 = xs[n / 4];
+        let q3 = xs[3 * n / 4];
+        assert!(med.abs() < 0.03, "median {med}");
+        assert!((q1 + 1.0).abs() < 0.05, "q1 {q1}");
+        assert!((q3 - 1.0).abs() < 0.05, "q3 {q3}");
+    }
+
+    #[test]
+    fn stable_matches_special_cases() {
+        // alpha = 2 must be standard normal; alpha = 1 standard Cauchy.
+        let mut g = Xoshiro256pp::seed_from_u64(19);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| g.stable(2.0)).collect();
+        let var = xs.iter().map(|x| x * x).sum::<f64>() / n as f64;
+        assert!((var - 1.0).abs() < 0.03, "alpha=2 var {var}");
+
+        let mut ys: Vec<f64> = (0..n).map(|_| g.stable(1.0)).collect();
+        ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((ys[3 * n / 4] - 1.0).abs() < 0.06, "alpha=1 q3 {}", ys[3 * n / 4]);
+    }
+
+    #[test]
+    fn stable_generic_alpha_symmetric() {
+        // For alpha = 1.5, the distribution is symmetric: median ~ 0 and
+        // P(X > 0) ~ 1/2.
+        let mut g = Xoshiro256pp::seed_from_u64(23);
+        let n = 100_000;
+        let pos = (0..n).filter(|_| g.stable(1.5) > 0.0).count();
+        let frac = pos as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.01, "P(X>0) = {frac}");
+    }
+
+    #[test]
+    fn uniform_usize_unbiased_small_n() {
+        let mut g = Xoshiro256pp::seed_from_u64(29);
+        let mut counts = [0usize; 5];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[g.uniform_usize(5)] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.2).abs() < 0.01, "bin fraction {frac}");
+        }
+    }
+
+    #[test]
+    fn jump_produces_disjoint_streams() {
+        let mut a = Xoshiro256pp::seed_from_u64(99);
+        let mut b = a;
+        b.jump();
+        let xs: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn splitmix_nth_is_stateless_random_access() {
+        let a = SplitMix64::nth(5, 10);
+        let b = SplitMix64::nth(5, 10);
+        let c = SplitMix64::nth(5, 11);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut g = Xoshiro256pp::seed_from_u64(31);
+        let mut xs: Vec<u32> = (0..100).collect();
+        g.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+    }
+}

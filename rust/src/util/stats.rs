@@ -1,0 +1,149 @@
+//! Small statistics helpers shared by experiments, benches, and metrics.
+
+/// Running mean/variance via Welford's algorithm — numerically stable and
+/// single-pass, used by the bench harness and service metrics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (0 if fewer than 2 observations).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Population standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Quantile of a *sorted* slice with linear interpolation (type-7, the
+/// numpy default). `q` in `[0, 1]`.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Pearson correlation between two equal-length slices.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx).powi(2);
+        dy += (y - my).powi(2);
+    }
+    num / (dx.sqrt() * dy.sqrt())
+}
+
+/// Root-mean-square deviation between paired observations — the headline
+/// "observed vs theoretical collision rate" agreement metric in
+/// EXPERIMENTS.md.
+pub fn rmse(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    (xs.iter()
+        .zip(ys)
+        .map(|(x, y)| (x - y).powi(2))
+        .sum::<f64>()
+        / n)
+        .sqrt()
+}
+
+/// Maximum absolute deviation between paired observations.
+pub fn max_abs_dev(xs: &[f64], ys: &[f64]) -> f64 {
+    xs.iter()
+        .zip(ys)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn quantile_interpolation() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        assert_eq!(quantile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 3.0);
+        assert!((quantile_sorted(&xs, 0.5) - 1.5).abs() < 1e-12);
+        assert!((quantile_sorted(&xs, 0.25) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_and_maxdev() {
+        let xs = [0.0, 0.0];
+        let ys = [3.0, 4.0];
+        assert!((rmse(&xs, &ys) - (12.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(max_abs_dev(&xs, &ys), 4.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! The Indyk–Thaper (2003) grid embedding of `W¹` into `ℓ¹` — the
+//! related-work baseline (§2.3) against which the paper's continuous
+//! methods are compared in experiment E7.
+//!
+//! A distribution supported on `[0, 1)` is summarized by a pyramid of
+//! dyadic histograms; level `ℓ` has `2^ℓ` cells weighted by the cell size
+//! `2^{-ℓ}`. For two distributions `f, g` the ℓ¹ distance between their
+//! embeddings approximates `W¹(f, g)` within an `O(log n)` factor, and an
+//! ℓ¹ LSH (1-stable hash) on the embedding gives an LSH for `W¹`.
+
+/// Pyramid embedding of a set of weighted samples on `[0, 1)`.
+#[derive(Debug, Clone)]
+pub struct GridEmbedding {
+    levels: usize,
+}
+
+impl GridEmbedding {
+    /// An embedding with `levels` dyadic levels (level `ℓ` has `2^ℓ`
+    /// cells); total output dimension `2^{levels+1} − 1`.
+    pub fn new(levels: usize) -> Self {
+        assert!(levels >= 1 && levels <= 20);
+        Self { levels }
+    }
+
+    /// Output dimension.
+    pub fn dim(&self) -> usize {
+        (1usize << (self.levels + 1)) - 1
+    }
+
+    /// Embed weighted samples (positions in `[0, 1)`, masses normalized to
+    /// sum to one) into `ℓ¹`.
+    pub fn embed(&self, positions: &[f64], masses: &[f64]) -> Vec<f64> {
+        assert_eq!(positions.len(), masses.len());
+        let total: f64 = masses.iter().sum();
+        assert!(total > 0.0);
+        let mut out = Vec::with_capacity(self.dim());
+        for level in 0..=self.levels {
+            let cells = 1usize << level;
+            let scale = 1.0 / cells as f64; // cell side = weight 2^{-ℓ}
+            let mut hist = vec![0.0; cells];
+            for (&x, &m) in positions.iter().zip(masses) {
+                let c = ((x.clamp(0.0, 1.0 - 1e-12)) * cells as f64) as usize;
+                hist[c] += m / total;
+            }
+            for h in hist {
+                out.push(scale * h);
+            }
+        }
+        out
+    }
+}
+
+/// ℓ¹ distance between two embeddings — the `W¹` surrogate.
+pub fn l1_distance(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng64, Xoshiro256pp};
+    use crate::wasserstein::wasserstein_empirical;
+
+    #[test]
+    fn identical_inputs_zero_distance() {
+        let ge = GridEmbedding::new(6);
+        let pos = [0.1, 0.5, 0.9];
+        let mass = [0.2, 0.3, 0.5];
+        let e1 = ge.embed(&pos, &mass);
+        let e2 = ge.embed(&pos, &mass);
+        assert!(l1_distance(&e1, &e2) < 1e-15);
+    }
+
+    #[test]
+    fn dim_matches_formula() {
+        let ge = GridEmbedding::new(4);
+        assert_eq!(ge.dim(), 31);
+        assert_eq!(ge.embed(&[0.5], &[1.0]).len(), 31);
+    }
+
+    #[test]
+    fn translation_scales_with_distance() {
+        // Two point masses: the surrogate distance must grow with their
+        // separation.
+        let ge = GridEmbedding::new(8);
+        let base = ge.embed(&[0.25], &[1.0]);
+        let near = ge.embed(&[0.27], &[1.0]);
+        let far = ge.embed(&[0.75], &[1.0]);
+        let dn = l1_distance(&base, &near);
+        let df = l1_distance(&base, &far);
+        assert!(df > 3.0 * dn, "near {dn}, far {df}");
+    }
+
+    #[test]
+    fn surrogate_within_log_factor_of_w1() {
+        // Indyk–Thaper guarantee: W¹ ≤ ℓ¹ distance (in expectation, up to
+        // constants) ≤ O(log n) W¹. Empirically check the ratio stays in a
+        // modest band over random empirical measures.
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let ge = GridEmbedding::new(10);
+        for _ in 0..10 {
+            let xs: Vec<f64> = (0..32).map(|_| rng.uniform()).collect();
+            let ys: Vec<f64> = (0..32).map(|_| rng.uniform()).collect();
+            let m = vec![1.0 / 32.0; 32];
+            let w1 = wasserstein_empirical(&xs, &ys, 1.0);
+            let sur = l1_distance(&ge.embed(&xs, &m), &ge.embed(&ys, &m));
+            let ratio = sur / w1.max(1e-9);
+            assert!(
+                (0.5..=30.0).contains(&ratio),
+                "ratio {ratio} (W¹ {w1}, surrogate {sur})"
+            );
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Wasserstein distances — the paper's motivating application (§2.2, §4).
+//!
+//! * [`wasserstein_1d_quantile`] — the continuous 1-D closed form (Eq. 3):
+//!   `W^p(f,g) = ‖F⁻¹ − G⁻¹‖_{L^p([0,1])}`, evaluated by quadrature with
+//!   the paper's endpoint clipping (footnote 1).
+//! * [`gaussian_w2`] — the Olkin–Pukelsheim closed form for a pair of 1-D
+//!   Gaussians: `W² = √((μ₁−μ₂)² + (σ₁−σ₂)²)` — the ground truth of Fig. 3.
+//! * [`wasserstein_empirical`] — `O(m + n)` sorted-sample estimator for two
+//!   empirical distributions with different sample counts (the "step
+//!   function" estimator discussed in §2.2).
+//! * [`discrete`] — the discrete LP (Eq. 2) solved exactly by min-cost
+//!   flow: the baseline that validates everything else.
+//! * [`indyk_thaper`] — the grid-embedding `W¹ → ℓ¹` baseline
+//!   (Indyk & Thaper 2003) the related-work section compares against.
+
+pub mod discrete;
+pub mod indyk_thaper;
+pub mod sliced;
+
+pub use sliced::{sliced_wasserstein, DirectionBank};
+
+use crate::functions::{Distribution1D, GaussianDist};
+use crate::quadrature::integrate_gl;
+
+/// The clip used when hashing/integrating quantile functions whose values
+/// diverge at 0 and 1 (paper footnote 1): integrate over `[ε, 1−ε]`.
+pub const QUANTILE_CLIP: f64 = 1e-3;
+
+/// Eq. 3: `W^p(f, g) = (∫₀¹ |F⁻¹(u) − G⁻¹(u)|^p du)^{1/p}` by
+/// Gauss–Legendre quadrature over the clipped interval `[clip, 1−clip]`.
+///
+/// With `clip = 0` this is the exact 1-D Wasserstein distance for `p ≥ 1`
+/// when the quantile functions are bounded; distributions with unbounded
+/// support (Gaussians!) need a positive clip exactly as the paper does.
+pub fn wasserstein_1d_quantile(
+    f: &dyn Distribution1D,
+    g: &dyn Distribution1D,
+    p: f64,
+    clip: f64,
+) -> f64 {
+    assert!(p >= 1.0, "Eq. 3 requires p >= 1");
+    assert!((0.0..0.5).contains(&clip));
+    let lo = clip;
+    let hi = 1.0 - clip;
+    let integrand = move |u: f64| (f.quantile(u) - g.quantile(u)).abs().powf(p);
+    integrate_gl(&integrand, lo, hi, 512).max(0.0).powf(1.0 / p)
+}
+
+/// Olkin–Pukelsheim closed form for 1-D Gaussians:
+/// `W²(N(μ₁,σ₁²), N(μ₂,σ₂²)) = √((μ₁−μ₂)² + (σ₁−σ₂)²)`.
+pub fn gaussian_w2(a: &GaussianDist, b: &GaussianDist) -> f64 {
+    ((a.mu - b.mu).powi(2) + (a.sigma - b.sigma).powi(2)).sqrt()
+}
+
+/// `W^p` between two empirical distributions given raw samples, in
+/// `O(m log m + n log n)` (sorting) + `O(m + n)` (merge).
+///
+/// Models both quantile functions as step functions (the estimator of
+/// §2.2) and integrates `|F⁻¹ − G⁻¹|^p` exactly over the merged breakpoint
+/// grid `{i/m} ∪ {j/n}`.
+pub fn wasserstein_empirical(xs: &[f64], ys: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty() && !ys.is_empty());
+    assert!(p >= 1.0);
+    let mut x = xs.to_vec();
+    let mut y = ys.to_vec();
+    x.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    y.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let m = x.len();
+    let n = y.len();
+    let mut acc = 0.0;
+    let mut u = 0.0; // current position in [0, 1]
+    let mut i = 0; // x-step index: F⁻¹(u) = x[i] for u ∈ (i/m, (i+1)/m]
+    let mut j = 0;
+    while u < 1.0 {
+        let next_x = (i + 1) as f64 / m as f64;
+        let next_y = (j + 1) as f64 / n as f64;
+        let next = next_x.min(next_y).min(1.0);
+        acc += (x[i] - y[j]).abs().powf(p) * (next - u);
+        if (next - next_x).abs() < 1e-15 {
+            i = (i + 1).min(m - 1);
+        }
+        if (next - next_y).abs() < 1e-15 {
+            j = (j + 1).min(n - 1);
+        }
+        u = next;
+    }
+    acc.powf(1.0 / p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::{GaussianMixture, Sampled};
+    use crate::util::rng::{Rng64, Xoshiro256pp};
+
+    #[test]
+    fn gaussian_w2_closed_form_cases() {
+        let a = GaussianDist::new(0.0, 1.0);
+        let b = GaussianDist::new(3.0, 1.0);
+        assert!((gaussian_w2(&a, &b) - 3.0).abs() < 1e-15);
+        let c = GaussianDist::new(0.0, 2.0);
+        assert!((gaussian_w2(&a, &c) - 1.0).abs() < 1e-15);
+        let d = GaussianDist::new(3.0, 5.0);
+        assert!((gaussian_w2(&a, &d) - 5.0).abs() < 1e-15);
+        assert_eq!(gaussian_w2(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn quantile_formula_matches_gaussian_closed_form() {
+        // The quadrature version of Eq. 3 (with the paper's clip) must land
+        // near the Olkin–Pukelsheim value.
+        let a = GaussianDist::new(-0.4, 0.8);
+        let b = GaussianDist::new(0.9, 0.3);
+        let want = gaussian_w2(&a, &b);
+        let got = wasserstein_1d_quantile(&a, &b, 2.0, QUANTILE_CLIP);
+        assert!((got - want).abs() < 5e-3 * want, "{got} vs {want}");
+    }
+
+    #[test]
+    fn quantile_formula_w1_translation() {
+        // W¹ between N(0,1) and N(2,1) is exactly 2 (pure translation).
+        let a = GaussianDist::new(0.0, 1.0);
+        let b = GaussianDist::new(2.0, 1.0);
+        let got = wasserstein_1d_quantile(&a, &b, 1.0, QUANTILE_CLIP);
+        assert!((got - 2.0).abs() < 2e-2, "{got}");
+    }
+
+    #[test]
+    fn quantile_formula_mixtures() {
+        // Sanity on GMMs: W(f, f) = 0; translation invariance.
+        let m1 = GaussianMixture::new(
+            vec![GaussianDist::new(-1.0, 0.4), GaussianDist::new(1.0, 0.4)],
+            vec![0.5, 0.5],
+        );
+        let m2 = GaussianMixture::new(
+            vec![GaussianDist::new(0.0, 0.4), GaussianDist::new(2.0, 0.4)],
+            vec![0.5, 0.5],
+        );
+        assert!(wasserstein_1d_quantile(&m1, &m1, 2.0, QUANTILE_CLIP) < 1e-9);
+        let d = wasserstein_1d_quantile(&m1, &m2, 2.0, QUANTILE_CLIP);
+        assert!((d - 1.0).abs() < 2e-2, "translation by 1: {d}");
+    }
+
+    #[test]
+    fn empirical_equal_sizes_matches_order_statistics() {
+        // m = n: W^p^p = (1/n) Σ |x_(i) − y_(i)|^p.
+        let xs = [3.0, 1.0, 2.0];
+        let ys = [4.0, 6.0, 5.0];
+        let direct = ((4.0f64 - 1.0).powi(2) + (5.0f64 - 2.0).powi(2) + (6.0f64 - 3.0).powi(2))
+            / 3.0;
+        let got = wasserstein_empirical(&xs, &ys, 2.0);
+        assert!((got - direct.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empirical_unequal_sizes() {
+        // F⁻¹ = 0 on (0,1]; G⁻¹: 0 on (0,1/2], 1 on (1/2,1].
+        // W¹ = 1/2.
+        let xs = [0.0];
+        let ys = [0.0, 1.0];
+        let got = wasserstein_empirical(&xs, &ys, 1.0);
+        assert!((got - 0.5).abs() < 1e-12, "{got}");
+    }
+
+    #[test]
+    fn empirical_converges_to_gaussian_truth() {
+        let mut rng = Xoshiro256pp::seed_from_u64(33);
+        let a = GaussianDist::new(0.0, 1.0);
+        let b = GaussianDist::new(1.5, 0.5);
+        let xs: Vec<f64> = (0..20_000).map(|_| a.quantile(rng.uniform().clamp(1e-12, 1.0 - 1e-12))).collect();
+        let ys: Vec<f64> = (0..30_000).map(|_| b.quantile(rng.uniform().clamp(1e-12, 1.0 - 1e-12))).collect();
+        let got = wasserstein_empirical(&xs, &ys, 2.0);
+        let want = gaussian_w2(&a, &b);
+        assert!((got - want).abs() < 0.03, "{got} vs {want}");
+    }
+
+    #[test]
+    fn empirical_symmetry_and_identity() {
+        let xs = [0.5, 1.5, -2.0, 0.25];
+        let ys = [1.0, 2.0, 3.0];
+        let ab = wasserstein_empirical(&xs, &ys, 1.0);
+        let ba = wasserstein_empirical(&ys, &xs, 1.0);
+        assert!((ab - ba).abs() < 1e-12);
+        assert!(wasserstein_empirical(&xs, &xs, 2.0) < 1e-12);
+    }
+
+    #[test]
+    fn sampled_distribution_roundtrip() {
+        // Sampled quantile fn hashed over [clip, 1-clip] integrates close
+        // to the empirical estimator.
+        let xs = vec![0.1, 0.4, 0.45, 0.9];
+        let ys = vec![0.2, 0.3, 0.8, 0.95];
+        let sf = Sampled::from_samples(xs.clone()).step();
+        let sg = Sampled::from_samples(ys.clone()).step();
+        let via_quantile = wasserstein_1d_quantile(&sf, &sg, 1.0, 0.0);
+        let via_empirical = wasserstein_empirical(&xs, &ys, 1.0);
+        assert!(
+            (via_quantile - via_empirical).abs() < 5e-3,
+            "{via_quantile} vs {via_empirical}"
+        );
+    }
+}

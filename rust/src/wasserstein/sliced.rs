@@ -1,0 +1,202 @@
+//! Sliced Wasserstein distance — the standard route for taking the
+//! paper's 1-D machinery to multivariate distributions: project both
+//! point clouds onto random directions, apply the 1-D closed form
+//! (Eq. 3 / order statistics) per direction, and average.
+//!
+//! `SW_p^p(X, Y) = E_{θ ~ U(S^{d−1})} [ W_p^p(⟨X, θ⟩, ⟨Y, θ⟩) ]`
+//!
+//! Combined with the Monte Carlo embedding this also yields an LSH for
+//! sliced Wasserstein: concatenate the per-direction quantile embeddings
+//! (each direction contributes `N/D` coordinates), which preserves
+//! `SW_2` in `ℓ²` exactly as §3.2 preserves `W_2`.
+
+use crate::util::rng::Rng64;
+use crate::wasserstein::wasserstein_empirical;
+
+/// A bank of random unit directions on `S^{d−1}`.
+#[derive(Debug, Clone)]
+pub struct DirectionBank {
+    dirs: Vec<Vec<f64>>,
+    dim: usize,
+}
+
+impl DirectionBank {
+    /// `count` i.i.d. uniform directions in `d` dimensions (normalized
+    /// Gaussians).
+    pub fn new(dim: usize, count: usize, rng: &mut dyn Rng64) -> Self {
+        assert!(dim >= 1 && count >= 1);
+        let dirs = (0..count)
+            .map(|_| {
+                loop {
+                    let v: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+                    let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+                    if norm > 1e-12 {
+                        return v.into_iter().map(|x| x / norm).collect();
+                    }
+                }
+            })
+            .collect();
+        Self { dirs, dim }
+    }
+
+    /// Number of directions.
+    pub fn len(&self) -> usize {
+        self.dirs.len()
+    }
+
+    /// Whether the bank is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// The directions.
+    pub fn directions(&self) -> &[Vec<f64>] {
+        &self.dirs
+    }
+
+    /// Project a point cloud (row-major `[n][d]`) onto direction `i`.
+    pub fn project(&self, points: &[Vec<f64>], i: usize) -> Vec<f64> {
+        points
+            .iter()
+            .map(|p| {
+                assert_eq!(p.len(), self.dim);
+                p.iter().zip(&self.dirs[i]).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+}
+
+/// Sliced `p`-Wasserstein distance between two empirical point clouds
+/// (each a set of `d`-dimensional points), averaged over the direction
+/// bank.
+pub fn sliced_wasserstein(
+    xs: &[Vec<f64>],
+    ys: &[Vec<f64>],
+    p: f64,
+    bank: &DirectionBank,
+) -> f64 {
+    assert!(!xs.is_empty() && !ys.is_empty());
+    let mut acc = 0.0;
+    for i in 0..bank.len() {
+        let px = bank.project(xs, i);
+        let py = bank.project(ys, i);
+        acc += wasserstein_empirical(&px, &py, p).powf(p);
+    }
+    (acc / bank.len() as f64).powf(1.0 / p)
+}
+
+/// The concatenated quantile embedding for sliced Wasserstein LSH: for
+/// each direction, embed the projected quantile function at `m` levels
+/// and scale so the ℓ² norm of the concatenation approximates `SW_2`.
+pub fn sliced_embedding(
+    points: &[Vec<f64>],
+    bank: &DirectionBank,
+    m: usize,
+    rng: &mut dyn Rng64,
+) -> Vec<f64> {
+    assert!(m >= 1);
+    let d = bank.len();
+    let scale = (1.0 / (d * m) as f64).sqrt();
+    let mut out = Vec::with_capacity(d * m);
+    // shared random quantile levels (client-agreed, like sample points)
+    let levels: Vec<f64> = (0..m)
+        .map(|_| rng.uniform().clamp(1e-9, 1.0 - 1e-9))
+        .collect();
+    for i in 0..d {
+        let mut proj = bank.project(points, i);
+        proj.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &u in &levels {
+            let s = crate::functions::Sampled::from_samples(proj.clone());
+            use crate::functions::Distribution1D;
+            out.push(s.quantile(u) * scale);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn cloud(rng: &mut dyn Rng64, n: usize, d: usize, shift: f64) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.normal() + shift).collect())
+            .collect()
+    }
+
+    #[test]
+    fn identity_and_symmetry() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let bank = DirectionBank::new(3, 32, &mut rng);
+        let xs = cloud(&mut rng, 20, 3, 0.0);
+        let ys = cloud(&mut rng, 25, 3, 1.0);
+        assert!(sliced_wasserstein(&xs, &xs, 2.0, &bank) < 1e-10);
+        let a = sliced_wasserstein(&xs, &ys, 2.0, &bank);
+        let b = sliced_wasserstein(&ys, &xs, 2.0, &bank);
+        assert!((a - b).abs() < 1e-12);
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn point_masses_closed_form() {
+        // δ_x vs δ_y: SW₂² = E|θ·(x−y)|² = ‖x−y‖²/d.
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let d = 4;
+        let bank = DirectionBank::new(d, 20_000, &mut rng);
+        let x = vec![vec![1.0, 0.0, 0.0, 0.0]];
+        let y = vec![vec![0.0, 0.0, 0.0, 0.0]];
+        let sw = sliced_wasserstein(&x, &y, 2.0, &bank);
+        let want = (1.0f64 / d as f64).sqrt();
+        assert!((sw - want).abs() < 0.01, "{sw} vs {want}");
+    }
+
+    #[test]
+    fn translation_monotone() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let bank = DirectionBank::new(2, 64, &mut rng);
+        let xs = cloud(&mut rng, 50, 2, 0.0);
+        let near: Vec<Vec<f64>> = xs.iter().map(|p| vec![p[0] + 0.1, p[1]]).collect();
+        let far: Vec<Vec<f64>> = xs.iter().map(|p| vec![p[0] + 2.0, p[1]]).collect();
+        let dn = sliced_wasserstein(&xs, &near, 2.0, &bank);
+        let df = sliced_wasserstein(&xs, &far, 2.0, &bank);
+        assert!(df > 5.0 * dn, "near {dn} far {df}");
+    }
+
+    #[test]
+    fn directions_are_unit() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let bank = DirectionBank::new(5, 100, &mut rng);
+        for dir in bank.directions() {
+            let norm: f64 = dir.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sliced_embedding_preserves_sw2() {
+        // ‖E(X) − E(Y)‖₂ tracks SW₂(X, Y) across pairs (monotone + close).
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let bank = DirectionBank::new(2, 32, &mut rng);
+        let base = cloud(&mut rng, 64, 2, 0.0);
+        let mut emb_rng = Xoshiro256pp::seed_from_u64(99);
+        let e_base = sliced_embedding(&base, &bank, 32, &mut emb_rng);
+        for shift in [0.25, 0.5, 1.0, 2.0] {
+            let moved: Vec<Vec<f64>> =
+                base.iter().map(|p| vec![p[0] + shift, p[1] + shift]).collect();
+            let mut emb_rng = Xoshiro256pp::seed_from_u64(99); // same levels
+            let e_moved = sliced_embedding(&moved, &bank, 32, &mut emb_rng);
+            let emb_dist: f64 = e_base
+                .iter()
+                .zip(&e_moved)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            let sw = sliced_wasserstein(&base, &moved, 2.0, &bank);
+            assert!(
+                (emb_dist - sw).abs() < 0.2 * sw,
+                "shift {shift}: embed {emb_dist} vs SW {sw}"
+            );
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Workload generators — the random inputs of every experiment, matching
+//! the paper's §4 descriptions exactly, plus corpora and request traces
+//! for the end-to-end service experiments.
+
+use crate::functions::{Function1D, GaussianDist, GaussianMixture, Sine};
+use crate::util::rng::Rng64;
+use std::f64::consts::PI;
+
+/// Figure 1–2 workload: pairs of `sin(2πx + δ)` with
+/// `δ₁, δ₂ ~ Uniform[0, 2π]`.
+pub fn sine_pair(rng: &mut dyn Rng64) -> (Sine, Sine) {
+    (
+        Sine::paper(rng.uniform_in(0.0, 2.0 * PI)),
+        Sine::paper(rng.uniform_in(0.0, 2.0 * PI)),
+    )
+}
+
+/// Figure 3 workload: pairs of 1-D Gaussians with
+/// `μ ~ Uniform[−1, 1]` and `σ² ~ Uniform[0, 1]` (σ² floored away from 0
+/// to keep the distributions nondegenerate, matching the paper's sampler).
+pub fn gaussian_pair(rng: &mut dyn Rng64) -> (GaussianDist, GaussianDist) {
+    let draw = |rng: &mut dyn Rng64| {
+        let mu = rng.uniform_in(-1.0, 1.0);
+        let var = rng.uniform_in(1e-4, 1.0);
+        GaussianDist::new(mu, var.sqrt())
+    };
+    (draw(rng), draw(rng))
+}
+
+/// A random Gaussian mixture with `k` components — the corpus entries of
+/// the end-to-end k-NN experiment (E6).
+pub fn random_gmm(k: usize, rng: &mut dyn Rng64) -> GaussianMixture {
+    assert!(k >= 1);
+    let comps = (0..k)
+        .map(|_| {
+            GaussianDist::new(
+                rng.uniform_in(-2.0, 2.0),
+                rng.uniform_in(0.05, 0.8),
+            )
+        })
+        .collect();
+    let weights = (0..k).map(|_| rng.uniform_in(0.1, 1.0)).collect();
+    GaussianMixture::new(comps, weights)
+}
+
+/// A corpus of `n` random GMMs (1–4 components each).
+pub fn gmm_corpus(n: usize, rng: &mut dyn Rng64) -> Vec<GaussianMixture> {
+    (0..n)
+        .map(|_| {
+            let k = 1 + rng.uniform_usize(4);
+            random_gmm(k, rng)
+        })
+        .collect()
+}
+
+/// One request of a synthetic service trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceOp {
+    /// insert a new corpus entry (pre-sampled function values)
+    Insert {
+        /// entry id
+        id: u64,
+        /// raw samples at the embedder's sample points
+        samples: Vec<f64>,
+    },
+    /// k-NN query
+    Query {
+        /// raw samples at the embedder's sample points
+        samples: Vec<f64>,
+        /// number of neighbours requested
+        k: usize,
+    },
+}
+
+/// Generate a mixed insert/query trace over sine functions sampled at
+/// `points` (`insert_fraction` of operations are inserts).
+pub fn sine_trace(
+    n_ops: usize,
+    points: &[f64],
+    insert_fraction: f64,
+    rng: &mut dyn Rng64,
+) -> Vec<TraceOp> {
+    let mut next_id = 0u64;
+    (0..n_ops)
+        .map(|_| {
+            let phase = rng.uniform_in(0.0, 2.0 * PI);
+            let f = Sine::paper(phase);
+            let samples: Vec<f64> = points.iter().map(|&x| f.eval(x)).collect();
+            if rng.uniform() < insert_fraction {
+                let id = next_id;
+                next_id += 1;
+                TraceOp::Insert { id, samples }
+            } else {
+                TraceOp::Query { samples, k: 10 }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::Distribution1D;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn sine_pair_phases_in_range() {
+        let mut rng = Xoshiro256pp::seed_from_u64(61);
+        for _ in 0..100 {
+            let (f, g) = sine_pair(&mut rng);
+            assert!((0.0..2.0 * PI).contains(&f.phase));
+            assert!((0.0..2.0 * PI).contains(&g.phase));
+            assert_eq!(f.amplitude, 1.0);
+        }
+    }
+
+    #[test]
+    fn gaussian_pair_parameter_ranges() {
+        let mut rng = Xoshiro256pp::seed_from_u64(63);
+        for _ in 0..100 {
+            let (a, b) = gaussian_pair(&mut rng);
+            for g in [a, b] {
+                assert!((-1.0..1.0).contains(&g.mu));
+                assert!(g.sigma > 0.0 && g.sigma <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gmm_corpus_valid_distributions() {
+        let mut rng = Xoshiro256pp::seed_from_u64(65);
+        let corpus = gmm_corpus(20, &mut rng);
+        assert_eq!(corpus.len(), 20);
+        for g in &corpus {
+            assert!((1..=4).contains(&g.num_components()));
+            // CDF must be monotone, quantile must invert it
+            let q = g.quantile(0.5);
+            assert!((g.cdf(q) - 0.5).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn trace_mix_and_ids() {
+        let mut rng = Xoshiro256pp::seed_from_u64(67);
+        let points: Vec<f64> = (0..8).map(|i| i as f64 / 8.0).collect();
+        let trace = sine_trace(1000, &points, 0.5, &mut rng);
+        let inserts: Vec<u64> = trace
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::Insert { id, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        // ids are dense 0..k
+        for (want, got) in inserts.iter().enumerate() {
+            assert_eq!(*got, want as u64);
+        }
+        let frac = inserts.len() as f64 / 1000.0;
+        assert!((frac - 0.5).abs() < 0.1, "insert fraction {frac}");
+        // sample vectors have the right arity
+        for op in &trace {
+            let s = match op {
+                TraceOp::Insert { samples, .. } | TraceOp::Query { samples, .. } => samples,
+            };
+            assert_eq!(s.len(), 8);
+        }
+    }
+}

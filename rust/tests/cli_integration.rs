@@ -1,0 +1,220 @@
+//! Integration tests of the `funclsh` leader binary: subcommands, CSV
+//! emission, config loading, and the selftest over real artifacts.
+
+use std::process::Command;
+
+fn funclsh() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_funclsh"))
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("funclsh-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn info_prints_banner() {
+    let out = funclsh().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("funclsh"));
+    assert!(text.contains("function spaces"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let out = funclsh().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("usage"));
+}
+
+#[test]
+fn experiment_fig1_writes_csv() {
+    let dir = tmpdir("fig1");
+    let out = funclsh()
+        .args([
+            "experiment",
+            "fig1",
+            "--pairs",
+            "8",
+            "--hashes",
+            "128",
+            "--out",
+        ])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("rmse="), "{stdout}");
+    let csv = std::fs::read_to_string(dir.join("fig1_cosine.csv")).unwrap();
+    assert!(csv.starts_with("method,similarity,observed,theoretical"));
+    // header + 8 cheb + 8 mc
+    assert_eq!(csv.lines().count(), 17, "{csv}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn experiment_thm1_band_columns() {
+    let dir = tmpdir("thm1");
+    let out = funclsh()
+        .args(["experiment", "thm1", "--hashes", "256", "--out"])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let csv = std::fs::read_to_string(dir.join("thm1.csv")).unwrap();
+    assert!(csv.starts_with("n_f,eps,observed,p_ideal,lower,upper"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hash_subcommand_prints_signature() {
+    let out = funclsh()
+        .args(["hash", "--phase", "0.5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.trim_start().starts_with('['), "{text}");
+}
+
+#[test]
+fn hash_deterministic_across_runs() {
+    let run = || {
+        let out = funclsh().args(["hash", "--phase", "1.25"]).output().unwrap();
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn serve_runs_synthetic_trace() {
+    let out = funclsh()
+        .args(["serve", "--trace-ops", "300"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("trace done"), "{text}");
+    assert!(text.contains("\"errors\":0"), "{text}");
+}
+
+#[test]
+fn serve_honours_config_file() {
+    let dir = tmpdir("cfg");
+    let cfg_path = dir.join("svc.toml");
+    std::fs::write(
+        &cfg_path,
+        "[embedding]\nmethod = \"chebyshev\"\ndim = 32\n[index]\nk = 2\nl = 4\n[runtime]\nuse_pjrt = false\n",
+    )
+    .unwrap();
+    let out = funclsh()
+        .args(["serve", "--trace-ops", "100", "--config"])
+        .arg(&cfg_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn selftest_with_artifacts() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping selftest: no artifacts");
+        return;
+    }
+    let out = funclsh()
+        .args(["selftest", "--artifacts"])
+        .arg(&artifacts)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("PJRT ok"), "{text}");
+    assert!(text.contains("mc_l2_hash"), "{text}");
+}
+
+#[test]
+fn tune_recommends_parameters() {
+    let out = funclsh()
+        .args(["tune", "--near", "0.1", "--far", "1.0", "--recall", "0.9"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("recommended: k="), "{text}");
+}
+
+#[test]
+fn tune_infeasible_goal_fails_cleanly() {
+    let out = funclsh()
+        .args([
+            "tune", "--near", "0.99", "--far", "1.0", "--recall", "0.9999", "--budget",
+            "0.0001", "--max-k", "2", "--max-l", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("no feasible"));
+}
+
+#[test]
+fn serve_writes_snapshot() {
+    let dir = tmpdir("snap");
+    let snap = dir.join("index.flsh");
+    let out = funclsh()
+        .args(["serve", "--trace-ops", "200", "--snapshot"])
+        .arg(&snap)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let bytes = std::fs::read(&snap).unwrap();
+    assert_eq!(&bytes[..5], b"FLSH1");
+    // the snapshot must round-trip through the loader
+    let idx = funclsh::lsh::ShardedIndex::load(&mut bytes.as_slice()).unwrap();
+    assert!(idx.len() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_with_simhash_family() {
+    let dir = tmpdir("simhash");
+    let cfg_path = dir.join("svc.toml");
+    std::fs::write(&cfg_path, "[hash]\nfamily = \"simhash\"\n").unwrap();
+    let out = funclsh()
+        .args(["serve", "--trace-ops", "100", "--config"])
+        .arg(&cfg_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("simhash"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_with_jnp_pipeline_variant() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = tmpdir("jnp");
+    let cfg_path = dir.join("svc.toml");
+    std::fs::write(&cfg_path, "[runtime]\npipeline = \"mc_l2_hash_jnp\"\n").unwrap();
+    let out = funclsh()
+        .args(["serve", "--trace-ops", "100", "--config"])
+        .arg(&cfg_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("mc_l2_hash_jnp"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

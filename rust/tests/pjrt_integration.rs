@@ -1,0 +1,394 @@
+//! Integration: AOT artifacts → PJRT runtime → signature equivalence with
+//! the pure-Rust hash path. This is the test that proves the three layers
+//! compose: the Pallas-kernel math (L1), the jax pipeline lowering (L2),
+//! and the Rust executor (L3) agree bit-for-bit (modulo rare floor()
+//! boundary ulps) with the reference implementation.
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are missing so
+//! `cargo test` works on a fresh checkout).
+
+use funclsh::coordinator::{CpuHashPath, FoldedHashPath, HashPath};
+use funclsh::embedding::{ChebyshevEmbedder, Embedder, Interval, MonteCarloEmbedder};
+use funclsh::hashing::{HashBank, PStableHashBank};
+use funclsh::runtime::{pjrt_path::PjrtHashPath, Engine, Manifest};
+use funclsh::util::rng::{Rng64, Xoshiro256pp};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Box::leak(dir.into_boxed_path()))
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn random_rows(n: usize, count: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..count)
+        .map(|_| (0..n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect())
+        .collect()
+}
+
+/// Count entries where two signature sets differ; assert they are rare
+/// floor-boundary events (±1).
+fn assert_signatures_close(a: &[Vec<i32>], b: &[Vec<i32>], label: &str) {
+    assert_eq!(a.len(), b.len());
+    let mut mismatch = 0usize;
+    let mut total = 0usize;
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.len(), rb.len());
+        for (x, y) in ra.iter().zip(rb) {
+            total += 1;
+            if x != y {
+                mismatch += 1;
+                assert!(
+                    (x - y).abs() <= 1,
+                    "{label}: non-boundary mismatch {x} vs {y}"
+                );
+            }
+        }
+    }
+    assert!(
+        (mismatch as f64) < 0.01 * total as f64 + 4.0,
+        "{label}: {mismatch}/{total} mismatches"
+    );
+}
+
+#[test]
+fn manifest_lists_expected_pipelines() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(dir).unwrap();
+    for name in ["mc_l2_hash", "cheb_l2_hash", "simhash", "mc_l2_hash_k1024"] {
+        assert!(m.find(name).is_some(), "missing pipeline {name}");
+    }
+    let spec = m.find("mc_l2_hash").unwrap();
+    assert_eq!((spec.batch, spec.dim, spec.k), (128, 64, 32));
+}
+
+#[test]
+fn engine_compiles_all_pipelines() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    assert!(engine.pipeline_names().len() >= 5);
+    assert_eq!(engine.platform(), "cpu");
+}
+
+#[test]
+fn pjrt_pstable_matches_python_reference_vectors() {
+    // Exactly mirrors python/compile/model.py::reference_outputs(128,64,32,seed=1)?
+    // We can't regenerate numpy RandomState in rust; instead assert the
+    // *mathematical* contract: floor(x@proj + b) for inputs we control.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let p = engine.pipeline("mc_l2_hash").unwrap();
+    let (b, n, k) = (p.spec.batch, p.spec.dim, p.spec.k);
+
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let samples: Vec<f32> = (0..b * n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+    let proj: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+    let offsets: Vec<f32> = (0..k).map(|_| rng.uniform() as f32).collect();
+
+    let proj_lit = xla::Literal::vec1(&proj).reshape(&[n as i64, k as i64]).unwrap();
+    let off_lit = xla::Literal::vec1(&offsets);
+    let got = p.hash_batch(&samples, &proj_lit, &off_lit).unwrap();
+
+    // f32 reference computed in rust
+    let mut mismatch = 0;
+    for row in 0..b {
+        for j in 0..k {
+            let mut acc = offsets[j];
+            for i in 0..n {
+                acc += samples[row * n + i] * proj[i * k + j];
+            }
+            let want = acc.floor() as i32;
+            let g = got[row * k + j];
+            if g != want {
+                mismatch += 1;
+                assert!((g - want).abs() <= 1, "row {row} j {j}: {g} vs {want}");
+            }
+        }
+    }
+    assert!(mismatch < 40, "{mismatch} boundary mismatches");
+}
+
+#[test]
+fn pjrt_path_agrees_with_folded_cpu_path_mc() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), 64, 2.0, &mut rng);
+    let bank = PStableHashBank::new(64, 32, 2.0, 1.0, &mut rng);
+    let proj_rows: Vec<&[f64]> = (0..32).map(|j| bank.projection_row(j)).collect();
+    let folded = FoldedHashPath::new(Box::new(emb.clone()), &proj_rows, bank.offsets(), bank.r());
+    let cpu = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+    let pjrt = PjrtHashPath::from_folded(dir, "mc_l2_hash", folded).unwrap();
+
+    let rows = random_rows(64, 300, 3); // exercises padding (300 = 2×128 + 44)
+    let a = pjrt.hash_rows(&rows).unwrap();
+    let b = cpu.hash_rows(&rows).unwrap();
+    assert_signatures_close(&a, &b, "pjrt vs folded (mc)");
+}
+
+#[test]
+fn pjrt_path_agrees_with_reference_path_chebyshev() {
+    // Chebyshev embedding folded into the projection — the generic
+    // artifact serves the §3.1 method too.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    let emb = ChebyshevEmbedder::new(Interval::unit(), 64);
+    let bank = PStableHashBank::new(64, 32, 2.0, 1.0, &mut rng);
+    let proj_rows: Vec<&[f64]> = (0..32).map(|j| bank.projection_row(j)).collect();
+    let reference = CpuHashPath::new(Box::new(emb.clone()), Box::new(bank.clone()));
+    let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+    let pjrt = PjrtHashPath::from_folded(dir, "mc_l2_hash", folded).unwrap();
+
+    let rows = random_rows(64, 128, 5);
+    let a = pjrt.hash_rows(&rows).unwrap();
+    let b = reference.hash_rows(&rows).unwrap();
+    assert_signatures_close(&a, &b, "pjrt vs reference (cheb)");
+}
+
+#[test]
+fn fused_cheb_artifact_matches_rust_embedding() {
+    // The dedicated fused kernel artifact (DCT baked in HLO) must agree
+    // with rust ChebyshevEmbedder + bank, with proj = bank projection.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let p = engine.pipeline("cheb_l2_hash").unwrap();
+    let (b, n, k) = (p.spec.batch, p.spec.dim, p.spec.k);
+
+    let mut rng = Xoshiro256pp::seed_from_u64(13);
+    let bank = PStableHashBank::new(n, k, 2.0, 1.0, &mut rng);
+    let emb = ChebyshevEmbedder::new(Interval::unit(), n);
+
+    // proj literal = bank rows / r (column-major j: [n][k])
+    let mut proj = vec![0f32; n * k];
+    for j in 0..k {
+        for (i, &v) in bank.projection_row(j).iter().enumerate() {
+            proj[i * k + j] = (v / bank.r()) as f32;
+        }
+    }
+    let offsets: Vec<f32> = bank.offsets().iter().map(|&x| x as f32).collect();
+    let proj_lit = xla::Literal::vec1(&proj).reshape(&[n as i64, k as i64]).unwrap();
+    let off_lit = xla::Literal::vec1(&offsets);
+
+    let rows = random_rows(n, b, 17);
+    let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+    let got = p.hash_batch(&flat, &proj_lit, &off_lit).unwrap();
+
+    let mut want = Vec::new();
+    for row in &rows {
+        let row64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
+        want.push(bank.hash(&emb.embed_samples(&row64)));
+    }
+    let got_rows: Vec<Vec<i32>> = (0..b).map(|i| got[i * k..(i + 1) * k].to_vec()).collect();
+    assert_signatures_close(&got_rows, &want, "fused cheb artifact");
+}
+
+#[test]
+fn wide_k1024_pipeline_executes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let p = engine.pipeline("mc_l2_hash_k1024").unwrap();
+    let (b, n, k) = (p.spec.batch, p.spec.dim, p.spec.k);
+    assert_eq!(k, 1024);
+    let mut rng = Xoshiro256pp::seed_from_u64(19);
+    let samples: Vec<f32> = (0..b * n).map(|_| rng.normal() as f32).collect();
+    let proj: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+    let offsets: Vec<f32> = (0..k).map(|_| rng.uniform() as f32).collect();
+    let proj_lit = xla::Literal::vec1(&proj).reshape(&[n as i64, k as i64]).unwrap();
+    let off_lit = xla::Literal::vec1(&offsets);
+    let out = p.hash_batch(&samples, &proj_lit, &off_lit).unwrap();
+    assert_eq!(out.len(), b * k);
+}
+
+#[test]
+fn coordinator_end_to_end_over_pjrt() {
+    // The full L3 stack on the PJRT backend: insert a sine corpus through
+    // the dynamic batcher, query, and check the nearest phase comes back.
+    use funclsh::config::ServiceConfig;
+    use funclsh::coordinator::{Coordinator, Op, Response};
+    use funclsh::functions::{Function1D, Sine};
+
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServiceConfig {
+        dim: 64,
+        k: 2,
+        l: 16,
+        workers: 2,
+        max_batch: 64,
+        ..Default::default()
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(23);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+    let points = emb.sample_points().to_vec();
+    let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+    let proj_rows: Vec<&[f64]> = (0..cfg.total_hashes()).map(|j| bank.projection_row(j)).collect();
+    let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+    let pjrt = PjrtHashPath::from_folded(dir, "mc_l2_hash", folded).unwrap();
+    let svc = Coordinator::start(&cfg, std::sync::Arc::new(pjrt));
+
+    let sample = |phase: f64| -> Vec<f32> {
+        let f = Sine::paper(phase);
+        points.iter().map(|&x| f.eval(x) as f32).collect()
+    };
+    for i in 0..100u64 {
+        let phase = 2.0 * std::f64::consts::PI * (i as f64 / 100.0);
+        assert_eq!(
+            svc.submit(Op::Insert { id: i, samples: sample(phase) }),
+            Response::Inserted { id: i }
+        );
+    }
+    let resp = svc.submit(Op::Query {
+        samples: sample(2.0 * std::f64::consts::PI * 0.41),
+        k: 3,
+    });
+    match resp {
+        Response::Hits(hits) => {
+            assert!(!hits.is_empty());
+            assert_eq!(hits[0].id, 41, "{hits:?}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    let m = svc.metrics();
+    assert_eq!(m.errors, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn batched_executor_pads_and_unpads() {
+    // The generic BatchedExecutor: odd row counts must round-trip through
+    // the fixed-batch artifact with zero-padding, and each row's signature
+    // must match a direct full-batch execution.
+    use funclsh::runtime::BatchedExecutor;
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let p = engine.pipeline("mc_l2_hash").unwrap();
+    let (n, k) = (p.spec.dim, p.spec.k);
+
+    let mut rng = Xoshiro256pp::seed_from_u64(29);
+    let proj: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+    let offsets: Vec<f32> = (0..k).map(|_| rng.uniform() as f32).collect();
+    let exec = BatchedExecutor::new(p, &proj, &offsets).unwrap();
+
+    let rows = random_rows(n, 67, 31); // 67 < 128: one padded batch
+    let sigs = exec.hash_rows(&rows).unwrap();
+    assert_eq!(sigs.len(), 67);
+    for sig in &sigs {
+        assert_eq!(sig.len(), k);
+    }
+    // agree with a manual full-batch call
+    let b = p.spec.batch;
+    let mut flat = vec![0f32; b * n];
+    for (i, row) in rows.iter().enumerate() {
+        flat[i * n..(i + 1) * n].copy_from_slice(row);
+    }
+    let proj_lit = xla::Literal::vec1(&proj).reshape(&[n as i64, k as i64]).unwrap();
+    let off_lit = xla::Literal::vec1(&offsets);
+    let direct = p.hash_batch(&flat, &proj_lit, &off_lit).unwrap();
+    for (i, sig) in sigs.iter().enumerate() {
+        assert_eq!(sig.as_slice(), &direct[i * k..(i + 1) * k], "row {i}");
+    }
+
+    // bad shapes rejected
+    assert!(BatchedExecutor::new(p, &proj[..10], &offsets).is_err());
+    assert!(exec.hash_rows(&[vec![0f32; n - 1]]).is_err());
+}
+
+#[test]
+fn simhash_artifact_executes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let p = engine.pipeline("simhash").unwrap();
+    let (b, n, k) = (p.spec.batch, p.spec.dim, p.spec.k);
+    let mut rng = Xoshiro256pp::seed_from_u64(37);
+    let samples: Vec<f32> = (0..b * n).map(|_| rng.normal() as f32).collect();
+    let proj: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+    let x = xla::Literal::vec1(&samples).reshape(&[b as i64, n as i64]).unwrap();
+    let pr = xla::Literal::vec1(&proj).reshape(&[n as i64, k as i64]).unwrap();
+    let out = p.execute(&[x, pr]).unwrap();
+    let bits = out.to_vec::<i32>().unwrap();
+    assert_eq!(bits.len(), b * k);
+    assert!(bits.iter().all(|&v| v == 0 || v == 1));
+    // agree with rust-side sign computation
+    for row in 0..8 {
+        for j in 0..k {
+            let mut acc = 0f64;
+            for i in 0..n {
+                acc += samples[row * n + i] as f64 * proj[i * k + j] as f64;
+            }
+            let want = if acc >= 0.0 { 1 } else { 0 };
+            let got = bits[row * k + j];
+            // f32-vs-f64 sign flips only possible at |acc| ~ 0
+            if got != want {
+                assert!(acc.abs() < 1e-3, "row {row} j {j}: acc {acc}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_path_rejects_mismatched_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(41);
+    // dim-32 embedder vs the dim-64 artifact must be refused at load time
+    let emb = MonteCarloEmbedder::new(Interval::unit(), 32, 2.0, &mut rng);
+    let bank = PStableHashBank::new(32, 32, 2.0, 1.0, &mut rng);
+    let proj_rows: Vec<&[f64]> = (0..32).map(|j| bank.projection_row(j)).collect();
+    let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+    let err = PjrtHashPath::from_folded(dir, "mc_l2_hash", folded);
+    assert!(err.is_err());
+    assert!(format!("{}", err.err().unwrap()).contains("dim"));
+}
+
+#[test]
+fn unknown_pipeline_name_errors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(43);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), 64, 2.0, &mut rng);
+    let bank = PStableHashBank::new(64, 32, 2.0, 1.0, &mut rng);
+    let proj_rows: Vec<&[f64]> = (0..32).map(|j| bank.projection_row(j)).collect();
+    let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+    let err = PjrtHashPath::from_folded(dir, "no_such_pipeline", folded);
+    assert!(err.is_err());
+}
+
+#[test]
+fn pipeline_hash_batch_rejects_bad_flat_len() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let p = engine.pipeline("mc_l2_hash").unwrap();
+    let (n, k) = (p.spec.dim, p.spec.k);
+    let proj = xla::Literal::vec1(&vec![0f32; n * k])
+        .reshape(&[n as i64, k as i64])
+        .unwrap();
+    let off = xla::Literal::vec1(&vec![0f32; k]);
+    assert!(p.hash_batch(&vec![0f32; 5], &proj, &off).is_err());
+}
+
+#[test]
+fn jnp_variant_agrees_with_pallas_variant() {
+    // The §Perf ablation artifact must be numerically identical to the
+    // Pallas one (same math, different lowering).
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let a = engine.pipeline("mc_l2_hash").unwrap();
+    let b = engine.pipeline("mc_l2_hash_jnp").unwrap();
+    let (bt, n, k) = (a.spec.batch, a.spec.dim, a.spec.k);
+    let mut rng = Xoshiro256pp::seed_from_u64(47);
+    let samples: Vec<f32> = (0..bt * n).map(|_| rng.normal() as f32).collect();
+    let proj: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+    let offsets: Vec<f32> = (0..k).map(|_| rng.uniform() as f32).collect();
+    let pl = xla::Literal::vec1(&proj).reshape(&[n as i64, k as i64]).unwrap();
+    let ol = xla::Literal::vec1(&offsets);
+    let ha = a.hash_batch(&samples, &pl, &ol).unwrap();
+    let pl2 = xla::Literal::vec1(&proj).reshape(&[n as i64, k as i64]).unwrap();
+    let ol2 = xla::Literal::vec1(&offsets);
+    let hb = b.hash_batch(&samples, &pl2, &ol2).unwrap();
+    let mismatches = ha.iter().zip(&hb).filter(|(x, y)| x != y).count();
+    assert!(
+        mismatches <= 8,
+        "{mismatches} mismatches between pallas and jnp lowering"
+    );
+}

@@ -1,0 +1,336 @@
+//! Property-based tests over the coordinator and library invariants
+//! (DESIGN.md §5): randomized configurations and inputs, checked against
+//! algebraic/behavioural laws rather than fixed examples.
+
+use funclsh::config::ServiceConfig;
+use funclsh::coordinator::{
+    BoundedQueue, Coordinator, CpuHashPath, FoldedHashPath, HashPath, Op, Response,
+};
+use funclsh::embedding::{
+    ChebyshevEmbedder, Embedder, Interval, MonteCarloEmbedder, QmcEmbedder, QmcSequence,
+};
+use funclsh::hashing::{HashBank, LazyL2Hash, PStableHashBank, SimHashBank};
+use funclsh::json;
+use funclsh::lsh::{IndexConfig, LshIndex};
+use funclsh::util::proptest::{check, Gen};
+use funclsh::wasserstein::{discrete::discrete_wasserstein_1d, wasserstein_empirical};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn random_embedder(g: &mut Gen, n: usize) -> Box<dyn Embedder> {
+    match g.usize_in(0..3) {
+        0 => Box::new(MonteCarloEmbedder::new(Interval::unit(), n, 2.0, g.rng())),
+        1 => Box::new(QmcEmbedder::new(Interval::unit(), n, 2.0, QmcSequence::Sobol)),
+        _ => Box::new(ChebyshevEmbedder::new(Interval::unit(), n)),
+    }
+}
+
+#[test]
+fn embedders_are_linear() {
+    // T(a·x + b·y) == a·T(x) + b·T(y): the property the projection fold
+    // and the AOT pipeline both depend on.
+    check(60, |g| {
+        let n = 8 * g.usize_in(1..5);
+        let emb = random_embedder(g, n);
+        let a = g.f64_range(-3.0, 3.0);
+        let b = g.f64_range(-3.0, 3.0);
+        let x: Vec<f64> = (0..n).map(|_| g.f64_range(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| g.f64_range(-2.0, 2.0)).collect();
+        let combo: Vec<f64> = x.iter().zip(&y).map(|(xi, yi)| a * xi + b * yi).collect();
+        let t_combo = emb.embed_samples(&combo);
+        let tx = emb.embed_samples(&x);
+        let ty = emb.embed_samples(&y);
+        for (i, tc) in t_combo.iter().enumerate() {
+            let want = a * tx[i] + b * ty[i];
+            assert!(
+                (tc - want).abs() <= 1e-9 * (1.0 + want.abs()),
+                "seed {}: coeff {i}: {tc} vs {want}",
+                g.seed
+            );
+        }
+    });
+}
+
+#[test]
+fn folded_path_equals_reference_path() {
+    // For random embedder/bank shapes, the folded single-matmul path and
+    // the embed-then-hash path agree (±1 at rare floor boundaries).
+    check(25, |g| {
+        let n = 8 * g.usize_in(1..4);
+        let k = g.usize_in(1..24);
+        let r = g.f64_range(0.25, 4.0);
+        let emb = MonteCarloEmbedder::new(Interval::unit(), n, 2.0, g.rng());
+        let bank = PStableHashBank::new(n, k, 2.0, r, g.rng());
+        let rows: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..n).map(|_| g.f64_range(-1.0, 1.0) as f32).collect())
+            .collect();
+        let reference = CpuHashPath::new(Box::new(emb.clone()), Box::new(bank.clone()));
+        let proj_rows: Vec<&[f64]> = (0..k).map(|j| bank.projection_row(j)).collect();
+        let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+        let a = reference.hash_rows(&rows).unwrap();
+        let b = folded.hash_rows(&rows).unwrap();
+        let mut mismatches = 0;
+        for (ra, rb) in a.iter().zip(&b) {
+            for (x, y) in ra.iter().zip(rb) {
+                if x != y {
+                    mismatches += 1;
+                    assert!((x - y).abs() <= 1, "seed {}: {x} vs {y}", g.seed);
+                }
+            }
+        }
+        assert!(mismatches <= 2, "seed {}: {mismatches} mismatches", g.seed);
+    });
+}
+
+#[test]
+fn hash_banks_are_deterministic_and_shift_invariant() {
+    check(40, |g| {
+        let n = g.usize_in(2..32);
+        let k = g.usize_in(1..16);
+        let bank = PStableHashBank::new(n, k, 2.0, 1.0, g.rng());
+        let v: Vec<f64> = (0..n).map(|_| g.f64_range(-5.0, 5.0)).collect();
+        assert_eq!(bank.hash(&v), bank.hash(&v), "determinism");
+        // sign hash: h(λx) == h(x) for λ > 0
+        let sim = SimHashBank::new(n, k, g.rng());
+        let lam = g.f64_range(0.1, 10.0);
+        let scaled: Vec<f64> = v.iter().map(|x| x * lam).collect();
+        assert_eq!(sim.hash(&v), sim.hash(&scaled), "simhash scale invariance");
+    });
+}
+
+#[test]
+fn lazy_hash_zero_padding_invariance() {
+    // Remark 2: trailing zeros never change the hash, for any length.
+    check(40, |g| {
+        let k = g.usize_in(1..8);
+        let h = LazyL2Hash::new(g.u64(), k, g.f64_range(0.5, 2.0));
+        let v: Vec<f64> = g.vec(1..40, |g| g.f64_range(-2.0, 2.0));
+        let mut padded = v.clone();
+        padded.extend(std::iter::repeat_n(0.0, g.usize_in(1..30)));
+        assert_eq!(h.hash(&v), h.hash(&padded), "seed {}", g.seed);
+    });
+}
+
+#[test]
+fn index_insert_query_consistency() {
+    // Anything inserted is findable under its own signature; queries
+    // never fabricate ids; multiprobe is a superset of the exact query.
+    check(30, |g| {
+        let k = g.usize_in(1..4);
+        let l = g.usize_in(1..5);
+        let mut index = LshIndex::new(IndexConfig::new(k, l));
+        let mut sigs = Vec::new();
+        let count = g.usize_in(1..40);
+        for id in 0..count as u64 {
+            let sig: Vec<i32> = (0..k * l).map(|_| g.usize_in(0..4) as i32).collect();
+            index.insert(id, &sig);
+            sigs.push(sig);
+        }
+        for (id, sig) in sigs.iter().enumerate() {
+            let got = index.query(sig);
+            assert!(got.contains(&(id as u64)), "seed {}: id {id} lost", g.seed);
+            for cand in &got {
+                assert!((*cand as usize) < count, "fabricated id {cand}");
+            }
+            let probed = index.query_multiprobe(sig, 1);
+            for c in &got {
+                assert!(probed.contains(c), "multiprobe must be a superset");
+            }
+        }
+    });
+}
+
+#[test]
+fn amplification_is_monotone_in_p1() {
+    check(50, |g| {
+        let cfg = IndexConfig::new(g.usize_in(1..6), g.usize_in(1..10));
+        let p1 = g.f64_range(0.0, 1.0);
+        let p2 = g.f64_range(0.0, 1.0);
+        let (lo, hi) = if p1 < p2 { (p1, p2) } else { (p2, p1) };
+        assert!(
+            cfg.amplified_probability(lo) <= cfg.amplified_probability(hi) + 1e-12,
+            "seed {}",
+            g.seed
+        );
+    });
+}
+
+#[test]
+fn queue_batch_drain_preserves_items() {
+    // Random interleavings of pushes and batch-pops: nothing lost, nothing
+    // duplicated, FIFO order preserved.
+    check(25, |g| {
+        let cap = g.usize_in(1..32);
+        let q = BoundedQueue::new(cap);
+        let total = g.usize_in(1..100);
+        let mut pushed = 0usize;
+        let mut popped = Vec::new();
+        while popped.len() < total {
+            if pushed < total && (q.len() < cap) && g.bool(0.6) {
+                q.push(pushed).unwrap();
+                pushed += 1;
+            } else if !q.is_empty() {
+                let batch = q
+                    .pop_batch(g.usize_in(1..8), Duration::from_micros(1))
+                    .unwrap();
+                popped.extend(batch);
+            }
+        }
+        let want: Vec<usize> = (0..total).collect();
+        assert_eq!(popped, want, "seed {}", g.seed);
+    });
+}
+
+#[test]
+fn wasserstein_empirical_is_a_metric() {
+    check(30, |g| {
+        let xs: Vec<f64> = g.vec(1..20, |g| g.f64_range(-3.0, 3.0));
+        let ys: Vec<f64> = g.vec(1..20, |g| g.f64_range(-3.0, 3.0));
+        let zs: Vec<f64> = g.vec(1..20, |g| g.f64_range(-3.0, 3.0));
+        for p in [1.0, 2.0] {
+            let dxy = wasserstein_empirical(&xs, &ys, p);
+            let dyx = wasserstein_empirical(&ys, &xs, p);
+            assert!((dxy - dyx).abs() < 1e-10, "symmetry (seed {})", g.seed);
+            assert!(wasserstein_empirical(&xs, &xs, p) < 1e-10, "identity");
+            let dxz = wasserstein_empirical(&xs, &zs, p);
+            let dyz = wasserstein_empirical(&ys, &zs, p);
+            assert!(
+                dxz <= dxy + dyz + 1e-9,
+                "triangle (seed {}): {dxz} > {dxy} + {dyz}",
+                g.seed
+            );
+        }
+    });
+}
+
+#[test]
+fn lp_solver_matches_sorted_estimator() {
+    // On uniform masses the exact LP must equal the merged-grid formula.
+    check(15, |g| {
+        let m = g.usize_in(1..12);
+        let n = g.usize_in(1..12);
+        let xs: Vec<f64> = (0..m).map(|_| g.f64_range(-2.0, 2.0)).collect();
+        let ys: Vec<f64> = (0..n).map(|_| g.f64_range(-2.0, 2.0)).collect();
+        let wa = vec![1.0 / m as f64; m];
+        let wb = vec![1.0 / n as f64; n];
+        let lp = discrete_wasserstein_1d(&xs, &wa, &ys, &wb, 1.0);
+        let merged = wasserstein_empirical(&xs, &ys, 1.0);
+        assert!(
+            (lp - merged).abs() < 1e-8,
+            "seed {}: {lp} vs {merged}",
+            g.seed
+        );
+    });
+}
+
+#[test]
+fn json_roundtrip_random_trees() {
+    fn random_value(g: &mut Gen, depth: usize) -> json::Value {
+        match if depth == 0 { g.usize_in(0..4) } else { g.usize_in(0..6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(g.bool(0.5)),
+            2 => json::Value::Number((g.f64_range(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => json::Value::String(
+                (0..g.usize_in(0..12))
+                    .map(|_| {
+                        let c = g.usize_in(0..5);
+                        ['a', '"', '\\', 'π', '\n'][c]
+                    })
+                    .collect(),
+            ),
+            4 => json::Value::Array(
+                (0..g.usize_in(0..4))
+                    .map(|_| random_value(g, depth - 1))
+                    .collect(),
+            ),
+            _ => json::Value::Object(
+                (0..g.usize_in(0..4))
+                    .map(|i| (format!("k{i}"), random_value(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(80, |g| {
+        let v = random_value(g, 3);
+        let text = v.to_json();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("seed {}: {e}\n{text}", g.seed));
+        assert_eq!(v, back, "seed {}", g.seed);
+    });
+}
+
+#[test]
+fn coordinator_never_loses_or_duplicates_inserts() {
+    // Service-level property: submit a random mix of ops from multiple
+    // threads; every insert is acked exactly once and ends up queryable.
+    check(5, |g| {
+        let cfg = ServiceConfig {
+            dim: 16,
+            k: 1,
+            l: 4,
+            workers: g.usize_in(1..4),
+            max_batch: g.usize_in(1..32),
+            max_wait_us: 50,
+            queue_depth: g.usize_in(4..64),
+            ..Default::default()
+        };
+        let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, g.rng());
+        let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, g.rng());
+        let path = Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank)));
+        let svc = Arc::new(Coordinator::start(&cfg, path));
+        let threads = g.usize_in(1..4);
+        let per = g.usize_in(1..40);
+        let mut handles = Vec::new();
+        for t in 0..threads as u64 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut acks = 0;
+                for i in 0..per as u64 {
+                    let id = t * 10_000 + i;
+                    let samples: Vec<f32> =
+                        (0..16).map(|s| ((id + s) as f32 * 0.37).sin()).collect();
+                    match svc.submit(Op::Insert { id, samples }) {
+                        Response::Inserted { id: got } => {
+                            assert_eq!(got, id);
+                            acks += 1;
+                        }
+                        other => panic!("unexpected {other:?}"),
+                    }
+                }
+                acks
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, threads * per);
+        assert_eq!(svc.indexed(), threads * per, "seed {}", g.seed);
+        Arc::try_unwrap(svc).ok().unwrap().shutdown();
+    });
+}
+
+#[test]
+fn index_remove_inverts_insert() {
+    // insert a random set, remove a random subset with the original
+    // signatures: removed ids never reappear, kept ids always do.
+    check(25, |g| {
+        let k = g.usize_in(1..4);
+        let l = g.usize_in(1..4);
+        let mut index = LshIndex::new(IndexConfig::new(k, l));
+        let count = g.usize_in(1..30);
+        let sigs: Vec<Vec<i32>> = (0..count)
+            .map(|_| (0..k * l).map(|_| g.usize_in(0..3) as i32).collect())
+            .collect();
+        for (id, sig) in sigs.iter().enumerate() {
+            index.insert(id as u64, sig);
+        }
+        let keep: Vec<bool> = (0..count).map(|_| g.bool(0.5)).collect();
+        for (id, sig) in sigs.iter().enumerate() {
+            if !keep[id] {
+                assert!(index.remove(id as u64, sig), "seed {}", g.seed);
+            }
+        }
+        for (id, sig) in sigs.iter().enumerate() {
+            let found = index.query(sig).contains(&(id as u64));
+            assert_eq!(found, keep[id], "seed {}: id {id}", g.seed);
+        }
+        assert_eq!(index.len(), keep.iter().filter(|&&b| b).count());
+    });
+}
