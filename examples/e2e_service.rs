@@ -1,26 +1,27 @@
 //! End-to-end system validation (the mandated driver): bring up the full
-//! coordinator stack — dynamic batcher, worker pool, LSH index, and the
-//! AOT-compiled PJRT hash pipeline when `artifacts/` is present — serve a
-//! mixed insert/query workload, and report throughput, latency
-//! percentiles, and recall against the exact baseline.
+//! serving stack — TCP front-end, connection-handler pool, dynamic
+//! batcher, worker pool, and sharded LSH index — then drive it **over
+//! the loopback socket**: concurrent bulk inserts, k-NN queries with
+//! recall accounting against the exact baseline, and a mixed-traffic
+//! load-generator run with latency histograms. Finishes with a
+//! wire-requested snapshot and a graceful shutdown.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_service
+//! cargo run --release --example e2e_service [corpus_size]
 //! ```
 //!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//! The run is recorded in CHANGES.md (loopback throughput/latency).
 
 use funclsh::config::ServiceConfig;
-use funclsh::coordinator::{Coordinator, CpuHashPath, FoldedHashPath, HashPath, Op, Response};
+use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath};
 use funclsh::embedding::{l2_dist, Embedder, Interval, MonteCarloEmbedder};
-use funclsh::functions::{Distribution1D, Function1D};
+use funclsh::functions::Distribution1D;
 use funclsh::hashing::PStableHashBank;
-use funclsh::runtime::pjrt_path::PjrtHashPath;
-use funclsh::search::{recall_at_k, BruteForceKnn, Hit};
+use funclsh::search::{recall_at_k, BruteForceKnn};
+use funclsh::server::{run_load, Client, LoadConfig, Server};
 use funclsh::util::rng::{Rng64, Xoshiro256pp};
 use funclsh::wasserstein::QUANTILE_CLIP;
 use funclsh::workload::gmm_corpus;
-use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -31,8 +32,9 @@ fn main() {
         .unwrap_or(10_000);
     let n_queries = 200;
     let k = 10;
+    let client_threads = 8;
 
-    let cfg = ServiceConfig {
+    let mut cfg = ServiceConfig {
         dim: 64,
         k: 4,
         l: 8,
@@ -42,72 +44,55 @@ fn main() {
         probe_depth: 1,
         ..Default::default()
     };
+    cfg.server.port = 0; // ephemeral loopback port
+    cfg.server.max_conns = client_threads + 2;
 
     // Shared embedding + bank (the service's identity).
     let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
     let omega = Interval::new(QUANTILE_CLIP, 1.0 - QUANTILE_CLIP);
     let emb = MonteCarloEmbedder::new(omega, cfg.dim, 2.0, &mut rng);
-    let points = emb.sample_points().to_vec();
     let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
-    let proj_rows: Vec<&[f64]> = (0..cfg.total_hashes())
-        .map(|j| bank.projection_row(j))
-        .collect();
-    let folded = FoldedHashPath::new(Box::new(emb.clone()), &proj_rows, bank.offsets(), bank.r());
+    let path: Arc<dyn HashPath> =
+        Arc::new(CpuHashPath::new(Box::new(emb.clone()), Box::new(bank)));
+    let svc = Arc::new(Coordinator::start(&cfg, path));
+    let server = Server::start(&cfg, svc, emb.sample_points().to_vec()).expect("bind loopback");
+    let addr = server.addr();
+    println!("serving on {addr} ({} handler threads)", cfg.server.max_conns);
 
-    // PJRT when artifacts exist, CPU otherwise — identical signatures.
-    let artifacts = Path::new("artifacts");
-    let path: Arc<dyn HashPath> = if artifacts.join("manifest.json").exists() {
-        match PjrtHashPath::from_folded(artifacts, "mc_l2_hash", folded) {
-            Ok(p) => {
-                println!("hash path: PJRT (AOT pipeline, batch {})", p.batch_size());
-                Arc::new(p)
-            }
-            Err(e) => {
-                println!("hash path: CPU (PJRT load failed: {e})");
-                Arc::new(CpuHashPath::new(Box::new(emb.clone()), Box::new(bank.clone())))
-            }
-        }
-    } else {
-        println!("hash path: CPU (run `make artifacts` for the PJRT pipeline)");
-        Arc::new(FoldedHashPath::new(
-            Box::new(emb.clone()),
-            &proj_rows,
-            bank.offsets(),
-            bank.r(),
-        ))
-    };
+    // clients learn the sample points from the service, over the wire
+    let mut probe = Client::connect(addr).expect("connect");
+    let points = probe.points().expect("points");
+    assert_eq!(points.len(), cfg.dim);
 
-    let svc = Coordinator::start(&cfg, path);
-
-    // ------------- phase 1: bulk insert of the GMM corpus ----------------
-    println!("\nphase 1: inserting {n_corpus} GMM quantile functions…");
+    // ------------- phase 1: concurrent bulk insert over TCP --------------
+    println!(
+        "\nphase 1: inserting {n_corpus} GMM quantile functions over \
+         {client_threads} connections…"
+    );
     let corpus = gmm_corpus(n_corpus, &mut rng);
     let sample_rows: Vec<Vec<f32>> = corpus
         .iter()
-        .map(|d| {
-            points
-                .iter()
-                .map(|&u| d.quantile(u) as f32)
-                .collect()
-        })
+        .map(|d| points.iter().map(|&u| d.quantile(u) as f32).collect())
         .collect();
+    let rows = Arc::new(sample_rows);
     let t0 = Instant::now();
-    let mut pending = Vec::new();
-    for (i, samples) in sample_rows.iter().enumerate() {
-        pending.push(
-            svc.submit_async(Op::Insert {
-                id: i as u64,
-                samples: samples.clone(),
-            })
-            .expect("service up"),
-        );
+    let mut handles = Vec::new();
+    for t in 0..client_threads {
+        let rows = rows.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).expect("connect");
+            let mut errors = 0usize;
+            let mut i = t;
+            while i < rows.len() {
+                if client.insert(i as u64, &rows[i]).is_err() {
+                    errors += 1;
+                }
+                i += client_threads;
+            }
+            errors
+        }));
     }
-    let mut errors = 0;
-    for rx in pending {
-        if !matches!(rx.recv().unwrap(), Response::Inserted { .. }) {
-            errors += 1;
-        }
-    }
+    let errors: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
     let insert_time = t0.elapsed();
     println!(
         "  {} inserts in {:?} ({:.0} insert/s), {errors} errors",
@@ -115,11 +100,12 @@ fn main() {
         insert_time,
         n_corpus as f64 / insert_time.as_secs_f64()
     );
+    assert_eq!(probe.ping().expect("ping"), n_corpus as u64);
 
     // ------------- phase 2: queries with recall accounting ---------------
-    println!("\nphase 2: {n_queries} k-NN queries (k = {k})…");
-    // exact ground truth uses the same embedding
-    let vecs: Vec<Vec<f64>> = sample_rows
+    println!("\nphase 2: {n_queries} k-NN queries (k = {k}) over TCP…");
+    // exact ground truth uses the same embedding, computed locally
+    let vecs: Vec<Vec<f64>> = rows
         .iter()
         .map(|row| {
             let row64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
@@ -128,23 +114,16 @@ fn main() {
         .collect();
     let ids: Vec<u64> = (0..n_corpus as u64).collect();
 
-    let mut recall_acc = 0.0;
-    let t0 = Instant::now();
     let mut query_rows = Vec::new();
     for _ in 0..n_queries {
         let q = funclsh::workload::random_gmm(1 + rng.uniform_usize(4), &mut rng);
         let row: Vec<f32> = points.iter().map(|&u| q.quantile(u) as f32).collect();
         query_rows.push(row);
     }
+    let mut recall_acc = 0.0;
+    let t0 = Instant::now();
     for row in &query_rows {
-        let resp = svc.submit(Op::Query {
-            samples: row.clone(),
-            k,
-        });
-        let hits: Vec<Hit> = match resp {
-            Response::Hits(h) => h,
-            other => panic!("unexpected {other:?}"),
-        };
+        let hits = probe.query(row, k).expect("query");
         let row64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
         let qv = emb.embed_samples(&row64);
         let (exact, _) =
@@ -159,33 +138,38 @@ fn main() {
         recall_acc / n_queries as f64
     );
 
-    // ------------- phase 3: hash-only throughput (hot path) --------------
-    println!("\nphase 3: hash-only throughput…");
-    let t0 = Instant::now();
-    let n_hash = 5_000.min(n_corpus);
-    let mut pending = Vec::new();
-    for row in sample_rows.iter().take(n_hash) {
-        pending.push(
-            svc.submit_async(Op::Hash {
-                samples: row.clone(),
-            })
-            .unwrap(),
-        );
-    }
-    for rx in pending {
-        let _ = rx.recv().unwrap();
-    }
-    let hash_time = t0.elapsed();
+    // ------------- phase 3: mixed-traffic load generator -----------------
+    println!("\nphase 3: load generator ({client_threads} threads, mixed hash/insert/query)…");
+    let load = LoadConfig {
+        threads: client_threads,
+        ops_per_thread: 500,
+        insert_fraction: 0.2,
+        query_fraction: 0.4,
+        k,
+        seed: cfg.seed ^ 0xF00D,
+        ..Default::default()
+    };
+    let report = run_load(addr, &points, &load).expect("load run");
+    println!("  {}", report.to_json());
     println!(
-        "  {n_hash} hashes in {:?} ({:.0} hash/s)",
-        hash_time,
-        n_hash as f64 / hash_time.as_secs_f64()
+        "  {:.0} op/s, p50 {:.3} ms, p99 {:.3} ms",
+        report.throughput(),
+        report.latency_p50_s * 1e3,
+        report.latency_p99_s * 1e3
     );
 
-    let m = svc.metrics();
-    println!("\nservice metrics: {}", m.to_json());
-    let f = funclsh::functions::Sine::paper(0.0);
-    let _ = f.eval(0.5); // keep Function1D import exercised
-    svc.shutdown();
+    // ------------- snapshot + graceful shutdown --------------------------
+    let snap = std::env::temp_dir().join(format!("e2e-service-{}.flsh", std::process::id()));
+    let bytes = probe.snapshot(snap.to_str().unwrap()).expect("snapshot");
+    println!("\nwire snapshot: {bytes} bytes -> {}", snap.display());
+    let _ = std::fs::remove_file(&snap);
+
+    let metrics = probe.metrics().expect("metrics");
+    println!("service metrics: {}", metrics.to_json());
+    probe.shutdown_server().expect("shutdown request");
+    let (svc, _) = server.shutdown();
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
     println!("done.");
 }

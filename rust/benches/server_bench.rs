@@ -1,0 +1,122 @@
+//! Bench: the TCP serving layer — wire round-trip latency per op kind
+//! over one connection, protocol encode/decode cost, and multi-client
+//! loopback throughput via the load generator.
+//!
+//! ```bash
+//! cargo bench --bench server_bench            # full
+//! FUNCLSH_BENCH_FAST=1 cargo bench --bench server_bench   # CI
+//! ```
+
+use funclsh::bench::Bench;
+use funclsh::config::ServiceConfig;
+use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath, Response};
+use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use funclsh::functions::{Function1D, Sine};
+use funclsh::hashing::PStableHashBank;
+use funclsh::server::{protocol, run_load, Client, LoadConfig, Server};
+use funclsh::util::rng::Xoshiro256pp;
+use std::hint::black_box;
+use std::sync::Arc;
+
+fn boot(workers: usize, max_conns: usize) -> (Server, Vec<f64>) {
+    let mut cfg = ServiceConfig {
+        dim: 64,
+        k: 4,
+        l: 8,
+        workers,
+        max_batch: 128,
+        max_wait_us: 200,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    cfg.server.port = 0;
+    cfg.server.max_conns = max_conns;
+    let mut rng = Xoshiro256pp::seed_from_u64(17);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+    let points = emb.sample_points().to_vec();
+    let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+    let path: Arc<dyn HashPath> = Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank)));
+    let svc = Arc::new(Coordinator::start(&cfg, path));
+    let server = Server::start(&cfg, svc, points.clone()).expect("bind loopback");
+    (server, points)
+}
+
+fn finish(server: Server) {
+    let (svc, _) = server.shutdown();
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+}
+
+fn sample(phase: f64, points: &[f64]) -> Vec<f32> {
+    let f = Sine::paper(phase);
+    points.iter().map(|&x| f.eval(x) as f32).collect()
+}
+
+fn main() {
+    let fast = std::env::var("FUNCLSH_BENCH_FAST").as_deref() == Ok("1");
+    let mut b = Bench::new();
+    println!("== TCP serving layer ==");
+
+    // protocol micro: encode + parse one query frame (no socket)
+    {
+        let samples = vec![0.5f32; 64];
+        b.throughput_case("protocol/encode-parse-query", 1.0, || {
+            let line = protocol::encode_query(Some(1), black_box(&samples), 10);
+            black_box(protocol::parse_request(&line).unwrap());
+        });
+        let resp = Response::Signature((0..32).collect());
+        b.throughput_case("protocol/encode-decode-response", 1.0, || {
+            let line = protocol::encode_response(Some(1), black_box(&resp));
+            black_box(protocol::decode_reply(&line).unwrap());
+        });
+    }
+
+    // single-connection wire round-trips
+    {
+        let (server, points) = boot(2, 4);
+        let mut client = Client::connect(server.addr()).unwrap();
+        let row = sample(0.3, &points);
+        b.throughput_case("wire/ping", 1.0, || {
+            black_box(client.ping().unwrap());
+        });
+        b.throughput_case("wire/hash", 1.0, || {
+            black_box(client.hash(black_box(&row)).unwrap());
+        });
+        let mut next_id = 0u64;
+        b.throughput_case("wire/insert", 1.0, || {
+            client.insert(next_id, &row).unwrap();
+            next_id += 1;
+        });
+        b.throughput_case("wire/query-k10", 1.0, || {
+            black_box(client.query(black_box(&row), 10).unwrap());
+        });
+        finish(server);
+    }
+
+    // multi-client loopback throughput (the acceptance-criteria numbers)
+    for threads in [2usize, 8] {
+        let (server, points) = boot(4, threads + 1);
+        let load = LoadConfig {
+            threads,
+            ops_per_thread: if fast { 100 } else { 1000 },
+            insert_fraction: 0.3,
+            query_fraction: 0.3,
+            k: 10,
+            seed: 0xBEEF,
+            ..Default::default()
+        };
+        let report = run_load(server.addr(), &points, &load).expect("load");
+        println!(
+            "   load/threads={threads}: {:.0} op/s, p50 {:.3} ms, p99 {:.3} ms, {} errors",
+            report.throughput(),
+            report.latency_p50_s * 1e3,
+            report.latency_p99_s * 1e3,
+            report.errors
+        );
+        println!("   {}", report.to_json());
+        finish(server);
+    }
+
+    println!("\n{}", b.to_csv());
+}

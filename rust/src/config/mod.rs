@@ -231,6 +231,33 @@ pub enum HashKind {
     SimHash,
 }
 
+/// Network front-end configuration (`[server]` section): where the TCP
+/// listener binds and how many connection-handler threads serve it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// bind address (loopback by default; widen deliberately)
+    pub host: String,
+    /// TCP port (0 = ephemeral, the bound port is printed at startup)
+    pub port: u16,
+    /// connection-handler threads = max concurrently served connections
+    /// (further accepted connections queue until a handler frees up)
+    pub max_conns: usize,
+    /// where graceful shutdown snapshots the index (`FLSH1`); empty
+    /// string disables the shutdown snapshot
+    pub snapshot_path: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            host: "127.0.0.1".to_string(),
+            port: 7070,
+            max_conns: 32,
+            snapshot_path: String::new(),
+        }
+    }
+}
+
 /// Full service configuration with defaults mirroring the paper's
 /// experimental setup (Ω = \[0,1\], N = 64, r = 1, 1024 hash functions).
 #[derive(Debug, Clone, PartialEq)]
@@ -274,6 +301,8 @@ pub struct ServiceConfig {
     /// which AOT pipeline the service executes (e.g. `mc_l2_hash`,
     /// `mc_l2_hash_jnp`)
     pub pipeline: String,
+    /// TCP front-end settings
+    pub server: ServerConfig,
 }
 
 impl Default for ServiceConfig {
@@ -298,6 +327,7 @@ impl Default for ServiceConfig {
             artifacts_dir: "artifacts".to_string(),
             use_pjrt: true,
             pipeline: "mc_l2_hash".to_string(),
+            server: ServerConfig::default(),
         }
     }
 }
@@ -382,6 +412,21 @@ impl ServiceConfig {
         if let Some(v) = doc.get("runtime", "pipeline").and_then(TomlValue::as_str) {
             cfg.pipeline = v.to_string();
         }
+        if let Some(v) = doc.get("server", "host").and_then(TomlValue::as_str) {
+            cfg.server.host = v.to_string();
+        }
+        if let Some(v) = get_usize("server", "port") {
+            if v > u16::MAX as usize {
+                return Err(ConfigError::msg(format!("server port {v} out of range")));
+            }
+            cfg.server.port = v as u16;
+        }
+        if let Some(v) = get_usize("server", "max_conns") {
+            cfg.server.max_conns = v;
+        }
+        if let Some(v) = doc.get("server", "snapshot_path").and_then(TomlValue::as_str) {
+            cfg.server.snapshot_path = v.to_string();
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -407,6 +452,9 @@ impl ServiceConfig {
         }
         if self.shards == 0 {
             return Err(ConfigError::msg("shards must be positive"));
+        }
+        if self.server.max_conns == 0 {
+            return Err(ConfigError::msg("server max_conns must be positive"));
         }
         Ok(())
     }
@@ -453,6 +501,12 @@ queue_depth = 512
 [runtime]
 artifacts_dir = "artifacts"
 use_pjrt = false
+
+[server]
+host = "0.0.0.0"
+port = 9099
+max_conns = 16
+snapshot_path = "/tmp/idx.flsh"
 "#;
 
     #[test]
@@ -469,6 +523,18 @@ use_pjrt = false
         assert_eq!(cfg.total_hashes(), 24);
         assert_eq!(cfg.max_batch, 256);
         assert!(!cfg.use_pjrt);
+        assert_eq!(cfg.server.host, "0.0.0.0");
+        assert_eq!(cfg.server.port, 9099);
+        assert_eq!(cfg.server.max_conns, 16);
+        assert_eq!(cfg.server.snapshot_path, "/tmp/idx.flsh");
+    }
+
+    #[test]
+    fn server_section_validated() {
+        assert!(ServiceConfig::from_toml("[server]\nport = 70000\n").is_err());
+        assert!(ServiceConfig::from_toml("[server]\nmax_conns = 0\n").is_err());
+        let cfg = ServiceConfig::from_toml("[server]\nport = 0\n").unwrap();
+        assert_eq!(cfg.server.port, 0);
     }
 
     #[test]

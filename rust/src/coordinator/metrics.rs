@@ -19,8 +19,11 @@ pub struct ServiceMetrics {
     queries: AtomicU64,
     hashes: AtomicU64,
     removes: AtomicU64,
+    admin: AtomicU64,
     errors: AtomicU64,
     batches: AtomicU64,
+    conns_opened: AtomicU64,
+    conns_closed: AtomicU64,
     dist: Mutex<Dists>,
 }
 
@@ -46,6 +49,7 @@ impl ServiceMetrics {
             RequestKind::Query => &self.queries,
             RequestKind::Hash => &self.hashes,
             RequestKind::Remove => &self.removes,
+            RequestKind::Admin => &self.admin,
         }
         .fetch_add(1, Ordering::Relaxed);
     }
@@ -53,6 +57,17 @@ impl ServiceMetrics {
     /// Count one failed request.
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one accepted network connection (the TCP front-end merges
+    /// its per-connection accounting into the service metrics).
+    pub fn record_conn_opened(&self) {
+        self.conns_opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one closed network connection.
+    pub fn record_conn_closed(&self) {
+        self.conns_closed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a completed batch: its size and per-request latencies.
@@ -94,8 +109,11 @@ impl ServiceMetrics {
             queries: self.queries.load(Ordering::Relaxed),
             hashes: self.hashes.load(Ordering::Relaxed),
             removes: self.removes.load(Ordering::Relaxed),
+            admin: self.admin.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            conns_opened: self.conns_opened.load(Ordering::Relaxed),
+            conns_closed: self.conns_closed.load(Ordering::Relaxed),
             latency_mean_s: d.latency.mean(),
             latency_p50_s: q(0.5),
             latency_p99_s: q(0.99),
@@ -122,6 +140,8 @@ pub enum RequestKind {
     Hash,
     /// entry removal
     Remove,
+    /// admin op (metrics, snapshot, ping)
+    Admin,
 }
 
 /// A point-in-time copy of all metrics.
@@ -137,10 +157,16 @@ pub struct MetricsSnapshot {
     pub hashes: u64,
     /// removals
     pub removes: u64,
+    /// admin ops (metrics, snapshot, ping)
+    pub admin: u64,
     /// failed requests
     pub errors: u64,
     /// executed batches
     pub batches: u64,
+    /// network connections accepted
+    pub conns_opened: u64,
+    /// network connections closed
+    pub conns_closed: u64,
     /// mean request latency (seconds)
     pub latency_mean_s: f64,
     /// median request latency (seconds)
@@ -152,22 +178,30 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
-    /// Render as a JSON object.
-    pub fn to_json(&self) -> String {
+    /// Render as a JSON value (the wire protocol embeds this in the
+    /// `metrics` admin response).
+    pub fn to_value(&self) -> crate::json::Value {
         crate::json::object(vec![
             ("requests", (self.requests as usize).into()),
             ("inserts", (self.inserts as usize).into()),
             ("queries", (self.queries as usize).into()),
             ("hashes", (self.hashes as usize).into()),
             ("removes", (self.removes as usize).into()),
+            ("admin", (self.admin as usize).into()),
             ("errors", (self.errors as usize).into()),
             ("batches", (self.batches as usize).into()),
+            ("conns_opened", (self.conns_opened as usize).into()),
+            ("conns_closed", (self.conns_closed as usize).into()),
             ("latency_mean_s", self.latency_mean_s.into()),
             ("latency_p50_s", self.latency_p50_s.into()),
             ("latency_p99_s", self.latency_p99_s.into()),
             ("mean_batch_fill", self.mean_batch_fill.into()),
         ])
-        .to_json()
+    }
+
+    /// Render as a JSON object string.
+    pub fn to_json(&self) -> String {
+        self.to_value().to_json()
     }
 }
 
@@ -200,6 +234,23 @@ mod tests {
         assert!(s.latency_mean_s > 0.0);
         assert!(s.latency_p50_s > 0.0);
         assert!(s.latency_p99_s >= s.latency_p50_s);
+    }
+
+    #[test]
+    fn connection_and_admin_counters() {
+        let m = ServiceMetrics::new();
+        m.record_conn_opened();
+        m.record_conn_opened();
+        m.record_conn_closed();
+        m.record_request(RequestKind::Admin);
+        let s = m.snapshot();
+        assert_eq!(s.conns_opened, 2);
+        assert_eq!(s.conns_closed, 1);
+        assert_eq!(s.admin, 1);
+        assert_eq!(s.requests, 1);
+        let v = crate::json::parse(&s.to_json()).unwrap();
+        assert_eq!(v.get("conns_opened").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("admin").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -52,6 +52,15 @@ pub enum Op {
         /// entry id to remove
         id: u64,
     },
+    /// admin: point-in-time service metrics
+    Metrics,
+    /// admin: snapshot the LSH index (format `FLSH1`) to a file
+    Snapshot {
+        /// destination path
+        path: String,
+    },
+    /// admin: liveness probe
+    Ping,
 }
 
 /// A service response.
@@ -70,6 +79,20 @@ pub enum Response {
     Removed {
         /// id that was removed
         id: u64,
+    },
+    /// metrics snapshot of a `Metrics` op
+    Metrics(MetricsSnapshot),
+    /// ack of a `Snapshot`
+    Snapshotted {
+        /// path the snapshot was written to
+        path: String,
+        /// bytes written
+        bytes: u64,
+    },
+    /// ack of a `Ping`
+    Pong {
+        /// entries currently indexed
+        indexed: u64,
     },
     /// failure
     Error(String),
@@ -163,6 +186,7 @@ impl Coordinator {
             Op::Insert { .. } => RequestKind::Insert,
             Op::Query { .. } => RequestKind::Query,
             Op::Remove { .. } => RequestKind::Remove,
+            Op::Metrics | Op::Snapshot { .. } | Op::Ping => RequestKind::Admin,
         };
         let (tx, rx) = mpsc::channel();
         let req = Request {
@@ -180,6 +204,12 @@ impl Coordinator {
     /// Metrics snapshot.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The live metrics registry, shared with transport layers (the TCP
+    /// front-end records its connection counters here).
+    pub fn shared_metrics(&self) -> Arc<ServiceMetrics> {
+        self.metrics.clone()
     }
 
     /// Number of indexed entries.
@@ -221,15 +251,15 @@ fn worker_loop(
     while let Some(batch) = queue.pop_batch(max_batch, max_wait) {
         let batch_size = batch.len();
         // 1. one batched hash over every row that carries samples
-        // (Remove ops have no samples — they look the signature up in the
-        // store instead).
+        // (Remove ops look the signature up in the store instead; admin
+        // ops carry no samples at all).
         let rows: Vec<Vec<f32>> = batch
             .iter()
             .filter_map(|r| match &r.op {
                 Op::Hash { samples } | Op::Insert { samples, .. } | Op::Query { samples, .. } => {
                     Some(samples.clone())
                 }
-                Op::Remove { .. } => None,
+                Op::Remove { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping => None,
             })
             .collect();
         let hashed = match hash_path.hash_rows(&rows) {
@@ -247,18 +277,18 @@ fn worker_loop(
         let signatures: Vec<Option<Vec<i32>>> = batch
             .iter()
             .map(|r| match &r.op {
-                Op::Remove { .. } => None,
-                _ => hashed_iter.next(),
+                Op::Hash { .. } | Op::Insert { .. } | Op::Query { .. } => hashed_iter.next(),
+                Op::Remove { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping => None,
             })
             .collect();
         // 2. embed the rows that need re-rank vectors (inserts/queries)
         let embeddings: Vec<Option<Vec<f64>>> = batch
             .iter()
             .map(|r| match &r.op {
-                Op::Hash { .. } | Op::Remove { .. } => None,
                 Op::Insert { samples, .. } | Op::Query { samples, .. } => {
                     Some(hash_path.embed_row(samples))
                 }
+                _ => None,
             })
             .collect();
         // 3. apply all inserts under ONE store write lock (per-batch, not
@@ -297,7 +327,17 @@ fn worker_loop(
             .enumerate()
         {
             let resp = if accepted[slot] {
-                apply_op(&state, &req.op, sig.unwrap_or_default(), emb, probe_depth)
+                match &req.op {
+                    // admin ops are answered in-line by the worker: they
+                    // need the metrics registry / index state, not the
+                    // hash path
+                    Op::Metrics => Response::Metrics(metrics.snapshot()),
+                    Op::Ping => Response::Pong {
+                        indexed: state.index.len() as u64,
+                    },
+                    Op::Snapshot { path } => write_snapshot(&state, path),
+                    _ => apply_op(&state, &req.op, sig.unwrap_or_default(), emb, probe_depth),
+                }
             } else {
                 metrics.record_error();
                 match &req.op {
@@ -360,6 +400,48 @@ fn apply_op(
             hits.truncate(*k);
             Response::Hits(hits)
         }
+        Op::Metrics | Op::Snapshot { .. } | Op::Ping => {
+            unreachable!("admin ops are answered in the worker loop")
+        }
+    }
+}
+
+/// `Write` adapter that counts bytes, so `Snapshotted` can report the
+/// snapshot size without a second stat call.
+struct CountingWriter<W: std::io::Write> {
+    inner: W,
+    written: u64,
+}
+
+impl<W: std::io::Write> std::io::Write for CountingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.written += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+fn write_snapshot(state: &State, path: &str) -> Response {
+    let write = || -> std::io::Result<u64> {
+        let file = std::fs::File::create(path)?;
+        let mut w = CountingWriter {
+            inner: std::io::BufWriter::new(file),
+            written: 0,
+        };
+        state.index.save(&mut w)?;
+        std::io::Write::flush(&mut w)?;
+        Ok(w.written)
+    };
+    match write() {
+        Ok(bytes) => Response::Snapshotted {
+            path: path.to_string(),
+            bytes,
+        },
+        Err(e) => Response::Error(format!("snapshot to {path}: {e}")),
     }
 }
 
@@ -524,6 +606,51 @@ mod tests {
         assert_eq!(m.inserts, 200);
         assert!(m.batches > 0);
         Arc::try_unwrap(svc).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn admin_ops_roundtrip() {
+        let (svc, points) = test_service(2);
+        for i in 0..10u64 {
+            svc.submit(Op::Insert {
+                id: i,
+                samples: sample_sine(0.1 * i as f64, &points),
+            });
+        }
+        // ping reports the live index size
+        assert_eq!(svc.submit(Op::Ping), Response::Pong { indexed: 10 });
+        // metrics snapshot arrives through the batch path and counts itself
+        match svc.submit(Op::Metrics) {
+            Response::Metrics(m) => {
+                assert_eq!(m.inserts, 10);
+                assert!(m.admin >= 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // snapshot writes a loadable FLSH1 file and reports its size
+        let path = std::env::temp_dir().join(format!("funclsh-admin-{}.flsh", std::process::id()));
+        let path_str = path.to_str().unwrap().to_string();
+        match svc.submit(Op::Snapshot {
+            path: path_str.clone(),
+        }) {
+            Response::Snapshotted { path: p, bytes } => {
+                assert_eq!(p, path_str);
+                let data = std::fs::read(&path).unwrap();
+                assert_eq!(bytes, data.len() as u64);
+                let idx = crate::lsh::ShardedIndex::load(&mut data.as_slice()).unwrap();
+                assert_eq!(idx.len(), 10);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+        // snapshot to an unwritable path surfaces a typed error
+        match svc.submit(Op::Snapshot {
+            path: "/definitely/not/a/dir/x.flsh".into(),
+        }) {
+            Response::Error(e) => assert!(e.contains("snapshot")),
+            other => panic!("unexpected {other:?}"),
+        }
+        svc.shutdown();
     }
 
     #[test]

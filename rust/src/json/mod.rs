@@ -57,6 +57,20 @@ impl Value {
         }
     }
 
+    /// As u64. Must be a non-negative integer no larger than 2^53 (the
+    /// JSON-number precision limit) — beyond that the f64 carrier has
+    /// already rounded the value, so rather than hand back a silently
+    /// altered id this returns `None`.
+    pub fn as_u64(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self {
+            Value::Number(n) if *n >= 0.0 && *n <= MAX_EXACT && n.fract() == 0.0 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
     /// As array slice.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
@@ -426,6 +440,21 @@ mod tests {
         assert_eq!(parse("0").unwrap().as_usize(), Some(0));
         assert_eq!(parse("17").unwrap().as_usize(), Some(17));
         assert_eq!(parse("-1").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn as_u64_bounds() {
+        assert_eq!(parse("17").unwrap().as_u64(), Some(17));
+        assert_eq!(parse("-1").unwrap().as_u64(), None);
+        assert_eq!(parse("1.5").unwrap().as_u64(), None);
+        // 2^53 is the last exactly-representable integer; beyond it the
+        // value has been rounded and must be refused
+        assert_eq!(
+            parse("9007199254740992").unwrap().as_u64(),
+            Some(9_007_199_254_740_992)
+        );
+        assert_eq!(parse("9007199254740994").unwrap().as_u64(), None);
+        assert_eq!(parse("18446744073709551615").unwrap().as_u64(), None);
     }
 
     #[test]

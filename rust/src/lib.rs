@@ -25,7 +25,8 @@
 //! * **L2 (JAX, build time)** — `python/compile/model.py`: the embed+hash
 //!   pipelines, lowered once to HLO text by `python/compile/aot.py`.
 //! * **L3 (Rust, request path)** — this crate: the [`coordinator`] serving
-//!   stack (router, dynamic batcher, LSH index shards), the [`runtime`] PJRT
+//!   stack (router, dynamic batcher, LSH index shards), the [`server`] TCP
+//!   front-end speaking newline-delimited JSON, the [`runtime`] PJRT
 //!   executor that runs the AOT artifacts, and a complete pure-Rust
 //!   implementation of every algorithm for ground truth, baselines, and a
 //!   fallback compute path.
@@ -66,6 +67,7 @@ pub mod quadrature;
 pub mod runtime;
 pub mod search;
 pub mod sequences;
+pub mod server;
 pub mod theory;
 pub mod util;
 pub mod wasserstein;

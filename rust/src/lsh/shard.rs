@@ -99,25 +99,56 @@ impl ShardedIndex {
     }
 
     /// Restore from a snapshot produced by [`ShardedIndex::save`].
+    ///
+    /// Every failure mode — wrong magic, unsupported format version,
+    /// truncation, or an implausible header — surfaces as a typed
+    /// [`io::Error`] with enough context to diagnose the file, never a
+    /// panic or allocation blow-up: the server's shutdown/restore path
+    /// depends on being able to report these cleanly.
     pub fn load(r: &mut dyn Read) -> io::Result<Self> {
         let mut magic = [0u8; 5];
-        r.read_exact(&mut magic)?;
+        r.read_exact(&mut magic).map_err(|e| truncated("magic", e))?;
         if &magic != MAGIC {
-            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+            // distinguish "not a snapshot at all" from "snapshot from a
+            // different format version"
+            let msg = if magic[..4] == MAGIC[..4] {
+                format!(
+                    "unsupported snapshot version {:?} (this build reads {:?})",
+                    magic[4] as char, MAGIC[4] as char
+                )
+            } else {
+                format!("bad magic {magic:?} (not an FLSH snapshot)")
+            };
+            return Err(invalid(msg));
         }
-        let num_shards = read_u64(r)? as usize;
-        let k = read_u64(r)? as usize;
-        let l = read_u64(r)? as usize;
-        if num_shards == 0 || k == 0 || l == 0 || num_shards > 1 << 20 {
-            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad header"));
+        let num_shards = read_u64(r).map_err(|e| truncated("shard count", e))? as usize;
+        let k = read_u64(r).map_err(|e| truncated("header k", e))? as usize;
+        let l = read_u64(r).map_err(|e| truncated("header l", e))? as usize;
+        if num_shards == 0 || num_shards > 1 << 20 {
+            return Err(invalid(format!("implausible shard count {num_shards}")));
+        }
+        if k == 0 || l == 0 || k > 1 << 16 || l > 1 << 16 {
+            return Err(invalid(format!("implausible index shape k={k} l={l}")));
         }
         let config = IndexConfig::new(k, l);
         let mut shards = Vec::with_capacity(num_shards);
-        for _ in 0..num_shards {
-            shards.push(RwLock::new(LshIndex::read_from(r, config)?));
+        for shard in 0..num_shards {
+            let index = LshIndex::read_from(r, config)
+                .map_err(|e| invalid(format!("shard {shard}/{num_shards}: {e}")))?;
+            shards.push(RwLock::new(index));
         }
         Ok(Self { shards, config })
     }
+}
+
+/// `InvalidData` error with context (FLSH1 decode failures).
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("FLSH1: {msg}"))
+}
+
+/// Wrap a short read with what was being read.
+fn truncated(what: &str, e: io::Error) -> io::Error {
+    io::Error::new(e.kind(), format!("FLSH1: truncated reading {what}: {e}"))
 }
 
 impl LshIndex {
@@ -140,22 +171,36 @@ impl LshIndex {
     }
 
     /// Deserialize an index with the given shape (inverse of
-    /// [`LshIndex::write_to`]).
+    /// [`LshIndex::write_to`]). Corrupt counts are rejected *before* any
+    /// allocation is sized from them, so a truncated or hostile file
+    /// produces an [`io::Error`], not an OOM abort.
     pub fn read_from(r: &mut dyn Read, config: IndexConfig) -> io::Result<Self> {
+        const MAX_COUNT: usize = 1 << 28;
         let len = read_u64(r)? as usize;
         let mut index = LshIndex::new(config);
         for t in 0..config.l {
-            let buckets = read_u64(r)? as usize;
-            for _ in 0..buckets {
+            let buckets = read_u64(r)?;
+            if buckets > MAX_COUNT as u64 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("table {t}: implausible bucket count {buckets}"),
+                ));
+            }
+            for b in 0..buckets {
                 let mut key = vec![0i32; config.k];
                 for v in key.iter_mut() {
                     *v = read_i32(r)?;
                 }
                 let count = read_u64(r)? as usize;
-                if count > 1 << 40 {
-                    return Err(io::Error::new(io::ErrorKind::InvalidData, "bad count"));
+                if count > MAX_COUNT {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("table {t} bucket {b}: implausible id count {count}"),
+                    ));
                 }
-                let mut ids = Vec::with_capacity(count);
+                // cap the up-front reservation: `count` is attacker- or
+                // corruption-controlled until the reads below confirm it
+                let mut ids = Vec::with_capacity(count.min(4096));
                 for _ in 0..count {
                     ids.push(read_u64(r)?);
                 }
@@ -268,6 +313,40 @@ mod tests {
     fn snapshot_rejects_garbage() {
         assert!(ShardedIndex::load(&mut &b"NOTFL"[..]).is_err());
         assert!(ShardedIndex::load(&mut &b"FLSH1"[..]).is_err()); // truncated
+    }
+
+    #[test]
+    fn snapshot_errors_carry_context() {
+        // wrong family entirely
+        let e = ShardedIndex::load(&mut &b"NOTFL"[..]).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+        assert!(e.to_string().contains("bad magic"), "{e}");
+        // right family, future version
+        let e = ShardedIndex::load(&mut &b"FLSH9\0\0\0"[..]).unwrap_err();
+        assert!(e.to_string().contains("unsupported snapshot version"), "{e}");
+        // truncated header names what was being read
+        let e = ShardedIndex::load(&mut &b"FLSH1\x01\x02"[..]).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+        // implausible header values are typed errors, not allocations
+        let mut bad = Vec::new();
+        bad.extend_from_slice(b"FLSH1");
+        bad.extend_from_slice(&u64::MAX.to_le_bytes()); // shard count
+        bad.extend_from_slice(&1u64.to_le_bytes());
+        bad.extend_from_slice(&1u64.to_le_bytes());
+        let e = ShardedIndex::load(&mut bad.as_slice()).unwrap_err();
+        assert!(e.to_string().contains("implausible shard count"), "{e}");
+        // hostile per-bucket count rejected before allocation
+        let mut bad = Vec::new();
+        bad.extend_from_slice(b"FLSH1");
+        for v in [1u64, 1, 1] {
+            bad.extend_from_slice(&v.to_le_bytes()); // 1 shard, k=1, l=1
+        }
+        bad.extend_from_slice(&0u64.to_le_bytes()); // shard len
+        bad.extend_from_slice(&1u64.to_le_bytes()); // 1 bucket
+        bad.extend_from_slice(&0i32.to_le_bytes()); // key
+        bad.extend_from_slice(&u64::MAX.to_le_bytes()); // id count
+        let e = ShardedIndex::load(&mut bad.as_slice()).unwrap_err();
+        assert!(e.to_string().contains("implausible id count"), "{e}");
     }
 
     #[test]

@@ -2,7 +2,14 @@
 //! run the paper's experiments, or poke at the runtime.
 //!
 //! ```text
-//! funclsh serve       [--config svc.toml] [--trace-ops N]
+//! funclsh serve       --port P [--host H] [--config svc.toml] [--snapshot F]
+//!                     (TCP front-end; port 0 binds an ephemeral port and
+//!                      the bound address is printed as JSON on stdout)
+//! funclsh serve       [--config svc.toml] [--trace-ops N] [--snapshot F]
+//!                     (no --port: legacy in-process synthetic trace)
+//! funclsh load        [--addr H:P] [--threads N] [--ops N] [--k K]
+//!                     [--insert-frac F] [--query-frac F] [--seed S]
+//!                     [--shutdown]
 //! funclsh experiment  <fig1|fig2|fig3|thm1|qmc|knn|w1|mips|adaptive|all>
 //!                     [--pairs N] [--hashes N] [--dim N] [--seed S]
 //!                     [--out results/]
@@ -21,6 +28,7 @@ fn main() {
     let args = Args::from_env();
     let code = match args.subcommand() {
         Some("serve") => cmd_serve(&args),
+        Some("load") => cmd_load(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("hash") => cmd_hash(&args),
         Some("tune") => cmd_tune(&args),
@@ -28,7 +36,7 @@ fn main() {
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: funclsh <serve|experiment|hash|selftest|info> [options]\n\
+                "usage: funclsh <serve|load|experiment|hash|selftest|info> [options]\n\
                  see `funclsh experiment all --out results/` for the paper reproduction"
             );
             2
@@ -143,12 +151,145 @@ fn build_service(
     (path, points)
 }
 
+/// `funclsh serve --port P`: the TCP front-end. Prints the bound
+/// address as a JSON line on stdout (so `--port 0` callers can find
+/// it), then serves until a client sends `{"op":"shutdown"}`.
+fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
+    use funclsh::coordinator::Coordinator;
+    use funclsh::server::Server;
+    use std::sync::Arc;
+
+    if let Some(p) = args.get("port") {
+        match p.parse::<u16>() {
+            Ok(p) => cfg.server.port = p,
+            Err(_) => {
+                eprintln!("invalid --port `{p}`");
+                return 2;
+            }
+        }
+    }
+    if let Some(h) = args.get("host") {
+        cfg.server.host = h.to_string();
+    }
+    if let Some(s) = args.get("snapshot") {
+        cfg.server.snapshot_path = s.to_string();
+    }
+    let (path, points) = build_service(&cfg);
+    let svc = Arc::new(Coordinator::start(&cfg, path));
+    // moved into the server; Server::shutdown hands it back for the
+    // final drain once the network layer is quiesced
+    let server = match Server::start(&cfg, svc, points) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot bind {}:{}: {e}", cfg.server.host, cfg.server.port);
+            return 1;
+        }
+    };
+    println!(
+        "{}",
+        funclsh::json::object(vec![
+            ("listening", server.addr().to_string().as_str().into()),
+            ("dim", cfg.dim.into()),
+            ("k", cfg.k.into()),
+            ("l", cfg.l.into()),
+            ("workers", cfg.workers.into()),
+            ("max_conns", cfg.server.max_conns.into()),
+        ])
+        .to_json()
+    );
+    let _ = std::io::stdout().flush();
+    eprintln!(
+        "funclsh serving on {} (send {{\"op\":\"shutdown\"}} to stop gracefully)",
+        server.addr()
+    );
+    while !server.shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let (svc, snapshot) = server.shutdown();
+    match snapshot {
+        Some(Ok(bytes)) => eprintln!(
+            "shutdown snapshot: {bytes} bytes -> {}",
+            cfg.server.snapshot_path
+        ),
+        Some(Err(e)) => eprintln!("shutdown snapshot failed: {e}"),
+        None => {}
+    }
+    println!("{}", svc.metrics().to_json());
+    if let Ok(svc) = std::sync::Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+    0
+}
+
+/// `funclsh load`: multi-threaded load generator against a running
+/// server; prints a JSON throughput/latency report on stdout.
+fn cmd_load(args: &Args) -> i32 {
+    use funclsh::server::{Client, LoadConfig};
+
+    let addr_s = args.get("addr").unwrap_or("127.0.0.1:7070");
+    let addr: std::net::SocketAddr = match addr_s.parse() {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("invalid --addr `{addr_s}` (want host:port)");
+            return 2;
+        }
+    };
+    let cfg = LoadConfig {
+        threads: args.get_parsed("threads", 8usize),
+        ops_per_thread: args.get_parsed("ops", 250usize),
+        insert_fraction: args.get_parsed("insert-frac", 0.5f64),
+        query_fraction: args.get_parsed("query-frac", 0.3f64),
+        k: args.get_parsed("k", 10usize),
+        seed: args.get_parsed("seed", 0x10ADu64),
+    };
+    let mut probe = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("cannot connect to {addr}: {e}");
+            return 1;
+        }
+    };
+    let points = match probe.points() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot fetch sample points: {e}");
+            return 1;
+        }
+    };
+    eprintln!(
+        "load: {} threads x {} ops against {addr} (dim {})",
+        cfg.threads,
+        cfg.ops_per_thread,
+        points.len()
+    );
+    let report = match funclsh::server::run_load(addr, &points, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("load run failed: {e}");
+            return 1;
+        }
+    };
+    println!("{}", report.to_json());
+    if args.has("shutdown") {
+        match probe.shutdown_server() {
+            Ok(()) => eprintln!("server shutdown requested"),
+            Err(e) => eprintln!("shutdown request failed: {e}"),
+        }
+    }
+    0
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     use funclsh::coordinator::{Coordinator, Op, Response};
     use funclsh::workload::{sine_trace, TraceOp};
     use funclsh::prelude::Xoshiro256pp;
 
     let cfg = load_config(args);
+    // `--port` switches to the TCP front-end; without it, run the legacy
+    // in-process synthetic trace (kept for quick smoke tests).
+    if args.get("port").is_some() {
+        return cmd_serve_network(args, cfg);
+    }
     let (path, points) = build_service(&cfg);
     let svc = Coordinator::start(&cfg, path);
     eprintln!(

@@ -1,0 +1,483 @@
+//! Blocking client for the wire protocol, plus a multi-threaded load
+//! generator with latency histograms — the repo can drive its own
+//! serving layer end-to-end over loopback (`funclsh load`,
+//! `examples/e2e_service.rs`, `benches/server_bench.rs`).
+
+use super::protocol::{self, Reply};
+use crate::functions::{Function1D, Sine};
+use crate::json::{object, Value};
+use crate::search::Hit;
+use crate::util::rng::{Rng64, Xoshiro256pp};
+use crate::util::stats::quantile_sorted;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Client-side failure.
+#[derive(Debug)]
+pub enum ClientError {
+    /// transport failure
+    Io(std::io::Error),
+    /// unparseable or out-of-order frame
+    Protocol(String),
+    /// well-formed server error envelope
+    Server(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Protocol(e) => write!(f, "protocol: {e}"),
+            ClientError::Server(e) => write!(f, "server: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// A blocking connection to a funclsh server: one in-flight request at
+/// a time, correlated by `req_id`.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_req_id: u64,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. `"127.0.0.1:7070"` or a `SocketAddr`).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self {
+            reader,
+            writer: BufWriter::new(stream),
+            next_req_id: 1,
+        })
+    }
+
+    fn call(&mut self, line: String, req_id: u64) -> Result<Reply, ClientError> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply)?;
+        if n == 0 {
+            return Err(ClientError::Protocol("server closed connection".into()));
+        }
+        let (got_id, body) = protocol::decode_reply(&reply).map_err(ClientError::Protocol)?;
+        if got_id != Some(req_id) {
+            return Err(ClientError::Protocol(format!(
+                "req_id mismatch: sent {req_id}, got {got_id:?}"
+            )));
+        }
+        body.map_err(ClientError::Server)
+    }
+
+    fn next_id(&mut self) -> u64 {
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        id
+    }
+
+    /// `hash`: signature of a sample row.
+    pub fn hash(&mut self, samples: &[f32]) -> Result<Vec<i32>, ClientError> {
+        let rid = self.next_id();
+        match self.call(protocol::encode_hash(Some(rid), samples), rid)? {
+            Reply::Signature(s) => Ok(s),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `insert`: add an entry.
+    pub fn insert(&mut self, id: u64, samples: &[f32]) -> Result<(), ClientError> {
+        let rid = self.next_id();
+        match self.call(protocol::encode_insert(Some(rid), id, samples), rid)? {
+            Reply::Inserted { id: got } if got == id => Ok(()),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `query`: k-NN with exact re-ranking.
+    pub fn query(&mut self, samples: &[f32], k: usize) -> Result<Vec<Hit>, ClientError> {
+        let rid = self.next_id();
+        match self.call(protocol::encode_query(Some(rid), samples, k), rid)? {
+            Reply::Hits(h) => Ok(h),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `remove`: delete an entry.
+    pub fn remove(&mut self, id: u64) -> Result<(), ClientError> {
+        let rid = self.next_id();
+        match self.call(protocol::encode_remove(Some(rid), id), rid)? {
+            Reply::Removed { id: got } if got == id => Ok(()),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `metrics`: service metrics as a JSON object.
+    pub fn metrics(&mut self) -> Result<Value, ClientError> {
+        let rid = self.next_id();
+        match self.call(protocol::encode_bare(Some(rid), "metrics"), rid)? {
+            Reply::Metrics(v) => Ok(v),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `snapshot`: server-side FLSH1 dump; returns bytes written.
+    pub fn snapshot(&mut self, path: &str) -> Result<u64, ClientError> {
+        let rid = self.next_id();
+        match self.call(protocol::encode_snapshot(Some(rid), path), rid)? {
+            Reply::Snapshotted { bytes, .. } => Ok(bytes),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `ping`: liveness probe; returns the indexed entry count.
+    pub fn ping(&mut self) -> Result<u64, ClientError> {
+        let rid = self.next_id();
+        match self.call(protocol::encode_bare(Some(rid), "ping"), rid)? {
+            Reply::Pong { indexed } => Ok(indexed),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `points`: the service's published sample points.
+    pub fn points(&mut self) -> Result<Vec<f64>, ClientError> {
+        let rid = self.next_id();
+        match self.call(protocol::encode_bare(Some(rid), "points"), rid)? {
+            Reply::Points(p) => Ok(p),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `shutdown`: request graceful server shutdown.
+    pub fn shutdown_server(&mut self) -> Result<(), ClientError> {
+        let rid = self.next_id();
+        match self.call(protocol::encode_bare(Some(rid), "shutdown"), rid)? {
+            Reply::ShuttingDown => Ok(()),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+}
+
+/// Power-of-two latency histogram from 1 µs to ~8.4 s.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    /// bucket `i` counts latencies in `[2^i µs, 2^(i+1) µs)`; the last
+    /// bucket is open-ended
+    pub buckets: [u64; 24],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { buckets: [0; 24] }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one latency.
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// JSON rows `[{"le_us":…, "count":…}, …]` (cumulative upper bounds,
+    /// empty tail trimmed).
+    pub fn to_value(&self) -> Value {
+        let last = self
+            .buckets
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        Value::Array(
+            self.buckets[..last]
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| {
+                    object(vec![
+                        ("le_us", (1usize << (i + 1)).into()),
+                        ("count", (c as usize).into()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Load-generator settings.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// concurrent client threads (one connection each)
+    pub threads: usize,
+    /// operations per thread
+    pub ops_per_thread: usize,
+    /// fraction of ops that are inserts
+    pub insert_fraction: f64,
+    /// fraction of ops that are queries (the rest are hash-only)
+    pub query_fraction: f64,
+    /// neighbours per query
+    pub k: usize,
+    /// RNG seed (thread `t` uses `seed + t`)
+    pub seed: u64,
+    /// base for generated insert ids: thread `t` inserts
+    /// `id_base + (t << 32) + i`. The default (`1 << 40`) keeps load
+    /// traffic clear of normal corpus ids (which start at 0)
+    pub id_base: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        Self {
+            threads: 8,
+            ops_per_thread: 250,
+            insert_fraction: 0.5,
+            query_fraction: 0.3,
+            k: 10,
+            seed: 0x10AD,
+            id_base: 1 << 40,
+        }
+    }
+}
+
+/// Aggregated result of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// total operations attempted
+    pub ops: usize,
+    /// inserts / queries / hashes issued
+    pub inserts: usize,
+    /// queries issued
+    pub queries: usize,
+    /// hash-only ops issued
+    pub hashes: usize,
+    /// failed operations
+    pub errors: usize,
+    /// wall-clock duration of the run
+    pub elapsed: Duration,
+    /// mean per-op latency (seconds)
+    pub latency_mean_s: f64,
+    /// median per-op latency (seconds)
+    pub latency_p50_s: f64,
+    /// 99th-percentile per-op latency (seconds)
+    pub latency_p99_s: f64,
+    /// merged latency histogram
+    pub histogram: LatencyHistogram,
+}
+
+impl LoadReport {
+    /// Operations per second.
+    pub fn throughput(&self) -> f64 {
+        self.ops as f64 / self.elapsed.as_secs_f64().max(1e-12)
+    }
+
+    /// Render as a JSON object (the `funclsh load` output).
+    pub fn to_json(&self) -> String {
+        object(vec![
+            ("ops", self.ops.into()),
+            ("inserts", self.inserts.into()),
+            ("queries", self.queries.into()),
+            ("hashes", self.hashes.into()),
+            ("errors", self.errors.into()),
+            ("elapsed_s", self.elapsed.as_secs_f64().into()),
+            ("throughput_ops_s", self.throughput().into()),
+            ("latency_mean_s", self.latency_mean_s.into()),
+            ("latency_p50_s", self.latency_p50_s.into()),
+            ("latency_p99_s", self.latency_p99_s.into()),
+            ("histogram", self.histogram.to_value()),
+        ])
+        .to_json()
+    }
+}
+
+/// Per-thread tally, merged after join.
+#[derive(Default)]
+struct ThreadTally {
+    inserts: usize,
+    queries: usize,
+    hashes: usize,
+    errors: usize,
+    latencies: Vec<f64>,
+    histogram: LatencyHistogram,
+}
+
+/// Run mixed insert/query/hash traffic against `addr` from
+/// `cfg.threads` concurrent connections. The workload is the paper's
+/// sine family sampled at `points` (fetch them with
+/// [`Client::points`]). Insert ids are partitioned per thread above
+/// `cfg.id_base`, so a run never collides with itself or (at the
+/// default base) with an existing 0-based corpus.
+pub fn run_load(
+    addr: std::net::SocketAddr,
+    points: &[f64],
+    cfg: &LoadConfig,
+) -> Result<LoadReport, ClientError> {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..cfg.threads {
+        let points = points.to_vec();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || -> Result<ThreadTally, ClientError> {
+            let mut client = Client::connect(addr)?;
+            let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(t as u64));
+            let mut tally = ThreadTally::default();
+            for i in 0..cfg.ops_per_thread {
+                let phase = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+                let f = Sine::paper(phase);
+                let samples: Vec<f32> = points.iter().map(|&x| f.eval(x) as f32).collect();
+                let roll = rng.uniform();
+                let op_start = Instant::now();
+                let outcome = if roll < cfg.insert_fraction {
+                    tally.inserts += 1;
+                    let id = cfg.id_base + ((t as u64) << 32) + i as u64;
+                    client.insert(id, &samples).map(|_| ())
+                } else if roll < cfg.insert_fraction + cfg.query_fraction {
+                    tally.queries += 1;
+                    client.query(&samples, cfg.k).map(|_| ())
+                } else {
+                    tally.hashes += 1;
+                    client.hash(&samples).map(|_| ())
+                };
+                let lat = op_start.elapsed();
+                match outcome {
+                    Ok(()) => {
+                        tally.latencies.push(lat.as_secs_f64());
+                        tally.histogram.record(lat);
+                    }
+                    Err(ClientError::Server(_)) => tally.errors += 1,
+                    Err(e) => return Err(e), // transport failure: abort thread
+                }
+            }
+            Ok(tally)
+        }));
+    }
+
+    let mut merged = ThreadTally::default();
+    let mut first_err = None;
+    for h in handles {
+        match h.join().expect("load thread panicked") {
+            Ok(t) => {
+                merged.inserts += t.inserts;
+                merged.queries += t.queries;
+                merged.hashes += t.hashes;
+                merged.errors += t.errors;
+                merged.latencies.extend(t.latencies);
+                merged.histogram.merge(&t.histogram);
+            }
+            Err(e) => first_err = Some(e),
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let elapsed = t0.elapsed();
+    merged.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| {
+        if merged.latencies.is_empty() {
+            0.0
+        } else {
+            quantile_sorted(&merged.latencies, p)
+        }
+    };
+    let mean = if merged.latencies.is_empty() {
+        0.0
+    } else {
+        merged.latencies.iter().sum::<f64>() / merged.latencies.len() as f64
+    };
+    Ok(LoadReport {
+        ops: merged.inserts + merged.queries + merged.hashes,
+        inserts: merged.inserts,
+        queries: merged.queries,
+        hashes: merged.hashes,
+        errors: merged.errors,
+        elapsed,
+        latency_mean_s: mean,
+        latency_p50_s: q(0.5),
+        latency_p99_s: q(0.99),
+        histogram: merged.histogram,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_merge() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(1)); // bucket 0
+        h.record(Duration::from_micros(3)); // bucket 1
+        h.record(Duration::from_micros(1000)); // ~2^9.97 -> bucket 9
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 1);
+        assert_eq!(h.buckets[9], 1);
+        let mut other = LatencyHistogram::default();
+        other.record(Duration::from_micros(3));
+        other.merge(&h);
+        assert_eq!(other.count(), 4);
+        assert_eq!(other.buckets[1], 2);
+    }
+
+    #[test]
+    fn histogram_clamps_extremes() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_nanos(1)); // sub-µs clamps to bucket 0
+        h.record(Duration::from_secs(3600)); // clamps to the last bucket
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[23], 1);
+    }
+
+    #[test]
+    fn histogram_json_trims_tail() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(2));
+        let v = h.to_value();
+        let rows = v.as_array().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("count").unwrap().as_usize(), Some(1));
+        assert_eq!(rows[1].get("le_us").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let report = LoadReport {
+            ops: 10,
+            inserts: 5,
+            queries: 3,
+            hashes: 2,
+            errors: 0,
+            elapsed: Duration::from_millis(100),
+            latency_mean_s: 0.001,
+            latency_p50_s: 0.001,
+            latency_p99_s: 0.002,
+            histogram: LatencyHistogram::default(),
+        };
+        assert!((report.throughput() - 100.0).abs() < 1.0);
+        let v = crate::json::parse(&report.to_json()).unwrap();
+        assert_eq!(v.get("ops").unwrap().as_usize(), Some(10));
+        assert!(v.get("throughput_ops_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,306 @@
+//! The network serving layer: a `std::net` TCP front-end over the
+//! [`crate::coordinator`] batching worker pool.
+//!
+//! # Architecture
+//!
+//! ```text
+//! client ── TCP ──▶ acceptor thread ──▶ BoundedQueue<TcpStream>
+//!                                            │
+//!                                   handler pool (max_conns threads)
+//!                                            │  parse line → Op
+//!                                            ▼
+//!                                  Coordinator::submit  (dynamic
+//!                                  batcher: concurrent connections
+//!                                  share batched hash executions)
+//!                                            │
+//!                                            ▼
+//!                                   encode Response → write line
+//! ```
+//!
+//! The coordinator queue is the *shared* batching point: requests from
+//! different connections land in the same [`crate::coordinator::BoundedQueue`] and are
+//! hashed in one batched matmul, so wire concurrency directly feeds
+//! batch occupancy.
+//!
+//! # Wire protocol
+//!
+//! Newline-delimited JSON, one frame per line, UTF-8, max 8 MiB per
+//! line. Every request may carry an optional `req_id` (u64) that is
+//! echoed in the response, enabling client-side correlation.
+//!
+//! Requests:
+//!
+//! ```text
+//! {"op":"hash",     "samples":[f32…]}
+//! {"op":"insert",   "id":u64, "samples":[f32…]}
+//! {"op":"query",    "samples":[f32…], "k":usize}
+//! {"op":"remove",   "id":u64}
+//! {"op":"metrics"}
+//! {"op":"snapshot", "path":"…"}          (FLSH1 index dump, server-side path)
+//! {"op":"ping"}
+//! {"op":"points"}                        (published sample points)
+//! {"op":"shutdown"}                      (graceful stop + shutdown snapshot)
+//! ```
+//!
+//! Responses are an envelope with `"ok"`:
+//!
+//! ```text
+//! {"ok":true, "req_id":…, "type":"signature", "signature":[i32…]}
+//! {"ok":true, "req_id":…, "type":"inserted",  "id":u64}
+//! {"ok":true, "req_id":…, "type":"hits",      "hits":[{"id":u64,"distance":f64}…]}
+//! {"ok":true, "req_id":…, "type":"removed",   "id":u64}
+//! {"ok":true, "req_id":…, "type":"metrics",   "metrics":{…}}
+//! {"ok":true, "req_id":…, "type":"snapshot",  "path":"…", "bytes":u64}
+//! {"ok":true, "req_id":…, "type":"pong",      "indexed":u64}
+//! {"ok":true, "req_id":…, "type":"points",    "points":[f64…]}
+//! {"ok":true, "req_id":…, "type":"shutting_down"}
+//! {"ok":false,"req_id":…, "error":"…"}        (error envelope, both
+//!                                              bad requests and op failures)
+//! ```
+//!
+//! # Shutdown
+//!
+//! Graceful shutdown (the `shutdown` op, or [`Server::shutdown`]) stops
+//! the acceptor, drains handler threads (in-flight requests complete),
+//! and — if `server.snapshot_path` is configured — snapshots the
+//! `ShardedIndex` in the `FLSH1` format so a restart can skip
+//! re-hashing the corpus.
+
+pub mod client;
+pub mod protocol;
+
+pub use client::{run_load, Client, ClientError, LatencyHistogram, LoadConfig, LoadReport};
+
+use crate::config::ServiceConfig;
+use crate::coordinator::{BoundedQueue, Coordinator, Op, Response};
+use protocol::{Request, RequestBody};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often blocked I/O paths re-check the shutdown flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(50);
+
+/// The running TCP front-end.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+    svc: Arc<Coordinator>,
+    points: Arc<Vec<f64>>,
+    snapshot_path: String,
+}
+
+impl Server {
+    /// Bind `cfg.server.host:cfg.server.port` (port 0 = ephemeral) and
+    /// start the acceptor + handler pool over an already-running
+    /// coordinator. `points` are the service's published sample points,
+    /// served to clients via the `points` op.
+    pub fn start(
+        cfg: &ServiceConfig,
+        svc: Arc<Coordinator>,
+        points: Vec<f64>,
+    ) -> std::io::Result<Self> {
+        let listener = TcpListener::bind((cfg.server.host.as_str(), cfg.server.port))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let points = Arc::new(points);
+        // Accepted-but-unserved connections queue here; capacity bounds
+        // the accept backlog the same way the coordinator queue bounds
+        // requests.
+        let conn_queue: Arc<BoundedQueue<TcpStream>> =
+            Arc::new(BoundedQueue::new(cfg.server.max_conns.max(1) * 4));
+
+        let mut handlers = Vec::new();
+        for _ in 0..cfg.server.max_conns.max(1) {
+            let conn_queue = conn_queue.clone();
+            let svc = svc.clone();
+            let shutdown = shutdown.clone();
+            let points = points.clone();
+            handlers.push(std::thread::spawn(move || {
+                while let Some(batch) = conn_queue.pop_batch(1, POLL_INTERVAL) {
+                    for stream in batch {
+                        handle_connection(stream, &svc, &points, &shutdown);
+                    }
+                }
+            }));
+        }
+
+        let acceptor = {
+            let shutdown = shutdown.clone();
+            let conn_queue = conn_queue.clone();
+            std::thread::spawn(move || {
+                while !shutdown.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            // the listener is non-blocking; handlers use
+                            // blocking reads with a timeout. A full
+                            // backlog sheds the connection (drop = RST)
+                            // instead of blocking the acceptor, so
+                            // shutdown can never deadlock on a saturated
+                            // handler pool.
+                            let _ = stream.set_nonblocking(false);
+                            if conn_queue.try_push(stream).is_err() {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => std::thread::sleep(POLL_INTERVAL),
+                    }
+                }
+                conn_queue.close();
+            })
+        };
+
+        Ok(Self {
+            addr,
+            shutdown,
+            acceptor: Some(acceptor),
+            handlers,
+            svc,
+            points,
+            snapshot_path: cfg.server.snapshot_path.clone(),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The published sample points.
+    pub fn points(&self) -> &[f64] {
+        &self.points
+    }
+
+    /// Whether shutdown has been requested (locally or via the wire).
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, drain handlers, write the shutdown snapshot (if
+    /// configured), and hand the coordinator back to the caller (who
+    /// still owns its lifecycle). Returns the snapshot outcome:
+    /// `None` if disabled, `Some(Ok(bytes))` / `Some(Err(e))` otherwise.
+    pub fn shutdown(mut self) -> (Arc<Coordinator>, Option<std::io::Result<u64>>) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+        let snapshot = if self.snapshot_path.is_empty() {
+            None
+        } else {
+            Some(
+                match self.svc.submit(Op::Snapshot {
+                    path: self.snapshot_path.clone(),
+                }) {
+                    Response::Snapshotted { bytes, .. } => Ok(bytes),
+                    Response::Error(e) => Err(std::io::Error::other(e)),
+                    other => Err(std::io::Error::other(format!(
+                        "unexpected snapshot response {other:?}"
+                    ))),
+                },
+            )
+        };
+        (self.svc, snapshot)
+    }
+}
+
+/// Serve one connection until EOF, I/O error, or server shutdown.
+fn handle_connection(
+    stream: TcpStream,
+    svc: &Arc<Coordinator>,
+    points: &Arc<Vec<f64>>,
+    shutdown: &Arc<AtomicBool>,
+) {
+    let metrics = svc.shared_metrics();
+    metrics.record_conn_opened();
+    let _ = serve_stream(stream, svc, points, shutdown);
+    metrics.record_conn_closed();
+}
+
+fn serve_stream(
+    stream: TcpStream,
+    svc: &Arc<Coordinator>,
+    points: &Arc<Vec<f64>>,
+    shutdown: &Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    // Reads time out so an idle connection re-checks the shutdown flag;
+    // a timed-out read_line keeps its partial line and resumes.
+    stream.set_read_timeout(Some(POLL_INTERVAL))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        // per-call byte limit: a frame that exceeds MAX_LINE_BYTES hits
+        // the limit before the newline and is rejected below, so a
+        // hostile sender cannot grow the buffer without bound
+        let mut limited = (&mut reader).take((protocol::MAX_LINE_BYTES + 1) as u64);
+        match limited.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {
+                if line.len() > protocol::MAX_LINE_BYTES {
+                    let reply = protocol::encode_error(None, "request line too long");
+                    writer.write_all(reply.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    writer.flush()?;
+                    return Ok(());
+                }
+                let reply = answer(&line, svc, points, shutdown);
+                writer.write_all(reply.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                if shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                line.clear();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                // timed-out reads keep their partial line and resume, but
+                // a frame that drips past the cap without a newline is
+                // rejected here too
+                if shutdown.load(Ordering::SeqCst) || line.len() > protocol::MAX_LINE_BYTES {
+                    return Ok(());
+                }
+            }
+            Err(_) => return Ok(()),
+        }
+    }
+}
+
+/// Decode one request line and produce the response line.
+fn answer(
+    line: &str,
+    svc: &Arc<Coordinator>,
+    points: &Arc<Vec<f64>>,
+    shutdown: &Arc<AtomicBool>,
+) -> String {
+    if line.trim().is_empty() {
+        return protocol::encode_error(None, "empty request");
+    }
+    match protocol::parse_request(line) {
+        Err(e) => protocol::encode_error(None, &format!("bad request: {e}")),
+        Ok(Request { req_id, body }) => match body {
+            RequestBody::Points => protocol::encode_points(req_id, points),
+            RequestBody::Shutdown => {
+                shutdown.store(true, Ordering::SeqCst);
+                protocol::encode_shutting_down(req_id)
+            }
+            RequestBody::Op(op) => {
+                let resp = svc.submit(op);
+                protocol::encode_response(req_id, &resp)
+            }
+        },
+    }
+}

@@ -1,0 +1,507 @@
+//! Wire-format encode/decode for the newline-delimited JSON protocol
+//! (see the [`crate::server`] module doc for the full frame reference).
+//!
+//! Both directions are symmetric: the server uses [`parse_request`] +
+//! [`encode_response`]; the client uses the `encode_*` request builders +
+//! [`decode_reply`]. Everything round-trips through [`crate::json`] — no
+//! external serialization crates.
+
+use crate::coordinator::{Op, Response};
+use crate::json::{self, object, Value};
+use crate::search::Hit;
+
+/// Hard cap on one request/response line; longer frames are a protocol
+/// error (protects the server from unbounded buffering).
+pub const MAX_LINE_BYTES: usize = 8 << 20;
+
+/// A decoded request frame.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// client correlation id, echoed verbatim in the response
+    pub req_id: Option<u64>,
+    /// what the client asked for
+    pub body: RequestBody,
+}
+
+/// The request payload: either a coordinator op (routed through the
+/// dynamic batcher) or one of the transport-level ops the server answers
+/// directly.
+#[derive(Debug, Clone)]
+pub enum RequestBody {
+    /// a coordinator operation
+    Op(Op),
+    /// the service's published sample points
+    Points,
+    /// graceful server shutdown
+    Shutdown,
+}
+
+fn f32_row(v: &Value) -> Result<Vec<f32>, String> {
+    let arr = v.as_array().ok_or("`samples` must be an array")?;
+    arr.iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| "`samples` must contain only numbers".to_string())
+        })
+        .collect()
+}
+
+fn need<'v>(v: &'v Value, key: &str) -> Result<&'v Value, String> {
+    v.get(key).ok_or_else(|| format!("missing field `{key}`"))
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let v = json::parse(line.trim()).map_err(|e| format!("bad json: {e}"))?;
+    let req_id = v.get("req_id").and_then(Value::as_u64);
+    let op = v
+        .get("op")
+        .and_then(Value::as_str)
+        .ok_or("missing string field `op`")?;
+    let body = match op {
+        "hash" => RequestBody::Op(Op::Hash {
+            samples: f32_row(need(&v, "samples")?)?,
+        }),
+        "insert" => RequestBody::Op(Op::Insert {
+            id: need(&v, "id")?.as_u64().ok_or("`id` must be a u64")?,
+            samples: f32_row(need(&v, "samples")?)?,
+        }),
+        "query" => RequestBody::Op(Op::Query {
+            samples: f32_row(need(&v, "samples")?)?,
+            k: need(&v, "k")?.as_usize().ok_or("`k` must be a usize")?,
+        }),
+        "remove" => RequestBody::Op(Op::Remove {
+            id: need(&v, "id")?.as_u64().ok_or("`id` must be a u64")?,
+        }),
+        "metrics" => RequestBody::Op(Op::Metrics),
+        "snapshot" => RequestBody::Op(Op::Snapshot {
+            path: need(&v, "path")?
+                .as_str()
+                .ok_or("`path` must be a string")?
+                .to_string(),
+        }),
+        "ping" => RequestBody::Op(Op::Ping),
+        "points" => RequestBody::Points,
+        "shutdown" => RequestBody::Shutdown,
+        other => return Err(format!("unknown op `{other}`")),
+    };
+    Ok(Request { req_id, body })
+}
+
+fn envelope(req_id: Option<u64>, mut fields: Vec<(&str, Value)>) -> String {
+    fields.push(("ok", true.into()));
+    if let Some(id) = req_id {
+        fields.push(("req_id", (id as usize).into()));
+    }
+    object(fields).to_json()
+}
+
+/// Encode an error response line.
+pub fn encode_error(req_id: Option<u64>, msg: &str) -> String {
+    let mut fields: Vec<(&str, Value)> = vec![("ok", false.into()), ("error", msg.into())];
+    if let Some(id) = req_id {
+        fields.push(("req_id", (id as usize).into()));
+    }
+    object(fields).to_json()
+}
+
+/// Encode a coordinator response line.
+pub fn encode_response(req_id: Option<u64>, resp: &Response) -> String {
+    match resp {
+        Response::Signature(sig) => envelope(
+            req_id,
+            vec![
+                ("type", "signature".into()),
+                (
+                    "signature",
+                    Value::Array(sig.iter().map(|&x| Value::Number(x as f64)).collect()),
+                ),
+            ],
+        ),
+        Response::Inserted { id } => envelope(
+            req_id,
+            vec![("type", "inserted".into()), ("id", (*id as usize).into())],
+        ),
+        Response::Hits(hits) => envelope(
+            req_id,
+            vec![
+                ("type", "hits".into()),
+                (
+                    "hits",
+                    Value::Array(
+                        hits.iter()
+                            .map(|h| {
+                                object(vec![
+                                    ("id", (h.id as usize).into()),
+                                    ("distance", h.distance.into()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ],
+        ),
+        Response::Removed { id } => envelope(
+            req_id,
+            vec![("type", "removed".into()), ("id", (*id as usize).into())],
+        ),
+        Response::Metrics(m) => envelope(
+            req_id,
+            vec![("type", "metrics".into()), ("metrics", m.to_value())],
+        ),
+        Response::Snapshotted { path, bytes } => envelope(
+            req_id,
+            vec![
+                ("type", "snapshot".into()),
+                ("path", path.as_str().into()),
+                ("bytes", (*bytes as usize).into()),
+            ],
+        ),
+        Response::Pong { indexed } => envelope(
+            req_id,
+            vec![
+                ("type", "pong".into()),
+                ("indexed", (*indexed as usize).into()),
+            ],
+        ),
+        Response::Error(e) => encode_error(req_id, e),
+    }
+}
+
+/// Encode the transport-level `points` response.
+pub fn encode_points(req_id: Option<u64>, points: &[f64]) -> String {
+    envelope(
+        req_id,
+        vec![
+            ("type", "points".into()),
+            (
+                "points",
+                Value::Array(points.iter().map(|&x| Value::Number(x)).collect()),
+            ),
+        ],
+    )
+}
+
+/// Encode the transport-level `shutdown` acknowledgement.
+pub fn encode_shutting_down(req_id: Option<u64>) -> String {
+    envelope(req_id, vec![("type", "shutting_down".into())])
+}
+
+// ---------------------------------------------------------------- client
+
+/// A decoded server reply (the client-side mirror of
+/// [`encode_response`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    /// `hash` result
+    Signature(Vec<i32>),
+    /// `insert` ack
+    Inserted {
+        /// inserted id
+        id: u64,
+    },
+    /// `query` result
+    Hits(Vec<Hit>),
+    /// `remove` ack
+    Removed {
+        /// removed id
+        id: u64,
+    },
+    /// `metrics` result (kept as a JSON object)
+    Metrics(Value),
+    /// `snapshot` ack
+    Snapshotted {
+        /// snapshot destination
+        path: String,
+        /// bytes written
+        bytes: u64,
+    },
+    /// `ping` ack
+    Pong {
+        /// entries indexed server-side
+        indexed: u64,
+    },
+    /// `points` result
+    Points(Vec<f64>),
+    /// `shutdown` ack
+    ShuttingDown,
+}
+
+/// Decode one reply line into `(req_id, server result)`. The outer
+/// `Err` is a protocol violation (unparseable frame); the inner
+/// `Err(String)` is a well-formed server-side error envelope.
+#[allow(clippy::type_complexity)]
+pub fn decode_reply(line: &str) -> Result<(Option<u64>, Result<Reply, String>), String> {
+    let v = json::parse(line.trim()).map_err(|e| format!("bad reply json: {e}"))?;
+    let req_id = v.get("req_id").and_then(Value::as_u64);
+    let ok = v
+        .get("ok")
+        .and_then(|b| match b {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        })
+        .ok_or("reply missing bool field `ok`")?;
+    if !ok {
+        let msg = v
+            .get("error")
+            .and_then(Value::as_str)
+            .unwrap_or("unspecified server error")
+            .to_string();
+        return Ok((req_id, Err(msg)));
+    }
+    let ty = v
+        .get("type")
+        .and_then(Value::as_str)
+        .ok_or("reply missing string field `type`")?;
+    let reply = match ty {
+        "signature" => Reply::Signature(
+            need(&v, "signature")?
+                .as_array()
+                .ok_or("`signature` must be an array")?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|f| f as i32)
+                        .ok_or_else(|| "`signature` must contain numbers".to_string())
+                })
+                .collect::<Result<_, _>>()?,
+        ),
+        "inserted" => Reply::Inserted {
+            id: need(&v, "id")?.as_u64().ok_or("`id` must be a u64")?,
+        },
+        "hits" => Reply::Hits(
+            need(&v, "hits")?
+                .as_array()
+                .ok_or("`hits` must be an array")?
+                .iter()
+                .map(|h| -> Result<Hit, String> {
+                    Ok(Hit {
+                        id: need(h, "id")?.as_u64().ok_or("hit `id` must be a u64")?,
+                        distance: need(h, "distance")?
+                            .as_f64()
+                            .ok_or("hit `distance` must be a number")?,
+                    })
+                })
+                .collect::<Result<_, _>>()?,
+        ),
+        "removed" => Reply::Removed {
+            id: need(&v, "id")?.as_u64().ok_or("`id` must be a u64")?,
+        },
+        "metrics" => Reply::Metrics(need(&v, "metrics")?.clone()),
+        "snapshot" => Reply::Snapshotted {
+            path: need(&v, "path")?
+                .as_str()
+                .ok_or("`path` must be a string")?
+                .to_string(),
+            bytes: need(&v, "bytes")?.as_u64().ok_or("`bytes` must be a u64")?,
+        },
+        "pong" => Reply::Pong {
+            indexed: need(&v, "indexed")?
+                .as_u64()
+                .ok_or("`indexed` must be a u64")?,
+        },
+        "points" => Reply::Points(
+            need(&v, "points")?
+                .as_array()
+                .ok_or("`points` must be an array")?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .ok_or_else(|| "`points` must contain numbers".to_string())
+                })
+                .collect::<Result<_, _>>()?,
+        ),
+        "shutting_down" => Reply::ShuttingDown,
+        other => return Err(format!("unknown reply type `{other}`")),
+    };
+    Ok((req_id, Ok(reply)))
+}
+
+fn request_envelope(req_id: Option<u64>, mut fields: Vec<(&str, Value)>) -> String {
+    if let Some(id) = req_id {
+        fields.push(("req_id", (id as usize).into()));
+    }
+    object(fields).to_json()
+}
+
+fn samples_value(samples: &[f32]) -> Value {
+    Value::Array(samples.iter().map(|&x| Value::Number(x as f64)).collect())
+}
+
+/// Encode a `hash` request line.
+pub fn encode_hash(req_id: Option<u64>, samples: &[f32]) -> String {
+    request_envelope(
+        req_id,
+        vec![("op", "hash".into()), ("samples", samples_value(samples))],
+    )
+}
+
+/// Encode an `insert` request line.
+pub fn encode_insert(req_id: Option<u64>, id: u64, samples: &[f32]) -> String {
+    request_envelope(
+        req_id,
+        vec![
+            ("op", "insert".into()),
+            ("id", (id as usize).into()),
+            ("samples", samples_value(samples)),
+        ],
+    )
+}
+
+/// Encode a `query` request line.
+pub fn encode_query(req_id: Option<u64>, samples: &[f32], k: usize) -> String {
+    request_envelope(
+        req_id,
+        vec![
+            ("op", "query".into()),
+            ("samples", samples_value(samples)),
+            ("k", k.into()),
+        ],
+    )
+}
+
+/// Encode a `remove` request line.
+pub fn encode_remove(req_id: Option<u64>, id: u64) -> String {
+    request_envelope(
+        req_id,
+        vec![("op", "remove".into()), ("id", (id as usize).into())],
+    )
+}
+
+/// Encode a bare admin/transport request line (`metrics`, `ping`,
+/// `points`, `shutdown`).
+pub fn encode_bare(req_id: Option<u64>, op: &str) -> String {
+    request_envelope(req_id, vec![("op", op.into())])
+}
+
+/// Encode a `snapshot` request line.
+pub fn encode_snapshot(req_id: Option<u64>, path: &str) -> String {
+    request_envelope(
+        req_id,
+        vec![("op", "snapshot".into()), ("path", path.into())],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrips() {
+        let line = encode_insert(Some(7), 42, &[0.5, -1.25]);
+        let req = parse_request(&line).unwrap();
+        assert_eq!(req.req_id, Some(7));
+        match req.body {
+            RequestBody::Op(Op::Insert { id, samples }) => {
+                assert_eq!(id, 42);
+                assert_eq!(samples, vec![0.5, -1.25]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let req = parse_request(&encode_query(None, &[1.0], 5)).unwrap();
+        assert_eq!(req.req_id, None);
+        match req.body {
+            RequestBody::Op(Op::Query { k, .. }) => assert_eq!(k, 5),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        match parse_request(&encode_bare(Some(1), "ping")).unwrap().body {
+            RequestBody::Op(Op::Ping) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        match parse_request(&encode_bare(None, "shutdown")).unwrap().body {
+            RequestBody::Shutdown => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        match parse_request(&encode_snapshot(None, "/tmp/x")).unwrap().body {
+            RequestBody::Op(Op::Snapshot { path }) => assert_eq!(path, "/tmp/x"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request(r#"{"op":"teleport"}"#).is_err());
+        assert!(parse_request(r#"{"op":"insert","id":1}"#).is_err());
+        assert!(parse_request(r#"{"op":"insert","id":-1,"samples":[]}"#).is_err());
+        assert!(parse_request(r#"{"op":"query","samples":["x"],"k":1}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let cases = vec![
+            Response::Signature(vec![-3, 0, 7]),
+            Response::Inserted { id: 9 },
+            Response::Hits(vec![Hit {
+                id: 4,
+                distance: 0.125,
+            }]),
+            Response::Removed { id: 2 },
+            Response::Pong { indexed: 11 },
+            Response::Snapshotted {
+                path: "/tmp/s.flsh".into(),
+                bytes: 640,
+            },
+        ];
+        for resp in cases {
+            let line = encode_response(Some(3), &resp);
+            let (req_id, decoded) = decode_reply(&line).unwrap();
+            assert_eq!(req_id, Some(3));
+            match (decoded.unwrap(), &resp) {
+                (Reply::Signature(s), Response::Signature(want)) => assert_eq!(&s, want),
+                (Reply::Inserted { id }, Response::Inserted { id: want }) => {
+                    assert_eq!(id, *want)
+                }
+                (Reply::Hits(h), Response::Hits(want)) => assert_eq!(&h, want),
+                (Reply::Removed { id }, Response::Removed { id: want }) => assert_eq!(id, *want),
+                (Reply::Pong { indexed }, Response::Pong { indexed: want }) => {
+                    assert_eq!(indexed, *want)
+                }
+                (
+                    Reply::Snapshotted { path, bytes },
+                    Response::Snapshotted {
+                        path: wp,
+                        bytes: wb,
+                    },
+                ) => {
+                    assert_eq!(&path, wp);
+                    assert_eq!(bytes, *wb);
+                }
+                (got, want) => panic!("mismatch: {got:?} vs {want:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn error_envelope_roundtrips() {
+        let line = encode_response(Some(5), &Response::Error("duplicate id 7".into()));
+        let (req_id, decoded) = decode_reply(&line).unwrap();
+        assert_eq!(req_id, Some(5));
+        assert_eq!(decoded.unwrap_err(), "duplicate id 7");
+        let (_, decoded) = decode_reply(&encode_error(None, "bad request")).unwrap();
+        assert!(decoded.unwrap_err().contains("bad request"));
+    }
+
+    #[test]
+    fn points_and_shutdown_roundtrip() {
+        let (_, decoded) = decode_reply(&encode_points(None, &[0.25, 0.75])).unwrap();
+        assert_eq!(decoded.unwrap(), Reply::Points(vec![0.25, 0.75]));
+        let (_, decoded) = decode_reply(&encode_shutting_down(Some(1))).unwrap();
+        assert_eq!(decoded.unwrap(), Reply::ShuttingDown);
+    }
+
+    #[test]
+    fn metrics_reply_carries_object() {
+        let m = crate::coordinator::ServiceMetrics::new();
+        let line = encode_response(None, &Response::Metrics(m.snapshot()));
+        let (_, decoded) = decode_reply(&line).unwrap();
+        match decoded.unwrap() {
+            Reply::Metrics(v) => assert_eq!(v.get("requests").unwrap().as_usize(), Some(0)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -122,6 +122,12 @@ fn serve_honours_config_file() {
 
 #[test]
 fn selftest_with_artifacts() {
+    // needs AOT artifacts AND a real xla runtime (the default build links
+    // the in-tree stub) — opt in explicitly, as in pjrt_integration.rs
+    if std::env::var("FUNCLSH_PJRT").as_deref() != Ok("1") {
+        eprintln!("skipping selftest: set FUNCLSH_PJRT=1 to run");
+        return;
+    }
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {
         eprintln!("skipping selftest: no artifacts");
@@ -197,6 +203,11 @@ fn serve_with_simhash_family() {
 
 #[test]
 fn serve_with_jnp_pipeline_variant() {
+    // same opt-in as selftest_with_artifacts: stub xla cannot execute
+    if std::env::var("FUNCLSH_PJRT").as_deref() != Ok("1") {
+        eprintln!("skipping: set FUNCLSH_PJRT=1 to run");
+        return;
+    }
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {
         eprintln!("skipping: no artifacts");

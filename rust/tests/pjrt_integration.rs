@@ -14,7 +14,16 @@ use funclsh::runtime::{pjrt_path::PjrtHashPath, Engine, Manifest};
 use funclsh::util::rng::{Rng64, Xoshiro256pp};
 use std::path::Path;
 
+/// These tests need hardware/artifact state a stock checkout does not
+/// have: the AOT artifacts (`make artifacts`, which needs the Python
+/// toolchain) *and* a real `xla` runtime (the default build links the
+/// in-tree `rust/vendor/xla-stub`, which has no executor). Gate on an
+/// explicit env opt-in so plain `cargo test` is deterministic everywhere.
 fn artifacts_dir() -> Option<&'static Path> {
+    if std::env::var("FUNCLSH_PJRT").as_deref() != Ok("1") {
+        eprintln!("skipping: set FUNCLSH_PJRT=1 (with artifacts + real xla bindings) to run");
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(Box::leak(dir.into_boxed_path()))

@@ -1,0 +1,323 @@
+//! Integration tests of the TCP serving layer: boot the server on an
+//! ephemeral loopback port, drive it from concurrent client threads,
+//! and hold it to the same answers as a direct in-process coordinator
+//! built from the identical seed (recall parity).
+
+use funclsh::config::ServiceConfig;
+use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath, Op, Response};
+use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use funclsh::functions::{Function1D, Sine};
+use funclsh::hashing::PStableHashBank;
+use funclsh::server::{run_load, Client, LoadConfig, Server};
+use funclsh::util::rng::Xoshiro256pp;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn test_config() -> ServiceConfig {
+    let mut cfg = ServiceConfig {
+        dim: 32,
+        k: 2,
+        l: 8,
+        workers: 2,
+        max_batch: 32,
+        max_wait_us: 100,
+        shards: 2,
+        ..Default::default()
+    };
+    cfg.server.port = 0; // ephemeral
+    cfg.server.max_conns = 16;
+    cfg
+}
+
+/// Deterministic hash path: calling this twice with the same config
+/// yields bit-identical embedder + bank, which is what makes the
+/// wire-vs-in-process parity checks exact.
+fn make_path(cfg: &ServiceConfig) -> (Arc<dyn HashPath>, Vec<f64>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+    let points = emb.sample_points().to_vec();
+    let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+    (
+        Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank))),
+        points,
+    )
+}
+
+fn boot(cfg: &ServiceConfig) -> (Server, Vec<f64>) {
+    let (path, points) = make_path(cfg);
+    let svc = Arc::new(Coordinator::start(cfg, path));
+    let server = Server::start(cfg, svc, points.clone()).expect("bind loopback");
+    (server, points)
+}
+
+fn sample_sine(phase: f64, points: &[f64]) -> Vec<f32> {
+    let f = Sine::paper(phase);
+    points.iter().map(|&x| f.eval(x) as f32).collect()
+}
+
+fn finish(server: Server) {
+    let (svc, _) = server.shutdown();
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn ping_points_and_hash_roundtrip() {
+    let cfg = test_config();
+    let (server, points) = boot(&cfg);
+    let mut client = Client::connect(server.addr()).unwrap();
+    assert_eq!(client.ping().unwrap(), 0);
+    let got_points = client.points().unwrap();
+    assert_eq!(got_points, points);
+    assert_eq!(got_points.len(), cfg.dim);
+    // hash over the wire is deterministic
+    let s = sample_sine(1.0, &points);
+    let h1 = client.hash(&s).unwrap();
+    let h2 = client.hash(&s).unwrap();
+    assert_eq!(h1, h2);
+    assert_eq!(h1.len(), cfg.total_hashes());
+    finish(server);
+}
+
+#[test]
+fn concurrent_clients_match_in_process_coordinator() {
+    let cfg = test_config();
+    let (server, points) = boot(&cfg);
+    // twin coordinator from the identical seed — the recall oracle
+    let (twin_path, twin_points) = make_path(&cfg);
+    assert_eq!(twin_points, points);
+    let twin = Coordinator::start(&cfg, twin_path);
+
+    // 8 client threads insert disjoint id ranges over TCP
+    let addr = server.addr();
+    let corpus = 240u64;
+    let threads = 8u64;
+    let per = corpus / threads;
+    let points_arc = Arc::new(points.clone());
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let points = points_arc.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for i in 0..per {
+                let id = t * per + i;
+                let phase = 2.0 * std::f64::consts::PI * (id as f64 / corpus as f64);
+                client.insert(id, &sample_sine(phase, &points)).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // same corpus into the twin, in-process
+    for id in 0..corpus {
+        let phase = 2.0 * std::f64::consts::PI * (id as f64 / corpus as f64);
+        let r = twin.submit(Op::Insert {
+            id,
+            samples: sample_sine(phase, &points),
+        });
+        assert_eq!(r, Response::Inserted { id });
+    }
+
+    let mut client = Client::connect(addr).unwrap();
+    assert_eq!(client.ping().unwrap(), corpus);
+    assert_eq!(twin.indexed(), corpus as usize);
+
+    // queries must return identical hits over the wire and in-process
+    for q in 0..20 {
+        let phase = 2.0 * std::f64::consts::PI * ((q as f64 + 0.37) / 20.0);
+        let samples = sample_sine(phase, &points);
+        let wire = client.query(&samples, 5).unwrap();
+        let direct = match twin.submit(Op::Query { samples, k: 5 }) {
+            Response::Hits(h) => h,
+            other => panic!("unexpected {other:?}"),
+        };
+        let wire_ids: Vec<u64> = wire.iter().map(|h| h.id).collect();
+        let direct_ids: Vec<u64> = direct.iter().map(|h| h.id).collect();
+        assert_eq!(wire_ids, direct_ids, "query {q}");
+        for (w, d) in wire.iter().zip(&direct) {
+            assert!((w.distance - d.distance).abs() < 1e-9);
+        }
+    }
+
+    // server-side metrics saw the wire traffic
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("errors").unwrap().as_usize(), Some(0));
+    assert!(m.get("inserts").unwrap().as_usize().unwrap() >= corpus as usize);
+    assert!(m.get("conns_opened").unwrap().as_usize().unwrap() >= threads as usize);
+
+    twin.shutdown();
+    finish(server);
+}
+
+#[test]
+fn error_envelopes_for_bad_requests() {
+    let cfg = test_config();
+    let (server, points) = boot(&cfg);
+    // raw socket: drive the protocol by hand
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut ask = |line: &str| -> String {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply
+    };
+    // not json
+    let r = ask("this is not json");
+    assert!(r.contains("\"ok\":false"), "{r}");
+    assert!(r.contains("bad request"), "{r}");
+    // unknown op
+    let r = ask(r#"{"op":"teleport"}"#);
+    assert!(r.contains("unknown op"), "{r}");
+    // missing fields
+    let r = ask(r#"{"op":"insert","id":3}"#);
+    assert!(r.contains("\"ok\":false"), "{r}");
+    // duplicate insert: first ok, second is a server-side error envelope
+    let samples: Vec<String> = sample_sine(0.5, &points)
+        .iter()
+        .map(|x| format!("{x}"))
+        .collect();
+    let insert = format!(r#"{{"op":"insert","id":7,"samples":[{}]}}"#, samples.join(","));
+    let r = ask(&insert);
+    assert!(r.contains("\"ok\":true"), "{r}");
+    let r = ask(&insert);
+    assert!(r.contains("\"ok\":false") && r.contains("duplicate"), "{r}");
+    // the connection survives all of the above
+    let r = ask(r#"{"op":"ping"}"#);
+    assert!(r.contains("\"ok\":true") && r.contains("pong"), "{r}");
+    finish(server);
+}
+
+#[test]
+fn snapshot_over_the_wire_roundtrips() {
+    let cfg = test_config();
+    let (server, points) = boot(&cfg);
+    let mut client = Client::connect(server.addr()).unwrap();
+    for id in 0..40u64 {
+        let row = sample_sine(0.1 * id as f64, &points);
+        client.insert(id, &row).unwrap();
+    }
+    let path = std::env::temp_dir().join(format!("funclsh-wire-{}.flsh", std::process::id()));
+    let path_str = path.to_str().unwrap();
+    let bytes = client.snapshot(path_str).unwrap();
+    let data = std::fs::read(&path).unwrap();
+    assert_eq!(bytes, data.len() as u64);
+    assert_eq!(&data[..5], b"FLSH1");
+    let idx = funclsh::lsh::ShardedIndex::load(&mut data.as_slice()).unwrap();
+    assert_eq!(idx.len(), 40);
+    let _ = std::fs::remove_file(&path);
+    finish(server);
+}
+
+#[test]
+fn load_generator_reports_sane_numbers() {
+    let cfg = test_config();
+    let (server, points) = boot(&cfg);
+    let load = LoadConfig {
+        threads: 8,
+        ops_per_thread: 40,
+        insert_fraction: 0.5,
+        query_fraction: 0.3,
+        k: 5,
+        seed: 99,
+        ..Default::default()
+    };
+    let report = run_load(server.addr(), &points, &load).unwrap();
+    assert_eq!(report.ops, 8 * 40);
+    assert_eq!(report.errors, 0);
+    assert_eq!(
+        report.inserts + report.queries + report.hashes,
+        report.ops,
+        "op mix must partition the total"
+    );
+    assert!(report.inserts > 0 && report.queries > 0 && report.hashes > 0);
+    assert!(report.throughput() > 0.0);
+    assert!(report.latency_p50_s <= report.latency_p99_s);
+    assert_eq!(report.histogram.count(), report.ops as u64);
+    // the report serializes to parseable JSON with the headline fields
+    let v = funclsh::json::parse(&report.to_json()).unwrap();
+    assert_eq!(v.get("ops").unwrap().as_usize(), Some(report.ops));
+    assert!(v.get("latency_p99_s").unwrap().as_f64().is_some());
+    finish(server);
+}
+
+#[test]
+fn graceful_shutdown_via_wire_writes_snapshot() {
+    let mut cfg = test_config();
+    let snap = std::env::temp_dir().join(format!("funclsh-shut-{}.flsh", std::process::id()));
+    cfg.server.snapshot_path = snap.to_str().unwrap().to_string();
+    let (server, points) = boot(&cfg);
+    let mut client = Client::connect(server.addr()).unwrap();
+    for id in 0..25u64 {
+        let row = sample_sine(0.2 * id as f64, &points);
+        client.insert(id, &row).unwrap();
+    }
+    client.shutdown_server().unwrap();
+    // the wire request flips the server's shutdown flag…
+    let t0 = Instant::now();
+    while !server.shutdown_requested() && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(server.shutdown_requested());
+    // …and the graceful path writes the FLSH1 shutdown snapshot
+    let (svc, snapshot) = server.shutdown();
+    let bytes = snapshot.expect("snapshot configured").expect("snapshot ok");
+    let data = std::fs::read(&snap).unwrap();
+    assert_eq!(bytes, data.len() as u64);
+    let idx = funclsh::lsh::ShardedIndex::load(&mut data.as_slice()).unwrap();
+    assert_eq!(idx.len(), 25);
+    let _ = std::fs::remove_file(&snap);
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+}
+
+/// The acceptance-criteria path end-to-end through the real binary:
+/// `funclsh serve --port 0` prints its bound address as JSON; a load
+/// run against it completes mixed traffic from ≥8 threads and reports
+/// throughput + latency percentiles as JSON.
+#[test]
+fn serve_binary_with_ephemeral_port_serves_load() {
+    use std::process::{Command, Stdio};
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_funclsh"))
+        .args(["serve", "--port", "0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut lines = BufReader::new(stdout);
+    let mut banner = String::new();
+    lines.read_line(&mut banner).unwrap();
+    let v = funclsh::json::parse(banner.trim()).expect("startup banner is JSON");
+    let addr: std::net::SocketAddr = v
+        .get("listening")
+        .and_then(|a| a.as_str())
+        .expect("banner has `listening`")
+        .parse()
+        .unwrap();
+
+    let mut probe = Client::connect(addr).unwrap();
+    let points = probe.points().unwrap();
+    let load = LoadConfig {
+        threads: 8,
+        ops_per_thread: 30,
+        ..Default::default()
+    };
+    let report = run_load(addr, &points, &load).unwrap();
+    assert_eq!(report.ops, 8 * 30);
+    assert_eq!(report.errors, 0);
+    assert!(report.throughput() > 0.0);
+
+    probe.shutdown_server().unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success());
+}

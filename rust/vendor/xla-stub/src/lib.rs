@@ -1,0 +1,156 @@
+//! Type-compatible stub of the `xla` (xla_extension) bindings used by
+//! `funclsh::runtime`.
+//!
+//! The offline vendor set has no native XLA/PJRT library, so this crate
+//! mirrors exactly the API surface `funclsh` calls and makes the client
+//! constructor fail with a clear message. Everything downstream already
+//! handles that failure: `Engine::load` returns the error, the service
+//! falls back to the pure-Rust folded hash path, and the PJRT
+//! integration tests skip. Replacing this path dependency with the real
+//! bindings re-enables the AOT pipeline without touching `funclsh`.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (Display is all callers use).
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error("xla stub: PJRT runtime not built into this binary (see rust/vendor/xla-stub)".into())
+}
+
+/// Result alias mirroring the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal (stub: carries no data; no stub code path produces one).
+pub struct Literal(());
+
+/// Array shape of a literal.
+pub struct ArrayShape(());
+
+impl ArrayShape {
+    /// Dimensions of the shape.
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Copy the literal out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// The literal's array shape.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable())
+    }
+}
+
+/// Device buffer handle returned by an execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Read the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs.
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create a CPU client — always fails in the stub; callers fall back
+    /// to the pure-Rust hash path.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literal_ops_fail_cleanly() {
+        let l = Literal::vec1(&[0f32; 4]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.array_shape().is_err());
+    }
+}
