@@ -57,7 +57,7 @@ fn main() {
     let svc = Arc::new(Coordinator::start(&cfg, path));
     let server = Server::start(&cfg, svc, emb.sample_points().to_vec()).expect("bind loopback");
     let addr = server.addr();
-    println!("serving on {addr} ({} handler threads)", cfg.server.max_conns);
+    println!("serving on {addr} (io_mode {:?})", server.io_mode());
 
     // clients learn the sample points from the service, over the wire
     let mut probe = Client::connect(addr).expect("connect");
@@ -139,24 +139,34 @@ fn main() {
     );
 
     // ------------- phase 3: mixed-traffic load generator -----------------
-    println!("\nphase 3: load generator ({client_threads} threads, mixed hash/insert/query)…");
-    let load = LoadConfig {
-        threads: client_threads,
-        ops_per_thread: 500,
-        insert_fraction: 0.2,
-        query_fraction: 0.4,
-        k,
-        seed: cfg.seed ^ 0xF00D,
-        ..Default::default()
-    };
-    let report = run_load(addr, &points, &load).expect("load run");
-    println!("  {}", report.to_json());
-    println!(
-        "  {:.0} op/s, p50 {:.3} ms, p99 {:.3} ms",
-        report.throughput(),
-        report.latency_p50_s * 1e3,
-        report.latency_p99_s * 1e3
-    );
+    // run once sequentially and once with an 8-deep pipeline per
+    // connection, so the wire-level win of pipelining is visible
+    for pipeline_depth in [1usize, 8] {
+        println!(
+            "\nphase 3: load generator ({client_threads} threads, mixed \
+             hash/insert/query, pipeline {pipeline_depth})…"
+        );
+        let load = LoadConfig {
+            threads: client_threads,
+            ops_per_thread: 500,
+            pipeline_depth,
+            insert_fraction: 0.2,
+            query_fraction: 0.4,
+            k,
+            seed: cfg.seed ^ 0xF00D ^ pipeline_depth as u64,
+            // disjoint id ranges so the second run's inserts cannot
+            // collide with the first's
+            id_base: (1u64 << 40) * pipeline_depth as u64,
+        };
+        let report = run_load(addr, &points, &load).expect("load run");
+        println!("  {}", report.to_json());
+        println!(
+            "  {:.0} op/s, p50 {:.3} ms, p99 {:.3} ms",
+            report.throughput(),
+            report.latency_p50_s * 1e3,
+            report.latency_p99_s * 1e3
+        );
+    }
 
     // ------------- snapshot + graceful shutdown --------------------------
     let snap = std::env::temp_dir().join(format!("e2e-service-{}.flsh", std::process::id()));

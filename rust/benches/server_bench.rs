@@ -1,6 +1,7 @@
 //! Bench: the TCP serving layer — wire round-trip latency per op kind
 //! over one connection, protocol encode/decode cost, and multi-client
-//! loopback throughput via the load generator.
+//! loopback throughput via the load generator, comparing the threaded
+//! runtime against the epoll event loop at several pipeline depths.
 //!
 //! ```bash
 //! cargo bench --bench server_bench            # full
@@ -8,7 +9,7 @@
 //! ```
 
 use funclsh::bench::Bench;
-use funclsh::config::ServiceConfig;
+use funclsh::config::{IoMode, ServiceConfig};
 use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath, Response};
 use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
 use funclsh::functions::{Function1D, Sine};
@@ -18,7 +19,7 @@ use funclsh::util::rng::Xoshiro256pp;
 use std::hint::black_box;
 use std::sync::Arc;
 
-fn boot(workers: usize, max_conns: usize) -> (Server, Vec<f64>) {
+fn boot(workers: usize, max_conns: usize, io_mode: IoMode) -> (Server, Vec<f64>) {
     let mut cfg = ServiceConfig {
         dim: 64,
         k: 4,
@@ -31,6 +32,7 @@ fn boot(workers: usize, max_conns: usize) -> (Server, Vec<f64>) {
     };
     cfg.server.port = 0;
     cfg.server.max_conns = max_conns;
+    cfg.server.io_mode = io_mode;
     let mut rng = Xoshiro256pp::seed_from_u64(17);
     let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
     let points = emb.sample_points().to_vec();
@@ -72,50 +74,57 @@ fn main() {
         });
     }
 
-    // single-connection wire round-trips
-    {
-        let (server, points) = boot(2, 4);
+    // single-connection wire round-trips, per runtime
+    for mode in [IoMode::Threaded, IoMode::EventLoop] {
+        let (server, points) = boot(2, 4, mode);
+        let label = server.io_mode().as_str();
         let mut client = Client::connect(server.addr()).unwrap();
         let row = sample(0.3, &points);
-        b.throughput_case("wire/ping", 1.0, || {
+        b.throughput_case(&format!("wire/{label}/ping"), 1.0, || {
             black_box(client.ping().unwrap());
         });
-        b.throughput_case("wire/hash", 1.0, || {
+        b.throughput_case(&format!("wire/{label}/hash"), 1.0, || {
             black_box(client.hash(black_box(&row)).unwrap());
         });
         let mut next_id = 0u64;
-        b.throughput_case("wire/insert", 1.0, || {
+        b.throughput_case(&format!("wire/{label}/insert"), 1.0, || {
             client.insert(next_id, &row).unwrap();
             next_id += 1;
         });
-        b.throughput_case("wire/query-k10", 1.0, || {
+        b.throughput_case(&format!("wire/{label}/query-k10"), 1.0, || {
             black_box(client.query(black_box(&row), 10).unwrap());
         });
         finish(server);
     }
 
-    // multi-client loopback throughput (the acceptance-criteria numbers)
-    for threads in [2usize, 8] {
-        let (server, points) = boot(4, threads + 1);
-        let load = LoadConfig {
-            threads,
-            ops_per_thread: if fast { 100 } else { 1000 },
-            insert_fraction: 0.3,
-            query_fraction: 0.3,
-            k: 10,
-            seed: 0xBEEF,
-            ..Default::default()
-        };
-        let report = run_load(server.addr(), &points, &load).expect("load");
-        println!(
-            "   load/threads={threads}: {:.0} op/s, p50 {:.3} ms, p99 {:.3} ms, {} errors",
-            report.throughput(),
-            report.latency_p50_s * 1e3,
-            report.latency_p99_s * 1e3,
-            report.errors
-        );
-        println!("   {}", report.to_json());
-        finish(server);
+    // multi-client loopback throughput: threaded vs event loop, with and
+    // without client-side pipelining (the headline comparison)
+    for mode in [IoMode::Threaded, IoMode::EventLoop] {
+        for (threads, depth) in [(2usize, 1usize), (8, 1), (8, 8), (32, 8)] {
+            let (server, points) = boot(4, threads + 1, mode);
+            let label = server.io_mode().as_str();
+            let load = LoadConfig {
+                threads,
+                ops_per_thread: if fast { 100 } else { 1000 },
+                pipeline_depth: depth,
+                insert_fraction: 0.3,
+                query_fraction: 0.3,
+                k: 10,
+                seed: 0xBEEF,
+                ..Default::default()
+            };
+            let report = run_load(server.addr(), &points, &load).expect("load");
+            println!(
+                "   load/{label}/threads={threads}/pipeline={depth}: {:.0} op/s, \
+                 p50 {:.3} ms, p99 {:.3} ms, {} errors",
+                report.throughput(),
+                report.latency_p50_s * 1e3,
+                report.latency_p99_s * 1e3,
+                report.errors
+            );
+            println!("   {}", report.to_json());
+            finish(server);
+        }
     }
 
     println!("\n{}", b.to_csv());

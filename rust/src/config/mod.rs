@@ -231,17 +231,61 @@ pub enum HashKind {
     SimHash,
 }
 
+/// Which I/O runtime the TCP front-end uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoMode {
+    /// readiness-based epoll event loop (Linux; one thread multiplexes
+    /// all connections, a fixed worker pool feeds the batcher)
+    EventLoop,
+    /// acceptor + connection-handler thread pool (`max_conns` threads,
+    /// blocking reads; the PR 1 runtime, kept as the portable fallback)
+    Threaded,
+}
+
+impl IoMode {
+    /// The config-file spelling of this mode (the inverse of
+    /// [`IoMode::parse`]; used by banners and bench labels).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            IoMode::EventLoop => "event_loop",
+            IoMode::Threaded => "threaded",
+        }
+    }
+
+    /// Parse the config/CLI spelling — the single source of truth for
+    /// accepted mode names (`[server] io_mode` and `--io-mode` both go
+    /// through here).
+    pub fn parse(s: &str) -> Option<IoMode> {
+        match s {
+            "event_loop" | "epoll" => Some(IoMode::EventLoop),
+            "threaded" | "thread_pool" => Some(IoMode::Threaded),
+            _ => None,
+        }
+    }
+}
+
 /// Network front-end configuration (`[server]` section): where the TCP
-/// listener binds and how many connection-handler threads serve it.
+/// listener binds and how connections are multiplexed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
     /// bind address (loopback by default; widen deliberately)
     pub host: String,
     /// TCP port (0 = ephemeral, the bound port is printed at startup)
     pub port: u16,
-    /// connection-handler threads = max concurrently served connections
-    /// (further accepted connections queue until a handler frees up)
+    /// I/O runtime (`event_loop` scales to thousands of sockets;
+    /// `threaded` caps concurrency at `max_conns`)
+    pub io_mode: IoMode,
+    /// threaded mode only: handler threads = max concurrently served
+    /// connections (further accepted connections queue until a handler
+    /// frees up)
     pub max_conns: usize,
+    /// event-loop mode only: worker threads draining parsed requests
+    /// into the coordinator's dynamic batcher
+    pub io_workers: usize,
+    /// event-loop mode only: per-connection response backlog before the
+    /// server stops reading that socket (the pipelining backpressure
+    /// window; well-behaved clients keep their send window ≤ this)
+    pub pipeline_depth: usize,
     /// where graceful shutdown snapshots the index (`FLSH1`); empty
     /// string disables the shutdown snapshot
     pub snapshot_path: String,
@@ -252,7 +296,10 @@ impl Default for ServerConfig {
         Self {
             host: "127.0.0.1".to_string(),
             port: 7070,
+            io_mode: IoMode::EventLoop,
             max_conns: 32,
+            io_workers: 4,
+            pipeline_depth: 64,
             snapshot_path: String::new(),
         }
     }
@@ -424,6 +471,16 @@ impl ServiceConfig {
         if let Some(v) = get_usize("server", "max_conns") {
             cfg.server.max_conns = v;
         }
+        if let Some(v) = doc.get("server", "io_mode").and_then(TomlValue::as_str) {
+            cfg.server.io_mode = IoMode::parse(v)
+                .ok_or_else(|| ConfigError::msg(format!("unknown io_mode `{v}`")))?;
+        }
+        if let Some(v) = get_usize("server", "io_workers") {
+            cfg.server.io_workers = v;
+        }
+        if let Some(v) = get_usize("server", "pipeline_depth") {
+            cfg.server.pipeline_depth = v;
+        }
         if let Some(v) = doc.get("server", "snapshot_path").and_then(TomlValue::as_str) {
             cfg.server.snapshot_path = v.to_string();
         }
@@ -455,6 +512,11 @@ impl ServiceConfig {
         }
         if self.server.max_conns == 0 {
             return Err(ConfigError::msg("server max_conns must be positive"));
+        }
+        if self.server.io_workers == 0 || self.server.pipeline_depth == 0 {
+            return Err(ConfigError::msg(
+                "server io_workers and pipeline_depth must be positive",
+            ));
         }
         Ok(())
     }
@@ -505,7 +567,10 @@ use_pjrt = false
 [server]
 host = "0.0.0.0"
 port = 9099
+io_mode = "threaded"
 max_conns = 16
+io_workers = 8
+pipeline_depth = 32
 snapshot_path = "/tmp/idx.flsh"
 "#;
 
@@ -525,7 +590,10 @@ snapshot_path = "/tmp/idx.flsh"
         assert!(!cfg.use_pjrt);
         assert_eq!(cfg.server.host, "0.0.0.0");
         assert_eq!(cfg.server.port, 9099);
+        assert_eq!(cfg.server.io_mode, IoMode::Threaded);
         assert_eq!(cfg.server.max_conns, 16);
+        assert_eq!(cfg.server.io_workers, 8);
+        assert_eq!(cfg.server.pipeline_depth, 32);
         assert_eq!(cfg.server.snapshot_path, "/tmp/idx.flsh");
     }
 
@@ -533,8 +601,14 @@ snapshot_path = "/tmp/idx.flsh"
     fn server_section_validated() {
         assert!(ServiceConfig::from_toml("[server]\nport = 70000\n").is_err());
         assert!(ServiceConfig::from_toml("[server]\nmax_conns = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[server]\nio_workers = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[server]\npipeline_depth = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[server]\nio_mode = \"fibers\"\n").is_err());
         let cfg = ServiceConfig::from_toml("[server]\nport = 0\n").unwrap();
         assert_eq!(cfg.server.port, 0);
+        assert_eq!(cfg.server.io_mode, IoMode::EventLoop);
+        let cfg = ServiceConfig::from_toml("[server]\nio_mode = \"epoll\"\n").unwrap();
+        assert_eq!(cfg.server.io_mode, IoMode::EventLoop);
     }
 
     #[test]

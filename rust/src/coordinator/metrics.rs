@@ -24,6 +24,8 @@ pub struct ServiceMetrics {
     batches: AtomicU64,
     conns_opened: AtomicU64,
     conns_closed: AtomicU64,
+    readiness_events: AtomicU64,
+    backpressure_stalls: AtomicU64,
     dist: Mutex<Dists>,
 }
 
@@ -70,6 +72,19 @@ impl ServiceMetrics {
         self.conns_closed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count readiness notifications delivered to the event-loop server
+    /// (one epoll wakeup can carry many).
+    pub fn record_readiness_events(&self, n: u64) {
+        self.readiness_events.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count one connection read-stall: the event loop stopped reading a
+    /// socket because its response backlog hit the pipeline depth (or
+    /// its write buffer hit the high-water mark).
+    pub fn record_backpressure_stall(&self) {
+        self.backpressure_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record a completed batch: its size and per-request latencies.
     pub fn record_batch(&self, batch_size: usize, latencies: &[Duration]) {
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -114,6 +129,8 @@ impl ServiceMetrics {
             batches: self.batches.load(Ordering::Relaxed),
             conns_opened: self.conns_opened.load(Ordering::Relaxed),
             conns_closed: self.conns_closed.load(Ordering::Relaxed),
+            readiness_events: self.readiness_events.load(Ordering::Relaxed),
+            backpressure_stalls: self.backpressure_stalls.load(Ordering::Relaxed),
             latency_mean_s: d.latency.mean(),
             latency_p50_s: q(0.5),
             latency_p99_s: q(0.99),
@@ -167,6 +184,10 @@ pub struct MetricsSnapshot {
     pub conns_opened: u64,
     /// network connections closed
     pub conns_closed: u64,
+    /// readiness notifications processed by the event-loop server
+    pub readiness_events: u64,
+    /// read-stalls applied by the event-loop server's backpressure
+    pub backpressure_stalls: u64,
     /// mean request latency (seconds)
     pub latency_mean_s: f64,
     /// median request latency (seconds)
@@ -192,6 +213,11 @@ impl MetricsSnapshot {
             ("batches", (self.batches as usize).into()),
             ("conns_opened", (self.conns_opened as usize).into()),
             ("conns_closed", (self.conns_closed as usize).into()),
+            ("readiness_events", (self.readiness_events as usize).into()),
+            (
+                "backpressure_stalls",
+                (self.backpressure_stalls as usize).into(),
+            ),
             ("latency_mean_s", self.latency_mean_s.into()),
             ("latency_p50_s", self.latency_p50_s.into()),
             ("latency_p99_s", self.latency_p99_s.into()),
@@ -251,6 +277,20 @@ mod tests {
         let v = crate::json::parse(&s.to_json()).unwrap();
         assert_eq!(v.get("conns_opened").unwrap().as_usize(), Some(2));
         assert_eq!(v.get("admin").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn readiness_and_backpressure_counters() {
+        let m = ServiceMetrics::new();
+        m.record_readiness_events(5);
+        m.record_readiness_events(2);
+        m.record_backpressure_stall();
+        let s = m.snapshot();
+        assert_eq!(s.readiness_events, 7);
+        assert_eq!(s.backpressure_stalls, 1);
+        let v = crate::json::parse(&s.to_json()).unwrap();
+        assert_eq!(v.get("readiness_events").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("backpressure_stalls").unwrap().as_usize(), Some(1));
     }
 
     #[test]

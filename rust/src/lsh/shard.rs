@@ -18,6 +18,7 @@ const MAGIC: &[u8; 5] = b"FLSH1";
 /// Sharding rule: `shard = id % num_shards` — inserts touch one shard's
 /// write lock only, so concurrent inserts to different shards never
 /// contend; queries take all read locks (shared, cheap).
+#[derive(Debug)]
 pub struct ShardedIndex {
     shards: Vec<RwLock<LshIndex>>,
     config: IndexConfig,

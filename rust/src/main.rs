@@ -2,14 +2,15 @@
 //! run the paper's experiments, or poke at the runtime.
 //!
 //! ```text
-//! funclsh serve       --port P [--host H] [--config svc.toml] [--snapshot F]
+//! funclsh serve       --port P [--host H] [--io-mode event_loop|threaded]
+//!                     [--config svc.toml] [--snapshot F]
 //!                     (TCP front-end; port 0 binds an ephemeral port and
 //!                      the bound address is printed as JSON on stdout)
 //! funclsh serve       [--config svc.toml] [--trace-ops N] [--snapshot F]
 //!                     (no --port: legacy in-process synthetic trace)
 //! funclsh load        [--addr H:P] [--threads N] [--ops N] [--k K]
-//!                     [--insert-frac F] [--query-frac F] [--seed S]
-//!                     [--shutdown]
+//!                     [--pipeline D] [--insert-frac F] [--query-frac F]
+//!                     [--seed S] [--shutdown]
 //! funclsh experiment  <fig1|fig2|fig3|thm1|qmc|knn|w1|mips|adaptive|all>
 //!                     [--pairs N] [--hashes N] [--dim N] [--seed S]
 //!                     [--out results/]
@@ -174,6 +175,24 @@ fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
     if let Some(s) = args.get("snapshot") {
         cfg.server.snapshot_path = s.to_string();
     }
+    if let Some(m) = args.get("io-mode") {
+        cfg.server.io_mode = match funclsh::config::IoMode::parse(m) {
+            Some(mode) => mode,
+            None => {
+                eprintln!("invalid --io-mode `{m}` (want event_loop|threaded)");
+                return 2;
+            }
+        };
+    }
+    // the event loop exists to hold thousands of sockets; lift the
+    // process fd ceiling to the hard limit up front
+    #[cfg(target_os = "linux")]
+    if cfg.server.io_mode == funclsh::config::IoMode::EventLoop {
+        match funclsh::server::raise_nofile_limit() {
+            Ok(soft) => eprintln!("fd limit: {soft}"),
+            Err(e) => eprintln!("cannot raise fd limit ({e}); continuing"),
+        }
+    }
     let (path, points) = build_service(&cfg);
     let svc = Arc::new(Coordinator::start(&cfg, path));
     // moved into the server; Server::shutdown hands it back for the
@@ -193,7 +212,10 @@ fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
             ("k", cfg.k.into()),
             ("l", cfg.l.into()),
             ("workers", cfg.workers.into()),
+            ("io_mode", server.io_mode().as_str().into()),
             ("max_conns", cfg.server.max_conns.into()),
+            ("io_workers", cfg.server.io_workers.into()),
+            ("pipeline_depth", cfg.server.pipeline_depth.into()),
         ])
         .to_json()
     );
@@ -237,10 +259,12 @@ fn cmd_load(args: &Args) -> i32 {
     let cfg = LoadConfig {
         threads: args.get_parsed("threads", 8usize),
         ops_per_thread: args.get_parsed("ops", 250usize),
+        pipeline_depth: args.get_parsed("pipeline", 1usize).max(1),
         insert_fraction: args.get_parsed("insert-frac", 0.5f64),
         query_fraction: args.get_parsed("query-frac", 0.3f64),
         k: args.get_parsed("k", 10usize),
         seed: args.get_parsed("seed", 0x10ADu64),
+        ..Default::default()
     };
     let mut probe = match Client::connect(addr) {
         Ok(c) => c,
@@ -257,10 +281,11 @@ fn cmd_load(args: &Args) -> i32 {
         }
     };
     eprintln!(
-        "load: {} threads x {} ops against {addr} (dim {})",
+        "load: {} threads x {} ops against {addr} (dim {}, pipeline {})",
         cfg.threads,
         cfg.ops_per_thread,
-        points.len()
+        points.len(),
+        cfg.pipeline_depth
     );
     let report = match funclsh::server::run_load(addr, &points, &cfg) {
         Ok(r) => r,

@@ -1,6 +1,8 @@
-//! Blocking client for the wire protocol, plus a multi-threaded load
-//! generator with latency histograms — the repo can drive its own
-//! serving layer end-to-end over loopback (`funclsh load`,
+//! Clients for the wire protocol — a blocking one-in-flight [`Client`],
+//! a windowed [`PipelinedClient`] that keeps several frames in flight and
+//! correlates responses by `req_id`, and a multi-threaded load generator
+//! with nanosecond-resolution latency histograms. The repo can drive its
+//! own serving layer end-to-end over loopback (`funclsh load`,
 //! `examples/e2e_service.rs`, `benches/server_bench.rs`).
 
 use super::protocol::{self, Reply};
@@ -9,6 +11,7 @@ use crate::json::{object, Value};
 use crate::search::Hit;
 use crate::util::rng::{Rng64, Xoshiro256pp};
 use crate::util::stats::quantile_sorted;
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
@@ -169,25 +172,277 @@ impl Client {
     }
 }
 
-/// Power-of-two latency histogram from 1 µs to ~8.4 s.
+// ---------------------------------------------------------- pipelining
+
+/// What reply shape an in-flight request expects (validated on receipt).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Expect {
+    Signature,
+    Inserted(u64),
+    Hits,
+    Removed(u64),
+    Metrics,
+    Snapshot,
+    Pong,
+    Points,
+    ShuttingDown,
+}
+
+fn reply_matches(expect: Expect, reply: &Reply) -> bool {
+    match (expect, reply) {
+        (Expect::Signature, Reply::Signature(_)) => true,
+        (Expect::Inserted(id), Reply::Inserted { id: got }) => *got == id,
+        (Expect::Hits, Reply::Hits(_)) => true,
+        (Expect::Removed(id), Reply::Removed { id: got }) => *got == id,
+        (Expect::Metrics, Reply::Metrics(_)) => true,
+        (Expect::Snapshot, Reply::Snapshotted { .. }) => true,
+        (Expect::Pong, Reply::Pong { .. }) => true,
+        (Expect::Points, Reply::Points(_)) => true,
+        (Expect::ShuttingDown, Reply::ShuttingDown) => true,
+        _ => false,
+    }
+}
+
+/// A finished pipelined request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// correlation id of the request this answers
+    pub req_id: u64,
+    /// send-to-receive latency (includes queueing behind the window)
+    pub latency: Duration,
+    /// the server's answer: a typed reply, or its error envelope
+    pub result: Result<Reply, String>,
+}
+
+/// A pipelined connection: up to `depth` request frames in flight at
+/// once, responses matched by `req_id` (see the module doc's pipelining
+/// contract — the server answers in request order, but correlation by id
+/// keeps the client correct regardless).
+///
+/// Each `send_*` call first harvests completions if the window is full,
+/// then enqueues its frame; [`PipelinedClient::drain`] collects
+/// everything still outstanding.
+pub struct PipelinedClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_req_id: u64,
+    depth: usize,
+    pending: HashMap<u64, (Expect, Instant)>,
+}
+
+impl PipelinedClient {
+    /// Connect with a send window of `depth` in-flight frames
+    /// (`depth = 1` degenerates to the blocking client's behaviour).
+    pub fn connect<A: ToSocketAddrs>(addr: A, depth: usize) -> Result<Self, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self {
+            reader,
+            writer: BufWriter::new(stream),
+            next_req_id: 1,
+            depth: depth.max(1),
+            pending: HashMap::new(),
+        })
+    }
+
+    /// Frames sent but not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The send window.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Block for one response and match it to its request.
+    fn recv_one(&mut self) -> Result<Completion, ClientError> {
+        self.writer.flush()?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(ClientError::Protocol(format!(
+                "server closed connection with {} in flight",
+                self.pending.len()
+            )));
+        }
+        let (got_id, body) = protocol::decode_reply(&line).map_err(ClientError::Protocol)?;
+        let req_id = got_id.ok_or_else(|| {
+            ClientError::Protocol("pipelined reply carried no req_id".into())
+        })?;
+        let (expect, sent_at) = self.pending.remove(&req_id).ok_or_else(|| {
+            ClientError::Protocol(format!("reply for unknown req_id {req_id}"))
+        })?;
+        let latency = sent_at.elapsed();
+        match body {
+            Ok(reply) => {
+                if !reply_matches(expect, &reply) {
+                    return Err(ClientError::Protocol(format!(
+                        "req {req_id}: expected {expect:?}, got {reply:?}"
+                    )));
+                }
+                Ok(Completion {
+                    req_id,
+                    latency,
+                    result: Ok(reply),
+                })
+            }
+            Err(e) => Ok(Completion {
+                req_id,
+                latency,
+                result: Err(e),
+            }),
+        }
+    }
+
+    /// Enqueue one frame, harvesting a completion first if the window is
+    /// full. Returns the completions harvested (0 or 1).
+    fn send(
+        &mut self,
+        build: impl FnOnce(u64) -> String,
+        expect: Expect,
+    ) -> Result<Vec<Completion>, ClientError> {
+        let mut done = Vec::new();
+        while self.pending.len() >= self.depth {
+            done.push(self.recv_one()?);
+        }
+        let rid = self.next_req_id;
+        self.next_req_id += 1;
+        let line = build(rid);
+        self.pending.insert(rid, (expect, Instant::now()));
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        // flush per frame: the latency clock started above, so the frame
+        // must leave now — parking it in the BufWriter until the next
+        // harvest would bill this op for the client's own think time
+        // (and depth = 1 would no longer match the blocking client)
+        self.writer.flush()?;
+        Ok(done)
+    }
+
+    /// Pipeline a `hash` request.
+    pub fn send_hash(&mut self, samples: &[f32]) -> Result<Vec<Completion>, ClientError> {
+        self.send(
+            |rid| protocol::encode_hash(Some(rid), samples),
+            Expect::Signature,
+        )
+    }
+
+    /// Pipeline an `insert` request.
+    pub fn send_insert(
+        &mut self,
+        id: u64,
+        samples: &[f32],
+    ) -> Result<Vec<Completion>, ClientError> {
+        self.send(
+            |rid| protocol::encode_insert(Some(rid), id, samples),
+            Expect::Inserted(id),
+        )
+    }
+
+    /// Pipeline a `query` request.
+    pub fn send_query(
+        &mut self,
+        samples: &[f32],
+        k: usize,
+    ) -> Result<Vec<Completion>, ClientError> {
+        self.send(
+            |rid| protocol::encode_query(Some(rid), samples, k),
+            Expect::Hits,
+        )
+    }
+
+    /// Pipeline a `remove` request.
+    pub fn send_remove(&mut self, id: u64) -> Result<Vec<Completion>, ClientError> {
+        self.send(
+            |rid| protocol::encode_remove(Some(rid), id),
+            Expect::Removed(id),
+        )
+    }
+
+    /// Pipeline a `ping`.
+    pub fn send_ping(&mut self) -> Result<Vec<Completion>, ClientError> {
+        self.send(|rid| protocol::encode_bare(Some(rid), "ping"), Expect::Pong)
+    }
+
+    /// Pipeline a `metrics` request.
+    pub fn send_metrics(&mut self) -> Result<Vec<Completion>, ClientError> {
+        self.send(
+            |rid| protocol::encode_bare(Some(rid), "metrics"),
+            Expect::Metrics,
+        )
+    }
+
+    /// Pipeline a `points` request.
+    pub fn send_points(&mut self) -> Result<Vec<Completion>, ClientError> {
+        self.send(
+            |rid| protocol::encode_bare(Some(rid), "points"),
+            Expect::Points,
+        )
+    }
+
+    /// Pipeline a `snapshot` request.
+    pub fn send_snapshot(&mut self, path: &str) -> Result<Vec<Completion>, ClientError> {
+        self.send(
+            |rid| protocol::encode_snapshot(Some(rid), path),
+            Expect::Snapshot,
+        )
+    }
+
+    /// Pipeline a graceful-shutdown request.
+    pub fn send_shutdown(&mut self) -> Result<Vec<Completion>, ClientError> {
+        self.send(
+            |rid| protocol::encode_bare(Some(rid), "shutdown"),
+            Expect::ShuttingDown,
+        )
+    }
+
+    /// Push every queued frame to the socket without waiting for
+    /// responses (useful to fill the window before a drain).
+    pub fn flush(&mut self) -> Result<(), ClientError> {
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Flush and collect every outstanding completion.
+    pub fn drain(&mut self) -> Result<Vec<Completion>, ClientError> {
+        self.writer.flush()?;
+        let mut done = Vec::with_capacity(self.pending.len());
+        while !self.pending.is_empty() {
+            done.push(self.recv_one()?);
+        }
+        Ok(done)
+    }
+}
+
+// ----------------------------------------------------------- histogram
+
+/// Power-of-two latency histogram from 1 ns to ~9 min.
+///
+/// Bucket resolution is *nanoseconds* (bucket `i` counts latencies in
+/// `[2^i ns, 2^(i+1) ns)`): loopback round-trips sit in the tens of
+/// microseconds, and the earlier microsecond-floor buckets collapsed an
+/// entire sub-millisecond load run into one or two bars, flattening the
+/// reported distribution.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LatencyHistogram {
-    /// bucket `i` counts latencies in `[2^i µs, 2^(i+1) µs)`; the last
+    /// bucket `i` counts latencies in `[2^i ns, 2^(i+1) ns)`; the last
     /// bucket is open-ended
-    pub buckets: [u64; 24],
+    pub buckets: [u64; 40],
 }
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
-        Self { buckets: [0; 24] }
+        Self { buckets: [0; 40] }
     }
 }
 
 impl LatencyHistogram {
     /// Record one latency.
     pub fn record(&mut self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        let ns = d.as_nanos().max(1).min(u64::MAX as u128) as u64;
+        let idx = (63 - ns.leading_zeros() as usize).min(self.buckets.len() - 1);
         self.buckets[idx] += 1;
     }
 
@@ -203,7 +458,26 @@ impl LatencyHistogram {
         self.buckets.iter().sum()
     }
 
-    /// JSON rows `[{"le_us":…, "count":…}, …]` (cumulative upper bounds,
+    /// Approximate `p`-quantile in seconds (geometric midpoint of the
+    /// bucket containing the quantile; exact quantiles need the raw
+    /// samples, which the load generator also keeps).
+    pub fn approx_quantile_s(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return (1u64 << i) as f64 * std::f64::consts::SQRT_2 * 1e-9;
+            }
+        }
+        (1u64 << (self.buckets.len() - 1)) as f64 * std::f64::consts::SQRT_2 * 1e-9
+    }
+
+    /// JSON rows `[{"le_ns":…, "count":…}, …]` (cumulative upper bounds,
     /// empty tail trimmed).
     pub fn to_value(&self) -> Value {
         let last = self
@@ -218,7 +492,9 @@ impl LatencyHistogram {
                 .enumerate()
                 .map(|(i, &c)| {
                     object(vec![
-                        ("le_us", (1usize << (i + 1)).into()),
+                        // u64 shift: bucket 39's bound (2^40) would
+                        // overflow a 32-bit usize
+                        ("le_ns", Value::Number((1u64 << (i + 1)) as f64)),
                         ("count", (c as usize).into()),
                     ])
                 })
@@ -227,6 +503,8 @@ impl LatencyHistogram {
     }
 }
 
+// -------------------------------------------------------------- load gen
+
 /// Load-generator settings.
 #[derive(Debug, Clone)]
 pub struct LoadConfig {
@@ -234,6 +512,8 @@ pub struct LoadConfig {
     pub threads: usize,
     /// operations per thread
     pub ops_per_thread: usize,
+    /// in-flight frames per connection (1 = no pipelining)
+    pub pipeline_depth: usize,
     /// fraction of ops that are inserts
     pub insert_fraction: f64,
     /// fraction of ops that are queries (the rest are hash-only)
@@ -253,6 +533,7 @@ impl Default for LoadConfig {
         Self {
             threads: 8,
             ops_per_thread: 250,
+            pipeline_depth: 1,
             insert_fraction: 0.5,
             query_fraction: 0.3,
             k: 10,
@@ -267,7 +548,7 @@ impl Default for LoadConfig {
 pub struct LoadReport {
     /// total operations attempted
     pub ops: usize,
-    /// inserts / queries / hashes issued
+    /// inserts issued
     pub inserts: usize,
     /// queries issued
     pub queries: usize,
@@ -275,6 +556,8 @@ pub struct LoadReport {
     pub hashes: usize,
     /// failed operations
     pub errors: usize,
+    /// in-flight frames per connection during the run
+    pub pipeline_depth: usize,
     /// wall-clock duration of the run
     pub elapsed: Duration,
     /// mean per-op latency (seconds)
@@ -301,6 +584,7 @@ impl LoadReport {
             ("queries", self.queries.into()),
             ("hashes", self.hashes.into()),
             ("errors", self.errors.into()),
+            ("pipeline_depth", self.pipeline_depth.into()),
             ("elapsed_s", self.elapsed.as_secs_f64().into()),
             ("throughput_ops_s", self.throughput().into()),
             ("latency_mean_s", self.latency_mean_s.into()),
@@ -323,8 +607,23 @@ struct ThreadTally {
     histogram: LatencyHistogram,
 }
 
+impl ThreadTally {
+    fn absorb(&mut self, completions: Vec<Completion>) {
+        for c in completions {
+            match c.result {
+                Ok(_) => {
+                    self.latencies.push(c.latency.as_secs_f64());
+                    self.histogram.record(c.latency);
+                }
+                Err(_) => self.errors += 1,
+            }
+        }
+    }
+}
+
 /// Run mixed insert/query/hash traffic against `addr` from
-/// `cfg.threads` concurrent connections. The workload is the paper's
+/// `cfg.threads` concurrent connections, each keeping up to
+/// `cfg.pipeline_depth` frames in flight. The workload is the paper's
 /// sine family sampled at `points` (fetch them with
 /// [`Client::points`]). Insert ids are partitioned per thread above
 /// `cfg.id_base`, so a run never collides with itself or (at the
@@ -340,7 +639,7 @@ pub fn run_load(
         let points = points.to_vec();
         let cfg = cfg.clone();
         handles.push(std::thread::spawn(move || -> Result<ThreadTally, ClientError> {
-            let mut client = Client::connect(addr)?;
+            let mut client = PipelinedClient::connect(addr, cfg.pipeline_depth.max(1))?;
             let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(t as u64));
             let mut tally = ThreadTally::default();
             for i in 0..cfg.ops_per_thread {
@@ -348,28 +647,20 @@ pub fn run_load(
                 let f = Sine::paper(phase);
                 let samples: Vec<f32> = points.iter().map(|&x| f.eval(x) as f32).collect();
                 let roll = rng.uniform();
-                let op_start = Instant::now();
-                let outcome = if roll < cfg.insert_fraction {
+                let done = if roll < cfg.insert_fraction {
                     tally.inserts += 1;
                     let id = cfg.id_base + ((t as u64) << 32) + i as u64;
-                    client.insert(id, &samples).map(|_| ())
+                    client.send_insert(id, &samples)?
                 } else if roll < cfg.insert_fraction + cfg.query_fraction {
                     tally.queries += 1;
-                    client.query(&samples, cfg.k).map(|_| ())
+                    client.send_query(&samples, cfg.k)?
                 } else {
                     tally.hashes += 1;
-                    client.hash(&samples).map(|_| ())
+                    client.send_hash(&samples)?
                 };
-                let lat = op_start.elapsed();
-                match outcome {
-                    Ok(()) => {
-                        tally.latencies.push(lat.as_secs_f64());
-                        tally.histogram.record(lat);
-                    }
-                    Err(ClientError::Server(_)) => tally.errors += 1,
-                    Err(e) => return Err(e), // transport failure: abort thread
-                }
+                tally.absorb(done);
             }
+            tally.absorb(client.drain()?);
             Ok(tally)
         }));
     }
@@ -412,6 +703,7 @@ pub fn run_load(
         queries: merged.queries,
         hashes: merged.hashes,
         errors: merged.errors,
+        pipeline_depth: cfg.pipeline_depth.max(1),
         elapsed,
         latency_mean_s: mean,
         latency_p50_s: q(0.5),
@@ -427,38 +719,67 @@ mod tests {
     #[test]
     fn histogram_buckets_and_merge() {
         let mut h = LatencyHistogram::default();
-        h.record(Duration::from_micros(1)); // bucket 0
-        h.record(Duration::from_micros(3)); // bucket 1
-        h.record(Duration::from_micros(1000)); // ~2^9.97 -> bucket 9
-        assert_eq!(h.count(), 3);
+        h.record(Duration::from_nanos(1)); // bucket 0
+        h.record(Duration::from_nanos(3)); // bucket 1
+        h.record(Duration::from_micros(1)); // 1000 ns -> bucket 9
+        h.record(Duration::from_micros(1000)); // 1e6 ns -> bucket 19
+        assert_eq!(h.count(), 4);
         assert_eq!(h.buckets[0], 1);
         assert_eq!(h.buckets[1], 1);
         assert_eq!(h.buckets[9], 1);
+        assert_eq!(h.buckets[19], 1);
         let mut other = LatencyHistogram::default();
-        other.record(Duration::from_micros(3));
+        other.record(Duration::from_nanos(3));
         other.merge(&h);
-        assert_eq!(other.count(), 4);
+        assert_eq!(other.count(), 5);
         assert_eq!(other.buckets[1], 2);
+    }
+
+    #[test]
+    fn histogram_resolves_sub_millisecond_latencies() {
+        // the whole point of the ns-floor buckets: a loopback-speed run
+        // (tens to hundreds of µs) spreads over distinct buckets instead
+        // of collapsing into one
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(5)); // 5000 ns -> bucket 12
+        h.record(Duration::from_micros(20)); // 20000 ns -> bucket 14
+        h.record(Duration::from_micros(80)); // 80000 ns -> bucket 16
+        h.record(Duration::from_micros(300)); // 300000 ns -> bucket 18
+        let occupied: Vec<usize> = (0..h.buckets.len()).filter(|&i| h.buckets[i] > 0).collect();
+        assert_eq!(occupied, vec![12, 14, 16, 18]);
+        // approximate quantiles spread too (no single-bucket collapse)
+        assert!(h.approx_quantile_s(0.01) < h.approx_quantile_s(0.99));
+        assert!(h.approx_quantile_s(0.99) < 1e-3);
     }
 
     #[test]
     fn histogram_clamps_extremes() {
         let mut h = LatencyHistogram::default();
-        h.record(Duration::from_nanos(1)); // sub-µs clamps to bucket 0
+        h.record(Duration::from_nanos(0)); // clamps to bucket 0
         h.record(Duration::from_secs(3600)); // clamps to the last bucket
         assert_eq!(h.buckets[0], 1);
-        assert_eq!(h.buckets[23], 1);
+        assert_eq!(h.buckets[39], 1);
     }
 
     #[test]
     fn histogram_json_trims_tail() {
         let mut h = LatencyHistogram::default();
-        h.record(Duration::from_micros(2));
+        h.record(Duration::from_nanos(2));
         let v = h.to_value();
         let rows = v.as_array().unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[1].get("count").unwrap().as_usize(), Some(1));
-        assert_eq!(rows[1].get("le_us").unwrap().as_usize(), Some(4));
+        assert_eq!(rows[1].get("le_ns").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn approx_quantile_empty_and_single() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.approx_quantile_s(0.5), 0.0);
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(10));
+        let q = h.approx_quantile_s(0.5);
+        assert!(q > 5e-6 && q < 2e-5, "{q}");
     }
 
     #[test]
@@ -469,6 +790,7 @@ mod tests {
             queries: 3,
             hashes: 2,
             errors: 0,
+            pipeline_depth: 4,
             elapsed: Duration::from_millis(100),
             latency_mean_s: 0.001,
             latency_p50_s: 0.001,
@@ -478,6 +800,7 @@ mod tests {
         assert!((report.throughput() - 100.0).abs() < 1.0);
         let v = crate::json::parse(&report.to_json()).unwrap();
         assert_eq!(v.get("ops").unwrap().as_usize(), Some(10));
+        assert_eq!(v.get("pipeline_depth").unwrap().as_usize(), Some(4));
         assert!(v.get("throughput_ops_s").unwrap().as_f64().unwrap() > 0.0);
     }
 }

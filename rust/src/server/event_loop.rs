@@ -1,0 +1,621 @@
+//! The readiness-based serving mode (Linux): one epoll thread multiplexes
+//! every connection, a fixed worker pool feeds the coordinator's dynamic
+//! batcher, and per-connection reorder buffers keep wire responses in
+//! request order even though batches complete out of order.
+//!
+//! ```text
+//!                    ┌──────────────── epoll thread ───────────────┐
+//! clients ── TCP ──▶ │ accept / read / incremental newline framing │
+//!                    │   parse → Job{token, seq, req_id, op}       │
+//!                    └──────────────┬──────────────────────────────┘
+//!                                   │ BoundedQueue<Job>
+//!                          io_workers threads: submit_async the whole
+//!                          job batch → coordinator batcher → recv
+//!                                   │ completions + eventfd wake
+//!                    ┌──────────────▼──────────────────────────────┐
+//!                    │ reorder by per-conn seq → write_buf → socket│
+//!                    └─────────────────────────────────────────────┘
+//! ```
+//!
+//! Backpressure: a connection with `pipeline_depth` responses outstanding
+//! (or an unflushed write buffer past the high-water mark) has its read
+//! interest cleared until it drains; the stall is counted in
+//! [`ServiceMetrics`]. The job queue is bounded too — overflow parks in a
+//! FIFO spill list and retries each tick, so the epoll thread never
+//! blocks.
+
+use super::protocol;
+use super::reactor::{event, Poller, Waker};
+use crate::coordinator::{BoundedQueue, Coordinator, Op, Response, ServiceMetrics};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// How often the loop re-checks the shutdown flag when idle.
+const TICK: Duration = Duration::from_millis(50);
+
+/// Unflushed output past this mark pauses reads from that connection.
+const WRITE_HIGH_WATER: usize = protocol::MAX_LINE_BYTES;
+
+/// How long the shutdown drain waits for in-flight responses to flush
+/// before force-closing whatever is left (a peer that never reads its
+/// responses must not pin the server open).
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(10);
+
+/// A parsed coordinator request in flight between the epoll thread and
+/// the worker pool.
+struct Job {
+    token: u64,
+    seq: u64,
+    req_id: Option<u64>,
+    op: Op,
+}
+
+/// A finished response on its way back to the epoll thread.
+struct Completion {
+    token: u64,
+    seq: u64,
+    line: String,
+}
+
+/// Handles owned by [`super::Server`] for the event-loop runtime.
+pub(super) struct EventServer {
+    loop_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    jobs: Arc<BoundedQueue<Job>>,
+    waker: Arc<Waker>,
+}
+
+impl EventServer {
+    /// Wake the loop (the caller has set the shutdown flag), wait for it
+    /// to drain and exit, then stop the worker pool.
+    pub(super) fn stop(&mut self) {
+        self.waker.wake();
+        if let Some(t) = self.loop_thread.take() {
+            let _ = t.join();
+        }
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Spawn the epoll thread + worker pool over an already-bound,
+/// non-blocking listener.
+pub(super) fn start(
+    listener: TcpListener,
+    io_workers: usize,
+    pipeline_depth: usize,
+    job_queue_depth: usize,
+    svc: Arc<Coordinator>,
+    points: Arc<Vec<f64>>,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<EventServer> {
+    listener.set_nonblocking(true)?;
+    let poller = Poller::new(1024)?;
+    let waker = Arc::new(Waker::new()?);
+    poller.register(listener.as_raw_fd(), event::READ, TOKEN_LISTENER)?;
+    poller.register(waker.fd(), event::READ, TOKEN_WAKER)?;
+
+    let jobs: Arc<BoundedQueue<Job>> = Arc::new(BoundedQueue::new(job_queue_depth.max(64)));
+    let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
+    let metrics = svc.shared_metrics();
+
+    let mut workers = Vec::new();
+    for _ in 0..io_workers.max(1) {
+        let jobs = jobs.clone();
+        let svc = svc.clone();
+        let completions = completions.clone();
+        let waker = waker.clone();
+        workers.push(std::thread::spawn(move || {
+            worker_loop(&jobs, &svc, &completions, &waker);
+        }));
+    }
+
+    let state = LoopState {
+        poller,
+        listener,
+        waker: waker.clone(),
+        conns: HashMap::new(),
+        next_token: FIRST_CONN_TOKEN,
+        jobs: jobs.clone(),
+        pending_jobs: VecDeque::new(),
+        completions,
+        metrics,
+        points,
+        shutdown,
+        pipeline_depth: pipeline_depth.max(1),
+    };
+    let loop_thread = std::thread::spawn(move || state.run());
+
+    Ok(EventServer {
+        loop_thread: Some(loop_thread),
+        workers,
+        jobs,
+        waker,
+    })
+}
+
+/// Worker: drain a batch of jobs, push them *all* into the coordinator
+/// (so wire concurrency turns into batch occupancy), then collect the
+/// responses and hand them back to the epoll thread.
+fn worker_loop(
+    jobs: &BoundedQueue<Job>,
+    svc: &Coordinator,
+    completions: &Mutex<Vec<Completion>>,
+    waker: &Waker,
+) {
+    while let Some(batch) = jobs.pop_batch(32, Duration::from_micros(200)) {
+        let mut waits = Vec::with_capacity(batch.len());
+        for job in batch {
+            let Job {
+                token,
+                seq,
+                req_id,
+                op,
+            } = job;
+            waits.push((token, seq, req_id, svc.submit_async(op)));
+        }
+        let mut done = Vec::with_capacity(waits.len());
+        for (token, seq, req_id, rx) in waits {
+            let resp = match rx {
+                Ok(rx) => rx
+                    .recv()
+                    .unwrap_or_else(|_| Response::Error("worker dropped request".into())),
+                Err(e) => Response::Error(e),
+            };
+            done.push(Completion {
+                token,
+                seq,
+                line: protocol::encode_response(req_id, &resp),
+            });
+        }
+        completions.lock().unwrap().extend(done);
+        waker.wake();
+    }
+}
+
+/// One multiplexed connection.
+struct Conn {
+    stream: TcpStream,
+    /// bytes received but not yet framed
+    read_buf: Vec<u8>,
+    /// resume offset for the newline scan (avoid rescanning the prefix)
+    scan_from: usize,
+    /// encoded responses awaiting the socket
+    write_buf: Vec<u8>,
+    /// first unwritten byte of `write_buf`
+    write_from: usize,
+    /// sequence number assigned to the next frame read
+    next_seq: u64,
+    /// sequence number of the next response to put on the wire
+    next_write_seq: u64,
+    /// out-of-order completions parked until their turn
+    completed: BTreeMap<u64, String>,
+    /// EOF seen, or reads retired by shutdown
+    read_closed: bool,
+    /// fatal protocol error: close once all responses have flushed
+    close_after_flush: bool,
+    /// currently read-stalled (for backpressure accounting)
+    was_stalled: bool,
+    /// interest mask currently registered with the poller
+    interest: u32,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        Self {
+            stream,
+            read_buf: Vec::new(),
+            scan_from: 0,
+            write_buf: Vec::new(),
+            write_from: 0,
+            next_seq: 0,
+            next_write_seq: 0,
+            completed: BTreeMap::new(),
+            read_closed: false,
+            close_after_flush: false,
+            was_stalled: false,
+            interest: event::READ,
+        }
+    }
+
+    /// Frames read but not yet answered on the wire.
+    fn in_flight(&self) -> u64 {
+        self.next_seq - self.next_write_seq
+    }
+
+    fn take_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    fn complete(&mut self, seq: u64, line: String) {
+        self.completed.insert(seq, line);
+    }
+
+    /// Move in-order completions into the write buffer.
+    fn flush_ready(&mut self) {
+        while let Some(line) = self.completed.remove(&self.next_write_seq) {
+            self.write_buf.extend_from_slice(line.as_bytes());
+            self.write_buf.push(b'\n');
+            self.next_write_seq += 1;
+        }
+    }
+
+    fn has_pending_write(&self) -> bool {
+        self.write_from < self.write_buf.len()
+    }
+
+    /// Whether reads should pause until this connection drains.
+    fn stalled(&self, pipeline_depth: usize) -> bool {
+        self.in_flight() >= pipeline_depth as u64
+            || self.write_buf.len() - self.write_from >= WRITE_HIGH_WATER
+    }
+
+    /// Push buffered output to the (non-blocking) socket.
+    fn try_write(&mut self) -> std::io::Result<()> {
+        while self.write_from < self.write_buf.len() {
+            match self.stream.write(&self.write_buf[self.write_from..]) {
+                Ok(0) => return Err(ErrorKind::WriteZero.into()),
+                Ok(n) => self.write_from += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.write_from == self.write_buf.len() {
+            self.write_buf.clear();
+            self.write_from = 0;
+        }
+        Ok(())
+    }
+}
+
+struct LoopState {
+    poller: Poller,
+    listener: TcpListener,
+    waker: Arc<Waker>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    jobs: Arc<BoundedQueue<Job>>,
+    /// jobs that found the queue full; retried each tick in FIFO order
+    pending_jobs: VecDeque<Job>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    metrics: Arc<ServiceMetrics>,
+    points: Arc<Vec<f64>>,
+    shutdown: Arc<AtomicBool>,
+    pipeline_depth: usize,
+}
+
+impl LoopState {
+    fn run(mut self) {
+        let mut shutting_down = false;
+        let mut drain_deadline: Option<Instant> = None;
+        loop {
+            let ready = match self.poller.wait(TICK) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("server event loop: poll failed: {e}");
+                    break;
+                }
+            };
+            if !ready.is_empty() {
+                self.metrics.record_readiness_events(ready.len() as u64);
+            }
+            for r in ready {
+                match r.token {
+                    TOKEN_LISTENER => {
+                        if !shutting_down {
+                            self.accept_ready();
+                        }
+                    }
+                    TOKEN_WAKER => self.waker.drain(),
+                    token => {
+                        if r.readable() {
+                            self.handle_readable(token);
+                        }
+                        if r.writable() {
+                            self.finish_io(token);
+                        }
+                    }
+                }
+            }
+            self.retry_pending_jobs();
+            self.apply_completions();
+            if !shutting_down && self.shutdown.load(Ordering::SeqCst) {
+                shutting_down = true;
+                drain_deadline = Some(Instant::now() + SHUTDOWN_GRACE);
+                self.begin_shutdown();
+            }
+            if shutting_down {
+                if self.conns.is_empty() && self.pending_jobs.is_empty() {
+                    break;
+                }
+                if drain_deadline.is_some_and(|d| Instant::now() >= d) {
+                    // grace expired: stop waiting on peers that will not
+                    // drain (the final cleanup below closes them)
+                    self.pending_jobs.clear();
+                    break;
+                }
+            }
+        }
+        // abnormal exit (poll failure): drop whatever is left, with the
+        // close counters kept honest
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            if let Some(c) = self.conns.remove(&t) {
+                self.drop_conn(t, c);
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self
+                        .poller
+                        .register(stream.as_raw_fd(), event::READ, token)
+                        .is_err()
+                    {
+                        continue; // fd table exhausted: shed the connection
+                    }
+                    self.metrics.record_conn_opened();
+                    self.conns.insert(token, Conn::new(stream));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // EMFILE/ENFILE etc.: the pending connection keeps the
+                    // level-triggered listener readable, so without a pause
+                    // this would spin the loop at 100% until an fd frees
+                    std::thread::sleep(Duration::from_millis(10));
+                    break;
+                }
+            }
+        }
+    }
+
+    fn handle_readable(&mut self, token: u64) {
+        let mut conn = match self.conns.remove(&token) {
+            Some(c) => c,
+            None => return,
+        };
+        let mut buf = [0u8; 64 * 1024];
+        loop {
+            if conn.read_closed || conn.close_after_flush {
+                break;
+            }
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.read_closed = true;
+                    if !conn.read_buf.is_empty() {
+                        // a final unterminated frame before EOF is still a
+                        // frame (clients may write-all then half-close)
+                        let tail = std::mem::take(&mut conn.read_buf);
+                        conn.scan_from = 0;
+                        self.handle_frame(&mut conn, token, &tail);
+                    }
+                    break;
+                }
+                Ok(n) => {
+                    conn.read_buf.extend_from_slice(&buf[..n]);
+                    self.parse_frames(&mut conn, token);
+                    if conn.stalled(self.pipeline_depth) {
+                        break; // backpressure: leave the rest in the kernel
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.drop_conn(token, conn);
+                    return;
+                }
+            }
+        }
+        self.settle(token, conn);
+    }
+
+    /// Split complete newline-terminated frames out of the read buffer.
+    /// The buffer is taken out of the connection for the duration, so
+    /// frames are handled as zero-copy slices and the consumed prefix is
+    /// drained once per call (not once per frame).
+    fn parse_frames(&mut self, conn: &mut Conn, token: u64) {
+        let buf = std::mem::take(&mut conn.read_buf);
+        let mut start = 0usize;
+        let mut scan = conn.scan_from;
+        while !conn.close_after_flush {
+            match buf[scan..].iter().position(|&b| b == b'\n') {
+                Some(rel) => {
+                    let end = scan + rel;
+                    let mut line = &buf[start..end];
+                    if line.last() == Some(&b'\r') {
+                        line = &line[..line.len() - 1];
+                    }
+                    self.handle_frame(conn, token, line);
+                    start = end + 1;
+                    scan = start;
+                }
+                None => {
+                    scan = buf.len();
+                    break;
+                }
+            }
+        }
+        // put the buffer back and drop the consumed prefix in one move;
+        // everything kept has already been scanned for newlines
+        conn.read_buf = buf;
+        if start > 0 {
+            conn.read_buf.drain(..start);
+        }
+        conn.scan_from = conn.read_buf.len();
+        if !conn.close_after_flush && conn.read_buf.len() > protocol::MAX_LINE_BYTES {
+            let seq = conn.take_seq();
+            conn.complete(seq, protocol::encode_error(None, "request line too long"));
+            conn.close_after_flush = true;
+            conn.read_closed = true;
+        }
+    }
+
+    /// Answer one frame: transport ops inline, coordinator ops via the
+    /// worker pool. Every frame gets a seq so responses flush in request
+    /// order regardless of completion order.
+    fn handle_frame(&mut self, conn: &mut Conn, token: u64, bytes: &[u8]) {
+        let seq = conn.take_seq();
+        if bytes.len() > protocol::MAX_LINE_BYTES {
+            conn.complete(seq, protocol::encode_error(None, "request line too long"));
+            conn.close_after_flush = true;
+            conn.read_closed = true;
+            return;
+        }
+        let line = match std::str::from_utf8(bytes) {
+            Ok(s) => s,
+            Err(_) => {
+                conn.complete(
+                    seq,
+                    protocol::encode_error(None, "bad request: invalid utf-8"),
+                );
+                return;
+            }
+        };
+        if line.trim().is_empty() {
+            conn.complete(seq, protocol::encode_error(None, "empty request"));
+            return;
+        }
+        match protocol::parse_request(line) {
+            Err(e) => {
+                conn.complete(
+                    seq,
+                    protocol::encode_error(e.req_id, &format!("bad request: {e}")),
+                );
+            }
+            Ok(protocol::Request { req_id, body }) => match body {
+                protocol::RequestBody::Points => {
+                    conn.complete(seq, protocol::encode_points(req_id, &self.points));
+                }
+                protocol::RequestBody::Shutdown => {
+                    self.shutdown.store(true, Ordering::SeqCst);
+                    conn.complete(seq, protocol::encode_shutting_down(req_id));
+                }
+                protocol::RequestBody::Op(op) => self.dispatch(Job {
+                    token,
+                    seq,
+                    req_id,
+                    op,
+                }),
+            },
+        }
+    }
+
+    fn dispatch(&mut self, job: Job) {
+        if !self.pending_jobs.is_empty() {
+            self.pending_jobs.push_back(job); // keep global FIFO order
+            return;
+        }
+        if let Err((Some(job), _)) = self.jobs.try_push(job) {
+            self.pending_jobs.push_back(job);
+        }
+    }
+
+    fn retry_pending_jobs(&mut self) {
+        while let Some(job) = self.pending_jobs.pop_front() {
+            if let Err((Some(job), _)) = self.jobs.try_push(job) {
+                self.pending_jobs.push_front(job);
+                break;
+            }
+        }
+    }
+
+    /// Route finished responses to their reorder buffers and flush every
+    /// connection that may have output or a close decision pending.
+    fn apply_completions(&mut self) {
+        let done: Vec<Completion> = std::mem::take(&mut *self.completions.lock().unwrap());
+        let mut touched: Vec<u64> = Vec::with_capacity(done.len());
+        for c in done {
+            if let Some(conn) = self.conns.get_mut(&c.token) {
+                conn.complete(c.seq, c.line);
+                touched.push(c.token);
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for t in touched {
+            self.finish_io(t);
+        }
+    }
+
+    fn finish_io(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            self.settle(token, conn);
+        }
+    }
+
+    /// Flush, decide close-vs-keep, and refresh poller interest.
+    fn settle(&mut self, token: u64, mut conn: Conn) {
+        conn.flush_ready();
+        if conn.try_write().is_err() {
+            self.drop_conn(token, conn);
+            return;
+        }
+        let drained = conn.in_flight() == 0 && !conn.has_pending_write();
+        if drained && (conn.read_closed || conn.close_after_flush) {
+            self.drop_conn(token, conn);
+            return;
+        }
+        let stalled = conn.stalled(self.pipeline_depth);
+        if stalled && !conn.was_stalled {
+            self.metrics.record_backpressure_stall();
+        }
+        conn.was_stalled = stalled;
+        let mut interest = 0u32;
+        if !conn.read_closed && !conn.close_after_flush && !stalled {
+            interest |= event::READ;
+        }
+        if conn.has_pending_write() {
+            interest |= event::WRITE;
+        }
+        if interest != conn.interest {
+            let _ = self
+                .poller
+                .modify(conn.stream.as_raw_fd(), interest, token);
+            conn.interest = interest;
+        }
+        self.conns.insert(token, conn);
+    }
+
+    fn drop_conn(&mut self, _token: u64, conn: Conn) {
+        let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        self.metrics.record_conn_closed();
+        // conn (and its stream) drops here
+    }
+
+    /// Stop accepting and reading; connections close as they drain.
+    fn begin_shutdown(&mut self) {
+        let _ = self.poller.deregister(self.listener.as_raw_fd());
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            if let Some(mut conn) = self.conns.remove(&t) {
+                conn.read_closed = true;
+                self.settle(t, conn);
+            }
+        }
+    }
+}

@@ -1,32 +1,34 @@
-//! The network serving layer: a `std::net` TCP front-end over the
-//! [`crate::coordinator`] batching worker pool.
+//! The network serving layer: a TCP front-end over the
+//! [`crate::coordinator`] batching worker pool, with two interchangeable
+//! I/O runtimes selected by `[server] io_mode`.
 //!
 //! # Architecture
 //!
+//! **`io_mode = "event_loop"`** (default, Linux) — readiness-based:
+//!
 //! ```text
-//! client ── TCP ──▶ acceptor thread ──▶ BoundedQueue<TcpStream>
-//!                                            │
-//!                                   handler pool (max_conns threads)
-//!                                            │  parse line → Op
-//!                                            ▼
-//!                                  Coordinator::submit  (dynamic
-//!                                  batcher: concurrent connections
-//!                                  share batched hash executions)
-//!                                            │
-//!                                            ▼
-//!                                   encode Response → write line
+//! clients ── TCP ──▶ epoll thread (accept + non-blocking reads +
+//!                    incremental newline framing + write flushing)
+//!                         │ Job queue (bounded)
+//!                    io_workers threads ──▶ Coordinator::submit_async
+//!                         │                 (dynamic batcher: concurrent
+//!                         │                  connections share batched
+//!                         │                  hash executions)
+//!                    completions ──▶ per-conn reorder buffer ──▶ socket
 //! ```
 //!
-//! The coordinator queue is the *shared* batching point: requests from
-//! different connections land in the same [`crate::coordinator::BoundedQueue`] and are
-//! hashed in one batched matmul, so wire concurrency directly feeds
-//! batch occupancy.
+//! One thread multiplexes thousands of idle connections; the
+//! fixed worker pool turns wire concurrency into batch occupancy.
+//!
+//! **`io_mode = "threaded"`** (fallback, all platforms) — the PR 1
+//! acceptor + connection-handler pool: `max_conns` threads, each owning
+//! one connection at a time with blocking reads.
 //!
 //! # Wire protocol
 //!
 //! Newline-delimited JSON, one frame per line, UTF-8, max 8 MiB per
-//! line. Every request may carry an optional `req_id` (u64) that is
-//! echoed in the response, enabling client-side correlation.
+//! line ([`protocol::MAX_LINE_BYTES`]). Every request may carry an
+//! optional `req_id` (u64) that is echoed in the response.
 //!
 //! Requests:
 //!
@@ -58,20 +60,68 @@
 //!                                              bad requests and op failures)
 //! ```
 //!
+//! # Pipelining contract
+//!
+//! Clients may write many request frames before reading any response
+//! (see [`client::PipelinedClient`]). The server guarantees:
+//!
+//! * **Ordering** — responses on one connection are written in request
+//!   order, even though the coordinator completes batches out of order
+//!   internally. `req_id` is still echoed verbatim so clients can (and
+//!   should) correlate by id rather than position.
+//! * **One response per frame** — every received frame, including
+//!   malformed ones, produces exactly one response line. Malformed JSON,
+//!   unknown `op`s, invalid UTF-8, and empty lines get an
+//!   `{"ok":false,…}` envelope and the connection stays usable; only an
+//!   oversized frame (> 8 MiB before its newline) is answered with
+//!   `request line too long` and then the connection closes after all
+//!   earlier responses have flushed.
+//! * **Backpressure** — a connection with `[server] pipeline_depth`
+//!   responses outstanding (or an unflushed write backlog ≥ 8 MiB) is
+//!   not read from until it drains; stalls are visible as
+//!   `backpressure_stalls` in the metrics. Well-behaved clients keep
+//!   their send window ≤ `pipeline_depth`.
+//! * **Shutdown** — after a `shutdown` frame (from any connection) the
+//!   server stops accepting and stops reading, but every frame already
+//!   received — on every connection — is answered and flushed before
+//!   its connection closes.
+//!
+//! A frame written after the server stopped reading (in-flight in the
+//! kernel at shutdown, or past the oversized cut-off) is never answered;
+//! pipelined clients observe the EOF when draining and report the
+//! unanswered ids.
+//!
+//! The contract above is the **event-loop runtime's**. The threaded
+//! fallback answers frames one at a time in request order and echoes
+//! `req_id` identically, but deviates in two documented ways: a frame
+//! containing invalid UTF-8 closes the connection without a response
+//! (its line-reader cannot recover the framing), and at shutdown only
+//! the frame currently being served is answered — pipelined frames
+//! still buffered on that connection are dropped with the close. Keep
+//! pipelining depth at 1 when targeting `io_mode = "threaded"`.
+//!
 //! # Shutdown
 //!
 //! Graceful shutdown (the `shutdown` op, or [`Server::shutdown`]) stops
-//! the acceptor, drains handler threads (in-flight requests complete),
-//! and — if `server.snapshot_path` is configured — snapshots the
-//! `ShardedIndex` in the `FLSH1` format so a restart can skip
-//! re-hashing the corpus.
+//! the acceptor, drains in-flight requests as above, and — if
+//! `server.snapshot_path` is configured — snapshots the `ShardedIndex`
+//! in the `FLSH1` format so a restart can skip re-hashing the corpus.
 
 pub mod client;
+#[cfg(target_os = "linux")]
+mod event_loop;
 pub mod protocol;
+#[cfg(target_os = "linux")]
+pub mod reactor;
 
-pub use client::{run_load, Client, ClientError, LatencyHistogram, LoadConfig, LoadReport};
+pub use client::{
+    run_load, Client, ClientError, Completion, LatencyHistogram, LoadConfig, LoadReport,
+    PipelinedClient,
+};
+#[cfg(target_os = "linux")]
+pub use reactor::raise_nofile_limit;
 
-use crate::config::ServiceConfig;
+use crate::config::{IoMode, ServiceConfig};
 use crate::coordinator::{BoundedQueue, Coordinator, Op, Response};
 use protocol::{Request, RequestBody};
 use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
@@ -88,18 +138,31 @@ const POLL_INTERVAL: Duration = Duration::from_millis(50);
 pub struct Server {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    acceptor: Option<JoinHandle<()>>,
-    handlers: Vec<JoinHandle<()>>,
+    runtime: Runtime,
+    io_mode: IoMode,
     svc: Arc<Coordinator>,
     points: Arc<Vec<f64>>,
     snapshot_path: String,
 }
 
+/// Which I/O runtime is actually serving.
+enum Runtime {
+    Threaded {
+        acceptor: Option<JoinHandle<()>>,
+        handlers: Vec<JoinHandle<()>>,
+    },
+    #[cfg(target_os = "linux")]
+    Event(event_loop::EventServer),
+}
+
 impl Server {
     /// Bind `cfg.server.host:cfg.server.port` (port 0 = ephemeral) and
-    /// start the acceptor + handler pool over an already-running
+    /// start the configured I/O runtime over an already-running
     /// coordinator. `points` are the service's published sample points,
     /// served to clients via the `points` op.
+    ///
+    /// `io_mode = "event_loop"` needs epoll; on non-Linux targets it
+    /// falls back to the threaded runtime with a warning.
     pub fn start(
         cfg: &ServiceConfig,
         svc: Arc<Coordinator>,
@@ -110,60 +173,38 @@ impl Server {
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let points = Arc::new(points);
-        // Accepted-but-unserved connections queue here; capacity bounds
-        // the accept backlog the same way the coordinator queue bounds
-        // requests.
-        let conn_queue: Arc<BoundedQueue<TcpStream>> =
-            Arc::new(BoundedQueue::new(cfg.server.max_conns.max(1) * 4));
 
-        let mut handlers = Vec::new();
-        for _ in 0..cfg.server.max_conns.max(1) {
-            let conn_queue = conn_queue.clone();
-            let svc = svc.clone();
-            let shutdown = shutdown.clone();
-            let points = points.clone();
-            handlers.push(std::thread::spawn(move || {
-                while let Some(batch) = conn_queue.pop_batch(1, POLL_INTERVAL) {
-                    for stream in batch {
-                        handle_connection(stream, &svc, &points, &shutdown);
-                    }
-                }
-            }));
-        }
+        let io_mode = match cfg.server.io_mode {
+            IoMode::EventLoop if cfg!(not(target_os = "linux")) => {
+                eprintln!("server: io_mode=event_loop needs epoll (Linux); using threaded");
+                IoMode::Threaded
+            }
+            m => m,
+        };
 
-        let acceptor = {
-            let shutdown = shutdown.clone();
-            let conn_queue = conn_queue.clone();
-            std::thread::spawn(move || {
-                while !shutdown.load(Ordering::SeqCst) {
-                    match listener.accept() {
-                        Ok((stream, _peer)) => {
-                            // the listener is non-blocking; handlers use
-                            // blocking reads with a timeout. A full
-                            // backlog sheds the connection (drop = RST)
-                            // instead of blocking the acceptor, so
-                            // shutdown can never deadlock on a saturated
-                            // handler pool.
-                            let _ = stream.set_nonblocking(false);
-                            if conn_queue.try_push(stream).is_err() {
-                                std::thread::sleep(Duration::from_millis(2));
-                            }
-                        }
-                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => std::thread::sleep(POLL_INTERVAL),
-                    }
-                }
-                conn_queue.close();
-            })
+        let runtime = match io_mode {
+            #[cfg(target_os = "linux")]
+            IoMode::EventLoop => Runtime::Event(event_loop::start(
+                listener,
+                cfg.server.io_workers,
+                cfg.server.pipeline_depth,
+                cfg.queue_depth,
+                svc.clone(),
+                points.clone(),
+                shutdown.clone(),
+            )?),
+            #[cfg(not(target_os = "linux"))]
+            IoMode::EventLoop => unreachable!("event_loop downgraded to threaded above"),
+            IoMode::Threaded => {
+                start_threaded(listener, cfg, svc.clone(), points.clone(), shutdown.clone())
+            }
         };
 
         Ok(Self {
             addr,
             shutdown,
-            acceptor: Some(acceptor),
-            handlers,
+            runtime,
+            io_mode,
             svc,
             points,
             snapshot_path: cfg.server.snapshot_path.clone(),
@@ -173,6 +214,11 @@ impl Server {
     /// The bound address (useful with port 0).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The I/O runtime actually serving (after platform fallback).
+    pub fn io_mode(&self) -> IoMode {
+        self.io_mode
     }
 
     /// The published sample points.
@@ -185,17 +231,24 @@ impl Server {
         self.shutdown.load(Ordering::SeqCst)
     }
 
-    /// Stop accepting, drain handlers, write the shutdown snapshot (if
-    /// configured), and hand the coordinator back to the caller (who
-    /// still owns its lifecycle). Returns the snapshot outcome:
-    /// `None` if disabled, `Some(Ok(bytes))` / `Some(Err(e))` otherwise.
+    /// Stop accepting, drain in-flight requests, write the shutdown
+    /// snapshot (if configured), and hand the coordinator back to the
+    /// caller (who still owns its lifecycle). Returns the snapshot
+    /// outcome: `None` if disabled, `Some(Ok(bytes))` / `Some(Err(e))`
+    /// otherwise.
     pub fn shutdown(mut self) -> (Arc<Coordinator>, Option<std::io::Result<u64>>) {
         self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
-        }
-        for h in self.handlers.drain(..) {
-            let _ = h.join();
+        match &mut self.runtime {
+            Runtime::Threaded { acceptor, handlers } => {
+                if let Some(a) = acceptor.take() {
+                    let _ = a.join();
+                }
+                for h in handlers.drain(..) {
+                    let _ = h.join();
+                }
+            }
+            #[cfg(target_os = "linux")]
+            Runtime::Event(ev) => ev.stop(),
         }
         let snapshot = if self.snapshot_path.is_empty() {
             None
@@ -213,6 +266,68 @@ impl Server {
             )
         };
         (self.svc, snapshot)
+    }
+}
+
+/// The PR 1 runtime: acceptor thread + `max_conns` handler threads, each
+/// serving one connection at a time with blocking reads.
+fn start_threaded(
+    listener: TcpListener,
+    cfg: &ServiceConfig,
+    svc: Arc<Coordinator>,
+    points: Arc<Vec<f64>>,
+    shutdown: Arc<AtomicBool>,
+) -> Runtime {
+    // Accepted-but-unserved connections queue here; capacity bounds the
+    // accept backlog the same way the coordinator queue bounds requests.
+    let conn_queue: Arc<BoundedQueue<TcpStream>> =
+        Arc::new(BoundedQueue::new(cfg.server.max_conns.max(1) * 4));
+
+    let mut handlers = Vec::new();
+    for _ in 0..cfg.server.max_conns.max(1) {
+        let conn_queue = conn_queue.clone();
+        let svc = svc.clone();
+        let shutdown = shutdown.clone();
+        let points = points.clone();
+        handlers.push(std::thread::spawn(move || {
+            while let Some(batch) = conn_queue.pop_batch(1, POLL_INTERVAL) {
+                for stream in batch {
+                    handle_connection(stream, &svc, &points, &shutdown);
+                }
+            }
+        }));
+    }
+
+    let acceptor = {
+        let shutdown = shutdown.clone();
+        let conn_queue = conn_queue.clone();
+        std::thread::spawn(move || {
+            while !shutdown.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        // the listener is non-blocking; handlers use
+                        // blocking reads with a timeout. A full backlog
+                        // sheds the connection (drop = RST) instead of
+                        // blocking the acceptor, so shutdown can never
+                        // deadlock on a saturated handler pool.
+                        let _ = stream.set_nonblocking(false);
+                        if conn_queue.try_push(stream).is_err() {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => std::thread::sleep(POLL_INTERVAL),
+                }
+            }
+            conn_queue.close();
+        })
+    };
+
+    Runtime::Threaded {
+        acceptor: Some(acceptor),
+        handlers,
     }
 }
 
@@ -290,7 +405,7 @@ fn answer(
         return protocol::encode_error(None, "empty request");
     }
     match protocol::parse_request(line) {
-        Err(e) => protocol::encode_error(None, &format!("bad request: {e}")),
+        Err(e) => protocol::encode_error(e.req_id, &format!("bad request: {e}")),
         Ok(Request { req_id, body }) => match body {
             RequestBody::Points => protocol::encode_points(req_id, points),
             RequestBody::Shutdown => {

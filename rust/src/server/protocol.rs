@@ -12,6 +12,12 @@ use crate::search::Hit;
 
 /// Hard cap on one request/response line; longer frames are a protocol
 /// error (protects the server from unbounded buffering).
+///
+/// Note on integer width: ids and `req_id`s travel as JSON numbers,
+/// which this crate's [`crate::json`] (like most JSON stacks) carries
+/// as `f64` — values ≥ 2^53 lose precision on the wire. `Value::as_u64`
+/// rejects them server-side; clients must keep ids below 2^53 (the
+/// ROADMAP's binary-frame follow-up lifts this).
 pub const MAX_LINE_BYTES: usize = 8 << 20;
 
 /// A decoded request frame.
@@ -51,41 +57,65 @@ fn need<'v>(v: &'v Value, key: &str) -> Result<&'v Value, String> {
     v.get(key).ok_or_else(|| format!("missing field `{key}`"))
 }
 
+/// A rejected request line. Carries the `req_id` recovered from the
+/// frame (when the JSON parsed far enough to have one), so the error
+/// envelope can still correlate — a pipelined client must get a
+/// per-request error, not a connection-level failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestError {
+    /// the frame's correlation id, if it was recoverable
+    pub req_id: Option<u64>,
+    /// what was wrong with the frame
+    pub msg: String,
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
 /// Parse one request line.
-pub fn parse_request(line: &str) -> Result<Request, String> {
-    let v = json::parse(line.trim()).map_err(|e| format!("bad json: {e}"))?;
+pub fn parse_request(line: &str) -> Result<Request, RequestError> {
+    let v = json::parse(line.trim()).map_err(|e| RequestError {
+        req_id: None,
+        msg: format!("bad json: {e}"),
+    })?;
     let req_id = v.get("req_id").and_then(Value::as_u64);
-    let op = v
-        .get("op")
-        .and_then(Value::as_str)
-        .ok_or("missing string field `op`")?;
-    let body = match op {
-        "hash" => RequestBody::Op(Op::Hash {
-            samples: f32_row(need(&v, "samples")?)?,
-        }),
-        "insert" => RequestBody::Op(Op::Insert {
-            id: need(&v, "id")?.as_u64().ok_or("`id` must be a u64")?,
-            samples: f32_row(need(&v, "samples")?)?,
-        }),
-        "query" => RequestBody::Op(Op::Query {
-            samples: f32_row(need(&v, "samples")?)?,
-            k: need(&v, "k")?.as_usize().ok_or("`k` must be a usize")?,
-        }),
-        "remove" => RequestBody::Op(Op::Remove {
-            id: need(&v, "id")?.as_u64().ok_or("`id` must be a u64")?,
-        }),
-        "metrics" => RequestBody::Op(Op::Metrics),
-        "snapshot" => RequestBody::Op(Op::Snapshot {
-            path: need(&v, "path")?
-                .as_str()
-                .ok_or("`path` must be a string")?
-                .to_string(),
-        }),
-        "ping" => RequestBody::Op(Op::Ping),
-        "points" => RequestBody::Points,
-        "shutdown" => RequestBody::Shutdown,
-        other => return Err(format!("unknown op `{other}`")),
-    };
+    let body = (|| -> Result<RequestBody, String> {
+        let op = v
+            .get("op")
+            .and_then(Value::as_str)
+            .ok_or("missing string field `op`")?;
+        Ok(match op {
+            "hash" => RequestBody::Op(Op::Hash {
+                samples: f32_row(need(&v, "samples")?)?,
+            }),
+            "insert" => RequestBody::Op(Op::Insert {
+                id: need(&v, "id")?.as_u64().ok_or("`id` must be a u64")?,
+                samples: f32_row(need(&v, "samples")?)?,
+            }),
+            "query" => RequestBody::Op(Op::Query {
+                samples: f32_row(need(&v, "samples")?)?,
+                k: need(&v, "k")?.as_usize().ok_or("`k` must be a usize")?,
+            }),
+            "remove" => RequestBody::Op(Op::Remove {
+                id: need(&v, "id")?.as_u64().ok_or("`id` must be a u64")?,
+            }),
+            "metrics" => RequestBody::Op(Op::Metrics),
+            "snapshot" => RequestBody::Op(Op::Snapshot {
+                path: need(&v, "path")?
+                    .as_str()
+                    .ok_or("`path` must be a string")?
+                    .to_string(),
+            }),
+            "ping" => RequestBody::Op(Op::Ping),
+            "points" => RequestBody::Points,
+            "shutdown" => RequestBody::Shutdown,
+            other => return Err(format!("unknown op `{other}`")),
+        })
+    })()
+    .map_err(|msg| RequestError { req_id, msg })?;
     Ok(Request { req_id, body })
 }
 
@@ -429,6 +459,20 @@ mod tests {
         assert!(parse_request(r#"{"op":"insert","id":1}"#).is_err());
         assert!(parse_request(r#"{"op":"insert","id":-1,"samples":[]}"#).is_err());
         assert!(parse_request(r#"{"op":"query","samples":["x"],"k":1}"#).is_err());
+    }
+
+    #[test]
+    fn parse_errors_recover_req_id_when_json_is_valid() {
+        // field-validation failures keep the correlation id…
+        let e = parse_request(r#"{"op":"teleport","req_id":7}"#).unwrap_err();
+        assert_eq!(e.req_id, Some(7));
+        assert!(e.msg.contains("unknown op"), "{e}");
+        let e = parse_request(r#"{"op":"insert","id":1,"req_id":9}"#).unwrap_err();
+        assert_eq!(e.req_id, Some(9));
+        assert!(e.msg.contains("missing field"), "{e}");
+        // …but a frame that is not JSON at all has none to recover
+        let e = parse_request("not json").unwrap_err();
+        assert_eq!(e.req_id, None);
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! A minimal epoll reactor (Linux only) — the readiness layer under the
+//! event-loop server.
+//!
+//! The offline vendor set has no `libc`/`mio`, so this module declares
+//! the handful of C symbols it needs directly (they resolve against the
+//! libc every Rust binary on Linux already links) and wraps them in a
+//! safe, purpose-built API:
+//!
+//! * [`Poller`] — `epoll_create1` / `epoll_ctl` / `epoll_wait` with
+//!   per-fd `u64` tokens and level-triggered interest masks,
+//! * [`Waker`] — an `eventfd` registered in the poller so worker threads
+//!   can interrupt `epoll_wait` from outside the loop,
+//! * [`raise_nofile_limit`] — lift `RLIMIT_NOFILE`'s soft limit to the
+//!   hard limit, so one process can hold thousands of sockets (the whole
+//!   point of readiness-based I/O).
+
+#![allow(clippy::upper_case_acronyms)]
+
+use std::io;
+use std::os::fd::RawFd;
+use std::os::raw::{c_int, c_uint, c_void};
+use std::time::Duration;
+
+// ---------------------------------------------------------------- ffi
+
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(
+        epfd: c_int,
+        events: *mut EpollEvent,
+        maxevents: c_int,
+        timeout_ms: c_int,
+    ) -> c_int;
+    fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    fn close(fd: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    // the 64-bit variants exist on every glibc/musl target, so Rlimit's
+    // u64 fields match the ABI even on 32-bit Linux
+    fn getrlimit64(resource: c_int, rlim: *mut Rlimit) -> c_int;
+    fn setrlimit64(resource: c_int, rlim: *const Rlimit) -> c_int;
+}
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+
+const EFD_CLOEXEC: c_int = 0o2000000;
+const EFD_NONBLOCK: c_int = 0o4000;
+
+const RLIMIT_NOFILE: c_int = 7;
+
+#[repr(C)]
+struct Rlimit {
+    rlim_cur: u64,
+    rlim_max: u64,
+}
+
+/// Readiness interest / readiness result bits (subset of `EPOLL*`).
+pub mod event {
+    /// fd is readable (`EPOLLIN`)
+    pub const READ: u32 = 0x001;
+    /// fd is writable (`EPOLLOUT`)
+    pub const WRITE: u32 = 0x004;
+    /// error condition (`EPOLLERR`) — always reported, never requested
+    pub const ERROR: u32 = 0x008;
+    /// peer hung up (`EPOLLHUP`) — always reported, never requested
+    pub const HANGUP: u32 = 0x010;
+    /// peer closed its write side (`EPOLLRDHUP`)
+    pub const READ_HANGUP: u32 = 0x2000;
+}
+
+/// One readiness notification: which registration fired, and how.
+#[derive(Debug, Clone, Copy)]
+pub struct Readiness {
+    /// the token the fd was registered with
+    pub token: u64,
+    /// bitmask of [`event`] flags
+    pub events: u32,
+}
+
+impl Readiness {
+    /// Readable (or peer half-closed — a read will observe the EOF).
+    pub fn readable(&self) -> bool {
+        self.events & (event::READ | event::READ_HANGUP | event::HANGUP | event::ERROR) != 0
+    }
+
+    /// Writable.
+    pub fn writable(&self) -> bool {
+        self.events & (event::WRITE | event::HANGUP | event::ERROR) != 0
+    }
+}
+
+// ---------------------------------------------------------------- poller
+
+/// Level-triggered epoll instance. Registrations carry a caller-chosen
+/// `u64` token that comes back in each [`Readiness`].
+pub struct Poller {
+    epfd: RawFd,
+    buf: Vec<EpollEvent>,
+}
+
+impl Poller {
+    /// Create an epoll instance able to report up to `capacity` events
+    /// per [`Poller::wait`] call.
+    pub fn new(capacity: usize) -> io::Result<Self> {
+        let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self {
+            epfd,
+            buf: vec![EpollEvent { events: 0, data: 0 }; capacity.max(16)],
+        })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent {
+            events: interest,
+            data: token,
+        };
+        let arg = if op == EPOLL_CTL_DEL {
+            std::ptr::null_mut()
+        } else {
+            &mut ev as *mut EpollEvent
+        };
+        if unsafe { epoll_ctl(self.epfd, op, fd, arg) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` with the given interest mask ([`event`] bits).
+    pub fn register(&self, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, interest, token)
+    }
+
+    /// Change the interest mask of a registered fd.
+    pub fn modify(&self, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, interest, token)
+    }
+
+    /// Remove a registration (safe to call on an already-closed fd's
+    /// former number only before reuse — callers deregister first).
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block until at least one registration is ready or `timeout`
+    /// elapses; returns the readiness set (possibly empty on timeout).
+    pub fn wait(&mut self, timeout: Duration) -> io::Result<Vec<Readiness>> {
+        let ms = timeout.as_millis().min(i32::MAX as u128) as c_int;
+        let n =
+            unsafe { epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, ms) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(Vec::new());
+            }
+            return Err(e);
+        }
+        Ok(self.buf[..n as usize]
+            .iter()
+            .map(|ev| Readiness {
+                // copy out of the (possibly packed) ffi struct field by
+                // field; no references into it escape
+                token: { ev.data },
+                events: { ev.events },
+            })
+            .collect())
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe { close(self.epfd) };
+    }
+}
+
+// ---------------------------------------------------------------- waker
+
+/// Cross-thread wakeup for a [`Poller`]: an `eventfd` the loop registers
+/// for readability. Cloneable/shareable by `&` — `write(2)` is atomic.
+pub struct Waker {
+    fd: RawFd,
+}
+
+impl Waker {
+    /// Create the eventfd (non-blocking: a full counter never blocks the
+    /// waking thread).
+    pub fn new() -> io::Result<Self> {
+        let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self { fd })
+    }
+
+    /// The fd to register in the poller (read interest).
+    pub fn fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Wake the poller. Coalesces: many wakes before a drain count once.
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        // EAGAIN (counter at max) still leaves the fd readable — ignore
+        let _ = unsafe { write(self.fd, &one as *const u64 as *const c_void, 8) };
+    }
+
+    /// Drain the counter after the poller reported the fd readable.
+    pub fn drain(&self) {
+        let mut buf: u64 = 0;
+        let _ = unsafe { read(self.fd, &mut buf as *mut u64 as *mut c_void, 8) };
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+// ---------------------------------------------------------------- rlimit
+
+/// Raise the soft `RLIMIT_NOFILE` to the hard limit (the event loop's
+/// reason to exist is holding thousands of sockets; the traditional soft
+/// default of 1024 would cap it). Returns the resulting soft limit.
+pub fn raise_nofile_limit() -> io::Result<u64> {
+    let mut rl = Rlimit {
+        rlim_cur: 0,
+        rlim_max: 0,
+    };
+    if unsafe { getrlimit64(RLIMIT_NOFILE, &mut rl) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if rl.rlim_cur < rl.rlim_max {
+        let want = Rlimit {
+            rlim_cur: rl.rlim_max,
+            rlim_max: rl.rlim_max,
+        };
+        if unsafe { setrlimit64(RLIMIT_NOFILE, &want) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        return Ok(rl.rlim_max);
+    }
+    Ok(rl.rlim_cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn poller_reports_readable_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut poller = Poller::new(8).unwrap();
+        poller
+            .register(listener.as_raw_fd(), event::READ, 7)
+            .unwrap();
+        // nothing pending: times out empty
+        let quiet = poller.wait(Duration::from_millis(10)).unwrap();
+        assert!(quiet.iter().all(|r| r.token != 7));
+        // connect → listener becomes readable with our token
+        let mut client = TcpStream::connect(addr).unwrap();
+        let ready = poller.wait(Duration::from_secs(5)).unwrap();
+        assert!(ready.iter().any(|r| r.token == 7 && r.readable()));
+        let (mut accepted, _) = listener.accept().unwrap();
+        // a connected socket with empty send buffer is writable
+        poller
+            .register(accepted.as_raw_fd(), event::WRITE, 9)
+            .unwrap();
+        let ready = poller.wait(Duration::from_secs(5)).unwrap();
+        assert!(ready.iter().any(|r| r.token == 9 && r.writable()));
+        // swap interest to read; peer data wakes us
+        poller
+            .modify(accepted.as_raw_fd(), event::READ, 9)
+            .unwrap();
+        client.write_all(b"x").unwrap();
+        let ready = poller.wait(Duration::from_secs(5)).unwrap();
+        assert!(ready.iter().any(|r| r.token == 9 && r.readable()));
+        poller.deregister(accepted.as_raw_fd()).unwrap();
+        let _ = accepted.write_all(b"y");
+    }
+
+    #[test]
+    fn waker_crosses_threads() {
+        let mut poller = Poller::new(4).unwrap();
+        let waker = std::sync::Arc::new(Waker::new().unwrap());
+        poller.register(waker.fd(), event::READ, 1).unwrap();
+        let w2 = waker.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            w2.wake();
+            w2.wake(); // coalesces
+        });
+        let ready = poller.wait(Duration::from_secs(5)).unwrap();
+        assert!(ready.iter().any(|r| r.token == 1 && r.readable()));
+        waker.drain();
+        // drained: next wait times out
+        let quiet = poller.wait(Duration::from_millis(10)).unwrap();
+        assert!(quiet.is_empty());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn nofile_limit_can_be_raised() {
+        let soft = raise_nofile_limit().unwrap();
+        assert!(soft >= 1024);
+    }
+}

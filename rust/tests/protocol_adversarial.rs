@@ -1,0 +1,320 @@
+//! Adversarial wire-protocol tests: truncated frames, oversized lines,
+//! interleaved partial writes, invalid UTF-8, and unknown ops — the
+//! server must answer with typed error envelopes where the framing
+//! allows, never panic, and never leak connections.
+
+use funclsh::config::{IoMode, ServiceConfig};
+use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath};
+use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use funclsh::hashing::PStableHashBank;
+use funclsh::server::{protocol, Client, Server};
+use funclsh::util::rng::Xoshiro256pp;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn config(io_mode: IoMode) -> ServiceConfig {
+    let mut cfg = ServiceConfig {
+        dim: 16,
+        k: 2,
+        l: 4,
+        workers: 2,
+        max_batch: 16,
+        max_wait_us: 100,
+        ..Default::default()
+    };
+    cfg.server.port = 0;
+    cfg.server.max_conns = 8;
+    cfg.server.io_mode = io_mode;
+    cfg
+}
+
+fn boot(cfg: &ServiceConfig) -> Server {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+    let points = emb.sample_points().to_vec();
+    let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+    let path: Arc<dyn HashPath> = Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank)));
+    let svc = Arc::new(Coordinator::start(cfg, path));
+    Server::start(cfg, svc, points).expect("bind loopback")
+}
+
+fn finish(server: Server) {
+    let (svc, _) = server.shutdown();
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+}
+
+fn connect(server: &Server) -> (BufReader<TcpStream>, TcpStream) {
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    (BufReader::new(stream.try_clone().unwrap()), stream)
+}
+
+fn read_reply(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line
+}
+
+/// The server keeps serving fresh connections (the real "did it
+/// survive" check after each hostile exchange).
+fn assert_alive(server: &Server) {
+    let mut probe = Client::connect(server.addr()).expect("server still accepts");
+    probe.ping().expect("server still answers");
+}
+
+#[test]
+fn truncated_frame_gets_error_then_close() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        let (mut reader, mut writer) = connect(&server);
+        // a syntactically broken frame cut off before its newline, then
+        // a clean half-close: the tail is still a frame and must be
+        // answered with a typed error before EOF
+        writer.write_all(br#"{"op":"ping","req_id"#).unwrap();
+        writer.shutdown(std::net::Shutdown::Write).unwrap();
+        let reply = read_reply(&mut reader);
+        assert!(reply.contains("\"ok\":false"), "{io_mode:?}: {reply}");
+        assert!(reply.contains("bad request"), "{io_mode:?}: {reply}");
+        // then EOF, not a hang
+        let mut rest = String::new();
+        assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "{io_mode:?}");
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+#[test]
+fn interleaved_partial_writes_reassemble() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        let (mut reader, mut writer) = connect(&server);
+        // two frames dribbled out in five chunks with pauses: the
+        // incremental parser must reassemble both
+        let frames = b"{\"op\":\"ping\",\"req_id\":1}\n{\"op\":\"ping\",\"req_id\":2}\n";
+        for chunk in frames.chunks(11) {
+            writer.write_all(chunk).unwrap();
+            writer.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let r1 = read_reply(&mut reader);
+        assert!(r1.contains("pong") && r1.contains("\"req_id\":1"), "{io_mode:?}: {r1}");
+        let r2 = read_reply(&mut reader);
+        assert!(r2.contains("pong") && r2.contains("\"req_id\":2"), "{io_mode:?}: {r2}");
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+#[test]
+fn oversized_line_rejected_without_killing_server() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        let (mut reader, mut writer) = connect(&server);
+        // stream > MAX_LINE_BYTES without ever sending the newline
+        let chunk = vec![b'a'; 64 * 1024];
+        let mut sent = 0usize;
+        let mut write_err = false;
+        while sent <= protocol::MAX_LINE_BYTES + chunk.len() {
+            match writer.write_all(&chunk) {
+                Ok(()) => sent += chunk.len(),
+                Err(_) => {
+                    // server already slammed the door mid-stream: fine
+                    write_err = true;
+                    break;
+                }
+            }
+        }
+        // outcome: either the typed "too long" error arrives before the
+        // close, or the abort raced our writes and the connection just
+        // died — both are acceptable; a hang or a dead server is not
+        let mut reply = String::new();
+        match reader.read_line(&mut reply) {
+            Ok(0) => {} // closed before we could read the envelope
+            Ok(_) => {
+                assert!(
+                    reply.contains("request line too long"),
+                    "{io_mode:?}: {reply}"
+                );
+            }
+            Err(e) => {
+                assert!(
+                    write_err
+                        || e.kind() == ErrorKind::ConnectionReset
+                        || e.kind() == ErrorKind::BrokenPipe,
+                    "{io_mode:?}: unexpected {e:?}"
+                );
+            }
+        }
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+#[test]
+fn unknown_and_malformed_ops_get_typed_errors() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        let (mut reader, mut writer) = connect(&server);
+        let mut ask = |line: &[u8]| -> String {
+            writer.write_all(line).unwrap();
+            writer.write_all(b"\n").unwrap();
+            writer.flush().unwrap();
+            read_reply(&mut reader)
+        };
+        for (frame, needle) in [
+            (&b"{\"op\":\"teleport\"}"[..], "unknown op"),
+            (&b"not json at all"[..], "bad request"),
+            (&b"{}"[..], "bad request"),
+            (&b""[..], "empty request"),
+            (&b"   "[..], "empty request"),
+            (&b"{\"op\":\"insert\",\"id\":1}"[..], "missing field"),
+            (&b"{\"op\":\"query\",\"samples\":[\"x\"],\"k\":1}"[..], "numbers"),
+            (&b"{\"op\":\"insert\",\"id\":-1,\"samples\":[]}"[..], "u64"),
+        ] {
+            let reply = ask(frame);
+            assert!(reply.contains("\"ok\":false"), "{io_mode:?} {frame:?}: {reply}");
+            assert!(reply.contains(needle), "{io_mode:?} {frame:?}: {reply}");
+        }
+        // op-level failures echo the req_id in the error envelope
+        let reply = ask(b"{\"op\":\"remove\",\"id\":424242,\"req_id\":99}");
+        assert!(reply.contains("\"ok\":false"), "{io_mode:?}: {reply}");
+        assert!(reply.contains("\"req_id\":99"), "{io_mode:?}: {reply}");
+        // …and so do parse-level failures, when the frame's JSON carried
+        // one (a pipelined client needs a per-request error, not a
+        // connection-level failure)
+        let reply = ask(b"{\"op\":\"teleport\",\"req_id\":55}");
+        assert!(reply.contains("\"ok\":false"), "{io_mode:?}: {reply}");
+        assert!(reply.contains("\"req_id\":55"), "{io_mode:?}: {reply}");
+        let reply = ask(b"{\"op\":\"insert\",\"id\":1,\"req_id\":56}");
+        assert!(reply.contains("\"req_id\":56"), "{io_mode:?}: {reply}");
+        // the connection survived all of it
+        let reply = ask(b"{\"op\":\"ping\",\"req_id\":100}");
+        assert!(reply.contains("pong"), "{io_mode:?}: {reply}");
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+/// Event-loop specific: invalid UTF-8 inside a newline-terminated frame
+/// is answered with a typed error and the connection stays usable (the
+/// byte-oriented framing survives it).
+#[cfg(target_os = "linux")]
+#[test]
+fn invalid_utf8_frame_answered_and_connection_survives() {
+    let server = boot(&config(IoMode::EventLoop));
+    let (mut reader, mut writer) = connect(&server);
+    writer.write_all(&[0xff, 0xfe, 0x80, b'\n']).unwrap();
+    writer.flush().unwrap();
+    let reply = read_reply(&mut reader);
+    assert!(reply.contains("\"ok\":false"), "{reply}");
+    assert!(reply.contains("utf-8"), "{reply}");
+    // same connection still answers
+    writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    writer.flush().unwrap();
+    let reply = read_reply(&mut reader);
+    assert!(reply.contains("pong"), "{reply}");
+    assert_alive(&server);
+    finish(server);
+}
+
+/// Event-loop specific: responses come back in request order even when
+/// coordinator-routed ops and inline-answered errors are mixed on one
+/// connection (the per-connection reorder buffer at work).
+#[cfg(target_os = "linux")]
+#[test]
+fn mixed_errors_and_ops_stay_in_request_order() {
+    let server = boot(&config(IoMode::EventLoop));
+    let (mut reader, mut writer) = connect(&server);
+    // ping goes through the worker pool; the two garbage frames are
+    // answered inline by the loop — their replies must still wait for
+    // the earlier ping
+    writer
+        .write_all(b"{\"op\":\"ping\",\"req_id\":1}\ngarbage\n")
+        .unwrap();
+    writer
+        .write_all(b"{\"op\":\"ping\",\"req_id\":2}\nmore garbage\n")
+        .unwrap();
+    writer.flush().unwrap();
+    let r1 = read_reply(&mut reader);
+    assert!(r1.contains("pong") && r1.contains("\"req_id\":1"), "{r1}");
+    let r2 = read_reply(&mut reader);
+    assert!(r2.contains("\"ok\":false"), "{r2}");
+    let r3 = read_reply(&mut reader);
+    assert!(r3.contains("pong") && r3.contains("\"req_id\":2"), "{r3}");
+    let r4 = read_reply(&mut reader);
+    assert!(r4.contains("\"ok\":false"), "{r4}");
+    assert_alive(&server);
+    finish(server);
+}
+
+#[test]
+fn hostile_connections_do_not_leak() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        // a wave of connections that each misbehave and disconnect
+        for i in 0..12 {
+            let (mut reader, mut writer) = connect(&server);
+            match i % 4 {
+                0 => {
+                    let _ = writer.write_all(b"\xff\xff\xff\n");
+                }
+                1 => {
+                    let _ = writer.write_all(b"{\"op\":");
+                }
+                2 => {
+                    let _ = writer.write_all(b"nope\n");
+                    let _ = read_reply(&mut reader);
+                }
+                _ => {} // connect-and-vanish
+            }
+            drop(writer);
+            drop(reader);
+        }
+        // every hostile connection must eventually be accounted closed;
+        // only the probe itself stays open
+        let mut probe = Client::connect(server.addr()).unwrap();
+        let t0 = Instant::now();
+        loop {
+            let m = probe.metrics().unwrap();
+            let opened = m.get("conns_opened").unwrap().as_usize().unwrap();
+            let closed = m.get("conns_closed").unwrap().as_usize().unwrap();
+            if opened >= 13 && opened - closed == 1 {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "{io_mode:?}: leak? opened={opened} closed={closed}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+/// A client that opens a connection and writes nothing must not wedge a
+/// handler; meanwhile a huge-but-legal frame right at the boundary is
+/// still served.
+#[test]
+fn idle_connection_and_max_legal_frame() {
+    let server = boot(&config(IoMode::EventLoop));
+    // park an idle connection
+    let (_idle_reader, _idle_writer) = connect(&server);
+    // a legal frame close to the cap: pad with whitespace, which the
+    // parser trims
+    let (mut reader, mut writer) = connect(&server);
+    let pad = vec![b' '; 1024 * 1024];
+    writer.write_all(&pad).unwrap();
+    writer.write_all(b"{\"op\":\"ping\",\"req_id\":5}\n").unwrap();
+    writer.flush().unwrap();
+    let reply = read_reply(&mut reader);
+    assert!(reply.contains("pong") && reply.contains("\"req_id\":5"), "{reply}");
+    assert_alive(&server);
+    finish(server);
+}

@@ -1,14 +1,15 @@
 //! Integration tests of the TCP serving layer: boot the server on an
-//! ephemeral loopback port, drive it from concurrent client threads,
-//! and hold it to the same answers as a direct in-process coordinator
-//! built from the identical seed (recall parity).
+//! ephemeral loopback port (event-loop runtime by default, threaded as a
+//! regression target), drive it from concurrent — and pipelined — client
+//! threads, and hold it to the same answers as a direct in-process
+//! coordinator built from the identical seed (recall parity).
 
-use funclsh::config::ServiceConfig;
+use funclsh::config::{IoMode, ServiceConfig};
 use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath, Op, Response};
 use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
 use funclsh::functions::{Function1D, Sine};
 use funclsh::hashing::PStableHashBank;
-use funclsh::server::{run_load, Client, LoadConfig, Server};
+use funclsh::server::{run_load, Client, LoadConfig, PipelinedClient, Server};
 use funclsh::util::rng::Xoshiro256pp;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -28,6 +29,12 @@ fn test_config() -> ServiceConfig {
     };
     cfg.server.port = 0; // ephemeral
     cfg.server.max_conns = 16;
+    cfg
+}
+
+fn threaded_config() -> ServiceConfig {
+    let mut cfg = test_config();
+    cfg.server.io_mode = IoMode::Threaded;
     cfg
 }
 
@@ -223,6 +230,7 @@ fn load_generator_reports_sane_numbers() {
     let load = LoadConfig {
         threads: 8,
         ops_per_thread: 40,
+        pipeline_depth: 4,
         insert_fraction: 0.5,
         query_fraction: 0.3,
         k: 5,
@@ -320,4 +328,221 @@ fn serve_binary_with_ephemeral_port_serves_load() {
     probe.shutdown_server().unwrap();
     let status = child.wait().unwrap();
     assert!(status.success());
+}
+
+/// The PR 1 thread-pool runtime must keep working as the portable
+/// fallback behind `[server] io_mode = "threaded"`.
+#[test]
+fn threaded_mode_still_serves() {
+    let cfg = threaded_config();
+    let (server, points) = boot(&cfg);
+    assert_eq!(server.io_mode(), IoMode::Threaded);
+    let mut client = Client::connect(server.addr()).unwrap();
+    for id in 0..20u64 {
+        client.insert(id, &sample_sine(0.1 * id as f64, &points)).unwrap();
+    }
+    assert_eq!(client.ping().unwrap(), 20);
+    let hits = client.query(&sample_sine(0.5, &points), 5).unwrap();
+    assert!(!hits.is_empty());
+    finish(server);
+}
+
+/// Pipelined clients keep a window of frames in flight; the server
+/// answers in request order and echoes every `req_id`, and the answers
+/// are identical to the blocking client's.
+#[test]
+fn pipelined_client_orders_and_correlates() {
+    let cfg = test_config();
+    let (server, points) = boot(&cfg);
+    let row = sample_sine(1.25, &points);
+    let mut blocking = Client::connect(server.addr()).unwrap();
+    let want_sig = blocking.hash(&row).unwrap();
+
+    let mut client = PipelinedClient::connect(server.addr(), 8).unwrap();
+    assert_eq!(client.depth(), 8);
+    let mut completions = Vec::new();
+    for _ in 0..40 {
+        completions.extend(client.send_hash(&row).unwrap());
+        assert!(client.in_flight() <= 8);
+    }
+    completions.extend(client.drain().unwrap());
+    assert_eq!(client.in_flight(), 0);
+    assert_eq!(completions.len(), 40);
+    // in-order responses: completion req_ids are strictly increasing
+    for pair in completions.windows(2) {
+        assert!(pair[0].req_id < pair[1].req_id);
+    }
+    for c in &completions {
+        match c.result.as_ref().expect("hash ok") {
+            funclsh::server::protocol::Reply::Signature(s) => assert_eq!(s, &want_sig),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    finish(server);
+}
+
+/// The acceptance criterion: ≥ 512 concurrent pipelined connections
+/// against the event-loop runtime on loopback — far past the threaded
+/// pool's `max_conns` ceiling — with wire-vs-in-process hash parity.
+#[cfg(target_os = "linux")]
+#[test]
+fn event_loop_serves_512_concurrent_pipelined_connections() {
+    const THREADS: usize = 32;
+    const CONNS_PER_THREAD: usize = 16; // 512 connections total
+    const DEPTH: usize = 4;
+    const ROUNDS: usize = 8; // 4 inserts + 4 hashes per connection
+
+    let soft = funclsh::server::raise_nofile_limit().unwrap_or(0);
+    if soft < 1200 {
+        eprintln!("skipping 512-connection test: fd limit {soft} too low");
+        return;
+    }
+
+    let mut cfg = test_config();
+    cfg.workers = 4;
+    cfg.max_batch = 64;
+    cfg.queue_depth = 4096;
+    assert_eq!(cfg.server.io_mode, IoMode::EventLoop);
+    let (server, points) = boot(&cfg);
+    assert_eq!(server.io_mode(), IoMode::EventLoop);
+    let addr = server.addr();
+
+    // every thread holds its connections open (and in flight) across
+    // this barrier, so all 512 are concurrently established before any
+    // drain begins
+    let barrier = Arc::new(std::sync::Barrier::new(THREADS));
+    let points_arc = Arc::new(points.clone());
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let barrier = barrier.clone();
+        let points = points_arc.clone();
+        handles.push(std::thread::spawn(move || -> (usize, usize) {
+            let mut conns: Vec<PipelinedClient> = (0..CONNS_PER_THREAD)
+                .map(|_| PipelinedClient::connect(addr, DEPTH).expect("connect"))
+                .collect();
+            let mut harvested = Vec::new();
+            for round in 0..ROUNDS {
+                for (c_idx, conn) in conns.iter_mut().enumerate() {
+                    let conn_no = (t * CONNS_PER_THREAD + c_idx) as u64;
+                    let phase = (conn_no as f64) * 0.01 + round as f64 * 0.1;
+                    let row = sample_sine(phase, &points);
+                    let done = if round % 2 == 0 {
+                        let id = conn_no * 10_000 + round as u64;
+                        conn.send_insert(id, &row).expect("send_insert")
+                    } else {
+                        conn.send_hash(&row).expect("send_hash")
+                    };
+                    harvested.extend(done);
+                }
+            }
+            for conn in conns.iter_mut() {
+                conn.flush().expect("flush");
+            }
+            barrier.wait(); // all 512 connections now open + in flight
+            for conn in conns.iter_mut() {
+                harvested.extend(conn.drain().expect("drain"));
+            }
+            let ok = harvested.iter().filter(|c| c.result.is_ok()).count();
+            (ok, harvested.len())
+        }));
+    }
+    let (mut ok_total, mut total) = (0usize, 0usize);
+    for h in handles {
+        let (ok, n) = h.join().expect("client thread");
+        ok_total += ok;
+        total += n;
+    }
+    let expected_ops = THREADS * CONNS_PER_THREAD * ROUNDS;
+    assert_eq!(total, expected_ops);
+    assert_eq!(ok_total, expected_ops, "every pipelined op must succeed");
+
+    let mut probe = Client::connect(addr).unwrap();
+    let inserted = (THREADS * CONNS_PER_THREAD * ROUNDS / 2) as u64;
+    assert_eq!(probe.ping().unwrap(), inserted);
+    let m = probe.metrics().unwrap();
+    assert!(
+        m.get("conns_opened").unwrap().as_usize().unwrap() >= THREADS * CONNS_PER_THREAD,
+        "{m:?}"
+    );
+    assert_eq!(m.get("errors").unwrap().as_usize(), Some(0));
+
+    // wire-vs-in-process parity survives the concurrency
+    let (twin_path, twin_points) = make_path(&cfg);
+    assert_eq!(twin_points, points);
+    let twin = Coordinator::start(&cfg, twin_path);
+    let row = sample_sine(2.71, &points);
+    let wire_sig = probe.hash(&row).unwrap();
+    match twin.submit(Op::Hash { samples: row }) {
+        Response::Signature(s) => assert_eq!(s, wire_sig),
+        other => panic!("unexpected {other:?}"),
+    }
+    twin.shutdown();
+    finish(server);
+}
+
+/// Satellite: a `shutdown` issued while pipelined requests are in flight
+/// from several clients — every in-flight response arrives before the
+/// connections close, and the shutdown snapshot is a valid FLSH1 file.
+#[cfg(target_os = "linux")]
+#[test]
+fn graceful_shutdown_completes_in_flight_pipelined_requests() {
+    const CLIENTS: usize = 4;
+    const WINDOW: usize = 16;
+
+    let mut cfg = test_config();
+    let snap = std::env::temp_dir().join(format!(
+        "funclsh-inflight-{}.flsh",
+        std::process::id()
+    ));
+    cfg.server.snapshot_path = snap.to_str().unwrap().to_string();
+    let (server, points) = boot(&cfg);
+    assert_eq!(server.io_mode(), IoMode::EventLoop);
+
+    // fill every client's window without reading a single response
+    let mut clients: Vec<PipelinedClient> = (0..CLIENTS)
+        .map(|_| PipelinedClient::connect(server.addr(), WINDOW).unwrap())
+        .collect();
+    for (c, client) in clients.iter_mut().enumerate() {
+        for i in 0..WINDOW as u64 {
+            let id = c as u64 * 100 + i;
+            let row = sample_sine(0.05 * id as f64, &points);
+            let done = client.send_insert(id, &row).unwrap();
+            assert!(done.is_empty(), "window must not force reads yet");
+        }
+        client.flush().unwrap();
+        assert_eq!(client.in_flight(), WINDOW);
+    }
+
+    // wait until the server has admitted all of them to the coordinator
+    // (so they are genuinely in flight), then pull the trigger
+    let mut probe = Client::connect(server.addr()).unwrap();
+    let want = (CLIENTS * WINDOW) as u64;
+    let t0 = Instant::now();
+    loop {
+        let m = probe.metrics().unwrap();
+        if m.get("inserts").unwrap().as_usize().unwrap() as u64 >= want {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "inserts not admitted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    probe.shutdown_server().unwrap();
+
+    // every in-flight response arrives before the close
+    for (c, client) in clients.iter_mut().enumerate() {
+        let done = client.drain().expect("drain after shutdown");
+        assert_eq!(done.len(), WINDOW, "client {c} lost in-flight responses");
+        assert!(done.iter().all(|d| d.result.is_ok()), "client {c}: {done:?}");
+    }
+
+    let (svc, snapshot) = server.shutdown();
+    let bytes = snapshot.expect("snapshot configured").expect("snapshot ok");
+    let data = std::fs::read(&snap).unwrap();
+    assert_eq!(bytes, data.len() as u64);
+    let idx = funclsh::lsh::ShardedIndex::load(&mut data.as_slice()).unwrap();
+    assert_eq!(idx.len(), CLIENTS * WINDOW);
+    let _ = std::fs::remove_file(&snap);
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
 }

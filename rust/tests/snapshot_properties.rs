@@ -1,0 +1,180 @@
+//! Property tests of the `FLSH1` snapshot format (via the
+//! `util/proptest` mini-harness): encode→decode equality across random
+//! shard counts / index shapes / corpus sizes, and corrupted-header /
+//! truncated-body cases that must surface as the typed `io::Error`s the
+//! restore path promises — never a panic or an allocation blow-up.
+
+use funclsh::lsh::{IndexConfig, ShardedIndex};
+use funclsh::util::proptest::{check, Gen};
+use std::collections::HashSet;
+use std::io::ErrorKind;
+
+/// A random sharded index plus the (id, signature) pairs inside it.
+fn random_index(g: &mut Gen) -> (ShardedIndex, Vec<(u64, Vec<i32>)>) {
+    let k = g.usize_in(1..5);
+    let l = g.usize_in(1..6);
+    let shards = g.usize_in(1..5);
+    let idx = ShardedIndex::new(IndexConfig::new(k, l), shards);
+    let n = g.usize_in(0..100);
+    let mut used = HashSet::new();
+    let mut entries = Vec::new();
+    for _ in 0..n {
+        let id = g.u64() % 10_000;
+        if !used.insert(id) {
+            continue;
+        }
+        let sig: Vec<i32> = (0..k * l).map(|_| g.usize_in(0..15) as i32 - 7).collect();
+        idx.insert(id, &sig);
+        entries.push((id, sig));
+    }
+    (idx, entries)
+}
+
+fn encode(idx: &ShardedIndex) -> Vec<u8> {
+    let mut buf = Vec::new();
+    idx.save(&mut buf).expect("in-memory save");
+    buf
+}
+
+#[test]
+fn roundtrip_equality_across_shapes() {
+    check(40, |g| {
+        let (idx, entries) = random_index(g);
+        let buf = encode(&idx);
+        let restored = ShardedIndex::load(&mut buf.as_slice())
+            .unwrap_or_else(|e| panic!("seed {}: {e}", g.seed));
+        assert_eq!(restored.len(), idx.len(), "seed {}", g.seed);
+        assert_eq!(restored.num_shards(), idx.num_shards(), "seed {}", g.seed);
+        assert_eq!(restored.config(), idx.config(), "seed {}", g.seed);
+        for (id, sig) in &entries {
+            let mut a = idx.query(sig);
+            let mut b = restored.query(sig);
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "seed {} id {id}", g.seed);
+            assert!(b.contains(id), "seed {} id {id}", g.seed);
+            // multi-probe answers survive the roundtrip too
+            let mut ap = idx.query_multiprobe(sig, 1);
+            let mut bp = restored.query_multiprobe(sig, 1);
+            ap.sort_unstable();
+            bp.sort_unstable();
+            assert_eq!(ap, bp, "seed {} id {id}", g.seed);
+        }
+    });
+}
+
+#[test]
+fn every_strict_prefix_is_a_typed_error() {
+    check(30, |g| {
+        let (idx, _) = random_index(g);
+        let buf = encode(&idx);
+        // a handful of random cuts plus the always-nasty boundaries
+        let mut cuts: Vec<usize> = (0..8).map(|_| g.usize_in(0..buf.len())).collect();
+        cuts.extend([0, 1, 4, 5, buf.len().saturating_sub(1)]);
+        for m in cuts {
+            let m = m.min(buf.len() - 1);
+            let e = ShardedIndex::load(&mut &buf[..m])
+                .expect_err(&format!("seed {}: prefix {m}/{} must fail", g.seed, buf.len()));
+            assert!(
+                e.kind() == ErrorKind::UnexpectedEof || e.kind() == ErrorKind::InvalidData,
+                "seed {} cut {m}: kind {:?}",
+                g.seed,
+                e.kind()
+            );
+            assert!(
+                e.to_string().contains("FLSH1"),
+                "seed {} cut {m}: {e}",
+                g.seed
+            );
+        }
+    });
+}
+
+#[test]
+fn corrupted_magic_is_invalid_data() {
+    check(30, |g| {
+        let (idx, _) = random_index(g);
+        let mut buf = encode(&idx);
+        // flip one of the 5 magic bytes to a random different value
+        let pos = g.usize_in(0..5);
+        let old = buf[pos];
+        let new = (old.wrapping_add(1 + (g.u64() % 255) as u8)).max(1);
+        if new == old {
+            return;
+        }
+        buf[pos] = new;
+        let e = ShardedIndex::load(&mut buf.as_slice())
+            .expect_err(&format!("seed {}: corrupt magic must fail", g.seed));
+        assert_eq!(e.kind(), ErrorKind::InvalidData, "seed {}", g.seed);
+        let msg = e.to_string();
+        assert!(
+            msg.contains("bad magic") || msg.contains("unsupported snapshot version"),
+            "seed {}: {msg}",
+            g.seed
+        );
+    });
+}
+
+#[test]
+fn implausible_header_counts_rejected_before_allocation() {
+    check(30, |g| {
+        let (idx, _) = random_index(g);
+        let mut buf = encode(&idx);
+        // stomp one of the three header u64s (shard count, k, l) with a
+        // hostile magnitude; the loader must refuse without sizing any
+        // allocation from it
+        let field = g.usize_in(0..3);
+        let huge: u64 = (1 << 40) + g.u64() % (1 << 20);
+        buf[5 + field * 8..5 + (field + 1) * 8].copy_from_slice(&huge.to_le_bytes());
+        let e = ShardedIndex::load(&mut buf.as_slice())
+            .expect_err(&format!("seed {}: hostile header must fail", g.seed));
+        assert_eq!(e.kind(), ErrorKind::InvalidData, "seed {}: {e}", g.seed);
+        assert!(e.to_string().contains("implausible"), "seed {}: {e}", g.seed);
+    });
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    check(60, |g| {
+        let mut junk: Vec<u8> = g.vec(0..200, |g| (g.u64() & 0xFF) as u8);
+        // anything not starting with the exact magic must be an error;
+        // make sure we are in that regime
+        if junk.len() >= 5 && &junk[..5] == b"FLSH1" {
+            junk[0] = b'X';
+        }
+        assert!(
+            ShardedIndex::load(&mut junk.as_slice()).is_err(),
+            "seed {}",
+            g.seed
+        );
+    });
+}
+
+#[test]
+fn hostile_bucket_and_id_counts_are_typed_errors() {
+    // hand-built bodies with attacker-controlled counts (deterministic
+    // companions to the random cases above)
+    let mut bad = Vec::new();
+    bad.extend_from_slice(b"FLSH1");
+    for v in [1u64, 1, 1] {
+        bad.extend_from_slice(&v.to_le_bytes()); // 1 shard, k=1, l=1
+    }
+    bad.extend_from_slice(&0u64.to_le_bytes()); // shard len
+    bad.extend_from_slice(&(u64::MAX / 2).to_le_bytes()); // bucket count
+    let e = ShardedIndex::load(&mut bad.as_slice()).unwrap_err();
+    assert_eq!(e.kind(), ErrorKind::InvalidData);
+    assert!(e.to_string().contains("implausible bucket count"), "{e}");
+
+    let mut bad = Vec::new();
+    bad.extend_from_slice(b"FLSH1");
+    for v in [1u64, 1, 1] {
+        bad.extend_from_slice(&v.to_le_bytes());
+    }
+    bad.extend_from_slice(&0u64.to_le_bytes()); // shard len
+    bad.extend_from_slice(&1u64.to_le_bytes()); // 1 bucket
+    bad.extend_from_slice(&0i32.to_le_bytes()); // key
+    bad.extend_from_slice(&u64::MAX.to_le_bytes()); // id count
+    let e = ShardedIndex::load(&mut bad.as_slice()).unwrap_err();
+    assert_eq!(e.kind(), ErrorKind::InvalidData);
+    assert!(e.to_string().contains("implausible id count"), "{e}");
+}
