@@ -1,25 +1,21 @@
 //! Bench: the request-path hot spot — `samples → signature` throughput
-//! across backends (reference CPU, folded CPU, PJRT/XLA pipeline) and
-//! batch sizes, plus the DCT fast-path ablation. This is the §Perf
-//! workhorse: EXPERIMENTS.md §Perf records its numbers before/after each
-//! optimization.
+//! across backends (reference CPU, seed scalar fold, blocked f32 kernel,
+//! PJRT/XLA pipeline) and batch sizes, plus the DCT fast-path ablation.
+//! This is the §Perf workhorse: EXPERIMENTS.md §Perf records its numbers
+//! before/after each optimization, and `funclsh bench-hash` runs the
+//! structured seed-vs-new `{N, K, B}` grid (`bench::hashbench`) that
+//! emits the `BENCH_hashpath.json` perf trajectory.
 
+use funclsh::bench::hashbench::{self, random_rows};
 use funclsh::bench::Bench;
 use funclsh::chebyshev::{dct2_naive, fft::dct2_fft};
-use funclsh::coordinator::{CpuHashPath, FoldedHashPath, HashPath};
+use funclsh::coordinator::{CpuHashPath, FoldedHashPath, HashPath, Signatures};
 use funclsh::embedding::{ChebyshevEmbedder, Interval, MonteCarloEmbedder};
 use funclsh::hashing::PStableHashBank;
 use funclsh::runtime::pjrt_path::PjrtHashPath;
-use funclsh::util::rng::{Rng64, Xoshiro256pp};
+use funclsh::util::rng::Xoshiro256pp;
 use std::hint::black_box;
 use std::path::Path;
-
-fn random_rows(n: usize, count: usize, seed: u64) -> Vec<Vec<f32>> {
-    let mut rng = Xoshiro256pp::seed_from_u64(seed);
-    (0..count)
-        .map(|_| (0..n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect())
-        .collect()
-}
 
 fn main() {
     let mut b = Bench::new();
@@ -39,13 +35,18 @@ fn main() {
     let cheb_folded =
         FoldedHashPath::new(Box::new(cheb.clone()), &proj_rows, bank.offsets(), bank.r());
 
+    let mut sigs = Signatures::new(k);
     for &batch in &[1usize, 16, 128, 512] {
         let rows = random_rows(n, batch, batch as u64);
         b.throughput_case(&format!("hash/cpu-reference/b{batch}"), batch as f64, || {
             black_box(reference.hash_rows(black_box(&rows)).unwrap());
         });
-        b.throughput_case(&format!("hash/cpu-folded/b{batch}"), batch as f64, || {
-            black_box(folded.hash_rows(black_box(&rows)).unwrap());
+        b.throughput_case(&format!("hash/cpu-scalar/b{batch}"), batch as f64, || {
+            black_box(folded.hash_rows_scalar(black_box(&rows)).unwrap());
+        });
+        b.throughput_case(&format!("hash/cpu-blocked/b{batch}"), batch as f64, || {
+            folded.hash_rows_into(black_box(&rows), &mut sigs).unwrap();
+            black_box(sigs.as_slice());
         });
     }
     // chebyshev embedding ablation: embed-then-hash vs folded matmul
@@ -111,4 +112,10 @@ fn main() {
         });
     }
     println!("\n{}", b.to_csv());
+
+    // the structured seed-vs-new grid (same code path as `funclsh
+    // bench-hash --quick`); prints its JSON report but does not write
+    // the trajectory file — that is the CLI's job
+    let report = hashbench::run(&hashbench::HashBenchOptions { quick: true });
+    println!("\n{}", report.to_json());
 }

@@ -1,0 +1,346 @@
+//! The `bench-hash` grid: seed-vs-new hot-path throughput, recorded as a
+//! JSON trajectory file so later PRs have numbers to regress against.
+//!
+//! Two comparisons, both against *reimplementations of the seed code*
+//! (kept verbatim here, so the baseline cannot silently improve):
+//!
+//! * **Kernel** — rows/s of the seed scalar f64 row-at-a-time matmul
+//!   ([`FoldedHashPath::hash_rows_scalar`]) vs the blocked/threaded f32
+//!   kernel ([`HashPath::hash_rows_into`]) across `{N, K, B}`.
+//! * **Index** — inserts/s and (multi-probe) queries/s of the seed-era
+//!   index model (`Box<[i32]>` keys under SipHash, `HashSet` dedup,
+//!   allocating perturbation lists) vs the fingerprint-keyed
+//!   [`LshIndex`] with reused [`QueryScratch`].
+//!
+//! `funclsh bench-hash [--quick] [--out F]` runs the grid and writes the
+//! report (default `BENCH_hashpath.json`); `--quick` is the CI smoke
+//! grid. Case lines stream to stdout as they finish.
+
+use crate::bench::{Bench, BenchConfig};
+use crate::coordinator::{FoldedHashPath, HashPath, Signatures};
+use crate::embedding::{Interval, MonteCarloEmbedder};
+use crate::hashing::PStableHashBank;
+use crate::json::{self, Value};
+use crate::lsh::{IndexConfig, LshIndex, QueryScratch};
+use crate::util::rng::{Rng64, Xoshiro256pp};
+use std::collections::{HashMap, HashSet};
+use std::hint::black_box;
+
+/// Options of one `bench-hash` run.
+pub struct HashBenchOptions {
+    /// the CI smoke grid (fewer shapes/batches); always includes the
+    /// acceptance shape `N=256, K=128, B=64`
+    pub quick: bool,
+}
+
+/// The seed `LshIndex`, reimplemented verbatim as the bench baseline:
+/// `Box<[i32]>` bucket keys under the default SipHash, `HashSet`-deduped
+/// queries, and clone-heavy multi-probe perturbation lists.
+struct SeedIndex {
+    k: usize,
+    tables: Vec<HashMap<Box<[i32]>, Vec<u64>>>,
+}
+
+impl SeedIndex {
+    fn new(k: usize, l: usize) -> Self {
+        Self {
+            k,
+            tables: (0..l).map(|_| HashMap::new()).collect(),
+        }
+    }
+
+    fn insert(&mut self, id: u64, signature: &[i32]) {
+        for (table, key) in self.tables.iter_mut().zip(signature.chunks_exact(self.k)) {
+            table.entry(key.into()).or_default().push(id);
+        }
+    }
+
+    fn query(&self, signature: &[i32]) -> Vec<u64> {
+        let mut seen = HashSet::new();
+        for (table, key) in self.tables.iter().zip(signature.chunks_exact(self.k)) {
+            if let Some(ids) = table.get(key) {
+                seen.extend(ids.iter().copied());
+            }
+        }
+        seen.into_iter().collect()
+    }
+
+    fn query_multiprobe(&self, signature: &[i32], depth: usize) -> Vec<u64> {
+        let mut seen = HashSet::new();
+        for (table, key) in self.tables.iter().zip(signature.chunks_exact(self.k)) {
+            for probe in seed_perturbations(key, depth) {
+                if let Some(ids) = table.get(probe.as_slice()) {
+                    seen.extend(ids.iter().copied());
+                }
+            }
+        }
+        seen.into_iter().collect()
+    }
+}
+
+/// The seed perturbation enumerator (allocates every probe key).
+fn seed_perturbations(key: &[i32], depth: usize) -> Vec<Vec<i32>> {
+    let mut out = vec![key.to_vec()];
+    if depth == 0 {
+        return out;
+    }
+    let mut frontier: Vec<(Vec<i32>, usize)> = vec![(key.to_vec(), 0)];
+    for _ in 1..=depth.min(key.len()) {
+        let mut next = Vec::new();
+        for (base, start) in &frontier {
+            for i in *start..key.len() {
+                for delta in [-1i32, 1] {
+                    let mut probe = base.clone();
+                    probe[i] = probe[i].wrapping_add(delta);
+                    out.push(probe.clone());
+                    next.push((probe, i + 1));
+                }
+            }
+        }
+        frontier = next;
+    }
+    out
+}
+
+/// Seeded uniform sample rows in `[-1, 1]^n` — the shared input
+/// generator for the grid and the `hash_throughput` bench target.
+pub fn random_rows(n: usize, count: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..count)
+        .map(|_| (0..n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect())
+        .collect()
+}
+
+fn random_sigs(len: usize, count: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..count)
+        .map(|_| (0..len).map(|_| rng.uniform_usize(9) as i32 - 4).collect())
+        .collect()
+}
+
+/// Run the grid with the ambient bench config (honours
+/// `FUNCLSH_BENCH_FAST=1`).
+pub fn run(opts: &HashBenchOptions) -> Value {
+    run_with_config(opts, None)
+}
+
+/// Run the grid with an explicit bench config (tests use a tiny one).
+pub fn run_with_config(opts: &HashBenchOptions, config: Option<BenchConfig>) -> Value {
+    let mut bench = match config {
+        Some(c) => Bench::with_config(c),
+        None => Bench::new(),
+    };
+    let kernel_shapes: &[(usize, usize)] = if opts.quick {
+        &[(64, 32), (256, 128)]
+    } else {
+        &[(64, 32), (128, 64), (256, 128)]
+    };
+    let batches: &[usize] = if opts.quick { &[1, 64] } else { &[1, 16, 64, 256] };
+
+    println!("== bench-hash: seed scalar vs blocked kernel (rows/s) ==");
+    let mut kernel_cases = Vec::new();
+    for &(n, k) in kernel_shapes {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xBE + n as u64);
+        let emb = MonteCarloEmbedder::new(Interval::unit(), n, 2.0, &mut rng);
+        let bank = PStableHashBank::new(n, k, 2.0, 1.0, &mut rng);
+        let proj_rows: Vec<&[f64]> = (0..k).map(|j| bank.projection_row(j)).collect();
+        let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+        for &b in batches {
+            let rows = random_rows(n, b, (n * 31 + b) as u64);
+            let seed_rows = bench
+                .throughput_case(&format!("kernel/seed-scalar/n{n}-k{k}-b{b}"), b as f64, || {
+                    black_box(folded.hash_rows_scalar(black_box(&rows)).unwrap());
+                })
+                .throughput()
+                .unwrap_or(0.0);
+            let mut sigs = Signatures::new(k);
+            let blocked_rows = bench
+                .throughput_case(&format!("kernel/blocked/n{n}-k{k}-b{b}"), b as f64, || {
+                    folded
+                        .hash_rows_into(black_box(&rows), &mut sigs)
+                        .unwrap();
+                    black_box(sigs.as_slice());
+                })
+                .throughput()
+                .unwrap_or(0.0);
+            let speedup = if seed_rows > 0.0 { blocked_rows / seed_rows } else { 0.0 };
+            kernel_cases.push(json::object(vec![
+                ("n", n.into()),
+                ("k", k.into()),
+                ("b", b.into()),
+                ("seed_rows_per_s", seed_rows.into()),
+                ("blocked_rows_per_s", blocked_rows.into()),
+                ("kernel_speedup", speedup.into()),
+            ]));
+        }
+    }
+
+    println!("== bench-hash: seed index vs fingerprint index (ops/s) ==");
+    let idx_shapes: &[(usize, usize)] = if opts.quick {
+        &[(4, 8)]
+    } else {
+        &[(2, 16), (4, 8), (8, 4)]
+    };
+    const ENTRIES: usize = 4096;
+    const INSERT_BATCH: usize = 256;
+    const QUERIES: usize = 64;
+    let mut index_cases = Vec::new();
+    for &(ka, l) in idx_shapes {
+        let len = ka * l;
+        let sigs = random_sigs(len, ENTRIES, 0x1D + len as u64);
+        let ins = &sigs[..INSERT_BATCH];
+        let seed_ins = bench
+            .throughput_case(
+                &format!("index/seed-insert/k{ka}-l{l}"),
+                INSERT_BATCH as f64,
+                || {
+                    let mut idx = SeedIndex::new(ka, l);
+                    for (i, s) in ins.iter().enumerate() {
+                        idx.insert(i as u64, s);
+                    }
+                    black_box(idx.tables.len());
+                },
+            )
+            .throughput()
+            .unwrap_or(0.0);
+        let fp_ins = bench
+            .throughput_case(
+                &format!("index/fp-insert/k{ka}-l{l}"),
+                INSERT_BATCH as f64,
+                || {
+                    let mut idx = LshIndex::new(IndexConfig::new(ka, l));
+                    for (i, s) in ins.iter().enumerate() {
+                        idx.insert(i as u64, s);
+                    }
+                    black_box(idx.len());
+                },
+            )
+            .throughput()
+            .unwrap_or(0.0);
+
+        let mut seed_idx = SeedIndex::new(ka, l);
+        let mut fp_idx = LshIndex::new(IndexConfig::new(ka, l));
+        for (i, s) in sigs.iter().enumerate() {
+            seed_idx.insert(i as u64, s);
+            fp_idx.insert(i as u64, s);
+        }
+        let qs = &sigs[..QUERIES];
+        let seed_q = bench
+            .throughput_case(&format!("index/seed-query/k{ka}-l{l}"), QUERIES as f64, || {
+                for s in qs {
+                    black_box(seed_idx.query(black_box(s)));
+                }
+            })
+            .throughput()
+            .unwrap_or(0.0);
+        let mut scratch = QueryScratch::default();
+        let mut out = Vec::new();
+        let fp_q = bench
+            .throughput_case(&format!("index/fp-query/k{ka}-l{l}"), QUERIES as f64, || {
+                for s in qs {
+                    fp_idx.query_into(black_box(s), 0, &mut scratch, &mut out);
+                    black_box(out.len());
+                }
+            })
+            .throughput()
+            .unwrap_or(0.0);
+        let seed_mp = bench
+            .throughput_case(
+                &format!("index/seed-multiprobe1/k{ka}-l{l}"),
+                QUERIES as f64,
+                || {
+                    for s in qs {
+                        black_box(seed_idx.query_multiprobe(black_box(s), 1));
+                    }
+                },
+            )
+            .throughput()
+            .unwrap_or(0.0);
+        let fp_mp = bench
+            .throughput_case(
+                &format!("index/fp-multiprobe1/k{ka}-l{l}"),
+                QUERIES as f64,
+                || {
+                    for s in qs {
+                        fp_idx.query_into(black_box(s), 1, &mut scratch, &mut out);
+                        black_box(out.len());
+                    }
+                },
+            )
+            .throughput()
+            .unwrap_or(0.0);
+        index_cases.push(json::object(vec![
+            ("k", ka.into()),
+            ("l", l.into()),
+            ("entries", ENTRIES.into()),
+            ("seed_insert_per_s", seed_ins.into()),
+            ("fp_insert_per_s", fp_ins.into()),
+            ("seed_query_per_s", seed_q.into()),
+            ("fp_query_per_s", fp_q.into()),
+            ("seed_multiprobe_per_s", seed_mp.into()),
+            ("fp_multiprobe_per_s", fp_mp.into()),
+        ]));
+    }
+
+    json::object(vec![
+        ("bench", "hash_throughput".into()),
+        ("mode", if opts.quick { "quick" } else { "full" }.into()),
+        ("kernel_cases", Value::Array(kernel_cases)),
+        ("index_cases", Value::Array(index_cases)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn quick_grid_covers_acceptance_shape_and_serializes() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            max_iters: 10_000,
+        };
+        let report = run_with_config(&HashBenchOptions { quick: true }, Some(cfg));
+        let text = report.to_json();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.get("mode").and_then(Value::as_str), Some("quick"));
+        let kernel = back.get("kernel_cases").and_then(Value::as_array).unwrap();
+        assert!(
+            kernel.iter().any(|c| {
+                c.get("n").and_then(Value::as_usize) == Some(256)
+                    && c.get("k").and_then(Value::as_usize) == Some(128)
+                    && c.get("b").and_then(Value::as_usize) == Some(64)
+            }),
+            "acceptance shape N=256 K=128 B=64 missing: {text}"
+        );
+        for c in kernel {
+            assert!(c.get("seed_rows_per_s").and_then(Value::as_f64).unwrap() > 0.0);
+            assert!(c.get("blocked_rows_per_s").and_then(Value::as_f64).unwrap() > 0.0);
+        }
+        let index = back.get("index_cases").and_then(Value::as_array).unwrap();
+        assert!(!index.is_empty());
+    }
+
+    #[test]
+    fn seed_index_model_agrees_with_fingerprint_index() {
+        // the baseline must measure the same *semantics* it is compared
+        // against: identical candidate sets on identical contents
+        let sigs = random_sigs(8, 200, 7);
+        let mut seed = SeedIndex::new(2, 4);
+        let mut fp = LshIndex::new(IndexConfig::new(2, 4));
+        for (i, s) in sigs.iter().enumerate() {
+            seed.insert(i as u64, s);
+            fp.insert(i as u64, s);
+        }
+        for s in sigs.iter().take(40) {
+            let mut a = seed.query(s);
+            a.sort_unstable();
+            assert_eq!(a, fp.query(s));
+            let mut am = seed.query_multiprobe(s, 1);
+            am.sort_unstable();
+            assert_eq!(am, fp.query_multiprobe(s, 1));
+        }
+    }
+}

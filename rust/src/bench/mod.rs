@@ -5,6 +5,8 @@
 //! (mean / p50 / p99 / min), plus throughput reporting and CSV/JSON emit.
 //! All `cargo bench` targets in `rust/benches/` are built on this.
 
+pub mod hashbench;
+
 use crate::util::stats::quantile_sorted;
 use std::time::{Duration, Instant};
 

@@ -14,16 +14,118 @@
 //!
 //! * [`CpuHashPath`] — composes an [`Embedder`] and a [`HashBank`]
 //!   directly (reference semantics, any embedder/bank pair).
-//! * [`FoldedHashPath`] — the folded single-matmul CPU path (the L3 hot
-//!   path when PJRT is disabled).
+//! * [`FoldedHashPath`] — the folded CPU path (the L3 hot path when PJRT
+//!   is disabled). Since PR 3 its `hash_rows` is a **cache-blocked f32
+//!   batched matmul** over the whole batch (see below); the seed scalar
+//!   f64 row-at-a-time loop survives as
+//!   [`FoldedHashPath::hash_rows_scalar`], the bit-exactness oracle and
+//!   bench baseline.
 //! * `PjrtHashPath` (in `crate::runtime::pjrt_path`) — feeds the same folded matrix to the AOT-compiled
 //!   XLA pipeline (in `crate::runtime`); used via the engine in `main`.
 //!   Lives here as a thin adapter so the service code is
 //!   backend-agnostic.
+//!
+//! # Batch interface: [`Signatures`]
+//!
+//! Signatures travel as one flat `[B × K]` `i32` buffer instead of
+//! `Vec<Vec<i32>>`: [`HashPath::hash_rows_into`] writes a whole batch into
+//! a caller-owned [`Signatures`] whose storage is reused across batches,
+//! so the steady-state request path performs no per-row signature
+//! allocation.
+//!
+//! # The blocked kernel, and why it is still exact
+//!
+//! `hash_rows` processes the batch as a `[B×N] · [N×K]` matmul blocked
+//! into `ROW_BLOCK × COL_BLOCK` register tiles: the inner loop streams one
+//! `COL_BLOCK`-wide slice of `M` (f32) and accumulates `ROW_BLOCK` rows
+//! against it, so each loaded tile of `M` is reused `ROW_BLOCK` times and
+//! the f32 lanes double the SIMD width of the seed f64 loop. When the
+//! batch is large enough (`B·N·K ≥` [`PAR_THRESHOLD`] multiply-adds) the
+//! row dimension is split across `std::thread::scope` threads — plain std,
+//! no new dependencies, same raw-std policy as `server/reactor.rs`.
+//!
+//! f32 arithmetic would normally change `floor()` outputs near bucket
+//! boundaries. The kernel stays **bit-identical to the seed scalar f64
+//! path** anyway: for every output cell it computes a rigorous error
+//! radius `τ = C·ε₃₂·(‖x‖∞·Σᵢ|Mᵢⱼ| + |bⱼ|)` (valid for *any* summation
+//! order, so blocking/threading cannot invalidate it) and, whenever the
+//! f32 value lies within `τ` of a floor boundary — or is non-finite —
+//! recomputes that single cell with the exact scalar f64 recurrence.
+//! Cells outside the radius provably floor to the same bucket; cells
+//! inside it (a ~`τ` fraction, i.e. a few per million) take the slow
+//! path. The parity suite (`tests/kernel_parity.rs`) asserts byte-equal
+//! signatures against [`FoldedHashPath::hash_rows_scalar`] across random
+//! `{N, K, B}` shapes including `B = 1` and non-multiples of the block
+//! sizes.
 
 use crate::embedding::Embedder;
 use crate::hashing::HashBank;
 use anyhow::Result;
+
+/// A flat batch of hash signatures: `rows × signature_len` bucket ids in
+/// one contiguous allocation. Replaces `Vec<Vec<i32>>` on the request
+/// path; the buffer is reused across batches via [`Signatures::reset`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Signatures {
+    data: Vec<i32>,
+    k: usize,
+}
+
+impl Signatures {
+    /// An empty buffer producing signatures of length `k`.
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "signature length must be positive");
+        Self { data: Vec::new(), k }
+    }
+
+    /// Signature length `K` of each row.
+    pub fn signature_len(&self) -> usize {
+        self.k
+    }
+
+    /// Number of rows currently held.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.k
+    }
+
+    /// True when no rows are held.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Resize to `rows × k` zeroed entries, keeping the allocation.
+    pub fn reset(&mut self, k: usize, rows: usize) {
+        assert!(k > 0, "signature length must be positive");
+        self.k = k;
+        self.data.clear();
+        self.data.resize(rows * k, 0);
+    }
+
+    /// Signature of row `i`.
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.data[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Mutable signature of row `i`.
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        &mut self.data[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Iterate over row signatures.
+    pub fn iter(&self) -> impl Iterator<Item = &[i32]> {
+        self.data.chunks_exact(self.k)
+    }
+
+    /// The whole flat `[rows × k]` buffer.
+    pub fn as_slice(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// The whole flat buffer, mutably.
+    pub fn as_mut_slice(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
 
 /// A batched `samples → signature` transform.
 pub trait HashPath: Send + Sync {
@@ -33,11 +135,29 @@ pub trait HashPath: Send + Sync {
     /// Signature length `K` (= `k·l` of the index).
     fn signature_len(&self) -> usize;
 
-    /// Hash a batch of sample rows.
-    fn hash_rows(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<i32>>>;
+    /// Hash a batch of sample rows into `out`, which is resized to
+    /// `rows.len() × signature_len` (storage reused across calls). On
+    /// error the contents of `out` are unspecified.
+    fn hash_rows_into(&self, rows: &[Vec<f32>], out: &mut Signatures) -> Result<()>;
+
+    /// Allocating convenience wrapper around
+    /// [`HashPath::hash_rows_into`].
+    fn hash_rows(&self, rows: &[Vec<f32>]) -> Result<Signatures> {
+        let mut out = Signatures::new(self.signature_len());
+        self.hash_rows_into(rows, &mut out)?;
+        Ok(out)
+    }
+
+    /// Embed one row, reusing `scratch` for the f32→f64 conversion so the
+    /// batched request path allocates only the returned embedding.
+    fn embed_row_with(&self, row: &[f32], scratch: &mut Vec<f64>) -> Vec<f64>;
 
     /// Embed one row (used by the coordinator for exact re-ranking).
-    fn embed_row(&self, row: &[f32]) -> Vec<f64>;
+    /// Convenience wrapper over [`HashPath::embed_row_with`] with a fresh
+    /// conversion scratch.
+    fn embed_row(&self, row: &[f32]) -> Vec<f64> {
+        self.embed_row_with(row, &mut Vec::new())
+    }
 }
 
 /// Fold an embedder and a p-stable hash bank into `(M, b)` such that
@@ -112,27 +232,58 @@ impl HashPath for CpuHashPath {
         self.bank.num_hashes()
     }
 
-    fn hash_rows(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<i32>>> {
-        Ok(rows
-            .iter()
-            .map(|row| {
-                let row64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
-                self.bank.hash(&self.embedder.embed_samples(&row64))
-            })
-            .collect())
+    fn hash_rows_into(&self, rows: &[Vec<f32>], out: &mut Signatures) -> Result<()> {
+        let n = self.embedder.dim();
+        out.reset(self.bank.num_hashes(), rows.len());
+        // one f64 conversion scratch for the whole batch (the seed path
+        // allocated a fresh Vec per row)
+        let mut row64 = vec![0.0f64; n];
+        for (i, row) in rows.iter().enumerate() {
+            anyhow::ensure!(row.len() == n, "row length {} != {}", row.len(), n);
+            for (d, &s) in row64.iter_mut().zip(row) {
+                *d = s as f64;
+            }
+            self.bank
+                .hash_into(&self.embedder.embed_samples(&row64), out.row_mut(i));
+        }
+        Ok(())
     }
 
-    fn embed_row(&self, row: &[f32]) -> Vec<f64> {
-        let row64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
-        self.embedder.embed_samples(&row64)
+    fn embed_row_with(&self, row: &[f32], scratch: &mut Vec<f64>) -> Vec<f64> {
+        scratch.clear();
+        scratch.extend(row.iter().map(|&x| x as f64));
+        self.embedder.embed_samples(scratch)
     }
 }
 
-/// The folded CPU hot path: one `N×K` matmul + floor per row.
+/// Rows of the output tile computed together (shares each loaded `M`
+/// slice across `ROW_BLOCK` accumulator rows).
+const ROW_BLOCK: usize = 4;
+
+/// Columns per register tile (f32 lanes the inner loop vectorizes over).
+const COL_BLOCK: usize = 32;
+
+/// Multiply-adds (`B·N·K`) above which `hash_rows` fans the batch out
+/// across scoped threads. Below it the spawn/join overhead dominates.
+const PAR_THRESHOLD: usize = 1 << 20;
+
+/// Cap on kernel threads (the coordinator already runs several workers;
+/// the kernel should accelerate a batch, not oversubscribe the host).
+const MAX_KERNEL_THREADS: usize = 8;
+
+/// The folded CPU hot path: one blocked `[B×N]·[N×K]` matmul + floor per
+/// batch (see the module docs for the blocking scheme and the exactness
+/// argument).
 pub struct FoldedHashPath {
     /// folded matrix, row-major `[N][K]`
     m: Vec<f64>,
+    /// the same matrix in f32 (kernel operand)
+    m32: Vec<f32>,
     offsets: Vec<f64>,
+    /// offsets in f32 (kernel accumulator init)
+    off32: Vec<f32>,
+    /// per-column `Σ_i |M_ij|` — the error-radius ingredient
+    col_bound: Vec<f64>,
     n: usize,
     k: usize,
     /// embedding kept for `embed_row` (re-rank distances)
@@ -151,9 +302,20 @@ impl FoldedHashPath {
         let (m, offsets) = fold_projection(embedder.as_ref(), proj_rows, offsets, r);
         let n = embedder.dim();
         let k = proj_rows.len();
+        let m32: Vec<f32> = m.iter().map(|&x| x as f32).collect();
+        let off32: Vec<f32> = offsets.iter().map(|&x| x as f32).collect();
+        let mut col_bound = vec![0.0f64; k];
+        for i in 0..n {
+            for (j, cb) in col_bound.iter_mut().enumerate() {
+                *cb += m[i * k + j].abs();
+            }
+        }
         Self {
             m,
+            m32,
             offsets,
+            off32,
+            col_bound,
             n,
             k,
             embedder,
@@ -163,25 +325,18 @@ impl FoldedHashPath {
     /// The folded matrix as f32 (row-major `[N][K]`) — fed verbatim to the
     /// PJRT pipeline so both backends share one definition of the math.
     pub fn matrix_f32(&self) -> Vec<f32> {
-        self.m.iter().map(|&x| x as f32).collect()
+        self.m32.clone()
     }
 
     /// Offsets as f32.
     pub fn offsets_f32(&self) -> Vec<f32> {
-        self.offsets.iter().map(|&x| x as f32).collect()
-    }
-}
-
-impl HashPath for FoldedHashPath {
-    fn dim(&self) -> usize {
-        self.n
+        self.off32.clone()
     }
 
-    fn signature_len(&self) -> usize {
-        self.k
-    }
-
-    fn hash_rows(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<i32>>> {
+    /// The seed scalar path: row-at-a-time f64 matmul + floor, kept as
+    /// the bit-exactness oracle (the blocked kernel must agree on every
+    /// byte) and as the `bench-hash` baseline.
+    pub fn hash_rows_scalar(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<i32>>> {
         // Row-major accumulation: the inner loop walks one contiguous row
         // of M (length K), which vectorizes; the column-major variant
         // (K outer, stride-K loads) measured ~30% *slower* than the
@@ -204,9 +359,121 @@ impl HashPath for FoldedHashPath {
         Ok(out)
     }
 
-    fn embed_row(&self, row: &[f32]) -> Vec<f64> {
-        let row64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
-        self.embedder.embed_samples(&row64)
+    /// One output cell of the scalar f64 recurrence — the exact fallback
+    /// for boundary cells. Must mirror `hash_rows_scalar`'s per-element
+    /// operation order (offset first, then `i = 0..N` in order) so the
+    /// fallback is bit-identical to the seed path.
+    fn exact_cell(&self, row: &[f32], j: usize) -> i32 {
+        let mut a = self.offsets[j];
+        for (i, &x) in row.iter().enumerate() {
+            a += (x as f64) * self.m[i * self.k + j];
+        }
+        a.floor() as i32
+    }
+
+    /// The blocked f32 kernel over a contiguous chunk of rows; `out` is
+    /// the matching `rows.len() × k` slice of the signature buffer. Row
+    /// lengths must already be validated.
+    fn hash_block(&self, rows: &[Vec<f32>], out: &mut [i32]) {
+        let n = self.n;
+        let k = self.k;
+        debug_assert_eq!(out.len(), rows.len() * k);
+        // Error radius constant: |f32 blocked − f64 scalar| per cell is
+        // ≤ C·ε₃₂·(‖x‖∞·Σᵢ|Mᵢⱼ| + |bⱼ|) for any summation order; the
+        // (N+8)·4 constant over-covers conversion, product, and
+        // accumulation rounding with a 4× margin.
+        let eps = (n as f64 + 8.0) * 4.0 * (f32::EPSILON as f64);
+        let mut acc = [0.0f32; ROW_BLOCK * COL_BLOCK];
+        let mut xinf = [0.0f64; ROW_BLOCK];
+        for (rb, out_rb) in rows.chunks(ROW_BLOCK).zip(out.chunks_mut(ROW_BLOCK * k)) {
+            for (r, row) in rb.iter().enumerate() {
+                xinf[r] = row.iter().fold(0.0f32, |a, &x| a.max(x.abs())) as f64;
+            }
+            let mut jb = 0;
+            while jb < k {
+                let jw = COL_BLOCK.min(k - jb);
+                for r in 0..rb.len() {
+                    acc[r * COL_BLOCK..r * COL_BLOCK + jw]
+                        .copy_from_slice(&self.off32[jb..jb + jw]);
+                }
+                for i in 0..n {
+                    let mrow = &self.m32[i * k + jb..i * k + jb + jw];
+                    for (r, row) in rb.iter().enumerate() {
+                        let x = row[i];
+                        let a = &mut acc[r * COL_BLOCK..r * COL_BLOCK + jw];
+                        for (aj, &mij) in a.iter_mut().zip(mrow) {
+                            *aj += x * mij;
+                        }
+                    }
+                }
+                for (r, row) in rb.iter().enumerate() {
+                    for j in 0..jw {
+                        let col = jb + j;
+                        let v = acc[r * COL_BLOCK + j] as f64;
+                        let tau =
+                            eps * (xinf[r] * self.col_bound[col] + self.offsets[col].abs());
+                        let f = v.floor();
+                        // NaN/inf accumulators fail both comparisons and
+                        // fall through to the exact path
+                        let safe = v.is_finite() && v - f > tau && (f + 1.0) - v > tau;
+                        out_rb[r * k + col] = if safe {
+                            f as i32
+                        } else {
+                            self.exact_cell(row, col)
+                        };
+                    }
+                }
+                jb += jw;
+            }
+        }
+    }
+}
+
+impl HashPath for FoldedHashPath {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn signature_len(&self) -> usize {
+        self.k
+    }
+
+    fn hash_rows_into(&self, rows: &[Vec<f32>], out: &mut Signatures) -> Result<()> {
+        for row in rows {
+            anyhow::ensure!(row.len() == self.n, "row length {} != {}", row.len(), self.n);
+        }
+        out.reset(self.k, rows.len());
+        let work = rows.len() * self.n * self.k;
+        let threads = if work >= PAR_THRESHOLD {
+            std::thread::available_parallelism()
+                .map_or(1, |t| t.get())
+                .min(MAX_KERNEL_THREADS)
+                .min(rows.len())
+        } else {
+            1
+        };
+        if threads <= 1 {
+            self.hash_block(rows, out.as_mut_slice());
+        } else {
+            // split on ROW_BLOCK boundaries so every thread runs full
+            // tiles; per-cell results are independent of the split
+            let per = rows.len().div_ceil(threads).div_ceil(ROW_BLOCK) * ROW_BLOCK;
+            let k = self.k;
+            std::thread::scope(|s| {
+                for (rchunk, ochunk) in
+                    rows.chunks(per).zip(out.as_mut_slice().chunks_mut(per * k))
+                {
+                    s.spawn(move || self.hash_block(rchunk, ochunk));
+                }
+            });
+        }
+        Ok(())
+    }
+
+    fn embed_row_with(&self, row: &[f32], scratch: &mut Vec<f64>) -> Vec<f64> {
+        scratch.clear();
+        scratch.extend(row.iter().map(|&x| x as f64));
+        self.embedder.embed_samples(scratch)
     }
 }
 
@@ -245,7 +512,7 @@ mod tests {
         // floor() at bucket edges can differ by float assoc; require exact
         // match on > 99% of entries and ±1 elsewhere
         let mut mismatch = 0;
-        for (ra, rb) in a.iter().zip(&b) {
+        for (ra, rb) in a.iter().zip(b.iter()) {
             for (x, y) in ra.iter().zip(rb) {
                 if x != y {
                     mismatch += 1;
@@ -268,7 +535,7 @@ mod tests {
         let a = reference.hash_rows(&rows).unwrap();
         let b = folded.hash_rows(&rows).unwrap();
         let mut mismatch = 0;
-        for (ra, rb) in a.iter().zip(&b) {
+        for (ra, rb) in a.iter().zip(b.iter()) {
             for (x, y) in ra.iter().zip(rb) {
                 if x != y {
                     mismatch += 1;
@@ -280,6 +547,73 @@ mod tests {
     }
 
     #[test]
+    fn blocked_kernel_matches_scalar_path_bitwise() {
+        // the kernel's exactness contract, on shapes that exercise tile
+        // remainders and the B = 1 edge
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        for (n, k, b) in [(7, 5, 1), (32, 24, 3), (33, 37, 9), (64, 32, 130)] {
+            let emb = MonteCarloEmbedder::new(Interval::unit(), n, 2.0, &mut rng);
+            let bank = PStableHashBank::new(n, k, 2.0, 1.0, &mut rng);
+            let proj_rows: Vec<&[f64]> = (0..k).map(|j| bank.projection_row(j)).collect();
+            let folded =
+                FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+            let rows = random_rows(n, b, 1000 + b as u64);
+            let scalar = folded.hash_rows_scalar(&rows).unwrap();
+            let blocked = folded.hash_rows(&rows).unwrap();
+            assert_eq!(blocked.len(), b);
+            for (i, want) in scalar.iter().enumerate() {
+                assert_eq!(blocked.row(i), want.as_slice(), "n={n} k={k} b={b} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_kernel_is_deterministic() {
+        // large enough that B·N·K crosses PAR_THRESHOLD → threaded path;
+        // results must equal the scalar oracle byte-for-byte anyway
+        let mut rng = Xoshiro256pp::seed_from_u64(79);
+        let (n, k, b) = (128, 64, 200); // 1.6M mul-adds > 2^20
+        assert!(b * n * k >= super::PAR_THRESHOLD);
+        let emb = MonteCarloEmbedder::new(Interval::unit(), n, 2.0, &mut rng);
+        let bank = PStableHashBank::new(n, k, 2.0, 1.0, &mut rng);
+        let proj_rows: Vec<&[f64]> = (0..k).map(|j| bank.projection_row(j)).collect();
+        let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+        let rows = random_rows(n, b, 4242);
+        let scalar = folded.hash_rows_scalar(&rows).unwrap();
+        let a = folded.hash_rows(&rows).unwrap();
+        let b2 = folded.hash_rows(&rows).unwrap();
+        assert_eq!(a, b2, "repeat runs must agree");
+        for (i, want) in scalar.iter().enumerate() {
+            assert_eq!(a.row(i), want.as_slice(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn signatures_buffer_is_reused() {
+        let mut rng = Xoshiro256pp::seed_from_u64(83);
+        let emb = MonteCarloEmbedder::new(Interval::unit(), 8, 2.0, &mut rng);
+        let bank = PStableHashBank::new(8, 4, 2.0, 1.0, &mut rng);
+        let proj_rows: Vec<&[f64]> = (0..4).map(|j| bank.projection_row(j)).collect();
+        let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+        let mut sigs = Signatures::new(4);
+        folded
+            .hash_rows_into(&random_rows(8, 10, 1), &mut sigs)
+            .unwrap();
+        assert_eq!(sigs.len(), 10);
+        assert_eq!(sigs.signature_len(), 4);
+        // a smaller follow-up batch must reuse the same allocation, not
+        // free and reallocate it
+        let ptr = sigs.as_slice().as_ptr();
+        folded
+            .hash_rows_into(&random_rows(8, 3, 2), &mut sigs)
+            .unwrap();
+        assert_eq!(sigs.len(), 3);
+        assert_eq!(sigs.as_slice().as_ptr(), ptr, "buffer was reallocated");
+        // row-length mismatch is an error, not a panic
+        assert!(folded.hash_rows(&[vec![0.0; 7]]).is_err());
+    }
+
+    #[test]
     fn embed_row_consistency() {
         let mut rng = Xoshiro256pp::seed_from_u64(75);
         let emb = MonteCarloEmbedder::new(Interval::unit(), 16, 2.0, &mut rng);
@@ -287,6 +621,8 @@ mod tests {
         let path = CpuHashPath::new(Box::new(emb.clone()), Box::new(bank));
         let row: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
         let via_path = path.embed_row(&row);
+        let mut scratch = Vec::new();
+        assert_eq!(path.embed_row_with(&row, &mut scratch), via_path);
         let row64: Vec<f64> = row.iter().map(|&x| x as f64).collect();
         use crate::embedding::Embedder as _;
         assert_eq!(via_path, emb.embed_samples(&row64));

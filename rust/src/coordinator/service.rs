@@ -5,21 +5,24 @@
 //!
 //! ```text
 //! queue.pop_batch(max_batch, max_wait)            (dynamic batching)
-//!   └─ hash_path.hash_rows(all sample rows)       (one batched matmul /
-//!   └─ per op:                                     PJRT execution)
+//!   └─ hash_path.hash_rows_into(rows, &mut sigs)  (one blocked batched
+//!   └─ per op:                                     matmul into a reused
+//!                                                  flat buffer)
 //!        Hash   → reply signature
 //!        Insert → index.insert + store embedding
 //!        Query  → index probe → exact re-rank on stored embeddings
 //! ```
 
 use super::batcher::BoundedQueue;
-use super::hashpath::HashPath;
+use super::hashpath::{HashPath, Signatures};
 use super::metrics::{MetricsSnapshot, RequestKind, ServiceMetrics};
 use crate::config::ServiceConfig;
 use crate::embedding::l2_dist;
-use crate::lsh::{IndexConfig, ShardedIndex};
+use crate::lsh::shard::{read_i32, read_u64, write_i32, write_u64};
+use crate::lsh::{IndexConfig, QueryScratch, ShardedIndex};
 use crate::search::Hit;
 use std::collections::HashMap;
+use std::io::{self, Read, Write};
 use std::sync::mpsc;
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
@@ -54,7 +57,8 @@ pub enum Op {
     },
     /// admin: point-in-time service metrics
     Metrics,
-    /// admin: snapshot the LSH index (format `FLSH1`) to a file
+    /// admin: snapshot the full service state (`FLSH1` index block +
+    /// `EMBS1` entry store) to a file; [`Coordinator::restore`] reloads it
     Snapshot {
         /// destination path
         path: String,
@@ -116,6 +120,28 @@ struct Entry {
 struct State {
     index: ShardedIndex,
     store: RwLock<HashMap<u64, Entry>>,
+    /// signature of a fixed probe row under this service's hash path —
+    /// written into snapshots so restore can detect a changed hash
+    /// configuration (see [`probe_signature`])
+    probe_sig: Vec<i32>,
+}
+
+/// Signature of a fixed, deterministic probe row. Any change to the hash
+/// configuration (seed, bucket width `r`, embedding method, dimension,
+/// `k·l`) changes the folded matrix and therefore this signature, so a
+/// snapshot stamped with it cannot be restored under a different
+/// configuration and silently serve empty or wrong candidate sets.
+fn probe_signature(hash_path: &dyn HashPath) -> Vec<i32> {
+    let row: Vec<f32> = (0..hash_path.dim())
+        .map(|i| ((i as u32).wrapping_mul(2_654_435_761) % 1000) as f32 / 500.0 - 1.0)
+        .collect();
+    // a path that cannot hash a well-formed row is broken outright; fail
+    // loudly rather than stamp an empty probe that would match any other
+    // broken configuration at restore time
+    let sigs = hash_path
+        .hash_rows(&[row])
+        .expect("hash path cannot sign the snapshot probe row");
+    sigs.row(0).to_vec()
 }
 
 /// The running coordinator: owns the queue, worker threads, and state.
@@ -130,15 +156,78 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start the service with `config` over the given hash path.
     pub fn start(config: &ServiceConfig, hash_path: Arc<dyn HashPath>) -> Self {
-        let queue = Arc::new(BoundedQueue::new(config.queue_depth));
-        let metrics = Arc::new(ServiceMetrics::new());
         let state = Arc::new(State {
             index: ShardedIndex::new(
                 IndexConfig::new(config.k, config.l),
                 config.shards.max(1),
             ),
             store: RwLock::new(HashMap::new()),
+            probe_sig: probe_signature(hash_path.as_ref()),
         });
+        Self::start_inner(config, hash_path, state)
+    }
+
+    /// Start the service from a state snapshot written by
+    /// [`Coordinator::save_state`] (or the `Snapshot` op / graceful
+    /// shutdown): the `FLSH1` index block followed by the `EMBS1` entry
+    /// store. Validation is strict so a stale or foreign file cannot
+    /// silently serve empty answers: the snapshot's index shape must
+    /// match `config`, the recorded hash-path probe signature must match
+    /// the live one (catches a changed seed / `r` / embedding), and every
+    /// stored embedding must match the hash path's output dimension.
+    ///
+    /// The entry store is authoritative: the index is **rebuilt** from
+    /// the stored `(id, signature)` pairs rather than trusted from the
+    /// `FLSH1` block, so a snapshot taken concurrently with in-flight
+    /// inserts or removes (whose store and index writes happen under
+    /// separate locks) always restores to a consistent state.
+    pub fn restore(
+        config: &ServiceConfig,
+        hash_path: Arc<dyn HashPath>,
+        r: &mut dyn Read,
+    ) -> io::Result<Self> {
+        let loaded = ShardedIndex::load(r)?;
+        let want = IndexConfig::new(config.k, config.l);
+        if loaded.config() != want {
+            return Err(restore_error(format!(
+                "snapshot index shape k={} l={} does not match configured k={} l={}",
+                loaded.config().k,
+                loaded.config().l,
+                want.k,
+                want.l
+            )));
+        }
+        let probe_sig = probe_signature(hash_path.as_ref());
+        let emb_dim = hash_path.embed_row(&vec![0.0f32; hash_path.dim()]).len();
+        let store = read_store(r, config.total_hashes(), emb_dim, &probe_sig)?;
+        if store.is_empty() && loaded.len() > 0 {
+            return Err(restore_error(format!(
+                "index block holds {} entries but the EMBS1 store block is missing \
+                 (index-only FLSH1 files cannot serve re-ranked queries)",
+                loaded.len()
+            )));
+        }
+        // rebuilding also frees the shard layout: the configured count
+        // governs the restored index, not whatever the file was saved with
+        let index = ShardedIndex::new(want, config.shards.max(1));
+        for (id, e) in store.iter() {
+            index.insert(*id, &e.sig);
+        }
+        let state = Arc::new(State {
+            index,
+            store: RwLock::new(store),
+            probe_sig,
+        });
+        Ok(Self::start_inner(config, hash_path, state))
+    }
+
+    fn start_inner(
+        config: &ServiceConfig,
+        hash_path: Arc<dyn HashPath>,
+        state: Arc<State>,
+    ) -> Self {
+        let queue = Arc::new(BoundedQueue::new(config.queue_depth));
+        let metrics = Arc::new(ServiceMetrics::new());
         assert_eq!(
             hash_path.signature_len(),
             config.total_hashes(),
@@ -219,9 +308,19 @@ impl Coordinator {
 
     /// Snapshot the LSH index to a writer (format `FLSH1`). The embedded
     /// vector store is not included — callers that need exact re-ranking
-    /// after a restore re-submit `Insert`s or keep raw data elsewhere.
+    /// after a restore use [`Coordinator::save_state`] instead (the
+    /// `Snapshot` op and graceful shutdown do).
     pub fn save_index(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
         self.state.index.save(w)
+    }
+
+    /// Snapshot the full service state: the `FLSH1` index block followed
+    /// by the `EMBS1` entry store (ids, re-rank embeddings, insert-time
+    /// signatures). [`crate::lsh::ShardedIndex::load`] still accepts the
+    /// file (it reads exactly the index prefix), and
+    /// [`Coordinator::restore`] round-trips the whole thing.
+    pub fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
+        save_state_inner(&self.state, w)
     }
 
     /// Multi-probe depth used for queries.
@@ -248,6 +347,14 @@ fn worker_loop(
     max_wait: Duration,
     probe_depth: usize,
 ) {
+    // per-worker scratch, reused across every batch: the flat signature
+    // buffer, the multi-probe key buffer, the candidate set, and the
+    // f32→f64 embed conversion buffer — the steady-state request path
+    // performs no per-op allocation beyond the owned Response payloads
+    let mut signatures = Signatures::new(hash_path.signature_len());
+    let mut scratch = QueryScratch::default();
+    let mut candidates: Vec<u64> = Vec::new();
+    let mut row64: Vec<f64> = Vec::new();
     while let Some(batch) = queue.pop_batch(max_batch, max_wait) {
         let batch_size = batch.len();
         // 1. one batched hash over every row that carries samples
@@ -262,22 +369,23 @@ fn worker_loop(
                 Op::Remove { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping => None,
             })
             .collect();
-        let hashed = match hash_path.hash_rows(&rows) {
-            Ok(s) => s,
-            Err(e) => {
-                for req in batch {
-                    metrics.record_error();
-                    let _ = req.reply.send(Response::Error(format!("hash path: {e}")));
-                }
-                continue;
+        if let Err(e) = hash_path.hash_rows_into(&rows, &mut signatures) {
+            for req in batch {
+                metrics.record_error();
+                let _ = req.reply.send(Response::Error(format!("hash path: {e}")));
             }
-        };
-        // re-expand to one (optional) signature per op
-        let mut hashed_iter = hashed.into_iter();
-        let signatures: Vec<Option<Vec<i32>>> = batch
+            continue;
+        }
+        // map each op to its row in the flat signature buffer
+        let mut next_row = 0usize;
+        let sig_rows: Vec<Option<usize>> = batch
             .iter()
             .map(|r| match &r.op {
-                Op::Hash { .. } | Op::Insert { .. } | Op::Query { .. } => hashed_iter.next(),
+                Op::Hash { .. } | Op::Insert { .. } | Op::Query { .. } => {
+                    let i = next_row;
+                    next_row += 1;
+                    Some(i)
+                }
                 Op::Remove { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping => None,
             })
             .collect();
@@ -286,7 +394,7 @@ fn worker_loop(
             .iter()
             .map(|r| match &r.op {
                 Op::Insert { samples, .. } | Op::Query { samples, .. } => {
-                    Some(hash_path.embed_row(samples))
+                    Some(hash_path.embed_row_with(samples, &mut row64))
                 }
                 _ => None,
             })
@@ -297,21 +405,16 @@ fn worker_loop(
         let mut accepted = vec![true; batch.len()];
         {
             let mut store = state.store.write().unwrap();
-            for (slot, ((req, emb), sig)) in batch
-                .iter()
-                .zip(&embeddings)
-                .zip(&signatures)
-                .enumerate()
-            {
+            for (slot, (req, emb)) in batch.iter().zip(&embeddings).enumerate() {
                 if let Op::Insert { id, .. } = &req.op {
                     if store.contains_key(id) {
                         accepted[slot] = false;
-                    } else if let (Some(e), Some(sg)) = (emb, sig) {
+                    } else if let (Some(e), Some(row)) = (emb, sig_rows[slot]) {
                         store.insert(
                             *id,
                             Entry {
                                 emb: e.clone(),
-                                sig: sg.clone(),
+                                sig: signatures.row(row).to_vec(),
                             },
                         );
                     }
@@ -320,12 +423,8 @@ fn worker_loop(
         }
         // 4. finish each op and reply
         let mut latencies = Vec::with_capacity(batch_size);
-        for (slot, ((req, sig), emb)) in batch
-            .into_iter()
-            .zip(signatures)
-            .zip(embeddings)
-            .enumerate()
-        {
+        for (slot, (req, emb)) in batch.into_iter().zip(embeddings).enumerate() {
+            let sig: &[i32] = sig_rows[slot].map_or(&[], |i| signatures.row(i));
             let resp = if accepted[slot] {
                 match &req.op {
                     // admin ops are answered in-line by the worker: they
@@ -336,7 +435,15 @@ fn worker_loop(
                         indexed: state.index.len() as u64,
                     },
                     Op::Snapshot { path } => write_snapshot(&state, path),
-                    _ => apply_op(&state, &req.op, sig.unwrap_or_default(), emb, probe_depth),
+                    _ => apply_op(
+                        &state,
+                        &req.op,
+                        sig,
+                        emb,
+                        probe_depth,
+                        &mut scratch,
+                        &mut candidates,
+                    ),
                 }
             } else {
                 metrics.record_error();
@@ -355,16 +462,18 @@ fn worker_loop(
 fn apply_op(
     state: &State,
     op: &Op,
-    signature: Vec<i32>,
+    signature: &[i32],
     embedding: Option<Vec<f64>>,
     probe_depth: usize,
+    scratch: &mut QueryScratch,
+    candidates: &mut Vec<u64>,
 ) -> Response {
     match op {
-        Op::Hash { .. } => Response::Signature(signature),
+        Op::Hash { .. } => Response::Signature(signature.to_vec()),
         Op::Insert { id, .. } => {
             // the embedding was already stored (and dedup-checked) under
             // the batch lock in the worker loop
-            state.index.insert(*id, &signature);
+            state.index.insert(*id, signature);
             Response::Inserted { id: *id }
         }
         Op::Remove { id } => {
@@ -381,17 +490,18 @@ fn apply_op(
         }
         Op::Query { samples: _, k } => {
             let emb = embedding.expect("query embeds");
-            let candidates = if probe_depth == 0 {
-                state.index.query(&signature)
-            } else {
-                state.index.query_multiprobe(&signature, probe_depth)
-            };
+            // candidate collection reuses the worker's scratch + buffer;
+            // candidates arrive sorted by id, so ties in the re-rank
+            // distance resolve deterministically (stable sort below)
+            state
+                .index
+                .query_into(signature, probe_depth, scratch, candidates);
             let store = state.store.read().unwrap();
             let mut hits: Vec<Hit> = candidates
-                .into_iter()
+                .iter()
                 .filter_map(|id| {
-                    store.get(&id).map(|v| Hit {
-                        id,
+                    store.get(id).map(|v| Hit {
+                        id: *id,
                         distance: l2_dist(&emb, &v.emb),
                     })
                 })
@@ -404,6 +514,147 @@ fn apply_op(
             unreachable!("admin ops are answered in the worker loop")
         }
     }
+}
+
+/// Magic of the entry-store block appended after the `FLSH1` index dump
+/// in full-state snapshots. Readers that only understand `FLSH1`
+/// (`ShardedIndex::load`) consume exactly the index prefix and never see
+/// this block.
+const STORE_MAGIC: &[u8; 5] = b"EMBS1";
+
+/// Hard cap on counts read from a snapshot before they are trusted for
+/// allocation sizing (mirrors the FLSH1 decoder's policy).
+const MAX_STORE_COUNT: usize = 1 << 28;
+
+/// `InvalidData` error with restore context.
+fn restore_error(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("EMBS1: {msg}"))
+}
+
+/// Write the full service state: FLSH1 index block, then the EMBS1 store
+/// block (hash-path probe signature, then per entry: id, re-rank
+/// embedding, insert-time signature).
+///
+/// The store block is serialized to memory under the read lock and the
+/// device write happens after releasing it, so snapshotting a large
+/// corpus stalls concurrent inserts/removes for the in-memory encode
+/// only, never for disk I/O.
+fn save_state_inner(state: &State, w: &mut dyn std::io::Write) -> io::Result<()> {
+    state.index.save(w)?;
+    let mut buf = Vec::new();
+    {
+        let store = state.store.read().unwrap();
+        write_store_block(&store, &state.probe_sig, &mut buf)?;
+    }
+    w.write_all(&buf)
+}
+
+/// Encode the EMBS1 store block (see [`save_state_inner`] for the
+/// layout).
+fn write_store_block(
+    store: &HashMap<u64, Entry>,
+    probe_sig: &[i32],
+    w: &mut dyn std::io::Write,
+) -> io::Result<()> {
+    w.write_all(STORE_MAGIC)?;
+    write_u64(w, probe_sig.len() as u64)?;
+    for s in probe_sig {
+        write_i32(w, *s)?;
+    }
+    write_u64(w, store.len() as u64)?;
+    for (id, e) in store.iter() {
+        write_u64(w, *id)?;
+        write_u64(w, e.emb.len() as u64)?;
+        for v in &e.emb {
+            write_u64(w, v.to_bits())?;
+        }
+        write_u64(w, e.sig.len() as u64)?;
+        for s in &e.sig {
+            write_i32(w, *s)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the EMBS1 store block written by [`save_state_inner`]. The
+/// recorded hash-path probe signature must equal `want_probe`, every
+/// signature must have length `sig_len`, and every embedding length
+/// `emb_dim`; corrupt counts are rejected before any allocation is sized
+/// from them.
+fn read_store(
+    r: &mut dyn Read,
+    sig_len: usize,
+    emb_dim: usize,
+    want_probe: &[i32],
+) -> io::Result<HashMap<u64, Entry>> {
+    let mut magic = [0u8; 5];
+    let mut filled = 0usize;
+    while filled < magic.len() {
+        let n = r.read(&mut magic[filled..])?;
+        if n == 0 {
+            break;
+        }
+        filled += n;
+    }
+    if filled == 0 {
+        // bare FLSH1 file: no store block at all
+        return Ok(HashMap::new());
+    }
+    if filled < magic.len() || &magic != STORE_MAGIC {
+        return Err(restore_error(format!(
+            "bad store-block magic {magic:?} (want {STORE_MAGIC:?})"
+        )));
+    }
+    let probe_len = read_u64(r)? as usize;
+    if probe_len > 1 << 20 {
+        return Err(restore_error(format!(
+            "implausible probe-signature length {probe_len}"
+        )));
+    }
+    let mut probe = Vec::with_capacity(probe_len.min(4096));
+    for _ in 0..probe_len {
+        probe.push(read_i32(r)?);
+    }
+    if probe != want_probe {
+        return Err(restore_error(
+            "hash configuration mismatch: the snapshot was written under a \
+             different seed / r / embedding than this service is configured \
+             with — its signatures would never match live queries"
+                .to_string(),
+        ));
+    }
+    let count = read_u64(r)? as usize;
+    if count > MAX_STORE_COUNT {
+        return Err(restore_error(format!("implausible entry count {count}")));
+    }
+    let mut store = HashMap::with_capacity(count.min(4096));
+    for i in 0..count {
+        let id = read_u64(r)?;
+        let emb_len = read_u64(r)? as usize;
+        if emb_len != emb_dim {
+            return Err(restore_error(format!(
+                "entry {i} (id {id}): embedding length {emb_len} != service dimension {emb_dim}"
+            )));
+        }
+        let mut emb = Vec::with_capacity(emb_len);
+        for _ in 0..emb_len {
+            emb.push(f64::from_bits(read_u64(r)?));
+        }
+        let got_sig_len = read_u64(r)? as usize;
+        if got_sig_len != sig_len {
+            return Err(restore_error(format!(
+                "entry {i} (id {id}): signature length {got_sig_len} != k*l {sig_len}"
+            )));
+        }
+        let mut sig = Vec::with_capacity(sig_len);
+        for _ in 0..sig_len {
+            sig.push(read_i32(r)?);
+        }
+        if store.insert(id, Entry { emb, sig }).is_some() {
+            return Err(restore_error(format!("duplicate id {id} in store block")));
+        }
+    }
+    Ok(store)
 }
 
 /// `Write` adapter that counts bytes, so `Snapshotted` can report the
@@ -432,7 +683,7 @@ fn write_snapshot(state: &State, path: &str) -> Response {
             inner: std::io::BufWriter::new(file),
             written: 0,
         };
-        state.index.save(&mut w)?;
+        save_state_inner(state, &mut w)?;
         std::io::Write::flush(&mut w)?;
         Ok(w.written)
     };
@@ -454,7 +705,7 @@ mod tests {
     use crate::hashing::PStableHashBank;
     use crate::util::rng::Xoshiro256pp;
 
-    fn test_service(workers: usize) -> (Coordinator, Vec<f64>) {
+    fn test_config(workers: usize) -> ServiceConfig {
         let mut cfg = ServiceConfig {
             workers,
             k: 2,
@@ -465,11 +716,25 @@ mod tests {
             ..Default::default()
         };
         cfg.probe_depth = 1;
+        cfg
+    }
+
+    /// Deterministic path: the same config always yields a bit-identical
+    /// embedder + bank (what makes the restore parity test exact).
+    fn test_path(cfg: &ServiceConfig) -> (Arc<dyn HashPath>, Vec<f64>) {
         let mut rng = Xoshiro256pp::seed_from_u64(81);
         let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
         let points = emb.sample_points().to_vec();
         let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
-        let path = Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank)));
+        (
+            Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank))),
+            points,
+        )
+    }
+
+    fn test_service(workers: usize) -> (Coordinator, Vec<f64>) {
+        let cfg = test_config(workers);
+        let (path, points) = test_path(&cfg);
         (Coordinator::start(&cfg, path), points)
     }
 
@@ -651,6 +916,88 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         svc.shutdown();
+    }
+
+    #[test]
+    fn save_state_restore_roundtrip_preserves_answers() {
+        let cfg = test_config(2);
+        let (path, points) = test_path(&cfg);
+        let svc = Coordinator::start(&cfg, path);
+        for i in 0..30u64 {
+            let phase = 2.0 * std::f64::consts::PI * (i as f64 / 30.0);
+            assert_eq!(
+                svc.submit(Op::Insert {
+                    id: i,
+                    samples: sample_sine(phase, &points),
+                }),
+                Response::Inserted { id: i }
+            );
+        }
+        let queries: Vec<Vec<f32>> = (0..8)
+            .map(|q| sample_sine(0.3 + 0.2 * q as f64, &points))
+            .collect();
+        let before: Vec<Response> = queries
+            .iter()
+            .map(|s| {
+                svc.submit(Op::Query {
+                    samples: s.clone(),
+                    k: 5,
+                })
+            })
+            .collect();
+        let mut snapshot = Vec::new();
+        svc.save_state(&mut snapshot).unwrap();
+        svc.shutdown();
+
+        // a fresh coordinator restored from the snapshot (same config →
+        // bit-identical hash path) answers queries identically, with
+        // exact re-rank distances (the store block carries f64 bits)
+        let (path2, _) = test_path(&cfg);
+        let svc2 = Coordinator::restore(&cfg, path2, &mut snapshot.as_slice()).unwrap();
+        assert_eq!(svc2.indexed(), 30);
+        for (s, want) in queries.iter().zip(&before) {
+            let got = svc2.submit(Op::Query {
+                samples: s.clone(),
+                k: 5,
+            });
+            assert_eq!(&got, want);
+        }
+        // the restored store still enforces id uniqueness and removal
+        match svc2.submit(Op::Insert {
+            id: 7,
+            samples: sample_sine(0.1, &points),
+        }) {
+            Response::Error(e) => assert!(e.contains("duplicate"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(svc2.submit(Op::Remove { id: 7 }), Response::Removed { id: 7 });
+        assert_eq!(svc2.indexed(), 29);
+
+        // an index-only FLSH1 file (no store block) is rejected loudly —
+        // it cannot serve re-ranked queries
+        let mut bare = Vec::new();
+        svc2.save_index(&mut bare).unwrap();
+        let (path3, _) = test_path(&cfg);
+        let err = Coordinator::restore(&cfg, path3, &mut bare.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("EMBS1"), "{err}");
+        // shape mismatch is rejected before any store parsing
+        let mut other_cfg = cfg.clone();
+        other_cfg.l = 4;
+        let (path4, _) = test_path(&other_cfg);
+        let err = Coordinator::restore(&other_cfg, path4, &mut snapshot.as_slice())
+            .unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+        // a hash path built from a different seed is refused outright —
+        // its signatures would never match the snapshot's (probe stamp)
+        let mut rng = Xoshiro256pp::seed_from_u64(4242);
+        let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+        let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+        let other_path: Arc<dyn HashPath> =
+            Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank)));
+        let err =
+            Coordinator::restore(&cfg, other_path, &mut snapshot.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("hash configuration"), "{err}");
+        svc2.shutdown();
     }
 
     #[test]

@@ -35,6 +35,14 @@ pub trait HashBank: Send + Sync {
 
     /// Hash a vector with every function in the bank.
     fn hash(&self, v: &[f64]) -> Vec<i32>;
+
+    /// Hash a vector into a caller-provided buffer of length
+    /// [`HashBank::num_hashes`] — the allocation-free form the batched
+    /// request path uses. The default delegates to [`HashBank::hash`];
+    /// the in-tree banks override it to write `out` directly.
+    fn hash_into(&self, v: &[f64], out: &mut [i32]) {
+        out.copy_from_slice(&self.hash(v));
+    }
 }
 
 /// A single vector hash function `ℝ^N → ℤ`.
@@ -115,14 +123,19 @@ impl HashBank for PStableHashBank {
     }
 
     fn hash(&self, v: &[f64]) -> Vec<i32> {
+        let mut out = vec![0i32; self.k];
+        self.hash_into(v, &mut out);
+        out
+    }
+
+    fn hash_into(&self, v: &[f64], out: &mut [i32]) {
         assert_eq!(v.len(), self.dim, "input dimension mismatch");
-        let mut out = Vec::with_capacity(self.k);
-        for j in 0..self.k {
+        assert_eq!(out.len(), self.k, "output length mismatch");
+        for (j, o) in out.iter_mut().enumerate() {
             let row = &self.proj[j * self.dim..(j + 1) * self.dim];
             let dot: f64 = row.iter().zip(v).map(|(a, x)| a * x).sum();
-            out.push((dot / self.r + self.offsets[j]).floor() as i32);
+            *o = (dot / self.r + self.offsets[j]).floor() as i32;
         }
-        out
     }
 }
 
@@ -168,14 +181,19 @@ impl HashBank for SimHashBank {
     }
 
     fn hash(&self, v: &[f64]) -> Vec<i32> {
+        let mut out = vec![0i32; self.k];
+        self.hash_into(v, &mut out);
+        out
+    }
+
+    fn hash_into(&self, v: &[f64], out: &mut [i32]) {
         assert_eq!(v.len(), self.dim, "input dimension mismatch");
-        let mut out = Vec::with_capacity(self.k);
-        for j in 0..self.k {
+        assert_eq!(out.len(), self.k, "output length mismatch");
+        for (j, o) in out.iter_mut().enumerate() {
             let row = &self.proj[j * self.dim..(j + 1) * self.dim];
             let dot: f64 = row.iter().zip(v).map(|(a, x)| a * x).sum();
-            out.push(if dot >= 0.0 { 1 } else { 0 });
+            *o = if dot >= 0.0 { 1 } else { 0 };
         }
-        out
     }
 }
 
@@ -280,14 +298,19 @@ impl HashBank for LazyL2Hash {
     }
 
     fn hash(&self, v: &[f64]) -> Vec<i32> {
+        let mut out = vec![0i32; self.k];
+        self.hash_into(v, &mut out);
+        out
+    }
+
+    fn hash_into(&self, v: &[f64], out: &mut [i32]) {
+        assert_eq!(out.len(), self.k, "output length mismatch");
         self.ensure_cached(v.len());
         let cache = self.cache.read().unwrap();
-        let mut out = Vec::with_capacity(self.k);
-        for j in 0..self.k {
+        for (j, o) in out.iter_mut().enumerate() {
             let dot: f64 = v.iter().zip(&cache[j]).map(|(&x, &a)| a * x).sum();
-            out.push((dot / self.r + self.offsets[j]).floor() as i32);
+            *o = (dot / self.r + self.offsets[j]).floor() as i32;
         }
-        out
     }
 }
 

@@ -10,6 +10,27 @@
 //! * **Multi-probe** (Lv et al. 2007): additionally probe buckets whose
 //!   keys differ from the query's in a few coordinates (`±1` perturbations
 //!   for the p-stable hash), trading probes for tables.
+//!
+//! # Fingerprint keying (PR 3)
+//!
+//! Tables are keyed on a 64-bit **fingerprint** of each `k`-chunk
+//! (FxHash-style multiply-xor folding, [`fingerprint`]) under a
+//! pass-through hasher, instead of `Box<[i32]>` keys under SipHash: a
+//! probe hashes 8 bytes once instead of re-SipHashing `4·k` bytes, and
+//! bucket lookups never allocate. Exactness is preserved — each bucket
+//! stores its full key, and every fingerprint hit is verified against it,
+//! so two distinct keys that collide in the fingerprint space live side
+//! by side in the same slot and never mix their ids.
+//!
+//! # Allocation-free queries, deterministic order
+//!
+//! [`LshIndex::query_into`] appends candidates into a caller-provided
+//! `Vec<u64>` using a reusable [`QueryScratch`] (multi-probe keys are
+//! enumerated in place — no `Vec<Vec<i32>>` of perturbations, no
+//! `HashSet` dedup). Candidates are returned **sorted by id** and
+//! deduplicated, so results are stable across runs and identical between
+//! the sharded and flat indexes; the allocating [`LshIndex::query`] /
+//! [`LshIndex::query_multiprobe`] wrappers share the same contract.
 
 pub mod shard;
 pub mod tuning;
@@ -18,6 +39,7 @@ pub use shard::ShardedIndex;
 pub use tuning::{estimate_distances, tune, Tuning, TuningGoal};
 
 use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
 
 /// Index shape parameters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,8 +70,79 @@ impl IndexConfig {
     }
 }
 
-/// A bucket key: the `k` concatenated hash values for one table.
-type Key = Box<[i32]>;
+/// 64-bit fingerprint of a table key (FxHash-style multiply-xor fold).
+/// Distinct keys may collide — [`Bucket`] keeps the full key so lookups
+/// verify exactly.
+#[inline]
+pub(crate) fn fingerprint(key: &[i32]) -> u64 {
+    const MUL: u64 = 0x517c_c1b7_2722_0a95;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in key {
+        h = (h.rotate_left(5) ^ (v as u32 as u64)).wrapping_mul(MUL);
+    }
+    h
+}
+
+/// Pass-through [`Hasher`] for already-mixed fingerprint keys: the map
+/// hashes a `u64` key by using it verbatim.
+#[derive(Debug, Default)]
+pub struct FingerprintHasher(u64);
+
+impl Hasher for FingerprintHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, _bytes: &[u8]) {
+        unreachable!("fingerprint tables only hash u64 keys");
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.0 = v;
+    }
+}
+
+/// One bucket: the full `k`-chunk key (fingerprint verification) + ids.
+#[derive(Debug, Clone)]
+pub(crate) struct Bucket {
+    pub(crate) key: Box<[i32]>,
+    pub(crate) ids: Vec<u64>,
+}
+
+/// A table: fingerprint → buckets sharing it (nearly always exactly one;
+/// the `Vec` resolves fingerprint collisions between distinct keys).
+pub(crate) type Table = HashMap<u64, Vec<Bucket>, BuildHasherDefault<FingerprintHasher>>;
+
+/// Reusable scratch for [`LshIndex::query_into`] /
+/// [`ShardedIndex::query_into`]: holds the in-place multi-probe key
+/// buffer so queries allocate nothing in steady state.
+#[derive(Debug, Default)]
+pub struct QueryScratch {
+    probe: Vec<i32>,
+}
+
+/// Visit `buf` itself, then every key reachable by perturbing at most
+/// `depth` distinct coordinates by ±1 (the multi-probe neighbourhood of
+/// Lv et al.), restoring `buf` before returning. Probe count is
+/// `Σ_{d≤depth} C(k, d)·2^d`.
+pub(crate) fn for_each_probe(buf: &mut [i32], depth: usize, f: &mut dyn FnMut(&[i32])) {
+    f(buf);
+    probe_rec(buf, 0, depth.min(buf.len()), f);
+}
+
+fn probe_rec(buf: &mut [i32], start: usize, remaining: usize, f: &mut dyn FnMut(&[i32])) {
+    if remaining == 0 {
+        return;
+    }
+    for i in start..buf.len() {
+        for delta in [-1i32, 1] {
+            buf[i] = buf[i].wrapping_add(delta);
+            f(buf);
+            probe_rec(buf, i + 1, remaining - 1, f);
+            buf[i] = buf[i].wrapping_sub(delta);
+        }
+    }
+}
 
 /// Multi-table LSH index mapping hash signatures to entry ids.
 ///
@@ -60,7 +153,7 @@ type Key = Box<[i32]>;
 #[derive(Debug, Clone)]
 pub struct LshIndex {
     config: IndexConfig,
-    tables: Vec<HashMap<Key, Vec<u64>>>,
+    tables: Vec<Table>,
     len: usize,
 }
 
@@ -69,7 +162,7 @@ impl LshIndex {
     pub fn new(config: IndexConfig) -> Self {
         Self {
             config,
-            tables: (0..config.l).map(|_| HashMap::new()).collect(),
+            tables: (0..config.l).map(|_| Table::default()).collect(),
             len: 0,
         }
     }
@@ -104,7 +197,14 @@ impl LshIndex {
     pub fn insert(&mut self, id: u64, signature: &[i32]) {
         let keys: Vec<&[i32]> = self.keys(signature).collect();
         for (table, key) in self.tables.iter_mut().zip(keys) {
-            table.entry(key.into()).or_default().push(id);
+            let buckets = table.entry(fingerprint(key)).or_default();
+            match buckets.iter_mut().find(|b| &*b.key == key) {
+                Some(b) => b.ids.push(id),
+                None => buckets.push(Bucket {
+                    key: key.into(),
+                    ids: vec![id],
+                }),
+            }
         }
         self.len += 1;
     }
@@ -117,14 +217,21 @@ impl LshIndex {
         let keys: Vec<&[i32]> = self.keys(signature).collect();
         let mut found = false;
         for (table, key) in self.tables.iter_mut().zip(keys) {
-            if let Some(ids) = table.get_mut(key) {
-                let before = ids.len();
-                ids.retain(|&x| x != id);
-                if ids.len() != before {
-                    found = true;
+            let fp = fingerprint(key);
+            if let Some(buckets) = table.get_mut(&fp) {
+                if let Some(slot) = buckets.iter().position(|b| &*b.key == key) {
+                    let ids = &mut buckets[slot].ids;
+                    let before = ids.len();
+                    ids.retain(|&x| x != id);
+                    if ids.len() != before {
+                        found = true;
+                    }
+                    if ids.is_empty() {
+                        buckets.swap_remove(slot);
+                    }
                 }
-                if ids.is_empty() {
-                    table.remove(key);
+                if buckets.is_empty() {
+                    table.remove(&fp);
                 }
             }
         }
@@ -134,49 +241,101 @@ impl LshIndex {
         found
     }
 
-    /// Collect candidate ids colliding with `signature` in any table
-    /// (deduplicated, unordered).
-    pub fn query(&self, signature: &[i32]) -> Vec<u64> {
-        let mut seen = std::collections::HashSet::new();
-        let keys: Vec<&[i32]> = self.keys(signature).collect();
-        for (table, key) in self.tables.iter().zip(keys) {
-            if let Some(ids) = table.get(key) {
-                seen.extend(ids.iter().copied());
+    /// Append the ids of `key`'s bucket (if any) to `out`, verifying the
+    /// full key behind the fingerprint.
+    fn bucket_into(table: &Table, key: &[i32], out: &mut Vec<u64>) {
+        if let Some(buckets) = table.get(&fingerprint(key)) {
+            for b in buckets {
+                if &*b.key == key {
+                    out.extend_from_slice(&b.ids);
+                }
             }
         }
-        seen.into_iter().collect()
+    }
+
+    /// Raw probe pass shared by the flat and sharded query paths: append
+    /// every colliding id (with cross-table duplicates) to `out`. The
+    /// caller sorts + dedups once at the end.
+    pub(crate) fn probe_into(
+        &self,
+        signature: &[i32],
+        depth: usize,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<u64>,
+    ) {
+        let k = self.config.k;
+        assert_eq!(
+            signature.len(),
+            self.config.total_hashes(),
+            "signature length must be k*l"
+        );
+        for (table, key) in self.tables.iter().zip(signature.chunks_exact(k)) {
+            if depth == 0 {
+                Self::bucket_into(table, key, out);
+            } else {
+                scratch.probe.clear();
+                scratch.probe.extend_from_slice(key);
+                for_each_probe(&mut scratch.probe, depth, &mut |probe| {
+                    Self::bucket_into(table, probe, out);
+                });
+            }
+        }
+    }
+
+    /// Allocation-free query: collect candidate ids colliding with
+    /// `signature` in any table (multi-probing up to `depth` perturbed
+    /// coordinates; `depth = 0` probes exact buckets only) into `out`,
+    /// which is cleared first and left **sorted by id, deduplicated**.
+    pub fn query_into(
+        &self,
+        signature: &[i32],
+        depth: usize,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<u64>,
+    ) {
+        out.clear();
+        self.probe_into(signature, depth, scratch, out);
+        out.sort_unstable();
+        out.dedup();
+    }
+
+    /// Collect candidate ids colliding with `signature` in any table
+    /// (deduplicated, sorted by id).
+    pub fn query(&self, signature: &[i32]) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.query_into(signature, 0, &mut QueryScratch::default(), &mut out);
+        out
     }
 
     /// Multi-probe query: additionally probe buckets reachable by
     /// perturbing up to `depth` coordinates of each table key by ±1
     /// (suitable for the p-stable hash, whose adjacent buckets hold the
     /// next-nearest points). `depth = 0` reduces to [`LshIndex::query`].
+    /// Results are sorted by id and deduplicated.
     ///
     /// Probe count per table is `Σ_{d≤depth} C(k, d)·2^d`; keep `depth`
     /// small (1–2) as Lv et al. recommend.
     pub fn query_multiprobe(&self, signature: &[i32], depth: usize) -> Vec<u64> {
-        let mut seen = std::collections::HashSet::new();
-        let keys: Vec<&[i32]> = self.keys(signature).collect();
-        for (table, key) in self.tables.iter().zip(keys) {
-            for probe in perturbations(key, depth) {
-                if let Some(ids) = table.get(probe.as_slice()) {
-                    seen.extend(ids.iter().copied());
-                }
-            }
-        }
-        seen.into_iter().collect()
+        let mut out = Vec::new();
+        self.query_into(signature, depth, &mut QueryScratch::default(), &mut out);
+        out
     }
 
     /// Iterate over the raw tables (used by the snapshot format in
     /// [`shard`]).
-    pub(crate) fn tables(&self) -> impl Iterator<Item = &HashMap<Key, Vec<u64>>> {
+    pub(crate) fn tables(&self) -> impl Iterator<Item = &Table> {
         self.tables.iter()
     }
 
     /// Restore one bucket verbatim (snapshot deserialization only —
-    /// bypasses the per-insert length accounting).
-    pub(crate) fn restore_bucket(&mut self, table: usize, key: Key, ids: Vec<u64>) {
-        self.tables[table].insert(key, ids);
+    /// bypasses the per-insert length accounting). The fingerprint is
+    /// recomputed from the key, so `FLSH1` files need no format change.
+    pub(crate) fn restore_bucket(&mut self, table: usize, key: Box<[i32]>, ids: Vec<u64>) {
+        let fp = fingerprint(&key);
+        self.tables[table]
+            .entry(fp)
+            .or_default()
+            .push(Bucket { key, ids });
     }
 
     /// Set the entry count (snapshot deserialization only).
@@ -191,10 +350,12 @@ impl LshIndex {
         let mut max = 0usize;
         let mut total = 0usize;
         for t in &self.tables {
-            buckets += t.len();
-            for v in t.values() {
-                max = max.max(v.len());
-                total += v.len();
+            for bs in t.values() {
+                buckets += bs.len();
+                for b in bs {
+                    max = max.max(b.ids.len());
+                    total += b.ids.len();
+                }
             }
         }
         BucketStats {
@@ -221,33 +382,6 @@ pub struct BucketStats {
     pub max_bucket: usize,
     /// mean bucket size
     pub mean_bucket: f64,
-}
-
-/// All keys reachable from `key` by perturbing at most `depth` coordinates
-/// by ±1, the exact key first.
-fn perturbations(key: &[i32], depth: usize) -> Vec<Vec<i32>> {
-    let mut out = vec![key.to_vec()];
-    if depth == 0 {
-        return out;
-    }
-    // breadth-first by number of perturbed coordinates
-    let mut frontier: Vec<(Vec<i32>, usize)> = vec![(key.to_vec(), 0)];
-    for d in 1..=depth.min(key.len()) {
-        let mut next = Vec::new();
-        for (base, start) in &frontier {
-            for i in *start..key.len() {
-                for delta in [-1i32, 1] {
-                    let mut probe = base.clone();
-                    probe[i] = probe[i].wrapping_add(delta);
-                    out.push(probe.clone());
-                    next.push((probe, i + 1));
-                }
-            }
-        }
-        frontier = next;
-        let _ = d;
-    }
-    out
 }
 
 #[cfg(test)]
@@ -338,6 +472,34 @@ mod tests {
     }
 
     #[test]
+    fn query_results_are_sorted_by_id() {
+        // ids inserted in shuffled order under one shared bucket come
+        // back sorted (the determinism contract wire parity relies on)
+        let mut idx = LshIndex::new(IndexConfig::new(1, 2));
+        for id in [9u64, 3, 7, 1, 8, 2] {
+            idx.insert(id, &[0, (id % 2) as i32]);
+        }
+        assert_eq!(idx.query(&[0, 0]), vec![1, 2, 3, 7, 8, 9]);
+        assert_eq!(idx.query_multiprobe(&[0, 0], 1), vec![1, 2, 3, 7, 8, 9]);
+    }
+
+    #[test]
+    fn query_into_reuses_scratch() {
+        let mut idx = LshIndex::new(IndexConfig::new(2, 2));
+        for id in 0..20u64 {
+            idx.insert(id, &[(id % 3) as i32, 0, (id % 5) as i32, 1]);
+        }
+        let mut scratch = QueryScratch::default();
+        let mut out = Vec::new();
+        for id in 0..20u64 {
+            let sig = [(id % 3) as i32, 0, (id % 5) as i32, 1];
+            idx.query_into(&sig, 1, &mut scratch, &mut out);
+            assert_eq!(out, idx.query_multiprobe(&sig, 1), "id {id}");
+            assert!(out.contains(&id));
+        }
+    }
+
+    #[test]
     fn bucket_stats_reflect_contents() {
         let mut idx = LshIndex::new(IndexConfig::new(1, 2));
         idx.insert(1, &[0, 0]);
@@ -351,15 +513,58 @@ mod tests {
     #[test]
     fn perturbation_count() {
         // k = 3, depth 1: 1 + 3*2 = 7 probes
-        let probes = perturbations(&[0, 0, 0], 1);
-        assert_eq!(probes.len(), 7);
-        // depth 2 adds C(3,2)*4 = 12 → but our BFS enumerates ordered
-        // combinations without replacement: 1 + 6 + 12 = 19
-        let probes2 = perturbations(&[0, 0, 0], 2);
-        assert_eq!(probes2.len(), 19);
+        let mut count = 0usize;
+        let mut buf = vec![0i32; 3];
+        for_each_probe(&mut buf, 1, &mut |_| count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(buf, vec![0, 0, 0], "buffer restored");
+        // depth 2 adds ordered pairs without replacement: 1 + 6 + 12 = 19,
         // all unique
-        let set: std::collections::HashSet<_> = probes2.iter().collect();
-        assert_eq!(set.len(), probes2.len());
+        let mut seen = std::collections::HashSet::new();
+        for_each_probe(&mut buf, 2, &mut |p| {
+            assert!(seen.insert(p.to_vec()), "duplicate probe {p:?}");
+        });
+        assert_eq!(seen.len(), 19);
+    }
+
+    #[test]
+    fn fingerprint_collisions_resolved_by_full_key() {
+        // simulate two distinct keys colliding in fingerprint space by
+        // planting them in the same slot: lookups must verify the full
+        // key and never mix ids
+        let mut table = Table::default();
+        let key_a: Box<[i32]> = vec![1, 2].into();
+        let key_b: Box<[i32]> = vec![3, 4].into();
+        let fp = fingerprint(&key_a);
+        table.insert(
+            fp,
+            vec![
+                Bucket {
+                    key: key_a,
+                    ids: vec![7],
+                },
+                Bucket {
+                    key: key_b,
+                    ids: vec![9],
+                },
+            ],
+        );
+        let mut out = Vec::new();
+        LshIndex::bucket_into(&table, &[1, 2], &mut out);
+        assert_eq!(out, vec![7], "only the verified key's ids");
+        out.clear();
+        // key_b was planted under key_a's fingerprint; a real lookup for
+        // it computes its own fingerprint and misses — ids never leak
+        LshIndex::bucket_into(&table, &[3, 4], &mut out);
+        assert!(out.is_empty() || out == vec![9]); // found only if fps truly collide
+    }
+
+    #[test]
+    fn fingerprints_distinguish_order_and_sign() {
+        assert_ne!(fingerprint(&[1, 2]), fingerprint(&[2, 1]));
+        assert_ne!(fingerprint(&[1]), fingerprint(&[-1]));
+        assert_ne!(fingerprint(&[0]), fingerprint(&[0, 0]));
+        assert_eq!(fingerprint(&[5, -3]), fingerprint(&[5, -3]));
     }
 
     #[test]

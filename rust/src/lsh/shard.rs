@@ -6,7 +6,7 @@
 //! binary dump of every shard's tables, so a service restart does not
 //! have to re-embed and re-hash the corpus.
 
-use super::{IndexConfig, LshIndex};
+use super::{IndexConfig, LshIndex, QueryScratch};
 use std::io::{self, Read, Write};
 use std::sync::RwLock;
 
@@ -68,22 +68,37 @@ impl ShardedIndex {
         self.shards[shard].write().unwrap().remove(id, signature)
     }
 
-    /// Query all shards and merge candidates (deduplicated by
-    /// construction: ids live in exactly one shard).
+    /// Allocation-free query across all shards: candidates are collected
+    /// into `out` (cleared first) using `scratch` for probe enumeration,
+    /// and left **sorted by id, deduplicated** — identical to what the
+    /// flat [`LshIndex`] would return for the same contents.
+    pub fn query_into(
+        &self,
+        signature: &[i32],
+        depth: usize,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<u64>,
+    ) {
+        out.clear();
+        for s in &self.shards {
+            s.read().unwrap().probe_into(signature, depth, scratch, out);
+        }
+        out.sort_unstable();
+        out.dedup();
+    }
+
+    /// Query all shards and merge candidates (sorted by id,
+    /// deduplicated).
     pub fn query(&self, signature: &[i32]) -> Vec<u64> {
         let mut out = Vec::new();
-        for s in &self.shards {
-            out.extend(s.read().unwrap().query(signature));
-        }
+        self.query_into(signature, 0, &mut QueryScratch::default(), &mut out);
         out
     }
 
-    /// Multi-probe query across all shards.
+    /// Multi-probe query across all shards (sorted by id, deduplicated).
     pub fn query_multiprobe(&self, signature: &[i32], depth: usize) -> Vec<u64> {
         let mut out = Vec::new();
-        for s in &self.shards {
-            out.extend(s.read().unwrap().query_multiprobe(signature, depth));
-        }
+        self.query_into(signature, depth, &mut QueryScratch::default(), &mut out);
         out
     }
 
@@ -153,17 +168,21 @@ fn truncated(what: &str, e: io::Error) -> io::Error {
 }
 
 impl LshIndex {
-    /// Serialize this index's tables (used by the snapshot format).
+    /// Serialize this index's tables (used by the snapshot format). The
+    /// on-disk layout is unchanged from the seed (`FLSH1` writes full
+    /// `k`-chunk keys); fingerprints are an in-memory acceleration and
+    /// are recomputed on load.
     pub fn write_to(&self, w: &mut dyn Write) -> io::Result<()> {
         write_u64(w, self.len() as u64)?;
         for table in self.tables() {
-            write_u64(w, table.len() as u64)?;
-            for (key, ids) in table {
-                for v in key.iter() {
+            let buckets: usize = table.values().map(Vec::len).sum();
+            write_u64(w, buckets as u64)?;
+            for bucket in table.values().flatten() {
+                for v in bucket.key.iter() {
                     write_i32(w, *v)?;
                 }
-                write_u64(w, ids.len() as u64)?;
-                for id in ids {
+                write_u64(w, bucket.ids.len() as u64)?;
+                for id in &bucket.ids {
                     write_u64(w, *id)?;
                 }
             }
@@ -213,21 +232,21 @@ impl LshIndex {
     }
 }
 
-fn write_u64(w: &mut dyn Write, v: u64) -> io::Result<()> {
+pub(crate) fn write_u64(w: &mut dyn Write, v: u64) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
 }
 
-fn write_i32(w: &mut dyn Write, v: i32) -> io::Result<()> {
+pub(crate) fn write_i32(w: &mut dyn Write, v: i32) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
 }
 
-fn read_u64(r: &mut dyn Read) -> io::Result<u64> {
+pub(crate) fn read_u64(r: &mut dyn Read) -> io::Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn read_i32(r: &mut dyn Read) -> io::Result<i32> {
+pub(crate) fn read_i32(r: &mut dyn Read) -> io::Result<i32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(i32::from_le_bytes(b))
@@ -271,17 +290,11 @@ mod tests {
             flat.insert(id, &s);
             sigs.push(s);
         }
+        // candidates come back sorted by id on both paths, so no
+        // caller-side sorting is needed for the comparison
         for s in sigs.iter().take(50) {
-            let mut a = sharded.query(s);
-            let mut b = flat.query(s);
-            a.sort_unstable();
-            b.sort_unstable();
-            assert_eq!(a, b);
-            let mut ap = sharded.query_multiprobe(s, 1);
-            let mut bp = flat.query_multiprobe(s, 1);
-            ap.sort_unstable();
-            bp.sort_unstable();
-            assert_eq!(ap, bp);
+            assert_eq!(sharded.query(s), flat.query(s));
+            assert_eq!(sharded.query_multiprobe(s, 1), flat.query_multiprobe(s, 1));
         }
     }
 
@@ -302,11 +315,7 @@ mod tests {
         assert_eq!(restored.num_shards(), 2);
         assert_eq!(restored.config(), IndexConfig::new(3, 2));
         for (id, s) in sigs.iter().enumerate() {
-            let mut a = idx.query(s);
-            let mut b = restored.query(s);
-            a.sort_unstable();
-            b.sort_unstable();
-            assert_eq!(a, b, "id {id}");
+            assert_eq!(idx.query(s), restored.query(s), "id {id}");
         }
     }
 

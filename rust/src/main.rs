@@ -15,9 +15,15 @@
 //!                     [--pairs N] [--hashes N] [--dim N] [--seed S]
 //!                     [--out results/]
 //! funclsh hash        --phase X [--config svc.toml]
+//! funclsh bench-hash  [--quick] [--out BENCH_hashpath.json]
+//!                     (seed-vs-new kernel + index throughput grid,
+//!                      emitted as the JSON perf-trajectory file)
 //! funclsh selftest    [--artifacts DIR]
 //! funclsh info
 //! ```
+//!
+//! `serve --snapshot F` both restores `F` on startup (when it exists)
+//! and writes it on graceful shutdown, so restarts keep the corpus.
 
 use funclsh::cli::Args;
 use funclsh::config::ServiceConfig;
@@ -32,12 +38,13 @@ fn main() {
         Some("load") => cmd_load(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("hash") => cmd_hash(&args),
+        Some("bench-hash") => cmd_bench_hash(&args),
         Some("tune") => cmd_tune(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: funclsh <serve|load|experiment|hash|selftest|info> [options]\n\
+                "usage: funclsh <serve|load|experiment|hash|bench-hash|selftest|info> [options]\n\
                  see `funclsh experiment all --out results/` for the paper reproduction"
             );
             2
@@ -194,7 +201,37 @@ fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
         }
     }
     let (path, points) = build_service(&cfg);
-    let svc = Arc::new(Coordinator::start(&cfg, path));
+    // `--snapshot F` (or `[server] snapshot_path`) doubles as the restore
+    // source: when the file exists, reload the index + entry store from
+    // it so a restart serves the corpus without re-hashing. A corrupt or
+    // mismatched snapshot aborts startup rather than silently serving an
+    // empty (or wrong) index — delete or fix the file to start fresh.
+    let svc = if !cfg.server.snapshot_path.is_empty()
+        && Path::new(&cfg.server.snapshot_path).exists()
+    {
+        let restored = std::fs::File::open(&cfg.server.snapshot_path)
+            .map_err(|e| e.to_string())
+            .and_then(|f| {
+                Coordinator::restore(&cfg, path, &mut std::io::BufReader::new(f))
+                    .map_err(|e| e.to_string())
+            });
+        match restored {
+            Ok(svc) => {
+                eprintln!(
+                    "restored {} entries from {}",
+                    svc.indexed(),
+                    cfg.server.snapshot_path
+                );
+                Arc::new(svc)
+            }
+            Err(e) => {
+                eprintln!("cannot restore snapshot {}: {e}", cfg.server.snapshot_path);
+                return 1;
+            }
+        }
+    } else {
+        Arc::new(Coordinator::start(&cfg, path))
+    };
     // moved into the server; Server::shutdown hands it back for the
     // final drain once the network layer is quiesced
     let server = match Server::start(&cfg, svc, points) {
@@ -375,11 +412,37 @@ fn cmd_hash(args: &Args) -> i32 {
     let samples: Vec<f32> = points.iter().map(|&x| f.eval(x) as f32).collect();
     match path.hash_rows(&[samples]) {
         Ok(sigs) => {
-            println!("{:?}", sigs[0]);
+            println!("{:?}", sigs.row(0));
             0
         }
         Err(e) => {
             eprintln!("hash failed: {e}");
+            1
+        }
+    }
+}
+
+/// `funclsh bench-hash`: the seed-vs-new hot-path grid. Measures rows/s
+/// of the scalar f64 seed kernel vs the blocked f32 kernel, and
+/// inserts+queries/s of the seed-model index vs the fingerprint index,
+/// across `{N, K, B}` shapes; writes the JSON trajectory file
+/// (`BENCH_hashpath.json` at the repo root by default) that later PRs
+/// regress against.
+fn cmd_bench_hash(args: &Args) -> i32 {
+    let opts = funclsh::bench::hashbench::HashBenchOptions {
+        quick: args.has("quick"),
+    };
+    let report = funclsh::bench::hashbench::run(&opts);
+    let out = args.get("out").unwrap_or("BENCH_hashpath.json");
+    let text = report.to_json();
+    match std::fs::write(out, text.clone() + "\n") {
+        Ok(()) => {
+            eprintln!("wrote {out}");
+            println!("{text}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
             1
         }
     }

@@ -8,7 +8,7 @@
 //! (Integration tests assert signature agreement between the two paths.)
 
 use super::{Engine, Manifest};
-use crate::coordinator::hashpath::{FoldedHashPath, HashPath};
+use crate::coordinator::hashpath::{FoldedHashPath, HashPath, Signatures};
 use anyhow::{anyhow, Result};
 use std::path::Path;
 use std::sync::Mutex;
@@ -100,7 +100,7 @@ impl HashPath for PjrtHashPath {
         self.k
     }
 
-    fn hash_rows(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<i32>>> {
+    fn hash_rows_into(&self, rows: &[Vec<f32>], out: &mut Signatures) -> Result<()> {
         let g = self.inner.lock().unwrap();
         let pipeline = g
             .engine
@@ -109,7 +109,8 @@ impl HashPath for PjrtHashPath {
         let b = self.batch;
         let n = self.dim;
         let k = self.k;
-        let mut out = Vec::with_capacity(rows.len());
+        out.reset(k, rows.len());
+        let mut done = 0usize;
         for chunk in rows.chunks(b) {
             let mut flat = vec![0f32; b * n];
             for (i, row) in chunk.iter().enumerate() {
@@ -118,13 +119,14 @@ impl HashPath for PjrtHashPath {
             }
             let hashes = pipeline.hash_batch(&flat, &g.proj, &g.offsets)?;
             for i in 0..chunk.len() {
-                out.push(hashes[i * k..(i + 1) * k].to_vec());
+                out.row_mut(done + i).copy_from_slice(&hashes[i * k..(i + 1) * k]);
             }
+            done += chunk.len();
         }
-        Ok(out)
+        Ok(())
     }
 
-    fn embed_row(&self, row: &[f32]) -> Vec<f64> {
-        self.folded.embed_row(row)
+    fn embed_row_with(&self, row: &[f32], scratch: &mut Vec<f64>) -> Vec<f64> {
+        self.folded.embed_row_with(row, scratch)
     }
 }

@@ -38,7 +38,9 @@
 //! {"op":"query",    "samples":[f32…], "k":usize}
 //! {"op":"remove",   "id":u64}
 //! {"op":"metrics"}
-//! {"op":"snapshot", "path":"…"}          (FLSH1 index dump, server-side path)
+//! {"op":"snapshot", "path":"…"}          (full-state dump — FLSH1 index
+//!                                         block + EMBS1 entry store —
+//!                                         to a server-side path)
 //! {"op":"ping"}
 //! {"op":"points"}                        (published sample points)
 //! {"op":"shutdown"}                      (graceful stop + shutdown snapshot)
@@ -104,8 +106,14 @@
 //!
 //! Graceful shutdown (the `shutdown` op, or [`Server::shutdown`]) stops
 //! the acceptor, drains in-flight requests as above, and — if
-//! `server.snapshot_path` is configured — snapshots the `ShardedIndex`
-//! in the `FLSH1` format so a restart can skip re-hashing the corpus.
+//! `server.snapshot_path` is configured — snapshots the full service
+//! state: the `ShardedIndex` in the `FLSH1` format followed by an
+//! `EMBS1` entry-store block (re-rank embeddings + insert-time
+//! signatures, stamped with a hash-configuration probe). A restart with
+//! the same `snapshot_path` restores it on startup
+//! (`Coordinator::restore`), so the corpus — including exact re-ranked
+//! query answers — survives without re-inserting. `FLSH1`-only readers
+//! (`ShardedIndex::load`) still parse the file's index prefix.
 
 pub mod client;
 #[cfg(target_os = "linux")]

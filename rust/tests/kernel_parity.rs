@@ -1,0 +1,179 @@
+//! Exactness battery for the PR 3 hot path: the blocked/threaded f32
+//! kernel must be **byte-identical** to the seed scalar f64 path
+//! (`FoldedHashPath::hash_rows_scalar`, the exact math the service
+//! shipped before the kernel rewrite — the statistical ±1-boundary parity
+//! against `CpuHashPath` lives in `properties.rs`, unchanged from seed),
+//! and the fingerprint-keyed index must return **identical candidate
+//! sets** to a brute-force oracle of the seed index semantics, in sorted
+//! id order, across random `{N, K, L, B}` shapes including `B = 1` and
+//! non-multiples of the kernel block sizes.
+
+use funclsh::coordinator::{FoldedHashPath, HashPath};
+use funclsh::embedding::{Interval, MonteCarloEmbedder};
+use funclsh::hashing::PStableHashBank;
+use funclsh::lsh::{IndexConfig, LshIndex, QueryScratch};
+use funclsh::util::proptest::{check, Gen};
+
+fn random_rows(g: &mut Gen, n: usize, count: usize) -> Vec<Vec<f32>> {
+    (0..count)
+        .map(|_| (0..n).map(|_| g.f64_range(-2.0, 2.0) as f32).collect())
+        .collect()
+}
+
+fn random_folded(g: &mut Gen, n: usize, k: usize) -> FoldedHashPath {
+    let emb = MonteCarloEmbedder::new(Interval::unit(), n, 2.0, g.rng());
+    let r = g.f64_range(0.25, 2.0);
+    let bank = PStableHashBank::new(n, k, 2.0, r, g.rng());
+    let proj_rows: Vec<&[f64]> = (0..k).map(|j| bank.projection_row(j)).collect();
+    FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r())
+}
+
+#[test]
+fn blocked_kernel_is_byte_identical_to_seed_scalar_path() {
+    check(25, |g| {
+        // deliberately awkward shapes: primes, non-multiples of the
+        // 4×32 register tile, and B ∈ {1, small, medium}
+        let n = g.usize_in(1..100);
+        let k = g.usize_in(1..80);
+        let folded = random_folded(g, n, k);
+        let batches = [1usize, g.usize_in(2..8), g.usize_in(8..70)];
+        for b in batches {
+            let rows = random_rows(g, n, b);
+            let scalar = folded.hash_rows_scalar(&rows).unwrap();
+            let blocked = folded.hash_rows(&rows).unwrap();
+            assert_eq!(blocked.len(), b, "seed {}", g.seed);
+            assert_eq!(blocked.signature_len(), k, "seed {}", g.seed);
+            for (i, want) in scalar.iter().enumerate() {
+                assert_eq!(
+                    blocked.row(i),
+                    want.as_slice(),
+                    "seed {}: n={n} k={k} b={b} row {i}",
+                    g.seed
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn threaded_kernel_is_byte_identical_and_deterministic() {
+    // B·N·K = 2M multiply-adds > the parallel threshold, so this runs the
+    // scoped-thread fan-out; per-cell results must not depend on the
+    // split, so two runs and the scalar oracle must all agree exactly
+    check(4, |g| {
+        let (n, k, b) = (256, 128, 64);
+        let folded = random_folded(g, n, k);
+        let rows = random_rows(g, n, b);
+        let scalar = folded.hash_rows_scalar(&rows).unwrap();
+        let first = folded.hash_rows(&rows).unwrap();
+        let second = folded.hash_rows(&rows).unwrap();
+        assert_eq!(first, second, "seed {}: nondeterministic kernel", g.seed);
+        for (i, want) in scalar.iter().enumerate() {
+            assert_eq!(first.row(i), want.as_slice(), "seed {}: row {i}", g.seed);
+        }
+    });
+}
+
+/// Brute-force oracle of the index semantics: a candidate collides at
+/// probe depth `d` if, in some table, its stored `k`-chunk differs from
+/// the query's in at most `d` coordinates, each by exactly ±1. Returns
+/// sorted, deduplicated ids — the contract `query_into` promises.
+fn oracle_query(entries: &[(u64, Vec<i32>)], q: &[i32], k: usize, depth: usize) -> Vec<u64> {
+    let mut out: Vec<u64> = entries
+        .iter()
+        .filter(|(_, s)| {
+            s.chunks_exact(k).zip(q.chunks_exact(k)).any(|(sc, qc)| {
+                let changed = sc.iter().zip(qc).filter(|(a, b)| a != b).count();
+                changed <= depth && sc.iter().zip(qc).all(|(a, b)| (a - b).abs() <= 1)
+            })
+        })
+        .map(|(id, _)| *id)
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+#[test]
+fn fingerprint_index_matches_seed_semantics_oracle() {
+    check(25, |g| {
+        let k = g.usize_in(1..4);
+        let l = g.usize_in(1..5);
+        let count = g.usize_in(1..50);
+        let mut idx = LshIndex::new(IndexConfig::new(k, l));
+        let mut entries: Vec<(u64, Vec<i32>)> = Vec::new();
+        for id in 0..count as u64 {
+            let sig: Vec<i32> = (0..k * l).map(|_| g.usize_in(0..5) as i32 - 2).collect();
+            idx.insert(id, &sig);
+            entries.push((id, sig));
+        }
+        // random removals must be reflected in every later answer
+        let keep: Vec<bool> = (0..entries.len()).map(|_| g.bool(0.8)).collect();
+        for (slot, (id, sig)) in entries.iter().enumerate() {
+            if !keep[slot] {
+                assert!(idx.remove(*id, sig), "seed {}", g.seed);
+            }
+        }
+        let entries: Vec<(u64, Vec<i32>)> = entries
+            .into_iter()
+            .enumerate()
+            .filter_map(|(slot, e)| keep[slot].then_some(e))
+            .collect();
+        assert_eq!(idx.len(), entries.len());
+
+        let mut scratch = QueryScratch::default();
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            let q: Vec<i32> = (0..k * l).map(|_| g.usize_in(0..5) as i32 - 2).collect();
+            for depth in 0..3usize {
+                let want = oracle_query(&entries, &q, k, depth);
+                // scratch-reusing path
+                idx.query_into(&q, depth, &mut scratch, &mut out);
+                assert_eq!(out, want, "seed {}: depth {depth}", g.seed);
+                // allocating wrappers share the contract (sorted, deduped)
+                if depth == 0 {
+                    assert_eq!(idx.query(&q), want, "seed {}", g.seed);
+                } else {
+                    assert_eq!(idx.query_multiprobe(&q, depth), want, "seed {}", g.seed);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn end_to_end_blocked_signatures_feed_identical_candidate_sets() {
+    // the whole new pipeline (blocked kernel → fingerprint index) vs the
+    // whole seed pipeline (scalar kernel → oracle semantics): candidate
+    // sets must be identical because the signatures are byte-identical
+    check(8, |g| {
+        let k = g.usize_in(1..4);
+        let l = g.usize_in(1..4);
+        let n = g.usize_in(4..40);
+        let folded = random_folded(g, n, k * l);
+        let count = g.usize_in(2..30);
+        let rows = random_rows(g, n, count);
+        let scalar_sigs = folded.hash_rows_scalar(&rows).unwrap();
+        let blocked = folded.hash_rows(&rows).unwrap();
+        let mut idx = LshIndex::new(IndexConfig::new(k, l));
+        let mut entries = Vec::new();
+        for (id, sig) in scalar_sigs.iter().enumerate() {
+            // insert the *blocked* signature; parity with the scalar one
+            // is what the kernel tests above prove
+            idx.insert(id as u64, blocked.row(id));
+            entries.push((id as u64, sig.clone()));
+        }
+        for (qid, row) in rows.iter().enumerate().take(10) {
+            let q = folded.hash_rows(std::slice::from_ref(row)).unwrap();
+            for depth in 0..2usize {
+                let want = oracle_query(&entries, q.row(0), k, depth);
+                let got = if depth == 0 {
+                    idx.query(q.row(0))
+                } else {
+                    idx.query_multiprobe(q.row(0), depth)
+                };
+                assert_eq!(got, want, "seed {}: query {qid} depth {depth}", g.seed);
+            }
+        }
+    });
+}

@@ -7,7 +7,7 @@
 //! Requires `make artifacts` (skips cleanly when artifacts are missing so
 //! `cargo test` works on a fresh checkout).
 
-use funclsh::coordinator::{CpuHashPath, FoldedHashPath, HashPath};
+use funclsh::coordinator::{CpuHashPath, FoldedHashPath, HashPath, Signatures};
 use funclsh::embedding::{ChebyshevEmbedder, Embedder, Interval, MonteCarloEmbedder};
 use funclsh::hashing::{HashBank, PStableHashBank};
 use funclsh::runtime::{pjrt_path::PjrtHashPath, Engine, Manifest};
@@ -42,11 +42,11 @@ fn random_rows(n: usize, count: usize, seed: u64) -> Vec<Vec<f32>> {
 
 /// Count entries where two signature sets differ; assert they are rare
 /// floor-boundary events (±1).
-fn assert_signatures_close(a: &[Vec<i32>], b: &[Vec<i32>], label: &str) {
+fn assert_signatures_close(a: &Signatures, b: &Signatures, label: &str) {
     assert_eq!(a.len(), b.len());
     let mut mismatch = 0usize;
     let mut total = 0usize;
-    for (ra, rb) in a.iter().zip(b) {
+    for (ra, rb) in a.iter().zip(b.iter()) {
         assert_eq!(ra.len(), rb.len());
         for (x, y) in ra.iter().zip(rb) {
             total += 1;

@@ -70,7 +70,7 @@ fn folded_path_equals_reference_path() {
         let a = reference.hash_rows(&rows).unwrap();
         let b = folded.hash_rows(&rows).unwrap();
         let mut mismatches = 0;
-        for (ra, rb) in a.iter().zip(&b) {
+        for (ra, rb) in a.iter().zip(b.iter()) {
             for (x, y) in ra.iter().zip(rb) {
                 if x != y {
                     mismatches += 1;

@@ -1,0 +1,180 @@
+//! Satellite (PR 3): snapshot *restore* on server startup. Round-trips
+//! serve → graceful shutdown (full-state snapshot: FLSH1 index + EMBS1
+//! entry store) → serve again from the file → wire query parity, both
+//! in-process (`Coordinator::restore` + `Server`) and through the real
+//! binary (`funclsh serve --snapshot F`).
+
+use funclsh::config::ServiceConfig;
+use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath};
+use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use funclsh::functions::{Function1D, Sine};
+use funclsh::hashing::PStableHashBank;
+use funclsh::server::{Client, Server};
+use funclsh::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn test_config() -> ServiceConfig {
+    let mut cfg = ServiceConfig {
+        dim: 32,
+        k: 2,
+        l: 8,
+        workers: 2,
+        max_batch: 32,
+        max_wait_us: 100,
+        shards: 2,
+        ..Default::default()
+    };
+    cfg.server.port = 0; // ephemeral
+    cfg
+}
+
+/// Deterministic hash path: the same config yields a bit-identical
+/// embedder + bank across both boots, which makes restore parity exact.
+fn make_path(cfg: &ServiceConfig) -> (Arc<dyn HashPath>, Vec<f64>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+    let points = emb.sample_points().to_vec();
+    let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+    (
+        Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank))),
+        points,
+    )
+}
+
+fn sample_sine(phase: f64, points: &[f64]) -> Vec<f32> {
+    let f = Sine::paper(phase);
+    points.iter().map(|&x| f.eval(x) as f32).collect()
+}
+
+fn await_shutdown(server: &Server) {
+    let t0 = Instant::now();
+    while !server.shutdown_requested() && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(server.shutdown_requested());
+}
+
+#[test]
+fn serve_snapshot_serve_roundtrip_preserves_answers() {
+    let mut cfg = test_config();
+    let snap = std::env::temp_dir().join(format!("funclsh-restore-{}.flsh", std::process::id()));
+    let _ = std::fs::remove_file(&snap);
+    cfg.server.snapshot_path = snap.to_str().unwrap().to_string();
+
+    // first life: serve, fill, record answers, shut down gracefully
+    let (path, points) = make_path(&cfg);
+    let svc = Arc::new(Coordinator::start(&cfg, path));
+    let server = Server::start(&cfg, svc, points.clone()).expect("bind loopback");
+    let mut client = Client::connect(server.addr()).unwrap();
+    for id in 0..60u64 {
+        let phase = 2.0 * std::f64::consts::PI * (id as f64 / 60.0);
+        client.insert(id, &sample_sine(phase, &points)).unwrap();
+    }
+    let queries: Vec<Vec<f32>> = (0..10)
+        .map(|q| sample_sine(0.17 + 0.31 * q as f64, &points))
+        .collect();
+    let before: Vec<_> = queries
+        .iter()
+        .map(|s| client.query(s, 5).unwrap())
+        .collect();
+    client.shutdown_server().unwrap();
+    await_shutdown(&server);
+    let (svc, snapshot) = server.shutdown();
+    snapshot.expect("snapshot configured").expect("snapshot ok");
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+
+    // second life: restore from the file and answer identically
+    let (path2, points2) = make_path(&cfg);
+    assert_eq!(points2, points);
+    let file = std::fs::File::open(&snap).unwrap();
+    let svc2 = Coordinator::restore(&cfg, path2, &mut std::io::BufReader::new(file))
+        .expect("restore");
+    assert_eq!(svc2.indexed(), 60);
+    let server2 = Server::start(&cfg, Arc::new(svc2), points2).expect("bind loopback");
+    let mut client2 = Client::connect(server2.addr()).unwrap();
+    assert_eq!(client2.ping().unwrap(), 60);
+    for (q, (s, want)) in queries.iter().zip(&before).enumerate() {
+        let got = client2.query(s, 5).unwrap();
+        let got_ids: Vec<u64> = got.iter().map(|h| h.id).collect();
+        let want_ids: Vec<u64> = want.iter().map(|h| h.id).collect();
+        assert_eq!(got_ids, want_ids, "query {q}");
+        for (g, w) in got.iter().zip(want) {
+            assert!((g.distance - w.distance).abs() < 1e-9, "query {q}");
+        }
+    }
+    // the restored store still backs removal and duplicate rejection
+    assert!(client2.insert(7, &sample_sine(0.5, &points)).is_err());
+    client2.remove(7).unwrap();
+    assert_eq!(client2.ping().unwrap(), 59);
+
+    client2.shutdown_server().unwrap();
+    await_shutdown(&server2);
+    let (svc2, _) = server2.shutdown();
+    if let Ok(svc2) = Arc::try_unwrap(svc2) {
+        svc2.shutdown();
+    }
+    let _ = std::fs::remove_file(&snap);
+}
+
+/// The same round-trip through the real binary: `funclsh serve --port 0
+/// --snapshot F` writes `F` at graceful shutdown and reloads it on the
+/// next boot.
+#[test]
+fn serve_binary_restores_snapshot_on_startup() {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+
+    let snap = std::env::temp_dir().join(format!(
+        "funclsh-bin-restore-{}.flsh",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&snap);
+    let snap_arg = snap.to_str().unwrap().to_string();
+
+    let spawn = |label: &str| {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_funclsh"))
+            .args(["serve", "--port", "0", "--snapshot", &snap_arg])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+        let stdout = child.stdout.take().unwrap();
+        let mut lines = std::io::BufReader::new(stdout);
+        let mut banner = String::new();
+        lines.read_line(&mut banner).unwrap();
+        let v = funclsh::json::parse(banner.trim())
+            .unwrap_or_else(|e| panic!("{label}: banner not JSON ({e}): {banner}"));
+        let addr: std::net::SocketAddr = v
+            .get("listening")
+            .and_then(|a| a.as_str())
+            .expect("banner has `listening`")
+            .parse()
+            .unwrap();
+        (child, addr)
+    };
+
+    // first life: fill 20 entries, shut down (writes the snapshot)
+    let (mut child, addr) = spawn("first boot");
+    let mut client = Client::connect(addr).unwrap();
+    let points = client.points().unwrap();
+    for id in 0..20u64 {
+        client.insert(id, &sample_sine(0.1 * id as f64, &points)).unwrap();
+    }
+    client.shutdown_server().unwrap();
+    assert!(child.wait().unwrap().success());
+    assert!(snap.exists(), "graceful shutdown must write the snapshot");
+
+    // second life: the corpus is back without a single insert
+    let (mut child, addr) = spawn("second boot");
+    let mut client = Client::connect(addr).unwrap();
+    assert_eq!(client.ping().unwrap(), 20, "restored entry count");
+    let hits = client.query(&sample_sine(0.5, &points), 5).unwrap();
+    assert!(!hits.is_empty(), "restored entries must be queryable");
+    assert_eq!(hits[0].id, 5, "{hits:?}"); // exact phase match re-ranked first
+    client.shutdown_server().unwrap();
+    assert!(child.wait().unwrap().success());
+    let _ = std::fs::remove_file(&snap);
+}
