@@ -18,7 +18,7 @@ use funclsh::embedding::{l2_dist, Embedder, Interval, MonteCarloEmbedder};
 use funclsh::functions::Distribution1D;
 use funclsh::hashing::PStableHashBank;
 use funclsh::search::{recall_at_k, BruteForceKnn};
-use funclsh::server::{run_load, Client, LoadConfig, Server};
+use funclsh::server::{run_load, Client, LoadConfig, Server, WireMode};
 use funclsh::util::rng::{Rng64, Xoshiro256pp};
 use funclsh::wasserstein::QUANTILE_CLIP;
 use funclsh::workload::gmm_corpus;
@@ -139,24 +139,34 @@ fn main() {
     );
 
     // ------------- phase 3: mixed-traffic load generator -----------------
-    // run once sequentially and once with an 8-deep pipeline per
-    // connection, so the wire-level win of pipelining is visible
-    for pipeline_depth in [1usize, 8] {
+    // run once sequentially, once with an 8-deep pipeline, and once with
+    // the pipeline over FBIN1 binary frames, so both the pipelining and
+    // the wire-format wins are visible
+    for (run, (pipeline_depth, wire)) in [
+        (1usize, WireMode::Json),
+        (8, WireMode::Json),
+        (8, WireMode::Binary),
+    ]
+    .into_iter()
+    .enumerate()
+    {
         println!(
             "\nphase 3: load generator ({client_threads} threads, mixed \
-             hash/insert/query, pipeline {pipeline_depth})…"
+             hash/insert/query, pipeline {pipeline_depth}, wire {})…",
+            wire.as_str()
         );
         let load = LoadConfig {
             threads: client_threads,
             ops_per_thread: 500,
             pipeline_depth,
+            wire,
             insert_fraction: 0.2,
             query_fraction: 0.4,
             k,
-            seed: cfg.seed ^ 0xF00D ^ pipeline_depth as u64,
-            // disjoint id ranges so the second run's inserts cannot
-            // collide with the first's
-            id_base: (1u64 << 40) * pipeline_depth as u64,
+            seed: cfg.seed ^ 0xF00D ^ run as u64,
+            // disjoint id ranges so later runs' inserts cannot collide
+            // with earlier ones'
+            id_base: (1u64 << 40) * (run as u64 + 1),
         };
         let report = run_load(addr, &points, &load).expect("load run");
         println!("  {}", report.to_json());

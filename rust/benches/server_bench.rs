@@ -1,7 +1,9 @@
 //! Bench: the TCP serving layer — wire round-trip latency per op kind
-//! over one connection, protocol encode/decode cost, and multi-client
-//! loopback throughput via the load generator, comparing the threaded
-//! runtime against the epoll event loop at several pipeline depths.
+//! over one connection, protocol encode/decode cost (JSON vs FBIN1
+//! binary), and multi-client loopback throughput via the load generator,
+//! comparing the threaded runtime against the epoll event loop at
+//! several pipeline depths and both wire formats at dim ∈ {64, 256,
+//! 1024}.
 //!
 //! ```bash
 //! cargo bench --bench server_bench            # full
@@ -10,18 +12,18 @@
 
 use funclsh::bench::Bench;
 use funclsh::config::{IoMode, ServiceConfig};
-use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath, Response};
+use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath, Response, SigView};
 use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
 use funclsh::functions::{Function1D, Sine};
 use funclsh::hashing::PStableHashBank;
-use funclsh::server::{protocol, run_load, Client, LoadConfig, Server};
+use funclsh::server::{protocol, run_load, Client, LoadConfig, Server, WireMode};
 use funclsh::util::rng::Xoshiro256pp;
 use std::hint::black_box;
 use std::sync::Arc;
 
-fn boot(workers: usize, max_conns: usize, io_mode: IoMode) -> (Server, Vec<f64>) {
+fn boot(workers: usize, max_conns: usize, io_mode: IoMode, dim: usize) -> (Server, Vec<f64>) {
     let mut cfg = ServiceConfig {
-        dim: 64,
+        dim,
         k: 4,
         l: 8,
         workers,
@@ -60,48 +62,70 @@ fn main() {
     let mut b = Bench::new();
     println!("== TCP serving layer ==");
 
-    // protocol micro: encode + parse one query frame (no socket)
+    // protocol micro: encode + parse one query frame, JSON vs binary
     {
         let samples = vec![0.5f32; 64];
-        b.throughput_case("protocol/encode-parse-query", 1.0, || {
+        b.throughput_case("protocol/json/encode-parse-query", 1.0, || {
             let line = protocol::encode_query(Some(1), black_box(&samples), 10);
             black_box(protocol::parse_request(&line).unwrap());
         });
-        let resp = Response::Signature((0..32).collect());
-        b.throughput_case("protocol/encode-decode-response", 1.0, || {
+        b.throughput_case("protocol/binary/encode-parse-query", 1.0, || {
+            let frame = protocol::encode_query_binary(Some(1), black_box(&samples), 10);
+            let consumed = protocol::split_binary_frame(&frame).unwrap().unwrap();
+            black_box(protocol::parse_request_binary(&frame[4..consumed]).unwrap());
+        });
+        let resp = Response::Signature(SigView::from_vec((0..32).collect()));
+        b.throughput_case("protocol/json/encode-decode-response", 1.0, || {
             let line = protocol::encode_response(Some(1), black_box(&resp));
             black_box(protocol::decode_reply(&line).unwrap());
         });
+        b.throughput_case("protocol/binary/encode-decode-response", 1.0, || {
+            let frame = protocol::encode_response_binary(Some(1), black_box(&resp));
+            black_box(protocol::decode_reply_binary(&frame[4..]).unwrap());
+        });
+        // the high-dim case that motivates the binary format
+        let wide = vec![0.125f32; 1024];
+        b.throughput_case("protocol/json/encode-parse-hash-1024", 1.0, || {
+            let line = protocol::encode_hash(Some(1), black_box(&wide));
+            black_box(protocol::parse_request(&line).unwrap());
+        });
+        b.throughput_case("protocol/binary/encode-parse-hash-1024", 1.0, || {
+            let frame = protocol::encode_hash_binary(Some(1), black_box(&wide));
+            let consumed = protocol::split_binary_frame(&frame).unwrap().unwrap();
+            black_box(protocol::parse_request_binary(&frame[4..consumed]).unwrap());
+        });
     }
 
-    // single-connection wire round-trips, per runtime
+    // single-connection wire round-trips, per runtime × wire format
     for mode in [IoMode::Threaded, IoMode::EventLoop] {
-        let (server, points) = boot(2, 4, mode);
-        let label = server.io_mode().as_str();
-        let mut client = Client::connect(server.addr()).unwrap();
-        let row = sample(0.3, &points);
-        b.throughput_case(&format!("wire/{label}/ping"), 1.0, || {
-            black_box(client.ping().unwrap());
-        });
-        b.throughput_case(&format!("wire/{label}/hash"), 1.0, || {
-            black_box(client.hash(black_box(&row)).unwrap());
-        });
-        let mut next_id = 0u64;
-        b.throughput_case(&format!("wire/{label}/insert"), 1.0, || {
-            client.insert(next_id, &row).unwrap();
-            next_id += 1;
-        });
-        b.throughput_case(&format!("wire/{label}/query-k10"), 1.0, || {
-            black_box(client.query(black_box(&row), 10).unwrap());
-        });
-        finish(server);
+        for wire in [WireMode::Json, WireMode::Binary] {
+            let (server, points) = boot(2, 4, mode, 64);
+            let label = format!("{}/{}", server.io_mode().as_str(), wire.as_str());
+            let mut client = Client::connect_with(server.addr(), wire).unwrap();
+            let row = sample(0.3, &points);
+            b.throughput_case(&format!("wire/{label}/ping"), 1.0, || {
+                black_box(client.ping().unwrap());
+            });
+            b.throughput_case(&format!("wire/{label}/hash"), 1.0, || {
+                black_box(client.hash(black_box(&row)).unwrap());
+            });
+            let mut next_id = 0u64;
+            b.throughput_case(&format!("wire/{label}/insert"), 1.0, || {
+                client.insert(next_id, &row).unwrap();
+                next_id += 1;
+            });
+            b.throughput_case(&format!("wire/{label}/query-k10"), 1.0, || {
+                black_box(client.query(black_box(&row), 10).unwrap());
+            });
+            finish(server);
+        }
     }
 
     // multi-client loopback throughput: threaded vs event loop, with and
-    // without client-side pipelining (the headline comparison)
+    // without client-side pipelining (the headline runtime comparison)
     for mode in [IoMode::Threaded, IoMode::EventLoop] {
         for (threads, depth) in [(2usize, 1usize), (8, 1), (8, 8), (32, 8)] {
-            let (server, points) = boot(4, threads + 1, mode);
+            let (server, points) = boot(4, threads + 1, mode, 64);
             let label = server.io_mode().as_str();
             let load = LoadConfig {
                 threads,
@@ -123,6 +147,35 @@ fn main() {
                 report.errors
             );
             println!("   {}", report.to_json());
+            finish(server);
+        }
+    }
+
+    // JSON vs binary at growing dimension (the wire-cost comparison;
+    // `funclsh bench-wire` records the same grid as a trajectory file)
+    for dim in [64usize, 256, 1024] {
+        for wire in [WireMode::Json, WireMode::Binary] {
+            let (server, points) = boot(4, 9, IoMode::EventLoop, dim);
+            let load = LoadConfig {
+                threads: 8,
+                ops_per_thread: if fast { 80 } else { 600 },
+                pipeline_depth: 8,
+                wire,
+                insert_fraction: 0.2,
+                query_fraction: 0.2,
+                k: 10,
+                seed: 0xBEEF,
+                ..Default::default()
+            };
+            let report = run_load(server.addr(), &points, &load).expect("load");
+            println!(
+                "   load/wire={}/dim={dim}: {:.0} op/s, p50 {:.3} ms, p99 {:.3} ms, {} errors",
+                wire.as_str(),
+                report.throughput(),
+                report.latency_p50_s * 1e3,
+                report.latency_p99_s * 1e3,
+                report.errors
+            );
             finish(server);
         }
     }

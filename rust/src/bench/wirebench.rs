@@ -1,0 +1,150 @@
+//! The `bench-wire` grid: JSON vs `FBIN1` binary loopback throughput of
+//! the serving layer at dim ∈ {64, 256, 1024}, recorded as the second
+//! JSON trajectory file (`BENCH_wire.json`) so later PRs have wire
+//! numbers to regress against.
+//!
+//! For each dimension the grid boots one server per wire mode on an
+//! ephemeral loopback port, drives it with the pipelined load generator
+//! (hash-heavy mix — sample rows dominate the wire cost, which is what
+//! the binary format exists to cut), and records throughput, latency
+//! percentiles, and the exact per-request frame size of a `hash` op in
+//! each format. `funclsh bench-wire [--quick] [--out F]` runs it; CI's
+//! `bench-smoke` job uploads the artifact alongside
+//! `BENCH_hashpath.json`.
+
+use crate::config::ServiceConfig;
+use crate::coordinator::{Coordinator, CpuHashPath, HashPath};
+use crate::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use crate::functions::{Function1D, Sine};
+use crate::hashing::PStableHashBank;
+use crate::json::{self, Value};
+use crate::server::{protocol, run_load, LoadConfig, Server, WireMode};
+use crate::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// Options of one `bench-wire` run.
+pub struct WireBenchOptions {
+    /// the CI smoke grid (fewer ops per case; same dims — the dim ≥ 256
+    /// rows are the acceptance evidence)
+    pub quick: bool,
+}
+
+fn boot(dim: usize) -> (Server, Vec<f64>) {
+    let mut cfg = ServiceConfig {
+        dim,
+        k: 4,
+        l: 8,
+        workers: 4,
+        max_batch: 128,
+        max_wait_us: 200,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    cfg.server.port = 0;
+    cfg.server.max_conns = 16;
+    let mut rng = Xoshiro256pp::seed_from_u64(0xB1A5 ^ dim as u64);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), dim, 2.0, &mut rng);
+    let points = emb.sample_points().to_vec();
+    let bank = PStableHashBank::new(dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+    let path: Arc<dyn HashPath> = Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank)));
+    let svc = Arc::new(Coordinator::start(&cfg, path));
+    let server = Server::start(&cfg, svc, points.clone()).expect("bind loopback");
+    (server, points)
+}
+
+fn finish(server: Server) {
+    let (svc, _) = server.shutdown();
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+}
+
+fn sample_row(points: &[f64]) -> Vec<f32> {
+    let f = Sine::paper(0.37);
+    points.iter().map(|&x| f.eval(x) as f32).collect()
+}
+
+/// Run the wire grid and return the JSON report.
+pub fn run(opts: &WireBenchOptions) -> Value {
+    let dims: &[usize] = &[64, 256, 1024];
+    let (threads, ops) = if opts.quick { (4usize, 150usize) } else { (8, 1200) };
+    let mut cases = Vec::new();
+    let mut speedups = Vec::new();
+    println!("== bench-wire: json vs binary loopback throughput ==");
+    for &dim in dims {
+        let mut tput = [0.0f64; 2];
+        for (wi, wire) in [WireMode::Json, WireMode::Binary].into_iter().enumerate() {
+            let (server, points) = boot(dim);
+            let load = LoadConfig {
+                threads,
+                ops_per_thread: ops,
+                pipeline_depth: 8,
+                wire,
+                // hash-heavy mix: the row payload dominates the frame,
+                // which is the cost the binary format exists to cut
+                insert_fraction: 0.2,
+                query_fraction: 0.2,
+                k: 10,
+                seed: 0xB1A5,
+                ..Default::default()
+            };
+            let report = run_load(server.addr(), &points, &load).expect("load run");
+            let row = sample_row(&points);
+            let hash_frame_bytes = protocol::encode_hash_frame(wire, Some(1), &row).len();
+            println!(
+                "   wire/{}/dim={dim}: {:.0} op/s, p50 {:.3} ms, p99 {:.3} ms, \
+                 hash frame {} B, {} errors",
+                wire.as_str(),
+                report.throughput(),
+                report.latency_p50_s * 1e3,
+                report.latency_p99_s * 1e3,
+                hash_frame_bytes,
+                report.errors
+            );
+            tput[wi] = report.throughput();
+            cases.push(json::object(vec![
+                ("dim", dim.into()),
+                ("wire", wire.as_str().into()),
+                ("threads", threads.into()),
+                ("ops", report.ops.into()),
+                ("errors", report.errors.into()),
+                ("throughput_ops_s", report.throughput().into()),
+                ("latency_p50_s", report.latency_p50_s.into()),
+                ("latency_p99_s", report.latency_p99_s.into()),
+                ("hash_frame_bytes", hash_frame_bytes.into()),
+            ]));
+            finish(server);
+        }
+        speedups.push(json::object(vec![
+            ("dim", dim.into()),
+            ("binary_over_json", (tput[1] / tput[0].max(1e-9)).into()),
+        ]));
+    }
+    json::object(vec![
+        ("bench", "wire_throughput".into()),
+        ("mode", if opts.quick { "quick" } else { "full" }.into()),
+        ("cases", Value::Array(cases)),
+        ("speedup", Value::Array(speedups)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_frame_sizes_favor_binary_at_high_dim() {
+        // the static part of the acceptance criterion, without booting
+        // servers: binary hash frames shrink the wire payload several-fold
+        // at dim ≥ 256
+        for dim in [64usize, 256, 1024] {
+            let row: Vec<f32> = (0..dim).map(|i| (i as f32).sin()).collect();
+            let j = protocol::encode_hash_frame(WireMode::Json, Some(1), &row).len();
+            let b = protocol::encode_hash_frame(WireMode::Binary, Some(1), &row).len();
+            assert!(b < j, "dim {dim}: binary {b} B vs json {j} B");
+            if dim >= 256 {
+                assert!(b * 2 < j, "dim {dim}: binary {b} B should be <50% of json {j} B");
+            }
+        }
+    }
+}

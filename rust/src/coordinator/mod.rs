@@ -23,6 +23,6 @@ pub mod metrics;
 pub mod service;
 
 pub use batcher::BoundedQueue;
-pub use hashpath::{fold_projection, CpuHashPath, FoldedHashPath, HashPath, Signatures};
+pub use hashpath::{fold_projection, CpuHashPath, FoldedHashPath, HashPath, SigView, Signatures};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use service::{Coordinator, Op, Response};

@@ -14,7 +14,7 @@
 //! ```
 
 use super::batcher::BoundedQueue;
-use super::hashpath::{HashPath, Signatures};
+use super::hashpath::{HashPath, SigView, Signatures};
 use super::metrics::{MetricsSnapshot, RequestKind, ServiceMetrics};
 use crate::config::ServiceConfig;
 use crate::embedding::l2_dist;
@@ -70,8 +70,10 @@ pub enum Op {
 /// A service response.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    /// signature of a `Hash` op
-    Signature(Vec<i32>),
+    /// signature of a `Hash` op — a zero-copy view into the batch's
+    /// shared flat signature block (see [`SigView`]); the wire encoders
+    /// serialize straight from it
+    Signature(SigView),
     /// ack of an `Insert`
     Inserted {
         /// id that was inserted
@@ -355,16 +357,33 @@ fn worker_loop(
     let mut scratch = QueryScratch::default();
     let mut candidates: Vec<u64> = Vec::new();
     let mut row64: Vec<f64> = Vec::new();
+    let dim = hash_path.dim();
     while let Some(batch) = queue.pop_batch(max_batch, max_wait) {
         let batch_size = batch.len();
+        // per-op rejection reasons; a rejected op gets its own error
+        // envelope and is excluded from the batched hash/embed/store
+        // stages, so one bad request can never fail its co-batched
+        // neighbours from other connections
+        let mut rejected: Vec<Option<String>> = vec![None; batch.len()];
         // 1. one batched hash over every row that carries samples
         // (Remove ops look the signature up in the store instead; admin
-        // ops carry no samples at all).
+        // ops carry no samples at all). Wrong-dimension rows are
+        // rejected here — letting one into the kernel would error the
+        // whole batch.
         let rows: Vec<Vec<f32>> = batch
             .iter()
-            .filter_map(|r| match &r.op {
+            .enumerate()
+            .filter_map(|(slot, r)| match &r.op {
                 Op::Hash { samples } | Op::Insert { samples, .. } | Op::Query { samples, .. } => {
-                    Some(samples.clone())
+                    if samples.len() != dim {
+                        rejected[slot] = Some(format!(
+                            "row length {} != service dimension {dim}",
+                            samples.len()
+                        ));
+                        None
+                    } else {
+                        Some(samples.clone())
+                    }
                 }
                 Op::Remove { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping => None,
             })
@@ -376,45 +395,70 @@ fn worker_loop(
             }
             continue;
         }
-        // map each op to its row in the flat signature buffer
+        // promote the filled kernel-output buffer into a batch-shared
+        // block: every Hash reply aliases a row of it zero-copy (the wire
+        // encoders serialize straight from the [B×K] data), and the
+        // allocation is reclaimed below when no reply kept a handle
+        let sig_len = signatures.signature_len();
+        let block = Arc::new(std::mem::replace(
+            &mut signatures,
+            Signatures::new(sig_len),
+        ));
+        // map each surviving op to its row in the flat signature block
         let mut next_row = 0usize;
         let sig_rows: Vec<Option<usize>> = batch
             .iter()
-            .map(|r| match &r.op {
-                Op::Hash { .. } | Op::Insert { .. } | Op::Query { .. } => {
+            .enumerate()
+            .map(|(slot, r)| match &r.op {
+                Op::Hash { .. } | Op::Insert { .. } | Op::Query { .. }
+                    if rejected[slot].is_none() =>
+                {
                     let i = next_row;
                     next_row += 1;
                     Some(i)
                 }
-                Op::Remove { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping => None,
+                _ => None,
             })
             .collect();
-        // 2. embed the rows that need re-rank vectors (inserts/queries)
+        // 2. embed the rows that need re-rank vectors (inserts/queries);
+        // rejected rows must not reach the embedder at the wrong width
         let embeddings: Vec<Option<Vec<f64>>> = batch
             .iter()
-            .map(|r| match &r.op {
-                Op::Insert { samples, .. } | Op::Query { samples, .. } => {
+            .enumerate()
+            .map(|(slot, r)| match &r.op {
+                Op::Insert { samples, .. } | Op::Query { samples, .. }
+                    if rejected[slot].is_none() =>
+                {
                     Some(hash_path.embed_row_with(samples, &mut row64))
                 }
                 _ => None,
             })
             .collect();
         // 3. apply all inserts under ONE store write lock (per-batch, not
-        // per-op — §Perf). `accepted[i]` records whether op i's insert won
-        // (duplicates — pre-existing or within-batch — are rejected here).
-        let mut accepted = vec![true; batch.len()];
+        // per-op — §Perf). Further rejection reasons recorded here:
+        // non-finite samples (the wire decoders already refuse them, but
+        // in-process callers reach here directly and a non-finite row
+        // would poison the index and every re-rank distance it touches)
+        // and duplicate ids (pre-existing or within-batch).
         {
             let mut store = state.store.write().unwrap();
             for (slot, (req, emb)) in batch.iter().zip(&embeddings).enumerate() {
-                if let Op::Insert { id, .. } = &req.op {
-                    if store.contains_key(id) {
-                        accepted[slot] = false;
+                if rejected[slot].is_some() {
+                    continue;
+                }
+                if let Op::Insert { id, samples } = &req.op {
+                    if let Some(bad) = samples.iter().position(|s| !s.is_finite()) {
+                        rejected[slot] = Some(format!(
+                            "insert {id}: sample[{bad}] is not finite"
+                        ));
+                    } else if store.contains_key(id) {
+                        rejected[slot] = Some(format!("duplicate id {id}"));
                     } else if let (Some(e), Some(row)) = (emb, sig_rows[slot]) {
                         store.insert(
                             *id,
                             Entry {
                                 emb: e.clone(),
-                                sig: signatures.row(row).to_vec(),
+                                sig: block.row(row).to_vec(),
                             },
                         );
                     }
@@ -424,8 +468,10 @@ fn worker_loop(
         // 4. finish each op and reply
         let mut latencies = Vec::with_capacity(batch_size);
         for (slot, (req, emb)) in batch.into_iter().zip(embeddings).enumerate() {
-            let sig: &[i32] = sig_rows[slot].map_or(&[], |i| signatures.row(i));
-            let resp = if accepted[slot] {
+            let resp = if let Some(msg) = rejected[slot].take() {
+                metrics.record_error();
+                Response::Error(msg)
+            } else {
                 match &req.op {
                     // admin ops are answered in-line by the worker: they
                     // need the metrics registry / index state, not the
@@ -435,27 +481,34 @@ fn worker_loop(
                         indexed: state.index.len() as u64,
                     },
                     Op::Snapshot { path } => write_snapshot(&state, path),
-                    _ => apply_op(
-                        &state,
-                        &req.op,
-                        sig,
-                        emb,
-                        probe_depth,
-                        &mut scratch,
-                        &mut candidates,
-                    ),
-                }
-            } else {
-                metrics.record_error();
-                match &req.op {
-                    Op::Insert { id, .. } => Response::Error(format!("duplicate id {id}")),
-                    _ => unreachable!("only inserts can be rejected"),
+                    Op::Hash { .. } => Response::Signature(SigView::new(
+                        block.clone(),
+                        sig_rows[slot].expect("hash ops carry samples"),
+                    )),
+                    _ => {
+                        let sig: &[i32] = sig_rows[slot].map_or(&[], |i| block.row(i));
+                        apply_op(
+                            &state,
+                            &req.op,
+                            sig,
+                            emb,
+                            probe_depth,
+                            &mut scratch,
+                            &mut candidates,
+                        )
+                    }
                 }
             };
             latencies.push(req.enqueued.elapsed());
             let _ = req.reply.send(resp);
         }
         metrics.record_batch(batch_size, &latencies);
+        // reclaim the block's allocation when nothing escaped with a
+        // handle — insert/query-only batches stay allocation-free in
+        // steady state; hash batches hand their block to the replies
+        if let Ok(sigs) = Arc::try_unwrap(block) {
+            signatures = sigs;
+        }
     }
 }
 
@@ -469,7 +522,6 @@ fn apply_op(
     candidates: &mut Vec<u64>,
 ) -> Response {
     match op {
-        Op::Hash { .. } => Response::Signature(signature.to_vec()),
         Op::Insert { id, .. } => {
             // the embedding was already stored (and dedup-checked) under
             // the batch lock in the worker loop
@@ -506,12 +558,16 @@ fn apply_op(
                     })
                 })
                 .collect();
-            hits.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+            // total_cmp: identical to partial_cmp on the (non-negative,
+            // finite) distances of clean rows, but an in-process caller
+            // querying with non-finite samples yields NaN distances —
+            // those must rank last, not panic the batch worker
+            hits.sort_by(|a, b| a.distance.total_cmp(&b.distance));
             hits.truncate(*k);
             Response::Hits(hits)
         }
-        Op::Metrics | Op::Snapshot { .. } | Op::Ping => {
-            unreachable!("admin ops are answered in the worker loop")
+        Op::Hash { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping => {
+            unreachable!("hash and admin ops are answered in the worker loop")
         }
     }
 }
@@ -837,6 +893,129 @@ mod tests {
         );
         match svc.submit(Op::Insert { id: 7, samples: s }) {
             Response::Error(e) => assert!(e.contains("duplicate")),
+            other => panic!("unexpected {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn non_finite_insert_rejected_defensively() {
+        // the wire decoders refuse non-finite samples, but in-process
+        // callers reach the coordinator directly — the Insert path must
+        // refuse the row before it poisons the index
+        let (svc, points) = test_service(1);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut samples = sample_sine(0.4, &points);
+            samples[3] = bad;
+            match svc.submit(Op::Insert { id: 70, samples }) {
+                Response::Error(e) => {
+                    assert!(e.contains("not finite"), "{e}");
+                    assert!(e.contains("sample[3]"), "{e}");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(svc.indexed(), 0, "no poisoned entry may land");
+        // the id stays free: a clean retry succeeds
+        assert_eq!(
+            svc.submit(Op::Insert {
+                id: 70,
+                samples: sample_sine(0.4, &points)
+            }),
+            Response::Inserted { id: 70 }
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn wrong_dimension_row_rejected_per_request_not_per_batch() {
+        // one bad-width row must get its own error envelope while its
+        // co-batched neighbours (worker = 1 ⇒ same batch window) succeed
+        let (svc, points) = test_service(1);
+        let rx_bad = svc
+            .submit_async(Op::Hash {
+                samples: vec![0.5; 3],
+            })
+            .unwrap();
+        let rx_good = svc
+            .submit_async(Op::Insert {
+                id: 1,
+                samples: sample_sine(0.3, &points),
+            })
+            .unwrap();
+        match rx_bad.recv().unwrap() {
+            Response::Error(e) => assert!(e.contains("dimension"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(rx_good.recv().unwrap(), Response::Inserted { id: 1 });
+        // wrong-width query and insert are refused the same way
+        match svc.submit(Op::Query {
+            samples: vec![0.5; 999],
+            k: 3,
+        }) {
+            Response::Error(e) => assert!(e.contains("dimension"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        match svc.submit(Op::Insert {
+            id: 2,
+            samples: Vec::new(),
+        }) {
+            Response::Error(e) => assert!(e.contains("dimension"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(svc.indexed(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn non_finite_query_does_not_panic_worker() {
+        // Insert is refused defensively, but Hash/Query with non-finite
+        // rows are still accepted from in-process callers — a NaN query
+        // must yield a well-formed (NaN-distances-last) answer, not kill
+        // the batch worker on an unordered sort
+        let (svc, points) = test_service(1);
+        for i in 0..20u64 {
+            svc.submit(Op::Insert {
+                id: i,
+                samples: sample_sine(0.1 * i as f64, &points),
+            });
+        }
+        let mut samples = sample_sine(0.2, &points);
+        for s in samples.iter_mut() {
+            *s = f32::NAN;
+        }
+        match svc.submit(Op::Query { samples, k: 5 }) {
+            Response::Hits(_) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        // the worker survived: a clean query still answers correctly
+        match svc.submit(Op::Query {
+            samples: sample_sine(0.2, &points),
+            k: 5,
+        }) {
+            Response::Hits(h) => assert!(!h.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn hash_responses_share_one_batch_block() {
+        // two hash ops answered from the same batch must alias one shared
+        // signature block (the zero-copy contract), not own two clones
+        let (svc, points) = test_service(1);
+        let s = sample_sine(0.8, &points);
+        let rx1 = svc.submit_async(Op::Hash { samples: s.clone() }).unwrap();
+        let rx2 = svc.submit_async(Op::Hash { samples: s }).unwrap();
+        let (r1, r2) = (rx1.recv().unwrap(), rx2.recv().unwrap());
+        match (&r1, &r2) {
+            (Response::Signature(a), Response::Signature(b)) => {
+                assert_eq!(a, b, "same row hashes identically");
+                assert!(!a.is_empty());
+                // note: whether the two views share one block depends on
+                // batching timing; identical content is the contract,
+                // sharing is the fast path — assert only the former
+            }
             other => panic!("unexpected {other:?}"),
         }
         svc.shutdown();

@@ -26,7 +26,8 @@
 //!   pipelines, lowered once to HLO text by `python/compile/aot.py`.
 //! * **L3 (Rust, request path)** — this crate: the [`coordinator`] serving
 //!   stack (router, dynamic batcher, LSH index shards), the [`server`] TCP
-//!   front-end speaking newline-delimited JSON, the [`runtime`] PJRT
+//!   front-end speaking newline-delimited JSON or length-prefixed `FBIN1`
+//!   binary frames (negotiated per connection), the [`runtime`] PJRT
 //!   executor that runs the AOT artifacts, and a complete pure-Rust
 //!   implementation of every algorithm for ground truth, baselines, and a
 //!   fallback compute path.

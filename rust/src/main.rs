@@ -9,7 +9,8 @@
 //! funclsh serve       [--config svc.toml] [--trace-ops N] [--snapshot F]
 //!                     (no --port: legacy in-process synthetic trace)
 //! funclsh load        [--addr H:P] [--threads N] [--ops N] [--k K]
-//!                     [--pipeline D] [--insert-frac F] [--query-frac F]
+//!                     [--pipeline D] [--wire json|binary]
+//!                     [--insert-frac F] [--query-frac F]
 //!                     [--seed S] [--shutdown]
 //! funclsh experiment  <fig1|fig2|fig3|thm1|qmc|knn|w1|mips|adaptive|all>
 //!                     [--pairs N] [--hashes N] [--dim N] [--seed S]
@@ -18,6 +19,9 @@
 //! funclsh bench-hash  [--quick] [--out BENCH_hashpath.json]
 //!                     (seed-vs-new kernel + index throughput grid,
 //!                      emitted as the JSON perf-trajectory file)
+//! funclsh bench-wire  [--quick] [--out BENCH_wire.json]
+//!                     (JSON-vs-binary loopback wire throughput at
+//!                      dim ∈ {64, 256, 1024}; second trajectory file)
 //! funclsh selftest    [--artifacts DIR]
 //! funclsh info
 //! ```
@@ -39,12 +43,13 @@ fn main() {
         Some("experiment") => cmd_experiment(&args),
         Some("hash") => cmd_hash(&args),
         Some("bench-hash") => cmd_bench_hash(&args),
+        Some("bench-wire") => cmd_bench_wire(&args),
         Some("tune") => cmd_tune(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: funclsh <serve|load|experiment|hash|bench-hash|selftest|info> [options]\n\
+                "usage: funclsh <serve|load|experiment|hash|bench-hash|bench-wire|selftest|info> [options]\n\
                  see `funclsh experiment all --out results/` for the paper reproduction"
             );
             2
@@ -293,10 +298,19 @@ fn cmd_load(args: &Args) -> i32 {
             return 2;
         }
     };
+    let wire_s = args.get("wire").unwrap_or("json");
+    let wire = match funclsh::server::WireMode::parse(wire_s) {
+        Some(w) => w,
+        None => {
+            eprintln!("invalid --wire `{wire_s}` (want json|binary)");
+            return 2;
+        }
+    };
     let cfg = LoadConfig {
         threads: args.get_parsed("threads", 8usize),
         ops_per_thread: args.get_parsed("ops", 250usize),
         pipeline_depth: args.get_parsed("pipeline", 1usize).max(1),
+        wire,
         insert_fraction: args.get_parsed("insert-frac", 0.5f64),
         query_fraction: args.get_parsed("query-frac", 0.3f64),
         k: args.get_parsed("k", 10usize),
@@ -318,11 +332,12 @@ fn cmd_load(args: &Args) -> i32 {
         }
     };
     eprintln!(
-        "load: {} threads x {} ops against {addr} (dim {}, pipeline {})",
+        "load: {} threads x {} ops against {addr} (dim {}, pipeline {}, wire {})",
         cfg.threads,
         cfg.ops_per_thread,
         points.len(),
-        cfg.pipeline_depth
+        cfg.pipeline_depth,
+        cfg.wire.as_str()
     );
     let report = match funclsh::server::run_load(addr, &points, &cfg) {
         Ok(r) => r,
@@ -434,6 +449,30 @@ fn cmd_bench_hash(args: &Args) -> i32 {
     };
     let report = funclsh::bench::hashbench::run(&opts);
     let out = args.get("out").unwrap_or("BENCH_hashpath.json");
+    let text = report.to_json();
+    match std::fs::write(out, text.clone() + "\n") {
+        Ok(()) => {
+            eprintln!("wrote {out}");
+            println!("{text}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            1
+        }
+    }
+}
+
+/// `funclsh bench-wire`: JSON-vs-binary loopback wire throughput at
+/// dim ∈ {64, 256, 1024}; writes the second perf-trajectory file
+/// (`BENCH_wire.json` at the repo root by default) that CI uploads
+/// alongside `BENCH_hashpath.json`.
+fn cmd_bench_wire(args: &Args) -> i32 {
+    let opts = funclsh::bench::wirebench::WireBenchOptions {
+        quick: args.has("quick"),
+    };
+    let report = funclsh::bench::wirebench::run(&opts);
+    let out = args.get("out").unwrap_or("BENCH_wire.json");
     let text = report.to_json();
     match std::fs::write(out, text.clone() + "\n") {
         Ok(()) => {

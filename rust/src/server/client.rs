@@ -1,18 +1,22 @@
 //! Clients for the wire protocol — a blocking one-in-flight [`Client`],
 //! a windowed [`PipelinedClient`] that keeps several frames in flight and
 //! correlates responses by `req_id`, and a multi-threaded load generator
-//! with nanosecond-resolution latency histograms. The repo can drive its
-//! own serving layer end-to-end over loopback (`funclsh load`,
-//! `examples/e2e_service.rs`, `benches/server_bench.rs`).
+//! with nanosecond-resolution latency histograms. All three speak either
+//! wire format ([`WireMode`]): JSON is the default, binary
+//! (`connect_with(addr, WireMode::Binary)` / `funclsh load --wire
+//! binary`) opens with the `FBIN1` magic and ships sample rows as raw
+//! `f32`s. The repo can drive its own serving layer end-to-end over
+//! loopback (`funclsh load`, `examples/e2e_service.rs`,
+//! `benches/server_bench.rs`).
 
-use super::protocol::{self, Reply};
+use super::protocol::{self, Reply, WireMode};
 use crate::functions::{Function1D, Sine};
 use crate::json::{object, Value};
 use crate::search::Hit;
 use crate::util::rng::{Rng64, Xoshiro256pp};
 use crate::util::stats::quantile_sorted;
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
@@ -45,37 +49,108 @@ impl From<std::io::Error> for ClientError {
     }
 }
 
+/// Read one reply frame in `wire` format off a buffered stream.
+/// `in_flight` is folded into the disconnect error so pipelined callers
+/// report how many requests the close orphaned.
+#[allow(clippy::type_complexity)]
+fn read_reply_frame(
+    reader: &mut BufReader<TcpStream>,
+    wire: WireMode,
+    in_flight: usize,
+) -> Result<(Option<u64>, Result<Reply, String>), ClientError> {
+    let closed = || {
+        ClientError::Protocol(if in_flight > 0 {
+            format!("server closed connection with {in_flight} in flight")
+        } else {
+            "server closed connection".to_string()
+        })
+    };
+    match wire {
+        WireMode::Json => {
+            // cap the reply line like the binary path caps its frames: a
+            // buggy/hostile server streaming bytes without a newline must
+            // not grow this String without bound
+            let mut line = String::new();
+            let mut limited = (&mut *reader).take((protocol::MAX_FRAME_BYTES + 1) as u64);
+            let n = limited.read_line(&mut line)?;
+            if n == 0 {
+                return Err(closed());
+            }
+            if line.len() > protocol::MAX_FRAME_BYTES {
+                return Err(ClientError::Protocol(format!(
+                    "reply line exceeds the {}-byte cap",
+                    protocol::MAX_FRAME_BYTES
+                )));
+            }
+            protocol::decode_reply(&line).map_err(ClientError::Protocol)
+        }
+        WireMode::Binary => {
+            let mut len4 = [0u8; 4];
+            reader.read_exact(&mut len4).map_err(|e| {
+                if e.kind() == ErrorKind::UnexpectedEof {
+                    closed()
+                } else {
+                    ClientError::Io(e)
+                }
+            })?;
+            let len = u32::from_le_bytes(len4) as usize;
+            if len > protocol::MAX_FRAME_BYTES {
+                return Err(ClientError::Protocol(format!(
+                    "reply frame of {len} bytes exceeds the {}-byte cap",
+                    protocol::MAX_FRAME_BYTES
+                )));
+            }
+            let mut payload = vec![0u8; len];
+            reader.read_exact(&mut payload)?;
+            protocol::decode_reply_binary(&payload).map_err(ClientError::Protocol)
+        }
+    }
+}
+
 /// A blocking connection to a funclsh server: one in-flight request at
 /// a time, correlated by `req_id`.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     next_req_id: u64,
+    wire: WireMode,
 }
 
 impl Client {
-    /// Connect to `addr` (e.g. `"127.0.0.1:7070"` or a `SocketAddr`).
+    /// Connect to `addr` (e.g. `"127.0.0.1:7070"` or a `SocketAddr`) in
+    /// the default JSON wire mode.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self, ClientError> {
+        Self::connect_with(addr, WireMode::Json)
+    }
+
+    /// Connect in an explicit wire mode. Binary connections announce
+    /// themselves with the `FBIN1` magic (queued here, flushed with the
+    /// first request frame).
+    pub fn connect_with<A: ToSocketAddrs>(addr: A, wire: WireMode) -> Result<Self, ClientError> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        if wire == WireMode::Binary {
+            writer.write_all(protocol::BINARY_MAGIC)?;
+        }
         Ok(Self {
             reader,
-            writer: BufWriter::new(stream),
+            writer,
             next_req_id: 1,
+            wire,
         })
     }
 
-    fn call(&mut self, line: String, req_id: u64) -> Result<Reply, ClientError> {
-        self.writer.write_all(line.as_bytes())?;
-        self.writer.write_all(b"\n")?;
+    /// This connection's wire mode.
+    pub fn wire(&self) -> WireMode {
+        self.wire
+    }
+
+    fn call(&mut self, frame: Vec<u8>, req_id: u64) -> Result<Reply, ClientError> {
+        self.writer.write_all(&frame)?;
         self.writer.flush()?;
-        let mut reply = String::new();
-        let n = self.reader.read_line(&mut reply)?;
-        if n == 0 {
-            return Err(ClientError::Protocol("server closed connection".into()));
-        }
-        let (got_id, body) = protocol::decode_reply(&reply).map_err(ClientError::Protocol)?;
+        let (got_id, body) = read_reply_frame(&mut self.reader, self.wire, 0)?;
         if got_id != Some(req_id) {
             return Err(ClientError::Protocol(format!(
                 "req_id mismatch: sent {req_id}, got {got_id:?}"
@@ -93,7 +168,8 @@ impl Client {
     /// `hash`: signature of a sample row.
     pub fn hash(&mut self, samples: &[f32]) -> Result<Vec<i32>, ClientError> {
         let rid = self.next_id();
-        match self.call(protocol::encode_hash(Some(rid), samples), rid)? {
+        let frame = protocol::encode_hash_frame(self.wire, Some(rid), samples);
+        match self.call(frame, rid)? {
             Reply::Signature(s) => Ok(s),
             other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
         }
@@ -102,7 +178,8 @@ impl Client {
     /// `insert`: add an entry.
     pub fn insert(&mut self, id: u64, samples: &[f32]) -> Result<(), ClientError> {
         let rid = self.next_id();
-        match self.call(protocol::encode_insert(Some(rid), id, samples), rid)? {
+        let frame = protocol::encode_insert_frame(self.wire, Some(rid), id, samples);
+        match self.call(frame, rid)? {
             Reply::Inserted { id: got } if got == id => Ok(()),
             other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
         }
@@ -111,7 +188,8 @@ impl Client {
     /// `query`: k-NN with exact re-ranking.
     pub fn query(&mut self, samples: &[f32], k: usize) -> Result<Vec<Hit>, ClientError> {
         let rid = self.next_id();
-        match self.call(protocol::encode_query(Some(rid), samples, k), rid)? {
+        let frame = protocol::encode_query_frame(self.wire, Some(rid), samples, k);
+        match self.call(frame, rid)? {
             Reply::Hits(h) => Ok(h),
             other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
         }
@@ -120,7 +198,8 @@ impl Client {
     /// `remove`: delete an entry.
     pub fn remove(&mut self, id: u64) -> Result<(), ClientError> {
         let rid = self.next_id();
-        match self.call(protocol::encode_remove(Some(rid), id), rid)? {
+        let frame = protocol::encode_remove_frame(self.wire, Some(rid), id);
+        match self.call(frame, rid)? {
             Reply::Removed { id: got } if got == id => Ok(()),
             other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
         }
@@ -129,7 +208,8 @@ impl Client {
     /// `metrics`: service metrics as a JSON object.
     pub fn metrics(&mut self) -> Result<Value, ClientError> {
         let rid = self.next_id();
-        match self.call(protocol::encode_bare(Some(rid), "metrics"), rid)? {
+        let frame = protocol::encode_bare_frame(self.wire, Some(rid), "metrics");
+        match self.call(frame, rid)? {
             Reply::Metrics(v) => Ok(v),
             other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
         }
@@ -138,7 +218,8 @@ impl Client {
     /// `snapshot`: server-side FLSH1 dump; returns bytes written.
     pub fn snapshot(&mut self, path: &str) -> Result<u64, ClientError> {
         let rid = self.next_id();
-        match self.call(protocol::encode_snapshot(Some(rid), path), rid)? {
+        let frame = protocol::encode_snapshot_frame(self.wire, Some(rid), path);
+        match self.call(frame, rid)? {
             Reply::Snapshotted { bytes, .. } => Ok(bytes),
             other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
         }
@@ -147,7 +228,8 @@ impl Client {
     /// `ping`: liveness probe; returns the indexed entry count.
     pub fn ping(&mut self) -> Result<u64, ClientError> {
         let rid = self.next_id();
-        match self.call(protocol::encode_bare(Some(rid), "ping"), rid)? {
+        let frame = protocol::encode_bare_frame(self.wire, Some(rid), "ping");
+        match self.call(frame, rid)? {
             Reply::Pong { indexed } => Ok(indexed),
             other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
         }
@@ -156,7 +238,8 @@ impl Client {
     /// `points`: the service's published sample points.
     pub fn points(&mut self) -> Result<Vec<f64>, ClientError> {
         let rid = self.next_id();
-        match self.call(protocol::encode_bare(Some(rid), "points"), rid)? {
+        let frame = protocol::encode_bare_frame(self.wire, Some(rid), "points");
+        match self.call(frame, rid)? {
             Reply::Points(p) => Ok(p),
             other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
         }
@@ -165,7 +248,8 @@ impl Client {
     /// `shutdown`: request graceful server shutdown.
     pub fn shutdown_server(&mut self) -> Result<(), ClientError> {
         let rid = self.next_id();
-        match self.call(protocol::encode_bare(Some(rid), "shutdown"), rid)? {
+        let frame = protocol::encode_bare_frame(self.wire, Some(rid), "shutdown");
+        match self.call(frame, rid)? {
             Reply::ShuttingDown => Ok(()),
             other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
         }
@@ -217,7 +301,7 @@ pub struct Completion {
 /// A pipelined connection: up to `depth` request frames in flight at
 /// once, responses matched by `req_id` (see the module doc's pipelining
 /// contract — the server answers in request order, but correlation by id
-/// keeps the client correct regardless).
+/// keeps the client correct regardless). Speaks either wire format.
 ///
 /// Each `send_*` call first harvests completions if the window is full,
 /// then enqueues its frame; [`PipelinedClient::drain`] collects
@@ -227,21 +311,38 @@ pub struct PipelinedClient {
     writer: BufWriter<TcpStream>,
     next_req_id: u64,
     depth: usize,
+    wire: WireMode,
     pending: HashMap<u64, (Expect, Instant)>,
 }
 
 impl PipelinedClient {
-    /// Connect with a send window of `depth` in-flight frames
-    /// (`depth = 1` degenerates to the blocking client's behaviour).
+    /// Connect with a send window of `depth` in-flight frames in JSON
+    /// mode (`depth = 1` degenerates to the blocking client's
+    /// behaviour).
     pub fn connect<A: ToSocketAddrs>(addr: A, depth: usize) -> Result<Self, ClientError> {
+        Self::connect_with(addr, depth, WireMode::Json)
+    }
+
+    /// Connect with an explicit wire mode; binary connections announce
+    /// themselves with the `FBIN1` magic.
+    pub fn connect_with<A: ToSocketAddrs>(
+        addr: A,
+        depth: usize,
+        wire: WireMode,
+    ) -> Result<Self, ClientError> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        if wire == WireMode::Binary {
+            writer.write_all(protocol::BINARY_MAGIC)?;
+        }
         Ok(Self {
             reader,
-            writer: BufWriter::new(stream),
+            writer,
             next_req_id: 1,
             depth: depth.max(1),
+            wire,
             pending: HashMap::new(),
         })
     }
@@ -256,18 +357,16 @@ impl PipelinedClient {
         self.depth
     }
 
+    /// This connection's wire mode.
+    pub fn wire(&self) -> WireMode {
+        self.wire
+    }
+
     /// Block for one response and match it to its request.
     fn recv_one(&mut self) -> Result<Completion, ClientError> {
         self.writer.flush()?;
-        let mut line = String::new();
-        let n = self.reader.read_line(&mut line)?;
-        if n == 0 {
-            return Err(ClientError::Protocol(format!(
-                "server closed connection with {} in flight",
-                self.pending.len()
-            )));
-        }
-        let (got_id, body) = protocol::decode_reply(&line).map_err(ClientError::Protocol)?;
+        let (got_id, body) =
+            read_reply_frame(&mut self.reader, self.wire, self.pending.len())?;
         let req_id = got_id.ok_or_else(|| {
             ClientError::Protocol("pipelined reply carried no req_id".into())
         })?;
@@ -300,7 +399,7 @@ impl PipelinedClient {
     /// full. Returns the completions harvested (0 or 1).
     fn send(
         &mut self,
-        build: impl FnOnce(u64) -> String,
+        build: impl FnOnce(u64) -> Vec<u8>,
         expect: Expect,
     ) -> Result<Vec<Completion>, ClientError> {
         let mut done = Vec::new();
@@ -309,10 +408,9 @@ impl PipelinedClient {
         }
         let rid = self.next_req_id;
         self.next_req_id += 1;
-        let line = build(rid);
+        let frame = build(rid);
         self.pending.insert(rid, (expect, Instant::now()));
-        self.writer.write_all(line.as_bytes())?;
-        self.writer.write_all(b"\n")?;
+        self.writer.write_all(&frame)?;
         // flush per frame: the latency clock started above, so the frame
         // must leave now — parking it in the BufWriter until the next
         // harvest would bill this op for the client's own think time
@@ -323,8 +421,9 @@ impl PipelinedClient {
 
     /// Pipeline a `hash` request.
     pub fn send_hash(&mut self, samples: &[f32]) -> Result<Vec<Completion>, ClientError> {
+        let wire = self.wire;
         self.send(
-            |rid| protocol::encode_hash(Some(rid), samples),
+            |rid| protocol::encode_hash_frame(wire, Some(rid), samples),
             Expect::Signature,
         )
     }
@@ -335,8 +434,9 @@ impl PipelinedClient {
         id: u64,
         samples: &[f32],
     ) -> Result<Vec<Completion>, ClientError> {
+        let wire = self.wire;
         self.send(
-            |rid| protocol::encode_insert(Some(rid), id, samples),
+            |rid| protocol::encode_insert_frame(wire, Some(rid), id, samples),
             Expect::Inserted(id),
         )
     }
@@ -347,53 +447,63 @@ impl PipelinedClient {
         samples: &[f32],
         k: usize,
     ) -> Result<Vec<Completion>, ClientError> {
+        let wire = self.wire;
         self.send(
-            |rid| protocol::encode_query(Some(rid), samples, k),
+            |rid| protocol::encode_query_frame(wire, Some(rid), samples, k),
             Expect::Hits,
         )
     }
 
     /// Pipeline a `remove` request.
     pub fn send_remove(&mut self, id: u64) -> Result<Vec<Completion>, ClientError> {
+        let wire = self.wire;
         self.send(
-            |rid| protocol::encode_remove(Some(rid), id),
+            |rid| protocol::encode_remove_frame(wire, Some(rid), id),
             Expect::Removed(id),
         )
     }
 
     /// Pipeline a `ping`.
     pub fn send_ping(&mut self) -> Result<Vec<Completion>, ClientError> {
-        self.send(|rid| protocol::encode_bare(Some(rid), "ping"), Expect::Pong)
+        let wire = self.wire;
+        self.send(
+            |rid| protocol::encode_bare_frame(wire, Some(rid), "ping"),
+            Expect::Pong,
+        )
     }
 
     /// Pipeline a `metrics` request.
     pub fn send_metrics(&mut self) -> Result<Vec<Completion>, ClientError> {
+        let wire = self.wire;
         self.send(
-            |rid| protocol::encode_bare(Some(rid), "metrics"),
+            |rid| protocol::encode_bare_frame(wire, Some(rid), "metrics"),
             Expect::Metrics,
         )
     }
 
     /// Pipeline a `points` request.
     pub fn send_points(&mut self) -> Result<Vec<Completion>, ClientError> {
+        let wire = self.wire;
         self.send(
-            |rid| protocol::encode_bare(Some(rid), "points"),
+            |rid| protocol::encode_bare_frame(wire, Some(rid), "points"),
             Expect::Points,
         )
     }
 
     /// Pipeline a `snapshot` request.
     pub fn send_snapshot(&mut self, path: &str) -> Result<Vec<Completion>, ClientError> {
+        let wire = self.wire;
         self.send(
-            |rid| protocol::encode_snapshot(Some(rid), path),
+            |rid| protocol::encode_snapshot_frame(wire, Some(rid), path),
             Expect::Snapshot,
         )
     }
 
     /// Pipeline a graceful-shutdown request.
     pub fn send_shutdown(&mut self) -> Result<Vec<Completion>, ClientError> {
+        let wire = self.wire;
         self.send(
-            |rid| protocol::encode_bare(Some(rid), "shutdown"),
+            |rid| protocol::encode_bare_frame(wire, Some(rid), "shutdown"),
             Expect::ShuttingDown,
         )
     }
@@ -514,6 +624,8 @@ pub struct LoadConfig {
     pub ops_per_thread: usize,
     /// in-flight frames per connection (1 = no pipelining)
     pub pipeline_depth: usize,
+    /// wire format every connection speaks
+    pub wire: WireMode,
     /// fraction of ops that are inserts
     pub insert_fraction: f64,
     /// fraction of ops that are queries (the rest are hash-only)
@@ -534,6 +646,7 @@ impl Default for LoadConfig {
             threads: 8,
             ops_per_thread: 250,
             pipeline_depth: 1,
+            wire: WireMode::Json,
             insert_fraction: 0.5,
             query_fraction: 0.3,
             k: 10,
@@ -558,6 +671,8 @@ pub struct LoadReport {
     pub errors: usize,
     /// in-flight frames per connection during the run
     pub pipeline_depth: usize,
+    /// wire format the run used
+    pub wire: WireMode,
     /// wall-clock duration of the run
     pub elapsed: Duration,
     /// mean per-op latency (seconds)
@@ -585,6 +700,7 @@ impl LoadReport {
             ("hashes", self.hashes.into()),
             ("errors", self.errors.into()),
             ("pipeline_depth", self.pipeline_depth.into()),
+            ("wire", self.wire.as_str().into()),
             ("elapsed_s", self.elapsed.as_secs_f64().into()),
             ("throughput_ops_s", self.throughput().into()),
             ("latency_mean_s", self.latency_mean_s.into()),
@@ -623,9 +739,9 @@ impl ThreadTally {
 
 /// Run mixed insert/query/hash traffic against `addr` from
 /// `cfg.threads` concurrent connections, each keeping up to
-/// `cfg.pipeline_depth` frames in flight. The workload is the paper's
-/// sine family sampled at `points` (fetch them with
-/// [`Client::points`]). Insert ids are partitioned per thread above
+/// `cfg.pipeline_depth` frames in flight and speaking `cfg.wire`. The
+/// workload is the paper's sine family sampled at `points` (fetch them
+/// with [`Client::points`]). Insert ids are partitioned per thread above
 /// `cfg.id_base`, so a run never collides with itself or (at the
 /// default base) with an existing 0-based corpus.
 pub fn run_load(
@@ -639,7 +755,8 @@ pub fn run_load(
         let points = points.to_vec();
         let cfg = cfg.clone();
         handles.push(std::thread::spawn(move || -> Result<ThreadTally, ClientError> {
-            let mut client = PipelinedClient::connect(addr, cfg.pipeline_depth.max(1))?;
+            let mut client =
+                PipelinedClient::connect_with(addr, cfg.pipeline_depth.max(1), cfg.wire)?;
             let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(t as u64));
             let mut tally = ThreadTally::default();
             for i in 0..cfg.ops_per_thread {
@@ -704,6 +821,7 @@ pub fn run_load(
         hashes: merged.hashes,
         errors: merged.errors,
         pipeline_depth: cfg.pipeline_depth.max(1),
+        wire: cfg.wire,
         elapsed,
         latency_mean_s: mean,
         latency_p50_s: q(0.5),
@@ -791,6 +909,7 @@ mod tests {
             hashes: 2,
             errors: 0,
             pipeline_depth: 4,
+            wire: WireMode::Binary,
             elapsed: Duration::from_millis(100),
             latency_mean_s: 0.001,
             latency_p50_s: 0.001,
@@ -801,6 +920,7 @@ mod tests {
         let v = crate::json::parse(&report.to_json()).unwrap();
         assert_eq!(v.get("ops").unwrap().as_usize(), Some(10));
         assert_eq!(v.get("pipeline_depth").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("wire").unwrap().as_str(), Some("binary"));
         assert!(v.get("throughput_ops_s").unwrap().as_f64().unwrap() > 0.0);
     }
 }

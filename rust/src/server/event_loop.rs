@@ -5,8 +5,10 @@
 //!
 //! ```text
 //!                    ┌──────────────── epoll thread ───────────────┐
-//! clients ── TCP ──▶ │ accept / read / incremental newline framing │
-//!                    │   parse → Job{token, seq, req_id, op}       │
+//! clients ── TCP ──▶ │ accept / read / incremental framing         │
+//!                    │  (newline JSON, or FBIN1 length prefixes    │
+//!                    │   when the first 5 bytes negotiate binary)  │
+//!                    │   parse → Job{token, seq, req_id, op, wire} │
 //!                    └──────────────┬──────────────────────────────┘
 //!                                   │ BoundedQueue<Job>
 //!                          io_workers threads: submit_async the whole
@@ -17,6 +19,10 @@
 //!                    └─────────────────────────────────────────────┘
 //! ```
 //!
+//! Each connection carries its own wire mode ([`protocol::negotiate`] on
+//! its first bytes); completions are pre-encoded frames in that mode, so
+//! JSON and binary connections interleave freely on one loop.
+//!
 //! Backpressure: a connection with `pipeline_depth` responses outstanding
 //! (or an unflushed write buffer past the high-water mark) has its read
 //! interest cleared until it drains; the stall is counted in
@@ -24,7 +30,7 @@
 //! FIFO spill list and retries each tick, so the epoll thread never
 //! blocks.
 
-use super::protocol;
+use super::protocol::{self, WireMode};
 use super::reactor::{event, Poller, Waker};
 use crate::coordinator::{BoundedQueue, Coordinator, Op, Response, ServiceMetrics};
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -58,13 +64,28 @@ struct Job {
     seq: u64,
     req_id: Option<u64>,
     op: Op,
+    /// frame format of the connection that sent it (the response is
+    /// encoded in the same format)
+    wire: WireMode,
 }
 
-/// A finished response on its way back to the epoll thread.
+/// A finished response on its way back to the epoll thread, already
+/// encoded as complete wire bytes for its connection's mode.
 struct Completion {
     token: u64,
     seq: u64,
-    line: String,
+    frame: Vec<u8>,
+}
+
+/// Per-connection framing state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ConnMode {
+    /// first bytes not yet seen: mode undecided
+    Probe,
+    /// newline-delimited JSON
+    Json,
+    /// FBIN1 length-prefixed binary
+    Binary,
 }
 
 /// Handles owned by [`super::Server`] for the event-loop runtime.
@@ -163,11 +184,12 @@ fn worker_loop(
                 seq,
                 req_id,
                 op,
+                wire,
             } = job;
-            waits.push((token, seq, req_id, svc.submit_async(op)));
+            waits.push((token, seq, req_id, wire, svc.submit_async(op)));
         }
         let mut done = Vec::with_capacity(waits.len());
-        for (token, seq, req_id, rx) in waits {
+        for (token, seq, req_id, wire, rx) in waits {
             let resp = match rx {
                 Ok(rx) => rx
                     .recv()
@@ -177,7 +199,11 @@ fn worker_loop(
             done.push(Completion {
                 token,
                 seq,
-                line: protocol::encode_response(req_id, &resp),
+                // Signature responses serialize straight from the
+                // coordinator's shared flat block here; the oversize
+                // guard degrades an unframeable response to a correlated
+                // error envelope instead of a dead connection
+                frame: protocol::encode_response_frame(wire, req_id, &resp),
             });
         }
         completions.lock().unwrap().extend(done);
@@ -188,9 +214,12 @@ fn worker_loop(
 /// One multiplexed connection.
 struct Conn {
     stream: TcpStream,
+    /// negotiated frame format (Probe until the first bytes arrive)
+    mode: ConnMode,
     /// bytes received but not yet framed
     read_buf: Vec<u8>,
-    /// resume offset for the newline scan (avoid rescanning the prefix)
+    /// resume offset for the newline scan (avoid rescanning the prefix;
+    /// JSON mode only)
     scan_from: usize,
     /// encoded responses awaiting the socket
     write_buf: Vec<u8>,
@@ -200,8 +229,9 @@ struct Conn {
     next_seq: u64,
     /// sequence number of the next response to put on the wire
     next_write_seq: u64,
-    /// out-of-order completions parked until their turn
-    completed: BTreeMap<u64, String>,
+    /// out-of-order completions parked until their turn (pre-encoded
+    /// frames in this connection's wire mode)
+    completed: BTreeMap<u64, Vec<u8>>,
     /// EOF seen, or reads retired by shutdown
     read_closed: bool,
     /// fatal protocol error: close once all responses have flushed
@@ -216,6 +246,7 @@ impl Conn {
     fn new(stream: TcpStream) -> Self {
         Self {
             stream,
+            mode: ConnMode::Probe,
             read_buf: Vec::new(),
             scan_from: 0,
             write_buf: Vec::new(),
@@ -241,15 +272,15 @@ impl Conn {
         s
     }
 
-    fn complete(&mut self, seq: u64, line: String) {
-        self.completed.insert(seq, line);
+    fn complete(&mut self, seq: u64, frame: Vec<u8>) {
+        self.completed.insert(seq, frame);
     }
 
-    /// Move in-order completions into the write buffer.
+    /// Move in-order completions into the write buffer (frames carry
+    /// their own terminator/prefix).
     fn flush_ready(&mut self) {
-        while let Some(line) = self.completed.remove(&self.next_write_seq) {
-            self.write_buf.extend_from_slice(line.as_bytes());
-            self.write_buf.push(b'\n');
+        while let Some(frame) = self.completed.remove(&self.next_write_seq) {
+            self.write_buf.extend_from_slice(&frame);
             self.next_write_seq += 1;
         }
     }
@@ -407,13 +438,7 @@ impl LoopState {
             match conn.stream.read(&mut buf) {
                 Ok(0) => {
                     conn.read_closed = true;
-                    if !conn.read_buf.is_empty() {
-                        // a final unterminated frame before EOF is still a
-                        // frame (clients may write-all then half-close)
-                        let tail = std::mem::take(&mut conn.read_buf);
-                        conn.scan_from = 0;
-                        self.handle_frame(&mut conn, token, &tail);
-                    }
+                    self.eof_tail(&mut conn, token);
                     break;
                 }
                 Ok(n) => {
@@ -434,11 +459,57 @@ impl LoopState {
         self.settle(token, conn);
     }
 
+    /// EOF with unframed bytes still buffered. A JSON connection's final
+    /// unterminated line is still a frame (clients may write-all then
+    /// half-close); a binary connection's partial frame gets a typed
+    /// error; an unfinished negotiation can only be JSON garbage.
+    fn eof_tail(&mut self, conn: &mut Conn, token: u64) {
+        if conn.read_buf.is_empty() {
+            return;
+        }
+        let tail = std::mem::take(&mut conn.read_buf);
+        conn.scan_from = 0;
+        match conn.mode {
+            ConnMode::Binary => {
+                let seq = conn.take_seq();
+                conn.complete(
+                    seq,
+                    protocol::encode_error_frame(
+                        WireMode::Binary,
+                        None,
+                        "truncated binary frame before eof",
+                    ),
+                );
+            }
+            _ => self.handle_frame(conn, token, &tail),
+        }
+    }
+
+    /// Split complete frames out of the read buffer according to the
+    /// connection's (possibly just-negotiated) wire mode.
+    fn parse_frames(&mut self, conn: &mut Conn, token: u64) {
+        if conn.mode == ConnMode::Probe {
+            match protocol::negotiate(&conn.read_buf) {
+                protocol::Negotiation::NeedMore => return,
+                protocol::Negotiation::Json => conn.mode = ConnMode::Json,
+                protocol::Negotiation::Binary => {
+                    conn.read_buf.drain(..protocol::BINARY_MAGIC.len());
+                    conn.mode = ConnMode::Binary;
+                }
+            }
+        }
+        match conn.mode {
+            ConnMode::Json => self.parse_json_frames(conn, token),
+            ConnMode::Binary => self.parse_binary_frames(conn, token),
+            ConnMode::Probe => unreachable!("negotiated above"),
+        }
+    }
+
     /// Split complete newline-terminated frames out of the read buffer.
     /// The buffer is taken out of the connection for the duration, so
     /// frames are handled as zero-copy slices and the consumed prefix is
     /// drained once per call (not once per frame).
-    fn parse_frames(&mut self, conn: &mut Conn, token: u64) {
+    fn parse_json_frames(&mut self, conn: &mut Conn, token: u64) {
         let buf = std::mem::take(&mut conn.read_buf);
         let mut start = 0usize;
         let mut scan = conn.scan_from;
@@ -469,19 +540,55 @@ impl LoopState {
         conn.scan_from = conn.read_buf.len();
         if !conn.close_after_flush && conn.read_buf.len() > protocol::MAX_LINE_BYTES {
             let seq = conn.take_seq();
-            conn.complete(seq, protocol::encode_error(None, "request line too long"));
+            conn.complete(
+                seq,
+                protocol::encode_error_frame(WireMode::Json, None, "request line too long"),
+            );
             conn.close_after_flush = true;
             conn.read_closed = true;
         }
     }
 
-    /// Answer one frame: transport ops inline, coordinator ops via the
-    /// worker pool. Every frame gets a seq so responses flush in request
-    /// order regardless of completion order.
+    /// Split complete length-prefixed frames out of the read buffer. An
+    /// oversized declared length is answered once and closes the
+    /// connection after the flush — binary framing cannot resync past it.
+    fn parse_binary_frames(&mut self, conn: &mut Conn, token: u64) {
+        let buf = std::mem::take(&mut conn.read_buf);
+        let mut start = 0usize;
+        while !conn.close_after_flush {
+            match protocol::split_binary_frame(&buf[start..]) {
+                Ok(None) => break,
+                Ok(Some(consumed)) => {
+                    self.handle_binary_frame(conn, token, &buf[start + 4..start + consumed]);
+                    start += consumed;
+                }
+                Err(msg) => {
+                    let seq = conn.take_seq();
+                    conn.complete(
+                        seq,
+                        protocol::encode_error_frame(WireMode::Binary, None, &msg),
+                    );
+                    conn.close_after_flush = true;
+                    conn.read_closed = true;
+                }
+            }
+        }
+        conn.read_buf = buf;
+        if start > 0 {
+            conn.read_buf.drain(..start);
+        }
+    }
+
+    /// Answer one JSON frame: transport ops inline, coordinator ops via
+    /// the worker pool. Every frame gets a seq so responses flush in
+    /// request order regardless of completion order.
     fn handle_frame(&mut self, conn: &mut Conn, token: u64, bytes: &[u8]) {
         let seq = conn.take_seq();
         if bytes.len() > protocol::MAX_LINE_BYTES {
-            conn.complete(seq, protocol::encode_error(None, "request line too long"));
+            conn.complete(
+                seq,
+                protocol::encode_error_frame(WireMode::Json, None, "request line too long"),
+            );
             conn.close_after_flush = true;
             conn.read_closed = true;
             return;
@@ -491,35 +598,70 @@ impl LoopState {
             Err(_) => {
                 conn.complete(
                     seq,
-                    protocol::encode_error(None, "bad request: invalid utf-8"),
+                    protocol::encode_error_frame(
+                        WireMode::Json,
+                        None,
+                        "bad request: invalid utf-8",
+                    ),
                 );
                 return;
             }
         };
         if line.trim().is_empty() {
-            conn.complete(seq, protocol::encode_error(None, "empty request"));
+            conn.complete(
+                seq,
+                protocol::encode_error_frame(WireMode::Json, None, "empty request"),
+            );
             return;
         }
-        match protocol::parse_request(line) {
+        self.route(conn, token, seq, WireMode::Json, protocol::parse_request(line));
+    }
+
+    /// Answer one binary frame payload (the bytes after the length
+    /// prefix).
+    fn handle_binary_frame(&mut self, conn: &mut Conn, token: u64, payload: &[u8]) {
+        let seq = conn.take_seq();
+        self.route(
+            conn,
+            token,
+            seq,
+            WireMode::Binary,
+            protocol::parse_request_binary(payload),
+        );
+    }
+
+    /// Shared request routing: transport ops answered inline, coordinator
+    /// ops dispatched to the worker pool, parse failures answered with a
+    /// correlated error envelope in the connection's wire mode.
+    fn route(
+        &mut self,
+        conn: &mut Conn,
+        token: u64,
+        seq: u64,
+        wire: WireMode,
+        parsed: Result<protocol::Request, protocol::RequestError>,
+    ) {
+        match parsed {
             Err(e) => {
                 conn.complete(
                     seq,
-                    protocol::encode_error(e.req_id, &format!("bad request: {e}")),
+                    protocol::encode_error_frame(wire, e.req_id, &format!("bad request: {e}")),
                 );
             }
             Ok(protocol::Request { req_id, body }) => match body {
                 protocol::RequestBody::Points => {
-                    conn.complete(seq, protocol::encode_points(req_id, &self.points));
+                    conn.complete(seq, protocol::encode_points_frame(wire, req_id, &self.points));
                 }
                 protocol::RequestBody::Shutdown => {
                     self.shutdown.store(true, Ordering::SeqCst);
-                    conn.complete(seq, protocol::encode_shutting_down(req_id));
+                    conn.complete(seq, protocol::encode_shutting_down_frame(wire, req_id));
                 }
                 protocol::RequestBody::Op(op) => self.dispatch(Job {
                     token,
                     seq,
                     req_id,
                     op,
+                    wire,
                 }),
             },
         }
@@ -551,7 +693,7 @@ impl LoopState {
         let mut touched: Vec<u64> = Vec::with_capacity(done.len());
         for c in done {
             if let Some(conn) = self.conns.get_mut(&c.token) {
-                conn.complete(c.seq, c.line);
+                conn.complete(c.seq, c.frame);
                 touched.push(c.token);
             }
         }

@@ -1,6 +1,7 @@
 //! The network serving layer: a TCP front-end over the
 //! [`crate::coordinator`] batching worker pool, with two interchangeable
-//! I/O runtimes selected by `[server] io_mode`.
+//! I/O runtimes selected by `[server] io_mode` and two wire formats
+//! negotiated per connection.
 //!
 //! # Architecture
 //!
@@ -8,7 +9,7 @@
 //!
 //! ```text
 //! clients ── TCP ──▶ epoll thread (accept + non-blocking reads +
-//!                    incremental newline framing + write flushing)
+//!                    incremental framing + write flushing)
 //!                         │ Job queue (bounded)
 //!                    io_workers threads ──▶ Coordinator::submit_async
 //!                         │                 (dynamic batcher: concurrent
@@ -24,11 +25,30 @@
 //! acceptor + connection-handler pool: `max_conns` threads, each owning
 //! one connection at a time with blocking reads.
 //!
-//! # Wire protocol
+//! # Wire formats and mode negotiation
 //!
-//! Newline-delimited JSON, one frame per line, UTF-8, max 8 MiB per
-//! line ([`protocol::MAX_LINE_BYTES`]). Every request may carry an
-//! optional `req_id` (u64) that is echoed in the response.
+//! Both runtimes speak **two frame formats on the same port**; a
+//! connection's first bytes select its format for the connection's whole
+//! lifetime:
+//!
+//! * a connection whose first five bytes are `FBIN1`
+//!   ([`protocol::BINARY_MAGIC`]) speaks the **length-prefixed binary**
+//!   format from the byte after the magic on;
+//! * any other first byte (valid JSON starts with `{` or whitespace)
+//!   selects **newline-delimited JSON** — the default, and what `nc`
+//!   speaks. Garbage that merely resembles the magic (e.g. `FBINX…`)
+//!   falls through to the JSON parser's error envelope.
+//!
+//! Either way the cap is 8 MiB per frame payload
+//! ([`protocol::MAX_FRAME_BYTES`]), and every request may carry an
+//! optional `req_id` (u64) that is echoed in its response.
+//!
+//! ## JSON frames
+//!
+//! One UTF-8 JSON object per `\n`-terminated line. **Integer width:**
+//! ids and `req_id`s ride JSON numbers (f64), so values ≥ 2^53 are
+//! rejected rather than silently rounded — use the binary format for
+//! full-width ids.
 //!
 //! Requests:
 //!
@@ -62,6 +82,46 @@
 //!                                              bad requests and op failures)
 //! ```
 //!
+//! ## Binary frames (`FBIN1`)
+//!
+//! After the 5-byte magic, every frame in **both** directions is a
+//! little-endian `u32` payload length followed by the payload. All
+//! multi-byte integers and floats are little-endian; sample rows are raw
+//! `f32` bits (4 bytes/sample vs ~9–13 bytes of JSON text — the reason
+//! this format exists), and ids are native `u64`s with **no 2^53
+//! limit**.
+//!
+//! Request payload: `op:u8`, `flags:u8` (bit 0 = a `req_id:u64`
+//! follows), then the op body:
+//!
+//! ```text
+//! op 1 hash      n:u32, samples:[f32; n]
+//! op 2 insert    id:u64, n:u32, samples:[f32; n]
+//! op 3 query     n:u32, samples:[f32; n], k:u64
+//! op 4 remove    id:u64
+//! op 5 metrics   —
+//! op 6 snapshot  len:u32, path:[utf8; len]
+//! op 7 ping      —
+//! op 8 points    —
+//! op 9 shutdown  —
+//! ```
+//!
+//! Response payload: `status:u8` (0 = ok, 1 = error), `flags:u8` (bit 0
+//! = `req_id:u64` follows). Errors carry `len:u32, msg:[utf8; len]`;
+//! successes carry `type:u8` + body mirroring the JSON responses
+//! (`signature` = `n:u32` + raw `i32`s, `hits` = `n:u32` + `(id:u64,
+//! distance:f64)` pairs, `metrics` = a length-prefixed JSON string,
+//! `points` = `n:u32` + `f64`s, acks = their `u64`).
+//!
+//! ## Sample validation
+//!
+//! Both decoders reject non-finite samples — raw `NaN`/`±inf` bits on
+//! the binary path, and JSON numbers that are non-finite *or overflow
+//! `f32` to `±inf`* (e.g. `1e39`) — with a per-request error envelope;
+//! the coordinator's `Insert` path additionally refuses non-finite rows
+//! defensively. A poisoned sample would otherwise corrupt the index and
+//! every re-rank distance it touches.
+//!
 //! # Pipelining contract
 //!
 //! Clients may write many request frames before reading any response
@@ -72,12 +132,18 @@
 //!   internally. `req_id` is still echoed verbatim so clients can (and
 //!   should) correlate by id rather than position.
 //! * **One response per frame** — every received frame, including
-//!   malformed ones, produces exactly one response line. Malformed JSON,
-//!   unknown `op`s, invalid UTF-8, and empty lines get an
-//!   `{"ok":false,…}` envelope and the connection stays usable; only an
-//!   oversized frame (> 8 MiB before its newline) is answered with
-//!   `request line too long` and then the connection closes after all
-//!   earlier responses have flushed.
+//!   malformed ones, produces exactly one response in the connection's
+//!   wire format. Malformed JSON, unknown `op`s/op tags, invalid UTF-8,
+//!   empty lines, truncated binary bodies, and trailing garbage get an
+//!   error envelope and the connection stays usable. Only two conditions
+//!   close the connection (after all earlier responses have flushed):
+//!   an oversized request frame (> 8 MiB before its newline, or a binary
+//!   length prefix declaring > 8 MiB — the framing cannot resync past
+//!   either), and a binary frame truncated by EOF.
+//! * **Oversized responses** — a response that cannot fit a frame
+//!   (a `query` with a huge `k` against a dense bucket) is replaced by a
+//!   *correlated per-request error envelope*; the connection and every
+//!   other in-flight request stay live.
 //! * **Backpressure** — a connection with `[server] pipeline_depth`
 //!   responses outstanding (or an unflushed write backlog ≥ 8 MiB) is
 //!   not read from until it drains; stalls are visible as
@@ -94,13 +160,12 @@
 //! unanswered ids.
 //!
 //! The contract above is the **event-loop runtime's**. The threaded
-//! fallback answers frames one at a time in request order and echoes
-//! `req_id` identically, but deviates in two documented ways: a frame
-//! containing invalid UTF-8 closes the connection without a response
-//! (its line-reader cannot recover the framing), and at shutdown only
-//! the frame currently being served is answered — pipelined frames
-//! still buffered on that connection are dropped with the close. Keep
-//! pipelining depth at 1 when targeting `io_mode = "threaded"`.
+//! fallback frames both formats identically and echoes `req_id` the same
+//! way, but answers frames one at a time in request order, and at
+//! shutdown only the frame currently being served is answered —
+//! pipelined frames still buffered on that connection are dropped with
+//! the close. Keep pipelining depth at 1 when targeting
+//! `io_mode = "threaded"`.
 //!
 //! # Shutdown
 //!
@@ -126,13 +191,14 @@ pub use client::{
     run_load, Client, ClientError, Completion, LatencyHistogram, LoadConfig, LoadReport,
     PipelinedClient,
 };
+pub use protocol::WireMode;
 #[cfg(target_os = "linux")]
 pub use reactor::raise_nofile_limit;
 
 use crate::config::{IoMode, ServiceConfig};
-use crate::coordinator::{BoundedQueue, Coordinator, Op, Response};
-use protocol::{Request, RequestBody};
-use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
+use crate::coordinator::{BoundedQueue, Coordinator};
+use protocol::{Negotiation, Request, RequestBody};
+use std::io::{BufWriter, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -245,6 +311,7 @@ impl Server {
     /// outcome: `None` if disabled, `Some(Ok(bytes))` / `Some(Err(e))`
     /// otherwise.
     pub fn shutdown(mut self) -> (Arc<Coordinator>, Option<std::io::Result<u64>>) {
+        use crate::coordinator::{Op, Response};
         self.shutdown.store(true, Ordering::SeqCst);
         match &mut self.runtime {
             Runtime::Threaded { acceptor, handlers } => {
@@ -352,77 +419,199 @@ fn handle_connection(
     metrics.record_conn_closed();
 }
 
+/// Blocking frame loop for the threaded runtime: raw reads into a local
+/// buffer, wire-mode negotiation on the first bytes, then one reply per
+/// complete frame — the same framing rules as the event loop, minus
+/// pipelined reordering (frames are answered one at a time).
 fn serve_stream(
     stream: TcpStream,
     svc: &Arc<Coordinator>,
     points: &Arc<Vec<f64>>,
     shutdown: &Arc<AtomicBool>,
 ) -> std::io::Result<()> {
+    use protocol::WireMode;
+
     stream.set_nodelay(true)?;
     // Reads time out so an idle connection re-checks the shutdown flag;
-    // a timed-out read_line keeps its partial line and resumes.
+    // partial frames persist in `buf` across timeouts.
     stream.set_read_timeout(Some(POLL_INTERVAL))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut reader = stream.try_clone()?;
     let mut writer = BufWriter::new(stream);
-    let mut line = String::new();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut mode: Option<WireMode> = None;
+    // resume offset for the JSON newline scan
+    let mut scan_from = 0usize;
+    let mut chunk = [0u8; 64 * 1024];
+    let mut eof = false;
     loop {
-        // per-call byte limit: a frame that exceeds MAX_LINE_BYTES hits
-        // the limit before the newline and is rejected below, so a
-        // hostile sender cannot grow the buffer without bound
-        let mut limited = (&mut reader).take((protocol::MAX_LINE_BYTES + 1) as u64);
-        match limited.read_line(&mut line) {
-            Ok(0) => return Ok(()), // EOF
-            Ok(_) => {
-                if line.len() > protocol::MAX_LINE_BYTES {
-                    let reply = protocol::encode_error(None, "request line too long");
-                    writer.write_all(reply.as_bytes())?;
-                    writer.write_all(b"\n")?;
-                    writer.flush()?;
-                    return Ok(());
+        // 1. drain every complete frame currently buffered
+        loop {
+            if mode.is_none() {
+                match protocol::negotiate(&buf) {
+                    Negotiation::NeedMore if !eof => break,
+                    // an unfinished negotiation at EOF can only be JSON
+                    // garbage — fall through to the JSON tail handling
+                    Negotiation::NeedMore => mode = Some(WireMode::Json),
+                    Negotiation::Json => mode = Some(WireMode::Json),
+                    Negotiation::Binary => {
+                        buf.drain(..protocol::BINARY_MAGIC.len());
+                        mode = Some(WireMode::Binary);
+                    }
                 }
-                let reply = answer(&line, svc, points, shutdown);
-                writer.write_all(reply.as_bytes())?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
+            }
+            // answer every complete frame by offset, then drop the
+            // consumed prefix in ONE drain (a burst of pipelined frames
+            // in a single read must not memmove the buffer per frame)
+            let m = mode.expect("negotiated above");
+            let mut start = 0usize;
+            match m {
+                WireMode::Json => {
+                    while let Some(rel) = buf[scan_from..].iter().position(|&b| b == b'\n') {
+                        let end = scan_from + rel;
+                        let mut line = &buf[start..end];
+                        if line.last() == Some(&b'\r') {
+                            line = &line[..line.len() - 1];
+                        }
+                        if line.len() > protocol::MAX_LINE_BYTES {
+                            write_frame(
+                                &mut writer,
+                                &protocol::encode_error_frame(m, None, "request line too long"),
+                            )?;
+                            return Ok(());
+                        }
+                        let reply = answer_frame(m, line, svc, points, shutdown);
+                        write_frame(&mut writer, &reply)?;
+                        if shutdown.load(Ordering::SeqCst) {
+                            return Ok(());
+                        }
+                        start = end + 1;
+                        scan_from = start;
+                    }
+                    scan_from = buf.len();
+                    if start > 0 {
+                        buf.drain(..start);
+                        scan_from -= start;
+                    }
+                    if buf.len() > protocol::MAX_LINE_BYTES {
+                        // a frame that drips past the cap without its
+                        // newline cannot be served
+                        write_frame(
+                            &mut writer,
+                            &protocol::encode_error_frame(m, None, "request line too long"),
+                        )?;
+                        return Ok(());
+                    }
+                    if eof && !buf.is_empty() {
+                        // a final unterminated line is still a frame
+                        // (write-all then half-close)
+                        let tail = std::mem::take(&mut buf);
+                        scan_from = 0;
+                        let reply = answer_frame(m, &tail, svc, points, shutdown);
+                        write_frame(&mut writer, &reply)?;
+                    }
+                    break;
+                }
+                WireMode::Binary => {
+                    loop {
+                        match protocol::split_binary_frame(&buf[start..]) {
+                            Err(msg) => {
+                                // oversized declared length: binary
+                                // framing cannot resync past it
+                                write_frame(
+                                    &mut writer,
+                                    &protocol::encode_error_frame(m, None, &msg),
+                                )?;
+                                return Ok(());
+                            }
+                            Ok(None) => break,
+                            Ok(Some(consumed)) => {
+                                let payload = &buf[start + 4..start + consumed];
+                                let reply = answer_frame(m, payload, svc, points, shutdown);
+                                write_frame(&mut writer, &reply)?;
+                                if shutdown.load(Ordering::SeqCst) {
+                                    return Ok(());
+                                }
+                                start += consumed;
+                            }
+                        }
+                    }
+                    if start > 0 {
+                        buf.drain(..start);
+                    }
+                    if eof && !buf.is_empty() {
+                        write_frame(
+                            &mut writer,
+                            &protocol::encode_error_frame(
+                                m,
+                                None,
+                                "truncated binary frame before eof",
+                            ),
+                        )?;
+                        buf.clear();
+                    }
+                    break;
+                }
+            }
+        }
+        if eof {
+            return Ok(());
+        }
+        // 2. read more bytes (or notice EOF / shutdown)
+        match reader.read(&mut chunk) {
+            Ok(0) => eof = true,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
                 if shutdown.load(Ordering::SeqCst) {
                     return Ok(());
                 }
-                line.clear();
             }
-            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-                // timed-out reads keep their partial line and resume, but
-                // a frame that drips past the cap without a newline is
-                // rejected here too
-                if shutdown.load(Ordering::SeqCst) || line.len() > protocol::MAX_LINE_BYTES {
-                    return Ok(());
-                }
-            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
             Err(_) => return Ok(()),
         }
     }
 }
 
-/// Decode one request line and produce the response line.
-fn answer(
-    line: &str,
+fn write_frame(writer: &mut BufWriter<TcpStream>, frame: &[u8]) -> std::io::Result<()> {
+    writer.write_all(frame)?;
+    writer.flush()
+}
+
+/// Decode one request frame payload and produce the complete response
+/// frame in the same wire mode.
+fn answer_frame(
+    mode: protocol::WireMode,
+    payload: &[u8],
     svc: &Arc<Coordinator>,
     points: &Arc<Vec<f64>>,
     shutdown: &Arc<AtomicBool>,
-) -> String {
-    if line.trim().is_empty() {
-        return protocol::encode_error(None, "empty request");
-    }
-    match protocol::parse_request(line) {
-        Err(e) => protocol::encode_error(e.req_id, &format!("bad request: {e}")),
+) -> Vec<u8> {
+    use protocol::WireMode;
+    let parsed = match mode {
+        WireMode::Json => {
+            let line = match std::str::from_utf8(payload) {
+                Ok(s) => s,
+                Err(_) => {
+                    return protocol::encode_error_frame(mode, None, "bad request: invalid utf-8")
+                }
+            };
+            if line.trim().is_empty() {
+                return protocol::encode_error_frame(mode, None, "empty request");
+            }
+            protocol::parse_request(line)
+        }
+        WireMode::Binary => protocol::parse_request_binary(payload),
+    };
+    match parsed {
+        Err(e) => protocol::encode_error_frame(mode, e.req_id, &format!("bad request: {e}")),
         Ok(Request { req_id, body }) => match body {
-            RequestBody::Points => protocol::encode_points(req_id, points),
+            RequestBody::Points => protocol::encode_points_frame(mode, req_id, points),
             RequestBody::Shutdown => {
                 shutdown.store(true, Ordering::SeqCst);
-                protocol::encode_shutting_down(req_id)
+                protocol::encode_shutting_down_frame(mode, req_id)
             }
             RequestBody::Op(op) => {
                 let resp = svc.submit(op);
-                protocol::encode_response(req_id, &resp)
+                protocol::encode_response_frame(mode, req_id, &resp)
             }
         },
     }

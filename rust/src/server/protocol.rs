@@ -1,24 +1,160 @@
-//! Wire-format encode/decode for the newline-delimited JSON protocol
-//! (see the [`crate::server`] module doc for the full frame reference).
+//! Wire-format encode/decode for both frame formats the server speaks on
+//! one port (see the [`crate::server`] module doc for the full frame
+//! reference):
 //!
-//! Both directions are symmetric: the server uses [`parse_request`] +
-//! [`encode_response`]; the client uses the `encode_*` request builders +
-//! [`decode_reply`]. Everything round-trips through [`crate::json`] — no
-//! external serialization crates.
+//! * **newline-delimited JSON** — one UTF-8 JSON object per line; the
+//!   original format, kept as the default and the debugging-friendly
+//!   option (`nc` works).
+//! * **`FBIN1` length-prefixed binary** — negotiated by a connection
+//!   whose first five bytes are [`BINARY_MAGIC`]; every subsequent frame
+//!   in *both* directions is a little-endian `u32` payload length
+//!   followed by the payload. Sample rows travel as raw `f32` bits and
+//!   ids as native `u64`s, so bulk rows cost 4 bytes/sample instead of
+//!   ~9–13 bytes of decimal text, and the JSON carrier's 2^53 id
+//!   precision limit does not apply.
+//!
+//! Both directions are symmetric: the server uses [`parse_request`] /
+//! [`parse_request_binary`] + the `encode_*_frame` response builders; the
+//! client uses the `encode_*_frame` request builders + [`decode_reply`] /
+//! [`decode_reply_binary`]. JSON round-trips through [`crate::json`]; the
+//! binary codec is hand-rolled little-endian — no external serialization
+//! crates in either path.
+//!
+//! Sample values are validated at the wire: a non-finite sample — or a
+//! JSON number that overflows `f32` to `±inf` — is rejected with a
+//! per-request error envelope before it can poison the index or the
+//! re-rank distances.
 
 use crate::coordinator::{Op, Response};
 use crate::json::{self, object, Value};
 use crate::search::Hit;
 
-/// Hard cap on one request/response line; longer frames are a protocol
-/// error (protects the server from unbounded buffering).
+/// Hard cap on one request/response frame (the JSON line without its
+/// newline, or the binary payload without its length prefix); longer
+/// frames are a protocol error (protects both sides from unbounded
+/// buffering).
 ///
-/// Note on integer width: ids and `req_id`s travel as JSON numbers,
-/// which this crate's [`crate::json`] (like most JSON stacks) carries
-/// as `f64` — values ≥ 2^53 lose precision on the wire. `Value::as_u64`
-/// rejects them server-side; clients must keep ids below 2^53 (the
-/// ROADMAP's binary-frame follow-up lifts this).
+/// Note on integer width: in the JSON format ids and `req_id`s travel as
+/// JSON numbers, which this crate's [`crate::json`] (like most JSON
+/// stacks) carries as `f64` — values ≥ 2^53 lose precision on the wire
+/// and `Value::as_u64` rejects them server-side. The binary format
+/// carries ids as native little-endian `u64`s and has no such limit.
 pub const MAX_LINE_BYTES: usize = 8 << 20;
+
+/// Alias of [`MAX_LINE_BYTES`] for the binary framing (one cap, two
+/// formats).
+pub const MAX_FRAME_BYTES: usize = MAX_LINE_BYTES;
+
+/// First bytes of a binary-mode connection. A connection that opens with
+/// anything else speaks newline-delimited JSON.
+pub const BINARY_MAGIC: &[u8; 5] = b"FBIN1";
+
+/// Which frame format a connection (or client) speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireMode {
+    /// newline-delimited JSON (the default)
+    Json,
+    /// `FBIN1` length-prefixed binary
+    Binary,
+}
+
+impl WireMode {
+    /// The CLI/config spelling (inverse of [`WireMode::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WireMode::Json => "json",
+            WireMode::Binary => "binary",
+        }
+    }
+
+    /// Parse the CLI spelling (`funclsh load --wire …` goes through
+    /// here).
+    pub fn parse(s: &str) -> Option<WireMode> {
+        match s {
+            "json" | "jsonl" => Some(WireMode::Json),
+            "binary" | "bin" | "fbin1" => Some(WireMode::Binary),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of sniffing the first bytes of a connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Negotiation {
+    /// the bytes so far are a proper prefix of [`BINARY_MAGIC`]; read
+    /// more before deciding
+    NeedMore,
+    /// JSON mode — no bytes consumed
+    Json,
+    /// binary mode — the caller must consume the 5 magic bytes
+    Binary,
+}
+
+/// Decide a connection's wire mode from its first buffered bytes. Any
+/// first byte that cannot begin [`BINARY_MAGIC`] selects JSON (a valid
+/// JSON frame starts with `{` or whitespace, so garbage that *almost*
+/// spells the magic falls through to the JSON parser's error envelope).
+pub fn negotiate(first: &[u8]) -> Negotiation {
+    let n = first.len().min(BINARY_MAGIC.len());
+    if first[..n] != BINARY_MAGIC[..n] {
+        return Negotiation::Json;
+    }
+    if first.len() >= BINARY_MAGIC.len() {
+        Negotiation::Binary
+    } else {
+        Negotiation::NeedMore
+    }
+}
+
+/// Try to split one binary frame off the front of `buf`: `Ok(None)`
+/// means more bytes are needed; `Ok(Some(consumed))` means one complete
+/// frame occupies `buf[..consumed]` with its payload at
+/// `buf[4..consumed]`. An oversized declared length is an `Err` — the
+/// framing cannot resync past it, so the connection must close (after
+/// answering with the error).
+pub fn split_binary_frame(buf: &[u8]) -> Result<Option<usize>, String> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(format!(
+            "binary frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte cap"
+        ));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some(4 + len))
+}
+
+// binary request op tags
+const OP_HASH: u8 = 1;
+const OP_INSERT: u8 = 2;
+const OP_QUERY: u8 = 3;
+const OP_REMOVE: u8 = 4;
+const OP_METRICS: u8 = 5;
+const OP_SNAPSHOT: u8 = 6;
+const OP_PING: u8 = 7;
+const OP_POINTS: u8 = 8;
+const OP_SHUTDOWN: u8 = 9;
+
+// binary reply type tags
+const REPLY_SIGNATURE: u8 = 1;
+const REPLY_INSERTED: u8 = 2;
+const REPLY_HITS: u8 = 3;
+const REPLY_REMOVED: u8 = 4;
+const REPLY_METRICS: u8 = 5;
+const REPLY_SNAPSHOT: u8 = 6;
+const REPLY_PONG: u8 = 7;
+const REPLY_POINTS: u8 = 8;
+const REPLY_SHUTTING_DOWN: u8 = 9;
+
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+
+/// Header flag: a `u64` `req_id` follows the flags byte.
+const FLAG_REQ_ID: u8 = 1;
 
 /// A decoded request frame.
 #[derive(Debug, Clone)]
@@ -45,10 +181,21 @@ pub enum RequestBody {
 fn f32_row(v: &Value) -> Result<Vec<f32>, String> {
     let arr = v.as_array().ok_or("`samples` must be an array")?;
     arr.iter()
-        .map(|x| {
-            x.as_f64()
-                .map(|f| f as f32)
-                .ok_or_else(|| "`samples` must contain only numbers".to_string())
+        .enumerate()
+        .map(|(i, x)| {
+            let f = x
+                .as_f64()
+                .ok_or_else(|| "`samples` must contain only numbers".to_string())?;
+            let v = f as f32;
+            if !v.is_finite() {
+                // a JSON f64 that overflows f32 casts to ±inf; letting it
+                // through would poison the index and every re-rank
+                // distance it touches
+                return Err(format!(
+                    "`samples[{i}]` = {f} is not a finite f32 (non-finite samples are rejected)"
+                ));
+            }
+            Ok(v)
         })
         .collect()
 }
@@ -57,10 +204,10 @@ fn need<'v>(v: &'v Value, key: &str) -> Result<&'v Value, String> {
     v.get(key).ok_or_else(|| format!("missing field `{key}`"))
 }
 
-/// A rejected request line. Carries the `req_id` recovered from the
-/// frame (when the JSON parsed far enough to have one), so the error
-/// envelope can still correlate — a pipelined client must get a
-/// per-request error, not a connection-level failure.
+/// A rejected request frame. Carries the `req_id` recovered from the
+/// frame (when it parsed far enough to have one), so the error envelope
+/// can still correlate — a pipelined client must get a per-request
+/// error, not a connection-level failure.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestError {
     /// the frame's correlation id, if it was recoverable
@@ -75,7 +222,7 @@ impl std::fmt::Display for RequestError {
     }
 }
 
-/// Parse one request line.
+/// Parse one JSON request line.
 pub fn parse_request(line: &str) -> Result<Request, RequestError> {
     let v = json::parse(line.trim()).map_err(|e| RequestError {
         req_id: None,
@@ -119,6 +266,186 @@ pub fn parse_request(line: &str) -> Result<Request, RequestError> {
     Ok(Request { req_id, body })
 }
 
+// ---------------------------------------------------- binary primitives
+
+/// Little-endian reader over a binary payload; every accessor reports
+/// truncation as a typed message instead of panicking.
+struct BinReader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn finished(&self) -> bool {
+        self.pos == self.b.len()
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated frame: need {n} more bytes, have {}",
+                self.remaining()
+            ));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, String> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str_(&mut self) -> Result<&'a str, String> {
+        let n = self.u32()? as usize;
+        std::str::from_utf8(self.take(n)?).map_err(|_| "invalid utf-8 in string field".into())
+    }
+
+    /// `u32` count + raw `f32` samples, with the declared count checked
+    /// against the remaining bytes *before* any allocation is sized from
+    /// it, and every value checked finite (the binary twin of
+    /// [`f32_row`]'s rejection rule).
+    fn samples(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u32()? as usize;
+        if self.remaining() < n.saturating_mul(4) {
+            return Err(format!(
+                "declared {n} samples but only {} payload bytes remain",
+                self.remaining()
+            ));
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let v = self.f32()?;
+            if !v.is_finite() {
+                return Err(format!(
+                    "sample[{i}] is not a finite f32 (non-finite samples are rejected)"
+                ));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Build one binary frame: 4-byte LE length prefix + the payload written
+/// by `build`.
+fn bin_frame(build: impl FnOnce(&mut Vec<u8>)) -> Vec<u8> {
+    let mut b = vec![0u8; 4];
+    build(&mut b);
+    let len = (b.len() - 4) as u32;
+    b[..4].copy_from_slice(&len.to_le_bytes());
+    b
+}
+
+/// Leading tag byte (request op / response status) + flags (+ `req_id`).
+fn put_tag_and_req_id(b: &mut Vec<u8>, tag: u8, req_id: Option<u64>) {
+    b.push(tag);
+    match req_id {
+        Some(id) => {
+            b.push(FLAG_REQ_ID);
+            b.extend_from_slice(&id.to_le_bytes());
+        }
+        None => b.push(0),
+    }
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    b.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_samples(b: &mut Vec<u8>, samples: &[f32]) {
+    b.extend_from_slice(&(samples.len() as u32).to_le_bytes());
+    for &s in samples {
+        b.extend_from_slice(&s.to_le_bytes());
+    }
+}
+
+/// Parse one binary request payload (the bytes after the length prefix).
+/// The header (op tag, flags, `req_id`) parses first, so body-level
+/// failures still correlate to their request.
+pub fn parse_request_binary(payload: &[u8]) -> Result<Request, RequestError> {
+    let mut rd = BinReader::new(payload);
+    let head = |msg: String| RequestError { req_id: None, msg };
+    let op = rd.u8().map_err(head)?;
+    let flags = rd.u8().map_err(head)?;
+    if flags & !FLAG_REQ_ID != 0 {
+        return Err(head(format!("unknown header flags {flags:#04x}")));
+    }
+    let req_id = if flags & FLAG_REQ_ID != 0 {
+        Some(rd.u64().map_err(head)?)
+    } else {
+        None
+    };
+    let body = (|| -> Result<RequestBody, String> {
+        let body = match op {
+            OP_HASH => RequestBody::Op(Op::Hash {
+                samples: rd.samples()?,
+            }),
+            OP_INSERT => {
+                let id = rd.u64()?;
+                RequestBody::Op(Op::Insert {
+                    id,
+                    samples: rd.samples()?,
+                })
+            }
+            OP_QUERY => {
+                let samples = rd.samples()?;
+                let k = rd.u64()? as usize;
+                RequestBody::Op(Op::Query { samples, k })
+            }
+            OP_REMOVE => RequestBody::Op(Op::Remove { id: rd.u64()? }),
+            OP_METRICS => RequestBody::Op(Op::Metrics),
+            OP_SNAPSHOT => RequestBody::Op(Op::Snapshot {
+                path: rd.str_()?.to_string(),
+            }),
+            OP_PING => RequestBody::Op(Op::Ping),
+            OP_POINTS => RequestBody::Points,
+            OP_SHUTDOWN => RequestBody::Shutdown,
+            other => return Err(format!("unknown binary op tag {other}")),
+        };
+        if !rd.finished() {
+            return Err(format!(
+                "{} trailing bytes after the request body",
+                rd.remaining()
+            ));
+        }
+        Ok(body)
+    })()
+    .map_err(|msg| RequestError { req_id, msg })?;
+    Ok(Request { req_id, body })
+}
+
+// -------------------------------------------------------- JSON encoders
+
 fn envelope(req_id: Option<u64>, mut fields: Vec<(&str, Value)>) -> String {
     fields.push(("ok", true.into()));
     if let Some(id) = req_id {
@@ -127,7 +454,7 @@ fn envelope(req_id: Option<u64>, mut fields: Vec<(&str, Value)>) -> String {
     object(fields).to_json()
 }
 
-/// Encode an error response line.
+/// Encode an error response line (JSON).
 pub fn encode_error(req_id: Option<u64>, msg: &str) -> String {
     let mut fields: Vec<(&str, Value)> = vec![("ok", false.into()), ("error", msg.into())];
     if let Some(id) = req_id {
@@ -136,7 +463,7 @@ pub fn encode_error(req_id: Option<u64>, msg: &str) -> String {
     object(fields).to_json()
 }
 
-/// Encode a coordinator response line.
+/// Encode a coordinator response line (JSON).
 pub fn encode_response(req_id: Option<u64>, resp: &Response) -> String {
     match resp {
         Response::Signature(sig) => envelope(
@@ -145,7 +472,14 @@ pub fn encode_response(req_id: Option<u64>, resp: &Response) -> String {
                 ("type", "signature".into()),
                 (
                     "signature",
-                    Value::Array(sig.iter().map(|&x| Value::Number(x as f64)).collect()),
+                    // serialized straight from the shared flat block —
+                    // no per-response Vec<i32> clone on this path
+                    Value::Array(
+                        sig.as_slice()
+                            .iter()
+                            .map(|&x| Value::Number(x as f64))
+                            .collect(),
+                    ),
                 ),
             ],
         ),
@@ -199,7 +533,7 @@ pub fn encode_response(req_id: Option<u64>, resp: &Response) -> String {
     }
 }
 
-/// Encode the transport-level `points` response.
+/// Encode the transport-level `points` response (JSON).
 pub fn encode_points(req_id: Option<u64>, points: &[f64]) -> String {
     envelope(
         req_id,
@@ -213,15 +547,197 @@ pub fn encode_points(req_id: Option<u64>, points: &[f64]) -> String {
     )
 }
 
-/// Encode the transport-level `shutdown` acknowledgement.
+/// Encode the transport-level `shutdown` acknowledgement (JSON).
 pub fn encode_shutting_down(req_id: Option<u64>) -> String {
     envelope(req_id, vec![("type", "shutting_down".into())])
+}
+
+// ------------------------------------------------------ binary encoders
+
+/// Encode an error response frame (binary, length-prefixed).
+pub fn encode_error_binary(req_id: Option<u64>, msg: &str) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, STATUS_ERR, req_id);
+        put_str(b, msg);
+    })
+}
+
+/// Encode a coordinator response frame (binary, length-prefixed).
+pub fn encode_response_binary(req_id: Option<u64>, resp: &Response) -> Vec<u8> {
+    if let Response::Error(e) = resp {
+        return encode_error_binary(req_id, e);
+    }
+    bin_frame(|b| {
+        put_tag_and_req_id(b, STATUS_OK, req_id);
+        match resp {
+            Response::Signature(sig) => {
+                b.push(REPLY_SIGNATURE);
+                // straight off the shared [B×K] block: count + raw i32s
+                let s = sig.as_slice();
+                b.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                for &v in s {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Response::Inserted { id } => {
+                b.push(REPLY_INSERTED);
+                b.extend_from_slice(&id.to_le_bytes());
+            }
+            Response::Hits(hits) => {
+                b.push(REPLY_HITS);
+                b.extend_from_slice(&(hits.len() as u32).to_le_bytes());
+                for h in hits {
+                    b.extend_from_slice(&h.id.to_le_bytes());
+                    b.extend_from_slice(&h.distance.to_le_bytes());
+                }
+            }
+            Response::Removed { id } => {
+                b.push(REPLY_REMOVED);
+                b.extend_from_slice(&id.to_le_bytes());
+            }
+            Response::Metrics(m) => {
+                // metrics stay a JSON object inside the binary carrier:
+                // they are diagnostic, schema-fluid, and tiny
+                b.push(REPLY_METRICS);
+                put_str(b, &m.to_value().to_json());
+            }
+            Response::Snapshotted { path, bytes } => {
+                b.push(REPLY_SNAPSHOT);
+                put_str(b, path);
+                b.extend_from_slice(&bytes.to_le_bytes());
+            }
+            Response::Pong { indexed } => {
+                b.push(REPLY_PONG);
+                b.extend_from_slice(&indexed.to_le_bytes());
+            }
+            Response::Error(_) => unreachable!("handled above"),
+        }
+    })
+}
+
+/// Encode the transport-level `points` response (binary).
+pub fn encode_points_binary(req_id: Option<u64>, points: &[f64]) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, STATUS_OK, req_id);
+        b.push(REPLY_POINTS);
+        b.extend_from_slice(&(points.len() as u32).to_le_bytes());
+        for &p in points {
+            b.extend_from_slice(&p.to_le_bytes());
+        }
+    })
+}
+
+/// Encode the transport-level `shutdown` acknowledgement (binary).
+pub fn encode_shutting_down_binary(req_id: Option<u64>) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, STATUS_OK, req_id);
+        b.push(REPLY_SHUTTING_DOWN);
+    })
+}
+
+// --------------------------------------------- mode-dispatching framing
+
+/// Wrap a JSON line as wire bytes (the line plus its newline).
+fn json_frame(line: String) -> Vec<u8> {
+    let mut b = line.into_bytes();
+    b.push(b'\n');
+    b
+}
+
+/// Payload length of an already-framed response (JSON line without its
+/// newline, binary payload without its prefix).
+fn framed_payload_len(mode: WireMode, frame: &[u8]) -> usize {
+    match mode {
+        WireMode::Json => frame.len().saturating_sub(1),
+        WireMode::Binary => frame.len().saturating_sub(4),
+    }
+}
+
+/// A safe *lower bound* on a response's encoded payload size: never
+/// larger than the real encoding, so it can veto serialization early
+/// without ever rejecting a response that would have fit. Binary element
+/// sizes are exact; JSON per-element floors are the shortest possible
+/// renderings.
+fn response_payload_min(mode: WireMode, resp: &Response) -> usize {
+    let per_elem = |bin: usize, json_min: usize| match mode {
+        WireMode::Binary => bin,
+        WireMode::Json => json_min,
+    };
+    match resp {
+        // binary: 16 B/hit; JSON: >= len(r#"{"distance":0,"id":0}"#) + comma
+        Response::Hits(h) => h.len() * per_elem(16, 22),
+        // binary: 4 B/entry; JSON: >= one digit + comma
+        Response::Signature(s) => s.as_slice().len() * per_elem(4, 2),
+        _ => 0,
+    }
+}
+
+/// Encode a coordinator response as complete wire bytes for `mode`, with
+/// the oversize guard: a response the peer could never frame (payload >
+/// [`MAX_FRAME_BYTES`], e.g. a `query` with a huge `k` against a dense
+/// bucket) is replaced by a *correlated per-request error envelope*
+/// instead of killing the connection — every other in-flight pipelined
+/// request keeps its answer. Provably-oversized responses are vetoed by
+/// an exact size bound *before* serialization, so the hostile path never
+/// builds the tens-of-MB frame it is about to discard.
+pub fn encode_response_frame(mode: WireMode, req_id: Option<u64>, resp: &Response) -> Vec<u8> {
+    let floor = response_payload_min(mode, resp);
+    if floor > MAX_FRAME_BYTES {
+        return encode_error_frame(
+            mode,
+            req_id,
+            &format!(
+                "response too large (at least {floor} bytes > {MAX_FRAME_BYTES}-byte frame \
+                 cap); request fewer results per op"
+            ),
+        );
+    }
+    let frame = match mode {
+        WireMode::Json => json_frame(encode_response(req_id, resp)),
+        WireMode::Binary => encode_response_binary(req_id, resp),
+    };
+    let payload = framed_payload_len(mode, &frame);
+    if payload > MAX_FRAME_BYTES {
+        return encode_error_frame(
+            mode,
+            req_id,
+            &format!(
+                "response too large ({payload} bytes > {MAX_FRAME_BYTES}-byte frame cap); \
+                 request fewer results per op"
+            ),
+        );
+    }
+    frame
+}
+
+/// Encode an error envelope as complete wire bytes for `mode`.
+pub fn encode_error_frame(mode: WireMode, req_id: Option<u64>, msg: &str) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_error(req_id, msg)),
+        WireMode::Binary => encode_error_binary(req_id, msg),
+    }
+}
+
+/// Encode the `points` response as complete wire bytes for `mode`.
+pub fn encode_points_frame(mode: WireMode, req_id: Option<u64>, points: &[f64]) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_points(req_id, points)),
+        WireMode::Binary => encode_points_binary(req_id, points),
+    }
+}
+
+/// Encode the `shutting_down` acknowledgement as complete wire bytes.
+pub fn encode_shutting_down_frame(mode: WireMode, req_id: Option<u64>) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_shutting_down(req_id)),
+        WireMode::Binary => encode_shutting_down_binary(req_id),
+    }
 }
 
 // ---------------------------------------------------------------- client
 
 /// A decoded server reply (the client-side mirror of
-/// [`encode_response`]).
+/// [`encode_response`] / [`encode_response_binary`]).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Reply {
     /// `hash` result
@@ -258,7 +774,7 @@ pub enum Reply {
     ShuttingDown,
 }
 
-/// Decode one reply line into `(req_id, server result)`. The outer
+/// Decode one JSON reply line into `(req_id, server result)`. The outer
 /// `Err` is a protocol violation (unparseable frame); the inner
 /// `Err(String)` is a well-formed server-side error envelope.
 #[allow(clippy::type_complexity)]
@@ -348,6 +864,91 @@ pub fn decode_reply(line: &str) -> Result<(Option<u64>, Result<Reply, String>), 
     Ok((req_id, Ok(reply)))
 }
 
+/// Decode one binary reply payload into `(req_id, server result)` — the
+/// binary mirror of [`decode_reply`].
+#[allow(clippy::type_complexity)]
+pub fn decode_reply_binary(
+    payload: &[u8],
+) -> Result<(Option<u64>, Result<Reply, String>), String> {
+    let mut rd = BinReader::new(payload);
+    let status = rd.u8()?;
+    let flags = rd.u8()?;
+    if flags & !FLAG_REQ_ID != 0 {
+        return Err(format!("unknown reply flags {flags:#04x}"));
+    }
+    let req_id = if flags & FLAG_REQ_ID != 0 {
+        Some(rd.u64()?)
+    } else {
+        None
+    };
+    if status == STATUS_ERR {
+        return Ok((req_id, Err(rd.str_()?.to_string())));
+    }
+    if status != STATUS_OK {
+        return Err(format!("unknown reply status {status}"));
+    }
+    let ty = rd.u8()?;
+    let reply = match ty {
+        REPLY_SIGNATURE => {
+            let n = rd.u32()? as usize;
+            if rd.remaining() < n.saturating_mul(4) {
+                return Err(format!("signature declares {n} entries, frame truncated"));
+            }
+            let mut s = Vec::with_capacity(n);
+            for _ in 0..n {
+                s.push(rd.i32()?);
+            }
+            Reply::Signature(s)
+        }
+        REPLY_INSERTED => Reply::Inserted { id: rd.u64()? },
+        REPLY_HITS => {
+            let n = rd.u32()? as usize;
+            if rd.remaining() < n.saturating_mul(16) {
+                return Err(format!("hits declare {n} entries, frame truncated"));
+            }
+            let mut hits = Vec::with_capacity(n);
+            for _ in 0..n {
+                let id = rd.u64()?;
+                let distance = rd.f64()?;
+                hits.push(Hit { id, distance });
+            }
+            Reply::Hits(hits)
+        }
+        REPLY_REMOVED => Reply::Removed { id: rd.u64()? },
+        REPLY_METRICS => Reply::Metrics(
+            json::parse(rd.str_()?).map_err(|e| format!("bad metrics json: {e}"))?,
+        ),
+        REPLY_SNAPSHOT => {
+            let path = rd.str_()?.to_string();
+            let bytes = rd.u64()?;
+            Reply::Snapshotted { path, bytes }
+        }
+        REPLY_PONG => Reply::Pong { indexed: rd.u64()? },
+        REPLY_POINTS => {
+            let n = rd.u32()? as usize;
+            if rd.remaining() < n.saturating_mul(8) {
+                return Err(format!("points declare {n} entries, frame truncated"));
+            }
+            let mut p = Vec::with_capacity(n);
+            for _ in 0..n {
+                p.push(rd.f64()?);
+            }
+            Reply::Points(p)
+        }
+        REPLY_SHUTTING_DOWN => Reply::ShuttingDown,
+        other => return Err(format!("unknown binary reply type {other}")),
+    };
+    if !rd.finished() {
+        return Err(format!(
+            "{} trailing bytes after the reply body",
+            rd.remaining()
+        ));
+    }
+    Ok((req_id, Ok(reply)))
+}
+
+// ------------------------------------------------ JSON request builders
+
 fn request_envelope(req_id: Option<u64>, mut fields: Vec<(&str, Value)>) -> String {
     if let Some(id) = req_id {
         fields.push(("req_id", (id as usize).into()));
@@ -359,7 +960,7 @@ fn samples_value(samples: &[f32]) -> Value {
     Value::Array(samples.iter().map(|&x| Value::Number(x as f64)).collect())
 }
 
-/// Encode a `hash` request line.
+/// Encode a `hash` request line (JSON).
 pub fn encode_hash(req_id: Option<u64>, samples: &[f32]) -> String {
     request_envelope(
         req_id,
@@ -367,7 +968,7 @@ pub fn encode_hash(req_id: Option<u64>, samples: &[f32]) -> String {
     )
 }
 
-/// Encode an `insert` request line.
+/// Encode an `insert` request line (JSON).
 pub fn encode_insert(req_id: Option<u64>, id: u64, samples: &[f32]) -> String {
     request_envelope(
         req_id,
@@ -379,7 +980,7 @@ pub fn encode_insert(req_id: Option<u64>, id: u64, samples: &[f32]) -> String {
     )
 }
 
-/// Encode a `query` request line.
+/// Encode a `query` request line (JSON).
 pub fn encode_query(req_id: Option<u64>, samples: &[f32], k: usize) -> String {
     request_envelope(
         req_id,
@@ -391,7 +992,7 @@ pub fn encode_query(req_id: Option<u64>, samples: &[f32], k: usize) -> String {
     )
 }
 
-/// Encode a `remove` request line.
+/// Encode a `remove` request line (JSON).
 pub fn encode_remove(req_id: Option<u64>, id: u64) -> String {
     request_envelope(
         req_id,
@@ -400,12 +1001,12 @@ pub fn encode_remove(req_id: Option<u64>, id: u64) -> String {
 }
 
 /// Encode a bare admin/transport request line (`metrics`, `ping`,
-/// `points`, `shutdown`).
+/// `points`, `shutdown`) (JSON).
 pub fn encode_bare(req_id: Option<u64>, op: &str) -> String {
     request_envelope(req_id, vec![("op", op.into())])
 }
 
-/// Encode a `snapshot` request line.
+/// Encode a `snapshot` request line (JSON).
 pub fn encode_snapshot(req_id: Option<u64>, path: &str) -> String {
     request_envelope(
         req_id,
@@ -413,9 +1014,132 @@ pub fn encode_snapshot(req_id: Option<u64>, path: &str) -> String {
     )
 }
 
+// ---------------------------------------------- binary request builders
+
+/// Encode a `hash` request frame (binary).
+pub fn encode_hash_binary(req_id: Option<u64>, samples: &[f32]) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_HASH, req_id);
+        put_samples(b, samples);
+    })
+}
+
+/// Encode an `insert` request frame (binary; the id is a native `u64` —
+/// no 2^53 precision limit).
+pub fn encode_insert_binary(req_id: Option<u64>, id: u64, samples: &[f32]) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_INSERT, req_id);
+        b.extend_from_slice(&id.to_le_bytes());
+        put_samples(b, samples);
+    })
+}
+
+/// Encode a `query` request frame (binary). `k` travels as a `u64` so
+/// no `usize` value can silently truncate on the wire (JSON/binary
+/// parity: both formats carry the caller's `k` intact).
+pub fn encode_query_binary(req_id: Option<u64>, samples: &[f32], k: usize) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_QUERY, req_id);
+        put_samples(b, samples);
+        b.extend_from_slice(&(k as u64).to_le_bytes());
+    })
+}
+
+/// Encode a `remove` request frame (binary).
+pub fn encode_remove_binary(req_id: Option<u64>, id: u64) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_REMOVE, req_id);
+        b.extend_from_slice(&id.to_le_bytes());
+    })
+}
+
+/// Encode a bare admin/transport request frame (binary). An unknown op
+/// name encodes as the reserved tag 0, which the server answers with its
+/// unknown-op error envelope — the same outcome the JSON format gives an
+/// unknown `"op"` string, so the two modes never diverge into a panic.
+pub fn encode_bare_binary(req_id: Option<u64>, op: &str) -> Vec<u8> {
+    let tag = match op {
+        "metrics" => OP_METRICS,
+        "ping" => OP_PING,
+        "points" => OP_POINTS,
+        "shutdown" => OP_SHUTDOWN,
+        _ => 0,
+    };
+    bin_frame(|b| put_tag_and_req_id(b, tag, req_id))
+}
+
+/// Encode a `snapshot` request frame (binary).
+pub fn encode_snapshot_binary(req_id: Option<u64>, path: &str) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_SNAPSHOT, req_id);
+        put_str(b, path);
+    })
+}
+
+// --------------------------------------- mode-dispatch request builders
+
+/// Encode a `hash` request as complete wire bytes for `mode`.
+pub fn encode_hash_frame(mode: WireMode, req_id: Option<u64>, samples: &[f32]) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_hash(req_id, samples)),
+        WireMode::Binary => encode_hash_binary(req_id, samples),
+    }
+}
+
+/// Encode an `insert` request as complete wire bytes for `mode`.
+pub fn encode_insert_frame(
+    mode: WireMode,
+    req_id: Option<u64>,
+    id: u64,
+    samples: &[f32],
+) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_insert(req_id, id, samples)),
+        WireMode::Binary => encode_insert_binary(req_id, id, samples),
+    }
+}
+
+/// Encode a `query` request as complete wire bytes for `mode`.
+pub fn encode_query_frame(
+    mode: WireMode,
+    req_id: Option<u64>,
+    samples: &[f32],
+    k: usize,
+) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_query(req_id, samples, k)),
+        WireMode::Binary => encode_query_binary(req_id, samples, k),
+    }
+}
+
+/// Encode a `remove` request as complete wire bytes for `mode`.
+pub fn encode_remove_frame(mode: WireMode, req_id: Option<u64>, id: u64) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_remove(req_id, id)),
+        WireMode::Binary => encode_remove_binary(req_id, id),
+    }
+}
+
+/// Encode a bare admin/transport request as complete wire bytes.
+pub fn encode_bare_frame(mode: WireMode, req_id: Option<u64>, op: &str) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_bare(req_id, op)),
+        WireMode::Binary => encode_bare_binary(req_id, op),
+    }
+}
+
+/// Encode a `snapshot` request as complete wire bytes for `mode`.
+pub fn encode_snapshot_frame(mode: WireMode, req_id: Option<u64>, path: &str) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_snapshot(req_id, path)),
+        WireMode::Binary => encode_snapshot_binary(req_id, path),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::SigView;
 
     #[test]
     fn request_roundtrips() {
@@ -462,6 +1186,36 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_samples_rejected_by_both_decoders() {
+        // JSON: 1e400 parses as f64 +inf; 1e39 is a finite f64 that
+        // overflows f32 to +inf — both must be refused
+        for frame in [
+            r#"{"op":"hash","samples":[1e400]}"#,
+            r#"{"op":"hash","samples":[1e39]}"#,
+            r#"{"op":"hash","samples":[-1e39]}"#,
+            r#"{"op":"insert","id":1,"samples":[0.5,1e400]}"#,
+            r#"{"op":"query","samples":[1e39],"k":1}"#,
+        ] {
+            let e = parse_request(frame).unwrap_err();
+            assert!(e.msg.contains("finite"), "{frame}: {e}");
+        }
+        // a large-but-representable value still passes
+        assert!(parse_request(r#"{"op":"hash","samples":[1e38]}"#).is_ok());
+
+        // binary: raw NaN / inf bits in the sample block
+        for bits in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut frame = encode_hash_binary(Some(3), &[0.5, 0.5]);
+            // overwrite the second sample's 4 bytes (layout: 4 len + 1 op
+            // + 1 flags + 8 req_id + 4 count + 4 first sample)
+            frame[22..26].copy_from_slice(&bits.to_le_bytes());
+            let consumed = split_binary_frame(&frame).unwrap().unwrap();
+            let e = parse_request_binary(&frame[4..consumed]).unwrap_err();
+            assert_eq!(e.req_id, Some(3), "error must still correlate");
+            assert!(e.msg.contains("finite"), "{e}");
+        }
+    }
+
+    #[test]
     fn parse_errors_recover_req_id_when_json_is_valid() {
         // field-validation failures keep the correlation id…
         let e = parse_request(r#"{"op":"teleport","req_id":7}"#).unwrap_err();
@@ -476,9 +1230,170 @@ mod tests {
     }
 
     #[test]
-    fn response_roundtrips() {
-        let cases = vec![
-            Response::Signature(vec![-3, 0, 7]),
+    fn binary_request_roundtrips() {
+        // every op through encode → frame split → decode
+        let frames: Vec<(Vec<u8>, &str)> = vec![
+            (encode_hash_binary(Some(1), &[0.5, -1.25]), "hash"),
+            (encode_insert_binary(Some(2), 42, &[1.0]), "insert"),
+            (encode_query_binary(None, &[0.25], 7), "query"),
+            (encode_remove_binary(Some(4), 9), "remove"),
+            (encode_bare_binary(Some(5), "metrics"), "metrics"),
+            (encode_snapshot_binary(None, "/tmp/s.flsh"), "snapshot"),
+            (encode_bare_binary(Some(7), "ping"), "ping"),
+            (encode_bare_binary(None, "points"), "points"),
+            (encode_bare_binary(Some(9), "shutdown"), "shutdown"),
+        ];
+        for (frame, label) in frames {
+            let consumed = split_binary_frame(&frame).unwrap().unwrap();
+            assert_eq!(consumed, frame.len(), "{label}: frame fully framed");
+            let req = parse_request_binary(&frame[4..consumed]).unwrap();
+            match (label, &req.body) {
+                ("hash", RequestBody::Op(Op::Hash { samples })) => {
+                    assert_eq!(req.req_id, Some(1));
+                    assert_eq!(samples, &vec![0.5, -1.25]);
+                }
+                ("insert", RequestBody::Op(Op::Insert { id, samples })) => {
+                    assert_eq!(req.req_id, Some(2));
+                    assert_eq!(*id, 42);
+                    assert_eq!(samples, &vec![1.0]);
+                }
+                ("query", RequestBody::Op(Op::Query { samples, k })) => {
+                    assert_eq!(req.req_id, None);
+                    assert_eq!(samples, &vec![0.25]);
+                    assert_eq!(*k, 7);
+                }
+                ("remove", RequestBody::Op(Op::Remove { id })) => assert_eq!(*id, 9),
+                ("metrics", RequestBody::Op(Op::Metrics)) => {}
+                ("snapshot", RequestBody::Op(Op::Snapshot { path })) => {
+                    assert_eq!(path, "/tmp/s.flsh")
+                }
+                ("ping", RequestBody::Op(Op::Ping)) => {}
+                ("points", RequestBody::Points) => {}
+                ("shutdown", RequestBody::Shutdown) => {}
+                (label, other) => panic!("{label}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn binary_ids_above_2_53_survive_where_json_rejects() {
+        let big = (1u64 << 60) + 12345; // unrepresentable in f64 exactly
+        let frame = encode_insert_binary(Some(1), big, &[0.5]);
+        let consumed = split_binary_frame(&frame).unwrap().unwrap();
+        match parse_request_binary(&frame[4..consumed]).unwrap().body {
+            RequestBody::Op(Op::Insert { id, .. }) => assert_eq!(id, big),
+            other => panic!("unexpected {other:?}"),
+        }
+        // the JSON carrier cannot: as_u64 refuses values above 2^53
+        let line = format!(r#"{{"op":"remove","id":{big}}}"#);
+        assert!(parse_request(&line).is_err());
+        // …and the binary remove roundtrips it
+        let frame = encode_remove_binary(None, big);
+        let consumed = split_binary_frame(&frame).unwrap().unwrap();
+        match parse_request_binary(&frame[4..consumed]).unwrap().body {
+            RequestBody::Op(Op::Remove { id }) => assert_eq!(id, big),
+            other => panic!("unexpected {other:?}"),
+        }
+        // response direction too
+        let frame = encode_response_binary(Some(2), &Response::Inserted { id: big });
+        let (rid, reply) = decode_reply_binary(&frame[4..]).unwrap();
+        assert_eq!(rid, Some(2));
+        assert_eq!(reply.unwrap(), Reply::Inserted { id: big });
+    }
+
+    #[test]
+    fn binary_unknown_bare_op_gets_server_side_error_not_panic() {
+        // parity with JSON: an unknown bare-op name reaches the server
+        // and comes back as a typed error envelope in both formats
+        let frame = encode_bare_binary(Some(9), "status");
+        let consumed = split_binary_frame(&frame).unwrap().unwrap();
+        let e = parse_request_binary(&frame[4..consumed]).unwrap_err();
+        assert_eq!(e.req_id, Some(9));
+        assert!(e.msg.contains("unknown binary op tag"), "{e}");
+    }
+
+    #[test]
+    fn binary_query_k_does_not_truncate() {
+        // k rides a u64 on the binary wire: a value past u32::MAX must
+        // arrive intact, matching the JSON format's behavior
+        let big_k = (1usize << 33) + 5;
+        let frame = encode_query_binary(Some(1), &[0.5], big_k);
+        let consumed = split_binary_frame(&frame).unwrap().unwrap();
+        match parse_request_binary(&frame[4..consumed]).unwrap().body {
+            RequestBody::Op(Op::Query { k, .. }) => assert_eq!(k, big_k),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn binary_request_errors_are_typed_and_correlated() {
+        // unknown op tag, with req_id still recovered
+        let frame = bin_frame(|b| put_tag_and_req_id(b, 200, Some(17)));
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(17));
+        assert!(e.msg.contains("unknown binary op tag"), "{e}");
+        // truncated body: insert with no id
+        let frame = bin_frame(|b| put_tag_and_req_id(b, OP_INSERT, Some(3)));
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(3));
+        assert!(e.msg.contains("truncated"), "{e}");
+        // declared sample count larger than the payload
+        let frame = bin_frame(|b| {
+            put_tag_and_req_id(b, OP_HASH, Some(4));
+            b.extend_from_slice(&1000u32.to_le_bytes());
+            b.extend_from_slice(&0.5f32.to_le_bytes());
+        });
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(4));
+        assert!(e.msg.contains("1000 samples"), "{e}");
+        // trailing garbage after a well-formed body
+        let mut frame = encode_remove_binary(Some(5), 1);
+        frame.extend_from_slice(b"junk");
+        let len = (frame.len() - 4) as u32;
+        frame[..4].copy_from_slice(&len.to_le_bytes());
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(5));
+        assert!(e.msg.contains("trailing"), "{e}");
+        // unknown header flags
+        let frame = bin_frame(|b| {
+            b.push(OP_PING);
+            b.push(0x80);
+        });
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert!(e.msg.contains("flags"), "{e}");
+        // empty payload
+        let e = parse_request_binary(&[]).unwrap_err();
+        assert!(e.msg.contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn negotiation_and_framing() {
+        assert_eq!(negotiate(b""), Negotiation::NeedMore);
+        assert_eq!(negotiate(b"F"), Negotiation::NeedMore);
+        assert_eq!(negotiate(b"FBIN"), Negotiation::NeedMore);
+        assert_eq!(negotiate(b"FBIN1"), Negotiation::Binary);
+        assert_eq!(negotiate(b"FBIN1\x01\x02"), Negotiation::Binary);
+        assert_eq!(negotiate(b"{\"op\":\"ping\"}"), Negotiation::Json);
+        assert_eq!(negotiate(b"FBINX"), Negotiation::Json);
+        assert_eq!(negotiate(b"false"), Negotiation::Json);
+
+        // split: need-more, complete, oversized
+        assert_eq!(split_binary_frame(&[1, 0]).unwrap(), None);
+        assert_eq!(split_binary_frame(&[2, 0, 0, 0, 9]).unwrap(), None);
+        assert_eq!(split_binary_frame(&[2, 0, 0, 0, 9, 9]).unwrap(), Some(6));
+        assert_eq!(
+            split_binary_frame(&[2, 0, 0, 0, 9, 9, 77]).unwrap(),
+            Some(6),
+            "extra buffered bytes belong to the next frame"
+        );
+        let huge = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes();
+        let e = split_binary_frame(&huge).unwrap_err();
+        assert!(e.contains("cap"), "{e}");
+    }
+
+    fn response_cases() -> Vec<Response> {
+        vec![
+            Response::Signature(SigView::from_vec(vec![-3, 0, 7])),
             Response::Inserted { id: 9 },
             Response::Hits(vec![Hit {
                 id: 4,
@@ -490,34 +1405,61 @@ mod tests {
                 path: "/tmp/s.flsh".into(),
                 bytes: 640,
             },
-        ];
-        for resp in cases {
+        ]
+    }
+
+    fn check_reply(decoded: Reply, want: &Response) {
+        match (decoded, want) {
+            (Reply::Signature(s), Response::Signature(want)) => {
+                assert_eq!(s.as_slice(), want.as_slice())
+            }
+            (Reply::Inserted { id }, Response::Inserted { id: want }) => {
+                assert_eq!(id, *want)
+            }
+            (Reply::Hits(h), Response::Hits(want)) => assert_eq!(&h, want),
+            (Reply::Removed { id }, Response::Removed { id: want }) => assert_eq!(id, *want),
+            (Reply::Pong { indexed }, Response::Pong { indexed: want }) => {
+                assert_eq!(indexed, *want)
+            }
+            (
+                Reply::Snapshotted { path, bytes },
+                Response::Snapshotted {
+                    path: wp,
+                    bytes: wb,
+                },
+            ) => {
+                assert_eq!(&path, wp);
+                assert_eq!(bytes, *wb);
+            }
+            (got, want) => panic!("mismatch: {got:?} vs {want:?}"),
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        for resp in response_cases() {
             let line = encode_response(Some(3), &resp);
             let (req_id, decoded) = decode_reply(&line).unwrap();
             assert_eq!(req_id, Some(3));
-            match (decoded.unwrap(), &resp) {
-                (Reply::Signature(s), Response::Signature(want)) => assert_eq!(&s, want),
-                (Reply::Inserted { id }, Response::Inserted { id: want }) => {
-                    assert_eq!(id, *want)
-                }
-                (Reply::Hits(h), Response::Hits(want)) => assert_eq!(&h, want),
-                (Reply::Removed { id }, Response::Removed { id: want }) => assert_eq!(id, *want),
-                (Reply::Pong { indexed }, Response::Pong { indexed: want }) => {
-                    assert_eq!(indexed, *want)
-                }
-                (
-                    Reply::Snapshotted { path, bytes },
-                    Response::Snapshotted {
-                        path: wp,
-                        bytes: wb,
-                    },
-                ) => {
-                    assert_eq!(&path, wp);
-                    assert_eq!(bytes, *wb);
-                }
-                (got, want) => panic!("mismatch: {got:?} vs {want:?}"),
-            }
+            check_reply(decoded.unwrap(), &resp);
         }
+    }
+
+    #[test]
+    fn binary_response_roundtrips() {
+        for resp in response_cases() {
+            let frame = encode_response_binary(Some(3), &resp);
+            let consumed = split_binary_frame(&frame).unwrap().unwrap();
+            assert_eq!(consumed, frame.len());
+            let (req_id, decoded) = decode_reply_binary(&frame[4..consumed]).unwrap();
+            assert_eq!(req_id, Some(3), "{resp:?}");
+            check_reply(decoded.unwrap(), &resp);
+        }
+        // without a req_id
+        let frame = encode_response_binary(None, &Response::Pong { indexed: 5 });
+        let (req_id, decoded) = decode_reply_binary(&frame[4..]).unwrap();
+        assert_eq!(req_id, None);
+        assert_eq!(decoded.unwrap(), Reply::Pong { indexed: 5 });
     }
 
     #[test]
@@ -528,6 +1470,12 @@ mod tests {
         assert_eq!(decoded.unwrap_err(), "duplicate id 7");
         let (_, decoded) = decode_reply(&encode_error(None, "bad request")).unwrap();
         assert!(decoded.unwrap_err().contains("bad request"));
+
+        // binary error envelopes carry the message and the correlation id
+        let frame = encode_response_binary(Some(6), &Response::Error("duplicate id 8".into()));
+        let (req_id, decoded) = decode_reply_binary(&frame[4..]).unwrap();
+        assert_eq!(req_id, Some(6));
+        assert_eq!(decoded.unwrap_err(), "duplicate id 8");
     }
 
     #[test]
@@ -535,6 +1483,14 @@ mod tests {
         let (_, decoded) = decode_reply(&encode_points(None, &[0.25, 0.75])).unwrap();
         assert_eq!(decoded.unwrap(), Reply::Points(vec![0.25, 0.75]));
         let (_, decoded) = decode_reply(&encode_shutting_down(Some(1))).unwrap();
+        assert_eq!(decoded.unwrap(), Reply::ShuttingDown);
+
+        let frame = encode_points_binary(Some(2), &[0.25, 0.75]);
+        let (rid, decoded) = decode_reply_binary(&frame[4..]).unwrap();
+        assert_eq!(rid, Some(2));
+        assert_eq!(decoded.unwrap(), Reply::Points(vec![0.25, 0.75]));
+        let frame = encode_shutting_down_binary(None);
+        let (_, decoded) = decode_reply_binary(&frame[4..]).unwrap();
         assert_eq!(decoded.unwrap(), Reply::ShuttingDown);
     }
 
@@ -547,5 +1503,72 @@ mod tests {
             Reply::Metrics(v) => assert_eq!(v.get("requests").unwrap().as_usize(), Some(0)),
             other => panic!("unexpected {other:?}"),
         }
+        let frame = encode_response_binary(Some(1), &Response::Metrics(m.snapshot()));
+        let (_, decoded) = decode_reply_binary(&frame[4..]).unwrap();
+        match decoded.unwrap() {
+            Reply::Metrics(v) => assert_eq!(v.get("requests").unwrap().as_usize(), Some(0)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_response_degrades_to_correlated_error() {
+        // a hits payload past the frame cap (8 MiB): JSON needs ~26 bytes
+        // per hit, binary exactly 16 — 600k hits overflows both
+        let hits: Vec<Hit> = (0..600_000)
+            .map(|i| Hit {
+                id: i,
+                distance: i as f64 * 0.001,
+            })
+            .collect();
+        let resp = Response::Hits(hits);
+        for mode in [WireMode::Json, WireMode::Binary] {
+            let frame = encode_response_frame(mode, Some(42), &resp);
+            assert!(
+                framed_payload_len(mode, &frame) <= MAX_FRAME_BYTES,
+                "{mode:?}: replacement frame must itself fit"
+            );
+            let (req_id, decoded) = match mode {
+                WireMode::Json => {
+                    decode_reply(std::str::from_utf8(&frame).unwrap()).unwrap()
+                }
+                WireMode::Binary => decode_reply_binary(&frame[4..]).unwrap(),
+            };
+            assert_eq!(req_id, Some(42), "{mode:?}: error must correlate");
+            let msg = decoded.unwrap_err();
+            assert!(msg.contains("response too large"), "{mode:?}: {msg}");
+        }
+        // a normal-sized response is passed through untouched
+        let small = encode_response_frame(WireMode::Json, Some(1), &Response::Pong { indexed: 3 });
+        let (_, decoded) = decode_reply(std::str::from_utf8(&small).unwrap()).unwrap();
+        assert_eq!(decoded.unwrap(), Reply::Pong { indexed: 3 });
+    }
+
+    #[test]
+    fn frame_builders_match_modes() {
+        // JSON frame bytes end in newline and parse as the bare line
+        let f = encode_hash_frame(WireMode::Json, Some(1), &[0.5]);
+        assert_eq!(*f.last().unwrap(), b'\n');
+        assert!(parse_request(std::str::from_utf8(&f).unwrap().trim_end()).is_ok());
+        // binary frame bytes split and parse
+        let f = encode_hash_frame(WireMode::Binary, Some(1), &[0.5]);
+        let consumed = split_binary_frame(&f).unwrap().unwrap();
+        assert!(parse_request_binary(&f[4..consumed]).is_ok());
+        // wire-cost sanity: at dim 256 the binary hash frame is much
+        // smaller than the JSON one (the whole point of FBIN1)
+        let row: Vec<f32> = (0..256).map(|i| (i as f32) * 0.001 - 0.1).collect();
+        let j = encode_hash_frame(WireMode::Json, Some(1), &row).len();
+        let b = encode_hash_frame(WireMode::Binary, Some(1), &row).len();
+        assert!(b < j / 2, "binary {b} bytes vs json {j} bytes");
+    }
+
+    #[test]
+    fn wire_mode_parses() {
+        assert_eq!(WireMode::parse("json"), Some(WireMode::Json));
+        assert_eq!(WireMode::parse("binary"), Some(WireMode::Binary));
+        assert_eq!(WireMode::parse("fbin1"), Some(WireMode::Binary));
+        assert_eq!(WireMode::parse("carrier-pigeon"), None);
+        assert_eq!(WireMode::Json.as_str(), "json");
+        assert_eq!(WireMode::Binary.as_str(), "binary");
     }
 }

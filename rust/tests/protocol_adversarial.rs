@@ -1,15 +1,17 @@
-//! Adversarial wire-protocol tests: truncated frames, oversized lines,
-//! interleaved partial writes, invalid UTF-8, and unknown ops — the
-//! server must answer with typed error envelopes where the framing
-//! allows, never panic, and never leak connections.
+//! Adversarial wire-protocol tests: truncated frames (both formats),
+//! oversized lines and oversized declared binary lengths, interleaved
+//! partial writes, mode-negotiation garbage, invalid UTF-8, and unknown
+//! ops/op tags — the server must answer with typed error envelopes where
+//! the framing allows, never panic, and never leak connections.
 
 use funclsh::config::{IoMode, ServiceConfig};
 use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath};
 use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
 use funclsh::hashing::PStableHashBank;
-use funclsh::server::{protocol, Client, Server};
+use funclsh::server::protocol::{self, Reply};
+use funclsh::server::{Client, Server};
 use funclsh::util::rng::Xoshiro256pp;
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -296,6 +298,288 @@ fn hostile_connections_do_not_leak() {
         assert_alive(&server);
         finish(server);
     }
+}
+
+// ----------------------------------------------------- binary framing
+
+/// Read one length-prefixed binary reply off the socket and decode it.
+#[allow(clippy::type_complexity)]
+fn read_binary_reply(
+    reader: &mut BufReader<TcpStream>,
+) -> std::io::Result<(Option<u64>, Result<Reply, String>)> {
+    let mut len4 = [0u8; 4];
+    reader.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    assert!(len <= protocol::MAX_FRAME_BYTES, "reply frame oversized");
+    let mut payload = vec![0u8; len];
+    reader.read_exact(&mut payload)?;
+    Ok(protocol::decode_reply_binary(&payload).expect("reply decodes"))
+}
+
+/// Truncated binary frames: a partial length prefix, and a declared
+/// payload cut off by EOF — both get a typed error before the close, on
+/// both runtimes.
+#[test]
+fn binary_truncated_frames_get_error_then_close() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        // partial length prefix, then half-close
+        let server = boot(&config(io_mode));
+        {
+            let (mut reader, mut writer) = connect(&server);
+            writer.write_all(protocol::BINARY_MAGIC).unwrap();
+            writer.write_all(&[7, 0]).unwrap(); // 2 of 4 length bytes
+            writer.shutdown(std::net::Shutdown::Write).unwrap();
+            let (_, body) = read_binary_reply(&mut reader).unwrap();
+            let msg = body.unwrap_err();
+            assert!(msg.contains("truncated"), "{io_mode:?}: {msg}");
+            // then EOF, not a hang
+            let mut rest = Vec::new();
+            assert_eq!(reader.read_to_end(&mut rest).unwrap(), 0, "{io_mode:?}");
+        }
+        // declared 100-byte payload, only 10 bytes sent before EOF
+        {
+            let (mut reader, mut writer) = connect(&server);
+            writer.write_all(protocol::BINARY_MAGIC).unwrap();
+            writer.write_all(&100u32.to_le_bytes()).unwrap();
+            writer.write_all(&[0u8; 10]).unwrap();
+            writer.shutdown(std::net::Shutdown::Write).unwrap();
+            let (_, body) = read_binary_reply(&mut reader).unwrap();
+            assert!(body.unwrap_err().contains("truncated"), "{io_mode:?}");
+        }
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+/// An oversized declared length (binary framing cannot resync past it)
+/// is answered once with a typed error and the connection closes; the
+/// server survives.
+#[test]
+fn binary_oversized_declared_length_rejected() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        let (mut reader, mut writer) = connect(&server);
+        writer.write_all(protocol::BINARY_MAGIC).unwrap();
+        writer
+            .write_all(&(64u32 * 1024 * 1024).to_le_bytes())
+            .unwrap();
+        writer.flush().unwrap();
+        let (_, body) = read_binary_reply(&mut reader).unwrap();
+        let msg = body.unwrap_err();
+        assert!(msg.contains("cap"), "{io_mode:?}: {msg}");
+        // connection closes after the error frame
+        let mut rest = Vec::new();
+        assert_eq!(reader.read_to_end(&mut rest).unwrap(), 0, "{io_mode:?}");
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+/// Negotiation garbage: bytes that almost spell the magic fall through
+/// to the JSON parser's error envelope; a partial magic cut off by EOF
+/// is JSON garbage too. Either way the server survives.
+#[test]
+fn mode_negotiation_garbage_falls_back_to_json_errors() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        // FBINX…: not the magic, so a JSON line — answered as bad json
+        {
+            let (mut reader, mut writer) = connect(&server);
+            writer.write_all(b"FBINX nonsense\n").unwrap();
+            writer.flush().unwrap();
+            let reply = read_reply(&mut reader);
+            assert!(reply.contains("\"ok\":false"), "{io_mode:?}: {reply}");
+            assert!(reply.contains("bad request"), "{io_mode:?}: {reply}");
+            // the connection is a JSON connection now and stays usable
+            writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+            writer.flush().unwrap();
+            let reply = read_reply(&mut reader);
+            assert!(reply.contains("pong"), "{io_mode:?}: {reply}");
+        }
+        // a proper magic prefix cut off by EOF: JSON garbage tail
+        {
+            let (mut reader, mut writer) = connect(&server);
+            writer.write_all(b"FBI").unwrap();
+            writer.shutdown(std::net::Shutdown::Write).unwrap();
+            let reply = read_reply(&mut reader);
+            assert!(reply.contains("\"ok\":false"), "{io_mode:?}: {reply}");
+        }
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+/// Binary and JSON connections interleaved on one server: each speaks
+/// its own format end-to-end, simultaneously, on both runtimes.
+#[test]
+fn binary_and_json_connections_interleave_on_one_server() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        let (mut jreader, mut jwriter) = connect(&server);
+        let (mut breader, mut bwriter) = connect(&server);
+        // open the binary conversation first, then alternate
+        bwriter.write_all(protocol::BINARY_MAGIC).unwrap();
+        bwriter
+            .write_all(&protocol::encode_bare_binary(Some(1), "ping"))
+            .unwrap();
+        bwriter.flush().unwrap();
+        jwriter.write_all(b"{\"op\":\"ping\",\"req_id\":2}\n").unwrap();
+        jwriter.flush().unwrap();
+        let (rid, body) = read_binary_reply(&mut breader).unwrap();
+        assert_eq!(rid, Some(1), "{io_mode:?}");
+        assert_eq!(body.unwrap(), Reply::Pong { indexed: 0 }, "{io_mode:?}");
+        let jreply = read_reply(&mut jreader);
+        assert!(
+            jreply.contains("pong") && jreply.contains("\"req_id\":2"),
+            "{io_mode:?}: {jreply}"
+        );
+        // a second round in the reverse order
+        jwriter.write_all(b"{\"op\":\"points\",\"req_id\":3}\n").unwrap();
+        jwriter.flush().unwrap();
+        bwriter
+            .write_all(&protocol::encode_bare_binary(Some(4), "points"))
+            .unwrap();
+        bwriter.flush().unwrap();
+        assert!(read_reply(&mut jreader).contains("points"), "{io_mode:?}");
+        let (rid, body) = read_binary_reply(&mut breader).unwrap();
+        assert_eq!(rid, Some(4), "{io_mode:?}");
+        match body.unwrap() {
+            Reply::Points(p) => assert!(!p.is_empty(), "{io_mode:?}"),
+            other => panic!("{io_mode:?}: unexpected {other:?}"),
+        }
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+/// Malformed binary payloads — unknown op tag, truncated body, trailing
+/// garbage, non-finite samples — get correlated error envelopes and the
+/// connection keeps serving.
+#[test]
+fn binary_malformed_payloads_get_typed_errors_and_survive() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        let (mut reader, mut writer) = connect(&server);
+        writer.write_all(protocol::BINARY_MAGIC).unwrap();
+
+        // hand-build: len=2, op=250 (unknown), flags=0
+        writer.write_all(&2u32.to_le_bytes()).unwrap();
+        writer.write_all(&[250u8, 0u8]).unwrap();
+        writer.flush().unwrap();
+        let (_, body) = read_binary_reply(&mut reader).unwrap();
+        assert!(body.unwrap_err().contains("unknown binary op tag"), "{io_mode:?}");
+
+        // insert frame with a NaN sample: rejected with the req_id echoed
+        let mut frame = protocol::encode_insert_binary(Some(77), 5, &[0.5, 0.25]);
+        let nan_at = frame.len() - 4;
+        frame[nan_at..].copy_from_slice(&f32::NAN.to_le_bytes());
+        writer.write_all(&frame).unwrap();
+        writer.flush().unwrap();
+        let (rid, body) = read_binary_reply(&mut reader).unwrap();
+        assert_eq!(rid, Some(77), "{io_mode:?}: non-finite error must correlate");
+        assert!(body.unwrap_err().contains("finite"), "{io_mode:?}");
+
+        // trailing garbage after a valid remove body
+        let mut frame = protocol::encode_remove_binary(Some(78), 1);
+        frame.extend_from_slice(b"xx");
+        let len = (frame.len() - 4) as u32;
+        frame[..4].copy_from_slice(&len.to_le_bytes());
+        writer.write_all(&frame).unwrap();
+        writer.flush().unwrap();
+        let (rid, body) = read_binary_reply(&mut reader).unwrap();
+        assert_eq!(rid, Some(78), "{io_mode:?}");
+        assert!(body.unwrap_err().contains("trailing"), "{io_mode:?}");
+
+        // the same connection still answers real requests
+        writer
+            .write_all(&protocol::encode_bare_binary(Some(100), "ping"))
+            .unwrap();
+        writer.flush().unwrap();
+        let (rid, body) = read_binary_reply(&mut reader).unwrap();
+        assert_eq!(rid, Some(100), "{io_mode:?}");
+        assert_eq!(body.unwrap(), Reply::Pong { indexed: 0 }, "{io_mode:?}");
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+/// Binary frames dribbled out a few bytes at a time (magic split across
+/// writes too) must reassemble, mirroring the JSON partial-write test.
+#[test]
+fn binary_partial_writes_reassemble() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        let (mut reader, mut writer) = connect(&server);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(protocol::BINARY_MAGIC);
+        bytes.extend_from_slice(&protocol::encode_bare_binary(Some(1), "ping"));
+        bytes.extend_from_slice(&protocol::encode_bare_binary(Some(2), "ping"));
+        for chunk in bytes.chunks(3) {
+            writer.write_all(chunk).unwrap();
+            writer.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        for want in [1u64, 2] {
+            let (rid, body) = read_binary_reply(&mut reader).unwrap();
+            assert_eq!(rid, Some(want), "{io_mode:?}");
+            assert_eq!(body.unwrap(), Reply::Pong { indexed: 0 }, "{io_mode:?}");
+        }
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+/// JSON-mode non-finite samples (f32-overflowing numbers) get a typed,
+/// correlated error envelope over the wire.
+#[test]
+fn json_non_finite_samples_rejected_over_wire() {
+    let server = boot(&config(IoMode::EventLoop));
+    let (mut reader, mut writer) = connect(&server);
+    writer
+        .write_all(b"{\"op\":\"insert\",\"id\":1,\"samples\":[1e39],\"req_id\":9}\n")
+        .unwrap();
+    writer.flush().unwrap();
+    let reply = read_reply(&mut reader);
+    assert!(reply.contains("\"ok\":false"), "{reply}");
+    assert!(reply.contains("finite"), "{reply}");
+    assert!(reply.contains("\"req_id\":9"), "{reply}");
+    // nothing landed in the index
+    assert_alive(&server);
+    let mut probe = Client::connect(server.addr()).unwrap();
+    assert_eq!(probe.ping().unwrap(), 0);
+    finish(server);
+}
+
+/// The oversize-response guard end-to-end: encode_response_frame is
+/// covered by unit tests; here we prove a pipelined connection survives
+/// an error-producing request sandwiched between good ones (the
+/// per-request envelope contract the guard relies on).
+#[test]
+fn error_sandwich_keeps_pipelined_binary_connection_alive() {
+    let server = boot(&config(IoMode::EventLoop));
+    let (mut reader, mut writer) = connect(&server);
+    writer.write_all(protocol::BINARY_MAGIC).unwrap();
+    writer
+        .write_all(&protocol::encode_bare_binary(Some(1), "ping"))
+        .unwrap();
+    // bad frame in the middle (unknown tag)
+    writer.write_all(&5u32.to_le_bytes()).unwrap();
+    writer.write_all(&[99u8, 1u8]).unwrap();
+    writer.write_all(&[0u8, 0u8, 0u8]).unwrap();
+    writer
+        .write_all(&protocol::encode_bare_binary(Some(3), "ping"))
+        .unwrap();
+    writer.flush().unwrap();
+    let (rid, body) = read_binary_reply(&mut reader).unwrap();
+    assert_eq!(rid, Some(1));
+    assert!(body.is_ok());
+    let (_, body) = read_binary_reply(&mut reader).unwrap();
+    assert!(body.is_err(), "middle frame must error");
+    let (rid, body) = read_binary_reply(&mut reader).unwrap();
+    assert_eq!(rid, Some(3));
+    assert!(body.is_ok(), "later pipelined frames keep their answers");
+    assert_alive(&server);
+    finish(server);
 }
 
 /// A client that opens a connection and writes nothing must not wedge a

@@ -9,7 +9,7 @@ use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath, Op, Response};
 use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
 use funclsh::functions::{Function1D, Sine};
 use funclsh::hashing::PStableHashBank;
-use funclsh::server::{run_load, Client, LoadConfig, PipelinedClient, Server};
+use funclsh::server::{run_load, Client, LoadConfig, PipelinedClient, Server, WireMode};
 use funclsh::util::rng::Xoshiro256pp;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -330,6 +330,147 @@ fn serve_binary_with_ephemeral_port_serves_load() {
     assert!(status.success());
 }
 
+/// The tentpole acceptance test: a binary (`FBIN1`) client and a JSON
+/// client against one server get byte-identical hash signatures and
+/// identical query answers, on both I/O runtimes.
+#[test]
+fn binary_and_json_clients_get_identical_answers() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let mut cfg = test_config();
+        cfg.server.io_mode = io_mode;
+        let (server, points) = boot(&cfg);
+        let mut json = Client::connect_with(server.addr(), WireMode::Json).unwrap();
+        let mut bin = Client::connect_with(server.addr(), WireMode::Binary).unwrap();
+
+        // published points agree across formats
+        assert_eq!(json.points().unwrap(), bin.points().unwrap(), "{io_mode:?}");
+
+        // corpus inserted over the binary wire
+        for id in 0..60u64 {
+            let phase = 2.0 * std::f64::consts::PI * (id as f64 / 60.0);
+            bin.insert(id, &sample_sine(phase, &points)).unwrap();
+        }
+        assert_eq!(json.ping().unwrap(), 60, "{io_mode:?}");
+        assert_eq!(bin.ping().unwrap(), 60, "{io_mode:?}");
+
+        // byte-identical hash signatures and identical re-ranked hits
+        for q in 0..10 {
+            let row = sample_sine(0.1 + 0.37 * q as f64, &points);
+            assert_eq!(
+                json.hash(&row).unwrap(),
+                bin.hash(&row).unwrap(),
+                "{io_mode:?}: hash parity, query {q}"
+            );
+            let jh = json.query(&row, 5).unwrap();
+            let bh = bin.query(&row, 5).unwrap();
+            assert_eq!(jh.len(), bh.len(), "{io_mode:?}");
+            for (a, b) in jh.iter().zip(&bh) {
+                assert_eq!(a.id, b.id, "{io_mode:?}");
+                // binary ships f64 bits verbatim; JSON re-parses the
+                // decimal rendering — allow only printing-level slack
+                assert!((a.distance - b.distance).abs() < 1e-12, "{io_mode:?}");
+            }
+        }
+
+        // removal over one wire is visible over the other
+        bin.remove(7).unwrap();
+        assert_eq!(json.ping().unwrap(), 59, "{io_mode:?}");
+        finish(server);
+    }
+}
+
+/// Binary ids above 2^53 — impossible to carry in JSON — round-trip
+/// through insert, query, and remove on the binary wire.
+#[test]
+fn binary_wire_serves_full_width_ids() {
+    let cfg = test_config();
+    let (server, points) = boot(&cfg);
+    let mut bin = Client::connect_with(server.addr(), WireMode::Binary).unwrap();
+    let big = (1u64 << 60) + 987_654_321;
+    let row = sample_sine(0.5, &points);
+    bin.insert(big, &row).unwrap();
+    let hits = bin.query(&row, 3).unwrap();
+    assert_eq!(hits.first().map(|h| h.id), Some(big));
+    bin.remove(big).unwrap();
+    assert_eq!(bin.ping().unwrap(), 0);
+    finish(server);
+}
+
+/// The pipelined client over the binary wire: windowed sends, req_id
+/// correlation, and in-order responses all behave exactly as in JSON
+/// mode, and the answers match a blocking JSON client's.
+#[test]
+fn binary_pipelined_client_orders_and_correlates() {
+    let cfg = test_config();
+    let (server, points) = boot(&cfg);
+    let row = sample_sine(1.25, &points);
+    let mut blocking = Client::connect(server.addr()).unwrap();
+    let want_sig = blocking.hash(&row).unwrap();
+
+    let mut client =
+        PipelinedClient::connect_with(server.addr(), 8, WireMode::Binary).unwrap();
+    assert_eq!(client.wire(), WireMode::Binary);
+    let mut completions = Vec::new();
+    for _ in 0..40 {
+        completions.extend(client.send_hash(&row).unwrap());
+        assert!(client.in_flight() <= 8);
+    }
+    completions.extend(client.drain().unwrap());
+    assert_eq!(completions.len(), 40);
+    for pair in completions.windows(2) {
+        assert!(pair[0].req_id < pair[1].req_id);
+    }
+    for c in &completions {
+        match c.result.as_ref().expect("hash ok") {
+            funclsh::server::protocol::Reply::Signature(s) => assert_eq!(s, &want_sig),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    finish(server);
+}
+
+/// CI matrix entry point: `FUNCLSH_TEST_IO_MODE` × `FUNCLSH_TEST_WIRE`
+/// pick the runtime and wire format; locally (no env) it runs the
+/// default event_loop × json. The other suites cover every combination
+/// explicitly — this one proves the *configured* combination serves a
+/// real mixed load end-to-end.
+#[test]
+fn matrix_smoke_io_mode_x_wire() {
+    let io_mode = std::env::var("FUNCLSH_TEST_IO_MODE")
+        .ok()
+        .and_then(|s| IoMode::parse(&s))
+        .unwrap_or(IoMode::EventLoop);
+    let wire = std::env::var("FUNCLSH_TEST_WIRE")
+        .ok()
+        .and_then(|s| WireMode::parse(&s))
+        .unwrap_or(WireMode::Json);
+    let mut cfg = test_config();
+    cfg.server.io_mode = io_mode;
+    let (server, points) = boot(&cfg);
+    eprintln!("matrix smoke: io_mode={io_mode:?} wire={wire:?}");
+    let load = LoadConfig {
+        threads: 6,
+        ops_per_thread: 50,
+        // the threaded runtime's contract is depth 1 (see module doc)
+        pipeline_depth: if io_mode == IoMode::Threaded { 1 } else { 4 },
+        wire,
+        insert_fraction: 0.4,
+        query_fraction: 0.3,
+        k: 5,
+        seed: 0xC1,
+        ..Default::default()
+    };
+    let report = run_load(server.addr(), &points, &load).unwrap();
+    assert_eq!(report.ops, 6 * 50);
+    assert_eq!(report.errors, 0, "io_mode={io_mode:?} wire={wire:?}");
+    assert_eq!(report.wire, wire);
+    assert!(report.throughput() > 0.0);
+    // the server stayed coherent under the configured combination
+    let mut probe = Client::connect_with(server.addr(), wire).unwrap();
+    assert_eq!(probe.ping().unwrap() as usize, report.inserts);
+    finish(server);
+}
+
 /// The PR 1 thread-pool runtime must keep working as the portable
 /// fallback behind `[server] io_mode = "threaded"`.
 #[test]
@@ -473,7 +614,7 @@ fn event_loop_serves_512_concurrent_pipelined_connections() {
     let row = sample_sine(2.71, &points);
     let wire_sig = probe.hash(&row).unwrap();
     match twin.submit(Op::Hash { samples: row }) {
-        Response::Signature(s) => assert_eq!(s, wire_sig),
+        Response::Signature(s) => assert_eq!(s.as_slice(), wire_sig.as_slice()),
         other => panic!("unexpected {other:?}"),
     }
     twin.shutdown();
