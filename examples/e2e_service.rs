@@ -159,6 +159,7 @@ fn main() {
             threads: client_threads,
             ops_per_thread: 500,
             pipeline_depth,
+            batch: 1,
             wire,
             insert_fraction: 0.2,
             query_fraction: 0.4,

@@ -180,5 +180,54 @@ fn main() {
         }
     }
 
+    // batched frames vs single-op frames at dim 256 (the amortization
+    // the `*_batch` ops exist for; `funclsh bench-wire` records the full
+    // batch ∈ {1, 16, 256} grid as a trajectory file)
+    for wire in [WireMode::Json, WireMode::Binary] {
+        for batch in [1usize, 256] {
+            let (server, points) = boot(4, 9, IoMode::EventLoop, 256);
+            let load = LoadConfig {
+                threads: 8,
+                ops_per_thread: if fast { 256 } else { 2048 },
+                pipeline_depth: 8,
+                batch,
+                wire,
+                insert_fraction: 0.2,
+                query_fraction: 0.2,
+                k: 10,
+                seed: 0xBEEF,
+                ..Default::default()
+            };
+            let report = run_load(server.addr(), &points, &load).expect("load");
+            println!(
+                "   load/wire={}/dim=256/batch={batch}: {:.0} op/s, p50 {:.3} ms, \
+                 p99 {:.3} ms, {} errors",
+                wire.as_str(),
+                report.throughput(),
+                report.latency_p50_s * 1e3,
+                report.latency_p99_s * 1e3,
+                report.errors
+            );
+            finish(server);
+        }
+    }
+
+    // protocol micro: one 256-row hash_batch frame vs 256 single hash
+    // frames, encode+parse, both formats
+    {
+        let dim = 256usize;
+        let row = vec![0.125f32; dim];
+        let rows: Vec<f32> = row.iter().copied().cycle().take(256 * dim).collect();
+        b.throughput_case("protocol/json/encode-parse-hash_batch-256x256", 1.0, || {
+            let line = protocol::encode_hash_batch(Some(1), black_box(&rows), dim);
+            black_box(protocol::parse_request(&line).unwrap());
+        });
+        b.throughput_case("protocol/binary/encode-parse-hash_batch-256x256", 1.0, || {
+            let frame = protocol::encode_hash_batch_binary(Some(1), black_box(&rows), dim);
+            let consumed = protocol::split_binary_frame(&frame).unwrap().unwrap();
+            black_box(protocol::parse_request_binary(&frame[4..consumed]).unwrap());
+        });
+    }
+
     println!("\n{}", b.to_csv());
 }

@@ -1,14 +1,19 @@
 //! The `bench-wire` grid: JSON vs `FBIN1` binary loopback throughput of
-//! the serving layer at dim ∈ {64, 256, 1024}, recorded as the second
-//! JSON trajectory file (`BENCH_wire.json`) so later PRs have wire
-//! numbers to regress against.
+//! the serving layer at dim ∈ {64, 256, 1024} × batch ∈ {1, 16, 256},
+//! recorded as the second JSON trajectory file (`BENCH_wire.json`) so
+//! later PRs have wire numbers to regress against.
 //!
-//! For each dimension the grid boots one server per wire mode on an
+//! For each (dim, wire, batch) cell the grid boots one server on an
 //! ephemeral loopback port, drives it with the pipelined load generator
 //! (hash-heavy mix — sample rows dominate the wire cost, which is what
-//! the binary format exists to cut), and records throughput, latency
-//! percentiles, and the exact per-request frame size of a `hash` op in
-//! each format. `funclsh bench-wire [--quick] [--out F]` runs it; CI's
+//! the binary format exists to cut; `batch` rows per frame, which is
+//! what the batched ops exist to amortize), and records throughput,
+//! latency percentiles, and the exact frame size of a `hash`/
+//! `hash_batch` op in each format. Every JSON row is self-describing:
+//! it carries the *negotiated* wire mode and batch size straight from
+//! the load report, plus the serving io_mode, so `BENCH_wire.json`
+//! trajectories can be compared across PRs without reconstructing the
+//! grid loops. `funclsh bench-wire [--quick] [--out F]` runs it; CI's
 //! `bench-smoke` job uploads the artifact alongside
 //! `BENCH_hashpath.json`.
 
@@ -64,65 +69,106 @@ fn sample_row(points: &[f64]) -> Vec<f32> {
     points.iter().map(|&x| f.eval(x) as f32).collect()
 }
 
+/// The batch axis of the grid (1 = single-op frames, the baseline the
+/// batched rows are compared against).
+pub const BATCH_GRID: [usize; 3] = [1, 16, 256];
+
 /// Run the wire grid and return the JSON report.
 pub fn run(opts: &WireBenchOptions) -> Value {
     let dims: &[usize] = &[64, 256, 1024];
-    let (threads, ops) = if opts.quick { (4usize, 150usize) } else { (8, 1200) };
+    let (threads, ops) = if opts.quick { (4usize, 512usize) } else { (8, 2048) };
     let mut cases = Vec::new();
     let mut speedups = Vec::new();
-    println!("== bench-wire: json vs binary loopback throughput ==");
+    println!("== bench-wire: json vs binary loopback throughput (rows/frame grid) ==");
     for &dim in dims {
-        let mut tput = [0.0f64; 2];
+        // throughput[wire][batch] for the speedup summary
+        let mut tput = [[0.0f64; BATCH_GRID.len()]; 2];
         for (wi, wire) in [WireMode::Json, WireMode::Binary].into_iter().enumerate() {
-            let (server, points) = boot(dim);
-            let load = LoadConfig {
-                threads,
-                ops_per_thread: ops,
-                pipeline_depth: 8,
-                wire,
-                // hash-heavy mix: the row payload dominates the frame,
-                // which is the cost the binary format exists to cut
-                insert_fraction: 0.2,
-                query_fraction: 0.2,
-                k: 10,
-                seed: 0xB1A5,
-                ..Default::default()
-            };
-            let report = run_load(server.addr(), &points, &load).expect("load run");
-            let row = sample_row(&points);
-            let hash_frame_bytes = protocol::encode_hash_frame(wire, Some(1), &row).len();
-            println!(
-                "   wire/{}/dim={dim}: {:.0} op/s, p50 {:.3} ms, p99 {:.3} ms, \
-                 hash frame {} B, {} errors",
-                wire.as_str(),
-                report.throughput(),
-                report.latency_p50_s * 1e3,
-                report.latency_p99_s * 1e3,
-                hash_frame_bytes,
-                report.errors
-            );
-            tput[wi] = report.throughput();
-            cases.push(json::object(vec![
-                ("dim", dim.into()),
-                ("wire", wire.as_str().into()),
-                ("threads", threads.into()),
-                ("ops", report.ops.into()),
-                ("errors", report.errors.into()),
-                ("throughput_ops_s", report.throughput().into()),
-                ("latency_p50_s", report.latency_p50_s.into()),
-                ("latency_p99_s", report.latency_p99_s.into()),
-                ("hash_frame_bytes", hash_frame_bytes.into()),
-            ]));
-            finish(server);
+            for (bi, &batch) in BATCH_GRID.iter().enumerate() {
+                let (server, points) = boot(dim);
+                let load = LoadConfig {
+                    threads,
+                    ops_per_thread: ops,
+                    pipeline_depth: 8,
+                    batch,
+                    wire,
+                    // hash-heavy mix: the row payload dominates the
+                    // frame, which is the cost the binary format exists
+                    // to cut (and the batch ops exist to amortize)
+                    insert_fraction: 0.2,
+                    query_fraction: 0.2,
+                    k: 10,
+                    seed: 0xB1A5,
+                    ..Default::default()
+                };
+                let report = run_load(server.addr(), &points, &load).expect("load run");
+                let row = sample_row(&points);
+                // exact wire cost of a hash frame at this batch size
+                let frame_bytes = if batch == 1 {
+                    protocol::encode_hash_frame(wire, Some(1), &row).len()
+                } else {
+                    let rows: Vec<f32> =
+                        row.iter().copied().cycle().take(batch * dim).collect();
+                    protocol::encode_hash_batch_frame(wire, Some(1), &rows, dim).len()
+                };
+                println!(
+                    "   wire/{}/dim={dim}/batch={}: {:.0} op/s, p50 {:.3} ms, \
+                     p99 {:.3} ms, hash frame {} B ({} B/row), {} errors",
+                    report.wire.as_str(),
+                    report.batch,
+                    report.throughput(),
+                    report.latency_p50_s * 1e3,
+                    report.latency_p99_s * 1e3,
+                    frame_bytes,
+                    frame_bytes / batch,
+                    report.errors
+                );
+                tput[wi][bi] = report.throughput();
+                // self-describing rows: the negotiated wire mode, batch
+                // size, and pipeline depth come from the load report
+                // itself, the io_mode from the server that ran
+                cases.push(json::object(vec![
+                    ("dim", dim.into()),
+                    ("wire", report.wire.as_str().into()),
+                    ("batch", report.batch.into()),
+                    ("io_mode", server.io_mode().as_str().into()),
+                    ("pipeline_depth", report.pipeline_depth.into()),
+                    ("threads", threads.into()),
+                    ("ops", report.ops.into()),
+                    ("errors", report.errors.into()),
+                    ("throughput_ops_s", report.throughput().into()),
+                    ("latency_p50_s", report.latency_p50_s.into()),
+                    ("latency_p99_s", report.latency_p99_s.into()),
+                    ("hash_frame_bytes", frame_bytes.into()),
+                    ("hash_frame_bytes_per_row", (frame_bytes / batch).into()),
+                ]));
+                finish(server);
+            }
         }
+        let last = BATCH_GRID.len() - 1;
         speedups.push(json::object(vec![
             ("dim", dim.into()),
-            ("binary_over_json", (tput[1] / tput[0].max(1e-9)).into()),
+            (
+                "binary_over_json_batch1",
+                (tput[1][0] / tput[0][0].max(1e-9)).into(),
+            ),
+            (
+                "json_batched_over_single",
+                (tput[0][last] / tput[0][0].max(1e-9)).into(),
+            ),
+            (
+                "binary_batched_over_single",
+                (tput[1][last] / tput[1][0].max(1e-9)).into(),
+            ),
         ]));
     }
     json::object(vec![
         ("bench", "wire_throughput".into()),
         ("mode", if opts.quick { "quick" } else { "full" }.into()),
+        (
+            "batch_grid",
+            Value::Array(BATCH_GRID.iter().map(|&b| b.into()).collect()),
+        ),
         ("cases", Value::Array(cases)),
         ("speedup", Value::Array(speedups)),
     ])
@@ -144,6 +190,26 @@ mod tests {
             assert!(b < j, "dim {dim}: binary {b} B vs json {j} B");
             if dim >= 256 {
                 assert!(b * 2 < j, "dim {dim}: binary {b} B should be <50% of json {j} B");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_frames_amortize_per_row_overhead() {
+        // the static part of the batch acceptance: a hash_batch frame
+        // costs strictly less per row than N single hash frames, in
+        // both formats, at every grid batch size > 1
+        let dim = 256usize;
+        let row: Vec<f32> = (0..dim).map(|i| (i as f32).sin()).collect();
+        for wire in [WireMode::Json, WireMode::Binary] {
+            let single = protocol::encode_hash_frame(wire, Some(1), &row).len();
+            for &batch in &BATCH_GRID[1..] {
+                let rows: Vec<f32> = row.iter().copied().cycle().take(batch * dim).collect();
+                let frame = protocol::encode_hash_batch_frame(wire, Some(1), &rows, dim).len();
+                assert!(
+                    frame < batch * single,
+                    "{wire:?} batch {batch}: {frame} B >= {batch}x{single} B"
+                );
             }
         }
     }

@@ -26,6 +26,14 @@ pub struct ServiceMetrics {
     conns_closed: AtomicU64,
     readiness_events: AtomicU64,
     backpressure_stalls: AtomicU64,
+    conns_json: AtomicU64,
+    conns_binary: AtomicU64,
+    frames_json: AtomicU64,
+    frames_binary: AtomicU64,
+    bytes_in_json: AtomicU64,
+    bytes_in_binary: AtomicU64,
+    bytes_out_json: AtomicU64,
+    bytes_out_binary: AtomicU64,
     dist: Mutex<Dists>,
 }
 
@@ -85,6 +93,38 @@ impl ServiceMetrics {
         self.backpressure_stalls.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one connection whose wire format has just been negotiated
+    /// (`binary` = FBIN1, else newline-JSON). Together with the frame
+    /// and byte counters below this gives per-format traffic totals, so
+    /// the `bench-wire` grid can be cross-checked in production.
+    pub fn record_wire_conn(&self, binary: bool) {
+        if binary { &self.conns_binary } else { &self.conns_json }.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count request frames decoded (and their payload bytes) on a
+    /// connection of the given format.
+    pub fn record_wire_in(&self, binary: bool, frames: u64, bytes: u64) {
+        if binary { &self.frames_binary } else { &self.frames_json }
+            .fetch_add(frames, Ordering::Relaxed);
+        if binary {
+            &self.bytes_in_binary
+        } else {
+            &self.bytes_in_json
+        }
+        .fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Count response bytes queued for the wire on a connection of the
+    /// given format.
+    pub fn record_wire_out(&self, binary: bool, bytes: u64) {
+        if binary {
+            &self.bytes_out_binary
+        } else {
+            &self.bytes_out_json
+        }
+        .fetch_add(bytes, Ordering::Relaxed);
+    }
+
     /// Record a completed batch: its size and per-request latencies.
     pub fn record_batch(&self, batch_size: usize, latencies: &[Duration]) {
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -131,6 +171,14 @@ impl ServiceMetrics {
             conns_closed: self.conns_closed.load(Ordering::Relaxed),
             readiness_events: self.readiness_events.load(Ordering::Relaxed),
             backpressure_stalls: self.backpressure_stalls.load(Ordering::Relaxed),
+            conns_json: self.conns_json.load(Ordering::Relaxed),
+            conns_binary: self.conns_binary.load(Ordering::Relaxed),
+            frames_json: self.frames_json.load(Ordering::Relaxed),
+            frames_binary: self.frames_binary.load(Ordering::Relaxed),
+            bytes_in_json: self.bytes_in_json.load(Ordering::Relaxed),
+            bytes_in_binary: self.bytes_in_binary.load(Ordering::Relaxed),
+            bytes_out_json: self.bytes_out_json.load(Ordering::Relaxed),
+            bytes_out_binary: self.bytes_out_binary.load(Ordering::Relaxed),
             latency_mean_s: d.latency.mean(),
             latency_p50_s: q(0.5),
             latency_p99_s: q(0.99),
@@ -188,6 +236,22 @@ pub struct MetricsSnapshot {
     pub readiness_events: u64,
     /// read-stalls applied by the event-loop server's backpressure
     pub backpressure_stalls: u64,
+    /// connections negotiated to newline-JSON
+    pub conns_json: u64,
+    /// connections negotiated to FBIN1 binary
+    pub conns_binary: u64,
+    /// request frames decoded on JSON connections
+    pub frames_json: u64,
+    /// request frames decoded on binary connections
+    pub frames_binary: u64,
+    /// request payload bytes received on JSON connections
+    pub bytes_in_json: u64,
+    /// request payload bytes received on binary connections
+    pub bytes_in_binary: u64,
+    /// response bytes queued on JSON connections
+    pub bytes_out_json: u64,
+    /// response bytes queued on binary connections
+    pub bytes_out_binary: u64,
     /// mean request latency (seconds)
     pub latency_mean_s: f64,
     /// median request latency (seconds)
@@ -218,6 +282,14 @@ impl MetricsSnapshot {
                 "backpressure_stalls",
                 (self.backpressure_stalls as usize).into(),
             ),
+            ("conns_json", (self.conns_json as usize).into()),
+            ("conns_binary", (self.conns_binary as usize).into()),
+            ("frames_json", (self.frames_json as usize).into()),
+            ("frames_binary", (self.frames_binary as usize).into()),
+            ("bytes_in_json", (self.bytes_in_json as usize).into()),
+            ("bytes_in_binary", (self.bytes_in_binary as usize).into()),
+            ("bytes_out_json", (self.bytes_out_json as usize).into()),
+            ("bytes_out_binary", (self.bytes_out_binary as usize).into()),
             ("latency_mean_s", self.latency_mean_s.into()),
             ("latency_p50_s", self.latency_p50_s.into()),
             ("latency_p99_s", self.latency_p99_s.into()),
@@ -291,6 +363,32 @@ mod tests {
         let v = crate::json::parse(&s.to_json()).unwrap();
         assert_eq!(v.get("readiness_events").unwrap().as_usize(), Some(7));
         assert_eq!(v.get("backpressure_stalls").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn per_wire_mode_counters() {
+        let m = ServiceMetrics::new();
+        m.record_wire_conn(false);
+        m.record_wire_conn(true);
+        m.record_wire_conn(true);
+        m.record_wire_in(false, 3, 120);
+        m.record_wire_in(true, 2, 64);
+        m.record_wire_out(false, 200);
+        m.record_wire_out(true, 48);
+        let s = m.snapshot();
+        assert_eq!(s.conns_json, 1);
+        assert_eq!(s.conns_binary, 2);
+        assert_eq!(s.frames_json, 3);
+        assert_eq!(s.frames_binary, 2);
+        assert_eq!(s.bytes_in_json, 120);
+        assert_eq!(s.bytes_in_binary, 64);
+        assert_eq!(s.bytes_out_json, 200);
+        assert_eq!(s.bytes_out_binary, 48);
+        let v = crate::json::parse(&s.to_json()).unwrap();
+        assert_eq!(v.get("conns_binary").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("bytes_in_json").unwrap().as_usize(), Some(120));
+        assert_eq!(v.get("frames_binary").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("bytes_out_binary").unwrap().as_usize(), Some(48));
     }
 
     #[test]

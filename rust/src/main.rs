@@ -9,7 +9,9 @@
 //! funclsh serve       [--config svc.toml] [--trace-ops N] [--snapshot F]
 //!                     (no --port: legacy in-process synthetic trace)
 //! funclsh load        [--addr H:P] [--threads N] [--ops N] [--k K]
-//!                     [--pipeline D] [--wire json|binary]
+//!                     [--pipeline D] [--wire json|binary] [--batch N]
+//!                     (--batch N ships N rows per hash_batch/
+//!                      insert_batch/query_batch frame; 1 = single ops)
 //!                     [--insert-frac F] [--query-frac F]
 //!                     [--seed S] [--shutdown]
 //! funclsh experiment  <fig1|fig2|fig3|thm1|qmc|knn|w1|mips|adaptive|all>
@@ -21,7 +23,8 @@
 //!                      emitted as the JSON perf-trajectory file)
 //! funclsh bench-wire  [--quick] [--out BENCH_wire.json]
 //!                     (JSON-vs-binary loopback wire throughput at
-//!                      dim ∈ {64, 256, 1024}; second trajectory file)
+//!                      dim ∈ {64, 256, 1024} × batch ∈ {1, 16, 256};
+//!                      second trajectory file)
 //! funclsh selftest    [--artifacts DIR]
 //! funclsh info
 //! ```
@@ -310,6 +313,7 @@ fn cmd_load(args: &Args) -> i32 {
         threads: args.get_parsed("threads", 8usize),
         ops_per_thread: args.get_parsed("ops", 250usize),
         pipeline_depth: args.get_parsed("pipeline", 1usize).max(1),
+        batch: args.get_parsed("batch", 1usize).max(1),
         wire,
         insert_fraction: args.get_parsed("insert-frac", 0.5f64),
         query_fraction: args.get_parsed("query-frac", 0.3f64),
@@ -332,12 +336,13 @@ fn cmd_load(args: &Args) -> i32 {
         }
     };
     eprintln!(
-        "load: {} threads x {} ops against {addr} (dim {}, pipeline {}, wire {})",
+        "load: {} threads x {} ops against {addr} (dim {}, pipeline {}, wire {}, batch {})",
         cfg.threads,
         cfg.ops_per_thread,
         points.len(),
         cfg.pipeline_depth,
-        cfg.wire.as_str()
+        cfg.wire.as_str(),
+        cfg.batch
     );
     let report = match funclsh::server::run_load(addr, &points, &cfg) {
         Ok(r) => r,

@@ -1,7 +1,10 @@
 //! Clients for the wire protocol — a blocking one-in-flight [`Client`],
 //! a windowed [`PipelinedClient`] that keeps several frames in flight and
 //! correlates responses by `req_id`, and a multi-threaded load generator
-//! with nanosecond-resolution latency histograms. All three speak either
+//! with nanosecond-resolution latency histograms. Both clients also
+//! speak the batched ops (`hash_batch`/`insert_batch`/`query_batch` —
+//! N rows per frame with per-item results; `funclsh load --batch N`).
+//! All three speak either
 //! wire format ([`WireMode`]): JSON is the default, binary
 //! (`connect_with(addr, WireMode::Binary)` / `funclsh load --wire
 //! binary`) opens with the `FBIN1` magic and ships sample rows as raw
@@ -16,7 +19,7 @@ use crate::search::Hit;
 use crate::util::rng::{Rng64, Xoshiro256pp};
 use crate::util::stats::quantile_sorted;
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
+use std::io::{BufReader, BufWriter, ErrorKind, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
@@ -49,9 +52,11 @@ impl From<std::io::Error> for ClientError {
     }
 }
 
-/// Read one reply frame in `wire` format off a buffered stream.
-/// `in_flight` is folded into the disconnect error so pipelined callers
-/// report how many requests the close orphaned.
+/// Read one reply frame in `wire` format off a buffered stream (the
+/// framing itself lives in [`protocol::read_frame`] — the blocking
+/// mirror of the server's `Framer`). `in_flight` is folded into the
+/// disconnect error so pipelined callers report how many requests the
+/// close orphaned.
 #[allow(clippy::type_complexity)]
 fn read_reply_frame(
     reader: &mut BufReader<TcpStream>,
@@ -65,46 +70,51 @@ fn read_reply_frame(
             "server closed connection".to_string()
         })
     };
+    let payload = match protocol::read_frame(reader, wire) {
+        Ok(Some(p)) => p,
+        Ok(None) => return Err(closed()),
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => return Err(closed()),
+        Err(e) if e.kind() == ErrorKind::InvalidData => {
+            return Err(ClientError::Protocol(e.to_string()))
+        }
+        Err(e) => return Err(ClientError::Io(e)),
+    };
     match wire {
         WireMode::Json => {
-            // cap the reply line like the binary path caps its frames: a
-            // buggy/hostile server streaming bytes without a newline must
-            // not grow this String without bound
-            let mut line = String::new();
-            let mut limited = (&mut *reader).take((protocol::MAX_FRAME_BYTES + 1) as u64);
-            let n = limited.read_line(&mut line)?;
-            if n == 0 {
-                return Err(closed());
-            }
-            if line.len() > protocol::MAX_FRAME_BYTES {
-                return Err(ClientError::Protocol(format!(
-                    "reply line exceeds the {}-byte cap",
-                    protocol::MAX_FRAME_BYTES
-                )));
-            }
-            protocol::decode_reply(&line).map_err(ClientError::Protocol)
+            let line = std::str::from_utf8(&payload)
+                .map_err(|_| ClientError::Protocol("invalid utf-8 in reply".into()))?;
+            protocol::decode_reply(line).map_err(ClientError::Protocol)
         }
-        WireMode::Binary => {
-            let mut len4 = [0u8; 4];
-            reader.read_exact(&mut len4).map_err(|e| {
-                if e.kind() == ErrorKind::UnexpectedEof {
-                    closed()
-                } else {
-                    ClientError::Io(e)
-                }
-            })?;
-            let len = u32::from_le_bytes(len4) as usize;
-            if len > protocol::MAX_FRAME_BYTES {
-                return Err(ClientError::Protocol(format!(
-                    "reply frame of {len} bytes exceeds the {}-byte cap",
-                    protocol::MAX_FRAME_BYTES
-                )));
-            }
-            let mut payload = vec![0u8; len];
-            reader.read_exact(&mut payload)?;
-            protocol::decode_reply_binary(&payload).map_err(ClientError::Protocol)
-        }
+        WireMode::Binary => protocol::decode_reply_binary(&payload).map_err(ClientError::Protocol),
     }
+}
+
+/// Rows-per-frame sanity for the batch senders: the contiguous buffer
+/// must hold a whole positive number of `dim`-wide rows — a ragged
+/// buffer would mis-frame differently per wire format (JSON ships the
+/// ceil, binary the floor), surfacing as a confusing server-side error
+/// instead of this one client-side message.
+fn batch_count(rows: &[f32], dim: usize) -> Result<usize, ClientError> {
+    if dim == 0 || rows.is_empty() || rows.len() % dim != 0 {
+        return Err(ClientError::Protocol(format!(
+            "batch rows buffer of {} samples is not a positive multiple of dim {dim}",
+            rows.len()
+        )));
+    }
+    Ok(rows.len() / dim)
+}
+
+/// [`batch_count`] plus the one-id-per-row rule of `insert_batch`
+/// (shared by the blocking and pipelined senders).
+fn insert_batch_count(ids: &[u64], rows: &[f32], dim: usize) -> Result<usize, ClientError> {
+    let count = batch_count(rows, dim)?;
+    if count != ids.len() {
+        return Err(ClientError::Protocol(format!(
+            "{} ids but {count} rows of dim {dim}",
+            ids.len()
+        )));
+    }
+    Ok(count)
 }
 
 /// A blocking connection to a funclsh server: one in-flight request at
@@ -205,6 +215,80 @@ impl Client {
         }
     }
 
+    /// `hash_batch`: signatures of `rows.len()/dim` contiguous sample
+    /// rows shipped in **one frame**; per-row results in row order (a
+    /// row the server refused comes back as that slot's `Err`).
+    #[allow(clippy::type_complexity)]
+    pub fn hash_batch(
+        &mut self,
+        rows: &[f32],
+        dim: usize,
+    ) -> Result<Vec<Result<Vec<i32>, String>>, ClientError> {
+        batch_count(rows, dim)?;
+        let rid = self.next_id();
+        let frame = protocol::encode_hash_batch_frame(self.wire, Some(rid), rows, dim);
+        match self.call(frame, rid)? {
+            Reply::Batch(items) => items
+                .into_iter()
+                .map(|item| match item {
+                    Ok(Reply::Signature(s)) => Ok(Ok(s)),
+                    Ok(other) => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+                    Err(e) => Ok(Err(e)),
+                })
+                .collect(),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `insert_batch`: insert `ids.len()` entries in one frame; per-row
+    /// acks/errors in row order.
+    pub fn insert_batch(
+        &mut self,
+        ids: &[u64],
+        rows: &[f32],
+        dim: usize,
+    ) -> Result<Vec<Result<u64, String>>, ClientError> {
+        insert_batch_count(ids, rows, dim)?;
+        let rid = self.next_id();
+        let frame = protocol::encode_insert_batch_frame(self.wire, Some(rid), ids, rows, dim);
+        match self.call(frame, rid)? {
+            Reply::Batch(items) => items
+                .into_iter()
+                .map(|item| match item {
+                    Ok(Reply::Inserted { id }) => Ok(Ok(id)),
+                    Ok(other) => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+                    Err(e) => Ok(Err(e)),
+                })
+                .collect(),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `query_batch`: k-NN for `rows.len()/dim` rows in one frame;
+    /// per-row hit lists (or errors) in row order.
+    #[allow(clippy::type_complexity)]
+    pub fn query_batch(
+        &mut self,
+        rows: &[f32],
+        dim: usize,
+        k: usize,
+    ) -> Result<Vec<Result<Vec<Hit>, String>>, ClientError> {
+        batch_count(rows, dim)?;
+        let rid = self.next_id();
+        let frame = protocol::encode_query_batch_frame(self.wire, Some(rid), rows, dim, k);
+        match self.call(frame, rid)? {
+            Reply::Batch(items) => items
+                .into_iter()
+                .map(|item| match item {
+                    Ok(Reply::Hits(h)) => Ok(Ok(h)),
+                    Ok(other) => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+                    Err(e) => Ok(Err(e)),
+                })
+                .collect(),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
     /// `metrics`: service metrics as a JSON object.
     pub fn metrics(&mut self) -> Result<Value, ClientError> {
         let rid = self.next_id();
@@ -270,10 +354,13 @@ enum Expect {
     Pong,
     Points,
     ShuttingDown,
+    /// a batch reply carrying exactly this many per-item results
+    Batch(usize),
 }
 
 fn reply_matches(expect: Expect, reply: &Reply) -> bool {
     match (expect, reply) {
+        (Expect::Batch(n), Reply::Batch(items)) => items.len() == n,
         (Expect::Signature, Reply::Signature(_)) => true,
         (Expect::Inserted(id), Reply::Inserted { id: got }) => *got == id,
         (Expect::Hits, Reply::Hits(_)) => true,
@@ -463,6 +550,50 @@ impl PipelinedClient {
         )
     }
 
+    /// Pipeline a `hash_batch` of `rows.len()/dim` contiguous rows.
+    pub fn send_hash_batch(
+        &mut self,
+        rows: &[f32],
+        dim: usize,
+    ) -> Result<Vec<Completion>, ClientError> {
+        let count = batch_count(rows, dim)?;
+        let wire = self.wire;
+        self.send(
+            |rid| protocol::encode_hash_batch_frame(wire, Some(rid), rows, dim),
+            Expect::Batch(count),
+        )
+    }
+
+    /// Pipeline an `insert_batch`.
+    pub fn send_insert_batch(
+        &mut self,
+        ids: &[u64],
+        rows: &[f32],
+        dim: usize,
+    ) -> Result<Vec<Completion>, ClientError> {
+        let count = insert_batch_count(ids, rows, dim)?;
+        let wire = self.wire;
+        self.send(
+            |rid| protocol::encode_insert_batch_frame(wire, Some(rid), ids, rows, dim),
+            Expect::Batch(count),
+        )
+    }
+
+    /// Pipeline a `query_batch`.
+    pub fn send_query_batch(
+        &mut self,
+        rows: &[f32],
+        dim: usize,
+        k: usize,
+    ) -> Result<Vec<Completion>, ClientError> {
+        let count = batch_count(rows, dim)?;
+        let wire = self.wire;
+        self.send(
+            |rid| protocol::encode_query_batch_frame(wire, Some(rid), rows, dim, k),
+            Expect::Batch(count),
+        )
+    }
+
     /// Pipeline a `ping`.
     pub fn send_ping(&mut self) -> Result<Vec<Completion>, ClientError> {
         let wire = self.wire;
@@ -624,6 +755,9 @@ pub struct LoadConfig {
     pub ops_per_thread: usize,
     /// in-flight frames per connection (1 = no pipelining)
     pub pipeline_depth: usize,
+    /// rows per request frame (1 = single-op frames; N > 1 ships N rows
+    /// per `*_batch` frame — `ops_per_thread` still counts rows)
+    pub batch: usize,
     /// wire format every connection speaks
     pub wire: WireMode,
     /// fraction of ops that are inserts
@@ -646,6 +780,7 @@ impl Default for LoadConfig {
             threads: 8,
             ops_per_thread: 250,
             pipeline_depth: 1,
+            batch: 1,
             wire: WireMode::Json,
             insert_fraction: 0.5,
             query_fraction: 0.3,
@@ -671,6 +806,8 @@ pub struct LoadReport {
     pub errors: usize,
     /// in-flight frames per connection during the run
     pub pipeline_depth: usize,
+    /// rows per request frame during the run
+    pub batch: usize,
     /// wire format the run used
     pub wire: WireMode,
     /// wall-clock duration of the run
@@ -700,6 +837,7 @@ impl LoadReport {
             ("hashes", self.hashes.into()),
             ("errors", self.errors.into()),
             ("pipeline_depth", self.pipeline_depth.into()),
+            ("batch", self.batch.into()),
             ("wire", self.wire.as_str().into()),
             ("elapsed_s", self.elapsed.as_secs_f64().into()),
             ("throughput_ops_s", self.throughput().into()),
@@ -727,6 +865,20 @@ impl ThreadTally {
     fn absorb(&mut self, completions: Vec<Completion>) {
         for c in completions {
             match c.result {
+                // a batch frame completes all its rows at once: each row
+                // counts as one op at the frame's latency (the whole
+                // point of batching is that they share it)
+                Ok(Reply::Batch(items)) => {
+                    for item in items {
+                        match item {
+                            Ok(_) => {
+                                self.latencies.push(c.latency.as_secs_f64());
+                                self.histogram.record(c.latency);
+                            }
+                            Err(_) => self.errors += 1,
+                        }
+                    }
+                }
                 Ok(_) => {
                     self.latencies.push(c.latency.as_secs_f64());
                     self.histogram.record(c.latency);
@@ -759,23 +911,48 @@ pub fn run_load(
                 PipelinedClient::connect_with(addr, cfg.pipeline_depth.max(1), cfg.wire)?;
             let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(t as u64));
             let mut tally = ThreadTally::default();
-            for i in 0..cfg.ops_per_thread {
-                let phase = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
-                let f = Sine::paper(phase);
-                let samples: Vec<f32> = points.iter().map(|&x| f.eval(x) as f32).collect();
+            let batch = cfg.batch.max(1);
+            let dim = points.len();
+            let mut i = 0usize;
+            while i < cfg.ops_per_thread {
+                // rows per frame: `batch` of them, except a short tail
+                let n = batch.min(cfg.ops_per_thread - i);
                 let roll = rng.uniform();
-                let done = if roll < cfg.insert_fraction {
-                    tally.inserts += 1;
-                    let id = cfg.id_base + ((t as u64) << 32) + i as u64;
-                    client.send_insert(id, &samples)?
+                let mut rows: Vec<f32> = Vec::with_capacity(n * dim);
+                for _ in 0..n {
+                    let phase = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+                    let f = Sine::paper(phase);
+                    rows.extend(points.iter().map(|&x| f.eval(x) as f32));
+                }
+                let done = if batch == 1 {
+                    // single-op frames: the baseline the batch grid is
+                    // measured against
+                    if roll < cfg.insert_fraction {
+                        tally.inserts += 1;
+                        let id = cfg.id_base + ((t as u64) << 32) + i as u64;
+                        client.send_insert(id, &rows)?
+                    } else if roll < cfg.insert_fraction + cfg.query_fraction {
+                        tally.queries += 1;
+                        client.send_query(&rows, cfg.k)?
+                    } else {
+                        tally.hashes += 1;
+                        client.send_hash(&rows)?
+                    }
+                } else if roll < cfg.insert_fraction {
+                    tally.inserts += n;
+                    let ids: Vec<u64> = (0..n)
+                        .map(|j| cfg.id_base + ((t as u64) << 32) + (i + j) as u64)
+                        .collect();
+                    client.send_insert_batch(&ids, &rows, dim)?
                 } else if roll < cfg.insert_fraction + cfg.query_fraction {
-                    tally.queries += 1;
-                    client.send_query(&samples, cfg.k)?
+                    tally.queries += n;
+                    client.send_query_batch(&rows, dim, cfg.k)?
                 } else {
-                    tally.hashes += 1;
-                    client.send_hash(&samples)?
+                    tally.hashes += n;
+                    client.send_hash_batch(&rows, dim)?
                 };
                 tally.absorb(done);
+                i += n;
             }
             tally.absorb(client.drain()?);
             Ok(tally)
@@ -821,6 +998,7 @@ pub fn run_load(
         hashes: merged.hashes,
         errors: merged.errors,
         pipeline_depth: cfg.pipeline_depth.max(1),
+        batch: cfg.batch.max(1),
         wire: cfg.wire,
         elapsed,
         latency_mean_s: mean,
@@ -901,6 +1079,14 @@ mod tests {
     }
 
     #[test]
+    fn batch_count_rejects_ragged_buffers() {
+        assert_eq!(batch_count(&[0.0; 8], 4).unwrap(), 2);
+        assert!(batch_count(&[0.0; 7], 4).is_err(), "ragged buffer");
+        assert!(batch_count(&[], 4).is_err(), "empty batch");
+        assert!(batch_count(&[0.0; 4], 0).is_err(), "zero dim");
+    }
+
+    #[test]
     fn report_json_shape() {
         let report = LoadReport {
             ops: 10,
@@ -909,6 +1095,7 @@ mod tests {
             hashes: 2,
             errors: 0,
             pipeline_depth: 4,
+            batch: 16,
             wire: WireMode::Binary,
             elapsed: Duration::from_millis(100),
             latency_mean_s: 0.001,
@@ -920,6 +1107,7 @@ mod tests {
         let v = crate::json::parse(&report.to_json()).unwrap();
         assert_eq!(v.get("ops").unwrap().as_usize(), Some(10));
         assert_eq!(v.get("pipeline_depth").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("batch").unwrap().as_usize(), Some(16));
         assert_eq!(v.get("wire").unwrap().as_str(), Some("binary"));
         assert!(v.get("throughput_ops_s").unwrap().as_f64().unwrap() > 0.0);
     }

@@ -5,10 +5,10 @@
 //!
 //! ```text
 //!                    ┌──────────────── epoll thread ───────────────┐
-//! clients ── TCP ──▶ │ accept / read / incremental framing         │
+//! clients ── TCP ──▶ │ accept / read / shared protocol::Framer     │
 //!                    │  (newline JSON, or FBIN1 length prefixes    │
 //!                    │   when the first 5 bytes negotiate binary)  │
-//!                    │   parse → Job{token, seq, req_id, op, wire} │
+//!                    │   parse → Job{token, seq, req_id, ops, wire}│
 //!                    └──────────────┬──────────────────────────────┘
 //!                                   │ BoundedQueue<Job>
 //!                          io_workers threads: submit_async the whole
@@ -30,7 +30,7 @@
 //! FIFO spill list and retries each tick, so the epoll thread never
 //! blocks.
 
-use super::protocol::{self, WireMode};
+use super::protocol::{self, Framer, FramerStep, WireMode};
 use super::reactor::{event, Poller, Waker};
 use crate::coordinator::{BoundedQueue, Coordinator, Op, Response, ServiceMetrics};
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -63,10 +63,19 @@ struct Job {
     token: u64,
     seq: u64,
     req_id: Option<u64>,
-    op: Op,
+    payload: JobPayload,
     /// frame format of the connection that sent it (the response is
     /// encoded in the same format)
     wire: WireMode,
+}
+
+/// What one frame asked the coordinator to do.
+enum JobPayload {
+    /// a single op → a single response frame
+    One(Op),
+    /// a batch frame's items (per-item decode failures ride as `Err`) →
+    /// one batch envelope with per-item results
+    Batch(Vec<Result<Op, String>>),
 }
 
 /// A finished response on its way back to the epoll thread, already
@@ -75,17 +84,6 @@ struct Completion {
     token: u64,
     seq: u64,
     frame: Vec<u8>,
-}
-
-/// Per-connection framing state.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum ConnMode {
-    /// first bytes not yet seen: mode undecided
-    Probe,
-    /// newline-delimited JSON
-    Json,
-    /// FBIN1 length-prefixed binary
-    Binary,
 }
 
 /// Handles owned by [`super::Server`] for the event-loop runtime.
@@ -176,6 +174,16 @@ fn worker_loop(
     completions: &Mutex<Vec<Completion>>,
     waker: &Waker,
 ) {
+    /// One job's submitted receivers (a single op is a batch of one; a
+    /// batch frame keeps `batched` so its response stays one envelope).
+    struct Wait {
+        token: u64,
+        seq: u64,
+        req_id: Option<u64>,
+        wire: WireMode,
+        rxs: super::PendingBatch,
+        batched: bool,
+    }
     while let Some(batch) = jobs.pop_batch(32, Duration::from_micros(200)) {
         let mut waits = Vec::with_capacity(batch.len());
         for job in batch {
@@ -183,27 +191,43 @@ fn worker_loop(
                 token,
                 seq,
                 req_id,
-                op,
+                payload,
                 wire,
             } = job;
-            waits.push((token, seq, req_id, wire, svc.submit_async(op)));
-        }
-        let mut done = Vec::with_capacity(waits.len());
-        for (token, seq, req_id, wire, rx) in waits {
-            let resp = match rx {
-                Ok(rx) => rx
-                    .recv()
-                    .unwrap_or_else(|_| Response::Error("worker dropped request".into())),
-                Err(e) => Response::Error(e),
+            // every op of every job is submitted before any is awaited,
+            // so wire concurrency AND in-frame batching both turn into
+            // coordinator batch occupancy; the per-item mapping is the
+            // shared submit_batch_async, so both runtimes emit identical
+            // per-item error envelopes
+            let (rxs, batched) = match payload {
+                JobPayload::One(op) => (super::submit_batch_async(svc, vec![Ok(op)]), false),
+                JobPayload::Batch(items) => (super::submit_batch_async(svc, items), true),
             };
-            done.push(Completion {
+            waits.push(Wait {
                 token,
                 seq,
-                // Signature responses serialize straight from the
-                // coordinator's shared flat block here; the oversize
-                // guard degrades an unframeable response to a correlated
-                // error envelope instead of a dead connection
-                frame: protocol::encode_response_frame(wire, req_id, &resp),
+                req_id,
+                wire,
+                rxs,
+                batched,
+            });
+        }
+        let mut done = Vec::with_capacity(waits.len());
+        for w in waits {
+            let results: Vec<Response> = super::collect_batch(w.rxs);
+            // Signature responses serialize straight from the
+            // coordinator's shared flat block here; the oversize guard
+            // degrades an unframeable response to a correlated error
+            // envelope instead of a dead connection
+            let frame = if w.batched {
+                protocol::encode_batch_response_frame(w.wire, w.req_id, &results)
+            } else {
+                protocol::encode_response_frame(w.wire, w.req_id, &results[0])
+            };
+            done.push(Completion {
+                token: w.token,
+                seq: w.seq,
+                frame,
             });
         }
         completions.lock().unwrap().extend(done);
@@ -214,13 +238,12 @@ fn worker_loop(
 /// One multiplexed connection.
 struct Conn {
     stream: TcpStream,
-    /// negotiated frame format (Probe until the first bytes arrive)
-    mode: ConnMode,
-    /// bytes received but not yet framed
-    read_buf: Vec<u8>,
-    /// resume offset for the newline scan (avoid rescanning the prefix;
-    /// JSON mode only)
-    scan_from: usize,
+    /// the shared incremental framer: negotiation state, partial
+    /// frames, scan offsets, and the frame caps all live in here
+    framer: Framer,
+    /// whether this connection's negotiated wire mode has been counted
+    /// in the per-format metrics
+    counted_mode: bool,
     /// encoded responses awaiting the socket
     write_buf: Vec<u8>,
     /// first unwritten byte of `write_buf`
@@ -246,9 +269,8 @@ impl Conn {
     fn new(stream: TcpStream) -> Self {
         Self {
             stream,
-            mode: ConnMode::Probe,
-            read_buf: Vec::new(),
-            scan_from: 0,
+            framer: Framer::new(),
+            counted_mode: false,
             write_buf: Vec::new(),
             write_from: 0,
             next_seq: 0,
@@ -277,12 +299,15 @@ impl Conn {
     }
 
     /// Move in-order completions into the write buffer (frames carry
-    /// their own terminator/prefix).
-    fn flush_ready(&mut self) {
+    /// their own terminator/prefix); returns the bytes moved so the
+    /// caller can feed the per-wire-mode output counters.
+    fn flush_ready(&mut self) -> usize {
+        let before = self.write_buf.len();
         while let Some(frame) = self.completed.remove(&self.next_write_seq) {
             self.write_buf.extend_from_slice(&frame);
             self.next_write_seq += 1;
         }
+        self.write_buf.len() - before
     }
 
     fn has_pending_write(&self) -> bool {
@@ -438,11 +463,12 @@ impl LoopState {
             match conn.stream.read(&mut buf) {
                 Ok(0) => {
                     conn.read_closed = true;
-                    self.eof_tail(&mut conn, token);
+                    conn.framer.push_eof();
+                    self.parse_frames(&mut conn, token);
                     break;
                 }
                 Ok(n) => {
-                    conn.read_buf.extend_from_slice(&buf[..n]);
+                    conn.framer.push(&buf[..n]);
                     self.parse_frames(&mut conn, token);
                     if conn.stalled(self.pipeline_depth) {
                         break; // backpressure: leave the rest in the kernel
@@ -459,175 +485,49 @@ impl LoopState {
         self.settle(token, conn);
     }
 
-    /// EOF with unframed bytes still buffered. A JSON connection's final
-    /// unterminated line is still a frame (clients may write-all then
-    /// half-close); a binary connection's partial frame gets a typed
-    /// error; an unfinished negotiation can only be JSON garbage.
-    fn eof_tail(&mut self, conn: &mut Conn, token: u64) {
-        if conn.read_buf.is_empty() {
-            return;
-        }
-        let tail = std::mem::take(&mut conn.read_buf);
-        conn.scan_from = 0;
-        match conn.mode {
-            ConnMode::Binary => {
-                let seq = conn.take_seq();
-                conn.complete(
-                    seq,
-                    protocol::encode_error_frame(
-                        WireMode::Binary,
-                        None,
-                        "truncated binary frame before eof",
-                    ),
-                );
-            }
-            _ => self.handle_frame(conn, token, &tail),
-        }
-    }
-
-    /// Split complete frames out of the read buffer according to the
-    /// connection's (possibly just-negotiated) wire mode.
+    /// Pull every complete frame out of the connection's [`Framer`] and
+    /// answer it. The framer is taken out of the connection for the
+    /// duration so frames are handled as zero-copy slices; a `Fatal`
+    /// step (over-cap line/length, eof-truncated binary frame) is
+    /// answered once and closes the connection after the flush.
     fn parse_frames(&mut self, conn: &mut Conn, token: u64) {
-        if conn.mode == ConnMode::Probe {
-            match protocol::negotiate(&conn.read_buf) {
-                protocol::Negotiation::NeedMore => return,
-                protocol::Negotiation::Json => conn.mode = ConnMode::Json,
-                protocol::Negotiation::Binary => {
-                    conn.read_buf.drain(..protocol::BINARY_MAGIC.len());
-                    conn.mode = ConnMode::Binary;
-                }
-            }
-        }
-        match conn.mode {
-            ConnMode::Json => self.parse_json_frames(conn, token),
-            ConnMode::Binary => self.parse_binary_frames(conn, token),
-            ConnMode::Probe => unreachable!("negotiated above"),
-        }
-    }
-
-    /// Split complete newline-terminated frames out of the read buffer.
-    /// The buffer is taken out of the connection for the duration, so
-    /// frames are handled as zero-copy slices and the consumed prefix is
-    /// drained once per call (not once per frame).
-    fn parse_json_frames(&mut self, conn: &mut Conn, token: u64) {
-        let buf = std::mem::take(&mut conn.read_buf);
-        let mut start = 0usize;
-        let mut scan = conn.scan_from;
+        let mut framer = std::mem::take(&mut conn.framer);
         while !conn.close_after_flush {
-            match buf[scan..].iter().position(|&b| b == b'\n') {
-                Some(rel) => {
-                    let end = scan + rel;
-                    let mut line = &buf[start..end];
-                    if line.last() == Some(&b'\r') {
-                        line = &line[..line.len() - 1];
-                    }
-                    self.handle_frame(conn, token, line);
-                    start = end + 1;
-                    scan = start;
-                }
-                None => {
-                    scan = buf.len();
-                    break;
-                }
-            }
-        }
-        // put the buffer back and drop the consumed prefix in one move;
-        // everything kept has already been scanned for newlines
-        conn.read_buf = buf;
-        if start > 0 {
-            conn.read_buf.drain(..start);
-        }
-        conn.scan_from = conn.read_buf.len();
-        if !conn.close_after_flush && conn.read_buf.len() > protocol::MAX_LINE_BYTES {
-            let seq = conn.take_seq();
-            conn.complete(
-                seq,
-                protocol::encode_error_frame(WireMode::Json, None, "request line too long"),
-            );
-            conn.close_after_flush = true;
-            conn.read_closed = true;
-        }
-    }
-
-    /// Split complete length-prefixed frames out of the read buffer. An
-    /// oversized declared length is answered once and closes the
-    /// connection after the flush — binary framing cannot resync past it.
-    fn parse_binary_frames(&mut self, conn: &mut Conn, token: u64) {
-        let buf = std::mem::take(&mut conn.read_buf);
-        let mut start = 0usize;
-        while !conn.close_after_flush {
-            match protocol::split_binary_frame(&buf[start..]) {
-                Ok(None) => break,
-                Ok(Some(consumed)) => {
-                    self.handle_binary_frame(conn, token, &buf[start + 4..start + consumed]);
-                    start += consumed;
-                }
-                Err(msg) => {
+            match framer.next() {
+                FramerStep::Pending => break,
+                FramerStep::Fatal { wire, msg } => {
                     let seq = conn.take_seq();
-                    conn.complete(
-                        seq,
-                        protocol::encode_error_frame(WireMode::Binary, None, &msg),
-                    );
+                    conn.complete(seq, protocol::encode_error_frame(wire, None, &msg));
                     conn.close_after_flush = true;
                     conn.read_closed = true;
                 }
+                FramerStep::Frame { wire, payload } => {
+                    self.metrics
+                        .record_wire_in(wire == WireMode::Binary, 1, payload.len() as u64);
+                    self.handle_frame(conn, token, wire, payload);
+                }
             }
         }
-        conn.read_buf = buf;
-        if start > 0 {
-            conn.read_buf.drain(..start);
-        }
-    }
-
-    /// Answer one JSON frame: transport ops inline, coordinator ops via
-    /// the worker pool. Every frame gets a seq so responses flush in
-    /// request order regardless of completion order.
-    fn handle_frame(&mut self, conn: &mut Conn, token: u64, bytes: &[u8]) {
-        let seq = conn.take_seq();
-        if bytes.len() > protocol::MAX_LINE_BYTES {
-            conn.complete(
-                seq,
-                protocol::encode_error_frame(WireMode::Json, None, "request line too long"),
-            );
-            conn.close_after_flush = true;
-            conn.read_closed = true;
-            return;
-        }
-        let line = match std::str::from_utf8(bytes) {
-            Ok(s) => s,
-            Err(_) => {
-                conn.complete(
-                    seq,
-                    protocol::encode_error_frame(
-                        WireMode::Json,
-                        None,
-                        "bad request: invalid utf-8",
-                    ),
-                );
-                return;
+        framer.compact();
+        if !conn.counted_mode {
+            if let Some(m) = framer.negotiated() {
+                self.metrics.record_wire_conn(m == WireMode::Binary);
+                conn.counted_mode = true;
             }
-        };
-        if line.trim().is_empty() {
-            conn.complete(
-                seq,
-                protocol::encode_error_frame(WireMode::Json, None, "empty request"),
-            );
-            return;
         }
-        self.route(conn, token, seq, WireMode::Json, protocol::parse_request(line));
+        conn.framer = framer;
     }
 
-    /// Answer one binary frame payload (the bytes after the length
-    /// prefix).
-    fn handle_binary_frame(&mut self, conn: &mut Conn, token: u64, payload: &[u8]) {
+    /// Answer one frame in its connection's wire format: transport ops
+    /// inline, coordinator ops via the worker pool. Every frame gets a
+    /// seq so responses flush in request order regardless of completion
+    /// order. Payload decoding (UTF-8/empty rules + format dispatch) is
+    /// the shared [`protocol::parse_frame_payload`] — one copy for both
+    /// runtimes, like the framing itself.
+    fn handle_frame(&mut self, conn: &mut Conn, token: u64, wire: WireMode, payload: &[u8]) {
         let seq = conn.take_seq();
-        self.route(
-            conn,
-            token,
-            seq,
-            WireMode::Binary,
-            protocol::parse_request_binary(payload),
-        );
+        let parsed = protocol::parse_frame_payload(wire, payload);
+        self.route(conn, token, seq, wire, parsed);
     }
 
     /// Shared request routing: transport ops answered inline, coordinator
@@ -660,7 +560,14 @@ impl LoopState {
                     token,
                     seq,
                     req_id,
-                    op,
+                    payload: JobPayload::One(op),
+                    wire,
+                }),
+                protocol::RequestBody::Batch(items) => self.dispatch(Job {
+                    token,
+                    seq,
+                    req_id,
+                    payload: JobPayload::Batch(items),
                     wire,
                 }),
             },
@@ -712,7 +619,11 @@ impl LoopState {
 
     /// Flush, decide close-vs-keep, and refresh poller interest.
     fn settle(&mut self, token: u64, mut conn: Conn) {
-        conn.flush_ready();
+        let moved = conn.flush_ready();
+        if moved > 0 {
+            self.metrics
+                .record_wire_out(conn.framer.wire_mode() == WireMode::Binary, moved as u64);
+        }
         if conn.try_write().is_err() {
             self.drop_conn(token, conn);
             return;

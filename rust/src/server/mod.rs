@@ -43,12 +43,43 @@
 //! ([`protocol::MAX_FRAME_BYTES`]), and every request may carry an
 //! optional `req_id` (u64) that is echoed in its response.
 //!
+//! ## The shared framer
+//!
+//! Both runtimes consume the same incremental [`protocol::Framer`] —
+//! the *only* negotiation/framing state machine in the tree. Its
+//! contract (push/poll semantics):
+//!
+//! * `push(bytes)` appends raw socket bytes; `next()` yields each
+//!   complete frame exactly once, in order, **independent of chunking**
+//!   — byte-at-a-time and whole-buffer feeds decode identically
+//!   (property-proved in `tests/framer_properties.rs`).
+//! * Negotiation state (`Probe` → JSON/binary) lives inside: the first
+//!   bytes pick the mode, `Framer::negotiated()` reports it, and probe
+//!   state answers default to JSON.
+//! * Cap behavior: a JSON line past 8 MiB (with or without its newline)
+//!   and a binary length prefix declaring > 8 MiB are **fatal** — the
+//!   framer emits one `Fatal` step (answered with an error envelope,
+//!   then close-after-flush) and yields nothing further, because the
+//!   framing cannot resync past either. All other malformed input is
+//!   per-frame and leaves the connection usable.
+//! * `push_eof()` ends the stream: a final unterminated JSON line is
+//!   still a frame; a binary frame truncated by EOF is fatal.
+//! * `compact()` drops the consumed prefix once per read burst, so a
+//!   pipelined burst is memmoved once, not once per frame.
+//!
+//! Clients read reply frames with the blocking mirror
+//! [`protocol::read_frame`].
+//!
 //! ## JSON frames
 //!
 //! One UTF-8 JSON object per `\n`-terminated line. **Integer width:**
-//! ids and `req_id`s ride JSON numbers (f64), so values ≥ 2^53 are
-//! rejected rather than silently rounded — use the binary format for
-//! full-width ids.
+//! ids and `req_id`s ride JSON numbers (f64), so request values ≥ 2^53
+//! are rejected rather than silently rounded — use the binary format
+//! for full-width ids. The same rule guards the **response** path: a
+//! response that would carry a full-width id (inserted earlier over the
+//! binary wire) back to a JSON connection degrades to a correlated
+//! per-request error (per-item inside batch envelopes) instead of
+//! corrupting the id on the wire.
 //!
 //! Requests:
 //!
@@ -64,7 +95,18 @@
 //! {"op":"ping"}
 //! {"op":"points"}                        (published sample points)
 //! {"op":"shutdown"}                      (graceful stop + shutdown snapshot)
+//! {"op":"hash_batch",   "rows":[[f32…]…]}
+//! {"op":"insert_batch", "ids":[u64…], "rows":[[f32…]…]}
+//! {"op":"query_batch",  "rows":[[f32…]…], "k":usize}
 //! ```
+//!
+//! The `*_batch` ops carry N rows in **one frame** (one syscall, one
+//! reorder-buffer slot, one response frame) and fan out into the
+//! coordinator's dynamic batcher, so a single frame fills a kernel
+//! batch. Errors are **per item**: a row that fails decode (non-finite
+//! sample) or execution (wrong dimension, duplicate id) fails only its
+//! slot in the batch envelope — its neighbours still answer. A batch
+//! must carry ≥ 1 row; `ids` and `rows` lengths must agree.
 //!
 //! Responses are an envelope with `"ok"`:
 //!
@@ -78,9 +120,14 @@
 //! {"ok":true, "req_id":…, "type":"pong",      "indexed":u64}
 //! {"ok":true, "req_id":…, "type":"points",    "points":[f64…]}
 //! {"ok":true, "req_id":…, "type":"shutting_down"}
+//! {"ok":true, "req_id":…, "type":"batch",
+//!             "results":[{"ok":true,"type":…,…} | {"ok":false,"error":"…"}, …]}
 //! {"ok":false,"req_id":…, "error":"…"}        (error envelope, both
 //!                                              bad requests and op failures)
 //! ```
+//!
+//! Batch `results` entries use the same body as the single-op responses
+//! and arrive in request row order.
 //!
 //! ## Binary frames (`FBIN1`)
 //!
@@ -104,14 +151,27 @@
 //! op 7 ping      —
 //! op 8 points    —
 //! op 9 shutdown  —
+//! op 10 hash_batch    count:u32, dim:u32, samples:[f32; count·dim]
+//! op 11 insert_batch  count:u32, dim:u32, ids:[u64; count],
+//!                     samples:[f32; count·dim]
+//! op 12 query_batch   count:u32, dim:u32, samples:[f32; count·dim], k:u64
 //! ```
+//!
+//! Batch rows are contiguous (`row r` occupies samples
+//! `[r·dim, (r+1)·dim)`); `count` and `dim` must both be positive and
+//! `count·dim·4` must fit the declared payload — violations are
+//! frame-level errors (still correlated by `req_id`), while a
+//! non-finite value fails only its row's slot.
 //!
 //! Response payload: `status:u8` (0 = ok, 1 = error), `flags:u8` (bit 0
 //! = `req_id:u64` follows). Errors carry `len:u32, msg:[utf8; len]`;
 //! successes carry `type:u8` + body mirroring the JSON responses
 //! (`signature` = `n:u32` + raw `i32`s, `hits` = `n:u32` + `(id:u64,
 //! distance:f64)` pairs, `metrics` = a length-prefixed JSON string,
-//! `points` = `n:u32` + `f64`s, acks = their `u64`).
+//! `points` = `n:u32` + `f64`s, acks = their `u64`). Batch responses are
+//! `type:u8 = 10` + `n:u32` + per item a `status:u8` followed by either
+//! the single-op reply body (ok) or `len:u32, msg:[utf8; len]` (error),
+//! in request row order.
 //!
 //! ## Sample validation
 //!
@@ -121,6 +181,16 @@
 //! the coordinator's `Insert` path additionally refuses non-finite rows
 //! defensively. A poisoned sample would otherwise corrupt the index and
 //! every re-rank distance it touches.
+//!
+//! ## Per-wire-mode metrics
+//!
+//! Both runtimes feed per-format counters into the service metrics:
+//! `conns_json`/`conns_binary` (connections as negotiated),
+//! `frames_json`/`frames_binary` (request frames decoded),
+//! `bytes_in_json`/`bytes_in_binary` (request payload bytes), and
+//! `bytes_out_json`/`bytes_out_binary` (response bytes queued) — so the
+//! `bench-wire` grid can be cross-checked against a live server's
+//! `metrics` op.
 //!
 //! # Pipelining contract
 //!
@@ -197,7 +267,7 @@ pub use reactor::raise_nofile_limit;
 
 use crate::config::{IoMode, ServiceConfig};
 use crate::coordinator::{BoundedQueue, Coordinator};
-use protocol::{Negotiation, Request, RequestBody};
+use protocol::{Request, RequestBody};
 use std::io::{BufWriter, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -419,147 +489,85 @@ fn handle_connection(
     metrics.record_conn_closed();
 }
 
-/// Blocking frame loop for the threaded runtime: raw reads into a local
-/// buffer, wire-mode negotiation on the first bytes, then one reply per
-/// complete frame — the same framing rules as the event loop, minus
-/// pipelined reordering (frames are answered one at a time).
+/// Blocking frame loop for the threaded runtime: raw reads pushed into
+/// the shared incremental [`protocol::Framer`] (the same machine the
+/// event loop consumes — one copy of the framing rules), then one reply
+/// per complete frame, answered in order without pipelined reordering.
 fn serve_stream(
     stream: TcpStream,
     svc: &Arc<Coordinator>,
     points: &Arc<Vec<f64>>,
     shutdown: &Arc<AtomicBool>,
 ) -> std::io::Result<()> {
-    use protocol::WireMode;
+    use protocol::{Framer, FramerStep, WireMode};
 
     stream.set_nodelay(true)?;
     // Reads time out so an idle connection re-checks the shutdown flag;
-    // partial frames persist in `buf` across timeouts.
+    // partial frames persist in the framer across timeouts.
     stream.set_read_timeout(Some(POLL_INTERVAL))?;
+    let metrics = svc.shared_metrics();
     let mut reader = stream.try_clone()?;
     let mut writer = BufWriter::new(stream);
-    let mut buf: Vec<u8> = Vec::new();
-    let mut mode: Option<WireMode> = None;
-    // resume offset for the JSON newline scan
-    let mut scan_from = 0usize;
+    let mut framer = Framer::new();
+    let mut counted_mode = false;
     let mut chunk = [0u8; 64 * 1024];
     let mut eof = false;
     loop {
-        // 1. drain every complete frame currently buffered
+        // 1. answer every complete frame currently buffered
         loop {
-            if mode.is_none() {
-                match protocol::negotiate(&buf) {
-                    Negotiation::NeedMore if !eof => break,
-                    // an unfinished negotiation at EOF can only be JSON
-                    // garbage — fall through to the JSON tail handling
-                    Negotiation::NeedMore => mode = Some(WireMode::Json),
-                    Negotiation::Json => mode = Some(WireMode::Json),
-                    Negotiation::Binary => {
-                        buf.drain(..protocol::BINARY_MAGIC.len());
-                        mode = Some(WireMode::Binary);
+            match framer.next() {
+                FramerStep::Pending => break,
+                // both arms carry the negotiated mode, so count the
+                // connection here too — the Fatal and shutdown paths
+                // return before the post-loop check would run, and the
+                // per-wire counters must agree with the event loop's
+                FramerStep::Fatal { wire, msg } => {
+                    if !counted_mode {
+                        metrics.record_wire_conn(wire == WireMode::Binary);
+                        counted_mode = true;
                     }
+                    // over-cap line / declared length / eof-truncated
+                    // binary frame: answer once, then close — the
+                    // framing cannot resync past it. The final error
+                    // frame still counts toward bytes_out (parity with
+                    // the event loop, which counts every flushed frame)
+                    let reply = protocol::encode_error_frame(wire, None, &msg);
+                    metrics.record_wire_out(wire == WireMode::Binary, reply.len() as u64);
+                    write_frame(&mut writer, &reply)?;
+                    return Ok(());
                 }
-            }
-            // answer every complete frame by offset, then drop the
-            // consumed prefix in ONE drain (a burst of pipelined frames
-            // in a single read must not memmove the buffer per frame)
-            let m = mode.expect("negotiated above");
-            let mut start = 0usize;
-            match m {
-                WireMode::Json => {
-                    while let Some(rel) = buf[scan_from..].iter().position(|&b| b == b'\n') {
-                        let end = scan_from + rel;
-                        let mut line = &buf[start..end];
-                        if line.last() == Some(&b'\r') {
-                            line = &line[..line.len() - 1];
-                        }
-                        if line.len() > protocol::MAX_LINE_BYTES {
-                            write_frame(
-                                &mut writer,
-                                &protocol::encode_error_frame(m, None, "request line too long"),
-                            )?;
-                            return Ok(());
-                        }
-                        let reply = answer_frame(m, line, svc, points, shutdown);
-                        write_frame(&mut writer, &reply)?;
-                        if shutdown.load(Ordering::SeqCst) {
-                            return Ok(());
-                        }
-                        start = end + 1;
-                        scan_from = start;
+                FramerStep::Frame { wire, payload } => {
+                    if !counted_mode {
+                        metrics.record_wire_conn(wire == WireMode::Binary);
+                        counted_mode = true;
                     }
-                    scan_from = buf.len();
-                    if start > 0 {
-                        buf.drain(..start);
-                        scan_from -= start;
-                    }
-                    if buf.len() > protocol::MAX_LINE_BYTES {
-                        // a frame that drips past the cap without its
-                        // newline cannot be served
-                        write_frame(
-                            &mut writer,
-                            &protocol::encode_error_frame(m, None, "request line too long"),
-                        )?;
+                    metrics.record_wire_in(wire == WireMode::Binary, 1, payload.len() as u64);
+                    let reply = answer_frame(wire, payload, svc, points, shutdown);
+                    metrics.record_wire_out(wire == WireMode::Binary, reply.len() as u64);
+                    write_frame(&mut writer, &reply)?;
+                    if shutdown.load(Ordering::SeqCst) {
                         return Ok(());
                     }
-                    if eof && !buf.is_empty() {
-                        // a final unterminated line is still a frame
-                        // (write-all then half-close)
-                        let tail = std::mem::take(&mut buf);
-                        scan_from = 0;
-                        let reply = answer_frame(m, &tail, svc, points, shutdown);
-                        write_frame(&mut writer, &reply)?;
-                    }
-                    break;
-                }
-                WireMode::Binary => {
-                    loop {
-                        match protocol::split_binary_frame(&buf[start..]) {
-                            Err(msg) => {
-                                // oversized declared length: binary
-                                // framing cannot resync past it
-                                write_frame(
-                                    &mut writer,
-                                    &protocol::encode_error_frame(m, None, &msg),
-                                )?;
-                                return Ok(());
-                            }
-                            Ok(None) => break,
-                            Ok(Some(consumed)) => {
-                                let payload = &buf[start + 4..start + consumed];
-                                let reply = answer_frame(m, payload, svc, points, shutdown);
-                                write_frame(&mut writer, &reply)?;
-                                if shutdown.load(Ordering::SeqCst) {
-                                    return Ok(());
-                                }
-                                start += consumed;
-                            }
-                        }
-                    }
-                    if start > 0 {
-                        buf.drain(..start);
-                    }
-                    if eof && !buf.is_empty() {
-                        write_frame(
-                            &mut writer,
-                            &protocol::encode_error_frame(
-                                m,
-                                None,
-                                "truncated binary frame before eof",
-                            ),
-                        )?;
-                        buf.clear();
-                    }
-                    break;
                 }
             }
         }
+        if !counted_mode {
+            if let Some(m) = framer.negotiated() {
+                metrics.record_wire_conn(m == WireMode::Binary);
+                counted_mode = true;
+            }
+        }
+        framer.compact();
         if eof {
             return Ok(());
         }
         // 2. read more bytes (or notice EOF / shutdown)
         match reader.read(&mut chunk) {
-            Ok(0) => eof = true,
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Ok(0) => {
+                eof = true;
+                framer.push_eof();
+            }
+            Ok(n) => framer.push(&chunk[..n]),
             Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
                 if shutdown.load(Ordering::SeqCst) {
                     return Ok(());
@@ -585,23 +593,7 @@ fn answer_frame(
     points: &Arc<Vec<f64>>,
     shutdown: &Arc<AtomicBool>,
 ) -> Vec<u8> {
-    use protocol::WireMode;
-    let parsed = match mode {
-        WireMode::Json => {
-            let line = match std::str::from_utf8(payload) {
-                Ok(s) => s,
-                Err(_) => {
-                    return protocol::encode_error_frame(mode, None, "bad request: invalid utf-8")
-                }
-            };
-            if line.trim().is_empty() {
-                return protocol::encode_error_frame(mode, None, "empty request");
-            }
-            protocol::parse_request(line)
-        }
-        WireMode::Binary => protocol::parse_request_binary(payload),
-    };
-    match parsed {
+    match protocol::parse_frame_payload(mode, payload) {
         Err(e) => protocol::encode_error_frame(mode, e.req_id, &format!("bad request: {e}")),
         Ok(Request { req_id, body }) => match body {
             RequestBody::Points => protocol::encode_points_frame(mode, req_id, points),
@@ -613,6 +605,57 @@ fn answer_frame(
                 let resp = svc.submit(op);
                 protocol::encode_response_frame(mode, req_id, &resp)
             }
+            RequestBody::Batch(items) => {
+                let results = submit_batch(svc, items);
+                protocol::encode_batch_response_frame(mode, req_id, &results)
+            }
         },
     }
+}
+
+/// Per-item outcomes of a submitted batch: a receiver for items the
+/// coordinator accepted, or the ready error envelope for items that
+/// failed wire decode / admission.
+pub(crate) type PendingBatch =
+    Vec<Result<std::sync::mpsc::Receiver<crate::coordinator::Response>, crate::coordinator::Response>>;
+
+/// Fan one batch frame's items into the coordinator *without awaiting*
+/// any of them, so the rows co-occupy one dynamic batch. Shared by both
+/// runtimes — the per-item error-envelope wording must stay identical
+/// between them (the runtime-parity property tests compare reply bytes).
+pub(crate) fn submit_batch_async(
+    svc: &Coordinator,
+    items: Vec<Result<crate::coordinator::Op, String>>,
+) -> PendingBatch {
+    use crate::coordinator::Response;
+    items
+        .into_iter()
+        .map(|item| match item {
+            Ok(op) => svc.submit_async(op).map_err(Response::Error),
+            Err(msg) => Err(Response::Error(format!("bad request: {msg}"))),
+        })
+        .collect()
+}
+
+/// Await a [`submit_batch_async`] submission in row order.
+pub(crate) fn collect_batch(pending: PendingBatch) -> Vec<crate::coordinator::Response> {
+    use crate::coordinator::Response;
+    pending
+        .into_iter()
+        .map(|p| match p {
+            Ok(rx) => rx
+                .recv()
+                .unwrap_or_else(|_| Response::Error("worker dropped request".into())),
+            Err(resp) => resp,
+        })
+        .collect()
+}
+
+/// Submit + await one batch frame (the threaded runtime's blocking
+/// path; the event loop splits the two halves around its job batch).
+pub(crate) fn submit_batch(
+    svc: &Coordinator,
+    items: Vec<Result<crate::coordinator::Op, String>>,
+) -> Vec<crate::coordinator::Response> {
+    collect_batch(submit_batch_async(svc, items))
 }

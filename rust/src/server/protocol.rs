@@ -23,7 +23,17 @@
 //! Sample values are validated at the wire: a non-finite sample — or a
 //! JSON number that overflows `f32` to `±inf` — is rejected with a
 //! per-request error envelope before it can poison the index or the
-//! re-rank distances.
+//! re-rank distances. Batched ops (`hash_batch` / `insert_batch` /
+//! `query_batch`) validate per row: one bad row fails that row's entry
+//! in the batch envelope, not the frame.
+//!
+//! Framing itself — wire-mode negotiation, the newline scan, the
+//! length-prefix split, and the 8 MiB caps — lives in **one** place:
+//! the incremental [`Framer`]. Both server runtimes (the threaded
+//! `serve_stream` loop and the epoll event loop) push raw socket bytes
+//! into it and pull complete frames out, so the two formats can never
+//! drift between runtimes; clients read reply frames one at a time with
+//! [`read_frame`].
 
 use crate::coordinator::{Op, Response};
 use crate::json::{self, object, Value};
@@ -128,6 +138,271 @@ pub fn split_binary_frame(buf: &[u8]) -> Result<Option<usize>, String> {
     Ok(Some(4 + len))
 }
 
+// ------------------------------------------------- incremental framing
+
+/// What [`Framer::next`] produced.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FramerStep<'a> {
+    /// One complete frame payload: a JSON line without its newline (and
+    /// without a trailing `\r`), or a binary payload without its length
+    /// prefix. `wire` is the connection's negotiated format.
+    Frame {
+        /// the connection's negotiated wire format
+        wire: WireMode,
+        /// the frame payload (borrows the framer's buffer; consumed)
+        payload: &'a [u8],
+    },
+    /// An unrecoverable framing error (over-cap line, over-cap declared
+    /// binary length, or a binary frame truncated by EOF). The caller
+    /// must answer once with an error envelope in `wire`'s format and
+    /// close after flushing; the framer yields nothing further.
+    Fatal {
+        /// format to encode the final error envelope in
+        wire: WireMode,
+        /// what broke the framing
+        msg: String,
+    },
+    /// No complete frame buffered; push more bytes (or, after
+    /// [`Framer::push_eof`], the stream is fully drained).
+    Pending,
+}
+
+/// The single incremental framer both server runtimes consume: push raw
+/// socket bytes in, pull complete frames out.
+///
+/// Owns the whole per-connection framing state machine — wire-mode
+/// negotiation (`Probe` → JSON/binary on the first bytes), the resumable
+/// newline scan, the binary length-prefix split, and the
+/// [`MAX_FRAME_BYTES`] caps — so exactly one copy of these rules exists.
+///
+/// Contract:
+///
+/// * [`Framer::push`] appends bytes; [`Framer::push_eof`] marks the end
+///   of the stream (a final unterminated JSON line is still a frame; a
+///   binary frame cut off by EOF is a [`FramerStep::Fatal`]).
+/// * [`Framer::next`] yields each complete frame exactly once, in order,
+///   independent of how the bytes were chunked across `push` calls —
+///   byte-at-a-time and whole-buffer feeding decode identically (see
+///   `tests/framer_properties.rs`).
+/// * After a `Fatal` the framer is poisoned: `next` returns `Pending`
+///   forever (the framing cannot resync past the error).
+/// * [`Framer::compact`] drops the consumed prefix; call it once per
+///   read burst, not per frame, so a pipelined burst is memmoved once.
+#[derive(Debug, Default)]
+pub struct Framer {
+    buf: Vec<u8>,
+    /// first byte not yet consumed by a returned frame
+    start: usize,
+    /// resume offset of the newline scan (JSON mode; never rescans)
+    scan_from: usize,
+    /// negotiated mode (`None` until the first bytes decide)
+    mode: Option<WireMode>,
+    fatal: bool,
+    eof: bool,
+}
+
+impl Framer {
+    /// Fresh framer in the probe (pre-negotiation) state.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw stream bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Mark end-of-stream: unlocks the EOF tail rules (an unterminated
+    /// JSON line becomes a frame; a partial binary frame becomes fatal).
+    pub fn push_eof(&mut self) {
+        self.eof = true;
+    }
+
+    /// The negotiated wire mode, once the first bytes have decided it.
+    pub fn negotiated(&self) -> Option<WireMode> {
+        self.mode
+    }
+
+    /// The format to encode responses in: the negotiated mode, or JSON
+    /// while still probing (an unfinished negotiation can only be JSON
+    /// garbage — a proper prefix of the magic never completes a frame).
+    pub fn wire_mode(&self) -> WireMode {
+        self.mode.unwrap_or(WireMode::Json)
+    }
+
+    /// Whether a [`FramerStep::Fatal`] has been emitted.
+    pub fn is_fatal(&self) -> bool {
+        self.fatal
+    }
+
+    /// Bytes buffered but not yet consumed by a returned frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Drop the consumed prefix in one move. Call once per read burst.
+    pub fn compact(&mut self) {
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            // scan_from only tracks the JSON newline scan; on a binary
+            // connection it lags at the negotiation offset while frames
+            // advance `start` past it, so clamp instead of subtracting
+            // blindly (a bare subtraction underflows in debug builds)
+            self.scan_from = self.scan_from.max(self.start) - self.start;
+            self.start = 0;
+        }
+    }
+
+    /// Pull the next complete frame (or fatal framing error) out of the
+    /// buffered bytes.
+    pub fn next(&mut self) -> FramerStep<'_> {
+        if self.fatal {
+            return FramerStep::Pending;
+        }
+        if self.mode.is_none() {
+            match negotiate(&self.buf[self.start..]) {
+                Negotiation::NeedMore if !self.eof => return FramerStep::Pending,
+                // an unfinished negotiation at EOF can only be JSON
+                // garbage — fall through to the JSON tail handling
+                Negotiation::NeedMore | Negotiation::Json => self.mode = Some(WireMode::Json),
+                Negotiation::Binary => {
+                    self.start += BINARY_MAGIC.len();
+                    self.mode = Some(WireMode::Binary);
+                }
+            }
+            self.scan_from = self.start;
+        }
+        match self.mode.expect("negotiated above") {
+            WireMode::Json => self.next_json(),
+            WireMode::Binary => self.next_binary(),
+        }
+    }
+
+    fn fatal_step(&mut self, wire: WireMode, msg: String) -> FramerStep<'_> {
+        self.fatal = true;
+        FramerStep::Fatal { wire, msg }
+    }
+
+    fn next_json(&mut self) -> FramerStep<'_> {
+        if let Some(rel) = self.buf[self.scan_from..].iter().position(|&b| b == b'\n') {
+            let end = self.scan_from + rel;
+            let line_start = self.start;
+            let mut line_end = end;
+            if line_end > line_start && self.buf[line_end - 1] == b'\r' {
+                line_end -= 1;
+            }
+            if line_end - line_start > MAX_LINE_BYTES {
+                return self.fatal_step(WireMode::Json, "request line too long".into());
+            }
+            self.start = end + 1;
+            self.scan_from = self.start;
+            return FramerStep::Frame {
+                wire: WireMode::Json,
+                payload: &self.buf[line_start..line_end],
+            };
+        }
+        self.scan_from = self.buf.len();
+        if self.buf.len() - self.start > MAX_LINE_BYTES {
+            // a frame that drips past the cap without its newline can
+            // never be served
+            return self.fatal_step(WireMode::Json, "request line too long".into());
+        }
+        if self.eof && self.start < self.buf.len() {
+            // a final unterminated line is still a frame (clients may
+            // write-all then half-close)
+            let line_start = self.start;
+            self.start = self.buf.len();
+            return FramerStep::Frame {
+                wire: WireMode::Json,
+                payload: &self.buf[line_start..],
+            };
+        }
+        FramerStep::Pending
+    }
+
+    fn next_binary(&mut self) -> FramerStep<'_> {
+        match split_binary_frame(&self.buf[self.start..]) {
+            // oversized declared length: the framing cannot resync
+            Err(msg) => self.fatal_step(WireMode::Binary, msg),
+            Ok(Some(consumed)) => {
+                let payload_start = self.start + 4;
+                let payload_end = self.start + consumed;
+                self.start = payload_end;
+                FramerStep::Frame {
+                    wire: WireMode::Binary,
+                    payload: &self.buf[payload_start..payload_end],
+                }
+            }
+            Ok(None) => {
+                if self.eof && self.start < self.buf.len() {
+                    return self.fatal_step(
+                        WireMode::Binary,
+                        "truncated binary frame before eof".into(),
+                    );
+                }
+                FramerStep::Pending
+            }
+        }
+    }
+}
+
+/// Blocking-read one reply frame payload off a buffered stream in
+/// `wire`'s format — the client-side mirror of the server's [`Framer`]
+/// (clients read exactly one frame per outstanding request, so the
+/// push-based machine is unnecessary there). `Ok(None)` is EOF before a
+/// frame; an over-cap line/length is an `InvalidData` error. JSON
+/// payloads include the terminating newline (the decoder trims).
+pub fn read_frame<R: std::io::BufRead>(
+    reader: &mut R,
+    wire: WireMode,
+) -> std::io::Result<Option<Vec<u8>>> {
+    use std::io::{BufRead, ErrorKind, Read};
+    match wire {
+        WireMode::Json => {
+            // cap the reply line like the binary path caps its frames: a
+            // buggy/hostile peer streaming bytes without a newline must
+            // not grow this buffer without bound. The cap applies to the
+            // payload (the line without its newline) — a maximum-size
+            // reply the server is allowed to send must not be rejected
+            // here — so the take window is payload cap + newline + one
+            // over-cap sentinel byte
+            let mut line = String::new();
+            let n = (&mut *reader)
+                .take((MAX_FRAME_BYTES + 2) as u64)
+                .read_line(&mut line)?;
+            if n == 0 {
+                return Ok(None);
+            }
+            let payload_len = line.len() - usize::from(line.ends_with('\n'));
+            if payload_len > MAX_FRAME_BYTES {
+                return Err(std::io::Error::new(
+                    ErrorKind::InvalidData,
+                    format!("reply line exceeds the {MAX_FRAME_BYTES}-byte cap"),
+                ));
+            }
+            Ok(Some(line.into_bytes()))
+        }
+        WireMode::Binary => {
+            let mut len4 = [0u8; 4];
+            match reader.read_exact(&mut len4) {
+                Ok(()) => {}
+                Err(e) if e.kind() == ErrorKind::UnexpectedEof => return Ok(None),
+                Err(e) => return Err(e),
+            }
+            let len = u32::from_le_bytes(len4) as usize;
+            if len > MAX_FRAME_BYTES {
+                return Err(std::io::Error::new(
+                    ErrorKind::InvalidData,
+                    format!("reply frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte cap"),
+                ));
+            }
+            let mut payload = vec![0u8; len];
+            reader.read_exact(&mut payload)?;
+            Ok(Some(payload))
+        }
+    }
+}
+
 // binary request op tags
 const OP_HASH: u8 = 1;
 const OP_INSERT: u8 = 2;
@@ -138,6 +413,9 @@ const OP_SNAPSHOT: u8 = 6;
 const OP_PING: u8 = 7;
 const OP_POINTS: u8 = 8;
 const OP_SHUTDOWN: u8 = 9;
+const OP_HASH_BATCH: u8 = 10;
+const OP_INSERT_BATCH: u8 = 11;
+const OP_QUERY_BATCH: u8 = 12;
 
 // binary reply type tags
 const REPLY_SIGNATURE: u8 = 1;
@@ -149,6 +427,7 @@ const REPLY_SNAPSHOT: u8 = 6;
 const REPLY_PONG: u8 = 7;
 const REPLY_POINTS: u8 = 8;
 const REPLY_SHUTTING_DOWN: u8 = 9;
+const REPLY_BATCH: u8 = 10;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -172,6 +451,12 @@ pub struct Request {
 pub enum RequestBody {
     /// a coordinator operation
     Op(Op),
+    /// a batched set of coordinator operations decoded from one
+    /// `hash_batch` / `insert_batch` / `query_batch` frame; per-item
+    /// decode failures ride as `Err` entries, so one bad row fails that
+    /// row's slot in the batch envelope, not the frame. Never empty
+    /// (an empty batch is a frame-level error).
+    Batch(Vec<Result<Op, String>>),
     /// the service's published sample points
     Points,
     /// graceful server shutdown
@@ -202,6 +487,22 @@ fn f32_row(v: &Value) -> Result<Vec<f32>, String> {
 
 fn need<'v>(v: &'v Value, key: &str) -> Result<&'v Value, String> {
     v.get(key).ok_or_else(|| format!("missing field `{key}`"))
+}
+
+/// The `rows` field of a JSON batch frame: a non-empty array of sample
+/// rows, yielded one `Result` per row so a bad row (non-numeric or
+/// non-finite entries) becomes that row's `Err` slot instead of failing
+/// the frame.
+fn batch_rows_json<'v>(
+    v: &'v Value,
+) -> Result<impl Iterator<Item = Result<Vec<f32>, String>> + 'v, String> {
+    let rows = need(v, "rows")?
+        .as_array()
+        .ok_or("`rows` must be an array")?;
+    if rows.is_empty() {
+        return Err("batch must carry at least one row".into());
+    }
+    Ok(rows.iter().map(f32_row))
 }
 
 /// A rejected request frame. Carries the `req_id` recovered from the
@@ -259,6 +560,51 @@ pub fn parse_request(line: &str) -> Result<Request, RequestError> {
             "ping" => RequestBody::Op(Op::Ping),
             "points" => RequestBody::Points,
             "shutdown" => RequestBody::Shutdown,
+            "hash_batch" => RequestBody::Batch(
+                batch_rows_json(&v)?
+                    .map(|row| row.map(|samples| Op::Hash { samples }))
+                    .collect(),
+            ),
+            "insert_batch" => {
+                let ids = need(&v, "ids")?
+                    .as_array()
+                    .ok_or("`ids` must be an array")?;
+                let rows = need(&v, "rows")?
+                    .as_array()
+                    .ok_or("`rows` must be an array")?;
+                if ids.len() != rows.len() {
+                    return Err(format!(
+                        "batch declares {} ids but {} rows",
+                        ids.len(),
+                        rows.len()
+                    ));
+                }
+                if rows.is_empty() {
+                    return Err("batch must carry at least one row".into());
+                }
+                RequestBody::Batch(
+                    ids.iter()
+                        .zip(rows)
+                        .map(|(id, row)| {
+                            let id = id
+                                .as_u64()
+                                .ok_or_else(|| "`ids` must contain u64s".to_string())?;
+                            Ok(Op::Insert {
+                                id,
+                                samples: f32_row(row)?,
+                            })
+                        })
+                        .collect(),
+                )
+            }
+            "query_batch" => {
+                let k = need(&v, "k")?.as_usize().ok_or("`k` must be a usize")?;
+                RequestBody::Batch(
+                    batch_rows_json(&v)?
+                        .map(|row| row.map(|samples| Op::Query { samples, k }))
+                        .collect(),
+                )
+            }
             other => return Err(format!("unknown op `{other}`")),
         })
     })()
@@ -353,6 +699,62 @@ impl<'a> BinReader<'a> {
         }
         Ok(out)
     }
+
+    /// `count:u32, dim:u32` header of a batch op body. Both must be
+    /// positive — a zero count (or a zero dim, which would let a huge
+    /// count size allocations from nothing) is a frame-level error.
+    fn batch_header(&mut self) -> Result<(usize, usize), String> {
+        let count = self.u32()? as usize;
+        let dim = self.u32()? as usize;
+        if count == 0 {
+            return Err("batch count must be positive".into());
+        }
+        if dim == 0 {
+            return Err("batch dim must be positive".into());
+        }
+        Ok((count, dim))
+    }
+
+    /// `count` contiguous rows of `dim` raw `f32`s. The declared
+    /// `count×dim` extent is checked against the remaining payload
+    /// *before* any allocation is sized from it (an extent past the
+    /// frame cap therefore always fails here, never allocates); a row
+    /// containing a non-finite value becomes that row's `Err` slot —
+    /// its bytes are still consumed so the following rows decode.
+    fn batch_rows(
+        &mut self,
+        count: usize,
+        dim: usize,
+    ) -> Result<Vec<Result<Vec<f32>, String>>, String> {
+        let bytes = count.saturating_mul(dim).saturating_mul(4);
+        if self.remaining() < bytes {
+            return Err(format!(
+                "batch declares {count}x{dim} samples ({bytes} bytes) but only {} \
+                 payload bytes remain",
+                self.remaining()
+            ));
+        }
+        let mut rows = Vec::with_capacity(count);
+        for r in 0..count {
+            let mut row = Vec::with_capacity(dim);
+            let mut bad: Option<String> = None;
+            for i in 0..dim {
+                let v = self.f32()?;
+                if !v.is_finite() && bad.is_none() {
+                    bad = Some(format!(
+                        "row {r}: sample[{i}] is not a finite f32 \
+                         (non-finite samples are rejected)"
+                    ));
+                }
+                row.push(v);
+            }
+            rows.push(match bad {
+                Some(msg) => Err(msg),
+                None => Ok(row),
+            });
+        }
+        Ok(rows)
+    }
 }
 
 /// Build one binary frame: 4-byte LE length prefix + the payload written
@@ -430,6 +832,44 @@ pub fn parse_request_binary(payload: &[u8]) -> Result<Request, RequestError> {
             OP_PING => RequestBody::Op(Op::Ping),
             OP_POINTS => RequestBody::Points,
             OP_SHUTDOWN => RequestBody::Shutdown,
+            OP_HASH_BATCH => {
+                let (count, dim) = rd.batch_header()?;
+                RequestBody::Batch(
+                    rd.batch_rows(count, dim)?
+                        .into_iter()
+                        .map(|row| row.map(|samples| Op::Hash { samples }))
+                        .collect(),
+                )
+            }
+            OP_INSERT_BATCH => {
+                let (count, dim) = rd.batch_header()?;
+                if rd.remaining() < count.saturating_mul(8) {
+                    return Err(format!(
+                        "batch declares {count} ids but only {} payload bytes remain",
+                        rd.remaining()
+                    ));
+                }
+                let mut ids = Vec::with_capacity(count);
+                for _ in 0..count {
+                    ids.push(rd.u64()?);
+                }
+                RequestBody::Batch(
+                    ids.into_iter()
+                        .zip(rd.batch_rows(count, dim)?)
+                        .map(|(id, row)| row.map(|samples| Op::Insert { id, samples }))
+                        .collect(),
+                )
+            }
+            OP_QUERY_BATCH => {
+                let (count, dim) = rd.batch_header()?;
+                let rows = rd.batch_rows(count, dim)?;
+                let k = rd.u64()? as usize;
+                RequestBody::Batch(
+                    rows.into_iter()
+                        .map(|row| row.map(|samples| Op::Query { samples, k }))
+                        .collect(),
+                )
+            }
             other => return Err(format!("unknown binary op tag {other}")),
         };
         if !rd.finished() {
@@ -444,7 +884,59 @@ pub fn parse_request_binary(payload: &[u8]) -> Result<Request, RequestError> {
     Ok(Request { req_id, body })
 }
 
+/// Decode one framed request payload in `wire`'s format — the shared
+/// step immediately after framing (UTF-8 and empty-line checks for
+/// JSON, then the per-format parser), so both runtimes keep **one**
+/// copy of the malformed-payload rules just as they share one
+/// [`Framer`] for the bytes themselves.
+pub fn parse_frame_payload(wire: WireMode, payload: &[u8]) -> Result<Request, RequestError> {
+    match wire {
+        WireMode::Json => {
+            let line = std::str::from_utf8(payload).map_err(|_| RequestError {
+                req_id: None,
+                msg: "invalid utf-8".into(),
+            })?;
+            if line.trim().is_empty() {
+                return Err(RequestError {
+                    req_id: None,
+                    msg: "empty request".into(),
+                });
+            }
+            parse_request(line)
+        }
+        WireMode::Binary => parse_request_binary(payload),
+    }
+}
+
 // -------------------------------------------------------- JSON encoders
+
+/// The largest integer the JSON wire carries exactly (the f64 mantissa
+/// limit; the binary format has no such bound).
+const MAX_JSON_SAFE_INT: u64 = 1 << 53;
+
+/// An id in `resp` that the JSON number carrier would silently round,
+/// if any. Full-width ids enter the corpus over the binary wire; a JSON
+/// connection must get a correlated error for such a response instead
+/// of a corrupted number its own decoder would then reject.
+fn json_unrepresentable_id(resp: &Response) -> Option<u64> {
+    match resp {
+        Response::Inserted { id } | Response::Removed { id } if *id > MAX_JSON_SAFE_INT => {
+            Some(*id)
+        }
+        Response::Hits(hits) => hits
+            .iter()
+            .map(|h| h.id)
+            .find(|&id| id > MAX_JSON_SAFE_INT),
+        _ => None,
+    }
+}
+
+fn json_id_error(id: u64) -> String {
+    format!(
+        "response carries id {id}, which exceeds 2^53 and cannot ride a JSON number \
+         exactly; use the binary (FBIN1) wire format for full-width ids"
+    )
+}
 
 fn envelope(req_id: Option<u64>, mut fields: Vec<(&str, Value)>) -> String {
     fields.push(("ok", true.into()));
@@ -463,74 +955,92 @@ pub fn encode_error(req_id: Option<u64>, msg: &str) -> String {
     object(fields).to_json()
 }
 
+/// The `type` + body fields of a successful coordinator response —
+/// shared by the single-op envelope and the per-item entries of a batch
+/// envelope (so batch items serialize byte-identically to single ops).
+fn response_fields(resp: &Response) -> Vec<(&'static str, Value)> {
+    match resp {
+        Response::Signature(sig) => vec![
+            ("type", "signature".into()),
+            (
+                "signature",
+                // serialized straight from the shared flat block — no
+                // per-response Vec<i32> clone on this path
+                Value::Array(
+                    sig.as_slice()
+                        .iter()
+                        .map(|&x| Value::Number(x as f64))
+                        .collect(),
+                ),
+            ),
+        ],
+        Response::Inserted { id } => {
+            vec![("type", "inserted".into()), ("id", (*id as usize).into())]
+        }
+        Response::Hits(hits) => vec![
+            ("type", "hits".into()),
+            (
+                "hits",
+                Value::Array(
+                    hits.iter()
+                        .map(|h| {
+                            object(vec![
+                                ("id", (h.id as usize).into()),
+                                ("distance", h.distance.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ],
+        Response::Removed { id } => {
+            vec![("type", "removed".into()), ("id", (*id as usize).into())]
+        }
+        Response::Metrics(m) => vec![("type", "metrics".into()), ("metrics", m.to_value())],
+        Response::Snapshotted { path, bytes } => vec![
+            ("type", "snapshot".into()),
+            ("path", path.as_str().into()),
+            ("bytes", (*bytes as usize).into()),
+        ],
+        Response::Pong { indexed } => vec![
+            ("type", "pong".into()),
+            ("indexed", (*indexed as usize).into()),
+        ],
+        Response::Error(_) => unreachable!("error envelopes are encoded by the callers"),
+    }
+}
+
 /// Encode a coordinator response line (JSON).
 pub fn encode_response(req_id: Option<u64>, resp: &Response) -> String {
     match resp {
-        Response::Signature(sig) => envelope(
-            req_id,
-            vec![
-                ("type", "signature".into()),
-                (
-                    "signature",
-                    // serialized straight from the shared flat block —
-                    // no per-response Vec<i32> clone on this path
-                    Value::Array(
-                        sig.as_slice()
-                            .iter()
-                            .map(|&x| Value::Number(x as f64))
-                            .collect(),
-                    ),
-                ),
-            ],
-        ),
-        Response::Inserted { id } => envelope(
-            req_id,
-            vec![("type", "inserted".into()), ("id", (*id as usize).into())],
-        ),
-        Response::Hits(hits) => envelope(
-            req_id,
-            vec![
-                ("type", "hits".into()),
-                (
-                    "hits",
-                    Value::Array(
-                        hits.iter()
-                            .map(|h| {
-                                object(vec![
-                                    ("id", (h.id as usize).into()),
-                                    ("distance", h.distance.into()),
-                                ])
-                            })
-                            .collect(),
-                    ),
-                ),
-            ],
-        ),
-        Response::Removed { id } => envelope(
-            req_id,
-            vec![("type", "removed".into()), ("id", (*id as usize).into())],
-        ),
-        Response::Metrics(m) => envelope(
-            req_id,
-            vec![("type", "metrics".into()), ("metrics", m.to_value())],
-        ),
-        Response::Snapshotted { path, bytes } => envelope(
-            req_id,
-            vec![
-                ("type", "snapshot".into()),
-                ("path", path.as_str().into()),
-                ("bytes", (*bytes as usize).into()),
-            ],
-        ),
-        Response::Pong { indexed } => envelope(
-            req_id,
-            vec![
-                ("type", "pong".into()),
-                ("indexed", (*indexed as usize).into()),
-            ],
-        ),
         Response::Error(e) => encode_error(req_id, e),
+        _ => envelope(req_id, response_fields(resp)),
     }
+}
+
+/// Encode a batch response line (JSON): one envelope whose `results`
+/// array holds a per-item envelope (`{"ok":true, …}` with the same body
+/// as the single-op response, or `{"ok":false,"error":…}`) in request
+/// row order.
+pub fn encode_batch_response(req_id: Option<u64>, items: &[Response]) -> String {
+    let results = items
+        .iter()
+        .map(|resp| match resp {
+            Response::Error(e) => object(vec![
+                ("ok", false.into()),
+                ("error", e.as_str().into()),
+            ]),
+            _ => {
+                let mut fields = response_fields(resp);
+                fields.push(("ok", true.into()));
+                object(fields)
+            }
+        })
+        .collect();
+    envelope(
+        req_id,
+        vec![("type", "batch".into()), ("results", Value::Array(results))],
+    )
 }
 
 /// Encode the transport-level `points` response (JSON).
@@ -562,6 +1072,56 @@ pub fn encode_error_binary(req_id: Option<u64>, msg: &str) -> Vec<u8> {
     })
 }
 
+/// Append a successful reply's `type:u8` + body (everything after the
+/// status/flags/`req_id` header) — shared by the single-op frame and the
+/// per-item entries of a batch frame, so batch items serialize
+/// byte-identically to single ops.
+fn put_reply_body(b: &mut Vec<u8>, resp: &Response) {
+    match resp {
+        Response::Signature(sig) => {
+            b.push(REPLY_SIGNATURE);
+            // straight off the shared [B×K] block: count + raw i32s
+            let s = sig.as_slice();
+            b.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            for &v in s {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Response::Inserted { id } => {
+            b.push(REPLY_INSERTED);
+            b.extend_from_slice(&id.to_le_bytes());
+        }
+        Response::Hits(hits) => {
+            b.push(REPLY_HITS);
+            b.extend_from_slice(&(hits.len() as u32).to_le_bytes());
+            for h in hits {
+                b.extend_from_slice(&h.id.to_le_bytes());
+                b.extend_from_slice(&h.distance.to_le_bytes());
+            }
+        }
+        Response::Removed { id } => {
+            b.push(REPLY_REMOVED);
+            b.extend_from_slice(&id.to_le_bytes());
+        }
+        Response::Metrics(m) => {
+            // metrics stay a JSON object inside the binary carrier:
+            // they are diagnostic, schema-fluid, and tiny
+            b.push(REPLY_METRICS);
+            put_str(b, &m.to_value().to_json());
+        }
+        Response::Snapshotted { path, bytes } => {
+            b.push(REPLY_SNAPSHOT);
+            put_str(b, path);
+            b.extend_from_slice(&bytes.to_le_bytes());
+        }
+        Response::Pong { indexed } => {
+            b.push(REPLY_PONG);
+            b.extend_from_slice(&indexed.to_le_bytes());
+        }
+        Response::Error(_) => unreachable!("error envelopes are encoded by the callers"),
+    }
+}
+
 /// Encode a coordinator response frame (binary, length-prefixed).
 pub fn encode_response_binary(req_id: Option<u64>, resp: &Response) -> Vec<u8> {
     if let Response::Error(e) = resp {
@@ -569,48 +1129,30 @@ pub fn encode_response_binary(req_id: Option<u64>, resp: &Response) -> Vec<u8> {
     }
     bin_frame(|b| {
         put_tag_and_req_id(b, STATUS_OK, req_id);
-        match resp {
-            Response::Signature(sig) => {
-                b.push(REPLY_SIGNATURE);
-                // straight off the shared [B×K] block: count + raw i32s
-                let s = sig.as_slice();
-                b.extend_from_slice(&(s.len() as u32).to_le_bytes());
-                for &v in s {
-                    b.extend_from_slice(&v.to_le_bytes());
+        put_reply_body(b, resp);
+    })
+}
+
+/// Encode a batch response frame (binary): `type:u8 = batch`,
+/// `count:u32`, then per item a `status:u8` followed by either the
+/// single-op reply body (ok) or a length-prefixed message (err), in
+/// request row order.
+pub fn encode_batch_response_binary(req_id: Option<u64>, items: &[Response]) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, STATUS_OK, req_id);
+        b.push(REPLY_BATCH);
+        b.extend_from_slice(&(items.len() as u32).to_le_bytes());
+        for resp in items {
+            match resp {
+                Response::Error(e) => {
+                    b.push(STATUS_ERR);
+                    put_str(b, e);
+                }
+                _ => {
+                    b.push(STATUS_OK);
+                    put_reply_body(b, resp);
                 }
             }
-            Response::Inserted { id } => {
-                b.push(REPLY_INSERTED);
-                b.extend_from_slice(&id.to_le_bytes());
-            }
-            Response::Hits(hits) => {
-                b.push(REPLY_HITS);
-                b.extend_from_slice(&(hits.len() as u32).to_le_bytes());
-                for h in hits {
-                    b.extend_from_slice(&h.id.to_le_bytes());
-                    b.extend_from_slice(&h.distance.to_le_bytes());
-                }
-            }
-            Response::Removed { id } => {
-                b.push(REPLY_REMOVED);
-                b.extend_from_slice(&id.to_le_bytes());
-            }
-            Response::Metrics(m) => {
-                // metrics stay a JSON object inside the binary carrier:
-                // they are diagnostic, schema-fluid, and tiny
-                b.push(REPLY_METRICS);
-                put_str(b, &m.to_value().to_json());
-            }
-            Response::Snapshotted { path, bytes } => {
-                b.push(REPLY_SNAPSHOT);
-                put_str(b, path);
-                b.extend_from_slice(&bytes.to_le_bytes());
-            }
-            Response::Pong { indexed } => {
-                b.push(REPLY_PONG);
-                b.extend_from_slice(&indexed.to_le_bytes());
-            }
-            Response::Error(_) => unreachable!("handled above"),
         }
     })
 }
@@ -681,6 +1223,14 @@ fn response_payload_min(mode: WireMode, resp: &Response) -> usize {
 /// an exact size bound *before* serialization, so the hostile path never
 /// builds the tens-of-MB frame it is about to discard.
 pub fn encode_response_frame(mode: WireMode, req_id: Option<u64>, resp: &Response) -> Vec<u8> {
+    // a full-width id (inserted over the binary wire) cannot ride a
+    // JSON number without rounding — degrade to a correlated error
+    // rather than corrupt the id on the wire
+    if mode == WireMode::Json {
+        if let Some(id) = json_unrepresentable_id(resp) {
+            return encode_error_frame(mode, req_id, &json_id_error(id));
+        }
+    }
     let floor = response_payload_min(mode, resp);
     if floor > MAX_FRAME_BYTES {
         return encode_error_frame(
@@ -695,6 +1245,61 @@ pub fn encode_response_frame(mode: WireMode, req_id: Option<u64>, resp: &Respons
     let frame = match mode {
         WireMode::Json => json_frame(encode_response(req_id, resp)),
         WireMode::Binary => encode_response_binary(req_id, resp),
+    };
+    let payload = framed_payload_len(mode, &frame);
+    if payload > MAX_FRAME_BYTES {
+        return encode_error_frame(
+            mode,
+            req_id,
+            &format!(
+                "response too large ({payload} bytes > {MAX_FRAME_BYTES}-byte frame cap); \
+                 request fewer results per op"
+            ),
+        );
+    }
+    frame
+}
+
+/// Encode a batch response as complete wire bytes for `mode`, with the
+/// same oversize guard as [`encode_response_frame`]: a batch whose
+/// payload cannot fit one frame degrades to a *correlated per-request
+/// error envelope* (the client retries with fewer rows per frame), and
+/// provably-oversized batches are vetoed before serialization.
+pub fn encode_batch_response_frame(
+    mode: WireMode,
+    req_id: Option<u64>,
+    items: &[Response],
+) -> Vec<u8> {
+    let floor: usize = items.iter().map(|r| response_payload_min(mode, r)).sum();
+    if floor > MAX_FRAME_BYTES {
+        return encode_error_frame(
+            mode,
+            req_id,
+            &format!(
+                "response too large (at least {floor} bytes > {MAX_FRAME_BYTES}-byte frame \
+                 cap); request fewer results per op"
+            ),
+        );
+    }
+    let frame = match mode {
+        WireMode::Json => {
+            // per-item JSON-representability guard: an item carrying a
+            // full-width id fails only its own slot (same discipline as
+            // every other per-item error), the neighbours still answer
+            if items.iter().any(|r| json_unrepresentable_id(r).is_some()) {
+                let safe: Vec<Response> = items
+                    .iter()
+                    .map(|r| match json_unrepresentable_id(r) {
+                        Some(id) => Response::Error(json_id_error(id)),
+                        None => r.clone(),
+                    })
+                    .collect();
+                json_frame(encode_batch_response(req_id, &safe))
+            } else {
+                json_frame(encode_batch_response(req_id, items))
+            }
+        }
+        WireMode::Binary => encode_batch_response_binary(req_id, items),
     };
     let payload = framed_payload_len(mode, &frame);
     if payload > MAX_FRAME_BYTES {
@@ -772,6 +1377,10 @@ pub enum Reply {
     Points(Vec<f64>),
     /// `shutdown` ack
     ShuttingDown,
+    /// `hash_batch` / `insert_batch` / `query_batch` result: one entry
+    /// per request row, in row order — a typed reply or that row's
+    /// server-side error
+    Batch(Vec<Result<Reply, String>>),
 }
 
 /// Decode one JSON reply line into `(req_id, server result)`. The outer
@@ -796,13 +1405,21 @@ pub fn decode_reply(line: &str) -> Result<(Option<u64>, Result<Reply, String>), 
             .to_string();
         return Ok((req_id, Err(msg)));
     }
+    Ok((req_id, Ok(decode_reply_value(&v, true)?)))
+}
+
+/// Decode the typed body of a successful JSON reply — shared by the
+/// top-level envelope and batch items. `allow_batch` is false inside a
+/// batch, so a malformed/hostile nested batch cannot recurse the
+/// decoder.
+fn decode_reply_value(v: &Value, allow_batch: bool) -> Result<Reply, String> {
     let ty = v
         .get("type")
         .and_then(Value::as_str)
         .ok_or("reply missing string field `type`")?;
     let reply = match ty {
         "signature" => Reply::Signature(
-            need(&v, "signature")?
+            need(v, "signature")?
                 .as_array()
                 .ok_or("`signature` must be an array")?
                 .iter()
@@ -814,10 +1431,10 @@ pub fn decode_reply(line: &str) -> Result<(Option<u64>, Result<Reply, String>), 
                 .collect::<Result<_, _>>()?,
         ),
         "inserted" => Reply::Inserted {
-            id: need(&v, "id")?.as_u64().ok_or("`id` must be a u64")?,
+            id: need(v, "id")?.as_u64().ok_or("`id` must be a u64")?,
         },
         "hits" => Reply::Hits(
-            need(&v, "hits")?
+            need(v, "hits")?
                 .as_array()
                 .ok_or("`hits` must be an array")?
                 .iter()
@@ -832,23 +1449,23 @@ pub fn decode_reply(line: &str) -> Result<(Option<u64>, Result<Reply, String>), 
                 .collect::<Result<_, _>>()?,
         ),
         "removed" => Reply::Removed {
-            id: need(&v, "id")?.as_u64().ok_or("`id` must be a u64")?,
+            id: need(v, "id")?.as_u64().ok_or("`id` must be a u64")?,
         },
-        "metrics" => Reply::Metrics(need(&v, "metrics")?.clone()),
+        "metrics" => Reply::Metrics(need(v, "metrics")?.clone()),
         "snapshot" => Reply::Snapshotted {
-            path: need(&v, "path")?
+            path: need(v, "path")?
                 .as_str()
                 .ok_or("`path` must be a string")?
                 .to_string(),
-            bytes: need(&v, "bytes")?.as_u64().ok_or("`bytes` must be a u64")?,
+            bytes: need(v, "bytes")?.as_u64().ok_or("`bytes` must be a u64")?,
         },
         "pong" => Reply::Pong {
-            indexed: need(&v, "indexed")?
+            indexed: need(v, "indexed")?
                 .as_u64()
                 .ok_or("`indexed` must be a u64")?,
         },
         "points" => Reply::Points(
-            need(&v, "points")?
+            need(v, "points")?
                 .as_array()
                 .ok_or("`points` must be an array")?
                 .iter()
@@ -859,9 +1476,33 @@ pub fn decode_reply(line: &str) -> Result<(Option<u64>, Result<Reply, String>), 
                 .collect::<Result<_, _>>()?,
         ),
         "shutting_down" => Reply::ShuttingDown,
+        "batch" if allow_batch => Reply::Batch(
+            need(v, "results")?
+                .as_array()
+                .ok_or("`results` must be an array")?
+                .iter()
+                .map(|item| -> Result<Result<Reply, String>, String> {
+                    let ok = item
+                        .get("ok")
+                        .and_then(|b| match b {
+                            Value::Bool(b) => Some(*b),
+                            _ => None,
+                        })
+                        .ok_or("batch item missing bool field `ok`")?;
+                    if !ok {
+                        return Ok(Err(item
+                            .get("error")
+                            .and_then(Value::as_str)
+                            .unwrap_or("unspecified server error")
+                            .to_string()));
+                    }
+                    Ok(Ok(decode_reply_value(item, false)?))
+                })
+                .collect::<Result<_, _>>()?,
+        ),
         other => return Err(format!("unknown reply type `{other}`")),
     };
-    Ok((req_id, Ok(reply)))
+    Ok(reply)
 }
 
 /// Decode one binary reply payload into `(req_id, server result)` — the
@@ -887,6 +1528,20 @@ pub fn decode_reply_binary(
     if status != STATUS_OK {
         return Err(format!("unknown reply status {status}"));
     }
+    let reply = decode_reply_body(&mut rd, true)?;
+    if !rd.finished() {
+        return Err(format!(
+            "{} trailing bytes after the reply body",
+            rd.remaining()
+        ));
+    }
+    Ok((req_id, Ok(reply)))
+}
+
+/// Decode one binary reply `type:u8` + body — shared by the top-level
+/// frame and batch items. `allow_batch` is false inside a batch, so a
+/// malformed/hostile nested batch cannot recurse the decoder.
+fn decode_reply_body(rd: &mut BinReader<'_>, allow_batch: bool) -> Result<Reply, String> {
     let ty = rd.u8()?;
     let reply = match ty {
         REPLY_SIGNATURE => {
@@ -936,15 +1591,26 @@ pub fn decode_reply_binary(
             Reply::Points(p)
         }
         REPLY_SHUTTING_DOWN => Reply::ShuttingDown,
+        REPLY_BATCH if allow_batch => {
+            let n = rd.u32()? as usize;
+            // each item carries at least a status byte + one body byte
+            if rd.remaining() < n.saturating_mul(2) {
+                return Err(format!("batch declares {n} items, frame truncated"));
+            }
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let status = rd.u8()?;
+                match status {
+                    STATUS_ERR => items.push(Err(rd.str_()?.to_string())),
+                    STATUS_OK => items.push(Ok(decode_reply_body(rd, false)?)),
+                    other => return Err(format!("unknown batch item status {other}")),
+                }
+            }
+            Reply::Batch(items)
+        }
         other => return Err(format!("unknown binary reply type {other}")),
     };
-    if !rd.finished() {
-        return Err(format!(
-            "{} trailing bytes after the reply body",
-            rd.remaining()
-        ));
-    }
-    Ok((req_id, Ok(reply)))
+    Ok(reply)
 }
 
 // ------------------------------------------------ JSON request builders
@@ -1014,6 +1680,54 @@ pub fn encode_snapshot(req_id: Option<u64>, path: &str) -> String {
     )
 }
 
+/// `rows.len()/dim` nested sample arrays from one contiguous buffer.
+fn rows_value(rows: &[f32], dim: usize) -> Value {
+    Value::Array(rows.chunks(dim.max(1)).map(samples_value).collect())
+}
+
+fn ids_value(ids: &[u64]) -> Value {
+    Value::Array(ids.iter().map(|&id| Value::Number(id as f64)).collect())
+}
+
+/// Encode a `hash_batch` request line (JSON). `rows` is
+/// `rows.len()/dim` contiguous sample rows.
+pub fn encode_hash_batch(req_id: Option<u64>, rows: &[f32], dim: usize) -> String {
+    request_envelope(
+        req_id,
+        vec![("op", "hash_batch".into()), ("rows", rows_value(rows, dim))],
+    )
+}
+
+/// Encode an `insert_batch` request line (JSON). Ids ride JSON numbers,
+/// so the 2^53 precision limit applies (use binary for full-width ids).
+pub fn encode_insert_batch(
+    req_id: Option<u64>,
+    ids: &[u64],
+    rows: &[f32],
+    dim: usize,
+) -> String {
+    request_envelope(
+        req_id,
+        vec![
+            ("op", "insert_batch".into()),
+            ("ids", ids_value(ids)),
+            ("rows", rows_value(rows, dim)),
+        ],
+    )
+}
+
+/// Encode a `query_batch` request line (JSON); one `k` for every row.
+pub fn encode_query_batch(req_id: Option<u64>, rows: &[f32], dim: usize, k: usize) -> String {
+    request_envelope(
+        req_id,
+        vec![
+            ("op", "query_batch".into()),
+            ("rows", rows_value(rows, dim)),
+            ("k", k.into()),
+        ],
+    )
+}
+
 // ---------------------------------------------- binary request builders
 
 /// Encode a `hash` request frame (binary).
@@ -1076,6 +1790,62 @@ pub fn encode_snapshot_binary(req_id: Option<u64>, path: &str) -> Vec<u8> {
     })
 }
 
+/// `count:u32, dim:u32` + the contiguous `f32` rows of a batch body.
+fn put_batch_rows(b: &mut Vec<u8>, rows: &[f32], dim: usize) {
+    let count = if dim == 0 { 0 } else { rows.len() / dim };
+    b.extend_from_slice(&(count as u32).to_le_bytes());
+    b.extend_from_slice(&(dim as u32).to_le_bytes());
+    for &s in rows {
+        b.extend_from_slice(&s.to_le_bytes());
+    }
+}
+
+/// Encode a `hash_batch` request frame (binary): op, count, dim, then
+/// `count×dim` contiguous raw `f32` samples.
+pub fn encode_hash_batch_binary(req_id: Option<u64>, rows: &[f32], dim: usize) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_HASH_BATCH, req_id);
+        put_batch_rows(b, rows, dim);
+    })
+}
+
+/// Encode an `insert_batch` request frame (binary): op, count, dim,
+/// `count` native `u64` ids, then the contiguous rows. Full-width ids —
+/// no 2^53 limit.
+pub fn encode_insert_batch_binary(
+    req_id: Option<u64>,
+    ids: &[u64],
+    rows: &[f32],
+    dim: usize,
+) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_INSERT_BATCH, req_id);
+        b.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+        b.extend_from_slice(&(dim as u32).to_le_bytes());
+        for id in ids {
+            b.extend_from_slice(&id.to_le_bytes());
+        }
+        for &s in rows {
+            b.extend_from_slice(&s.to_le_bytes());
+        }
+    })
+}
+
+/// Encode a `query_batch` request frame (binary): op, count, dim, the
+/// contiguous rows, then one `k:u64` for every row.
+pub fn encode_query_batch_binary(
+    req_id: Option<u64>,
+    rows: &[f32],
+    dim: usize,
+    k: usize,
+) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_QUERY_BATCH, req_id);
+        put_batch_rows(b, rows, dim);
+        b.extend_from_slice(&(k as u64).to_le_bytes());
+    })
+}
+
 // --------------------------------------- mode-dispatch request builders
 
 /// Encode a `hash` request as complete wire bytes for `mode`.
@@ -1133,6 +1903,47 @@ pub fn encode_snapshot_frame(mode: WireMode, req_id: Option<u64>, path: &str) ->
     match mode {
         WireMode::Json => json_frame(encode_snapshot(req_id, path)),
         WireMode::Binary => encode_snapshot_binary(req_id, path),
+    }
+}
+
+/// Encode a `hash_batch` request as complete wire bytes for `mode`.
+pub fn encode_hash_batch_frame(
+    mode: WireMode,
+    req_id: Option<u64>,
+    rows: &[f32],
+    dim: usize,
+) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_hash_batch(req_id, rows, dim)),
+        WireMode::Binary => encode_hash_batch_binary(req_id, rows, dim),
+    }
+}
+
+/// Encode an `insert_batch` request as complete wire bytes for `mode`.
+pub fn encode_insert_batch_frame(
+    mode: WireMode,
+    req_id: Option<u64>,
+    ids: &[u64],
+    rows: &[f32],
+    dim: usize,
+) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_insert_batch(req_id, ids, rows, dim)),
+        WireMode::Binary => encode_insert_batch_binary(req_id, ids, rows, dim),
+    }
+}
+
+/// Encode a `query_batch` request as complete wire bytes for `mode`.
+pub fn encode_query_batch_frame(
+    mode: WireMode,
+    req_id: Option<u64>,
+    rows: &[f32],
+    dim: usize,
+    k: usize,
+) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_query_batch(req_id, rows, dim, k)),
+        WireMode::Binary => encode_query_batch_binary(req_id, rows, dim, k),
     }
 }
 
@@ -1570,5 +2381,473 @@ mod tests {
         assert_eq!(WireMode::parse("carrier-pigeon"), None);
         assert_eq!(WireMode::Json.as_str(), "json");
         assert_eq!(WireMode::Binary.as_str(), "binary");
+    }
+
+    /// Drain every pending frame/fatal out of a framer.
+    fn drain(f: &mut Framer) -> (Vec<(WireMode, Vec<u8>)>, Option<String>) {
+        let mut frames = Vec::new();
+        loop {
+            match f.next() {
+                FramerStep::Frame { wire, payload } => frames.push((wire, payload.to_vec())),
+                FramerStep::Fatal { msg, .. } => return (frames, Some(msg)),
+                FramerStep::Pending => return (frames, None),
+            }
+        }
+    }
+
+    #[test]
+    fn framer_json_basics() {
+        let mut f = Framer::new();
+        f.push(b"{\"op\":\"ping\"}\r\n{\"op\":\"points\"}\n tail");
+        let (frames, fatal) = drain(&mut f);
+        assert_eq!(fatal, None);
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].0, WireMode::Json);
+        assert_eq!(frames[0].1, b"{\"op\":\"ping\"}".to_vec(), "CR stripped");
+        assert_eq!(frames[1].1, b"{\"op\":\"points\"}".to_vec());
+        assert_eq!(f.negotiated(), Some(WireMode::Json));
+        assert_eq!(f.buffered(), 5);
+        // the unterminated tail becomes a frame only at EOF
+        f.push_eof();
+        let (frames, fatal) = drain(&mut f);
+        assert_eq!(fatal, None);
+        assert_eq!(frames, vec![(WireMode::Json, b" tail".to_vec())]);
+        assert_eq!(drain(&mut f).0, vec![]);
+    }
+
+    #[test]
+    fn framer_binary_basics() {
+        let mut f = Framer::new();
+        let mut stream = BINARY_MAGIC.to_vec();
+        stream.extend_from_slice(&encode_bare_binary(Some(1), "ping"));
+        stream.extend_from_slice(&encode_hash_binary(Some(2), &[0.5]));
+        f.push(&stream);
+        let (frames, fatal) = drain(&mut f);
+        assert_eq!(fatal, None);
+        assert_eq!(frames.len(), 2);
+        assert!(frames.iter().all(|(w, _)| *w == WireMode::Binary));
+        assert_eq!(f.negotiated(), Some(WireMode::Binary));
+        // payloads parse back
+        let req = parse_request_binary(&frames[1].1).unwrap();
+        assert_eq!(req.req_id, Some(2));
+        // a partial frame at EOF is fatal
+        f.push(&[3, 0, 0, 0, 9]);
+        assert_eq!(drain(&mut f), (vec![], None));
+        f.push_eof();
+        let (frames, fatal) = drain(&mut f);
+        assert!(frames.is_empty());
+        assert!(fatal.unwrap().contains("truncated"), "binary eof tail");
+    }
+
+    #[test]
+    fn framer_negotiation_edges() {
+        // proper magic prefix: stays pending until decidable
+        let mut f = Framer::new();
+        f.push(b"FBIN");
+        assert_eq!(drain(&mut f), (vec![], None));
+        assert_eq!(f.negotiated(), None);
+        assert_eq!(f.wire_mode(), WireMode::Json, "probe answers default to JSON");
+        f.push(b"1");
+        let _ = drain(&mut f);
+        assert_eq!(f.negotiated(), Some(WireMode::Binary));
+
+        // near-magic garbage falls through to JSON
+        let mut f = Framer::new();
+        f.push(b"FBINX junk\n");
+        let (frames, fatal) = drain(&mut f);
+        assert_eq!(fatal, None);
+        assert_eq!(frames, vec![(WireMode::Json, b"FBINX junk".to_vec())]);
+
+        // a partial magic cut off by EOF is a JSON tail frame
+        let mut f = Framer::new();
+        f.push(b"FBI");
+        f.push_eof();
+        let (frames, fatal) = drain(&mut f);
+        assert_eq!(fatal, None);
+        assert_eq!(frames, vec![(WireMode::Json, b"FBI".to_vec())]);
+    }
+
+    #[test]
+    fn framer_fatal_paths_poison() {
+        // oversized unterminated JSON line
+        let mut f = Framer::new();
+        f.push(&vec![b'a'; MAX_LINE_BYTES + 2]);
+        let (frames, fatal) = drain(&mut f);
+        assert!(frames.is_empty());
+        assert!(fatal.unwrap().contains("too long"));
+        assert!(f.is_fatal());
+        f.push(b"{\"op\":\"ping\"}\n");
+        assert_eq!(drain(&mut f), (vec![], None), "poisoned framer yields nothing");
+
+        // oversized declared binary length
+        let mut f = Framer::new();
+        f.push(BINARY_MAGIC);
+        f.push(&((MAX_FRAME_BYTES + 1) as u32).to_le_bytes());
+        let (frames, fatal) = drain(&mut f);
+        assert!(frames.is_empty());
+        assert!(fatal.unwrap().contains("cap"));
+    }
+
+    #[test]
+    fn framer_compact_preserves_state() {
+        let mut f = Framer::new();
+        let frame = encode_hash_binary(Some(7), &[0.25, 0.5]);
+        f.push(BINARY_MAGIC);
+        f.push(&frame[..frame.len() - 3]);
+        let _ = drain(&mut f);
+        f.compact();
+        f.push(&frame[frame.len() - 3..]);
+        let (frames, fatal) = drain(&mut f);
+        assert_eq!(fatal, None);
+        assert_eq!(frames.len(), 1);
+        let req = parse_request_binary(&frames[0].1).unwrap();
+        assert_eq!(req.req_id, Some(7));
+    }
+
+    #[test]
+    fn framer_compact_after_complete_binary_frames() {
+        // regression: on a binary connection the JSON scan offset lags
+        // at the negotiation point while frames advance the consumed
+        // prefix past it — compact() after a *completed* frame must not
+        // underflow (debug builds panic on a bare subtraction)
+        let mut f = Framer::new();
+        f.push(BINARY_MAGIC);
+        f.push(&encode_bare_binary(Some(1), "ping"));
+        let (frames, fatal) = drain(&mut f);
+        assert_eq!((frames.len(), fatal), (1, None));
+        f.compact();
+        assert_eq!(f.buffered(), 0);
+        // the compacted framer keeps decoding
+        f.push(&encode_bare_binary(Some(2), "ping"));
+        let (frames, fatal) = drain(&mut f);
+        assert_eq!(fatal, None);
+        assert_eq!(parse_request_binary(&frames[0].1).unwrap().req_id, Some(2));
+        f.compact();
+        f.push(&encode_remove_binary(Some(3), 4));
+        let (frames, _) = drain(&mut f);
+        assert_eq!(frames.len(), 1);
+    }
+
+    #[test]
+    fn read_frame_mirrors_framer() {
+        use std::io::BufReader;
+        // JSON replies, then EOF
+        let mut bytes = encode_response(Some(1), &Response::Pong { indexed: 2 }).into_bytes();
+        bytes.push(b'\n');
+        let mut r = BufReader::new(bytes.as_slice());
+        let line = read_frame(&mut r, WireMode::Json).unwrap().unwrap();
+        let (rid, reply) = decode_reply(std::str::from_utf8(&line).unwrap()).unwrap();
+        assert_eq!(rid, Some(1));
+        assert_eq!(reply.unwrap(), Reply::Pong { indexed: 2 });
+        assert_eq!(read_frame(&mut r, WireMode::Json).unwrap(), None);
+
+        // binary replies, then EOF
+        let frame = encode_response_binary(Some(3), &Response::Inserted { id: 4 });
+        let mut r = BufReader::new(frame.as_slice());
+        let payload = read_frame(&mut r, WireMode::Binary).unwrap().unwrap();
+        let (rid, reply) = decode_reply_binary(&payload).unwrap();
+        assert_eq!(rid, Some(3));
+        assert_eq!(reply.unwrap(), Reply::Inserted { id: 4 });
+        assert_eq!(read_frame(&mut r, WireMode::Binary).unwrap(), None);
+
+        // an over-cap declared length is InvalidData
+        let huge = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes();
+        let mut r = BufReader::new(huge.as_slice());
+        let e = read_frame(&mut r, WireMode::Binary).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn batch_requests_roundtrip_both_formats() {
+        let rows: Vec<f32> = vec![0.5, -1.0, 0.25, 2.0]; // 2 rows, dim 2
+        let ids = [9u64, (1 << 60) + 3];
+        for mode in [WireMode::Json, WireMode::Binary] {
+            let parse = |frame: Vec<u8>| -> Request {
+                match mode {
+                    WireMode::Json => {
+                        parse_request(std::str::from_utf8(&frame).unwrap().trim_end()).unwrap()
+                    }
+                    WireMode::Binary => {
+                        let consumed = split_binary_frame(&frame).unwrap().unwrap();
+                        parse_request_binary(&frame[4..consumed]).unwrap()
+                    }
+                }
+            };
+            let req = parse(encode_hash_batch_frame(mode, Some(5), &rows, 2));
+            assert_eq!(req.req_id, Some(5));
+            match req.body {
+                RequestBody::Batch(items) => {
+                    assert_eq!(items.len(), 2, "{mode:?}");
+                    match &items[1] {
+                        Ok(Op::Hash { samples }) => assert_eq!(samples, &vec![0.25, 2.0]),
+                        other => panic!("{mode:?}: unexpected {other:?}"),
+                    }
+                }
+                other => panic!("{mode:?}: unexpected {other:?}"),
+            }
+            // full-width ids only survive the binary carrier
+            if mode == WireMode::Binary {
+                let req = parse(encode_insert_batch_frame(mode, None, &ids, &rows, 2));
+                match req.body {
+                    RequestBody::Batch(items) => match &items[1] {
+                        Ok(Op::Insert { id, .. }) => assert_eq!(*id, ids[1]),
+                        other => panic!("unexpected {other:?}"),
+                    },
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            let req = parse(encode_query_batch_frame(mode, Some(6), &rows, 2, 7));
+            match req.body {
+                RequestBody::Batch(items) => match &items[0] {
+                    Ok(Op::Query { k, samples }) => {
+                        assert_eq!(*k, 7, "{mode:?}");
+                        assert_eq!(samples, &vec![0.5, -1.0]);
+                    }
+                    other => panic!("{mode:?}: unexpected {other:?}"),
+                },
+                other => panic!("{mode:?}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn batch_bad_rows_fail_per_item_not_per_frame() {
+        // binary: NaN bits in row 1 of 3 — rows 0 and 2 still decode
+        let mut rows = vec![0.5f32; 6]; // 3 rows, dim 2
+        rows[2] = f32::NAN;
+        let frame = encode_hash_batch_binary(Some(8), &rows, 2);
+        let req = parse_request_binary(&frame[4..]).unwrap();
+        match req.body {
+            RequestBody::Batch(items) => {
+                assert_eq!(items.len(), 3);
+                assert!(items[0].is_ok());
+                let e = items[1].as_ref().unwrap_err();
+                assert!(e.contains("finite"), "{e}");
+                assert!(items[2].is_ok());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // JSON: a non-numeric row fails only its own slot
+        let line = r#"{"op":"hash_batch","rows":[[0.5],["x"],[0.25]],"req_id":4}"#;
+        match parse_request(line).unwrap().body {
+            RequestBody::Batch(items) => {
+                assert!(items[0].is_ok() && items[2].is_ok());
+                assert!(items[1].is_err());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_frame_level_errors_are_correlated() {
+        // count = 0
+        let frame = encode_hash_batch_binary(Some(11), &[], 4);
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(11));
+        assert!(e.msg.contains("count must be positive"), "{e}");
+        // dim = 0 with a huge count must not size an allocation
+        let frame = bin_frame(|b| {
+            put_tag_and_req_id(b, OP_HASH_BATCH, Some(12));
+            b.extend_from_slice(&u32::MAX.to_le_bytes());
+            b.extend_from_slice(&0u32.to_le_bytes());
+        });
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(12));
+        assert!(e.msg.contains("dim must be positive"), "{e}");
+        // count×dim overflowing the cap / the payload
+        let frame = bin_frame(|b| {
+            put_tag_and_req_id(b, OP_HASH_BATCH, Some(13));
+            b.extend_from_slice(&u32::MAX.to_le_bytes());
+            b.extend_from_slice(&u32::MAX.to_le_bytes());
+        });
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(13));
+        assert!(e.msg.contains("payload bytes remain"), "{e}");
+        // truncation mid-row: 2×4 declared, 6 samples present
+        let frame = bin_frame(|b| {
+            put_tag_and_req_id(b, OP_HASH_BATCH, Some(14));
+            b.extend_from_slice(&2u32.to_le_bytes());
+            b.extend_from_slice(&4u32.to_le_bytes());
+            for _ in 0..6 {
+                b.extend_from_slice(&0.5f32.to_le_bytes());
+            }
+        });
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(14));
+        assert!(e.msg.contains("payload bytes remain"), "{e}");
+        // JSON: empty rows array, id/row count mismatch
+        let e = parse_request(r#"{"op":"hash_batch","rows":[],"req_id":15}"#).unwrap_err();
+        assert_eq!(e.req_id, Some(15));
+        assert!(e.msg.contains("at least one row"), "{e}");
+        let e = parse_request(r#"{"op":"insert_batch","ids":[1],"rows":[[0.5],[0.5]],"req_id":16}"#)
+            .unwrap_err();
+        assert_eq!(e.req_id, Some(16));
+        assert!(e.msg.contains("1 ids but 2 rows"), "{e}");
+    }
+
+    #[test]
+    fn batch_responses_roundtrip_both_formats() {
+        let items = vec![
+            Response::Signature(SigView::from_vec(vec![1, -2, 3])),
+            Response::Error("row 1: bad".into()),
+            Response::Inserted { id: 77 },
+            Response::Hits(vec![Hit {
+                id: 5,
+                distance: 0.5,
+            }]),
+        ];
+        // JSON
+        let line = encode_batch_response(Some(9), &items);
+        let (rid, decoded) = decode_reply(&line).unwrap();
+        assert_eq!(rid, Some(9));
+        let got = match decoded.unwrap() {
+            Reply::Batch(g) => g,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0], Ok(Reply::Signature(vec![1, -2, 3])));
+        assert_eq!(got[1], Err("row 1: bad".to_string()));
+        assert_eq!(got[2], Ok(Reply::Inserted { id: 77 }));
+        // binary
+        let frame = encode_batch_response_binary(Some(9), &items);
+        let consumed = split_binary_frame(&frame).unwrap().unwrap();
+        assert_eq!(consumed, frame.len());
+        let (rid, decoded) = decode_reply_binary(&frame[4..consumed]).unwrap();
+        assert_eq!(rid, Some(9));
+        match decoded.unwrap() {
+            Reply::Batch(g) => {
+                assert_eq!(g.len(), 4);
+                assert_eq!(g[0], Ok(Reply::Signature(vec![1, -2, 3])));
+                assert_eq!(g[1], Err("row 1: bad".to_string()));
+                match &g[3] {
+                    Ok(Reply::Hits(h)) => assert_eq!(h[0].id, 5),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_batch_response_degrades_to_correlated_error() {
+        let hits: Vec<Hit> = (0..200_000)
+            .map(|i| Hit {
+                id: i,
+                distance: 0.001 * i as f64,
+            })
+            .collect();
+        let items = vec![
+            Response::Hits(hits.clone()),
+            Response::Hits(hits.clone()),
+            Response::Hits(hits),
+        ];
+        for mode in [WireMode::Json, WireMode::Binary] {
+            let frame = encode_batch_response_frame(mode, Some(21), &items);
+            assert!(framed_payload_len(mode, &frame) <= MAX_FRAME_BYTES, "{mode:?}");
+            let (rid, decoded) = match mode {
+                WireMode::Json => decode_reply(std::str::from_utf8(&frame).unwrap()).unwrap(),
+                WireMode::Binary => decode_reply_binary(&frame[4..]).unwrap(),
+            };
+            assert_eq!(rid, Some(21), "{mode:?}");
+            assert!(decoded.unwrap_err().contains("response too large"), "{mode:?}");
+        }
+        // a small batch passes through as a batch envelope
+        let small = encode_batch_response_frame(
+            WireMode::Binary,
+            Some(1),
+            &[Response::Pong { indexed: 0 }],
+        );
+        let (_, decoded) = decode_reply_binary(&small[4..]).unwrap();
+        assert!(matches!(decoded.unwrap(), Reply::Batch(v) if v.len() == 1));
+    }
+
+    #[test]
+    fn parse_frame_payload_shares_the_malformed_rules() {
+        // utf-8 and empty rules live in the one shared entry point
+        let e = parse_frame_payload(WireMode::Json, &[0xff, 0xfe]).unwrap_err();
+        assert!(e.msg.contains("utf-8"), "{e}");
+        let e = parse_frame_payload(WireMode::Json, b"   ").unwrap_err();
+        assert!(e.msg.contains("empty"), "{e}");
+        let e = parse_frame_payload(WireMode::Json, b"").unwrap_err();
+        assert!(e.msg.contains("empty"), "{e}");
+        // and it dispatches to the right per-format parser
+        let req = parse_frame_payload(WireMode::Json, b"{\"op\":\"ping\",\"req_id\":3}").unwrap();
+        assert_eq!(req.req_id, Some(3));
+        let frame = encode_bare_binary(Some(4), "ping");
+        let req = parse_frame_payload(WireMode::Binary, &frame[4..]).unwrap();
+        assert_eq!(req.req_id, Some(4));
+    }
+
+    #[test]
+    fn full_width_ids_degrade_to_errors_on_the_json_response_path() {
+        let big = (1u64 << 60) + 7;
+        let cases = [
+            Response::Inserted { id: big },
+            Response::Removed { id: big },
+            Response::Hits(vec![
+                Hit {
+                    id: 1,
+                    distance: 0.5,
+                },
+                Hit {
+                    id: big,
+                    distance: 0.75,
+                },
+            ]),
+        ];
+        for resp in &cases {
+            // JSON: correlated error instead of a silently rounded id
+            let frame = encode_response_frame(WireMode::Json, Some(9), resp);
+            let (rid, decoded) =
+                decode_reply(std::str::from_utf8(&frame).unwrap()).unwrap();
+            assert_eq!(rid, Some(9), "{resp:?}");
+            let msg = decoded.unwrap_err();
+            assert!(msg.contains("2^53"), "{resp:?}: {msg}");
+            // binary: passes through intact
+            let frame = encode_response_frame(WireMode::Binary, Some(9), resp);
+            let (_, decoded) = decode_reply_binary(&frame[4..]).unwrap();
+            assert!(decoded.is_ok(), "{resp:?}");
+        }
+        // batch envelope: only the offending item degrades
+        let items = vec![
+            Response::Inserted { id: 5 },
+            Response::Inserted { id: big },
+            Response::Inserted { id: 6 },
+        ];
+        let frame = encode_batch_response_frame(WireMode::Json, Some(2), &items);
+        let (rid, decoded) = decode_reply(std::str::from_utf8(&frame).unwrap()).unwrap();
+        assert_eq!(rid, Some(2));
+        match decoded.unwrap() {
+            Reply::Batch(got) => {
+                assert_eq!(got[0], Ok(Reply::Inserted { id: 5 }));
+                assert!(got[1].as_ref().unwrap_err().contains("2^53"));
+                assert_eq!(got[2], Ok(Reply::Inserted { id: 6 }));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // a just-representable id still rides the JSON wire
+        let frame = encode_response_frame(
+            WireMode::Json,
+            Some(1),
+            &Response::Inserted { id: 1 << 53 },
+        );
+        let (_, decoded) = decode_reply(std::str::from_utf8(&frame).unwrap()).unwrap();
+        assert_eq!(decoded.unwrap(), Reply::Inserted { id: 1 << 53 });
+    }
+
+    #[test]
+    fn nested_batch_replies_rejected() {
+        // a hostile server nesting batch-in-batch must not recurse the
+        // client decoder: status ok, type batch, 1 item: ok + type batch
+        let frame = bin_frame(|b| {
+            put_tag_and_req_id(b, STATUS_OK, Some(1));
+            b.push(REPLY_BATCH);
+            b.extend_from_slice(&1u32.to_le_bytes());
+            b.push(STATUS_OK);
+            b.push(REPLY_BATCH);
+            b.extend_from_slice(&0u32.to_le_bytes());
+        });
+        let e = decode_reply_binary(&frame[4..]).unwrap_err();
+        assert!(e.contains("unknown binary reply type"), "{e}");
     }
 }

@@ -1,0 +1,503 @@
+//! Property suite for the shared incremental `Framer` — the single
+//! negotiation/framing state machine both server runtimes consume.
+//!
+//! The core property: for any byte stream, the sequence of decoded
+//! frames (and any fatal framing error) is **identical regardless of
+//! how the stream is chunked** across `push` calls — whole-buffer,
+//! byte-at-a-time, random chunk sizes, and splits placed exactly on the
+//! magic/length-prefix boundaries all decode the same. On top of that,
+//! the threaded and event-loop servers must answer identical reply
+//! streams when fed the same bytes under the same chunking.
+//!
+//! Random chunkings are driven by a fixed seed so failures reproduce:
+//! set `FUNCLSH_FUZZ_SEED` to replay a CI failure locally (the seed is
+//! printed by every fuzzing test and included in assert messages).
+
+use funclsh::config::{IoMode, ServiceConfig};
+use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath};
+use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use funclsh::functions::{Function1D, Sine};
+use funclsh::hashing::PStableHashBank;
+use funclsh::server::protocol::{self, Framer, FramerStep, WireMode};
+use funclsh::server::Server;
+use funclsh::util::rng::{Rng64, Xoshiro256pp};
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fuzz_seed() -> u64 {
+    std::env::var("FUNCLSH_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF5A11)
+}
+
+type Decoded = (Vec<(WireMode, Vec<u8>)>, Option<String>);
+
+/// Pull everything currently decodable; returns the fatal message if
+/// the framer poisoned itself.
+fn drain_into(framer: &mut Framer, out: &mut Vec<(WireMode, Vec<u8>)>) -> Option<String> {
+    loop {
+        match framer.next() {
+            FramerStep::Frame { wire, payload } => out.push((wire, payload.to_vec())),
+            FramerStep::Fatal { msg, .. } => return Some(msg),
+            FramerStep::Pending => return None,
+        }
+    }
+}
+
+/// Decode `stream` feeding chunk sizes from `chunks` (clamped to the
+/// remaining bytes), optionally ending with EOF.
+fn decode_chunked(stream: &[u8], chunks: &mut dyn FnMut() -> usize, eof: bool) -> Decoded {
+    let mut framer = Framer::new();
+    let mut frames = Vec::new();
+    let mut fatal = None;
+    let mut pos = 0usize;
+    while pos < stream.len() && fatal.is_none() {
+        let n = chunks().max(1).min(stream.len() - pos);
+        framer.push(&stream[pos..pos + n]);
+        pos += n;
+        fatal = drain_into(&mut framer, &mut frames);
+        framer.compact();
+    }
+    if eof && fatal.is_none() {
+        framer.push_eof();
+        fatal = drain_into(&mut framer, &mut frames);
+    }
+    (frames, fatal)
+}
+
+/// Whole-buffer reference decoding.
+fn decode_whole(stream: &[u8], eof: bool) -> Decoded {
+    decode_chunked(stream, &mut || stream.len(), eof)
+}
+
+/// A JSON request stream exercising every frame shape: well-formed ops,
+/// a batch frame, garbage, empty and CR-terminated lines, and an
+/// unterminated tail.
+fn json_stream() -> Vec<u8> {
+    let mut s = Vec::new();
+    s.extend_from_slice(&protocol::encode_bare_frame(WireMode::Json, Some(1), "ping"));
+    s.extend_from_slice(&protocol::encode_hash_frame(
+        WireMode::Json,
+        Some(2),
+        &[0.5, -0.25, 1.5],
+    ));
+    s.extend_from_slice(b"garbage that is not json\n");
+    s.extend_from_slice(b"\r\n");
+    s.extend_from_slice(b"\n");
+    s.extend_from_slice(&protocol::encode_insert_frame(
+        WireMode::Json,
+        None,
+        7,
+        &[1.0, 0.0],
+    ));
+    s.extend_from_slice(&protocol::encode_hash_batch_frame(
+        WireMode::Json,
+        Some(3),
+        &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6],
+        2,
+    ));
+    s.extend_from_slice(&protocol::encode_query_frame(
+        WireMode::Json,
+        Some(4),
+        &[0.5, 0.25],
+        3,
+    ));
+    s.extend_from_slice(b"{\"op\":\"unterminated tail");
+    s
+}
+
+/// A binary request stream: the magic, every batch op, singles, and a
+/// truncated trailing frame.
+fn binary_frames() -> Vec<Vec<u8>> {
+    vec![
+        protocol::encode_bare_binary(Some(1), "ping"),
+        protocol::encode_hash_binary(Some(2), &[0.5, -0.25]),
+        protocol::encode_insert_batch_binary(Some(3), &[10, 11], &[0.1, 0.2, 0.3, 0.4], 2),
+        protocol::encode_query_batch_binary(None, &[0.5, 0.5, 0.25, 0.25], 2, 4),
+        protocol::encode_hash_batch_binary(Some(4), &[1.0; 6], 3),
+        protocol::encode_remove_binary(Some(5), 10),
+    ]
+}
+
+fn binary_stream(with_truncated_tail: bool) -> Vec<u8> {
+    let mut s = protocol::BINARY_MAGIC.to_vec();
+    for f in binary_frames() {
+        s.extend_from_slice(&f);
+    }
+    if with_truncated_tail {
+        s.extend_from_slice(&[200, 0, 0, 0, 1, 2, 3]); // declares 200, ships 3
+    }
+    s
+}
+
+fn assert_same(label: &str, seed: u64, got: &Decoded, want: &Decoded) {
+    assert_eq!(
+        got.1, want.1,
+        "{label} (seed {seed}): fatal outcome differs"
+    );
+    assert_eq!(
+        got.0.len(),
+        want.0.len(),
+        "{label} (seed {seed}): frame count differs"
+    );
+    for (i, (g, w)) in got.0.iter().zip(&want.0).enumerate() {
+        assert_eq!(g.0, w.0, "{label} (seed {seed}): frame {i} wire mode differs");
+        assert_eq!(g.1, w.1, "{label} (seed {seed}): frame {i} payload differs");
+    }
+}
+
+#[test]
+fn json_chunkings_all_decode_identically() {
+    let seed = fuzz_seed();
+    eprintln!("framer fuzz seed: {seed} (set FUNCLSH_FUZZ_SEED to reproduce)");
+    let stream = json_stream();
+    for eof in [false, true] {
+        let want = decode_whole(&stream, eof);
+        assert!(want.1.is_none());
+        // reference sanity: 8 terminated frames, +1 tail frame at EOF
+        assert_eq!(want.0.len(), if eof { 9 } else { 8 });
+        let got = decode_chunked(&stream, &mut || 1, eof);
+        assert_same("json byte-at-a-time", seed, &got, &want);
+        for round in 0..32u64 {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed.wrapping_add(round));
+            let got = decode_chunked(
+                &stream,
+                &mut || 1 + (rng.uniform() * 17.0) as usize,
+                eof,
+            );
+            assert_same("json random chunks", seed.wrapping_add(round), &got, &want);
+        }
+    }
+}
+
+#[test]
+fn binary_chunkings_all_decode_identically() {
+    let seed = fuzz_seed();
+    eprintln!("framer fuzz seed: {seed} (set FUNCLSH_FUZZ_SEED to reproduce)");
+    for tail in [false, true] {
+        let stream = binary_stream(tail);
+        for eof in [false, true] {
+            let want = decode_whole(&stream, eof);
+            assert_eq!(want.0.len(), binary_frames().len());
+            assert_eq!(
+                want.1.is_some(),
+                tail && eof,
+                "fatal iff the truncated tail meets EOF"
+            );
+            let got = decode_chunked(&stream, &mut || 1, eof);
+            assert_same("binary byte-at-a-time", seed, &got, &want);
+            for round in 0..32u64 {
+                let mut rng = Xoshiro256pp::seed_from_u64(seed.wrapping_add(round));
+                let got = decode_chunked(
+                    &stream,
+                    &mut || 1 + (rng.uniform() * 13.0) as usize,
+                    eof,
+                );
+                assert_same(
+                    "binary random chunks",
+                    seed.wrapping_add(round),
+                    &got,
+                    &want,
+                );
+            }
+        }
+    }
+}
+
+/// Splits placed exactly on the structural boundaries: after the magic,
+/// after every 4-byte length prefix, and after every payload.
+#[test]
+fn binary_boundary_splits_decode_identically() {
+    let stream = binary_stream(false);
+    let want = decode_whole(&stream, true);
+    let mut sizes = vec![protocol::BINARY_MAGIC.len()];
+    for f in binary_frames() {
+        sizes.push(4);
+        sizes.push(f.len() - 4);
+    }
+    let mut it = sizes.into_iter();
+    let got = decode_chunked(&stream, &mut || it.next().unwrap_or(1), true);
+    assert_same("binary boundary splits", 0, &got, &want);
+
+    // and straddling every boundary by one byte
+    let mut sizes = vec![protocol::BINARY_MAGIC.len() - 1, 2, 3];
+    for f in binary_frames() {
+        sizes.push(f.len() - 4);
+        sizes.push(4);
+    }
+    let mut it = sizes.into_iter();
+    let got = decode_chunked(&stream, &mut || it.next().unwrap_or(1), true);
+    assert_same("binary straddled splits", 0, &got, &want);
+}
+
+/// The magic itself split across pushes must still negotiate binary,
+/// and a partial magic at EOF must fall back to a JSON tail frame.
+#[test]
+fn negotiation_splits_behave() {
+    let stream = binary_stream(false);
+    for cut in 1..protocol::BINARY_MAGIC.len() {
+        let mut framer = Framer::new();
+        framer.push(&stream[..cut]);
+        let mut frames = Vec::new();
+        assert_eq!(drain_into(&mut framer, &mut frames), None);
+        assert!(frames.is_empty(), "cut {cut}: no frames before negotiation");
+        assert_eq!(framer.negotiated(), None);
+        framer.push(&stream[cut..]);
+        assert_eq!(drain_into(&mut framer, &mut frames), None);
+        assert_eq!(framer.negotiated(), Some(WireMode::Binary), "cut {cut}");
+        assert_eq!(frames.len(), binary_frames().len(), "cut {cut}");
+    }
+    for cut in 1..protocol::BINARY_MAGIC.len() {
+        let mut framer = Framer::new();
+        framer.push(&stream[..cut]);
+        framer.push_eof();
+        let mut frames = Vec::new();
+        assert_eq!(drain_into(&mut framer, &mut frames), None);
+        assert_eq!(
+            frames,
+            vec![(WireMode::Json, stream[..cut].to_vec())],
+            "cut {cut}: partial magic at EOF is a JSON tail frame"
+        );
+    }
+}
+
+/// Fatal outcomes are chunking-independent too: the oversized JSON line
+/// and the oversized declared binary length poison the framer at the
+/// same point under any chunking.
+#[test]
+fn fatal_paths_are_chunking_independent() {
+    let seed = fuzz_seed();
+    eprintln!("framer fuzz seed: {seed} (set FUNCLSH_FUZZ_SEED to reproduce)");
+    // JSON: MAX + 2 bytes without a newline (chunked in 4 KiB steps to
+    // keep the test fast)
+    let mut stream = protocol::encode_bare_frame(WireMode::Json, Some(1), "ping");
+    stream.extend(std::iter::repeat(b'x').take(protocol::MAX_LINE_BYTES + 2));
+    let want = decode_whole(&stream, false);
+    assert_eq!(want.0.len(), 1, "the ping frame still answers");
+    assert!(want.1.as_deref().unwrap().contains("too long"));
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let got = decode_chunked(
+        &stream,
+        &mut || 1 + (rng.uniform() * 4096.0) as usize,
+        false,
+    );
+    assert_same("json oversized line", seed, &got, &want);
+
+    // binary: a good frame then an oversized declared length
+    let mut stream = protocol::BINARY_MAGIC.to_vec();
+    stream.extend_from_slice(&protocol::encode_bare_binary(Some(1), "ping"));
+    stream.extend_from_slice(&((protocol::MAX_FRAME_BYTES + 1) as u32).to_le_bytes());
+    let want = decode_whole(&stream, false);
+    assert_eq!(want.0.len(), 1);
+    assert!(want.1.as_deref().unwrap().contains("cap"));
+    let got = decode_chunked(&stream, &mut || 1, false);
+    assert_same("binary oversized length", seed, &got, &want);
+}
+
+// ---------------------------------------------- server parity harness
+
+fn server_config(io_mode: IoMode) -> ServiceConfig {
+    let mut cfg = ServiceConfig {
+        dim: 16,
+        k: 2,
+        l: 4,
+        // single coordinator worker + single io worker: stateful ops
+        // (inserts/removes vs pings/queries) execute in request order,
+        // so reply streams are byte-deterministic and comparable across
+        // runtimes
+        workers: 1,
+        max_batch: 16,
+        max_wait_us: 100,
+        ..Default::default()
+    };
+    cfg.server.port = 0;
+    cfg.server.max_conns = 8;
+    cfg.server.io_mode = io_mode;
+    cfg.server.io_workers = 1;
+    cfg
+}
+
+fn boot(cfg: &ServiceConfig) -> (Server, Vec<f64>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+    let points = emb.sample_points().to_vec();
+    let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+    let path: Arc<dyn HashPath> = Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank)));
+    let svc = Arc::new(Coordinator::start(cfg, path));
+    let server = Server::start(cfg, svc, points.clone()).expect("bind loopback");
+    (server, points)
+}
+
+fn finish(server: Server) {
+    let (svc, _) = server.shutdown();
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+}
+
+fn sample_sine(phase: f64, points: &[f64]) -> Vec<f32> {
+    let f = Sine::paper(phase);
+    points.iter().map(|&x| f.eval(x) as f32).collect()
+}
+
+/// A deterministic mixed request stream in `wire` format (service-dim
+/// rows so hashes/queries produce real signatures). Every frame draws
+/// exactly one reply.
+fn request_stream(wire: WireMode, points: &[f64]) -> Vec<u8> {
+    let dim = points.len();
+    let row = |p: f64| sample_sine(p, points);
+    let mut rows: Vec<f32> = Vec::new();
+    for i in 0..3 {
+        rows.extend(row(0.3 * i as f64));
+    }
+    let mut s = Vec::new();
+    if wire == WireMode::Binary {
+        s.extend_from_slice(protocol::BINARY_MAGIC);
+    }
+    s.extend_from_slice(&protocol::encode_bare_frame(wire, Some(1), "ping"));
+    let ids: Vec<u64> = (0..3).collect();
+    s.extend_from_slice(&protocol::encode_insert_batch_frame(
+        wire,
+        Some(2),
+        &ids,
+        &rows,
+        dim,
+    ));
+    s.extend_from_slice(&protocol::encode_hash_frame(wire, Some(3), &row(0.7)));
+    s.extend_from_slice(&protocol::encode_hash_batch_frame(wire, Some(4), &rows, dim));
+    s.extend_from_slice(&protocol::encode_query_batch_frame(wire, Some(5), &rows, dim, 2));
+    // a malformed frame mid-stream (wrong-dimension row): per-request
+    // error, stream continues
+    s.extend_from_slice(&protocol::encode_hash_frame(wire, Some(6), &[0.5f32; 3]));
+    s.extend_from_slice(&protocol::encode_remove_frame(wire, Some(7), 1));
+    s.extend_from_slice(&protocol::encode_bare_frame(wire, Some(8), "ping"));
+    s
+}
+
+/// Write `stream` to the server in seeded random chunks, half-close,
+/// and collect every reply frame until EOF.
+fn drive(addr: std::net::SocketAddr, wire: WireMode, stream: &[u8], seed: u64) -> Vec<Vec<u8>> {
+    let sock = TcpStream::connect(addr).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut writer = sock;
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut pos = 0usize;
+    let mut chunk_no = 0u32;
+    while pos < stream.len() {
+        let n = (1 + (rng.uniform() * 23.0) as usize).min(stream.len() - pos);
+        writer.write_all(&stream[pos..pos + n]).unwrap();
+        writer.flush().unwrap();
+        pos += n;
+        chunk_no += 1;
+        if chunk_no % 8 == 0 {
+            // let the server observe a genuinely partial stream
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    writer.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut replies = Vec::new();
+    while let Some(frame) = protocol::read_frame(&mut reader, wire).unwrap() {
+        replies.push(frame);
+    }
+    replies
+}
+
+/// The runtime-parity property: under identical (seeded) chunking, the
+/// threaded and event-loop servers produce byte-identical reply
+/// streams, in both wire formats.
+#[test]
+fn threaded_and_event_loop_answer_identically_under_chunking() {
+    let seed = fuzz_seed();
+    eprintln!("framer fuzz seed: {seed} (set FUNCLSH_FUZZ_SEED to reproduce)");
+    for wire in [WireMode::Json, WireMode::Binary] {
+        let mut per_mode: Vec<Vec<Vec<u8>>> = Vec::new();
+        for io_mode in [IoMode::Threaded, IoMode::EventLoop] {
+            let cfg = server_config(io_mode);
+            let (server, points) = boot(&cfg);
+            let stream = request_stream(wire, &points);
+            let replies = drive(server.addr(), wire, &stream, seed);
+            assert_eq!(replies.len(), 8, "{io_mode:?}/{wire:?}");
+            per_mode.push(replies);
+            finish(server);
+        }
+        assert_eq!(
+            per_mode[0].len(),
+            per_mode[1].len(),
+            "{wire:?} (seed {seed}): reply counts differ"
+        );
+        for (i, (a, b)) in per_mode[0].iter().zip(&per_mode[1]).enumerate() {
+            assert_eq!(
+                a, b,
+                "{wire:?} (seed {seed}): reply {i} differs between runtimes"
+            );
+        }
+    }
+}
+
+/// Chunking-invariance over the wire: the same server answers the same
+/// byte stream identically whether it arrives in one write or dribbled.
+#[test]
+fn server_replies_are_chunking_invariant() {
+    let seed = fuzz_seed();
+    eprintln!("framer fuzz seed: {seed} (set FUNCLSH_FUZZ_SEED to reproduce)");
+    for wire in [WireMode::Json, WireMode::Binary] {
+        let cfg = server_config(IoMode::EventLoop);
+        let (server, points) = boot(&cfg);
+        // stateless stream (no inserts/removes) so two passes against
+        // one server must answer identically
+        let dim = points.len();
+        let row = sample_sine(0.9, &points);
+        let mut rows: Vec<f32> = Vec::new();
+        for _ in 0..4 {
+            rows.extend(row.iter().copied());
+        }
+        let mut stream = Vec::new();
+        if wire == WireMode::Binary {
+            stream.extend_from_slice(protocol::BINARY_MAGIC);
+        }
+        stream.extend_from_slice(&protocol::encode_hash_frame(wire, Some(1), &row));
+        stream.extend_from_slice(&protocol::encode_hash_batch_frame(
+            wire,
+            Some(2),
+            &rows,
+            dim,
+        ));
+        stream.extend_from_slice(&protocol::encode_bare_frame(wire, Some(3), "ping"));
+
+        // one-shot write
+        let whole = {
+            let sock = TcpStream::connect(server.addr()).unwrap();
+            sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut reader = BufReader::new(sock.try_clone().unwrap());
+            let mut writer = sock;
+            writer.write_all(&stream).unwrap();
+            writer.flush().unwrap();
+            writer.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut replies = Vec::new();
+            while let Some(f) = protocol::read_frame(&mut reader, wire).unwrap() {
+                replies.push(f);
+            }
+            replies
+        };
+        assert_eq!(whole.len(), 3, "{wire:?}");
+        // dribbled writes, several seeds
+        for round in 0..3u64 {
+            let chunked = drive(
+                server.addr(),
+                wire,
+                &stream,
+                seed.wrapping_add(round * 77),
+            );
+            assert_eq!(
+                chunked, whole,
+                "{wire:?} (seed {}): chunked replies differ from whole-write replies",
+                seed.wrapping_add(round * 77)
+            );
+        }
+        finish(server);
+    }
+}

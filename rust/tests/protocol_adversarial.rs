@@ -582,6 +582,141 @@ fn error_sandwich_keeps_pipelined_binary_connection_alive() {
     finish(server);
 }
 
+// ----------------------------------------------- batched-op fuzzing
+
+/// Binary layout note: `[len:4][op:1][flags:1][req_id:8][count:4][dim:4]…`
+/// — offsets used below to corrupt the count/dim fields of frames built
+/// by the public encoders.
+const BATCH_COUNT_OFF: usize = 14;
+const BATCH_DIM_OFF: usize = 18;
+
+/// Hostile batch headers — count=0, a count×dim extent past the 8 MiB
+/// cap, a declared count larger than the payload, truncation mid-row,
+/// and a zero dim with a huge count — must all produce correlated error
+/// envelopes; the connection and the server survive every one.
+#[test]
+fn batch_adversarial_headers_get_correlated_errors() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        let (mut reader, mut writer) = connect(&server);
+        writer.write_all(protocol::BINARY_MAGIC).unwrap();
+        let mut expect_err = |frame: &[u8], rid: u64, needle: &str, label: &str| {
+            writer.write_all(frame).unwrap();
+            writer.flush().unwrap();
+            let (got_rid, body) = read_binary_reply(&mut reader).unwrap();
+            assert_eq!(got_rid, Some(rid), "{io_mode:?} {label}: must correlate");
+            let msg = body.unwrap_err();
+            assert!(msg.contains(needle), "{io_mode:?} {label}: {msg}");
+        };
+
+        // count = 0 (built legitimately: empty rows)
+        let frame = protocol::encode_hash_batch_binary(Some(30), &[], 4);
+        expect_err(&frame, 30, "count must be positive", "count=0");
+
+        // dim = 0 with a huge declared count: must not size an allocation
+        let mut frame = protocol::encode_hash_batch_binary(Some(31), &[0.5; 4], 4);
+        frame[BATCH_COUNT_OFF..BATCH_COUNT_OFF + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        frame[BATCH_DIM_OFF..BATCH_DIM_OFF + 4].copy_from_slice(&0u32.to_le_bytes());
+        expect_err(&frame, 31, "dim must be positive", "dim=0");
+
+        // count×dim extent far past the 8 MiB frame cap
+        let mut frame = protocol::encode_hash_batch_binary(Some(32), &[0.5; 4], 4);
+        frame[BATCH_COUNT_OFF..BATCH_COUNT_OFF + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        frame[BATCH_DIM_OFF..BATCH_DIM_OFF + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        expect_err(&frame, 32, "payload bytes remain", "count*dim overflow");
+
+        // declared count larger than the shipped payload
+        let mut frame = protocol::encode_hash_batch_binary(Some(33), &[0.5; 8], 4);
+        frame[BATCH_COUNT_OFF..BATCH_COUNT_OFF + 4]
+            .copy_from_slice(&1000u32.to_le_bytes());
+        expect_err(&frame, 33, "payload bytes remain", "count too large");
+
+        // truncation mid-row: 2 rows of dim 4 declared, 6 samples shipped
+        let mut frame = protocol::encode_hash_batch_binary(Some(34), &[0.5; 6], 3);
+        frame[BATCH_DIM_OFF..BATCH_DIM_OFF + 4].copy_from_slice(&4u32.to_le_bytes());
+        expect_err(&frame, 34, "payload bytes remain", "mid-row truncation");
+
+        // insert_batch: ids block truncated
+        let mut frame =
+            protocol::encode_insert_batch_binary(Some(35), &[1, 2], &[0.5; 8], 4);
+        frame[BATCH_COUNT_OFF..BATCH_COUNT_OFF + 4]
+            .copy_from_slice(&50_000u32.to_le_bytes());
+        expect_err(&frame, 35, "payload bytes remain", "ids truncated");
+
+        // the connection survived all of it
+        writer
+            .write_all(&protocol::encode_bare_binary(Some(40), "ping"))
+            .unwrap();
+        writer.flush().unwrap();
+        let (rid, body) = read_binary_reply(&mut reader).unwrap();
+        assert_eq!(rid, Some(40), "{io_mode:?}");
+        assert_eq!(body.unwrap(), Reply::Pong { indexed: 0 }, "{io_mode:?}");
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
+/// JSON batch frames with hostile shapes: empty `rows`, ids/rows length
+/// mismatch, non-array rows — frame-level correlated errors; one bad
+/// row among good ones — a per-item error with the neighbours answered.
+#[test]
+fn json_batch_adversarial_shapes() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let server = boot(&config(io_mode));
+        let (mut reader, mut writer) = connect(&server);
+        let mut ask = |line: &[u8]| -> String {
+            writer.write_all(line).unwrap();
+            writer.write_all(b"\n").unwrap();
+            writer.flush().unwrap();
+            read_reply(&mut reader)
+        };
+        for (frame, needle, rid) in [
+            (&br#"{"op":"hash_batch","rows":[],"req_id":50}"#[..], "at least one row", 50),
+            (
+                &br#"{"op":"insert_batch","ids":[1],"rows":[[0.5],[0.5]],"req_id":51}"#[..],
+                "1 ids but 2 rows",
+                51,
+            ),
+            (&br#"{"op":"hash_batch","rows":"x","req_id":52}"#[..], "must be an array", 52),
+            (&br#"{"op":"query_batch","rows":[[0.5]],"req_id":53}"#[..], "missing field", 53),
+        ] {
+            let reply = ask(frame);
+            assert!(reply.contains("\"ok\":false"), "{io_mode:?}: {reply}");
+            assert!(reply.contains(needle), "{io_mode:?}: {reply}");
+            assert!(
+                reply.contains(&format!("\"req_id\":{rid}")),
+                "{io_mode:?}: {reply}"
+            );
+        }
+        // one non-finite row among good rows (good rows at the service
+        // dim, so only the poisoned one fails): per-item error envelope,
+        // neighbours answered (still one reply frame for the batch)
+        let dim = config(io_mode).dim;
+        let good = vec!["0.5"; dim].join(",");
+        let bad = format!("1e39,{}", vec!["0.5"; dim - 1].join(","));
+        let line = format!(
+            "{{\"op\":\"hash_batch\",\"rows\":[[{good}],[{bad}],[{good}]],\"req_id\":54}}"
+        );
+        let reply = ask(line.as_bytes());
+        assert!(reply.contains("\"ok\":true"), "{io_mode:?}: {reply}");
+        assert!(reply.contains("\"type\":\"batch\""), "{io_mode:?}: {reply}");
+        assert!(reply.contains("finite"), "{io_mode:?}: {reply}");
+        // exactly one failed item in the results array
+        assert_eq!(
+            reply.matches("\"ok\":false").count(),
+            1,
+            "{io_mode:?}: {reply}"
+        );
+        // the connection still answers
+        let reply = ask(br#"{"op":"ping","req_id":60}"#);
+        assert!(reply.contains("pong"), "{io_mode:?}: {reply}");
+        assert_alive(&server);
+        finish(server);
+    }
+}
+
 /// A client that opens a connection and writes nothing must not wedge a
 /// handler; meanwhile a huge-but-legal frame right at the boundary is
 /// still served.

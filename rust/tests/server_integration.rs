@@ -391,7 +391,25 @@ fn binary_wire_serves_full_width_ids() {
     bin.insert(big, &row).unwrap();
     let hits = bin.query(&row, 3).unwrap();
     assert_eq!(hits.first().map(|h| h.id), Some(big));
+
+    // a JSON connection querying the same corpus must get a correlated
+    // error — not a silently rounded id its own decoder would reject
+    let mut json = Client::connect_with(server.addr(), WireMode::Json).unwrap();
+    match json.query(&row, 3) {
+        Err(funclsh::server::ClientError::Server(msg)) => {
+            assert!(msg.contains("2^53"), "{msg}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // entries below the limit keep serving JSON clients normally (same
+    // row, so the signature — and therefore the candidate set — is a
+    // guaranteed hit)
     bin.remove(big).unwrap();
+    bin.insert(7, &row).unwrap();
+    let hits = json.query(&row, 3).unwrap();
+    assert_eq!(hits.first().map(|h| h.id), Some(7));
+
+    bin.remove(7).unwrap();
     assert_eq!(bin.ping().unwrap(), 0);
     finish(server);
 }
@@ -444,15 +462,21 @@ fn matrix_smoke_io_mode_x_wire() {
         .ok()
         .and_then(|s| WireMode::parse(&s))
         .unwrap_or(WireMode::Json);
+    let batch = std::env::var("FUNCLSH_TEST_BATCH")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1usize)
+        .max(1);
     let mut cfg = test_config();
     cfg.server.io_mode = io_mode;
     let (server, points) = boot(&cfg);
-    eprintln!("matrix smoke: io_mode={io_mode:?} wire={wire:?}");
+    eprintln!("matrix smoke: io_mode={io_mode:?} wire={wire:?} batch={batch}");
     let load = LoadConfig {
         threads: 6,
         ops_per_thread: 50,
         // the threaded runtime's contract is depth 1 (see module doc)
         pipeline_depth: if io_mode == IoMode::Threaded { 1 } else { 4 },
+        batch,
         wire,
         insert_fraction: 0.4,
         query_fraction: 0.3,
@@ -462,8 +486,9 @@ fn matrix_smoke_io_mode_x_wire() {
     };
     let report = run_load(server.addr(), &points, &load).unwrap();
     assert_eq!(report.ops, 6 * 50);
-    assert_eq!(report.errors, 0, "io_mode={io_mode:?} wire={wire:?}");
+    assert_eq!(report.errors, 0, "io_mode={io_mode:?} wire={wire:?} batch={batch}");
     assert_eq!(report.wire, wire);
+    assert_eq!(report.batch, batch);
     assert!(report.throughput() > 0.0);
     // the server stayed coherent under the configured combination
     let mut probe = Client::connect_with(server.addr(), wire).unwrap();
@@ -686,4 +711,212 @@ fn graceful_shutdown_completes_in_flight_pipelined_requests() {
     if let Ok(svc) = Arc::try_unwrap(svc) {
         svc.shutdown();
     }
+}
+
+/// Satellite: batch-op parity across the io_mode × wire matrix.
+/// `hash_batch` / `query_batch` of N rows must return byte-identical
+/// signatures and identical candidate sets to N single-op requests, and
+/// `insert_batch` must ack row-for-row like N single inserts.
+#[test]
+fn batch_ops_match_single_ops_across_matrix() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        for wire in [WireMode::Json, WireMode::Binary] {
+            let mut cfg = test_config();
+            cfg.server.io_mode = io_mode;
+            let (server, points) = boot(&cfg);
+            let label = format!("{io_mode:?}/{wire:?}");
+            let dim = points.len();
+            let mut client = Client::connect_with(server.addr(), wire).unwrap();
+
+            // corpus via insert_batch (one frame), acked row-for-row
+            let n = 24usize;
+            let ids: Vec<u64> = (0..n as u64).collect();
+            let mut rows: Vec<f32> = Vec::with_capacity(n * dim);
+            for i in 0..n {
+                let phase = 2.0 * std::f64::consts::PI * (i as f64 / n as f64);
+                rows.extend(sample_sine(phase, &points));
+            }
+            let acks = client.insert_batch(&ids, &rows, dim).unwrap();
+            assert_eq!(acks.len(), n, "{label}");
+            for (i, ack) in acks.iter().enumerate() {
+                assert_eq!(ack.as_ref().ok(), Some(&(i as u64)), "{label}: row {i}");
+            }
+            assert_eq!(client.ping().unwrap(), n as u64, "{label}");
+
+            // hash_batch == N single hashes, byte-identical signatures
+            let q = 6usize;
+            let mut qrows: Vec<f32> = Vec::with_capacity(q * dim);
+            for i in 0..q {
+                qrows.extend(sample_sine(0.05 + 0.21 * i as f64, &points));
+            }
+            let batched = client.hash_batch(&qrows, dim).unwrap();
+            assert_eq!(batched.len(), q, "{label}");
+            for i in 0..q {
+                let single = client.hash(&qrows[i * dim..(i + 1) * dim]).unwrap();
+                assert_eq!(
+                    batched[i].as_ref().ok(),
+                    Some(&single),
+                    "{label}: hash row {i} diverges from the single op"
+                );
+            }
+
+            // query_batch == N single queries: identical candidate sets
+            // (ids and distances)
+            let batched = client.query_batch(&qrows, dim, 5).unwrap();
+            assert_eq!(batched.len(), q, "{label}");
+            for i in 0..q {
+                let single = client.query(&qrows[i * dim..(i + 1) * dim], 5).unwrap();
+                let b = batched[i].as_ref().unwrap();
+                assert_eq!(b.len(), single.len(), "{label}: query row {i}");
+                for (bh, sh) in b.iter().zip(&single) {
+                    assert_eq!(bh.id, sh.id, "{label}: query row {i}");
+                    assert!(
+                        (bh.distance - sh.distance).abs() < 1e-12,
+                        "{label}: query row {i} distance"
+                    );
+                }
+            }
+
+            // a duplicate id inside a batch fails only its own row
+            let dup_ids = [100u64, 3, 101];
+            let mut dup_rows: Vec<f32> = Vec::new();
+            for i in 0..3 {
+                dup_rows.extend(sample_sine(0.9 + 0.1 * i as f64, &points));
+            }
+            let acks = client.insert_batch(&dup_ids, &dup_rows, dim).unwrap();
+            assert_eq!(acks[0].as_ref().ok(), Some(&100), "{label}");
+            assert!(
+                acks[1].as_ref().unwrap_err().contains("duplicate"),
+                "{label}"
+            );
+            assert_eq!(acks[2].as_ref().ok(), Some(&101), "{label}");
+            assert_eq!(client.ping().unwrap(), n as u64 + 2, "{label}");
+            finish(server);
+        }
+    }
+}
+
+/// Satellite: a mixed batch where one row has the wrong dimension gets
+/// a per-item error while its neighbours answer normally — JSON can
+/// express a ragged batch directly; on the binary wire the frame-wide
+/// `dim` means a wrong dim fails every row (but never the connection).
+#[test]
+fn mixed_dimension_batch_fails_only_the_bad_row() {
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let mut cfg = test_config();
+        cfg.server.io_mode = io_mode;
+        let (server, points) = boot(&cfg);
+        let dim = points.len();
+
+        // JSON ragged batch: row 1 is 3 samples wide
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        let good_row = |p: f64| {
+            sample_sine(p, &points)
+                .iter()
+                .map(|x| format!("{x}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let line = format!(
+            "{{\"op\":\"hash_batch\",\"rows\":[[{}],[0.5,0.5,0.5],[{}]],\"req_id\":9}}\n",
+            good_row(0.25),
+            good_row(0.75)
+        );
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("\"type\":\"batch\""), "{io_mode:?}: {reply}");
+        assert!(reply.contains("\"req_id\":9"), "{io_mode:?}: {reply}");
+        assert!(reply.contains("dimension"), "{io_mode:?}: {reply}");
+        assert_eq!(
+            reply.matches("\"ok\":false").count(),
+            1,
+            "{io_mode:?}: exactly the ragged row fails: {reply}"
+        );
+        assert_eq!(
+            reply.matches("\"type\":\"signature\"").count(),
+            2,
+            "{io_mode:?}: both good rows answer: {reply}"
+        );
+        // the good rows' signatures equal the single-op answers
+        let mut probe = Client::connect(server.addr()).unwrap();
+        let want = probe.hash(&sample_sine(0.25, &points)).unwrap();
+        let batched = probe
+            .hash_batch(&sample_sine(0.25, &points), dim)
+            .unwrap();
+        assert_eq!(batched[0].as_ref().ok(), Some(&want), "{io_mode:?}");
+
+        // binary: the frame-wide dim disagrees with the service — every
+        // row gets its own error envelope, the connection survives
+        let mut bin = Client::connect_with(server.addr(), WireMode::Binary).unwrap();
+        let wrong: Vec<f32> = vec![0.5; 2 * (dim + 1)];
+        let res = bin.hash_batch(&wrong, dim + 1).unwrap();
+        assert_eq!(res.len(), 2, "{io_mode:?}");
+        for r in &res {
+            assert!(
+                r.as_ref().unwrap_err().contains("dimension"),
+                "{io_mode:?}: {r:?}"
+            );
+        }
+        assert_eq!(bin.ping().unwrap(), 0, "{io_mode:?}: connection survives");
+        finish(server);
+    }
+}
+
+/// Pipelined batch frames interleave with single-op frames: one frame =
+/// one completion, correlated by req_id, with per-item results inside.
+#[test]
+fn pipelined_batches_interleave_with_singles() {
+    let cfg = test_config();
+    let (server, points) = boot(&cfg);
+    let dim = points.len();
+    let row = sample_sine(0.4, &points);
+    let mut rows: Vec<f32> = Vec::new();
+    for _ in 0..8 {
+        rows.extend(row.iter().copied());
+    }
+    let mut blocking = Client::connect(server.addr()).unwrap();
+    let want = blocking.hash(&row).unwrap();
+    for wire in [WireMode::Json, WireMode::Binary] {
+        let mut client = PipelinedClient::connect_with(server.addr(), 4, wire).unwrap();
+        let mut completions = Vec::new();
+        for i in 0..12 {
+            if i % 3 == 0 {
+                completions.extend(client.send_hash_batch(&rows, dim).unwrap());
+            } else {
+                completions.extend(client.send_hash(&row).unwrap());
+            }
+        }
+        completions.extend(client.drain().unwrap());
+        assert_eq!(completions.len(), 12, "{wire:?}");
+        for pair in completions.windows(2) {
+            assert!(pair[0].req_id < pair[1].req_id, "{wire:?}");
+        }
+        let mut batch_frames = 0;
+        for c in &completions {
+            match c.result.as_ref().expect("ok") {
+                funclsh::server::protocol::Reply::Signature(s) => {
+                    assert_eq!(s, &want, "{wire:?}")
+                }
+                funclsh::server::protocol::Reply::Batch(items) => {
+                    batch_frames += 1;
+                    assert_eq!(items.len(), 8, "{wire:?}");
+                    for item in items {
+                        match item.as_ref().expect("row ok") {
+                            funclsh::server::protocol::Reply::Signature(s) => {
+                                assert_eq!(s, &want, "{wire:?}")
+                            }
+                            other => panic!("{wire:?}: unexpected {other:?}"),
+                        }
+                    }
+                }
+                other => panic!("{wire:?}: unexpected {other:?}"),
+            }
+        }
+        assert_eq!(batch_frames, 4, "{wire:?}");
+    }
+    finish(server);
 }
