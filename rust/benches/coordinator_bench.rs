@@ -6,6 +6,7 @@ use funclsh::config::ServiceConfig;
 use funclsh::coordinator::{BoundedQueue, Coordinator, CpuHashPath, Op, Response};
 use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
 use funclsh::hashing::PStableHashBank;
+use funclsh::trace::{Span, SpanWire};
 use funclsh::util::rng::Xoshiro256pp;
 use std::hint::black_box;
 use std::sync::Arc;
@@ -69,16 +70,22 @@ fn main() {
                         .iter()
                         .map(|&x| ((x * 7.3 + id as f64 * 0.01).sin()) as f32)
                         .collect();
-                    inflight.push_back(svc.submit_async(Op::Insert { id, samples }).unwrap());
+                    inflight.push_back(
+                        svc.submit_async(
+                            Op::Insert { id, samples },
+                            Span::disabled(SpanWire::Local),
+                        )
+                        .unwrap(),
+                    );
                     if inflight.len() >= window {
-                        match inflight.pop_front().unwrap().recv().unwrap() {
+                        match inflight.pop_front().unwrap().recv().unwrap().0 {
                             Response::Inserted { .. } => {}
                             other => panic!("{other:?}"),
                         }
                     }
                 }
                 for rx in inflight {
-                    match rx.recv().unwrap() {
+                    match rx.recv().unwrap().0 {
                         Response::Inserted { .. } => {}
                         other => panic!("{other:?}"),
                     }

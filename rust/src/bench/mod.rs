@@ -6,6 +6,7 @@
 //! All `cargo bench` targets in `rust/benches/` are built on this.
 
 pub mod hashbench;
+pub mod observebench;
 pub mod wirebench;
 
 use crate::util::stats::quantile_sorted;

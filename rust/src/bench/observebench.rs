@@ -1,0 +1,278 @@
+//! The `bench-observe` run: what does per-request stage tracing cost?
+//!
+//! Boots pairs of loopback servers — tracing on vs `--no-trace` — and
+//! drives both with identical pipelined batch-256 binary load (the
+//! highest-throughput configuration the serving stack has, i.e. the one
+//! where a fixed per-request overhead hurts the most *per frame* but is
+//! amortized across the most rows). Each mode gets a fresh server per
+//! trial so corpus growth never skews a comparison, trials alternate
+//! modes so thermal/background drift hits both equally, and each mode's
+//! best trial is compared (best-of-N is the standard anti-noise choice
+//! for an A/B throughput gate).
+//!
+//! On top of the overhead number the traced side is reconciled:
+//!
+//! - the `decode` stage count must equal the ops the load generator got
+//!   acked (every traced op stamps every stage, zeros included), and
+//! - every slow-log entry's per-stage sum must cover ≥ 95% of its
+//!   end-to-end time (the stamps partition the span's lifetime, so this
+//!   holds by construction — the check guards the *plumbing*, e.g. a
+//!   stage stamped twice or a span recorded before write-queued).
+//!
+//! `funclsh bench-observe [--quick] [--out F] [--max-overhead-pct F]`
+//! writes `BENCH_observe.json`; CI's `observability-smoke` job runs it
+//! with a gate and uploads the artifact.
+
+use crate::config::ServiceConfig;
+use crate::coordinator::metrics::value_u64;
+use crate::coordinator::{Coordinator, CpuHashPath, HashPath, StatsDetail};
+use crate::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use crate::hashing::PStableHashBank;
+use crate::json::{self, Value};
+use crate::server::{run_load, Client, LoadConfig, LoadReport, Server, WireMode};
+use crate::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// Options of one `bench-observe` run.
+pub struct ObserveBenchOptions {
+    /// CI smoke sizing (fewer ops and trials; same batch-256 shape)
+    pub quick: bool,
+    /// fail the run when tracing costs more than this many percent of
+    /// untraced throughput (infinite = report only)
+    pub max_overhead_pct: f64,
+}
+
+/// Rows per frame in every load run: the grid's largest batch, where
+/// per-row overhead is most amortized and a throughput delta is purest
+/// fixed-cost signal.
+pub const OBSERVE_BATCH: usize = 256;
+
+fn boot(trace: bool) -> (Server, Vec<f64>) {
+    let dim = 64usize;
+    let mut cfg = ServiceConfig {
+        dim,
+        k: 4,
+        l: 8,
+        workers: 4,
+        max_batch: 128,
+        max_wait_us: 200,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    cfg.server.port = 0;
+    cfg.server.trace = trace;
+    let mut rng = Xoshiro256pp::seed_from_u64(0x0B5E);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), dim, 2.0, &mut rng);
+    let points = emb.sample_points().to_vec();
+    let bank = PStableHashBank::new(dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+    let path: Arc<dyn HashPath> = Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank)));
+    let svc = Arc::new(Coordinator::start(&cfg, path));
+    svc.shared_metrics().set_tracing(cfg.server.trace);
+    let server = Server::start(&cfg, svc, points.clone()).expect("bind loopback");
+    (server, points)
+}
+
+fn finish(server: Server) {
+    let (svc, _) = server.shutdown();
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+}
+
+fn load_cfg(threads: usize, ops: usize) -> LoadConfig {
+    LoadConfig {
+        threads,
+        ops_per_thread: ops,
+        pipeline_depth: 8,
+        batch: OBSERVE_BATCH,
+        wire: WireMode::Binary,
+        insert_fraction: 0.2,
+        query_fraction: 0.2,
+        k: 10,
+        seed: 0x0B5E,
+        ..Default::default()
+    }
+}
+
+/// One fresh-server trial; returns the load report plus (for traced
+/// servers) the post-run stats views needed for reconciliation.
+fn trial(trace: bool, threads: usize, ops: usize) -> (LoadReport, Option<(Value, Value)>) {
+    let (server, points) = boot(trace);
+    let report = run_load(server.addr(), &points, &load_cfg(threads, ops)).expect("load run");
+    let views = if trace {
+        let mut c = Client::connect(server.addr()).expect("stats probe");
+        let stages = c.stats(StatsDetail::Stages).expect("stats stages");
+        let slow = c.stats(StatsDetail::Slow).expect("stats slow");
+        Some((stages, slow))
+    } else {
+        None
+    };
+    finish(server);
+    (report, views)
+}
+
+/// Total `decode` stage observations in a `stats detail=stages` reply —
+/// the number of traced ops, since every traced op stamps every stage.
+fn decode_count(stages: &Value) -> u64 {
+    let Some(Value::Array(cells)) = stages.get("stages") else {
+        return 0;
+    };
+    cells
+        .iter()
+        .filter(|c| c.get("stage").and_then(Value::as_str) == Some("decode"))
+        .filter_map(|c| c.get("count").and_then(value_u64))
+        .sum()
+}
+
+/// Worst-case stage-sum / total ratio across the slow log (1.0 when the
+/// log is empty — nothing to falsify).
+fn min_stage_sum_ratio(slow: &Value) -> f64 {
+    let Some(Value::Array(entries)) = slow.get("slow") else {
+        return 1.0;
+    };
+    let mut min = 1.0f64;
+    for e in entries {
+        let Some(total) = e.get("total_ns").and_then(value_u64) else {
+            continue;
+        };
+        if total == 0 {
+            continue;
+        }
+        let sum: u64 = match e.get("stages") {
+            Some(Value::Object(stages)) => {
+                stages.iter().filter_map(|(_, v)| value_u64(v)).sum()
+            }
+            _ => 0,
+        };
+        min = min.min(sum as f64 / total as f64);
+    }
+    min
+}
+
+/// Run the tracing-overhead comparison and return the JSON report.
+pub fn run(opts: &ObserveBenchOptions) -> Value {
+    let (threads, ops, trials) = if opts.quick {
+        (4usize, 4 * OBSERVE_BATCH, 3usize)
+    } else {
+        (8, 16 * OBSERVE_BATCH, 5)
+    };
+    println!(
+        "== bench-observe: tracing on vs off (binary wire, batch {OBSERVE_BATCH}, \
+         {threads} threads x {ops} ops, best of {trials}) =="
+    );
+
+    let mut traced_best = 0.0f64;
+    let mut untraced_best = 0.0f64;
+    let mut traced_rows = Vec::new();
+    let mut untraced_rows = Vec::new();
+    let mut recon_ops_ok = true;
+    let mut min_ratio = 1.0f64;
+    for t in 0..trials {
+        // alternate modes within each trial so slow drift (thermal,
+        // background load) lands on both sides equally
+        let (report, views) = trial(true, threads, ops);
+        let (stages, slow) = views.expect("traced trial returns stats");
+        let traced_ops = decode_count(&stages);
+        // acked ops only: a rejected row is never traced
+        let acked = (report.ops - report.errors) as u64;
+        if traced_ops != acked {
+            recon_ops_ok = false;
+            println!("   !! trial {t}: traced {traced_ops} ops but load acked {acked}");
+        }
+        min_ratio = min_ratio.min(min_stage_sum_ratio(&slow));
+        traced_best = traced_best.max(report.throughput());
+        println!(
+            "   trace=on  trial {t}: {:.0} op/s, p99 {:.3} ms, {} traced ops",
+            report.throughput(),
+            report.latency_p99_s * 1e3,
+            traced_ops
+        );
+        traced_rows.push(report.throughput());
+
+        let (report, _) = trial(false, threads, ops);
+        untraced_best = untraced_best.max(report.throughput());
+        println!(
+            "   trace=off trial {t}: {:.0} op/s, p99 {:.3} ms",
+            report.throughput(),
+            report.latency_p99_s * 1e3
+        );
+        untraced_rows.push(report.throughput());
+    }
+
+    let overhead_pct = (1.0 - traced_best / untraced_best.max(1e-9)) * 100.0;
+    println!(
+        "   best traced {traced_best:.0} op/s vs untraced {untraced_best:.0} op/s \
+         -> overhead {overhead_pct:.2}% (min stage-sum ratio {min_ratio:.4})"
+    );
+    json::object(vec![
+        ("bench", "observe_overhead".into()),
+        ("mode", if opts.quick { "quick" } else { "full" }.into()),
+        ("wire", "binary".into()),
+        ("batch", OBSERVE_BATCH.into()),
+        ("threads", threads.into()),
+        ("ops_per_thread", ops.into()),
+        ("trials", trials.into()),
+        (
+            "traced_ops_s",
+            Value::Array(traced_rows.iter().map(|&t| t.into()).collect()),
+        ),
+        (
+            "untraced_ops_s",
+            Value::Array(untraced_rows.iter().map(|&t| t.into()).collect()),
+        ),
+        ("traced_best_ops_s", traced_best.into()),
+        ("untraced_best_ops_s", untraced_best.into()),
+        ("overhead_pct", overhead_pct.into()),
+        ("stage_counts_reconcile", recon_ops_ok.into()),
+        ("min_stage_sum_ratio", min_ratio.into()),
+        (
+            "gate_max_overhead_pct",
+            if opts.max_overhead_pct.is_finite() {
+                opts.max_overhead_pct.into()
+            } else {
+                Value::Null
+            },
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::object;
+
+    #[test]
+    fn decode_count_sums_across_kinds_and_wires() {
+        let stages = object(vec![(
+            "stages",
+            Value::Array(vec![
+                object(vec![("stage", "decode".into()), ("count", 3.0.into())]),
+                object(vec![("stage", "decode".into()), ("count", 4.0.into())]),
+                object(vec![("stage", "kernel".into()), ("count", 7.0.into())]),
+            ]),
+        )]);
+        assert_eq!(decode_count(&stages), 7);
+        assert_eq!(decode_count(&object(vec![])), 0);
+    }
+
+    #[test]
+    fn stage_sum_ratio_flags_leaky_entries() {
+        let entry = |total: f64, kernel: f64| {
+            object(vec![
+                ("total_ns", total.into()),
+                ("stages", object(vec![("kernel", kernel.into())])),
+            ])
+        };
+        // fully attributed entry: ratio 1
+        let good = object(vec![("slow", Value::Array(vec![entry(1000.0, 1000.0)]))]);
+        assert!((min_stage_sum_ratio(&good) - 1.0).abs() < 1e-12);
+        // an entry whose stages only cover half its wall time
+        let leaky = object(vec![(
+            "slow",
+            Value::Array(vec![entry(1000.0, 1000.0), entry(2000.0, 1000.0)]),
+        )]);
+        assert!((min_stage_sum_ratio(&leaky) - 0.5).abs() < 1e-12);
+        // empty log: nothing to falsify
+        assert_eq!(min_stage_sum_ratio(&object(vec![])), 1.0);
+    }
+}

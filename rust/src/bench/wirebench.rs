@@ -18,12 +18,12 @@
 //! `BENCH_hashpath.json`.
 
 use crate::config::ServiceConfig;
-use crate::coordinator::{Coordinator, CpuHashPath, HashPath};
+use crate::coordinator::{Coordinator, CpuHashPath, HashPath, StatsDetail};
 use crate::embedding::{Embedder, Interval, MonteCarloEmbedder};
 use crate::functions::{Function1D, Sine};
 use crate::hashing::PStableHashBank;
 use crate::json::{self, Value};
-use crate::server::{protocol, run_load, LoadConfig, Server, WireMode};
+use crate::server::{protocol, run_load, Client, LoadConfig, Server, WireMode};
 use crate::util::rng::Xoshiro256pp;
 use std::sync::Arc;
 
@@ -69,6 +69,17 @@ fn sample_row(points: &[f64]) -> Vec<f32> {
     points.iter().map(|&x| f.eval(x) as f32).collect()
 }
 
+/// Median of one stage from a `stats detail=summary` rollup, in ns
+/// (0 when the stage never ran or the server doesn't trace).
+fn stage_p50_ns(summary: &Value, stage: &str) -> f64 {
+    summary
+        .get("stages")
+        .and_then(|s| s.get(stage))
+        .and_then(|s| s.get("p50_ns"))
+        .and_then(Value::as_f64)
+        .unwrap_or(0.0)
+}
+
 /// The batch axis of the grid (1 = single-op frames, the baseline the
 /// batched rows are compared against).
 pub const BATCH_GRID: [usize; 3] = [1, 16, 256];
@@ -102,6 +113,11 @@ pub fn run(opts: &WireBenchOptions) -> Value {
                     ..Default::default()
                 };
                 let report = run_load(server.addr(), &points, &load).expect("load run");
+                // server-side stage medians for this cell: where did the
+                // wall time of this (dim, wire, batch) shape actually go?
+                let summary = Client::connect(server.addr())
+                    .and_then(|mut c| c.stats(StatsDetail::Summary))
+                    .expect("stats summary");
                 let row = sample_row(&points);
                 // exact wire cost of a hash frame at this batch size
                 let frame_bytes = if batch == 1 {
@@ -141,6 +157,13 @@ pub fn run(opts: &WireBenchOptions) -> Value {
                     ("latency_p99_s", report.latency_p99_s.into()),
                     ("hash_frame_bytes", frame_bytes.into()),
                     ("hash_frame_bytes_per_row", (frame_bytes / batch).into()),
+                    ("stage_decode_p50_ns", stage_p50_ns(&summary, "decode").into()),
+                    (
+                        "stage_queue_wait_p50_ns",
+                        stage_p50_ns(&summary, "queue_wait").into(),
+                    ),
+                    ("stage_kernel_p50_ns", stage_p50_ns(&summary, "kernel").into()),
+                    ("stage_encode_p50_ns", stage_p50_ns(&summary, "encode").into()),
                 ]));
                 finish(server);
             }

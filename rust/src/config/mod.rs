@@ -289,6 +289,11 @@ pub struct ServerConfig {
     /// where graceful shutdown snapshots the index (`FLSH1`); empty
     /// string disables the shutdown snapshot
     pub snapshot_path: String,
+    /// per-request stage tracing (on by default — the overhead is a few
+    /// monotonic clock reads per request; `trace = false` / `funclsh
+    /// serve --no-trace` empties the `stats` stage histograms and slow
+    /// log but leaves the op itself answering)
+    pub trace: bool,
 }
 
 impl Default for ServerConfig {
@@ -301,6 +306,7 @@ impl Default for ServerConfig {
             io_workers: 4,
             pipeline_depth: 64,
             snapshot_path: String::new(),
+            trace: true,
         }
     }
 }
@@ -484,6 +490,11 @@ impl ServiceConfig {
         if let Some(v) = doc.get("server", "snapshot_path").and_then(TomlValue::as_str) {
             cfg.server.snapshot_path = v.to_string();
         }
+        if let Some(raw) = doc.get("server", "trace") {
+            cfg.server.trace = raw
+                .as_bool()
+                .ok_or_else(|| ConfigError::msg("server trace must be a boolean"))?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -572,6 +583,7 @@ max_conns = 16
 io_workers = 8
 pipeline_depth = 32
 snapshot_path = "/tmp/idx.flsh"
+trace = false
 "#;
 
     #[test]
@@ -595,6 +607,7 @@ snapshot_path = "/tmp/idx.flsh"
         assert_eq!(cfg.server.io_workers, 8);
         assert_eq!(cfg.server.pipeline_depth, 32);
         assert_eq!(cfg.server.snapshot_path, "/tmp/idx.flsh");
+        assert!(!cfg.server.trace);
     }
 
     #[test]
@@ -609,6 +622,10 @@ snapshot_path = "/tmp/idx.flsh"
         assert_eq!(cfg.server.io_mode, IoMode::EventLoop);
         let cfg = ServiceConfig::from_toml("[server]\nio_mode = \"epoll\"\n").unwrap();
         assert_eq!(cfg.server.io_mode, IoMode::EventLoop);
+        // tracing defaults on; non-boolean values are rejected
+        let cfg = ServiceConfig::from_toml("[server]\nport = 0\n").unwrap();
+        assert!(cfg.server.trace);
+        assert!(ServiceConfig::from_toml("[server]\ntrace = 1\n").is_err());
     }
 
     #[test]

@@ -1,18 +1,186 @@
-//! Service metrics: lock-light counters plus latency/batch-occupancy
-//! distributions, snapshot-able for the stats endpoint and the benches.
+//! Service metrics: lock-light counters, latency/batch-occupancy
+//! distributions, and the observability substrate — per-stage × op-kind
+//! × wire-mode latency histograms (log-bucketed, ns floor, lock-free),
+//! multiprobe/candidate-shape observations, and the worst-K slow-op
+//! ring. Everything is snapshot-able for the `metrics`/`stats` admin
+//! ops and the benches.
 
+use crate::json::Value;
+use crate::trace::{Span, SpanWire, STAGE_COUNT, STAGE_NAMES, WIRE_COUNT};
 use crate::util::stats::{quantile_sorted, Welford};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 /// Maximum samples kept in each reservoir (uniform random replacement).
 const RESERVOIR: usize = 4096;
 
-/// Shared service metrics. Counter updates are atomic; distribution
-/// updates take a short mutex (off the per-request fast path: recorded
-/// once per batch).
-#[derive(Debug, Default)]
+/// Buckets per stage histogram: bucket `i` counts durations in
+/// `[2^i, 2^(i+1))` nanoseconds (bucket 0 also holds 0 ns), so 40
+/// buckets span 1 ns … ~18 minutes.
+pub const HIST_BUCKETS: usize = 40;
+
+/// Independent recording slots: each recording thread is assigned one
+/// (round-robin at first use), so concurrent recorders touch disjoint
+/// cache lines almost always; within a slot, plain relaxed `fetch_add`
+/// keeps sharing correct without locks. Snapshots merge across slots.
+const SLOTS: usize = 8;
+
+/// Number of op kinds a stage histogram is labeled with.
+pub const KIND_COUNT: usize = 5;
+
+/// Kind names as they appear in `stats` output and Prometheus labels.
+pub const KIND_NAMES: [&str; KIND_COUNT] = ["insert", "query", "hash", "remove", "admin"];
+
+/// Worst-K requests kept in the slow-op ring.
+pub const SLOW_LOG_CAP: usize = 32;
+
+/// Deepest multiprobe perturbation depth tracked per query.
+pub const PROBE_DEPTH_TRACKED: usize = 8;
+
+/// JSON numbers are f64: integers above 2^53 round. Counters beyond
+/// that degrade to decimal strings on the wire (the PR 5 id rule).
+const MAX_JSON_SAFE: u64 = 1 << 53;
+
+/// Emit a `u64` as a JSON value without precision loss: a number while
+/// exactly representable, a decimal string beyond 2^53.
+pub fn u64_value(x: u64) -> Value {
+    if x <= MAX_JSON_SAFE {
+        Value::Number(x as f64)
+    } else {
+        Value::String(x.to_string())
+    }
+}
+
+/// Read back a value written by [`u64_value`] (number or decimal
+/// string).
+pub fn value_u64(v: &Value) -> Option<u64> {
+    match v {
+        Value::Number(_) => v.as_u64(),
+        Value::String(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
+/// One lock-free histogram cell: power-of-two ns buckets + count + sum.
+#[derive(Debug)]
+struct AtomicHist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl AtomicHist {
+    fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self {
+            buckets: [ZERO; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn record(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
+/// Bucket index of a duration: `floor(log2(ns))`, clamped to the table.
+#[inline]
+fn bucket_of(ns: u64) -> usize {
+    if ns < 2 {
+        0
+    } else {
+        ((63 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+static NEXT_SLOT: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static MY_SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// This thread's recording slot (assigned round-robin at first use).
+fn my_slot() -> usize {
+    MY_SLOT.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            v
+        } else {
+            let v = NEXT_SLOT.fetch_add(1, Ordering::Relaxed) % SLOTS;
+            s.set(v);
+            v
+        }
+    })
+}
+
+/// Per-slot stage histogram bank: `SLOTS × STAGE_COUNT × KIND_COUNT ×
+/// WIRE_COUNT` cells, flattened.
+#[derive(Debug)]
+struct StageBank {
+    cells: Vec<AtomicHist>,
+}
+
+impl StageBank {
+    fn new() -> Self {
+        let n = SLOTS * STAGE_COUNT * KIND_COUNT * WIRE_COUNT;
+        Self {
+            cells: (0..n).map(|_| AtomicHist::new()).collect(),
+        }
+    }
+
+    #[inline]
+    fn cell(&self, slot: usize, stage: usize, kind: usize, wire: usize) -> &AtomicHist {
+        &self.cells[((slot * STAGE_COUNT + stage) * KIND_COUNT + kind) * WIRE_COUNT + wire]
+    }
+}
+
+/// A worst-K slow-op ring entry: one traced request's full breakdown.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlowEntry {
+    /// sum of all stage durations (== decode→write-queued wall time)
+    pub total_ns: u64,
+    /// per-stage nanoseconds, indexed like [`STAGE_NAMES`]
+    pub stage_ns: [u64; STAGE_COUNT],
+    /// op kind
+    pub kind: RequestKind,
+    /// wire format
+    pub wire: SpanWire,
+    /// kernel batch size the op rode in
+    pub batch: u32,
+}
+
+impl SlowEntry {
+    /// Render for the `stats detail=slow` reply.
+    pub fn to_value(&self) -> Value {
+        let stages = crate::json::object(
+            STAGE_NAMES
+                .iter()
+                .zip(self.stage_ns.iter())
+                .map(|(name, &ns)| (*name, u64_value(ns)))
+                .collect(),
+        );
+        crate::json::object(vec![
+            ("total_ns", u64_value(self.total_ns)),
+            ("kind", KIND_NAMES[kind_index(self.kind)].into()),
+            ("wire", self.wire.name().into()),
+            ("batch", (self.batch as usize).into()),
+            ("stages", stages),
+        ])
+    }
+}
+
+/// Shared service metrics. Counter updates are atomic; stage histograms
+/// are lock-free per-slot atomics merged at snapshot; the reservoir
+/// takes a short mutex (off the per-request fast path: recorded once
+/// per batch).
+#[derive(Debug)]
 pub struct ServiceMetrics {
     requests: AtomicU64,
     inserts: AtomicU64,
@@ -35,6 +203,50 @@ pub struct ServiceMetrics {
     bytes_out_json: AtomicU64,
     bytes_out_binary: AtomicU64,
     dist: Mutex<Dists>,
+    tracing: AtomicBool,
+    stages: StageBank,
+    /// candidates found per multiprobe depth (0 = exact bucket)
+    probe_depth_hits: [AtomicU64; PROBE_DEPTH_TRACKED],
+    /// candidate-set sizes per query (log-bucketed: value = count)
+    candidates: AtomicHist,
+    slow_floor: AtomicU64,
+    slow: Mutex<Vec<SlowEntry>>,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self {
+            requests: ZERO,
+            inserts: ZERO,
+            queries: ZERO,
+            hashes: ZERO,
+            removes: ZERO,
+            admin: ZERO,
+            errors: ZERO,
+            batches: ZERO,
+            conns_opened: ZERO,
+            conns_closed: ZERO,
+            readiness_events: ZERO,
+            backpressure_stalls: ZERO,
+            conns_json: ZERO,
+            conns_binary: ZERO,
+            frames_json: ZERO,
+            frames_binary: ZERO,
+            bytes_in_json: ZERO,
+            bytes_in_binary: ZERO,
+            bytes_out_json: ZERO,
+            bytes_out_binary: ZERO,
+            dist: Mutex::new(Dists::default()),
+            tracing: AtomicBool::new(true),
+            stages: StageBank::new(),
+            probe_depth_hits: [ZERO; PROBE_DEPTH_TRACKED],
+            candidates: AtomicHist::new(),
+            slow_floor: ZERO,
+            slow: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 #[derive(Debug, Default)]
@@ -146,11 +358,147 @@ impl ServiceMetrics {
         }
     }
 
+    /// Turn span stamping/recording on or off (`serve --no-trace`).
+    pub fn set_tracing(&self, on: bool) {
+        self.tracing.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether spans should be created enabled.
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracing.load(Ordering::Relaxed)
+    }
+
+    /// Record one stage observation into this thread's histogram slot.
+    /// Lock-free: a relaxed `fetch_add` per bucket; slots are merged at
+    /// snapshot time.
+    #[inline]
+    pub fn record_stage_ns(&self, stage: usize, kind: RequestKind, wire: SpanWire, ns: u64) {
+        self.stages
+            .cell(my_slot(), stage, kind_index(kind), wire as usize)
+            .record(ns);
+    }
+
+    /// Record a finished span: every stage goes into its histogram (so
+    /// per-stage counts all equal the number of traced requests and
+    /// reconcile against the request counters), and the span competes
+    /// for a slow-ring slot.
+    pub fn record_span(&self, span: &Span) {
+        if !span.is_enabled() {
+            return;
+        }
+        let ns = span.stage_ns();
+        for (stage, &v) in ns.iter().enumerate() {
+            self.record_stage_ns(stage, span.kind, span.wire, v);
+        }
+        let total: u64 = span.total_ns();
+        if total > self.slow_floor.load(Ordering::Relaxed) {
+            self.note_slow(SlowEntry {
+                total_ns: total,
+                stage_ns: *ns,
+                kind: span.kind,
+                wire: span.wire,
+                batch: span.batch,
+            });
+        }
+    }
+
+    fn note_slow(&self, entry: SlowEntry) {
+        let mut slow = self.slow.lock().unwrap();
+        if slow.len() < SLOW_LOG_CAP {
+            slow.push(entry);
+        } else {
+            let (mi, _) = slow
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.total_ns)
+                .unwrap();
+            if slow[mi].total_ns >= entry.total_ns {
+                return;
+            }
+            slow[mi] = entry;
+        }
+        if slow.len() == SLOW_LOG_CAP {
+            let floor = slow.iter().map(|e| e.total_ns).min().unwrap();
+            self.slow_floor.store(floor, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one query's index-probe shape: how many candidates each
+    /// perturbation depth contributed, and the final candidate-set size.
+    pub fn record_query_shape(&self, depth_hits: &[u64], candidates: usize) {
+        for (d, &hits) in depth_hits.iter().take(PROBE_DEPTH_TRACKED).enumerate() {
+            if hits > 0 {
+                self.probe_depth_hits[d].fetch_add(hits, Ordering::Relaxed);
+            }
+        }
+        self.candidates.record(candidates as u64);
+    }
+
+    /// Worst-K traced requests, slowest first.
+    pub fn slow_snapshot(&self) -> Vec<SlowEntry> {
+        let mut v = self.slow.lock().unwrap().clone();
+        v.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+        v
+    }
+
+    /// Merge the per-slot stage histograms into one snapshot.
+    pub fn stage_snapshot(&self) -> StageSnapshot {
+        let mut cells = Vec::new();
+        for stage in 0..STAGE_COUNT {
+            for kind in 0..KIND_COUNT {
+                for wire in 0..WIRE_COUNT {
+                    let mut buckets = [0u64; HIST_BUCKETS];
+                    let mut count = 0u64;
+                    let mut sum_ns = 0u64;
+                    for slot in 0..SLOTS {
+                        let h = self.stages.cell(slot, stage, kind, wire);
+                        count += h.count.load(Ordering::Relaxed);
+                        sum_ns += h.sum_ns.load(Ordering::Relaxed);
+                        for (acc, b) in buckets.iter_mut().zip(h.buckets.iter()) {
+                            *acc += b.load(Ordering::Relaxed);
+                        }
+                    }
+                    if count > 0 {
+                        cells.push(StageCell {
+                            stage,
+                            kind,
+                            wire,
+                            count,
+                            sum_ns,
+                            buckets,
+                        });
+                    }
+                }
+            }
+        }
+        StageSnapshot { cells }
+    }
+
+    /// Index-probe observations: candidates per depth and the
+    /// candidate-set size histogram.
+    pub fn probe_snapshot(&self) -> ProbeSnapshot {
+        let mut depth_hits = [0u64; PROBE_DEPTH_TRACKED];
+        for (d, a) in self.probe_depth_hits.iter().enumerate() {
+            depth_hits[d] = a.load(Ordering::Relaxed);
+        }
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (b, a) in buckets.iter_mut().zip(self.candidates.buckets.iter()) {
+            *b = a.load(Ordering::Relaxed);
+        }
+        ProbeSnapshot {
+            depth_hits,
+            candidate_count: self.candidates.count.load(Ordering::Relaxed),
+            candidate_sum: self.candidates.sum_ns.load(Ordering::Relaxed),
+            candidate_buckets: buckets,
+        }
+    }
+
     /// Point-in-time snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let d = self.dist.lock().unwrap();
         let mut sorted = d.latency_samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample must never panic the metrics path
+        sorted.sort_by(f64::total_cmp);
         let q = |p: f64| {
             if sorted.is_empty() {
                 0.0
@@ -158,6 +506,8 @@ impl ServiceMetrics {
                 quantile_sorted(&sorted, p)
             }
         };
+        let conns_opened = self.conns_opened.load(Ordering::Relaxed);
+        let conns_closed = self.conns_closed.load(Ordering::Relaxed);
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
@@ -167,8 +517,9 @@ impl ServiceMetrics {
             admin: self.admin.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
-            conns_opened: self.conns_opened.load(Ordering::Relaxed),
-            conns_closed: self.conns_closed.load(Ordering::Relaxed),
+            conns_opened,
+            conns_closed,
+            conns_active: conns_opened.saturating_sub(conns_closed),
             readiness_events: self.readiness_events.load(Ordering::Relaxed),
             backpressure_stalls: self.backpressure_stalls.load(Ordering::Relaxed),
             conns_json: self.conns_json.load(Ordering::Relaxed),
@@ -194,6 +545,168 @@ fn splitmix(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Stable label index of a [`RequestKind`] (the [`KIND_NAMES`] order).
+pub fn kind_index(kind: RequestKind) -> usize {
+    match kind {
+        RequestKind::Insert => 0,
+        RequestKind::Query => 1,
+        RequestKind::Hash => 2,
+        RequestKind::Remove => 3,
+        RequestKind::Admin => 4,
+    }
+}
+
+/// One merged histogram cell of the stage snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageCell {
+    /// stage index into [`STAGE_NAMES`]
+    pub stage: usize,
+    /// kind index into [`KIND_NAMES`]
+    pub kind: usize,
+    /// wire index (json/binary/local)
+    pub wire: usize,
+    /// observations
+    pub count: u64,
+    /// total nanoseconds
+    pub sum_ns: u64,
+    /// log-bucketed counts (`buckets[i]` covers `[2^i, 2^(i+1))` ns)
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl StageCell {
+    /// Approximate quantile in nanoseconds (geometric bucket midpoint).
+    pub fn approx_quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return (1u64 << i) as f64 * std::f64::consts::SQRT_2;
+            }
+        }
+        (1u64 << (HIST_BUCKETS - 1)) as f64 * std::f64::consts::SQRT_2
+    }
+
+    /// Render for the `stats detail=stages` reply (bucket tail trimmed).
+    pub fn to_value(&self) -> Value {
+        let last = self
+            .buckets
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let buckets: Vec<Value> = self.buckets[..last].iter().map(|&c| u64_value(c)).collect();
+        crate::json::object(vec![
+            ("stage", STAGE_NAMES[self.stage].into()),
+            ("kind", KIND_NAMES[self.kind].into()),
+            (
+                "wire",
+                ["json", "binary", "local"][self.wire].into(),
+            ),
+            ("count", u64_value(self.count)),
+            ("sum_ns", u64_value(self.sum_ns)),
+            ("p50_ns", self.approx_quantile_ns(0.5).into()),
+            ("p99_ns", self.approx_quantile_ns(0.99).into()),
+            ("buckets", Value::Array(buckets)),
+        ])
+    }
+}
+
+/// Merged stage histograms (only non-empty cells).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSnapshot {
+    /// non-empty cells, in (stage, kind, wire) order
+    pub cells: Vec<StageCell>,
+}
+
+impl StageSnapshot {
+    /// Full rendering: every non-empty cell with buckets.
+    pub fn to_value(&self) -> Value {
+        Value::Array(self.cells.iter().map(StageCell::to_value).collect())
+    }
+
+    /// Compact per-stage rollup (kinds and wires merged): count, total
+    /// ns, p50/p99 — the `stats detail=summary` view.
+    pub fn rollup_value(&self) -> Value {
+        let mut pairs = Vec::new();
+        for stage in 0..STAGE_COUNT {
+            let mut merged = StageCell {
+                stage,
+                kind: 0,
+                wire: 0,
+                count: 0,
+                sum_ns: 0,
+                buckets: [0; HIST_BUCKETS],
+            };
+            for c in self.cells.iter().filter(|c| c.stage == stage) {
+                merged.count += c.count;
+                merged.sum_ns += c.sum_ns;
+                for (a, b) in merged.buckets.iter_mut().zip(c.buckets.iter()) {
+                    *a += b;
+                }
+            }
+            pairs.push((
+                STAGE_NAMES[stage],
+                crate::json::object(vec![
+                    ("count", u64_value(merged.count)),
+                    ("sum_ns", u64_value(merged.sum_ns)),
+                    ("p50_ns", merged.approx_quantile_ns(0.5).into()),
+                    ("p99_ns", merged.approx_quantile_ns(0.99).into()),
+                ]),
+            ));
+        }
+        crate::json::object(pairs)
+    }
+}
+
+/// Index-probe observations snapshot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeSnapshot {
+    /// candidates contributed per perturbation depth (0 = exact bucket)
+    pub depth_hits: [u64; PROBE_DEPTH_TRACKED],
+    /// queries observed
+    pub candidate_count: u64,
+    /// total candidates across queries
+    pub candidate_sum: u64,
+    /// log-bucketed candidate-set sizes
+    pub candidate_buckets: [u64; HIST_BUCKETS],
+}
+
+impl ProbeSnapshot {
+    /// Render for the `stats detail=index` reply.
+    pub fn to_value(&self) -> Value {
+        let last_d = self
+            .depth_hits
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let depth: Vec<Value> = self.depth_hits[..last_d]
+            .iter()
+            .map(|&c| u64_value(c))
+            .collect();
+        let last_b = self
+            .candidate_buckets
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let buckets: Vec<Value> = self.candidate_buckets[..last_b]
+            .iter()
+            .map(|&c| u64_value(c))
+            .collect();
+        crate::json::object(vec![
+            ("probe_depth_hits", Value::Array(depth)),
+            ("queries_observed", u64_value(self.candidate_count)),
+            ("candidates_total", u64_value(self.candidate_sum)),
+            ("candidate_size_buckets", Value::Array(buckets)),
+        ])
+    }
+}
+
 /// Which kind of request is being counted.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestKind {
@@ -205,7 +718,7 @@ pub enum RequestKind {
     Hash,
     /// entry removal
     Remove,
-    /// admin op (metrics, snapshot, ping)
+    /// admin op (metrics, stats, snapshot, ping)
     Admin,
 }
 
@@ -222,7 +735,7 @@ pub struct MetricsSnapshot {
     pub hashes: u64,
     /// removals
     pub removes: u64,
-    /// admin ops (metrics, snapshot, ping)
+    /// admin ops (metrics, stats, snapshot, ping)
     pub admin: u64,
     /// failed requests
     pub errors: u64,
@@ -232,6 +745,8 @@ pub struct MetricsSnapshot {
     pub conns_opened: u64,
     /// network connections closed
     pub conns_closed: u64,
+    /// currently open connections (`opened − closed`, saturating)
+    pub conns_active: u64,
     /// readiness notifications processed by the event-loop server
     pub readiness_events: u64,
     /// read-stalls applied by the event-loop server's backpressure
@@ -264,32 +779,32 @@ pub struct MetricsSnapshot {
 
 impl MetricsSnapshot {
     /// Render as a JSON value (the wire protocol embeds this in the
-    /// `metrics` admin response).
-    pub fn to_value(&self) -> crate::json::Value {
+    /// `metrics` admin response). Counters are emitted u64-safe: exact
+    /// numbers up to 2^53, decimal strings beyond (the PR 5 id rule) —
+    /// long-lived byte counters never silently truncate.
+    pub fn to_value(&self) -> Value {
         crate::json::object(vec![
-            ("requests", (self.requests as usize).into()),
-            ("inserts", (self.inserts as usize).into()),
-            ("queries", (self.queries as usize).into()),
-            ("hashes", (self.hashes as usize).into()),
-            ("removes", (self.removes as usize).into()),
-            ("admin", (self.admin as usize).into()),
-            ("errors", (self.errors as usize).into()),
-            ("batches", (self.batches as usize).into()),
-            ("conns_opened", (self.conns_opened as usize).into()),
-            ("conns_closed", (self.conns_closed as usize).into()),
-            ("readiness_events", (self.readiness_events as usize).into()),
-            (
-                "backpressure_stalls",
-                (self.backpressure_stalls as usize).into(),
-            ),
-            ("conns_json", (self.conns_json as usize).into()),
-            ("conns_binary", (self.conns_binary as usize).into()),
-            ("frames_json", (self.frames_json as usize).into()),
-            ("frames_binary", (self.frames_binary as usize).into()),
-            ("bytes_in_json", (self.bytes_in_json as usize).into()),
-            ("bytes_in_binary", (self.bytes_in_binary as usize).into()),
-            ("bytes_out_json", (self.bytes_out_json as usize).into()),
-            ("bytes_out_binary", (self.bytes_out_binary as usize).into()),
+            ("requests", u64_value(self.requests)),
+            ("inserts", u64_value(self.inserts)),
+            ("queries", u64_value(self.queries)),
+            ("hashes", u64_value(self.hashes)),
+            ("removes", u64_value(self.removes)),
+            ("admin", u64_value(self.admin)),
+            ("errors", u64_value(self.errors)),
+            ("batches", u64_value(self.batches)),
+            ("conns_opened", u64_value(self.conns_opened)),
+            ("conns_closed", u64_value(self.conns_closed)),
+            ("conns_active", u64_value(self.conns_active)),
+            ("readiness_events", u64_value(self.readiness_events)),
+            ("backpressure_stalls", u64_value(self.backpressure_stalls)),
+            ("conns_json", u64_value(self.conns_json)),
+            ("conns_binary", u64_value(self.conns_binary)),
+            ("frames_json", u64_value(self.frames_json)),
+            ("frames_binary", u64_value(self.frames_binary)),
+            ("bytes_in_json", u64_value(self.bytes_in_json)),
+            ("bytes_in_binary", u64_value(self.bytes_in_binary)),
+            ("bytes_out_json", u64_value(self.bytes_out_json)),
+            ("bytes_out_binary", u64_value(self.bytes_out_binary)),
             ("latency_mean_s", self.latency_mean_s.into()),
             ("latency_p50_s", self.latency_p50_s.into()),
             ("latency_p99_s", self.latency_p99_s.into()),
@@ -303,9 +818,66 @@ impl MetricsSnapshot {
     }
 }
 
+/// Render a `stats detail=summary` + `stats detail=stages` pair as
+/// Prometheus text exposition: every line is `name{labels} value` (or
+/// `name value`), which is what `funclsh stats --prom` prints and the
+/// CI smoke job parses.
+pub fn prometheus_render(summary: &Value, stages: &Value) -> String {
+    let mut out = String::new();
+    if let Some(Value::Object(m)) = summary.get("metrics") {
+        for (k, v) in m {
+            let num = match v {
+                Value::Number(n) => Some(*n),
+                Value::String(s) => s.parse::<f64>().ok(),
+                _ => None,
+            };
+            if let Some(n) = num {
+                out.push_str(&format!("funclsh_{k} {n}\n"));
+            }
+        }
+    }
+    if let Some(Value::Object(idx)) = summary.get("index") {
+        for (k, v) in idx {
+            if let Some(n) = v.as_f64() {
+                out.push_str(&format!("funclsh_index_{k} {n}\n"));
+            }
+        }
+    }
+    if let Some(Value::Array(cells)) = stages.get("stages") {
+        for c in cells {
+            let (Some(stage), Some(kind), Some(wire)) = (
+                c.get("stage").and_then(Value::as_str),
+                c.get("kind").and_then(Value::as_str),
+                c.get("wire").and_then(Value::as_str),
+            ) else {
+                continue;
+            };
+            let labels = format!("stage=\"{stage}\",kind=\"{kind}\",wire=\"{wire}\"");
+            if let Some(count) = c.get("count").and_then(value_u64) {
+                out.push_str(&format!("funclsh_stage_ns_count{{{labels}}} {count}\n"));
+            }
+            if let Some(sum) = c.get("sum_ns").and_then(value_u64) {
+                out.push_str(&format!("funclsh_stage_ns_sum{{{labels}}} {sum}\n"));
+            }
+            if let Some(Value::Array(buckets)) = c.get("buckets") {
+                let mut cum = 0u64;
+                for (i, b) in buckets.iter().enumerate() {
+                    cum += value_u64(b).unwrap_or(0);
+                    let le = 1u64 << (i + 1);
+                    out.push_str(&format!(
+                        "funclsh_stage_ns_bucket{{{labels},le=\"{le}\"}} {cum}\n"
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::{Stage, STAGE_COUNT};
 
     #[test]
     fn counters_accumulate() {
@@ -344,11 +916,21 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.conns_opened, 2);
         assert_eq!(s.conns_closed, 1);
+        assert_eq!(s.conns_active, 1);
         assert_eq!(s.admin, 1);
         assert_eq!(s.requests, 1);
         let v = crate::json::parse(&s.to_json()).unwrap();
         assert_eq!(v.get("conns_opened").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("conns_active").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("admin").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn conns_active_saturates() {
+        // a closed count racing ahead of opened must clamp to 0, not wrap
+        let m = ServiceMetrics::new();
+        m.record_conn_closed();
+        assert_eq!(m.snapshot().conns_active, 0);
     }
 
     #[test]
@@ -410,5 +992,248 @@ mod tests {
         let d = m.dist.lock().unwrap();
         assert!(d.latency_samples.len() <= RESERVOIR);
         assert_eq!(d.latency.count(), 10_000);
+    }
+
+    #[test]
+    fn u64_values_degrade_above_2_53() {
+        // small counters stay plain numbers (existing consumers parse
+        // them with as_usize), huge ones become exact decimal strings
+        assert_eq!(u64_value(17), Value::Number(17.0));
+        assert_eq!(u64_value(1 << 53), Value::Number((1u64 << 53) as f64));
+        let big = (1u64 << 53) + 1;
+        assert_eq!(u64_value(big), Value::String(big.to_string()));
+        assert_eq!(value_u64(&u64_value(big)), Some(big));
+        assert_eq!(value_u64(&u64_value(42)), Some(42));
+        // a snapshot with an over-2^53 counter roundtrips exactly
+        let s = MetricsSnapshot {
+            requests: u64::MAX,
+            inserts: 0,
+            queries: 0,
+            hashes: 0,
+            removes: 0,
+            admin: 0,
+            errors: 0,
+            batches: 0,
+            conns_opened: 0,
+            conns_closed: 0,
+            conns_active: 0,
+            readiness_events: 0,
+            backpressure_stalls: 0,
+            conns_json: 0,
+            conns_binary: 0,
+            frames_json: 0,
+            frames_binary: 0,
+            bytes_in_json: 0,
+            bytes_in_binary: 0,
+            bytes_out_json: 0,
+            bytes_out_binary: 0,
+            latency_mean_s: 0.0,
+            latency_p50_s: 0.0,
+            latency_p99_s: 0.0,
+            mean_batch_fill: 0.0,
+        };
+        let v = crate::json::parse(&s.to_json()).unwrap();
+        assert_eq!(
+            v.get("requests").unwrap().as_str(),
+            Some(u64::MAX.to_string().as_str())
+        );
+        assert_eq!(value_u64(v.get("requests").unwrap()), Some(u64::MAX));
+    }
+
+    #[test]
+    fn bucket_of_is_log2_floor() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn span_recording_fills_stage_histograms() {
+        let m = ServiceMetrics::new();
+        let mut span = Span::start(SpanWire::Binary);
+        span.kind = RequestKind::Query;
+        span.stamp(Stage::Decode);
+        span.stamp(Stage::Kernel);
+        m.record_span(&span);
+        let snap = m.stage_snapshot();
+        // every stage records once per span (zeros included), one (kind,
+        // wire) cell each
+        let total: u64 = snap.cells.iter().map(|c| c.count).sum();
+        assert_eq!(total, STAGE_COUNT as u64);
+        for c in &snap.cells {
+            assert_eq!(KIND_NAMES[c.kind], "query");
+            assert_eq!(c.wire, SpanWire::Binary as usize);
+        }
+        // disabled spans record nothing
+        let before = m.stage_snapshot();
+        m.record_span(&Span::disabled(SpanWire::Json));
+        assert_eq!(m.stage_snapshot(), before);
+    }
+
+    #[test]
+    fn slow_ring_keeps_worst_k() {
+        let m = ServiceMetrics::new();
+        for i in 0..100u64 {
+            let mut e = SlowEntry {
+                total_ns: i,
+                stage_ns: [0; STAGE_COUNT],
+                kind: RequestKind::Hash,
+                wire: SpanWire::Json,
+                batch: 1,
+            };
+            e.stage_ns[0] = i;
+            m.note_slow(e);
+        }
+        let slow = m.slow_snapshot();
+        assert_eq!(slow.len(), SLOW_LOG_CAP);
+        assert_eq!(slow[0].total_ns, 99);
+        assert_eq!(slow.last().unwrap().total_ns, 100 - SLOW_LOG_CAP as u64);
+        let v = slow[0].to_value();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("hash"));
+        assert_eq!(
+            v.get("stages").unwrap().get("decode").unwrap().as_u64(),
+            Some(99)
+        );
+    }
+
+    #[test]
+    fn query_shape_observations() {
+        let m = ServiceMetrics::new();
+        m.record_query_shape(&[3, 2, 0], 5);
+        m.record_query_shape(&[1, 0, 0], 1);
+        let p = m.probe_snapshot();
+        assert_eq!(p.depth_hits[0], 4);
+        assert_eq!(p.depth_hits[1], 2);
+        assert_eq!(p.candidate_count, 2);
+        assert_eq!(p.candidate_sum, 6);
+        let v = p.to_value();
+        assert_eq!(v.get("queries_observed").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn hammer_merge_equals_serial_oracle() {
+        // N threads recording into the slotted bank must merge to exactly
+        // what one thread recording the same observations serially sees:
+        // same counts, same per-bucket totals, same sums — hence the same
+        // quantile bounds.
+        const THREADS: usize = 16;
+        const PER_THREAD: usize = 2000;
+        let concurrent = std::sync::Arc::new(ServiceMetrics::new());
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let m = concurrent.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    let ns = ((t * PER_THREAD + i) as u64).wrapping_mul(2654435761) % 1_000_000;
+                    m.record_stage_ns(
+                        (i + t) % STAGE_COUNT,
+                        if i % 2 == 0 {
+                            RequestKind::Query
+                        } else {
+                            RequestKind::Insert
+                        },
+                        if t % 2 == 0 {
+                            SpanWire::Json
+                        } else {
+                            SpanWire::Binary
+                        },
+                        ns,
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let oracle = ServiceMetrics::new();
+        for t in 0..THREADS {
+            for i in 0..PER_THREAD {
+                let ns = ((t * PER_THREAD + i) as u64).wrapping_mul(2654435761) % 1_000_000;
+                oracle.record_stage_ns(
+                    (i + t) % STAGE_COUNT,
+                    if i % 2 == 0 {
+                        RequestKind::Query
+                    } else {
+                        RequestKind::Insert
+                    },
+                    if t % 2 == 0 {
+                        SpanWire::Json
+                    } else {
+                        SpanWire::Binary
+                    },
+                    ns,
+                );
+            }
+        }
+        let got = concurrent.stage_snapshot();
+        let want = oracle.stage_snapshot();
+        assert_eq!(got.cells.len(), want.cells.len());
+        for (g, w) in got.cells.iter().zip(want.cells.iter()) {
+            assert_eq!((g.stage, g.kind, g.wire), (w.stage, w.kind, w.wire));
+            assert_eq!(g.count, w.count);
+            assert_eq!(g.sum_ns, w.sum_ns);
+            assert_eq!(g.buckets, w.buckets);
+            for q in [0.5, 0.9, 0.99] {
+                assert_eq!(g.approx_quantile_ns(q), w.approx_quantile_ns(q));
+            }
+        }
+        let total: u64 = got.cells.iter().map(|c| c.count).sum();
+        assert_eq!(total, (THREADS * PER_THREAD) as u64);
+    }
+
+    #[test]
+    fn prometheus_lines_parse() {
+        let m = ServiceMetrics::new();
+        m.record_request(RequestKind::Query);
+        let mut span = Span::start(SpanWire::Json);
+        span.kind = RequestKind::Query;
+        span.stamp(Stage::Kernel);
+        m.record_span(&span);
+        let summary = crate::json::object(vec![
+            ("metrics", m.snapshot().to_value()),
+            (
+                "index",
+                crate::json::object(vec![("entries", 3usize.into())]),
+            ),
+        ]);
+        let stages = crate::json::object(vec![("stages", m.stage_snapshot().to_value())]);
+        let text = prometheus_render(&summary, &stages);
+        assert!(text.contains("funclsh_requests 1\n"), "{text}");
+        assert!(text.contains("funclsh_conns_active 0\n"), "{text}");
+        assert!(text.contains("funclsh_index_entries 3\n"), "{text}");
+        assert!(
+            text.contains("funclsh_stage_ns_count{stage=\"kernel\",kind=\"query\",wire=\"json\"}"),
+            "{text}"
+        );
+        // every line must match `name{labels} value` / `name value`
+        for line in text.lines() {
+            let (name_labels, value) = line.rsplit_once(' ').unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line}");
+            let name = name_labels.split('{').next().unwrap();
+            assert!(
+                !name.is_empty()
+                    && name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "bad name in {line}"
+            );
+            if let Some(rest) = name_labels.strip_prefix(name) {
+                if !rest.is_empty() {
+                    assert!(rest.starts_with('{') && rest.ends_with('}'), "{line}");
+                }
+            }
+        }
+        // cumulative bucket lines are monotone
+        let counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("funclsh_stage_ns_bucket{stage=\"kernel\""))
+            .map(|l| l.rsplit_once(' ').unwrap().1.parse().unwrap())
+            .collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]));
     }
 }

@@ -24,5 +24,7 @@ pub mod service;
 
 pub use batcher::BoundedQueue;
 pub use hashpath::{fold_projection, CpuHashPath, FoldedHashPath, HashPath, SigView, Signatures};
-pub use metrics::{MetricsSnapshot, ServiceMetrics};
-pub use service::{Coordinator, Op, Response};
+pub use metrics::{
+    prometheus_render, MetricsSnapshot, ProbeSnapshot, ServiceMetrics, SlowEntry, StageSnapshot,
+};
+pub use service::{Coordinator, Op, Response, StatsDetail};

@@ -15,12 +15,16 @@
 
 use super::batcher::BoundedQueue;
 use super::hashpath::{HashPath, SigView, Signatures};
-use super::metrics::{MetricsSnapshot, RequestKind, ServiceMetrics};
+use super::metrics::{
+    u64_value, MetricsSnapshot, RequestKind, ServiceMetrics, SlowEntry, PROBE_DEPTH_TRACKED,
+};
 use crate::config::ServiceConfig;
 use crate::embedding::l2_dist;
+use crate::json::Value;
 use crate::lsh::shard::{read_i32, read_u64, write_i32, write_u64};
-use crate::lsh::{IndexConfig, QueryScratch, ShardedIndex};
+use crate::lsh::{IndexConfig, QueryScratch, ShardHealth, ShardedIndex};
 use crate::search::Hit;
+use crate::trace::{Span, SpanWire, Stage};
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::sync::mpsc;
@@ -65,6 +69,82 @@ pub enum Op {
     },
     /// admin: liveness probe
     Ping,
+    /// admin: observability introspection — stage-latency histograms,
+    /// index health, or the slow-op ring, selected by `detail`
+    Stats {
+        /// which view to return
+        detail: StatsDetail,
+    },
+}
+
+impl Op {
+    /// The metrics label this op is counted and traced under.
+    pub fn kind(&self) -> RequestKind {
+        match self {
+            Op::Hash { .. } => RequestKind::Hash,
+            Op::Insert { .. } => RequestKind::Insert,
+            Op::Query { .. } => RequestKind::Query,
+            Op::Remove { .. } => RequestKind::Remove,
+            Op::Metrics | Op::Snapshot { .. } | Op::Ping | Op::Stats { .. } => RequestKind::Admin,
+        }
+    }
+}
+
+/// Which view of the service's observability state a `stats` op returns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsDetail {
+    /// counters, per-stage latency rollup, and index totals
+    Summary,
+    /// every non-empty stage × op-kind × wire-mode histogram cell
+    Stages,
+    /// per-shard/per-table occupancy plus multiprobe shape observations
+    Index,
+    /// the worst-K traced requests with full per-stage breakdowns
+    Slow,
+}
+
+impl StatsDetail {
+    /// Parse the wire spelling (`summary` / `stages` / `index` / `slow`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "summary" => Some(Self::Summary),
+            "stages" => Some(Self::Stages),
+            "index" => Some(Self::Index),
+            "slow" => Some(Self::Slow),
+            _ => None,
+        }
+    }
+
+    /// Stable wire spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Summary => "summary",
+            Self::Stages => "stages",
+            Self::Index => "index",
+            Self::Slow => "slow",
+        }
+    }
+
+    /// Binary-frame tag (`FBIN1` stats op payload byte).
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Self::Summary => 0,
+            Self::Stages => 1,
+            Self::Index => 2,
+            Self::Slow => 3,
+        }
+    }
+
+    /// Decode the binary-frame tag.
+    pub fn from_u8(b: u8) -> Option<Self> {
+        match b {
+            0 => Some(Self::Summary),
+            1 => Some(Self::Stages),
+            2 => Some(Self::Index),
+            3 => Some(Self::Slow),
+            _ => None,
+        }
+    }
 }
 
 /// A service response.
@@ -100,6 +180,9 @@ pub enum Response {
         /// entries currently indexed
         indexed: u64,
     },
+    /// observability view of a `Stats` op (shape depends on the
+    /// requested [`StatsDetail`]; always carries a `"detail"` key)
+    Stats(Value),
     /// failure
     Error(String),
 }
@@ -107,7 +190,8 @@ pub enum Response {
 struct Request {
     op: Op,
     enqueued: Instant,
-    reply: mpsc::Sender<Response>,
+    trace: Span,
+    reply: mpsc::Sender<(Response, Span)>,
 }
 
 /// A stored corpus entry: the re-rank embedding and the insertion-time
@@ -259,30 +343,43 @@ impl Coordinator {
         }
     }
 
-    /// Submit an operation and block for the response.
+    /// Submit an operation and block for the response (untraced: the
+    /// request rides a disabled span and records no stage histograms).
     pub fn submit(&self, op: Op) -> Response {
-        match self.submit_async(op) {
-            Ok(rx) => rx
-                .recv()
-                .unwrap_or_else(|_| Response::Error("worker dropped request".into())),
-            Err(e) => Response::Error(e),
+        self.submit_traced(op, Span::disabled(SpanWire::Local)).0
+    }
+
+    /// Submit a traced operation and block for the response plus the
+    /// span the workers stamped. The caller owns the final stamps
+    /// (encode / write-queued) and hands the span to
+    /// [`ServiceMetrics::record_span`] once the response is on the wire.
+    pub fn submit_traced(&self, op: Op, span: Span) -> (Response, Span) {
+        match self.submit_async(op, span) {
+            Ok(rx) => rx.recv().unwrap_or_else(|_| {
+                (
+                    Response::Error("worker dropped request".into()),
+                    Span::disabled(SpanWire::Local),
+                )
+            }),
+            Err(e) => (Response::Error(e), Span::disabled(SpanWire::Local)),
         }
     }
 
     /// Submit without blocking for completion; the receiver yields the
-    /// response when a worker finishes the batch containing this op.
-    pub fn submit_async(&self, op: Op) -> Result<mpsc::Receiver<Response>, String> {
-        let kind = match &op {
-            Op::Hash { .. } => RequestKind::Hash,
-            Op::Insert { .. } => RequestKind::Insert,
-            Op::Query { .. } => RequestKind::Query,
-            Op::Remove { .. } => RequestKind::Remove,
-            Op::Metrics | Op::Snapshot { .. } | Op::Ping => RequestKind::Admin,
-        };
+    /// response (and the stamped span) when a worker finishes the batch
+    /// containing this op.
+    pub fn submit_async(
+        &self,
+        op: Op,
+        mut span: Span,
+    ) -> Result<mpsc::Receiver<(Response, Span)>, String> {
+        let kind = op.kind();
+        span.kind = kind;
         let (tx, rx) = mpsc::channel();
         let req = Request {
             op,
             enqueued: Instant::now(),
+            trace: span,
             reply: tx,
         };
         self.queue
@@ -358,8 +455,14 @@ fn worker_loop(
     let mut candidates: Vec<u64> = Vec::new();
     let mut row64: Vec<f64> = Vec::new();
     let dim = hash_path.dim();
-    while let Some(batch) = queue.pop_batch(max_batch, max_wait) {
+    while let Some(mut batch) = queue.pop_batch(max_batch, max_wait) {
         let batch_size = batch.len();
+        // the wait just ended for every op in the batch: attribute it,
+        // and record which kernel batch the op rode in
+        for req in batch.iter_mut() {
+            req.trace.stamp(Stage::QueueWait);
+            req.trace.batch = batch_size as u32;
+        }
         // per-op rejection reasons; a rejected op gets its own error
         // envelope and is excluded from the batched hash/embed/store
         // stages, so one bad request can never fail its co-batched
@@ -385,13 +488,24 @@ fn worker_loop(
                         Some(samples.clone())
                     }
                 }
-                Op::Remove { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping => None,
+                Op::Remove { .. }
+                | Op::Metrics
+                | Op::Snapshot { .. }
+                | Op::Ping
+                | Op::Stats { .. } => None,
             })
             .collect();
+        // row collection + validation done: batch formation is over
+        for req in batch.iter_mut() {
+            req.trace.stamp(Stage::BatchForm);
+        }
         if let Err(e) = hash_path.hash_rows_into(&rows, &mut signatures) {
             for req in batch {
                 metrics.record_error();
-                let _ = req.reply.send(Response::Error(format!("hash path: {e}")));
+                let span = req.trace;
+                let _ = req
+                    .reply
+                    .send((Response::Error(format!("hash path: {e}")), span));
             }
             continue;
         }
@@ -434,6 +548,10 @@ fn worker_loop(
                 _ => None,
             })
             .collect();
+        // the batched hash kernel + embed conversions are done
+        for req in batch.iter_mut() {
+            req.trace.stamp(Stage::Kernel);
+        }
         // 3. apply all inserts under ONE store write lock (per-batch, not
         // per-op — §Perf). Further rejection reasons recorded here:
         // non-finite samples (the wire decoders already refuse them, but
@@ -467,7 +585,7 @@ fn worker_loop(
         }
         // 4. finish each op and reply
         let mut latencies = Vec::with_capacity(batch_size);
-        for (slot, (req, emb)) in batch.into_iter().zip(embeddings).enumerate() {
+        for (slot, (mut req, emb)) in batch.into_iter().zip(embeddings).enumerate() {
             let resp = if let Some(msg) = rejected[slot].take() {
                 metrics.record_error();
                 Response::Error(msg)
@@ -480,6 +598,9 @@ fn worker_loop(
                     Op::Ping => Response::Pong {
                         indexed: state.index.len() as u64,
                     },
+                    Op::Stats { detail } => {
+                        Response::Stats(build_stats(*detail, &metrics, &state))
+                    }
                     Op::Snapshot { path } => write_snapshot(&state, path),
                     Op::Hash { .. } => Response::Signature(SigView::new(
                         block.clone(),
@@ -495,12 +616,15 @@ fn worker_loop(
                             probe_depth,
                             &mut scratch,
                             &mut candidates,
+                            &metrics,
+                            &mut req.trace,
                         )
                     }
                 }
             };
             latencies.push(req.enqueued.elapsed());
-            let _ = req.reply.send(resp);
+            let span = req.trace;
+            let _ = req.reply.send((resp, span));
         }
         metrics.record_batch(batch_size, &latencies);
         // reclaim the block's allocation when nothing escaped with a
@@ -512,6 +636,7 @@ fn worker_loop(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn apply_op(
     state: &State,
     op: &Op,
@@ -520,34 +645,48 @@ fn apply_op(
     probe_depth: usize,
     scratch: &mut QueryScratch,
     candidates: &mut Vec<u64>,
+    metrics: &ServiceMetrics,
+    span: &mut Span,
 ) -> Response {
     match op {
         Op::Insert { id, .. } => {
             // the embedding was already stored (and dedup-checked) under
             // the batch lock in the worker loop
             state.index.insert(*id, signature);
+            span.stamp(Stage::IndexProbe);
             Response::Inserted { id: *id }
         }
         Op::Remove { id } => {
             // look up (and drop) the stored entry; its signature tells the
             // index which buckets to clean
             let entry = state.store.write().unwrap().remove(id);
-            match entry {
+            let resp = match entry {
                 Some(e) => {
                     state.index.remove(*id, &e.sig);
                     Response::Removed { id: *id }
                 }
                 None => Response::Error(format!("unknown id {id}")),
-            }
+            };
+            span.stamp(Stage::IndexProbe);
+            resp
         }
         Op::Query { samples: _, k } => {
             let emb = embedding.expect("query embeds");
             // candidate collection reuses the worker's scratch + buffer;
             // candidates arrive sorted by id, so ties in the re-rank
-            // distance resolve deterministically (stable sort below)
-            state
-                .index
-                .query_into(signature, probe_depth, scratch, candidates);
+            // distance resolve deterministically (stable sort below).
+            // The observed variant also attributes each candidate to the
+            // multiprobe perturbation depth that found it.
+            let mut depth_hits = [0u64; PROBE_DEPTH_TRACKED];
+            state.index.query_into_observed(
+                signature,
+                probe_depth,
+                scratch,
+                candidates,
+                &mut depth_hits,
+            );
+            span.stamp(Stage::IndexProbe);
+            metrics.record_query_shape(&depth_hits, candidates.len());
             let store = state.store.read().unwrap();
             let mut hits: Vec<Hit> = candidates
                 .iter()
@@ -564,12 +703,86 @@ fn apply_op(
             // those must rank last, not panic the batch worker
             hits.sort_by(|a, b| a.distance.total_cmp(&b.distance));
             hits.truncate(*k);
+            span.stamp(Stage::Rerank);
             Response::Hits(hits)
         }
-        Op::Hash { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping => {
+        Op::Hash { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping | Op::Stats { .. } => {
             unreachable!("hash and admin ops are answered in the worker loop")
         }
     }
+}
+
+/// Build the reply of a `stats` op. Every view carries a `"detail"` key
+/// naming itself, so clients (and `funclsh stats`) can dispatch without
+/// remembering what they asked for.
+fn build_stats(detail: StatsDetail, metrics: &ServiceMetrics, state: &State) -> Value {
+    match detail {
+        StatsDetail::Summary => crate::json::object(vec![
+            ("detail", "summary".into()),
+            ("metrics", metrics.snapshot().to_value()),
+            ("stages", metrics.stage_snapshot().rollup_value()),
+            (
+                "index",
+                crate::json::object(vec![
+                    ("entries", u64_value(state.index.len() as u64)),
+                    ("shards", u64_value(state.index.num_shards() as u64)),
+                ]),
+            ),
+        ]),
+        StatsDetail::Stages => crate::json::object(vec![
+            ("detail", "stages".into()),
+            ("stages", metrics.stage_snapshot().to_value()),
+        ]),
+        StatsDetail::Index => {
+            // health() locks one shard at a time, so a large corpus is
+            // walked without ever blocking inserts on the other shards
+            let health = state.index.health();
+            let entries: u64 = health.iter().map(|h| h.entries as u64).sum();
+            let shards: Vec<Value> = health.iter().map(shard_health_value).collect();
+            crate::json::object(vec![
+                ("detail", "index".into()),
+                ("entries", u64_value(entries)),
+                ("shards", Value::Array(shards)),
+                ("probe", metrics.probe_snapshot().to_value()),
+            ])
+        }
+        StatsDetail::Slow => crate::json::object(vec![
+            ("detail", "slow".into()),
+            (
+                "slow",
+                Value::Array(
+                    metrics
+                        .slow_snapshot()
+                        .iter()
+                        .map(SlowEntry::to_value)
+                        .collect(),
+                ),
+            ),
+        ]),
+    }
+}
+
+/// Render one shard's health (entry count + per-table occupancy).
+fn shard_health_value(h: &ShardHealth) -> Value {
+    let tables: Vec<Value> = h
+        .tables
+        .iter()
+        .map(|t| {
+            crate::json::object(vec![
+                ("slots", t.slots.into()),
+                ("buckets", t.buckets.into()),
+                ("entries", t.entries.into()),
+                ("fp_chains", t.fp_chains.into()),
+                ("max_chain", t.max_chain.into()),
+                ("max_bucket", t.max_bucket.into()),
+                ("mean_bucket", t.mean_bucket().into()),
+            ])
+        })
+        .collect();
+    crate::json::object(vec![
+        ("entries", h.entries.into()),
+        ("tables", Value::Array(tables)),
+    ])
 }
 
 /// Magic of the entry-store block appended after the `FLSH1` index dump
@@ -933,21 +1146,27 @@ mod tests {
         // co-batched neighbours (worker = 1 ⇒ same batch window) succeed
         let (svc, points) = test_service(1);
         let rx_bad = svc
-            .submit_async(Op::Hash {
-                samples: vec![0.5; 3],
-            })
+            .submit_async(
+                Op::Hash {
+                    samples: vec![0.5; 3],
+                },
+                Span::disabled(SpanWire::Local),
+            )
             .unwrap();
         let rx_good = svc
-            .submit_async(Op::Insert {
-                id: 1,
-                samples: sample_sine(0.3, &points),
-            })
+            .submit_async(
+                Op::Insert {
+                    id: 1,
+                    samples: sample_sine(0.3, &points),
+                },
+                Span::disabled(SpanWire::Local),
+            )
             .unwrap();
-        match rx_bad.recv().unwrap() {
+        match rx_bad.recv().unwrap().0 {
             Response::Error(e) => assert!(e.contains("dimension"), "{e}"),
             other => panic!("unexpected {other:?}"),
         }
-        assert_eq!(rx_good.recv().unwrap(), Response::Inserted { id: 1 });
+        assert_eq!(rx_good.recv().unwrap().0, Response::Inserted { id: 1 });
         // wrong-width query and insert are refused the same way
         match svc.submit(Op::Query {
             samples: vec![0.5; 999],
@@ -1005,9 +1224,13 @@ mod tests {
         // signature block (the zero-copy contract), not own two clones
         let (svc, points) = test_service(1);
         let s = sample_sine(0.8, &points);
-        let rx1 = svc.submit_async(Op::Hash { samples: s.clone() }).unwrap();
-        let rx2 = svc.submit_async(Op::Hash { samples: s }).unwrap();
-        let (r1, r2) = (rx1.recv().unwrap(), rx2.recv().unwrap());
+        let rx1 = svc
+            .submit_async(Op::Hash { samples: s.clone() }, Span::disabled(SpanWire::Local))
+            .unwrap();
+        let rx2 = svc
+            .submit_async(Op::Hash { samples: s }, Span::disabled(SpanWire::Local))
+            .unwrap();
+        let (r1, r2) = (rx1.recv().unwrap().0, rx2.recv().unwrap().0);
         match (&r1, &r2) {
             (Response::Signature(a), Response::Signature(b)) => {
                 assert_eq!(a, b, "same row hashes identically");
@@ -1092,6 +1315,125 @@ mod tests {
             path: "/definitely/not/a/dir/x.flsh".into(),
         }) {
             Response::Error(e) => assert!(e.contains("snapshot")),
+            other => panic!("unexpected {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stats_op_views_roundtrip() {
+        let (svc, points) = test_service(2);
+        for i in 0..40u64 {
+            svc.submit(Op::Insert {
+                id: i,
+                samples: sample_sine(0.05 * i as f64, &points),
+            });
+        }
+        // traced queries fill the stage histograms and the slow ring once
+        // the caller records the returned span (the transports' job)
+        for q in 0..10 {
+            let (resp, span) = svc.submit_traced(
+                Op::Query {
+                    samples: sample_sine(0.3 + 0.01 * q as f64, &points),
+                    k: 5,
+                },
+                Span::start(SpanWire::Local),
+            );
+            assert!(matches!(resp, Response::Hits(_)), "{resp:?}");
+            assert!(span.total_ns() > 0, "workers must stamp traced spans");
+            assert_eq!(span.kind, RequestKind::Query);
+            assert!(span.batch >= 1);
+            svc.shared_metrics().record_span(&span);
+        }
+        let stats = |detail| match svc.submit(Op::Stats { detail }) {
+            Response::Stats(v) => v,
+            other => panic!("unexpected {other:?}"),
+        };
+
+        let summary = stats(StatsDetail::Summary);
+        assert_eq!(summary.get("detail").unwrap().as_str(), Some("summary"));
+        assert_eq!(
+            summary.get("metrics").unwrap().get("queries").unwrap().as_u64(),
+            Some(10)
+        );
+        let idx = summary.get("index").unwrap();
+        assert_eq!(idx.get("entries").unwrap().as_u64(), Some(40));
+        assert!(idx.get("shards").unwrap().as_u64().unwrap() >= 1);
+        // every stage of the rollup saw exactly the 10 recorded spans
+        for stage in crate::trace::STAGE_NAMES {
+            let s = summary.get("stages").unwrap().get(stage).unwrap();
+            assert_eq!(s.get("count").unwrap().as_u64(), Some(10), "{stage}");
+        }
+
+        let stages = stats(StatsDetail::Stages);
+        let cells = match stages.get("stages").unwrap() {
+            Value::Array(c) => c,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert!(cells.iter().any(|c| {
+            c.get("stage").unwrap().as_str() == Some("kernel")
+                && c.get("kind").unwrap().as_str() == Some("query")
+                && c.get("wire").unwrap().as_str() == Some("local")
+                && c.get("count").unwrap().as_u64() == Some(10)
+        }));
+
+        let index = stats(StatsDetail::Index);
+        assert_eq!(index.get("entries").unwrap().as_u64(), Some(40));
+        let shards = match index.get("shards").unwrap() {
+            Value::Array(s) => s,
+            other => panic!("unexpected {other:?}"),
+        };
+        let per_shard: u64 = shards
+            .iter()
+            .map(|s| s.get("entries").unwrap().as_u64().unwrap())
+            .sum();
+        assert_eq!(per_shard, 40);
+        for s in shards {
+            let tables = match s.get("tables").unwrap() {
+                Value::Array(t) => t,
+                other => panic!("unexpected {other:?}"),
+            };
+            assert_eq!(tables.len(), 8, "one occupancy row per table (l=8)");
+        }
+        let probe = index.get("probe").unwrap();
+        assert_eq!(probe.get("queries_observed").unwrap().as_u64(), Some(10));
+
+        let slow = stats(StatsDetail::Slow);
+        let entries = match slow.get("slow").unwrap() {
+            Value::Array(e) => e,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(entries.len(), 10);
+        let totals: Vec<u64> = entries
+            .iter()
+            .map(|e| e.get("total_ns").unwrap().as_u64().unwrap())
+            .collect();
+        assert!(totals.windows(2).all(|w| w[0] >= w[1]), "slowest first");
+        for e in entries {
+            let total = e.get("total_ns").unwrap().as_u64().unwrap();
+            let stage_sum: u64 = crate::trace::STAGE_NAMES
+                .iter()
+                .map(|n| e.get("stages").unwrap().get(n).unwrap().as_u64().unwrap())
+                .sum();
+            assert_eq!(stage_sum, total, "stages partition the span exactly");
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn untraced_submit_records_no_stage_cells() {
+        let (svc, points) = test_service(1);
+        svc.submit(Op::Insert {
+            id: 1,
+            samples: sample_sine(0.2, &points),
+        });
+        match svc.submit(Op::Stats {
+            detail: StatsDetail::Stages,
+        }) {
+            Response::Stats(v) => match v.get("stages").unwrap() {
+                Value::Array(cells) => assert!(cells.is_empty(), "{cells:?}"),
+                other => panic!("unexpected {other:?}"),
+            },
             other => panic!("unexpected {other:?}"),
         }
         svc.shutdown();

@@ -70,6 +70,7 @@ pub mod search;
 pub mod sequences;
 pub mod server;
 pub mod theory;
+pub mod trace;
 pub mod util;
 pub mod wasserstein;
 pub mod workload;

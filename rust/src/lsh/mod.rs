@@ -35,7 +35,7 @@
 pub mod shard;
 pub mod tuning;
 
-pub use shard::ShardedIndex;
+pub use shard::{ShardHealth, ShardedIndex};
 pub use tuning::{estimate_distances, tune, Tuning, TuningGoal};
 
 use std::collections::HashMap;
@@ -124,21 +124,29 @@ pub struct QueryScratch {
 /// Visit `buf` itself, then every key reachable by perturbing at most
 /// `depth` distinct coordinates by ±1 (the multi-probe neighbourhood of
 /// Lv et al.), restoring `buf` before returning. Probe count is
-/// `Σ_{d≤depth} C(k, d)·2^d`.
-pub(crate) fn for_each_probe(buf: &mut [i32], depth: usize, f: &mut dyn FnMut(&[i32])) {
-    f(buf);
-    probe_rec(buf, 0, depth.min(buf.len()), f);
+/// `Σ_{d≤depth} C(k, d)·2^d`. The callback receives each probe key and
+/// its perturbation depth (0 = the exact key), so callers can attribute
+/// hits to how far from the exact bucket they were found.
+pub(crate) fn for_each_probe(buf: &mut [i32], depth: usize, f: &mut dyn FnMut(&[i32], usize)) {
+    f(buf, 0);
+    probe_rec(buf, 0, depth.min(buf.len()), 1, f);
 }
 
-fn probe_rec(buf: &mut [i32], start: usize, remaining: usize, f: &mut dyn FnMut(&[i32])) {
+fn probe_rec(
+    buf: &mut [i32],
+    start: usize,
+    remaining: usize,
+    level: usize,
+    f: &mut dyn FnMut(&[i32], usize),
+) {
     if remaining == 0 {
         return;
     }
     for i in start..buf.len() {
         for delta in [-1i32, 1] {
             buf[i] = buf[i].wrapping_add(delta);
-            f(buf);
-            probe_rec(buf, i + 1, remaining - 1, f);
+            f(buf, level);
+            probe_rec(buf, i + 1, remaining - 1, level + 1, f);
             buf[i] = buf[i].wrapping_sub(delta);
         }
     }
@@ -242,26 +250,33 @@ impl LshIndex {
     }
 
     /// Append the ids of `key`'s bucket (if any) to `out`, verifying the
-    /// full key behind the fingerprint.
-    fn bucket_into(table: &Table, key: &[i32], out: &mut Vec<u64>) {
+    /// full key behind the fingerprint. Returns how many ids were
+    /// appended (hit-depth attribution).
+    fn bucket_into(table: &Table, key: &[i32], out: &mut Vec<u64>) -> usize {
+        let mut added = 0;
         if let Some(buckets) = table.get(&fingerprint(key)) {
             for b in buckets {
                 if &*b.key == key {
                     out.extend_from_slice(&b.ids);
+                    added += b.ids.len();
                 }
             }
         }
+        added
     }
 
     /// Raw probe pass shared by the flat and sharded query paths: append
     /// every colliding id (with cross-table duplicates) to `out`. The
-    /// caller sorts + dedups once at the end.
+    /// caller sorts + dedups once at the end. Each candidate found at
+    /// perturbation depth `d` increments `depth_hits[d]` when the slice
+    /// is long enough (pass `&mut []` to skip the accounting).
     pub(crate) fn probe_into(
         &self,
         signature: &[i32],
         depth: usize,
         scratch: &mut QueryScratch,
         out: &mut Vec<u64>,
+        depth_hits: &mut [u64],
     ) {
         let k = self.config.k;
         assert_eq!(
@@ -271,12 +286,18 @@ impl LshIndex {
         );
         for (table, key) in self.tables.iter().zip(signature.chunks_exact(k)) {
             if depth == 0 {
-                Self::bucket_into(table, key, out);
+                let added = Self::bucket_into(table, key, out);
+                if let Some(h) = depth_hits.first_mut() {
+                    *h += added as u64;
+                }
             } else {
                 scratch.probe.clear();
                 scratch.probe.extend_from_slice(key);
-                for_each_probe(&mut scratch.probe, depth, &mut |probe| {
-                    Self::bucket_into(table, probe, out);
+                for_each_probe(&mut scratch.probe, depth, &mut |probe, d| {
+                    let added = Self::bucket_into(table, probe, out);
+                    if let Some(h) = depth_hits.get_mut(d) {
+                        *h += added as u64;
+                    }
                 });
             }
         }
@@ -293,8 +314,23 @@ impl LshIndex {
         scratch: &mut QueryScratch,
         out: &mut Vec<u64>,
     ) {
+        self.query_into_observed(signature, depth, scratch, out, &mut []);
+    }
+
+    /// [`LshIndex::query_into`] plus hit-depth attribution: candidates
+    /// found at perturbation depth `d` (pre-dedup) increment
+    /// `depth_hits[d]` — the multiprobe effectiveness signal behind
+    /// `stats detail=index`.
+    pub fn query_into_observed(
+        &self,
+        signature: &[i32],
+        depth: usize,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<u64>,
+        depth_hits: &mut [u64],
+    ) {
         out.clear();
-        self.probe_into(signature, depth, scratch, out);
+        self.probe_into(signature, depth, scratch, out, depth_hits);
         out.sort_unstable();
         out.dedup();
     }
@@ -368,6 +404,72 @@ impl LshIndex {
                 total as f64 / buckets as f64
             },
         }
+    }
+
+    /// Per-table occupancy walk: fingerprint-slot counts, bucket
+    /// distribution, and fingerprint-collision chains — the
+    /// `stats detail=index` payload. One pass per table, read-only.
+    pub fn occupancy(&self) -> Vec<TableOccupancy> {
+        self.tables
+            .iter()
+            .map(|t| {
+                let mut occ = TableOccupancy {
+                    slots: t.len(),
+                    ..TableOccupancy::default()
+                };
+                for chain in t.values() {
+                    occ.buckets += chain.len();
+                    if chain.len() > 1 {
+                        occ.fp_chains += 1;
+                        occ.max_chain = occ.max_chain.max(chain.len());
+                    }
+                    for b in chain {
+                        occ.entries += b.ids.len();
+                        occ.max_bucket = occ.max_bucket.max(b.ids.len());
+                    }
+                }
+                occ
+            })
+            .collect()
+    }
+}
+
+/// Occupancy statistics of one LSH table (one `stats detail=index`
+/// row).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TableOccupancy {
+    /// occupied fingerprint slots
+    pub slots: usize,
+    /// buckets (distinct full keys) across slots
+    pub buckets: usize,
+    /// fingerprint-collision chains (slots holding >1 distinct key)
+    pub fp_chains: usize,
+    /// longest fingerprint-collision chain (0 when no collisions)
+    pub max_chain: usize,
+    /// total ids stored
+    pub entries: usize,
+    /// largest bucket size
+    pub max_bucket: usize,
+}
+
+impl TableOccupancy {
+    /// Mean bucket size (0 when empty).
+    pub fn mean_bucket(&self) -> f64 {
+        if self.buckets == 0 {
+            0.0
+        } else {
+            self.entries as f64 / self.buckets as f64
+        }
+    }
+
+    /// Merge another table's stats into this one (per-shard rollups).
+    pub fn absorb(&mut self, other: &TableOccupancy) {
+        self.slots += other.slots;
+        self.buckets += other.buckets;
+        self.fp_chains += other.fp_chains;
+        self.max_chain = self.max_chain.max(other.max_chain);
+        self.entries += other.entries;
+        self.max_bucket = self.max_bucket.max(other.max_bucket);
     }
 }
 
@@ -515,16 +617,86 @@ mod tests {
         // k = 3, depth 1: 1 + 3*2 = 7 probes
         let mut count = 0usize;
         let mut buf = vec![0i32; 3];
-        for_each_probe(&mut buf, 1, &mut |_| count += 1);
+        for_each_probe(&mut buf, 1, &mut |_, _| count += 1);
         assert_eq!(count, 7);
         assert_eq!(buf, vec![0, 0, 0], "buffer restored");
         // depth 2 adds ordered pairs without replacement: 1 + 6 + 12 = 19,
-        // all unique
+        // all unique, with the reported depth = #perturbed coordinates
         let mut seen = std::collections::HashSet::new();
-        for_each_probe(&mut buf, 2, &mut |p| {
+        let mut by_depth = [0usize; 3];
+        for_each_probe(&mut buf, 2, &mut |p, d| {
             assert!(seen.insert(p.to_vec()), "duplicate probe {p:?}");
+            assert_eq!(d, p.iter().filter(|&&v| v != 0).count());
+            by_depth[d] += 1;
         });
         assert_eq!(seen.len(), 19);
+        assert_eq!(by_depth, [1, 6, 12]);
+    }
+
+    #[test]
+    fn query_depth_hits_attributed() {
+        let mut idx = LshIndex::new(IndexConfig::new(2, 1));
+        idx.insert(1, &[5, 5]); // exact
+        idx.insert(2, &[5, 6]); // one coordinate off
+        idx.insert(3, &[6, 6]); // two coordinates off
+        let mut scratch = QueryScratch::default();
+        let mut out = Vec::new();
+        let mut hits = [0u64; 4];
+        idx.query_into_observed(&[5, 5], 2, &mut scratch, &mut out, &mut hits);
+        assert_eq!(out, vec![1, 2, 3]);
+        assert_eq!(hits[..3], [1, 1, 1]);
+        // a short slice just drops deep attributions
+        let mut shallow = [0u64; 1];
+        idx.query_into_observed(&[5, 5], 2, &mut scratch, &mut out, &mut shallow);
+        assert_eq!(shallow, [1]);
+        // the no-observation path matches
+        let mut plain = Vec::new();
+        idx.query_into(&[5, 5], 2, &mut scratch, &mut plain);
+        assert_eq!(plain, out);
+    }
+
+    #[test]
+    fn occupancy_counts_chains_and_buckets() {
+        let mut idx = LshIndex::new(IndexConfig::new(2, 2));
+        idx.insert(1, &[0, 0, 9, 9]);
+        idx.insert(2, &[0, 0, 8, 8]);
+        idx.insert(3, &[0, 1, 9, 9]);
+        let occ = idx.occupancy();
+        assert_eq!(occ.len(), 2);
+        let t0 = &occ[0];
+        assert_eq!(t0.entries, 3);
+        assert_eq!(t0.buckets, 2); // keys [0,0] (×2 ids) and [0,1]
+        assert_eq!(t0.max_bucket, 2);
+        assert!((t0.mean_bucket() - 1.5).abs() < 1e-12);
+        // distinct fingerprints → no chains in this tiny index
+        assert_eq!(t0.fp_chains, 0);
+        assert_eq!(t0.max_chain, 0);
+        // planted fingerprint collision shows up as a chain
+        let mut planted = LshIndex::new(IndexConfig::new(2, 1));
+        planted.tables[0].insert(
+            fingerprint(&[1, 2]),
+            vec![
+                Bucket {
+                    key: vec![1, 2].into(),
+                    ids: vec![7],
+                },
+                Bucket {
+                    key: vec![3, 4].into(),
+                    ids: vec![9],
+                },
+            ],
+        );
+        let occ = planted.occupancy();
+        assert_eq!(occ[0].fp_chains, 1);
+        assert_eq!(occ[0].max_chain, 2);
+        assert_eq!(occ[0].slots, 1);
+        assert_eq!(occ[0].buckets, 2);
+        // rollup
+        let mut merged = TableOccupancy::default();
+        for t in &occ {
+            merged.absorb(t);
+        }
+        assert_eq!(merged.entries, 2);
     }
 
     #[test]

@@ -79,12 +79,45 @@ impl ShardedIndex {
         scratch: &mut QueryScratch,
         out: &mut Vec<u64>,
     ) {
+        self.query_into_observed(signature, depth, scratch, out, &mut []);
+    }
+
+    /// [`ShardedIndex::query_into`] plus hit-depth attribution:
+    /// candidates found at perturbation depth `d` (pre-dedup, summed
+    /// across shards) increment `depth_hits[d]`.
+    pub fn query_into_observed(
+        &self,
+        signature: &[i32],
+        depth: usize,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<u64>,
+        depth_hits: &mut [u64],
+    ) {
         out.clear();
         for s in &self.shards {
-            s.read().unwrap().probe_into(signature, depth, scratch, out);
+            s.read()
+                .unwrap()
+                .probe_into(signature, depth, scratch, out, depth_hits);
         }
         out.sort_unstable();
         out.dedup();
+    }
+
+    /// Occupancy walk over every shard: read locks are taken **one
+    /// shard at a time**, so inserts to other shards proceed while the
+    /// walk runs (and each lock is held only for one pass over that
+    /// shard's tables).
+    pub fn health(&self) -> Vec<ShardHealth> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let idx = s.read().unwrap();
+                ShardHealth {
+                    entries: idx.len(),
+                    tables: idx.occupancy(),
+                }
+            })
+            .collect()
     }
 
     /// Query all shards and merge candidates (sorted by id,
@@ -155,6 +188,15 @@ impl ShardedIndex {
         }
         Ok(Self { shards, config })
     }
+}
+
+/// Occupancy of one shard: entry count plus per-table walk results.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardHealth {
+    /// entries in the shard
+    pub entries: usize,
+    /// per-table occupancy, in table order
+    pub tables: Vec<super::TableOccupancy>,
 }
 
 /// `InvalidData` error with context (FLSH1 decode failures).
@@ -357,6 +399,36 @@ mod tests {
         bad.extend_from_slice(&u64::MAX.to_le_bytes()); // id count
         let e = ShardedIndex::load(&mut bad.as_slice()).unwrap_err();
         assert!(e.to_string().contains("implausible id count"), "{e}");
+    }
+
+    #[test]
+    fn shard_health_sums_to_len() {
+        let idx = ShardedIndex::new(IndexConfig::new(2, 3), 4);
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        for id in 0..120u64 {
+            idx.insert(id, &random_signature(&mut rng, 6));
+        }
+        let health = idx.health();
+        assert_eq!(health.len(), 4);
+        assert_eq!(health.iter().map(|h| h.entries).sum::<usize>(), 120);
+        for h in &health {
+            assert_eq!(h.tables.len(), 3);
+            for t in &h.tables {
+                assert_eq!(t.entries, h.entries, "each table stores every id once");
+                assert!(t.buckets >= 1);
+                assert!(t.max_bucket >= 1);
+            }
+        }
+        // observed query matches the plain one and attributes depths
+        let sig = random_signature(&mut rng, 6);
+        idx.insert(777, &sig);
+        let mut scratch = QueryScratch::default();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        let mut hits = [0u64; 4];
+        idx.query_into(&sig, 1, &mut scratch, &mut a);
+        idx.query_into_observed(&sig, 1, &mut scratch, &mut b, &mut hits);
+        assert_eq!(a, b);
+        assert!(hits[0] >= 1, "exact bucket must hit the inserted id");
     }
 
     #[test]

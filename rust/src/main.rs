@@ -3,9 +3,10 @@
 //!
 //! ```text
 //! funclsh serve       --port P [--host H] [--io-mode event_loop|threaded]
-//!                     [--config svc.toml] [--snapshot F]
+//!                     [--config svc.toml] [--snapshot F] [--no-trace]
 //!                     (TCP front-end; port 0 binds an ephemeral port and
-//!                      the bound address is printed as JSON on stdout)
+//!                      the bound address is printed as JSON on stdout;
+//!                      --no-trace disables per-request stage tracing)
 //! funclsh serve       [--config svc.toml] [--trace-ops N] [--snapshot F]
 //!                     (no --port: legacy in-process synthetic trace)
 //! funclsh load        [--addr H:P] [--threads N] [--ops N] [--k K]
@@ -14,6 +15,14 @@
 //!                      insert_batch/query_batch frame; 1 = single ops)
 //!                     [--insert-frac F] [--query-frac F]
 //!                     [--seed S] [--shutdown]
+//!                     (the report splices in `server_stages` — the
+//!                      delta of two `stats detail=stages` snapshots
+//!                      bracketing the run — when the server traces)
+//! funclsh stats       [--addr H:P] [--detail summary|stages|index|slow]
+//!                     [--watch N] [--prom]
+//!                     (one observability view as JSON; --watch N
+//!                      refreshes every N seconds, --prom prints the
+//!                      Prometheus text exposition instead)
 //! funclsh experiment  <fig1|fig2|fig3|thm1|qmc|knn|w1|mips|adaptive|all>
 //!                     [--pairs N] [--hashes N] [--dim N] [--seed S]
 //!                     [--out results/]
@@ -25,6 +34,11 @@
 //!                     (JSON-vs-binary loopback wire throughput at
 //!                      dim ∈ {64, 256, 1024} × batch ∈ {1, 16, 256};
 //!                      second trajectory file)
+//! funclsh bench-observe [--quick] [--out BENCH_observe.json]
+//!                     [--max-overhead-pct F]
+//!                     (tracing-on vs --no-trace loopback throughput at
+//!                      batch 256 plus stage reconciliation; the gate
+//!                      fails the run when tracing costs more than F%)
 //! funclsh selftest    [--artifacts DIR]
 //! funclsh info
 //! ```
@@ -43,16 +57,18 @@ fn main() {
     let code = match args.subcommand() {
         Some("serve") => cmd_serve(&args),
         Some("load") => cmd_load(&args),
+        Some("stats") => cmd_stats(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("hash") => cmd_hash(&args),
         Some("bench-hash") => cmd_bench_hash(&args),
         Some("bench-wire") => cmd_bench_wire(&args),
+        Some("bench-observe") => cmd_bench_observe(&args),
         Some("tune") => cmd_tune(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: funclsh <serve|load|experiment|hash|bench-hash|bench-wire|selftest|info> [options]\n\
+                "usage: funclsh <serve|load|stats|experiment|hash|bench-hash|bench-wire|bench-observe|selftest|info> [options]\n\
                  see `funclsh experiment all --out results/` for the paper reproduction"
             );
             2
@@ -199,6 +215,9 @@ fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
             }
         };
     }
+    if args.has("no-trace") {
+        cfg.server.trace = false;
+    }
     // the event loop exists to hold thousands of sockets; lift the
     // process fd ceiling to the hard limit up front
     #[cfg(target_os = "linux")]
@@ -240,6 +259,7 @@ fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
     } else {
         Arc::new(Coordinator::start(&cfg, path))
     };
+    svc.shared_metrics().set_tracing(cfg.server.trace);
     // moved into the server; Server::shutdown hands it back for the
     // final drain once the network layer is quiesced
     let server = match Server::start(&cfg, svc, points) {
@@ -261,6 +281,7 @@ fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
             ("max_conns", cfg.server.max_conns.into()),
             ("io_workers", cfg.server.io_workers.into()),
             ("pipeline_depth", cfg.server.pipeline_depth.into()),
+            ("trace", cfg.server.trace.into()),
         ])
         .to_json()
     );
@@ -291,6 +312,7 @@ fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
 /// `funclsh load`: multi-threaded load generator against a running
 /// server; prints a JSON throughput/latency report on stdout.
 fn cmd_load(args: &Args) -> i32 {
+    use funclsh::coordinator::StatsDetail;
     use funclsh::server::{Client, LoadConfig};
 
     let addr_s = args.get("addr").unwrap_or("127.0.0.1:7070");
@@ -344,13 +366,23 @@ fn cmd_load(args: &Args) -> i32 {
         cfg.wire.as_str(),
         cfg.batch
     );
-    let report = match funclsh::server::run_load(addr, &points, &cfg) {
+    // bracket the run with `stats detail=stages` snapshots: the delta is
+    // what the server itself measured for this run's traffic, attributed
+    // per pipeline stage (empty when the server runs --no-trace)
+    let stages_before = probe.stats(StatsDetail::Stages).ok();
+    let mut report = match funclsh::server::run_load(addr, &points, &cfg) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("load run failed: {e}");
             return 1;
         }
     };
+    if let Some(before) = stages_before {
+        match probe.stats(StatsDetail::Stages) {
+            Ok(after) => report.server_stages = stage_delta(&before, &after),
+            Err(e) => eprintln!("post-run stats fetch failed: {e}"),
+        }
+    }
     println!("{}", report.to_json());
     if args.has("shutdown") {
         match probe.shutdown_server() {
@@ -359,6 +391,122 @@ fn cmd_load(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// Sum a `stats detail=stages` reply into per-stage `(count, sum_ns)`
+/// totals (kinds and wires merged).
+fn stage_totals(stats: &funclsh::json::Value) -> std::collections::BTreeMap<String, (u64, u64)> {
+    use funclsh::coordinator::metrics::value_u64;
+    use funclsh::json::Value;
+    let mut out = std::collections::BTreeMap::new();
+    if let Some(Value::Array(cells)) = stats.get("stages") {
+        for c in cells {
+            let Some(stage) = c.get("stage").and_then(Value::as_str) else {
+                continue;
+            };
+            let count = c.get("count").and_then(value_u64).unwrap_or(0);
+            let sum = c.get("sum_ns").and_then(value_u64).unwrap_or(0);
+            let slot = out.entry(stage.to_string()).or_insert((0u64, 0u64));
+            slot.0 += count;
+            slot.1 += sum;
+        }
+    }
+    out
+}
+
+/// The per-stage delta between two `stats detail=stages` snapshots
+/// bracketing a load run, as the `server_stages` report object. `None`
+/// when nothing was traced in between (e.g. the server runs --no-trace).
+fn stage_delta(
+    before: &funclsh::json::Value,
+    after: &funclsh::json::Value,
+) -> Option<funclsh::json::Value> {
+    use funclsh::coordinator::metrics::u64_value;
+    let b = stage_totals(before);
+    let a = stage_totals(after);
+    let mut fields = Vec::new();
+    for name in funclsh::trace::STAGE_NAMES {
+        let (bc, bs) = b.get(name).copied().unwrap_or((0, 0));
+        let (ac, asum) = a.get(name).copied().unwrap_or((0, 0));
+        let (dc, ds) = (ac.saturating_sub(bc), asum.saturating_sub(bs));
+        if dc > 0 {
+            fields.push((
+                name,
+                funclsh::json::object(vec![
+                    ("count", u64_value(dc)),
+                    ("sum_ns", u64_value(ds)),
+                    ("mean_us", (ds as f64 / dc as f64 / 1e3).into()),
+                ]),
+            ));
+        }
+    }
+    if fields.is_empty() {
+        None
+    } else {
+        Some(funclsh::json::object(fields))
+    }
+}
+
+/// `funclsh stats`: fetch one observability view from a running server
+/// and print it as JSON (or the Prometheus text exposition with
+/// `--prom`); `--watch N` repeats every N seconds until interrupted.
+fn cmd_stats(args: &Args) -> i32 {
+    use funclsh::coordinator::{prometheus_render, StatsDetail};
+    use funclsh::server::Client;
+
+    let addr_s = args.get("addr").unwrap_or("127.0.0.1:7070");
+    let addr: std::net::SocketAddr = match addr_s.parse() {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("invalid --addr `{addr_s}` (want host:port)");
+            return 2;
+        }
+    };
+    let detail_s = args.get("detail").unwrap_or("summary");
+    let detail = match StatsDetail::parse(detail_s) {
+        Some(d) => d,
+        None => {
+            eprintln!("invalid --detail `{detail_s}` (want summary|stages|index|slow)");
+            return 2;
+        }
+    };
+    let watch = args.get_parsed("watch", 0u64);
+    let mut client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("cannot connect to {addr}: {e}");
+            return 1;
+        }
+    };
+    loop {
+        if args.has("prom") {
+            // the Prometheus rendering needs both the counter summary and
+            // the labelled stage cells; fetch the pair every refresh
+            let fetched = client
+                .stats(StatsDetail::Summary)
+                .and_then(|s| client.stats(StatsDetail::Stages).map(|g| (s, g)));
+            match fetched {
+                Ok((summary, stages)) => print!("{}", prometheus_render(&summary, &stages)),
+                Err(e) => {
+                    eprintln!("stats failed: {e}");
+                    return 1;
+                }
+            }
+        } else {
+            match client.stats(detail) {
+                Ok(v) => println!("{}", v.to_json()),
+                Err(e) => {
+                    eprintln!("stats failed: {e}");
+                    return 1;
+                }
+            }
+        }
+        if watch == 0 {
+            return 0;
+        }
+        let _ = std::io::stdout().flush();
+        std::thread::sleep(std::time::Duration::from_secs(watch.max(1)));
+    }
 }
 
 fn cmd_serve(args: &Args) -> i32 {
@@ -490,6 +638,44 @@ fn cmd_bench_wire(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// `funclsh bench-observe`: the tracing-overhead benchmark. Boots two
+/// loopback servers — tracing on and off — drives identical batch-256
+/// load through both, and reports the throughput delta plus a stage
+/// reconciliation (sum of per-stage time vs end-to-end latency) in
+/// `BENCH_observe.json`. `--max-overhead-pct F` turns the report into a
+/// CI gate.
+fn cmd_bench_observe(args: &Args) -> i32 {
+    let opts = funclsh::bench::observebench::ObserveBenchOptions {
+        quick: args.has("quick"),
+        max_overhead_pct: args.get_parsed("max-overhead-pct", f64::INFINITY),
+    };
+    let report = funclsh::bench::observebench::run(&opts);
+    let out = args.get("out").unwrap_or("BENCH_observe.json");
+    let text = report.to_json();
+    match std::fs::write(out, text.clone() + "\n") {
+        Ok(()) => {
+            eprintln!("wrote {out}");
+            println!("{text}");
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            return 1;
+        }
+    }
+    let overhead = report
+        .get("overhead_pct")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    if opts.max_overhead_pct.is_finite() && overhead > opts.max_overhead_pct {
+        eprintln!(
+            "tracing overhead {overhead:.2}% exceeds gate {:.2}%",
+            opts.max_overhead_pct
+        );
+        return 1;
+    }
+    0
 }
 
 /// `funclsh tune`: recommend (k, L, r) for a target workload.

@@ -13,6 +13,7 @@
 //! `benches/server_bench.rs`).
 
 use super::protocol::{self, Reply, WireMode};
+use crate::coordinator::StatsDetail;
 use crate::functions::{Function1D, Sine};
 use crate::json::{object, Value};
 use crate::search::Hit;
@@ -299,6 +300,17 @@ impl Client {
         }
     }
 
+    /// `stats`: one observability view (summary / stages / index / slow)
+    /// as a JSON object (`funclsh stats`).
+    pub fn stats(&mut self, detail: StatsDetail) -> Result<Value, ClientError> {
+        let rid = self.next_id();
+        let frame = protocol::encode_stats_frame(self.wire, Some(rid), detail);
+        match self.call(frame, rid)? {
+            Reply::Stats(v) => Ok(v),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
     /// `snapshot`: server-side FLSH1 dump; returns bytes written.
     pub fn snapshot(&mut self, path: &str) -> Result<u64, ClientError> {
         let rid = self.next_id();
@@ -350,6 +362,7 @@ enum Expect {
     Hits,
     Removed(u64),
     Metrics,
+    Stats,
     Snapshot,
     Pong,
     Points,
@@ -366,6 +379,7 @@ fn reply_matches(expect: Expect, reply: &Reply) -> bool {
         (Expect::Hits, Reply::Hits(_)) => true,
         (Expect::Removed(id), Reply::Removed { id: got }) => *got == id,
         (Expect::Metrics, Reply::Metrics(_)) => true,
+        (Expect::Stats, Reply::Stats(_)) => true,
         (Expect::Snapshot, Reply::Snapshotted { .. }) => true,
         (Expect::Pong, Reply::Pong { .. }) => true,
         (Expect::Points, Reply::Points(_)) => true,
@@ -612,6 +626,15 @@ impl PipelinedClient {
         )
     }
 
+    /// Pipeline a `stats` request.
+    pub fn send_stats(&mut self, detail: StatsDetail) -> Result<Vec<Completion>, ClientError> {
+        let wire = self.wire;
+        self.send(
+            |rid| protocol::encode_stats_frame(wire, Some(rid), detail),
+            Expect::Stats,
+        )
+    }
+
     /// Pipeline a `points` request.
     pub fn send_points(&mut self) -> Result<Vec<Completion>, ClientError> {
         let wire = self.wire;
@@ -820,6 +843,10 @@ pub struct LoadReport {
     pub latency_p99_s: f64,
     /// merged latency histogram
     pub histogram: LatencyHistogram,
+    /// server-side stage totals accumulated *by this run* (the delta of
+    /// two `stats detail=stages` snapshots bracketing the run); `None`
+    /// when the caller didn't fetch them (e.g. tracing disabled)
+    pub server_stages: Option<Value>,
 }
 
 impl LoadReport {
@@ -830,7 +857,7 @@ impl LoadReport {
 
     /// Render as a JSON object (the `funclsh load` output).
     pub fn to_json(&self) -> String {
-        object(vec![
+        let mut fields = vec![
             ("ops", self.ops.into()),
             ("inserts", self.inserts.into()),
             ("queries", self.queries.into()),
@@ -845,8 +872,11 @@ impl LoadReport {
             ("latency_p50_s", self.latency_p50_s.into()),
             ("latency_p99_s", self.latency_p99_s.into()),
             ("histogram", self.histogram.to_value()),
-        ])
-        .to_json()
+        ];
+        if let Some(stages) = &self.server_stages {
+            fields.push(("server_stages", stages.clone()));
+        }
+        object(fields).to_json()
     }
 }
 
@@ -978,7 +1008,10 @@ pub fn run_load(
         return Err(e);
     }
     let elapsed = t0.elapsed();
-    merged.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN latency (impossible today, but this sort must not
+    // be the thing that panics a finished load run) sorts to the end
+    // instead of aborting
+    merged.latencies.sort_by(f64::total_cmp);
     let q = |p: f64| {
         if merged.latencies.is_empty() {
             0.0
@@ -1005,6 +1038,7 @@ pub fn run_load(
         latency_p50_s: q(0.5),
         latency_p99_s: q(0.99),
         histogram: merged.histogram,
+        server_stages: None,
     })
 }
 
@@ -1102,6 +1136,7 @@ mod tests {
             latency_p50_s: 0.001,
             latency_p99_s: 0.002,
             histogram: LatencyHistogram::default(),
+            server_stages: None,
         };
         assert!((report.throughput() - 100.0).abs() < 1.0);
         let v = crate::json::parse(&report.to_json()).unwrap();
@@ -1110,5 +1145,14 @@ mod tests {
         assert_eq!(v.get("batch").unwrap().as_usize(), Some(16));
         assert_eq!(v.get("wire").unwrap().as_str(), Some("binary"));
         assert!(v.get("throughput_ops_s").unwrap().as_f64().unwrap() > 0.0);
+        // server_stages is omitted unless the caller spliced one in
+        assert!(v.get("server_stages").is_none());
+        let mut with = report.clone();
+        with.server_stages = Some(object(vec![("traced", 10.0.into())]));
+        let v = crate::json::parse(&with.to_json()).unwrap();
+        assert_eq!(
+            v.get("server_stages").unwrap().get("traced").unwrap().as_usize(),
+            Some(10)
+        );
     }
 }

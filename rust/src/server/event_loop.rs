@@ -8,7 +8,8 @@
 //! clients ── TCP ──▶ │ accept / read / shared protocol::Framer     │
 //!                    │  (newline JSON, or FBIN1 length prefixes    │
 //!                    │   when the first 5 bytes negotiate binary)  │
-//!                    │   parse → Job{token, seq, req_id, ops, wire}│
+//!                    │   parse → Job{token, seq, req_id, ops, wire,│
+//!                    │           span (decode stamped)}            │
 //!                    └──────────────┬──────────────────────────────┘
 //!                                   │ BoundedQueue<Job>
 //!                          io_workers threads: submit_async the whole
@@ -33,6 +34,7 @@
 use super::protocol::{self, Framer, FramerStep, WireMode};
 use super::reactor::{event, Poller, Waker};
 use crate::coordinator::{BoundedQueue, Coordinator, Op, Response, ServiceMetrics};
+use crate::trace::{Span, Stage};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -67,6 +69,9 @@ struct Job {
     /// frame format of the connection that sent it (the response is
     /// encoded in the same format)
     wire: WireMode,
+    /// the frame's trace span, already stamped through decode; every op
+    /// the job carries rides its own copy through the coordinator
+    span: Span,
 }
 
 /// What one frame asked the coordinator to do.
@@ -79,11 +84,15 @@ enum JobPayload {
 }
 
 /// A finished response on its way back to the epoll thread, already
-/// encoded as complete wire bytes for its connection's mode.
+/// encoded as complete wire bytes for its connection's mode. `spans`
+/// carries the frame's traced ops, stamped through encode; the loop adds
+/// the write-queued stamp when the frame enters the write buffer (empty
+/// — no allocation — for untraced requests and inline completions).
 struct Completion {
     token: u64,
     seq: u64,
     frame: Vec<u8>,
+    spans: Vec<Span>,
 }
 
 /// Handles owned by [`super::Server`] for the event-loop runtime.
@@ -193,6 +202,7 @@ fn worker_loop(
                 req_id,
                 payload,
                 wire,
+                span,
             } = job;
             // every op of every job is submitted before any is awaited,
             // so wire concurrency AND in-frame batching both turn into
@@ -200,8 +210,10 @@ fn worker_loop(
             // shared submit_batch_async, so both runtimes emit identical
             // per-item error envelopes
             let (rxs, batched) = match payload {
-                JobPayload::One(op) => (super::submit_batch_async(svc, vec![Ok(op)]), false),
-                JobPayload::Batch(items) => (super::submit_batch_async(svc, items), true),
+                JobPayload::One(op) => {
+                    (super::submit_batch_async(svc, vec![Ok(op)], span), false)
+                }
+                JobPayload::Batch(items) => (super::submit_batch_async(svc, items, span), true),
             };
             waits.push(Wait {
                 token,
@@ -214,7 +226,7 @@ fn worker_loop(
         }
         let mut done = Vec::with_capacity(waits.len());
         for w in waits {
-            let results: Vec<Response> = super::collect_batch(w.rxs);
+            let (results, mut spans): (Vec<Response>, Vec<Span>) = super::collect_batch(w.rxs);
             // Signature responses serialize straight from the
             // coordinator's shared flat block here; the oversize guard
             // degrades an unframeable response to a correlated error
@@ -224,10 +236,14 @@ fn worker_loop(
             } else {
                 protocol::encode_response_frame(w.wire, w.req_id, &results[0])
             };
+            for s in spans.iter_mut() {
+                s.stamp(Stage::Encode);
+            }
             done.push(Completion {
                 token: w.token,
                 seq: w.seq,
                 frame,
+                spans,
             });
         }
         completions.lock().unwrap().extend(done);
@@ -253,8 +269,9 @@ struct Conn {
     /// sequence number of the next response to put on the wire
     next_write_seq: u64,
     /// out-of-order completions parked until their turn (pre-encoded
-    /// frames in this connection's wire mode)
-    completed: BTreeMap<u64, Vec<u8>>,
+    /// frames in this connection's wire mode, plus the traced spans
+    /// awaiting their write-queued stamp)
+    completed: BTreeMap<u64, (Vec<u8>, Vec<Span>)>,
     /// EOF seen, or reads retired by shutdown
     read_closed: bool,
     /// fatal protocol error: close once all responses have flushed
@@ -294,18 +311,24 @@ impl Conn {
         s
     }
 
-    fn complete(&mut self, seq: u64, frame: Vec<u8>) {
-        self.completed.insert(seq, frame);
+    fn complete(&mut self, seq: u64, frame: Vec<u8>, spans: Vec<Span>) {
+        self.completed.insert(seq, (frame, spans));
     }
 
     /// Move in-order completions into the write buffer (frames carry
     /// their own terminator/prefix); returns the bytes moved so the
-    /// caller can feed the per-wire-mode output counters.
-    fn flush_ready(&mut self) -> usize {
+    /// caller can feed the per-wire-mode output counters. Traced spans
+    /// finish here — write-queued is stamped the moment the frame's
+    /// bytes are queued for the socket, then the span is recorded.
+    fn flush_ready(&mut self, metrics: &ServiceMetrics) -> usize {
         let before = self.write_buf.len();
-        while let Some(frame) = self.completed.remove(&self.next_write_seq) {
+        while let Some((frame, mut spans)) = self.completed.remove(&self.next_write_seq) {
             self.write_buf.extend_from_slice(&frame);
             self.next_write_seq += 1;
+            for span in spans.iter_mut() {
+                span.stamp(Stage::WriteQueued);
+                metrics.record_span(span);
+            }
         }
         self.write_buf.len() - before
     }
@@ -497,7 +520,11 @@ impl LoopState {
                 FramerStep::Pending => break,
                 FramerStep::Fatal { wire, msg } => {
                     let seq = conn.take_seq();
-                    conn.complete(seq, protocol::encode_error_frame(wire, None, &msg));
+                    conn.complete(
+                        seq,
+                        protocol::encode_error_frame(wire, None, &msg),
+                        Vec::new(),
+                    );
                     conn.close_after_flush = true;
                     conn.read_closed = true;
                 }
@@ -526,8 +553,10 @@ impl LoopState {
     /// runtimes, like the framing itself.
     fn handle_frame(&mut self, conn: &mut Conn, token: u64, wire: WireMode, payload: &[u8]) {
         let seq = conn.take_seq();
+        let mut span = Span::new(super::span_wire(wire), self.metrics.tracing_enabled());
         let parsed = protocol::parse_frame_payload(wire, payload);
-        self.route(conn, token, seq, wire, parsed);
+        span.stamp(Stage::Decode);
+        self.route(conn, token, seq, wire, parsed, span);
     }
 
     /// Shared request routing: transport ops answered inline, coordinator
@@ -540,21 +569,31 @@ impl LoopState {
         seq: u64,
         wire: WireMode,
         parsed: Result<protocol::Request, protocol::RequestError>,
+        span: Span,
     ) {
         match parsed {
             Err(e) => {
                 conn.complete(
                     seq,
                     protocol::encode_error_frame(wire, e.req_id, &format!("bad request: {e}")),
+                    Vec::new(),
                 );
             }
             Ok(protocol::Request { req_id, body }) => match body {
                 protocol::RequestBody::Points => {
-                    conn.complete(seq, protocol::encode_points_frame(wire, req_id, &self.points));
+                    conn.complete(
+                        seq,
+                        protocol::encode_points_frame(wire, req_id, &self.points),
+                        Vec::new(),
+                    );
                 }
                 protocol::RequestBody::Shutdown => {
                     self.shutdown.store(true, Ordering::SeqCst);
-                    conn.complete(seq, protocol::encode_shutting_down_frame(wire, req_id));
+                    conn.complete(
+                        seq,
+                        protocol::encode_shutting_down_frame(wire, req_id),
+                        Vec::new(),
+                    );
                 }
                 protocol::RequestBody::Op(op) => self.dispatch(Job {
                     token,
@@ -562,6 +601,7 @@ impl LoopState {
                     req_id,
                     payload: JobPayload::One(op),
                     wire,
+                    span,
                 }),
                 protocol::RequestBody::Batch(items) => self.dispatch(Job {
                     token,
@@ -569,6 +609,7 @@ impl LoopState {
                     req_id,
                     payload: JobPayload::Batch(items),
                     wire,
+                    span,
                 }),
             },
         }
@@ -600,7 +641,7 @@ impl LoopState {
         let mut touched: Vec<u64> = Vec::with_capacity(done.len());
         for c in done {
             if let Some(conn) = self.conns.get_mut(&c.token) {
-                conn.complete(c.seq, c.frame);
+                conn.complete(c.seq, c.frame, c.spans);
                 touched.push(c.token);
             }
         }
@@ -619,7 +660,7 @@ impl LoopState {
 
     /// Flush, decide close-vs-keep, and refresh poller interest.
     fn settle(&mut self, token: u64, mut conn: Conn) {
-        let moved = conn.flush_ready();
+        let moved = conn.flush_ready(&self.metrics);
         if moved > 0 {
             self.metrics
                 .record_wire_out(conn.framer.wire_mode() == WireMode::Binary, moved as u64);

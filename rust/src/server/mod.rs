@@ -89,6 +89,9 @@
 //! {"op":"query",    "samples":[f32…], "k":usize}
 //! {"op":"remove",   "id":u64}
 //! {"op":"metrics"}
+//! {"op":"stats",    "detail":"summary"}  (observability views; `detail` is
+//!                                         optional — "summary" (default),
+//!                                         "stages", "index", or "slow")
 //! {"op":"snapshot", "path":"…"}          (full-state dump — FLSH1 index
 //!                                         block + EMBS1 entry store —
 //!                                         to a server-side path)
@@ -116,6 +119,7 @@
 //! {"ok":true, "req_id":…, "type":"hits",      "hits":[{"id":u64,"distance":f64}…]}
 //! {"ok":true, "req_id":…, "type":"removed",   "id":u64}
 //! {"ok":true, "req_id":…, "type":"metrics",   "metrics":{…}}
+//! {"ok":true, "req_id":…, "type":"stats",     "stats":{"detail":…, …}}
 //! {"ok":true, "req_id":…, "type":"snapshot",  "path":"…", "bytes":u64}
 //! {"ok":true, "req_id":…, "type":"pong",      "indexed":u64}
 //! {"ok":true, "req_id":…, "type":"points",    "points":[f64…]}
@@ -155,6 +159,7 @@
 //! op 11 insert_batch  count:u32, dim:u32, ids:[u64; count],
 //!                     samples:[f32; count·dim]
 //! op 12 query_batch   count:u32, dim:u32, samples:[f32; count·dim], k:u64
+//! op 13 stats         detail:u8 (0 summary, 1 stages, 2 index, 3 slow)
 //! ```
 //!
 //! Batch rows are contiguous (`row r` occupies samples
@@ -167,8 +172,8 @@
 //! = `req_id:u64` follows). Errors carry `len:u32, msg:[utf8; len]`;
 //! successes carry `type:u8` + body mirroring the JSON responses
 //! (`signature` = `n:u32` + raw `i32`s, `hits` = `n:u32` + `(id:u64,
-//! distance:f64)` pairs, `metrics` = a length-prefixed JSON string,
-//! `points` = `n:u32` + `f64`s, acks = their `u64`). Batch responses are
+//! distance:f64)` pairs, `metrics` and `stats` = a length-prefixed JSON
+//! string, `points` = `n:u32` + `f64`s, acks = their `u64`). Batch responses are
 //! `type:u8 = 10` + `n:u32` + per item a `status:u8` followed by either
 //! the single-op reply body (ok) or `len:u32, msg:[utf8; len]` (error),
 //! in request row order.
@@ -191,6 +196,35 @@
 //! `bytes_out_json`/`bytes_out_binary` (response bytes queued) — so the
 //! `bench-wire` grid can be cross-checked against a live server's
 //! `metrics` op.
+//!
+//! ## Request tracing and the `stats` op
+//!
+//! Unless tracing is disabled (`funclsh serve --no-trace`, or
+//! `[server] trace = false`), both runtimes stamp a [`crate::trace::Span`]
+//! through every coordinator op's lifecycle: *decode* (frame parse) →
+//! *queue_wait* (admission queue → batcher pop) → *batch_form* (row
+//! collection) → *kernel* (blocked hash + embed) → *index_probe* (insert /
+//! remove / multiprobe lookup) → *rerank* (exact re-rank, queries only) →
+//! *encode* (response serialization) → *write_queued* (bytes handed to the
+//! socket). The stamps *partition* a request's wall time — each stage is
+//! charged the time since the previous stamp, so the per-stage sum equals
+//! the end-to-end latency by construction. Finished spans land in
+//! lock-free per-stage × per-op-kind × per-wire-mode histograms and a
+//! worst-K slow-request ring, all served by the `stats` op:
+//!
+//! * `detail:"summary"` — counters + per-stage rollup + index totals,
+//! * `detail:"stages"` — every non-empty histogram cell (count, sum,
+//!   p50/p99, log₂ ns buckets),
+//! * `detail:"index"` — per-shard/per-table occupancy, fingerprint
+//!   collision chains, probe-depth hit distribution, candidate-set sizes,
+//! * `detail:"slow"` — the worst-K traced requests with full per-stage
+//!   breakdowns.
+//!
+//! `funclsh stats --addr … [--detail …] [--watch N] [--prom]` renders
+//! these views from the CLI (including a Prometheus text exposition).
+//! A batch frame yields one span per op it carried (the shared decode
+//! time is attributed to each); transport ops (`points`, `shutdown`) and
+//! parse failures are untraced.
 //!
 //! # Pipelining contract
 //!
@@ -266,7 +300,8 @@ pub use protocol::WireMode;
 pub use reactor::raise_nofile_limit;
 
 use crate::config::{IoMode, ServiceConfig};
-use crate::coordinator::{BoundedQueue, Coordinator};
+use crate::coordinator::{BoundedQueue, Coordinator, ServiceMetrics};
+use crate::trace::{Span, SpanWire, Stage};
 use protocol::{Request, RequestBody};
 use std::io::{BufWriter, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -542,9 +577,16 @@ fn serve_stream(
                         counted_mode = true;
                     }
                     metrics.record_wire_in(wire == WireMode::Binary, 1, payload.len() as u64);
-                    let reply = answer_frame(wire, payload, svc, points, shutdown);
+                    let (reply, mut spans) =
+                        answer_frame(wire, payload, svc, points, shutdown, &metrics);
                     metrics.record_wire_out(wire == WireMode::Binary, reply.len() as u64);
                     write_frame(&mut writer, &reply)?;
+                    // the threaded runtime flushes inline, so the
+                    // write-queued stage covers the actual socket write
+                    for span in spans.iter_mut() {
+                        span.stamp(Stage::WriteQueued);
+                        metrics.record_span(span);
+                    }
                     if shutdown.load(Ordering::SeqCst) {
                         return Ok(());
                     }
@@ -584,30 +626,59 @@ fn write_frame(writer: &mut BufWriter<TcpStream>, frame: &[u8]) -> std::io::Resu
     writer.flush()
 }
 
+/// The trace wire label for a connection's negotiated frame format.
+pub(crate) fn span_wire(mode: protocol::WireMode) -> SpanWire {
+    match mode {
+        protocol::WireMode::Json => SpanWire::Json,
+        protocol::WireMode::Binary => SpanWire::Binary,
+    }
+}
+
 /// Decode one request frame payload and produce the complete response
-/// frame in the same wire mode.
+/// frame in the same wire mode, plus the stamped trace spans of every
+/// coordinator op the frame carried (empty for transport ops, parse
+/// failures, and untraced requests). The caller owns the final
+/// write-queued stamp and hands each span to
+/// [`ServiceMetrics::record_span`].
 fn answer_frame(
     mode: protocol::WireMode,
     payload: &[u8],
     svc: &Arc<Coordinator>,
     points: &Arc<Vec<f64>>,
     shutdown: &Arc<AtomicBool>,
-) -> Vec<u8> {
-    match protocol::parse_frame_payload(mode, payload) {
-        Err(e) => protocol::encode_error_frame(mode, e.req_id, &format!("bad request: {e}")),
+    metrics: &ServiceMetrics,
+) -> (Vec<u8>, Vec<Span>) {
+    let mut span = Span::new(span_wire(mode), metrics.tracing_enabled());
+    let parsed = protocol::parse_frame_payload(mode, payload);
+    span.stamp(Stage::Decode);
+    match parsed {
+        Err(e) => (
+            protocol::encode_error_frame(mode, e.req_id, &format!("bad request: {e}")),
+            Vec::new(),
+        ),
         Ok(Request { req_id, body }) => match body {
-            RequestBody::Points => protocol::encode_points_frame(mode, req_id, points),
+            RequestBody::Points => (
+                protocol::encode_points_frame(mode, req_id, points),
+                Vec::new(),
+            ),
             RequestBody::Shutdown => {
                 shutdown.store(true, Ordering::SeqCst);
-                protocol::encode_shutting_down_frame(mode, req_id)
+                (protocol::encode_shutting_down_frame(mode, req_id), Vec::new())
             }
             RequestBody::Op(op) => {
-                let resp = svc.submit(op);
-                protocol::encode_response_frame(mode, req_id, &resp)
+                let (resp, mut rspan) = svc.submit_traced(op, span);
+                let frame = protocol::encode_response_frame(mode, req_id, &resp);
+                rspan.stamp(Stage::Encode);
+                let spans = if rspan.is_enabled() { vec![rspan] } else { Vec::new() };
+                (frame, spans)
             }
             RequestBody::Batch(items) => {
-                let results = submit_batch(svc, items);
-                protocol::encode_batch_response_frame(mode, req_id, &results)
+                let (results, mut spans) = submit_batch(svc, items, span);
+                let frame = protocol::encode_batch_response_frame(mode, req_id, &results);
+                for s in spans.iter_mut() {
+                    s.stamp(Stage::Encode);
+                }
+                (frame, spans)
             }
         },
     }
@@ -616,39 +687,60 @@ fn answer_frame(
 /// Per-item outcomes of a submitted batch: a receiver for items the
 /// coordinator accepted, or the ready error envelope for items that
 /// failed wire decode / admission.
-pub(crate) type PendingBatch =
-    Vec<Result<std::sync::mpsc::Receiver<crate::coordinator::Response>, crate::coordinator::Response>>;
+pub(crate) type PendingBatch = Vec<
+    Result<
+        std::sync::mpsc::Receiver<(crate::coordinator::Response, Span)>,
+        crate::coordinator::Response,
+    >,
+>;
 
 /// Fan one batch frame's items into the coordinator *without awaiting*
 /// any of them, so the rows co-occupy one dynamic batch. Shared by both
 /// runtimes — the per-item error-envelope wording must stay identical
 /// between them (the runtime-parity property tests compare reply bytes).
+/// Every accepted item rides its own copy of the frame's span (`Span` is
+/// `Copy`), so one batch frame yields one trace per op — the shared
+/// decode time is attributed to each.
 pub(crate) fn submit_batch_async(
     svc: &Coordinator,
     items: Vec<Result<crate::coordinator::Op, String>>,
+    span: Span,
 ) -> PendingBatch {
     use crate::coordinator::Response;
     items
         .into_iter()
         .map(|item| match item {
-            Ok(op) => svc.submit_async(op).map_err(Response::Error),
+            Ok(op) => svc.submit_async(op, span).map_err(Response::Error),
             Err(msg) => Err(Response::Error(format!("bad request: {msg}"))),
         })
         .collect()
 }
 
-/// Await a [`submit_batch_async`] submission in row order.
-pub(crate) fn collect_batch(pending: PendingBatch) -> Vec<crate::coordinator::Response> {
+/// Await a [`submit_batch_async`] submission in row order. Returns the
+/// responses plus the stamped spans of the traced items (per-item
+/// failures and untraced requests contribute no span, so the histogram
+/// counts stay reconcilable against completed traced ops).
+pub(crate) fn collect_batch(
+    pending: PendingBatch,
+) -> (Vec<crate::coordinator::Response>, Vec<Span>) {
     use crate::coordinator::Response;
-    pending
-        .into_iter()
-        .map(|p| match p {
-            Ok(rx) => rx
-                .recv()
-                .unwrap_or_else(|_| Response::Error("worker dropped request".into())),
-            Err(resp) => resp,
-        })
-        .collect()
+    let mut responses = Vec::with_capacity(pending.len());
+    let mut spans = Vec::new();
+    for p in pending {
+        match p {
+            Ok(rx) => match rx.recv() {
+                Ok((resp, span)) => {
+                    responses.push(resp);
+                    if span.is_enabled() {
+                        spans.push(span);
+                    }
+                }
+                Err(_) => responses.push(Response::Error("worker dropped request".into())),
+            },
+            Err(resp) => responses.push(resp),
+        }
+    }
+    (responses, spans)
 }
 
 /// Submit + await one batch frame (the threaded runtime's blocking
@@ -656,6 +748,7 @@ pub(crate) fn collect_batch(pending: PendingBatch) -> Vec<crate::coordinator::Re
 pub(crate) fn submit_batch(
     svc: &Coordinator,
     items: Vec<Result<crate::coordinator::Op, String>>,
-) -> Vec<crate::coordinator::Response> {
-    collect_batch(submit_batch_async(svc, items))
+    span: Span,
+) -> (Vec<crate::coordinator::Response>, Vec<Span>) {
+    collect_batch(submit_batch_async(svc, items, span))
 }

@@ -35,7 +35,7 @@
 //! drift between runtimes; clients read reply frames one at a time with
 //! [`read_frame`].
 
-use crate::coordinator::{Op, Response};
+use crate::coordinator::{Op, Response, StatsDetail};
 use crate::json::{self, object, Value};
 use crate::search::Hit;
 
@@ -416,6 +416,7 @@ const OP_SHUTDOWN: u8 = 9;
 const OP_HASH_BATCH: u8 = 10;
 const OP_INSERT_BATCH: u8 = 11;
 const OP_QUERY_BATCH: u8 = 12;
+const OP_STATS: u8 = 13;
 
 // binary reply type tags
 const REPLY_SIGNATURE: u8 = 1;
@@ -428,6 +429,7 @@ const REPLY_PONG: u8 = 7;
 const REPLY_POINTS: u8 = 8;
 const REPLY_SHUTTING_DOWN: u8 = 9;
 const REPLY_BATCH: u8 = 10;
+const REPLY_STATS: u8 = 11;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -558,6 +560,21 @@ pub fn parse_request(line: &str) -> Result<Request, RequestError> {
                     .to_string(),
             }),
             "ping" => RequestBody::Op(Op::Ping),
+            "stats" => {
+                let detail = match v.get("detail") {
+                    None => StatsDetail::Summary,
+                    Some(d) => {
+                        let d = d.as_str().ok_or("`detail` must be a string")?;
+                        StatsDetail::parse(d).ok_or_else(|| {
+                            format!(
+                                "unknown stats detail `{d}` (expected summary, stages, \
+                                 index, or slow)"
+                            )
+                        })?
+                    }
+                };
+                RequestBody::Op(Op::Stats { detail })
+            }
             "points" => RequestBody::Points,
             "shutdown" => RequestBody::Shutdown,
             "hash_batch" => RequestBody::Batch(
@@ -830,6 +847,12 @@ pub fn parse_request_binary(payload: &[u8]) -> Result<Request, RequestError> {
                 path: rd.str_()?.to_string(),
             }),
             OP_PING => RequestBody::Op(Op::Ping),
+            OP_STATS => {
+                let d = rd.u8()?;
+                let detail = StatsDetail::from_u8(d)
+                    .ok_or_else(|| format!("unknown stats detail tag {d}"))?;
+                RequestBody::Op(Op::Stats { detail })
+            }
             OP_POINTS => RequestBody::Points,
             OP_SHUTDOWN => RequestBody::Shutdown,
             OP_HASH_BATCH => {
@@ -997,6 +1020,7 @@ fn response_fields(resp: &Response) -> Vec<(&'static str, Value)> {
             vec![("type", "removed".into()), ("id", (*id as usize).into())]
         }
         Response::Metrics(m) => vec![("type", "metrics".into()), ("metrics", m.to_value())],
+        Response::Stats(v) => vec![("type", "stats".into()), ("stats", v.clone())],
         Response::Snapshotted { path, bytes } => vec![
             ("type", "snapshot".into()),
             ("path", path.as_str().into()),
@@ -1108,6 +1132,12 @@ fn put_reply_body(b: &mut Vec<u8>, resp: &Response) {
             // they are diagnostic, schema-fluid, and tiny
             b.push(REPLY_METRICS);
             put_str(b, &m.to_value().to_json());
+        }
+        Response::Stats(v) => {
+            // same discipline as metrics: stats views stay a JSON object
+            // inside the binary carrier — diagnostic, schema-fluid, small
+            b.push(REPLY_STATS);
+            put_str(b, &v.to_json());
         }
         Response::Snapshotted { path, bytes } => {
             b.push(REPLY_SNAPSHOT);
@@ -1361,6 +1391,9 @@ pub enum Reply {
     },
     /// `metrics` result (kept as a JSON object)
     Metrics(Value),
+    /// `stats` result (kept as a JSON object; shape follows the
+    /// requested detail and always carries a `"detail"` key)
+    Stats(Value),
     /// `snapshot` ack
     Snapshotted {
         /// snapshot destination
@@ -1452,6 +1485,7 @@ fn decode_reply_value(v: &Value, allow_batch: bool) -> Result<Reply, String> {
             id: need(v, "id")?.as_u64().ok_or("`id` must be a u64")?,
         },
         "metrics" => Reply::Metrics(need(v, "metrics")?.clone()),
+        "stats" => Reply::Stats(need(v, "stats")?.clone()),
         "snapshot" => Reply::Snapshotted {
             path: need(v, "path")?
                 .as_str()
@@ -1573,6 +1607,9 @@ fn decode_reply_body(rd: &mut BinReader<'_>, allow_batch: bool) -> Result<Reply,
         REPLY_METRICS => Reply::Metrics(
             json::parse(rd.str_()?).map_err(|e| format!("bad metrics json: {e}"))?,
         ),
+        REPLY_STATS => Reply::Stats(
+            json::parse(rd.str_()?).map_err(|e| format!("bad stats json: {e}"))?,
+        ),
         REPLY_SNAPSHOT => {
             let path = rd.str_()?.to_string();
             let bytes = rd.u64()?;
@@ -1670,6 +1707,14 @@ pub fn encode_remove(req_id: Option<u64>, id: u64) -> String {
 /// `points`, `shutdown`) (JSON).
 pub fn encode_bare(req_id: Option<u64>, op: &str) -> String {
     request_envelope(req_id, vec![("op", op.into())])
+}
+
+/// Encode a `stats` request line (JSON).
+pub fn encode_stats(req_id: Option<u64>, detail: StatsDetail) -> String {
+    request_envelope(
+        req_id,
+        vec![("op", "stats".into()), ("detail", detail.as_str().into())],
+    )
 }
 
 /// Encode a `snapshot` request line (JSON).
@@ -1780,6 +1825,14 @@ pub fn encode_bare_binary(req_id: Option<u64>, op: &str) -> Vec<u8> {
         _ => 0,
     };
     bin_frame(|b| put_tag_and_req_id(b, tag, req_id))
+}
+
+/// Encode a `stats` request frame (binary): op tag + detail byte.
+pub fn encode_stats_binary(req_id: Option<u64>, detail: StatsDetail) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_STATS, req_id);
+        b.push(detail.as_u8());
+    })
 }
 
 /// Encode a `snapshot` request frame (binary).
@@ -1895,6 +1948,14 @@ pub fn encode_bare_frame(mode: WireMode, req_id: Option<u64>, op: &str) -> Vec<u
     match mode {
         WireMode::Json => json_frame(encode_bare(req_id, op)),
         WireMode::Binary => encode_bare_binary(req_id, op),
+    }
+}
+
+/// Encode a `stats` request as complete wire bytes for `mode`.
+pub fn encode_stats_frame(mode: WireMode, req_id: Option<u64>, detail: StatsDetail) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_stats(req_id, detail)),
+        WireMode::Binary => encode_stats_binary(req_id, detail),
     }
 }
 
@@ -2202,6 +2263,53 @@ mod tests {
         assert!(e.contains("cap"), "{e}");
     }
 
+    #[test]
+    fn stats_requests_roundtrip_both_formats() {
+        for d in [
+            StatsDetail::Summary,
+            StatsDetail::Stages,
+            StatsDetail::Index,
+            StatsDetail::Slow,
+        ] {
+            let line = encode_stats(Some(3), d);
+            let req = parse_request(&line).unwrap();
+            assert_eq!(req.req_id, Some(3));
+            match req.body {
+                RequestBody::Op(Op::Stats { detail }) => assert_eq!(detail, d),
+                other => panic!("unexpected {other:?}"),
+            }
+            let frame = encode_stats_binary(Some(4), d);
+            let consumed = split_binary_frame(&frame).unwrap().unwrap();
+            assert_eq!(consumed, frame.len());
+            let req = parse_request_binary(&frame[4..consumed]).unwrap();
+            assert_eq!(req.req_id, Some(4));
+            match req.body {
+                RequestBody::Op(Op::Stats { detail }) => assert_eq!(detail, d),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // the detail field is optional on the JSON wire
+        match parse_request(r#"{"op":"stats"}"#).unwrap().body {
+            RequestBody::Op(Op::Stats { detail }) => {
+                assert_eq!(detail, StatsDetail::Summary)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // unknown details are correlated per-request errors, not typos
+        // silently mapped to a default view
+        let e = parse_request(r#"{"op":"stats","detail":"everything","req_id":9}"#)
+            .unwrap_err();
+        assert_eq!(e.req_id, Some(9));
+        assert!(e.msg.contains("stats detail"), "{e}");
+        let frame = bin_frame(|b| {
+            put_tag_and_req_id(b, OP_STATS, Some(10));
+            b.push(9);
+        });
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(10));
+        assert!(e.msg.contains("stats detail"), "{e}");
+    }
+
     fn response_cases() -> Vec<Response> {
         vec![
             Response::Signature(SigView::from_vec(vec![-3, 0, 7])),
@@ -2216,6 +2324,10 @@ mod tests {
                 path: "/tmp/s.flsh".into(),
                 bytes: 640,
             },
+            Response::Stats(object(vec![
+                ("detail", "summary".into()),
+                ("entries", 12.0.into()),
+            ])),
         ]
     }
 
@@ -2242,6 +2354,7 @@ mod tests {
                 assert_eq!(&path, wp);
                 assert_eq!(bytes, *wb);
             }
+            (Reply::Stats(v), Response::Stats(want)) => assert_eq!(&v, want),
             (got, want) => panic!("mismatch: {got:?} vs {want:?}"),
         }
     }

@@ -1,0 +1,216 @@
+//! Per-request tracing: a lightweight [`Span`] stamped at frame decode
+//! and carried through the whole job lifecycle (decode → queue wait →
+//! batch formation → kernel hash → index probe → rerank → encode →
+//! write-queued).
+//!
+//! A span is a fixed-size array of per-stage nanosecond durations plus
+//! the `Instant` of the last stamp — `Copy`, no heap allocation, cheap
+//! enough to embed in every job struct. Stamping attributes the time
+//! since the previous stamp to the named stage, so the stages always
+//! partition the span's lifetime exactly: the sum of stage durations
+//! equals the decode→write-queued wall time (skipped stages stay 0 and
+//! their time flows into the next stamped stage).
+//!
+//! Spans are recorded into the stage histograms of
+//! [`crate::coordinator::metrics::ServiceMetrics`] by the transport
+//! layer once the response is queued for the wire; a span created
+//! disabled (`serve --no-trace`) turns every stamp into a branch on a
+//! bool, which is what the `bench-observe` overhead gate measures.
+
+use crate::coordinator::metrics::RequestKind;
+use std::time::Instant;
+
+/// Number of pipeline stages a span records.
+pub const STAGE_COUNT: usize = 8;
+
+/// Stage names as they appear in the `stats` op and the Prometheus
+/// rendering, in stamp order.
+pub const STAGE_NAMES: [&str; STAGE_COUNT] = [
+    "decode",
+    "queue_wait",
+    "batch_form",
+    "kernel",
+    "index_probe",
+    "rerank",
+    "encode",
+    "write_queued",
+];
+
+/// One pipeline stage of a request's life.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Stage {
+    /// wire frame parsed into an op
+    Decode = 0,
+    /// admission + time spent queued before a worker picked the op up
+    QueueWait = 1,
+    /// batch assembly: row collection + validation
+    BatchForm = 2,
+    /// embed + hash kernel over the batch
+    Kernel = 3,
+    /// LSH table probing / index mutation
+    IndexProbe = 4,
+    /// exact re-ranking of candidates
+    Rerank = 5,
+    /// response serialization
+    Encode = 6,
+    /// response bytes handed to the connection's write buffer
+    WriteQueued = 7,
+}
+
+impl Stage {
+    /// Stable wire name of the stage.
+    pub fn name(self) -> &'static str {
+        STAGE_NAMES[self as usize]
+    }
+}
+
+/// Which wire format carried the traced request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanWire {
+    /// newline-delimited JSON connection
+    Json = 0,
+    /// FBIN1 binary connection
+    Binary = 1,
+    /// in-process submit (no network transport)
+    Local = 2,
+}
+
+/// Number of wire labels a span can carry.
+pub const WIRE_COUNT: usize = 3;
+
+impl SpanWire {
+    /// Stable wire-label name.
+    pub fn name(self) -> &'static str {
+        ["json", "binary", "local"][self as usize]
+    }
+}
+
+/// A per-request trace: monotonic stage stamps over a fixed array.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    last: Instant,
+    ns: [u64; STAGE_COUNT],
+    /// op kind, refined by the coordinator at admission
+    pub kind: RequestKind,
+    /// wire format that carried the request
+    pub wire: SpanWire,
+    /// size of the kernel batch the op rode in (0 until batched)
+    pub batch: u32,
+    enabled: bool,
+}
+
+impl Span {
+    /// Start a span now (normally at frame decode).
+    pub fn start(wire: SpanWire) -> Self {
+        Self {
+            last: Instant::now(),
+            ns: [0; STAGE_COUNT],
+            kind: RequestKind::Admin,
+            wire,
+            batch: 0,
+            enabled: true,
+        }
+    }
+
+    /// A span that ignores every stamp (`--no-trace`): stamping reduces
+    /// to one branch, and the metrics layer skips recording it.
+    pub fn disabled(wire: SpanWire) -> Self {
+        let mut s = Self::start(wire);
+        s.enabled = false;
+        s
+    }
+
+    /// Start enabled or disabled depending on `enabled`.
+    pub fn new(wire: SpanWire, enabled: bool) -> Self {
+        if enabled {
+            Self::start(wire)
+        } else {
+            Self::disabled(wire)
+        }
+    }
+
+    /// Whether stamps are live.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Attribute the time since the previous stamp to `stage` (additive:
+    /// re-stamping a stage accumulates).
+    #[inline]
+    pub fn stamp(&mut self, stage: Stage) {
+        if !self.enabled {
+            return;
+        }
+        let now = Instant::now();
+        self.ns[stage as usize] += now.duration_since(self.last).as_nanos() as u64;
+        self.last = now;
+    }
+
+    /// Per-stage nanoseconds recorded so far.
+    pub fn stage_ns(&self) -> &[u64; STAGE_COUNT] {
+        &self.ns
+    }
+
+    /// Sum of all stage durations — equals wall time from span start to
+    /// the last stamp, by construction.
+    pub fn total_ns(&self) -> u64 {
+        self.ns.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn stages_partition_wall_time() {
+        let t0 = Instant::now();
+        let mut s = Span::start(SpanWire::Json);
+        std::thread::sleep(Duration::from_millis(2));
+        s.stamp(Stage::Decode);
+        std::thread::sleep(Duration::from_millis(1));
+        s.stamp(Stage::Kernel);
+        let wall = t0.elapsed().as_nanos() as u64;
+        let total = s.total_ns();
+        assert!(s.stage_ns()[Stage::Decode as usize] >= 1_500_000);
+        assert!(s.stage_ns()[Stage::Kernel as usize] >= 500_000);
+        // the skipped stages carry nothing
+        assert_eq!(s.stage_ns()[Stage::Rerank as usize], 0);
+        // sum of stages == start→last-stamp wall time (within the slack
+        // between the t0 probe and Span::start)
+        assert!(total <= wall, "{total} vs {wall}");
+        assert!(total >= 3_000_000, "{total}");
+    }
+
+    #[test]
+    fn restamping_accumulates() {
+        let mut s = Span::start(SpanWire::Binary);
+        s.stamp(Stage::Kernel);
+        let a = s.stage_ns()[Stage::Kernel as usize];
+        s.stamp(Stage::Kernel);
+        assert!(s.stage_ns()[Stage::Kernel as usize] >= a);
+        assert_eq!(s.total_ns(), s.stage_ns()[Stage::Kernel as usize]);
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let mut s = Span::disabled(SpanWire::Local);
+        std::thread::sleep(Duration::from_millis(1));
+        s.stamp(Stage::Decode);
+        s.stamp(Stage::Encode);
+        assert_eq!(s.total_ns(), 0);
+        assert!(!s.is_enabled());
+        assert!(Span::new(SpanWire::Local, true).is_enabled());
+    }
+
+    #[test]
+    fn stage_names_cover_all_stages() {
+        assert_eq!(STAGE_NAMES.len(), STAGE_COUNT);
+        assert_eq!(Stage::Decode.name(), "decode");
+        assert_eq!(Stage::WriteQueued.name(), "write_queued");
+        assert_eq!(SpanWire::Json.name(), "json");
+        assert_eq!(SpanWire::Local.name(), "local");
+    }
+}

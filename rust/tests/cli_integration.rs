@@ -201,6 +201,92 @@ fn serve_with_simhash_family() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// `funclsh stats` end-to-end through real binaries: boot `serve
+/// --port 0`, hit it with the stats subcommand in both renderings, and
+/// check the Prometheus text parses line-by-line as `name[{labels}] value`.
+#[test]
+fn stats_cli_json_and_prometheus_against_live_server() {
+    use std::io::{BufRead, BufReader};
+    use std::process::Stdio;
+
+    let mut child = funclsh()
+        .args(["serve", "--port", "0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut banner = String::new();
+    BufReader::new(stdout).read_line(&mut banner).unwrap();
+    let v = funclsh::json::parse(banner.trim()).expect("startup banner is JSON");
+    assert_eq!(v.get("trace"), Some(&funclsh::json::Value::Bool(true)));
+    let addr = v
+        .get("listening")
+        .and_then(|a| a.as_str())
+        .expect("banner has `listening`")
+        .to_string();
+
+    // a little traffic so the stage histograms are non-empty
+    let sock: std::net::SocketAddr = addr.parse().unwrap();
+    let mut probe = funclsh::server::Client::connect(sock).unwrap();
+    let points = probe.points().unwrap();
+    let row: Vec<f32> = points.iter().map(|&x| x.sin() as f32).collect();
+    for id in 0..20u64 {
+        probe.insert(id, &row).unwrap();
+    }
+    probe.query(&row, 5).unwrap();
+
+    // default JSON rendering, every detail
+    for detail in ["summary", "stages", "index", "slow"] {
+        let out = funclsh()
+            .args(["stats", "--addr", &addr, "--detail", detail])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout);
+        let reply = funclsh::json::parse(text.trim()).expect("stats output is JSON");
+        assert_eq!(reply.get("detail").and_then(|d| d.as_str()), Some(detail));
+    }
+
+    // Prometheus rendering: counters, index gauges, and labelled stage
+    // series, every line `name value` or `name{labels} value`
+    let out = funclsh()
+        .args(["stats", "--addr", &addr, "--prom"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("funclsh_inserts 20"), "{text}");
+    assert!(text.contains("funclsh_index_entries 20"), "{text}");
+    assert!(
+        text.contains("funclsh_stage_ns_count{stage=\"kernel\""),
+        "{text}"
+    );
+    for line in text.lines() {
+        let (name, value) = line.rsplit_once(' ').expect("name value");
+        assert!(name.starts_with("funclsh_"), "{line}");
+        assert!(value.parse::<f64>().is_ok(), "{line}");
+    }
+
+    probe.shutdown_server().unwrap();
+    assert!(child.wait().unwrap().success());
+}
+
+#[test]
+fn stats_cli_rejects_bad_detail() {
+    // the flag is validated before any connection is attempted
+    let out = funclsh()
+        .args(["stats", "--addr", "127.0.0.1:1", "--detail", "everything"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("invalid --detail"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
 #[test]
 fn serve_with_jnp_pipeline_variant() {
     // same opt-in as selftest_with_artifacts: stub xla cannot execute

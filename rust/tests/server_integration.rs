@@ -866,6 +866,276 @@ fn mixed_dimension_batch_fails_only_the_bad_row() {
     }
 }
 
+/// Observability satellite: the `stats` op round-trips on both wire
+/// formats and both runtimes even when the request frame arrives in
+/// dribbled 1–3-byte chunks (the Framer reassembles; the reply is one
+/// whole correlated frame). Also: an unknown detail is a correlated
+/// per-request error that leaves the connection serving.
+#[test]
+fn stats_op_roundtrips_chunked_on_both_wires_and_runtimes() {
+    use funclsh::coordinator::StatsDetail;
+    use funclsh::server::protocol;
+
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let mut cfg = test_config();
+        cfg.server.io_mode = io_mode;
+        let (server, points) = boot(&cfg);
+        // some traffic first, so the views have content to report
+        let mut seed = Client::connect(server.addr()).unwrap();
+        for id in 0..10u64 {
+            seed.insert(id, &sample_sine(0.1 * id as f64, &points)).unwrap();
+        }
+        seed.query(&sample_sine(0.5, &points), 3).unwrap();
+
+        for wire in [WireMode::Json, WireMode::Binary] {
+            let label = format!("{io_mode:?}/{wire:?}");
+            let stream = TcpStream::connect(server.addr()).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            let mut dribble = |bytes: &[u8]| {
+                for chunk in bytes.chunks(3) {
+                    writer.write_all(chunk).unwrap();
+                    writer.flush().unwrap();
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            };
+            if wire == WireMode::Binary {
+                dribble(protocol::BINARY_MAGIC);
+            }
+            let details = [
+                StatsDetail::Summary,
+                StatsDetail::Stages,
+                StatsDetail::Index,
+                StatsDetail::Slow,
+            ];
+            for (i, detail) in details.into_iter().enumerate() {
+                let rid = 100 + i as u64;
+                dribble(&protocol::encode_stats_frame(wire, Some(rid), detail));
+                let payload = protocol::read_frame(&mut reader, wire).unwrap().unwrap();
+                let (got_id, body) = match wire {
+                    WireMode::Json => {
+                        protocol::decode_reply(std::str::from_utf8(&payload).unwrap()).unwrap()
+                    }
+                    WireMode::Binary => protocol::decode_reply_binary(&payload).unwrap(),
+                };
+                assert_eq!(got_id, Some(rid), "{label}");
+                match body.unwrap() {
+                    protocol::Reply::Stats(v) => {
+                        assert_eq!(
+                            v.get("detail").and_then(|d| d.as_str()),
+                            Some(detail.as_str()),
+                            "{label}: {v:?}"
+                        );
+                    }
+                    other => panic!("{label}: unexpected {other:?}"),
+                }
+            }
+        }
+
+        // unknown detail: correlated error, connection survives
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer
+            .write_all(b"{\"op\":\"stats\",\"detail\":\"everything\",\"req_id\":77}\n")
+            .unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("\"ok\":false"), "{io_mode:?}: {reply}");
+        assert!(reply.contains("\"req_id\":77"), "{io_mode:?}: {reply}");
+        assert!(reply.contains("stats detail"), "{io_mode:?}: {reply}");
+        writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("pong"), "{io_mode:?}: {reply}");
+        finish(server);
+    }
+}
+
+/// The tentpole acceptance: after mixed load over both wire formats,
+/// `stats detail=stages` shows non-zero queue-wait, kernel, and encode
+/// histograms for both wires, on both runtimes; the slow log's per-stage
+/// sums cover ≥ 95% of each entry's end-to-end time; and the index view
+/// reports real occupancy.
+#[test]
+fn stats_views_reflect_mixed_load_across_matrix() {
+    use funclsh::coordinator::metrics::value_u64;
+    use funclsh::coordinator::StatsDetail;
+    use funclsh::json::Value;
+
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let mut cfg = test_config();
+        cfg.server.io_mode = io_mode;
+        let (server, points) = boot(&cfg);
+        for (i, wire) in [WireMode::Json, WireMode::Binary].into_iter().enumerate() {
+            let load = LoadConfig {
+                threads: 4,
+                ops_per_thread: 60,
+                pipeline_depth: if io_mode == IoMode::Threaded { 1 } else { 4 },
+                wire,
+                insert_fraction: 0.4,
+                query_fraction: 0.3,
+                k: 5,
+                seed: 0x57A7 + i as u64,
+                ..Default::default()
+            };
+            let report = run_load(server.addr(), &points, &load).unwrap();
+            assert_eq!(report.errors, 0, "{io_mode:?}/{wire:?}");
+        }
+        let mut client = Client::connect(server.addr()).unwrap();
+
+        let stages = client.stats(StatsDetail::Stages).unwrap();
+        assert_eq!(stages.get("detail").unwrap().as_str(), Some("stages"));
+        let cells = match stages.get("stages") {
+            Some(Value::Array(cells)) => cells,
+            other => panic!("{io_mode:?}: {other:?}"),
+        };
+        for wire_name in ["json", "binary"] {
+            for stage in ["decode", "queue_wait", "kernel", "encode", "write_queued"] {
+                let count: u64 = cells
+                    .iter()
+                    .filter(|c| {
+                        c.get("stage").and_then(Value::as_str) == Some(stage)
+                            && c.get("wire").and_then(Value::as_str) == Some(wire_name)
+                    })
+                    .filter_map(|c| c.get("count").and_then(value_u64))
+                    .sum();
+                assert!(
+                    count > 0,
+                    "{io_mode:?}: stage `{stage}` never observed on wire `{wire_name}`"
+                );
+            }
+        }
+        // histogram mass matches the counts cell by cell
+        for c in cells {
+            let count = c.get("count").and_then(value_u64).unwrap();
+            let mass: u64 = match c.get("buckets") {
+                Some(Value::Array(b)) => b.iter().filter_map(value_u64).sum(),
+                other => panic!("{io_mode:?}: {other:?}"),
+            };
+            assert_eq!(count, mass, "{io_mode:?}: {c:?}");
+        }
+
+        // slow log: stage sums partition each entry's wall time
+        let slow = client.stats(StatsDetail::Slow).unwrap();
+        let entries = match slow.get("slow") {
+            Some(Value::Array(e)) => e,
+            other => panic!("{io_mode:?}: {other:?}"),
+        };
+        assert!(!entries.is_empty(), "{io_mode:?}: slow log empty after load");
+        for e in entries {
+            let total = e.get("total_ns").and_then(value_u64).unwrap();
+            assert!(total > 0, "{io_mode:?}: {e:?}");
+            let sum: u64 = match e.get("stages") {
+                Some(Value::Object(stages)) => {
+                    stages.iter().filter_map(|(_, v)| value_u64(v)).sum()
+                }
+                other => panic!("{io_mode:?}: {other:?}"),
+            };
+            assert!(
+                sum as f64 >= 0.95 * total as f64,
+                "{io_mode:?}: stage sum {sum} ns < 95% of total {total} ns: {e:?}"
+            );
+        }
+
+        // index health: real occupancy, per shard and per table
+        let index = client.stats(StatsDetail::Index).unwrap();
+        let entries = index.get("entries").and_then(value_u64).unwrap();
+        assert!(entries > 0, "{io_mode:?}");
+        let shards = match index.get("shards") {
+            Some(Value::Array(s)) => s,
+            other => panic!("{io_mode:?}: {other:?}"),
+        };
+        assert_eq!(shards.len(), cfg.shards, "{io_mode:?}");
+        let shard_entries: u64 = shards
+            .iter()
+            .filter_map(|s| s.get("entries").and_then(value_u64))
+            .sum();
+        assert_eq!(shard_entries, entries, "{io_mode:?}");
+        for s in shards {
+            let tables = match s.get("tables") {
+                Some(Value::Array(t)) => t,
+                other => panic!("{io_mode:?}: {other:?}"),
+            };
+            assert_eq!(tables.len(), cfg.l, "{io_mode:?}");
+        }
+        // queries ran, so the probe distribution has observations
+        let probe = index.get("probe").expect("probe view");
+        assert!(
+            probe.get("queries_observed").and_then(value_u64).unwrap() > 0,
+            "{io_mode:?}: {probe:?}"
+        );
+
+        // summary ties it together: its rollup covers at least the cells
+        // seen above (the stats probes themselves are traced admin ops,
+        // so later snapshots may count a few more)
+        let summary = client.stats(StatsDetail::Summary).unwrap();
+        let rollup = summary.get("stages").expect("summary rollup");
+        let kernel_total: u64 = cells
+            .iter()
+            .filter(|c| c.get("stage").and_then(Value::as_str) == Some("kernel"))
+            .filter_map(|c| c.get("count").and_then(value_u64))
+            .sum();
+        let rollup_kernel = rollup
+            .get("kernel")
+            .and_then(|k| k.get("count"))
+            .and_then(value_u64)
+            .unwrap();
+        assert!(
+            rollup_kernel >= kernel_total && kernel_total > 0,
+            "{io_mode:?}: rollup kernel {rollup_kernel} vs cells {kernel_total}"
+        );
+        finish(server);
+    }
+}
+
+/// `--no-trace` (here: tracing flipped off on the shared metrics): the
+/// `stats` op keeps answering on every view, but stage histograms and
+/// the slow log stay empty — the fast path never stamps or records.
+#[test]
+fn disabled_tracing_serves_stats_with_empty_stage_views() {
+    use funclsh::coordinator::metrics::value_u64;
+    use funclsh::coordinator::StatsDetail;
+    use funclsh::json::Value;
+
+    let cfg = test_config();
+    let (path, points) = make_path(&cfg);
+    let svc = Arc::new(Coordinator::start(&cfg, path));
+    svc.shared_metrics().set_tracing(false);
+    let server = Server::start(&cfg, svc, points.clone()).expect("bind loopback");
+
+    let mut client = Client::connect(server.addr()).unwrap();
+    for id in 0..10u64 {
+        client.insert(id, &sample_sine(0.1 * id as f64, &points)).unwrap();
+    }
+    client.query(&sample_sine(0.3, &points), 3).unwrap();
+
+    let stages = client.stats(StatsDetail::Stages).unwrap();
+    match stages.get("stages") {
+        Some(Value::Array(cells)) => assert!(cells.is_empty(), "{cells:?}"),
+        other => panic!("{other:?}"),
+    }
+    let slow = client.stats(StatsDetail::Slow).unwrap();
+    match slow.get("slow") {
+        Some(Value::Array(entries)) => assert!(entries.is_empty(), "{entries:?}"),
+        other => panic!("{other:?}"),
+    }
+    // counters and index health are tracing-independent
+    let summary = client.stats(StatsDetail::Summary).unwrap();
+    let inserts = summary
+        .get("metrics")
+        .and_then(|m| m.get("inserts"))
+        .and_then(value_u64)
+        .unwrap();
+    assert_eq!(inserts, 10);
+    let index = client.stats(StatsDetail::Index).unwrap();
+    assert_eq!(index.get("entries").and_then(value_u64), Some(10));
+    finish(server);
+}
+
 /// Pipelined batch frames interleave with single-op frames: one frame =
 /// one completion, correlated by req_id, with per-item results inside.
 #[test]
