@@ -13,8 +13,21 @@
 //! it carries the *negotiated* wire mode and batch size straight from
 //! the load report, plus the serving io_mode, so `BENCH_wire.json`
 //! trajectories can be compared across PRs without reconstructing the
-//! grid loops. `funclsh bench-wire [--quick] [--out F]` runs it; CI's
-//! `bench-smoke` job uploads the artifact alongside
+//! grid loops. Each row also carries the pure framing overhead of its
+//! wire format (newline vs `u32` length prefix, via
+//! [`protocol::frame_overhead_bytes`]) so payload and framing cost can
+//! be regressed separately.
+//!
+//! The grid is followed by one *latency-under-overload* row: a server
+//! booted with deliberately tight in-flight byte budgets is probed for
+//! its closed-loop sustainable rate, then driven open-loop at 4x that
+//! rate (`LoadConfig::rate`). The row records typed sheds (client- and
+//! server-side counts), the p99 of admitted ops (send-lag billed, so
+//! coordinated omission cannot hide queueing), and process RSS around
+//! the run — the evidence that admission control degrades gracefully
+//! instead of falling over. `funclsh bench-wire [--quick]
+//! [--require-shed] [--out F]` runs it; CI's `bench-smoke` and
+//! `overload-smoke` jobs upload the artifact alongside
 //! `BENCH_hashpath.json`.
 
 use crate::config::ServiceConfig;
@@ -32,9 +45,21 @@ pub struct WireBenchOptions {
     /// the CI smoke grid (fewer ops per case; same dims — the dim ≥ 256
     /// rows are the acceptance evidence)
     pub quick: bool,
+    /// fail the run (`funclsh bench-wire` exits 1) when the overload
+    /// row records zero sheds — CI's graceful-degradation gate: a
+    /// saturating run that never trips admission control means the
+    /// budgets are not actually bounding anything
+    pub require_shed: bool,
 }
 
 fn boot(dim: usize) -> (Server, Vec<f64>) {
+    boot_limited(dim, None)
+}
+
+/// [`boot`] with optional `(per_conn, global)` in-flight byte budgets —
+/// the overload row shrinks them far below the defaults so a pipelined
+/// loopback burst deterministically trips admission control.
+fn boot_limited(dim: usize, limits: Option<(usize, usize)>) -> (Server, Vec<f64>) {
     let mut cfg = ServiceConfig {
         dim,
         k: 4,
@@ -47,6 +72,10 @@ fn boot(dim: usize) -> (Server, Vec<f64>) {
     };
     cfg.server.port = 0;
     cfg.server.max_conns = 16;
+    if let Some((per_conn, global)) = limits {
+        cfg.server.max_inflight_bytes_per_conn = per_conn;
+        cfg.server.max_inflight_bytes = global;
+    }
     let mut rng = Xoshiro256pp::seed_from_u64(0xB1A5 ^ dim as u64);
     let emb = MonteCarloEmbedder::new(Interval::unit(), dim, 2.0, &mut rng);
     let points = emb.sample_points().to_vec();
@@ -84,6 +113,101 @@ fn stage_p50_ns(summary: &Value, stage: &str) -> f64 {
 /// batched rows are compared against).
 pub const BATCH_GRID: [usize; 3] = [1, 16, 256];
 
+/// Resident set size of this process in KiB (`VmRSS` from
+/// `/proc/self/status`); `None` off Linux. The loopback server runs in
+/// this process, so the figure bounds client *and* server together —
+/// exactly the thing a memory-bloat regression would inflate.
+fn rss_kib() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// The latency-under-overload row: boot a server with deliberately
+/// tight in-flight byte budgets, probe its closed-loop sustainable
+/// rate, then drive it open-loop at 4x that rate and record how it
+/// degrades — typed sheds (client- and server-side counts), bounded
+/// p99 over the ops it did admit (send lag billed, so coordinated
+/// omission cannot flatter the tail), and process RSS around the run.
+fn overload_case(opts: &WireBenchOptions) -> Value {
+    use crate::coordinator::metrics::{u64_value, value_u64};
+    let dim = 256usize;
+    let (threads, ops) = if opts.quick { (4usize, 256usize) } else { (8, 1024) };
+    // budgets sized well below one 32-deep burst of ~1 KiB binary hash
+    // frames: a saturating client overruns the per-conn budget inside a
+    // single read batch, so admission control engages deterministically
+    let per_conn = 8usize << 10;
+    let global = 32usize << 10;
+    let (server, points) = boot_limited(dim, Some((per_conn, global)));
+    let base = LoadConfig {
+        threads,
+        ops_per_thread: ops,
+        pipeline_depth: 2,
+        batch: 1,
+        wire: WireMode::Binary,
+        insert_fraction: 0.2,
+        query_fraction: 0.2,
+        k: 10,
+        seed: 0x0AD1,
+        ..Default::default()
+    };
+    // closed-loop probe at shallow depth: the rate the server sustains
+    // without backpressure — the baseline "4x" is measured against
+    let probe = run_load(server.addr(), &points, &base).expect("overload probe run");
+    let sustainable = probe.throughput();
+    let rss_before = rss_kib();
+    let open = LoadConfig {
+        pipeline_depth: 32,
+        rate: sustainable * 4.0,
+        seed: 0x0AD2,
+        ..base.clone()
+    };
+    let report = run_load(server.addr(), &points, &open).expect("overload run");
+    let rss_after = rss_kib();
+    // server-side confirmation that the refusals were admission control
+    // (and not, say, protocol errors miscounted client-side)
+    let server_sheds = Client::connect(server.addr())
+        .and_then(|mut c| c.metrics())
+        .ok()
+        .and_then(|m| m.get("overload_sheds").and_then(value_u64))
+        .unwrap_or(0);
+    let io_mode = server.io_mode().as_str();
+    finish(server);
+    println!(
+        "   overload/dim={dim}: sustainable {:.0} op/s, open loop at {:.0} op/s -> \
+         {:.0} op/s admitted, {} sheds ({} server-side), {} errors, p99 {:.3} ms",
+        sustainable,
+        report.target_rate_ops_s,
+        report.throughput(),
+        report.sheds,
+        server_sheds,
+        report.errors,
+        report.latency_p99_s * 1e3
+    );
+    let mut fields = vec![
+        ("dim", dim.into()),
+        ("wire", report.wire.as_str().into()),
+        ("io_mode", io_mode.into()),
+        ("threads", threads.into()),
+        ("ops", report.ops.into()),
+        ("sustainable_ops_s", sustainable.into()),
+        ("target_rate_ops_s", report.target_rate_ops_s.into()),
+        ("achieved_ops_s", report.throughput().into()),
+        ("sheds", report.sheds.into()),
+        ("server_overload_sheds", u64_value(server_sheds)),
+        ("errors", report.errors.into()),
+        ("latency_p50_s", report.latency_p50_s.into()),
+        ("latency_p99_s", report.latency_p99_s.into()),
+        ("max_inflight_bytes_per_conn", per_conn.into()),
+        ("max_inflight_bytes", global.into()),
+    ];
+    if let (Some(b), Some(a)) = (rss_before, rss_after) {
+        fields.push(("rss_before_kib", u64_value(b)));
+        fields.push(("rss_after_kib", u64_value(a)));
+    }
+    json::object(fields)
+}
+
 /// Run the wire grid and return the JSON report.
 pub fn run(opts: &WireBenchOptions) -> Value {
     let dims: &[usize] = &[64, 256, 1024];
@@ -119,6 +243,11 @@ pub fn run(opts: &WireBenchOptions) -> Value {
                     .and_then(|mut c| c.stats(StatsDetail::Summary))
                     .expect("stats summary");
                 let row = sample_row(&points);
+                // pure framing cost of this wire format (newline vs u32
+                // length prefix), kept apart from the payload so the
+                // two can be regressed separately; per-row it amortizes
+                // across the batch
+                let overhead = protocol::frame_overhead_bytes(wire);
                 // exact wire cost of a hash frame at this batch size
                 let frame_bytes = if batch == 1 {
                     protocol::encode_hash_frame(wire, Some(1), &row).len()
@@ -129,7 +258,7 @@ pub fn run(opts: &WireBenchOptions) -> Value {
                 };
                 println!(
                     "   wire/{}/dim={dim}/batch={}: {:.0} op/s, p50 {:.3} ms, \
-                     p99 {:.3} ms, hash frame {} B ({} B/row), {} errors",
+                     p99 {:.3} ms, hash frame {} B ({} B/row, {} B framing), {} errors",
                     report.wire.as_str(),
                     report.batch,
                     report.throughput(),
@@ -137,6 +266,7 @@ pub fn run(opts: &WireBenchOptions) -> Value {
                     report.latency_p99_s * 1e3,
                     frame_bytes,
                     frame_bytes / batch,
+                    overhead,
                     report.errors
                 );
                 tput[wi][bi] = report.throughput();
@@ -157,6 +287,11 @@ pub fn run(opts: &WireBenchOptions) -> Value {
                     ("latency_p99_s", report.latency_p99_s.into()),
                     ("hash_frame_bytes", frame_bytes.into()),
                     ("hash_frame_bytes_per_row", (frame_bytes / batch).into()),
+                    ("frame_overhead_bytes", overhead.into()),
+                    (
+                        "framing_overhead_bytes_per_row",
+                        (overhead as f64 / batch as f64).into(),
+                    ),
                     ("stage_decode_p50_ns", stage_p50_ns(&summary, "decode").into()),
                     (
                         "stage_queue_wait_p50_ns",
@@ -185,6 +320,8 @@ pub fn run(opts: &WireBenchOptions) -> Value {
             ),
         ]));
     }
+    println!("== bench-wire: latency under overload (open loop at 4x sustainable) ==");
+    let overload = overload_case(opts);
     json::object(vec![
         ("bench", "wire_throughput".into()),
         ("mode", if opts.quick { "quick" } else { "full" }.into()),
@@ -194,6 +331,7 @@ pub fn run(opts: &WireBenchOptions) -> Value {
         ),
         ("cases", Value::Array(cases)),
         ("speedup", Value::Array(speedups)),
+        ("overload", overload),
     ])
 }
 

@@ -286,6 +286,26 @@ pub struct ServerConfig {
     /// server stops reading that socket (the pipelining backpressure
     /// window; well-behaved clients keep their send window ≤ this)
     pub pipeline_depth: usize,
+    /// admission control: in-flight request payload bytes one
+    /// connection may have awaiting a response before further frames
+    /// from it are shed with a typed `overloaded` envelope
+    pub max_inflight_bytes_per_conn: usize,
+    /// admission control: in-flight request payload bytes across all
+    /// connections before new frames are shed with a typed
+    /// `overloaded` envelope (global budget, checked after the
+    /// per-connection one)
+    pub max_inflight_bytes: usize,
+    /// slow-client bound: pending response bytes (write buffer plus
+    /// parked out-of-order completions) a connection may accumulate
+    /// before it is sent a typed error and disconnected
+    pub max_write_queue_bytes: usize,
+    /// event-loop mode only: fold adjacent single-op frames from one
+    /// connection into a synthetic server-side batch (replies stay
+    /// byte-identical and in order; off = one job per frame)
+    pub coalesce: bool,
+    /// event-loop mode only: max single-op frames folded into one
+    /// synthetic batch
+    pub coalesce_window: usize,
     /// where graceful shutdown snapshots the index (`FLSH1`); empty
     /// string disables the shutdown snapshot
     pub snapshot_path: String,
@@ -305,6 +325,11 @@ impl Default for ServerConfig {
             max_conns: 32,
             io_workers: 4,
             pipeline_depth: 64,
+            max_inflight_bytes_per_conn: 16 << 20,
+            max_inflight_bytes: 128 << 20,
+            max_write_queue_bytes: 64 << 20,
+            coalesce: true,
+            coalesce_window: 64,
             snapshot_path: String::new(),
             trace: true,
         }
@@ -487,6 +512,23 @@ impl ServiceConfig {
         if let Some(v) = get_usize("server", "pipeline_depth") {
             cfg.server.pipeline_depth = v;
         }
+        if let Some(v) = get_usize("server", "max_inflight_bytes_per_conn") {
+            cfg.server.max_inflight_bytes_per_conn = v;
+        }
+        if let Some(v) = get_usize("server", "max_inflight_bytes") {
+            cfg.server.max_inflight_bytes = v;
+        }
+        if let Some(v) = get_usize("server", "max_write_queue_bytes") {
+            cfg.server.max_write_queue_bytes = v;
+        }
+        if let Some(raw) = doc.get("server", "coalesce") {
+            cfg.server.coalesce = raw
+                .as_bool()
+                .ok_or_else(|| ConfigError::msg("server coalesce must be a boolean"))?;
+        }
+        if let Some(v) = get_usize("server", "coalesce_window") {
+            cfg.server.coalesce_window = v;
+        }
         if let Some(v) = doc.get("server", "snapshot_path").and_then(TomlValue::as_str) {
             cfg.server.snapshot_path = v.to_string();
         }
@@ -528,6 +570,20 @@ impl ServiceConfig {
             return Err(ConfigError::msg(
                 "server io_workers and pipeline_depth must be positive",
             ));
+        }
+        // no lower bound beyond zero: tests shrink the byte budgets to
+        // force deterministic shedding
+        if self.server.max_inflight_bytes_per_conn == 0
+            || self.server.max_inflight_bytes == 0
+            || self.server.max_write_queue_bytes == 0
+        {
+            return Err(ConfigError::msg(
+                "server byte budgets (max_inflight_bytes_per_conn, max_inflight_bytes, \
+                 max_write_queue_bytes) must be positive",
+            ));
+        }
+        if self.server.coalesce_window == 0 {
+            return Err(ConfigError::msg("server coalesce_window must be positive"));
         }
         Ok(())
     }
@@ -582,6 +638,11 @@ io_mode = "threaded"
 max_conns = 16
 io_workers = 8
 pipeline_depth = 32
+max_inflight_bytes_per_conn = 1048576
+max_inflight_bytes = 8388608
+max_write_queue_bytes = 4194304
+coalesce = false
+coalesce_window = 16
 snapshot_path = "/tmp/idx.flsh"
 trace = false
 "#;
@@ -606,6 +667,11 @@ trace = false
         assert_eq!(cfg.server.max_conns, 16);
         assert_eq!(cfg.server.io_workers, 8);
         assert_eq!(cfg.server.pipeline_depth, 32);
+        assert_eq!(cfg.server.max_inflight_bytes_per_conn, 1 << 20);
+        assert_eq!(cfg.server.max_inflight_bytes, 8 << 20);
+        assert_eq!(cfg.server.max_write_queue_bytes, 4 << 20);
+        assert!(!cfg.server.coalesce);
+        assert_eq!(cfg.server.coalesce_window, 16);
         assert_eq!(cfg.server.snapshot_path, "/tmp/idx.flsh");
         assert!(!cfg.server.trace);
     }
@@ -626,6 +692,19 @@ trace = false
         let cfg = ServiceConfig::from_toml("[server]\nport = 0\n").unwrap();
         assert!(cfg.server.trace);
         assert!(ServiceConfig::from_toml("[server]\ntrace = 1\n").is_err());
+        // admission-control budgets: zero rejected, tiny values allowed
+        // (tests use them to force deterministic sheds)
+        assert!(ServiceConfig::from_toml("[server]\nmax_inflight_bytes = 0\n").is_err());
+        assert!(
+            ServiceConfig::from_toml("[server]\nmax_inflight_bytes_per_conn = 0\n").is_err()
+        );
+        assert!(ServiceConfig::from_toml("[server]\nmax_write_queue_bytes = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[server]\ncoalesce_window = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[server]\ncoalesce = \"yes\"\n").is_err());
+        let cfg = ServiceConfig::from_toml("[server]\nmax_inflight_bytes = 64\n").unwrap();
+        assert_eq!(cfg.server.max_inflight_bytes, 64);
+        assert!(cfg.server.coalesce);
+        assert_eq!(cfg.server.coalesce_window, 64);
     }
 
     #[test]

@@ -202,6 +202,10 @@ pub struct ServiceMetrics {
     bytes_in_binary: AtomicU64,
     bytes_out_json: AtomicU64,
     bytes_out_binary: AtomicU64,
+    overload_sheds: AtomicU64,
+    rejected_accepts: AtomicU64,
+    coalesced_frames: AtomicU64,
+    slow_client_disconnects: AtomicU64,
     dist: Mutex<Dists>,
     tracing: AtomicBool,
     stages: StageBank,
@@ -238,6 +242,10 @@ impl Default for ServiceMetrics {
             bytes_in_binary: ZERO,
             bytes_out_json: ZERO,
             bytes_out_binary: ZERO,
+            overload_sheds: ZERO,
+            rejected_accepts: ZERO,
+            coalesced_frames: ZERO,
+            slow_client_disconnects: ZERO,
             dist: Mutex::new(Dists::default()),
             tracing: AtomicBool::new(true),
             stages: StageBank::new(),
@@ -313,8 +321,10 @@ impl ServiceMetrics {
         if binary { &self.conns_binary } else { &self.conns_json }.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Count request frames decoded (and their payload bytes) on a
-    /// connection of the given format.
+    /// Count request frames decoded (and their wire bytes, including
+    /// framing overhead — the newline terminator or the `u32` length
+    /// prefix — so the counter reconciles against bytes on the socket)
+    /// on a connection of the given format.
     pub fn record_wire_in(&self, binary: bool, frames: u64, bytes: u64) {
         if binary { &self.frames_binary } else { &self.frames_json }
             .fetch_add(frames, Ordering::Relaxed);
@@ -335,6 +345,34 @@ impl ServiceMetrics {
             &self.bytes_out_json
         }
         .fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Count one request shed by admission control: a frame refused at
+    /// decode because the per-connection or global in-flight byte
+    /// budget was exhausted, answered with a typed `overloaded`
+    /// envelope.
+    pub fn record_overload_shed(&self) {
+        self.overload_sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one connection refused before serving began: accept-queue
+    /// overflow in the threaded runtime, or a poller registration
+    /// failure in the event loop.
+    pub fn record_rejected_accept(&self) {
+        self.rejected_accepts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` adjacent single-op frames the event loop folded into
+    /// one synthetic server-side batch job.
+    pub fn record_coalesced_frames(&self, n: u64) {
+        self.coalesced_frames.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count one slow-reading client disconnected because its pending
+    /// write bytes (write buffer plus parked completions) exceeded the
+    /// configured bound.
+    pub fn record_slow_client_disconnect(&self) {
+        self.slow_client_disconnects.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a completed batch: its size and per-request latencies.
@@ -530,6 +568,10 @@ impl ServiceMetrics {
             bytes_in_binary: self.bytes_in_binary.load(Ordering::Relaxed),
             bytes_out_json: self.bytes_out_json.load(Ordering::Relaxed),
             bytes_out_binary: self.bytes_out_binary.load(Ordering::Relaxed),
+            overload_sheds: self.overload_sheds.load(Ordering::Relaxed),
+            rejected_accepts: self.rejected_accepts.load(Ordering::Relaxed),
+            coalesced_frames: self.coalesced_frames.load(Ordering::Relaxed),
+            slow_client_disconnects: self.slow_client_disconnects.load(Ordering::Relaxed),
             latency_mean_s: d.latency.mean(),
             latency_p50_s: q(0.5),
             latency_p99_s: q(0.99),
@@ -759,14 +801,28 @@ pub struct MetricsSnapshot {
     pub frames_json: u64,
     /// request frames decoded on binary connections
     pub frames_binary: u64,
-    /// request payload bytes received on JSON connections
+    /// request wire bytes received on JSON connections (payload plus
+    /// framing overhead, so the counter reconciles against a packet
+    /// capture)
     pub bytes_in_json: u64,
-    /// request payload bytes received on binary connections
+    /// request wire bytes received on binary connections (payload plus
+    /// framing overhead, including the one-time `FBIN1` magic)
     pub bytes_in_binary: u64,
     /// response bytes queued on JSON connections
     pub bytes_out_json: u64,
     /// response bytes queued on binary connections
     pub bytes_out_binary: u64,
+    /// requests shed by admission control with a typed `overloaded`
+    /// envelope
+    pub overload_sheds: u64,
+    /// connections refused before serving began (accept-queue overflow
+    /// or poller registration failure)
+    pub rejected_accepts: u64,
+    /// single-op frames folded into synthetic server-side batches
+    pub coalesced_frames: u64,
+    /// slow-reading clients disconnected for exceeding the write-queue
+    /// bound
+    pub slow_client_disconnects: u64,
     /// mean request latency (seconds)
     pub latency_mean_s: f64,
     /// median request latency (seconds)
@@ -805,6 +861,13 @@ impl MetricsSnapshot {
             ("bytes_in_binary", u64_value(self.bytes_in_binary)),
             ("bytes_out_json", u64_value(self.bytes_out_json)),
             ("bytes_out_binary", u64_value(self.bytes_out_binary)),
+            ("overload_sheds", u64_value(self.overload_sheds)),
+            ("rejected_accepts", u64_value(self.rejected_accepts)),
+            ("coalesced_frames", u64_value(self.coalesced_frames)),
+            (
+                "slow_client_disconnects",
+                u64_value(self.slow_client_disconnects),
+            ),
             ("latency_mean_s", self.latency_mean_s.into()),
             ("latency_p50_s", self.latency_p50_s.into()),
             ("latency_p99_s", self.latency_p99_s.into()),
@@ -948,6 +1011,30 @@ mod tests {
     }
 
     #[test]
+    fn overload_and_coalescing_counters() {
+        let m = ServiceMetrics::new();
+        m.record_overload_shed();
+        m.record_overload_shed();
+        m.record_rejected_accept();
+        m.record_coalesced_frames(8);
+        m.record_coalesced_frames(3);
+        m.record_slow_client_disconnect();
+        let s = m.snapshot();
+        assert_eq!(s.overload_sheds, 2);
+        assert_eq!(s.rejected_accepts, 1);
+        assert_eq!(s.coalesced_frames, 11);
+        assert_eq!(s.slow_client_disconnects, 1);
+        let v = crate::json::parse(&s.to_json()).unwrap();
+        assert_eq!(v.get("overload_sheds").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("rejected_accepts").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("coalesced_frames").unwrap().as_usize(), Some(11));
+        assert_eq!(
+            v.get("slow_client_disconnects").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
     fn per_wire_mode_counters() {
         let m = ServiceMetrics::new();
         m.record_wire_conn(false);
@@ -1027,6 +1114,10 @@ mod tests {
             bytes_in_binary: 0,
             bytes_out_json: 0,
             bytes_out_binary: 0,
+            overload_sheds: 0,
+            rejected_accepts: 0,
+            coalesced_frames: 0,
+            slow_client_disconnects: 0,
             latency_mean_s: 0.0,
             latency_p50_s: 0.0,
             latency_p99_s: 0.0,

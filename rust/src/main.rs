@@ -13,6 +13,11 @@
 //!                     [--pipeline D] [--wire json|binary] [--batch N]
 //!                     (--batch N ships N rows per hash_batch/
 //!                      insert_batch/query_batch frame; 1 = single ops)
+//!                     [--rate R]
+//!                     (--rate R drives the run open-loop at R ops/s
+//!                      aggregate: late sends bill their lag onto the
+//!                      op's latency, and typed `overloaded` refusals
+//!                      are reported as `sheds`; 0 = closed loop)
 //!                     [--insert-frac F] [--query-frac F]
 //!                     [--seed S] [--shutdown]
 //!                     (the report splices in `server_stages` — the
@@ -30,10 +35,15 @@
 //! funclsh bench-hash  [--quick] [--out BENCH_hashpath.json]
 //!                     (seed-vs-new kernel + index throughput grid,
 //!                      emitted as the JSON perf-trajectory file)
-//! funclsh bench-wire  [--quick] [--out BENCH_wire.json]
+//! funclsh bench-wire  [--quick] [--require-shed] [--out BENCH_wire.json]
 //!                     (JSON-vs-binary loopback wire throughput at
-//!                      dim ∈ {64, 256, 1024} × batch ∈ {1, 16, 256};
-//!                      second trajectory file)
+//!                      dim ∈ {64, 256, 1024} × batch ∈ {1, 16, 256},
+//!                      plus a latency-under-overload row driven
+//!                      open-loop at 4x the sustainable rate;
+//!                      --require-shed exits 1 unless that row shows
+//!                      admission control shedding — CI's
+//!                      graceful-degradation gate; second trajectory
+//!                      file)
 //! funclsh bench-observe [--quick] [--out BENCH_observe.json]
 //!                     [--max-overhead-pct F]
 //!                     (tracing-on vs --no-trace loopback throughput at
@@ -341,6 +351,7 @@ fn cmd_load(args: &Args) -> i32 {
         query_fraction: args.get_parsed("query-frac", 0.3f64),
         k: args.get_parsed("k", 10usize),
         seed: args.get_parsed("seed", 0x10ADu64),
+        rate: args.get_parsed("rate", 0.0f64).max(0.0),
         ..Default::default()
     };
     let mut probe = match Client::connect(addr) {
@@ -617,12 +628,16 @@ fn cmd_bench_hash(args: &Args) -> i32 {
 }
 
 /// `funclsh bench-wire`: JSON-vs-binary loopback wire throughput at
-/// dim ∈ {64, 256, 1024}; writes the second perf-trajectory file
-/// (`BENCH_wire.json` at the repo root by default) that CI uploads
-/// alongside `BENCH_hashpath.json`.
+/// dim ∈ {64, 256, 1024}, plus the latency-under-overload row; writes
+/// the second perf-trajectory file (`BENCH_wire.json` at the repo root
+/// by default) that CI uploads alongside `BENCH_hashpath.json`.
+/// `--require-shed` turns the overload row into a gate: exit 1 unless
+/// the saturating open-loop run was answered with typed `overloaded`
+/// sheds and a finite latency tail.
 fn cmd_bench_wire(args: &Args) -> i32 {
     let opts = funclsh::bench::wirebench::WireBenchOptions {
         quick: args.has("quick"),
+        require_shed: args.has("require-shed"),
     };
     let report = funclsh::bench::wirebench::run(&opts);
     let out = args.get("out").unwrap_or("BENCH_wire.json");
@@ -631,13 +646,35 @@ fn cmd_bench_wire(args: &Args) -> i32 {
         Ok(()) => {
             eprintln!("wrote {out}");
             println!("{text}");
-            0
         }
         Err(e) => {
             eprintln!("cannot write {out}: {e}");
-            1
+            return 1;
         }
     }
+    if opts.require_shed {
+        let overload = report.get("overload");
+        let sheds = overload
+            .and_then(|o| o.get("sheds"))
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0);
+        let p99 = overload
+            .and_then(|o| o.get("latency_p99_s"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN);
+        if sheds == 0 {
+            eprintln!(
+                "overload row recorded zero sheds; admission control never engaged \
+                 under a 4x saturating open-loop run"
+            );
+            return 1;
+        }
+        if !p99.is_finite() || p99 <= 0.0 {
+            eprintln!("overload row p99 is not a finite positive latency ({p99})");
+            return 1;
+        }
+    }
+    0
 }
 
 /// `funclsh bench-observe`: the tracing-overhead benchmark. Boots two

@@ -1,9 +1,13 @@
 //! Clients for the wire protocol — a blocking one-in-flight [`Client`],
 //! a windowed [`PipelinedClient`] that keeps several frames in flight and
 //! correlates responses by `req_id`, and a multi-threaded load generator
-//! with nanosecond-resolution latency histograms. Both clients also
+//! with nanosecond-resolution latency histograms (closed-loop by
+//! default, open-loop at a target arrival rate with `LoadConfig::rate`
+//! / `funclsh load --rate`). Both clients also
 //! speak the batched ops (`hash_batch`/`insert_batch`/`query_batch` —
-//! N rows per frame with per-item results; `funclsh load --batch N`).
+//! N rows per frame with per-item results; `funclsh load --batch N`)
+//! and transparently reassemble oversized batch replies that the server
+//! streams as `batch_part` continuation frames.
 //! All three speak either
 //! wire format ([`WireMode`]): JSON is the default, binary
 //! (`connect_with(addr, WireMode::Binary)` / `funclsh load --wire
@@ -53,13 +57,13 @@ impl From<std::io::Error> for ClientError {
     }
 }
 
-/// Read one reply frame in `wire` format off a buffered stream (the
+/// Read one raw reply frame in `wire` format off a buffered stream (the
 /// framing itself lives in [`protocol::read_frame`] — the blocking
 /// mirror of the server's `Framer`). `in_flight` is folded into the
 /// disconnect error so pipelined callers report how many requests the
 /// close orphaned.
 #[allow(clippy::type_complexity)]
-fn read_reply_frame(
+fn read_one_frame(
     reader: &mut BufReader<TcpStream>,
     wire: WireMode,
     in_flight: usize,
@@ -88,6 +92,52 @@ fn read_reply_frame(
         }
         WireMode::Binary => protocol::decode_reply_binary(&payload).map_err(ClientError::Protocol),
     }
+}
+
+/// Read one *logical* reply: a plain frame, or a run of `batch_part`
+/// continuation frames reassembled into the full [`Reply::Batch`].
+/// Oversized batch responses stream as continuations (the server caps
+/// every frame at `MAX_FRAME_BYTES`); callers above this function never
+/// see a partial batch.
+#[allow(clippy::type_complexity)]
+fn read_reply_frame(
+    reader: &mut BufReader<TcpStream>,
+    wire: WireMode,
+    in_flight: usize,
+) -> Result<(Option<u64>, Result<Reply, String>), ClientError> {
+    let (first_id, body) = read_one_frame(reader, wire, in_flight)?;
+    let (mut more, mut items) = match body {
+        Ok(Reply::BatchPart { more, items }) => (more, items),
+        other => return Ok((first_id, other)),
+    };
+    while more {
+        let (id, body) = read_one_frame(reader, wire, in_flight)?;
+        if id != first_id {
+            return Err(ClientError::Protocol(format!(
+                "continuation frame changed req_id: stream {first_id:?}, frame {id:?}"
+            )));
+        }
+        match body {
+            Ok(Reply::BatchPart {
+                more: m,
+                items: part,
+            }) => {
+                items.extend(part);
+                more = m;
+            }
+            Ok(other) => {
+                return Err(ClientError::Protocol(format!(
+                    "expected batch_part continuation, got {other:?}"
+                )))
+            }
+            Err(e) => {
+                return Err(ClientError::Protocol(format!(
+                    "server error inside a batch_part stream: {e}"
+                )))
+            }
+        }
+    }
+    Ok((first_id, Ok(Reply::Batch(items))))
 }
 
 /// Rows-per-frame sanity for the batch senders: the contiguous buffer
@@ -463,6 +513,15 @@ impl PipelinedClient {
         self.wire
     }
 
+    /// The `req_id` the next `send_*` call will assign. Lets callers
+    /// keep per-request bookkeeping outside the client — the open-loop
+    /// load generator records each frame's send-schedule lag under the
+    /// id it is about to get, then bills the lag back onto the matching
+    /// completion's latency.
+    pub fn peek_req_id(&self) -> u64 {
+        self.next_req_id
+    }
+
     /// Block for one response and match it to its request.
     fn recv_one(&mut self) -> Result<Completion, ClientError> {
         self.writer.flush()?;
@@ -795,6 +854,15 @@ pub struct LoadConfig {
     /// `id_base + (t << 32) + i`. The default (`1 << 40`) keeps load
     /// traffic clear of normal corpus ids (which start at 0)
     pub id_base: u64,
+    /// target aggregate arrival rate in ops/s across all threads
+    /// (`0.0` = closed loop: send as fast as the pipeline window
+    /// allows). Open-loop runs schedule each frame at its ideal
+    /// arrival instant; a frame that leaves late (the connection was
+    /// busy) has its send lag billed onto its latency, so the reported
+    /// quantiles do not suffer coordinated omission. The pipeline
+    /// window still bounds in-flight frames — size `pipeline_depth`
+    /// generously when driving a server past saturation
+    pub rate: f64,
 }
 
 impl Default for LoadConfig {
@@ -810,6 +878,7 @@ impl Default for LoadConfig {
             k: 10,
             seed: 0x10AD,
             id_base: 1 << 40,
+            rate: 0.0,
         }
     }
 }
@@ -825,8 +894,15 @@ pub struct LoadReport {
     pub queries: usize,
     /// hash-only ops issued
     pub hashes: usize,
-    /// failed operations
+    /// failed operations (excluding admission-control sheds)
     pub errors: usize,
+    /// operations the server refused with a typed `overloaded`
+    /// envelope (admission control doing its job — counted apart from
+    /// `errors` because a shed under deliberate overload is expected)
+    pub sheds: usize,
+    /// target aggregate arrival rate the run aimed for (ops/s;
+    /// `0.0` = closed loop)
+    pub target_rate_ops_s: f64,
     /// in-flight frames per connection during the run
     pub pipeline_depth: usize,
     /// rows per request frame during the run
@@ -863,10 +939,12 @@ impl LoadReport {
             ("queries", self.queries.into()),
             ("hashes", self.hashes.into()),
             ("errors", self.errors.into()),
+            ("sheds", self.sheds.into()),
             ("pipeline_depth", self.pipeline_depth.into()),
             ("batch", self.batch.into()),
             ("wire", self.wire.as_str().into()),
             ("elapsed_s", self.elapsed.as_secs_f64().into()),
+            ("target_rate_ops_s", self.target_rate_ops_s.into()),
             ("throughput_ops_s", self.throughput().into()),
             ("latency_mean_s", self.latency_mean_s.into()),
             ("latency_p50_s", self.latency_p50_s.into()),
@@ -887,13 +965,31 @@ struct ThreadTally {
     queries: usize,
     hashes: usize,
     errors: usize,
+    sheds: usize,
     latencies: Vec<f64>,
     histogram: LatencyHistogram,
 }
 
 impl ThreadTally {
-    fn absorb(&mut self, completions: Vec<Completion>) {
+    /// Count one failed op: a typed `overloaded` envelope is a shed
+    /// (the server's admission control answering deliberate overpressure),
+    /// anything else is an error.
+    fn fail(&mut self, msg: &str) {
+        if protocol::error_is_overloaded(msg) {
+            self.sheds += 1;
+        } else {
+            self.errors += 1;
+        }
+    }
+
+    /// Fold completions in. `lags` maps `req_id` to how far behind its
+    /// open-loop schedule the frame left the client; the lag is billed
+    /// onto the completion's latency so a saturated run cannot hide
+    /// queueing delay by simply sending late (coordinated omission).
+    /// Closed-loop runs pass an empty map.
+    fn absorb(&mut self, completions: Vec<Completion>, lags: &mut HashMap<u64, Duration>) {
         for c in completions {
+            let latency = c.latency + lags.remove(&c.req_id).unwrap_or(Duration::ZERO);
             match c.result {
                 // a batch frame completes all its rows at once: each row
                 // counts as one op at the frame's latency (the whole
@@ -902,18 +998,18 @@ impl ThreadTally {
                     for item in items {
                         match item {
                             Ok(_) => {
-                                self.latencies.push(c.latency.as_secs_f64());
-                                self.histogram.record(c.latency);
+                                self.latencies.push(latency.as_secs_f64());
+                                self.histogram.record(latency);
                             }
-                            Err(_) => self.errors += 1,
+                            Err(e) => self.fail(&e),
                         }
                     }
                 }
                 Ok(_) => {
-                    self.latencies.push(c.latency.as_secs_f64());
-                    self.histogram.record(c.latency);
+                    self.latencies.push(latency.as_secs_f64());
+                    self.histogram.record(latency);
                 }
-                Err(_) => self.errors += 1,
+                Err(e) => self.fail(&e),
             }
         }
     }
@@ -925,7 +1021,11 @@ impl ThreadTally {
 /// workload is the paper's sine family sampled at `points` (fetch them
 /// with [`Client::points`]). Insert ids are partitioned per thread above
 /// `cfg.id_base`, so a run never collides with itself or (at the
-/// default base) with an existing 0-based corpus.
+/// default base) with an existing 0-based corpus. With `cfg.rate > 0`
+/// the run is open-loop: frames are scheduled at the target arrival
+/// rate regardless of how fast the server answers, late sends bill
+/// their lag onto the op's latency, and typed `overloaded` refusals
+/// are tallied as `sheds` rather than errors.
 pub fn run_load(
     addr: std::net::SocketAddr,
     points: &[f64],
@@ -943,10 +1043,33 @@ pub fn run_load(
             let mut tally = ThreadTally::default();
             let batch = cfg.batch.max(1);
             let dim = points.len();
+            // open-loop pacing: this thread's share of the target rate,
+            // and each in-flight frame's lag behind its scheduled
+            // arrival instant (billed onto its latency in `absorb`)
+            let thread_rate = if cfg.rate > 0.0 {
+                cfg.rate / cfg.threads.max(1) as f64
+            } else {
+                0.0
+            };
+            let start = Instant::now();
+            let mut lags: HashMap<u64, Duration> = HashMap::new();
             let mut i = 0usize;
             while i < cfg.ops_per_thread {
                 // rows per frame: `batch` of them, except a short tail
                 let n = batch.min(cfg.ops_per_thread - i);
+                if thread_rate > 0.0 {
+                    // the frame carrying ops [i, i+n) is due when op i
+                    // arrives in the ideal open-loop schedule
+                    let scheduled = start + Duration::from_secs_f64(i as f64 / thread_rate);
+                    let now = Instant::now();
+                    if now < scheduled {
+                        std::thread::sleep(scheduled - now);
+                    } else {
+                        // behind schedule: send immediately and record
+                        // the lag under the id the frame is about to get
+                        lags.insert(client.peek_req_id(), now - scheduled);
+                    }
+                }
                 let roll = rng.uniform();
                 let mut rows: Vec<f32> = Vec::with_capacity(n * dim);
                 for _ in 0..n {
@@ -981,10 +1104,11 @@ pub fn run_load(
                     tally.hashes += n;
                     client.send_hash_batch(&rows, dim)?
                 };
-                tally.absorb(done);
+                tally.absorb(done, &mut lags);
                 i += n;
             }
-            tally.absorb(client.drain()?);
+            let drained = client.drain()?;
+            tally.absorb(drained, &mut lags);
             Ok(tally)
         }));
     }
@@ -998,6 +1122,7 @@ pub fn run_load(
                 merged.queries += t.queries;
                 merged.hashes += t.hashes;
                 merged.errors += t.errors;
+                merged.sheds += t.sheds;
                 merged.latencies.extend(t.latencies);
                 merged.histogram.merge(&t.histogram);
             }
@@ -1030,6 +1155,8 @@ pub fn run_load(
         queries: merged.queries,
         hashes: merged.hashes,
         errors: merged.errors,
+        sheds: merged.sheds,
+        target_rate_ops_s: cfg.rate.max(0.0),
         pipeline_depth: cfg.pipeline_depth.max(1),
         batch: cfg.batch.max(1),
         wire: cfg.wire,
@@ -1121,6 +1248,42 @@ mod tests {
     }
 
     #[test]
+    fn tally_classifies_sheds_and_bills_send_lag() {
+        let mut tally = ThreadTally::default();
+        let mut lags = HashMap::new();
+        // req 7 left 1 ms behind its open-loop schedule
+        lags.insert(7, Duration::from_millis(1));
+        let completions = vec![
+            Completion {
+                req_id: 7,
+                latency: Duration::from_micros(10),
+                result: Ok(Reply::Pong { indexed: 0 }),
+            },
+            Completion {
+                req_id: 8,
+                latency: Duration::from_micros(10),
+                result: Err(protocol::overloaded_msg("connection in-flight byte budget")),
+            },
+            Completion {
+                req_id: 9,
+                latency: Duration::from_micros(10),
+                result: Err("bad dim".into()),
+            },
+        ];
+        tally.absorb(completions, &mut lags);
+        assert_eq!(tally.sheds, 1, "typed overloaded envelope counts as a shed");
+        assert_eq!(tally.errors, 1, "other failures stay errors");
+        assert_eq!(tally.latencies.len(), 1);
+        // 10 µs wire latency + 1 ms schedule lag
+        assert!(
+            tally.latencies[0] >= 1.0e-3,
+            "lag not billed: {}",
+            tally.latencies[0]
+        );
+        assert!(lags.is_empty(), "billed lag is consumed");
+    }
+
+    #[test]
     fn report_json_shape() {
         let report = LoadReport {
             ops: 10,
@@ -1128,6 +1291,8 @@ mod tests {
             queries: 3,
             hashes: 2,
             errors: 0,
+            sheds: 3,
+            target_rate_ops_s: 500.0,
             pipeline_depth: 4,
             batch: 16,
             wire: WireMode::Binary,
@@ -1144,6 +1309,11 @@ mod tests {
         assert_eq!(v.get("pipeline_depth").unwrap().as_usize(), Some(4));
         assert_eq!(v.get("batch").unwrap().as_usize(), Some(16));
         assert_eq!(v.get("wire").unwrap().as_str(), Some("binary"));
+        assert_eq!(v.get("sheds").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            v.get("target_rate_ops_s").unwrap().as_f64(),
+            Some(500.0)
+        );
         assert!(v.get("throughput_ops_s").unwrap().as_f64().unwrap() > 0.0);
         // server_stages is omitted unless the caller spliced one in
         assert!(v.get("server_stages").is_none());

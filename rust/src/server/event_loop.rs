@@ -30,6 +30,21 @@
 //! [`ServiceMetrics`]. The job queue is bounded too — overflow parks in a
 //! FIFO spill list and retries each tick, so the epoll thread never
 //! blocks.
+//!
+//! Admission control: every coordinator frame is charged its payload
+//! bytes against a per-connection and a global in-flight budget at
+//! decode; over budget, the frame is answered with a typed `overloaded`
+//! envelope (and counted as a shed) instead of being queued. A
+//! connection whose pending output (write buffer plus parked
+//! out-of-order completions) exceeds the write-queue bound is a slow
+//! reader: it gets a final typed error and is disconnected, so the
+//! reorder buffer cannot grow without limit.
+//!
+//! Coalescing: adjacent single-op frames drained from one connection in
+//! one read pass are folded into a synthetic server-side batch job, so
+//! naive clients co-occupy kernel batches like `*_batch` callers; each
+//! member keeps its own seq/req_id/span and is answered with its own
+//! frame, byte-identical to the uncoalesced reply, in request order.
 
 use super::protocol::{self, Framer, FramerStep, WireMode};
 use super::reactor::{event, Poller, Waker};
@@ -59,28 +74,53 @@ const WRITE_HIGH_WATER: usize = protocol::MAX_LINE_BYTES;
 /// responses must not pin the server open).
 const SHUTDOWN_GRACE: Duration = Duration::from_secs(10);
 
-/// A parsed coordinator request in flight between the epoll thread and
-/// the worker pool.
+/// A parsed coordinator request (or a coalesced run of them) in flight
+/// between the epoll thread and the worker pool.
 struct Job {
     token: u64,
-    seq: u64,
-    req_id: Option<u64>,
-    payload: JobPayload,
-    /// frame format of the connection that sent it (the response is
+    /// frame format of the connection that sent it (every response is
     /// encoded in the same format)
     wire: WireMode,
-    /// the frame's trace span, already stamped through decode; every op
-    /// the job carries rides its own copy through the coordinator
-    span: Span,
+    payload: JobPayload,
 }
 
-/// What one frame asked the coordinator to do.
+/// One single-op frame folded into a coalesced job: it keeps its own
+/// ordering seq, correlation id, span, and admission charge, so its
+/// reply frame is indistinguishable from an uncoalesced one.
+struct CoalescedFrame {
+    seq: u64,
+    req_id: Option<u64>,
+    op: Op,
+    span: Span,
+    cost: u64,
+}
+
+/// What the job asks the coordinator to do. `span`s are already stamped
+/// through decode; `cost` is the admission-control charge (request
+/// payload bytes) released when the frame's completion returns to the
+/// epoll thread.
 enum JobPayload {
     /// a single op → a single response frame
-    One(Op),
+    One {
+        seq: u64,
+        req_id: Option<u64>,
+        op: Op,
+        span: Span,
+        cost: u64,
+    },
     /// a batch frame's items (per-item decode failures ride as `Err`) →
     /// one batch envelope with per-item results
-    Batch(Vec<Result<Op, String>>),
+    Batch {
+        seq: u64,
+        req_id: Option<u64>,
+        items: Vec<Result<Op, String>>,
+        span: Span,
+        cost: u64,
+    },
+    /// adjacent single-op frames folded server-side: submitted
+    /// back-to-back so they co-occupy kernel batches, but each member
+    /// is answered with its own frame
+    Coalesced(Vec<CoalescedFrame>),
 }
 
 /// A finished response on its way back to the epoll thread, already
@@ -88,11 +128,13 @@ enum JobPayload {
 /// carries the frame's traced ops, stamped through encode; the loop adds
 /// the write-queued stamp when the frame enters the write buffer (empty
 /// — no allocation — for untraced requests and inline completions).
+/// `cost` is the admission charge to release on arrival.
 struct Completion {
     token: u64,
     seq: u64,
     frame: Vec<u8>,
     spans: Vec<Span>,
+    cost: u64,
 }
 
 /// Handles owned by [`super::Server`] for the event-loop runtime.
@@ -125,6 +167,7 @@ pub(super) fn start(
     io_workers: usize,
     pipeline_depth: usize,
     job_queue_depth: usize,
+    limits: super::Limits,
     svc: Arc<Coordinator>,
     points: Arc<Vec<f64>>,
     shutdown: Arc<AtomicBool>,
@@ -138,6 +181,11 @@ pub(super) fn start(
     let jobs: Arc<BoundedQueue<Job>> = Arc::new(BoundedQueue::new(job_queue_depth.max(64)));
     let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
     let metrics = svc.shared_metrics();
+    // test-only fault injection: a worker panics while handling
+    // `remove` of this id, exercising the poison-recovery path
+    let panic_op_id: Option<u64> = std::env::var("FUNCLSH_TEST_WORKER_PANIC")
+        .ok()
+        .and_then(|v| v.parse().ok());
 
     let mut workers = Vec::new();
     for _ in 0..io_workers.max(1) {
@@ -146,7 +194,7 @@ pub(super) fn start(
         let completions = completions.clone();
         let waker = waker.clone();
         workers.push(std::thread::spawn(move || {
-            worker_loop(&jobs, &svc, &completions, &waker);
+            worker_loop(&jobs, &svc, &completions, &waker, panic_op_id);
         }));
     }
 
@@ -163,6 +211,8 @@ pub(super) fn start(
         points,
         shutdown,
         pipeline_depth: pipeline_depth.max(1),
+        limits,
+        inflight_global: 0,
     };
     let loop_thread = std::thread::spawn(move || state.run());
 
@@ -174,79 +224,188 @@ pub(super) fn start(
     })
 }
 
+/// Error answered for a frame whose worker-side processing panicked:
+/// the bug fails that request alone, not the reactor.
+const WORKER_PANIC_MSG: &str = "internal error: request processing panicked";
+
+/// Test hook: `FUNCLSH_TEST_WORKER_PANIC=<id>` makes a worker panic
+/// while handling `remove` of that id, simulating a request-processing
+/// bug so the panic-isolation path stays covered end to end.
+fn maybe_injected_panic(panic_op_id: Option<u64>, op: &Op) {
+    if let (Some(target), Op::Remove { id }) = (panic_op_id, op) {
+        if *id == target {
+            panic!("injected worker panic (FUNCLSH_TEST_WORKER_PANIC)");
+        }
+    }
+}
+
+/// The completion a panicked frame falls back to (admission charge still
+/// released on arrival).
+fn panic_completion(
+    token: u64,
+    seq: u64,
+    req_id: Option<u64>,
+    wire: WireMode,
+    cost: u64,
+) -> Completion {
+    Completion {
+        token,
+        seq,
+        frame: protocol::encode_error_frame(wire, req_id, WORKER_PANIC_MSG),
+        spans: Vec::new(),
+        cost,
+    }
+}
+
 /// Worker: drain a batch of jobs, push them *all* into the coordinator
 /// (so wire concurrency turns into batch occupancy), then collect the
-/// responses and hand them back to the epoll thread.
+/// responses and hand them back to the epoll thread. Submission and
+/// encoding run under `catch_unwind` per frame: a panicking request
+/// degrades to an error envelope for its own connection instead of
+/// poisoning shared state and taking down the reactor.
 fn worker_loop(
     jobs: &BoundedQueue<Job>,
     svc: &Coordinator,
     completions: &Mutex<Vec<Completion>>,
     waker: &Waker,
+    panic_op_id: Option<u64>,
 ) {
-    /// One job's submitted receivers (a single op is a batch of one; a
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    /// One frame's submitted receivers (a single op is a batch of one; a
     /// batch frame keeps `batched` so its response stays one envelope).
     struct Wait {
         token: u64,
         seq: u64,
         req_id: Option<u64>,
         wire: WireMode,
+        cost: u64,
         rxs: super::PendingBatch,
         batched: bool,
     }
     while let Some(batch) = jobs.pop_batch(32, Duration::from_micros(200)) {
-        let mut waits = Vec::with_capacity(batch.len());
+        // every op of every job is submitted before any is awaited, so
+        // wire concurrency, in-frame batching, AND server-side
+        // coalescing all turn into coordinator batch occupancy; the
+        // per-item mapping is the shared submit_batch_async, so both
+        // runtimes emit identical per-item error envelopes
+        let mut waits: Vec<Result<Wait, Completion>> = Vec::with_capacity(batch.len());
         for job in batch {
             let Job {
                 token,
-                seq,
-                req_id,
-                payload,
                 wire,
-                span,
+                payload,
             } = job;
-            // every op of every job is submitted before any is awaited,
-            // so wire concurrency AND in-frame batching both turn into
-            // coordinator batch occupancy; the per-item mapping is the
-            // shared submit_batch_async, so both runtimes emit identical
-            // per-item error envelopes
-            let (rxs, batched) = match payload {
-                JobPayload::One(op) => {
-                    (super::submit_batch_async(svc, vec![Ok(op)], span), false)
+            let submit_one =
+                |seq: u64, req_id: Option<u64>, op: Op, span: Span, cost: u64, batched: bool| {
+                    let sub = catch_unwind(AssertUnwindSafe(|| {
+                        maybe_injected_panic(panic_op_id, &op);
+                        super::submit_batch_async(svc, vec![Ok(op)], span)
+                    }));
+                    match sub {
+                        Ok(rxs) => Ok(Wait {
+                            token,
+                            seq,
+                            req_id,
+                            wire,
+                            cost,
+                            rxs,
+                            batched,
+                        }),
+                        Err(_) => Err(panic_completion(token, seq, req_id, wire, cost)),
+                    }
+                };
+            match payload {
+                JobPayload::One {
+                    seq,
+                    req_id,
+                    op,
+                    span,
+                    cost,
+                } => waits.push(submit_one(seq, req_id, op, span, cost, false)),
+                JobPayload::Coalesced(members) => {
+                    for m in members {
+                        waits.push(submit_one(m.seq, m.req_id, m.op, m.span, m.cost, false));
+                    }
                 }
-                JobPayload::Batch(items) => (super::submit_batch_async(svc, items, span), true),
-            };
-            waits.push(Wait {
+                JobPayload::Batch {
+                    seq,
+                    req_id,
+                    items,
+                    span,
+                    cost,
+                } => {
+                    let sub = catch_unwind(AssertUnwindSafe(|| {
+                        for op in items.iter().flatten() {
+                            maybe_injected_panic(panic_op_id, op);
+                        }
+                        super::submit_batch_async(svc, items, span)
+                    }));
+                    waits.push(match sub {
+                        Ok(rxs) => Ok(Wait {
+                            token,
+                            seq,
+                            req_id,
+                            wire,
+                            cost,
+                            rxs,
+                            batched: true,
+                        }),
+                        Err(_) => Err(panic_completion(token, seq, req_id, wire, cost)),
+                    });
+                }
+            }
+        }
+        let mut done = Vec::with_capacity(waits.len());
+        for w in waits {
+            let Wait {
                 token,
                 seq,
                 req_id,
                 wire,
+                cost,
                 rxs,
                 batched,
-            });
-        }
-        let mut done = Vec::with_capacity(waits.len());
-        for w in waits {
-            let (results, mut spans): (Vec<Response>, Vec<Span>) = super::collect_batch(w.rxs);
-            // Signature responses serialize straight from the
-            // coordinator's shared flat block here; the oversize guard
-            // degrades an unframeable response to a correlated error
-            // envelope instead of a dead connection
-            let frame = if w.batched {
-                protocol::encode_batch_response_frame(w.wire, w.req_id, &results)
-            } else {
-                protocol::encode_response_frame(w.wire, w.req_id, &results[0])
+            } = match w {
+                Ok(w) => w,
+                Err(c) => {
+                    done.push(c);
+                    continue;
+                }
             };
-            for s in spans.iter_mut() {
-                s.stamp(Stage::Encode);
-            }
-            done.push(Completion {
-                token: w.token,
-                seq: w.seq,
-                frame,
-                spans,
+            let enc = catch_unwind(AssertUnwindSafe(|| {
+                let (results, mut spans): (Vec<Response>, Vec<Span>) = super::collect_batch(rxs);
+                // Signature responses serialize straight from the
+                // coordinator's shared flat block here; a batch too big
+                // for one envelope streams as continuation frames
+                let frame = if batched {
+                    protocol::encode_batch_response_frame(wire, req_id, &results)
+                } else {
+                    protocol::encode_response_frame(wire, req_id, &results[0])
+                };
+                for s in spans.iter_mut() {
+                    s.stamp(Stage::Encode);
+                }
+                (frame, spans)
+            }));
+            done.push(match enc {
+                Ok((frame, spans)) => Completion {
+                    token,
+                    seq,
+                    frame,
+                    spans,
+                    cost,
+                },
+                Err(_) => panic_completion(token, seq, req_id, wire, cost),
             });
         }
-        completions.lock().unwrap().extend(done);
+        // a worker that panicked past catch_unwind in an earlier life
+        // may have poisoned this mutex; the Vec inside is still
+        // well-formed (extend is atomic with respect to panics here),
+        // so recover the guard rather than cascading the poison
+        completions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .extend(done);
         waker.wake();
     }
 }
@@ -272,6 +431,12 @@ struct Conn {
     /// frames in this connection's wire mode, plus the traced spans
     /// awaiting their write-queued stamp)
     completed: BTreeMap<u64, (Vec<u8>, Vec<Span>)>,
+    /// total bytes of the parked frames in `completed` (the slow-client
+    /// bound covers these plus the unflushed write buffer)
+    parked_bytes: usize,
+    /// admission-control charge outstanding for this connection
+    /// (request payload bytes dispatched, not yet completed)
+    inflight_bytes: u64,
     /// EOF seen, or reads retired by shutdown
     read_closed: bool,
     /// fatal protocol error: close once all responses have flushed
@@ -293,6 +458,8 @@ impl Conn {
             next_seq: 0,
             next_write_seq: 0,
             completed: BTreeMap::new(),
+            parked_bytes: 0,
+            inflight_bytes: 0,
             read_closed: false,
             close_after_flush: false,
             was_stalled: false,
@@ -312,7 +479,17 @@ impl Conn {
     }
 
     fn complete(&mut self, seq: u64, frame: Vec<u8>, spans: Vec<Span>) {
-        self.completed.insert(seq, (frame, spans));
+        self.parked_bytes += frame.len();
+        if let Some((old, _)) = self.completed.insert(seq, (frame, spans)) {
+            self.parked_bytes -= old.len();
+        }
+    }
+
+    /// Bytes queued toward this peer: unflushed write buffer plus
+    /// parked out-of-order completions (what the slow-client bound
+    /// limits).
+    fn pending_out_bytes(&self) -> usize {
+        (self.write_buf.len() - self.write_from) + self.parked_bytes
     }
 
     /// Move in-order completions into the write buffer (frames carry
@@ -323,6 +500,7 @@ impl Conn {
     fn flush_ready(&mut self, metrics: &ServiceMetrics) -> usize {
         let before = self.write_buf.len();
         while let Some((frame, mut spans)) = self.completed.remove(&self.next_write_seq) {
+            self.parked_bytes -= frame.len();
             self.write_buf.extend_from_slice(&frame);
             self.next_write_seq += 1;
             for span in spans.iter_mut() {
@@ -376,6 +554,12 @@ struct LoopState {
     points: Arc<Vec<f64>>,
     shutdown: Arc<AtomicBool>,
     pipeline_depth: usize,
+    /// admission budgets + coalescing policy (the `[server]` keys)
+    limits: super::Limits,
+    /// request payload bytes dispatched and not yet completed, across
+    /// all connections (charged and released on the epoll thread only,
+    /// so a plain counter suffices)
+    inflight_global: u64,
 }
 
 impl LoopState {
@@ -445,6 +629,7 @@ impl LoopState {
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
                     if stream.set_nonblocking(true).is_err() {
+                        self.metrics.record_rejected_accept();
                         continue;
                     }
                     let _ = stream.set_nodelay(true);
@@ -455,7 +640,9 @@ impl LoopState {
                         .register(stream.as_raw_fd(), event::READ, token)
                         .is_err()
                     {
-                        continue; // fd table exhausted: shed the connection
+                        // fd table exhausted: shed the connection
+                        self.metrics.record_rejected_accept();
+                        continue;
                     }
                     self.metrics.record_conn_opened();
                     self.conns.insert(token, Conn::new(stream));
@@ -515,6 +702,7 @@ impl LoopState {
     /// answered once and closes the connection after the flush.
     fn parse_frames(&mut self, conn: &mut Conn, token: u64) {
         let mut framer = std::mem::take(&mut conn.framer);
+        let mut group: Vec<CoalescedFrame> = Vec::new();
         while !conn.close_after_flush {
             match framer.next() {
                 FramerStep::Pending => break,
@@ -529,20 +717,65 @@ impl LoopState {
                     conn.read_closed = true;
                 }
                 FramerStep::Frame { wire, payload } => {
+                    // count whole wire bytes (payload + newline or
+                    // length prefix), so bytes_in_* reconciles against
+                    // a packet capture; record_wire_out already counts
+                    // whole frames
+                    let wire_bytes = payload.len() + protocol::frame_overhead_bytes(wire);
                     self.metrics
-                        .record_wire_in(wire == WireMode::Binary, 1, payload.len() as u64);
-                    self.handle_frame(conn, token, wire, payload);
+                        .record_wire_in(wire == WireMode::Binary, 1, wire_bytes as u64);
+                    self.handle_frame(conn, token, wire, payload, &mut group);
                 }
             }
+        }
+        if !group.is_empty() {
+            self.flush_group(token, framer.wire_mode(), &mut group);
         }
         framer.compact();
         if !conn.counted_mode {
             if let Some(m) = framer.negotiated() {
                 self.metrics.record_wire_conn(m == WireMode::Binary);
+                if m == WireMode::Binary {
+                    // the 5 FBIN1 magic bytes crossed the wire exactly
+                    // once, before the first counted frame
+                    self.metrics
+                        .record_wire_in(true, 0, protocol::BINARY_MAGIC.len() as u64);
+                }
                 conn.counted_mode = true;
             }
         }
         conn.framer = framer;
+    }
+
+    /// Dispatch an accumulated run of adjacent single-op frames: one
+    /// frame stays a plain `One` job, two or more fold into a
+    /// `Coalesced` job (counted) so they co-occupy a kernel batch.
+    fn flush_group(&mut self, token: u64, wire: WireMode, group: &mut Vec<CoalescedFrame>) {
+        match group.len() {
+            0 => {}
+            1 => {
+                let m = group.pop().expect("len checked");
+                self.dispatch(Job {
+                    token,
+                    wire,
+                    payload: JobPayload::One {
+                        seq: m.seq,
+                        req_id: m.req_id,
+                        op: m.op,
+                        span: m.span,
+                        cost: m.cost,
+                    },
+                });
+            }
+            n => {
+                self.metrics.record_coalesced_frames(n as u64);
+                self.dispatch(Job {
+                    token,
+                    wire,
+                    payload: JobPayload::Coalesced(std::mem::take(group)),
+                });
+            }
+        }
     }
 
     /// Answer one frame in its connection's wire format: transport ops
@@ -551,17 +784,44 @@ impl LoopState {
     /// order. Payload decoding (UTF-8/empty rules + format dispatch) is
     /// the shared [`protocol::parse_frame_payload`] — one copy for both
     /// runtimes, like the framing itself.
-    fn handle_frame(&mut self, conn: &mut Conn, token: u64, wire: WireMode, payload: &[u8]) {
+    fn handle_frame(
+        &mut self,
+        conn: &mut Conn,
+        token: u64,
+        wire: WireMode,
+        payload: &[u8],
+        group: &mut Vec<CoalescedFrame>,
+    ) {
         let seq = conn.take_seq();
+        let cost = payload.len() as u64;
         let mut span = Span::new(super::span_wire(wire), self.metrics.tracing_enabled());
         let parsed = protocol::parse_frame_payload(wire, payload);
         span.stamp(Stage::Decode);
-        self.route(conn, token, seq, wire, parsed, span);
+        self.route(conn, token, seq, wire, parsed, span, cost, group);
+    }
+
+    /// Admission control: charge `cost` request bytes against the
+    /// per-connection and global in-flight budgets, or return the
+    /// exhausted budget's scope (the frame is then shed with a typed
+    /// `overloaded` envelope instead of being queued).
+    fn admit(&mut self, conn: &mut Conn, cost: u64) -> Option<&'static str> {
+        if conn.inflight_bytes.saturating_add(cost) > self.limits.max_inflight_bytes_per_conn {
+            return Some("connection in-flight byte budget");
+        }
+        if self.inflight_global.saturating_add(cost) > self.limits.max_inflight_bytes {
+            return Some("server in-flight byte budget");
+        }
+        conn.inflight_bytes += cost;
+        self.inflight_global += cost;
+        None
     }
 
     /// Shared request routing: transport ops answered inline, coordinator
-    /// ops dispatched to the worker pool, parse failures answered with a
-    /// correlated error envelope in the connection's wire mode.
+    /// ops admitted against the byte budgets then dispatched to the
+    /// worker pool (adjacent single ops accumulate in `group` for
+    /// coalescing), parse failures answered with a correlated error
+    /// envelope in the connection's wire mode.
+    #[allow(clippy::too_many_arguments)]
     fn route(
         &mut self,
         conn: &mut Conn,
@@ -570,9 +830,12 @@ impl LoopState {
         wire: WireMode,
         parsed: Result<protocol::Request, protocol::RequestError>,
         span: Span,
+        cost: u64,
+        group: &mut Vec<CoalescedFrame>,
     ) {
         match parsed {
             Err(e) => {
+                self.flush_group(token, wire, group);
                 conn.complete(
                     seq,
                     protocol::encode_error_frame(wire, e.req_id, &format!("bad request: {e}")),
@@ -581,6 +844,7 @@ impl LoopState {
             }
             Ok(protocol::Request { req_id, body }) => match body {
                 protocol::RequestBody::Points => {
+                    self.flush_group(token, wire, group);
                     conn.complete(
                         seq,
                         protocol::encode_points_frame(wire, req_id, &self.points),
@@ -588,6 +852,7 @@ impl LoopState {
                     );
                 }
                 protocol::RequestBody::Shutdown => {
+                    self.flush_group(token, wire, group);
                     self.shutdown.store(true, Ordering::SeqCst);
                     conn.complete(
                         seq,
@@ -595,24 +860,74 @@ impl LoopState {
                         Vec::new(),
                     );
                 }
-                protocol::RequestBody::Op(op) => self.dispatch(Job {
-                    token,
-                    seq,
-                    req_id,
-                    payload: JobPayload::One(op),
-                    wire,
-                    span,
-                }),
-                protocol::RequestBody::Batch(items) => self.dispatch(Job {
-                    token,
-                    seq,
-                    req_id,
-                    payload: JobPayload::Batch(items),
-                    wire,
-                    span,
-                }),
+                protocol::RequestBody::Op(op) => {
+                    if let Some(scope) = self.shed_check(conn, cost) {
+                        // shed frames keep their seq, so reply order is
+                        // intact and the remaining group stays adjacent
+                        conn.complete(
+                            seq,
+                            protocol::encode_overloaded_frame(wire, req_id, scope),
+                            Vec::new(),
+                        );
+                        return;
+                    }
+                    if self.limits.coalesce {
+                        group.push(CoalescedFrame {
+                            seq,
+                            req_id,
+                            op,
+                            span,
+                            cost,
+                        });
+                        if group.len() >= self.limits.coalesce_window {
+                            self.flush_group(token, wire, group);
+                        }
+                    } else {
+                        self.dispatch(Job {
+                            token,
+                            wire,
+                            payload: JobPayload::One {
+                                seq,
+                                req_id,
+                                op,
+                                span,
+                                cost,
+                            },
+                        });
+                    }
+                }
+                protocol::RequestBody::Batch(items) => {
+                    self.flush_group(token, wire, group);
+                    if let Some(scope) = self.shed_check(conn, cost) {
+                        conn.complete(
+                            seq,
+                            protocol::encode_overloaded_frame(wire, req_id, scope),
+                            Vec::new(),
+                        );
+                        return;
+                    }
+                    self.dispatch(Job {
+                        token,
+                        wire,
+                        payload: JobPayload::Batch {
+                            seq,
+                            req_id,
+                            items,
+                            span,
+                            cost,
+                        },
+                    });
+                }
             },
         }
+    }
+
+    /// [`Self::admit`] plus the shed bookkeeping, shared by the single
+    /// and batch arms.
+    fn shed_check(&mut self, conn: &mut Conn, cost: u64) -> Option<&'static str> {
+        let scope = self.admit(conn, cost)?;
+        self.metrics.record_overload_shed();
+        Some(scope)
     }
 
     fn dispatch(&mut self, job: Job) {
@@ -637,10 +952,24 @@ impl LoopState {
     /// Route finished responses to their reorder buffers and flush every
     /// connection that may have output or a close decision pending.
     fn apply_completions(&mut self) {
-        let done: Vec<Completion> = std::mem::take(&mut *self.completions.lock().unwrap());
+        // a worker panic may have poisoned the mutex; the inner Vec is
+        // always well-formed, so take it through the poison rather than
+        // letting one bad request kill the reactor (the request itself
+        // already degraded to an error envelope in the worker)
+        let done: Vec<Completion> = std::mem::take(
+            &mut *self
+                .completions
+                .lock()
+                .unwrap_or_else(|e| e.into_inner()),
+        );
         let mut touched: Vec<u64> = Vec::with_capacity(done.len());
         for c in done {
+            // release the admission charge even if the connection died
+            // while the job was in flight — the global budget must not
+            // leak
+            self.inflight_global = self.inflight_global.saturating_sub(c.cost);
             if let Some(conn) = self.conns.get_mut(&c.token) {
+                conn.inflight_bytes = conn.inflight_bytes.saturating_sub(c.cost);
                 conn.complete(c.seq, c.frame, c.spans);
                 touched.push(c.token);
             }
@@ -666,6 +995,24 @@ impl LoopState {
                 .record_wire_out(conn.framer.wire_mode() == WireMode::Binary, moved as u64);
         }
         if conn.try_write().is_err() {
+            self.drop_conn(token, conn);
+            return;
+        }
+        if conn.pending_out_bytes() > self.limits.max_write_queue_bytes {
+            // slow reader: its backlog is past the bound, so the
+            // reorder buffer would otherwise grow without limit. Send a
+            // final typed error (best effort — the socket is already
+            // backed up) and disconnect.
+            self.metrics.record_slow_client_disconnect();
+            let frame = protocol::encode_overloaded_frame(
+                conn.framer.wire_mode(),
+                None,
+                "write queue bound exceeded; client reading too slowly",
+            );
+            conn.write_buf.extend_from_slice(&frame);
+            self.metrics
+                .record_wire_out(conn.framer.wire_mode() == WireMode::Binary, frame.len() as u64);
+            let _ = conn.try_write();
             self.drop_conn(token, conn);
             return;
         }

@@ -126,8 +126,14 @@
 //! {"ok":true, "req_id":…, "type":"shutting_down"}
 //! {"ok":true, "req_id":…, "type":"batch",
 //!             "results":[{"ok":true,"type":…,…} | {"ok":false,"error":"…"}, …]}
+//! {"ok":true, "req_id":…, "type":"batch_part", "more":bool,
+//!             "results":[…]}                   (streamed batch continuation —
+//!                                              see "Streaming replies")
 //! {"ok":false,"req_id":…, "error":"…"}        (error envelope, both
 //!                                              bad requests and op failures)
+//! {"ok":false,"req_id":…, "error":"overloaded: …; retry with backoff",
+//!             "code":"overloaded"}            (typed load-shed envelope —
+//!                                              see "Admission control")
 //! ```
 //!
 //! Batch `results` entries use the same body as the single-op responses
@@ -169,14 +175,18 @@
 //! non-finite value fails only its row's slot.
 //!
 //! Response payload: `status:u8` (0 = ok, 1 = error), `flags:u8` (bit 0
-//! = `req_id:u64` follows). Errors carry `len:u32, msg:[utf8; len]`;
-//! successes carry `type:u8` + body mirroring the JSON responses
-//! (`signature` = `n:u32` + raw `i32`s, `hits` = `n:u32` + `(id:u64,
-//! distance:f64)` pairs, `metrics` and `stats` = a length-prefixed JSON
-//! string, `points` = `n:u32` + `f64`s, acks = their `u64`). Batch responses are
-//! `type:u8 = 10` + `n:u32` + per item a `status:u8` followed by either
-//! the single-op reply body (ok) or `len:u32, msg:[utf8; len]` (error),
-//! in request row order.
+//! = `req_id:u64` follows). Errors carry `len:u32, msg:[utf8; len]`,
+//! optionally followed by one machine-readable code byte (today only
+//! `1` = overloaded; absent on plain errors — decoders must treat it as
+//! optional). Successes carry `type:u8` + body mirroring the JSON
+//! responses (`signature` = `n:u32` + raw `i32`s, `hits` = `n:u32` +
+//! `(id:u64, distance:f64)` pairs, `metrics` and `stats` = a
+//! length-prefixed JSON string, `points` = `n:u32` + `f64`s, acks =
+//! their `u64`). Batch responses are `type:u8 = 10` + `n:u32` + per
+//! item a `status:u8` followed by either the single-op reply body (ok)
+//! or `len:u32, msg:[utf8; len]` (error), in request row order. A
+//! streamed batch continuation is `type:u8 = 12` + `more:u8` (1 = more
+//! parts follow) + `n:u32` + the same per-item encoding.
 //!
 //! ## Sample validation
 //!
@@ -187,15 +197,99 @@
 //! defensively. A poisoned sample would otherwise corrupt the index and
 //! every re-rank distance it touches.
 //!
+//! ## Admission control and the `overloaded` envelope
+//!
+//! Every coordinator frame is charged its request payload bytes against
+//! two budgets at decode time, **before** it is queued:
+//!
+//! * `[server] max_inflight_bytes_per_conn` (default 16 MiB) — bytes
+//!   one connection may have in flight (dispatched, not yet answered);
+//! * `[server] max_inflight_bytes` (default 128 MiB) — the same, summed
+//!   across all connections.
+//!
+//! A frame that would exceed either budget is **shed**: it is answered
+//! immediately — in order, with its `req_id` echoed — by a typed
+//! `overloaded` envelope, and the connection stays fully usable. The
+//! JSON shape is
+//!
+//! ```text
+//! {"ok":false, "code":"overloaded",
+//!  "error":"overloaded: <scope>; retry with backoff", "req_id":…}
+//! ```
+//!
+//! where `<scope>` names the exhausted budget (`connection in-flight
+//! byte budget`, `server in-flight byte budget`, or the write-queue
+//! bound below). On the binary wire the same condition is a status-1
+//! error whose message is followed by one trailing code byte `1`;
+//! clients should treat the code byte as optional and may equally match
+//! on the `overloaded: ` message prefix (what
+//! [`protocol::error_is_overloaded`] does). Sheds are counted in
+//! `overload_sheds`; connections refused before serving began
+//! (accept-queue overflow, poller registration failure) in
+//! `rejected_accepts`.
+//!
+//! A **slow-reading client** — one whose pending output (unflushed
+//! write buffer plus parked out-of-order completions) exceeds
+//! `[server] max_write_queue_bytes` (default 64 MiB) — is sent a final
+//! `overloaded` envelope (best effort) and disconnected, counted in
+//! `slow_client_disconnects`; the reorder buffer is bounded by
+//! construction. The threaded runtime answers one frame at a time per
+//! connection, so only the per-frame and global budgets apply there.
+//!
+//! ## Server-side coalescing
+//!
+//! With `[server] coalesce = true` (the default), the event loop folds
+//! **adjacent single-op frames** drained from one connection in one
+//! read pass — up to `coalesce_window` (default 64) of them — into one
+//! synthetic server-side batch job, so naive single-op clients
+//! co-occupy kernel batches like `*_batch` callers. The fold is
+//! invisible on the wire:
+//!
+//! * **ordering** — each member keeps its own reorder seq, so replies
+//!   flush in request order exactly as without coalescing;
+//! * **framing** — each member is answered with its own response frame,
+//!   byte-identical to the uncoalesced reply (same `req_id` echo, same
+//!   envelope);
+//! * **tracing** — each member keeps its own span (decode stamped at
+//!   frame parse, kernel/encode/write-queued stamped on its own op).
+//!
+//! Batch frames, transport ops, and parse failures break a run (they
+//! dispatch the accumulated group first); coalesced frame counts land
+//! in the `coalesced_frames` metric.
+//!
+//! ## Streaming replies (continuation frames)
+//!
+//! A batch response too large for one 8 MiB envelope no longer degrades
+//! to an error: it is emitted as a sequence of **continuation frames**,
+//! each a legal ≤ 8 MiB frame in the connection's wire format, carrying
+//! a contiguous run of the batch's per-item results in order:
+//!
+//! * JSON: `{"ok":true,"type":"batch_part","more":bool,"results":[…],
+//!   "req_id":…}` — `more:false` marks the final part;
+//! * binary: `status:u8 = 0`, flags/req_id, `type:u8 = 12`, `more:u8`,
+//!   `count:u32`, then `count` items in the batch-item encoding.
+//!
+//! Every part echoes the request's `req_id`. [`Client`] and
+//! [`PipelinedClient`] reassemble parts transparently and deliver one
+//! ordinary `batch` reply, so callers never see parts. A *single item*
+//! that alone cannot fit a frame (one query's hits > 8 MiB) still
+//! degrades to a correlated per-item error in its slot. Single-op
+//! (non-batch) oversized responses keep the PR 5 behavior: a correlated
+//! per-request error envelope.
+//!
 //! ## Per-wire-mode metrics
 //!
 //! Both runtimes feed per-format counters into the service metrics:
 //! `conns_json`/`conns_binary` (connections as negotiated),
 //! `frames_json`/`frames_binary` (request frames decoded),
-//! `bytes_in_json`/`bytes_in_binary` (request payload bytes), and
-//! `bytes_out_json`/`bytes_out_binary` (response bytes queued) — so the
-//! `bench-wire` grid can be cross-checked against a live server's
-//! `metrics` op.
+//! `bytes_in_json`/`bytes_in_binary` (request wire bytes: payload plus
+//! framing overhead — the newline or the `u32` length prefix, plus the
+//! one-time `FBIN1` magic — so the counters reconcile against a packet
+//! capture), and `bytes_out_json`/`bytes_out_binary` (response bytes
+//! queued, whole frames) — so the `bench-wire` grid can be
+//! cross-checked against a live server's `metrics` op. Overload
+//! behavior is observable via `overload_sheds`, `rejected_accepts`,
+//! `coalesced_frames`, and `slow_client_disconnects`.
 //!
 //! ## Request tracing and the `stats` op
 //!
@@ -244,10 +338,12 @@
 //!   an oversized request frame (> 8 MiB before its newline, or a binary
 //!   length prefix declaring > 8 MiB — the framing cannot resync past
 //!   either), and a binary frame truncated by EOF.
-//! * **Oversized responses** — a response that cannot fit a frame
-//!   (a `query` with a huge `k` against a dense bucket) is replaced by a
-//!   *correlated per-request error envelope*; the connection and every
-//!   other in-flight request stay live.
+//! * **Oversized responses** — a single-op response that cannot fit a
+//!   frame (a `query` with a huge `k` against a dense bucket) is
+//!   replaced by a *correlated per-request error envelope*; an
+//!   oversized **batch** response streams as continuation frames
+//!   instead (see "Streaming replies"). The connection and every other
+//!   in-flight request stay live either way.
 //! * **Backpressure** — a connection with `[server] pipeline_depth`
 //!   responses outstanding (or an unflushed write backlog ≥ 8 MiB) is
 //!   not read from until it drains; stalls are visible as
@@ -299,19 +395,64 @@ pub use protocol::WireMode;
 #[cfg(target_os = "linux")]
 pub use reactor::raise_nofile_limit;
 
-use crate::config::{IoMode, ServiceConfig};
+use crate::config::{IoMode, ServerConfig, ServiceConfig};
 use crate::coordinator::{BoundedQueue, Coordinator, ServiceMetrics};
 use crate::trace::{Span, SpanWire, Stage};
 use protocol::{Request, RequestBody};
 use std::io::{BufWriter, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// How often blocked I/O paths re-check the shutdown flag.
 const POLL_INTERVAL: Duration = Duration::from_millis(50);
+
+/// Admission budgets and coalescing policy (the `[server]` keys),
+/// shared by both runtimes.
+#[derive(Debug, Clone)]
+pub(crate) struct Limits {
+    /// in-flight request payload bytes one connection may hold
+    pub max_inflight_bytes_per_conn: u64,
+    /// in-flight request payload bytes across all connections
+    pub max_inflight_bytes: u64,
+    /// pending output bytes before a slow reader is disconnected
+    pub max_write_queue_bytes: usize,
+    /// fold adjacent single-op frames into server-side batches
+    pub coalesce: bool,
+    /// max frames folded into one synthetic batch
+    pub coalesce_window: usize,
+}
+
+impl Limits {
+    fn from_server(cfg: &ServerConfig) -> Self {
+        Self {
+            max_inflight_bytes_per_conn: cfg.max_inflight_bytes_per_conn as u64,
+            max_inflight_bytes: cfg.max_inflight_bytes as u64,
+            max_write_queue_bytes: cfg.max_write_queue_bytes,
+            coalesce: cfg.coalesce,
+            coalesce_window: cfg.coalesce_window.max(1),
+        }
+    }
+}
+
+/// Charge `cost` bytes against the shared in-flight counter unless that
+/// would exceed `cap` (the threaded runtime's global admission check;
+/// the event loop keeps its counter on the epoll thread instead).
+fn charge_global(inflight: &AtomicU64, cost: u64, cap: u64) -> bool {
+    let mut cur = inflight.load(Ordering::Relaxed);
+    loop {
+        if cur.saturating_add(cost) > cap {
+            return false;
+        }
+        match inflight.compare_exchange_weak(cur, cur + cost, Ordering::Relaxed, Ordering::Relaxed)
+        {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+}
 
 /// The running TCP front-end.
 pub struct Server {
@@ -368,6 +509,7 @@ impl Server {
                 cfg.server.io_workers,
                 cfg.server.pipeline_depth,
                 cfg.queue_depth,
+                Limits::from_server(&cfg.server),
                 svc.clone(),
                 points.clone(),
                 shutdown.clone(),
@@ -462,6 +604,9 @@ fn start_threaded(
     // accept backlog the same way the coordinator queue bounds requests.
     let conn_queue: Arc<BoundedQueue<TcpStream>> =
         Arc::new(BoundedQueue::new(cfg.server.max_conns.max(1) * 4));
+    let limits = Limits::from_server(&cfg.server);
+    // global in-flight request bytes across all handler threads
+    let inflight: Arc<AtomicU64> = Arc::new(AtomicU64::new(0));
 
     let mut handlers = Vec::new();
     for _ in 0..cfg.server.max_conns.max(1) {
@@ -469,10 +614,12 @@ fn start_threaded(
         let svc = svc.clone();
         let shutdown = shutdown.clone();
         let points = points.clone();
+        let limits = limits.clone();
+        let inflight = inflight.clone();
         handlers.push(std::thread::spawn(move || {
             while let Some(batch) = conn_queue.pop_batch(1, POLL_INTERVAL) {
                 for stream in batch {
-                    handle_connection(stream, &svc, &points, &shutdown);
+                    handle_connection(stream, &svc, &points, &shutdown, &limits, &inflight);
                 }
             }
         }));
@@ -481,6 +628,7 @@ fn start_threaded(
     let acceptor = {
         let shutdown = shutdown.clone();
         let conn_queue = conn_queue.clone();
+        let metrics = svc.shared_metrics();
         std::thread::spawn(move || {
             while !shutdown.load(Ordering::SeqCst) {
                 match listener.accept() {
@@ -492,6 +640,7 @@ fn start_threaded(
                         // deadlock on a saturated handler pool.
                         let _ = stream.set_nonblocking(false);
                         if conn_queue.try_push(stream).is_err() {
+                            metrics.record_rejected_accept();
                             std::thread::sleep(Duration::from_millis(2));
                         }
                     }
@@ -517,10 +666,12 @@ fn handle_connection(
     svc: &Arc<Coordinator>,
     points: &Arc<Vec<f64>>,
     shutdown: &Arc<AtomicBool>,
+    limits: &Limits,
+    inflight: &AtomicU64,
 ) {
     let metrics = svc.shared_metrics();
     metrics.record_conn_opened();
-    let _ = serve_stream(stream, svc, points, shutdown);
+    let _ = serve_stream(stream, svc, points, shutdown, limits, inflight);
     metrics.record_conn_closed();
 }
 
@@ -533,6 +684,8 @@ fn serve_stream(
     svc: &Arc<Coordinator>,
     points: &Arc<Vec<f64>>,
     shutdown: &Arc<AtomicBool>,
+    limits: &Limits,
+    inflight: &AtomicU64,
 ) -> std::io::Result<()> {
     use protocol::{Framer, FramerStep, WireMode};
 
@@ -559,6 +712,10 @@ fn serve_stream(
                 FramerStep::Fatal { wire, msg } => {
                     if !counted_mode {
                         metrics.record_wire_conn(wire == WireMode::Binary);
+                        if wire == WireMode::Binary {
+                            metrics
+                                .record_wire_in(true, 0, protocol::BINARY_MAGIC.len() as u64);
+                        }
                         counted_mode = true;
                     }
                     // over-cap line / declared length / eof-truncated
@@ -574,11 +731,47 @@ fn serve_stream(
                 FramerStep::Frame { wire, payload } => {
                     if !counted_mode {
                         metrics.record_wire_conn(wire == WireMode::Binary);
+                        if wire == WireMode::Binary {
+                            metrics
+                                .record_wire_in(true, 0, protocol::BINARY_MAGIC.len() as u64);
+                        }
                         counted_mode = true;
                     }
-                    metrics.record_wire_in(wire == WireMode::Binary, 1, payload.len() as u64);
-                    let (reply, mut spans) =
-                        answer_frame(wire, payload, svc, points, shutdown, &metrics);
+                    // whole wire bytes: payload + newline / length prefix
+                    let wire_bytes = payload.len() + protocol::frame_overhead_bytes(wire);
+                    metrics.record_wire_in(wire == WireMode::Binary, 1, wire_bytes as u64);
+                    // admission control: this thread serves one frame at
+                    // a time, so the in-flight charge per connection is
+                    // exactly this frame — check it against the per-conn
+                    // budget directly, then the shared global budget
+                    let cost = payload.len() as u64;
+                    let shed_scope = if cost > limits.max_inflight_bytes_per_conn {
+                        Some("connection in-flight byte budget")
+                    } else if !charge_global(inflight, cost, limits.max_inflight_bytes) {
+                        Some("server in-flight byte budget")
+                    } else {
+                        None
+                    };
+                    let (reply, mut spans) = match shed_scope {
+                        Some(scope) => {
+                            metrics.record_overload_shed();
+                            // parse only for the req_id echo, so the
+                            // shed envelope stays correlated
+                            let req_id = match protocol::parse_frame_payload(wire, payload) {
+                                Ok(req) => req.req_id,
+                                Err(e) => e.req_id,
+                            };
+                            (
+                                protocol::encode_overloaded_frame(wire, req_id, scope),
+                                Vec::new(),
+                            )
+                        }
+                        None => {
+                            let out = answer_frame(wire, payload, svc, points, shutdown, &metrics);
+                            inflight.fetch_sub(cost, Ordering::Relaxed);
+                            out
+                        }
+                    };
                     metrics.record_wire_out(wire == WireMode::Binary, reply.len() as u64);
                     write_frame(&mut writer, &reply)?;
                     // the threaded runtime flushes inline, so the
@@ -596,6 +789,9 @@ fn serve_stream(
         if !counted_mode {
             if let Some(m) = framer.negotiated() {
                 metrics.record_wire_conn(m == WireMode::Binary);
+                if m == WireMode::Binary {
+                    metrics.record_wire_in(true, 0, protocol::BINARY_MAGIC.len() as u64);
+                }
                 counted_mode = true;
             }
         }

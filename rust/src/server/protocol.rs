@@ -430,9 +430,16 @@ const REPLY_POINTS: u8 = 8;
 const REPLY_SHUTTING_DOWN: u8 = 9;
 const REPLY_BATCH: u8 = 10;
 const REPLY_STATS: u8 = 11;
+const REPLY_BATCH_PART: u8 = 12;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
+
+/// Trailing machine-readable code byte of an `overloaded` binary error
+/// envelope, appended after the length-prefixed message. Absent on every
+/// other error — and older decoders stop at the message — so the byte is
+/// purely additive.
+const ERR_CODE_OVERLOADED: u8 = 1;
 
 /// Header flag: a `u64` `req_id` follows the flags byte.
 const FLAG_REQ_ID: u8 = 1;
@@ -969,9 +976,42 @@ fn envelope(req_id: Option<u64>, mut fields: Vec<(&str, Value)>) -> String {
     object(fields).to_json()
 }
 
-/// Encode an error response line (JSON).
+/// Canonical message prefix of an admission-control shed. Kept stable so
+/// [`error_is_overloaded`] classifies sheds on both ends of the wire;
+/// the JSON envelope additionally carries `"code":"overloaded"` and the
+/// binary envelope a trailing [`ERR_CODE_OVERLOADED`] byte.
+const OVERLOADED_PREFIX: &str = "overloaded: ";
+
+/// Build the canonical `overloaded` shed message for `scope` — which
+/// budget tripped (`"connection in-flight byte budget"`, `"server
+/// in-flight byte budget"`, `"write queue limit for a slow-reading
+/// client"`, …).
+pub fn overloaded_msg(scope: &str) -> String {
+    format!("{OVERLOADED_PREFIX}{scope}; retry with backoff")
+}
+
+/// Whether a server-side error message is a typed `overloaded` shed.
+/// Clients use this to separate retry-with-backoff sheds from real
+/// request errors; the load generator counts sheds with it.
+pub fn error_is_overloaded(msg: &str) -> bool {
+    msg.starts_with(OVERLOADED_PREFIX)
+}
+
+/// Encode a typed `overloaded` shed envelope as complete wire bytes for
+/// `mode` — the one way both runtimes answer a request refused by
+/// admission control.
+pub fn encode_overloaded_frame(mode: WireMode, req_id: Option<u64>, scope: &str) -> Vec<u8> {
+    encode_error_frame(mode, req_id, &overloaded_msg(scope))
+}
+
+/// Encode an error response line (JSON). An `overloaded` shed
+/// additionally carries the machine-readable `"code":"overloaded"`
+/// field, so clients need not parse the message to classify it.
 pub fn encode_error(req_id: Option<u64>, msg: &str) -> String {
     let mut fields: Vec<(&str, Value)> = vec![("ok", false.into()), ("error", msg.into())];
+    if error_is_overloaded(msg) {
+        fields.push(("code", "overloaded".into()));
+    }
     if let Some(id) = req_id {
         fields.push(("req_id", (id as usize).into()));
     }
@@ -1042,28 +1082,48 @@ pub fn encode_response(req_id: Option<u64>, resp: &Response) -> String {
     }
 }
 
+/// The per-item envelope of a JSON batch reply: `{"ok":true, …}` with
+/// the same body as the single-op response, or `{"ok":false,"error":…}`
+/// — shared by the one-frame `batch` envelope and the `batch_part`
+/// continuation frames, so items serialize identically either way.
+fn json_batch_item(resp: &Response) -> Value {
+    match resp {
+        Response::Error(e) => object(vec![
+            ("ok", false.into()),
+            ("error", e.as_str().into()),
+        ]),
+        _ => {
+            let mut fields = response_fields(resp);
+            fields.push(("ok", true.into()));
+            object(fields)
+        }
+    }
+}
+
 /// Encode a batch response line (JSON): one envelope whose `results`
 /// array holds a per-item envelope (`{"ok":true, …}` with the same body
 /// as the single-op response, or `{"ok":false,"error":…}`) in request
 /// row order.
 pub fn encode_batch_response(req_id: Option<u64>, items: &[Response]) -> String {
-    let results = items
-        .iter()
-        .map(|resp| match resp {
-            Response::Error(e) => object(vec![
-                ("ok", false.into()),
-                ("error", e.as_str().into()),
-            ]),
-            _ => {
-                let mut fields = response_fields(resp);
-                fields.push(("ok", true.into()));
-                object(fields)
-            }
-        })
-        .collect();
+    let results = items.iter().map(json_batch_item).collect();
     envelope(
         req_id,
         vec![("type", "batch".into()), ("results", Value::Array(results))],
+    )
+}
+
+/// Encode one continuation frame of a streamed batch reply (JSON): the
+/// same per-item envelopes as a `batch` reply under
+/// `type = "batch_part"`, plus a `more` flag — `true` on every part but
+/// the last.
+fn encode_batch_part(req_id: Option<u64>, more: bool, results: Vec<Value>) -> String {
+    envelope(
+        req_id,
+        vec![
+            ("type", "batch_part".into()),
+            ("more", Value::Bool(more)),
+            ("results", Value::Array(results)),
+        ],
     )
 }
 
@@ -1088,11 +1148,16 @@ pub fn encode_shutting_down(req_id: Option<u64>) -> String {
 
 // ------------------------------------------------------ binary encoders
 
-/// Encode an error response frame (binary, length-prefixed).
+/// Encode an error response frame (binary, length-prefixed). An
+/// `overloaded` shed appends the [`ERR_CODE_OVERLOADED`] code byte after
+/// the message — additive, since decoders stop at the message.
 pub fn encode_error_binary(req_id: Option<u64>, msg: &str) -> Vec<u8> {
     bin_frame(|b| {
         put_tag_and_req_id(b, STATUS_ERR, req_id);
         put_str(b, msg);
+        if error_is_overloaded(msg) {
+            b.push(ERR_CODE_OVERLOADED);
+        }
     })
 }
 
@@ -1163,6 +1228,23 @@ pub fn encode_response_binary(req_id: Option<u64>, resp: &Response) -> Vec<u8> {
     })
 }
 
+/// Append one batch item — `status:u8` followed by either the single-op
+/// reply body (ok) or a length-prefixed message (err) — the binary twin
+/// of [`json_batch_item`], shared by the one-frame `batch` reply and the
+/// `batch_part` continuation frames.
+fn put_batch_item(b: &mut Vec<u8>, resp: &Response) {
+    match resp {
+        Response::Error(e) => {
+            b.push(STATUS_ERR);
+            put_str(b, e);
+        }
+        _ => {
+            b.push(STATUS_OK);
+            put_reply_body(b, resp);
+        }
+    }
+}
+
 /// Encode a batch response frame (binary): `type:u8 = batch`,
 /// `count:u32`, then per item a `status:u8` followed by either the
 /// single-op reply body (ok) or a length-prefixed message (err), in
@@ -1173,17 +1255,27 @@ pub fn encode_batch_response_binary(req_id: Option<u64>, items: &[Response]) -> 
         b.push(REPLY_BATCH);
         b.extend_from_slice(&(items.len() as u32).to_le_bytes());
         for resp in items {
-            match resp {
-                Response::Error(e) => {
-                    b.push(STATUS_ERR);
-                    put_str(b, e);
-                }
-                _ => {
-                    b.push(STATUS_OK);
-                    put_reply_body(b, resp);
-                }
-            }
+            put_batch_item(b, resp);
         }
+    })
+}
+
+/// Encode one continuation frame of a streamed batch reply (binary):
+/// `type:u8 = batch_part`, `more:u8` (1 while further parts follow),
+/// `count:u32`, then `count` items in the same per-item layout as a
+/// `batch` reply. `body` must hold the `count` already-encoded items.
+fn encode_batch_part_binary(
+    req_id: Option<u64>,
+    more: bool,
+    count: usize,
+    body: &[u8],
+) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, STATUS_OK, req_id);
+        b.push(REPLY_BATCH_PART);
+        b.push(more as u8);
+        b.extend_from_slice(&(count as u32).to_le_bytes());
+        b.extend_from_slice(body);
     })
 }
 
@@ -1214,6 +1306,19 @@ fn json_frame(line: String) -> Vec<u8> {
     let mut b = line.into_bytes();
     b.push(b'\n');
     b
+}
+
+/// Per-frame framing-overhead bytes `mode` adds on the wire around a
+/// payload: the JSON newline terminator or the binary `u32` length
+/// prefix. (A binary connection additionally spends the 5
+/// [`BINARY_MAGIC`] bytes once at negotiation.) The traffic counters
+/// and `bench-wire`'s per-row byte columns use this so counted bytes
+/// reconcile against bytes actually on the wire (tcpdump).
+pub fn frame_overhead_bytes(mode: WireMode) -> usize {
+    match mode {
+        WireMode::Json => 1,
+        WireMode::Binary => 4,
+    }
 }
 
 /// Payload length of an already-framed response (JSON line without its
@@ -1290,59 +1395,150 @@ pub fn encode_response_frame(mode: WireMode, req_id: Option<u64>, resp: &Respons
     frame
 }
 
-/// Encode a batch response as complete wire bytes for `mode`, with the
-/// same oversize guard as [`encode_response_frame`]: a batch whose
-/// payload cannot fit one frame degrades to a *correlated per-request
-/// error envelope* (the client retries with fewer rows per frame), and
-/// provably-oversized batches are vetoed before serialization.
+/// Encode a batch response as complete wire bytes for `mode`. A batch
+/// whose envelope fits one frame is emitted exactly as before — one
+/// `batch` envelope, byte-identical to the pre-streaming wire. A batch
+/// whose payload would exceed [`MAX_FRAME_BYTES`] no longer degrades to
+/// a retry-with-fewer-rows error: it **streams** as a sequence of
+/// continuation frames (`batch_part` / [`REPLY_BATCH_PART`]), each
+/// itself under the cap and carrying the shared `req_id`, with
+/// `more = false` marking the final part — the effective batch-reply
+/// size is unbounded while every individual frame still respects the
+/// cap. Only an *individual item* too large for a frame of its own
+/// still degrades, to that item's per-item "response too large" error
+/// slot (its neighbours answer). The returned bytes may therefore hold
+/// several complete frames; the runtimes write them as one in-order
+/// blob and [`read_reply_frame`](crate::server::client) reassembles the
+/// parts into one [`Reply::Batch`] transparently.
 pub fn encode_batch_response_frame(
     mode: WireMode,
     req_id: Option<u64>,
     items: &[Response],
 ) -> Vec<u8> {
-    let floor: usize = items.iter().map(|r| response_payload_min(mode, r)).sum();
-    if floor > MAX_FRAME_BYTES {
-        return encode_error_frame(
-            mode,
-            req_id,
-            &format!(
-                "response too large (at least {floor} bytes > {MAX_FRAME_BYTES}-byte frame \
-                 cap); request fewer results per op"
-            ),
-        );
-    }
-    let frame = match mode {
-        WireMode::Json => {
-            // per-item JSON-representability guard: an item carrying a
-            // full-width id fails only its own slot (same discipline as
-            // every other per-item error), the neighbours still answer
-            if items.iter().any(|r| json_unrepresentable_id(r).is_some()) {
-                let safe: Vec<Response> = items
-                    .iter()
-                    .map(|r| match json_unrepresentable_id(r) {
-                        Some(id) => Response::Error(json_id_error(id)),
-                        None => r.clone(),
-                    })
-                    .collect();
-                json_frame(encode_batch_response(req_id, &safe))
-            } else {
-                json_frame(encode_batch_response(req_id, items))
-            }
-        }
-        WireMode::Binary => encode_batch_response_binary(req_id, items),
+    // per-item JSON-representability guard: an item carrying a
+    // full-width id fails only its own slot (same discipline as every
+    // other per-item error), the neighbours still answer
+    let safe: Vec<Response>;
+    let items = if mode == WireMode::Json
+        && items.iter().any(|r| json_unrepresentable_id(r).is_some())
+    {
+        safe = items
+            .iter()
+            .map(|r| match json_unrepresentable_id(r) {
+                Some(id) => Response::Error(json_id_error(id)),
+                None => r.clone(),
+            })
+            .collect();
+        &safe
+    } else {
+        items
     };
-    let payload = framed_payload_len(mode, &frame);
-    if payload > MAX_FRAME_BYTES {
-        return encode_error_frame(
-            mode,
-            req_id,
-            &format!(
-                "response too large ({payload} bytes > {MAX_FRAME_BYTES}-byte frame cap); \
-                 request fewer results per op"
-            ),
-        );
+    // provably-oversized batches skip straight to streaming without
+    // building (and discarding) the single tens-of-MB envelope
+    let floor: usize = items.iter().map(|r| response_payload_min(mode, r)).sum();
+    if floor <= MAX_FRAME_BYTES {
+        let frame = match mode {
+            WireMode::Json => json_frame(encode_batch_response(req_id, items)),
+            WireMode::Binary => encode_batch_response_binary(req_id, items),
+        };
+        if framed_payload_len(mode, &frame) <= MAX_FRAME_BYTES {
+            return frame;
+        }
     }
-    frame
+    match mode {
+        WireMode::Json => stream_batch_json(req_id, items),
+        WireMode::Binary => stream_batch_binary(req_id, items),
+    }
+}
+
+/// The per-item error slot of a batch item whose own encoding exceeds
+/// the frame cap even alone in a continuation frame.
+fn oversize_item_error(bytes: usize) -> Response {
+    Response::Error(format!(
+        "response too large ({bytes} bytes > {MAX_FRAME_BYTES}-byte frame cap); \
+         request fewer results per op"
+    ))
+}
+
+/// Greedily pack batch items into `batch_part` continuation frames
+/// (JSON). Each item is serialized once and measured exactly; the part
+/// envelope overhead and the commas between items are accounted, so
+/// every emitted frame's payload is provably under the cap.
+fn stream_batch_json(req_id: Option<u64>, items: &[Response]) -> Vec<u8> {
+    // fixed per-part overhead: the part envelope around an empty results
+    // array ("more":false is the longer spelling, so it bounds both)
+    let overhead = encode_batch_part(req_id, false, Vec::new()).len();
+    let item_budget = MAX_FRAME_BYTES - overhead;
+    let mut vals: Vec<(Value, usize)> = Vec::with_capacity(items.len());
+    for resp in items {
+        let v = json_batch_item(resp);
+        let n = v.to_json().len();
+        if n > item_budget {
+            let v = json_batch_item(&oversize_item_error(n));
+            let n = v.to_json().len();
+            vals.push((v, n));
+        } else {
+            vals.push((v, n));
+        }
+    }
+    let mut parts: Vec<Vec<Value>> = vec![Vec::new()];
+    let mut part_bytes = 0usize;
+    for (v, n) in vals {
+        let sep = usize::from(!parts.last().expect("non-empty").is_empty());
+        if part_bytes + sep + n > item_budget && sep == 1 {
+            parts.push(Vec::new());
+            part_bytes = 0;
+        }
+        part_bytes += usize::from(!parts.last().expect("non-empty").is_empty()) + n;
+        parts.last_mut().expect("non-empty").push(v);
+    }
+    let last = parts.len() - 1;
+    let mut out = Vec::new();
+    for (i, part) in parts.into_iter().enumerate() {
+        out.extend_from_slice(&json_frame(encode_batch_part(req_id, i < last, part)));
+    }
+    out
+}
+
+/// Greedily pack batch items into `batch_part` continuation frames
+/// (binary). Items are encoded once into their exact wire bytes; the
+/// fixed part header is accounted, so every emitted frame's payload is
+/// provably under the cap.
+fn stream_batch_binary(req_id: Option<u64>, items: &[Response]) -> Vec<u8> {
+    // fixed per-part overhead: status + flags (+ req_id) + type + more
+    // + count
+    let overhead = 2 + if req_id.is_some() { 8 } else { 0 } + 1 + 1 + 4;
+    let item_budget = MAX_FRAME_BYTES - overhead;
+    let mut encoded: Vec<Vec<u8>> = Vec::with_capacity(items.len());
+    for resp in items {
+        let mut b = Vec::new();
+        put_batch_item(&mut b, resp);
+        if b.len() > item_budget {
+            let n = b.len();
+            b.clear();
+            put_batch_item(&mut b, &oversize_item_error(n));
+        }
+        encoded.push(b);
+    }
+    let mut parts: Vec<(usize, Vec<u8>)> = vec![(0, Vec::new())];
+    for b in encoded {
+        let needs_new = {
+            let (count, body) = parts.last().expect("non-empty");
+            *count > 0 && body.len() + b.len() > item_budget
+        };
+        if needs_new {
+            parts.push((0, Vec::new()));
+        }
+        let (count, body) = parts.last_mut().expect("non-empty");
+        *count += 1;
+        body.extend_from_slice(&b);
+    }
+    let last = parts.len() - 1;
+    let mut out = Vec::new();
+    for (i, (count, body)) in parts.into_iter().enumerate() {
+        out.extend_from_slice(&encode_batch_part_binary(req_id, i < last, count, &body));
+    }
+    out
 }
 
 /// Encode an error envelope as complete wire bytes for `mode`.
@@ -1414,6 +1610,16 @@ pub enum Reply {
     /// per request row, in row order — a typed reply or that row's
     /// server-side error
     Batch(Vec<Result<Reply, String>>),
+    /// one continuation frame of a streamed (over-cap) batch reply; the
+    /// client transports reassemble consecutive parts into a single
+    /// [`Reply::Batch`], so callers above `server::client` never see
+    /// this variant
+    BatchPart {
+        /// whether further parts of the same reply follow
+        more: bool,
+        /// this part's slice of the batch results, in row order
+        items: Vec<Result<Reply, String>>,
+    },
 }
 
 /// Decode one JSON reply line into `(req_id, server result)`. The outer
@@ -1510,33 +1716,44 @@ fn decode_reply_value(v: &Value, allow_batch: bool) -> Result<Reply, String> {
                 .collect::<Result<_, _>>()?,
         ),
         "shutting_down" => Reply::ShuttingDown,
-        "batch" if allow_batch => Reply::Batch(
-            need(v, "results")?
-                .as_array()
-                .ok_or("`results` must be an array")?
-                .iter()
-                .map(|item| -> Result<Result<Reply, String>, String> {
-                    let ok = item
-                        .get("ok")
-                        .and_then(|b| match b {
-                            Value::Bool(b) => Some(*b),
-                            _ => None,
-                        })
-                        .ok_or("batch item missing bool field `ok`")?;
-                    if !ok {
-                        return Ok(Err(item
-                            .get("error")
-                            .and_then(Value::as_str)
-                            .unwrap_or("unspecified server error")
-                            .to_string()));
-                    }
-                    Ok(Ok(decode_reply_value(item, false)?))
-                })
-                .collect::<Result<_, _>>()?,
-        ),
+        "batch" if allow_batch => Reply::Batch(decode_batch_items_json(v)?),
+        "batch_part" if allow_batch => Reply::BatchPart {
+            more: match need(v, "more")? {
+                Value::Bool(b) => *b,
+                _ => return Err("`more` must be a bool".into()),
+            },
+            items: decode_batch_items_json(v)?,
+        },
         other => return Err(format!("unknown reply type `{other}`")),
     };
     Ok(reply)
+}
+
+/// Decode the `results` array shared by `batch` and `batch_part` JSON
+/// replies: one per-item envelope per entry, nested batches rejected.
+fn decode_batch_items_json(v: &Value) -> Result<Vec<Result<Reply, String>>, String> {
+    need(v, "results")?
+        .as_array()
+        .ok_or("`results` must be an array")?
+        .iter()
+        .map(|item| -> Result<Result<Reply, String>, String> {
+            let ok = item
+                .get("ok")
+                .and_then(|b| match b {
+                    Value::Bool(b) => Some(*b),
+                    _ => None,
+                })
+                .ok_or("batch item missing bool field `ok`")?;
+            if !ok {
+                return Ok(Err(item
+                    .get("error")
+                    .and_then(Value::as_str)
+                    .unwrap_or("unspecified server error")
+                    .to_string()));
+            }
+            Ok(Ok(decode_reply_value(item, false)?))
+        })
+        .collect::<Result<_, _>>()
 }
 
 /// Decode one binary reply payload into `(req_id, server result)` — the
@@ -1557,7 +1774,20 @@ pub fn decode_reply_binary(
         None
     };
     if status == STATUS_ERR {
-        return Ok((req_id, Err(rd.str_()?.to_string())));
+        let msg = rd.str_()?.to_string();
+        // optional machine-readable code byte (overloaded sheds append
+        // [`ERR_CODE_OVERLOADED`]); skipped here — the stable `overloaded:`
+        // message prefix classifies — so coded and plain errors both decode
+        if !rd.finished() {
+            let _ = rd.u8()?;
+        }
+        if !rd.finished() {
+            return Err(format!(
+                "{} trailing bytes after the reply body",
+                rd.remaining()
+            ));
+        }
+        return Ok((req_id, Err(msg)));
     }
     if status != STATUS_OK {
         return Err(format!("unknown reply status {status}"));
@@ -1628,26 +1858,43 @@ fn decode_reply_body(rd: &mut BinReader<'_>, allow_batch: bool) -> Result<Reply,
             Reply::Points(p)
         }
         REPLY_SHUTTING_DOWN => Reply::ShuttingDown,
-        REPLY_BATCH if allow_batch => {
-            let n = rd.u32()? as usize;
-            // each item carries at least a status byte + one body byte
-            if rd.remaining() < n.saturating_mul(2) {
-                return Err(format!("batch declares {n} items, frame truncated"));
+        REPLY_BATCH if allow_batch => Reply::Batch(decode_batch_items_binary(rd)?),
+        REPLY_BATCH_PART if allow_batch => {
+            let more = match rd.u8()? {
+                0 => false,
+                1 => true,
+                other => return Err(format!("unknown batch_part more flag {other}")),
+            };
+            Reply::BatchPart {
+                more,
+                items: decode_batch_items_binary(rd)?,
             }
-            let mut items = Vec::with_capacity(n);
-            for _ in 0..n {
-                let status = rd.u8()?;
-                match status {
-                    STATUS_ERR => items.push(Err(rd.str_()?.to_string())),
-                    STATUS_OK => items.push(Ok(decode_reply_body(rd, false)?)),
-                    other => return Err(format!("unknown batch item status {other}")),
-                }
-            }
-            Reply::Batch(items)
         }
         other => return Err(format!("unknown binary reply type {other}")),
     };
     Ok(reply)
+}
+
+/// Decode the `count:u32` + items block shared by `batch` and
+/// `batch_part` binary replies, nested batches rejected.
+fn decode_batch_items_binary(
+    rd: &mut BinReader<'_>,
+) -> Result<Vec<Result<Reply, String>>, String> {
+    let n = rd.u32()? as usize;
+    // each item carries at least a status byte + one body byte
+    if rd.remaining() < n.saturating_mul(2) {
+        return Err(format!("batch declares {n} items, frame truncated"));
+    }
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let status = rd.u8()?;
+        match status {
+            STATUS_ERR => items.push(Err(rd.str_()?.to_string())),
+            STATUS_OK => items.push(Ok(decode_reply_body(rd, false)?)),
+            other => return Err(format!("unknown batch item status {other}")),
+        }
+    }
+    Ok(items)
 }
 
 // ------------------------------------------------ JSON request builders
@@ -2841,8 +3088,28 @@ mod tests {
         }
     }
 
+    /// Split a blob of concatenated wire frames into frame payloads.
+    fn split_frames(mode: WireMode, mut blob: &[u8]) -> Vec<Vec<u8>> {
+        let mut frames = Vec::new();
+        while !blob.is_empty() {
+            match mode {
+                WireMode::Json => {
+                    let nl = blob.iter().position(|&b| b == b'\n').expect("newline");
+                    frames.push(blob[..nl].to_vec());
+                    blob = &blob[nl + 1..];
+                }
+                WireMode::Binary => {
+                    let consumed = split_binary_frame(blob).unwrap().expect("complete frame");
+                    frames.push(blob[4..consumed].to_vec());
+                    blob = &blob[consumed..];
+                }
+            }
+        }
+        frames
+    }
+
     #[test]
-    fn oversized_batch_response_degrades_to_correlated_error() {
+    fn oversized_batch_response_streams_continuation_frames() {
         let hits: Vec<Hit> = (0..200_000)
             .map(|i| Hit {
                 id: i,
@@ -2855,16 +3122,42 @@ mod tests {
             Response::Hits(hits),
         ];
         for mode in [WireMode::Json, WireMode::Binary] {
-            let frame = encode_batch_response_frame(mode, Some(21), &items);
-            assert!(framed_payload_len(mode, &frame) <= MAX_FRAME_BYTES, "{mode:?}");
-            let (rid, decoded) = match mode {
-                WireMode::Json => decode_reply(std::str::from_utf8(&frame).unwrap()).unwrap(),
-                WireMode::Binary => decode_reply_binary(&frame[4..]).unwrap(),
-            };
-            assert_eq!(rid, Some(21), "{mode:?}");
-            assert!(decoded.unwrap_err().contains("response too large"), "{mode:?}");
+            let blob = encode_batch_response_frame(mode, Some(21), &items);
+            let frames = split_frames(mode, &blob);
+            assert!(frames.len() >= 2, "{mode:?}: an over-cap batch must stream");
+            let mut all = Vec::new();
+            for (i, payload) in frames.iter().enumerate() {
+                assert!(
+                    payload.len() <= MAX_FRAME_BYTES,
+                    "{mode:?}: part {i} over the cap"
+                );
+                let (rid, decoded) = match mode {
+                    WireMode::Json => {
+                        decode_reply(std::str::from_utf8(payload).unwrap()).unwrap()
+                    }
+                    WireMode::Binary => decode_reply_binary(payload).unwrap(),
+                };
+                assert_eq!(rid, Some(21), "{mode:?}: every part must correlate");
+                match decoded.unwrap() {
+                    Reply::BatchPart { more, items } => {
+                        assert_eq!(more, i + 1 < frames.len(), "{mode:?}: part {i}");
+                        all.extend(items);
+                    }
+                    other => panic!("{mode:?}: unexpected {other:?}"),
+                }
+            }
+            assert_eq!(all.len(), 3, "{mode:?}: every item arrives exactly once");
+            for item in &all {
+                match item {
+                    Ok(Reply::Hits(h)) => {
+                        assert_eq!(h.len(), 200_000, "{mode:?}");
+                        assert_eq!(h[199_999].id, 199_999, "{mode:?}");
+                    }
+                    other => panic!("{mode:?}: unexpected {other:?}"),
+                }
+            }
         }
-        // a small batch passes through as a batch envelope
+        // a small batch passes through as one plain batch envelope
         let small = encode_batch_response_frame(
             WireMode::Binary,
             Some(1),
@@ -2872,6 +3165,77 @@ mod tests {
         );
         let (_, decoded) = decode_reply_binary(&small[4..]).unwrap();
         assert!(matches!(decoded.unwrap(), Reply::Batch(v) if v.len() == 1));
+    }
+
+    #[test]
+    fn single_oversized_batch_item_degrades_only_its_slot() {
+        // one item that cannot fit a frame even alone (600k hits: 9.6 MB
+        // binary, ~14 MB JSON) next to a small neighbour
+        let big: Vec<Hit> = (0..600_000)
+            .map(|i| Hit {
+                id: i,
+                distance: 0.5,
+            })
+            .collect();
+        let items = vec![Response::Hits(big), Response::Pong { indexed: 7 }];
+        for mode in [WireMode::Json, WireMode::Binary] {
+            let blob = encode_batch_response_frame(mode, Some(9), &items);
+            let mut all = Vec::new();
+            for payload in split_frames(mode, &blob) {
+                let (_, decoded) = match mode {
+                    WireMode::Json => {
+                        decode_reply(std::str::from_utf8(&payload).unwrap()).unwrap()
+                    }
+                    WireMode::Binary => decode_reply_binary(&payload).unwrap(),
+                };
+                match decoded.unwrap() {
+                    Reply::BatchPart { items, .. } => all.extend(items),
+                    other => panic!("{mode:?}: unexpected {other:?}"),
+                }
+            }
+            assert_eq!(all.len(), 2, "{mode:?}");
+            let e = all[0].as_ref().unwrap_err();
+            assert!(e.contains("response too large"), "{mode:?}: {e}");
+            assert_eq!(all[1], Ok(Reply::Pong { indexed: 7 }), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn overloaded_envelopes_are_typed_in_both_formats() {
+        let msg = overloaded_msg("connection in-flight byte budget");
+        assert!(error_is_overloaded(&msg));
+        assert!(!error_is_overloaded("bad request: nope"));
+        for mode in [WireMode::Json, WireMode::Binary] {
+            let frame =
+                encode_overloaded_frame(mode, Some(33), "connection in-flight byte budget");
+            let (rid, decoded) = match mode {
+                WireMode::Json => decode_reply(std::str::from_utf8(&frame).unwrap()).unwrap(),
+                WireMode::Binary => decode_reply_binary(&frame[4..]).unwrap(),
+            };
+            assert_eq!(rid, Some(33), "{mode:?}: sheds must correlate");
+            let e = decoded.unwrap_err();
+            assert!(error_is_overloaded(&e), "{mode:?}: {e}");
+        }
+        // the JSON envelope carries the machine-readable code field…
+        let line = encode_error(Some(1), &msg);
+        assert!(line.contains(r#""code":"overloaded""#), "{line}");
+        // …and plain errors carry no code byte/field and still roundtrip
+        let plain = encode_error_binary(Some(2), "duplicate id 7");
+        let (_, decoded) = decode_reply_binary(&plain[4..]).unwrap();
+        assert_eq!(decoded.unwrap_err(), "duplicate id 7");
+        assert!(!encode_error(Some(2), "duplicate id 7").contains("code"));
+    }
+
+    #[test]
+    fn frame_overhead_matches_wire_layout() {
+        for mode in [WireMode::Json, WireMode::Binary] {
+            let f = encode_hash_frame(mode, Some(1), &[0.5]);
+            assert_eq!(
+                framed_payload_len(mode, &f) + frame_overhead_bytes(mode),
+                f.len(),
+                "{mode:?}"
+            );
+        }
     }
 
     #[test]
@@ -2958,6 +3322,23 @@ mod tests {
             b.extend_from_slice(&1u32.to_le_bytes());
             b.push(STATUS_OK);
             b.push(REPLY_BATCH);
+            b.extend_from_slice(&0u32.to_le_bytes());
+        });
+        let e = decode_reply_binary(&frame[4..]).unwrap_err();
+        assert!(e.contains("unknown binary reply type"), "{e}");
+    }
+
+    #[test]
+    fn nested_batch_part_replies_rejected() {
+        // a batch_part nested inside a batch item must not recurse the
+        // client decoder either
+        let frame = bin_frame(|b| {
+            put_tag_and_req_id(b, STATUS_OK, Some(1));
+            b.push(REPLY_BATCH);
+            b.extend_from_slice(&1u32.to_le_bytes());
+            b.push(STATUS_OK);
+            b.push(REPLY_BATCH_PART);
+            b.push(0);
             b.extend_from_slice(&0u32.to_le_bytes());
         });
         let e = decode_reply_binary(&frame[4..]).unwrap_err();

@@ -297,6 +297,115 @@ fn fatal_paths_are_chunking_independent() {
     assert_same("binary oversized length", seed, &got, &want);
 }
 
+/// The 8 MiB frame cap is boundary-exact in the server's `Framer`:
+/// cap-sized payloads decode, cap+1 poisons, in both wire formats. (The
+/// JSON cap measures the payload — the line minus its `\n`, CR
+/// stripped; the binary cap measures the declared length and rejects on
+/// the prefix alone, before any payload arrives.)
+#[test]
+fn frame_cap_is_boundary_exact_in_the_framer() {
+    for (len, ok) in [
+        (protocol::MAX_LINE_BYTES - 1, true),
+        (protocol::MAX_LINE_BYTES, true),
+        (protocol::MAX_LINE_BYTES + 1, false),
+    ] {
+        let mut stream = vec![b'x'; len];
+        stream.push(b'\n');
+        let (frames, fatal) = decode_whole(&stream, false);
+        if ok {
+            assert_eq!(frames.len(), 1, "json payload {len}");
+            assert_eq!(frames[0].1.len(), len, "json payload {len}");
+            assert!(fatal.is_none(), "json payload {len}: {fatal:?}");
+        } else {
+            assert!(frames.is_empty(), "json payload {len}");
+            assert!(
+                fatal.as_deref().unwrap().contains("too long"),
+                "json payload {len}: {fatal:?}"
+            );
+        }
+    }
+    // a CR-terminated cap-sized line measures the same payload: the CR
+    // is framing, not payload
+    let mut stream = vec![b'x'; protocol::MAX_LINE_BYTES];
+    stream.extend_from_slice(b"\r\n");
+    let (frames, fatal) = decode_whole(&stream, false);
+    assert_eq!(frames.len(), 1, "CR-terminated cap-sized line");
+    assert_eq!(frames[0].1.len(), protocol::MAX_LINE_BYTES);
+    assert!(fatal.is_none(), "{fatal:?}");
+
+    for (len, ok) in [
+        (protocol::MAX_FRAME_BYTES - 1, true),
+        (protocol::MAX_FRAME_BYTES, true),
+        (protocol::MAX_FRAME_BYTES + 1, false),
+    ] {
+        let mut stream = protocol::BINARY_MAGIC.to_vec();
+        stream.extend_from_slice(&(len as u32).to_le_bytes());
+        if ok {
+            // the over-cap case ships no payload on purpose: the
+            // declared length alone must poison the framer
+            stream.extend(std::iter::repeat(b'p').take(len));
+        }
+        let (frames, fatal) = decode_whole(&stream, false);
+        if ok {
+            assert_eq!(frames.len(), 1, "binary frame {len}");
+            assert_eq!(frames[0].1.len(), len, "binary frame {len}");
+            assert!(fatal.is_none(), "binary frame {len}: {fatal:?}");
+        } else {
+            assert!(frames.is_empty(), "binary frame {len}");
+            assert!(
+                fatal.as_deref().unwrap().contains("cap"),
+                "binary frame {len}: {fatal:?}"
+            );
+        }
+    }
+}
+
+/// The client's blocking `read_frame` mirror enforces the same cap at
+/// the same boundary as the `Framer` — a maximum-size reply the server
+/// is allowed to send is never rejected client-side, and cap+1 is
+/// `InvalidData` in both formats.
+#[test]
+fn frame_cap_is_boundary_exact_in_the_client_mirror() {
+    for (len, ok) in [
+        (protocol::MAX_FRAME_BYTES - 1, true),
+        (protocol::MAX_FRAME_BYTES, true),
+        (protocol::MAX_FRAME_BYTES + 1, false),
+    ] {
+        let mut stream = vec![b'x'; len];
+        stream.push(b'\n');
+        let mut reader = &stream[..];
+        match protocol::read_frame(&mut reader, WireMode::Json) {
+            Ok(Some(payload)) => {
+                assert!(ok, "json reply {len} should exceed the cap");
+                // JSON read_frame keeps the newline; the decoder trims
+                assert_eq!(payload.len(), len + 1, "json reply {len}");
+            }
+            Err(e) => {
+                assert!(!ok, "json reply {len} rejected: {e}");
+                assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+            }
+            Ok(None) => panic!("json reply {len}: unexpected EOF"),
+        }
+
+        let mut stream = (len as u32).to_le_bytes().to_vec();
+        if ok {
+            stream.extend(std::iter::repeat(b'p').take(len));
+        }
+        let mut reader = &stream[..];
+        match protocol::read_frame(&mut reader, WireMode::Binary) {
+            Ok(Some(payload)) => {
+                assert!(ok, "binary reply {len} should exceed the cap");
+                assert_eq!(payload.len(), len, "binary reply {len}");
+            }
+            Err(e) => {
+                assert!(!ok, "binary reply {len} rejected: {e}");
+                assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+            }
+            Ok(None) => panic!("binary reply {len}: unexpected EOF"),
+        }
+    }
+}
+
 // ---------------------------------------------- server parity harness
 
 fn server_config(io_mode: IoMode) -> ServiceConfig {

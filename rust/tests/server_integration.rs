@@ -1190,3 +1190,436 @@ fn pipelined_batches_interleave_with_singles() {
     }
     finish(server);
 }
+
+#[cfg(target_os = "linux")]
+fn rss_kib() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// Overload soak across the io_mode × wire matrix: with the per-connection
+/// in-flight byte budget set below a single data frame, every hash op is
+/// refused with a typed `overloaded` envelope (never a dropped connection),
+/// the shed counter reconciles, no connections leak, resident memory stays
+/// bounded, and the server keeps serving small frames throughout.
+#[test]
+fn overload_soak_sheds_typed_envelopes_across_matrix() {
+    use funclsh::coordinator::metrics::value_u64;
+    use funclsh::server::protocol;
+
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        for wire in [WireMode::Json, WireMode::Binary] {
+            let label = format!("{io_mode:?}/{wire:?}");
+            let mut cfg = test_config();
+            cfg.server.io_mode = io_mode;
+            // below any dim-32 data frame on either wire, but above a
+            // ping/metrics frame — data ops shed deterministically while
+            // control frames keep flowing
+            cfg.server.max_inflight_bytes_per_conn = 64;
+            let (server, points) = boot(&cfg);
+
+            #[cfg(target_os = "linux")]
+            let rss_before = rss_kib();
+
+            // a blocking client sees the typed envelope, not a hangup
+            let mut direct = Client::connect_with(server.addr(), wire).unwrap();
+            let row = sample_sine(0.33, &points);
+            match direct.hash(&row) {
+                Err(funclsh::server::ClientError::Server(msg)) => {
+                    assert!(protocol::error_is_overloaded(&msg), "{label}: {msg}");
+                    assert!(
+                        msg.contains("connection in-flight byte budget"),
+                        "{label}: {msg}"
+                    );
+                }
+                other => panic!("{label}: expected overloaded envelope, got {other:?}"),
+            }
+            // the refusal is per-request: the same connection still pings
+            assert_eq!(direct.ping().unwrap(), 0, "{label}");
+
+            // sustained hostile load: every data op refused, zero transport
+            // errors, and the generator tallies sheds separately
+            let load = LoadConfig {
+                threads: 4,
+                ops_per_thread: 50,
+                pipeline_depth: if io_mode == IoMode::Threaded { 1 } else { 4 },
+                wire,
+                insert_fraction: 0.0,
+                query_fraction: 0.0,
+                k: 3,
+                seed: 0x0B5E55,
+                ..Default::default()
+            };
+            let report = run_load(server.addr(), &points, &load).unwrap();
+            assert_eq!(report.ops, 4 * 50, "{label}");
+            assert_eq!(report.sheds, report.ops, "{label}: every hash must shed");
+            assert_eq!(report.errors, 0, "{label}: sheds are not transport errors");
+
+            // server-side counters agree (the direct probe shed one more)
+            let mut probe = Client::connect_with(server.addr(), wire).unwrap();
+            let m = probe.metrics().unwrap();
+            let sheds = m.get("overload_sheds").and_then(value_u64).unwrap();
+            assert!(
+                sheds >= report.sheds as u64 + 1,
+                "{label}: overload_sheds {sheds} < {}",
+                report.sheds + 1
+            );
+
+            // no connection leaks: once the load clients are gone, only the
+            // direct client and the probe remain open
+            let t0 = Instant::now();
+            loop {
+                let m = probe.metrics().unwrap();
+                let active = m.get("conns_active").and_then(value_u64).unwrap();
+                if active == 2 {
+                    break;
+                }
+                assert!(
+                    t0.elapsed() < Duration::from_secs(5),
+                    "{label}: {active} connections still active after the soak"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+
+            #[cfg(target_os = "linux")]
+            if let (Some(before), Some(after)) = (rss_before, rss_kib()) {
+                // server and clients share this process; a server buffering
+                // the hostile burst instead of shedding would blow well past
+                // this (deliberately loose — the suite runs concurrently)
+                assert!(
+                    after.saturating_sub(before) < 256 * 1024,
+                    "{label}: RSS grew {} KiB under overload",
+                    after.saturating_sub(before)
+                );
+            }
+
+            // clean recovery: the server still answers after the soak
+            assert_eq!(probe.ping().unwrap(), 0, "{label}");
+            finish(server);
+        }
+    }
+}
+
+/// The second admission scope: a tiny *global* in-flight budget (with a
+/// generous per-connection one) sheds with the server-wide scope string
+/// on both runtimes, and small control frames still fit under it.
+#[test]
+fn global_budget_sheds_with_server_scope() {
+    use funclsh::server::protocol;
+
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let mut cfg = test_config();
+        cfg.server.io_mode = io_mode;
+        cfg.server.max_inflight_bytes_per_conn = 1 << 20;
+        cfg.server.max_inflight_bytes = 64;
+        let (server, points) = boot(&cfg);
+        let mut client = Client::connect(server.addr()).unwrap();
+        match client.hash(&sample_sine(0.5, &points)) {
+            Err(funclsh::server::ClientError::Server(msg)) => {
+                assert!(protocol::error_is_overloaded(&msg), "{io_mode:?}: {msg}");
+                assert!(msg.contains("server in-flight byte budget"), "{io_mode:?}: {msg}");
+            }
+            other => panic!("{io_mode:?}: expected overloaded envelope, got {other:?}"),
+        }
+        assert_eq!(client.ping().unwrap(), 0, "{io_mode:?}");
+        finish(server);
+    }
+}
+
+/// Tentpole: server-side coalescing of adjacent single-op frames is
+/// invisible on the wire. A burst of single hashes against a coalescing
+/// server produces a byte-identical reply stream to a non-coalescing
+/// server (per-request framing, req_id order), the signatures equal the
+/// client-side `hash_batch` answers, and only the coalescing server's
+/// `coalesced_frames` counter moves.
+#[test]
+fn coalesced_singles_are_byte_identical_to_uncoalesced_and_batch() {
+    use funclsh::coordinator::metrics::value_u64;
+    use funclsh::server::protocol;
+
+    let cfg_on = test_config();
+    assert!(cfg_on.server.coalesce, "coalescing must default on");
+    let mut cfg_off = test_config();
+    cfg_off.server.coalesce = false;
+    let (server_on, points) = boot(&cfg_on);
+    let (server_off, points_off) = boot(&cfg_off);
+    assert_eq!(points, points_off, "same seed, same bank");
+    let row = sample_sine(0.7, &points);
+    let dim = points.len();
+    let n = 16u64;
+
+    let mut oracle = Client::connect(server_on.addr()).unwrap();
+    let want = oracle.hash(&row).unwrap();
+
+    for wire in [WireMode::Json, WireMode::Binary] {
+        // one write: n single-op hash frames back to back, so the reactor
+        // sees them adjacent in a single parse pass
+        let mut burst = Vec::new();
+        if wire == WireMode::Binary {
+            burst.extend_from_slice(protocol::BINARY_MAGIC);
+        }
+        for rid in 1..=n {
+            burst.extend_from_slice(&protocol::encode_hash_frame(wire, Some(rid), &row));
+        }
+        let blast = |addr: std::net::SocketAddr| -> Vec<Vec<u8>> {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            writer.write_all(&burst).unwrap();
+            writer.flush().unwrap();
+            (0..n)
+                .map(|_| protocol::read_frame(&mut reader, wire).unwrap().unwrap())
+                .collect()
+        };
+        let on = blast(server_on.addr());
+        let off = blast(server_off.addr());
+        assert_eq!(on, off, "{wire:?}: coalescing changed reply bytes");
+
+        // per-request reply order and correlation survive coalescing, and
+        // every signature matches the single-op oracle
+        for (i, payload) in on.iter().enumerate() {
+            let (rid, body) = match wire {
+                WireMode::Json => {
+                    protocol::decode_reply(std::str::from_utf8(payload).unwrap()).unwrap()
+                }
+                WireMode::Binary => protocol::decode_reply_binary(payload).unwrap(),
+            };
+            assert_eq!(rid, Some(i as u64 + 1), "{wire:?}: reply order");
+            match body.unwrap() {
+                protocol::Reply::Signature(s) => assert_eq!(s, want, "{wire:?}"),
+                other => panic!("{wire:?}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    // the coalesced answers equal an explicit client-side batch
+    let mut rows: Vec<f32> = Vec::new();
+    for _ in 0..n {
+        rows.extend(row.iter().copied());
+    }
+    let batched = oracle.hash_batch(&rows, dim).unwrap();
+    assert_eq!(batched.len(), n as usize);
+    for item in &batched {
+        assert_eq!(item.as_ref().ok(), Some(&want));
+    }
+
+    let m_on = Client::connect(server_on.addr()).unwrap().metrics().unwrap();
+    let m_off = Client::connect(server_off.addr()).unwrap().metrics().unwrap();
+    assert!(
+        m_on.get("coalesced_frames").and_then(value_u64).unwrap() > 0,
+        "coalescing server never coalesced: {m_on:?}"
+    );
+    assert_eq!(
+        m_off.get("coalesced_frames").and_then(value_u64),
+        Some(0),
+        "coalescing disabled but counter moved: {m_off:?}"
+    );
+    finish(server_on);
+    finish(server_off);
+}
+
+/// Satellite regression: a panic inside request processing (injected via
+/// `FUNCLSH_TEST_WORKER_PANIC`) fails exactly that request with a typed
+/// internal-error envelope — the neighbouring pipelined requests, the
+/// connection, and the server all keep working. Before the fix the
+/// poisoned completions mutex took down the whole event loop.
+#[test]
+fn worker_panic_fails_only_the_affected_request() {
+    const TARGET: u64 = 424_242;
+    std::env::set_var("FUNCLSH_TEST_WORKER_PANIC", TARGET.to_string());
+    let cfg = test_config();
+    let (server, points) = boot(&cfg); // the hook is read once at start
+    std::env::remove_var("FUNCLSH_TEST_WORKER_PANIC");
+    assert_eq!(server.io_mode(), IoMode::EventLoop);
+
+    let row = sample_sine(0.9, &points);
+    let mut client = PipelinedClient::connect(server.addr(), 8).unwrap();
+    let mut completions = Vec::new();
+    completions.extend(client.send_insert(1, &row).unwrap());
+    completions.extend(client.send_remove(TARGET).unwrap());
+    completions.extend(client.send_hash(&row).unwrap());
+    completions.extend(client.drain().unwrap());
+    assert_eq!(completions.len(), 3);
+    for pair in completions.windows(2) {
+        assert!(pair[0].req_id < pair[1].req_id, "reply order survives");
+    }
+    assert!(completions[0].result.is_ok(), "{completions:?}");
+    match &completions[1].result {
+        Err(msg) => assert!(
+            msg.contains("request processing panicked"),
+            "expected the panic envelope, got: {msg}"
+        ),
+        other => panic!("injected panic answered {other:?}"),
+    }
+    match completions[2].result.as_ref().expect("neighbour survives") {
+        funclsh::server::protocol::Reply::Signature(_) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // the reactor survived: fresh connections serve, and ordinary removes
+    // on the same server still work
+    let mut probe = Client::connect(server.addr()).unwrap();
+    assert_eq!(probe.ping().unwrap(), 1);
+    probe.remove(1).unwrap();
+    assert_eq!(probe.ping().unwrap(), 0);
+    finish(server);
+}
+
+/// Satellite: the `bytes_in_*` / `bytes_out_*` counters reconcile exactly
+/// against bytes on the wire — payload plus framing overhead per frame,
+/// plus the 5 FBIN1 magic bytes once per binary connection. The metrics
+/// probe rides the *other* wire format so it cannot perturb the counters
+/// under test.
+#[test]
+fn wire_byte_counters_match_bytes_on_the_wire() {
+    use funclsh::coordinator::metrics::value_u64;
+    use funclsh::server::protocol;
+
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        for wire in [WireMode::Json, WireMode::Binary] {
+            let label = format!("{io_mode:?}/{wire:?}");
+            let mut cfg = test_config();
+            cfg.server.io_mode = io_mode;
+            let (server, points) = boot(&cfg);
+            let row = sample_sine(0.6, &points);
+
+            let mut stream_bytes = Vec::new();
+            if wire == WireMode::Binary {
+                stream_bytes.extend_from_slice(protocol::BINARY_MAGIC);
+            }
+            stream_bytes.extend_from_slice(&protocol::encode_bare_frame(wire, Some(1), "ping"));
+            stream_bytes.extend_from_slice(&protocol::encode_hash_frame(wire, Some(2), &row));
+            stream_bytes.extend_from_slice(&protocol::encode_insert_frame(
+                wire,
+                Some(3),
+                9,
+                &row,
+            ));
+            stream_bytes.extend_from_slice(&protocol::encode_query_frame(
+                wire,
+                Some(4),
+                &row,
+                3,
+            ));
+            stream_bytes.extend_from_slice(&protocol::encode_bare_frame(wire, Some(5), "ping"));
+
+            let sock = TcpStream::connect(server.addr()).unwrap();
+            let mut reader = BufReader::new(sock.try_clone().unwrap());
+            let mut writer = sock;
+            writer.write_all(&stream_bytes).unwrap();
+            writer.flush().unwrap();
+            let mut reply_bytes = 0u64;
+            for _ in 0..5 {
+                let payload = protocol::read_frame(&mut reader, wire).unwrap().unwrap();
+                // the JSON payload keeps its newline; binary frames spend a
+                // 4-byte length prefix the payload does not include
+                reply_bytes += payload.len() as u64
+                    + if wire == WireMode::Binary { 4 } else { 0 };
+            }
+
+            let probe_wire = match wire {
+                WireMode::Json => WireMode::Binary,
+                WireMode::Binary => WireMode::Json,
+            };
+            let mut probe = Client::connect_with(server.addr(), probe_wire).unwrap();
+            let m = probe.metrics().unwrap();
+            let (in_key, out_key) = match wire {
+                WireMode::Json => ("bytes_in_json", "bytes_out_json"),
+                WireMode::Binary => ("bytes_in_binary", "bytes_out_binary"),
+            };
+            assert_eq!(
+                m.get(in_key).and_then(value_u64),
+                Some(stream_bytes.len() as u64),
+                "{label}: {in_key} diverges from bytes actually written"
+            );
+            assert_eq!(
+                m.get(out_key).and_then(value_u64),
+                Some(reply_bytes),
+                "{label}: {out_key} diverges from reply bytes actually read"
+            );
+            finish(server);
+        }
+    }
+}
+
+/// Acceptance: a batch reply larger than the 8 MiB frame cap round-trips
+/// via `batch_part` continuation frames on both wire formats and both
+/// runtimes, reassembled transparently by the blocking and pipelined
+/// clients. A reply this size cannot be a single frame — the framer and
+/// the client mirror both reject over-cap frames — so a complete,
+/// correct batch proves the continuation path end to end.
+#[test]
+fn oversized_batch_reply_streams_in_continuation_frames() {
+    use funclsh::server::protocol;
+
+    for io_mode in [IoMode::EventLoop, IoMode::Threaded] {
+        let mut cfg = test_config();
+        cfg.server.io_mode = io_mode;
+        // long signatures (k·l = 1024 hashes) over a small dim keep the
+        // *request* far under the cap while the reply blows past it
+        cfg.dim = 8;
+        cfg.k = 4;
+        cfg.l = 256;
+        cfg.max_batch = 128;
+        cfg.queue_depth = 4096;
+        let (server, points) = boot(&cfg);
+        let row = sample_sine(0.8, &points);
+        let n = 4500usize;
+        let mut rows: Vec<f32> = Vec::with_capacity(n * cfg.dim);
+        for _ in 0..n {
+            rows.extend(row.iter().copied());
+        }
+
+        for wire in [WireMode::Json, WireMode::Binary] {
+            let label = format!("{io_mode:?}/{wire:?}");
+            let mut client = Client::connect_with(server.addr(), wire).unwrap();
+            let want = client.hash(&row).unwrap();
+            assert_eq!(want.len(), cfg.total_hashes(), "{label}");
+
+            // conservative floor on the encoded reply: ≥ 2 bytes per JSON
+            // signature element (digit + separator), 4 bytes per binary one
+            let min_reply = match wire {
+                WireMode::Json => n * (2 * want.len() + 1),
+                WireMode::Binary => n * (4 * want.len()),
+            };
+            assert!(
+                min_reply > protocol::MAX_FRAME_BYTES,
+                "{label}: test would fit in one frame ({min_reply} B)"
+            );
+
+            let items = client.hash_batch(&rows, cfg.dim).unwrap();
+            assert_eq!(items.len(), n, "{label}");
+            for (i, item) in items.iter().enumerate() {
+                assert_eq!(item.as_ref().ok(), Some(&want), "{label}: row {i}");
+            }
+
+            // the pipelined client reassembles the same stream, interleaved
+            // with an ordinary single op
+            let mut pipelined =
+                PipelinedClient::connect_with(server.addr(), 4, wire).unwrap();
+            let mut completions = Vec::new();
+            completions.extend(pipelined.send_hash_batch(&rows, cfg.dim).unwrap());
+            completions.extend(pipelined.send_hash(&row).unwrap());
+            completions.extend(pipelined.drain().unwrap());
+            assert_eq!(completions.len(), 2, "{label}");
+            match completions[0].result.as_ref().expect("batch ok") {
+                protocol::Reply::Batch(items) => {
+                    assert_eq!(items.len(), n, "{label}");
+                    for item in items {
+                        match item.as_ref().expect("row ok") {
+                            protocol::Reply::Signature(s) => assert_eq!(s, &want, "{label}"),
+                            other => panic!("{label}: unexpected {other:?}"),
+                        }
+                    }
+                }
+                other => panic!("{label}: unexpected {other:?}"),
+            }
+            match completions[1].result.as_ref().expect("single ok") {
+                protocol::Reply::Signature(s) => assert_eq!(s, &want, "{label}"),
+                other => panic!("{label}: unexpected {other:?}"),
+            }
+        }
+        finish(server);
+    }
+}
