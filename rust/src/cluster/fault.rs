@@ -1,0 +1,208 @@
+//! Deterministic fault injection for the cluster transports.
+//!
+//! The router consults a [`FaultInjector`] before every shard call, and
+//! the migration driver before every pull/push/discard, with a context
+//! string like `query@127.0.0.1:4801` or `push@127.0.0.1:4802`. Rules
+//! match on a substring of that context, fire a fixed number of times,
+//! and then disarm — every fault schedule is reproducible, in keeping
+//! with the repo's no-jitter doctrine.
+//!
+//! Rules come from an environment variable (the same pattern as the
+//! worker-panic hook: inert unless the variable is set, so production
+//! code paths carry only a cheap check) or are installed
+//! programmatically by tests via [`FaultInjector::inject`].
+//!
+//! # Spec grammar
+//!
+//! Comma-separated rules, each `MATCH=KIND[:ARG][*COUNT]`:
+//!
+//! ```text
+//! 4801=drop*2            drop the connection twice for contexts
+//!                        containing "4801"
+//! push=delay:250         delay every push-context call 250 ms, once
+//! query@127.0.0.1:4803=blackhole*3
+//!                        swallow three query calls to that shard
+//!                        (they time out instead of answering)
+//! ```
+//!
+//! `COUNT` defaults to 1; `KIND` is `drop`, `delay` (arg = ms), or
+//! `blackhole`.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What an armed fault does to the call it intercepts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// tear down the cached connection and fail the attempt with a
+    /// transient error (looks like a connection reset; the retry
+    /// schedule takes over)
+    Drop,
+    /// sleep this long before letting the call proceed (exercises the
+    /// per-request timeout without killing the call)
+    Delay(Duration),
+    /// swallow the call: fail it as a read timeout without sending
+    /// anything (what a hung or partitioned shard looks like)
+    BlackHole,
+}
+
+/// One armed fault: fires on contexts containing `matches`, `remaining`
+/// times.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    /// substring of the call context (`op@addr`) this rule arms on
+    pub matches: String,
+    /// what happens when it fires
+    pub kind: FaultKind,
+    /// firings left before the rule disarms
+    pub remaining: u32,
+}
+
+/// A set of armed fault rules consulted before every cluster call.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    rules: Mutex<Vec<FaultRule>>,
+}
+
+impl FaultInjector {
+    /// An injector with no rules (every check passes).
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// Parse rules from the environment variable `var`. Unset or empty
+    /// means disabled; a malformed spec panics with the offending rule
+    /// (a test-only hook that silently no-ops would hide typos until
+    /// the fault it was supposed to inject never fires).
+    pub fn from_env(var: &str) -> Self {
+        match std::env::var(var) {
+            Ok(spec) if !spec.trim().is_empty() => {
+                let rules = parse_spec(&spec)
+                    .unwrap_or_else(|e| panic!("{var}: bad fault spec {spec:?}: {e}"));
+                Self {
+                    rules: Mutex::new(rules),
+                }
+            }
+            _ => Self::disabled(),
+        }
+    }
+
+    /// Arm a rule programmatically (tests).
+    pub fn inject(&self, rule: FaultRule) {
+        self.rules.lock().unwrap().push(rule);
+    }
+
+    /// Whether any rules are armed (cheap fast-path check).
+    pub fn is_armed(&self) -> bool {
+        !self.rules.lock().unwrap().is_empty()
+    }
+
+    /// Consult the rules for one call context. The first matching armed
+    /// rule fires (its `remaining` decrements; spent rules are pruned)
+    /// and its kind is returned for the transport to act on.
+    pub fn check(&self, context: &str) -> Option<FaultKind> {
+        let mut rules = self.rules.lock().unwrap();
+        let hit = rules
+            .iter_mut()
+            .find(|r| r.remaining > 0 && context.contains(&r.matches))?;
+        hit.remaining -= 1;
+        let kind = hit.kind;
+        rules.retain(|r| r.remaining > 0);
+        Some(kind)
+    }
+}
+
+/// Parse the comma-separated `MATCH=KIND[:ARG][*COUNT]` grammar.
+fn parse_spec(spec: &str) -> Result<Vec<FaultRule>, String> {
+    spec.split(',')
+        .map(str::trim)
+        .filter(|r| !r.is_empty())
+        .map(parse_rule)
+        .collect()
+}
+
+fn parse_rule(rule: &str) -> Result<FaultRule, String> {
+    let (matches, action) = rule
+        .split_once('=')
+        .ok_or_else(|| format!("rule {rule:?}: want MATCH=KIND[:ARG][*COUNT]"))?;
+    if matches.is_empty() {
+        return Err(format!("rule {rule:?}: empty matcher"));
+    }
+    let (action, count) = match action.split_once('*') {
+        Some((a, n)) => (
+            a,
+            n.parse::<u32>()
+                .map_err(|e| format!("rule {rule:?}: bad count {n:?}: {e}"))?,
+        ),
+        None => (action, 1),
+    };
+    if count == 0 {
+        return Err(format!("rule {rule:?}: count must be >= 1"));
+    }
+    let kind = match action.split_once(':') {
+        Some(("delay", ms)) => FaultKind::Delay(Duration::from_millis(
+            ms.parse::<u64>()
+                .map_err(|e| format!("rule {rule:?}: bad delay {ms:?}: {e}"))?,
+        )),
+        None if action == "drop" => FaultKind::Drop,
+        None if action == "blackhole" => FaultKind::BlackHole,
+        _ => {
+            return Err(format!(
+                "rule {rule:?}: unknown kind {action:?} (want drop, delay:MS, or blackhole)"
+            ))
+        }
+    };
+    Ok(FaultRule {
+        matches: matches.to_string(),
+        kind,
+        remaining: count,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rules_fire_a_fixed_number_of_times_then_disarm() {
+        let inj = FaultInjector::disabled();
+        assert!(!inj.is_armed());
+        inj.inject(FaultRule {
+            matches: "4801".into(),
+            kind: FaultKind::Drop,
+            remaining: 2,
+        });
+        assert!(inj.is_armed());
+        assert_eq!(inj.check("query@127.0.0.1:4801"), Some(FaultKind::Drop));
+        assert_eq!(inj.check("insert@127.0.0.1:4801"), Some(FaultKind::Drop));
+        assert_eq!(inj.check("query@127.0.0.1:4801"), None, "spent");
+        assert!(!inj.is_armed(), "spent rules are pruned");
+        // non-matching contexts never consume firings
+        inj.inject(FaultRule {
+            matches: "push".into(),
+            kind: FaultKind::BlackHole,
+            remaining: 1,
+        });
+        assert_eq!(inj.check("pull@127.0.0.1:4802"), None);
+        assert_eq!(inj.check("push@127.0.0.1:4802"), Some(FaultKind::BlackHole));
+    }
+
+    #[test]
+    fn spec_grammar_roundtrips() {
+        let rules = parse_spec("4801=drop*2, push=delay:250, 4803=blackhole").unwrap();
+        assert_eq!(rules.len(), 3);
+        assert_eq!(rules[0].matches, "4801");
+        assert_eq!(rules[0].kind, FaultKind::Drop);
+        assert_eq!(rules[0].remaining, 2);
+        assert_eq!(rules[1].kind, FaultKind::Delay(Duration::from_millis(250)));
+        assert_eq!(rules[1].remaining, 1);
+        assert_eq!(rules[2].kind, FaultKind::BlackHole);
+
+        assert!(parse_spec("noequals").is_err());
+        assert!(parse_spec("a=explode").is_err());
+        assert!(parse_spec("a=delay:abc").is_err());
+        assert!(parse_spec("a=drop*0").is_err());
+        assert!(parse_spec("=drop").is_err());
+        assert!(parse_spec("").unwrap().is_empty());
+    }
+}

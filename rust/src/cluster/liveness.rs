@@ -1,0 +1,200 @@
+//! Heartbeat-driven shard liveness.
+//!
+//! The router's heartbeat thread pings every shard each
+//! `heartbeat_interval_ms` and feeds the outcomes into a
+//! [`LivenessBoard`]; the scatter path consults the board to decide
+//! which shards are worth a request at all. Hysteresis in both
+//! directions keeps the scatter set stable:
+//!
+//! * a shard is marked **down** only after `miss_threshold` consecutive
+//!   missed heartbeats (one dropped packet does not evict it);
+//! * a down shard is **re-admitted** only after `readmit_after`
+//!   consecutive healthy heartbeats (a flapping shard does not bounce
+//!   in and out of the scatter set).
+//!
+//! Request outcomes feed the same board — a scatter leg that fails past
+//! its retry budget counts as a miss — so a shard that dies right after
+//! a healthy heartbeat is demoted by the traffic itself rather than
+//! waiting for the next heartbeat round.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One shard's health as the board currently sees it.
+#[derive(Debug, Clone)]
+pub struct ShardStatus {
+    /// in the scatter set
+    pub alive: bool,
+    /// consecutive failed probes/requests (resets on success)
+    pub consecutive_misses: u32,
+    /// consecutive healthy probes (resets on a miss)
+    pub consecutive_ok: u32,
+    /// lifetime healthy heartbeats
+    pub heartbeats_ok: u64,
+    /// lifetime missed heartbeats
+    pub heartbeats_missed: u64,
+    /// when the last healthy probe answered
+    pub last_ok: Option<Instant>,
+    /// entries the shard reported in its last healthy pong
+    pub indexed: u64,
+}
+
+impl ShardStatus {
+    fn new() -> Self {
+        Self {
+            // optimistic start: the first scatter may race the first
+            // heartbeat, and a cold "down" default would degrade every
+            // request until the heartbeat thread warms up
+            alive: true,
+            consecutive_misses: 0,
+            consecutive_ok: 0,
+            heartbeats_ok: 0,
+            heartbeats_missed: 0,
+            last_ok: None,
+            indexed: 0,
+        }
+    }
+}
+
+/// Shared per-shard health, updated by the heartbeat thread and by
+/// request outcomes, read by the scatter path.
+#[derive(Debug)]
+pub struct LivenessBoard {
+    shards: Vec<Mutex<ShardStatus>>,
+    miss_threshold: u32,
+    readmit_after: u32,
+}
+
+impl LivenessBoard {
+    /// A board for `n` shards, all optimistically alive.
+    pub fn new(n: usize, miss_threshold: u32, readmit_after: u32) -> Self {
+        Self {
+            shards: (0..n).map(|_| Mutex::new(ShardStatus::new())).collect(),
+            miss_threshold: miss_threshold.max(1),
+            readmit_after: readmit_after.max(1),
+        }
+    }
+
+    /// Number of shards tracked.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Whether the board tracks no shards.
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Whether shard `i` is currently in the scatter set.
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.shards[i].lock().unwrap().alive
+    }
+
+    /// Record a healthy probe (or successful request) for shard `i`.
+    /// `indexed` is the entry count its pong reported (`None` for
+    /// non-ping successes). Returns `true` if this success re-admitted
+    /// a down shard.
+    pub fn record_ok(&self, i: usize, indexed: Option<u64>) -> bool {
+        let mut s = self.shards[i].lock().unwrap();
+        s.consecutive_misses = 0;
+        s.consecutive_ok = s.consecutive_ok.saturating_add(1);
+        s.heartbeats_ok += 1;
+        s.last_ok = Some(Instant::now());
+        if let Some(n) = indexed {
+            s.indexed = n;
+        }
+        if !s.alive && s.consecutive_ok >= self.readmit_after {
+            s.alive = true;
+            return true;
+        }
+        false
+    }
+
+    /// Record a missed probe (or a request that failed past its retry
+    /// budget) for shard `i`. Returns `true` if this miss marked the
+    /// shard down.
+    pub fn record_miss(&self, i: usize) -> bool {
+        let mut s = self.shards[i].lock().unwrap();
+        s.consecutive_ok = 0;
+        s.consecutive_misses = s.consecutive_misses.saturating_add(1);
+        s.heartbeats_missed += 1;
+        if s.alive && s.consecutive_misses >= self.miss_threshold {
+            s.alive = false;
+            return true;
+        }
+        false
+    }
+
+    /// A point-in-time copy of shard `i`'s status.
+    pub fn status(&self, i: usize) -> ShardStatus {
+        self.shards[i].lock().unwrap().clone()
+    }
+
+    /// Indices of the shards currently in the scatter set.
+    pub fn alive_set(&self) -> Vec<usize> {
+        (0..self.shards.len()).filter(|&i| self.is_alive(i)).collect()
+    }
+
+    /// Sum of the entry counts the live shards last reported.
+    pub fn indexed_total(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| {
+                let s = s.lock().unwrap();
+                if s.alive {
+                    s.indexed
+                } else {
+                    0
+                }
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_threshold_marks_down_and_readmit_needs_consecutive_oks() {
+        let board = LivenessBoard::new(2, 3, 2);
+        assert!(board.is_alive(0));
+        // two misses: still alive (threshold 3)
+        assert!(!board.record_miss(0));
+        assert!(!board.record_miss(0));
+        assert!(board.is_alive(0));
+        // third miss crosses the threshold exactly once
+        assert!(board.record_miss(0));
+        assert!(!board.is_alive(0));
+        assert!(!board.record_miss(0), "already down: no re-announcement");
+        assert_eq!(board.alive_set(), vec![1]);
+
+        // one healthy probe is not enough to re-admit (readmit_after 2)
+        assert!(!board.record_ok(0, Some(10)));
+        assert!(!board.is_alive(0));
+        // a miss resets the healthy streak
+        board.record_miss(0);
+        assert!(!board.record_ok(0, None));
+        assert!(!board.is_alive(0));
+        // two consecutive healthy probes re-admit
+        assert!(board.record_ok(0, Some(42)));
+        assert!(board.is_alive(0));
+        assert_eq!(board.alive_set(), vec![0, 1]);
+
+        let s = board.status(0);
+        assert_eq!(s.indexed, 42);
+        assert!(s.last_ok.is_some());
+        assert!(s.heartbeats_ok >= 3 && s.heartbeats_missed >= 4);
+    }
+
+    #[test]
+    fn indexed_total_counts_live_shards_only() {
+        let board = LivenessBoard::new(3, 1, 1);
+        board.record_ok(0, Some(100));
+        board.record_ok(1, Some(200));
+        board.record_ok(2, Some(300));
+        assert_eq!(board.indexed_total(), 600);
+        board.record_miss(1);
+        assert_eq!(board.indexed_total(), 400, "down shard's count excluded");
+    }
+}

@@ -1,0 +1,278 @@
+//! Live shard handoff: move one shard's entry store to another node
+//! while both keep serving.
+//!
+//! The driver is a client of both nodes — it holds no state a crash
+//! could strand except the partially-filled target, and that is exactly
+//! what the rollback path cleans up:
+//!
+//! 1. **Snapshot sweep** — walk the source's entries in ascending id
+//!    order with the stateless `migrate_pull` cursor (`from_id`
+//!    inclusive; next cursor = last id + 1) and apply each chunk to the
+//!    target with `entries_push`. Pushes overwrite by id, so a replayed
+//!    chunk is harmless.
+//! 2. **Delta sweep** — repeat the walk once. Entries inserted or
+//!    re-inserted on the source while the snapshot sweep ran are pushed
+//!    again; unchanged entries are overwritten with themselves. The
+//!    sweep is cheap relative to correctness: after it, the target
+//!    holds every entry the source held at the start of the delta pass.
+//! 3. On any failure that outlives the per-call retry budget, the
+//!    driver **rolls back**: every id it pushed is dropped from the
+//!    target via `entries_discard`, so a half-migrated target never
+//!    serves a partial store. The router keeps routing to the source
+//!    the whole time — cutover (restarting the target with the source's
+//!    `--shard-range` and updating `cluster.nodes`) is the operator's
+//!    explicit step once the report says the copy is complete.
+//!
+//! No entry is lost (the source is never mutated) and none duplicated
+//! (pushes overwrite by id; ranges do not overlap after cutover).
+//!
+//! Faults are injected via `FUNCLSH_TEST_MIGRATION_FAULT` (see
+//! [`super::FaultInjector`]) with contexts `pull@addr`, `push@addr`,
+//! `discard@addr`.
+
+use super::fault::{FaultInjector, FaultKind};
+use crate::json::{object, Value};
+use crate::server::{Client, ClientError, RetryPolicy};
+use std::time::Duration;
+
+/// Everything one handoff needs.
+#[derive(Debug, Clone)]
+pub struct MigrationConfig {
+    /// address of the shard being drained
+    pub source: String,
+    /// address of the node receiving the store
+    pub target: String,
+    /// entries per `migrate_pull` chunk
+    pub chunk: usize,
+    /// per-call timeout on both connections
+    pub request_timeout: Duration,
+    /// retry schedule for transient failures on either side
+    pub retry: RetryPolicy,
+}
+
+/// What a completed handoff did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MigrationReport {
+    /// entries copied by the snapshot sweep
+    pub snapshot_entries: u64,
+    /// entries re-pushed by the delta sweep (mostly overwrites)
+    pub delta_entries: u64,
+    /// chunks transferred across both sweeps
+    pub chunks: u64,
+    /// transient-failure retries consumed across both connections
+    pub retries: u64,
+}
+
+impl MigrationReport {
+    /// JSON view for the `funclsh migrate` CLI.
+    pub fn to_json(&self) -> Value {
+        object(vec![
+            ("snapshot_entries", Value::Number(self.snapshot_entries as f64)),
+            ("delta_entries", Value::Number(self.delta_entries as f64)),
+            ("chunks", Value::Number(self.chunks as f64)),
+            ("retries", Value::Number(self.retries as f64)),
+        ])
+    }
+}
+
+/// One faultable logical call: consult the injector, then run the call
+/// under the shared reconnect/retry discipline.
+///
+/// * `drop` clears the cached connection first — the call still
+///   proceeds, paying one reconnect (a recoverable blip);
+/// * `delay` sleeps before the call (exercises the timeout budget);
+/// * `blackhole` fails the call outright with a timeout, *without*
+///   consuming the retry budget on a real dial — the deterministic
+///   stand-in for a killed node, and the lever tests use to force a
+///   rollback.
+fn faulted_call<T>(
+    faults: &FaultInjector,
+    context: String,
+    conn: &mut Option<Client>,
+    addr: &str,
+    cfg: &MigrationConfig,
+    retries: &mut u64,
+    f: impl FnMut(&mut Client) -> Result<T, ClientError>,
+) -> Result<T, ClientError> {
+    if faults.is_armed() {
+        match faults.check(&context) {
+            Some(FaultKind::Drop) => {
+                *conn = None;
+                *retries += 1;
+            }
+            Some(FaultKind::Delay(d)) => std::thread::sleep(d),
+            Some(FaultKind::BlackHole) => {
+                *conn = None;
+                return Err(ClientError::Io(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    format!("injected blackhole for {context}"),
+                )));
+            }
+            None => {}
+        }
+    }
+    super::call_with_retry(conn, addr, cfg.request_timeout, &cfg.retry, retries, f)
+}
+
+/// State threaded through the sweeps so the rollback path knows what to
+/// undo.
+struct Transfer<'a> {
+    cfg: &'a MigrationConfig,
+    faults: FaultInjector,
+    source: Option<Client>,
+    target: Option<Client>,
+    /// every id pushed to the target (rollback set)
+    moved: Vec<u64>,
+    chunks: u64,
+    retries: u64,
+}
+
+impl Transfer<'_> {
+    /// Walk the source once from id 0 and push every chunk to the
+    /// target. Returns the number of entries pushed by this sweep.
+    fn sweep(&mut self) -> Result<u64, ClientError> {
+        let mut from = 0u64;
+        let mut pushed = 0u64;
+        loop {
+            let (entries, done) = faulted_call(
+                &self.faults,
+                format!("pull@{}", self.cfg.source),
+                &mut self.source,
+                &self.cfg.source,
+                self.cfg,
+                &mut self.retries,
+                |c| c.migrate_pull(from, self.cfg.chunk.max(1)),
+            )?;
+            if let Some(last) = entries.last() {
+                let count = faulted_call(
+                    &self.faults,
+                    format!("push@{}", self.cfg.target),
+                    &mut self.target,
+                    &self.cfg.target,
+                    self.cfg,
+                    &mut self.retries,
+                    |c| c.entries_push(&entries),
+                )?;
+                if count != entries.len() as u64 {
+                    return Err(ClientError::Protocol(format!(
+                        "target acked {count} of {} pushed entries",
+                        entries.len()
+                    )));
+                }
+                pushed += count;
+                self.chunks += 1;
+                self.moved.extend(entries.iter().map(|e| e.id));
+                match last.id.checked_add(1) {
+                    Some(next) => from = next,
+                    // the store's last possible id was just copied
+                    None => break,
+                }
+            }
+            if done {
+                break;
+            }
+        }
+        Ok(pushed)
+    }
+
+    /// Drop every pushed id from the target. Returns how many the
+    /// target acked discarding (an id the target never applied acks 0 —
+    /// discard is idempotent like push).
+    fn rollback(&mut self) -> Result<u64, ClientError> {
+        self.moved.sort_unstable();
+        self.moved.dedup();
+        let mut dropped = 0u64;
+        for chunk in self.moved.chunks(self.cfg.chunk.max(1)).map(<[u64]>::to_vec) {
+            dropped += faulted_call(
+                &self.faults,
+                format!("discard@{}", self.cfg.target),
+                &mut self.target,
+                &self.cfg.target,
+                self.cfg,
+                &mut self.retries,
+                |c| c.entries_discard(&chunk),
+            )?;
+        }
+        Ok(dropped)
+    }
+}
+
+/// Run one complete handoff. On success the target holds a copy of the
+/// source's store and the source is untouched. On failure the error
+/// names the failing leg and reports the rollback outcome — either the
+/// target was cleaned (`target rolled back, N entries discarded`) or
+/// the rollback itself failed and the message says the target must not
+/// be cut over.
+pub fn migrate(cfg: &MigrationConfig) -> Result<MigrationReport, String> {
+    let mut t = Transfer {
+        cfg,
+        faults: FaultInjector::from_env("FUNCLSH_TEST_MIGRATION_FAULT"),
+        source: None,
+        target: None,
+        moved: Vec::new(),
+        chunks: 0,
+        retries: 0,
+    };
+    let copied = t.sweep().and_then(|snapshot_entries| {
+        let delta_entries = t.sweep()?;
+        Ok((snapshot_entries, delta_entries))
+    });
+    match copied {
+        Ok((snapshot_entries, delta_entries)) => Ok(MigrationReport {
+            snapshot_entries,
+            delta_entries,
+            chunks: t.chunks,
+            retries: t.retries,
+        }),
+        Err(e) if t.moved.is_empty() => {
+            Err(format!("migration failed before any entry moved: {e}"))
+        }
+        Err(e) => match t.rollback() {
+            Ok(dropped) => Err(format!(
+                "migration failed: {e}; target rolled back, {dropped} entries discarded"
+            )),
+            Err(re) => Err(format!(
+                "migration failed: {e}; rollback ALSO failed: {re} — the target may hold \
+                 partial state and must not be cut over"
+            )),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_shape() {
+        let r = MigrationReport {
+            snapshot_entries: 120,
+            delta_entries: 3,
+            chunks: 5,
+            retries: 2,
+        };
+        let json = r.to_json().to_json();
+        assert!(json.contains("\"snapshot_entries\":120"), "{json}");
+        assert!(json.contains("\"delta_entries\":3"), "{json}");
+        assert!(json.contains("\"chunks\":5"), "{json}");
+        assert!(json.contains("\"retries\":2"), "{json}");
+    }
+
+    #[test]
+    fn unreachable_nodes_fail_without_partial_state() {
+        // nothing listens on these ports; the first pull exhausts its
+        // (zero-retry) budget and the driver reports a clean failure
+        let cfg = MigrationConfig {
+            source: "127.0.0.1:9".into(),
+            target: "127.0.0.1:9".into(),
+            chunk: 64,
+            request_timeout: Duration::from_millis(100),
+            retry: RetryPolicy::new(0, 1, 1),
+        };
+        let err = migrate(&cfg).unwrap_err();
+        assert!(
+            err.starts_with("migration failed before any entry moved:"),
+            "{err}"
+        );
+    }
+}

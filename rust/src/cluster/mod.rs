@@ -1,0 +1,130 @@
+//! Fault-tolerant multi-node cluster serving.
+//!
+//! A funclsh cluster is `N` ordinary `funclsh serve` processes, each
+//! started with `--shard-range LO-HI` so it owns one contiguous slice of
+//! the 64-bit routing-key space (entry ids map into the space via
+//! [`crate::lsh::route_key`] — a multiply-xor fold, so sequential ids
+//! spread uniformly), plus one `funclsh route` coordinator in front:
+//!
+//! ```text
+//! clients ── TCP ──▶ router (scatter-gather over the FBIN1 wire)
+//!                      │ insert/remove ──▶ the one shard owning the id
+//!                      │ query ──▶ every live shard, candidates merged
+//!                      │          by (distance, id) and truncated to k
+//!                      │ heartbeat thread ──▶ ping every shard; misses
+//!                      │          mark it down, K healthy pings re-admit
+//!                      └ stats detail=cluster ──▶ answered locally
+//! shard A (range 0000…-5555…)   shard B (5555…-aaaa…)   shard C (…ffff)
+//! ```
+//!
+//! The router speaks the same two client wire formats as a single node
+//! (newline JSON / `FBIN1` binary, negotiated per connection by the
+//! shared [`crate::server::protocol::Framer`]) and answers with the same
+//! envelopes, so a cluster is a drop-in replacement for one server: a
+//! 3-shard cluster and a single-node twin return **byte-identical**
+//! id-sorted candidates for the same corpus (the merge key
+//! `(distance, id)` is exactly the single node's re-rank order).
+//!
+//! # Failure semantics
+//!
+//! Every shard leg of a request runs under a per-request timeout and a
+//! deterministic capped-exponential [`crate::server::RetryPolicy`]
+//! (reconnect + resend on transient failures). A shard that stays
+//! unreachable past the retry budget degrades the reply instead of
+//! failing or hanging it:
+//!
+//! * a scatter (`query`/`query_batch`) answers with the hits of the
+//!   shards that did respond, wrapped in a typed `degraded` envelope
+//!   naming every missing `lo-hi@addr` range — partial data plus an
+//!   explicit gap marker, never a silent gap;
+//! * a targeted op (`insert`/`remove`) whose owner shard is down gets a
+//!   typed `degraded: …` error (per-item inside batches) — the caller
+//!   knows exactly which range was unavailable and can retry later.
+//!
+//! Liveness is tracked by a heartbeat thread ([`LivenessBoard`]):
+//! `heartbeat_miss_threshold` consecutive missed pings mark a shard
+//! down (it is skipped entirely — no per-request retry tax), and
+//! `readmit_after` consecutive healthy pings re-admit it.
+//!
+//! # Live shard handoff
+//!
+//! [`migrate`] moves one shard's store to another node while both keep
+//! serving: a snapshot sweep walks the source's entries in id order via
+//! the stateless `migrate_pull` cursor and applies them to the target
+//! with overwrite-idempotent `entries_push`, then a delta sweep repeats
+//! the walk to catch entries that changed mid-transfer. Every chunk is
+//! retried under backoff; an unrecoverable failure rolls the target
+//! back via `entries_discard`, so a half-migrated target never serves
+//! (the router keeps routing to the source until the operator cuts
+//! over). No entry is lost or duplicated: pushes overwrite by id.
+//!
+//! # Fault injection
+//!
+//! [`FaultInjector`] is a deterministic, env-gated fault layer on the
+//! router→shard and migration transports (`FUNCLSH_TEST_SHARD_FAULT`,
+//! `FUNCLSH_TEST_MIGRATION_FAULT`): rules like `4801=drop*2` or
+//! `push=delay:100` drop connections, delay calls, or black-hole
+//! replies a fixed number of times, so the cluster test suite exercises
+//! timeout/retry/degraded paths without real network flakiness.
+
+mod fault;
+mod liveness;
+mod migration;
+mod router;
+
+pub use fault::{FaultInjector, FaultKind, FaultRule};
+pub use liveness::{LivenessBoard, ShardStatus};
+pub use migration::{migrate, MigrationConfig, MigrationReport};
+pub use router::{Router, RouterConfig, ShardSpec};
+
+use crate::server::{Client, ClientError, RetryPolicy, WireMode};
+use std::time::Duration;
+
+/// Run one request against the shard at `addr` through a cached
+/// connection slot, reconnecting and retrying under `policy` on
+/// transient failures (connection refused/reset, read timeout, typed
+/// `overloaded` shed). The slot is cleared on every failure — a timed-
+/// out connection may hold a half-read reply, so it is never reused.
+///
+/// Shared by the router's scatter legs and the migration driver: this
+/// is the *only* place cluster code talks to a shard, so every inter-
+/// node call gets the same timeout/retry/reconnect discipline.
+pub(crate) fn call_with_retry<T>(
+    conn: &mut Option<Client>,
+    addr: &str,
+    timeout: Duration,
+    policy: &RetryPolicy,
+    retries: &mut u64,
+    mut f: impl FnMut(&mut Client) -> Result<T, ClientError>,
+) -> Result<T, ClientError> {
+    let mut attempt = 0usize;
+    loop {
+        let r = match conn {
+            Some(c) => f(c),
+            None => match Client::connect_with(addr, WireMode::Binary) {
+                Ok(mut c) => {
+                    c.set_read_timeout(Some(timeout))?;
+                    let r = f(&mut c);
+                    *conn = Some(c);
+                    r
+                }
+                Err(e) => Err(e),
+            },
+        };
+        match r {
+            Ok(v) => return Ok(v),
+            Err(e) if e.is_transient() && attempt < policy.attempts => {
+                *conn = None;
+                *retries += 1;
+                std::thread::sleep(policy.backoff(attempt));
+                attempt += 1;
+            }
+            Err(e) => {
+                if e.is_transient() {
+                    *conn = None;
+                }
+                return Err(e);
+            }
+        }
+    }
+}

@@ -1,0 +1,1101 @@
+//! The `funclsh route` coordinator: a scatter-gather TCP front-end over
+//! a set of shard nodes.
+//!
+//! The router speaks the exact client wire protocol of a single node —
+//! both formats, negotiated per connection by the shared
+//! [`protocol::Framer`] — and translates each request into shard calls
+//! over the binary (`FBIN1`) inter-node wire:
+//!
+//! * `insert` / `remove` go to the one shard whose [`ShardRange`] owns
+//!   the id's routing key;
+//! * `query` / `query_batch` scatter to every live shard and the
+//!   returned candidate lists are merged by `(distance, id)` and
+//!   truncated to `k` — exactly the single node's re-rank order, so a
+//!   cluster and a single-node twin answer byte-identically;
+//! * `hash` / `hash_batch` are stateless and forward to the first live
+//!   shard;
+//! * `ping` answers locally from the heartbeat board's entry counts;
+//!   `stats detail=cluster` answers locally with topology and health;
+//!   other admin ops are per-node and answer with a typed error naming
+//!   the right target.
+//!
+//! Degradation contract: a shard that is down (heartbeat board) or that
+//! fails a leg past the retry budget contributes its `lo-hi@addr` label
+//! to the reply's `missing` set instead of failing the request — the
+//! reply is wrapped in a typed `degraded` envelope (scatter ops) or the
+//! affected items get typed `degraded: …` errors (targeted ops). A
+//! request never hangs on a dead shard and a gap is never silent.
+
+use super::fault::{FaultInjector, FaultKind};
+use super::liveness::LivenessBoard;
+use crate::config::ServiceConfig;
+use crate::coordinator::{BoundedQueue, Op, Response, StatsDetail};
+use crate::json::Value;
+use crate::lsh::ShardRange;
+use crate::search::Hit;
+use crate::server::protocol::{self, Request, RequestBody, WireMode};
+use crate::server::{Client, ClientError, RetryPolicy};
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often blocked I/O paths re-check the shutdown flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(50);
+
+/// One shard node: its address and the slice of the routing-key space
+/// it owns.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// `host:port` of the shard's `funclsh serve --shard-range` process
+    pub addr: String,
+    /// the key range it owns (must match the shard's own `--shard-range`)
+    pub range: ShardRange,
+}
+
+impl ShardSpec {
+    /// The `lo-hi@addr` label this shard contributes to `missing` sets.
+    pub fn label(&self) -> String {
+        format!("{}@{}", self.range, self.addr)
+    }
+}
+
+/// Everything the router needs to run.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// listen host
+    pub host: String,
+    /// listen port (0 = ephemeral)
+    pub port: u16,
+    /// the shard topology; ranges must tile the key space exactly
+    pub shards: Vec<ShardSpec>,
+    /// heartbeat ping period
+    pub heartbeat_interval: Duration,
+    /// consecutive missed heartbeats before a shard is marked down
+    pub heartbeat_miss_threshold: u32,
+    /// consecutive healthy heartbeats before a down shard is re-admitted
+    pub readmit_after: u32,
+    /// per-shard request timeout (also the heartbeat read timeout)
+    pub request_timeout: Duration,
+    /// retry schedule for transient shard-leg failures
+    pub retry: RetryPolicy,
+    /// concurrent client connections served
+    pub max_conns: usize,
+}
+
+impl RouterConfig {
+    /// Build from a service config's `[cluster]` + `[server]` sections:
+    /// `cluster.nodes` lists the shard addresses, and each node is
+    /// assigned the corresponding slice of
+    /// [`ShardRange::partition`]`(nodes.len())` in listed order — the
+    /// same assignment `funclsh serve --shard-range` instances should
+    /// be started with.
+    pub fn from_service(cfg: &ServiceConfig) -> Result<Self, String> {
+        let c = &cfg.cluster;
+        if c.nodes.is_empty() {
+            return Err("cluster.nodes is empty: a router needs at least one shard".into());
+        }
+        let ranges = ShardRange::partition(c.nodes.len());
+        let shards: Vec<ShardSpec> = c
+            .nodes
+            .iter()
+            .zip(ranges)
+            .map(|(addr, range)| ShardSpec {
+                addr: addr.clone(),
+                range,
+            })
+            .collect();
+        ShardRange::check_cover(&shards.iter().map(|s| s.range).collect::<Vec<_>>())?;
+        Ok(Self {
+            host: cfg.server.host.clone(),
+            port: cfg.server.port,
+            shards,
+            heartbeat_interval: Duration::from_millis(c.heartbeat_interval_ms.max(1)),
+            heartbeat_miss_threshold: c.heartbeat_miss_threshold,
+            readmit_after: c.readmit_after,
+            request_timeout: Duration::from_millis(c.request_timeout_ms.max(1)),
+            retry: RetryPolicy::new(
+                c.retry_budget as usize,
+                c.retry_backoff_base_ms,
+                c.retry_backoff_cap_ms,
+            ),
+            max_conns: cfg.server.max_conns.max(1),
+        })
+    }
+}
+
+/// Router-level counters served by `stats detail=cluster`.
+#[derive(Debug, Default)]
+pub struct RouterCounters {
+    /// client request frames answered
+    pub requests: AtomicU64,
+    /// queries scattered (single + per batch frame)
+    pub scatter_queries: AtomicU64,
+    /// inserts/removes routed to an owner shard
+    pub routed_writes: AtomicU64,
+    /// hash ops forwarded to a live shard
+    pub forwarded_hashes: AtomicU64,
+    /// shard-leg retry attempts consumed
+    pub shard_retries: AtomicU64,
+    /// replies that carried a degraded envelope or degraded items
+    pub degraded_replies: AtomicU64,
+    /// heartbeat rounds completed
+    pub heartbeat_rounds: AtomicU64,
+}
+
+/// Shared router state: topology, liveness, counters, fault plan.
+#[derive(Debug)]
+pub struct RouterState {
+    cfg: RouterConfig,
+    board: LivenessBoard,
+    counters: RouterCounters,
+    faults: FaultInjector,
+    points: Mutex<Option<Vec<f64>>>,
+}
+
+impl RouterState {
+    /// The liveness board (tests drive readmit scenarios through it).
+    pub fn board(&self) -> &LivenessBoard {
+        &self.board
+    }
+
+    /// The fault injector (tests arm rules programmatically).
+    pub fn faults(&self) -> &FaultInjector {
+        &self.faults
+    }
+
+    /// The configured topology.
+    pub fn shards(&self) -> &[ShardSpec] {
+        &self.cfg.shards
+    }
+
+    fn label(&self, shard: usize) -> String {
+        self.cfg.shards[shard].label()
+    }
+}
+
+/// Per-handler-thread cached shard connections (one slot per shard,
+/// lazily dialed, cleared on any failure).
+struct ShardLink {
+    conns: Vec<Option<Client>>,
+}
+
+impl ShardLink {
+    fn new(n: usize) -> Self {
+        Self {
+            conns: (0..n).map(|_| None).collect(),
+        }
+    }
+}
+
+/// The running router.
+pub struct Router {
+    addr: SocketAddr,
+    state: Arc<RouterState>,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+    heartbeat: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Validate the topology, bind the listen address, and start the
+    /// accept loop, handler pool, and heartbeat thread.
+    pub fn start(cfg: RouterConfig) -> std::io::Result<Self> {
+        if cfg.shards.is_empty() {
+            return Err(std::io::Error::new(
+                ErrorKind::InvalidInput,
+                "router needs at least one shard",
+            ));
+        }
+        let ranges: Vec<ShardRange> = cfg.shards.iter().map(|s| s.range).collect();
+        ShardRange::check_cover(&ranges)
+            .map_err(|e| std::io::Error::new(ErrorKind::InvalidInput, e))?;
+
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(RouterState {
+            board: LivenessBoard::new(
+                cfg.shards.len(),
+                cfg.heartbeat_miss_threshold,
+                cfg.readmit_after,
+            ),
+            counters: RouterCounters::default(),
+            faults: FaultInjector::from_env("FUNCLSH_TEST_SHARD_FAULT"),
+            points: Mutex::new(None),
+            cfg,
+        });
+
+        let heartbeat = {
+            let state = state.clone();
+            let shutdown = shutdown.clone();
+            Some(std::thread::spawn(move || heartbeat_loop(&state, &shutdown)))
+        };
+
+        let conn_queue: Arc<BoundedQueue<TcpStream>> =
+            Arc::new(BoundedQueue::new(state.cfg.max_conns.max(1) * 4));
+        let mut handlers = Vec::new();
+        for _ in 0..state.cfg.max_conns.max(1) {
+            let conn_queue = conn_queue.clone();
+            let state = state.clone();
+            let shutdown = shutdown.clone();
+            handlers.push(std::thread::spawn(move || {
+                // the shard links live as long as the handler thread, so
+                // consecutive client connections reuse warm shard conns
+                let mut link = ShardLink::new(state.cfg.shards.len());
+                while let Some(batch) = conn_queue.pop_batch(1, POLL_INTERVAL) {
+                    for stream in batch {
+                        let _ = serve_client(stream, &state, &mut link, &shutdown);
+                    }
+                }
+            }));
+        }
+
+        let acceptor = {
+            let shutdown = shutdown.clone();
+            let conn_queue = conn_queue.clone();
+            Some(std::thread::spawn(move || {
+                while !shutdown.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let _ = stream.set_nonblocking(false);
+                            if conn_queue.try_push(stream).is_err() {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => std::thread::sleep(POLL_INTERVAL),
+                    }
+                }
+                conn_queue.close();
+            }))
+        };
+
+        Ok(Self {
+            addr,
+            state,
+            shutdown,
+            acceptor,
+            handlers,
+            heartbeat,
+        })
+    }
+
+    /// The bound listen address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared state handle (tests inspect liveness and arm faults).
+    pub fn state(&self) -> Arc<RouterState> {
+        self.state.clone()
+    }
+
+    /// Whether shutdown was requested (locally or via a `shutdown`
+    /// frame on the wire).
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, join every thread, and return.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.heartbeat.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Ping every shard once per interval and feed the board.
+fn heartbeat_loop(state: &RouterState, shutdown: &AtomicBool) {
+    let mut conns: Vec<Option<Client>> = (0..state.cfg.shards.len()).map(|_| None).collect();
+    // heartbeats carry no retry budget: each round is its own probe, and
+    // the miss-threshold hysteresis is the retry policy
+    let no_retry = RetryPolicy::new(0, 1, 1);
+    while !shutdown.load(Ordering::SeqCst) {
+        for (i, spec) in state.cfg.shards.iter().enumerate() {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let context = format!("ping@{}", spec.addr);
+            match state.faults.check(&context) {
+                Some(FaultKind::Drop) | Some(FaultKind::BlackHole) => {
+                    conns[i] = None;
+                    state.board.record_miss(i);
+                    continue;
+                }
+                Some(FaultKind::Delay(d)) => std::thread::sleep(d),
+                None => {}
+            }
+            let mut retries = 0u64;
+            match super::call_with_retry(
+                &mut conns[i],
+                &spec.addr,
+                state.cfg.request_timeout,
+                &no_retry,
+                &mut retries,
+                |c| c.ping(),
+            ) {
+                Ok(indexed) => {
+                    state.board.record_ok(i, Some(indexed));
+                }
+                Err(_) => {
+                    conns[i] = None;
+                    state.board.record_miss(i);
+                }
+            }
+        }
+        state.counters.heartbeat_rounds.fetch_add(1, Ordering::Relaxed);
+        std::thread::sleep(state.cfg.heartbeat_interval);
+    }
+}
+
+/// Serve one client connection: framer loop, one response frame per
+/// request frame, same fatal/oversize discipline as a single node.
+fn serve_client(
+    stream: TcpStream,
+    state: &RouterState,
+    link: &mut ShardLink,
+    shutdown: &AtomicBool,
+) -> std::io::Result<()> {
+    use protocol::{Framer, FramerStep};
+
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(POLL_INTERVAL))?;
+    let mut reader = stream.try_clone()?;
+    let mut writer = std::io::BufWriter::new(stream);
+    let mut framer = Framer::new();
+    let mut chunk = [0u8; 64 * 1024];
+    let mut eof = false;
+    loop {
+        loop {
+            match framer.next() {
+                FramerStep::Pending => break,
+                FramerStep::Fatal { wire, msg } => {
+                    let reply = protocol::encode_error_frame(wire, None, &msg);
+                    writer.write_all(&reply)?;
+                    writer.flush()?;
+                    return Ok(());
+                }
+                FramerStep::Frame { wire, payload } => {
+                    state.counters.requests.fetch_add(1, Ordering::Relaxed);
+                    let reply = answer_router_frame(state, link, wire, payload, shutdown);
+                    writer.write_all(&reply)?;
+                    writer.flush()?;
+                    if shutdown.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+        framer.compact();
+        if eof {
+            return Ok(());
+        }
+        match reader.read(&mut chunk) {
+            Ok(0) => {
+                eof = true;
+                framer.push_eof();
+            }
+            Ok(n) => framer.push(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return Ok(()),
+        }
+    }
+}
+
+/// Decode one request payload and produce the complete routed response
+/// frame in the same wire mode.
+fn answer_router_frame(
+    state: &RouterState,
+    link: &mut ShardLink,
+    mode: WireMode,
+    payload: &[u8],
+    shutdown: &AtomicBool,
+) -> Vec<u8> {
+    let parsed = protocol::parse_frame_payload(mode, payload);
+    match parsed {
+        Err(e) => protocol::encode_error_frame(mode, e.req_id, &format!("bad request: {e}")),
+        Ok(Request { req_id, body }) => match body {
+            RequestBody::Points => match cached_points(state, link) {
+                Ok(points) => protocol::encode_points_frame(mode, req_id, &points),
+                Err(msg) => protocol::encode_error_frame(mode, req_id, &msg),
+            },
+            RequestBody::Shutdown => {
+                shutdown.store(true, Ordering::SeqCst);
+                protocol::encode_shutting_down_frame(mode, req_id)
+            }
+            RequestBody::Op(op) => {
+                let routed = route_op(state, link, op);
+                if routed.missing.is_empty() {
+                    protocol::encode_response_frame(mode, req_id, &routed.response)
+                } else {
+                    state.counters.degraded_replies.fetch_add(1, Ordering::Relaxed);
+                    protocol::encode_degraded_response_frame(
+                        mode,
+                        req_id,
+                        &routed.missing,
+                        &routed.response,
+                    )
+                }
+            }
+            RequestBody::Batch(items) => {
+                let (responses, missing) = route_batch(state, link, items);
+                if missing.is_empty() {
+                    protocol::encode_batch_response_frame(mode, req_id, &responses)
+                } else {
+                    state.counters.degraded_replies.fetch_add(1, Ordering::Relaxed);
+                    protocol::encode_degraded_batch_frame(mode, req_id, &missing, &responses)
+                }
+            }
+        },
+    }
+}
+
+/// A routed single-op outcome: the response plus the shard ranges that
+/// could not contribute to it.
+struct Routed {
+    response: Response,
+    missing: Vec<String>,
+}
+
+impl Routed {
+    fn full(response: Response) -> Self {
+        Self {
+            response,
+            missing: Vec::new(),
+        }
+    }
+}
+
+/// One shard leg: fault check, then the call under timeout + retry. A
+/// transient failure past the budget is `Err(None)` (the leg is
+/// degraded); a real server-side error is `Err(Some(msg))` (the request
+/// itself is wrong and would fail identically everywhere).
+fn shard_call<T>(
+    state: &RouterState,
+    link: &mut ShardLink,
+    shard: usize,
+    opname: &str,
+    f: impl FnMut(&mut Client) -> Result<T, ClientError>,
+) -> Result<T, Option<String>> {
+    let spec = &state.cfg.shards[shard];
+    if state.faults.is_armed() {
+        match state.faults.check(&format!("{opname}@{}", spec.addr)) {
+            // drop and black-hole fail the whole leg deterministically
+            // (one rule firing = one degraded leg); the real-network
+            // analogues of partial delivery are covered by `delay`
+            // racing the request timeout
+            Some(FaultKind::Drop) | Some(FaultKind::BlackHole) => {
+                link.conns[shard] = None;
+                state.board.record_miss(shard);
+                return Err(None);
+            }
+            Some(FaultKind::Delay(d)) => std::thread::sleep(d),
+            None => {}
+        }
+    }
+    let mut retries = 0u64;
+    let out = super::call_with_retry(
+        &mut link.conns[shard],
+        &spec.addr,
+        state.cfg.request_timeout,
+        &state.cfg.retry,
+        &mut retries,
+        f,
+    );
+    if retries > 0 {
+        state.counters.shard_retries.fetch_add(retries, Ordering::Relaxed);
+    }
+    match out {
+        Ok(v) => {
+            state.board.record_ok(shard, None);
+            Ok(v)
+        }
+        Err(ClientError::Server(msg)) if !protocol::error_is_overloaded(&msg) => Err(Some(msg)),
+        Err(_) => {
+            // transient transport failure that outlived the retry
+            // budget: the traffic itself demotes the shard so the next
+            // request skips it instead of paying the backoff tax again
+            state.board.record_miss(shard);
+            Err(None)
+        }
+    }
+}
+
+/// The typed error a request targeting a down shard range gets.
+fn unavailable(label: &str) -> String {
+    protocol::degraded_msg(&format!("shard range {label} unavailable"))
+}
+
+/// Merge per-shard candidate lists into the single-node re-rank order:
+/// sort by `(distance, id)` and truncate to `k`. Each shard's list is
+/// its own top-`k` over a disjoint id subset, so every global top-`k`
+/// member is present in the union and the merged prefix is exactly what
+/// one node holding all entries would return.
+fn merge_hits(mut all: Vec<Hit>, k: usize) -> Vec<Hit> {
+    all.sort_by(|a, b| {
+        a.distance
+            .total_cmp(&b.distance)
+            .then_with(|| a.id.cmp(&b.id))
+    });
+    all.truncate(k);
+    all
+}
+
+/// Route one coordinator op.
+fn route_op(state: &RouterState, link: &mut ShardLink, op: Op) -> Routed {
+    match op {
+        Op::Query { samples, k } => {
+            state.counters.scatter_queries.fetch_add(1, Ordering::Relaxed);
+            let mut all = Vec::new();
+            let mut missing = Vec::new();
+            for i in 0..state.cfg.shards.len() {
+                if !state.board.is_alive(i) {
+                    missing.push(state.label(i));
+                    continue;
+                }
+                match shard_call(state, link, i, "query", |c| c.query(&samples, k)) {
+                    Ok(hits) => all.extend(hits),
+                    Err(Some(msg)) => return Routed::full(Response::Error(msg)),
+                    Err(None) => missing.push(state.label(i)),
+                }
+            }
+            if missing.len() == state.cfg.shards.len() {
+                return Routed::full(Response::Error(unavailable(&missing.join(", "))));
+            }
+            Routed {
+                response: Response::Hits(merge_hits(all, k)),
+                missing,
+            }
+        }
+        Op::Hash { samples } => {
+            state.counters.forwarded_hashes.fetch_add(1, Ordering::Relaxed);
+            for i in 0..state.cfg.shards.len() {
+                if !state.board.is_alive(i) {
+                    continue;
+                }
+                match shard_call(state, link, i, "hash", |c| c.hash(&samples)) {
+                    Ok(sig) => {
+                        return Routed::full(Response::Signature(
+                            crate::coordinator::SigView::from_vec(sig),
+                        ))
+                    }
+                    Err(Some(msg)) => return Routed::full(Response::Error(msg)),
+                    Err(None) => continue,
+                }
+            }
+            Routed::full(Response::Error(protocol::degraded_msg(
+                "no live shard to hash against",
+            )))
+        }
+        Op::Insert { id, samples } => {
+            state.counters.routed_writes.fetch_add(1, Ordering::Relaxed);
+            let owner = owner_of(state, id);
+            if !state.board.is_alive(owner) {
+                return Routed::full(Response::Error(unavailable(&state.label(owner))));
+            }
+            match shard_call(state, link, owner, "insert", |c| c.insert(id, &samples)) {
+                Ok(()) => Routed::full(Response::Inserted { id }),
+                Err(Some(msg)) => Routed::full(Response::Error(msg)),
+                Err(None) => Routed::full(Response::Error(unavailable(&state.label(owner)))),
+            }
+        }
+        Op::Remove { id } => {
+            state.counters.routed_writes.fetch_add(1, Ordering::Relaxed);
+            let owner = owner_of(state, id);
+            if !state.board.is_alive(owner) {
+                return Routed::full(Response::Error(unavailable(&state.label(owner))));
+            }
+            match shard_call(state, link, owner, "remove", |c| c.remove(id)) {
+                Ok(()) => Routed::full(Response::Removed { id }),
+                Err(Some(msg)) => Routed::full(Response::Error(msg)),
+                Err(None) => Routed::full(Response::Error(unavailable(&state.label(owner)))),
+            }
+        }
+        Op::Ping => Routed::full(Response::Pong {
+            indexed: state.board.indexed_total(),
+        }),
+        Op::Stats { detail } => match detail {
+            StatsDetail::Cluster => Routed::full(Response::Stats(cluster_stats(state))),
+            other => Routed::full(Response::Error(format!(
+                "stats detail={} is per-node: query a shard directly (the router serves \
+                 detail=cluster)",
+                other.as_str()
+            ))),
+        },
+        Op::Metrics => Routed::full(Response::Error(
+            "metrics is per-node: query a shard directly (the router serves stats \
+             detail=cluster)"
+                .into(),
+        )),
+        Op::Snapshot { .. } => Routed::full(Response::Error(
+            "snapshot is per-node: target a shard directly".into(),
+        )),
+        Op::MigratePull { .. } | Op::EntriesPush { .. } | Op::EntriesDiscard { .. } => {
+            Routed::full(Response::Error(
+                "migration ops target shards directly, not the router".into(),
+            ))
+        }
+    }
+}
+
+/// Index of the shard owning `id`'s routing key (the cover check at
+/// startup guarantees exactly one).
+fn owner_of(state: &RouterState, id: u64) -> usize {
+    state
+        .cfg
+        .shards
+        .iter()
+        .position(|s| s.range.owns_id(id))
+        .expect("ranges tile the key space (checked at startup)")
+}
+
+/// Route one batch frame. Per-item decode failures keep their slots;
+/// the Ok items are grouped per shard so a cluster batch stays a small
+/// number of shard batch frames, not per-row round trips.
+#[allow(clippy::type_complexity)]
+fn route_batch(
+    state: &RouterState,
+    link: &mut ShardLink,
+    items: Vec<Result<Op, String>>,
+) -> (Vec<Response>, Vec<String>) {
+    // slot in per-item decode errors first (same wording as a single
+    // node's batch path, for reply parity)
+    let mut responses: Vec<Option<Response>> = items
+        .iter()
+        .map(|item| match item {
+            Err(msg) => Some(Response::Error(format!("bad request: {msg}"))),
+            Ok(_) => None,
+        })
+        .collect();
+    let ok: Vec<(usize, &Op)> = items
+        .iter()
+        .enumerate()
+        .filter_map(|(i, item)| item.as_ref().ok().map(|op| (i, op)))
+        .collect();
+    let mut missing: Vec<String> = Vec::new();
+
+    // a *_batch frame is homogeneous by construction; rows that share a
+    // dimension ride one shard batch frame per target
+    let homogeneous_query = ok.iter().all(|(_, op)| matches!(op, Op::Query { .. }));
+    let homogeneous_insert = ok.iter().all(|(_, op)| matches!(op, Op::Insert { .. }));
+    let homogeneous_hash = ok.iter().all(|(_, op)| matches!(op, Op::Hash { .. }));
+    let same_dim = {
+        let mut dims = ok.iter().map(|(_, op)| match op {
+            Op::Query { samples, .. } | Op::Hash { samples } | Op::Insert { samples, .. } => {
+                samples.len()
+            }
+            _ => 0,
+        });
+        let first = dims.next();
+        first.is_some() && dims.all(|d| Some(d) == first)
+    };
+
+    if !ok.is_empty() && same_dim && (homogeneous_query || homogeneous_insert || homogeneous_hash)
+    {
+        if homogeneous_query {
+            batch_scatter_queries(state, link, &ok, &mut responses, &mut missing);
+        } else if homogeneous_insert {
+            batch_route_inserts(state, link, &ok, &mut responses, &mut missing);
+        } else {
+            batch_forward_hashes(state, link, &ok, &mut responses);
+        }
+    } else {
+        // mixed or ragged (possible over JSON only): fall back to
+        // per-item routing — slower, still correct
+        for (i, op) in ok {
+            let routed = route_op(state, link, op.clone());
+            for m in routed.missing {
+                if !missing.contains(&m) {
+                    missing.push(m);
+                }
+            }
+            responses[i] = Some(routed.response);
+        }
+    }
+
+    let responses = responses
+        .into_iter()
+        .map(|r| r.expect("every batch slot answered"))
+        .collect();
+    missing.sort();
+    missing.dedup();
+    (responses, missing)
+}
+
+/// Scatter one query batch to every live shard and merge per row.
+fn batch_scatter_queries(
+    state: &RouterState,
+    link: &mut ShardLink,
+    ok: &[(usize, &Op)],
+    responses: &mut [Option<Response>],
+    missing: &mut Vec<String>,
+) {
+    state.counters.scatter_queries.fetch_add(1, Ordering::Relaxed);
+    let (dim, k) = match ok[0].1 {
+        Op::Query { samples, k } => (samples.len(), *k),
+        _ => unreachable!("caller checked homogeneity"),
+    };
+    let mut rows: Vec<f32> = Vec::with_capacity(ok.len() * dim);
+    for (_, op) in ok {
+        if let Op::Query { samples, .. } = op {
+            rows.extend_from_slice(samples);
+        }
+    }
+    // per row: merged hits, or the first server-side error seen
+    let mut merged: Vec<Result<Vec<Hit>, String>> = (0..ok.len()).map(|_| Ok(Vec::new())).collect();
+    let mut any_shard_answered = false;
+    for i in 0..state.cfg.shards.len() {
+        if !state.board.is_alive(i) {
+            missing.push(state.label(i));
+            continue;
+        }
+        match shard_call(state, link, i, "query", |c| {
+            c.query_batch_degraded(&rows, dim, k)
+        }) {
+            Ok((shard_rows, _)) if shard_rows.len() == ok.len() => {
+                any_shard_answered = true;
+                for (row, shard_row) in merged.iter_mut().zip(shard_rows) {
+                    // first error wins (shards are visited in index
+                    // order, so this is deterministic)
+                    if row.is_err() {
+                        continue;
+                    }
+                    match shard_row {
+                        Ok(hits) => {
+                            if let Ok(acc) = row.as_mut() {
+                                acc.extend(hits);
+                            }
+                        }
+                        Err(e) => *row = Err(e),
+                    }
+                }
+            }
+            Ok(_) => missing.push(state.label(i)),
+            Err(Some(msg)) => {
+                // frame-level server error: fails every row identically
+                for row in merged.iter_mut() {
+                    *row = Err(msg.clone());
+                }
+                any_shard_answered = true;
+                break;
+            }
+            Err(None) => missing.push(state.label(i)),
+        }
+    }
+    for ((slot, _), row) in ok.iter().zip(merged) {
+        responses[*slot] = Some(match row {
+            Ok(all) if any_shard_answered => Response::Hits(merge_hits(all, k)),
+            Ok(_) => Response::Error(unavailable(&missing.join(", "))),
+            Err(msg) => Response::Error(msg),
+        });
+    }
+}
+
+/// Group one insert batch by owner shard and push one shard batch per
+/// group.
+fn batch_route_inserts(
+    state: &RouterState,
+    link: &mut ShardLink,
+    ok: &[(usize, &Op)],
+    responses: &mut [Option<Response>],
+    missing: &mut Vec<String>,
+) {
+    state.counters.routed_writes.fetch_add(1, Ordering::Relaxed);
+    let dim = match ok[0].1 {
+        Op::Insert { samples, .. } => samples.len(),
+        _ => unreachable!("caller checked homogeneity"),
+    };
+    let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (pos, (_, op)) in ok.iter().enumerate() {
+        if let Op::Insert { id, .. } = op {
+            groups.entry(owner_of(state, *id)).or_default().push(pos);
+        }
+    }
+    for (shard, members) in groups {
+        let label = state.label(shard);
+        let degrade = |responses: &mut [Option<Response>], missing: &mut Vec<String>| {
+            for &pos in &members {
+                let (slot, _) = ok[pos];
+                responses[slot] = Some(Response::Error(unavailable(&label)));
+            }
+            missing.push(label.clone());
+        };
+        if !state.board.is_alive(shard) {
+            degrade(responses, missing);
+            continue;
+        }
+        let mut ids = Vec::with_capacity(members.len());
+        let mut rows: Vec<f32> = Vec::with_capacity(members.len() * dim);
+        for &pos in &members {
+            if let (_, Op::Insert { id, samples }) = ok[pos] {
+                ids.push(*id);
+                rows.extend_from_slice(samples);
+            }
+        }
+        match shard_call(state, link, shard, "insert", |c| {
+            c.insert_batch(&ids, &rows, dim)
+        }) {
+            Ok(results) if results.len() == members.len() => {
+                for (&pos, result) in members.iter().zip(results) {
+                    let (slot, _) = ok[pos];
+                    responses[slot] = Some(match result {
+                        Ok(id) => Response::Inserted { id },
+                        Err(msg) => Response::Error(msg),
+                    });
+                }
+            }
+            Ok(_) | Err(None) => degrade(responses, missing),
+            Err(Some(msg)) => {
+                for &pos in &members {
+                    let (slot, _) = ok[pos];
+                    responses[slot] = Some(Response::Error(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Forward one hash batch to the first live shard that answers.
+fn batch_forward_hashes(
+    state: &RouterState,
+    link: &mut ShardLink,
+    ok: &[(usize, &Op)],
+    responses: &mut [Option<Response>],
+) {
+    state.counters.forwarded_hashes.fetch_add(1, Ordering::Relaxed);
+    let dim = match ok[0].1 {
+        Op::Hash { samples } => samples.len(),
+        _ => unreachable!("caller checked homogeneity"),
+    };
+    let mut rows: Vec<f32> = Vec::with_capacity(ok.len() * dim);
+    for (_, op) in ok {
+        if let Op::Hash { samples } = op {
+            rows.extend_from_slice(samples);
+        }
+    }
+    for i in 0..state.cfg.shards.len() {
+        if !state.board.is_alive(i) {
+            continue;
+        }
+        match shard_call(state, link, i, "hash", |c| c.hash_batch(&rows, dim)) {
+            Ok(results) if results.len() == ok.len() => {
+                for ((slot, _), result) in ok.iter().zip(results) {
+                    responses[*slot] = Some(match result {
+                        Ok(sig) => {
+                            Response::Signature(crate::coordinator::SigView::from_vec(sig))
+                        }
+                        Err(msg) => Response::Error(msg),
+                    });
+                }
+                return;
+            }
+            Ok(_) | Err(None) => continue,
+            Err(Some(msg)) => {
+                for (slot, _) in ok {
+                    responses[*slot] = Some(Response::Error(msg.clone()));
+                }
+                return;
+            }
+        }
+    }
+    let msg = protocol::degraded_msg("no live shard to hash against");
+    for (slot, _) in ok {
+        responses[*slot] = Some(Response::Error(msg.clone()));
+    }
+}
+
+/// Serve the published sample points, fetched once from any live shard
+/// and cached (every shard publishes the same points — they share the
+/// service seed).
+fn cached_points(state: &RouterState, link: &mut ShardLink) -> Result<Vec<f64>, String> {
+    if let Some(p) = state.points.lock().unwrap().clone() {
+        return Ok(p);
+    }
+    for i in 0..state.cfg.shards.len() {
+        if !state.board.is_alive(i) {
+            continue;
+        }
+        if let Ok(points) = shard_call(state, link, i, "points", |c| c.points()) {
+            *state.points.lock().unwrap() = Some(points.clone());
+            return Ok(points);
+        }
+    }
+    Err(protocol::degraded_msg("no live shard to fetch points from"))
+}
+
+/// The `stats detail=cluster` view: topology, per-shard liveness, and
+/// router counters. Rendered to Prometheus by
+/// [`crate::coordinator::prometheus_render_cluster`].
+fn cluster_stats(state: &RouterState) -> Value {
+    let c = &state.counters;
+    let shards: Vec<Value> = state
+        .cfg
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let s = state.board.status(i);
+            let mut fields = BTreeMap::new();
+            fields.insert("addr".to_string(), Value::String(spec.addr.clone()));
+            fields.insert("range".to_string(), Value::String(spec.range.to_string()));
+            fields.insert("alive".to_string(), Value::Bool(s.alive));
+            fields.insert(
+                "last_heartbeat_age_s".to_string(),
+                match s.last_ok {
+                    Some(t) => Value::Number(t.elapsed().as_secs_f64()),
+                    None => Value::Number(-1.0),
+                },
+            );
+            fields.insert(
+                "consecutive_misses".to_string(),
+                Value::Number(s.consecutive_misses as f64),
+            );
+            fields.insert("entries".to_string(), Value::Number(s.indexed as f64));
+            fields.insert(
+                "heartbeats_ok".to_string(),
+                Value::Number(s.heartbeats_ok as f64),
+            );
+            fields.insert(
+                "heartbeats_missed".to_string(),
+                Value::Number(s.heartbeats_missed as f64),
+            );
+            Value::Object(fields)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("detail".to_string(), Value::String("cluster".into()));
+    top.insert("role".to_string(), Value::String("router".into()));
+    top.insert(
+        "shards_total".to_string(),
+        Value::Number(state.cfg.shards.len() as f64),
+    );
+    top.insert(
+        "shards_alive".to_string(),
+        Value::Number(state.board.alive_set().len() as f64),
+    );
+    top.insert(
+        "requests".to_string(),
+        Value::Number(c.requests.load(Ordering::Relaxed) as f64),
+    );
+    top.insert(
+        "scatter_queries".to_string(),
+        Value::Number(c.scatter_queries.load(Ordering::Relaxed) as f64),
+    );
+    top.insert(
+        "routed_writes".to_string(),
+        Value::Number(c.routed_writes.load(Ordering::Relaxed) as f64),
+    );
+    top.insert(
+        "forwarded_hashes".to_string(),
+        Value::Number(c.forwarded_hashes.load(Ordering::Relaxed) as f64),
+    );
+    top.insert(
+        "shard_retries".to_string(),
+        Value::Number(c.shard_retries.load(Ordering::Relaxed) as f64),
+    );
+    top.insert(
+        "degraded_replies".to_string(),
+        Value::Number(c.degraded_replies.load(Ordering::Relaxed) as f64),
+    );
+    top.insert(
+        "heartbeat_rounds".to_string(),
+        Value::Number(c.heartbeat_rounds.load(Ordering::Relaxed) as f64),
+    );
+    top.insert("shards".to_string(), Value::Array(shards));
+    Value::Object(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+
+    #[test]
+    fn merge_hits_matches_single_node_order() {
+        // single node: sort by distance (stable over id-sorted
+        // candidates) then truncate — i.e. (distance, id) order
+        let shard_a = vec![
+            Hit { id: 2, distance: 0.5 },
+            Hit { id: 8, distance: 0.5 },
+            Hit { id: 4, distance: 0.9 },
+        ];
+        let shard_b = vec![
+            Hit { id: 3, distance: 0.1 },
+            Hit { id: 5, distance: 0.5 },
+        ];
+        let mut all = shard_a;
+        all.extend(shard_b);
+        let merged = merge_hits(all, 4);
+        let order: Vec<u64> = merged.iter().map(|h| h.id).collect();
+        // ties at 0.5 break by id: 2, 5, 8
+        assert_eq!(order, vec![3, 2, 5, 8]);
+        assert_eq!(merge_hits(Vec::new(), 3), Vec::new());
+    }
+
+    #[test]
+    fn router_config_partitions_nodes_in_order() {
+        let mut cfg = ServiceConfig::default();
+        cfg.cluster.nodes = vec![
+            "127.0.0.1:4801".into(),
+            "127.0.0.1:4802".into(),
+            "127.0.0.1:4803".into(),
+        ];
+        let rc = RouterConfig::from_service(&cfg).unwrap();
+        assert_eq!(rc.shards.len(), 3);
+        let ranges: Vec<ShardRange> = rc.shards.iter().map(|s| s.range).collect();
+        assert_eq!(ranges, ShardRange::partition(3));
+        ShardRange::check_cover(&ranges).unwrap();
+        assert_eq!(rc.retry.attempts, cfg.cluster.retry_budget as usize);
+        assert!(rc.shards[0].label().ends_with("@127.0.0.1:4801"));
+
+        cfg.cluster.nodes.clear();
+        assert!(RouterConfig::from_service(&cfg).is_err(), "no nodes");
+    }
+
+    #[test]
+    fn router_refuses_bad_topologies() {
+        let bad = RouterConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            shards: vec![
+                ShardSpec {
+                    addr: "127.0.0.1:1".into(),
+                    range: ShardRange::new(0, 10).unwrap(),
+                },
+                ShardSpec {
+                    addr: "127.0.0.1:2".into(),
+                    range: ShardRange::new(20, u64::MAX).unwrap(),
+                },
+            ],
+            heartbeat_interval: Duration::from_millis(50),
+            heartbeat_miss_threshold: 3,
+            readmit_after: 2,
+            request_timeout: Duration::from_millis(100),
+            retry: RetryPolicy::default(),
+            max_conns: 4,
+        };
+        let err = Router::start(bad).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidInput);
+        assert!(err.to_string().contains("do not tile"), "{err}");
+    }
+}

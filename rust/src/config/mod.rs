@@ -336,6 +336,53 @@ impl Default for ServerConfig {
     }
 }
 
+/// Cluster serving configuration (`[cluster]` section): the knobs of
+/// `funclsh route` — shard membership, heartbeat liveness, per-shard
+/// request timeouts, and the retry/backoff schedule (also reused by the
+/// client-side reconnect policy and live migration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// shard node addresses the router scatters over (`host:port`, one
+    /// per shard; CLI `--shards` overrides)
+    pub nodes: Vec<String>,
+    /// router → shard heartbeat ping period
+    pub heartbeat_interval_ms: u64,
+    /// consecutive missed heartbeats before a shard is marked down
+    pub heartbeat_miss_threshold: u32,
+    /// consecutive healthy heartbeats before a down shard is re-admitted
+    /// into the scatter set
+    pub readmit_after: u32,
+    /// per-shard request timeout: a scatter leg slower than this counts
+    /// as a failure and enters the retry schedule
+    pub request_timeout_ms: u64,
+    /// retries per shard request after the first attempt; once spent,
+    /// the leg is declared degraded
+    pub retry_budget: u32,
+    /// first retry backoff; doubles each attempt
+    pub retry_backoff_base_ms: u64,
+    /// upper bound the exponential backoff saturates at
+    pub retry_backoff_cap_ms: u64,
+    /// entries per chunk when streaming a shard's store during live
+    /// migration
+    pub migration_chunk: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            nodes: Vec::new(),
+            heartbeat_interval_ms: 200,
+            heartbeat_miss_threshold: 3,
+            readmit_after: 2,
+            request_timeout_ms: 1000,
+            retry_budget: 2,
+            retry_backoff_base_ms: 50,
+            retry_backoff_cap_ms: 1000,
+            migration_chunk: 512,
+        }
+    }
+}
+
 /// Full service configuration with defaults mirroring the paper's
 /// experimental setup (Ω = \[0,1\], N = 64, r = 1, 1024 hash functions).
 #[derive(Debug, Clone, PartialEq)]
@@ -381,6 +428,11 @@ pub struct ServiceConfig {
     pub pipeline: String,
     /// TCP front-end settings
     pub server: ServerConfig,
+    /// cluster serving settings (`funclsh route` + shard nodes)
+    pub cluster: ClusterConfig,
+    /// slice of the 64-bit routing-key space this node owns (`serve
+    /// --shard-range`); `None` = single-node service owning everything
+    pub shard_range: Option<crate::lsh::ShardRange>,
 }
 
 impl Default for ServiceConfig {
@@ -406,6 +458,8 @@ impl Default for ServiceConfig {
             use_pjrt: true,
             pipeline: "mc_l2_hash".to_string(),
             server: ServerConfig::default(),
+            cluster: ClusterConfig::default(),
+            shard_range: None,
         }
     }
 }
@@ -537,6 +591,43 @@ impl ServiceConfig {
                 .as_bool()
                 .ok_or_else(|| ConfigError::msg("server trace must be a boolean"))?;
         }
+        if let Some(raw) = doc.get("cluster", "nodes") {
+            let TomlValue::Array(items) = raw else {
+                return Err(ConfigError::msg("cluster nodes must be an array"));
+            };
+            cfg.cluster.nodes = items
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| ConfigError::msg("cluster nodes must be strings"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+        }
+        if let Some(v) = get_usize("cluster", "heartbeat_interval_ms") {
+            cfg.cluster.heartbeat_interval_ms = v as u64;
+        }
+        if let Some(v) = get_usize("cluster", "heartbeat_miss_threshold") {
+            cfg.cluster.heartbeat_miss_threshold = v as u32;
+        }
+        if let Some(v) = get_usize("cluster", "readmit_after") {
+            cfg.cluster.readmit_after = v as u32;
+        }
+        if let Some(v) = get_usize("cluster", "request_timeout_ms") {
+            cfg.cluster.request_timeout_ms = v as u64;
+        }
+        if let Some(v) = get_usize("cluster", "retry_budget") {
+            cfg.cluster.retry_budget = v as u32;
+        }
+        if let Some(v) = get_usize("cluster", "retry_backoff_base_ms") {
+            cfg.cluster.retry_backoff_base_ms = v as u64;
+        }
+        if let Some(v) = get_usize("cluster", "retry_backoff_cap_ms") {
+            cfg.cluster.retry_backoff_cap_ms = v as u64;
+        }
+        if let Some(v) = get_usize("cluster", "migration_chunk") {
+            cfg.cluster.migration_chunk = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -584,6 +675,29 @@ impl ServiceConfig {
         }
         if self.server.coalesce_window == 0 {
             return Err(ConfigError::msg("server coalesce_window must be positive"));
+        }
+        if self.cluster.heartbeat_interval_ms == 0
+            || self.cluster.heartbeat_miss_threshold == 0
+            || self.cluster.readmit_after == 0
+        {
+            return Err(ConfigError::msg(
+                "cluster heartbeat_interval_ms, heartbeat_miss_threshold, readmit_after \
+                 must be positive",
+            ));
+        }
+        if self.cluster.request_timeout_ms == 0 {
+            return Err(ConfigError::msg("cluster request_timeout_ms must be positive"));
+        }
+        // retry_budget = 0 is legal: fail a leg on first error
+        if self.cluster.retry_backoff_base_ms == 0
+            || self.cluster.retry_backoff_cap_ms < self.cluster.retry_backoff_base_ms
+        {
+            return Err(ConfigError::msg(
+                "cluster retry backoff wants 0 < retry_backoff_base_ms <= retry_backoff_cap_ms",
+            ));
+        }
+        if self.cluster.migration_chunk == 0 {
+            return Err(ConfigError::msg("cluster migration_chunk must be positive"));
         }
         Ok(())
     }
@@ -645,6 +759,17 @@ coalesce = false
 coalesce_window = 16
 snapshot_path = "/tmp/idx.flsh"
 trace = false
+
+[cluster]
+nodes = ["127.0.0.1:7071", "127.0.0.1:7072", "127.0.0.1:7073"]
+heartbeat_interval_ms = 100
+heartbeat_miss_threshold = 5
+readmit_after = 3
+request_timeout_ms = 750
+retry_budget = 4
+retry_backoff_base_ms = 25
+retry_backoff_cap_ms = 400
+migration_chunk = 128
 "#;
 
     #[test]
@@ -674,6 +799,38 @@ trace = false
         assert_eq!(cfg.server.coalesce_window, 16);
         assert_eq!(cfg.server.snapshot_path, "/tmp/idx.flsh");
         assert!(!cfg.server.trace);
+        assert_eq!(cfg.cluster.nodes.len(), 3);
+        assert_eq!(cfg.cluster.nodes[1], "127.0.0.1:7072");
+        assert_eq!(cfg.cluster.heartbeat_interval_ms, 100);
+        assert_eq!(cfg.cluster.heartbeat_miss_threshold, 5);
+        assert_eq!(cfg.cluster.readmit_after, 3);
+        assert_eq!(cfg.cluster.request_timeout_ms, 750);
+        assert_eq!(cfg.cluster.retry_budget, 4);
+        assert_eq!(cfg.cluster.retry_backoff_base_ms, 25);
+        assert_eq!(cfg.cluster.retry_backoff_cap_ms, 400);
+        assert_eq!(cfg.cluster.migration_chunk, 128);
+        assert_eq!(cfg.shard_range, None, "shard range is CLI-only");
+    }
+
+    #[test]
+    fn cluster_section_validated() {
+        assert!(ServiceConfig::from_toml("[cluster]\nheartbeat_interval_ms = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[cluster]\nheartbeat_miss_threshold = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[cluster]\nreadmit_after = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[cluster]\nrequest_timeout_ms = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[cluster]\nretry_backoff_base_ms = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[cluster]\nmigration_chunk = 0\n").is_err());
+        // cap below base is an inverted schedule
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\nretry_backoff_base_ms = 100\nretry_backoff_cap_ms = 50\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_toml("[cluster]\nnodes = \"host\"\n").is_err());
+        assert!(ServiceConfig::from_toml("[cluster]\nnodes = [1, 2]\n").is_err());
+        // retry_budget = 0 legal (fail fast), defaults validate
+        let cfg = ServiceConfig::from_toml("[cluster]\nretry_budget = 0\n").unwrap();
+        assert_eq!(cfg.cluster.retry_budget, 0);
+        assert!(cfg.cluster.nodes.is_empty());
     }
 
     #[test]

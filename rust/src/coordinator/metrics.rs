@@ -937,6 +937,53 @@ pub fn prometheus_render(summary: &Value, stages: &Value) -> String {
     out
 }
 
+/// Render a `stats detail=cluster` view as Prometheus text exposition
+/// (`funclsh stats --prom --detail cluster`). Top-level numeric keys
+/// become `funclsh_cluster_<key>` counters; every entry of the
+/// `"shards"` array becomes a family of `funclsh_cluster_shard_<key>`
+/// series labelled by the shard's address, with booleans rendered 0/1
+/// (`funclsh_cluster_shard_alive` is the per-shard liveness gauge).
+pub fn prometheus_render_cluster(cluster: &Value) -> String {
+    fn numeric(v: &Value) -> Option<f64> {
+        match v {
+            Value::Number(n) => Some(*n),
+            Value::String(s) => s.parse::<f64>().ok(),
+            Value::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+            _ => None,
+        }
+    }
+    let mut out = String::new();
+    if let Value::Object(top) = cluster {
+        for (k, v) in top {
+            if k == "shards" {
+                continue;
+            }
+            if let Some(n) = numeric(v) {
+                out.push_str(&format!("funclsh_cluster_{k} {n}\n"));
+            }
+        }
+    }
+    if let Some(Value::Array(shards)) = cluster.get("shards") {
+        for s in shards {
+            let Some(addr) = s.get("addr").and_then(Value::as_str) else {
+                continue;
+            };
+            let Value::Object(fields) = s else { continue };
+            for (k, v) in fields {
+                if k == "addr" {
+                    continue;
+                }
+                if let Some(n) = numeric(v) {
+                    out.push_str(&format!(
+                        "funclsh_cluster_shard_{k}{{shard=\"{addr}\"}} {n}\n"
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

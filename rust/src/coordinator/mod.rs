@@ -25,6 +25,9 @@ pub mod service;
 pub use batcher::BoundedQueue;
 pub use hashpath::{fold_projection, CpuHashPath, FoldedHashPath, HashPath, SigView, Signatures};
 pub use metrics::{
-    prometheus_render, MetricsSnapshot, ProbeSnapshot, ServiceMetrics, SlowEntry, StageSnapshot,
+    prometheus_render, prometheus_render_cluster, MetricsSnapshot, ProbeSnapshot, ServiceMetrics,
+    SlowEntry, StageSnapshot,
 };
-pub use service::{Coordinator, Op, Response, StatsDetail};
+pub use service::{
+    validate_snapshot_path, Coordinator, EntryRecord, Op, Response, StatsDetail,
+};

@@ -22,7 +22,7 @@ use crate::config::ServiceConfig;
 use crate::embedding::l2_dist;
 use crate::json::Value;
 use crate::lsh::shard::{read_i32, read_u64, write_i32, write_u64};
-use crate::lsh::{IndexConfig, QueryScratch, ShardHealth, ShardedIndex};
+use crate::lsh::{IndexConfig, QueryScratch, ShardHealth, ShardRange, ShardedIndex};
 use crate::search::Hit;
 use crate::trace::{Span, SpanWire, Stage};
 use std::collections::HashMap;
@@ -75,6 +75,44 @@ pub enum Op {
         /// which view to return
         detail: StatsDetail,
     },
+    /// inter-node (migration source): stream a chunk of the entry store
+    /// in id order — the stateless cursor makes a retried pull
+    /// idempotent
+    MigratePull {
+        /// first id eligible for this chunk (inclusive; the first pull
+        /// passes 0, later pulls pass `last_returned_id + 1`)
+        from_id: u64,
+        /// max entries in the chunk
+        max: usize,
+    },
+    /// inter-node (migration target): ingest full entries (id, re-rank
+    /// embedding, insert-time signature) directly into the store and
+    /// index. Overwrite-idempotent: re-pushing an id replaces it, so a
+    /// retried chunk cannot duplicate entries.
+    EntriesPush {
+        /// the entries to ingest
+        entries: Vec<EntryRecord>,
+    },
+    /// inter-node (migration abort): drop the listed ids if present —
+    /// how a target discards partial state when the source dies
+    /// mid-handoff
+    EntriesDiscard {
+        /// ids to drop
+        ids: Vec<u64>,
+    },
+}
+
+/// A full corpus entry on the wire: what live migration streams from
+/// source to target (everything a shard needs to serve the id — the
+/// re-rank embedding and the insert-time signature).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntryRecord {
+    /// entry id
+    pub id: u64,
+    /// re-rank embedding
+    pub emb: Vec<f64>,
+    /// insert-time signature (k·l hashes)
+    pub sig: Vec<i32>,
 }
 
 impl Op {
@@ -85,7 +123,13 @@ impl Op {
             Op::Insert { .. } => RequestKind::Insert,
             Op::Query { .. } => RequestKind::Query,
             Op::Remove { .. } => RequestKind::Remove,
-            Op::Metrics | Op::Snapshot { .. } | Op::Ping | Op::Stats { .. } => RequestKind::Admin,
+            Op::Metrics
+            | Op::Snapshot { .. }
+            | Op::Ping
+            | Op::Stats { .. }
+            | Op::MigratePull { .. }
+            | Op::EntriesPush { .. }
+            | Op::EntriesDiscard { .. } => RequestKind::Admin,
         }
     }
 }
@@ -101,16 +145,22 @@ pub enum StatsDetail {
     Index,
     /// the worst-K traced requests with full per-stage breakdowns
     Slow,
+    /// cluster topology and health: on a router, per-shard liveness,
+    /// last-heartbeat age, and retry/degraded counters; on a shard or
+    /// single node, its role and owned key range
+    Cluster,
 }
 
 impl StatsDetail {
-    /// Parse the wire spelling (`summary` / `stages` / `index` / `slow`).
+    /// Parse the wire spelling (`summary` / `stages` / `index` / `slow`
+    /// / `cluster`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "summary" => Some(Self::Summary),
             "stages" => Some(Self::Stages),
             "index" => Some(Self::Index),
             "slow" => Some(Self::Slow),
+            "cluster" => Some(Self::Cluster),
             _ => None,
         }
     }
@@ -122,6 +172,7 @@ impl StatsDetail {
             Self::Stages => "stages",
             Self::Index => "index",
             Self::Slow => "slow",
+            Self::Cluster => "cluster",
         }
     }
 
@@ -132,6 +183,7 @@ impl StatsDetail {
             Self::Stages => 1,
             Self::Index => 2,
             Self::Slow => 3,
+            Self::Cluster => 4,
         }
     }
 
@@ -142,6 +194,7 @@ impl StatsDetail {
             1 => Some(Self::Stages),
             2 => Some(Self::Index),
             3 => Some(Self::Slow),
+            4 => Some(Self::Cluster),
             _ => None,
         }
     }
@@ -183,6 +236,19 @@ pub enum Response {
     /// observability view of a `Stats` op (shape depends on the
     /// requested [`StatsDetail`]; always carries a `"detail"` key)
     Stats(Value),
+    /// one migration chunk of a `MigratePull` (entries in ascending id
+    /// order; `done` = nothing remains past the last id)
+    Entries {
+        /// the chunk, sorted by id
+        entries: Vec<EntryRecord>,
+        /// whether the store holds nothing beyond this chunk
+        done: bool,
+    },
+    /// ack of an `EntriesPush` / `EntriesDiscard`
+    Ingested {
+        /// entries applied (pushed or discarded)
+        count: u64,
+    },
     /// failure
     Error(String),
 }
@@ -210,6 +276,9 @@ struct State {
     /// written into snapshots so restore can detect a changed hash
     /// configuration (see [`probe_signature`])
     probe_sig: Vec<i32>,
+    /// slice of the routing-key space this node owns (`serve
+    /// --shard-range`); `None` = single node owning everything
+    shard_range: Option<ShardRange>,
 }
 
 /// Signature of a fixed, deterministic probe row. Any change to the hash
@@ -249,6 +318,7 @@ impl Coordinator {
             ),
             store: RwLock::new(HashMap::new()),
             probe_sig: probe_signature(hash_path.as_ref()),
+            shard_range: config.shard_range,
         });
         Self::start_inner(config, hash_path, state)
     }
@@ -303,6 +373,7 @@ impl Coordinator {
             index,
             store: RwLock::new(store),
             probe_sig,
+            shard_range: config.shard_range,
         });
         Ok(Self::start_inner(config, hash_path, state))
     }
@@ -455,6 +526,8 @@ fn worker_loop(
     let mut candidates: Vec<u64> = Vec::new();
     let mut row64: Vec<f64> = Vec::new();
     let dim = hash_path.dim();
+    // output dimension of the embedder, for validating pushed entries
+    let emb_dim = hash_path.embed_row(&vec![0.0f32; dim]).len();
     while let Some(mut batch) = queue.pop_batch(max_batch, max_wait) {
         let batch_size = batch.len();
         // the wait just ended for every op in the batch: attribute it,
@@ -492,7 +565,10 @@ fn worker_loop(
                 | Op::Metrics
                 | Op::Snapshot { .. }
                 | Op::Ping
-                | Op::Stats { .. } => None,
+                | Op::Stats { .. }
+                | Op::MigratePull { .. }
+                | Op::EntriesPush { .. }
+                | Op::EntriesDiscard { .. } => None,
             })
             .collect();
         // row collection + validation done: batch formation is over
@@ -565,7 +641,15 @@ fn worker_loop(
                     continue;
                 }
                 if let Op::Insert { id, samples } = &req.op {
-                    if let Some(bad) = samples.iter().position(|s| !s.is_finite()) {
+                    if let Some(range) = state.shard_range.filter(|r| !r.owns_id(*id)) {
+                        // a misrouted insert must never be indexed: it
+                        // would be invisible to the router's migration
+                        // and removal paths, which walk ids by range
+                        rejected[slot] = Some(format!(
+                            "misrouted id {id}: routing key {:016x} outside owned range {range}",
+                            crate::lsh::route_key(*id)
+                        ));
+                    } else if let Some(bad) = samples.iter().position(|s| !s.is_finite()) {
                         rejected[slot] = Some(format!(
                             "insert {id}: sample[{bad}] is not finite"
                         ));
@@ -602,6 +686,9 @@ fn worker_loop(
                         Response::Stats(build_stats(*detail, &metrics, &state))
                     }
                     Op::Snapshot { path } => write_snapshot(&state, path),
+                    Op::MigratePull { from_id, max } => migrate_pull(&state, *from_id, *max),
+                    Op::EntriesPush { entries } => entries_push(&state, entries, emb_dim),
+                    Op::EntriesDiscard { ids } => entries_discard(&state, ids),
                     Op::Hash { .. } => Response::Signature(SigView::new(
                         block.clone(),
                         sig_rows[slot].expect("hash ops carry samples"),
@@ -706,7 +793,14 @@ fn apply_op(
             span.stamp(Stage::Rerank);
             Response::Hits(hits)
         }
-        Op::Hash { .. } | Op::Metrics | Op::Snapshot { .. } | Op::Ping | Op::Stats { .. } => {
+        Op::Hash { .. }
+        | Op::Metrics
+        | Op::Snapshot { .. }
+        | Op::Ping
+        | Op::Stats { .. }
+        | Op::MigratePull { .. }
+        | Op::EntriesPush { .. }
+        | Op::EntriesDiscard { .. } => {
             unreachable!("hash and admin ops are answered in the worker loop")
         }
     }
@@ -759,6 +853,171 @@ fn build_stats(detail: StatsDetail, metrics: &ServiceMetrics, state: &State) -> 
                 ),
             ),
         ]),
+        // a node's own cluster view: its role and owned key range. The
+        // router intercepts this detail and answers with the full
+        // topology (per-shard liveness, retry/degraded counters)
+        // instead — see `crate::cluster`.
+        StatsDetail::Cluster => crate::json::object(vec![
+            ("detail", "cluster".into()),
+            (
+                "role",
+                if state.shard_range.is_some() {
+                    "shard"
+                } else {
+                    "single"
+                }
+                .into(),
+            ),
+            (
+                "shard_range",
+                state.shard_range.unwrap_or(ShardRange::FULL).to_string().into(),
+            ),
+            ("entries", u64_value(state.index.len() as u64)),
+        ]),
+    }
+}
+
+/// Answer a `MigratePull`: up to `max` store entries with `id >=
+/// from_id`, in ascending id order. `done` means nothing remains past
+/// the chunk — the stateless cursor makes a retried pull idempotent
+/// (the source keeps serving reads and writes throughout; entries
+/// inserted behind the cursor are the router's delta to replay).
+fn migrate_pull(state: &State, from_id: u64, max: usize) -> Response {
+    if max == 0 {
+        return Response::Error("migrate_pull: max must be positive".to_string());
+    }
+    let store = state.store.read().unwrap();
+    let mut ids: Vec<u64> = store.keys().copied().filter(|id| *id >= from_id).collect();
+    ids.sort_unstable();
+    let done = ids.len() <= max;
+    ids.truncate(max);
+    let entries = ids
+        .iter()
+        .map(|id| {
+            let e = &store[id];
+            EntryRecord {
+                id: *id,
+                emb: e.emb.clone(),
+                sig: e.sig.clone(),
+            }
+        })
+        .collect();
+    Response::Entries { entries, done }
+}
+
+/// Answer an `EntriesPush`: validate every entry against this node's
+/// shape (signature length `k·l`, embedding dimension, finite values,
+/// owned key range), then ingest under one store write lock.
+/// Overwrite-idempotent: a re-pushed id replaces its previous entry —
+/// index buckets for the old signature are cleaned first — so retried
+/// migration chunks can never duplicate ids.
+fn entries_push(state: &State, entries: &[EntryRecord], emb_dim: usize) -> Response {
+    let sig_len = state.probe_sig.len();
+    for e in entries {
+        if e.sig.len() != sig_len {
+            return Response::Error(format!(
+                "entries_push: id {} signature length {} != k*l {sig_len}",
+                e.id,
+                e.sig.len()
+            ));
+        }
+        if e.emb.len() != emb_dim {
+            return Response::Error(format!(
+                "entries_push: id {} embedding length {} != service dimension {emb_dim}",
+                e.id,
+                e.emb.len()
+            ));
+        }
+        if e.emb.iter().any(|v| !v.is_finite()) {
+            return Response::Error(format!("entries_push: id {} embedding is not finite", e.id));
+        }
+        if let Some(range) = state.shard_range.filter(|r| !r.owns_id(e.id)) {
+            return Response::Error(format!(
+                "entries_push: misrouted id {}: routing key outside owned range {range}",
+                e.id
+            ));
+        }
+    }
+    let mut store = state.store.write().unwrap();
+    for e in entries {
+        if let Some(old) = store.remove(&e.id) {
+            state.index.remove(e.id, &old.sig);
+        }
+        state.index.insert(e.id, &e.sig);
+        store.insert(
+            e.id,
+            Entry {
+                emb: e.emb.clone(),
+                sig: e.sig.clone(),
+            },
+        );
+    }
+    Response::Ingested {
+        count: entries.len() as u64,
+    }
+}
+
+/// Answer an `EntriesDiscard`: drop the listed ids if present (store and
+/// index). The count only covers ids that were actually held, so an
+/// aborting migration target can verify it unwound exactly what landed.
+fn entries_discard(state: &State, ids: &[u64]) -> Response {
+    let mut store = state.store.write().unwrap();
+    let mut count = 0u64;
+    for id in ids {
+        if let Some(e) = store.remove(id) {
+            state.index.remove(*id, &e.sig);
+            count += 1;
+        }
+    }
+    Response::Ingested { count }
+}
+
+/// Fail-fast validation of a snapshot destination (`serve --snapshot`):
+/// the parent directory must exist and be writable **at startup** — a
+/// typo'd or read-only path must abort the boot with a typed error, not
+/// surface at shutdown when the snapshot is already lost. Probes
+/// writability by creating and removing a uniquely named sibling file
+/// (permission bits alone lie under ACLs and read-only mounts).
+pub fn validate_snapshot_path(path: &str) -> io::Result<()> {
+    if path.is_empty() {
+        return Ok(());
+    }
+    let p = std::path::Path::new(path);
+    let parent = match p.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    if !parent.is_dir() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!(
+                "snapshot path {path}: parent directory {} does not exist",
+                parent.display()
+            ),
+        ));
+    }
+    static PROBE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let probe = parent.join(format!(
+        ".funclsh-snapshot-probe-{}-{}",
+        std::process::id(),
+        PROBE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    match std::fs::OpenOptions::new()
+        .write(true)
+        .create_new(true)
+        .open(&probe)
+    {
+        Ok(_) => {
+            let _ = std::fs::remove_file(&probe);
+            Ok(())
+        }
+        Err(e) => Err(io::Error::new(
+            e.kind(),
+            format!(
+                "snapshot path {path}: parent directory {} is not writable: {e}",
+                parent.display()
+            ),
+        )),
     }
 }
 

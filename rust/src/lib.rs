@@ -56,6 +56,7 @@
 pub mod bench;
 pub mod chebyshev;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod embedding;

@@ -35,7 +35,7 @@
 pub mod shard;
 pub mod tuning;
 
-pub use shard::{ShardHealth, ShardedIndex};
+pub use shard::{route_key, ShardHealth, ShardRange, ShardedIndex};
 pub use tuning::{estimate_distances, tune, Tuning, TuningGoal};
 
 use std::collections::HashMap;

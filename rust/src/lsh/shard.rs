@@ -190,6 +190,123 @@ impl ShardedIndex {
     }
 }
 
+/// Cluster routing key of an entry id: the same multiply-xor fold the
+/// tables key on ([`super::fingerprint`]) applied to the id's two
+/// 32-bit halves. Ids spread uniformly over the full 64-bit space
+/// regardless of how callers allocate them — sequential ids would make
+/// contiguous [`ShardRange`]s wildly unbalanced if routed raw.
+pub fn route_key(id: u64) -> u64 {
+    super::fingerprint(&[(id & 0xffff_ffff) as u32 as i32, (id >> 32) as u32 as i32])
+}
+
+/// An inclusive range `[lo, hi]` of the 64-bit routing-key space owned
+/// by one cluster shard node (`serve --shard-range`). Entry ids map
+/// into the space via [`route_key`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShardRange {
+    /// first owned key
+    pub lo: u64,
+    /// last owned key (inclusive — `u64::MAX` must be ownable)
+    pub hi: u64,
+}
+
+impl ShardRange {
+    /// The whole key space (what a single-node service implicitly owns).
+    pub const FULL: ShardRange = ShardRange { lo: 0, hi: u64::MAX };
+
+    /// A range with `lo <= hi` enforced.
+    pub fn new(lo: u64, hi: u64) -> Result<Self, String> {
+        if lo > hi {
+            return Err(format!("shard range lo {lo:#x} > hi {hi:#x}"));
+        }
+        Ok(Self { lo, hi })
+    }
+
+    /// Whether `key` falls inside this range.
+    pub fn contains(&self, key: u64) -> bool {
+        self.lo <= key && key <= self.hi
+    }
+
+    /// Whether `id`'s routing key falls inside this range.
+    pub fn owns_id(&self, id: u64) -> bool {
+        self.contains(route_key(id))
+    }
+
+    /// Split the full key space into `n` contiguous ranges of (near-)
+    /// equal width, in key order. `partition(1)` is [`ShardRange::FULL`].
+    pub fn partition(n: usize) -> Vec<ShardRange> {
+        assert!(n >= 1, "partition needs at least one shard");
+        let step = ((u64::MAX as u128) + 1) / n as u128;
+        (0..n)
+            .map(|i| ShardRange {
+                lo: (i as u128 * step) as u64,
+                hi: if i == n - 1 {
+                    u64::MAX
+                } else {
+                    ((i as u128 + 1) * step - 1) as u64
+                },
+            })
+            .collect()
+    }
+
+    /// Parse `LO-HI` where each bound is hex (`0x…` or a bare 16-digit
+    /// hex string) or decimal. This is the `--shard-range` / `[cluster]`
+    /// syntax; [`std::fmt::Display`] round-trips through it.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (lo, hi) = s
+            .split_once('-')
+            .ok_or_else(|| format!("shard range {s:?}: want LO-HI"))?;
+        Self::new(parse_key(lo)?, parse_key(hi)?)
+    }
+
+    /// Check that `ranges` tile the full key space exactly: sorted or
+    /// not, they must cover every key once with no gap and no overlap.
+    /// The router refuses to start on a violation — a gap would make a
+    /// slice of the id space silently unroutable.
+    pub fn check_cover(ranges: &[ShardRange]) -> Result<(), String> {
+        if ranges.is_empty() {
+            return Err("no shard ranges configured".to_string());
+        }
+        let mut sorted: Vec<ShardRange> = ranges.to_vec();
+        sorted.sort_by_key(|r| r.lo);
+        if sorted[0].lo != 0 {
+            return Err(format!("key space starts uncovered: first range is {}", sorted[0]));
+        }
+        for pair in sorted.windows(2) {
+            let (a, b) = (pair[0], pair[1]);
+            if a.hi == u64::MAX || b.lo != a.hi + 1 {
+                return Err(format!("ranges {a} and {b} do not tile: want contiguous, non-overlapping"));
+            }
+        }
+        if sorted[sorted.len() - 1].hi != u64::MAX {
+            return Err(format!(
+                "key space ends uncovered: last range is {}",
+                sorted[sorted.len() - 1]
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for ShardRange {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}-{:016x}", self.lo, self.hi)
+    }
+}
+
+/// Parse one range bound: `0x…` hex, bare 16-digit hex, or decimal.
+fn parse_key(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let parsed = if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16)
+    } else if s.len() == 16 && s.chars().all(|c| c.is_ascii_hexdigit()) {
+        u64::from_str_radix(s, 16)
+    } else {
+        s.parse::<u64>()
+    };
+    parsed.map_err(|e| format!("shard-range bound {s:?}: {e}"))
+}
+
 /// Occupancy of one shard: entry count plus per-table walk results.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardHealth {
@@ -429,6 +546,77 @@ mod tests {
         idx.query_into_observed(&sig, 1, &mut scratch, &mut b, &mut hits);
         assert_eq!(a, b);
         assert!(hits[0] >= 1, "exact bucket must hit the inserted id");
+    }
+
+    #[test]
+    fn shard_range_partition_tiles_key_space() {
+        for n in [1usize, 2, 3, 5, 7, 16] {
+            let ranges = ShardRange::partition(n);
+            assert_eq!(ranges.len(), n);
+            ShardRange::check_cover(&ranges).unwrap();
+            assert_eq!(ranges[0].lo, 0);
+            assert_eq!(ranges[n - 1].hi, u64::MAX);
+            // every id routes to exactly one range
+            for id in [0u64, 1, 42, 1 << 40, u64::MAX] {
+                let key = route_key(id);
+                let owners = ranges.iter().filter(|r| r.contains(key)).count();
+                assert_eq!(owners, 1, "id {id} key {key:#x} owners {owners}");
+            }
+        }
+        assert_eq!(ShardRange::partition(1)[0], ShardRange::FULL);
+    }
+
+    #[test]
+    fn shard_range_check_cover_rejects_gaps_and_overlaps() {
+        let &[a, b, c] = &ShardRange::partition(3)[..] else {
+            panic!()
+        };
+        ShardRange::check_cover(&[c, a, b]).unwrap(); // order-insensitive
+        assert!(ShardRange::check_cover(&[]).is_err());
+        assert!(ShardRange::check_cover(&[a, c]).is_err()); // gap
+        assert!(ShardRange::check_cover(&[a, b]).is_err()); // tail uncovered
+        assert!(ShardRange::check_cover(&[b, c]).is_err()); // head uncovered
+        let wide = ShardRange::new(a.lo, b.hi).unwrap();
+        assert!(ShardRange::check_cover(&[wide, b, c]).is_err()); // overlap
+        assert!(ShardRange::check_cover(&[ShardRange::FULL, a]).is_err());
+    }
+
+    #[test]
+    fn shard_range_parse_display_roundtrip() {
+        for r in ShardRange::partition(3) {
+            assert_eq!(ShardRange::parse(&r.to_string()).unwrap(), r);
+        }
+        assert_eq!(
+            ShardRange::parse("0x0-0xff").unwrap(),
+            ShardRange { lo: 0, hi: 255 }
+        );
+        assert_eq!(
+            ShardRange::parse("0-18446744073709551615").unwrap(),
+            ShardRange::FULL
+        );
+        assert!(ShardRange::parse("10").is_err()); // no separator
+        assert!(ShardRange::parse("5-1").is_err()); // inverted
+        assert!(ShardRange::parse("x-y").is_err()); // junk bounds
+    }
+
+    #[test]
+    fn route_key_spreads_sequential_ids() {
+        // sequential ids must not land in one contiguous slice of the
+        // key space: across a 3-way partition, each range should own a
+        // nontrivial share of the first 3000 ids
+        let ranges = ShardRange::partition(3);
+        let mut counts = [0usize; 3];
+        for id in 0..3000u64 {
+            let key = route_key(id);
+            let owner = ranges.iter().position(|r| r.contains(key)).unwrap();
+            counts[owner] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert!(*c > 500, "range {i} owns only {c} of 3000 ids: {counts:?}");
+        }
+        // and routing is deterministic
+        assert_eq!(route_key(12345), route_key(12345));
+        assert!(ShardRange::FULL.owns_id(9999));
     }
 
     #[test]

@@ -4,13 +4,34 @@
 //! ```text
 //! funclsh serve       --port P [--host H] [--io-mode event_loop|threaded]
 //!                     [--config svc.toml] [--snapshot F] [--no-trace]
+//!                     [--shard-range LO-HI]
 //!                     (TCP front-end; port 0 binds an ephemeral port and
 //!                      the bound address is printed as JSON on stdout;
-//!                      --no-trace disables per-request stage tracing)
+//!                      --no-trace disables per-request stage tracing;
+//!                      --shard-range makes this node one cluster shard:
+//!                      it owns the hex key range LO-HI and rejects
+//!                      inserts whose routing key falls outside it)
+//! funclsh route       [--config svc.toml] [--port P] [--host H]
+//!                     [--nodes A:P1,B:P2,...]
+//!                     (cluster coordinator: scatter-gather front-end
+//!                      over the `[cluster]` shard nodes, speaking the
+//!                      same client wire as a single server; prints the
+//!                      bound address as JSON on stdout like serve)
+//! funclsh migrate     --from H:P --to H:P [--config svc.toml]
+//!                     [--chunk N]
+//!                     (live shard handoff: snapshot sweep + delta sweep
+//!                      over migrate_pull/entries_push, rollback via
+//!                      entries_discard on failure; prints a JSON report)
 //! funclsh serve       [--config svc.toml] [--trace-ops N] [--snapshot F]
 //!                     (no --port: legacy in-process synthetic trace)
 //! funclsh load        [--addr H:P] [--threads N] [--ops N] [--k K]
 //!                     [--pipeline D] [--wire json|binary] [--batch N]
+//!                     [--reconnect]
+//!                     (--reconnect re-dials dropped connections under
+//!                      capped exponential backoff instead of aborting
+//!                      the run — the report counts `reconnects` and
+//!                      `degraded` envelopes, so a load run survives a
+//!                      shard restart behind a router)
 //!                     (--batch N ships N rows per hash_batch/
 //!                      insert_batch/query_batch frame; 1 = single ops)
 //!                     [--rate R]
@@ -23,11 +44,15 @@
 //!                     (the report splices in `server_stages` — the
 //!                      delta of two `stats detail=stages` snapshots
 //!                      bracketing the run — when the server traces)
-//! funclsh stats       [--addr H:P] [--detail summary|stages|index|slow]
+//! funclsh stats       [--addr H:P]
+//!                     [--detail summary|stages|index|slow|cluster]
 //!                     [--watch N] [--prom]
 //!                     (one observability view as JSON; --watch N
 //!                      refreshes every N seconds, --prom prints the
-//!                      Prometheus text exposition instead)
+//!                      Prometheus text exposition instead;
+//!                      detail=cluster against a router reports
+//!                      per-shard liveness, last-heartbeat age, and
+//!                      retry/degraded counters)
 //! funclsh experiment  <fig1|fig2|fig3|thm1|qmc|knn|w1|mips|adaptive|all>
 //!                     [--pairs N] [--hashes N] [--dim N] [--seed S]
 //!                     [--out results/]
@@ -66,6 +91,8 @@ fn main() {
     let args = Args::from_env();
     let code = match args.subcommand() {
         Some("serve") => cmd_serve(&args),
+        Some("route") => cmd_route(&args),
+        Some("migrate") => cmd_migrate(&args),
         Some("load") => cmd_load(&args),
         Some("stats") => cmd_stats(&args),
         Some("experiment") => cmd_experiment(&args),
@@ -78,7 +105,7 @@ fn main() {
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: funclsh <serve|load|stats|experiment|hash|bench-hash|bench-wire|bench-observe|selftest|info> [options]\n\
+                "usage: funclsh <serve|route|migrate|load|stats|experiment|hash|bench-hash|bench-wire|bench-observe|selftest|info> [options]\n\
                  see `funclsh experiment all --out results/` for the paper reproduction"
             );
             2
@@ -228,6 +255,22 @@ fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
     if args.has("no-trace") {
         cfg.server.trace = false;
     }
+    if let Some(r) = args.get("shard-range") {
+        match funclsh::lsh::ShardRange::parse(r) {
+            Ok(range) => cfg.shard_range = Some(range),
+            Err(e) => {
+                eprintln!("invalid --shard-range: {e}");
+                return 2;
+            }
+        }
+    }
+    // fail fast on an unwritable snapshot destination: a typo'd path
+    // must abort the boot, not surface at shutdown when the corpus is
+    // already unrecoverable
+    if let Err(e) = funclsh::coordinator::validate_snapshot_path(&cfg.server.snapshot_path) {
+        eprintln!("snapshot destination rejected: {e}");
+        return 2;
+    }
     // the event loop exists to hold thousands of sockets; lift the
     // process fd ceiling to the hard limit up front
     #[cfg(target_os = "linux")]
@@ -279,22 +322,22 @@ fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
             return 1;
         }
     };
-    println!(
-        "{}",
-        funclsh::json::object(vec![
-            ("listening", server.addr().to_string().as_str().into()),
-            ("dim", cfg.dim.into()),
-            ("k", cfg.k.into()),
-            ("l", cfg.l.into()),
-            ("workers", cfg.workers.into()),
-            ("io_mode", server.io_mode().as_str().into()),
-            ("max_conns", cfg.server.max_conns.into()),
-            ("io_workers", cfg.server.io_workers.into()),
-            ("pipeline_depth", cfg.server.pipeline_depth.into()),
-            ("trace", cfg.server.trace.into()),
-        ])
-        .to_json()
-    );
+    let mut banner = vec![
+        ("listening", server.addr().to_string().as_str().into()),
+        ("dim", cfg.dim.into()),
+        ("k", cfg.k.into()),
+        ("l", cfg.l.into()),
+        ("workers", cfg.workers.into()),
+        ("io_mode", server.io_mode().as_str().into()),
+        ("max_conns", cfg.server.max_conns.into()),
+        ("io_workers", cfg.server.io_workers.into()),
+        ("pipeline_depth", cfg.server.pipeline_depth.into()),
+        ("trace", cfg.server.trace.into()),
+    ];
+    if let Some(range) = cfg.shard_range {
+        banner.push(("shard_range", range.to_string().as_str().into()));
+    }
+    println!("{}", funclsh::json::object(banner).to_json());
     let _ = std::io::stdout().flush();
     eprintln!(
         "funclsh serving on {} (send {{\"op\":\"shutdown\"}} to stop gracefully)",
@@ -317,6 +360,119 @@ fn cmd_serve_network(args: &Args, mut cfg: ServiceConfig) -> i32 {
         svc.shutdown();
     }
     0
+}
+
+/// `funclsh route`: the cluster coordinator. Scatter-gathers client
+/// requests over the `[cluster]` shard nodes (see
+/// [`funclsh::cluster`]); prints the bound address as a JSON line on
+/// stdout like `serve`, then runs until a client sends
+/// `{"op":"shutdown"}`.
+fn cmd_route(args: &Args) -> i32 {
+    use funclsh::cluster::{Router, RouterConfig};
+
+    let mut cfg = load_config(args);
+    if let Some(p) = args.get("port") {
+        match p.parse::<u16>() {
+            Ok(p) => cfg.server.port = p,
+            Err(_) => {
+                eprintln!("invalid --port `{p}`");
+                return 2;
+            }
+        }
+    }
+    if let Some(h) = args.get("host") {
+        cfg.server.host = h.to_string();
+    }
+    if let Some(nodes) = args.get("nodes") {
+        cfg.cluster.nodes = nodes
+            .split(',')
+            .map(str::trim)
+            .filter(|n| !n.is_empty())
+            .map(str::to_string)
+            .collect();
+    }
+    let rc = match RouterConfig::from_service(&cfg) {
+        Ok(rc) => rc,
+        Err(e) => {
+            eprintln!("invalid cluster topology: {e}");
+            return 2;
+        }
+    };
+    let shards: Vec<funclsh::json::Value> = rc
+        .shards
+        .iter()
+        .map(|s| funclsh::json::Value::String(s.label()))
+        .collect();
+    let router = match Router::start(rc) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cannot start router: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "{}",
+        funclsh::json::object(vec![
+            ("listening", router.addr().to_string().as_str().into()),
+            ("role", "router".into()),
+            ("shards", funclsh::json::Value::Array(shards)),
+        ])
+        .to_json()
+    );
+    let _ = std::io::stdout().flush();
+    eprintln!(
+        "funclsh routing on {} (send {{\"op\":\"shutdown\"}} to stop gracefully)",
+        router.addr()
+    );
+    while !router.shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    router.shutdown();
+    0
+}
+
+/// `funclsh migrate`: live shard handoff from `--from` to `--to` (see
+/// [`funclsh::cluster::migrate`]); prints the JSON transfer report on
+/// success, the failure + rollback outcome on stderr otherwise.
+fn cmd_migrate(args: &Args) -> i32 {
+    use funclsh::cluster::{migrate, MigrationConfig};
+    use funclsh::server::RetryPolicy;
+
+    let cfg = load_config(args);
+    let (Some(source), Some(target)) = (args.get("from"), args.get("to")) else {
+        eprintln!("usage: funclsh migrate --from H:P --to H:P [--config svc.toml] [--chunk N]");
+        return 2;
+    };
+    let mc = MigrationConfig {
+        source: source.to_string(),
+        target: target.to_string(),
+        chunk: args.get_parsed("chunk", cfg.cluster.migration_chunk),
+        request_timeout: std::time::Duration::from_millis(cfg.cluster.request_timeout_ms.max(1)),
+        retry: RetryPolicy::new(
+            cfg.cluster.retry_budget as usize,
+            cfg.cluster.retry_backoff_base_ms,
+            cfg.cluster.retry_backoff_cap_ms,
+        ),
+    };
+    eprintln!(
+        "migrating {} -> {} (chunk {}, timeout {}ms, {} retries)",
+        mc.source, mc.target, mc.chunk, cfg.cluster.request_timeout_ms, mc.retry.attempts
+    );
+    match migrate(&mc) {
+        Ok(report) => {
+            println!("{}", report.to_json().to_json());
+            eprintln!(
+                "migration complete: {} entries ({} delta) in {} chunks; cut over by \
+                 restarting {} with the source's --shard-range and updating cluster.nodes",
+                report.snapshot_entries, report.delta_entries, report.chunks, mc.target
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
 }
 
 /// `funclsh load`: multi-threaded load generator against a running
@@ -352,6 +508,7 @@ fn cmd_load(args: &Args) -> i32 {
         k: args.get_parsed("k", 10usize),
         seed: args.get_parsed("seed", 0x10ADu64),
         rate: args.get_parsed("rate", 0.0f64).max(0.0),
+        reconnect: args.has("reconnect"),
         ..Default::default()
     };
     let mut probe = match Client::connect(addr) {
@@ -477,7 +634,7 @@ fn cmd_stats(args: &Args) -> i32 {
     let detail = match StatsDetail::parse(detail_s) {
         Some(d) => d,
         None => {
-            eprintln!("invalid --detail `{detail_s}` (want summary|stages|index|slow)");
+            eprintln!("invalid --detail `{detail_s}` (want summary|stages|index|slow|cluster)");
             return 2;
         }
     };
@@ -490,7 +647,17 @@ fn cmd_stats(args: &Args) -> i32 {
         }
     };
     loop {
-        if args.has("prom") {
+        if args.has("prom") && detail == StatsDetail::Cluster {
+            // the cluster view has its own exposition: per-shard
+            // liveness gauges labelled by shard address
+            match client.stats(StatsDetail::Cluster) {
+                Ok(v) => print!("{}", funclsh::coordinator::prometheus_render_cluster(&v)),
+                Err(e) => {
+                    eprintln!("stats failed: {e}");
+                    return 1;
+                }
+            }
+        } else if args.has("prom") {
             // the Prometheus rendering needs both the counter summary and
             // the labelled stage cells; fetch the pair every refresh
             let fetched = client

@@ -17,7 +17,7 @@
 //! `benches/server_bench.rs`).
 
 use super::protocol::{self, Reply, WireMode};
-use crate::coordinator::StatsDetail;
+use crate::coordinator::{EntryRecord, StatsDetail};
 use crate::functions::{Function1D, Sine};
 use crate::json::{object, Value};
 use crate::search::Hit;
@@ -54,6 +54,62 @@ impl std::error::Error for ClientError {}
 impl From<std::io::Error> for ClientError {
     fn from(e: std::io::Error) -> Self {
         ClientError::Io(e)
+    }
+}
+
+impl ClientError {
+    /// Whether this failure is worth retrying against the same address:
+    /// transport failures and connection closes (a restarting shard), or
+    /// a typed `overloaded` shed (the server asked for backoff). Real
+    /// request errors and protocol violations are not transient.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            ClientError::Io(_) => true,
+            ClientError::Protocol(msg) => msg.contains("closed connection"),
+            ClientError::Server(msg) => protocol::error_is_overloaded(msg),
+        }
+    }
+}
+
+/// Deterministic capped-exponential retry schedule shared by the
+/// reconnecting clients, the load generator, and the cluster router:
+/// attempt `a` sleeps `min(base << a, cap)` before retrying. No jitter —
+/// every retry timeline in this repo is reproducible by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// retries after the first attempt (0 = fail on first error)
+    pub attempts: usize,
+    /// backoff before the first retry
+    pub base: Duration,
+    /// upper bound the doubling saturates at
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            attempts: 5,
+            base: Duration::from_millis(50),
+            cap: Duration::from_secs(1),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Policy from millisecond knobs (the `[cluster]` config spelling).
+    pub fn new(attempts: usize, base_ms: u64, cap_ms: u64) -> Self {
+        Self {
+            attempts,
+            base: Duration::from_millis(base_ms),
+            cap: Duration::from_millis(cap_ms.max(base_ms)),
+        }
+    }
+
+    /// The sleep before retry number `attempt` (0-based): capped
+    /// exponential doubling of `base`.
+    pub fn backoff(&self, attempt: usize) -> Duration {
+        let mult = 1u32 << attempt.min(20) as u32;
+        self.base.saturating_mul(mult).min(self.cap)
     }
 }
 
@@ -203,9 +259,47 @@ impl Client {
         })
     }
 
+    /// Connect with retry-and-backoff on transient connect failures (a
+    /// shard that is restarting): up to `policy.attempts` retries, then a
+    /// typed give-up error naming the budget. Used by the cluster router
+    /// and the migration driver to ride out shard restarts.
+    pub fn connect_with_retry<A: ToSocketAddrs + Clone>(
+        addr: A,
+        wire: WireMode,
+        policy: &RetryPolicy,
+    ) -> Result<Self, ClientError> {
+        let mut attempt = 0usize;
+        loop {
+            match Self::connect_with(addr.clone(), wire) {
+                Ok(c) => return Ok(c),
+                Err(e) if e.is_transient() && attempt < policy.attempts => {
+                    std::thread::sleep(policy.backoff(attempt));
+                    attempt += 1;
+                }
+                Err(e) => {
+                    return Err(ClientError::Protocol(format!(
+                        "gave up connecting after {} attempt(s): {e}",
+                        attempt + 1
+                    )))
+                }
+            }
+        }
+    }
+
     /// This connection's wire mode.
     pub fn wire(&self) -> WireMode {
         self.wire
+    }
+
+    /// Bound every subsequent reply read: a server (or black-holed
+    /// shard) that does not answer within `timeout` surfaces as a
+    /// transient [`ClientError::Io`] instead of hanging the caller. The
+    /// cluster router sets this to its per-shard request timeout —
+    /// after an expiry the connection may hold a half-read reply, so
+    /// callers must reconnect rather than reuse it.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<(), ClientError> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
     }
 
     fn call(&mut self, frame: Vec<u8>, req_id: u64) -> Result<Reply, ClientError> {
@@ -400,6 +494,98 @@ impl Client {
             other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
         }
     }
+
+    /// `query` against a cluster router, surfacing a degraded reply's
+    /// gap instead of dropping it: returns `(hits, missing)`, where
+    /// `missing` names the unavailable shard ranges and is empty on a
+    /// full answer.
+    #[allow(clippy::type_complexity)]
+    pub fn query_degraded(
+        &mut self,
+        samples: &[f32],
+        k: usize,
+    ) -> Result<(Vec<Hit>, Vec<String>), ClientError> {
+        let rid = self.next_id();
+        let frame = protocol::encode_query_frame(self.wire, Some(rid), samples, k);
+        match self.call(frame, rid)? {
+            Reply::Hits(h) => Ok((h, Vec::new())),
+            Reply::Degraded { missing, reply } => match *reply {
+                Reply::Hits(h) => Ok((h, missing)),
+                other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+            },
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `query_batch` against a cluster router, surfacing a degraded
+    /// reply's gap: per-row results plus the missing shard ranges
+    /// (empty on a full answer).
+    #[allow(clippy::type_complexity)]
+    pub fn query_batch_degraded(
+        &mut self,
+        rows: &[f32],
+        dim: usize,
+        k: usize,
+    ) -> Result<(Vec<Result<Vec<Hit>, String>>, Vec<String>), ClientError> {
+        batch_count(rows, dim)?;
+        let rid = self.next_id();
+        let frame = protocol::encode_query_batch_frame(self.wire, Some(rid), rows, dim, k);
+        let (items, missing) = match self.call(frame, rid)? {
+            Reply::Batch(items) => (items, Vec::new()),
+            Reply::Degraded { missing, reply } => match *reply {
+                Reply::Batch(items) => (items, missing),
+                other => return Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+            },
+            other => return Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        };
+        let rows = items
+            .into_iter()
+            .map(|item| match item {
+                Ok(Reply::Hits(h)) => Ok(Ok(h)),
+                Ok(other) => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+                Err(e) => Ok(Err(e)),
+            })
+            .collect::<Result<_, _>>()?;
+        Ok((rows, missing))
+    }
+
+    /// `migrate_pull`: one ordered chunk of the server's store starting
+    /// at id `from_id` (inclusive); returns `(entries, done)`.
+    #[allow(clippy::type_complexity)]
+    pub fn migrate_pull(
+        &mut self,
+        from_id: u64,
+        max: usize,
+    ) -> Result<(Vec<EntryRecord>, bool), ClientError> {
+        let rid = self.next_id();
+        let frame = protocol::encode_migrate_pull_frame(self.wire, Some(rid), from_id, max);
+        match self.call(frame, rid)? {
+            Reply::Entries { entries, done } => Ok((entries, done)),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `entries_push`: apply migration entry records (overwrite-
+    /// idempotent); returns the applied count.
+    pub fn entries_push(&mut self, entries: &[EntryRecord]) -> Result<u64, ClientError> {
+        let rid = self.next_id();
+        let frame = protocol::encode_entries_push_frame(self.wire, Some(rid), entries);
+        match self.call(frame, rid)? {
+            Reply::Ingested { count } => Ok(count),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// `entries_discard`: drop the named entries (an aborted migration's
+    /// rollback); returns how many were actually present and removed.
+    pub fn entries_discard(&mut self, ids: &[u64]) -> Result<u64, ClientError> {
+        let rid = self.next_id();
+        let frame = protocol::encode_entries_discard_frame(self.wire, Some(rid), ids);
+        match self.call(frame, rid)? {
+            Reply::Ingested { count } => Ok(count),
+            other => Err(ClientError::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
 }
 
 // ---------------------------------------------------------- pipelining
@@ -423,6 +609,11 @@ enum Expect {
 
 fn reply_matches(expect: Expect, reply: &Reply) -> bool {
     match (expect, reply) {
+        // a degraded wrapper carries the partial answer of the same
+        // shape: validate the inner reply against the expectation (a
+        // degraded batch still answers every row, with per-item errors
+        // for the rows an unavailable shard owned)
+        (expect, Reply::Degraded { reply, .. }) => reply_matches(expect, reply),
         (Expect::Batch(n), Reply::Batch(items)) => items.len() == n,
         (Expect::Signature, Reply::Signature(_)) => true,
         (Expect::Inserted(id), Reply::Inserted { id: got }) => *got == id,
@@ -460,6 +651,9 @@ pub struct Completion {
 pub struct PipelinedClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// resolved peer address, kept so [`PipelinedClient::reconnect`] can
+    /// re-dial the same endpoint after a transport failure
+    addr: std::net::SocketAddr,
     next_req_id: u64,
     depth: usize,
     wire: WireMode,
@@ -481,6 +675,27 @@ impl PipelinedClient {
         depth: usize,
         wire: WireMode,
     ) -> Result<Self, ClientError> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| ClientError::Protocol("address resolved to nothing".into()))?;
+        let (reader, writer) = Self::open(addr, wire)?;
+        Ok(Self {
+            reader,
+            writer,
+            addr,
+            next_req_id: 1,
+            depth: depth.max(1),
+            wire,
+            pending: HashMap::new(),
+        })
+    }
+
+    /// Dial `addr` and perform the wire-mode handshake.
+    fn open(
+        addr: std::net::SocketAddr,
+        wire: WireMode,
+    ) -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>), ClientError> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
@@ -488,14 +703,48 @@ impl PipelinedClient {
         if wire == WireMode::Binary {
             writer.write_all(protocol::BINARY_MAGIC)?;
         }
-        Ok(Self {
-            reader,
-            writer,
-            next_req_id: 1,
-            depth: depth.max(1),
-            wire,
-            pending: HashMap::new(),
-        })
+        Ok((reader, writer))
+    }
+
+    /// Drop the broken connection and dial the same endpoint again.
+    ///
+    /// Every in-flight request is orphaned — its reply died with the old
+    /// socket — so `pending` is cleared and the number of abandoned
+    /// requests is returned for the caller to account as failures.
+    /// `next_req_id` keeps counting monotonically across reconnects so
+    /// stale bookkeeping (e.g. the load generator's lag map) can never
+    /// collide with a fresh request's id.
+    pub fn reconnect(&mut self) -> Result<usize, ClientError> {
+        let orphaned = self.pending.len();
+        let (reader, writer) = Self::open(self.addr, self.wire)?;
+        self.reader = reader;
+        self.writer = writer;
+        self.pending.clear();
+        Ok(orphaned)
+    }
+
+    /// [`PipelinedClient::reconnect`] under a deterministic capped-
+    /// exponential [`RetryPolicy`]: transient dial failures are retried
+    /// with backoff; a non-transient failure or an exhausted budget
+    /// yields a typed give-up error. Returns the orphan count from the
+    /// abandoned connection.
+    pub fn reconnect_with_backoff(&mut self, policy: &RetryPolicy) -> Result<usize, ClientError> {
+        let mut attempt = 0usize;
+        loop {
+            match self.reconnect() {
+                Ok(orphaned) => return Ok(orphaned),
+                Err(e) if e.is_transient() && attempt < policy.attempts => {
+                    std::thread::sleep(policy.backoff(attempt));
+                    attempt += 1;
+                }
+                Err(e) => {
+                    return Err(ClientError::Protocol(format!(
+                        "gave up reconnecting after {} attempt(s): {e}",
+                        attempt + 1
+                    )))
+                }
+            }
+        }
     }
 
     /// Frames sent but not yet answered.
@@ -863,6 +1112,13 @@ pub struct LoadConfig {
     /// window still bounds in-flight frames — size `pipeline_depth`
     /// generously when driving a server past saturation
     pub rate: f64,
+    /// survive transport failures: when a send or drain hits a
+    /// transient error (connection reset, typed `overloaded` refusal of
+    /// the connection itself), re-dial the endpoint under the default
+    /// [`RetryPolicy`] instead of aborting the thread. Orphaned
+    /// in-flight requests are counted as errors; the run carries on.
+    /// Lets `funclsh load --rate` ride through a shard restart
+    pub reconnect: bool,
 }
 
 impl Default for LoadConfig {
@@ -879,6 +1135,7 @@ impl Default for LoadConfig {
             seed: 0x10AD,
             id_base: 1 << 40,
             rate: 0.0,
+            reconnect: false,
         }
     }
 }
@@ -900,6 +1157,14 @@ pub struct LoadReport {
     /// envelope (admission control doing its job — counted apart from
     /// `errors` because a shed under deliberate overload is expected)
     pub sheds: usize,
+    /// operations answered with a typed `degraded` envelope or a
+    /// degraded-wrapped partial result (a cluster router honestly
+    /// reporting missing shard ranges — counted apart from `errors`
+    /// because the reply is well-formed and partial by contract)
+    pub degraded: usize,
+    /// times a connection was re-dialed after a transport failure
+    /// (only with [`LoadConfig::reconnect`])
+    pub reconnects: usize,
     /// target aggregate arrival rate the run aimed for (ops/s;
     /// `0.0` = closed loop)
     pub target_rate_ops_s: f64,
@@ -940,6 +1205,8 @@ impl LoadReport {
             ("hashes", self.hashes.into()),
             ("errors", self.errors.into()),
             ("sheds", self.sheds.into()),
+            ("degraded", self.degraded.into()),
+            ("reconnects", self.reconnects.into()),
             ("pipeline_depth", self.pipeline_depth.into()),
             ("batch", self.batch.into()),
             ("wire", self.wire.as_str().into()),
@@ -966,17 +1233,23 @@ struct ThreadTally {
     hashes: usize,
     errors: usize,
     sheds: usize,
+    degraded: usize,
+    reconnects: usize,
     latencies: Vec<f64>,
     histogram: LatencyHistogram,
 }
 
 impl ThreadTally {
     /// Count one failed op: a typed `overloaded` envelope is a shed
-    /// (the server's admission control answering deliberate overpressure),
-    /// anything else is an error.
+    /// (the server's admission control answering deliberate
+    /// overpressure), a typed `degraded` envelope is a cluster router
+    /// honestly naming an unavailable shard range, anything else is an
+    /// error.
     fn fail(&mut self, msg: &str) {
         if protocol::error_is_overloaded(msg) {
             self.sheds += 1;
+        } else if protocol::error_is_degraded(msg) {
+            self.degraded += 1;
         } else {
             self.errors += 1;
         }
@@ -990,7 +1263,18 @@ impl ThreadTally {
     fn absorb(&mut self, completions: Vec<Completion>, lags: &mut HashMap<u64, Duration>) {
         for c in completions {
             let latency = c.latency + lags.remove(&c.req_id).unwrap_or(Duration::ZERO);
-            match c.result {
+            // a degraded wrapper is a well-formed partial answer from a
+            // cluster router: count the envelope, then tally its inner
+            // reply like any other (per-item degraded errors inside a
+            // batch land in `degraded` via `fail`'s classification)
+            let reply = match c.result {
+                Ok(Reply::Degraded { reply, .. }) => {
+                    self.degraded += 1;
+                    Ok(*reply)
+                }
+                other => other,
+            };
+            match reply {
                 // a batch frame completes all its rows at once: each row
                 // counts as one op at the frame's latency (the whole
                 // point of batching is that they share it)
@@ -1052,6 +1336,7 @@ pub fn run_load(
                 0.0
             };
             let start = Instant::now();
+            let policy = RetryPolicy::default();
             let mut lags: HashMap<u64, Duration> = HashMap::new();
             let mut i = 0usize;
             while i < cfg.ops_per_thread {
@@ -1077,38 +1362,67 @@ pub fn run_load(
                     let f = Sine::paper(phase);
                     rows.extend(points.iter().map(|&x| f.eval(x) as f32));
                 }
-                let done = if batch == 1 {
+                let is_insert = roll < cfg.insert_fraction;
+                let is_query = !is_insert && roll < cfg.insert_fraction + cfg.query_fraction;
+                let attempt = if batch == 1 {
                     // single-op frames: the baseline the batch grid is
                     // measured against
-                    if roll < cfg.insert_fraction {
-                        tally.inserts += 1;
+                    if is_insert {
                         let id = cfg.id_base + ((t as u64) << 32) + i as u64;
-                        client.send_insert(id, &rows)?
-                    } else if roll < cfg.insert_fraction + cfg.query_fraction {
-                        tally.queries += 1;
-                        client.send_query(&rows, cfg.k)?
+                        client.send_insert(id, &rows)
+                    } else if is_query {
+                        client.send_query(&rows, cfg.k)
                     } else {
-                        tally.hashes += 1;
-                        client.send_hash(&rows)?
+                        client.send_hash(&rows)
                     }
-                } else if roll < cfg.insert_fraction {
-                    tally.inserts += n;
+                } else if is_insert {
                     let ids: Vec<u64> = (0..n)
                         .map(|j| cfg.id_base + ((t as u64) << 32) + (i + j) as u64)
                         .collect();
-                    client.send_insert_batch(&ids, &rows, dim)?
-                } else if roll < cfg.insert_fraction + cfg.query_fraction {
-                    tally.queries += n;
-                    client.send_query_batch(&rows, dim, cfg.k)?
+                    client.send_insert_batch(&ids, &rows, dim)
+                } else if is_query {
+                    client.send_query_batch(&rows, dim, cfg.k)
                 } else {
-                    tally.hashes += n;
-                    client.send_hash_batch(&rows, dim)?
+                    client.send_hash_batch(&rows, dim)
                 };
-                tally.absorb(done, &mut lags);
-                i += n;
+                match attempt {
+                    Ok(done) => {
+                        // bill the op-kind counters only once the frame
+                        // is actually on the wire — a send that dies in
+                        // the reconnect path below retries the slot
+                        // without double-counting
+                        if is_insert {
+                            tally.inserts += n;
+                        } else if is_query {
+                            tally.queries += n;
+                        } else {
+                            tally.hashes += n;
+                        }
+                        tally.absorb(done, &mut lags);
+                        i += n;
+                    }
+                    Err(e) if cfg.reconnect && e.is_transient() => {
+                        // the socket died: every in-flight frame is an
+                        // orphan whose reply will never arrive. Count
+                        // them as errors, re-dial under backoff, and
+                        // retry this slot on the fresh connection.
+                        let orphaned = client.reconnect_with_backoff(&policy)?;
+                        tally.errors += orphaned;
+                        tally.reconnects += 1;
+                        lags.clear();
+                    }
+                    Err(e) => return Err(e),
+                }
             }
-            let drained = client.drain()?;
-            tally.absorb(drained, &mut lags);
+            match client.drain() {
+                Ok(drained) => tally.absorb(drained, &mut lags),
+                Err(e) if cfg.reconnect && e.is_transient() => {
+                    // the run is over; orphans from a dying socket are
+                    // errors, but there is nothing left to resend
+                    tally.errors += client.in_flight();
+                }
+                Err(e) => return Err(e),
+            }
             Ok(tally)
         }));
     }
@@ -1123,6 +1437,8 @@ pub fn run_load(
                 merged.hashes += t.hashes;
                 merged.errors += t.errors;
                 merged.sheds += t.sheds;
+                merged.degraded += t.degraded;
+                merged.reconnects += t.reconnects;
                 merged.latencies.extend(t.latencies);
                 merged.histogram.merge(&t.histogram);
             }
@@ -1156,6 +1472,8 @@ pub fn run_load(
         hashes: merged.hashes,
         errors: merged.errors,
         sheds: merged.sheds,
+        degraded: merged.degraded,
+        reconnects: merged.reconnects,
         target_rate_ops_s: cfg.rate.max(0.0),
         pipeline_depth: cfg.pipeline_depth.max(1),
         batch: cfg.batch.max(1),
@@ -1284,6 +1602,70 @@ mod tests {
     }
 
     #[test]
+    fn tally_counts_degraded_envelopes() {
+        let mut tally = ThreadTally::default();
+        let mut lags = HashMap::new();
+        let completions = vec![
+            // a degraded-wrapped batch: the envelope counts once, and
+            // each per-item degraded error inside it counts too
+            Completion {
+                req_id: 1,
+                latency: Duration::from_micros(10),
+                result: Ok(Reply::Degraded {
+                    missing: vec!["0000000000000000-7fffffffffffffff@127.0.0.1:1".into()],
+                    reply: Box::new(Reply::Batch(vec![
+                        Ok(Reply::Pong { indexed: 0 }),
+                        Err(protocol::degraded_msg("shard range unavailable")),
+                    ])),
+                }),
+            },
+            // a bare typed degraded error (single-op path)
+            Completion {
+                req_id: 2,
+                latency: Duration::from_micros(10),
+                result: Err(protocol::degraded_msg("shard range unavailable")),
+            },
+        ];
+        tally.absorb(completions, &mut lags);
+        assert_eq!(tally.degraded, 3, "envelope + inner item + bare error");
+        assert_eq!(tally.errors, 0, "degraded replies are not errors");
+        assert_eq!(tally.latencies.len(), 1, "the healthy inner item still lands");
+    }
+
+    #[test]
+    fn retry_policy_backoff_is_deterministic_and_capped() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.attempts, 5);
+        assert_eq!(p.backoff(0), Duration::from_millis(50));
+        assert_eq!(p.backoff(1), Duration::from_millis(100));
+        assert_eq!(p.backoff(2), Duration::from_millis(200));
+        assert_eq!(p.backoff(3), Duration::from_millis(400));
+        assert_eq!(p.backoff(4), Duration::from_millis(800));
+        assert_eq!(p.backoff(5), Duration::from_secs(1), "cap reached");
+        assert_eq!(p.backoff(60), Duration::from_secs(1), "huge attempt stays capped");
+        // cap is clamped up to base so the schedule never goes backwards
+        let q = RetryPolicy::new(3, 100, 10);
+        assert_eq!(q.backoff(0), Duration::from_millis(100));
+        assert_eq!(q.backoff(9), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn transient_error_classification() {
+        use std::io;
+        assert!(ClientError::Io(io::Error::new(io::ErrorKind::ConnectionReset, "rst"))
+            .is_transient());
+        assert!(ClientError::Protocol("server closed connection".into()).is_transient());
+        assert!(!ClientError::Protocol("reply for unknown req_id 3".into()).is_transient());
+        assert!(ClientError::Server(protocol::overloaded_msg("queue full")).is_transient());
+        assert!(
+            !ClientError::Server(protocol::degraded_msg("shard range unavailable"))
+                .is_transient(),
+            "a degraded reply is an answer, not a transport fault"
+        );
+        assert!(!ClientError::Server("bad dim".into()).is_transient());
+    }
+
+    #[test]
     fn report_json_shape() {
         let report = LoadReport {
             ops: 10,
@@ -1292,6 +1674,8 @@ mod tests {
             hashes: 2,
             errors: 0,
             sheds: 3,
+            degraded: 2,
+            reconnects: 1,
             target_rate_ops_s: 500.0,
             pipeline_depth: 4,
             batch: 16,
@@ -1310,6 +1694,8 @@ mod tests {
         assert_eq!(v.get("batch").unwrap().as_usize(), Some(16));
         assert_eq!(v.get("wire").unwrap().as_str(), Some("binary"));
         assert_eq!(v.get("sheds").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("degraded").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("reconnects").unwrap().as_usize(), Some(1));
         assert_eq!(
             v.get("target_rate_ops_s").unwrap().as_f64(),
             Some(500.0)

@@ -101,6 +101,10 @@
 //! {"op":"hash_batch",   "rows":[[f32…]…]}
 //! {"op":"insert_batch", "ids":[u64…], "rows":[[f32…]…]}
 //! {"op":"query_batch",  "rows":[[f32…]…], "k":usize}
+//! {"op":"migrate_pull",    "from_id":u64, "max":usize}   (inter-node)
+//! {"op":"entries_push",    "entries":[{"id":…, "emb":[f64…],
+//!                                      "sig":[i32…]}…]}  (inter-node)
+//! {"op":"entries_discard", "ids":[u64…]}                 (inter-node)
 //! ```
 //!
 //! The `*_batch` ops carry N rows in **one frame** (one syscall, one
@@ -165,7 +169,13 @@
 //! op 11 insert_batch  count:u32, dim:u32, ids:[u64; count],
 //!                     samples:[f32; count·dim]
 //! op 12 query_batch   count:u32, dim:u32, samples:[f32; count·dim], k:u64
-//! op 13 stats         detail:u8 (0 summary, 1 stages, 2 index, 3 slow)
+//! op 13 stats         detail:u8 (0 summary, 1 stages, 2 index, 3 slow,
+//!                                4 cluster)
+//! op 14 migrate_pull    from_id:u64, max:u64            (inter-node)
+//! op 15 entries_push    count:u32, then per entry id:u64,
+//!                       emb_len:u32, emb:[f64…],
+//!                       sig_len:u32, sig:[i32…]         (inter-node)
+//! op 16 entries_discard count:u32, ids:[u64; count]     (inter-node)
 //! ```
 //!
 //! Batch rows are contiguous (`row r` occupies samples
@@ -187,6 +197,47 @@
 //! or `len:u32, msg:[utf8; len]` (error), in request row order. A
 //! streamed batch continuation is `type:u8 = 12` + `more:u8` (1 = more
 //! parts follow) + `n:u32` + the same per-item encoding.
+//!
+//! ## Inter-node wire ops and the degraded envelope
+//!
+//! Three ops exist for node-to-node traffic inside a cluster (see
+//! [`crate::cluster`]); ordinary clients never need them, but they ride
+//! the same two wire formats as everything else, so a shard is just a
+//! server:
+//!
+//! * `migrate_pull` (op 14) streams one ordered chunk of the entry
+//!   store: the reply is `entries` (binary reply tag 14) — `done:u8`,
+//!   `count:u32`, then each entry as `id:u64`, length-prefixed `f64`
+//!   re-rank embedding, length-prefixed `i32` signature.
+//!   The cursor is stateless: `from_id` is **inclusive**,
+//!   the next pull passes `last_returned_id + 1`, so a retried pull
+//!   re-reads instead of skipping.
+//! * `entries_push` (op 15) ingests entries **by overwrite** — pushing
+//!   the same entry twice is idempotent, which is what makes migration
+//!   retries and the delta sweep safe. Ack is `ingested` (tag 15) with
+//!   the applied count.
+//! * `entries_discard` (op 16) drops ids if present (idempotent, acks
+//!   the number actually dropped) — the migration rollback primitive.
+//!
+//! The **degraded envelope** is how a router answers when some shards
+//! could not contribute. It wraps an otherwise-normal reply and names
+//! the missing key ranges:
+//!
+//! ```text
+//! {"ok":true, "req_id":…, "type":"degraded",
+//!  "missing":["lo-hi@addr", …], "result":{…inner reply…}}
+//! ```
+//!
+//! On the binary wire it is reply tag 13: `n:u32` missing labels
+//! (length-prefixed UTF-8), then the complete inner reply body. The
+//! wrapper is **top-level only** — an inner reply can never itself be
+//! degraded (decoders reject nesting), so one level of unwrapping
+//! always yields a plain reply. Item-level unavailability inside
+//! batches uses typed `degraded: …; retry with backoff` error strings
+//! instead (JSON adds `"code":"degraded"`, binary a trailing code byte
+//! `2`); [`protocol::error_is_degraded`] matches both. A degraded reply
+//! is an *answer*, not a transport fault — clients must not blindly
+//! retry it, the data that did arrive is valid.
 //!
 //! ## Sample validation
 //!
@@ -389,7 +440,7 @@ pub mod reactor;
 
 pub use client::{
     run_load, Client, ClientError, Completion, LatencyHistogram, LoadConfig, LoadReport,
-    PipelinedClient,
+    PipelinedClient, RetryPolicy,
 };
 pub use protocol::WireMode;
 #[cfg(target_os = "linux")]

@@ -35,7 +35,7 @@
 //! drift between runtimes; clients read reply frames one at a time with
 //! [`read_frame`].
 
-use crate::coordinator::{Op, Response, StatsDetail};
+use crate::coordinator::{EntryRecord, Op, Response, StatsDetail};
 use crate::json::{self, object, Value};
 use crate::search::Hit;
 
@@ -417,6 +417,10 @@ const OP_HASH_BATCH: u8 = 10;
 const OP_INSERT_BATCH: u8 = 11;
 const OP_QUERY_BATCH: u8 = 12;
 const OP_STATS: u8 = 13;
+// inter-node ops (shard-to-shard / router-to-shard migration plumbing)
+const OP_MIGRATE_PULL: u8 = 14;
+const OP_ENTRIES_PUSH: u8 = 15;
+const OP_ENTRIES_DISCARD: u8 = 16;
 
 // binary reply type tags
 const REPLY_SIGNATURE: u8 = 1;
@@ -431,6 +435,12 @@ const REPLY_SHUTTING_DOWN: u8 = 9;
 const REPLY_BATCH: u8 = 10;
 const REPLY_STATS: u8 = 11;
 const REPLY_BATCH_PART: u8 = 12;
+/// top-level-only wrapper: `missing` shard ranges + one inner reply —
+/// handled in [`decode_reply_binary`] (never inside a batch or another
+/// degraded wrapper, so hostile nesting cannot recurse the decoder)
+const REPLY_DEGRADED: u8 = 13;
+const REPLY_ENTRIES: u8 = 14;
+const REPLY_INGESTED: u8 = 15;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -440,6 +450,12 @@ const STATUS_ERR: u8 = 1;
 /// other error — and older decoders stop at the message — so the byte is
 /// purely additive.
 const ERR_CODE_OVERLOADED: u8 = 1;
+
+/// Trailing code byte of a `degraded` binary error envelope (a cluster
+/// request that failed entirely because its owning shard is down past
+/// the retry budget). Same additive discipline as
+/// [`ERR_CODE_OVERLOADED`].
+const ERR_CODE_DEGRADED: u8 = 2;
 
 /// Header flag: a `u64` `req_id` follows the flags byte.
 const FLAG_REQ_ID: u8 = 1;
@@ -514,6 +530,56 @@ fn batch_rows_json<'v>(
     Ok(rows.iter().map(f32_row))
 }
 
+/// The `entries` field of a JSON `entries_push` frame: a non-empty
+/// array of `{id, emb, sig}` records. Embedding values are validated
+/// finite at the wire — the same doctrine as sample rows — so a
+/// poisoned migration chunk is rejected before it can touch the store.
+fn entry_records_json(v: &Value, allow_empty: bool) -> Result<Vec<EntryRecord>, String> {
+    let entries = need(v, "entries")?
+        .as_array()
+        .ok_or("`entries` must be an array")?;
+    if entries.is_empty() && !allow_empty {
+        return Err("entries_push must carry at least one entry".into());
+    }
+    entries
+        .iter()
+        .enumerate()
+        .map(|(i, e)| -> Result<EntryRecord, String> {
+            let id = need(e, "id")?
+                .as_u64()
+                .ok_or_else(|| format!("entry[{i}]: `id` must be a u64"))?;
+            let emb = need(e, "emb")?
+                .as_array()
+                .ok_or_else(|| format!("entry[{i}]: `emb` must be an array"))?
+                .iter()
+                .map(|x| {
+                    let f = x
+                        .as_f64()
+                        .ok_or_else(|| format!("entry[{i}]: `emb` must contain numbers"))?;
+                    if !f.is_finite() {
+                        return Err(format!(
+                            "entry[{i}]: `emb` contains a non-finite value \
+                             (non-finite embeddings are rejected)"
+                        ));
+                    }
+                    Ok(f)
+                })
+                .collect::<Result<_, _>>()?;
+            let sig = need(e, "sig")?
+                .as_array()
+                .ok_or_else(|| format!("entry[{i}]: `sig` must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|f| f as i32)
+                        .ok_or_else(|| format!("entry[{i}]: `sig` must contain numbers"))
+                })
+                .collect::<Result<_, _>>()?;
+            Ok(EntryRecord { id, emb, sig })
+        })
+        .collect()
+}
+
 /// A rejected request frame. Carries the `req_id` recovered from the
 /// frame (when it parsed far enough to have one), so the error envelope
 /// can still correlate — a pipelined client must get a per-request
@@ -575,7 +641,7 @@ pub fn parse_request(line: &str) -> Result<Request, RequestError> {
                         StatsDetail::parse(d).ok_or_else(|| {
                             format!(
                                 "unknown stats detail `{d}` (expected summary, stages, \
-                                 index, or slow)"
+                                 index, slow, or cluster)"
                             )
                         })?
                     }
@@ -629,6 +695,26 @@ pub fn parse_request(line: &str) -> Result<Request, RequestError> {
                         .collect(),
                 )
             }
+            "migrate_pull" => RequestBody::Op(Op::MigratePull {
+                from_id: need(&v, "from_id")?
+                    .as_u64()
+                    .ok_or("`from_id` must be a u64")?,
+                max: need(&v, "max")?.as_usize().ok_or("`max` must be a usize")?,
+            }),
+            "entries_push" => RequestBody::Op(Op::EntriesPush {
+                entries: entry_records_json(&v, false)?,
+            }),
+            "entries_discard" => RequestBody::Op(Op::EntriesDiscard {
+                ids: need(&v, "ids")?
+                    .as_array()
+                    .ok_or("`ids` must be an array")?
+                    .iter()
+                    .map(|id| {
+                        id.as_u64()
+                            .ok_or_else(|| "`ids` must contain u64s".to_string())
+                    })
+                    .collect::<Result<_, _>>()?,
+            }),
             other => return Err(format!("unknown op `{other}`")),
         })
     })()
@@ -672,6 +758,11 @@ impl<'a> BinReader<'a> {
 
     fn u8(&mut self) -> Result<u8, String> {
         Ok(self.take(1)?[0])
+    }
+
+    /// The next byte without consuming it (`None` at the end).
+    fn peek_u8(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
     }
 
     fn u32(&mut self) -> Result<u32, String> {
@@ -778,6 +869,61 @@ impl<'a> BinReader<'a> {
             });
         }
         Ok(rows)
+    }
+
+    /// One migration entry record: `id:u64`, `emb_len:u32` + raw `f64`s
+    /// (checked finite), `sig_len:u32` + raw `i32`s — declared extents
+    /// checked against the remaining payload before any allocation is
+    /// sized from them.
+    fn entry_record(&mut self) -> Result<EntryRecord, String> {
+        let id = self.u64()?;
+        let emb_len = self.u32()? as usize;
+        if self.remaining() < emb_len.saturating_mul(8) {
+            return Err(format!(
+                "entry {id} declares {emb_len} embedding values but only {} \
+                 payload bytes remain",
+                self.remaining()
+            ));
+        }
+        let mut emb = Vec::with_capacity(emb_len);
+        for i in 0..emb_len {
+            let v = self.f64()?;
+            if !v.is_finite() {
+                return Err(format!(
+                    "entry {id}: emb[{i}] is not finite \
+                     (non-finite embeddings are rejected)"
+                ));
+            }
+            emb.push(v);
+        }
+        let sig_len = self.u32()? as usize;
+        if self.remaining() < sig_len.saturating_mul(4) {
+            return Err(format!(
+                "entry {id} declares {sig_len} signature values but only {} \
+                 payload bytes remain",
+                self.remaining()
+            ));
+        }
+        let mut sig = Vec::with_capacity(sig_len);
+        for _ in 0..sig_len {
+            sig.push(self.i32()?);
+        }
+        Ok(EntryRecord { id, emb, sig })
+    }
+}
+
+/// Append one migration entry record in the layout [`BinReader::entry_record`]
+/// decodes — shared by the `entries_push` request body and the `entries`
+/// reply body, so the two directions can never drift.
+fn put_entry_record(b: &mut Vec<u8>, e: &EntryRecord) {
+    b.extend_from_slice(&e.id.to_le_bytes());
+    b.extend_from_slice(&(e.emb.len() as u32).to_le_bytes());
+    for &v in &e.emb {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b.extend_from_slice(&(e.sig.len() as u32).to_le_bytes());
+    for &v in &e.sig {
+        b.extend_from_slice(&v.to_le_bytes());
     }
 }
 
@@ -900,6 +1046,43 @@ pub fn parse_request_binary(payload: &[u8]) -> Result<Request, RequestError> {
                         .collect(),
                 )
             }
+            OP_MIGRATE_PULL => {
+                let from_id = rd.u64()?;
+                let max = rd.u64()? as usize;
+                RequestBody::Op(Op::MigratePull { from_id, max })
+            }
+            OP_ENTRIES_PUSH => {
+                let count = rd.u32()? as usize;
+                if count == 0 {
+                    return Err("entries_push must carry at least one entry".into());
+                }
+                // each entry carries at least id + two length words
+                if rd.remaining() < count.saturating_mul(16) {
+                    return Err(format!(
+                        "entries_push declares {count} entries, frame truncated"
+                    ));
+                }
+                let mut entries = Vec::with_capacity(count);
+                for _ in 0..count {
+                    entries.push(rd.entry_record()?);
+                }
+                RequestBody::Op(Op::EntriesPush { entries })
+            }
+            OP_ENTRIES_DISCARD => {
+                let count = rd.u32()? as usize;
+                if rd.remaining() < count.saturating_mul(8) {
+                    return Err(format!(
+                        "entries_discard declares {count} ids but only {} \
+                         payload bytes remain",
+                        rd.remaining()
+                    ));
+                }
+                let mut ids = Vec::with_capacity(count);
+                for _ in 0..count {
+                    ids.push(rd.u64()?);
+                }
+                RequestBody::Op(Op::EntriesDiscard { ids })
+            }
             other => return Err(format!("unknown binary op tag {other}")),
         };
         if !rd.finished() {
@@ -957,6 +1140,10 @@ fn json_unrepresentable_id(resp: &Response) -> Option<u64> {
             .iter()
             .map(|h| h.id)
             .find(|&id| id > MAX_JSON_SAFE_INT),
+        Response::Entries { entries, .. } => entries
+            .iter()
+            .map(|e| e.id)
+            .find(|&id| id > MAX_JSON_SAFE_INT),
         _ => None,
     }
 }
@@ -1004,13 +1191,37 @@ pub fn encode_overloaded_frame(mode: WireMode, req_id: Option<u64>, scope: &str)
     encode_error_frame(mode, req_id, &overloaded_msg(scope))
 }
 
+/// Canonical message prefix of a cluster `degraded` failure: a request
+/// whose owning shard(s) stayed down past the router's retry budget.
+/// Kept stable so [`error_is_degraded`] classifies on both ends of the
+/// wire; the JSON envelope additionally carries `"code":"degraded"` and
+/// the binary envelope a trailing [`ERR_CODE_DEGRADED`] byte.
+const DEGRADED_PREFIX: &str = "degraded: ";
+
+/// Build the canonical `degraded` failure message for a request that
+/// could not be served at all (e.g. an insert whose owning shard is
+/// down): `what` names the unavailable shard range(s).
+pub fn degraded_msg(what: &str) -> String {
+    format!("{DEGRADED_PREFIX}{what}; retry with backoff")
+}
+
+/// Whether a server-side error message is a typed cluster `degraded`
+/// failure. Clients use this to separate down-shard unavailability
+/// (retryable once the shard heals) from real request errors.
+pub fn error_is_degraded(msg: &str) -> bool {
+    msg.starts_with(DEGRADED_PREFIX)
+}
+
 /// Encode an error response line (JSON). An `overloaded` shed
 /// additionally carries the machine-readable `"code":"overloaded"`
-/// field, so clients need not parse the message to classify it.
+/// field, and a cluster `degraded` failure `"code":"degraded"`, so
+/// clients need not parse the message to classify either.
 pub fn encode_error(req_id: Option<u64>, msg: &str) -> String {
     let mut fields: Vec<(&str, Value)> = vec![("ok", false.into()), ("error", msg.into())];
     if error_is_overloaded(msg) {
         fields.push(("code", "overloaded".into()));
+    } else if error_is_degraded(msg) {
+        fields.push(("code", "degraded".into()));
     }
     if let Some(id) = req_id {
         fields.push(("req_id", (id as usize).into()));
@@ -1070,8 +1281,36 @@ fn response_fields(resp: &Response) -> Vec<(&'static str, Value)> {
             ("type", "pong".into()),
             ("indexed", (*indexed as usize).into()),
         ],
+        Response::Entries { entries, done } => vec![
+            ("type", "entries".into()),
+            ("done", Value::Bool(*done)),
+            (
+                "entries",
+                Value::Array(entries.iter().map(entry_record_value).collect()),
+            ),
+        ],
+        Response::Ingested { count } => vec![
+            ("type", "ingested".into()),
+            ("count", (*count as usize).into()),
+        ],
         Response::Error(_) => unreachable!("error envelopes are encoded by the callers"),
     }
+}
+
+/// One migration entry record as a JSON object — the JSON twin of
+/// [`put_entry_record`].
+fn entry_record_value(e: &EntryRecord) -> Value {
+    object(vec![
+        ("id", (e.id as usize).into()),
+        (
+            "emb",
+            Value::Array(e.emb.iter().map(|&x| Value::Number(x)).collect()),
+        ),
+        (
+            "sig",
+            Value::Array(e.sig.iter().map(|&x| Value::Number(x as f64)).collect()),
+        ),
+    ])
 }
 
 /// Encode a coordinator response line (JSON).
@@ -1157,6 +1396,8 @@ pub fn encode_error_binary(req_id: Option<u64>, msg: &str) -> Vec<u8> {
         put_str(b, msg);
         if error_is_overloaded(msg) {
             b.push(ERR_CODE_OVERLOADED);
+        } else if error_is_degraded(msg) {
+            b.push(ERR_CODE_DEGRADED);
         }
     })
 }
@@ -1212,6 +1453,18 @@ fn put_reply_body(b: &mut Vec<u8>, resp: &Response) {
         Response::Pong { indexed } => {
             b.push(REPLY_PONG);
             b.extend_from_slice(&indexed.to_le_bytes());
+        }
+        Response::Entries { entries, done } => {
+            b.push(REPLY_ENTRIES);
+            b.push(*done as u8);
+            b.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+            for e in entries {
+                put_entry_record(b, e);
+            }
+        }
+        Response::Ingested { count } => {
+            b.push(REPLY_INGESTED);
+            b.extend_from_slice(&count.to_le_bytes());
         }
         Response::Error(_) => unreachable!("error envelopes are encoded by the callers"),
     }
@@ -1345,6 +1598,17 @@ fn response_payload_min(mode: WireMode, resp: &Response) -> usize {
         Response::Hits(h) => h.len() * per_elem(16, 22),
         // binary: 4 B/entry; JSON: >= one digit + comma
         Response::Signature(s) => s.as_slice().len() * per_elem(4, 2),
+        // binary: id + two length words + raw values; JSON: the shortest
+        // possible record shell + one char per value
+        Response::Entries { entries, .. } => entries
+            .iter()
+            .map(|e| {
+                per_elem(
+                    16 + e.emb.len() * 8 + e.sig.len() * 4,
+                    24 + 2 * e.emb.len() + 2 * e.sig.len(),
+                )
+            })
+            .sum(),
         _ => 0,
     }
 }
@@ -1565,6 +1829,141 @@ pub fn encode_shutting_down_frame(mode: WireMode, req_id: Option<u64>) -> Vec<u8
     }
 }
 
+// -------------------------------------------------- degraded envelopes
+
+/// The JSON degraded wrapper around an inner result object.
+fn encode_degraded_json(req_id: Option<u64>, missing: &[String], result: Value) -> String {
+    envelope(
+        req_id,
+        vec![
+            ("type", "degraded".into()),
+            (
+                "missing",
+                Value::Array(missing.iter().map(|m| m.as_str().into()).collect()),
+            ),
+            ("result", result),
+        ],
+    )
+}
+
+/// The binary degraded wrapper header: `type:u8 = degraded`, `count:u32`,
+/// then the missing range strings; the caller appends the inner body.
+fn put_degraded_header(b: &mut Vec<u8>, missing: &[String]) {
+    b.push(REPLY_DEGRADED);
+    b.extend_from_slice(&(missing.len() as u32).to_le_bytes());
+    for m in missing {
+        put_str(b, m);
+    }
+}
+
+/// Encode a cluster scatter-gather reply that is missing one or more
+/// shard ranges: the partial result from the live shards wrapped in a
+/// `degraded` envelope naming the gaps (`missing`, as `"lo-hi@addr"`
+/// strings). Partial data plus an explicit marker — never a silent gap.
+///
+/// Degraded envelopes never stream: an inner result past the frame cap
+/// degrades to a correlated "response too large" error (the router's
+/// merged results are bounded by `k`, so this is a hostile-input path,
+/// not a normal one).
+pub fn encode_degraded_response_frame(
+    mode: WireMode,
+    req_id: Option<u64>,
+    missing: &[String],
+    resp: &Response,
+) -> Vec<u8> {
+    if mode == WireMode::Json {
+        if let Some(id) = json_unrepresentable_id(resp) {
+            return encode_error_frame(mode, req_id, &json_id_error(id));
+        }
+    }
+    let frame = match mode {
+        WireMode::Json => json_frame(encode_degraded_json(
+            req_id,
+            missing,
+            object(response_fields(resp)),
+        )),
+        WireMode::Binary => bin_frame(|b| {
+            put_tag_and_req_id(b, STATUS_OK, req_id);
+            put_degraded_header(b, missing);
+            put_reply_body(b, resp);
+        }),
+    };
+    if framed_payload_len(mode, &frame) > MAX_FRAME_BYTES {
+        let payload = framed_payload_len(mode, &frame);
+        return encode_error_frame(
+            mode,
+            req_id,
+            &format!(
+                "response too large ({payload} bytes > {MAX_FRAME_BYTES}-byte frame cap); \
+                 request fewer results per op"
+            ),
+        );
+    }
+    frame
+}
+
+/// Encode a degraded batch reply: the per-item results from the live
+/// shards (row order preserved) wrapped in one `degraded` envelope. Same
+/// no-streaming rule as [`encode_degraded_response_frame`].
+pub fn encode_degraded_batch_frame(
+    mode: WireMode,
+    req_id: Option<u64>,
+    missing: &[String],
+    items: &[Response],
+) -> Vec<u8> {
+    // per-item JSON-representability guard, same discipline as
+    // [`encode_batch_response_frame`]: a full-width id fails only its slot
+    let safe: Vec<Response>;
+    let items = if mode == WireMode::Json
+        && items.iter().any(|r| json_unrepresentable_id(r).is_some())
+    {
+        safe = items
+            .iter()
+            .map(|r| match json_unrepresentable_id(r) {
+                Some(id) => Response::Error(json_id_error(id)),
+                None => r.clone(),
+            })
+            .collect();
+        &safe
+    } else {
+        items
+    };
+    let frame = match mode {
+        WireMode::Json => {
+            let results = items.iter().map(json_batch_item).collect();
+            json_frame(encode_degraded_json(
+                req_id,
+                missing,
+                object(vec![
+                    ("type", "batch".into()),
+                    ("results", Value::Array(results)),
+                ]),
+            ))
+        }
+        WireMode::Binary => bin_frame(|b| {
+            put_tag_and_req_id(b, STATUS_OK, req_id);
+            put_degraded_header(b, missing);
+            b.push(REPLY_BATCH);
+            b.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for resp in items {
+                put_batch_item(b, resp);
+            }
+        }),
+    };
+    if framed_payload_len(mode, &frame) > MAX_FRAME_BYTES {
+        let payload = framed_payload_len(mode, &frame);
+        return encode_error_frame(
+            mode,
+            req_id,
+            &format!(
+                "response too large ({payload} bytes > {MAX_FRAME_BYTES}-byte frame cap); \
+                 request fewer results per op"
+            ),
+        );
+    }
+    frame
+}
+
 // ---------------------------------------------------------------- client
 
 /// A decoded server reply (the client-side mirror of
@@ -1620,6 +2019,30 @@ pub enum Reply {
         /// this part's slice of the batch results, in row order
         items: Vec<Result<Reply, String>>,
     },
+    /// a cluster scatter-gather reply served while one or more owning
+    /// shard ranges were unavailable past the router's retry budget:
+    /// `missing` names them (`"lo-hi@addr"`), `reply` carries the
+    /// partial result assembled from the live shards — partial data
+    /// plus an explicit gap marker, never a silent gap
+    Degraded {
+        /// the unavailable shard ranges this reply is missing
+        missing: Vec<String>,
+        /// the partial result from the shards that answered
+        reply: Box<Reply>,
+    },
+    /// `migrate_pull` result: one ordered chunk of the source shard's
+    /// store, `done` when no entries above the requested cursor remain
+    Entries {
+        /// the pulled entry records, id-ascending
+        entries: Vec<EntryRecord>,
+        /// whether the pull reached the end of the source store
+        done: bool,
+    },
+    /// `entries_push` ack
+    Ingested {
+        /// entries applied (overwrite-idempotent)
+        count: u64,
+    },
 }
 
 /// Decode one JSON reply line into `(req_id, server result)`. The outer
@@ -1643,6 +2066,29 @@ pub fn decode_reply(line: &str) -> Result<(Option<u64>, Result<Reply, String>), 
             .unwrap_or("unspecified server error")
             .to_string();
         return Ok((req_id, Err(msg)));
+    }
+    // the degraded wrapper is a top-level-only envelope: handled here,
+    // unknown to [`decode_reply_value`], so a hostile nested wrapper
+    // (inside a batch item or another wrapper) cannot recurse the decoder
+    if v.get("type").and_then(Value::as_str) == Some("degraded") {
+        let missing = need(&v, "missing")?
+            .as_array()
+            .ok_or("`missing` must be an array")?
+            .iter()
+            .map(|m| {
+                m.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| "`missing` must contain strings".to_string())
+            })
+            .collect::<Result<_, _>>()?;
+        let inner = decode_reply_value(need(&v, "result")?, true)?;
+        return Ok((
+            req_id,
+            Ok(Reply::Degraded {
+                missing,
+                reply: Box::new(inner),
+            }),
+        ));
     }
     Ok((req_id, Ok(decode_reply_value(&v, true)?)))
 }
@@ -1716,6 +2162,16 @@ fn decode_reply_value(v: &Value, allow_batch: bool) -> Result<Reply, String> {
                 .collect::<Result<_, _>>()?,
         ),
         "shutting_down" => Reply::ShuttingDown,
+        "entries" => Reply::Entries {
+            done: match need(v, "done")? {
+                Value::Bool(b) => *b,
+                _ => return Err("`done` must be a bool".into()),
+            },
+            entries: entry_records_json(v, true)?,
+        },
+        "ingested" => Reply::Ingested {
+            count: need(v, "count")?.as_u64().ok_or("`count` must be a u64")?,
+        },
         "batch" if allow_batch => Reply::Batch(decode_batch_items_json(v)?),
         "batch_part" if allow_batch => Reply::BatchPart {
             more: match need(v, "more")? {
@@ -1792,7 +2248,29 @@ pub fn decode_reply_binary(
     if status != STATUS_OK {
         return Err(format!("unknown reply status {status}"));
     }
-    let reply = decode_reply_body(&mut rd, true)?;
+    // the degraded wrapper is a top-level-only envelope: handled here,
+    // unknown to [`decode_reply_body`], so a hostile nested wrapper
+    // (inside a batch item or another wrapper) cannot recurse the decoder
+    let reply = if rd.peek_u8() == Some(REPLY_DEGRADED) {
+        let _ = rd.u8()?;
+        let n = rd.u32()? as usize;
+        // each missing range carries at least its length word
+        if rd.remaining() < n.saturating_mul(4) {
+            return Err(format!(
+                "degraded reply declares {n} missing ranges, frame truncated"
+            ));
+        }
+        let mut missing = Vec::with_capacity(n);
+        for _ in 0..n {
+            missing.push(rd.str_()?.to_string());
+        }
+        Reply::Degraded {
+            missing,
+            reply: Box::new(decode_reply_body(&mut rd, true)?),
+        }
+    } else {
+        decode_reply_body(&mut rd, true)?
+    };
     if !rd.finished() {
         return Err(format!(
             "{} trailing bytes after the reply body",
@@ -1858,6 +2336,24 @@ fn decode_reply_body(rd: &mut BinReader<'_>, allow_batch: bool) -> Result<Reply,
             Reply::Points(p)
         }
         REPLY_SHUTTING_DOWN => Reply::ShuttingDown,
+        REPLY_ENTRIES => {
+            let done = match rd.u8()? {
+                0 => false,
+                1 => true,
+                other => return Err(format!("unknown entries done flag {other}")),
+            };
+            let n = rd.u32()? as usize;
+            // each entry carries at least id + two length words
+            if rd.remaining() < n.saturating_mul(16) {
+                return Err(format!("entries declare {n} records, frame truncated"));
+            }
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                entries.push(rd.entry_record()?);
+            }
+            Reply::Entries { entries, done }
+        }
+        REPLY_INGESTED => Reply::Ingested { count: rd.u64()? },
         REPLY_BATCH if allow_batch => Reply::Batch(decode_batch_items_binary(rd)?),
         REPLY_BATCH_PART if allow_batch => {
             let more = match rd.u8()? {
@@ -2020,6 +2516,42 @@ pub fn encode_query_batch(req_id: Option<u64>, rows: &[f32], dim: usize, k: usiz
     )
 }
 
+/// Encode a `migrate_pull` request line (JSON). `from_id` is inclusive;
+/// ids above 2^53 need the binary format (JSON number carrier).
+pub fn encode_migrate_pull(req_id: Option<u64>, from_id: u64, max: usize) -> String {
+    request_envelope(
+        req_id,
+        vec![
+            ("op", "migrate_pull".into()),
+            ("from_id", (from_id as usize).into()),
+            ("max", max.into()),
+        ],
+    )
+}
+
+/// Encode an `entries_push` request line (JSON). Ids ride JSON numbers,
+/// so the 2^53 precision limit applies (use binary for full-width ids).
+pub fn encode_entries_push(req_id: Option<u64>, entries: &[EntryRecord]) -> String {
+    request_envelope(
+        req_id,
+        vec![
+            ("op", "entries_push".into()),
+            (
+                "entries",
+                Value::Array(entries.iter().map(entry_record_value).collect()),
+            ),
+        ],
+    )
+}
+
+/// Encode an `entries_discard` request line (JSON).
+pub fn encode_entries_discard(req_id: Option<u64>, ids: &[u64]) -> String {
+    request_envelope(
+        req_id,
+        vec![("op", "entries_discard".into()), ("ids", ids_value(ids))],
+    )
+}
+
 // ---------------------------------------------- binary request builders
 
 /// Encode a `hash` request frame (binary).
@@ -2146,6 +2678,40 @@ pub fn encode_query_batch_binary(
     })
 }
 
+/// Encode a `migrate_pull` request frame (binary): op, `from_id:u64`
+/// (inclusive), `max:u64`. Full-width cursor — no 2^53 limit.
+pub fn encode_migrate_pull_binary(req_id: Option<u64>, from_id: u64, max: usize) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_MIGRATE_PULL, req_id);
+        b.extend_from_slice(&from_id.to_le_bytes());
+        b.extend_from_slice(&(max as u64).to_le_bytes());
+    })
+}
+
+/// Encode an `entries_push` request frame (binary): op, `count:u32`,
+/// then `count` entry records in the [`put_entry_record`] layout.
+pub fn encode_entries_push_binary(req_id: Option<u64>, entries: &[EntryRecord]) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_ENTRIES_PUSH, req_id);
+        b.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+        for e in entries {
+            put_entry_record(b, e);
+        }
+    })
+}
+
+/// Encode an `entries_discard` request frame (binary): op, `count:u32`,
+/// then `count` native `u64` ids.
+pub fn encode_entries_discard_binary(req_id: Option<u64>, ids: &[u64]) -> Vec<u8> {
+    bin_frame(|b| {
+        put_tag_and_req_id(b, OP_ENTRIES_DISCARD, req_id);
+        b.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+        for id in ids {
+            b.extend_from_slice(&id.to_le_bytes());
+        }
+    })
+}
+
 // --------------------------------------- mode-dispatch request builders
 
 /// Encode a `hash` request as complete wire bytes for `mode`.
@@ -2238,6 +2804,39 @@ pub fn encode_insert_batch_frame(
     match mode {
         WireMode::Json => json_frame(encode_insert_batch(req_id, ids, rows, dim)),
         WireMode::Binary => encode_insert_batch_binary(req_id, ids, rows, dim),
+    }
+}
+
+/// Encode a `migrate_pull` request as complete wire bytes for `mode`.
+pub fn encode_migrate_pull_frame(
+    mode: WireMode,
+    req_id: Option<u64>,
+    from_id: u64,
+    max: usize,
+) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_migrate_pull(req_id, from_id, max)),
+        WireMode::Binary => encode_migrate_pull_binary(req_id, from_id, max),
+    }
+}
+
+/// Encode an `entries_push` request as complete wire bytes for `mode`.
+pub fn encode_entries_push_frame(
+    mode: WireMode,
+    req_id: Option<u64>,
+    entries: &[EntryRecord],
+) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_entries_push(req_id, entries)),
+        WireMode::Binary => encode_entries_push_binary(req_id, entries),
+    }
+}
+
+/// Encode an `entries_discard` request as complete wire bytes for `mode`.
+pub fn encode_entries_discard_frame(mode: WireMode, req_id: Option<u64>, ids: &[u64]) -> Vec<u8> {
+    match mode {
+        WireMode::Json => json_frame(encode_entries_discard(req_id, ids)),
+        WireMode::Binary => encode_entries_discard_binary(req_id, ids),
     }
 }
 
@@ -2517,6 +3116,7 @@ mod tests {
             StatsDetail::Stages,
             StatsDetail::Index,
             StatsDetail::Slow,
+            StatsDetail::Cluster,
         ] {
             let line = encode_stats(Some(3), d);
             let req = parse_request(&line).unwrap();
@@ -2575,6 +3175,26 @@ mod tests {
                 ("detail", "summary".into()),
                 ("entries", 12.0.into()),
             ])),
+            Response::Entries {
+                entries: vec![
+                    EntryRecord {
+                        id: 3,
+                        emb: vec![0.25, -1.5],
+                        sig: vec![7, -2, 0],
+                    },
+                    EntryRecord {
+                        id: 9,
+                        emb: vec![2.0, 4.0],
+                        sig: vec![1, 1, 1],
+                    },
+                ],
+                done: false,
+            },
+            Response::Entries {
+                entries: Vec::new(),
+                done: true,
+            },
+            Response::Ingested { count: 17 },
         ]
     }
 
@@ -2602,6 +3222,19 @@ mod tests {
                 assert_eq!(bytes, *wb);
             }
             (Reply::Stats(v), Response::Stats(want)) => assert_eq!(&v, want),
+            (
+                Reply::Entries { entries, done },
+                Response::Entries {
+                    entries: we,
+                    done: wd,
+                },
+            ) => {
+                assert_eq!(&entries, we);
+                assert_eq!(done, *wd);
+            }
+            (Reply::Ingested { count }, Response::Ingested { count: want }) => {
+                assert_eq!(count, *want)
+            }
             (got, want) => panic!("mismatch: {got:?} vs {want:?}"),
         }
     }
@@ -3343,5 +3976,193 @@ mod tests {
         });
         let e = decode_reply_binary(&frame[4..]).unwrap_err();
         assert!(e.contains("unknown binary reply type"), "{e}");
+    }
+
+    #[test]
+    fn migration_requests_roundtrip_both_formats() {
+        let entries = vec![EntryRecord {
+            id: 42,
+            emb: vec![0.5, -2.25],
+            sig: vec![3, -1],
+        }];
+        // JSON
+        match parse_request(&encode_migrate_pull(Some(1), 100, 64))
+            .unwrap()
+            .body
+        {
+            RequestBody::Op(Op::MigratePull { from_id, max }) => {
+                assert_eq!(from_id, 100);
+                assert_eq!(max, 64);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match parse_request(&encode_entries_push(Some(2), &entries))
+            .unwrap()
+            .body
+        {
+            RequestBody::Op(Op::EntriesPush { entries: got }) => assert_eq!(got, entries),
+            other => panic!("unexpected {other:?}"),
+        }
+        match parse_request(&encode_entries_discard(None, &[7, 9]))
+            .unwrap()
+            .body
+        {
+            RequestBody::Op(Op::EntriesDiscard { ids }) => assert_eq!(ids, vec![7, 9]),
+            other => panic!("unexpected {other:?}"),
+        }
+        // binary — full-width ids survive
+        let big = (1u64 << 60) + 3;
+        let big_entries = vec![EntryRecord {
+            id: big,
+            emb: vec![1.0],
+            sig: vec![0],
+        }];
+        let frame = encode_migrate_pull_binary(Some(3), big, 128);
+        let consumed = split_binary_frame(&frame).unwrap().unwrap();
+        match parse_request_binary(&frame[4..consumed]).unwrap().body {
+            RequestBody::Op(Op::MigratePull { from_id, max }) => {
+                assert_eq!(from_id, big);
+                assert_eq!(max, 128);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let frame = encode_entries_push_binary(Some(4), &big_entries);
+        let consumed = split_binary_frame(&frame).unwrap().unwrap();
+        match parse_request_binary(&frame[4..consumed]).unwrap().body {
+            RequestBody::Op(Op::EntriesPush { entries: got }) => assert_eq!(got, big_entries),
+            other => panic!("unexpected {other:?}"),
+        }
+        let frame = encode_entries_discard_binary(None, &[big]);
+        let consumed = split_binary_frame(&frame).unwrap().unwrap();
+        match parse_request_binary(&frame[4..consumed]).unwrap().body {
+            RequestBody::Op(Op::EntriesDiscard { ids }) => assert_eq!(ids, vec![big]),
+            other => panic!("unexpected {other:?}"),
+        }
+        // an empty push is a frame-level error in both formats
+        assert!(parse_request(r#"{"op":"entries_push","entries":[]}"#).is_err());
+        let frame = encode_entries_push_binary(Some(5), &[]);
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(5));
+        assert!(e.msg.contains("at least one entry"), "{e}");
+        // non-finite embeddings are rejected at the wire
+        let bad = vec![EntryRecord {
+            id: 1,
+            emb: vec![f64::NAN],
+            sig: vec![0],
+        }];
+        let frame = encode_entries_push_binary(Some(6), &bad);
+        let e = parse_request_binary(&frame[4..]).unwrap_err();
+        assert_eq!(e.req_id, Some(6));
+        assert!(e.msg.contains("finite"), "{e}");
+    }
+
+    #[test]
+    fn degraded_envelopes_roundtrip_both_formats() {
+        let missing = vec!["0000000000000000-7fffffffffffffff@127.0.0.1:4801".to_string()];
+        let hits = Response::Hits(vec![Hit {
+            id: 4,
+            distance: 0.125,
+        }]);
+        // single-op wrapper, JSON
+        let frame = encode_degraded_response_frame(WireMode::Json, Some(7), &missing, &hits);
+        let (rid, decoded) = decode_reply(std::str::from_utf8(&frame).unwrap()).unwrap();
+        assert_eq!(rid, Some(7));
+        match decoded.unwrap() {
+            Reply::Degraded { missing: m, reply } => {
+                assert_eq!(m, missing);
+                check_reply(*reply, &hits);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // single-op wrapper, binary
+        let frame = encode_degraded_response_frame(WireMode::Binary, Some(8), &missing, &hits);
+        let consumed = split_binary_frame(&frame).unwrap().unwrap();
+        assert_eq!(consumed, frame.len());
+        let (rid, decoded) = decode_reply_binary(&frame[4..consumed]).unwrap();
+        assert_eq!(rid, Some(8));
+        match decoded.unwrap() {
+            Reply::Degraded { missing: m, reply } => {
+                assert_eq!(m, missing);
+                check_reply(*reply, &hits);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // batch wrapper: per-item results survive alongside the gap marker
+        let items = vec![
+            Response::Hits(vec![]),
+            Response::Error("row 1 failed".into()),
+        ];
+        for mode in [WireMode::Json, WireMode::Binary] {
+            let frame = encode_degraded_batch_frame(mode, Some(9), &missing, &items);
+            let (rid, decoded) = match mode {
+                WireMode::Json => {
+                    decode_reply(std::str::from_utf8(&frame).unwrap()).unwrap()
+                }
+                WireMode::Binary => decode_reply_binary(&frame[4..]).unwrap(),
+            };
+            assert_eq!(rid, Some(9));
+            match decoded.unwrap() {
+                Reply::Degraded { missing: m, reply } => {
+                    assert_eq!(m, missing);
+                    match *reply {
+                        Reply::Batch(got) => {
+                            assert_eq!(got.len(), 2);
+                            assert_eq!(got[0], Ok(Reply::Hits(vec![])));
+                            assert_eq!(got[1], Err("row 1 failed".into()));
+                        }
+                        other => panic!("unexpected inner {other:?}"),
+                    }
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn nested_degraded_wrappers_rejected() {
+        // degraded is top-level-only: a wrapper nested inside another
+        // wrapper's inner body must not recurse the decoder
+        let frame = bin_frame(|b| {
+            put_tag_and_req_id(b, STATUS_OK, Some(1));
+            b.push(REPLY_DEGRADED);
+            b.extend_from_slice(&0u32.to_le_bytes());
+            b.push(REPLY_DEGRADED);
+            b.extend_from_slice(&0u32.to_le_bytes());
+            b.push(REPLY_PONG);
+            b.extend_from_slice(&5u64.to_le_bytes());
+        });
+        let e = decode_reply_binary(&frame[4..]).unwrap_err();
+        assert!(e.contains("unknown binary reply type"), "{e}");
+        // …and inside a batch item
+        let frame = bin_frame(|b| {
+            put_tag_and_req_id(b, STATUS_OK, Some(2));
+            b.push(REPLY_BATCH);
+            b.extend_from_slice(&1u32.to_le_bytes());
+            b.push(STATUS_OK);
+            b.push(REPLY_DEGRADED);
+            b.extend_from_slice(&0u32.to_le_bytes());
+        });
+        let e = decode_reply_binary(&frame[4..]).unwrap_err();
+        assert!(e.contains("unknown binary reply type"), "{e}");
+    }
+
+    #[test]
+    fn degraded_errors_are_typed_in_both_formats() {
+        let msg = degraded_msg("shard range 0-7 at 127.0.0.1:4801 unavailable");
+        assert!(error_is_degraded(&msg));
+        assert!(!error_is_overloaded(&msg));
+        // JSON carries the machine-readable code field
+        let line = encode_error(Some(3), &msg);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("code").and_then(Value::as_str), Some("degraded"));
+        let (rid, decoded) = decode_reply(&line).unwrap();
+        assert_eq!(rid, Some(3));
+        assert!(error_is_degraded(&decoded.unwrap_err()));
+        // binary appends the additive code byte after the message
+        let frame = encode_error_binary(Some(4), &msg);
+        assert_eq!(*frame.last().unwrap(), ERR_CODE_DEGRADED);
+        let (rid, decoded) = decode_reply_binary(&frame[4..]).unwrap();
+        assert_eq!(rid, Some(4));
+        assert!(error_is_degraded(&decoded.unwrap_err()));
     }
 }

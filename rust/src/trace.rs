@@ -1,7 +1,13 @@
 //! Per-request tracing: a lightweight [`Span`] stamped at frame decode
-//! and carried through the whole job lifecycle (decode → queue wait →
-//! batch formation → kernel hash → index probe → rerank → encode →
-//! write-queued).
+//! and carried through the whole job lifecycle (decode → route → queue
+//! wait → batch formation → kernel hash → index probe → rerank →
+//! encode → write-queued).
+//!
+//! The `route` stage is stamped only by the cluster router
+//! ([`crate::cluster`]): it covers the scatter-gather round across
+//! shard nodes, including per-shard retries. Single-node spans leave it
+//! at 0, which the stage-partition invariant tolerates by design
+//! (skipped stages carry nothing).
 //!
 //! A span is a fixed-size array of per-stage nanosecond durations plus
 //! the `Instant` of the last stamp — `Copy`, no heap allocation, cheap
@@ -21,12 +27,13 @@ use crate::coordinator::metrics::RequestKind;
 use std::time::Instant;
 
 /// Number of pipeline stages a span records.
-pub const STAGE_COUNT: usize = 8;
+pub const STAGE_COUNT: usize = 9;
 
 /// Stage names as they appear in the `stats` op and the Prometheus
 /// rendering, in stamp order.
 pub const STAGE_NAMES: [&str; STAGE_COUNT] = [
     "decode",
+    "route",
     "queue_wait",
     "batch_form",
     "kernel",
@@ -42,20 +49,22 @@ pub const STAGE_NAMES: [&str; STAGE_COUNT] = [
 pub enum Stage {
     /// wire frame parsed into an op
     Decode = 0,
+    /// cluster scatter-gather round (router only; 0 on shard nodes)
+    Route = 1,
     /// admission + time spent queued before a worker picked the op up
-    QueueWait = 1,
+    QueueWait = 2,
     /// batch assembly: row collection + validation
-    BatchForm = 2,
+    BatchForm = 3,
     /// embed + hash kernel over the batch
-    Kernel = 3,
+    Kernel = 4,
     /// LSH table probing / index mutation
-    IndexProbe = 4,
+    IndexProbe = 5,
     /// exact re-ranking of candidates
-    Rerank = 5,
+    Rerank = 6,
     /// response serialization
-    Encode = 6,
+    Encode = 7,
     /// response bytes handed to the connection's write buffer
-    WriteQueued = 7,
+    WriteQueued = 8,
 }
 
 impl Stage {
@@ -209,6 +218,7 @@ mod tests {
     fn stage_names_cover_all_stages() {
         assert_eq!(STAGE_NAMES.len(), STAGE_COUNT);
         assert_eq!(Stage::Decode.name(), "decode");
+        assert_eq!(Stage::Route.name(), "route");
         assert_eq!(Stage::WriteQueued.name(), "write_queued");
         assert_eq!(SpanWire::Json.name(), "json");
         assert_eq!(SpanWire::Local.name(), "local");

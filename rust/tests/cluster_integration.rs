@@ -1,0 +1,455 @@
+//! Integration tests of the fault-tolerant cluster serving layer: boot
+//! N `serve --shard-range`-style shard servers plus a router on
+//! loopback, and hold the cluster to the single-node contract —
+//! identical answers on both wire formats, typed degraded envelopes
+//! (never hangs, never silent gaps) when a shard dies, heartbeat-driven
+//! down/readmit transitions, and migration that survives injected
+//! faults or rolls the target back.
+
+use funclsh::cluster::{
+    migrate, FaultKind, FaultRule, MigrationConfig, Router, RouterConfig, ShardSpec,
+};
+use funclsh::config::ServiceConfig;
+use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath, StatsDetail};
+use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
+use funclsh::functions::{Function1D, Sine};
+use funclsh::hashing::PStableHashBank;
+use funclsh::json::Value;
+use funclsh::lsh::{route_key, ShardRange};
+use funclsh::server::{Client, RetryPolicy, Server, WireMode};
+use funclsh::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn shard_config() -> ServiceConfig {
+    let mut cfg = ServiceConfig {
+        dim: 32,
+        k: 2,
+        l: 8,
+        workers: 2,
+        max_batch: 32,
+        max_wait_us: 100,
+        shards: 2,
+        ..Default::default()
+    };
+    cfg.server.port = 0; // ephemeral
+    cfg.server.max_conns = 8;
+    cfg
+}
+
+/// Deterministic hash path — every shard and the single-node twin get
+/// bit-identical embedder + bank, which is what makes cluster-vs-twin
+/// parity exact.
+fn make_path(cfg: &ServiceConfig) -> (Arc<dyn HashPath>, Vec<f64>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+    let points = emb.sample_points().to_vec();
+    let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+    (
+        Arc::new(CpuHashPath::new(Box::new(emb), Box::new(bank))),
+        points,
+    )
+}
+
+fn boot_shard(range: Option<ShardRange>) -> (Server, Vec<f64>) {
+    let mut cfg = shard_config();
+    cfg.shard_range = range;
+    let (path, points) = make_path(&cfg);
+    let svc = Arc::new(Coordinator::start(&cfg, path));
+    let server = Server::start(&cfg, svc, points.clone()).expect("bind loopback");
+    (server, points)
+}
+
+fn finish(server: Server) {
+    let (svc, _) = server.shutdown();
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+}
+
+fn sample_sine(phase: f64, points: &[f64]) -> Vec<f32> {
+    let f = Sine::paper(phase);
+    points.iter().map(|&x| f.eval(x) as f32).collect()
+}
+
+/// A 3-shard cluster: shard servers, their ranges, and a router with
+/// fast heartbeats (50 ms period, down after 2 misses, back after 2
+/// healthy rounds).
+struct TestCluster {
+    shards: Vec<Server>,
+    ranges: Vec<ShardRange>,
+    router: Router,
+    points: Vec<f64>,
+}
+
+fn boot_cluster(n: usize) -> TestCluster {
+    let ranges = ShardRange::partition(n);
+    let mut shards = Vec::new();
+    let mut points = Vec::new();
+    for range in &ranges {
+        let (server, p) = boot_shard(Some(*range));
+        points = p;
+        shards.push(server);
+    }
+    let rc = RouterConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        shards: shards
+            .iter()
+            .zip(&ranges)
+            .map(|(s, r)| ShardSpec {
+                addr: s.addr().to_string(),
+                range: *r,
+            })
+            .collect(),
+        heartbeat_interval: Duration::from_millis(50),
+        heartbeat_miss_threshold: 2,
+        readmit_after: 2,
+        request_timeout: Duration::from_millis(500),
+        retry: RetryPolicy::new(1, 10, 20),
+        max_conns: 8,
+    };
+    let router = Router::start(rc).expect("bind router");
+    TestCluster {
+        shards,
+        ranges,
+        router,
+        points,
+    }
+}
+
+/// Poll until `pred` holds or the deadline passes.
+fn wait_for(what: &str, timeout: Duration, mut pred: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !pred() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn corpus_phase(id: u64, corpus: u64) -> f64 {
+    2.0 * std::f64::consts::PI * (id as f64 / corpus as f64)
+}
+
+#[test]
+fn cluster_matches_single_node_twin_on_both_wires() {
+    let cluster = boot_cluster(3);
+    let (twin, twin_points) = boot_shard(None);
+    assert_eq!(twin_points, cluster.points);
+
+    let corpus = 90u64;
+    let mut router_client = Client::connect(cluster.router.addr()).unwrap();
+    let mut twin_client = Client::connect(twin.addr()).unwrap();
+    for id in 0..corpus {
+        let s = sample_sine(corpus_phase(id, corpus), &cluster.points);
+        router_client.insert(id, &s).unwrap();
+        twin_client.insert(id, &s).unwrap();
+    }
+
+    // the heartbeat carries each shard's entry count to the router; the
+    // router answers ping from the board's sum
+    wait_for("router ping to see the corpus", Duration::from_secs(5), || {
+        router_client.ping().unwrap() == corpus
+    });
+
+    // entries really are spread: every shard owns a non-trivial slice
+    for (i, range) in cluster.ranges.iter().enumerate() {
+        let owned = (0..corpus).filter(|&id| range.owns_id(id)).count();
+        assert!(owned > 0, "shard {i} owns no test ids — corpus too small");
+    }
+
+    // single + batch queries and hashes agree with the twin on BOTH
+    // wire formats
+    for wire in [WireMode::Json, WireMode::Binary] {
+        let mut rc = Client::connect_with(cluster.router.addr(), wire).unwrap();
+        let mut tc = Client::connect_with(twin.addr(), wire).unwrap();
+        let mut rows = Vec::new();
+        for q in 0..12 {
+            let samples = sample_sine(
+                2.0 * std::f64::consts::PI * ((q as f64 + 0.37) / 12.0),
+                &cluster.points,
+            );
+            let routed = rc.query(&samples, 5).unwrap();
+            let twin_hits = tc.query(&samples, 5).unwrap();
+            assert_eq!(routed, twin_hits, "wire {wire:?} query {q}");
+            assert_eq!(rc.hash(&samples).unwrap(), tc.hash(&samples).unwrap());
+            rows.extend_from_slice(&samples);
+        }
+        let dim = cluster.points.len();
+        let (routed_rows, missing) = rc.query_batch_degraded(&rows, dim, 5).unwrap();
+        assert!(missing.is_empty(), "healthy cluster degraded: {missing:?}");
+        let (twin_rows, _) = tc.query_batch_degraded(&rows, dim, 5).unwrap();
+        assert_eq!(routed_rows, twin_rows, "wire {wire:?} batch");
+    }
+
+    // removes route to the owner too
+    router_client.remove(17).unwrap();
+    twin_client.remove(17).unwrap();
+    let s = sample_sine(corpus_phase(17, corpus), &cluster.points);
+    assert_eq!(
+        router_client.query(&s, 3).unwrap(),
+        twin_client.query(&s, 3).unwrap()
+    );
+
+    // stats detail=cluster reports the topology
+    let stats = router_client.stats(StatsDetail::Cluster).unwrap();
+    assert_eq!(stats.get("role").and_then(|v| v.as_str()), Some("router"));
+    assert_eq!(stats.get("shards_alive").and_then(|v| v.as_usize()), Some(3));
+    let shards = stats.get("shards").and_then(|v| v.as_array()).unwrap();
+    assert_eq!(shards.len(), 3);
+    let prom = funclsh::coordinator::prometheus_render_cluster(&stats);
+    assert!(prom.contains("funclsh_cluster_shards_alive 3"), "{prom}");
+    assert!(prom.contains("funclsh_cluster_shard_alive{shard="), "{prom}");
+
+    cluster.router.shutdown();
+    for s in cluster.shards {
+        finish(s);
+    }
+    finish(twin);
+}
+
+#[test]
+fn killed_shard_degrades_replies_and_restart_readmits() {
+    let cluster = boot_cluster(3);
+    let corpus = 60u64;
+    let mut client = Client::connect_with(cluster.router.addr(), WireMode::Binary).unwrap();
+    for id in 0..corpus {
+        client
+            .insert(id, &sample_sine(corpus_phase(id, corpus), &cluster.points))
+            .unwrap();
+    }
+
+    // kill the middle shard (SIGKILL equivalent: the listener and every
+    // worker go away; in-process we get the same observable effect by
+    // shutting the server down hard)
+    let mut shards = cluster.shards;
+    let dead = shards.remove(1);
+    let dead_addr = dead.addr();
+    let dead_range = cluster.ranges[1];
+    let dead_label = format!("{dead_range}@{dead_addr}");
+    finish(dead);
+    let board = cluster.router.state();
+
+    wait_for("heartbeat to mark the shard down", Duration::from_secs(5), || {
+        !board.board().is_alive(1)
+    });
+
+    // scatter query: partial hits + typed degraded envelope naming the
+    // missing range — and it answers promptly (timeout budget, no hang)
+    let q = sample_sine(0.9, &cluster.points);
+    let t0 = Instant::now();
+    let (hits, missing) = client.query_degraded(&q, 5).unwrap();
+    assert!(t0.elapsed() < Duration::from_secs(5), "degraded query hung");
+    assert_eq!(missing, vec![dead_label.clone()]);
+    assert!(!hits.is_empty(), "live shards answered nothing");
+
+    // batch scatter: every row answers, envelope still names the gap
+    let dim = cluster.points.len();
+    let mut rows = Vec::new();
+    for i in 0..4 {
+        rows.extend_from_slice(&sample_sine(0.1 + i as f64 * 0.2, &cluster.points));
+    }
+    let (batch_rows, batch_missing) = client.query_batch_degraded(&rows, dim, 5).unwrap();
+    assert_eq!(batch_missing, vec![dead_label.clone()]);
+    assert_eq!(batch_rows.len(), 4);
+    for row in &batch_rows {
+        assert!(row.is_ok(), "row got {row:?}");
+    }
+
+    // a write owned by the dead range gets a typed degraded error, not
+    // a hang or a silent drop
+    let dead_id = (0..10_000u64)
+        .find(|&id| dead_range.contains(route_key(id)))
+        .expect("some id routes to the dead shard");
+    let err = client
+        .insert(
+            dead_id,
+            &sample_sine(corpus_phase(dead_id % corpus, corpus), &cluster.points),
+        )
+        .unwrap_err();
+    match err {
+        funclsh::server::ClientError::Server(msg) => {
+            assert!(msg.starts_with("degraded: "), "untyped error: {msg}");
+            assert!(msg.contains(&dead_label), "error names no range: {msg}");
+        }
+        other => panic!("expected a typed server error, got {other:?}"),
+    }
+
+    // restart a shard on the SAME address; after readmit_after healthy
+    // heartbeats the router re-admits it and the envelopes clear
+    let mut cfg = shard_config();
+    cfg.shard_range = Some(dead_range);
+    cfg.server.port = dead_addr.port();
+    let (path, _) = make_path(&cfg);
+    let svc = Arc::new(Coordinator::start(&cfg, path));
+    let reborn = Server::start(&cfg, svc, cluster.points.clone()).expect("rebind shard port");
+    wait_for("router to re-admit the shard", Duration::from_secs(5), || {
+        board.board().is_alive(1)
+    });
+    let (_, missing) = client.query_degraded(&q, 5).unwrap();
+    assert!(missing.is_empty(), "still degraded after readmit: {missing:?}");
+
+    // liveness counters made it to the cluster stats view
+    let stats = client.stats(StatsDetail::Cluster).unwrap();
+    let cells = stats.get("shards").and_then(|v| v.as_array()).unwrap();
+    let revived = cells
+        .iter()
+        .find(|c| c.get("addr").and_then(|v| v.as_str()) == Some(&dead_addr.to_string()))
+        .expect("restarted shard in stats");
+    assert!(
+        matches!(revived.get("alive"), Some(Value::Bool(true))),
+        "re-admitted shard not alive in stats"
+    );
+    assert!(revived
+        .get("heartbeats_missed")
+        .and_then(|v| v.as_f64())
+        .unwrap() >= 2.0);
+
+    cluster.router.shutdown();
+    finish(reborn);
+    for s in shards {
+        finish(s);
+    }
+}
+
+#[test]
+fn all_shards_down_is_a_typed_error_not_a_hang() {
+    let cluster = boot_cluster(2);
+    let mut client = Client::connect(cluster.router.addr()).unwrap();
+    let board = cluster.router.state();
+    for s in cluster.shards {
+        finish(s);
+    }
+    wait_for("both shards marked down", Duration::from_secs(5), || {
+        board.board().alive_set().is_empty()
+    });
+    let q = sample_sine(1.0, &cluster.points);
+    let t0 = Instant::now();
+    let err = client.query(&q, 3).unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    match err {
+        funclsh::server::ClientError::Server(msg) => {
+            assert!(msg.starts_with("degraded: "), "{msg}")
+        }
+        other => panic!("expected typed error, got {other:?}"),
+    }
+    cluster.router.shutdown();
+}
+
+#[test]
+fn injected_transport_faults_are_retried_and_counted() {
+    let cluster = boot_cluster(2);
+    let mut client = Client::connect(cluster.router.addr()).unwrap();
+    let corpus = 20u64;
+    for id in 0..corpus {
+        client
+            .insert(id, &sample_sine(corpus_phase(id, corpus), &cluster.points))
+            .unwrap();
+    }
+    let state = cluster.router.state();
+    // drop the first shard's next query leg: the scatter loses that leg
+    // (drop = deterministic one-shot failure), degrades, and the shard
+    // is NOT yet down (miss_threshold 2)
+    let addr0 = state.shards()[0].addr.clone();
+    state.faults().inject(FaultRule {
+        matches: format!("query@{addr0}"),
+        kind: FaultKind::Drop,
+        remaining: 1,
+    });
+    let q = sample_sine(0.5, &cluster.points);
+    let (_, missing) = client.query_degraded(&q, 5).unwrap();
+    assert_eq!(missing.len(), 1, "dropped leg must be named: {missing:?}");
+    assert!(missing[0].ends_with(&format!("@{addr0}")));
+    // next scatter is clean — the fault was one-shot
+    let (_, missing) = client.query_degraded(&q, 5).unwrap();
+    assert!(missing.is_empty(), "fault should have disarmed: {missing:?}");
+
+    let stats = client.stats(StatsDetail::Cluster).unwrap();
+    assert!(
+        stats.get("degraded_replies").and_then(|v| v.as_f64()).unwrap() >= 1.0,
+        "degraded reply not counted"
+    );
+
+    cluster.router.shutdown();
+    for s in cluster.shards {
+        finish(s);
+    }
+}
+
+#[test]
+fn migration_copies_everything_retries_faults_and_rolls_back_on_death() {
+    let (source, points) = boot_shard(None);
+    let (target, _) = boot_shard(None);
+    let corpus = 70u64;
+    let mut src_client = Client::connect_with(source.addr(), WireMode::Binary).unwrap();
+    for id in 0..corpus {
+        src_client
+            .insert(id, &sample_sine(corpus_phase(id, corpus), &points))
+            .unwrap();
+    }
+    let mc = MigrationConfig {
+        source: source.addr().to_string(),
+        target: target.addr().to_string(),
+        chunk: 16,
+        request_timeout: Duration::from_millis(500),
+        retry: RetryPolicy::new(3, 5, 20),
+    };
+
+    // --- leg 1: recoverable faults (dropped connections mid-transfer)
+    // are retried under backoff and the copy still completes exactly
+    std::env::set_var("FUNCLSH_TEST_MIGRATION_FAULT", "pull=drop*2, push=drop");
+    let report = migrate(&mc).expect("migration should survive dropped connections");
+    std::env::remove_var("FUNCLSH_TEST_MIGRATION_FAULT");
+    assert_eq!(report.snapshot_entries, corpus);
+    assert_eq!(report.delta_entries, corpus, "delta sweep re-walks everything");
+    assert!(report.retries >= 3, "injected drops unreported: {report:?}");
+
+    // no lost or duplicated ids: the stores are record-identical
+    let mut tgt_client = Client::connect_with(target.addr(), WireMode::Binary).unwrap();
+    let (src_entries, src_done) = src_client.migrate_pull(0, corpus as usize + 10).unwrap();
+    let (tgt_entries, tgt_done) = tgt_client.migrate_pull(0, corpus as usize + 10).unwrap();
+    assert!(src_done && tgt_done);
+    assert_eq!(src_entries.len(), corpus as usize);
+    assert_eq!(src_entries, tgt_entries, "stores differ after migration");
+    // idempotence: a second migration is a no-op copy, not duplication
+    let again = migrate(&mc).expect("re-migration is idempotent");
+    assert_eq!(again.snapshot_entries, corpus);
+    assert_eq!(tgt_client.ping().unwrap(), corpus);
+
+    // --- leg 2: unrecoverable source death mid-handoff rolls the
+    // target back to its pre-migration state (here: scrubbed of every
+    // id the failed run pushed)
+    let (victim, _) = boot_shard(None);
+    let mc2 = MigrationConfig {
+        source: source.addr().to_string(),
+        target: victim.addr().to_string(),
+        chunk: 16,
+        request_timeout: Duration::from_millis(300),
+        retry: RetryPolicy::new(0, 5, 5),
+    };
+    // first pull passes (delay:0 consumes the first match), the second
+    // black-holes — the deterministic stand-in for the source dying
+    // after one chunk crossed
+    std::env::set_var(
+        "FUNCLSH_TEST_MIGRATION_FAULT",
+        "pull@=delay:0, pull@=blackhole",
+    );
+    let err = migrate(&mc2).expect_err("source death must fail the migration");
+    std::env::remove_var("FUNCLSH_TEST_MIGRATION_FAULT");
+    assert!(err.contains("target rolled back"), "no rollback in: {err}");
+    let mut victim_client = Client::connect(victim.addr()).unwrap();
+    assert_eq!(
+        victim_client.ping().unwrap(),
+        0,
+        "target kept partial migrated state"
+    );
+    // the source is untouched and still serves queries — the router (or
+    // any client) keeps using it until an operator cuts over
+    assert_eq!(src_client.ping().unwrap(), corpus);
+    let q = sample_sine(0.4, &points);
+    assert!(!src_client.query(&q, 3).unwrap().is_empty());
+
+    finish(source);
+    finish(target);
+    finish(victim);
+}
