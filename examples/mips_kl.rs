@@ -60,9 +60,9 @@ fn main() {
         .map(|h| hq.iter().zip(h).filter(|(a, b)| a == b).count() as f64 / hq.len() as f64)
         .collect();
     let mut by_coll: Vec<usize> = (0..corpus.len()).collect();
-    by_coll.sort_by(|&i, &j| coll[j].partial_cmp(&coll[i]).unwrap());
+    by_coll.sort_by(|&i, &j| coll[j].total_cmp(&coll[i]));
     let mut by_kl: Vec<usize> = (0..corpus.len()).collect();
-    by_kl.sort_by(|&i, &j| kl(&corpus[i]).partial_cmp(&kl(&corpus[j])).unwrap());
+    by_kl.sort_by(|&i, &j| kl(&corpus[i]).total_cmp(&kl(&corpus[j])));
 
     println!("query density: N({:.2}, {:.2}²)\n", p.mu, p.sigma);
     println!("top-5 by hash collisions (MIPS) — with true KL:");

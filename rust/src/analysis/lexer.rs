@@ -1,0 +1,485 @@
+//! A lightweight Rust lexer for the in-repo linter.
+//!
+//! This is deliberately **not** a full Rust grammar: the rules in
+//! [`super::rules`] only need a token stream that is reliably aware of
+//! comments, string/char/byte literals (including raw strings), and
+//! lifetimes — so that a banned identifier inside `"a string"` or a
+//! `// comment` can never fire a rule, and so that every token carries
+//! the 1-based source line it starts on. Numbers are lexed loosely
+//! (`1e-5` may come out as several tokens); no rule cares.
+//!
+//! Invariants the rules rely on:
+//!
+//! * `Comment` tokens are kept in the stream (the `unsafe`/`SAFETY:`
+//!   rule reads them); use [`code_tokens`] for a comment-free view.
+//! * A raw string `r#"…"#` is one `Str` token regardless of content;
+//!   nested block comments terminate correctly.
+//! * `'a` lexes as `Lifetime`, `'a'` as `Char`, `b'\n'` as `Byte`.
+
+/// What kind of lexeme a [`Token`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (including raw identifiers `r#ident`).
+    Ident,
+    /// Numeric literal (lexed loosely; suffixes are folded in).
+    Number,
+    /// String literal: `"…"`, `r"…"`, `r#"…"#` (quotes included).
+    Str,
+    /// Byte-string literal: `b"…"`, `br#"…"#`.
+    ByteStr,
+    /// Character literal `'x'`.
+    Char,
+    /// Byte literal `b'x'`.
+    Byte,
+    /// Lifetime such as `'a` (also matches the loop-label form).
+    Lifetime,
+    /// Any single punctuation / operator character.
+    Punct,
+    /// Line (`//`) or block (`/* … */`) comment, doc or not.
+    Comment,
+}
+
+/// One lexeme with its source text and 1-based starting line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    /// Is this token the identifier `s`?
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokenKind::Ident && self.text == s
+    }
+
+    /// Is this token the punctuation character `c`?
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokenKind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+}
+
+/// Indices into the full token stream of every non-comment token, in
+/// order. Rules that match token runs use this view so comments can
+/// never split a pattern; the index maps back into the full stream.
+pub fn code_tokens(tokens: &[Token]) -> Vec<usize> {
+    (0..tokens.len())
+        .filter(|&i| tokens[i].kind != TokenKind::Comment)
+        .collect()
+}
+
+struct Cursor<'a> {
+    chars: &'a [char],
+    pos: usize,
+    line: u32,
+}
+
+impl<'a> Cursor<'a> {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `source`, keeping comments in the stream. Never fails: any
+/// byte sequence produces *some* token stream (unterminated literals
+/// run to end of input), which is the right behaviour for a linter that
+/// must not panic on the tree it scans.
+pub fn lex(source: &str) -> Vec<Token> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut cur = Cursor {
+        chars: &chars,
+        pos: 0,
+        line: 1,
+    };
+    let mut out = Vec::new();
+
+    while let Some(c) = cur.peek(0) {
+        let line = cur.line;
+        match c {
+            _ if c.is_whitespace() => {
+                cur.bump();
+            }
+            '/' if cur.peek(1) == Some('/') => {
+                let mut text = String::new();
+                while let Some(c) = cur.peek(0) {
+                    if c == '\n' {
+                        break;
+                    }
+                    text.push(c);
+                    cur.bump();
+                }
+                out.push(Token {
+                    kind: TokenKind::Comment,
+                    text,
+                    line,
+                });
+            }
+            '/' if cur.peek(1) == Some('*') => {
+                let mut text = String::new();
+                let mut depth = 0usize;
+                while let Some(c) = cur.peek(0) {
+                    if c == '/' && cur.peek(1) == Some('*') {
+                        depth += 1;
+                        text.push_str("/*");
+                        cur.bump();
+                        cur.bump();
+                    } else if c == '*' && cur.peek(1) == Some('/') {
+                        depth -= 1;
+                        text.push_str("*/");
+                        cur.bump();
+                        cur.bump();
+                        if depth == 0 {
+                            break;
+                        }
+                    } else {
+                        text.push(c);
+                        cur.bump();
+                    }
+                }
+                out.push(Token {
+                    kind: TokenKind::Comment,
+                    text,
+                    line,
+                });
+            }
+            'r' if raw_string_hashes(&cur, 1).is_some() => {
+                let text = lex_raw_string(&mut cur, 1);
+                out.push(Token {
+                    kind: TokenKind::Str,
+                    text,
+                    line,
+                });
+            }
+            'b' if cur.peek(1) == Some('r') && raw_string_hashes(&cur, 2).is_some() => {
+                let text = lex_raw_string(&mut cur, 2);
+                out.push(Token {
+                    kind: TokenKind::ByteStr,
+                    text,
+                    line,
+                });
+            }
+            'b' if cur.peek(1) == Some('"') => {
+                cur.bump();
+                let mut text = String::from("b");
+                lex_quoted(&mut cur, '"', &mut text);
+                out.push(Token {
+                    kind: TokenKind::ByteStr,
+                    text,
+                    line,
+                });
+            }
+            'b' if cur.peek(1) == Some('\'') => {
+                cur.bump();
+                let mut text = String::from("b");
+                lex_quoted(&mut cur, '\'', &mut text);
+                out.push(Token {
+                    kind: TokenKind::Byte,
+                    text,
+                    line,
+                });
+            }
+            'r' if cur.peek(1) == Some('#') && cur.peek(2).is_some_and(is_ident_start) => {
+                // raw identifier r#ident
+                let mut text = String::from("r#");
+                cur.bump();
+                cur.bump();
+                while let Some(c) = cur.peek(0) {
+                    if !is_ident_continue(c) {
+                        break;
+                    }
+                    text.push(c);
+                    cur.bump();
+                }
+                out.push(Token {
+                    kind: TokenKind::Ident,
+                    text,
+                    line,
+                });
+            }
+            '"' => {
+                let mut text = String::new();
+                lex_quoted(&mut cur, '"', &mut text);
+                out.push(Token {
+                    kind: TokenKind::Str,
+                    text,
+                    line,
+                });
+            }
+            '\'' => {
+                // Lifetime (`'a`) vs char literal (`'a'`, `'\n'`): a
+                // backslash or a closing quote two ahead means char.
+                let next = cur.peek(1);
+                let is_char = match next {
+                    Some('\\') => true,
+                    Some(c2) if is_ident_start(c2) => cur.peek(2) == Some('\''),
+                    _ => true,
+                };
+                if is_char {
+                    let mut text = String::new();
+                    lex_quoted(&mut cur, '\'', &mut text);
+                    out.push(Token {
+                        kind: TokenKind::Char,
+                        text,
+                        line,
+                    });
+                } else {
+                    let mut text = String::from("'");
+                    cur.bump();
+                    while let Some(c) = cur.peek(0) {
+                        if !is_ident_continue(c) {
+                            break;
+                        }
+                        text.push(c);
+                        cur.bump();
+                    }
+                    out.push(Token {
+                        kind: TokenKind::Lifetime,
+                        text,
+                        line,
+                    });
+                }
+            }
+            _ if is_ident_start(c) => {
+                let mut text = String::new();
+                while let Some(c) = cur.peek(0) {
+                    if !is_ident_continue(c) {
+                        break;
+                    }
+                    text.push(c);
+                    cur.bump();
+                }
+                out.push(Token {
+                    kind: TokenKind::Ident,
+                    text,
+                    line,
+                });
+            }
+            _ if c.is_ascii_digit() => {
+                let mut text = String::new();
+                while let Some(c) = cur.peek(0) {
+                    if is_ident_continue(c) {
+                        text.push(c);
+                        cur.bump();
+                    } else if c == '.' && cur.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+                        text.push(c);
+                        cur.bump();
+                    } else {
+                        break;
+                    }
+                }
+                out.push(Token {
+                    kind: TokenKind::Number,
+                    text,
+                    line,
+                });
+            }
+            _ => {
+                cur.bump();
+                out.push(Token {
+                    kind: TokenKind::Punct,
+                    text: c.to_string(),
+                    line,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// If the cursor at offset `skip` sits on `#*"` (zero or more hashes
+/// then a quote), return the hash count — i.e. `r`/`br` starts a raw
+/// string here.
+fn raw_string_hashes(cur: &Cursor<'_>, skip: usize) -> Option<usize> {
+    let mut n = 0;
+    loop {
+        match cur.peek(skip + n) {
+            Some('#') => n += 1,
+            Some('"') => return Some(n),
+            _ => return None,
+        }
+    }
+}
+
+/// Consume a raw string starting at the `r`/`b` (after `skip` prefix
+/// chars), returning its full text including delimiters.
+fn lex_raw_string(cur: &mut Cursor<'_>, skip: usize) -> String {
+    let mut text = String::new();
+    for _ in 0..skip {
+        text.push(cur.bump().unwrap_or('\0'));
+    }
+    let mut hashes = 0usize;
+    while cur.peek(0) == Some('#') {
+        hashes += 1;
+        text.push('#');
+        cur.bump();
+    }
+    text.push('"');
+    cur.bump(); // opening quote
+    while let Some(c) = cur.peek(0) {
+        if c == '"' {
+            let closes = (0..hashes).all(|i| cur.peek(1 + i) == Some('#'));
+            if closes {
+                text.push('"');
+                cur.bump();
+                for _ in 0..hashes {
+                    text.push('#');
+                    cur.bump();
+                }
+                break;
+            }
+        }
+        text.push(c);
+        cur.bump();
+    }
+    text
+}
+
+/// Consume a `\`-escaped literal delimited by `delim`, starting at the
+/// opening delimiter; appends the full text (delimiters included).
+fn lex_quoted(cur: &mut Cursor<'_>, delim: char, text: &mut String) {
+    text.push(delim);
+    cur.bump(); // opening delimiter
+    while let Some(c) = cur.peek(0) {
+        if c == '\\' {
+            text.push(c);
+            cur.bump();
+            if let Some(esc) = cur.peek(0) {
+                text.push(esc);
+                cur.bump();
+            }
+        } else if c == delim {
+            text.push(c);
+            cur.bump();
+            break;
+        } else {
+            text.push(c);
+            cur.bump();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokenKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let toks = kinds("let x = a.partial_cmp(&b);");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokenKind::Ident)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "x", "a", "partial_cmp", "b"]);
+        assert!(toks.contains(&(TokenKind::Punct, ".".to_string())));
+    }
+
+    #[test]
+    fn strings_hide_identifiers() {
+        let toks = kinds(r#"let s = "call .lock().unwrap() here";"#);
+        assert!(toks
+            .iter()
+            .all(|(k, t)| *k != TokenKind::Ident || t != "unwrap"));
+        assert_eq!(
+            toks.iter().filter(|(k, _)| *k == TokenKind::Str).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let toks = kinds(r####"let s = r#"quote " inside"#; let t = r"plain";"####);
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokenKind::Str)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(strs.len(), 2);
+        assert!(strs[0].contains("quote \" inside"));
+        assert_eq!(strs[1], "r\"plain\"");
+    }
+
+    #[test]
+    fn byte_strings_and_byte_literals() {
+        let toks = kinds("let m = b\"FBIN1\"; let n = b'\\n';");
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokenKind::ByteStr && t.contains("FBIN1")));
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokenKind::Byte && t == r"b'\n'"));
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let toks = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokenKind::Lifetime && t == "'a"));
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Char && t == "'x'"));
+    }
+
+    #[test]
+    fn comments_kept_and_nested_blocks_terminate() {
+        let src = "// line SAFETY: one\n/* outer /* inner */ still */ fn f() {}";
+        let toks = lex(src);
+        let comments: Vec<&Token> = toks
+            .iter()
+            .filter(|t| t.kind == TokenKind::Comment)
+            .collect();
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].text.contains("SAFETY:"));
+        assert!(comments[1].text.contains("inner"));
+        // the `fn` after the block comment is real code on line 2
+        let f = toks.iter().find(|t| t.is_ident("fn")).unwrap();
+        assert_eq!(f.line, 2);
+    }
+
+    #[test]
+    fn line_numbers_cross_multiline_strings() {
+        let src = "let a = \"one\ntwo\nthree\";\nlet b = 1;";
+        let toks = lex(src);
+        let b = toks.iter().find(|t| t.is_ident("b")).unwrap();
+        assert_eq!(b.line, 4);
+    }
+
+    #[test]
+    fn code_tokens_skips_comments() {
+        let toks = lex("a /* gap */ . b");
+        let code = code_tokens(&toks);
+        assert_eq!(code.len(), 3);
+        assert!(toks[code[0]].is_ident("a"));
+        assert!(toks[code[1]].is_punct('.'));
+        assert!(toks[code[2]].is_ident("b"));
+    }
+
+    #[test]
+    fn unterminated_literals_do_not_hang() {
+        for src in ["\"open", "r#\"open", "b\"open", "'", "/* open"] {
+            let _ = lex(src);
+        }
+    }
+}

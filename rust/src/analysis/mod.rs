@@ -1,0 +1,387 @@
+//! In-repo static analysis: `funclsh analyze`.
+//!
+//! A zero-dependency invariant linter for this repository's own source
+//! tree. A lightweight Rust lexer ([`lexer`]) produces a comment- and
+//! string-aware token stream (no full AST), and a registry of rules
+//! ([`rules`]) matches token runs against the invariants the PR history
+//! shows regressing repeatedly. The CLI (`funclsh analyze`) walks
+//! `src/` + `tests/`, prints `file:line` findings, and `--deny` makes
+//! them fatal for CI; a checked-in baseline file can grandfather
+//! existing hits (the repo keeps it empty).
+//!
+//! ## The rules, and the regression that motivated each
+//!
+//! | rule | invariant | history |
+//! |------|-----------|---------|
+//! | `frame-localization` | no frame-scan / length-prefix / negotiation logic outside `server/protocol.rs`; magic bytes via `protocol::write_magic`, lengths via `MAGIC_LEN`, caps via `MAX_FRAME_BYTES` | PR 5 unified three divergent frame-scan implementations into `protocol::Framer`; the rule was then enforced only by a hand-run `rg` |
+//! | `float-total-cmp` | never `.partial_cmp(..)` on floats — `f64::total_cmp` is total over NaN and bit-stable (the paper's reproducibility contract) | NaN `partial_cmp().unwrap()` panics were fixed in PR 4 and regressed again in PR 6 |
+//! | `mutex-poison` | no bare `.lock()/.read()/.write()/.wait(..)` + `.unwrap()` in library code — lock acquisition goes through [`crate::util::sync`], which recovers with `unwrap_or_else(PoisonError::into_inner)`; `#[cfg(test)]` code is exempt | PR 7 retrofitted poison recovery after a panicking worker wedged every later request |
+//! | `unsafe-safety` | `unsafe` only in `server/reactor.rs` and `runtime/pjrt_path.rs`, each use under a `// SAFETY:` comment | the raw-syscall epoll reactor (PR 6) is the only dense unsafe module and must stay quarantined |
+//! | `wire-tags` | `OP_*`/`REPLY_*`/`ERR_CODE_*` tags in `protocol.rs` are `u8`, unique, contiguous from 1 | PR 5/8 grew the FBIN1 op space; a duplicate or gap silently corrupts cross-version framing |
+//! | `print-discipline` | no `println!`/`eprintln!`/`dbg!`/`process::exit` outside `cli/`, `bench/`, `main.rs`, `util/log.rs` | PR 8 cluster nodes run headless; stray stdout corrupts newline-framed JSON |
+//!
+//! Rules are pure functions over one file's token stream, so each is
+//! unit-tested on fixture snippets (positive and negative, including
+//! banned tokens hidden in strings/raw strings/comments), and
+//! `tests/analysis_selfcheck.rs` asserts the repo's own tree passes
+//! with an empty baseline — the linter gates itself.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{all_rules, Rule, Violation};
+
+use crate::json::{object, Value};
+use rules::FileCtx;
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lint one file's source text under its repo-relative path (forward
+/// slashes). This is the seam the walker and the unit tests share.
+pub fn analyze_source(rel_path: &str, source: &str) -> Vec<Violation> {
+    let tokens = lexer::lex(source);
+    let ctx = FileCtx::new(rel_path, &tokens);
+    let mut out = Vec::new();
+    for rule in all_rules() {
+        rule.check(&ctx, &mut out);
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Collect every `.rs` file under `<root>/src` and `<root>/tests`,
+/// as (repo-relative path, absolute path), sorted for deterministic
+/// output.
+pub fn collect_files(root: &Path) -> io::Result<Vec<(String, PathBuf)>> {
+    let mut files = Vec::new();
+    for top in ["src", "tests"] {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            walk(&dir, root, &mut files)?;
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<(String, PathBuf)>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+/// Walk `<root>/src` + `<root>/tests` and lint every file. Returns
+/// (files scanned, raw violations) — baseline suppression is a
+/// separate step so `--write-baseline` can see the raw set.
+pub fn scan_tree(root: &Path) -> io::Result<(usize, Vec<Violation>)> {
+    let files = collect_files(root)?;
+    let mut violations = Vec::new();
+    for (rel, abs) in &files {
+        let bytes = std::fs::read(abs)?;
+        let source = String::from_utf8_lossy(&bytes);
+        violations.extend(analyze_source(rel, &source));
+    }
+    Ok((files.len(), violations))
+}
+
+/// Where `analyze` looks for the baseline when `--baseline` is not
+/// given.
+pub fn default_baseline_path(root: &Path) -> PathBuf {
+    root.join("ANALYZE_BASELINE.txt")
+}
+
+/// Grandfathered violations: up to `count` hits of `rule` in `path`
+/// are suppressed. The repo's checked-in baseline is kept empty; the
+/// mechanism exists so a future emergency can land with an explicit,
+/// reviewable debt record instead of a disabled linter.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Baseline {
+    entries: BTreeMap<(String, String), usize>,
+}
+
+impl Baseline {
+    /// Parse the `rule<ws>path<ws>count` line format (`#` comments and
+    /// blank lines ignored).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut entries = BTreeMap::new();
+        for (n, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            let [rule, path, count] = fields.as_slice() else {
+                return Err(format!("baseline line {}: want `rule path count`", n + 1));
+            };
+            let count: usize = count
+                .parse()
+                .map_err(|_| format!("baseline line {}: bad count `{count}`", n + 1))?;
+            *entries
+                .entry((rule.to_string(), path.to_string()))
+                .or_insert(0) += count;
+        }
+        Ok(Self { entries })
+    }
+
+    /// Render the baseline that would exactly suppress `violations`.
+    pub fn render_from(violations: &[Violation]) -> String {
+        let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for v in violations {
+            *counts.entry((v.rule.to_string(), v.path.clone())).or_insert(0) += 1;
+        }
+        let mut out = String::from(
+            "# funclsh analyze baseline — grandfathered violations, `rule path count`\n\
+             # per line. Regenerate with `funclsh analyze --write-baseline`; the goal\n\
+             # is for this file to stay empty.\n",
+        );
+        for ((rule, path), count) in &counts {
+            out.push_str(&format!("{rule}\t{path}\t{count}\n"));
+        }
+        out
+    }
+
+    /// True if no entries (nothing grandfathered).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The outcome of a scan after baseline suppression.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Number of `.rs` files lexed and checked.
+    pub files_scanned: usize,
+    /// Violations that survived the baseline (what `--deny` gates on).
+    pub violations: Vec<Violation>,
+    /// How many hits the baseline swallowed.
+    pub suppressed: usize,
+    /// Baseline entries that over-promise (fewer matches than their
+    /// count) — a sign the debt was paid and the entry should go.
+    pub stale_baseline: Vec<String>,
+}
+
+impl Report {
+    /// Build the report: scan results + baseline suppression.
+    pub fn new(files_scanned: usize, raw: Vec<Violation>, baseline: &Baseline) -> Self {
+        let mut remaining = baseline.entries.clone();
+        let mut violations = Vec::new();
+        let mut suppressed = 0usize;
+        for v in raw {
+            let key = (v.rule.to_string(), v.path.clone());
+            match remaining.get_mut(&key) {
+                Some(left) if *left > 0 => {
+                    *left -= 1;
+                    suppressed += 1;
+                }
+                _ => violations.push(v),
+            }
+        }
+        let stale_baseline = remaining
+            .iter()
+            .filter(|(_, left)| **left > 0)
+            .map(|((rule, path), left)| {
+                format!(
+                    "baseline entry `{rule} {path}` allows {left} more \
+                     hit(s) than exist — remove or shrink it"
+                )
+            })
+            .collect();
+        Self {
+            files_scanned,
+            violations,
+            suppressed,
+            stale_baseline,
+        }
+    }
+
+    /// Nothing survived the baseline: the tree upholds every invariant.
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable rendering (`file:line: [rule] message` plus a
+    /// one-line summary). The caller decides where it goes — this
+    /// module never prints.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!("{}:{}: [{}] {}\n", v.path, v.line, v.rule, v.message));
+        }
+        for s in &self.stale_baseline {
+            out.push_str(&format!("warning: {s}\n"));
+        }
+        out.push_str(&format!(
+            "analyze: {} file(s), {} violation(s){}\n",
+            self.files_scanned,
+            self.violations.len(),
+            if self.suppressed > 0 {
+                format!(", {} suppressed by baseline", self.suppressed)
+            } else {
+                String::new()
+            }
+        ));
+        out
+    }
+
+    /// Machine-readable rendering for `--json`.
+    pub fn render_json(&self) -> String {
+        object(vec![
+            ("files_scanned", Value::Number(self.files_scanned as f64)),
+            (
+                "violations",
+                Value::Array(
+                    self.violations
+                        .iter()
+                        .map(|v| {
+                            object(vec![
+                                ("rule", Value::String(v.rule.to_string())),
+                                ("path", Value::String(v.path.clone())),
+                                ("line", Value::Number(v.line as f64)),
+                                ("message", Value::String(v.message.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("suppressed", Value::Number(self.suppressed as f64)),
+            (
+                "stale_baseline",
+                Value::Array(
+                    self.stale_baseline
+                        .iter()
+                        .map(|s| Value::String(s.clone()))
+                        .collect(),
+                ),
+            ),
+            ("clean", Value::Bool(self.clean())),
+        ])
+        .to_json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analyze_source_runs_every_rule_and_sorts_by_line() {
+        let src = "pub fn f(m: &std::sync::Mutex<u32>) {\n\
+                   let g = m.lock().unwrap();\n\
+                   let o = 1.0f64.partial_cmp(&2.0);\n\
+                   println!(\"{g:?} {o:?}\");\n\
+                   }\n";
+        let v = analyze_source("src/lsh/mod.rs", src);
+        let rules: Vec<&str> = v.iter().map(|v| v.rule).collect();
+        assert_eq!(rules, ["mutex-poison", "float-total-cmp", "print-discipline"]);
+        assert_eq!(v.iter().map(|v| v.line).collect::<Vec<_>>(), [2, 3, 4]);
+        assert!(v.iter().all(|v| v.path == "src/lsh/mod.rs"));
+    }
+
+    #[test]
+    fn baseline_round_trips_through_render_and_parse() {
+        let violations = vec![
+            Violation {
+                rule: "float-total-cmp",
+                path: "src/a.rs".into(),
+                line: 3,
+                message: "m".into(),
+            },
+            Violation {
+                rule: "float-total-cmp",
+                path: "src/a.rs".into(),
+                line: 9,
+                message: "m".into(),
+            },
+            Violation {
+                rule: "mutex-poison",
+                path: "src/b.rs".into(),
+                line: 1,
+                message: "m".into(),
+            },
+        ];
+        let text = Baseline::render_from(&violations);
+        let parsed = Baseline::parse(&text).unwrap();
+        let report = Report::new(2, violations, &parsed);
+        assert!(report.clean());
+        assert_eq!(report.suppressed, 3);
+        assert!(report.stale_baseline.is_empty());
+    }
+
+    #[test]
+    fn baseline_suppresses_up_to_count_and_flags_stale_entries() {
+        let baseline = Baseline::parse(
+            "# comment\n\
+             float-total-cmp\tsrc/a.rs\t1\n\
+             unsafe-safety\tsrc/gone.rs\t2\n",
+        )
+        .unwrap();
+        let violations = vec![
+            Violation {
+                rule: "float-total-cmp",
+                path: "src/a.rs".into(),
+                line: 3,
+                message: "m".into(),
+            },
+            Violation {
+                rule: "float-total-cmp",
+                path: "src/a.rs".into(),
+                line: 9,
+                message: "m".into(),
+            },
+        ];
+        let report = Report::new(1, violations, &baseline);
+        assert_eq!(report.suppressed, 1);
+        assert_eq!(report.violations.len(), 1);
+        assert_eq!(report.violations[0].line, 9);
+        assert_eq!(report.stale_baseline.len(), 1);
+        assert!(report.stale_baseline[0].contains("src/gone.rs"));
+    }
+
+    #[test]
+    fn baseline_rejects_malformed_lines() {
+        assert!(Baseline::parse("too few fields\n").is_err());
+        assert!(Baseline::parse("rule path not-a-number\n").is_err());
+        assert!(Baseline::parse("\n# only comments\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn report_renders_text_and_json_with_positions() {
+        let violations = vec![Violation {
+            rule: "wire-tags",
+            path: "src/server/protocol.rs".into(),
+            line: 42,
+            message: "duplicate wire tag".into(),
+        }];
+        let report = Report::new(5, violations, &Baseline::default());
+        let text = report.render_text();
+        assert!(text.contains("src/server/protocol.rs:42: [wire-tags] duplicate wire tag"));
+        assert!(text.contains("5 file(s), 1 violation(s)"));
+        let json = crate::json::parse(&report.render_json()).unwrap();
+        assert_eq!(json.get("clean"), Some(&Value::Bool(false)));
+        let v = json.get("violations").and_then(|v| v.as_array()).unwrap();
+        assert_eq!(v[0].get("line").and_then(|l| l.as_u64()), Some(42));
+    }
+
+    #[test]
+    fn clean_report_is_clean() {
+        let report = Report::new(10, Vec::new(), &Baseline::default());
+        assert!(report.clean());
+        assert!(report.render_text().contains("0 violation(s)"));
+        let json = crate::json::parse(&report.render_json()).unwrap();
+        assert_eq!(json.get("clean"), Some(&Value::Bool(true)));
+    }
+}

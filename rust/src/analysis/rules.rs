@@ -1,0 +1,844 @@
+//! The rule registry: each repo invariant as a token-stream check.
+//!
+//! Every rule operates on the lexed token stream of one file (see
+//! [`super::lexer`]) plus its repo-relative path, and appends
+//! [`Violation`]s with exact file:line positions. Rules are pure
+//! functions — no I/O, no printing — so they are trivially unit-testable
+//! on fixture snippets and safe to run from tests over the repo's own
+//! tree.
+//!
+//! See the [module docs](super) for the list of rules and the PR
+//! regressions that motivated each one.
+
+use super::lexer::{code_tokens, Token, TokenKind};
+
+/// One finding: which rule fired, where, and why.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Stable rule identifier (used in baselines and `--json` output).
+    pub rule: &'static str,
+    /// Repo-relative path with forward slashes (e.g. `src/lsh/mod.rs`).
+    pub path: String,
+    /// 1-based line of the offending token.
+    pub line: u32,
+    /// Human-oriented explanation, including the fix.
+    pub message: String,
+}
+
+/// A registered rule.
+pub struct Rule {
+    /// Stable identifier, e.g. `float-total-cmp`.
+    pub id: &'static str,
+    /// One-line statement of the invariant.
+    pub summary: &'static str,
+    /// The PR history that motivated machine-enforcement.
+    pub origin: &'static str,
+    check: fn(&FileCtx<'_>, &mut Vec<Violation>),
+}
+
+impl Rule {
+    /// Run this rule over one lexed file.
+    pub fn check(&self, ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
+        (self.check)(ctx, out);
+    }
+}
+
+/// Everything a rule may look at for one file.
+pub struct FileCtx<'a> {
+    /// Repo-relative path, forward slashes (`src/...` or `tests/...`).
+    pub rel_path: &'a str,
+    /// The full token stream, comments included.
+    pub tokens: &'a [Token],
+    /// Indices of non-comment tokens (the pattern-matching view).
+    pub code: Vec<usize>,
+    /// Per-`code`-index flag: is this token inside a `#[cfg(test)]`
+    /// item (attribute through closing brace)?
+    pub in_test: Vec<bool>,
+}
+
+impl<'a> FileCtx<'a> {
+    /// Lex-independent constructor used by the runner and by tests.
+    pub fn new(rel_path: &'a str, tokens: &'a [Token]) -> Self {
+        let code = code_tokens(tokens);
+        let in_test = test_region_mask(tokens, &code);
+        Self {
+            rel_path,
+            tokens,
+            code,
+            in_test,
+        }
+    }
+
+    fn code_tok(&self, c: usize) -> &Token {
+        &self.tokens[self.code[c]]
+    }
+}
+
+/// The full registry, in reporting order.
+pub fn all_rules() -> &'static [Rule] {
+    &RULES
+}
+
+static RULES: [Rule; 6] = [
+    Rule {
+        id: "frame-localization",
+        summary: "wire framing (magic bytes, length prefixes, scan caps, negotiation) \
+                  lives only in server/protocol.rs; other server/cluster code goes \
+                  through Framer / write_magic / MAGIC_LEN / MAX_FRAME_BYTES",
+        origin: "PR 5 unified three frame-scan implementations into protocol::Framer \
+                 and the invariant was previously enforced only by a hand-run rg",
+        check: check_frame_localization,
+    },
+    Rule {
+        id: "float-total-cmp",
+        summary: "no .partial_cmp(..) on floats — use f64::total_cmp, which is total \
+                  over NaN and bit-stable",
+        origin: "NaN partial_cmp().unwrap() panics were fixed in PR 4 and regressed \
+                 again by PR 6",
+        check: check_float_total_cmp,
+    },
+    Rule {
+        id: "mutex-poison",
+        summary: "no bare .lock()/.read()/.write()/Condvar-wait .unwrap() in library \
+                  code; go through crate::util::sync, which recovers from poisoning \
+                  with .unwrap_or_else(std::sync::PoisonError::into_inner)",
+        origin: "PR 7 retrofitted poison recovery after a panicking worker wedged \
+                 every subsequent request behind a poisoned Mutex",
+        check: check_mutex_poison,
+    },
+    Rule {
+        id: "unsafe-safety",
+        summary: "every `unsafe` is preceded by a // SAFETY: comment and confined to \
+                  server/reactor.rs and runtime/pjrt_path.rs",
+        origin: "the raw-syscall epoll reactor (PR 6) is the repo's only dense unsafe \
+                 module and must stay that way",
+        check: check_unsafe_safety,
+    },
+    Rule {
+        id: "wire-tags",
+        summary: "binary wire tag constants (OP_*, REPLY_*, ERR_CODE_*) in \
+                  protocol.rs are u8, unique, and contiguous from 1",
+        origin: "PR 5/8 grew the FBIN1 op space; a duplicated or gapped tag would \
+                 silently corrupt cross-version framing",
+        check: check_wire_tags,
+    },
+    Rule {
+        id: "print-discipline",
+        summary: "no println!/eprintln!/print!/eprint!/dbg!/process::exit in library \
+                  code — only cli/, bench/, main.rs and util/log.rs talk to \
+                  stdio or end the process",
+        origin: "PR 8's cluster nodes run headless; stray prints corrupted \
+                 newline-framed JSON when stdout was redirected into the wire",
+        check: check_print_discipline,
+    },
+];
+
+// ------------------------------------------------------------ helpers
+
+/// Per-code-token mask of `#[cfg(test)]` regions (the attribute tokens
+/// themselves, any stacked attributes after it, and the annotated item
+/// through its closing brace or terminating semicolon).
+fn test_region_mask(tokens: &[Token], code: &[usize]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let tok = |c: usize| -> &Token { &tokens[code[c]] };
+    let mut c = 0;
+    while c < code.len() {
+        if tok(c).is_punct('#') && c + 1 < code.len() && tok(c + 1).is_punct('[') {
+            let (attr_end, is_test) = scan_attribute(tokens, code, c + 1);
+            if is_test {
+                let start = c;
+                let mut end = attr_end; // index just past the `]`
+                                        // skip stacked attributes after the cfg(test) one
+                while end + 1 < code.len() && tok(end).is_punct('#') && tok(end + 1).is_punct('[')
+                {
+                    end = scan_attribute(tokens, code, end + 1).0;
+                }
+                end = scan_item(tokens, code, end);
+                for m in mask.iter_mut().take(end.min(code.len())).skip(start) {
+                    *m = true;
+                }
+                c = end;
+                continue;
+            }
+            c = attr_end;
+            continue;
+        }
+        c += 1;
+    }
+    mask
+}
+
+/// Scan an attribute starting at its `[` code index; return the code
+/// index just past the matching `]` and whether it is a `cfg` attribute
+/// with a non-negated `test` predicate (so `#[cfg(test)]` and
+/// `#[cfg(all(test, not(miri)))]` match, `#[cfg(not(test))]` and
+/// `#[cfg_attr(..)]` do not).
+fn scan_attribute(tokens: &[Token], code: &[usize], open: usize) -> (usize, bool) {
+    let tok = |c: usize| -> &Token { &tokens[code[c]] };
+    let mut depth = 0usize;
+    let mut end = open;
+    while end < code.len() {
+        if tok(end).is_punct('[') {
+            depth += 1;
+        } else if tok(end).is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                end += 1;
+                break;
+            }
+        }
+        end += 1;
+    }
+    let body = &code[open..end];
+    let is_cfg = body
+        .iter()
+        .position(|&i| tokens[i].is_ident("cfg"))
+        // `cfg` must be the attribute head: `#[cfg(...)]`
+        .is_some_and(|p| p == 1);
+    let mut is_test = false;
+    if is_cfg {
+        for (j, &i) in body.iter().enumerate() {
+            if tokens[i].is_ident("test") {
+                let negated = j >= 2
+                    && tokens[body[j - 1]].is_punct('(')
+                    && tokens[body[j - 2]].is_ident("not");
+                if !negated {
+                    is_test = true;
+                }
+            }
+        }
+    }
+    (end, is_test)
+}
+
+/// Scan one item starting at code index `start` (just past the
+/// attributes): returns the code index just past the item's closing
+/// `}` — or past the `;` for brace-less items.
+fn scan_item(tokens: &[Token], code: &[usize], start: usize) -> usize {
+    let tok = |c: usize| -> &Token { &tokens[code[c]] };
+    let mut c = start;
+    let mut depth = 0usize;
+    while c < code.len() {
+        if tok(c).is_punct('{') {
+            depth += 1;
+        } else if tok(c).is_punct('}') {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return c + 1;
+            }
+        } else if tok(c).is_punct(';') && depth == 0 {
+            return c + 1;
+        }
+        c += 1;
+    }
+    c
+}
+
+fn violation(ctx: &FileCtx<'_>, rule: &'static str, line: u32, message: String) -> Violation {
+    Violation {
+        rule,
+        path: ctx.rel_path.to_string(),
+        line,
+        message,
+    }
+}
+
+// -------------------------------------------------------------- rules
+
+const FRAME_BANNED_IDENTS: [&str; 6] = [
+    "BINARY_MAGIC",
+    "MAX_LINE_BYTES",
+    "split_binary_frame",
+    "negotiate",
+    "from_le_bytes",
+    "to_le_bytes",
+];
+
+/// Rule 1: `src/server/**` and `src/cluster/**` (except `protocol.rs`
+/// itself) may not re-implement framing — no magic-byte constants, no
+/// little-endian length (de)serialisation, no newline byte literals,
+/// no references to the internal scan cap. Integration tests under
+/// `tests/` are out of scope on purpose: adversarial suites *must*
+/// hand-craft malformed wire bytes.
+fn check_frame_localization(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
+    let p = ctx.rel_path;
+    let in_scope = (p.starts_with("src/server/") || p.starts_with("src/cluster/"))
+        && !p.ends_with("protocol.rs");
+    if !in_scope {
+        return;
+    }
+    for &i in &ctx.code {
+        let t = &ctx.tokens[i];
+        match t.kind {
+            TokenKind::Ident if FRAME_BANNED_IDENTS.contains(&t.text.as_str()) => {
+                out.push(violation(
+                    ctx,
+                    "frame-localization",
+                    t.line,
+                    format!(
+                        "`{}` outside server/protocol.rs — framing is localized there; \
+                         use protocol::Framer / write_magic / MAGIC_LEN / MAX_FRAME_BYTES",
+                        t.text
+                    ),
+                ));
+            }
+            TokenKind::Str | TokenKind::ByteStr if t.text.contains("FBIN1") => {
+                out.push(violation(
+                    ctx,
+                    "frame-localization",
+                    t.line,
+                    "literal FBIN1 magic outside server/protocol.rs — \
+                     use protocol::write_magic"
+                        .to_string(),
+                ));
+            }
+            TokenKind::Byte if t.text == r"b'\n'" => {
+                out.push(violation(
+                    ctx,
+                    "frame-localization",
+                    t.line,
+                    "newline frame-delimiter byte outside server/protocol.rs — \
+                     use protocol::Framer for frame scanning"
+                        .to_string(),
+                ));
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Rule 2: `.partial_cmp(..)` is banned everywhere (library and tests);
+/// `f64::total_cmp` is total over NaN and bit-stable. The only allowed
+/// occurrence is *defining* `fn partial_cmp` in a `PartialOrd` impl.
+fn check_float_total_cmp(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
+    for (c, &i) in ctx.code.iter().enumerate() {
+        let t = &ctx.tokens[i];
+        if !t.is_ident("partial_cmp") {
+            continue;
+        }
+        if c > 0 && ctx.code_tok(c - 1).is_ident("fn") {
+            continue; // a PartialOrd impl defining the method
+        }
+        out.push(violation(
+            ctx,
+            "float-total-cmp",
+            t.line,
+            "call to partial_cmp — NaN makes it partial and .unwrap() panics; \
+             use f64::total_cmp (PR 4 and PR 6 both fixed this class)"
+                .to_string(),
+        ));
+    }
+}
+
+/// Rule 3: a poisoned lock must not take the process down with it.
+/// Flags `.lock().unwrap()`, empty-argument `.read().unwrap()` /
+/// `.write().unwrap()` (the `io::Read`/`io::Write` methods always take
+/// a buffer, so the empty call is unambiguously `RwLock`), and Condvar
+/// `.wait(..)`/`.wait_timeout(..)` followed by `.unwrap()`/`.expect(..)`.
+/// `#[cfg(test)]` code is exempt: there a poisoned lock means the test
+/// already panicked, and test-only types (e.g. the reactor's `Poller`)
+/// have fallible `wait` methods of their own.
+fn check_mutex_poison(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
+    let n = ctx.code.len();
+    for c in 0..n {
+        if ctx.in_test[c] || !ctx.code_tok(c).is_punct('.') || c + 1 >= n {
+            continue;
+        }
+        let m = ctx.code_tok(c + 1);
+        let after_call = if m.kind == TokenKind::Ident
+            && matches!(m.text.as_str(), "lock" | "read" | "write")
+            && c + 3 < n
+            && ctx.code_tok(c + 2).is_punct('(')
+            && ctx.code_tok(c + 3).is_punct(')')
+        {
+            Some(c + 4)
+        } else if m.kind == TokenKind::Ident
+            && matches!(m.text.as_str(), "wait" | "wait_timeout")
+            && c + 2 < n
+            && ctx.code_tok(c + 2).is_punct('(')
+        {
+            // balanced-paren scan; require at least one argument token
+            // so `Child::wait()` (no args) is not mistaken for Condvar
+            let mut depth = 0usize;
+            let mut end = None;
+            for j in c + 2..n {
+                if ctx.code_tok(j).is_punct('(') {
+                    depth += 1;
+                } else if ctx.code_tok(j).is_punct(')') {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = Some(j);
+                        break;
+                    }
+                }
+            }
+            match end {
+                Some(j) if j > c + 3 => Some(j + 1),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        let Some(u) = after_call else { continue };
+        if u + 1 < n
+            && ctx.code_tok(u).is_punct('.')
+            && (ctx.code_tok(u + 1).is_ident("unwrap") || ctx.code_tok(u + 1).is_ident("expect"))
+        {
+            out.push(violation(
+                ctx,
+                "mutex-poison",
+                m.line,
+                format!(
+                    "bare .{}(..).{}() — a poisoned lock would panic every later \
+                     caller; use crate::util::sync ({})",
+                    m.text,
+                    ctx.code_tok(u + 1).text,
+                    "poison recovery via unwrap_or_else(PoisonError::into_inner)"
+                ),
+            ));
+        }
+    }
+}
+
+const UNSAFE_WHITELIST: [&str; 2] = ["src/server/reactor.rs", "src/runtime/pjrt_path.rs"];
+
+/// How many lines above an `unsafe` token a `// SAFETY:` comment may
+/// sit and still count as covering it.
+const SAFETY_LOOKBACK_LINES: u32 = 8;
+
+/// Rule 4: `unsafe` stays quarantined in the two whitelisted modules,
+/// and every occurrence there carries a nearby `// SAFETY:` comment.
+fn check_unsafe_safety(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
+    for &i in &ctx.code {
+        let t = &ctx.tokens[i];
+        if !t.is_ident("unsafe") {
+            continue;
+        }
+        if !UNSAFE_WHITELIST.contains(&ctx.rel_path) {
+            out.push(violation(
+                ctx,
+                "unsafe-safety",
+                t.line,
+                format!(
+                    "unsafe outside the whitelist ({}) — keep raw-pointer/FFI code \
+                     quarantined in the reactor and the PJRT path",
+                    UNSAFE_WHITELIST.join(", ")
+                ),
+            ));
+            continue;
+        }
+        let lo = t.line.saturating_sub(SAFETY_LOOKBACK_LINES);
+        let covered = ctx.tokens.iter().any(|k| {
+            k.kind == TokenKind::Comment
+                && k.text.contains("SAFETY:")
+                && k.line >= lo
+                && k.line <= t.line
+        });
+        if !covered {
+            out.push(violation(
+                ctx,
+                "unsafe-safety",
+                t.line,
+                "unsafe without a // SAFETY: comment in the preceding 8 lines"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Rule 5: the binary wire's `OP_*` / `REPLY_*` / `ERR_CODE_*` tag
+/// constants in `protocol.rs` must be `u8`, mutually unique, and
+/// contiguous from 1 within each prefix — a gap or duplicate would
+/// silently corrupt cross-version framing. Firing requires the file to
+/// actually declare `OP_*` and `REPLY_*` tags: a refactor that renames
+/// them away is itself a violation.
+fn check_wire_tags(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
+    if ctx.rel_path != "src/server/protocol.rs" {
+        return;
+    }
+    let mut groups: [(&str, Vec<(u64, u32, String)>); 3] = [
+        ("OP_", Vec::new()),
+        ("REPLY_", Vec::new()),
+        ("ERR_CODE_", Vec::new()),
+    ];
+    let n = ctx.code.len();
+    for c in 0..n.saturating_sub(6) {
+        if !ctx.code_tok(c).is_ident("const") {
+            continue;
+        }
+        let name = ctx.code_tok(c + 1);
+        if name.kind != TokenKind::Ident {
+            continue;
+        }
+        let Some(group) = groups
+            .iter_mut()
+            .find(|(p, _)| name.text.starts_with(p))
+        else {
+            continue;
+        };
+        if !(ctx.code_tok(c + 2).is_punct(':')
+            && ctx.code_tok(c + 3).is_ident("u8")
+            && ctx.code_tok(c + 4).is_punct('=')
+            && ctx.code_tok(c + 6).is_punct(';'))
+        {
+            out.push(violation(
+                ctx,
+                "wire-tags",
+                name.line,
+                format!(
+                    "wire tag `{}` is not a simple `const {}: u8 = <int>;` declaration",
+                    name.text, name.text
+                ),
+            ));
+            continue;
+        }
+        let value = ctx.code_tok(c + 5);
+        match (value.kind == TokenKind::Number, value.text.parse::<u64>()) {
+            (true, Ok(v)) => group.1.push((v, name.line, name.text.clone())),
+            _ => out.push(violation(
+                ctx,
+                "wire-tags",
+                name.line,
+                format!("wire tag `{}` has a non-decimal-literal value", name.text),
+            )),
+        }
+    }
+    for (prefix, tags) in &groups {
+        if tags.is_empty() {
+            out.push(violation(
+                ctx,
+                "wire-tags",
+                1,
+                format!(
+                    "no `{prefix}*` tag constants found in protocol.rs — the wire-tag \
+                     audit has nothing to check (were they renamed?)"
+                ),
+            ));
+            continue;
+        }
+        let mut sorted = tags.clone();
+        sorted.sort_by_key(|(v, _, _)| *v);
+        for w in sorted.windows(2) {
+            if w[0].0 == w[1].0 {
+                out.push(violation(
+                    ctx,
+                    "wire-tags",
+                    w[1].1,
+                    format!(
+                        "duplicate wire tag value {}: `{}` and `{}`",
+                        w[1].0, w[0].2, w[1].2
+                    ),
+                ));
+            }
+        }
+        let max = sorted.last().map(|(v, _, _)| *v).unwrap_or(0);
+        if sorted.first().map(|(v, _, _)| *v) != Some(1) || max != sorted.len() as u64 {
+            // only meaningful when there are no duplicates; report once
+            let values: Vec<String> = sorted.iter().map(|(v, _, _)| v.to_string()).collect();
+            out.push(violation(
+                ctx,
+                "wire-tags",
+                sorted[0].1,
+                format!(
+                    "`{prefix}*` tags are not contiguous from 1: [{}]",
+                    values.join(", ")
+                ),
+            ));
+        }
+    }
+}
+
+const PRINT_WHITELIST_PREFIXES: [&str; 2] = ["src/cli/", "src/bench/"];
+const PRINT_WHITELIST_FILES: [&str; 2] = ["src/main.rs", "src/util/log.rs"];
+const PRINT_MACROS: [&str; 5] = ["println", "eprintln", "print", "eprint", "dbg"];
+
+/// Rule 6: library code never talks to stdio or ends the process —
+/// headless cluster nodes redirect stdout into the wire, so a stray
+/// print corrupts newline-framed JSON. Diagnostics go through
+/// `util::log::warn`; only `cli/`, `bench/`, `main.rs` and the log
+/// choke point itself are exempt. `#[cfg(test)]` code may print.
+fn check_print_discipline(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
+    let p = ctx.rel_path;
+    if !p.starts_with("src/")
+        || PRINT_WHITELIST_PREFIXES.iter().any(|w| p.starts_with(w))
+        || PRINT_WHITELIST_FILES.contains(&p)
+    {
+        return;
+    }
+    let n = ctx.code.len();
+    for c in 0..n {
+        if ctx.in_test[c] {
+            continue;
+        }
+        let t = ctx.code_tok(c);
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        if PRINT_MACROS.contains(&t.text.as_str())
+            && c + 1 < n
+            && ctx.code_tok(c + 1).is_punct('!')
+        {
+            out.push(violation(
+                ctx,
+                "print-discipline",
+                t.line,
+                format!(
+                    "{}! in library code — route diagnostics through \
+                     crate::util::log::warn (stdout may be a wire)",
+                    t.text
+                ),
+            ));
+        }
+        if t.text == "exit"
+            && c >= 3
+            && ctx.code_tok(c - 1).is_punct(':')
+            && ctx.code_tok(c - 2).is_punct(':')
+            && ctx.code_tok(c - 3).is_ident("process")
+        {
+            out.push(violation(
+                ctx,
+                "print-discipline",
+                t.line,
+                "process::exit in library code — return an error and let main decide"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn run_rule(id: &str, rel_path: &str, src: &str) -> Vec<Violation> {
+        let tokens = lex(src);
+        let ctx = FileCtx::new(rel_path, &tokens);
+        let rule = all_rules().iter().find(|r| r.id == id).expect("known rule");
+        let mut out = Vec::new();
+        rule.check(&ctx, &mut out);
+        out
+    }
+
+    // ---------------------------------------------- frame-localization
+
+    #[test]
+    fn frame_rule_flags_magic_and_le_bytes_in_server_scope() {
+        let src = "let m = BINARY_MAGIC;\nlet n = u32::from_le_bytes(b);\n";
+        let v = run_rule("frame-localization", "src/server/client.rs", src);
+        assert_eq!(v.len(), 2);
+        assert_eq!((v[0].path.as_str(), v[0].line), ("src/server/client.rs", 1));
+        assert_eq!(v[1].line, 2);
+    }
+
+    #[test]
+    fn frame_rule_flags_fbin1_literal_and_newline_byte() {
+        let src = "w.write_all(b\"FBIN1\")?;\nif b == b'\\n' { split(); }\n";
+        let v = run_rule("frame-localization", "src/cluster/router.rs", src);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].line, 1);
+        assert_eq!(v[1].line, 2);
+    }
+
+    #[test]
+    fn frame_rule_ignores_protocol_rs_other_modules_and_comments() {
+        let src = "let m = BINARY_MAGIC; // BINARY_MAGIC in a comment is fine elsewhere\n";
+        assert!(run_rule("frame-localization", "src/server/protocol.rs", src).is_empty());
+        assert!(run_rule("frame-localization", "src/lsh/shard.rs", src).is_empty());
+        let comment_only = "// uses BINARY_MAGIC and b'\\n' only in prose\nlet x = 1;\n";
+        assert!(run_rule("frame-localization", "src/server/mod.rs", comment_only).is_empty());
+    }
+
+    #[test]
+    fn frame_rule_allows_negotiated_method_and_public_cap() {
+        let src = "if let Some(m) = framer.negotiated() { cap(protocol::MAX_FRAME_BYTES); }\n";
+        assert!(run_rule("frame-localization", "src/server/event_loop.rs", src).is_empty());
+    }
+
+    // ------------------------------------------------- float-total-cmp
+
+    #[test]
+    fn total_cmp_rule_flags_calls_everywhere_with_position() {
+        let src = "fn f(xs: &mut [f64]) {\n    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let v = run_rule("float-total-cmp", "src/search/mod.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 2);
+        let in_tests_dir = run_rule("float-total-cmp", "tests/properties.rs", src);
+        assert_eq!(in_tests_dir.len(), 1);
+    }
+
+    #[test]
+    fn total_cmp_rule_skips_definitions_strings_and_comments() {
+        let src = "impl PartialOrd for T {\n\
+                   fn partial_cmp(&self, o: &Self) -> Option<O> { Some(self.cmp(o)) }\n\
+                   }\n\
+                   // partial_cmp in a comment\n\
+                   let s = \"partial_cmp in a string\";\n";
+        assert!(run_rule("float-total-cmp", "src/wasserstein/discrete.rs", src).is_empty());
+    }
+
+    // ---------------------------------------------------- mutex-poison
+
+    #[test]
+    fn poison_rule_flags_lock_rwlock_and_condvar_unwraps() {
+        let src = "let a = m.lock().unwrap();\n\
+                   let b = rw.read().unwrap();\n\
+                   let c = rw.write().expect(\"w\");\n\
+                   let g = cv.wait(g).unwrap();\n\
+                   let (g, t) = cv.wait_timeout(g, d).unwrap();\n";
+        let v = run_rule("mutex-poison", "src/coordinator/batcher.rs", src);
+        assert_eq!(v.iter().map(|v| v.line).collect::<Vec<_>>(), [1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn poison_rule_allows_recovery_io_read_write_and_child_wait() {
+        let src = "let a = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n\
+                   let b = crate::util::sync::lock(&m);\n\
+                   let n = file.read(&mut buf).unwrap();\n\
+                   sock.write(&buf[..n]).unwrap();\n\
+                   let status = child.wait().unwrap();\n";
+        assert!(run_rule("mutex-poison", "src/server/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn poison_rule_exempts_cfg_test_regions() {
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                   fn t() {\n\
+                   let g = m.lock().unwrap();\n\
+                   let r = poller.wait(timeout).unwrap();\n\
+                   }\n\
+                   }\n";
+        assert!(run_rule("mutex-poison", "src/server/reactor.rs", src).is_empty());
+        let lib = "fn f() { let g = m.lock().unwrap(); }\n";
+        assert_eq!(run_rule("mutex-poison", "src/server/reactor.rs", lib).len(), 1);
+    }
+
+    // --------------------------------------------------- unsafe-safety
+
+    #[test]
+    fn unsafe_rule_enforces_whitelist() {
+        let src = "let p = unsafe { *ptr };\n";
+        let v = run_rule("unsafe-safety", "src/lsh/mod.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 1);
+        assert!(v[0].message.contains("whitelist"));
+    }
+
+    #[test]
+    fn unsafe_rule_requires_nearby_safety_comment() {
+        let bare = "fn f() { unsafe { syscall() }; }\n";
+        let v = run_rule("unsafe-safety", "src/server/reactor.rs", bare);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("SAFETY:"));
+        let covered = "// SAFETY: fd is open for the lifetime of self\n\
+                       fn f() { unsafe { syscall() }; }\n";
+        assert!(run_rule("unsafe-safety", "src/server/reactor.rs", covered).is_empty());
+        let far = format!(
+            "// SAFETY: too far away\n{}fn f() {{ unsafe {{ syscall() }}; }}\n",
+            "\n".repeat(12)
+        );
+        assert_eq!(run_rule("unsafe-safety", "src/server/reactor.rs", &far).len(), 1);
+    }
+
+    #[test]
+    fn unsafe_rule_ignores_prose_mentions() {
+        let src = "// this API is not unsafe, just sharp\nlet s = \"unsafe\";\n";
+        assert!(run_rule("unsafe-safety", "src/json/mod.rs", src).is_empty());
+    }
+
+    // ------------------------------------------------------- wire-tags
+
+    #[test]
+    fn wire_tags_accept_unique_contiguous_groups() {
+        let src = "const OP_A: u8 = 1;\n\
+                   const OP_B: u8 = 2;\n\
+                   const REPLY_A: u8 = 1;\n\
+                   const ERR_CODE_X: u8 = 1;\n";
+        assert!(run_rule("wire-tags", "src/server/protocol.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wire_tags_flag_duplicates_and_gaps_with_lines() {
+        let dup = "const OP_A: u8 = 1;\n\
+                   const OP_B: u8 = 1;\n\
+                   const REPLY_A: u8 = 1;\n\
+                   const ERR_CODE_X: u8 = 1;\n";
+        let v = run_rule("wire-tags", "src/server/protocol.rs", dup);
+        assert!(v.iter().any(|v| v.line == 2 && v.message.contains("duplicate")));
+        let gap = "const OP_A: u8 = 1;\n\
+                   const OP_B: u8 = 3;\n\
+                   const REPLY_A: u8 = 1;\n\
+                   const ERR_CODE_X: u8 = 1;\n";
+        let v = run_rule("wire-tags", "src/server/protocol.rs", gap);
+        assert!(v.iter().any(|v| v.message.contains("not contiguous")));
+    }
+
+    #[test]
+    fn wire_tags_flag_missing_groups_and_wrong_types() {
+        let none = "const SOMETHING_ELSE: u8 = 1;\n";
+        let v = run_rule("wire-tags", "src/server/protocol.rs", none);
+        assert_eq!(v.len(), 3); // OP_, REPLY_, ERR_CODE_ all absent
+        let wrong = "const OP_A: u16 = 1;\nconst REPLY_A: u8 = 1;\nconst ERR_CODE_X: u8 = 1;\n";
+        let v = run_rule("wire-tags", "src/server/protocol.rs", wrong);
+        assert!(v.iter().any(|v| v.line == 1 && v.message.contains("u8")));
+    }
+
+    #[test]
+    fn wire_tags_only_apply_to_protocol_rs() {
+        let src = "const OP_A: u8 = 1;\nconst OP_B: u8 = 1;\n";
+        assert!(run_rule("wire-tags", "src/cluster/router.rs", src).is_empty());
+    }
+
+    // ------------------------------------------------ print-discipline
+
+    #[test]
+    fn print_rule_flags_macros_and_process_exit() {
+        let src = "pub fn f() {\n\
+                   println!(\"hi\");\n\
+                   eprintln!(\"warn\");\n\
+                   dbg!(1);\n\
+                   std::process::exit(2);\n\
+                   }\n";
+        let v = run_rule("print-discipline", "src/coordinator/service.rs", src);
+        assert_eq!(v.iter().map(|v| v.line).collect::<Vec<_>>(), [2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn print_rule_whitelists_cli_bench_main_and_log() {
+        let src = "pub fn f() { println!(\"ok\"); std::process::exit(0); }\n";
+        for path in ["src/cli/mod.rs", "src/bench/mod.rs", "src/main.rs", "src/util/log.rs"] {
+            assert!(run_rule("print-discipline", path, src).is_empty(), "{path}");
+        }
+    }
+
+    #[test]
+    fn print_rule_skips_cfg_test_regions_but_not_cfg_not_test() {
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                   #[test]\n\
+                   fn t() { println!(\"test output is fine\"); }\n\
+                   }\n\
+                   pub fn lib() { eprintln!(\"not fine\"); }\n";
+        let v = run_rule("print-discipline", "src/lsh/mod.rs", src);
+        assert_eq!(v.iter().map(|v| v.line).collect::<Vec<_>>(), [6]);
+        let not_test = "#[cfg(not(test))]\npub fn lib() { eprintln!(\"still library code\"); }\n";
+        assert_eq!(run_rule("print-discipline", "src/lsh/mod.rs", not_test).len(), 1);
+    }
+
+    #[test]
+    fn print_rule_allows_writeln_and_log_warn() {
+        let src = "writeln!(out, \"data\")?;\ncrate::util::log::warn(\"slow path\");\n";
+        assert!(run_rule("print-discipline", "src/trace/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_region_mask_handles_cfg_all_and_stacked_attrs() {
+        let src = "#[cfg(all(test, not(miri)))]\n\
+                   #[allow(dead_code)]\n\
+                   mod tests { fn t() { println!(\"x\"); } }\n\
+                   pub fn lib() { println!(\"y\"); }\n";
+        let v = run_rule("print-discipline", "src/config/mod.rs", src);
+        assert_eq!(v.iter().map(|v| v.line).collect::<Vec<_>>(), [4]);
+    }
+}

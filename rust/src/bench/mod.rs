@@ -157,7 +157,7 @@ impl Bench {
             samples.push(el);
             total_iters += batch;
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let result = BenchResult {
             name: name.to_string(),

@@ -28,6 +28,7 @@
 //! `COUNT` defaults to 1; `KIND` is `drop`, `delay` (arg = ms), or
 //! `blackhole`.
 
+use crate::util::sync;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -89,19 +90,19 @@ impl FaultInjector {
 
     /// Arm a rule programmatically (tests).
     pub fn inject(&self, rule: FaultRule) {
-        self.rules.lock().unwrap().push(rule);
+        sync::lock(&self.rules).push(rule);
     }
 
     /// Whether any rules are armed (cheap fast-path check).
     pub fn is_armed(&self) -> bool {
-        !self.rules.lock().unwrap().is_empty()
+        !sync::lock(&self.rules).is_empty()
     }
 
     /// Consult the rules for one call context. The first matching armed
     /// rule fires (its `remaining` decrements; spent rules are pruned)
     /// and its kind is returned for the transport to act on.
     pub fn check(&self, context: &str) -> Option<FaultKind> {
-        let mut rules = self.rules.lock().unwrap();
+        let mut rules = sync::lock(&self.rules);
         let hit = rules
             .iter_mut()
             .find(|r| r.remaining > 0 && context.contains(&r.matches))?;

@@ -17,6 +17,7 @@
 //! a healthy heartbeat is demoted by the traffic itself rather than
 //! waiting for the next heartbeat round.
 
+use crate::util::sync;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -87,7 +88,7 @@ impl LivenessBoard {
 
     /// Whether shard `i` is currently in the scatter set.
     pub fn is_alive(&self, i: usize) -> bool {
-        self.shards[i].lock().unwrap().alive
+        sync::lock(&self.shards[i]).alive
     }
 
     /// Record a healthy probe (or successful request) for shard `i`.
@@ -95,7 +96,7 @@ impl LivenessBoard {
     /// non-ping successes). Returns `true` if this success re-admitted
     /// a down shard.
     pub fn record_ok(&self, i: usize, indexed: Option<u64>) -> bool {
-        let mut s = self.shards[i].lock().unwrap();
+        let mut s = sync::lock(&self.shards[i]);
         s.consecutive_misses = 0;
         s.consecutive_ok = s.consecutive_ok.saturating_add(1);
         s.heartbeats_ok += 1;
@@ -114,7 +115,7 @@ impl LivenessBoard {
     /// budget) for shard `i`. Returns `true` if this miss marked the
     /// shard down.
     pub fn record_miss(&self, i: usize) -> bool {
-        let mut s = self.shards[i].lock().unwrap();
+        let mut s = sync::lock(&self.shards[i]);
         s.consecutive_ok = 0;
         s.consecutive_misses = s.consecutive_misses.saturating_add(1);
         s.heartbeats_missed += 1;
@@ -127,7 +128,7 @@ impl LivenessBoard {
 
     /// A point-in-time copy of shard `i`'s status.
     pub fn status(&self, i: usize) -> ShardStatus {
-        self.shards[i].lock().unwrap().clone()
+        sync::lock(&self.shards[i]).clone()
     }
 
     /// Indices of the shards currently in the scatter set.
@@ -140,7 +141,7 @@ impl LivenessBoard {
         self.shards
             .iter()
             .map(|s| {
-                let s = s.lock().unwrap();
+                let s = sync::lock(s);
                 if s.alive {
                     s.indexed
                 } else {

@@ -34,6 +34,7 @@ use crate::json::Value;
 use crate::lsh::ShardRange;
 use crate::search::Hit;
 use crate::server::protocol::{self, Request, RequestBody, WireMode};
+use crate::util::sync;
 use crate::server::{Client, ClientError, RetryPolicy};
 use std::collections::BTreeMap;
 use std::io::{ErrorKind, Read, Write};
@@ -928,7 +929,7 @@ fn batch_forward_hashes(
 /// and cached (every shard publishes the same points — they share the
 /// service seed).
 fn cached_points(state: &RouterState, link: &mut ShardLink) -> Result<Vec<f64>, String> {
-    if let Some(p) = state.points.lock().unwrap().clone() {
+    if let Some(p) = sync::lock(&state.points).clone() {
         return Ok(p);
     }
     for i in 0..state.cfg.shards.len() {
@@ -936,7 +937,7 @@ fn cached_points(state: &RouterState, link: &mut ShardLink) -> Result<Vec<f64>, 
             continue;
         }
         if let Ok(points) = shard_call(state, link, i, "points", |c| c.points()) {
-            *state.points.lock().unwrap() = Some(points.clone());
+            *sync::lock(&state.points) = Some(points.clone());
             return Ok(points);
         }
     }

@@ -7,6 +7,7 @@
 //! gets timely service while bursts fill whole batches (the classic
 //! size-or-deadline policy of serving systems).
 
+use crate::util::sync;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -48,7 +49,7 @@ impl<T> BoundedQueue<T> {
 
     /// Current queue length.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        sync::lock(&self.inner).items.len()
     }
 
     /// Whether the queue is currently empty.
@@ -59,7 +60,7 @@ impl<T> BoundedQueue<T> {
     /// Blocking push; waits while full (backpressure). Fails only if the
     /// queue has been closed.
     pub fn push(&self, item: T) -> Result<(), PushError> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = sync::lock(&self.inner);
         loop {
             if g.closed {
                 return Err(PushError::Closed);
@@ -69,13 +70,13 @@ impl<T> BoundedQueue<T> {
                 self.not_empty.notify_one();
                 return Ok(());
             }
-            g = self.not_full.wait(g).unwrap();
+            g = sync::wait(&self.not_full, g);
         }
     }
 
     /// Non-blocking push; returns the item back if the queue is full.
     pub fn try_push(&self, item: T) -> Result<(), (Option<T>, PushError)> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = sync::lock(&self.inner);
         if g.closed {
             return Err((Some(item), PushError::Closed));
         }
@@ -94,7 +95,7 @@ impl<T> BoundedQueue<T> {
     /// after the first item, waits up to `max_wait` for the batch to fill.
     pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
         assert!(max_batch > 0);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = sync::lock(&self.inner);
         // phase 1: wait for the first item
         loop {
             if !g.items.is_empty() {
@@ -103,7 +104,7 @@ impl<T> BoundedQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = sync::wait(&self.not_empty, g);
         }
         // phase 2: wait (bounded) for the batch to fill
         let deadline = Instant::now() + max_wait;
@@ -112,10 +113,7 @@ impl<T> BoundedQueue<T> {
             if now >= deadline {
                 break;
             }
-            let (ng, timeout) = self
-                .not_empty
-                .wait_timeout(g, deadline - now)
-                .unwrap();
+            let (ng, timeout) = sync::wait_timeout(&self.not_empty, g, deadline - now);
             g = ng;
             if timeout.timed_out() {
                 break;
@@ -130,7 +128,7 @@ impl<T> BoundedQueue<T> {
     /// Close the queue: pending items remain poppable, new pushes fail,
     /// and blocked poppers wake up.
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = sync::lock(&self.inner);
         g.closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
@@ -138,7 +136,7 @@ impl<T> BoundedQueue<T> {
 
     /// Whether the queue has been closed.
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        sync::lock(&self.inner).closed
     }
 }
 
@@ -171,6 +169,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "relies on real threads and wall-clock timing")]
     fn deadline_flushes_partial_batch() {
         let q = Arc::new(BoundedQueue::new(16));
         q.push(1).unwrap();
@@ -181,6 +180,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "relies on real threads and wall-clock timing")]
     fn push_blocks_until_capacity_frees() {
         let q = Arc::new(BoundedQueue::new(2));
         q.push(1).unwrap();
@@ -199,6 +199,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "relies on real threads and wall-clock timing")]
     fn close_wakes_poppers_and_rejects_pushers() {
         let q = Arc::new(BoundedQueue::new(4));
         let q2 = q.clone();
@@ -220,6 +221,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "relies on real threads and wall-clock timing")]
     fn concurrent_producers_no_loss_no_dup() {
         let q = Arc::new(BoundedQueue::new(64));
         let producers = 8;

@@ -8,6 +8,7 @@
 use crate::json::Value;
 use crate::trace::{Span, SpanWire, STAGE_COUNT, STAGE_NAMES, WIRE_COUNT};
 use crate::util::stats::{quantile_sorted, Welford};
+use crate::util::sync;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -378,7 +379,7 @@ impl ServiceMetrics {
     /// Record a completed batch: its size and per-request latencies.
     pub fn record_batch(&self, batch_size: usize, latencies: &[Duration]) {
         self.batches.fetch_add(1, Ordering::Relaxed);
-        let mut d = self.dist.lock().unwrap();
+        let mut d = sync::lock(&self.dist);
         d.batch_fill.push(batch_size as f64);
         for l in latencies {
             let secs = l.as_secs_f64();
@@ -441,7 +442,7 @@ impl ServiceMetrics {
     }
 
     fn note_slow(&self, entry: SlowEntry) {
-        let mut slow = self.slow.lock().unwrap();
+        let mut slow = sync::lock(&self.slow);
         if slow.len() < SLOW_LOG_CAP {
             slow.push(entry);
         } else {
@@ -474,7 +475,7 @@ impl ServiceMetrics {
 
     /// Worst-K traced requests, slowest first.
     pub fn slow_snapshot(&self) -> Vec<SlowEntry> {
-        let mut v = self.slow.lock().unwrap().clone();
+        let mut v = sync::lock(&self.slow).clone();
         v.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
         v
     }
@@ -533,7 +534,7 @@ impl ServiceMetrics {
 
     /// Point-in-time snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let d = self.dist.lock().unwrap();
+        let d = sync::lock(&self.dist);
         let mut sorted = d.latency_samples.clone();
         // total_cmp: a NaN sample must never panic the metrics path
         sorted.sort_by(f64::total_cmp);
@@ -1254,6 +1255,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "relies on real threads and wall-clock timing")]
     fn hammer_merge_equals_serial_oracle() {
         // N threads recording into the slotted bank must merge to exactly
         // what one thread recording the same observations serially sees:

@@ -25,6 +25,7 @@ use crate::lsh::shard::{read_i32, read_u64, write_i32, write_u64};
 use crate::lsh::{IndexConfig, QueryScratch, ShardHealth, ShardRange, ShardedIndex};
 use crate::search::Hit;
 use crate::trace::{Span, SpanWire, Stage};
+use crate::util::sync;
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::sync::mpsc;
@@ -635,7 +636,7 @@ fn worker_loop(
         // would poison the index and every re-rank distance it touches)
         // and duplicate ids (pre-existing or within-batch).
         {
-            let mut store = state.store.write().unwrap();
+            let mut store = sync::write(&state.store);
             for (slot, (req, emb)) in batch.iter().zip(&embeddings).enumerate() {
                 if rejected[slot].is_some() {
                     continue;
@@ -746,7 +747,7 @@ fn apply_op(
         Op::Remove { id } => {
             // look up (and drop) the stored entry; its signature tells the
             // index which buckets to clean
-            let entry = state.store.write().unwrap().remove(id);
+            let entry = sync::write(&state.store).remove(id);
             let resp = match entry {
                 Some(e) => {
                     state.index.remove(*id, &e.sig);
@@ -774,7 +775,7 @@ fn apply_op(
             );
             span.stamp(Stage::IndexProbe);
             metrics.record_query_shape(&depth_hits, candidates.len());
-            let store = state.store.read().unwrap();
+            let store = sync::read(&state.store);
             let mut hits: Vec<Hit> = candidates
                 .iter()
                 .filter_map(|id| {
@@ -886,7 +887,7 @@ fn migrate_pull(state: &State, from_id: u64, max: usize) -> Response {
     if max == 0 {
         return Response::Error("migrate_pull: max must be positive".to_string());
     }
-    let store = state.store.read().unwrap();
+    let store = sync::read(&state.store);
     let mut ids: Vec<u64> = store.keys().copied().filter(|id| *id >= from_id).collect();
     ids.sort_unstable();
     let done = ids.len() <= max;
@@ -938,7 +939,7 @@ fn entries_push(state: &State, entries: &[EntryRecord], emb_dim: usize) -> Respo
             ));
         }
     }
-    let mut store = state.store.write().unwrap();
+    let mut store = sync::write(&state.store);
     for e in entries {
         if let Some(old) = store.remove(&e.id) {
             state.index.remove(e.id, &old.sig);
@@ -961,7 +962,7 @@ fn entries_push(state: &State, entries: &[EntryRecord], emb_dim: usize) -> Respo
 /// index). The count only covers ids that were actually held, so an
 /// aborting migration target can verify it unwound exactly what landed.
 fn entries_discard(state: &State, ids: &[u64]) -> Response {
-    let mut store = state.store.write().unwrap();
+    let mut store = sync::write(&state.store);
     let mut count = 0u64;
     for id in ids {
         if let Some(e) = store.remove(id) {
@@ -1071,7 +1072,7 @@ fn save_state_inner(state: &State, w: &mut dyn std::io::Write) -> io::Result<()>
     state.index.save(w)?;
     let mut buf = Vec::new();
     {
-        let store = state.store.read().unwrap();
+        let store = sync::read(&state.store);
         write_store_block(&store, &state.probe_sig, &mut buf)?;
     }
     w.write_all(&buf)
@@ -1504,6 +1505,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "relies on real threads and wall-clock timing")]
     fn concurrent_clients() {
         let (svc, points) = test_service(4);
         let svc = Arc::new(svc);

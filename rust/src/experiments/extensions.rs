@@ -325,13 +325,13 @@ pub fn mips_experiment(corpus_size: usize, queries: usize, hashes: usize, seed: 
         let best = (0..corpus_size)
             .max_by(|&i, &j| {
                 let ip = |v: &Vec<f64>| v.iter().zip(&q).map(|(a, b)| a * b).sum::<f64>();
-                ip(&corpus[i]).partial_cmp(&ip(&corpus[j])).unwrap()
+                ip(&corpus[i]).total_cmp(&ip(&corpus[j]))
             })
             .unwrap();
         // rank corpus by collision count (descending)
         let mut order: Vec<usize> = (0..corpus_size).collect();
         let coll: Vec<f64> = hashed.iter().map(|h| collision_rate(&hq, h)).collect();
-        order.sort_by(|&i, &j| coll[j].partial_cmp(&coll[i]).unwrap());
+        order.sort_by(|&i, &j| coll[j].total_cmp(&coll[i]));
         let rank = order.iter().position(|&i| i == best).unwrap();
         if rank == 0 {
             hits += 1;

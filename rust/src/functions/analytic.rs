@@ -110,7 +110,7 @@ impl Function1D for Piecewise {
         // binary search for the bracketing interval
         let i = match self
             .xs
-            .binary_search_by(|v| v.partial_cmp(&x).unwrap())
+            .binary_search_by(|v| v.total_cmp(&x))
         {
             Ok(i) => return self.ys[i],
             Err(i) => i,

@@ -123,7 +123,7 @@ impl Kde {
         let mean: f64 = samples.iter().sum::<f64>() / n;
         let sd = (samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n).sqrt();
         let mut sorted = samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let iqr = crate::util::stats::quantile_sorted(&sorted, 0.75)
             - crate::util::stats::quantile_sorted(&sorted, 0.25);
         let scale = sd.min(iqr / 1.34).max(1e-12);

@@ -26,7 +26,7 @@ impl Sampled {
     pub fn from_samples(mut samples: Vec<f64>) -> Self {
         assert!(!samples.is_empty());
         assert!(samples.iter().all(|x| x.is_finite()));
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         Self {
             sorted: samples,
             interpolate: true,

@@ -76,7 +76,7 @@ impl Function1D for CubicSpline {
         }
         let i = match self
             .xs
-            .binary_search_by(|v| v.partial_cmp(&x).unwrap())
+            .binary_search_by(|v| v.total_cmp(&x))
         {
             Ok(i) => return self.ys[i],
             Err(i) => i, // xs[i-1] < x < xs[i]

@@ -20,6 +20,7 @@ pub mod crosspolytope;
 pub use crosspolytope::{CrossPolytopeBank, CrossPolytopeHash};
 
 use crate::util::rng::{Rng64, SplitMix64};
+use crate::util::sync;
 
 /// A bank of `K` hash functions mapping `ℝ^N → ℤ^K`.
 ///
@@ -229,7 +230,7 @@ impl Clone for LazyL2Hash {
             k: self.k,
             r: self.r,
             offsets: self.offsets.clone(),
-            cache: std::sync::RwLock::new(self.cache.read().unwrap().clone()),
+            cache: std::sync::RwLock::new(sync::read(&self.cache).clone()),
         }
     }
 }
@@ -254,12 +255,12 @@ impl LazyL2Hash {
     /// encounter a new largest value of N_f" — Algorithm 1, memoized).
     fn ensure_cached(&self, len: usize) {
         {
-            let cache = self.cache.read().unwrap();
+            let cache = sync::read(&self.cache);
             if cache.iter().all(|row| row.len() >= len) {
                 return;
             }
         }
-        let mut cache = self.cache.write().unwrap();
+        let mut cache = sync::write(&self.cache);
         for (j, row) in cache.iter_mut().enumerate() {
             while row.len() < len {
                 row.push(self.alpha(j, row.len()));
@@ -306,7 +307,7 @@ impl HashBank for LazyL2Hash {
     fn hash_into(&self, v: &[f64], out: &mut [i32]) {
         assert_eq!(out.len(), self.k, "output length mismatch");
         self.ensure_cached(v.len());
-        let cache = self.cache.read().unwrap();
+        let cache = sync::read(&self.cache);
         for (j, o) in out.iter_mut().enumerate() {
             let dot: f64 = v.iter().zip(&cache[j]).map(|(&x, &a)| a * x).sum();
             *o = (dot / self.r + self.offsets[j]).floor() as i32;

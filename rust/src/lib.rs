@@ -53,6 +53,7 @@
 //! println!("observed collision rate: {}", collisions as f64 / 1024.0);
 //! ```
 
+pub mod analysis;
 pub mod bench;
 pub mod chebyshev;
 pub mod cli;

@@ -7,6 +7,7 @@
 //! have to re-embed and re-hash the corpus.
 
 use super::{IndexConfig, LshIndex, QueryScratch};
+use crate::util::sync;
 use std::io::{self, Read, Write};
 use std::sync::RwLock;
 
@@ -48,7 +49,7 @@ impl ShardedIndex {
 
     /// Total entries across shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        self.shards.iter().map(|s| sync::read(s).len()).sum()
     }
 
     /// Whether the index holds no entries.
@@ -59,13 +60,13 @@ impl ShardedIndex {
     /// Insert an entry (locks only its home shard).
     pub fn insert(&self, id: u64, signature: &[i32]) {
         let shard = (id % self.shards.len() as u64) as usize;
-        self.shards[shard].write().unwrap().insert(id, signature);
+        sync::write(&self.shards[shard]).insert(id, signature);
     }
 
     /// Remove an entry from its home shard. Returns `true` if present.
     pub fn remove(&self, id: u64, signature: &[i32]) -> bool {
         let shard = (id % self.shards.len() as u64) as usize;
-        self.shards[shard].write().unwrap().remove(id, signature)
+        sync::write(&self.shards[shard]).remove(id, signature)
     }
 
     /// Allocation-free query across all shards: candidates are collected
@@ -111,7 +112,7 @@ impl ShardedIndex {
         self.shards
             .iter()
             .map(|s| {
-                let idx = s.read().unwrap();
+                let idx = sync::read(s);
                 ShardHealth {
                     entries: idx.len(),
                     tables: idx.occupancy(),
@@ -142,7 +143,7 @@ impl ShardedIndex {
         write_u64(w, self.config.k as u64)?;
         write_u64(w, self.config.l as u64)?;
         for s in &self.shards {
-            s.read().unwrap().write_to(w)?;
+            sync::read(s).write_to(w)?;
         }
         Ok(())
     }
@@ -620,6 +621,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "relies on real threads and wall-clock timing")]
     fn concurrent_shard_inserts() {
         use std::sync::Arc;
         let idx = Arc::new(ShardedIndex::new(IndexConfig::new(1, 2), 8));

@@ -123,7 +123,7 @@ pub fn estimate_distances(vecs: &[Vec<f64>]) -> (f64, f64) {
         }
         nn_acc += best;
     }
-    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all.sort_by(f64::total_cmp);
     (nn_acc / n as f64, all[all.len() / 2])
 }
 

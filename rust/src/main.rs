@@ -75,6 +75,14 @@
 //!                      batch 256 plus stage reconciliation; the gate
 //!                      fails the run when tracing costs more than F%)
 //! funclsh selftest    [--artifacts DIR]
+//! funclsh analyze     [--json] [--deny] [--baseline FILE] [--root DIR]
+//!                     [--write-baseline]
+//!                     (in-repo static analysis: lint src/ + tests/
+//!                      against the repo invariants — frame
+//!                      localization, total_cmp, poison recovery,
+//!                      SAFETY comments, wire-tag contiguity, print
+//!                      discipline; --deny exits non-zero on any
+//!                      violation not grandfathered by the baseline)
 //! funclsh info
 //! ```
 //!
@@ -102,10 +110,11 @@ fn main() {
         Some("bench-observe") => cmd_bench_observe(&args),
         Some("tune") => cmd_tune(&args),
         Some("selftest") => cmd_selftest(&args),
+        Some("analyze") => cmd_analyze(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: funclsh <serve|route|migrate|load|stats|experiment|hash|bench-hash|bench-wire|bench-observe|selftest|info> [options]\n\
+                "usage: funclsh <serve|route|migrate|load|stats|experiment|hash|bench-hash|bench-wire|bench-observe|selftest|analyze|info> [options]\n\
                  see `funclsh experiment all --out results/` for the paper reproduction"
             );
             2
@@ -957,6 +966,86 @@ fn cmd_selftest(args: &Args) -> i32 {
             eprintln!("selftest failed: {e}");
             1
         }
+    }
+}
+
+/// `funclsh analyze`: run the in-repo invariant linter over `src/` +
+/// `tests/` (see [`funclsh::analysis`]). Finds the crate root
+/// automatically (`rust/` when invoked from the repo root, `.` when
+/// invoked from inside `rust/`), applies the checked-in baseline, and
+/// prints `file:line: [rule] message` findings — or the JSON report
+/// with `--json`. `--deny` makes any surviving violation fatal (CI's
+/// static-analysis gate); `--write-baseline` regenerates the baseline
+/// from the current raw findings.
+fn cmd_analyze(args: &Args) -> i32 {
+    use funclsh::analysis::{self, Baseline, Report};
+
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => {
+            if Path::new("src").is_dir() {
+                std::path::PathBuf::from(".")
+            } else if Path::new("rust/src").is_dir() {
+                std::path::PathBuf::from("rust")
+            } else {
+                eprintln!("analyze: no src/ here or under rust/; pass --root DIR");
+                return 2;
+            }
+        }
+    };
+    let (files_scanned, raw) = match analysis::scan_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("analyze: cannot scan {}: {e}", root.display());
+            return 2;
+        }
+    };
+    let baseline_path = args
+        .get("baseline")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| analysis::default_baseline_path(&root));
+    if args.has("write-baseline") {
+        let text = Baseline::render_from(&raw);
+        return match std::fs::write(&baseline_path, text) {
+            Ok(()) => {
+                eprintln!(
+                    "analyze: wrote baseline for {} violation(s) to {}",
+                    raw.len(),
+                    baseline_path.display()
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("analyze: cannot write {}: {e}", baseline_path.display());
+                2
+            }
+        };
+    }
+    // an explicit --baseline must exist; the default path is optional
+    let baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => match Baseline::parse(&text) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("analyze: {}: {e}", baseline_path.display());
+                return 2;
+            }
+        },
+        Err(e) if args.get("baseline").is_some() => {
+            eprintln!("analyze: cannot read {}: {e}", baseline_path.display());
+            return 2;
+        }
+        Err(_) => Baseline::default(),
+    };
+    let report = Report::new(files_scanned, raw, &baseline);
+    if args.has("json") {
+        println!("{}", report.render_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if !report.clean() && args.has("deny") {
+        1
+    } else {
+        0
     }
 }
 

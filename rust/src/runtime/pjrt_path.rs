@@ -9,6 +9,7 @@
 
 use super::{Engine, Manifest};
 use crate::coordinator::hashpath::{FoldedHashPath, HashPath, Signatures};
+use crate::util::sync;
 use anyhow::{anyhow, Result};
 use std::path::Path;
 use std::sync::Mutex;
@@ -28,6 +29,8 @@ struct Guarded {
     offsets: xla::Literal,
 }
 
+// SAFETY: see the type docs above — the PJRT CPU client is thread-safe
+// for moves; the Mutex around every `Guarded` rules out aliasing.
 unsafe impl Send for Guarded {}
 
 /// PJRT-backed implementation of [`HashPath`].
@@ -101,7 +104,7 @@ impl HashPath for PjrtHashPath {
     }
 
     fn hash_rows_into(&self, rows: &[Vec<f32>], out: &mut Signatures) -> Result<()> {
-        let g = self.inner.lock().unwrap();
+        let g = sync::lock(&self.inner);
         let pipeline = g
             .engine
             .pipeline(&g.pipeline)

@@ -64,7 +64,7 @@ where
             distance_evals: hits.len(),
             candidates: hits.len(),
         };
-        hits.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+        hits.sort_by(|a, b| a.distance.total_cmp(&b.distance));
         hits.truncate(k);
         (hits, stats)
     }
@@ -115,7 +115,7 @@ impl<'a> LshKnn<'a> {
                 distance: distance(id),
             })
             .collect();
-        hits.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+        hits.sort_by(|a, b| a.distance.total_cmp(&b.distance));
         hits.truncate(k);
         (hits, stats)
     }

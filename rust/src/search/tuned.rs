@@ -104,7 +104,7 @@ impl TunedIndex {
                 distance: crate::embedding::l2_dist(q, &self.vecs[id as usize]),
             })
             .collect();
-        hits.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+        hits.sort_by(|a, b| a.distance.total_cmp(&b.distance));
         hits.truncate(k);
         (hits, stats)
     }

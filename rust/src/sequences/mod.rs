@@ -145,7 +145,7 @@ mod tests {
         // far below the ~n^{-1/2} of random points.
         let n = 1024;
         let mut xs: Vec<f64> = VanDerCorput::new(2).take(n).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let mut max_dev: f64 = 0.0;
         for (i, x) in xs.iter().enumerate() {
             let ecdf = (i + 1) as f64 / n as f64;

@@ -169,8 +169,8 @@ mod tests {
         // the first 2^k - 1 elements instead of order.
         let mut g = got.clone();
         let mut w = want.to_vec();
-        g.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        g.sort_by(f64::total_cmp);
+        w.sort_by(f64::total_cmp);
         for (a, b) in g.iter().zip(&w) {
             assert!((a - b).abs() < 1e-12, "{a} vs {b}");
         }
@@ -187,8 +187,8 @@ mod tests {
         let p3 = s.next_point();
         let mut xs = [p2[0], p3[0]];
         let mut ys = [p2[1], p3[1]];
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
+        ys.sort_by(f64::total_cmp);
         assert!((xs[0] - 0.25).abs() < 1e-12 && (xs[1] - 0.75).abs() < 1e-12);
         assert!((ys[0] - 0.25).abs() < 1e-12 && (ys[1] - 0.75).abs() < 1e-12);
     }

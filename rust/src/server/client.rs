@@ -249,7 +249,7 @@ impl Client {
         let reader = BufReader::new(stream.try_clone()?);
         let mut writer = BufWriter::new(stream);
         if wire == WireMode::Binary {
-            writer.write_all(protocol::BINARY_MAGIC)?;
+            protocol::write_magic(&mut writer)?;
         }
         Ok(Self {
             reader,
@@ -701,7 +701,7 @@ impl PipelinedClient {
         let reader = BufReader::new(stream.try_clone()?);
         let mut writer = BufWriter::new(stream);
         if wire == WireMode::Binary {
-            writer.write_all(protocol::BINARY_MAGIC)?;
+            protocol::write_magic(&mut writer)?;
         }
         Ok((reader, writer))
     }

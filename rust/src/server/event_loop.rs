@@ -67,7 +67,7 @@ const FIRST_CONN_TOKEN: u64 = 2;
 const TICK: Duration = Duration::from_millis(50);
 
 /// Unflushed output past this mark pauses reads from that connection.
-const WRITE_HIGH_WATER: usize = protocol::MAX_LINE_BYTES;
+const WRITE_HIGH_WATER: usize = protocol::MAX_FRAME_BYTES;
 
 /// How long the shutdown drain waits for in-flight responses to flush
 /// before force-closing whatever is left (a peer that never reads its
@@ -570,7 +570,7 @@ impl LoopState {
             let ready = match self.poller.wait(TICK) {
                 Ok(r) => r,
                 Err(e) => {
-                    eprintln!("server event loop: poll failed: {e}");
+                    crate::util::log::warn(format!("server event loop: poll failed: {e}"));
                     break;
                 }
             };
@@ -739,7 +739,7 @@ impl LoopState {
                     // the 5 FBIN1 magic bytes crossed the wire exactly
                     // once, before the first counted frame
                     self.metrics
-                        .record_wire_in(true, 0, protocol::BINARY_MAGIC.len() as u64);
+                        .record_wire_in(true, 0, protocol::MAGIC_LEN as u64);
                 }
                 conn.counted_mode = true;
             }

@@ -547,7 +547,9 @@ impl Server {
 
         let io_mode = match cfg.server.io_mode {
             IoMode::EventLoop if cfg!(not(target_os = "linux")) => {
-                eprintln!("server: io_mode=event_loop needs epoll (Linux); using threaded");
+                crate::util::log::warn(
+                    "server: io_mode=event_loop needs epoll (Linux); using threaded",
+                );
                 IoMode::Threaded
             }
             m => m,
@@ -765,7 +767,7 @@ fn serve_stream(
                         metrics.record_wire_conn(wire == WireMode::Binary);
                         if wire == WireMode::Binary {
                             metrics
-                                .record_wire_in(true, 0, protocol::BINARY_MAGIC.len() as u64);
+                                .record_wire_in(true, 0, protocol::MAGIC_LEN as u64);
                         }
                         counted_mode = true;
                     }
@@ -784,7 +786,7 @@ fn serve_stream(
                         metrics.record_wire_conn(wire == WireMode::Binary);
                         if wire == WireMode::Binary {
                             metrics
-                                .record_wire_in(true, 0, protocol::BINARY_MAGIC.len() as u64);
+                                .record_wire_in(true, 0, protocol::MAGIC_LEN as u64);
                         }
                         counted_mode = true;
                     }
@@ -841,7 +843,7 @@ fn serve_stream(
             if let Some(m) = framer.negotiated() {
                 metrics.record_wire_conn(m == WireMode::Binary);
                 if m == WireMode::Binary {
-                    metrics.record_wire_in(true, 0, protocol::BINARY_MAGIC.len() as u64);
+                    metrics.record_wire_in(true, 0, protocol::MAGIC_LEN as u64);
                 }
                 counted_mode = true;
             }

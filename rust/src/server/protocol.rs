@@ -59,6 +59,19 @@ pub const MAX_FRAME_BYTES: usize = MAX_LINE_BYTES;
 /// anything else speaks newline-delimited JSON.
 pub const BINARY_MAGIC: &[u8; 5] = b"FBIN1";
 
+/// Wire length of [`BINARY_MAGIC`] — what metrics charge for the
+/// one-time handshake. Callers outside this module use this (and
+/// [`write_magic`]) rather than touching the magic bytes themselves,
+/// keeping every byte-level framing detail localized here (the
+/// `frame-localization` rule in [`crate::analysis`] enforces it).
+pub const MAGIC_LEN: usize = BINARY_MAGIC.len();
+
+/// Open a binary-mode stream: write the `FBIN1` magic. The only way
+/// code outside this module puts magic bytes on a wire.
+pub fn write_magic<W: std::io::Write>(w: &mut W) -> std::io::Result<()> {
+    w.write_all(BINARY_MAGIC)
+}
+
 /// Which frame format a connection (or client) speaks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WireMode {

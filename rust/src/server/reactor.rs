@@ -114,6 +114,8 @@ impl Poller {
     /// Create an epoll instance able to report up to `capacity` events
     /// per [`Poller::wait`] call.
     pub fn new(capacity: usize) -> io::Result<Self> {
+        // SAFETY: epoll_create1 takes no pointers; any flag value is
+        // safe to pass and errors come back as -1/errno.
         let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
         if epfd < 0 {
             return Err(io::Error::last_os_error());
@@ -134,6 +136,9 @@ impl Poller {
         } else {
             &mut ev as *mut EpollEvent
         };
+        // SAFETY: `arg` is either null (DEL, where the kernel ignores
+        // it) or a valid pointer to the stack-owned `ev`, which outlives
+        // the call; the kernel copies the struct before returning.
         if unsafe { epoll_ctl(self.epfd, op, fd, arg) } < 0 {
             return Err(io::Error::last_os_error());
         }
@@ -160,6 +165,9 @@ impl Poller {
     /// elapses; returns the readiness set (possibly empty on timeout).
     pub fn wait(&mut self, timeout: Duration) -> io::Result<Vec<Readiness>> {
         let ms = timeout.as_millis().min(i32::MAX as u128) as c_int;
+        // SAFETY: `buf` is a live Vec whose length is passed as
+        // `maxevents`, so the kernel writes at most `buf.len()` entries
+        // into memory we own; `&mut self` keeps the buffer exclusive.
         let n =
             unsafe { epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, ms) };
         if n < 0 {
@@ -183,6 +191,8 @@ impl Poller {
 
 impl Drop for Poller {
     fn drop(&mut self) {
+        // SAFETY: `epfd` was returned by epoll_create1, is owned solely
+        // by this Poller, and is closed exactly once (Drop runs once).
         unsafe { close(self.epfd) };
     }
 }
@@ -199,6 +209,8 @@ impl Waker {
     /// Create the eventfd (non-blocking: a full counter never blocks the
     /// waking thread).
     pub fn new() -> io::Result<Self> {
+        // SAFETY: eventfd takes no pointers; errors come back as
+        // -1/errno and are checked below.
         let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
         if fd < 0 {
             return Err(io::Error::last_os_error());
@@ -215,18 +227,24 @@ impl Waker {
     pub fn wake(&self) {
         let one: u64 = 1;
         // EAGAIN (counter at max) still leaves the fd readable — ignore
+        // SAFETY: the pointer is to the local `one`, valid for the 8
+        // bytes the call is told to read; the fd is owned by self.
         let _ = unsafe { write(self.fd, &one as *const u64 as *const c_void, 8) };
     }
 
     /// Drain the counter after the poller reported the fd readable.
     pub fn drain(&self) {
         let mut buf: u64 = 0;
+        // SAFETY: the pointer is to the local `buf`, writable for the 8
+        // bytes the call is told to fill; the fd is owned by self.
         let _ = unsafe { read(self.fd, &mut buf as *mut u64 as *mut c_void, 8) };
     }
 }
 
 impl Drop for Waker {
     fn drop(&mut self) {
+        // SAFETY: `fd` was returned by eventfd, is owned solely by this
+        // Waker, and is closed exactly once (Drop runs once).
         unsafe { close(self.fd) };
     }
 }
@@ -241,6 +259,8 @@ pub fn raise_nofile_limit() -> io::Result<u64> {
         rlim_cur: 0,
         rlim_max: 0,
     };
+    // SAFETY: the pointer is to the local `rl`, matching the 64-bit
+    // Rlimit ABI the *rlimit64 symbols are defined against.
     if unsafe { getrlimit64(RLIMIT_NOFILE, &mut rl) } < 0 {
         return Err(io::Error::last_os_error());
     }
@@ -249,6 +269,8 @@ pub fn raise_nofile_limit() -> io::Result<u64> {
             rlim_cur: rl.rlim_max,
             rlim_max: rl.rlim_max,
         };
+        // SAFETY: the pointer is to the local `want`, fully initialized
+        // above; the kernel only reads through it.
         if unsafe { setrlimit64(RLIMIT_NOFILE, &want) } < 0 {
             return Err(io::Error::last_os_error());
         }
@@ -257,7 +279,9 @@ pub fn raise_nofile_limit() -> io::Result<u64> {
     Ok(rl.rlim_cur)
 }
 
-#[cfg(test)]
+// Miri cannot emulate epoll/eventfd syscalls, so the whole suite is
+// host-only; the nightly sanitizer jobs cover it instead.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use std::io::Write as _;

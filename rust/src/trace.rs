@@ -174,6 +174,7 @@ mod tests {
     use std::time::Duration;
 
     #[test]
+    #[cfg_attr(miri, ignore = "relies on real threads and wall-clock timing")]
     fn stages_partition_wall_time() {
         let t0 = Instant::now();
         let mut s = Span::start(SpanWire::Json);

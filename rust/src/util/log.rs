@@ -1,0 +1,37 @@
+//! The library's one stderr choke point.
+//!
+//! Library code must never print: cluster nodes run headless with
+//! stdout redirected into the newline-framed JSON wire, so a stray
+//! `println!` corrupts frames, and `eprintln!` scattered through the
+//! crate makes diagnostics impossible to silence or redirect
+//! coherently. The `print-discipline` rule in [`crate::analysis`]
+//! enforces this — only `cli/`, `bench/`, `main.rs`, and this module
+//! touch stdio directly.
+//!
+//! [`warn`] goes to stderr (never stdout), so it can never corrupt a
+//! stdout-framed wire, and gives operators a single grep target
+//! (`funclsh:`) across every subsystem.
+
+use std::fmt::Display;
+use std::io::Write as _;
+
+/// Write one diagnostic line to stderr, prefixed `funclsh: `. Errors
+/// writing to stderr are ignored — diagnostics must never take the
+/// serving path down.
+pub fn warn<M: Display>(msg: M) {
+    let stderr = std::io::stderr();
+    let mut lock = stderr.lock();
+    let _ = writeln!(lock, "funclsh: {msg}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warn_accepts_display_types_without_panicking() {
+        warn("plain str");
+        warn(format!("formatted {}", 42));
+        warn(std::io::Error::other("io error"));
+    }
+}

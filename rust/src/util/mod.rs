@@ -5,10 +5,12 @@
 //! fully offline); algorithms follow standard published references cited on
 //! each item.
 
+pub mod log;
 pub mod proptest;
 pub mod rng;
 pub mod special;
 pub mod stats;
+pub mod sync;
 
 pub use rng::{Rng64, SplitMix64, Xoshiro256pp};
 pub use special::{erf, erfc, normal_cdf, normal_pdf, normal_quantile};

@@ -66,8 +66,14 @@ impl Gen {
 
 /// Run `prop` on `cases` random cases. Panics (with the case seed) on the
 /// first failure; re-running with `FUNCLSH_PROPTEST_SEED=<seed>` replays
-/// exactly that case.
+/// exactly that case. `FUNCLSH_PROPTEST_CASES=<n>` caps the case count
+/// (the nightly Miri job sets a small cap — each case runs ~100× slower
+/// under the interpreter).
 pub fn check(cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let cases = match std::env::var("FUNCLSH_PROPTEST_CASES") {
+        Ok(s) => cases.min(s.parse().expect("bad FUNCLSH_PROPTEST_CASES")),
+        Err(_) => cases,
+    };
     if let Ok(seed_str) = std::env::var("FUNCLSH_PROPTEST_SEED") {
         let seed: u64 = seed_str.parse().expect("bad FUNCLSH_PROPTEST_SEED");
         let mut g = Gen {
@@ -88,9 +94,9 @@ pub fn check(cases: usize, mut prop: impl FnMut(&mut Gen)) {
         };
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
         if let Err(e) = result {
-            eprintln!(
+            crate::util::log::warn(format!(
                 "property failed on case {case} (replay with FUNCLSH_PROPTEST_SEED={seed})"
-            );
+            ));
             std::panic::resume_unwind(e);
         }
     }

@@ -287,7 +287,7 @@ mod tests {
         let mut g = Xoshiro256pp::seed_from_u64(17);
         let n = 100_000;
         let mut xs: Vec<f64> = (0..n).map(|_| g.cauchy()).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let med = xs[n / 2];
         let q1 = xs[n / 4];
         let q3 = xs[3 * n / 4];
@@ -306,7 +306,7 @@ mod tests {
         assert!((var - 1.0).abs() < 0.03, "alpha=2 var {var}");
 
         let mut ys: Vec<f64> = (0..n).map(|_| g.stable(1.0)).collect();
-        ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ys.sort_by(f64::total_cmp);
         assert!((ys[3 * n / 4] - 1.0).abs() < 0.06, "alpha=1 q3 {}", ys[3 * n / 4]);
     }
 

@@ -1,0 +1,93 @@
+//! Poison-recovering lock acquisition — the only way library code
+//! takes a `Mutex`/`RwLock`/`Condvar`.
+//!
+//! A panicking thread poisons any lock it holds; the default
+//! `.lock().unwrap()` then panics *every later caller*, turning one
+//! bad request into a wedged process (this bit the serving stack once
+//! already — see the `mutex-poison` rule in [`crate::analysis`]).
+//! These helpers recover the guard with
+//! `unwrap_or_else(PoisonError::into_inner)`: the protected data is a
+//! metrics histogram, an index shard, or a queue — all kept
+//! structurally valid at every await-free step — so serving on after a
+//! worker panic is strictly better than refusing every request.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// `Mutex::lock`, recovering from poison.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `RwLock::read`, recovering from poison.
+pub fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `RwLock::write`, recovering from poison.
+pub fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait`, recovering from poison.
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait_timeout`, recovering from poison.
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, timeout)
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recovers_after_a_panicking_holder() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+        *lock(&m) = 8;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_read_and_write_recover_after_poison() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(read(&l).len(), 3);
+        write(&l).push(4);
+        assert_eq!(read(&l).len(), 4);
+    }
+
+    #[test]
+    fn wait_timeout_times_out_on_an_unsignalled_condvar() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock(&m);
+        let (_g, res) = wait_timeout(&cv, g, Duration::from_millis(5));
+        assert!(res.timed_out());
+    }
+}

@@ -174,21 +174,31 @@ impl Transportation {
     }
 }
 
-/// Total-order wrapper for f64 keys in the binary heap (costs are finite
-/// and non-NaN by construction).
+/// Total-order wrapper for f64 keys in the binary heap, ordered by
+/// `total_cmp` so even an unexpected NaN cost cannot panic the solver.
 fn ordered(x: f64) -> OrdF64 {
     OrdF64(x)
 }
 
-#[derive(PartialEq, PartialOrd)]
 struct OrdF64(f64);
+
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
 
 impl Eq for OrdF64 {}
 
-#[allow(clippy::derive_ord_xor_partial_ord)]
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
 impl Ord for OrdF64 {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.partial_cmp(other).unwrap()
+        self.0.total_cmp(&other.0)
     }
 }
 

@@ -63,8 +63,8 @@ pub fn wasserstein_empirical(xs: &[f64], ys: &[f64], p: f64) -> f64 {
     assert!(p >= 1.0);
     let mut x = xs.to_vec();
     let mut y = ys.to_vec();
-    x.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    y.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    x.sort_by(f64::total_cmp);
+    y.sort_by(f64::total_cmp);
     let m = x.len();
     let n = y.len();
     let mut acc = 0.0;

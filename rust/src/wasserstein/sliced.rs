@@ -104,7 +104,7 @@ pub fn sliced_embedding(
         .collect();
     for i in 0..d {
         let mut proj = bank.project(points, i);
-        proj.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        proj.sort_by(f64::total_cmp);
         for &u in &levels {
             let s = crate::functions::Sampled::from_samples(proj.clone());
             use crate::functions::Distribution1D;

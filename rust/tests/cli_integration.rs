@@ -1,6 +1,9 @@
 //! Integration tests of the `funclsh` leader binary: subcommands, CSV
 //! emission, config loading, and the selftest over real artifacts.
 
+// Host-only: spawns the compiled binary; Miri cannot run it.
+#![cfg(not(miri))]
+
 use std::process::Command;
 
 fn funclsh() -> Command {
@@ -313,5 +316,44 @@ fn serve_with_jnp_pipeline_variant() {
         "{}",
         String::from_utf8_lossy(&out.stderr)
     );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn analyze_is_clean_on_own_tree_and_denies_seeded_violations() {
+    // the real tree: clean under an empty baseline, --deny exits 0
+    let root = env!("CARGO_MANIFEST_DIR");
+    let out = funclsh()
+        .args(["analyze", "--deny", "--json", "--root", root])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    let json = funclsh::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(json.get("clean"), Some(&funclsh::json::Value::Bool(true)));
+
+    // a seeded violation is caught with its file:line and fails --deny
+    let dir = tmpdir("analyze");
+    std::fs::create_dir_all(dir.join("src")).unwrap();
+    std::fs::write(
+        dir.join("src/bad.rs"),
+        "pub fn f(xs: &mut [f64]) {\n    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+    )
+    .unwrap();
+    let out = funclsh().args(["analyze", "--deny", "--root"]).arg(&dir).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("src/bad.rs:2: [float-total-cmp]"), "{text}");
+
+    // --write-baseline grandfathers it; the next --deny run passes but
+    // still reports the suppression
+    let out = funclsh()
+        .args(["analyze", "--write-baseline", "--root"])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = funclsh().args(["analyze", "--deny", "--root"]).arg(&dir).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("suppressed"));
     let _ = std::fs::remove_dir_all(&dir);
 }

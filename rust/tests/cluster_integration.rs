@@ -6,6 +6,9 @@
 //! down/readmit transitions, and migration that survives injected
 //! faults or rolls the target back.
 
+// Host-only: boots real loopback TCP servers; Miri cannot run it.
+#![cfg(not(miri))]
+
 use funclsh::cluster::{
     migrate, FaultKind, FaultRule, MigrationConfig, Router, RouterConfig, ShardSpec,
 };

@@ -268,6 +268,7 @@ fn negotiation_splits_behave() {
 /// and the oversized declared binary length poison the framer at the
 /// same point under any chunking.
 #[test]
+#[cfg_attr(miri, ignore = "8 MiB streams are too slow under Miri")]
 fn fatal_paths_are_chunking_independent() {
     let seed = fuzz_seed();
     eprintln!("framer fuzz seed: {seed} (set FUNCLSH_FUZZ_SEED to reproduce)");
@@ -303,6 +304,7 @@ fn fatal_paths_are_chunking_independent() {
 /// stripped; the binary cap measures the declared length and rejects on
 /// the prefix alone, before any payload arrives.)
 #[test]
+#[cfg_attr(miri, ignore = "8 MiB streams are too slow under Miri")]
 fn frame_cap_is_boundary_exact_in_the_framer() {
     for (len, ok) in [
         (protocol::MAX_LINE_BYTES - 1, true),
@@ -365,6 +367,7 @@ fn frame_cap_is_boundary_exact_in_the_framer() {
 /// is allowed to send is never rejected client-side, and cap+1 is
 /// `InvalidData` in both formats.
 #[test]
+#[cfg_attr(miri, ignore = "8 MiB streams are too slow under Miri")]
 fn frame_cap_is_boundary_exact_in_the_client_mirror() {
     for (len, ok) in [
         (protocol::MAX_FRAME_BYTES - 1, true),
@@ -519,6 +522,7 @@ fn drive(addr: std::net::SocketAddr, wire: WireMode, stream: &[u8], seed: u64) -
 /// threaded and event-loop servers produce byte-identical reply
 /// streams, in both wire formats.
 #[test]
+#[cfg_attr(miri, ignore = "drives real loopback sockets")]
 fn threaded_and_event_loop_answer_identically_under_chunking() {
     let seed = fuzz_seed();
     eprintln!("framer fuzz seed: {seed} (set FUNCLSH_FUZZ_SEED to reproduce)");
@@ -550,6 +554,7 @@ fn threaded_and_event_loop_answer_identically_under_chunking() {
 /// Chunking-invariance over the wire: the same server answers the same
 /// byte stream identically whether it arrives in one write or dribbled.
 #[test]
+#[cfg_attr(miri, ignore = "drives real loopback sockets")]
 fn server_replies_are_chunking_invariant() {
     let seed = fuzz_seed();
     eprintln!("framer fuzz seed: {seed} (set FUNCLSH_FUZZ_SEED to reproduce)");

@@ -8,6 +8,9 @@
 //! id order, across random `{N, K, L, B}` shapes including `B = 1` and
 //! non-multiples of the kernel block sizes.
 
+// Host-only: long-running randomized battery; Miri cannot run it.
+#![cfg(not(miri))]
+
 use funclsh::coordinator::{FoldedHashPath, HashPath};
 use funclsh::embedding::{Interval, MonteCarloEmbedder};
 use funclsh::hashing::PStableHashBank;

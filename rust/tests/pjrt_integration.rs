@@ -7,6 +7,9 @@
 //! Requires `make artifacts` (skips cleanly when artifacts are missing so
 //! `cargo test` works on a fresh checkout).
 
+// Host-only: loads the PJRT FFI runtime; Miri cannot run it.
+#![cfg(not(miri))]
+
 use funclsh::coordinator::{CpuHashPath, FoldedHashPath, HashPath, Signatures};
 use funclsh::embedding::{ChebyshevEmbedder, Embedder, Interval, MonteCarloEmbedder};
 use funclsh::hashing::{HashBank, PStableHashBank};

@@ -2,6 +2,9 @@
 //! (DESIGN.md §5): randomized configurations and inputs, checked against
 //! algebraic/behavioural laws rather than fixed examples.
 
+// Host-only: long randomized runs over threaded paths; Miri cannot run it.
+#![cfg(not(miri))]
+
 use funclsh::config::ServiceConfig;
 use funclsh::coordinator::{
     BoundedQueue, Coordinator, CpuHashPath, FoldedHashPath, HashPath, Op, Response,

@@ -4,6 +4,9 @@
 //! ops/op tags — the server must answer with typed error envelopes where
 //! the framing allows, never panic, and never leak connections.
 
+// Host-only: drives real loopback sockets; Miri cannot run it.
+#![cfg(not(miri))]
+
 use funclsh::config::{IoMode, ServiceConfig};
 use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath};
 use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};

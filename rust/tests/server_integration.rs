@@ -4,6 +4,9 @@
 //! threads, and hold it to the same answers as a direct in-process
 //! coordinator built from the identical seed (recall parity).
 
+// Host-only: boots real loopback TCP servers; Miri cannot run it.
+#![cfg(not(miri))]
+
 use funclsh::config::{IoMode, ServiceConfig};
 use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath, Op, Response};
 use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};

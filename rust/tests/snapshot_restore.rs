@@ -4,6 +4,9 @@
 //! in-process (`Coordinator::restore` + `Server`) and through the real
 //! binary (`funclsh serve --snapshot F`).
 
+// Host-only: spawns servers and the compiled binary; Miri cannot run it.
+#![cfg(not(miri))]
+
 use funclsh::config::ServiceConfig;
 use funclsh::coordinator::{Coordinator, CpuHashPath, HashPath};
 use funclsh::embedding::{Embedder, Interval, MonteCarloEmbedder};
