@@ -16,9 +16,10 @@
 //! | `frame-localization` | no frame-scan / length-prefix / negotiation logic outside `server/protocol.rs`; magic bytes via `protocol::write_magic`, lengths via `MAGIC_LEN`, caps via `MAX_FRAME_BYTES` | PR 5 unified three divergent frame-scan implementations into `protocol::Framer`; the rule was then enforced only by a hand-run `rg` |
 //! | `float-total-cmp` | never `.partial_cmp(..)` on floats — `f64::total_cmp` is total over NaN and bit-stable (the paper's reproducibility contract) | NaN `partial_cmp().unwrap()` panics were fixed in PR 4 and regressed again in PR 6 |
 //! | `mutex-poison` | no bare `.lock()/.read()/.write()/.wait(..)` + `.unwrap()` in library code — lock acquisition goes through [`crate::util::sync`], which recovers with `unwrap_or_else(PoisonError::into_inner)`; `#[cfg(test)]` code is exempt | PR 7 retrofitted poison recovery after a panicking worker wedged every later request |
-//! | `unsafe-safety` | `unsafe` only in `server/reactor.rs` and `runtime/pjrt_path.rs`, each use under a `// SAFETY:` comment | the raw-syscall epoll reactor (PR 6) is the only dense unsafe module and must stay quarantined |
+//! | `unsafe-safety` | `unsafe` only in `server/reactor.rs`, `runtime/pjrt_path.rs` and `coordinator/simd.rs`, each use under a `// SAFETY:` comment | the raw-syscall epoll reactor (PR 6) and the AVX2 hash-kernel tile are the only dense unsafe modules and must stay quarantined |
 //! | `wire-tags` | `OP_*`/`REPLY_*`/`ERR_CODE_*` tags in `protocol.rs` are `u8`, unique, contiguous from 1 | PR 5/8 grew the FBIN1 op space; a duplicate or gap silently corrupts cross-version framing |
 //! | `print-discipline` | no `println!`/`eprintln!`/`dbg!`/`process::exit` outside `cli/`, `bench/`, `main.rs`, `util/log.rs` | PR 8 cluster nodes run headless; stray stdout corrupts newline-framed JSON |
+//! | `checked-float-cast` | no bare float → `i8`/`i16`/`i32` `as` casts in library code outside `hashing/quantize.rs` — lower through `quantize_hash` / `SigVec::from_i32`, which range-check and return a typed `HashOverflow` | the seed hash kernel's `.floor() as i32` *saturated*: overflowing hashes pinned to `i32::MAX`/`MIN` and NaN collapsed to bucket 0 instead of surfacing a per-item error |
 //!
 //! Rules are pure functions over one file's token stream, so each is
 //! unit-tested on fixture snippets (positive and negative, including

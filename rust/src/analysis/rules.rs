@@ -79,7 +79,7 @@ pub fn all_rules() -> &'static [Rule] {
     &RULES
 }
 
-static RULES: [Rule; 6] = [
+static RULES: [Rule; 7] = [
     Rule {
         id: "frame-localization",
         summary: "wire framing (magic bytes, length prefixes, scan caps, negotiation) \
@@ -109,9 +109,9 @@ static RULES: [Rule; 6] = [
     Rule {
         id: "unsafe-safety",
         summary: "every `unsafe` is preceded by a // SAFETY: comment and confined to \
-                  server/reactor.rs and runtime/pjrt_path.rs",
-        origin: "the raw-syscall epoll reactor (PR 6) is the repo's only dense unsafe \
-                 module and must stay that way",
+                  server/reactor.rs, runtime/pjrt_path.rs and coordinator/simd.rs",
+        origin: "the raw-syscall epoll reactor (PR 6) and the AVX2 hash-kernel tile \
+                 are the repo's only dense unsafe modules and must stay that way",
         check: check_unsafe_safety,
     },
     Rule {
@@ -130,6 +130,16 @@ static RULES: [Rule; 6] = [
         origin: "PR 8's cluster nodes run headless; stray prints corrupted \
                  newline-framed JSON when stdout was redirected into the wire",
         check: check_print_discipline,
+    },
+    Rule {
+        id: "checked-float-cast",
+        summary: "no bare float -> i8/i16/i32 `as` casts in library code outside \
+                  hashing/quantize.rs — `as` saturates silently (NaN becomes 0); \
+                  go through quantize_hash / SigVec::from_i32",
+        origin: "the seed hash kernel lowered `.floor()` with a bare `as i32`, \
+                 collapsing overflowing and NaN hash values to MAX/MIN/bucket 0 \
+                 instead of reporting a per-item error",
+        check: check_checked_float_cast,
     },
 ];
 
@@ -400,13 +410,17 @@ fn check_mutex_poison(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
     }
 }
 
-const UNSAFE_WHITELIST: [&str; 2] = ["src/server/reactor.rs", "src/runtime/pjrt_path.rs"];
+const UNSAFE_WHITELIST: [&str; 3] = [
+    "src/server/reactor.rs",
+    "src/runtime/pjrt_path.rs",
+    "src/coordinator/simd.rs",
+];
 
 /// How many lines above an `unsafe` token a `// SAFETY:` comment may
 /// sit and still count as covering it.
 const SAFETY_LOOKBACK_LINES: u32 = 8;
 
-/// Rule 4: `unsafe` stays quarantined in the two whitelisted modules,
+/// Rule 4: `unsafe` stays quarantined in the three whitelisted modules,
 /// and every occurrence there carries a nearby `// SAFETY:` comment.
 fn check_unsafe_safety(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
     for &i in &ctx.code {
@@ -420,8 +434,8 @@ fn check_unsafe_safety(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
                 "unsafe-safety",
                 t.line,
                 format!(
-                    "unsafe outside the whitelist ({}) — keep raw-pointer/FFI code \
-                     quarantined in the reactor and the PJRT path",
+                    "unsafe outside the whitelist ({}) — keep raw-pointer/FFI/intrinsic \
+                     code quarantined in the reactor, the PJRT path and the SIMD tile",
                     UNSAFE_WHITELIST.join(", ")
                 ),
             ));
@@ -601,6 +615,129 @@ fn check_print_discipline(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
                 t.line,
                 "process::exit in library code — return an error and let main decide"
                     .to_string(),
+            ));
+        }
+    }
+}
+
+/// The one module allowed to spell a float→int `as` cast: the checked
+/// quantizer itself (its cast is guarded by an explicit range test).
+const FLOAT_CAST_WHITELIST: [&str; 1] = ["src/hashing/quantize.rs"];
+
+/// Signature-width identifiers a float expression must never be
+/// `as`-cast to directly.
+const NARROW_INT_TYPES: [&str; 3] = ["i8", "i16", "i32"];
+
+/// `f64`/`f32` methods whose receiver (and so whose call result) is a
+/// float. Deliberately excludes names shared with integer/iterator
+/// APIs (`abs`, `min`, `max`, `signum`, `clamp`) — a lexical rule
+/// cannot see types, so shared names would flag integer code.
+const FLOAT_METHODS: [&str; 19] = [
+    "floor",
+    "ceil",
+    "round",
+    "trunc",
+    "fract",
+    "sqrt",
+    "cbrt",
+    "exp",
+    "exp2",
+    "ln",
+    "log2",
+    "log10",
+    "powf",
+    "powi",
+    "recip",
+    "to_degrees",
+    "to_radians",
+    "mul_add",
+    "hypot",
+];
+
+/// Is this `Number` literal a float? Loose-lexed suffixes are folded
+/// into the token text, so `2.5`, `1e9`, and `3f64` are each one
+/// token; hex/octal/binary literals are integers even when their
+/// digits contain `e`.
+fn is_float_literal(text: &str) -> bool {
+    let lower = text.to_ascii_lowercase();
+    if lower.starts_with("0x") || lower.starts_with("0o") || lower.starts_with("0b") {
+        return false;
+    }
+    lower.contains('.')
+        || lower.ends_with("f32")
+        || lower.ends_with("f64")
+        || lower.contains('e')
+}
+
+/// Rule 7: a bare `as i8`/`as i16`/`as i32` on a float expression
+/// **saturates silently** — overflow pins to MAX/MIN and NaN becomes 0
+/// — which is exactly the seed bug that collapsed non-finite hash
+/// values into bucket 0. Library code routes every float→int lowering
+/// through `hashing::quantize_hash` (scalar) or `SigVec::from_i32`
+/// (signature narrowing), both of which range-check first and return a
+/// typed `HashOverflow`.
+///
+/// Lexical detection: flag `<float> as {i8,i16,i32}` where `<float>`
+/// is a float literal, the ident `f32`/`f64` (a cast chain like
+/// `x as f64 as i32`), or a `)` whose matching `(` closes a call to a
+/// known float-only method (`.floor() as i32`). Tests are exempt —
+/// fixtures legitimately build raw expectations — as is the quantize
+/// module, whose single cast sits behind an explicit range guard.
+fn check_checked_float_cast(ctx: &FileCtx<'_>, out: &mut Vec<Violation>) {
+    let p = ctx.rel_path;
+    if !p.starts_with("src/") || FLOAT_CAST_WHITELIST.contains(&p) {
+        return;
+    }
+    let n = ctx.code.len();
+    for c in 1..n.saturating_sub(1) {
+        if ctx.in_test[c] || !ctx.code_tok(c).is_ident("as") {
+            continue;
+        }
+        let target = ctx.code_tok(c + 1);
+        if target.kind != TokenKind::Ident || !NARROW_INT_TYPES.contains(&target.text.as_str()) {
+            continue;
+        }
+        let prev = ctx.code_tok(c - 1);
+        let float_source = match prev.kind {
+            TokenKind::Number => is_float_literal(&prev.text),
+            TokenKind::Ident => prev.text == "f32" || prev.text == "f64",
+            _ if prev.is_punct(')') => {
+                // Walk back to the matching `(`; the ident before it
+                // names the call. `(a / b).floor() as i32` matches the
+                // empty arg list of `floor`, not the parenthesised
+                // receiver, because the scan starts at the *last* `)`.
+                let mut depth = 0usize;
+                let mut open = None;
+                for j in (0..c).rev() {
+                    if ctx.code_tok(j).is_punct(')') {
+                        depth += 1;
+                    } else if ctx.code_tok(j).is_punct('(') {
+                        depth -= 1;
+                        if depth == 0 {
+                            open = Some(j);
+                            break;
+                        }
+                    }
+                }
+                open.is_some_and(|j| {
+                    j > 0
+                        && ctx.code_tok(j - 1).kind == TokenKind::Ident
+                        && FLOAT_METHODS.contains(&ctx.code_tok(j - 1).text.as_str())
+                })
+            }
+            _ => false,
+        };
+        if float_source {
+            out.push(violation(
+                ctx,
+                "checked-float-cast",
+                ctx.code_tok(c).line,
+                format!(
+                    "bare float `as {}` saturates (overflow pins to MAX/MIN, NaN \
+                     becomes 0) — use hashing::quantize_hash / SigVec::from_i32, \
+                     which range-check and return a typed HashOverflow",
+                    target.text
+                ),
             ));
         }
     }
@@ -830,6 +967,44 @@ mod tests {
     fn print_rule_allows_writeln_and_log_warn() {
         let src = "writeln!(out, \"data\")?;\ncrate::util::log::warn(\"slow path\");\n";
         assert!(run_rule("print-discipline", "src/trace/mod.rs", src).is_empty());
+    }
+
+    // ---------------------------------------------- checked-float-cast
+
+    #[test]
+    fn float_cast_rule_flags_literals_cast_chains_and_float_methods() {
+        let src = "let a = 2.5 as i32;\n\
+                   let b = 1e9 as i16;\n\
+                   let c = x as f64 as i32;\n\
+                   let d = (v / r).floor() as i32;\n\
+                   let e = y.powi(3) as i8;\n";
+        let v = run_rule("checked-float-cast", "src/coordinator/hashpath.rs", src);
+        assert_eq!(v.iter().map(|v| v.line).collect::<Vec<_>>(), [1, 2, 3, 4, 5]);
+        assert!(v[0].message.contains("quantize_hash"));
+    }
+
+    #[test]
+    fn float_cast_rule_allows_integer_sources_and_unlisted_methods() {
+        let src = "let a = 5 as i32;\n\
+                   let b = 0x1e as i32;\n\
+                   let c = k as i32;\n\
+                   let d = v.len() as i32;\n\
+                   let e = i8::from_le_bytes(b) as i32;\n\
+                   let f = (id % 3) as i32;\n\
+                   let g = n.abs() as i32;\n\
+                   let h = x as i64;\n";
+        assert!(run_rule("checked-float-cast", "src/lsh/shard.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_cast_rule_exempts_quantize_tests_and_non_src() {
+        let src = "let a = 2.5 as i32;\n";
+        assert!(run_rule("checked-float-cast", "src/hashing/quantize.rs", src).is_empty());
+        assert!(run_rule("checked-float-cast", "tests/kernel_parity.rs", src).is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\nfn t() { let a = 2.5 as i32; }\n}\n";
+        assert!(run_rule("checked-float-cast", "src/lsh/mod.rs", in_test).is_empty());
+        let prose = "// 2.5 as i32 in a comment\nlet s = \"3.5 as i32\";\n";
+        assert!(run_rule("checked-float-cast", "src/lsh/mod.rs", prose).is_empty());
     }
 
     #[test]

@@ -6,7 +6,11 @@
 //!
 //! * **Kernel** — rows/s of the seed scalar f64 row-at-a-time matmul
 //!   ([`FoldedHashPath::hash_rows_scalar`]) vs the blocked/threaded f32
-//!   kernel ([`HashPath::hash_rows_into`]) across `{N, K, B}`.
+//!   kernel ([`HashPath::hash_rows_into`]) across `{N, K, B}`, plus an
+//!   A/B of the portable register tile against the AVX2 intrinsics tile
+//!   (`set_simd`; the columns coincide without `--features simd`). Each
+//!   case also records the narrowest signature storage width the shape
+//!   admits under a ‖x‖∞ ≤ 1 input cap (`sig_width`).
 //! * **Index** — inserts/s and (multi-probe) queries/s of the seed-era
 //!   index model (`Box<[i32]>` keys under SipHash, `HashSet` dedup,
 //!   allocating perturbation lists) vs the fingerprint-keyed
@@ -137,14 +141,19 @@ pub fn run_with_config(opts: &HashBenchOptions, config: Option<BenchConfig>) -> 
     };
     let batches: &[usize] = if opts.quick { &[1, 64] } else { &[1, 16, 64, 256] };
 
-    println!("== bench-hash: seed scalar vs blocked kernel (rows/s) ==");
+    println!("== bench-hash: seed scalar vs blocked vs SIMD kernel (rows/s) ==");
+    let simd_hw = crate::coordinator::simd_kernel_available();
     let mut kernel_cases = Vec::new();
     for &(n, k) in kernel_shapes {
         let mut rng = Xoshiro256pp::seed_from_u64(0xBE + n as u64);
         let emb = MonteCarloEmbedder::new(Interval::unit(), n, 2.0, &mut rng);
         let bank = PStableHashBank::new(n, k, 2.0, 1.0, &mut rng);
         let proj_rows: Vec<&[f64]> = (0..k).map(|j| bank.projection_row(j)).collect();
-        let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+        let mut folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+        // the narrowest storage width this shape provably fits under the
+        // generator's ‖x‖∞ ≤ 1 input cap (the service derives the same
+        // bound from `[hash] norm_cap`)
+        let sig_width = folded.sig_width(1.0);
         for &b in batches {
             let rows = random_rows(n, b, (n * 31 + b) as u64);
             let seed_rows = bench
@@ -154,6 +163,11 @@ pub fn run_with_config(opts: &HashBenchOptions, config: Option<BenchConfig>) -> 
                 .throughput()
                 .unwrap_or(0.0);
             let mut sigs = Signatures::new(k);
+            // A/B the portable register tile against the intrinsics tile
+            // on the same instance; without `--features simd` (or off
+            // x86_64/AVX2) set_simd(true) is a no-op and the two columns
+            // coincide.
+            folded.set_simd(false);
             let blocked_rows = bench
                 .throughput_case(&format!("kernel/blocked/n{n}-k{k}-b{b}"), b as f64, || {
                     folded
@@ -163,7 +177,18 @@ pub fn run_with_config(opts: &HashBenchOptions, config: Option<BenchConfig>) -> 
                 })
                 .throughput()
                 .unwrap_or(0.0);
+            folded.set_simd(true);
+            let simd_rows = bench
+                .throughput_case(&format!("kernel/simd/n{n}-k{k}-b{b}"), b as f64, || {
+                    folded
+                        .hash_rows_into(black_box(&rows), &mut sigs)
+                        .unwrap();
+                    black_box(sigs.as_slice());
+                })
+                .throughput()
+                .unwrap_or(0.0);
             let speedup = if seed_rows > 0.0 { blocked_rows / seed_rows } else { 0.0 };
+            let simd_speedup = if blocked_rows > 0.0 { simd_rows / blocked_rows } else { 0.0 };
             kernel_cases.push(json::object(vec![
                 ("n", n.into()),
                 ("k", k.into()),
@@ -171,6 +196,10 @@ pub fn run_with_config(opts: &HashBenchOptions, config: Option<BenchConfig>) -> 
                 ("seed_rows_per_s", seed_rows.into()),
                 ("blocked_rows_per_s", blocked_rows.into()),
                 ("kernel_speedup", speedup.into()),
+                ("simd_active", simd_hw.into()),
+                ("simd_rows_per_s", simd_rows.into()),
+                ("simd_speedup", simd_speedup.into()),
+                ("sig_width", sig_width.name().into()),
             ]));
         }
     }
@@ -318,6 +347,10 @@ mod tests {
         for c in kernel {
             assert!(c.get("seed_rows_per_s").and_then(Value::as_f64).unwrap() > 0.0);
             assert!(c.get("blocked_rows_per_s").and_then(Value::as_f64).unwrap() > 0.0);
+            assert!(c.get("simd_rows_per_s").and_then(Value::as_f64).unwrap() > 0.0);
+            assert!(c.get("simd_active").is_some(), "simd_active column missing");
+            let w = c.get("sig_width").and_then(Value::as_str).unwrap();
+            assert!(matches!(w, "i8" | "i16" | "i32"), "bad sig_width {w}");
         }
         let index = back.get("index_cases").and_then(Value::as_array).unwrap();
         assert!(!index.is_empty());

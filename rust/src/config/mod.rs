@@ -403,6 +403,13 @@ pub struct ServiceConfig {
     pub hash: HashKind,
     /// bucket width r
     pub r: f64,
+    /// input norm cap `c`: when `> 0`, every sample row is promised to
+    /// satisfy `‖x‖∞ ≤ c`, which lets the coordinator derive a provable
+    /// hash-value bound from the folded matrix and store signatures at
+    /// the narrowest admissible width (`i8`/`i16` instead of `i32` —
+    /// see `hashing/quantize.rs`). Rows beyond the admitted range get
+    /// per-item errors. `0` (default) disables narrowing.
+    pub norm_cap: f64,
     /// hashes per table (AND)
     pub k: usize,
     /// number of tables (OR)
@@ -446,6 +453,7 @@ impl Default for ServiceConfig {
             p: 2.0,
             hash: HashKind::PStable,
             r: 1.0,
+            norm_cap: 0.0,
             k: 2,
             l: 16,
             probe_depth: 1,
@@ -510,6 +518,14 @@ impl ServiceConfig {
         }
         if let Some(v) = get_f64("hash", "r") {
             cfg.r = v;
+        }
+        if let Some(v) = get_f64("hash", "norm_cap") {
+            if !v.is_finite() || v < 0.0 {
+                return Err(ConfigError::msg(format!(
+                    "hash norm_cap must be finite and >= 0, got {v}"
+                )));
+            }
+            cfg.norm_cap = v;
         }
         if let Some(v) = get_usize("index", "k") {
             cfg.k = v;
@@ -730,6 +746,7 @@ p = 2.0
 [hash]
 family = "pstable"
 r = 0.5
+norm_cap = 1.5
 
 [index]
 k = 3
@@ -781,6 +798,7 @@ migration_chunk = 128
         assert_eq!(cfg.embedding, EmbeddingKind::Chebyshev);
         assert_eq!(cfg.dim, 128);
         assert_eq!(cfg.r, 0.5);
+        assert_eq!(cfg.norm_cap, 1.5);
         assert_eq!(cfg.k, 3);
         assert_eq!(cfg.l, 8);
         assert_eq!(cfg.total_hashes(), 24);
@@ -810,6 +828,15 @@ migration_chunk = 128
         assert_eq!(cfg.cluster.retry_backoff_cap_ms, 400);
         assert_eq!(cfg.cluster.migration_chunk, 128);
         assert_eq!(cfg.shard_range, None, "shard range is CLI-only");
+    }
+
+    #[test]
+    fn norm_cap_validated() {
+        assert!(ServiceConfig::from_toml("[hash]\nnorm_cap = -1.0\n").is_err());
+        let cfg = ServiceConfig::from_toml("").unwrap();
+        assert_eq!(cfg.norm_cap, 0.0, "narrowing is opt-in");
+        let cfg = ServiceConfig::from_toml("[hash]\nnorm_cap = 2.0\n").unwrap();
+        assert_eq!(cfg.norm_cap, 2.0);
     }
 
     #[test]

@@ -57,17 +57,75 @@
 //! signatures against [`FoldedHashPath::hash_rows_scalar`] across random
 //! `{N, K, B}` shapes including `B = 1` and non-multiples of the block
 //! sizes.
+//!
+//! # SIMD dispatch rule
+//!
+//! With `--features simd` on x86_64, the register-tile accumulation is
+//! replaced by explicit AVX2+FMA intrinsics (`coordinator/simd.rs`)
+//! whenever the CPU reports both features at runtime *and* the column
+//! tile is full width (`jw == COL_BLOCK`); partial tiles, other
+//! architectures, and builds without the feature run the portable
+//! scalar tile. FMA accumulates in the same `i = 0..N` order with
+//! strictly fewer roundings, so the error radius `τ` above — derived
+//! for one rounding per multiply and add in any order — still bounds
+//! the f32/f64 divergence and the floor-boundary fallback keeps byte
+//! identity with the scalar oracle. [`FoldedHashPath::simd_active`]
+//! reports which path a given instance uses; `bench-hash` A/Bs them.
+//!
+//! # Hash-value quantization and signature width
+//!
+//! Lowering the f64 accumulator to an `i32` bucket id goes through
+//! [`quantize_hash`] everywhere (kernel, exact fallback, scalar
+//! oracle): values outside `i32` range — huge-norm rows, `NaN`/`∞`
+//! accumulators — surface as typed per-row errors via
+//! [`HashPath::hash_rows_checked`], never a silently saturated bucket.
+//! When the service configures an input norm cap `c`,
+//! [`HashPath::sig_width`] derives the provable hash range
+//! `max_j (c·Σᵢ|Mᵢⱼ| + |bⱼ|)` from the folded matrix and picks the
+//! narrowest storage width ([`crate::hashing::SigWidth`]) whose range
+//! contains it; [`Signatures::narrowed`] then re-encodes a kernel
+//! output block at that width (2–4× smaller), with bucket values
+//! widened back to `i32` at probe/fingerprint time so candidate sets
+//! are identical to the `i32` path (see `hashing/quantize.rs`).
 
 use crate::embedding::Embedder;
+use crate::hashing::quantize::{quantize_hash, HashOverflow, SigRef, SigWidth};
 use crate::hashing::HashBank;
 use anyhow::Result;
+
+/// Width-typed flat storage behind [`Signatures`]: the same `[B × K]`
+/// layout at 1, 2, or 4 bytes per bucket id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum SigData {
+    I8(Vec<i8>),
+    I16(Vec<i16>),
+    I32(Vec<i32>),
+}
+
+impl SigData {
+    fn len(&self) -> usize {
+        match self {
+            SigData::I8(v) => v.len(),
+            SigData::I16(v) => v.len(),
+            SigData::I32(v) => v.len(),
+        }
+    }
+}
 
 /// A flat batch of hash signatures: `rows × signature_len` bucket ids in
 /// one contiguous allocation. Replaces `Vec<Vec<i32>>` on the request
 /// path; the buffer is reused across batches via [`Signatures::reset`].
+///
+/// The kernel always stages at `i32` ([`SigWidth::I32`], the seed
+/// layout): `reset`/`row_mut`/`as_mut_slice` operate on that staging
+/// form, and the `i32`-typed accessors (`row`, `as_slice`, `iter`)
+/// panic on a narrowed block. [`Signatures::narrowed`] re-encodes a
+/// staged block at a provably-admissible narrow width (see the module
+/// docs); width-agnostic consumers read rows through
+/// [`Signatures::row_ref`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Signatures {
-    data: Vec<i32>,
+    data: SigData,
     k: usize,
 }
 
@@ -75,12 +133,24 @@ impl Signatures {
     /// An empty buffer producing signatures of length `k`.
     pub fn new(k: usize) -> Self {
         assert!(k > 0, "signature length must be positive");
-        Self { data: Vec::new(), k }
+        Self {
+            data: SigData::I32(Vec::new()),
+            k,
+        }
     }
 
     /// Signature length `K` of each row.
     pub fn signature_len(&self) -> usize {
         self.k
+    }
+
+    /// Storage width of the block.
+    pub fn width(&self) -> SigWidth {
+        match &self.data {
+            SigData::I8(_) => SigWidth::I8,
+            SigData::I16(_) => SigWidth::I16,
+            SigData::I32(_) => SigWidth::I32,
+        }
     }
 
     /// Number of rows currently held.
@@ -90,40 +160,74 @@ impl Signatures {
 
     /// True when no rows are held.
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.data.len() == 0
     }
 
-    /// Resize to `rows × k` zeroed entries, keeping the allocation.
+    /// Resize to `rows × k` zeroed `i32` entries, keeping the allocation
+    /// when the block is already `i32` staging.
     pub fn reset(&mut self, k: usize, rows: usize) {
         assert!(k > 0, "signature length must be positive");
         self.k = k;
-        self.data.clear();
-        self.data.resize(rows * k, 0);
+        match &mut self.data {
+            SigData::I32(v) => {
+                v.clear();
+                v.resize(rows * k, 0);
+            }
+            _ => self.data = SigData::I32(vec![0; rows * k]),
+        }
     }
 
-    /// Signature of row `i`.
+    fn i32_data(&self) -> &Vec<i32> {
+        match &self.data {
+            SigData::I32(v) => v,
+            _ => panic!(
+                "i32 access to a {}-narrowed signature block (use row_ref)",
+                self.width().name()
+            ),
+        }
+    }
+
+    /// Signature of row `i` (staged `i32` blocks only; narrowed blocks
+    /// are read through [`Signatures::row_ref`]).
     pub fn row(&self, i: usize) -> &[i32] {
-        &self.data[i * self.k..(i + 1) * self.k]
+        &self.i32_data()[i * self.k..(i + 1) * self.k]
     }
 
-    /// Mutable signature of row `i`.
+    /// Signature of row `i` at the block's storage width.
+    pub fn row_ref(&self, i: usize) -> SigRef<'_> {
+        let (k, r) = (self.k, i);
+        match &self.data {
+            SigData::I8(v) => SigRef::I8(&v[r * k..(r + 1) * k]),
+            SigData::I16(v) => SigRef::I16(&v[r * k..(r + 1) * k]),
+            SigData::I32(v) => SigRef::I32(&v[r * k..(r + 1) * k]),
+        }
+    }
+
+    /// Mutable signature of row `i` (staged `i32` blocks only).
     pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
-        &mut self.data[i * self.k..(i + 1) * self.k]
+        let k = self.k;
+        match &mut self.data {
+            SigData::I32(v) => &mut v[i * k..(i + 1) * k],
+            _ => panic!("mutable access to a narrowed signature block"),
+        }
     }
 
-    /// Iterate over row signatures.
+    /// Iterate over row signatures (staged `i32` blocks only).
     pub fn iter(&self) -> impl Iterator<Item = &[i32]> {
-        self.data.chunks_exact(self.k)
+        self.i32_data().chunks_exact(self.k)
     }
 
-    /// The whole flat `[rows × k]` buffer.
+    /// The whole flat `[rows × k]` buffer (staged `i32` blocks only).
     pub fn as_slice(&self) -> &[i32] {
-        &self.data
+        self.i32_data()
     }
 
-    /// The whole flat buffer, mutably.
+    /// The whole flat buffer, mutably (staged `i32` blocks only).
     pub fn as_mut_slice(&mut self) -> &mut [i32] {
-        &mut self.data
+        match &mut self.data {
+            SigData::I32(v) => v,
+            _ => panic!("mutable access to a narrowed signature block"),
+        }
     }
 
     /// Wrap an existing flat buffer (`data.len()` must be a multiple of
@@ -135,7 +239,50 @@ impl Signatures {
             "flat buffer length {} is not a multiple of k = {k}",
             data.len()
         );
-        Self { data, k }
+        Self {
+            data: SigData::I32(data),
+            k,
+        }
+    }
+
+    /// Re-encode a staged `i32` block at `width`. Rows already flagged
+    /// in `bad` are skipped (left zeroed); rows holding a value outside
+    /// the width's range are zeroed and flagged in `bad` — the per-item
+    /// error surface for inputs beyond the configured norm cap.
+    /// `width == I32` copies unchanged.
+    pub fn narrowed(&self, width: SigWidth, bad: &mut [bool]) -> Signatures {
+        assert_eq!(bad.len(), self.len(), "bad-row flags must cover every row");
+        let src = self.i32_data();
+        let k = self.k;
+        fn narrow<T: Copy + Default>(
+            src: &[i32],
+            k: usize,
+            width: SigWidth,
+            bad: &mut [bool],
+            conv: impl Fn(i32) -> T,
+        ) -> Vec<T> {
+            let mut out = vec![T::default(); src.len()];
+            for (i, flag) in bad.iter_mut().enumerate() {
+                if *flag {
+                    continue;
+                }
+                let row = &src[i * k..(i + 1) * k];
+                if row.iter().all(|&v| width.admits(v)) {
+                    for (d, &v) in out[i * k..(i + 1) * k].iter_mut().zip(row) {
+                        *d = conv(v);
+                    }
+                } else {
+                    *flag = true;
+                }
+            }
+            out
+        }
+        let data = match width {
+            SigWidth::I8 => SigData::I8(narrow(src, k, width, bad, |v| v as i8)),
+            SigWidth::I16 => SigData::I16(narrow(src, k, width, bad, |v| v as i16)),
+            SigWidth::I32 => SigData::I32(src.clone()),
+        };
+        Signatures { data, k }
     }
 }
 
@@ -175,38 +322,75 @@ impl SigView {
         }
     }
 
-    /// The signature row.
+    /// Number of bucket ids in the row.
+    pub fn len(&self) -> usize {
+        if self.block.is_empty() {
+            0
+        } else {
+            self.block.signature_len()
+        }
+    }
+
+    /// True when the row has no bucket ids.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage width of the underlying block.
+    pub fn width(&self) -> SigWidth {
+        self.block.width()
+    }
+
+    /// The row at its storage width (what the wire encoders walk —
+    /// zero-copy for every width).
+    pub fn row_ref(&self) -> SigRef<'_> {
+        if self.block.is_empty() {
+            SigRef::I32(&[])
+        } else {
+            self.block.row_ref(self.row)
+        }
+    }
+
+    /// Bucket id `j`, widened to `i32`.
+    pub fn get(&self, j: usize) -> i32 {
+        self.row_ref().get(j)
+    }
+
+    /// Iterate the bucket ids widened to `i32` — identical values at
+    /// every storage width, so the wire format is width-independent.
+    pub fn iter_i32(&self) -> impl Iterator<Item = i32> + '_ {
+        let r = self.row_ref();
+        (0..r.len()).map(move |j| r.get(j))
+    }
+
+    /// The signature row as an `i32` slice. Panics on a narrowed block;
+    /// width-agnostic readers use [`SigView::row_ref`] /
+    /// [`SigView::iter_i32`].
     pub fn as_slice(&self) -> &[i32] {
+        if self.block.is_empty() {
+            return &[];
+        }
         let k = self.block.signature_len();
-        self.block
-            .as_slice()
-            .get(self.row * k..(self.row + 1) * k)
-            .unwrap_or(&[])
+        &self.block.as_slice()[self.row * k..(self.row + 1) * k]
     }
 
-    /// Copy out an owned signature.
+    /// Copy out an owned `i32` signature (widening at narrow widths).
     pub fn to_vec(&self) -> Vec<i32> {
-        self.as_slice().to_vec()
-    }
-}
-
-impl std::ops::Deref for SigView {
-    type Target = [i32];
-
-    fn deref(&self) -> &[i32] {
-        self.as_slice()
+        self.row_ref().to_i32_vec()
     }
 }
 
 impl std::fmt::Debug for SigView {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        std::fmt::Debug::fmt(self.as_slice(), f)
+        std::fmt::Debug::fmt(&self.row_ref(), f)
     }
 }
 
 impl PartialEq for SigView {
     fn eq(&self, other: &Self) -> bool {
-        self.as_slice() == other.as_slice()
+        // value equality over widened bucket ids: a narrowed row equals
+        // its i32 twin
+        self.len() == other.len() && self.iter_i32().eq(other.iter_i32())
     }
 }
 
@@ -222,8 +406,38 @@ pub trait HashPath: Send + Sync {
 
     /// Hash a batch of sample rows into `out`, which is resized to
     /// `rows.len() × signature_len` (storage reused across calls). On
-    /// error the contents of `out` are unspecified.
+    /// error the contents of `out` are unspecified. A row whose hash
+    /// value overflows the `i32` signature range fails the whole batch;
+    /// batch servers that need per-item blame use
+    /// [`HashPath::hash_rows_checked`].
     fn hash_rows_into(&self, rows: &[Vec<f32>], out: &mut Signatures) -> Result<()>;
+
+    /// Per-item-checked batch hash: like [`HashPath::hash_rows_into`],
+    /// but a row whose hash value overflows (huge norm, `NaN`/`∞` dot)
+    /// is zeroed and flagged in `bad` instead of failing the batch —
+    /// `bad` is resized to `rows.len()`, `true` marking overflowed
+    /// rows. Structural errors (wrong row length) still fail the call.
+    /// The default treats every row that hashes as good, which is
+    /// correct only for paths that already reject overflow wholesale.
+    fn hash_rows_checked(
+        &self,
+        rows: &[Vec<f32>],
+        out: &mut Signatures,
+        bad: &mut Vec<bool>,
+    ) -> Result<()> {
+        bad.clear();
+        bad.resize(rows.len(), false);
+        self.hash_rows_into(rows, out)
+    }
+
+    /// The narrowest signature storage width provably admissible when
+    /// every input row satisfies `‖x‖∞ ≤ norm_cap` (see the module
+    /// docs for the bound). `norm_cap ≤ 0` or non-finite disables
+    /// narrowing. The default is the always-safe seed layout.
+    fn sig_width(&self, norm_cap: f64) -> SigWidth {
+        let _ = norm_cap;
+        SigWidth::I32
+    }
 
     /// Allocating convenience wrapper around
     /// [`HashPath::hash_rows_into`].
@@ -318,8 +532,24 @@ impl HashPath for CpuHashPath {
     }
 
     fn hash_rows_into(&self, rows: &[Vec<f32>], out: &mut Signatures) -> Result<()> {
+        let mut bad = Vec::new();
+        self.hash_rows_checked(rows, out, &mut bad)?;
+        if let Some(i) = bad.iter().position(|&b| b) {
+            anyhow::bail!("row {i}: hash value overflows the i32 signature range");
+        }
+        Ok(())
+    }
+
+    fn hash_rows_checked(
+        &self,
+        rows: &[Vec<f32>],
+        out: &mut Signatures,
+        bad: &mut Vec<bool>,
+    ) -> Result<()> {
         let n = self.embedder.dim();
         out.reset(self.bank.num_hashes(), rows.len());
+        bad.clear();
+        bad.resize(rows.len(), false);
         // one f64 conversion scratch for the whole batch (the seed path
         // allocated a fresh Vec per row)
         let mut row64 = vec![0.0f64; n];
@@ -328,8 +558,14 @@ impl HashPath for CpuHashPath {
             for (d, &s) in row64.iter_mut().zip(row) {
                 *d = s as f64;
             }
-            self.bank
-                .hash_into(&self.embedder.embed_samples(&row64), out.row_mut(i));
+            if self
+                .bank
+                .try_hash_into(&self.embedder.embed_samples(&row64), out.row_mut(i))
+                .is_err()
+            {
+                out.row_mut(i).fill(0);
+                bad[i] = true;
+            }
         }
         Ok(())
     }
@@ -342,11 +578,13 @@ impl HashPath for CpuHashPath {
 }
 
 /// Rows of the output tile computed together (shares each loaded `M`
-/// slice across `ROW_BLOCK` accumulator rows).
-const ROW_BLOCK: usize = 4;
+/// slice across `ROW_BLOCK` accumulator rows). Shared with the
+/// intrinsics tile in `coordinator/simd.rs`.
+pub(crate) const ROW_BLOCK: usize = 4;
 
 /// Columns per register tile (f32 lanes the inner loop vectorizes over).
-const COL_BLOCK: usize = 32;
+/// Shared with the intrinsics tile in `coordinator/simd.rs`.
+pub(crate) const COL_BLOCK: usize = 32;
 
 /// Multiply-adds (`B·N·K`) above which `hash_rows` fans the batch out
 /// across scoped threads. Below it the spawn/join overhead dominates.
@@ -373,6 +611,10 @@ pub struct FoldedHashPath {
     k: usize,
     /// embedding kept for `embed_row` (re-rank distances)
     embedder: Box<dyn Embedder>,
+    /// whether full-width column tiles run the intrinsics path (see the
+    /// module's SIMD dispatch rule); defaults to hardware availability,
+    /// [`FoldedHashPath::set_simd`] overrides for A/B benchmarking
+    simd: bool,
 }
 
 impl FoldedHashPath {
@@ -404,7 +646,20 @@ impl FoldedHashPath {
             n,
             k,
             embedder,
+            simd: super::simd::kernel_available(),
         }
+    }
+
+    /// Force the intrinsics tile on or off (ignored — stays off — when
+    /// the hardware/build cannot run it). `bench-hash` uses this to A/B
+    /// the SIMD and portable tiles on one instance.
+    pub fn set_simd(&mut self, on: bool) {
+        self.simd = on && super::simd::kernel_available();
+    }
+
+    /// Whether full-width column tiles run the intrinsics path.
+    pub fn simd_active(&self) -> bool {
+        self.simd
     }
 
     /// The folded matrix as f32 (row-major `[N][K]`) — fed verbatim to the
@@ -439,7 +694,9 @@ impl FoldedHashPath {
                     *a += x * mij;
                 }
             }
-            out.push(acc.iter().map(|a| a.floor() as i32).collect());
+            let sig: std::result::Result<Vec<i32>, HashOverflow> =
+                acc.iter().map(|&a| quantize_hash(a)).collect();
+            out.push(sig?);
         }
         Ok(out)
     }
@@ -447,22 +704,27 @@ impl FoldedHashPath {
     /// One output cell of the scalar f64 recurrence — the exact fallback
     /// for boundary cells. Must mirror `hash_rows_scalar`'s per-element
     /// operation order (offset first, then `i = 0..N` in order) so the
-    /// fallback is bit-identical to the seed path.
-    fn exact_cell(&self, row: &[f32], j: usize) -> i32 {
+    /// fallback is bit-identical to the seed path. Overflow/`NaN`
+    /// surfaces as a typed error (the seed code saturated silently).
+    fn exact_cell(&self, row: &[f32], j: usize) -> std::result::Result<i32, HashOverflow> {
         let mut a = self.offsets[j];
         for (i, &x) in row.iter().enumerate() {
             a += (x as f64) * self.m[i * self.k + j];
         }
-        a.floor() as i32
+        quantize_hash(a)
     }
 
     /// The blocked f32 kernel over a contiguous chunk of rows; `out` is
-    /// the matching `rows.len() × k` slice of the signature buffer. Row
-    /// lengths must already be validated.
-    fn hash_block(&self, rows: &[Vec<f32>], out: &mut [i32]) {
+    /// the matching `rows.len() × k` slice of the signature buffer and
+    /// `bad` the matching row-flag slice (a row is flagged, with the
+    /// offending cells zeroed, when the exact recurrence overflows
+    /// `i32` — huge-norm or non-finite input; flagged rows carry no
+    /// meaningful signature). Row lengths must already be validated.
+    fn hash_block(&self, rows: &[Vec<f32>], out: &mut [i32], bad: &mut [bool]) {
         let n = self.n;
         let k = self.k;
         debug_assert_eq!(out.len(), rows.len() * k);
+        debug_assert_eq!(bad.len(), rows.len());
         // Error radius constant: |f32 blocked − f64 scalar| per cell is
         // ≤ C·ε₃₂·(‖x‖∞·Σᵢ|Mᵢⱼ| + |bⱼ|) for any summation order. The
         // standard γ-analysis gives, with unit roundoff u = ε₃₂/2: one u
@@ -478,7 +740,11 @@ impl FoldedHashPath {
         let eps = (0.5 * n as f64 + 4.0) * (f32::EPSILON as f64);
         let mut acc = [0.0f32; ROW_BLOCK * COL_BLOCK];
         let mut xinf = [0.0f64; ROW_BLOCK];
-        for (rb, out_rb) in rows.chunks(ROW_BLOCK).zip(out.chunks_mut(ROW_BLOCK * k)) {
+        for ((rb, out_rb), bad_rb) in rows
+            .chunks(ROW_BLOCK)
+            .zip(out.chunks_mut(ROW_BLOCK * k))
+            .zip(bad.chunks_mut(ROW_BLOCK))
+        {
             for (r, row) in rb.iter().enumerate() {
                 xinf[r] = row.iter().fold(0.0f32, |a, &x| a.max(x.abs())) as f64;
             }
@@ -489,13 +755,20 @@ impl FoldedHashPath {
                     acc[r * COL_BLOCK..r * COL_BLOCK + jw]
                         .copy_from_slice(&self.off32[jb..jb + jw]);
                 }
-                for i in 0..n {
-                    let mrow = &self.m32[i * k + jb..i * k + jb + jw];
-                    for (r, row) in rb.iter().enumerate() {
-                        let x = row[i];
-                        let a = &mut acc[r * COL_BLOCK..r * COL_BLOCK + jw];
-                        for (aj, &mij) in a.iter_mut().zip(mrow) {
-                            *aj += x * mij;
+                // full-width tiles take the intrinsics path when active;
+                // partial tiles and non-SIMD builds run the portable tile
+                let simd_done = self.simd
+                    && jw == COL_BLOCK
+                    && super::simd::accumulate_tile(rb, &self.m32, k, jb, &mut acc);
+                if !simd_done {
+                    for i in 0..n {
+                        let mrow = &self.m32[i * k + jb..i * k + jb + jw];
+                        for (r, row) in rb.iter().enumerate() {
+                            let x = row[i];
+                            let a = &mut acc[r * COL_BLOCK..r * COL_BLOCK + jw];
+                            for (aj, &mij) in a.iter_mut().zip(mrow) {
+                                *aj += x * mij;
+                            }
                         }
                     }
                 }
@@ -508,11 +781,20 @@ impl FoldedHashPath {
                         let f = v.floor();
                         // NaN/inf accumulators fail both comparisons and
                         // fall through to the exact path
-                        let safe = v.is_finite() && v - f > tau && (f + 1.0) - v > tau;
-                        out_rb[r * k + col] = if safe {
-                            f as i32
-                        } else {
-                            self.exact_cell(row, col)
+                        let boundary = !(v - f > tau && (f + 1.0) - v > tau);
+                        out_rb[r * k + col] = match quantize_hash(v) {
+                            Ok(q) if !boundary => q,
+                            // boundary, non-finite, or out-of-range f32
+                            // cell: recompute exactly in f64; a cell the
+                            // exact recurrence cannot represent flags
+                            // the whole row
+                            _ => match self.exact_cell(row, col) {
+                                Ok(q) => q,
+                                Err(_) => {
+                                    bad_rb[r] = true;
+                                    0
+                                }
+                            },
                         };
                     }
                 }
@@ -532,10 +814,29 @@ impl HashPath for FoldedHashPath {
     }
 
     fn hash_rows_into(&self, rows: &[Vec<f32>], out: &mut Signatures) -> Result<()> {
+        let mut bad = Vec::new();
+        self.hash_rows_checked(rows, out, &mut bad)?;
+        if let Some(i) = bad.iter().position(|&b| b) {
+            anyhow::bail!(
+                "row {i}: hash value overflows the i32 signature range \
+                 (non-finite or huge-norm input)"
+            );
+        }
+        Ok(())
+    }
+
+    fn hash_rows_checked(
+        &self,
+        rows: &[Vec<f32>],
+        out: &mut Signatures,
+        bad: &mut Vec<bool>,
+    ) -> Result<()> {
         for row in rows {
             anyhow::ensure!(row.len() == self.n, "row length {} != {}", row.len(), self.n);
         }
         out.reset(self.k, rows.len());
+        bad.clear();
+        bad.resize(rows.len(), false);
         let work = rows.len() * self.n * self.k;
         let threads = if work >= PAR_THRESHOLD {
             std::thread::available_parallelism()
@@ -546,21 +847,37 @@ impl HashPath for FoldedHashPath {
             1
         };
         if threads <= 1 {
-            self.hash_block(rows, out.as_mut_slice());
+            self.hash_block(rows, out.as_mut_slice(), bad);
         } else {
             // split on ROW_BLOCK boundaries so every thread runs full
             // tiles; per-cell results are independent of the split
             let per = rows.len().div_ceil(threads).div_ceil(ROW_BLOCK) * ROW_BLOCK;
             let k = self.k;
             std::thread::scope(|s| {
-                for (rchunk, ochunk) in
-                    rows.chunks(per).zip(out.as_mut_slice().chunks_mut(per * k))
+                for ((rchunk, ochunk), bchunk) in rows
+                    .chunks(per)
+                    .zip(out.as_mut_slice().chunks_mut(per * k))
+                    .zip(bad.chunks_mut(per))
                 {
-                    s.spawn(move || self.hash_block(rchunk, ochunk));
+                    s.spawn(move || self.hash_block(rchunk, ochunk, bchunk));
                 }
             });
         }
         Ok(())
+    }
+
+    fn sig_width(&self, norm_cap: f64) -> SigWidth {
+        if !norm_cap.is_finite() || norm_cap <= 0.0 {
+            return SigWidth::I32;
+        }
+        // |⟨x, M_·j⟩ + b_j| ≤ cap·Σ_i|M_ij| + |b_j| for ‖x‖∞ ≤ cap
+        let bound = self
+            .col_bound
+            .iter()
+            .zip(&self.offsets)
+            .map(|(cb, b)| norm_cap * cb + b.abs())
+            .fold(0.0f64, f64::max);
+        SigWidth::fitting(bound)
     }
 
     fn embed_row_with(&self, row: &[f32], scratch: &mut Vec<f64>) -> Vec<f64> {
@@ -721,13 +1038,133 @@ mod tests {
         let c = a.clone();
         assert_eq!(c, a);
         assert_eq!(c.as_slice().as_ptr(), a.as_slice().as_ptr());
-        // Deref makes a view usable wherever a slice is
+        // inherent accessors cover the old Deref surface
         assert_eq!(a.len(), 3);
-        assert_eq!(a.iter().sum::<i32>(), 6);
+        assert_eq!(a.iter_i32().sum::<i32>(), 6);
+        assert_eq!(a.get(2), 3);
+        assert_eq!(a.width(), SigWidth::I32);
         // owned wrapper round-trips
         let d = SigView::from_vec(vec![7, 8]);
         assert_eq!(d.to_vec(), vec![7, 8]);
         assert_eq!(SigView::from_vec(Vec::new()).as_slice(), &[] as &[i32]);
+        assert!(SigView::from_vec(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn narrowed_block_preserves_values_and_flags_outliers() {
+        let block = Signatures::from_flat(vec![1, -2, 300, -4, 5, 6], 3);
+        let mut bad = vec![false; 2];
+        let narrow = block.narrowed(SigWidth::I8, &mut bad);
+        assert_eq!(narrow.width(), SigWidth::I8);
+        assert_eq!(narrow.signature_len(), 3);
+        assert_eq!(narrow.len(), 2);
+        // row 0 holds 300 > i8::MAX: flagged and zeroed
+        assert_eq!(bad, vec![true, false]);
+        assert_eq!(narrow.row_ref(0).to_i32_vec(), vec![0, 0, 0]);
+        assert_eq!(narrow.row_ref(1).to_i32_vec(), vec![-4, 5, 6]);
+        // i16 admits everything here
+        let mut bad16 = vec![false; 2];
+        let n16 = block.narrowed(SigWidth::I16, &mut bad16);
+        assert_eq!(bad16, vec![false, false]);
+        assert_eq!(n16.row_ref(0).to_i32_vec(), vec![1, -2, 300]);
+        // a SigView over a narrowed block equals its i32 twin by value
+        let arc = std::sync::Arc::new(n16);
+        let v = SigView::new(arc, 1);
+        assert_eq!(v, SigView::from_vec(vec![-4, 5, 6]));
+        assert_eq!(v.width(), SigWidth::I16);
+        assert_eq!(v.to_vec(), vec![-4, 5, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "narrowed")]
+    fn i32_access_to_narrowed_block_panics() {
+        let block = Signatures::from_flat(vec![1, 2], 2);
+        let mut bad = vec![false; 1];
+        let narrow = block.narrowed(SigWidth::I8, &mut bad);
+        let _ = narrow.as_slice();
+    }
+
+    #[test]
+    fn folded_sig_width_follows_the_norm_cap_bound() {
+        let mut rng = Xoshiro256pp::seed_from_u64(91);
+        let emb = MonteCarloEmbedder::new(Interval::unit(), 16, 2.0, &mut rng);
+        let bank = PStableHashBank::new(16, 8, 2.0, 1.0, &mut rng);
+        let proj_rows: Vec<&[f64]> = (0..8).map(|j| bank.projection_row(j)).collect();
+        let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+        // disabled / nonsense caps stay at the seed layout
+        assert_eq!(folded.sig_width(0.0), SigWidth::I32);
+        assert_eq!(folded.sig_width(-1.0), SigWidth::I32);
+        assert_eq!(folded.sig_width(f64::NAN), SigWidth::I32);
+        assert_eq!(folded.sig_width(f64::INFINITY), SigWidth::I32);
+        // a modest cap over a unit-interval embedding fits a narrow
+        // width, and widths are monotone in the cap
+        let w1 = folded.sig_width(1.0);
+        assert_ne!(w1, SigWidth::I32, "unit cap should admit narrowing");
+        let w_huge = folded.sig_width(1e12);
+        assert!(w_huge.max_val() >= w1.max_val(), "width monotone in cap");
+        // the bound is sound: every hash of an admissible row fits
+        let rows = random_rows(16, 32, 17);
+        let sigs = folded.hash_rows(&rows).unwrap();
+        for i in 0..sigs.len() {
+            for &v in sigs.row(i) {
+                assert!(w1.admits(v), "{v} outside {:?}", w1);
+            }
+        }
+    }
+
+    #[test]
+    fn checked_kernel_flags_bad_rows_without_failing_the_batch() {
+        let mut rng = Xoshiro256pp::seed_from_u64(93);
+        let emb = MonteCarloEmbedder::new(Interval::unit(), 8, 2.0, &mut rng);
+        let bank = PStableHashBank::new(8, 4, 2.0, 1.0, &mut rng);
+        let proj_rows: Vec<&[f64]> = (0..4).map(|j| bank.projection_row(j)).collect();
+        let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+        let mut rows = random_rows(8, 3, 29);
+        rows[1] = vec![f32::NAN; 8]; // NaN dot → overflow error, not bucket 0
+        let mut out = Signatures::new(4);
+        let mut bad = Vec::new();
+        folded.hash_rows_checked(&rows, &mut out, &mut bad).unwrap();
+        assert_eq!(bad, vec![false, true, false]);
+        assert_eq!(out.row(1), &[0, 0, 0, 0], "bad row is zeroed");
+        // good rows match the scalar oracle exactly
+        let scalar = folded
+            .hash_rows_scalar(&[rows[0].clone(), rows[2].clone()])
+            .unwrap();
+        assert_eq!(out.row(0), scalar[0].as_slice());
+        assert_eq!(out.row(2), scalar[1].as_slice());
+        // the unchecked batch API fails wholesale instead
+        let err = folded.hash_rows(&rows).unwrap_err();
+        assert!(err.to_string().contains("row 1"), "{err}");
+        // huge-magnitude finite input overflows the same way
+        rows[1] = vec![f32::MAX; 8];
+        folded.hash_rows_checked(&rows, &mut out, &mut bad).unwrap();
+        assert_eq!(bad, vec![false, true, false]);
+    }
+
+    #[test]
+    fn simd_toggle_keeps_byte_identity() {
+        // With --features simd on AVX2 hardware this A/Bs the intrinsics
+        // tile against the portable tile; elsewhere set_simd(true) is a
+        // no-op and both runs take the portable tile. Byte identity vs
+        // the scalar f64 oracle must hold either way.
+        let mut rng = Xoshiro256pp::seed_from_u64(95);
+        let (n, k, b) = (40, 64, 37); // k a multiple of COL_BLOCK → full tiles
+        let emb = MonteCarloEmbedder::new(Interval::unit(), n, 2.0, &mut rng);
+        let bank = PStableHashBank::new(n, k, 2.0, 1.0, &mut rng);
+        let proj_rows: Vec<&[f64]> = (0..k).map(|j| bank.projection_row(j)).collect();
+        let mut folded =
+            FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+        let rows = random_rows(n, b, 55);
+        let scalar = folded.hash_rows_scalar(&rows).unwrap();
+        folded.set_simd(true);
+        let with = folded.hash_rows(&rows).unwrap();
+        folded.set_simd(false);
+        assert!(!folded.simd_active());
+        let without = folded.hash_rows(&rows).unwrap();
+        assert_eq!(with, without, "SIMD and portable tiles must agree");
+        for (i, want) in scalar.iter().enumerate() {
+            assert_eq!(with.row(i), want.as_slice(), "row {i}");
+        }
     }
 
     #[test]

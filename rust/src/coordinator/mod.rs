@@ -21,9 +21,11 @@ pub mod batcher;
 pub mod hashpath;
 pub mod metrics;
 pub mod service;
+pub mod simd;
 
 pub use batcher::BoundedQueue;
 pub use hashpath::{fold_projection, CpuHashPath, FoldedHashPath, HashPath, SigView, Signatures};
+pub use simd::kernel_available as simd_kernel_available;
 pub use metrics::{
     prometheus_render, prometheus_render_cluster, MetricsSnapshot, ProbeSnapshot, ServiceMetrics,
     SlowEntry, StageSnapshot,

@@ -20,6 +20,7 @@ use super::metrics::{
 };
 use crate::config::ServiceConfig;
 use crate::embedding::l2_dist;
+use crate::hashing::{SigVec, SigWidth};
 use crate::json::Value;
 use crate::lsh::shard::{read_i32, read_u64, write_i32, write_u64};
 use crate::lsh::{IndexConfig, QueryScratch, ShardHealth, ShardRange, ShardedIndex};
@@ -262,10 +263,13 @@ struct Request {
 }
 
 /// A stored corpus entry: the re-rank embedding and the insertion-time
-/// signature (needed to delete from the LSH buckets).
+/// signature (needed to delete from the LSH buckets). The signature is
+/// kept at the service's configured [`SigWidth`] — 2–4× smaller than the
+/// seed `Vec<i32>` when a `[hash] norm_cap` makes a narrow width
+/// provably lossless — and widened back to `i32` at index time.
 struct Entry {
     emb: Vec<f64>,
-    sig: Vec<i32>,
+    sig: SigVec,
 }
 
 /// Shared mutable state: the sharded LSH index and the entry store used
@@ -280,6 +284,10 @@ struct State {
     /// slice of the routing-key space this node owns (`serve
     /// --shard-range`); `None` = single node owning everything
     shard_range: Option<ShardRange>,
+    /// storage width of every signature this service keeps (entry store
+    /// + snapshot encoding): `HashPath::sig_width(config.norm_cap)` —
+    /// `I32` unless a norm cap makes a narrow width provably lossless
+    sig_width: SigWidth,
 }
 
 /// Signature of a fixed, deterministic probe row. Any change to the hash
@@ -320,6 +328,7 @@ impl Coordinator {
             store: RwLock::new(HashMap::new()),
             probe_sig: probe_signature(hash_path.as_ref()),
             shard_range: config.shard_range,
+            sig_width: hash_path.sig_width(config.norm_cap),
         });
         Self::start_inner(config, hash_path, state)
     }
@@ -356,7 +365,8 @@ impl Coordinator {
         }
         let probe_sig = probe_signature(hash_path.as_ref());
         let emb_dim = hash_path.embed_row(&vec![0.0f32; hash_path.dim()]).len();
-        let store = read_store(r, config.total_hashes(), emb_dim, &probe_sig)?;
+        let sig_width = hash_path.sig_width(config.norm_cap);
+        let store = read_store(r, config.total_hashes(), emb_dim, &probe_sig, sig_width)?;
         if store.is_empty() && loaded.len() > 0 {
             return Err(restore_error(format!(
                 "index block holds {} entries but the EMBS1 store block is missing \
@@ -368,13 +378,14 @@ impl Coordinator {
         // governs the restored index, not whatever the file was saved with
         let index = ShardedIndex::new(want, config.shards.max(1));
         for (id, e) in store.iter() {
-            index.insert(*id, &e.sig);
+            index.insert(*id, &e.sig.to_i32_vec());
         }
         let state = Arc::new(State {
             index,
             store: RwLock::new(store),
             probe_sig,
             shard_range: config.shard_range,
+            sig_width,
         });
         Ok(Self::start_inner(config, hash_path, state))
     }
@@ -526,6 +537,10 @@ fn worker_loop(
     let mut scratch = QueryScratch::default();
     let mut candidates: Vec<u64> = Vec::new();
     let mut row64: Vec<f64> = Vec::new();
+    // per-row overflow flags from the checked kernel, and an i32 widening
+    // buffer for probing narrow signature blocks
+    let mut bad_rows: Vec<bool> = Vec::new();
+    let mut sig_i32: Vec<i32> = Vec::new();
     let dim = hash_path.dim();
     // output dimension of the embedder, for validating pushed entries
     let emb_dim = hash_path.embed_row(&vec![0.0f32; dim]).len();
@@ -576,7 +591,10 @@ fn worker_loop(
         for req in batch.iter_mut() {
             req.trace.stamp(Stage::BatchForm);
         }
-        if let Err(e) = hash_path.hash_rows_into(&rows, &mut signatures) {
+        // checked hashing: a row whose hash value overflows the signature
+        // range is *flagged* (and its output row zeroed), never allowed
+        // to fail the whole batch or wrap silently into a wrong bucket
+        if let Err(e) = hash_path.hash_rows_checked(&rows, &mut signatures, &mut bad_rows) {
             for req in batch {
                 metrics.record_error();
                 let span = req.trace;
@@ -589,12 +607,16 @@ fn worker_loop(
         // promote the filled kernel-output buffer into a batch-shared
         // block: every Hash reply aliases a row of it zero-copy (the wire
         // encoders serialize straight from the [B×K] data), and the
-        // allocation is reclaimed below when no reply kept a handle
+        // allocation is reclaimed below when no reply kept a handle. At a
+        // narrow configured width the block is a *narrowed copy* instead
+        // (2–4× smaller wire/store payloads); rows that defeat the
+        // norm-cap range proof gain overflow flags here.
         let sig_len = signatures.signature_len();
-        let block = Arc::new(std::mem::replace(
-            &mut signatures,
-            Signatures::new(sig_len),
-        ));
+        let block = if state.sig_width == SigWidth::I32 {
+            Arc::new(std::mem::replace(&mut signatures, Signatures::new(sig_len)))
+        } else {
+            Arc::new(signatures.narrowed(state.sig_width, &mut bad_rows))
+        };
         // map each surviving op to its row in the flat signature block
         let mut next_row = 0usize;
         let sig_rows: Vec<Option<usize>> = batch
@@ -611,6 +633,21 @@ fn worker_loop(
                 _ => None,
             })
             .collect();
+        // overflow rejections ride the same per-op error envelopes as
+        // dimension rejections; applied *after* the row mapping (which
+        // is keyed off collection-time rejects only) so slots stay
+        // aligned with kernel rows
+        for (slot, row) in sig_rows.iter().enumerate() {
+            if let Some(i) = row {
+                if bad_rows[*i] && rejected[slot].is_none() {
+                    rejected[slot] = Some(format!(
+                        "hash value overflows the {} signature range \
+                         (non-finite or out-of-cap samples)",
+                        state.sig_width.name()
+                    ));
+                }
+            }
+        }
         // 2. embed the rows that need re-rank vectors (inserts/queries);
         // rejected rows must not reach the embedder at the wrong width
         let embeddings: Vec<Option<Vec<f64>>> = batch
@@ -661,7 +698,7 @@ fn worker_loop(
                             *id,
                             Entry {
                                 emb: e.clone(),
-                                sig: block.row(row).to_vec(),
+                                sig: SigVec::from_ref(block.row_ref(row)),
                             },
                         );
                     }
@@ -695,7 +732,17 @@ fn worker_loop(
                         sig_rows[slot].expect("hash ops carry samples"),
                     )),
                     _ => {
-                        let sig: &[i32] = sig_rows[slot].map_or(&[], |i| block.row(i));
+                        // index probes want &[i32]; narrow blocks widen
+                        // into the worker's reused scratch
+                        let sig: &[i32] = match sig_rows[slot] {
+                            Some(i) if block.width() == SigWidth::I32 => block.row(i),
+                            Some(i) => {
+                                sig_i32.clear();
+                                sig_i32.extend(block.row_ref(i).iter_i32());
+                                &sig_i32
+                            }
+                            None => &[],
+                        };
                         apply_op(
                             &state,
                             &req.op,
@@ -717,9 +764,13 @@ fn worker_loop(
         metrics.record_batch(batch_size, &latencies);
         // reclaim the block's allocation when nothing escaped with a
         // handle — insert/query-only batches stay allocation-free in
-        // steady state; hash batches hand their block to the replies
-        if let Ok(sigs) = Arc::try_unwrap(block) {
-            signatures = sigs;
+        // steady state; hash batches hand their block to the replies.
+        // Only at width i32: a narrowed block is a copy, and swapping it
+        // in would hand the next batch's kernel a non-i32 staging buffer.
+        if state.sig_width == SigWidth::I32 {
+            if let Ok(sigs) = Arc::try_unwrap(block) {
+                signatures = sigs;
+            }
         }
     }
 }
@@ -750,7 +801,7 @@ fn apply_op(
             let entry = sync::write(&state.store).remove(id);
             let resp = match entry {
                 Some(e) => {
-                    state.index.remove(*id, &e.sig);
+                    state.index.remove(*id, &e.sig.to_i32_vec());
                     Response::Removed { id: *id }
                 }
                 None => Response::Error(format!("unknown id {id}")),
@@ -898,8 +949,10 @@ fn migrate_pull(state: &State, from_id: u64, max: usize) -> Response {
             let e = &store[id];
             EntryRecord {
                 id: *id,
+                // migration wire format stays i32 regardless of the
+                // local storage width — the receiver re-narrows
+                sig: e.sig.to_i32_vec(),
                 emb: e.emb.clone(),
-                sig: e.sig.clone(),
             }
         })
         .collect();
@@ -939,17 +992,30 @@ fn entries_push(state: &State, entries: &[EntryRecord], emb_dim: usize) -> Respo
             ));
         }
     }
-    let mut store = sync::write(&state.store);
+    // narrow every pushed signature up front: a source node with a wider
+    // (or uncapped) configuration can hand us values our width cannot
+    // hold, and a saturated signature would probe the wrong buckets —
+    // reject the chunk before any of it lands
+    let mut narrowed = Vec::with_capacity(entries.len());
     for e in entries {
+        match SigVec::from_i32(&e.sig, state.sig_width) {
+            Ok(sig) => narrowed.push(sig),
+            Err(err) => {
+                return Response::Error(format!("entries_push: id {}: {err}", e.id));
+            }
+        }
+    }
+    let mut store = sync::write(&state.store);
+    for (e, sig) in entries.iter().zip(narrowed) {
         if let Some(old) = store.remove(&e.id) {
-            state.index.remove(e.id, &old.sig);
+            state.index.remove(e.id, &old.sig.to_i32_vec());
         }
         state.index.insert(e.id, &e.sig);
         store.insert(
             e.id,
             Entry {
                 emb: e.emb.clone(),
-                sig: e.sig.clone(),
+                sig,
             },
         );
     }
@@ -966,7 +1032,7 @@ fn entries_discard(state: &State, ids: &[u64]) -> Response {
     let mut count = 0u64;
     for id in ids {
         if let Some(e) = store.remove(id) {
-            state.index.remove(*id, &e.sig);
+            state.index.remove(*id, &e.sig.to_i32_vec());
             count += 1;
         }
     }
@@ -1051,6 +1117,15 @@ fn shard_health_value(h: &ShardHealth) -> Value {
 /// this block.
 const STORE_MAGIC: &[u8; 5] = b"EMBS1";
 
+/// Magic of the width-tagged store block written when the service runs
+/// at a narrow signature width: identical to `EMBS1` except for one
+/// [`SigWidth::tag`] byte after the probe signature, and signature
+/// components encoded at that width (1/2-byte little-endian) instead of
+/// 4-byte `i32`s. Services at width `i32` keep writing byte-identical
+/// legacy `EMBS1`, so old snapshots and old readers are unaffected;
+/// restore accepts either magic and requantizes to the configured width.
+const STORE_MAGIC_V2: &[u8; 5] = b"EMBS2";
+
 /// Hard cap on counts read from a snapshot before they are trusted for
 /// allocation sizing (mirrors the FLSH1 decoder's policy).
 const MAX_STORE_COUNT: usize = 1 << 28;
@@ -1073,22 +1148,28 @@ fn save_state_inner(state: &State, w: &mut dyn std::io::Write) -> io::Result<()>
     let mut buf = Vec::new();
     {
         let store = sync::read(&state.store);
-        write_store_block(&store, &state.probe_sig, &mut buf)?;
+        write_store_block(&store, &state.probe_sig, state.sig_width, &mut buf)?;
     }
     w.write_all(&buf)
 }
 
-/// Encode the EMBS1 store block (see [`save_state_inner`] for the
-/// layout).
+/// Encode the store block (see [`save_state_inner`] for the layout):
+/// legacy `EMBS1` at width `i32` (byte-identical to the seed format),
+/// width-tagged `EMBS2` otherwise.
 fn write_store_block(
     store: &HashMap<u64, Entry>,
     probe_sig: &[i32],
+    width: SigWidth,
     w: &mut dyn std::io::Write,
 ) -> io::Result<()> {
-    w.write_all(STORE_MAGIC)?;
+    let legacy = width == SigWidth::I32;
+    w.write_all(if legacy { STORE_MAGIC } else { STORE_MAGIC_V2 })?;
     write_u64(w, probe_sig.len() as u64)?;
     for s in probe_sig {
         write_i32(w, *s)?;
+    }
+    if !legacy {
+        w.write_all(&[width.tag()])?;
     }
     write_u64(w, store.len() as u64)?;
     for (id, e) in store.iter() {
@@ -1097,24 +1178,35 @@ fn write_store_block(
         for v in &e.emb {
             write_u64(w, v.to_bits())?;
         }
-        write_u64(w, e.sig.len() as u64)?;
-        for s in &e.sig {
-            write_i32(w, *s)?;
+        let sig = e.sig.view();
+        write_u64(w, sig.len() as u64)?;
+        // entries hold `width`-admissible values by construction, so the
+        // int→int narrowing casts below are exact
+        for v in sig.iter_i32() {
+            match width {
+                SigWidth::I8 => w.write_all(&(v as i8).to_le_bytes())?,
+                SigWidth::I16 => w.write_all(&(v as i16).to_le_bytes())?,
+                SigWidth::I32 => write_i32(w, v)?,
+            }
         }
     }
     Ok(())
 }
 
-/// Read the EMBS1 store block written by [`save_state_inner`]. The
-/// recorded hash-path probe signature must equal `want_probe`, every
+/// Read the `EMBS1`/`EMBS2` store block written by [`save_state_inner`].
+/// The recorded hash-path probe signature must equal `want_probe`, every
 /// signature must have length `sig_len`, and every embedding length
 /// `emb_dim`; corrupt counts are rejected before any allocation is sized
-/// from them.
+/// from them. Signatures are decoded at the file's width and requantized
+/// to `want_width` — restoring a legacy i32 snapshot under a narrow
+/// configuration narrows (checked) and vice versa widens (total), so the
+/// width can change across restarts without invalidating snapshots.
 fn read_store(
     r: &mut dyn Read,
     sig_len: usize,
     emb_dim: usize,
     want_probe: &[i32],
+    want_width: SigWidth,
 ) -> io::Result<HashMap<u64, Entry>> {
     let mut magic = [0u8; 5];
     let mut filled = 0usize;
@@ -1129,9 +1221,10 @@ fn read_store(
         // bare FLSH1 file: no store block at all
         return Ok(HashMap::new());
     }
-    if filled < magic.len() || &magic != STORE_MAGIC {
+    let tagged = filled == magic.len() && &magic == STORE_MAGIC_V2;
+    if filled < magic.len() || (&magic != STORE_MAGIC && !tagged) {
         return Err(restore_error(format!(
-            "bad store-block magic {magic:?} (want {STORE_MAGIC:?})"
+            "bad store-block magic {magic:?} (want {STORE_MAGIC:?} or {STORE_MAGIC_V2:?})"
         )));
     }
     let probe_len = read_u64(r)? as usize;
@@ -1152,6 +1245,15 @@ fn read_store(
                 .to_string(),
         ));
     }
+    let file_width = if tagged {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        SigWidth::from_tag(tag[0]).ok_or_else(|| {
+            restore_error(format!("bad signature-width tag {}", tag[0]))
+        })?
+    } else {
+        SigWidth::I32
+    };
     let count = read_u64(r)? as usize;
     if count > MAX_STORE_COUNT {
         return Err(restore_error(format!("implausible entry count {count}")));
@@ -1177,8 +1279,28 @@ fn read_store(
         }
         let mut sig = Vec::with_capacity(sig_len);
         for _ in 0..sig_len {
-            sig.push(read_i32(r)?);
+            sig.push(match file_width {
+                SigWidth::I8 => {
+                    let mut b = [0u8; 1];
+                    r.read_exact(&mut b)?;
+                    i8::from_le_bytes(b) as i32
+                }
+                SigWidth::I16 => {
+                    let mut b = [0u8; 2];
+                    r.read_exact(&mut b)?;
+                    i16::from_le_bytes(b) as i32
+                }
+                SigWidth::I32 => read_i32(r)?,
+            });
         }
+        let sig = SigVec::from_i32(&sig, want_width).map_err(|e| {
+            restore_error(format!(
+                "entry {i} (id {id}): stored signature does not fit the \
+                 configured {} width ({e}) — raise or clear `[hash] \
+                 norm_cap`, or re-snapshot under the new configuration",
+                want_width.name()
+            ))
+        })?;
         if store.insert(id, Entry { emb, sig }).is_some() {
             return Err(restore_error(format!("duplicate id {id} in store block")));
         }
@@ -1228,7 +1350,7 @@ fn write_snapshot(state: &State, path: &str) -> Response {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::hashpath::CpuHashPath;
+    use crate::coordinator::hashpath::{CpuHashPath, FoldedHashPath};
     use crate::embedding::{Embedder, Interval, MonteCarloEmbedder};
     use crate::functions::{Function1D, Sine};
     use crate::hashing::PStableHashBank;
@@ -1447,11 +1569,13 @@ mod tests {
     }
 
     #[test]
-    fn non_finite_query_does_not_panic_worker() {
-        // Insert is refused defensively, but Hash/Query with non-finite
-        // rows are still accepted from in-process callers — a NaN query
-        // must yield a well-formed (NaN-distances-last) answer, not kill
-        // the batch worker on an unordered sort
+    fn non_finite_query_gets_a_typed_error_not_bucket_zero() {
+        // the wire decoders reject non-finite samples, but in-process
+        // callers reach the coordinator directly. The seed quantizer
+        // collapsed a NaN dot product to signature 0 and served whatever
+        // lives in bucket 0 as "hits"; the checked kernel flags the row
+        // and the op gets its own overflow error — without killing the
+        // batch worker or its co-batched neighbours
         let (svc, points) = test_service(1);
         for i in 0..20u64 {
             svc.submit(Op::Insert {
@@ -1464,7 +1588,7 @@ mod tests {
             *s = f32::NAN;
         }
         match svc.submit(Op::Query { samples, k: 5 }) {
-            Response::Hits(_) => {}
+            Response::Error(e) => assert!(e.contains("overflow"), "{e}"),
             other => panic!("unexpected {other:?}"),
         }
         // the worker survived: a clean query still answers correctly
@@ -1780,6 +1904,165 @@ mod tests {
             Coordinator::restore(&cfg, other_path, &mut snapshot.as_slice()).unwrap_err();
         assert!(err.to_string().contains("hash configuration"), "{err}");
         svc2.shutdown();
+    }
+
+    /// Deterministic *folded* path (the only in-tree `HashPath` whose
+    /// `sig_width` can narrow), for the quantized-storage tests.
+    fn folded_test_path(cfg: &ServiceConfig) -> (Arc<dyn HashPath>, Vec<f64>) {
+        let mut rng = Xoshiro256pp::seed_from_u64(87);
+        let emb = MonteCarloEmbedder::new(Interval::unit(), cfg.dim, 2.0, &mut rng);
+        let points = emb.sample_points().to_vec();
+        let bank = PStableHashBank::new(cfg.dim, cfg.total_hashes(), 2.0, cfg.r, &mut rng);
+        let proj_rows: Vec<&[f64]> = (0..cfg.total_hashes())
+            .map(|j| bank.projection_row(j))
+            .collect();
+        let folded = FoldedHashPath::new(Box::new(emb), &proj_rows, bank.offsets(), bank.r());
+        (Arc::new(folded), points)
+    }
+
+    #[test]
+    fn narrow_width_service_matches_i32_service_and_roundtrips_snapshots() {
+        // sine samples live in [-1, 1], so norm_cap = 1.0 makes a narrow
+        // width provably lossless — every answer must be identical to
+        // the uncapped i32 service over the same (deterministic) path
+        let mut cfg_narrow = test_config(1);
+        cfg_narrow.norm_cap = 1.0;
+        let cfg_wide = test_config(1);
+        let (path_n, points) = folded_test_path(&cfg_narrow);
+        let (path_w, _) = folded_test_path(&cfg_wide);
+        let narrow = Coordinator::start(&cfg_narrow, path_n);
+        let wide = Coordinator::start(&cfg_wide, path_w);
+        assert_ne!(
+            narrow.state.sig_width,
+            SigWidth::I32,
+            "norm_cap 1.0 over this folded path must admit a narrow width"
+        );
+        assert_eq!(wide.state.sig_width, SigWidth::I32);
+        for i in 0..60u64 {
+            let phase = 2.0 * std::f64::consts::PI * (i as f64 / 60.0);
+            let s = sample_sine(phase, &points);
+            assert_eq!(
+                narrow.submit(Op::Insert {
+                    id: i,
+                    samples: s.clone()
+                }),
+                Response::Inserted { id: i }
+            );
+            wide.submit(Op::Insert { id: i, samples: s });
+        }
+        for q in 0..8 {
+            let s = sample_sine(0.21 * q as f64, &points);
+            // hash: SigView equality is by widened value, so the narrow
+            // block must reproduce the i32 signatures exactly
+            assert_eq!(
+                narrow.submit(Op::Hash { samples: s.clone() }),
+                wide.submit(Op::Hash { samples: s.clone() })
+            );
+            // query: identical candidate sets and exact re-rank distances
+            assert_eq!(
+                narrow.submit(Op::Query {
+                    samples: s.clone(),
+                    k: 5
+                }),
+                wide.submit(Op::Query { samples: s, k: 5 })
+            );
+        }
+        // snapshot roundtrips: narrow writes a width-tagged EMBS2 block...
+        let mut snap_narrow = Vec::new();
+        narrow.save_state(&mut snap_narrow).unwrap();
+        let window = |hay: &[u8], needle: &[u8]| hay.windows(needle.len()).any(|w| w == needle);
+        assert!(window(&snap_narrow, b"EMBS2"), "narrow snapshot must be width-tagged");
+        // ...the i32 service keeps writing byte-identical legacy EMBS1
+        let mut snap_wide = Vec::new();
+        wide.save_state(&mut snap_wide).unwrap();
+        assert!(window(&snap_wide, b"EMBS1"), "i32 snapshot must stay legacy EMBS1");
+        let probe = sample_sine(1.3, &points);
+        let want = wide.submit(Op::Query {
+            samples: probe.clone(),
+            k: 5,
+        });
+        // narrow snapshot → narrow service (same width)
+        let (p1, _) = folded_test_path(&cfg_narrow);
+        let r1 = Coordinator::restore(&cfg_narrow, p1, &mut snap_narrow.as_slice()).unwrap();
+        assert_eq!(r1.indexed(), 60);
+        assert_eq!(
+            r1.submit(Op::Query {
+                samples: probe.clone(),
+                k: 5
+            }),
+            want
+        );
+        // narrow snapshot → i32 service (widening restore)
+        let (p2, _) = folded_test_path(&cfg_wide);
+        let r2 = Coordinator::restore(&cfg_wide, p2, &mut snap_narrow.as_slice()).unwrap();
+        assert_eq!(
+            r2.submit(Op::Query {
+                samples: probe.clone(),
+                k: 5
+            }),
+            want
+        );
+        // legacy i32 snapshot → narrow service (checked narrowing restore)
+        let (p3, _) = folded_test_path(&cfg_narrow);
+        let r3 = Coordinator::restore(&cfg_narrow, p3, &mut snap_wide.as_slice()).unwrap();
+        assert_eq!(
+            r3.submit(Op::Query {
+                samples: probe,
+                k: 5
+            }),
+            want
+        );
+        for svc in [narrow, wide, r1, r2, r3] {
+            svc.shutdown();
+        }
+    }
+
+    #[test]
+    fn out_of_cap_rows_get_per_op_overflow_errors() {
+        // a row whose samples blow past the norm cap defeats the narrow
+        // range proof: it must get its own overflow error while its
+        // co-batched neighbours (worker = 1 ⇒ same batch window) succeed
+        let mut cfg = test_config(1);
+        cfg.norm_cap = 1.0;
+        let (path, points) = folded_test_path(&cfg);
+        let svc = Coordinator::start(&cfg, path);
+        assert_ne!(svc.state.sig_width, SigWidth::I32);
+        let rx_bad = svc
+            .submit_async(
+                Op::Insert {
+                    id: 1,
+                    samples: vec![1e30f32; points.len()],
+                },
+                Span::disabled(SpanWire::Local),
+            )
+            .unwrap();
+        let rx_good = svc
+            .submit_async(
+                Op::Insert {
+                    id: 2,
+                    samples: sample_sine(0.4, &points),
+                },
+                Span::disabled(SpanWire::Local),
+            )
+            .unwrap();
+        match rx_bad.recv().unwrap().0 {
+            Response::Error(e) => {
+                assert!(e.contains("overflow"), "{e}");
+                assert!(e.contains(svc.state.sig_width.name()), "{e}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(rx_good.recv().unwrap().0, Response::Inserted { id: 2 });
+        assert_eq!(svc.indexed(), 1, "the overflowed insert must not land");
+        // the rejected id stays free
+        assert_eq!(
+            svc.submit(Op::Insert {
+                id: 1,
+                samples: sample_sine(0.5, &points)
+            }),
+            Response::Inserted { id: 1 }
+        );
+        svc.shutdown();
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Arch-intrinsics accumulation for the blocked hash kernel
+//! (`coordinator/hashpath.rs`), behind the `simd` cargo feature.
+//!
+//! The blocked kernel's inner loop accumulates a `ROW_BLOCK × COL_BLOCK`
+//! f32 register tile: `acc[r][j] += row_r[i] · M[i][jb + j]` for
+//! `i = 0..N`. This module provides that tile step as explicit AVX2+FMA
+//! intrinsics on x86_64 — four 8-lane `__m256` accumulators per row,
+//! one broadcast + four fused multiply-adds per `(row, i)` — and a
+//! scalar-fallback stub everywhere else (aarch64/NEON is deliberately a
+//! stub for now: the portable scalar tile autovectorizes acceptably
+//! there, and a hand-rolled `f32x4` tile can slot in behind the same
+//! `accumulate_tile` seam later).
+//!
+//! # Dispatch rule
+//!
+//! [`kernel_available`] is the single source of truth: it is `true` only
+//! when (a) the crate was built with `--features simd`, (b) the target
+//! is x86_64, and (c) the CPU reports both `avx2` and `fma` at runtime
+//! (checked once, cached in an atomic). [`accumulate_tile`] returns
+//! `false` whenever any of those fail — including for partial column
+//! tiles (`jw < COL_BLOCK`) — and the caller runs the portable scalar
+//! tile instead. Column sums are accumulated in the same `i = 0..N`
+//! order as the portable tile; FMA merely *removes* the intermediate
+//! product rounding, so the kernel's per-cell error radius `τ` (derived
+//! for any summation order with one rounding per multiply and add)
+//! remains a valid bound and the floor-boundary exact-f64 fallback keeps
+//! the kernel byte-identical to the scalar f64 oracle.
+
+use super::hashpath::{COL_BLOCK, ROW_BLOCK};
+
+/// Whether the intrinsics tile is usable on this build + CPU.
+///
+/// `false` without `--features simd`, on non-x86_64 targets, and on
+/// x86_64 CPUs lacking AVX2 or FMA.
+pub fn kernel_available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        avx2::available()
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Accumulate one full-width register tile with intrinsics:
+/// `acc[r·COL_BLOCK + j] += rows[r][i] · m[i·k + jb + j]` for every row
+/// `r`, lane `j < COL_BLOCK`, and `i = 0..rows[r].len()`.
+///
+/// Returns `true` if the tile was computed; `false` means "not
+/// available here" (feature off, wrong arch, CPU too old) and the
+/// caller must run its portable scalar tile — the function never
+/// partially writes `acc` in that case.
+///
+/// Caller contract (checked): `rows.len() ≤ ROW_BLOCK`, every row has
+/// the same length `n`, `m.len() == n·k`, `jb + COL_BLOCK ≤ k`, and
+/// `acc` holds at least `rows.len()·COL_BLOCK` lanes.
+pub fn accumulate_tile(rows: &[Vec<f32>], m: &[f32], k: usize, jb: usize, acc: &mut [f32]) -> bool {
+    assert!(rows.len() <= ROW_BLOCK, "tile holds at most {ROW_BLOCK} rows");
+    assert!(jb + COL_BLOCK <= k, "partial column tiles take the scalar path");
+    assert!(acc.len() >= rows.len() * COL_BLOCK, "accumulator too short");
+    for row in rows {
+        assert!(row.len() * k <= m.len(), "matrix shorter than n x k");
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2::available() {
+            // SAFETY: `available()` verified avx2+fma on this CPU, and
+            // the shape contract above bounds every pointer the tile
+            // dereferences.
+            unsafe { avx2::accumulate_tile(rows, m, k, jb, acc) };
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use super::{COL_BLOCK, ROW_BLOCK};
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    const UNKNOWN: u8 = 0;
+    const YES: u8 = 1;
+    const NO: u8 = 2;
+
+    /// cached cpuid verdict: probing is cheap but not free, and the
+    /// kernel asks per tile
+    static DETECTED: AtomicU8 = AtomicU8::new(UNKNOWN);
+
+    pub fn available() -> bool {
+        match DETECTED.load(Ordering::Relaxed) {
+            YES => true,
+            NO => false,
+            _ => {
+                let ok = std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma");
+                DETECTED.store(if ok { YES } else { NO }, Ordering::Relaxed);
+                ok
+            }
+        }
+    }
+
+    /// The AVX2+FMA register tile. Per row: four `__m256` accumulators
+    /// cover the `COL_BLOCK = 32` lanes; per input coordinate `i`: one
+    /// broadcast of `row[i]` and four fused multiply-adds against the
+    /// contiguous `M[i][jb..jb+32]` slice. Column order `i = 0..n`
+    /// matches the portable tile, so only the product rounding differs
+    /// (see module docs).
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified `avx2` + `fma` via [`available`] and
+    /// the shape contract of [`super::accumulate_tile`].
+    // SAFETY: `unsafe fn` by necessity of #[target_feature]; the two
+    // obligations (CPU features, shape bounds) are restated per load
+    // below and discharged by the safe wrapper before dispatch.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn accumulate_tile(
+        rows: &[Vec<f32>],
+        m: &[f32],
+        k: usize,
+        jb: usize,
+        acc: &mut [f32],
+    ) {
+        use std::arch::x86_64::*;
+        for (r, row) in rows.iter().enumerate() {
+            let a = &mut acc[r * COL_BLOCK..r * COL_BLOCK + COL_BLOCK];
+            let ap = a.as_mut_ptr();
+            // SAFETY: `a` is exactly COL_BLOCK = 32 f32 lanes, so the
+            // four unaligned 8-lane loads at offsets 0/8/16/24 stay in
+            // bounds (loadu: no alignment requirement).
+            let mut a0 = unsafe { _mm256_loadu_ps(ap) };
+            // SAFETY: as above, lanes 8..16.
+            let mut a1 = unsafe { _mm256_loadu_ps(ap.add(8)) };
+            // SAFETY: as above, lanes 16..24.
+            let mut a2 = unsafe { _mm256_loadu_ps(ap.add(16)) };
+            // SAFETY: as above, lanes 24..32.
+            let mut a3 = unsafe { _mm256_loadu_ps(ap.add(24)) };
+            for (i, &x) in row.iter().enumerate() {
+                let xv = _mm256_set1_ps(x);
+                // SAFETY: caller contract gives i < n, jb + 32 ≤ k and
+                // m.len() == n·k, so m[i·k + jb .. i·k + jb + 32] is in
+                // bounds for all four 8-lane loads below.
+                let mp = unsafe { m.as_ptr().add(i * k + jb) };
+                // SAFETY: mp..mp+8 in bounds per the line above.
+                a0 = _mm256_fmadd_ps(xv, unsafe { _mm256_loadu_ps(mp) }, a0);
+                // SAFETY: mp+8..mp+16 in bounds.
+                a1 = _mm256_fmadd_ps(xv, unsafe { _mm256_loadu_ps(mp.add(8)) }, a1);
+                // SAFETY: mp+16..mp+24 in bounds.
+                a2 = _mm256_fmadd_ps(xv, unsafe { _mm256_loadu_ps(mp.add(16)) }, a2);
+                // SAFETY: mp+24..mp+32 in bounds.
+                a3 = _mm256_fmadd_ps(xv, unsafe { _mm256_loadu_ps(mp.add(24)) }, a3);
+            }
+            // SAFETY: same 32-lane bound as the loads; storeu is
+            // unaligned-safe and `ap` is exclusively borrowed.
+            unsafe {
+                _mm256_storeu_ps(ap, a0);
+                _mm256_storeu_ps(ap.add(8), a1);
+                _mm256_storeu_ps(ap.add(16), a2);
+                _mm256_storeu_ps(ap.add(24), a3);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar_tile(rows: &[Vec<f32>], m: &[f32], k: usize, jb: usize, acc: &mut [f32]) {
+        for (r, row) in rows.iter().enumerate() {
+            for (i, &x) in row.iter().enumerate() {
+                let mrow = &m[i * k + jb..i * k + jb + COL_BLOCK];
+                let a = &mut acc[r * COL_BLOCK..r * COL_BLOCK + COL_BLOCK];
+                for (aj, &mij) in a.iter_mut().zip(mrow) {
+                    *aj += x * mij;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_matches_scalar_when_available() {
+        use crate::util::rng::{Rng64, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::seed_from_u64(90);
+        let (n, k, jb) = (13, COL_BLOCK * 2, COL_BLOCK);
+        let m: Vec<f32> = (0..n * k).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+        let rows: Vec<Vec<f32>> = (0..ROW_BLOCK)
+            .map(|_| (0..n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect())
+            .collect();
+        let mut want = vec![0.25f32; ROW_BLOCK * COL_BLOCK];
+        scalar_tile(&rows, &m, k, jb, &mut want);
+        let mut got = vec![0.25f32; ROW_BLOCK * COL_BLOCK];
+        if !accumulate_tile(&rows, &m, k, jb, &mut got) {
+            assert!(!kernel_available());
+            assert_eq!(got, vec![0.25f32; ROW_BLOCK * COL_BLOCK], "fallback must not touch acc");
+            return;
+        }
+        // FMA drops the product rounding, so lanes agree to ~n·ε
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                "lane mismatch: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn availability_is_stable_and_consistent() {
+        let a = kernel_available();
+        let b = kernel_available();
+        assert_eq!(a, b);
+        if cfg!(not(feature = "simd")) || cfg!(not(target_arch = "x86_64")) {
+            assert!(!a, "intrinsics tile requires --features simd on x86_64");
+        }
+    }
+}

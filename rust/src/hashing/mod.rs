@@ -16,8 +16,10 @@
 
 pub mod alsh;
 pub mod crosspolytope;
+pub mod quantize;
 
 pub use crosspolytope::{CrossPolytopeBank, CrossPolytopeHash};
+pub use quantize::{quantize_hash, HashOverflow, SigRef, SigVec, SigWidth};
 
 use crate::util::rng::{Rng64, SplitMix64};
 use crate::util::sync;
@@ -43,6 +45,18 @@ pub trait HashBank: Send + Sync {
     /// the in-tree banks override it to write `out` directly.
     fn hash_into(&self, v: &[f64], out: &mut [i32]) {
         out.copy_from_slice(&self.hash(v));
+    }
+
+    /// Checked form of [`HashBank::hash_into`]: hash values that fall
+    /// outside the `i32` range (or are not finite) return
+    /// [`HashOverflow`] instead of silently saturating. The default
+    /// delegates to `hash_into` and always succeeds — correct for banks
+    /// whose outputs are range-bounded by construction (e.g.
+    /// [`SimHashBank`], which emits only `0`/`1`); the floor-hash banks
+    /// override it with a [`quantize_hash`]-checked loop.
+    fn try_hash_into(&self, v: &[f64], out: &mut [i32]) -> Result<(), HashOverflow> {
+        self.hash_into(v, out);
+        Ok(())
     }
 }
 
@@ -130,13 +144,19 @@ impl HashBank for PStableHashBank {
     }
 
     fn hash_into(&self, v: &[f64], out: &mut [i32]) {
+        self.try_hash_into(v, out)
+            .expect("hash value overflows the signature range (use try_hash_into)");
+    }
+
+    fn try_hash_into(&self, v: &[f64], out: &mut [i32]) -> Result<(), HashOverflow> {
         assert_eq!(v.len(), self.dim, "input dimension mismatch");
         assert_eq!(out.len(), self.k, "output length mismatch");
         for (j, o) in out.iter_mut().enumerate() {
             let row = &self.proj[j * self.dim..(j + 1) * self.dim];
             let dot: f64 = row.iter().zip(v).map(|(a, x)| a * x).sum();
-            *o = (dot / self.r + self.offsets[j]).floor() as i32;
+            *o = quantize_hash(dot / self.r + self.offsets[j])?;
         }
+        Ok(())
     }
 }
 
@@ -305,13 +325,19 @@ impl HashBank for LazyL2Hash {
     }
 
     fn hash_into(&self, v: &[f64], out: &mut [i32]) {
+        self.try_hash_into(v, out)
+            .expect("hash value overflows the signature range (use try_hash_into)");
+    }
+
+    fn try_hash_into(&self, v: &[f64], out: &mut [i32]) -> Result<(), HashOverflow> {
         assert_eq!(out.len(), self.k, "output length mismatch");
         self.ensure_cached(v.len());
         let cache = sync::read(&self.cache);
         for (j, o) in out.iter_mut().enumerate() {
             let dot: f64 = v.iter().zip(&cache[j]).map(|(&x, &a)| a * x).sum();
-            *o = (dot / self.r + self.offsets[j]).floor() as i32;
+            *o = quantize_hash(dot / self.r + self.offsets[j])?;
         }
+        Ok(())
     }
 }
 
@@ -462,5 +488,57 @@ mod tests {
         let b = LazyL2Hash::new(2, 4, 1.0);
         let v = [1.0, 2.0, 3.0];
         assert_ne!(a.hash(&v), b.hash(&v));
+    }
+
+    // ----- overflow regression tests (the former silent-saturation bug) ----
+
+    #[test]
+    fn pstable_huge_norm_row_is_a_typed_error() {
+        // A row with astronomically large norm drives |dot/r + b| past
+        // i32::MAX. The old code saturated every such hash to i32::MAX,
+        // collapsing all huge inputs into one bucket; now it is a typed
+        // per-call error.
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let bank = PStableHashBank::new(4, 8, 2.0, 1.0, &mut rng);
+        let huge = [1e300, -1e300, 1e300, -1e300];
+        let mut out = vec![0i32; 8];
+        let err = bank
+            .try_hash_into(&huge, &mut out)
+            .expect_err("huge-norm row must not hash");
+        assert_eq!(err.width, SigWidth::I32);
+    }
+
+    #[test]
+    fn pstable_nan_dot_is_a_typed_error() {
+        // NaN anywhere in the dot product used to floor-cast to 0 —
+        // indistinguishable from a legitimate bucket. Now: HashOverflow.
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let bank = PStableHashBank::new(4, 8, 2.0, 1.0, &mut rng);
+        let bad = [f64::NAN, 0.0, 0.0, 0.0];
+        let mut out = vec![0i32; 8];
+        assert!(bank.try_hash_into(&bad, &mut out).is_err());
+        // Infinities cancel to NaN in the sum as well.
+        let inf = [f64::INFINITY, f64::NEG_INFINITY, 0.0, 0.0];
+        assert!(bank.try_hash_into(&inf, &mut out).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn pstable_infallible_hash_panics_on_overflow() {
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let bank = PStableHashBank::new(2, 4, 2.0, 1.0, &mut rng);
+        bank.hash(&[1e300, 1e300]);
+    }
+
+    #[test]
+    fn lazy_hash_overflow_is_a_typed_error() {
+        let h = LazyL2Hash::new(9, 8, 1.0);
+        let mut out = vec![0i32; 8];
+        assert!(h.try_hash_into(&[f64::NAN, 1.0], &mut out).is_err());
+        assert!(h.try_hash_into(&[1e300, -1e300, 1e300], &mut out).is_err());
+        // Sane inputs still succeed and agree with the infallible path.
+        let v = [0.5, -0.25, 0.125];
+        h.try_hash_into(&v, &mut out).unwrap();
+        assert_eq!(out, h.hash(&v));
     }
 }

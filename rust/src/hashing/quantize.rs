@@ -1,0 +1,405 @@
+//! Checked quantization of hash values, and width-typed signature
+//! storage.
+//!
+//! Every LSH family in this crate discretizes an affine form into an
+//! integer bucket id: `h(x) = ⌊⟨α,x⟩/r + b⌋`. The seed code lowered that
+//! `f64` with a bare `as i32`, which **saturates silently**: any value
+//! beyond `i32` range collapses to `i32::MAX`/`i32::MIN` and `NaN`
+//! becomes `0`, so wildly different inputs land in one bucket and a
+//! poisoned dot product masquerades as a legitimate signature. This
+//! module centralizes the lowering behind [`quantize_hash`], which
+//! returns a typed [`HashOverflow`] instead; the `funclsh analyze`
+//! rule `checked-float-cast` bans bare float→`i{8,16,32}` casts in
+//! library code outside this file.
+//!
+//! # Signature width and the quantization-range derivation
+//!
+//! A hash value under the folded matrix `M` (embedding ∘ projection ∘
+//! `1/r`) and offsets `b` obeys, for any input row with `‖x‖∞ ≤ c`:
+//!
+//! ```text
+//! |⟨x, M_·j⟩ + b_j| ≤ c · Σ_i |M_ij| + |b_j|  =: B_j(c)
+//! ```
+//!
+//! so every signature component lies in `[⌊-B_j(c)⌋, ⌊B_j(c)⌋]`. When
+//! the service is configured with a norm cap `c` (rows are already
+//! rejected at the wire when non-finite), `max_j B_j(c)` is a *provable*
+//! bound on the hash range, and [`SigWidth::fitting`] picks the
+//! narrowest of `i8`/`i16`/`i32` whose range contains it — signatures
+//! are then stored at that width ([`SigVec`], width-typed
+//! [`crate::coordinator::Signatures`]), cutting signature memory
+//! traffic 2–4× with **unchanged** bucket semantics: values are widened
+//! back to `i32` at fingerprint/probe time, so table keys and candidate
+//! sets are identical to the `i32` path. Rows whose values exceed the
+//! admitted range (possible only above the cap) get typed per-item
+//! errors, never a silently wrapped signature.
+
+/// Typed error of [`quantize_hash`] and the checked narrowing paths: a
+/// hash value left the representable signature range (or was not a
+/// finite number at all).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HashOverflow {
+    /// the width whose range was exceeded
+    pub width: SigWidth,
+}
+
+impl std::fmt::Display for HashOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hash overflow: value outside the {} signature range (or not finite)",
+            self.width.name()
+        )
+    }
+}
+
+impl std::error::Error for HashOverflow {}
+
+/// Floor-quantize an affine hash value to `i32`, rejecting overflow and
+/// `NaN` instead of saturating.
+///
+/// This is the **only** place in library code allowed to lower a float
+/// to a signature integer (enforced by the `checked-float-cast` analyze
+/// rule): `⌊v⌋` is returned exactly when it lies in `i32` range, and
+/// everything else — `±∞`, `NaN`, `|v|` beyond ~2³¹ — is a typed
+/// [`HashOverflow`].
+#[inline]
+pub fn quantize_hash(v: f64) -> Result<i32, HashOverflow> {
+    let f = v.floor();
+    // NaN fails both comparisons; the bounds are exact f64 values, and
+    // a floor within them converts exactly
+    if f >= i32::MIN as f64 && f <= i32::MAX as f64 {
+        Ok(f as i32)
+    } else {
+        Err(HashOverflow {
+            width: SigWidth::I32,
+        })
+    }
+}
+
+/// Storage width of signature components.
+///
+/// `I32` is the seed layout; `I16`/`I8` store the same bucket ids
+/// narrowed (see the module docs for when that is provably lossless).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SigWidth {
+    /// 1-byte components in `[-128, 127]`
+    I8,
+    /// 2-byte components in `[-32768, 32767]`
+    I16,
+    /// 4-byte components (the seed layout; always admissible)
+    I32,
+}
+
+impl SigWidth {
+    /// Bytes per signature component.
+    pub fn bytes(self) -> usize {
+        match self {
+            SigWidth::I8 => 1,
+            SigWidth::I16 => 2,
+            SigWidth::I32 => 4,
+        }
+    }
+
+    /// Largest representable component.
+    pub fn max_val(self) -> i32 {
+        match self {
+            SigWidth::I8 => i8::MAX as i32,
+            SigWidth::I16 => i16::MAX as i32,
+            SigWidth::I32 => i32::MAX,
+        }
+    }
+
+    /// Smallest representable component.
+    pub fn min_val(self) -> i32 {
+        match self {
+            SigWidth::I8 => i8::MIN as i32,
+            SigWidth::I16 => i16::MIN as i32,
+            SigWidth::I32 => i32::MIN,
+        }
+    }
+
+    /// Whether `v` is representable at this width.
+    pub fn admits(self, v: i32) -> bool {
+        v >= self.min_val() && v <= self.max_val()
+    }
+
+    /// The narrowest width whose range provably contains every hash
+    /// value with magnitude `≤ bound` (pre-floor, so one extra unit of
+    /// slack is reserved on each side). Non-finite or huge bounds fall
+    /// back to `I32`.
+    pub fn fitting(bound: f64) -> SigWidth {
+        if !bound.is_finite() || bound < 0.0 {
+            return SigWidth::I32;
+        }
+        // floor(v) for |v| ≤ bound lies in [-bound-1, bound]; require
+        // bound + 2 ≤ max so both ends clear the narrow range with a
+        // unit to spare
+        let need = bound + 2.0;
+        if need <= SigWidth::I8.max_val() as f64 {
+            SigWidth::I8
+        } else if need <= SigWidth::I16.max_val() as f64 {
+            SigWidth::I16
+        } else {
+            SigWidth::I32
+        }
+    }
+
+    /// Snapshot tag byte (`EMBS2` store block): the width in bytes.
+    pub fn tag(self) -> u8 {
+        match self {
+            SigWidth::I8 => 1,
+            SigWidth::I16 => 2,
+            SigWidth::I32 => 4,
+        }
+    }
+
+    /// Decode a snapshot tag byte.
+    pub fn from_tag(t: u8) -> Option<SigWidth> {
+        match t {
+            1 => Some(SigWidth::I8),
+            2 => Some(SigWidth::I16),
+            4 => Some(SigWidth::I32),
+            _ => None,
+        }
+    }
+
+    /// Stable human/JSON spelling (`i8` / `i16` / `i32`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SigWidth::I8 => "i8",
+            SigWidth::I16 => "i16",
+            SigWidth::I32 => "i32",
+        }
+    }
+}
+
+/// A borrowed signature row at its storage width.
+///
+/// Consumers that need bucket ids widen through [`SigRef::get`] /
+/// [`SigRef::to_i32_vec`]; widening is total, so probe keys and
+/// fingerprints computed from a narrowed row are identical to the `i32`
+/// path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SigRef<'a> {
+    /// 1-byte components
+    I8(&'a [i8]),
+    /// 2-byte components
+    I16(&'a [i16]),
+    /// 4-byte components
+    I32(&'a [i32]),
+}
+
+impl SigRef<'_> {
+    /// Number of components.
+    pub fn len(&self) -> usize {
+        match self {
+            SigRef::I8(s) => s.len(),
+            SigRef::I16(s) => s.len(),
+            SigRef::I32(s) => s.len(),
+        }
+    }
+
+    /// True when the row has no components.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage width of the row.
+    pub fn width(&self) -> SigWidth {
+        match self {
+            SigRef::I8(_) => SigWidth::I8,
+            SigRef::I16(_) => SigWidth::I16,
+            SigRef::I32(_) => SigWidth::I32,
+        }
+    }
+
+    /// Component `j`, widened to `i32`.
+    pub fn get(&self, j: usize) -> i32 {
+        match self {
+            SigRef::I8(s) => s[j] as i32,
+            SigRef::I16(s) => s[j] as i32,
+            SigRef::I32(s) => s[j],
+        }
+    }
+
+    /// Iterate the components widened to `i32`.
+    pub fn iter_i32(&self) -> impl Iterator<Item = i32> + '_ {
+        (0..self.len()).map(move |j| self.get(j))
+    }
+
+    /// Copy out as an owned `i32` signature.
+    pub fn to_i32_vec(&self) -> Vec<i32> {
+        self.iter_i32().collect()
+    }
+
+    /// Value-equality against an `i32` signature.
+    pub fn eq_i32(&self, want: &[i32]) -> bool {
+        self.len() == want.len() && self.iter_i32().zip(want).all(|(a, &b)| a == b)
+    }
+}
+
+/// An owned signature at a fixed storage width — what the entry store
+/// keeps per corpus id (2–4× smaller than the seed `Vec<i32>` when the
+/// configured range admits a narrow width).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SigVec {
+    /// 1-byte components
+    I8(Box<[i8]>),
+    /// 2-byte components
+    I16(Box<[i16]>),
+    /// 4-byte components (seed layout)
+    I32(Box<[i32]>),
+}
+
+impl SigVec {
+    /// Narrow an `i32` signature to `width`, failing with a typed error
+    /// on the first component outside the width's range.
+    pub fn from_i32(sig: &[i32], width: SigWidth) -> Result<SigVec, HashOverflow> {
+        if sig.iter().any(|&v| !width.admits(v)) {
+            return Err(HashOverflow { width });
+        }
+        Ok(match width {
+            SigWidth::I8 => SigVec::I8(sig.iter().map(|&v| v as i8).collect()),
+            SigWidth::I16 => SigVec::I16(sig.iter().map(|&v| v as i16).collect()),
+            SigWidth::I32 => SigVec::I32(sig.into()),
+        })
+    }
+
+    /// Copy a borrowed row at its own width.
+    pub fn from_ref(r: SigRef<'_>) -> SigVec {
+        match r {
+            SigRef::I8(s) => SigVec::I8(s.into()),
+            SigRef::I16(s) => SigVec::I16(s.into()),
+            SigRef::I32(s) => SigVec::I32(s.into()),
+        }
+    }
+
+    /// Borrow at the storage width.
+    pub fn view(&self) -> SigRef<'_> {
+        match self {
+            SigVec::I8(s) => SigRef::I8(s),
+            SigVec::I16(s) => SigRef::I16(s),
+            SigVec::I32(s) => SigRef::I32(s),
+        }
+    }
+
+    /// Number of components.
+    pub fn len(&self) -> usize {
+        self.view().len()
+    }
+
+    /// True when the signature has no components.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage width.
+    pub fn width(&self) -> SigWidth {
+        self.view().width()
+    }
+
+    /// Widen to the seed `i32` layout.
+    pub fn to_i32_vec(&self) -> Vec<i32> {
+        self.view().to_i32_vec()
+    }
+
+    /// Re-encode at `width` (widening is total; narrowing is checked).
+    pub fn requantize(&self, width: SigWidth) -> Result<SigVec, HashOverflow> {
+        if self.width() == width {
+            return Ok(self.clone());
+        }
+        SigVec::from_i32(&self.to_i32_vec(), width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_hash_is_exact_in_range() {
+        assert_eq!(quantize_hash(0.0), Ok(0));
+        assert_eq!(quantize_hash(-0.25), Ok(-1));
+        assert_eq!(quantize_hash(3.999), Ok(3));
+        assert_eq!(quantize_hash(i32::MAX as f64), Ok(i32::MAX));
+        assert_eq!(quantize_hash(i32::MIN as f64), Ok(i32::MIN));
+        // the floor of a value just under MIN+1 is still MIN
+        assert_eq!(quantize_hash(i32::MIN as f64 + 0.5), Ok(i32::MIN));
+    }
+
+    #[test]
+    fn quantize_hash_rejects_overflow_and_nan() {
+        // the seed cast saturated all of these to MAX/MIN/0 silently
+        assert!(quantize_hash(i32::MAX as f64 + 1.0).is_err());
+        assert!(quantize_hash(i32::MIN as f64 - 1.0).is_err());
+        assert!(quantize_hash(1e300).is_err());
+        assert!(quantize_hash(-1e300).is_err());
+        assert!(quantize_hash(f64::INFINITY).is_err());
+        assert!(quantize_hash(f64::NEG_INFINITY).is_err());
+        assert!(quantize_hash(f64::NAN).is_err());
+        let e = quantize_hash(f64::NAN).unwrap_err();
+        assert!(e.to_string().contains("hash overflow"), "{e}");
+    }
+
+    #[test]
+    fn width_fitting_picks_narrowest_provable() {
+        assert_eq!(SigWidth::fitting(0.0), SigWidth::I8);
+        assert_eq!(SigWidth::fitting(100.0), SigWidth::I8);
+        assert_eq!(SigWidth::fitting(125.0), SigWidth::I8);
+        assert_eq!(SigWidth::fitting(126.0), SigWidth::I16);
+        assert_eq!(SigWidth::fitting(30_000.0), SigWidth::I16);
+        assert_eq!(SigWidth::fitting(32_766.0), SigWidth::I32);
+        assert_eq!(SigWidth::fitting(1e9), SigWidth::I32);
+        assert_eq!(SigWidth::fitting(f64::INFINITY), SigWidth::I32);
+        assert_eq!(SigWidth::fitting(f64::NAN), SigWidth::I32);
+        assert_eq!(SigWidth::fitting(-1.0), SigWidth::I32);
+    }
+
+    #[test]
+    fn width_admits_exact_edges() {
+        for w in [SigWidth::I8, SigWidth::I16, SigWidth::I32] {
+            assert!(w.admits(w.max_val()));
+            assert!(w.admits(w.min_val()));
+            assert!(w.admits(0));
+            if w != SigWidth::I32 {
+                assert!(!w.admits(w.max_val() + 1));
+                assert!(!w.admits(w.min_val() - 1));
+            }
+            assert_eq!(SigWidth::from_tag(w.tag()), Some(w));
+        }
+        assert_eq!(SigWidth::from_tag(0), None);
+        assert_eq!(SigWidth::from_tag(3), None);
+        assert_eq!(SigWidth::from_tag(8), None);
+    }
+
+    #[test]
+    fn sigvec_roundtrips_at_every_width() {
+        let sig = vec![-128, -1, 0, 1, 127];
+        for w in [SigWidth::I8, SigWidth::I16, SigWidth::I32] {
+            let v = SigVec::from_i32(&sig, w).unwrap();
+            assert_eq!(v.width(), w);
+            assert_eq!(v.len(), sig.len());
+            assert_eq!(v.to_i32_vec(), sig);
+            assert!(v.view().eq_i32(&sig));
+            assert_eq!(v.view().iter_i32().collect::<Vec<_>>(), sig);
+            // requantize: widen then narrow back
+            let wide = v.requantize(SigWidth::I32).unwrap();
+            assert_eq!(wide.requantize(w).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn sigvec_narrowing_is_checked_at_the_edge() {
+        assert!(SigVec::from_i32(&[127], SigWidth::I8).is_ok());
+        assert!(SigVec::from_i32(&[128], SigWidth::I8).is_err());
+        assert!(SigVec::from_i32(&[-128], SigWidth::I8).is_ok());
+        assert!(SigVec::from_i32(&[-129], SigWidth::I8).is_err());
+        assert!(SigVec::from_i32(&[32767], SigWidth::I16).is_ok());
+        assert!(SigVec::from_i32(&[32768], SigWidth::I16).is_err());
+        assert!(SigVec::from_i32(&[-32768], SigWidth::I16).is_ok());
+        assert!(SigVec::from_i32(&[-32769], SigWidth::I16).is_err());
+        let e = SigVec::from_i32(&[1 << 20], SigWidth::I8).unwrap_err();
+        assert_eq!(e.width, SigWidth::I8);
+    }
+}

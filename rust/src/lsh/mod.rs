@@ -31,6 +31,20 @@
 //! deduplicated, so results are stable across runs and identical between
 //! the sharded and flat indexes; the allocating [`LshIndex::query`] /
 //! [`LshIndex::query_multiprobe`] wrappers share the same contract.
+//!
+//! # Signature width and quantized storage
+//!
+//! The index itself always speaks `i32` bucket ids — insert, remove,
+//! query, and the `FLSH1` snapshot format are unchanged. When the
+//! service derives a provable hash-value bound from its configured
+//! input norm cap (`HashPath::sig_width`: `max_j (c·Σᵢ|Mᵢⱼ| + |bⱼ|)`
+//! over the folded matrix), it *stores* signatures at the narrowest
+//! admissible width (`i8`/`i16`, see `hashing/quantize`) and widens
+//! them back to `i32` at probe/fingerprint time. Widening is exact and
+//! total, so fingerprints, bucket keys, and therefore candidate sets
+//! are identical to the unquantized path; values that would not fit are
+//! rejected with a typed error at hash time, never clamped into a wrong
+//! bucket.
 
 pub mod shard;
 pub mod tuning;

@@ -96,9 +96,7 @@ impl ShardedIndex {
     ) {
         out.clear();
         for s in &self.shards {
-            s.read()
-                .unwrap()
-                .probe_into(signature, depth, scratch, out, depth_hits);
+            sync::read(s).probe_into(signature, depth, scratch, out, depth_hits);
         }
         out.sort_unstable();
         out.dedup();

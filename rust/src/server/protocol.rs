@@ -584,13 +584,27 @@ fn entry_records_json(v: &Value, allow_empty: bool) -> Result<Vec<EntryRecord>, 
                 .iter()
                 .map(|x| {
                     x.as_f64()
-                        .map(|f| f as i32)
-                        .ok_or_else(|| format!("entry[{i}]: `sig` must contain numbers"))
+                        .and_then(json_sig_i32)
+                        .ok_or_else(|| format!("entry[{i}]: `sig` must contain i32 bucket ids"))
                 })
                 .collect::<Result<_, _>>()?;
             Ok(EntryRecord { id, emb, sig })
         })
         .collect()
+}
+
+/// Decode a JSON number as an exact `i32` bucket id. The seed decoder
+/// lowered with a bare `as i32`, which *saturates*: a corrupt or hostile
+/// `1e99` silently became `i32::MAX` and `NaN` became `0`, landing the
+/// entry in wrong buckets forever. Non-integral, out-of-range, and
+/// non-finite values are decode errors instead.
+fn json_sig_i32(f: f64) -> Option<i32> {
+    // in-range integral f64s convert exactly; NaN fails every comparison
+    if f.fract() == 0.0 && f >= i32::MIN as f64 && f <= i32::MAX as f64 {
+        Some(f as i32)
+    } else {
+        None
+    }
 }
 
 /// A rejected request frame. Carries the `req_id` recovered from the
@@ -1252,12 +1266,11 @@ fn response_fields(resp: &Response) -> Vec<(&'static str, Value)> {
             (
                 "signature",
                 // serialized straight from the shared flat block — no
-                // per-response Vec<i32> clone on this path
+                // per-response Vec<i32> clone on this path; iter_i32
+                // widens narrow-width blocks on the fly, so the wire
+                // format is identical at every storage width
                 Value::Array(
-                    sig.as_slice()
-                        .iter()
-                        .map(|&x| Value::Number(x as f64))
-                        .collect(),
+                    sig.iter_i32().map(|x| Value::Number(x as f64)).collect(),
                 ),
             ),
         ],
@@ -1423,10 +1436,11 @@ fn put_reply_body(b: &mut Vec<u8>, resp: &Response) {
     match resp {
         Response::Signature(sig) => {
             b.push(REPLY_SIGNATURE);
-            // straight off the shared [B×K] block: count + raw i32s
-            let s = sig.as_slice();
-            b.extend_from_slice(&(s.len() as u32).to_le_bytes());
-            for &v in s {
+            // straight off the shared [B×K] block: count + i32 values
+            // (narrow-width blocks widen per element, so the wire bytes
+            // are identical at every storage width)
+            b.extend_from_slice(&(sig.len() as u32).to_le_bytes());
+            for v in sig.iter_i32() {
                 b.extend_from_slice(&v.to_le_bytes());
             }
         }
@@ -1610,7 +1624,7 @@ fn response_payload_min(mode: WireMode, resp: &Response) -> usize {
         // binary: 16 B/hit; JSON: >= len(r#"{"distance":0,"id":0}"#) + comma
         Response::Hits(h) => h.len() * per_elem(16, 22),
         // binary: 4 B/entry; JSON: >= one digit + comma
-        Response::Signature(s) => s.as_slice().len() * per_elem(4, 2),
+        Response::Signature(s) => s.len() * per_elem(4, 2),
         // binary: id + two length words + raw values; JSON: the shortest
         // possible record shell + one char per value
         Response::Entries { entries, .. } => entries
@@ -2123,8 +2137,8 @@ fn decode_reply_value(v: &Value, allow_batch: bool) -> Result<Reply, String> {
                 .iter()
                 .map(|x| {
                     x.as_f64()
-                        .map(|f| f as i32)
-                        .ok_or_else(|| "`signature` must contain numbers".to_string())
+                        .and_then(json_sig_i32)
+                        .ok_or_else(|| "`signature` must contain i32 bucket ids".to_string())
                 })
                 .collect::<Result<_, _>>()?,
         ),

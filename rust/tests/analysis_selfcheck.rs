@@ -53,3 +53,23 @@ fn known_bad_fixture_is_caught_with_position() {
     assert_eq!(v[0].line, 2);
     assert_eq!(v[0].path, "src/lsh/mod.rs");
 }
+
+#[test]
+fn saturating_float_cast_fixture_is_caught_with_position() {
+    // The seed kernel's exact bug shape: lowering a floored hash value
+    // with a bare `as i32`, which saturates instead of erroring. The
+    // new `checked-float-cast` rule must pin it to file and line.
+    let fixture = "fn lower(v: f64, r: f64) -> i32 {\n\
+                   (v / r).floor() as i32\n\
+                   }\n";
+    let v = analysis::analyze_source("src/coordinator/hashpath.rs", fixture);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "checked-float-cast");
+    assert_eq!(v[0].line, 2);
+    assert!(v[0].message.contains("quantize_hash"), "{}", v[0].message);
+
+    // ...and the checked quantizer itself stays exempt: its single cast
+    // sits behind an explicit range guard.
+    let v = analysis::analyze_source("src/hashing/quantize.rs", fixture);
+    assert!(v.is_empty(), "{v:?}");
+}

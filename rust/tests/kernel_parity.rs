@@ -11,9 +11,9 @@
 // Host-only: long-running randomized battery; Miri cannot run it.
 #![cfg(not(miri))]
 
-use funclsh::coordinator::{FoldedHashPath, HashPath};
+use funclsh::coordinator::{simd_kernel_available, FoldedHashPath, HashPath};
 use funclsh::embedding::{Interval, MonteCarloEmbedder};
-use funclsh::hashing::PStableHashBank;
+use funclsh::hashing::{PStableHashBank, SigVec, SigWidth};
 use funclsh::lsh::{IndexConfig, LshIndex, QueryScratch};
 use funclsh::util::proptest::{check, Gen};
 
@@ -75,6 +75,129 @@ fn threaded_kernel_is_byte_identical_and_deterministic() {
             assert_eq!(first.row(i), want.as_slice(), "seed {}: row {i}", g.seed);
         }
     });
+}
+
+#[test]
+fn simd_dispatch_keeps_byte_identity_across_tile_shapes() {
+    // Shapes chosen around the 4×32 register tile: exact multiples,
+    // off-by-one columns, sub-tile, and a wide-K mix. Built with
+    // `--features simd` on AVX2+FMA hardware this drives the intrinsics
+    // tile for every full column block; elsewhere it takes the portable
+    // scalar tile — either way the blocked kernel must stay
+    // byte-identical to the seed scalar f64 oracle, because the
+    // boundary-τ exact-f64 fallback absorbs the f32 rounding difference.
+    let simd = simd_kernel_available();
+    if !cfg!(all(feature = "simd", target_arch = "x86_64")) {
+        assert!(!simd, "intrinsics tile requires --features simd on x86_64");
+    }
+    check(10, |g| {
+        for (n, k) in [(32, 32), (64, 64), (33, 31), (7, 129), (96, 128)] {
+            let folded = random_folded(g, n, k);
+            for b in [1usize, 4, 5, 17] {
+                let rows = random_rows(g, n, b);
+                let scalar = folded.hash_rows_scalar(&rows).unwrap();
+                let blocked = folded.hash_rows(&rows).unwrap();
+                for (i, want) in scalar.iter().enumerate() {
+                    assert_eq!(
+                        blocked.row(i),
+                        want.as_slice(),
+                        "seed {}: simd={simd} n={n} k={k} b={b} row {i}",
+                        g.seed
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn narrowed_signatures_feed_identical_candidate_sets() {
+    // Quantization must never change *which* candidates an index
+    // returns: re-encoding a signature block at i16/i8 and re-widening
+    // preserves every admissible row bit-for-bit, so an index fed the
+    // narrowed rows answers exactly like one fed the i32 originals.
+    // Rows the narrow range cannot hold are flagged (never clamped) and
+    // skipped in both indexes.
+    check(15, |g| {
+        let k = g.usize_in(1..4);
+        let l = g.usize_in(1..4);
+        let n = g.usize_in(4..32);
+        let folded = random_folded(g, n, k * l);
+        let count = g.usize_in(2..25);
+        let rows = random_rows(g, n, count);
+        let sigs = folded.hash_rows(&rows).unwrap();
+        for width in [SigWidth::I8, SigWidth::I16] {
+            let mut bad = vec![false; sigs.len()];
+            let narrow = sigs.narrowed(width, &mut bad);
+            assert_eq!(narrow.width(), width, "seed {}", g.seed);
+            let mut wide_idx = LshIndex::new(IndexConfig::new(k, l));
+            let mut narrow_idx = LshIndex::new(IndexConfig::new(k, l));
+            let mut admitted: Vec<(u64, Vec<i32>)> = Vec::new();
+            for i in 0..sigs.len() {
+                let wide_row = sigs.row(i);
+                if bad[i] {
+                    // flagged exactly when some bucket falls outside
+                    // the narrow range — quantization never clamps
+                    assert!(
+                        wide_row.iter().any(|&v| !width.admits(v)),
+                        "seed {}: row {i} flagged but fits {width:?}",
+                        g.seed
+                    );
+                    continue;
+                }
+                let rewidened: Vec<i32> = narrow.row_ref(i).iter_i32().collect();
+                assert_eq!(rewidened, wide_row, "seed {}: row {i} {width:?}", g.seed);
+                wide_idx.insert(i as u64, wide_row);
+                narrow_idx.insert(i as u64, &rewidened);
+                admitted.push((i as u64, rewidened));
+            }
+            for (qid, q) in admitted.iter().take(8) {
+                for depth in 0..2usize {
+                    let (want, got) = if depth == 0 {
+                        (wide_idx.query(q), narrow_idx.query(q))
+                    } else {
+                        (
+                            wide_idx.query_multiprobe(q, depth),
+                            narrow_idx.query_multiprobe(q, depth),
+                        )
+                    };
+                    assert_eq!(
+                        got, want,
+                        "seed {}: {width:?} query {qid} depth {depth}",
+                        g.seed
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn narrow_width_boundary_values_roundtrip_exactly() {
+    // The extreme representable buckets of each narrow width survive
+    // encode → widen → re-encode unchanged, and the first value past
+    // either edge is a typed error — the seed kernel's `as`-cast would
+    // have saturated it silently onto the edge instead.
+    for width in [SigWidth::I8, SigWidth::I16] {
+        let (lo, hi) = (width.min_val(), width.max_val());
+        let edge = vec![lo, lo + 1, -1, 0, 1, hi - 1, hi];
+        let narrow = SigVec::from_i32(&edge, width).expect("edge values fit");
+        assert_eq!(narrow.width(), width);
+        assert_eq!(narrow.to_i32_vec(), edge);
+        // snapshot-style width walk: narrow → i32 → narrow → i32
+        let wide = narrow.requantize(SigWidth::I32).expect("widening is total");
+        assert_eq!(wide.to_i32_vec(), edge);
+        let back = wide.requantize(width).expect("still fits");
+        assert_eq!(back.to_i32_vec(), edge);
+        // one past each edge must refuse, naming the width
+        for v in [hi + 1, lo - 1] {
+            let err = SigVec::from_i32(&[v], width).expect_err("out of range");
+            assert_eq!(err.width, width);
+            assert!(err.to_string().contains(width.name()), "{err}");
+        }
+        // an i8-inadmissible value is still fine at the next width up
+        assert!(SigVec::from_i32(&[hi + 1], SigWidth::I32).is_ok());
+    }
 }
 
 /// Brute-force oracle of the index semantics: a candidate collides at
